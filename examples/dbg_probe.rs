@@ -1,0 +1,22 @@
+use fadl::coordinator::{config::Config, driver};
+
+fn main() {
+    for method in ["fadl", "fadl-hybrid", "fadl-nonlinear", "tera"] {
+        let cfg = Config {
+            dataset: "kdd2010".into(),
+            scale: 5e-3,
+            nodes: 8,
+            method: method.into(),
+            max_outer: 30,
+            eps_g: 1e-10,
+            ..Default::default()
+        };
+        let exp = driver::prepare(&cfg).unwrap();
+        let (_, trace) = driver::run(&exp).unwrap();
+        print!("{method:>15}: ");
+        for r in trace.records.iter().step_by(5) {
+            print!("{:.1} ", r.f);
+        }
+        println!("| final {:.3} (passes {:.0})", trace.final_f(), trace.records.last().unwrap().comm_passes);
+    }
+}

@@ -1,0 +1,69 @@
+//! The §5 feature-partitioning extension: nodes own (possibly
+//! overlapping) feature subsets J_p and optimize only their block,
+//! under gradient sub-consistency. Shows both the disjoint partition
+//! and the "hot features shared by all nodes" variant.
+//!
+//! Run: cargo run --release --example feature_partitioning
+
+use fadl::cluster::{Cluster, CostModel};
+use fadl::data::partition::{ExamplePartition, FeaturePartition, Strategy};
+use fadl::data::synth;
+use fadl::loss::Loss;
+use fadl::methods::{fadl_feature::FadlFeature, TrainContext, Trainer};
+use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
+
+fn main() {
+    let ds = synth::quick(2_000, 120, 12, 23);
+    let p = 4;
+    let part = ExamplePartition::build(ds.n(), p, Strategy::Contiguous, 0);
+    let objective = Objective::new(1e-2, Loss::SquaredHinge);
+
+    // identify the globally hottest features — §5 suggests replicating
+    // the important ones into every node's subset
+    let counts = ds.x.feature_counts();
+    let mut by_count: Vec<usize> = (0..ds.m()).collect();
+    by_count.sort_by_key(|&j| std::cmp::Reverse(counts[j]));
+    let hot: Vec<usize> = by_count[..8].to_vec();
+
+    for (label, partition) in [
+        (
+            "disjoint feature blocks",
+            FeaturePartition::contiguous(ds.m(), p),
+        ),
+        (
+            "blocks + 8 hot features shared by every node",
+            FeaturePartition::with_shared(ds.m(), p, &hot),
+        ),
+    ] {
+        let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+            .map(|i| {
+                Box::new(SparseShard::new(Shard::from_dataset(
+                    &ds,
+                    &part.assignments[i],
+                    &part.weights[i],
+                ))) as Box<dyn ShardCompute>
+            })
+            .collect();
+        let cluster = Cluster::new(workers, CostModel::default());
+        let ctx = TrainContext {
+            max_outer: 60,
+            eps_g: 1e-8,
+            ..TrainContext::new(&cluster, objective)
+        };
+        let (_, trace) = FadlFeature::new(partition).train(&ctx);
+        let first = trace.records.first().unwrap();
+        let last = trace.records.last().unwrap();
+        println!(
+            "{label:<45}  f {:>9.4} → {:>9.4}  ({} iters, {} comm passes)",
+            first.f,
+            last.f,
+            trace.records.len(),
+            last.comm_passes
+        );
+        assert!(last.f < first.f);
+    }
+    println!(
+        "\nboth partitions converge (gradient sub-consistency ⇒ descent);\n\
+         sharing hot features typically buys a better early rate."
+    );
+}

@@ -1,0 +1,78 @@
+//! The §3.5 parallel-SGD instantiation: FADL with SVRG as the inner
+//! optimizer `M` — a parallel stochastic method with the *deterministic*
+//! monotone-descent and glrc guarantees of Theorem 4 (answering Q3).
+//!
+//! Also demonstrates the §3.5 SVRG connection: with P = 1 and the
+//! Linear approximation, FADL's inner updates are exactly eq. (20), so
+//! the single-node run doubles as a plain SVRG solver.
+//!
+//! Run: cargo run --release --example parallel_sgd
+
+use fadl::cluster::{Cluster, CostModel};
+use fadl::data::partition::{ExamplePartition, Strategy};
+use fadl::data::synth;
+use fadl::loss::Loss;
+use fadl::methods::{fadl::Fadl, TrainContext, Trainer};
+use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
+
+fn cluster_over(ds: &fadl::data::Dataset, p: usize) -> Cluster {
+    let part = ExamplePartition::build(ds.n(), p, Strategy::Contiguous, 0);
+    let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+        .map(|i| {
+            Box::new(SparseShard::new(Shard::from_dataset(
+                ds,
+                &part.assignments[i],
+                &part.weights[i],
+            ))) as Box<dyn ShardCompute>
+        })
+        .collect();
+    Cluster::new(workers, CostModel::default())
+}
+
+fn main() {
+    let ds = synth::quick(4_000, 300, 15, 11);
+    let objective = Objective::new(1e-2, Loss::SquaredHinge);
+
+    // parallel SGD = FADL with the Linear approximation + SVRG inner
+    let method = Fadl {
+        approx: fadl::approx::ApproxKind::Linear,
+        inner: "svrg".into(),
+        k_hat: 2, // SVRG epochs per outer iteration
+        warm_start: false,
+        ..Default::default()
+    };
+
+    println!("parallel SGD (FADL + SVRG inner), monotone by construction:\n");
+    let mut final_fs = Vec::new();
+    for p in [1usize, 4, 16] {
+        let cluster = cluster_over(&ds, p);
+        let ctx = TrainContext {
+            max_outer: 25,
+            eps_g: 1e-10,
+            ..TrainContext::new(&cluster, objective)
+        };
+        let (_, trace) = method.train(&ctx);
+        // monotone descent certificate (Theorem 2 applies: line-searched)
+        let monotone = trace
+            .records
+            .windows(2)
+            .all(|w| w[1].f <= w[0].f + 1e-9);
+        let last = trace.records.last().unwrap();
+        println!(
+            "P = {p:>2}: f {:>10.4} → {:>10.4} in {} outer iters (monotone: {monotone})",
+            trace.records[0].f,
+            last.f,
+            trace.records.len(),
+        );
+        assert!(monotone, "line-searched parallel SGD must descend");
+        final_fs.push(last.f);
+    }
+    let spread = (final_fs.iter().cloned().fold(f64::MIN, f64::max)
+        - final_fs.iter().cloned().fold(f64::MAX, f64::min))
+        / final_fs[0].abs();
+    println!(
+        "\nall node counts agree on the objective to within {:.2}% — \
+         parallelism changes the path, not the solution",
+        100.0 * spread
+    );
+}

@@ -1,0 +1,113 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()` /
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py and README gotchas).
+
+Outputs (under --out-dir, default ../artifacts):
+  margins_b{B}_f{M}.hlo.txt      (x, w)          -> (z,)
+  obj_grad_b{B}_f{M}.hlo.txt     (x, y, c, w)    -> (loss, grad, z)
+  hvp_b{B}_f{M}.hlo.txt          (x, y, c, z, s) -> (hv,)
+  linesearch_b{B}.hlo.txt        (z, e, y, c, t) -> (phi, dphi)
+  manifest.json                   shapes + entry metadata for Rust
+
+Python runs only here (`make artifacts`); the Rust binary never imports
+it. `make artifacts` is a no-op when inputs are unchanged (Makefile dep
+tracking on python/compile/**).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries(batch: int, features: int, loss: str):
+    """(name, jitted_fn, example_specs, output_names) per artifact."""
+    b, m = batch, features
+    x, y, c, w, z, e, s, t = (
+        f32(b, m),
+        f32(b, 1),
+        f32(b, 1),
+        f32(m, 1),
+        f32(b, 1),
+        f32(b, 1),
+        f32(m, 1),
+        f32(1, 1),
+    )
+    obj_grad = functools.partial(model.block_obj_grad, loss=loss)
+    hvp = functools.partial(model.block_hvp, loss=loss)
+    lsearch = functools.partial(model.block_linesearch, loss=loss)
+    return [
+        (f"margins_b{b}_f{m}", model.block_margins, (x, w), ["z"]),
+        (f"obj_grad_b{b}_f{m}", obj_grad, (x, y, c, w), ["loss", "grad", "z"]),
+        (f"hvp_b{b}_f{m}", hvp, (x, y, c, z, s), ["hv"]),
+        (f"linesearch_b{b}", lsearch, (z, e, y, c, t), ["phi", "dphi"]),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--features", type=int, default=784)
+    ap.add_argument(
+        "--loss",
+        default="squared_hinge",
+        choices=["squared_hinge", "logistic", "least_squares"],
+        help="loss lowered into the artifacts (paper uses squared hinge)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "batch": args.batch,
+        "features": args.features,
+        "loss": args.loss,
+        "format": "hlo-text/return-tuple",
+        "entries": {},
+    }
+    for name, fn, specs, outs in build_entries(args.batch, args.features, args.loss):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": outs,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

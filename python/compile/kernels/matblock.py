@@ -1,0 +1,186 @@
+"""Layer-1 Pallas kernels: the dense-block compute hot-spot.
+
+The paper's per-node inner loop (computing margins z = X·w, the gradient
+accumulation g = Xᵀr, and TRON's Hessian-vector products) is the
+computational hot-spot of every method it studies (Appendix A charges
+`c1 · nz / P` per inner iteration for exactly these passes). These
+kernels implement that hot-spot as MXU-shaped tiled matmuls.
+
+Hardware adaptation (DESIGN.md §5): the paper's testbed is a CPU Hadoop
+cluster, so its "kernel" is a sparse multicore loop. On TPU the dense
+analogue is a (B, M) × (M, 1) tiled matvec; we express the HBM↔VMEM
+schedule with BlockSpec index maps (block rows of X stream through VMEM;
+w / the accumulator stay resident). Everything runs `interpret=True`
+because the CPU PJRT plugin cannot execute Mosaic custom-calls; MXU and
+VMEM efficiency are estimated analytically (DESIGN.md §9, EXPERIMENTS.md
+§Perf).
+
+Block-shape policy: `_pick_block(n, pref)` returns the largest divisor of
+`n` that is ≤ pref, preferring multiples of 8 (f32 sublane) — callers pad
+to multiples of 128/256 at L2, so in practice blocks are MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred VMEM tile: 128×512 f32 = 256 KiB ≤ 16 MiB VMEM with ample
+# room for double buffering of the streamed X tiles.
+ROW_BLOCK = 128
+COL_BLOCK = 512
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is ≤ pref (pref itself if it divides n)."""
+    if n <= pref:
+        return n
+    if n % pref == 0:
+        return pref
+    best = 1
+    for b in range(pref, 0, -1):
+        if n % b == 0:
+            best = b
+            break
+    return best
+
+
+# ---------------------------------------------------------------------------
+# margins: z = X @ w
+# ---------------------------------------------------------------------------
+
+
+def _margins_kernel(x_ref, w_ref, o_ref):
+    """Grid (R, C); accumulate partial dot products over the column grid.
+
+    Grid iteration is row-major (last axis fastest), so for a fixed row
+    block i the column index j sweeps 0..C−1 sequentially and the output
+    block (i, 0) acts as a VMEM-resident accumulator.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block"))
+def margins(x, w, *, row_block: int | None = None, col_block: int | None = None):
+    """z = X @ w via the tiled Pallas kernel.  x: (B, M), w: (M, 1)."""
+    b, m = x.shape
+    br = row_block or _pick_block(b, ROW_BLOCK)
+    bc = col_block or _pick_block(m, COL_BLOCK)
+    grid = (b // br, m // bc)
+    return pl.pallas_call(
+        _margins_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# grad_accum: g = Xᵀ @ r
+# ---------------------------------------------------------------------------
+
+
+def _grad_kernel(x_ref, r_ref, o_ref):
+    """Grid (C, R); for a fixed feature block c, accumulate over row blocks."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BR, BC)ᵀ @ (BR, 1): contract over the row (example) dimension.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        r_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block"))
+def grad_accum(x, r, *, row_block: int | None = None, col_block: int | None = None):
+    """g = Xᵀ @ r via the tiled Pallas kernel.  x: (B, M), r: (B, 1)."""
+    b, m = x.shape
+    br = row_block or _pick_block(b, ROW_BLOCK)
+    bc = col_block or _pick_block(m, COL_BLOCK)
+    grid = (m // bc, b // br)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda c, i: (i, c)),
+            pl.BlockSpec((br, 1), lambda c, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, 1), lambda c, i: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(x, r)
+
+
+# ---------------------------------------------------------------------------
+# Fused residual + gradient for the squared hinge (single X read)
+# ---------------------------------------------------------------------------
+
+
+def _fused_grad_kernel(x_ref, y_ref, c_ref, z_ref, o_ref):
+    """g = Xᵀ(c ⊙ l'(z, y)) with the residual computed in-VMEM.
+
+    Fusing the elementwise residual into the reduction means the X tile
+    is read from HBM exactly once per (row, col) block — the paper's
+    `c1 = 2` passes collapse toward 1 for the gradient half.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = y_ref[...]
+    z = z_ref[...]
+    r = c_ref[...] * (-2.0 * y * jnp.maximum(0.0, 1.0 - y * z))
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        r,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block"))
+def fused_sqhinge_grad(
+    x, y, c, z, *, row_block: int | None = None, col_block: int | None = None
+):
+    """g = Xᵀ(c ⊙ dl/dz) for squared hinge, residual fused into the tile loop."""
+    b, m = x.shape
+    br = row_block or _pick_block(b, ROW_BLOCK)
+    bc = col_block or _pick_block(m, COL_BLOCK)
+    grid = (m // bc, b // br)
+    return pl.pallas_call(
+        _fused_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda cb, i: (i, cb)),
+            pl.BlockSpec((br, 1), lambda cb, i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda cb, i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda cb, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, 1), lambda cb, i: (cb, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(x, y, c, z)

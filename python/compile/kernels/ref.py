@@ -1,0 +1,131 @@
+"""Pure-jnp reference oracle for the Pallas kernels and the L2 model.
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. pytest (python/tests/) asserts `allclose` between the
+two across a hypothesis-driven sweep of shapes; this is the CORE
+correctness signal for Layer 1.
+
+All losses follow the paper's conventions (Section 3): binary labels
+y ∈ {+1, −1}, margins z = w·x, per-example loss l(z, y). The weighted
+variants take a per-example weight c_i ∈ [0, ∞) used both for padding
+(c = 0 on padded rows) and for the resampling extension (Section 5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Linear algebra primitives (the Pallas hot-spots)
+# ---------------------------------------------------------------------------
+
+
+def margins(x, w):
+    """z = X @ w.  x: (B, M), w: (M, 1) -> (B, 1)."""
+    return x @ w
+
+
+def grad_accum(x, r):
+    """g = Xᵀ @ r.  x: (B, M), r: (B, 1) -> (M, 1)."""
+    return x.T @ r
+
+
+# ---------------------------------------------------------------------------
+# Loss functions: value, first and second derivative w.r.t. the margin z.
+# ---------------------------------------------------------------------------
+
+
+def squared_hinge(z, y):
+    """l = max(0, 1 − y·z)² — the loss used for all paper experiments."""
+    m = jnp.maximum(0.0, 1.0 - y * z)
+    return m * m
+
+
+def squared_hinge_dz(z, y):
+    return -2.0 * y * jnp.maximum(0.0, 1.0 - y * z)
+
+
+def squared_hinge_d2z(z, y):
+    return jnp.where(y * z < 1.0, 2.0, 0.0)
+
+
+def logistic(z, y):
+    """l = log(1 + exp(−y·z)), numerically stable."""
+    return jnp.logaddexp(0.0, -y * z)
+
+
+def logistic_dz(z, y):
+    return -y / (1.0 + jnp.exp(y * z))
+
+
+def logistic_d2z(z, y):
+    s = 1.0 / (1.0 + jnp.exp(-y * z))
+    return s * (1.0 - s)
+
+
+def least_squares(z, y):
+    """l = (z − y)²."""
+    d = z - y
+    return d * d
+
+
+def least_squares_dz(z, y):
+    return 2.0 * (z - y)
+
+
+def least_squares_d2z(z, y):
+    return jnp.full_like(z, 2.0)
+
+
+LOSSES = {
+    "squared_hinge": (squared_hinge, squared_hinge_dz, squared_hinge_d2z),
+    "logistic": (logistic, logistic_dz, logistic_d2z),
+    "least_squares": (least_squares, least_squares_dz, least_squares_d2z),
+}
+
+
+# ---------------------------------------------------------------------------
+# Block-level model references (what the HLO artifacts must compute)
+# ---------------------------------------------------------------------------
+
+
+def obj_grad(x, y, c, w, loss="squared_hinge"):
+    """Weighted data loss and gradient over one dense block.
+
+    Returns (loss_sum: (1, 1), grad: (M, 1)).  The L2 regularizer is
+    deliberately NOT included: it belongs to the global objective and is
+    added exactly once by the Rust coordinator (eq. (8) splits f into the
+    regularizer plus per-node losses L_p).
+    """
+    lf, dlf, _ = LOSSES[loss]
+    z = margins(x, w)
+    lsum = jnp.sum(c * lf(z, y)).reshape(1, 1)
+    r = c * dlf(z, y)
+    return lsum, grad_accum(x, r)
+
+
+def hvp(x, y, c, z, s, loss="squared_hinge"):
+    """Gauss–Newton / Hessian-vector product of the block data loss.
+
+    Hv = Xᵀ (c ⊙ l''(z, y) ⊙ (X s)).  z is the cached margin vector at
+    the linearization point (Algorithm 2 keeps {z_i} as a by-product of
+    the gradient pass), so no recomputation of X·w is needed.
+    """
+    _, _, d2 = LOSSES[loss]
+    t = margins(x, s)
+    u = c * d2(z, y) * t
+    return grad_accum(x, u)
+
+
+def linesearch_eval(z, e, y, c, t, loss="squared_hinge"):
+    """φ(t) = Σ c·l(z + t·e, y) and φ'(t), for the distributed line search.
+
+    Section 3.4: once z_i = w·x_i and e_i = d·x_i are cached, evaluating
+    any t touches no data matrix entries — this function is exactly that
+    cheap inner evaluation.
+    """
+    lf, dlf, _ = LOSSES[loss]
+    zt = z + t * e
+    phi = jnp.sum(c * lf(zt, y)).reshape(1, 1)
+    dphi = jnp.sum(c * dlf(zt, y) * e).reshape(1, 1)
+    return phi, dphi

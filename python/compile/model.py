@@ -1,0 +1,88 @@
+"""Layer-2: the paper's compute graph over one dense example block.
+
+These are the jit-able functions that `aot.py` lowers to HLO text for the
+Rust runtime. Each calls the Layer-1 Pallas kernels in
+`kernels/matblock.py` so the matmul FLOPs lower into the same HLO module;
+the cheap elementwise pieces (residuals, loss sums) are plain jnp that
+XLA fuses around the kernel output.
+
+Conventions (shared with the Rust runtime, see rust/src/runtime/):
+  x : (B, M) f32   dense example block (rows may be zero-padded)
+  y : (B, 1) f32   labels in {+1, −1} (padded rows: +1)
+  c : (B, 1) f32   per-example weights; 0 on padded rows, also used for
+                   the resampling extension (paper §5)
+  w : (M, 1) f32   weight vector (padded features are zero)
+  s : (M, 1) f32   direction for Hessian-vector products
+  z : (B, 1) f32   cached margins at the linearization point
+  t : (1, 1) f32   line-search step
+
+The L2 regularizer λ/2‖w‖² is added exactly once by the Rust
+coordinator (eq. (8)); everything here is pure data loss.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernels import matblock, ref
+
+
+def _loss_fns(loss: str):
+    try:
+        return ref.LOSSES[loss]
+    except KeyError:  # pragma: no cover - guarded by aot argparse choices
+        raise ValueError(f"unknown loss {loss!r}; one of {sorted(ref.LOSSES)}")
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def block_margins(x, w):
+    """z = X·w for one block — Algorithm 2 step 9 (e_i = d·x_i uses it too)."""
+    return (matblock.margins(x, w),)
+
+
+@functools.partial(lambda f: f)  # keep a flat function for .lower()
+def block_obj_grad(x, y, c, w, *, loss: str = "squared_hinge"):
+    """(Σ c·l(z, y), Xᵀ(c·l'(z, y))) — the per-node gradient pass.
+
+    Algorithm 2 step 1: two conceptual passes over the data (margins +
+    gradient); the margins pass is the Pallas `margins` kernel and the
+    gradient pass is the fused residual+reduction kernel (squared hinge)
+    or kernel composition (other losses). The cached z is also returned
+    because the coordinator keeps {z_i} as a by-product.
+    """
+    lf, dlf, _ = _loss_fns(loss)
+    z = matblock.margins(x, w)
+    lsum = jnp.sum(c * lf(z, y)).reshape(1, 1)
+    if loss == "squared_hinge":
+        g = matblock.fused_sqhinge_grad(x, y, c, z)
+    else:
+        r = c * dlf(z, y)
+        g = matblock.grad_accum(x, r)
+    return lsum, g, z
+
+
+def block_hvp(x, y, c, z, s, *, loss: str = "squared_hinge"):
+    """Hv = Xᵀ(c ⊙ l''(z, y) ⊙ (X·s)) — TRON's CG hot loop (Appendix A, k̂)."""
+    _, _, d2 = _loss_fns(loss)
+    t = matblock.margins(x, s)
+    u = c * d2(z, y) * t
+    return (matblock.grad_accum(x, u),)
+
+
+def block_linesearch(z, e, y, c, t, *, loss: str = "squared_hinge"):
+    """(φ(t), φ'(t)) over cached margins — Algorithm 2 step 10.
+
+    No data-matrix reads: this is why the paper's distributed line search
+    is cheap enough to explore many t values per outer iteration.
+    """
+    lf, dlf, _ = _loss_fns(loss)
+    zt = z + t * e
+    phi = jnp.sum(c * lf(zt, y)).reshape(1, 1)
+    dphi = jnp.sum(c * dlf(zt, y) * e).reshape(1, 1)
+    return phi, dphi

@@ -1,0 +1,164 @@
+# pytest: Pallas kernel vs pure-jnp ref allclose — the CORE L1 correctness
+# signal. hypothesis sweeps shapes (incl. non-MXU-aligned divisor blocks)
+# and value ranges.
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import matblock, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def rng_arrays(seed, b, m):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((b, m)).astype(np.float32)
+    w = r.standard_normal((m, 1)).astype(np.float32)
+    y = np.where(r.random((b, 1)) < 0.5, -1.0, 1.0).astype(np.float32)
+    c = r.random((b, 1)).astype(np.float32)
+    return x, w, y, c
+
+
+# ---------------------------------------------------------------------------
+# margins kernel
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    b=st.sampled_from([1, 2, 8, 32, 128, 256, 384]),
+    m=st.sampled_from([1, 4, 16, 64, 512, 784, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_matches_ref(b, m, seed):
+    x, w, _, _ = rng_arrays(seed, b, m)
+    got = matblock.margins(jnp.asarray(x), jnp.asarray(w))
+    want = ref.margins(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_margins_explicit_blocks():
+    x, w, _, _ = rng_arrays(0, 256, 1024)
+    got = matblock.margins(jnp.asarray(x), jnp.asarray(w), row_block=64, col_block=128)
+    np.testing.assert_allclose(got, x @ w, rtol=2e-5, atol=2e-5)
+
+
+def test_margins_single_block():
+    x, w, _, _ = rng_arrays(1, 8, 8)
+    got = matblock.margins(jnp.asarray(x), jnp.asarray(w), row_block=8, col_block=8)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_margins_zero_input():
+    z = matblock.margins(jnp.zeros((128, 256)), jnp.zeros((256, 1)))
+    assert not np.any(z)
+
+
+# ---------------------------------------------------------------------------
+# grad_accum kernel
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    b=st.sampled_from([1, 8, 64, 128, 256]),
+    m=st.sampled_from([1, 16, 512, 784]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_accum_matches_ref(b, m, seed):
+    x, _, _, _ = rng_arrays(seed, b, m)
+    r = np.random.default_rng(seed + 1).standard_normal((b, 1)).astype(np.float32)
+    got = matblock.grad_accum(jnp.asarray(x), jnp.asarray(r))
+    want = ref.grad_accum(jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_grad_accum_is_transpose_of_margins():
+    # <X w, r> == <w, Xᵀ r>: adjoint identity ties the two kernels together.
+    x, w, _, _ = rng_arrays(3, 128, 512)
+    r = np.random.default_rng(4).standard_normal((128, 1)).astype(np.float32)
+    lhs = (matblock.margins(jnp.asarray(x), jnp.asarray(w)).T @ r).item()
+    rhs = (w.T @ matblock.grad_accum(jnp.asarray(x), jnp.asarray(r))).item()
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused squared-hinge gradient kernel
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    b=st.sampled_from([8, 128, 256]),
+    m=st.sampled_from([16, 512, 784]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_sqhinge_grad_matches_ref(b, m, seed):
+    x, w, y, c = rng_arrays(seed, b, m)
+    z = x @ w
+    got = matblock.fused_sqhinge_grad(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(c), jnp.asarray(z)
+    )
+    r = c * ref.squared_hinge_dz(z, y)
+    want = ref.grad_accum(jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_fused_grad_zero_weight_rows_do_not_contribute():
+    x, w, y, c = rng_arrays(7, 128, 64)
+    z = x @ w
+    c0 = np.copy(c)
+    c0[10:20] = 0.0
+    got = matblock.fused_sqhinge_grad(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(c0), jnp.asarray(z)
+    )
+    # Same result as physically deleting those rows.
+    keep = np.ones(128, bool)
+    keep[10:20] = False
+    got2 = matblock.fused_sqhinge_grad(
+        jnp.asarray(x[keep]),
+        jnp.asarray(y[keep]),
+        jnp.asarray(c0[keep]),
+        jnp.asarray(z[keep]),
+    )
+    np.testing.assert_allclose(got, got2, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# loss derivative oracles sanity (ref.py internal consistency)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("loss", sorted(ref.LOSSES))
+@pytest.mark.parametrize("yv", [1.0, -1.0])
+def test_loss_derivatives_match_finite_differences(loss, yv):
+    lf, dlf, d2f = ref.LOSSES[loss]
+    zs = jnp.linspace(-3.0, 3.0, 41, dtype=jnp.float64)
+    # avoid the squared-hinge kink at yz == 1 where the 2nd derivative jumps
+    zs = zs[jnp.abs(yv * zs - 1.0) > 0.05]
+    y = jnp.full_like(zs, yv)
+    h = 1e-4
+    num_d1 = (lf(zs + h, y) - lf(zs - h, y)) / (2 * h)
+    np.testing.assert_allclose(dlf(zs, y), num_d1, rtol=1e-2, atol=1e-3)
+    num_d2 = (dlf(zs + h, y) - dlf(zs - h, y)) / (2 * h)
+    np.testing.assert_allclose(d2f(zs, y), num_d2, rtol=1e-2, atol=1e-3)
+
+
+def test_squared_hinge_zero_beyond_margin():
+    z = jnp.asarray([2.0, 3.0])
+    y = jnp.asarray([1.0, 1.0])
+    assert float(jnp.sum(ref.squared_hinge(z, y))) == 0.0
+    assert float(jnp.sum(jnp.abs(ref.squared_hinge_dz(z, y)))) == 0.0
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 128, 255, 256, 384, 784, 1000]:
+        for pref in [1, 8, 128, 512]:
+            b = matblock._pick_block(n, pref)
+            assert n % b == 0 and b <= max(pref, n if n <= pref else pref)

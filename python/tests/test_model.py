@@ -1,0 +1,145 @@
+# L2 model tests: block_obj_grad / block_hvp / block_linesearch vs the
+# ref oracle, numerical differentiation, and the invariants the Rust
+# coordinator relies on (cached-z consistency, padding neutrality).
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = settings(max_examples=15, deadline=None)
+LOSSES = ["squared_hinge", "logistic", "least_squares"]
+
+
+def block(seed, b=64, m=32):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((b, m)).astype(np.float32)
+    y = np.where(r.random((b, 1)) < 0.5, -1.0, 1.0).astype(np.float32)
+    c = np.ones((b, 1), np.float32)
+    w = (0.1 * r.standard_normal((m, 1))).astype(np.float32)
+    return map(jnp.asarray, (x, y, c, w))
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_obj_grad_matches_ref(loss):
+    x, y, c, w = block(0)
+    lsum, g, z = model.block_obj_grad(x, y, c, w, loss=loss)
+    want_l, want_g = ref.obj_grad(x, y, c, w, loss=loss)
+    np.testing.assert_allclose(lsum, want_l, rtol=1e-4)
+    np.testing.assert_allclose(g, want_g, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(z, x @ w, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_obj_grad_matches_jax_autodiff(loss):
+    x, y, c, w = block(1)
+
+    def f(wv):
+        lf = ref.LOSSES[loss][0]
+        return jnp.sum(c * lf(x @ wv, y))
+
+    _, g, _ = model.block_obj_grad(x, y, c, w, loss=loss)
+    want = jax.grad(f)(w)
+    np.testing.assert_allclose(g, want, rtol=1e-3, atol=1e-3)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1), loss=st.sampled_from(LOSSES))
+def test_hvp_matches_gauss_newton_reference(seed, loss):
+    x, y, c, w = block(seed, b=32, m=16)
+    s = jnp.asarray(
+        np.random.default_rng(seed + 9).standard_normal((16, 1)).astype(np.float32)
+    )
+    z = x @ w
+    (hv,) = model.block_hvp(x, y, c, z, s, loss=loss)
+    want = ref.hvp(x, y, c, z, s, loss=loss)
+    np.testing.assert_allclose(hv, want, rtol=1e-3, atol=1e-3)
+
+
+def test_hvp_least_squares_equals_true_hessian():
+    # For least squares the Gauss-Newton product IS the exact Hessian: 2XᵀXs.
+    x, y, c, w = block(5, b=32, m=16)
+    s = jnp.asarray(np.random.default_rng(6).standard_normal((16, 1)), jnp.float32)
+    (hv,) = model.block_hvp(x, y, c, x @ w, s, loss="least_squares")
+    np.testing.assert_allclose(hv, 2.0 * x.T @ (x @ s), rtol=1e-3, atol=1e-3)
+
+
+def test_hvp_positive_semidefinite():
+    x, y, c, w = block(7, b=64, m=24)
+    z = x @ w
+    for seed in range(5):
+        s = jnp.asarray(
+            np.random.default_rng(seed).standard_normal((24, 1)), jnp.float32
+        )
+        (hv,) = model.block_hvp(x, y, c, z, s)
+        assert (s.T @ hv).item() >= -1e-4
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_linesearch_consistent_with_obj_grad(loss):
+    # φ(t) evaluated through cached (z, e) must equal the loss at w + t·d.
+    x, y, c, w = block(2)
+    d = jnp.asarray(
+        0.05 * np.random.default_rng(3).standard_normal(w.shape), jnp.float32
+    )
+    z = x @ w
+    e = x @ d
+    for t in [0.0, 0.5, 1.0, 2.0]:
+        phi, dphi = model.block_linesearch(
+            z, e, y, c, jnp.full((1, 1), t, jnp.float32), loss=loss
+        )
+        want, _, _ = model.block_obj_grad(x, y, c, w + t * d, loss=loss)
+        np.testing.assert_allclose(phi, want, rtol=1e-3, atol=1e-3)
+
+
+def test_linesearch_derivative_matches_finite_difference():
+    x, y, c, w = block(4)
+    d = jnp.asarray(
+        0.05 * np.random.default_rng(8).standard_normal(w.shape), jnp.float32
+    )
+    z, e = x @ w, x @ d
+    h = 1e-3
+    for t in [0.3, 1.0, 1.7]:
+        tt = jnp.full((1, 1), t, jnp.float32)
+        _, dphi = model.block_linesearch(z, e, y, c, tt)
+        pp, _ = model.block_linesearch(z, e, y, c, tt + h)
+        pm, _ = model.block_linesearch(z, e, y, c, tt - h)
+        np.testing.assert_allclose(dphi, (pp - pm) / (2 * h), rtol=5e-2, atol=5e-2)
+
+
+def test_padding_rows_are_neutral():
+    # Zero-weight padded rows (c=0) must not change loss, grad, or hvp —
+    # the Rust runtime pads ragged final blocks relying on exactly this.
+    x, y, c, w = block(11, b=48, m=16)
+    xp = jnp.concatenate([x, jnp.zeros((16, 16))]).astype(jnp.float32)
+    yp = jnp.concatenate([y, jnp.ones((16, 1))]).astype(jnp.float32)
+    cp = jnp.concatenate([c, jnp.zeros((16, 1))]).astype(jnp.float32)
+    l0, g0, _ = model.block_obj_grad(x, y, c, w)
+    l1, g1, _ = model.block_obj_grad(xp, yp, cp, w)
+    np.testing.assert_allclose(l0, l1, rtol=1e-5)
+    np.testing.assert_allclose(g0, g1, rtol=1e-4, atol=1e-4)
+
+    s = jnp.asarray(np.random.default_rng(0).standard_normal((16, 1)), jnp.float32)
+    (h0,) = model.block_hvp(x, y, c, x @ w, s)
+    (h1,) = model.block_hvp(xp, yp, cp, xp @ w, s)
+    np.testing.assert_allclose(h0, h1, rtol=1e-4, atol=1e-4)
+
+
+def test_weights_scale_linearly():
+    x, y, c, w = block(13)
+    l1, g1, _ = model.block_obj_grad(x, y, c, w)
+    l2, g2, _ = model.block_obj_grad(x, y, 2.0 * c, w)
+    np.testing.assert_allclose(2.0 * l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(2.0 * g1, g2, rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_loss_raises():
+    x, y, c, w = block(0, b=8, m=4)
+    with pytest.raises(ValueError):
+        model.block_obj_grad(x, y, c, w, loss="hinge")

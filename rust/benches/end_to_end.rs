@@ -1,0 +1,57 @@
+//! End-to-end benches: one full outer iteration of every method on the
+//! same kdd2010-shaped cluster, plus a complete quickstart-sized run —
+//! the numbers the EXPERIMENTS.md §Perf table tracks across
+//! optimization rounds.
+//!
+//! Run: cargo bench --bench end_to_end
+
+use fadl::benchkit::{black_box, Bench};
+use fadl::coordinator::config::Config;
+use fadl::coordinator::driver;
+use fadl::util::rng::Pcg64;
+
+fn cfg(method: &str, max_outer: usize) -> Config {
+    Config {
+        dataset: "kdd2010".into(),
+        scale: 2e-4,
+        nodes: 8,
+        method: method.into(),
+        max_outer,
+        eps_g: 1e-14,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let bench = Bench::quick();
+    println!("== end-to-end benches (kdd2010 @ 2e-4, P = 8) ==");
+
+    for method in ["fadl", "tera", "admm", "cocoa", "ssz"] {
+        // one outer iteration, warm-started cluster build excluded
+        let c = cfg(method, 1);
+        let s = bench.run(&format!("outer-iter/{method}"), || {
+            let exp = driver::prepare(&c).expect("prepare");
+            black_box(driver::run(&exp).expect("run"));
+        });
+        println!("{}", s.report());
+    }
+
+    // a full converged FADL run (the quickstart workload)
+    let s = bench.run("full-run/fadl 30 outer iters", || {
+        let c = cfg("fadl", 30);
+        let exp = driver::prepare(&c).expect("prepare");
+        black_box(driver::run(&exp).expect("run"));
+    });
+    println!("{}", s.report());
+
+    // dataset generation (the synthetic substrate itself)
+    let mut seed_rng = Pcg64::new(9);
+    let s = bench.run("synth/generate kdd2010 @ 2e-4", || {
+        let spec =
+            fadl::data::synth::paper_spec("kdd2010", 2e-4, seed_rng.next_u64()).unwrap();
+        black_box(fadl::data::synth::generate(&spec));
+    });
+    println!("{}", s.report());
+
+    println!("== end-to-end done ==");
+}

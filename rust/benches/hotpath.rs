@@ -1,0 +1,126 @@
+//! Hot-path micro-benchmarks (Layer-3 profile targets, EXPERIMENTS.md
+//! §Perf): the CSR kernels that Appendix A charges `c1·nz/P` per pass,
+//! the AllReduce tree, the TRON inner solve, and the cached-margin line
+//! search.
+//!
+//! Run: cargo bench --bench hotpath
+
+use fadl::approx::{self, ApproxKind};
+use fadl::benchkit::{black_box, Bench};
+use fadl::cluster::{Cluster, CostModel};
+use fadl::data::partition::{ExamplePartition, Strategy};
+use fadl::data::synth;
+use fadl::linalg;
+use fadl::loss::Loss;
+use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
+use fadl::optim::{tron::Tron, InnerOptimizer};
+use fadl::util::rng::Pcg64;
+
+fn main() {
+    let bench = Bench::default();
+    println!("== hotpath micro-benchmarks ==");
+
+    // ---- dense vector ops ----
+    let mut rng = Pcg64::new(1);
+    let m = 100_000;
+    let a: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let s = bench.run("dense/dot 100k", || {
+        black_box(linalg::dot(black_box(&a), black_box(&b)));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * m as f64) / 1e9);
+    let mut y = b.clone();
+    let s = bench.run("dense/axpy 100k", || {
+        linalg::axpy(black_box(0.5), black_box(&a), black_box(&mut y));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * m as f64) / 1e9);
+
+    // ---- CSR kernels (kdd2010-shaped shard) ----
+    let ds = synth::quick(20_000, 40_000, 40, 2);
+    let shard = SparseShard::new(Shard::whole(&ds));
+    let nnz = shard.nnz() as f64;
+    let w: Vec<f64> = (0..ds.m()).map(|_| 0.1 * rng.normal()).collect();
+    let mut z = vec![0.0; ds.n()];
+    let s = bench.run("csr/margins 20k x 40k (nnz ~800k)", || {
+        shard.data.x.margins_into(black_box(&w), black_box(&mut z));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * nnz) / 1e9);
+
+    let r: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
+    let mut g = vec![0.0; ds.m()];
+    let s = bench.run("csr/accumulate_rows (X^T r)", || {
+        g.fill(0.0);
+        shard.data.x.accumulate_rows(black_box(&r), black_box(&mut g));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * nnz) / 1e9);
+
+    let (_, _, margins) = shard.loss_grad(Loss::SquaredHinge, &w);
+    let dir: Vec<f64> = (0..ds.m()).map(|_| rng.normal()).collect();
+    let s = bench.run("csr/hvp (fused X^T D X s)", || {
+        black_box(shard.hvp(Loss::SquaredHinge, black_box(&margins), black_box(&dir)));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(4.0 * nnz) / 1e9);
+
+    let s = bench.run("shard/loss_grad full pass", || {
+        black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
+    });
+    println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(4.0 * nnz) / 1e9);
+
+    // ---- line-search evaluation over cached margins ----
+    let e = shard.margins(&dir);
+    let s = bench.run("shard/linesearch_eval (cached z,e)", || {
+        black_box(shard.linesearch_eval(
+            Loss::SquaredHinge,
+            black_box(&margins),
+            black_box(&e),
+            0.7,
+        ));
+    });
+    println!("{}", s.report());
+
+    // ---- AllReduce tree ----
+    for p in [8usize, 32, 128] {
+        let dsx = synth::quick(p * 8, 16, 4, 3);
+        let part = ExamplePartition::build(dsx.n(), p, Strategy::Contiguous, 0);
+        let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+            .map(|i| {
+                Box::new(SparseShard::new(Shard::from_dataset(
+                    &dsx,
+                    &part.assignments[i],
+                    &part.weights[i],
+                ))) as Box<dyn ShardCompute>
+            })
+            .collect();
+        let cluster = Cluster::new(workers, CostModel::default());
+        let vecs: Vec<Vec<f64>> = (0..p).map(|i| vec![i as f64; 20_000]).collect();
+        let s = bench.run(&format!("cluster/allreduce 20k-vec P={p}"), || {
+            black_box(cluster.allreduce(black_box(vecs.clone())));
+        });
+        println!("{}", s.report());
+    }
+
+    // ---- TRON inner solve on the quadratic approximation ----
+    let obj = Objective::new(1e-4, Loss::SquaredHinge);
+    let small = synth::quick(2_000, 2_000, 20, 4);
+    let sshard = SparseShard::new(Shard::whole(&small));
+    let (_, gdata, zs) = sshard.loss_grad(obj.loss, &vec![0.0; 2_000]);
+    let mut gfull = gdata.clone();
+    obj.finish_grad(&vec![0.0; 2_000], &mut gfull);
+    let s = Bench::quick().run("optim/tron k̂=10 on quadratic f̂_p", || {
+        let ctx = approx::ApproxContext {
+            shard: &sshard,
+            loss: obj.loss,
+            lambda: obj.lambda,
+            p_nodes: 8.0,
+            anchor: vec![0.0; 2_000],
+            full_grad: gfull.clone(),
+            local_grad: gdata.clone(),
+            anchor_margins: zs.clone(),
+        };
+        let mut fp = approx::build(ApproxKind::Quadratic, ctx, None);
+        black_box(Tron::default().minimize(fp.as_mut(), 10));
+    });
+    println!("{}", s.report());
+
+    println!("== hotpath done ==");
+}

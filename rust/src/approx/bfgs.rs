@@ -1,0 +1,236 @@
+//! BFGS curvature model for the §3.2 "BFGS approximation" of f̂_p.
+//!
+//! Models the Hessian of the *other-nodes* loss L − L_p with a
+//! limited-memory direct (not inverse) BFGS matrix built from the
+//! cross-outer-iteration pairs
+//!
+//!   s_r = w^{r+1} − w^r,
+//!   y_r = ∇(L−L_p)(w^{r+1}) − ∇(L−L_p)(w^r),
+//!
+//! so the node can inject second-order information about data it never
+//! sees. The paper proposes this and defers evaluation to future work
+//! (§4.6); we implement and ablate it (DESIGN.md §7).
+//!
+//! Representation: B = τI + Σ_i [ y_i y_iᵀ/(y_iᵀs_i) − b_i b_iᵀ/(s_iᵀb_i) ]
+//! where b_i = B_i s_i is precomputed at insertion time (the standard
+//! recursive sum form of the direct BFGS update), so `apply` is
+//! O(history · m).
+
+use crate::linalg;
+
+/// Limited-memory direct-BFGS operator, positive semi-definite by
+/// construction (pairs violating the curvature condition yᵀs > 0 are
+/// skipped, the usual damping-free safeguard).
+#[derive(Clone, Debug)]
+pub struct BfgsCurvature {
+    /// base scaling τ of B₀ = τI
+    pub tau: f64,
+    history: Vec<Pair>,
+    max_history: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Pair {
+    s: Vec<f64>,
+    y: Vec<f64>,
+    /// b = B_prev · s
+    b: Vec<f64>,
+    /// yᵀs
+    ys: f64,
+    /// sᵀb
+    sb: f64,
+}
+
+impl Default for BfgsCurvature {
+    fn default() -> Self {
+        BfgsCurvature {
+            tau: 0.0,
+            history: Vec::new(),
+            max_history: 10,
+        }
+    }
+}
+
+impl BfgsCurvature {
+    pub fn new(tau: f64, max_history: usize) -> Self {
+        assert!(tau >= 0.0);
+        BfgsCurvature {
+            tau,
+            history: Vec::new(),
+            max_history,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    /// B·v.
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let mut out: Vec<f64> = v.iter().map(|&x| self.tau * x).collect();
+        for p in &self.history {
+            let yv = linalg::dot(&p.y, v);
+            linalg::axpy(yv / p.ys, &p.y, &mut out);
+            let bv = linalg::dot(&p.b, v);
+            linalg::axpy(-bv / p.sb, &p.b, &mut out);
+        }
+        out
+    }
+
+    /// Insert the pair (s, y); on first insertion τ is initialized to the
+    /// Barzilai–Borwein scale yᵀy / yᵀs if it was 0. Returns whether the
+    /// pair was accepted (curvature condition).
+    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+        let ys = linalg::dot(y, s);
+        let ss = linalg::dot(s, s);
+        if ys <= 1e-12 * ss.max(1e-300) {
+            return false; // curvature condition failed — skip
+        }
+        if self.tau == 0.0 {
+            self.tau = (linalg::dot(y, y) / ys).max(1e-12);
+        }
+        let b = self.apply(s);
+        let sb = linalg::dot(s, &b);
+        if sb <= 1e-300 {
+            return false;
+        }
+        self.history.push(Pair {
+            s: s.to_vec(),
+            y: y.to_vec(),
+            b,
+            ys,
+            sb,
+        });
+        if self.history.len() > self.max_history {
+            self.history.remove(0);
+            // the chained b_i = B_i s_i values embedded the evicted
+            // pair's curvature — rebuild them so B stays an exact
+            // (hence PSD) product of valid BFGS updates.
+            self.rebuild();
+        }
+        true
+    }
+
+    /// Recompute the chained b_i = B_i·s_i after an eviction.
+    fn rebuild(&mut self) {
+        let pairs: Vec<(Vec<f64>, Vec<f64>)> = self
+            .history
+            .iter()
+            .map(|p| (p.s.clone(), p.y.clone()))
+            .collect();
+        self.history.clear();
+        for (s, y) in pairs {
+            let ys = linalg::dot(&y, &s);
+            if ys <= 1e-12 * linalg::dot(&s, &s).max(1e-300) {
+                continue;
+            }
+            let b = self.apply(&s);
+            let sb = linalg::dot(&s, &b);
+            if sb <= 1e-300 {
+                continue;
+            }
+            self.history.push(Pair { s, y, b, ys, sb });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn empty_operator_is_tau_identity() {
+        let b = BfgsCurvature::new(2.0, 5);
+        assert_eq!(b.apply(&[1.0, -3.0]), vec![2.0, -6.0]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn secant_equation_holds_after_update() {
+        // After update(s, y), BFGS guarantees B·s = y exactly.
+        let mut b = BfgsCurvature::new(1.0, 5);
+        let s = vec![1.0, 2.0, -1.0];
+        let y = vec![0.5, 3.0, 0.2];
+        assert!(b.update(&s, &y));
+        let bs = b.apply(&s);
+        for j in 0..3 {
+            assert!((bs[j] - y[j]).abs() < 1e-10, "{bs:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn recovers_quadratic_hessian_action() {
+        // For f = ½xᵀAx, pairs (s, As) teach B the action of A on the
+        // span of the s's.
+        let a = [[4.0, 1.0, 0.0], [1.0, 3.0, 0.5], [0.0, 0.5, 2.0]];
+        let av = |v: &[f64]| -> Vec<f64> {
+            (0..3)
+                .map(|i| (0..3).map(|j| a[i][j] * v[j]).sum())
+                .collect()
+        };
+        let mut b = BfgsCurvature::new(1.0, 10);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..6 {
+            let s: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            b.update(&s, &av(&s));
+        }
+        let mut rng2 = Pcg64::new(2);
+        let v: Vec<f64> = (0..3).map(|_| rng2.normal()).collect();
+        let want = av(&v);
+        let got = b.apply(&v);
+        for j in 0..3 {
+            assert!(
+                (got[j] - want[j]).abs() < 0.25 * want[j].abs().max(1.0),
+                "{got:?} vs {want:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_negative_curvature_pairs() {
+        let mut b = BfgsCurvature::new(1.0, 5);
+        assert!(!b.update(&[1.0, 0.0], &[-1.0, 0.0]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn stays_positive_semidefinite() {
+        let mut b = BfgsCurvature::new(1.0, 4);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..20 {
+            let s: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            b.update(&s, &y); // may accept or reject
+            let v: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let q = linalg::dot(&v, &b.apply(&v));
+            assert!(q >= -1e-9, "vᵀBv = {q}");
+        }
+    }
+
+    #[test]
+    fn history_bounded() {
+        let mut b = BfgsCurvature::new(1.0, 3);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..10 {
+            let s: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            let mut y = s.clone();
+            linalg::scale(2.0, &mut y); // guaranteed positive curvature
+            b.update(&s, &y);
+        }
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn bb_tau_initialization() {
+        let mut b = BfgsCurvature::new(0.0, 5);
+        let s = vec![1.0, 0.0];
+        let y = vec![3.0, 0.0];
+        b.update(&s, &y);
+        assert!((b.tau - 3.0).abs() < 1e-12); // yᵀy/yᵀs = 9/3
+    }
+}

@@ -1,0 +1,584 @@
+//! Local functional approximations f̂_p (paper §3.2).
+//!
+//! Every choice satisfies assumption A3: σ-strong convexity (the λ
+//! regularizer is always included), Lipschitz-continuous gradient, and
+//! **gradient consistency** ∇f̂_p(w^r) = g^r — the property that makes
+//! d_p = ŵ_p − w^r a sufficient-descent direction (Lemma 5).
+//!
+//! The five choices (eqs. (10)–(17)):
+//!
+//! | kind       | T̃_p          | L̂_p                                         |
+//! |------------|---------------|----------------------------------------------|
+//! | Linear     | L_p(v)        | (∇L−∇L_p)·δ                                  |
+//! | Hybrid     | L_p(v)        | (∇L−∇L_p)·δ + (P−1)/2·δᵀH_p^r δ              |
+//! | Quadratic  | ∇L_p·δ + ½δᵀH_p^r δ | (∇L−∇L_p)·δ + (P−1)/2·δᵀH_p^r δ        |
+//! | Nonlinear  | L_p(v)        | (∇L−P∇L_p)·δ + (P−1)·L_p(v)                  |
+//! | BFGS       | L_p(v)        | (∇L−∇L_p)·δ + ½δᵀBδ, B from gradient history |
+//!
+//! with δ = v − w^r and H_p^r the (Gauss–Newton) Hessian of L_p at w^r.
+//! The paper evaluates Quadratic/Hybrid/Nonlinear (§4.6) and leaves BFGS
+//! to future work — we implement and ablate it too (DESIGN.md §7).
+//!
+//! Interface contract: [`LocalApprox::eval`] returns (f̂_p(v), ∇f̂_p(v))
+//! and fixes the curvature linearization at v, so a following
+//! [`LocalApprox::hvp`] multiplies by the Hessian *at the last eval
+//! point* — exactly the order TRON's outer/inner loops use.
+
+use crate::linalg;
+use crate::loss::Loss;
+use crate::objective::{Shard, ShardCompute};
+
+pub mod bfgs;
+
+pub use bfgs::BfgsCurvature;
+
+/// Borrowed per-example view for the stochastic inner optimizers of
+/// §3.5 (SGD/SVRG). Only backends with per-example access provide it.
+pub struct StochasticView<'b> {
+    pub shard_data: &'b Shard,
+    pub lambda: f64,
+    pub loss: Loss,
+    pub anchor: &'b [f64],
+    pub full_grad: &'b [f64],
+    pub local_grad: &'b [f64],
+    pub anchor_margins: &'b [f64],
+}
+
+/// Which §3.2 approximation to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ApproxKind {
+    Linear,
+    Hybrid,
+    Quadratic,
+    Nonlinear,
+    Bfgs,
+}
+
+impl ApproxKind {
+    pub fn from_name(name: &str) -> Option<ApproxKind> {
+        match name {
+            "linear" => Some(ApproxKind::Linear),
+            "hybrid" => Some(ApproxKind::Hybrid),
+            "quadratic" => Some(ApproxKind::Quadratic),
+            "nonlinear" => Some(ApproxKind::Nonlinear),
+            "bfgs" => Some(ApproxKind::Bfgs),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApproxKind::Linear => "linear",
+            ApproxKind::Hybrid => "hybrid",
+            ApproxKind::Quadratic => "quadratic",
+            ApproxKind::Nonlinear => "nonlinear",
+            ApproxKind::Bfgs => "bfgs",
+        }
+    }
+}
+
+/// The shared per-iteration context from which node p builds f̂_p:
+/// everything is locally available after the gradient AllReduce
+/// (w^r, g^r broadcast; ∇L_p and z^r = X_p·w^r are local by-products).
+pub struct ApproxContext<'a> {
+    pub shard: &'a dyn ShardCompute,
+    pub loss: Loss,
+    pub lambda: f64,
+    /// number of nodes P (scales the (P−1) curvature copies)
+    pub p_nodes: f64,
+    /// w^r
+    pub anchor: Vec<f64>,
+    /// g^r = λw^r + ∇L(w^r)  (the full gradient)
+    pub full_grad: Vec<f64>,
+    /// ∇L_p(w^r)  (the local data gradient, no regularizer)
+    pub local_grad: Vec<f64>,
+    /// z^r = X_p·w^r (cached margins at the anchor)
+    pub anchor_margins: Vec<f64>,
+}
+
+impl<'a> ApproxContext<'a> {
+    /// ∇L(w^r) = g^r − λw^r (locally computable, §3.2 remark after (11)).
+    fn data_grad(&self) -> Vec<f64> {
+        let mut g = self.full_grad.clone();
+        linalg::axpy(-self.lambda, &self.anchor, &mut g);
+        g
+    }
+}
+
+/// A built local approximation, ready for the inner optimizer `M`.
+pub trait LocalApprox: Send {
+    fn m(&self) -> usize;
+
+    /// (f̂_p(v), ∇f̂_p(v)); fixes curvature state at v for [`Self::hvp`].
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>);
+
+    /// ∇²f̂_p (at the last eval point) × s.
+    fn hvp(&self, s: &[f64]) -> Vec<f64>;
+
+    /// Data passes consumed so far (Appendix-A cost accounting:
+    /// 1.0 = one full sweep over the shard's nonzeros).
+    fn passes(&self) -> f64;
+
+    /// w^r (the gradient-consistency anchor).
+    fn anchor(&self) -> &[f64];
+
+    /// Per-example view for stochastic `M` (§3.5); `None` when the
+    /// backend exposes only block operations.
+    fn stochastic(&self) -> Option<StochasticView<'_>> {
+        None
+    }
+}
+
+/// Build the requested approximation. `bfgs_curvature` supplies the
+/// cross-iteration gradient history needed by [`ApproxKind::Bfgs`]
+/// (pass a fresh default at r = 0).
+pub fn build<'a>(
+    kind: ApproxKind,
+    ctx: ApproxContext<'a>,
+    bfgs_curvature: Option<&BfgsCurvature>,
+) -> Box<dyn LocalApprox + 'a> {
+    match kind {
+        ApproxKind::Quadratic => Box::new(QuadraticApprox::new(ctx)),
+        ApproxKind::Linear => Box::new(GenericApprox::new(ctx, Curvature::None, 1.0)),
+        ApproxKind::Hybrid => Box::new(GenericApprox::new(ctx, Curvature::AnchorScaled, 1.0)),
+        ApproxKind::Nonlinear => Box::new(GenericApprox::new(ctx, Curvature::None, 0.0)),
+        ApproxKind::Bfgs => Box::new(GenericApprox::new(
+            ctx,
+            Curvature::Bfgs(bfgs_curvature.cloned().unwrap_or_default()),
+            1.0,
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quadratic approximation (eq. (14)-(15)) — the paper's best performer.
+// f̂(v) = λ/2‖v‖² + ∇L·δ + (P/2)·δᵀH_p^r δ
+// ---------------------------------------------------------------------------
+
+pub struct QuadraticApprox<'a> {
+    ctx: ApproxContext<'a>,
+    data_grad: Vec<f64>,
+    passes: f64,
+}
+
+impl<'a> QuadraticApprox<'a> {
+    pub fn new(ctx: ApproxContext<'a>) -> Self {
+        let data_grad = ctx.data_grad();
+        QuadraticApprox {
+            ctx,
+            data_grad,
+            passes: 0.0,
+        }
+    }
+}
+
+impl<'a> LocalApprox for QuadraticApprox<'a> {
+    fn m(&self) -> usize {
+        self.ctx.anchor.len()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let delta = linalg::sub(v, &self.ctx.anchor);
+        // one H_p^r·δ product = one fused pass over the shard
+        let hd = self
+            .ctx
+            .shard
+            .hvp(self.ctx.loss, &self.ctx.anchor_margins, &delta);
+        self.passes += 1.0;
+        let p = self.ctx.p_nodes;
+        let mut value = 0.5 * self.ctx.lambda * linalg::dot(v, v);
+        value += linalg::dot(&self.data_grad, &delta);
+        value += 0.5 * p * linalg::dot(&delta, &hd);
+        let mut grad = self.data_grad.clone();
+        linalg::axpy(self.ctx.lambda, v, &mut grad);
+        linalg::axpy(p, &hd, &mut grad);
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        // curvature is anchored at w^r for all v — pure quadratic model
+        let mut out = self
+            .ctx
+            .shard
+            .hvp(self.ctx.loss, &self.ctx.anchor_margins, s);
+        linalg::scale(self.ctx.p_nodes, &mut out);
+        linalg::axpy(self.ctx.lambda, s, &mut out);
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    fn anchor(&self) -> &[f64] {
+        &self.ctx.anchor
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic form covering Linear / Hybrid / Nonlinear / BFGS.
+//
+// f̂(v) = λ/2‖v‖² + k·L_p(v) + lin·δ + extra_curvature(δ)
+//   Linear:    k = 1 (local_scale 1.0), lin = ∇L − ∇L_p,  extra = 0
+//   Hybrid:    k = 1,                   lin = ∇L − ∇L_p,  extra = (P−1)/2·δᵀH^r δ
+//   Nonlinear: k = P (local_scale 0.0 marker), lin = ∇L − P∇L_p, extra = 0
+//   BFGS:      k = 1,                   lin = ∇L − ∇L_p,  extra = ½δᵀBδ
+// ---------------------------------------------------------------------------
+
+enum Curvature {
+    None,
+    /// (P−1)·H_p^r (Hybrid)
+    AnchorScaled,
+    /// cross-iteration BFGS model of ∇²(L − L_p)
+    Bfgs(BfgsCurvature),
+}
+
+pub struct GenericApprox<'a> {
+    ctx: ApproxContext<'a>,
+    curvature: Curvature,
+    /// 1.0 → local loss counted once (Linear/Hybrid/BFGS);
+    /// 0.0 → Nonlinear marker: local loss counted P times
+    plain_local: bool,
+    /// coefficient on L_p(v)
+    local_coeff: f64,
+    /// the linear correction term
+    lin: Vec<f64>,
+    /// margins at the last eval point (for hvp curvature of k·L_p)
+    last_margins: Vec<f64>,
+    passes: f64,
+}
+
+impl<'a> GenericApprox<'a> {
+    fn new(ctx: ApproxContext<'a>, curvature: Curvature, local_scale: f64) -> Self {
+        let data_grad = ctx.data_grad();
+        let plain_local = local_scale != 0.0;
+        let (local_coeff, lin) = if plain_local {
+            // lin = ∇L − ∇L_p
+            let mut lin = data_grad;
+            linalg::axpy(-1.0, &ctx.local_grad, &mut lin);
+            (1.0, lin)
+        } else {
+            // Nonlinear: lin = ∇L − P·∇L_p, local coefficient P
+            let p = ctx.p_nodes;
+            let mut lin = data_grad;
+            linalg::axpy(-p, &ctx.local_grad, &mut lin);
+            (p, lin)
+        };
+        let last_margins = ctx.anchor_margins.clone();
+        GenericApprox {
+            ctx,
+            curvature,
+            plain_local,
+            local_coeff,
+            lin,
+            last_margins,
+            passes: 0.0,
+        }
+    }
+}
+
+impl<'a> LocalApprox for GenericApprox<'a> {
+    fn m(&self) -> usize {
+        self.ctx.anchor.len()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let delta = linalg::sub(v, &self.ctx.anchor);
+        let (lv, lg, z) = self.ctx.shard.loss_grad(self.ctx.loss, v);
+        self.passes += 2.0; // margins pass + gradient pass
+        self.last_margins = z;
+
+        let mut value = 0.5 * self.ctx.lambda * linalg::dot(v, v)
+            + self.local_coeff * lv
+            + linalg::dot(&self.lin, &delta);
+        let mut grad = self.lin.clone();
+        linalg::axpy(self.ctx.lambda, v, &mut grad);
+        linalg::axpy(self.local_coeff, &lg, &mut grad);
+
+        match &self.curvature {
+            Curvature::None => {}
+            Curvature::AnchorScaled => {
+                let hd = self
+                    .ctx
+                    .shard
+                    .hvp(self.ctx.loss, &self.ctx.anchor_margins, &delta);
+                self.passes += 1.0;
+                let scale = self.ctx.p_nodes - 1.0;
+                value += 0.5 * scale * linalg::dot(&delta, &hd);
+                linalg::axpy(scale, &hd, &mut grad);
+            }
+            Curvature::Bfgs(b) => {
+                let bd = b.apply(&delta);
+                value += 0.5 * linalg::dot(&delta, &bd);
+                linalg::axpy(1.0, &bd, &mut grad);
+            }
+        }
+        let _ = self.plain_local;
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        // ∇² = λI + k·H_p(v_last) [+ (P−1)H_p^r | + B]
+        let mut out = self.ctx.shard.hvp(self.ctx.loss, &self.last_margins, s);
+        linalg::scale(self.local_coeff, &mut out);
+        linalg::axpy(self.ctx.lambda, s, &mut out);
+        match &self.curvature {
+            Curvature::None => {}
+            Curvature::AnchorScaled => {
+                let hr = self
+                    .ctx
+                    .shard
+                    .hvp(self.ctx.loss, &self.ctx.anchor_margins, s);
+                linalg::axpy(self.ctx.p_nodes - 1.0, &hr, &mut out);
+            }
+            Curvature::Bfgs(b) => {
+                let bs = b.apply(s);
+                linalg::axpy(1.0, &bs, &mut out);
+            }
+        }
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    fn anchor(&self) -> &[f64] {
+        &self.ctx.anchor
+    }
+
+    fn stochastic(&self) -> Option<StochasticView<'_>> {
+        // §3.5 derives the parallel-SGD instantiation from the Linear
+        // form; the per-example decomposition is valid whenever the
+        // local loss enters with coefficient 1 and no extra curvature.
+        if !matches!(self.curvature, Curvature::None) || !self.plain_local {
+            return None;
+        }
+        let shard_data = self.ctx.shard.shard()?;
+        Some(StochasticView {
+            shard_data,
+            lambda: self.ctx.lambda,
+            loss: self.ctx.loss,
+            anchor: &self.ctx.anchor,
+            full_grad: &self.ctx.full_grad,
+            local_grad: &self.ctx.local_grad,
+            anchor_margins: &self.ctx.anchor_margins,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    const KINDS: [ApproxKind; 5] = [
+        ApproxKind::Linear,
+        ApproxKind::Hybrid,
+        ApproxKind::Quadratic,
+        ApproxKind::Nonlinear,
+        ApproxKind::Bfgs,
+    ];
+
+    struct Fixture {
+        shard: SparseShard,
+        full: SparseShard,
+        obj: Objective,
+        w: Vec<f64>,
+    }
+
+    fn fixture(loss: Loss) -> Fixture {
+        // two "nodes": shard = first half; full = everything (P = 2)
+        let ds = synth::quick(80, 24, 8, 5);
+        let rows: Vec<usize> = (0..40).collect();
+        let weights = vec![1.0; 40];
+        let shard = SparseShard::new(Shard::from_dataset(&ds, &rows, &weights));
+        let full = SparseShard::new(Shard::whole(&ds));
+        let obj = Objective::new(1e-2, loss);
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        let w: Vec<f64> = (0..24).map(|_| 0.1 * rng.normal()).collect();
+        Fixture {
+            shard,
+            full,
+            obj,
+            w,
+        }
+    }
+
+    fn context(fx: &Fixture) -> ApproxContext<'_> {
+        let (_fv, g) = fx.obj.eval(&[&fx.full], &fx.w);
+        let (_, lg, z) = fx.shard.loss_grad(fx.obj.loss, &fx.w);
+        ApproxContext {
+            shard: &fx.shard,
+            loss: fx.obj.loss,
+            lambda: fx.obj.lambda,
+            p_nodes: 2.0,
+            anchor: fx.w.clone(),
+            full_grad: g,
+            local_grad: lg,
+            anchor_margins: z,
+        }
+    }
+
+    #[test]
+    fn gradient_consistency_a3_all_kinds() {
+        // ∇f̂_p(w^r) must equal g^r for every approximation (A3)
+        let fx = fixture(Loss::SquaredHinge);
+        for kind in KINDS {
+            let ctx = context(&fx);
+            let g_full = ctx.full_grad.clone();
+            let mut approx = build(kind, ctx, None);
+            let (_, g_hat) = approx.eval(&fx.w);
+            for j in 0..fx.w.len() {
+                assert!(
+                    (g_hat[j] - g_full[j]).abs() < 1e-9,
+                    "{kind:?}: coord {j}: {} vs {}",
+                    g_hat[j],
+                    g_full[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approx_grad_matches_finite_difference() {
+        let fx = fixture(Loss::Logistic);
+        for kind in KINDS {
+            let ctx = context(&fx);
+            let mut approx = build(kind, ctx, None);
+            let mut rng = crate::util::rng::Pcg64::new(4);
+            let v: Vec<f64> = fx.w.iter().map(|&x| x + 0.05 * rng.normal()).collect();
+            let (_, g) = approx.eval(&v);
+            let h = 1e-6;
+            for j in [0usize, 7, 23] {
+                let mut vp = v.clone();
+                vp[j] += h;
+                let mut vm = v.clone();
+                vm[j] -= h;
+                let (fp, _) = approx.eval(&vp);
+                let (fm, _) = approx.eval(&vm);
+                let num = (fp - fm) / (2.0 * h);
+                assert!(
+                    (g[j] - num).abs() < 1e-4 * num.abs().max(1.0),
+                    "{kind:?} coord {j}: {} vs {num}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hvp_matches_grad_difference() {
+        let fx = fixture(Loss::Logistic);
+        for kind in KINDS {
+            let ctx = context(&fx);
+            let mut approx = build(kind, ctx, None);
+            let (_, _) = approx.eval(&fx.w);
+            let mut rng = crate::util::rng::Pcg64::new(6);
+            let s: Vec<f64> = (0..fx.w.len()).map(|_| rng.normal()).collect();
+            let hv = approx.hvp(&s);
+            let h = 1e-6;
+            let mut vp = fx.w.clone();
+            linalg::axpy(h, &s, &mut vp);
+            let mut vm = fx.w.clone();
+            linalg::axpy(-h, &s, &mut vm);
+            let (_, gp) = approx.eval(&vp);
+            let (_, gm) = approx.eval(&vm);
+            for j in 0..fx.w.len() {
+                let num = (gp[j] - gm[j]) / (2.0 * h);
+                assert!(
+                    (hv[j] - num).abs() < 2e-3 * num.abs().max(1.0),
+                    "{kind:?} coord {j}: {} vs {num}",
+                    hv[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hvp_strongly_convex() {
+        // sᵀ∇²f̂ s ≥ λ‖s‖² (σ-strong convexity with σ = λ, A3)
+        let fx = fixture(Loss::SquaredHinge);
+        for kind in KINDS {
+            let ctx = context(&fx);
+            let mut approx = build(kind, ctx, None);
+            approx.eval(&fx.w);
+            let mut rng = crate::util::rng::Pcg64::new(7);
+            for _ in 0..5 {
+                let s: Vec<f64> = (0..fx.w.len()).map(|_| rng.normal()).collect();
+                let hv = approx.hvp(&s);
+                let quad = linalg::dot(&s, &hv);
+                let bound = fx.obj.lambda * linalg::dot(&s, &s);
+                assert!(quad >= bound - 1e-9, "{kind:?}: {quad} < {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn minimizer_direction_is_descent() {
+        // Lemma 5: d = ŵ* − w^r satisfies −g·d ≥ (σ/L)‖g‖‖d‖ > 0.
+        // A few Newton steps on the quadratic get us near ŵ*.
+        let fx = fixture(Loss::SquaredHinge);
+        let ctx = context(&fx);
+        let g_full = ctx.full_grad.clone();
+        let mut approx = build(ApproxKind::Quadratic, ctx, None);
+        use crate::optim::InnerOptimizer as _;
+        let res = crate::optim::tron::Tron::default().minimize(approx.as_mut(), 15);
+        let d = linalg::sub(&res.w, &fx.w);
+        let cos = linalg::descent_cosine(&g_full, &d).unwrap();
+        assert!(cos > 0.05, "cos {cos}");
+    }
+
+    #[test]
+    fn p1_linear_approx_is_exact_objective() {
+        // With P = 1 the Linear approximation IS the true objective
+        // (lin term vanishes): f̂(v) = λ/2‖v‖² + L(v).
+        let ds = synth::quick(40, 16, 6, 9);
+        let full = SparseShard::new(Shard::whole(&ds));
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let w: Vec<f64> = (0..16).map(|_| 0.1 * rng.normal()).collect();
+        let (_, g) = obj.eval(&[&full], &w);
+        let (_, lg, z) = full.loss_grad(obj.loss, &w);
+        let ctx = ApproxContext {
+            shard: &full,
+            loss: obj.loss,
+            lambda: obj.lambda,
+            p_nodes: 1.0,
+            anchor: w.clone(),
+            full_grad: g,
+            local_grad: lg,
+            anchor_margins: z,
+        };
+        let mut approx = build(ApproxKind::Linear, ctx, None);
+        let v: Vec<f64> = (0..16).map(|_| 0.2 * rng.normal()).collect();
+        let (fhat, ghat) = approx.eval(&v);
+        let (fv, gv) = obj.eval(&[&full], &v);
+        assert!((fhat - fv).abs() < 1e-9 * fv.abs().max(1.0));
+        for j in 0..16 {
+            assert!((ghat[j] - gv[j]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in KINDS {
+            assert_eq!(ApproxKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(ApproxKind::from_name("cubic"), None);
+    }
+
+    #[test]
+    fn pass_accounting_increases() {
+        let fx = fixture(Loss::SquaredHinge);
+        let ctx = context(&fx);
+        let mut approx = build(ApproxKind::Hybrid, ctx, None);
+        assert_eq!(approx.passes(), 0.0);
+        approx.eval(&fx.w);
+        let p1 = approx.passes();
+        assert!(p1 > 0.0);
+        approx.eval(&fx.w);
+        assert!(approx.passes() > p1);
+    }
+}

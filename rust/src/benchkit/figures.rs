@@ -1,0 +1,227 @@
+//! Shared machinery for the figure/table harness binaries
+//! (`rust/src/bin/fig*.rs`, `table*.rs`): each paper figure is a sweep
+//! of (dataset × method × P) runs; this module runs them and prints the
+//! same rows/series the paper plots. See DESIGN.md §6 for the index.
+
+use crate::coordinator::config::Config;
+use crate::coordinator::{driver, report};
+use crate::metrics::{log_rel_diff, Trace};
+
+/// The x-axis the paper uses in a given figure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// Figures 5–6, 9: number of m-vector communication passes
+    CommPasses,
+    /// Figures 1–4, 7–8, 10: (simulated) time
+    SimTime,
+}
+
+/// Default figure-harness scale vs the paper's dataset sizes. The
+/// *shape* claims (who wins, crossovers) are scale-free per eq. (21)
+/// because nz/m is preserved by the generators (DESIGN.md §4).
+pub const DEFAULT_SCALE: f64 = 5e-3;
+
+/// Build the base config for a figure run.
+pub fn figure_config(dataset: &str, scale: f64, p: usize, method: &str) -> Config {
+    Config {
+        name: format!("{dataset}-{method}-p{p}"),
+        dataset: dataset.into(),
+        scale,
+        nodes: p,
+        method: method.into(),
+        max_outer: 60,
+        eps_g: 1e-9,
+        ..Default::default()
+    }
+}
+
+/// Run one (dataset, method, P) cell and return its trace.
+pub fn run_cell(cfg: &Config) -> Result<Trace, String> {
+    let exp = driver::prepare(cfg)?;
+    let (_, trace) = driver::run(&exp)?;
+    Ok(trace)
+}
+
+/// A near-exact optimum f* for a dataset config, computed the way the
+/// paper does (§4.1): run the TERA solver "for a very large number of
+/// iterations".
+pub fn reference_f_star(cfg: &Config) -> Result<f64, String> {
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.method = "tera".into();
+    ref_cfg.nodes = 1;
+    ref_cfg.max_outer = 200;
+    ref_cfg.eps_g = 1e-13;
+    ref_cfg.out_json = None;
+    let exp = driver::prepare(&ref_cfg)?;
+    let (_, trace) = driver::run(&exp)?;
+    Ok(trace.best_f())
+}
+
+/// Steady-state AUPRC of full, perfect training (the Figures 9–10
+/// stopping-rule target).
+pub fn reference_auprc(cfg: &Config) -> Result<f64, String> {
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.method = "tera".into();
+    ref_cfg.nodes = 1;
+    ref_cfg.max_outer = 200;
+    ref_cfg.eps_g = 1e-13;
+    ref_cfg.out_json = None;
+    let exp = driver::prepare(&ref_cfg)?;
+    let (w, _) = driver::run(&exp)?;
+    Ok(crate::metrics::auprc::auprc_of_model(&exp.test, &w))
+}
+
+/// Print one figure panel: the (x, log-rel-f) series per method, in the
+/// console form of the paper's plots.
+pub fn print_panel(
+    title: &str,
+    axis: Axis,
+    f_star: f64,
+    traces: &[Trace],
+    points: usize,
+) {
+    println!("\n=== {title} ===");
+    let axis_name = match axis {
+        Axis::CommPasses => "comm passes",
+        Axis::SimTime => "sim time (s)",
+    };
+    for trace in traces {
+        println!("--- {} ({axis_name} → log10 rel f-f*) ---", trace.method);
+        let n = trace.records.len();
+        let stride = (n / points).max(1);
+        let mut row = Vec::new();
+        for (i, r) in trace.records.iter().enumerate() {
+            if i % stride != 0 && i != n - 1 {
+                continue;
+            }
+            let x = match axis {
+                Axis::CommPasses => format!("{:.0}", r.comm_passes),
+                Axis::SimTime => format!("{:.3}", r.sim_secs),
+            };
+            row.push(format!("({x}, {:.2})", log_rel_diff(r.f, f_star)));
+        }
+        println!("{}", row.join(" "));
+    }
+}
+
+/// Figures 9–10 helper: the (comm-pass, time) cost for a method to
+/// reach within `tol` of the steady-state AUPRC. Returns None when the
+/// run never got there within its iteration budget.
+pub fn cost_to_auprc(trace: &Trace, steady: f64, tol: f64) -> Option<(f64, f64)> {
+    trace
+        .first_reaching_auprc(steady, tol)
+        .map(|r| (r.comm_passes, r.sim_secs))
+}
+
+/// Print the Figures 9–10 ratio table rows: method metric relative to
+/// TERA as a function of P (> 1 means faster than TERA).
+pub fn print_ratio_table(
+    title: &str,
+    ps: &[usize],
+    methods: &[&str],
+    // ratios[method][p_index]
+    ratios: &[Vec<Option<f64>>],
+) {
+    let mut rows = Vec::new();
+    for (mi, method) in methods.iter().enumerate() {
+        let mut row = vec![method.to_string()];
+        for pi in 0..ps.len() {
+            row.push(match ratios[mi][pi] {
+                Some(v) => format!("{v:.2}"),
+                None => "dnf".into(),
+            });
+        }
+        rows.push(row);
+    }
+    let mut headers: Vec<String> = vec!["method".into()];
+    headers.extend(ps.iter().map(|p| format!("P={p}")));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    println!("\n=== {title} ===\n{}", report::table(&header_refs, &rows));
+}
+
+/// The generic Figures 5–8 runner: for each dataset and node count, run
+/// all four methods under their best settings (§4.7) and print the
+/// convergence panels against the requested axis.
+pub fn run_convergence_figure(
+    title: &str,
+    datasets: &[&str],
+    axis: Axis,
+    scale: f64,
+    ps: &[usize],
+    max_outer: usize,
+) {
+    const METHODS: [&str; 4] = ["fadl", "tera", "admm", "cocoa"];
+    for dataset in datasets {
+        let base = figure_config(dataset, scale, ps[0], "fadl");
+        let f_star = match reference_f_star(&base) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("[{dataset}] reference solve failed: {e}");
+                continue;
+            }
+        };
+        for &p in ps {
+            let mut traces = Vec::new();
+            for method in METHODS {
+                let mut cfg = figure_config(dataset, scale, p, method);
+                cfg.max_outer = max_outer;
+                match run_cell(&cfg) {
+                    Ok(t) => traces.push(t),
+                    Err(e) => eprintln!("[{dataset} {method} P={p}] failed: {e}"),
+                }
+            }
+            print_panel(
+                &format!("{title}: {dataset}, P = {p}"),
+                axis,
+                f_star,
+                &traces,
+                12,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_config_shapes() {
+        let cfg = figure_config("kdd2010", 1e-4, 8, "fadl");
+        assert_eq!(cfg.dataset, "kdd2010");
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.method, "fadl");
+    }
+
+    #[test]
+    fn cell_and_reference_run_on_quick_config() {
+        let cfg = Config {
+            quick_n: 200,
+            quick_m: 30,
+            quick_nnz: 8,
+            nodes: 2,
+            max_outer: 5,
+            ..Default::default()
+        };
+        let trace = run_cell(&cfg).unwrap();
+        assert!(!trace.records.is_empty());
+        let fs = reference_f_star(&cfg).unwrap();
+        assert!(fs <= trace.best_f() + 1e-6);
+        let au = reference_auprc(&cfg).unwrap();
+        assert!((0.0..=1.0).contains(&au));
+    }
+
+    #[test]
+    fn cost_to_auprc_stopping() {
+        let mut trace = Trace::new("x", "d", 2);
+        let cost = crate::cluster::CostModel::default();
+        let mut clock = crate::cluster::SimClock::default();
+        for i in 0..5 {
+            clock.comm_pass(1.0);
+            trace.push(i, &clock, &cost, 0.0, 1.0, 1.0, 0.2 * i as f64);
+        }
+        let (passes, _) = cost_to_auprc(&trace, 0.6, 0.001).unwrap();
+        assert_eq!(passes, 4.0);
+        assert!(cost_to_auprc(&trace, 0.99, 0.001).is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Micro/e2e benchmark harness behind `cargo bench` (replaces
+//! `criterion` in the offline build — DESIGN.md §8).
+//!
+//! Methodology: warmup runs, then timed batches until both a minimum
+//! batch count and a minimum total duration are met; reports median,
+//! mean, p10/p90 and a throughput line. A `black_box` shim prevents
+//! dead-code elimination of the benched expression.
+
+use std::time::{Duration, Instant};
+
+pub mod figures;
+
+/// Optimization barrier (re-exported so benches import one module).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: usize,
+}
+
+impl Stats {
+    pub fn median_ns(&self) -> f64 {
+        crate::util::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::mean(&self.samples_ns)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        crate::util::percentile(&self.samples_ns, 10.0)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        crate::util::percentile(&self.samples_ns, 90.0)
+    }
+
+    /// One console line in the cargo-bench idiom.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>12.0} ns/iter (p10 {:.0}, p90 {:.0}, n={})",
+            self.name,
+            self.median_ns(),
+            self.p10_ns(),
+            self.p90_ns(),
+            self.samples_ns.len()
+        )
+    }
+
+    /// Throughput helper: elements (or flops) per second at the median.
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / (self.median_ns() * 1e-9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub min_total: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(100),
+            min_total: Duration::from_millis(400),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(10),
+            min_total: Duration::from_millis(50),
+            min_samples: 3,
+            max_samples: 20,
+        }
+    }
+
+    /// Time `f`, auto-calibrating the per-sample iteration count so one
+    /// sample is ≥ ~1ms (amortizing timer overhead).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // warmup + calibration
+        let start = Instant::now();
+        let mut calib_iters = 0usize;
+        while start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters_per_sample = ((1e-3 / per_iter).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let total_start = Instant::now();
+        while (samples.len() < self.min_samples
+            || total_start.elapsed() < self.min_total)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / iters_per_sample as f64;
+            samples.push(ns);
+        }
+        Stats {
+            name: name.to_string(),
+            samples_ns: samples,
+            iters_per_sample,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_cheap_op() {
+        let bench = Bench {
+            warmup: Duration::from_millis(5),
+            min_total: Duration::from_millis(20),
+            min_samples: 5,
+            max_samples: 50,
+        };
+        let mut acc = 0u64;
+        let stats = bench.run("noop-add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(stats.samples_ns.len() >= 5);
+        assert!(stats.median_ns() > 0.0);
+        assert!(stats.median_ns() < 1e6, "{}", stats.median_ns());
+        assert!(stats.report().contains("noop-add"));
+    }
+
+    #[test]
+    fn slower_op_measures_slower() {
+        let bench = Bench {
+            warmup: Duration::from_millis(5),
+            min_total: Duration::from_millis(30),
+            min_samples: 5,
+            max_samples: 30,
+        };
+        let a: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..16384).map(|i| i as f64).collect();
+        let fast = bench.run("dot-64", || {
+            black_box(crate::linalg::dot(black_box(&a), black_box(&a)));
+        });
+        let slow = bench.run("dot-16k", || {
+            black_box(crate::linalg::dot(black_box(&b), black_box(&b)));
+        });
+        assert!(slow.median_ns() > 2.0 * fast.median_ns());
+    }
+
+    #[test]
+    fn per_sec_scales() {
+        let s = Stats {
+            name: "x".into(),
+            samples_ns: vec![1000.0],
+            iters_per_sample: 1,
+        };
+        assert!((s.per_sec(1000.0) - 1e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,55 @@
+//! Ablation (DESIGN.md §7): sensitivity of FADL to the inner CG budget
+//! k̂ and to the inner optimizer M — the design-choice study behind
+//! §3.4's "choices for M" discussion.
+//! Regenerate: cargo run --release --bin ablation_khat
+use fadl::benchkit::figures;
+use fadl::coordinator::{driver, report};
+use fadl::methods::{fadl::Fadl, TrainContext, Trainer};
+use fadl::objective::Objective;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("ablation_khat", "FADL k̂ / inner-M ablation")
+        .flag("dataset", "kdd2010", "dataset name")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8", "node count")
+        .flag("max-outer", "40", "outer iteration cap")
+        .parse();
+    let cfg = figures::figure_config(a.get("dataset"), a.get_f64("scale"), a.get_usize("nodes"), "fadl");
+    let f_star = figures::reference_f_star(&cfg).expect("reference");
+    let mut rows = Vec::new();
+    for k_hat in [1usize, 3, 5, 10, 20, 40] {
+        for inner in ["tron", "lbfgs", "gd"] {
+            let exp = driver::prepare(&cfg).expect("prepare");
+            let obj = Objective::new(exp.lambda, cfg.loss);
+            let ctx = TrainContext {
+                max_outer: a.get_usize("max-outer"),
+                eps_g: 1e-10,
+                ..TrainContext::new(&exp.cluster, obj)
+            };
+            let method = Fadl {
+                k_hat,
+                inner: inner.into(),
+                ..Default::default()
+            };
+            let (_, trace) = method.train(&ctx);
+            let last = trace.records.last().unwrap();
+            rows.push(vec![
+                k_hat.to_string(),
+                inner.to_string(),
+                format!("{:.2}", fadl::metrics::log_rel_diff(last.f, f_star)),
+                format!("{:.0}", last.comm_passes),
+                format!("{:.3}", last.sim_secs),
+            ]);
+        }
+    }
+    println!(
+        "FADL ablation on {} (P = {}):\n{}",
+        a.get("dataset"),
+        a.get_usize("nodes"),
+        report::table(
+            &["k̂", "inner M", "log10 rel gap", "comm passes", "sim secs"],
+            &rows
+        )
+    );
+}

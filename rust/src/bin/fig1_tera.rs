@@ -1,0 +1,32 @@
+//! Figure 1: TERA-LBFGS vs TERA-TRON time efficiency (kdd2010).
+//! Regenerate: cargo run --release --bin fig1_tera
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig1_tera", "Fig 1: TERA solver comparison")
+        .flag("dataset", "kdd2010", "dataset name")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    let dataset = a.get("dataset");
+    let scale = a.get_f64("scale");
+    let base = figures::figure_config(dataset, scale, 1, "tera");
+    let f_star = figures::reference_f_star(&base).expect("reference solve");
+    for p in a.get_usize_list("nodes") {
+        let mut traces = Vec::new();
+        for method in ["tera-tron", "tera-lbfgs"] {
+            let mut cfg = figures::figure_config(dataset, scale, p, method);
+            cfg.max_outer = a.get_usize("max-outer");
+            traces.push(figures::run_cell(&cfg).expect(method));
+        }
+        figures::print_panel(
+            &format!("Fig 1: {dataset}, P = {p}"),
+            Axis::SimTime,
+            f_star,
+            &traces,
+            12,
+        );
+    }
+}

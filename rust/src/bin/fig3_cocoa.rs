@@ -1,0 +1,47 @@
+//! Figure 3: CoCoA inner-epoch settings {0.1, 1, 10} on kdd2010.
+//! Regenerate: cargo run --release --bin fig3_cocoa
+use fadl::benchkit::figures::{self, Axis};
+use fadl::coordinator::driver;
+use fadl::methods::{cocoa::CoCoA, TrainContext, Trainer};
+use fadl::objective::Objective;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig3_cocoa", "Fig 3: CoCoA inner epochs")
+        .flag("dataset", "kdd2010", "dataset name")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    let dataset = a.get("dataset");
+    let scale = a.get_f64("scale");
+    let base = figures::figure_config(dataset, scale, 1, "tera");
+    let f_star = figures::reference_f_star(&base).expect("reference solve");
+    for p in a.get_usize_list("nodes") {
+        let cfg = figures::figure_config(dataset, scale, p, "cocoa");
+        let mut traces = Vec::new();
+        for epochs in [0.1, 1.0, 10.0] {
+            let exp = driver::prepare(&cfg).expect("prepare");
+            let obj = Objective::new(exp.lambda, cfg.loss);
+            let ctx = TrainContext {
+                test_set: Some(&exp.test),
+                max_outer: a.get_usize("max-outer"),
+                ..TrainContext::new(&exp.cluster, obj)
+            };
+            let method = CoCoA {
+                inner_epochs: epochs,
+                ..Default::default()
+            };
+            let (_, mut trace) = method.train(&ctx);
+            trace.dataset = exp.train.name.clone();
+            traces.push(trace);
+        }
+        figures::print_panel(
+            &format!("Fig 3: {dataset}, P = {p}"),
+            Axis::SimTime,
+            f_star,
+            &traces,
+            12,
+        );
+    }
+}

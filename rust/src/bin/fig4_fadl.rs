@@ -1,0 +1,41 @@
+//! Figure 4: FADL approximations (Quadratic/Hybrid/Nonlinear, plus the
+//! BFGS extension) vs SSZ on kdd2010.
+//! Regenerate: cargo run --release --bin fig4_fadl
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig4_fadl", "Fig 4: FADL approximations vs SSZ")
+        .flag("dataset", "kdd2010", "dataset name")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .switch("with-bfgs", "also run the BFGS extension (DESIGN.md §7)")
+        .parse();
+    let dataset = a.get("dataset");
+    let scale = a.get_f64("scale");
+    let base = figures::figure_config(dataset, scale, 1, "tera");
+    let f_star = figures::reference_f_star(&base).expect("reference solve");
+    let mut methods = vec!["fadl-quadratic", "fadl-hybrid", "fadl-nonlinear", "ssz"];
+    if a.on("with-bfgs") {
+        methods.push("fadl-bfgs");
+    }
+    for p in a.get_usize_list("nodes") {
+        let mut traces = Vec::new();
+        for method in &methods {
+            let mut cfg = figures::figure_config(dataset, scale, p, method);
+            cfg.max_outer = a.get_usize("max-outer");
+            match figures::run_cell(&cfg) {
+                Ok(t) => traces.push(t),
+                Err(e) => eprintln!("[{method} P={p}] failed: {e}"),
+            }
+        }
+        figures::print_panel(
+            &format!("Fig 4: {dataset}, P = {p}"),
+            Axis::SimTime,
+            f_star,
+            &traces,
+            12,
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Figure 5: objective vs COMMUNICATION PASSES for the high-dimensional
+//! datasets (kdd2010, url, webspam), all methods, P ∈ {8, 128}.
+//! Regenerate: cargo run --release --bin fig5_convergence
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig5_convergence", "Fig 5: high-dim convergence/comm passes")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    figures::run_convergence_figure(
+        "Fig 5",
+        &["kdd2010", "url", "webspam"],
+        Axis::CommPasses,
+        a.get_f64("scale"),
+        &a.get_usize_list("nodes"),
+        a.get_usize("max-outer"),
+    );
+}

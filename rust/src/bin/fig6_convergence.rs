@@ -1,0 +1,21 @@
+//! Figure 6: objective vs COMMUNICATION PASSES for the low/medium-dim
+//! datasets (mnist8m, rcv), all methods, P ∈ {8, 128}.
+//! Regenerate: cargo run --release --bin fig6_convergence
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig6_convergence", "Fig 6: low-dim convergence/comm passes")
+        .flag("scale", "0.002", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    figures::run_convergence_figure(
+        "Fig 6",
+        &["mnist8m", "rcv"],
+        Axis::CommPasses,
+        a.get_f64("scale"),
+        &a.get_usize_list("nodes"),
+        a.get_usize("max-outer"),
+    );
+}

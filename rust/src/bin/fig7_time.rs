@@ -1,0 +1,21 @@
+//! Figure 7: objective vs (simulated) TIME for the high-dimensional
+//! datasets, all methods, P ∈ {8, 128}.
+//! Regenerate: cargo run --release --bin fig7_time
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig7_time", "Fig 7: high-dim convergence/time")
+        .flag("scale", "0.005", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    figures::run_convergence_figure(
+        "Fig 7",
+        &["kdd2010", "url", "webspam"],
+        Axis::SimTime,
+        a.get_f64("scale"),
+        &a.get_usize_list("nodes"),
+        a.get_usize("max-outer"),
+    );
+}

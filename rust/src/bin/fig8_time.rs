@@ -1,0 +1,21 @@
+//! Figure 8: objective vs (simulated) TIME for the low/medium-dim
+//! datasets, all methods, P ∈ {8, 128}.
+//! Regenerate: cargo run --release --bin fig8_time
+use fadl::benchkit::figures::{self, Axis};
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig8_time", "Fig 8: low-dim convergence/time")
+        .flag("scale", "0.002", "dataset scale")
+        .flag("nodes", "8,128", "node counts")
+        .flag("max-outer", "60", "outer iteration cap")
+        .parse();
+    figures::run_convergence_figure(
+        "Fig 8",
+        &["mnist8m", "rcv"],
+        Axis::SimTime,
+        a.get_f64("scale"),
+        &a.get_usize_list("nodes"),
+        a.get_usize("max-outer"),
+    );
+}

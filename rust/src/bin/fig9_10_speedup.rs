@@ -1,0 +1,75 @@
+//! Figures 9 & 10: communication passes and time RELATIVE TO TERA as a
+//! function of the number of nodes, with the paper's stopping rule
+//! (§4.7: stop when within 0.1% of the steady-state AUPRC of full,
+//! perfect training). Ratio > 1 ⇒ the method beats TERA.
+//! Regenerate: cargo run --release --bin fig9_10_speedup
+use fadl::benchkit::figures;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("fig9_10_speedup", "Figs 9-10: speedup over TERA vs P")
+        .flag("datasets", "kdd2010,url,webspam,mnist8m,rcv", "datasets")
+        .flag("scale", "0.002", "dataset scale")
+        .flag("nodes", "8,16,32,64,128", "node counts to sweep")
+        .flag("max-outer", "80", "outer iteration cap")
+        .flag("auprc-tol", "0.001", "stopping tolerance vs steady AUPRC")
+        .parse();
+    let ps = a.get_usize_list("nodes");
+    let methods = ["fadl", "admm", "cocoa"];
+    let tol = a.get_f64("auprc-tol");
+    for dataset in a.get("datasets").split(',') {
+        let base = figures::figure_config(dataset, a.get_f64("scale"), 1, "tera");
+        let steady = match figures::reference_auprc(&base) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("[{dataset}] reference failed: {e}");
+                continue;
+            }
+        };
+        // TERA's own cost per P
+        let mut tera_costs: Vec<Option<(f64, f64)>> = Vec::new();
+        for &p in &ps {
+            let mut cfg = figures::figure_config(dataset, a.get_f64("scale"), p, "tera");
+            cfg.max_outer = a.get_usize("max-outer");
+            let cost = figures::run_cell(&cfg)
+                .ok()
+                .and_then(|t| figures::cost_to_auprc(&t, steady, tol));
+            tera_costs.push(cost);
+        }
+        let mut pass_ratios = Vec::new();
+        let mut time_ratios = Vec::new();
+        for method in methods {
+            let mut passes_row = Vec::new();
+            let mut time_row = Vec::new();
+            for (pi, &p) in ps.iter().enumerate() {
+                let mut cfg = figures::figure_config(dataset, a.get_f64("scale"), p, method);
+                cfg.max_outer = a.get_usize("max-outer");
+                let cost = figures::run_cell(&cfg)
+                    .ok()
+                    .and_then(|t| figures::cost_to_auprc(&t, steady, tol));
+                let (pr, tr) = match (tera_costs[pi], cost) {
+                    (Some((tp, tt)), Some((mp, mt))) => {
+                        (Some(tp / mp.max(1e-9)), Some(tt / mt.max(1e-12)))
+                    }
+                    _ => (None, None),
+                };
+                passes_row.push(pr);
+                time_row.push(tr);
+            }
+            pass_ratios.push(passes_row);
+            time_ratios.push(time_row);
+        }
+        figures::print_ratio_table(
+            &format!("Fig 9 — {dataset}: comm passes relative to TERA (steady AUPRC {steady:.4})"),
+            &ps,
+            &methods,
+            &pass_ratios,
+        );
+        figures::print_ratio_table(
+            &format!("Fig 10 — {dataset}: time relative to TERA"),
+            &ps,
+            &methods,
+            &time_ratios,
+        );
+    }
+}

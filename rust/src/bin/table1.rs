@@ -1,0 +1,41 @@
+//! Table 1: dataset statistics (synthetic stand-ins, DESIGN.md §4).
+//! Regenerate: cargo run --release --bin table1 [-- --scale 0.001]
+use fadl::coordinator::report;
+use fadl::data::synth;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("table1", "Table 1: properties of datasets")
+        .flag("scale", "0.001", "scale vs the paper's sizes")
+        .flag("seed", "42", "generator seed")
+        .switch("generate", "actually generate and report measured stats")
+        .parse();
+    let scale = a.get_f64("scale");
+    let mut rows = Vec::new();
+    for spec in synth::paper_specs(scale, a.get_u64("seed")) {
+        if a.on("generate") {
+            let ds = synth::generate(&spec);
+            rows.push(vec![
+                spec.name.clone(),
+                ds.n().to_string(),
+                ds.m().to_string(),
+                ds.nnz().to_string(),
+                format!("{:.2e}", spec.lambda),
+                format!("{:.2}", ds.positive_fraction()),
+            ]);
+        } else {
+            rows.push(vec![
+                spec.name.clone(),
+                spec.n.to_string(),
+                spec.m.to_string(),
+                spec.expected_nnz().to_string(),
+                format!("{:.2e}", spec.lambda),
+                "-".into(),
+            ]);
+        }
+    }
+    println!(
+        "Table 1 (scale = {scale}):\n{}",
+        report::table(&["dataset", "n", "m", "nz", "lambda", "pos frac"], &rows)
+    );
+}

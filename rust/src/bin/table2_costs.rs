@@ -1,0 +1,45 @@
+//! Table 2: ratio of total computation cost to total communication cost
+//! per method (high-dimensional datasets), under the AUPRC stop rule.
+//! Regenerate: cargo run --release --bin table2_costs
+use fadl::benchkit::figures;
+use fadl::coordinator::report;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("table2_costs", "Table 2: computation/communication ratio")
+        .flag("datasets", "kdd2010,url,webspam", "datasets")
+        .flag("scale", "0.002", "dataset scale")
+        .flag("nodes", "128", "node count (paper: 128)")
+        .flag("max-outer", "80", "outer iteration cap")
+        .parse();
+    let p = a.get_usize("nodes");
+    let methods = ["fadl", "cocoa", "tera", "admm"];
+    let mut rows = Vec::new();
+    for dataset in a.get("datasets").split(',') {
+        let base = figures::figure_config(dataset, a.get_f64("scale"), 1, "tera");
+        let steady = figures::reference_auprc(&base).expect("reference");
+        let mut row = vec![dataset.to_string()];
+        for method in methods {
+            let mut cfg = figures::figure_config(dataset, a.get_f64("scale"), p, method);
+            cfg.max_outer = a.get_usize("max-outer");
+            let cell = figures::run_cell(&cfg)
+                .ok()
+                .and_then(|t| {
+                    t.first_reaching_auprc(steady, 0.001)
+                        .map(|r| t.comp_comm_ratio_at(r))
+                        .or_else(|| {
+                            // never reached: report the end-of-run ratio
+                            t.records.last().map(|r| t.comp_comm_ratio_at(r))
+                        })
+                })
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "dnf".into());
+            row.push(cell);
+        }
+        rows.push(row);
+    }
+    println!(
+        "Table 2 (P = {p}): computation : communication cost ratio\n{}",
+        report::table(&["dataset", "FADL", "CoCoA", "TERA", "ADMM"], &rows)
+    );
+}

@@ -1,0 +1,62 @@
+//! Table 3 + eq. (21): the Appendix-A cost-model parameters and the
+//! FADL-vs-SQM regime boundary for every dataset and node count.
+//! Regenerate: cargo run --release --bin table3_costmodel
+use fadl::cluster::CostModel;
+use fadl::coordinator::report;
+use fadl::data::synth;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let a = Cli::new("table3_costmodel", "Table 3 / eq 21: cost model")
+        .flag("gamma", "500", "comm/comp ratio γ")
+        .flag("k-hat", "10", "FADL inner CG budget k̂")
+        .parse();
+    let cost = CostModel {
+        gamma: a.get_f64("gamma"),
+        pipelined: true, // eq. (21) assumes the pipelined tree
+        ..Default::default()
+    };
+    let k_hat = a.get_usize("k-hat");
+    println!("Table 3: cost parameters\n");
+    println!(
+        "{}",
+        report::table(
+            &["method", "c1", "c2", "c3", "T_inner"],
+            &[
+                vec!["SQM".into(), "2".into(), "5-10".into(), "1".into(), "1".into()],
+                vec![
+                    "FADL".into(),
+                    "2".into(),
+                    "5-7".into(),
+                    "2".into(),
+                    format!("k̂ = {k_hat}"),
+                ],
+            ]
+        )
+    );
+    println!(
+        "eq. (21): FADL faster than SQM iff nz/m < γP/(2k̂)  [γ = {}]\n",
+        cost.gamma
+    );
+    let mut rows = Vec::new();
+    for spec in synth::paper_specs(1.0, 0) {
+        let nz = spec.expected_nnz();
+        let mut row = vec![
+            spec.name.clone(),
+            format!("{:.1}", nz as f64 / spec.m as f64),
+        ];
+        for p in [8usize, 32, 128] {
+            let bound = cost.gamma * p as f64 / (2.0 * k_hat as f64);
+            row.push(format!(
+                "{} (bound {:.0})",
+                if cost.fadl_favored(nz, spec.m, p, k_hat) { "FADL" } else { "SQM" },
+                bound
+            ));
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        report::table(&["dataset", "nz/m", "P=8", "P=32", "P=128"], &rows)
+    );
+}

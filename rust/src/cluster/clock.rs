@@ -1,0 +1,111 @@
+//! Simulated cluster clock.
+//!
+//! Accumulates the Appendix-A cost units separately for computation and
+//! communication, counts m-vector communication passes (the x-axis of
+//! Figures 5–6 and 9), and tracks wall time for the native compute.
+//! Compute phases are synchronized (BSP, as on the paper's Hadoop
+//! AllReduce grid): each parallel phase advances the clock by the
+//! *maximum* per-worker cost.
+
+/// Accumulated simulated time and counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimClock {
+    /// flop-equivalents of synchronized computation
+    pub compute_units: f64,
+    /// flop-equivalents of communication
+    pub comm_units: f64,
+    /// number of m-vector AllReduce/broadcast passes (the paper's
+    /// "communication passes")
+    pub comm_passes: f64,
+    /// scalar aggregation rounds (line-search probes)
+    pub scalar_rounds: usize,
+}
+
+impl SimClock {
+    /// Advance compute by the max over per-worker costs (BSP barrier).
+    pub fn compute_phase(&mut self, per_worker_units: &[f64]) {
+        let max = per_worker_units.iter().cloned().fold(0.0, f64::max);
+        self.compute_units += max;
+    }
+
+    pub fn add_compute(&mut self, units: f64) {
+        self.compute_units += units;
+    }
+
+    /// Record one m-vector communication round of the given cost.
+    pub fn comm_pass(&mut self, units: f64) {
+        self.comm_units += units;
+        self.comm_passes += 1.0;
+    }
+
+    /// Record a scalar round (cheap; not counted as a comm pass).
+    pub fn scalar_round(&mut self, units: f64) {
+        self.comm_units += units;
+        self.scalar_rounds += 1;
+    }
+
+    pub fn total_units(&self) -> f64 {
+        self.compute_units + self.comm_units
+    }
+
+    /// computation : communication ratio (Table 2).
+    pub fn comp_comm_ratio(&self) -> f64 {
+        if self.comm_units == 0.0 {
+            f64::INFINITY
+        } else {
+            self.compute_units / self.comm_units
+        }
+    }
+
+    /// Difference snapshot (per-iteration deltas for traces).
+    pub fn since(&self, earlier: &SimClock) -> SimClock {
+        SimClock {
+            compute_units: self.compute_units - earlier.compute_units,
+            comm_units: self.comm_units - earlier.comm_units,
+            comm_passes: self.comm_passes - earlier.comm_passes,
+            scalar_rounds: self.scalar_rounds - earlier.scalar_rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_phase_takes_max() {
+        let mut c = SimClock::default();
+        c.compute_phase(&[10.0, 50.0, 30.0]);
+        assert_eq!(c.compute_units, 50.0);
+        c.compute_phase(&[]);
+        assert_eq!(c.compute_units, 50.0);
+    }
+
+    #[test]
+    fn comm_pass_counting() {
+        let mut c = SimClock::default();
+        c.comm_pass(100.0);
+        c.comm_pass(100.0);
+        c.scalar_round(1.0);
+        assert_eq!(c.comm_passes, 2.0);
+        assert_eq!(c.scalar_rounds, 1);
+        assert_eq!(c.comm_units, 201.0);
+        assert_eq!(c.total_units(), 201.0);
+    }
+
+    #[test]
+    fn ratio_and_since() {
+        let mut c = SimClock::default();
+        c.add_compute(300.0);
+        c.comm_pass(100.0);
+        assert_eq!(c.comp_comm_ratio(), 3.0);
+        let snap = c;
+        c.add_compute(50.0);
+        c.comm_pass(25.0);
+        let d = c.since(&snap);
+        assert_eq!(d.compute_units, 50.0);
+        assert_eq!(d.comm_units, 25.0);
+        assert_eq!(d.comm_passes, 1.0);
+        assert_eq!(SimClock::default().comp_comm_ratio(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,146 @@
+//! The Appendix-A communication cost model.
+//!
+//! Overall cost of a distributed algorithm (eq. (22)):
+//!
+//!   [(c1·nz/P + c2·m)·T_inner + c3·γ·m]·T_outer
+//!
+//! γ is the relative cost of communicating one float vs performing one
+//! flop (the paper quotes 100–1000 for its Hadoop grid); the AllReduce
+//! binary tree costs γ·m pipelined, and an extra log₂P multiplicative
+//! factor without pipelining (footnote 8 — the paper's own experiments
+//! ran *non*-pipelined; eq. (21) assumes pipelined).
+
+/// Parameters of the simulated communication fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// relative cost of communicating a float vs a flop (γ)
+    pub gamma: f64,
+    /// pipelined AllReduce (true drops the log₂P factor)
+    pub pipelined: bool,
+    /// per-message fixed latency in flop-equivalents (the γ·b·log₂P
+    /// block term of footnote 16; dominates scalar line-search rounds)
+    pub latency: f64,
+    /// simulated node speed: flops per second (converts units → time)
+    pub flops_per_sec: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            gamma: 500.0,
+            pipelined: false,
+            latency: 5_000.0,
+            flops_per_sec: 1e9,
+        }
+    }
+}
+
+impl CostModel {
+    /// Cost in flop-equivalents of AllReduce-ing one m-vector over P nodes.
+    pub fn allreduce_units(&self, m: usize, p: usize) -> f64 {
+        let tree = if self.pipelined {
+            1.0
+        } else {
+            (p.max(2) as f64).log2().ceil()
+        };
+        self.gamma * m as f64 * tree + self.latency
+    }
+
+    /// Cost of broadcasting one m-vector (same tree shape).
+    pub fn broadcast_units(&self, m: usize, p: usize) -> f64 {
+        self.allreduce_units(m, p)
+    }
+
+    /// Cost of one scalar aggregation round (line-search t probes).
+    pub fn scalar_round_units(&self, p: usize) -> f64 {
+        let tree = (p.max(2) as f64).log2().ceil();
+        self.gamma * tree + self.latency
+    }
+
+    /// Convert flop-equivalents to simulated seconds.
+    pub fn units_to_secs(&self, units: f64) -> f64 {
+        units / self.flops_per_sec
+    }
+
+    /// Eq. (21): FADL is predicted faster than SQM when
+    /// nz/m < γ·P / (2·k̂)  (under T_SQM ≥ 3·T_FADL outer iterations).
+    pub fn fadl_favored(&self, nz: usize, m: usize, p: usize, k_hat: usize) -> bool {
+        (nz as f64 / m as f64) < self.gamma * p as f64 / (2.0 * k_hat as f64)
+    }
+
+    /// The eq.-(22) total cost for given parameters (used by the
+    /// table3_costmodel bench to print the regime table).
+    #[allow(clippy::too_many_arguments)]
+    pub fn total_cost(
+        &self,
+        nz: usize,
+        m: usize,
+        p: usize,
+        c1: f64,
+        c2: f64,
+        c3: f64,
+        t_inner: f64,
+        t_outer: f64,
+    ) -> f64 {
+        let per_inner = c1 * nz as f64 / p as f64 + c2 * m as f64;
+        let comm = c3 * self.gamma * m as f64;
+        (per_inner * t_inner + comm) * t_outer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipelining_removes_log_factor() {
+        let base = CostModel {
+            pipelined: true,
+            latency: 0.0,
+            ..Default::default()
+        };
+        let tree = CostModel {
+            pipelined: false,
+            latency: 0.0,
+            ..Default::default()
+        };
+        let m = 10_000;
+        assert_eq!(base.allreduce_units(m, 128), 500.0 * m as f64);
+        assert_eq!(tree.allreduce_units(m, 128), 500.0 * m as f64 * 7.0);
+    }
+
+    #[test]
+    fn latency_added_once_per_round() {
+        let c = CostModel {
+            gamma: 1.0,
+            pipelined: true,
+            latency: 99.0,
+            flops_per_sec: 1e9,
+        };
+        assert_eq!(c.allreduce_units(1, 2), 1.0 + 99.0);
+        assert!(c.scalar_round_units(128) < c.allreduce_units(1_000_000, 128));
+    }
+
+    #[test]
+    fn eq21_regimes_match_paper_narrative() {
+        let c = CostModel::default(); // γ = 500
+        // kdd2010-like: nz/m ≈ 15 — heavily sparse, FADL favored
+        assert!(c.fadl_favored(310_000_000, 20_210_000, 8, 10));
+        // mnist8m-like: nz/m ≈ 8.1e6 — dense low-dim, NOT favored at small P
+        assert!(!c.fadl_favored(6_350_000_000, 784, 8, 10));
+        // larger P widens FADL's regime
+        assert!(
+            c.total_cost(1_000, 100, 16, 2.0, 5.0, 2.0, 10.0, 5.0)
+                < c.total_cost(1_000, 100, 16, 2.0, 5.0, 1.0, 1.0, 50.0)
+        );
+    }
+
+    #[test]
+    fn units_to_secs() {
+        let c = CostModel {
+            flops_per_sec: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(c.units_to_secs(10.0), 5.0);
+    }
+}

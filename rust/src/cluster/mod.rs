@@ -1,0 +1,401 @@
+//! The simulated distributed environment.
+//!
+//! The paper ran on a 379-node Hadoop cluster with an AllReduce binary
+//! tree between mappers (§4.1). We reproduce the *behaviourally
+//! relevant* parts in-process (DESIGN.md §4): P workers each holding an
+//! example shard, BSP-synchronized parallel phases (std::thread — real
+//! parallelism for wall time), a binary-tree AllReduce whose summation
+//! order actually follows the tree (bitwise-reproducible regardless of
+//! thread scheduling), and a virtual clock charging the Appendix-A cost
+//! model for every compute pass and every m-vector moved.
+//!
+//! Every training method in [`crate::methods`] drives the same
+//! [`Cluster`]; the per-iteration clock snapshots become the
+//! communication-pass and simulated-time axes of Figures 5–10.
+
+pub mod clock;
+pub mod cost;
+
+pub use clock::SimClock;
+pub use cost::CostModel;
+
+use std::sync::Mutex;
+
+use crate::linalg;
+use crate::objective::ShardCompute;
+
+/// A simulated cluster of P workers plus the master-side clock.
+pub struct Cluster {
+    pub workers: Vec<Box<dyn ShardCompute>>,
+    pub cost: CostModel,
+    clock: Mutex<SimClock>,
+    /// run worker phases on real threads (false = deterministic serial
+    /// execution; the simulated clock is identical either way)
+    pub threaded: bool,
+}
+
+impl Cluster {
+    pub fn new(workers: Vec<Box<dyn ShardCompute>>, cost: CostModel) -> Cluster {
+        assert!(!workers.is_empty());
+        let m = workers[0].m();
+        assert!(workers.iter().all(|w| w.m() == m), "shards disagree on m");
+        Cluster {
+            workers,
+            cost,
+            clock: Mutex::new(SimClock::default()),
+            threaded: true,
+        }
+    }
+
+    /// Number of nodes P.
+    pub fn p(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Feature dimension m.
+    pub fn m(&self) -> usize {
+        self.workers[0].m()
+    }
+
+    /// Total nonzeros across shards (the `nz` of eq. (21)).
+    pub fn total_nnz(&self) -> usize {
+        self.workers.iter().map(|w| w.nnz()).sum()
+    }
+
+    /// Snapshot of the simulated clock.
+    pub fn clock(&self) -> SimClock {
+        *self.clock.lock().unwrap()
+    }
+
+    pub fn reset_clock(&self) {
+        *self.clock.lock().unwrap() = SimClock::default();
+    }
+
+    // -----------------------------------------------------------------
+    // Parallel phases
+    // -----------------------------------------------------------------
+
+    /// Run `f(p, worker)` on every worker (BSP phase). The closure
+    /// returns (result, cost_units); the clock advances by the max cost.
+    pub fn map<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &dyn ShardCompute) -> (R, f64) + Sync,
+    {
+        let p = self.workers.len();
+        let pairs: Vec<(R, f64)> = if self.threaded && p > 1 {
+            // Spawn at most ncpu OS threads and stride the P simulated
+            // workers across them: at P = 128 a thread-per-worker scheme
+            // spends more wall time in spawn/join than in compute (see
+            // EXPERIMENTS.md §Perf), and the virtual clock is identical
+            // either way because costs are collected per worker.
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(8)
+                .min(p);
+            let mut slots: Vec<Option<(R, f64)>> = Vec::with_capacity(p);
+            slots.resize_with(p, || None);
+            let slot_chunks: Vec<&mut [Option<(R, f64)>]> = {
+                // one contiguous chunk of the result buffer per thread
+                let base = p / threads;
+                let extra = p % threads;
+                let mut rest = slots.as_mut_slice();
+                let mut chunks = Vec::with_capacity(threads);
+                for t in 0..threads {
+                    let len = base + usize::from(t < extra);
+                    let (head, tail) = rest.split_at_mut(len);
+                    chunks.push(head);
+                    rest = tail;
+                }
+                chunks
+            };
+            std::thread::scope(|scope| {
+                let mut start = 0usize;
+                for chunk in slot_chunks {
+                    let begin = start;
+                    start += chunk.len();
+                    let f = &f;
+                    let workers = &self.workers;
+                    scope.spawn(move || {
+                        for (off, slot) in chunk.iter_mut().enumerate() {
+                            let idx = begin + off;
+                            *slot = Some(f(idx, workers[idx].as_ref()));
+                        }
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        } else {
+            self.workers
+                .iter()
+                .enumerate()
+                .map(|(p, w)| f(p, w.as_ref()))
+                .collect()
+        };
+        let costs: Vec<f64> = pairs.iter().map(|(_, c)| *c).collect();
+        self.clock.lock().unwrap().compute_phase(&costs);
+        pairs.into_iter().map(|(r, _)| r).collect()
+    }
+
+    // -----------------------------------------------------------------
+    // Communication primitives
+    // -----------------------------------------------------------------
+
+    /// Binary-tree AllReduce (sum) of per-worker m-vectors. The pairwise
+    /// summation follows the tree exactly, so results are reproducible
+    /// and match what the Hadoop tree would produce. Charges one
+    /// m-vector communication pass.
+    pub fn allreduce(&self, mut parts: Vec<Vec<f64>>) -> Vec<f64> {
+        assert_eq!(parts.len(), self.p());
+        let m = parts[0].len();
+        // tree reduction: stride doubling (rank i ← rank i+s)
+        let mut stride = 1;
+        while stride < parts.len() {
+            let mut i = 0;
+            while i + stride < parts.len() {
+                let (lo, hi) = parts.split_at_mut(i + stride);
+                linalg::accum(&mut lo[i], &hi[0]);
+                i += stride * 2;
+            }
+            stride *= 2;
+        }
+        self.clock
+            .lock()
+            .unwrap()
+            .comm_pass(self.cost.allreduce_units(m, self.p()));
+        parts.swap_remove(0)
+    }
+
+    /// Charge the broadcast of one m-vector to all workers (the vector
+    /// itself is shared memory here — only the clock moves).
+    pub fn charge_broadcast(&self, m: usize) {
+        self.clock
+            .lock()
+            .unwrap()
+            .comm_pass(self.cost.broadcast_units(m, self.p()));
+    }
+
+    /// Charge one scalar aggregation round (line-search probe).
+    pub fn charge_scalar_round(&self) {
+        self.clock
+            .lock()
+            .unwrap()
+            .scalar_round(self.cost.scalar_round_units(self.p()));
+    }
+
+    /// Charge extra compute units outside a map phase (e.g. master-side
+    /// vector arithmetic charged at one worker's rate).
+    pub fn charge_compute(&self, units: f64) {
+        self.clock.lock().unwrap().add_compute(units);
+    }
+
+    // -----------------------------------------------------------------
+    // Composite operations shared by all methods
+    // -----------------------------------------------------------------
+
+    /// Distributed gradient pass (Algorithm 2 step 1): every node holds
+    /// the replicated w (AllReduce leaves all nodes with each sum, so no
+    /// separate broadcast is ever charged — this is what makes the
+    /// paper's c3 counts come out to 1 per SQM inner step and 2 per FADL
+    /// outer step), computes per-shard (loss, ∇L_p, z_p), AllReduces the
+    /// gradient. Returns (Σ loss_p, Σ ∇L_p, per-worker margins,
+    /// per-worker ∇L_p).
+    pub fn gradient_pass(
+        &self,
+        loss: crate::loss::Loss,
+        w: &[f64],
+    ) -> (f64, Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let results = self.map(|_p, shard| {
+            let out = shard.loss_grad(loss, w);
+            let units = 2.0 * 2.0 * shard.nnz() as f64; // two passes × 2 flops/nz
+            (out, units)
+        });
+        let mut margins = Vec::with_capacity(self.p());
+        let mut local_grads = Vec::with_capacity(self.p());
+        let mut losses = Vec::with_capacity(self.p());
+        let mut grads = Vec::with_capacity(self.p());
+        for (lv, g, z) in results {
+            losses.push(lv);
+            margins.push(z);
+            local_grads.push(g.clone());
+            grads.push(g);
+        }
+        let grad = self.allreduce(grads);
+        let loss_sum: f64 = losses.iter().sum(); // piggybacks on the same pass
+        (loss_sum, grad, margins, local_grads)
+    }
+
+    /// Distributed margins pass for a direction d (Algorithm 2 step 9):
+    /// d is replicated after its AllReduce, so this is pure computation.
+    pub fn margins_pass(&self, d: &[f64]) -> Vec<Vec<f64>> {
+        self.map(|_p, shard| {
+            let e = shard.margins(d);
+            (e, 2.0 * shard.nnz() as f64)
+        })
+    }
+
+    /// Distributed Hessian-vector product at cached margins (TERA-TRON's
+    /// CG hot loop): compute Xᵀ(D(X s)) per shard, AllReduce the result.
+    pub fn hvp_pass(
+        &self,
+        loss: crate::loss::Loss,
+        margins: &[Vec<f64>],
+        s: &[f64],
+    ) -> Vec<f64> {
+        let parts = self.map(|p, shard| {
+            let hv = shard.hvp(loss, &margins[p], s);
+            (hv, 2.0 * 2.0 * shard.nnz() as f64)
+        });
+        self.allreduce(parts)
+    }
+
+    /// Distributed data-loss evaluation at w (one pass, scalar
+    /// aggregation only — used by trust-region accept/reject and by dual
+    /// methods' primal-objective traces).
+    pub fn loss_pass(&self, loss: crate::loss::Loss, w: &[f64]) -> f64 {
+        let parts = self.map(|_p, shard| {
+            (shard.loss_value(loss, w), 2.0 * shard.nnz() as f64)
+        });
+        self.charge_scalar_round();
+        parts.iter().sum()
+    }
+
+    /// Distributed line-search evaluation (Algorithm 2 step 10): each
+    /// probe aggregates two scalars over cached (z, e).
+    pub fn linesearch_eval(
+        &self,
+        loss: crate::loss::Loss,
+        margins: &[Vec<f64>],
+        dirs: &[Vec<f64>],
+        t: f64,
+    ) -> (f64, f64) {
+        let parts = self.map(|p, shard| {
+            let out = shard.linesearch_eval(loss, &margins[p], &dirs[p], t);
+            // O(n_p) scalar work; charge one flop per example
+            (out, margins[p].len() as f64)
+        });
+        self.charge_scalar_round();
+        parts
+            .iter()
+            .fold((0.0, 0.0), |acc, &(a, b)| (acc.0 + a, acc.1 + b))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::data::partition::{ExamplePartition, Strategy};
+    use crate::data::synth;
+    use crate::loss::Loss;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    pub(crate) fn make_cluster(n: usize, m: usize, p: usize, seed: u64) -> Cluster {
+        let ds = synth::quick(n, m, 8, seed);
+        cluster_from(&ds, p)
+    }
+
+    pub(crate) fn cluster_from(ds: &crate::data::Dataset, p: usize) -> Cluster {
+        let part = ExamplePartition::build(ds.n(), p, Strategy::Contiguous, 0);
+        let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+            .map(|i| {
+                Box::new(SparseShard::new(Shard::from_dataset(
+                    ds,
+                    &part.assignments[i],
+                    &part.weights[i],
+                ))) as Box<dyn ShardCompute>
+            })
+            .collect();
+        Cluster::new(workers, CostModel::default())
+    }
+
+    #[test]
+    fn allreduce_sums_exactly() {
+        let c = make_cluster(40, 10, 4, 1);
+        let parts: Vec<Vec<f64>> = (0..4).map(|p| vec![p as f64 + 1.0; 10]).collect();
+        let sum = c.allreduce(parts);
+        assert_eq!(sum, vec![10.0; 10]);
+        assert_eq!(c.clock().comm_passes, 1.0);
+    }
+
+    #[test]
+    fn allreduce_handles_odd_p() {
+        let c = make_cluster(30, 5, 3, 2);
+        let parts = vec![vec![1.0; 5], vec![2.0; 5], vec![4.0; 5]];
+        assert_eq!(c.allreduce(parts), vec![7.0; 5]);
+    }
+
+    #[test]
+    fn gradient_pass_equals_single_machine() {
+        let ds = synth::quick(60, 20, 8, 3);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let mut rng = crate::util::rng::Pcg64::new(4);
+        let w: Vec<f64> = (0..20).map(|_| 0.1 * rng.normal()).collect();
+        let (want_f, want_g) = obj.eval(&[&whole], &w);
+
+        let cluster = cluster_from(&ds, 4);
+        let (loss_sum, mut g, margins, locals) = cluster.gradient_pass(obj.loss, &w);
+        obj.finish_grad(&w, &mut g);
+        assert!((obj.value_from(&w, loss_sum) - want_f).abs() < 1e-9 * want_f.abs());
+        for j in 0..20 {
+            assert!((g[j] - want_g[j]).abs() < 1e-9);
+        }
+        assert_eq!(margins.len(), 4);
+        assert_eq!(locals.len(), 4);
+        // one m-vector AllReduce = 1 comm pass (replicated-state model)
+        assert_eq!(cluster.clock().comm_passes, 1.0);
+        assert!(cluster.clock().compute_units > 0.0);
+    }
+
+    #[test]
+    fn serial_and_threaded_agree() {
+        let mut a = make_cluster(50, 15, 4, 5);
+        a.threaded = false;
+        let b = make_cluster(50, 15, 4, 5);
+        let mut rng = crate::util::rng::Pcg64::new(6);
+        let w: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let ra = a.gradient_pass(Loss::Logistic, &w);
+        let rb = b.gradient_pass(Loss::Logistic, &w);
+        assert_eq!(ra.0, rb.0);
+        assert_eq!(ra.1, rb.1);
+        assert_eq!(a.clock(), b.clock());
+    }
+
+    #[test]
+    fn linesearch_eval_aggregates() {
+        let c = make_cluster(40, 12, 4, 7);
+        let mut rng = crate::util::rng::Pcg64::new(8);
+        let w: Vec<f64> = (0..12).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..12).map(|_| 0.1 * rng.normal()).collect();
+        let (_, _, margins, _) = c.gradient_pass(Loss::SquaredHinge, &w);
+        let dirs = c.margins_pass(&d);
+        let rounds_before = c.clock().scalar_rounds;
+        let (phi0, _) = c.linesearch_eval(Loss::SquaredHinge, &margins, &dirs, 0.0);
+        assert_eq!(c.clock().scalar_rounds, rounds_before + 1);
+        // φ(0) must equal the loss at w
+        let (loss_sum, _, _, _) = c.gradient_pass(Loss::SquaredHinge, &w);
+        assert!((phi0 - loss_sum).abs() < 1e-9 * loss_sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn clock_charges_comm_per_vector_pass() {
+        let c = make_cluster(30, 10, 2, 9);
+        let before = c.clock();
+        c.charge_broadcast(10);
+        let after = c.clock();
+        assert_eq!(after.comm_passes - before.comm_passes, 1.0);
+        assert!(after.comm_units > before.comm_units);
+        c.reset_clock();
+        assert_eq!(c.clock(), SimClock::default());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_rejected() {
+        let ds1 = synth::quick(10, 5, 3, 1);
+        let ds2 = synth::quick(10, 6, 3, 1);
+        let w1 = Box::new(SparseShard::new(Shard::whole(&ds1))) as Box<dyn ShardCompute>;
+        let w2 = Box::new(SparseShard::new(Shard::whole(&ds2))) as Box<dyn ShardCompute>;
+        Cluster::new(vec![w1, w2], CostModel::default());
+    }
+}

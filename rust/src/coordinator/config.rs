@@ -1,0 +1,209 @@
+//! Experiment configuration: a TOML file (see `configs/`) resolved into
+//! typed settings, with CLI overrides applied on top.
+
+use crate::cluster::CostModel;
+use crate::data::partition::Strategy;
+use crate::loss::Loss;
+use crate::util::toml;
+
+/// Where the per-shard compute runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// native Rust CSR kernels (any dataset)
+    Sparse,
+    /// AOT artifacts through PJRT (dense datasets whose m matches the
+    /// lowered feature dimension)
+    Aot,
+}
+
+/// Fully-resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub name: String,
+    // dataset
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub test_fraction: f64,
+    /// quick-dataset parameters (dataset = "quick")
+    pub quick_n: usize,
+    pub quick_m: usize,
+    pub quick_nnz: usize,
+    /// libsvm path (dataset = "file")
+    pub file_path: String,
+    // objective
+    pub loss: Loss,
+    /// λ override; None = the dataset spec's Table-1 value
+    pub lambda: Option<f64>,
+    // cluster
+    pub nodes: usize,
+    pub cost: CostModel,
+    pub threaded: bool,
+    pub partition: Strategy,
+    // method
+    pub method: String,
+    pub k_hat: usize,
+    pub inner: String,
+    pub max_outer: usize,
+    pub eps_g: f64,
+    pub warm_start: bool,
+    // backend
+    pub backend: Backend,
+    pub artifacts_dir: String,
+    // output
+    pub out_json: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            name: "experiment".into(),
+            dataset: "quick".into(),
+            scale: 1e-3,
+            seed: 42,
+            test_fraction: 0.2,
+            quick_n: 2000,
+            quick_m: 200,
+            quick_nnz: 20,
+            file_path: String::new(),
+            loss: Loss::SquaredHinge,
+            lambda: None,
+            nodes: 8,
+            cost: CostModel::default(),
+            threaded: true,
+            partition: Strategy::Contiguous,
+            method: "fadl".into(),
+            k_hat: 10,
+            inner: "tron".into(),
+            max_outer: 50,
+            eps_g: 1e-6,
+            warm_start: true,
+            backend: Backend::Sparse,
+            artifacts_dir: "artifacts".into(),
+            out_json: None,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a TOML document on top of the defaults.
+    pub fn from_toml(text: &str) -> Result<Config, String> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Config::default();
+        cfg.name = doc.str_or("name", &cfg.name).to_string();
+        cfg.dataset = doc.str_or("dataset.kind", &cfg.dataset).to_string();
+        cfg.scale = doc.f64_or("dataset.scale", cfg.scale);
+        cfg.seed = doc.f64_or("dataset.seed", cfg.seed as f64) as u64;
+        cfg.test_fraction = doc.f64_or("dataset.test_fraction", cfg.test_fraction);
+        cfg.quick_n = doc.usize_or("dataset.n", cfg.quick_n);
+        cfg.quick_m = doc.usize_or("dataset.m", cfg.quick_m);
+        cfg.quick_nnz = doc.usize_or("dataset.row_nnz", cfg.quick_nnz);
+        cfg.file_path = doc.str_or("dataset.path", &cfg.file_path).to_string();
+        let loss_name = doc.str_or("objective.loss", cfg.loss.name()).to_string();
+        cfg.loss =
+            Loss::from_name(&loss_name).ok_or_else(|| format!("unknown loss {loss_name:?}"))?;
+        if let Some(v) = doc.get("objective.lambda") {
+            cfg.lambda = Some(v.as_f64().ok_or("objective.lambda not a number")?);
+        }
+        cfg.nodes = doc.usize_or("cluster.nodes", cfg.nodes);
+        cfg.cost.gamma = doc.f64_or("cluster.gamma", cfg.cost.gamma);
+        cfg.cost.pipelined = doc.bool_or("cluster.pipelined", cfg.cost.pipelined);
+        cfg.cost.latency = doc.f64_or("cluster.latency", cfg.cost.latency);
+        cfg.cost.flops_per_sec = doc.f64_or("cluster.flops_per_sec", cfg.cost.flops_per_sec);
+        cfg.threaded = doc.bool_or("cluster.threaded", cfg.threaded);
+        cfg.partition = match doc.str_or("cluster.partition", "contiguous") {
+            "contiguous" => Strategy::Contiguous,
+            "round_robin" => Strategy::RoundRobin,
+            "random" => Strategy::Random,
+            other => return Err(format!("unknown partition strategy {other:?}")),
+        };
+        cfg.method = doc.str_or("method.name", &cfg.method).to_string();
+        cfg.k_hat = doc.usize_or("method.k_hat", cfg.k_hat);
+        cfg.inner = doc.str_or("method.inner", &cfg.inner).to_string();
+        cfg.max_outer = doc.usize_or("method.max_outer", cfg.max_outer);
+        cfg.eps_g = doc.f64_or("method.eps_g", cfg.eps_g);
+        cfg.warm_start = doc.bool_or("method.warm_start", cfg.warm_start);
+        cfg.backend = match doc.str_or("backend.kind", "sparse") {
+            "sparse" => Backend::Sparse,
+            "aot" => Backend::Aot,
+            other => return Err(format!("unknown backend {other:?}")),
+        };
+        cfg.artifacts_dir = doc
+            .str_or("backend.artifacts", &cfg.artifacts_dir)
+            .to_string();
+        if let Some(v) = doc.get("output.json") {
+            cfg.out_json = Some(v.as_str().ok_or("output.json not a string")?.to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Config::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.method, "fadl");
+        assert_eq!(cfg.backend, Backend::Sparse);
+        assert!(cfg.lambda.is_none());
+    }
+
+    #[test]
+    fn full_document() {
+        let cfg = Config::from_toml(
+            r#"
+name = "fig5"
+[dataset]
+kind = "kdd2010"
+scale = 0.002
+seed = 7
+[objective]
+loss = "logistic"
+lambda = 1e-5
+[cluster]
+nodes = 128
+gamma = 1000
+pipelined = true
+partition = "round_robin"
+[method]
+name = "tera"
+max_outer = 200
+[backend]
+kind = "aot"
+artifacts = "my_artifacts"
+[output]
+json = "out/fig5.json"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig5");
+        assert_eq!(cfg.dataset, "kdd2010");
+        assert_eq!(cfg.scale, 0.002);
+        assert_eq!(cfg.loss, Loss::Logistic);
+        assert_eq!(cfg.lambda, Some(1e-5));
+        assert_eq!(cfg.nodes, 128);
+        assert!(cfg.cost.pipelined);
+        assert_eq!(cfg.partition, Strategy::RoundRobin);
+        assert_eq!(cfg.method, "tera");
+        assert_eq!(cfg.max_outer, 200);
+        assert_eq!(cfg.backend, Backend::Aot);
+        assert_eq!(cfg.artifacts_dir, "my_artifacts");
+        assert_eq!(cfg.out_json.as_deref(), Some("out/fig5.json"));
+    }
+
+    #[test]
+    fn rejects_unknown_values() {
+        assert!(Config::from_toml("[objective]\nloss = \"hinge\"").is_err());
+        assert!(Config::from_toml("[backend]\nkind = \"gpu\"").is_err());
+        assert!(Config::from_toml("[cluster]\npartition = \"hash\"").is_err());
+    }
+}

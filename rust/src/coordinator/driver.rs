@@ -1,0 +1,291 @@
+//! Experiment driver: Config → dataset → cluster → method → trace.
+//!
+//! This is the launcher layer every binary (main CLI, figure benches,
+//! examples) goes through, so an experiment is fully described by its
+//! config and reproducible from the command line.
+
+use std::sync::Arc;
+
+use super::config::{Backend, Config};
+use crate::cluster::{Cluster, CostModel};
+use crate::data::partition::ExamplePartition;
+use crate::data::{libsvm, synth, Dataset};
+use crate::metrics::Trace;
+use crate::methods::{self, TrainContext};
+use crate::objective::{Objective, Shard, ShardCompute, SparseShard};
+use crate::runtime::{AotRuntime, DenseBlockShard};
+
+/// A fully materialized experiment, ready to run.
+pub struct Experiment {
+    pub config: Config,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub lambda: f64,
+    pub cluster: Cluster,
+}
+
+/// Build the dataset named by the config.
+pub fn build_dataset(cfg: &Config) -> Result<Dataset, String> {
+    match cfg.dataset.as_str() {
+        "quick" => Ok(synth::quick(cfg.quick_n, cfg.quick_m, cfg.quick_nnz, cfg.seed)),
+        "file" => libsvm::read_file(&cfg.file_path, None),
+        name => {
+            let spec = synth::paper_spec(name, cfg.scale, cfg.seed)
+                .ok_or_else(|| format!("unknown dataset {name:?}"))?;
+            Ok(synth::generate(&spec))
+        }
+    }
+}
+
+/// The λ for the experiment: explicit override or the Table-1 value.
+pub fn resolve_lambda(cfg: &Config) -> f64 {
+    if let Some(l) = cfg.lambda {
+        return l;
+    }
+    synth::paper_spec(&cfg.dataset, cfg.scale, cfg.seed)
+        .map(|s| s.lambda)
+        .unwrap_or(1e-4)
+}
+
+/// Build a cluster over `train` with `p` nodes using the configured
+/// backend and cost model.
+pub fn build_cluster(
+    cfg: &Config,
+    train: &Dataset,
+    p: usize,
+    cost: CostModel,
+) -> Result<Cluster, String> {
+    let part = ExamplePartition::build(train.n(), p, cfg.partition, cfg.seed);
+    part.validate(train.n(), 1)?;
+    let workers: Vec<Box<dyn ShardCompute>> = match cfg.backend {
+        Backend::Sparse => (0..p)
+            .map(|i| {
+                Box::new(SparseShard::new(Shard::from_dataset(
+                    train,
+                    &part.assignments[i],
+                    &part.weights[i],
+                ))) as Box<dyn ShardCompute>
+            })
+            .collect(),
+        Backend::Aot => {
+            let runtime = Arc::new(
+                AotRuntime::load(std::path::Path::new(&cfg.artifacts_dir))
+                    .map_err(|e| format!("load artifacts: {e:#}"))?,
+            );
+            if runtime.features != train.m() {
+                return Err(format!(
+                    "artifacts lowered for m = {} but dataset has m = {} \
+                     (re-run `make artifacts` with --features {})",
+                    runtime.features,
+                    train.m(),
+                    train.m()
+                ));
+            }
+            (0..p)
+                .map(|i| {
+                    let shard =
+                        Shard::from_dataset(train, &part.assignments[i], &part.weights[i]);
+                    Box::new(DenseBlockShard::new(runtime.clone(), &shard))
+                        as Box<dyn ShardCompute>
+                })
+                .collect()
+        }
+    };
+    let mut cluster = Cluster::new(workers, cost);
+    cluster.threaded = cfg.threaded;
+    Ok(cluster)
+}
+
+/// Materialize the experiment described by the config.
+pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
+    let ds = build_dataset(cfg)?;
+    ds.validate()?;
+    let (train, test) = ds.split(cfg.test_fraction, cfg.seed ^ 0x5011);
+    let lambda = resolve_lambda(cfg);
+    let cluster = build_cluster(cfg, &train, cfg.nodes, cfg.cost)?;
+    Ok(Experiment {
+        config: cfg.clone(),
+        train,
+        test,
+        lambda,
+        cluster,
+    })
+}
+
+/// Run the configured method on a prepared experiment.
+pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
+    let cfg = &exp.config;
+    let trainer = build_method(cfg)?;
+    let obj = Objective::new(exp.lambda, cfg.loss);
+    let ctx = TrainContext {
+        test_set: Some(&exp.test),
+        max_outer: cfg.max_outer,
+        eps_g: cfg.eps_g,
+        ..TrainContext::new(&exp.cluster, obj)
+    };
+    let (w, mut trace) = trainer.train(&ctx);
+    trace.dataset = exp.train.name.clone();
+    if let Some(path) = &cfg.out_json {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(path, trace.to_json().pretty())
+            .map_err(|e| format!("write {path}: {e}"))?;
+    }
+    Ok((w, trace))
+}
+
+/// Instantiate the configured method with config overrides applied.
+pub fn build_method(cfg: &Config) -> Result<Box<dyn methods::Trainer>, String> {
+    // method-specific knobs the config can override
+    if cfg.method.starts_with("fadl") && cfg.method != "fadl-feature" {
+        let base = methods::by_name(&cfg.method)
+            .ok_or_else(|| format!("unknown method {:?}", cfg.method))?;
+        let _ = base; // by_name validated the name; rebuild with overrides
+        let approx = match cfg.method.as_str() {
+            "fadl" | "fadl-quadratic" => crate::approx::ApproxKind::Quadratic,
+            "fadl-linear" => crate::approx::ApproxKind::Linear,
+            "fadl-hybrid" => crate::approx::ApproxKind::Hybrid,
+            "fadl-nonlinear" => crate::approx::ApproxKind::Nonlinear,
+            "fadl-bfgs" => crate::approx::ApproxKind::Bfgs,
+            "fadl-svrg" => crate::approx::ApproxKind::Linear,
+            other => return Err(format!("unknown fadl variant {other:?}")),
+        };
+        let inner = if cfg.method == "fadl-svrg" {
+            "svrg".to_string()
+        } else {
+            cfg.inner.clone()
+        };
+        return Ok(Box::new(methods::fadl::Fadl {
+            approx,
+            inner,
+            k_hat: cfg.k_hat,
+            warm_start: cfg.warm_start,
+            seed: cfg.seed,
+            ..Default::default()
+        }));
+    }
+    match cfg.method.as_str() {
+        "tera" | "tera-tron" => Ok(Box::new(methods::tera::Tera {
+            warm_start: cfg.warm_start,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+        "tera-lbfgs" => Ok(Box::new(methods::tera::Tera {
+            solver: methods::tera::OuterSolver::Lbfgs,
+            warm_start: cfg.warm_start,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+        "admm" | "admm-adap" | "admm-analytic" | "admm-search" => {
+            let policy = match cfg.method.as_str() {
+                "admm-analytic" => methods::admm::RhoPolicy::Analytic,
+                "admm-search" => methods::admm::RhoPolicy::Search,
+                _ => methods::admm::RhoPolicy::Adap,
+            };
+            Ok(Box::new(methods::admm::Admm {
+                rho_policy: policy,
+                warm_start: cfg.warm_start,
+                seed: cfg.seed,
+                ..Default::default()
+            }))
+        }
+        "cocoa" => Ok(Box::new(methods::cocoa::CoCoA {
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+        "ssz" => Ok(Box::new(methods::ssz::Ssz {
+            warm_start: cfg.warm_start,
+            seed: cfg.seed,
+            ..Default::default()
+        })),
+        other => Err(format!("unknown method {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> Config {
+        Config {
+            quick_n: 300,
+            quick_m: 40,
+            quick_nnz: 8,
+            max_outer: 8,
+            nodes: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_and_run_quick_experiment() {
+        let exp = prepare(&quick_cfg()).unwrap();
+        assert_eq!(exp.cluster.p(), 4);
+        assert!(exp.train.n() + exp.test.n() == 300);
+        let (w, trace) = run(&exp).unwrap();
+        assert_eq!(w.len(), 40);
+        assert!(!trace.records.is_empty());
+        assert!(trace.records.last().unwrap().f <= trace.records[0].f);
+    }
+
+    #[test]
+    fn paper_dataset_lambda_resolution() {
+        let cfg = Config {
+            dataset: "kdd2010".into(),
+            ..Default::default()
+        };
+        assert_eq!(resolve_lambda(&cfg), 1.25e-6);
+        let cfg2 = Config {
+            dataset: "kdd2010".into(),
+            lambda: Some(0.5),
+            ..Default::default()
+        };
+        assert_eq!(resolve_lambda(&cfg2), 0.5);
+    }
+
+    #[test]
+    fn every_method_runs_end_to_end() {
+        for method in ["fadl", "fadl-linear", "tera", "tera-lbfgs", "admm", "cocoa", "ssz"] {
+            let cfg = Config {
+                method: method.into(),
+                max_outer: 3,
+                ..quick_cfg()
+            };
+            let exp = prepare(&cfg).unwrap();
+            let (_, trace) = run(&exp).unwrap();
+            assert!(!trace.records.is_empty(), "{method}");
+            assert!(trace.records.iter().all(|r| r.f.is_finite()), "{method}");
+        }
+    }
+
+    #[test]
+    fn unknown_method_and_dataset_error() {
+        let cfg = Config {
+            method: "magic".into(),
+            ..quick_cfg()
+        };
+        assert!(build_method(&cfg).is_err());
+        let cfg2 = Config {
+            dataset: "imagenet".into(),
+            ..quick_cfg()
+        };
+        assert!(build_dataset(&cfg2).is_err());
+    }
+
+    #[test]
+    fn out_json_written() {
+        let dir = std::env::temp_dir().join("fadl_driver_test");
+        let path = dir.join("trace.json");
+        let cfg = Config {
+            out_json: Some(path.to_string_lossy().into_owned()),
+            max_outer: 2,
+            ..quick_cfg()
+        };
+        let exp = prepare(&cfg).unwrap();
+        run(&exp).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

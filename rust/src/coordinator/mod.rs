@@ -1,0 +1,8 @@
+//! Coordinator: the config system, the experiment driver/launcher, and
+//! console reporting. Every entrypoint (the `fadl` CLI, the figure
+//! benches, the examples) funnels through [`driver`], so a run is fully
+//! described by its [`config::Config`].
+
+pub mod config;
+pub mod driver;
+pub mod report;

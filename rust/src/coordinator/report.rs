@@ -1,0 +1,105 @@
+//! Console reporting: fixed-width tables and trace summaries shared by
+//! the CLI and the figure benches.
+
+use crate::metrics::{log_rel_diff, Trace};
+
+/// Render a fixed-width table. `widths` are minimum column widths.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (j, cell) in row.iter().enumerate().take(cols) {
+            widths[j] = widths[j].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (j, cell) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$}  ", cell, w = widths[j]));
+        }
+        line.trim_end().to_string()
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Summarize a trace against a reference optimum: the console analogue
+/// of one curve in Figures 5–8.
+pub fn trace_summary(trace: &Trace, f_star: f64) -> String {
+    let mut rows = Vec::new();
+    // print ~12 evenly spaced records
+    let n = trace.records.len();
+    let stride = (n / 12).max(1);
+    for (i, r) in trace.records.iter().enumerate() {
+        if i % stride != 0 && i != n - 1 {
+            continue;
+        }
+        rows.push(vec![
+            r.iter.to_string(),
+            format!("{:.0}", r.comm_passes),
+            format!("{:.3}", r.sim_secs),
+            format!("{:.2}", log_rel_diff(r.f, f_star)),
+            if r.auprc.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.4}", r.auprc)
+            },
+        ]);
+    }
+    format!(
+        "method={} dataset={} P={}\n{}",
+        trace.method,
+        trace.dataset,
+        trace.nodes,
+        table(
+            &["iter", "comm", "sim_s", "log10 rel f-f*", "auprc"],
+            &rows
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{CostModel, SimClock};
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["a", "bbbb"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["100".into(), "x".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a    bbbb"));
+        assert!(lines[2].starts_with("1    2"));
+    }
+
+    #[test]
+    fn trace_summary_renders() {
+        let mut trace = Trace::new("fadl", "kdd2010", 8);
+        let cost = CostModel::default();
+        let mut clock = SimClock::default();
+        for i in 0..30 {
+            clock.comm_pass(10.0);
+            trace.push(i, &clock, &cost, 0.0, 100.0 / (i + 1) as f64, 1.0, f64::NAN);
+        }
+        let s = trace_summary(&trace, 1.0);
+        assert!(s.contains("method=fadl"));
+        assert!(s.lines().count() < 20); // subsampled
+    }
+}

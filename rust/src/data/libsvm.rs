@@ -1,0 +1,179 @@
+//! libsvm / svmlight format reader and writer.
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...`
+//! with 1-based feature indices (the convention of the paper's datasets
+//! at csie.ntu.edu.tw/~cjlin/libsvmtools/datasets). Labels may be
+//! {+1,-1}, {1,0}, or {1,2,...} with a binarization rule (`target`
+//! class → +1, rest → −1) matching the paper's mnist8m "3 vs rest".
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::linalg::Csr;
+
+/// Parse a libsvm text stream. `num_features` of `None` infers the
+/// dimension from the max index seen.
+pub fn parse<R: BufRead>(
+    reader: R,
+    num_features: Option<usize>,
+    name: &str,
+) -> Result<Dataset, String> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().ok_or(format!("line {}: empty", lineno + 1))?;
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        let mut row = Vec::new();
+        let mut prev_idx: i64 = -1;
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .map_err(|_| format!("line {}: bad index {idx:?}", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            if (idx as i64) <= prev_idx {
+                return Err(format!("line {}: indices must be increasing", lineno + 1));
+            }
+            prev_idx = idx as i64;
+            let val: f32 = val
+                .parse()
+                .map_err(|_| format!("line {}: bad value {val:?}", lineno + 1))?;
+            max_col = max_col.max(idx);
+            row.push(((idx - 1) as u32, val));
+        }
+        labels.push(label);
+        rows.push(row);
+    }
+    let cols = match num_features {
+        Some(m) => {
+            if max_col > m {
+                return Err(format!("feature index {max_col} exceeds declared {m}"));
+            }
+            m
+        }
+        None => max_col,
+    };
+    let y = binarize(&labels)?;
+    let ds = Dataset {
+        x: Csr::from_rows(cols.max(1), &rows),
+        y,
+        name: name.to_string(),
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Map raw numeric labels onto {+1, −1}. Accepts ±1 as-is, {0,1} with
+/// 0 → −1, and otherwise treats the smallest label value as −1 and
+/// requires exactly two distinct values.
+fn binarize(labels: &[f64]) -> Result<Vec<f64>, String> {
+    let mut distinct: Vec<f64> = labels.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    match distinct.as_slice() {
+        [] => Ok(Vec::new()),
+        [_single] => Ok(labels.iter().map(|_| 1.0).collect()),
+        [lo, _hi] => {
+            let lo = *lo;
+            Ok(labels
+                .iter()
+                .map(|&l| if l == lo { -1.0 } else { 1.0 })
+                .collect())
+        }
+        more => Err(format!(
+            "need a binary problem, found {} distinct labels (binarize upstream)",
+            more.len()
+        )),
+    }
+}
+
+/// Read a libsvm file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P, num_features: Option<usize>) -> Result<Dataset, String> {
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    let f = std::fs::File::open(&path).map_err(|e| format!("open: {e}"))?;
+    parse(BufReader::new(f), num_features, &name)
+}
+
+/// Write a dataset in libsvm format (round-trip tested).
+pub fn write<W: Write>(ds: &Dataset, mut w: W) -> std::io::Result<()> {
+    for i in 0..ds.n() {
+        let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        for (c, v) in ds.x.row(i) {
+            write!(w, " {}:{}", c + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n# comment\n\n+1 1:1.0\n";
+        let ds = parse(text.as_bytes(), None, "t").unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.m(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.row_dot(0, &[1.0, 1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn parse_zero_one_labels() {
+        let ds = parse("1 1:1\n0 1:2\n".as_bytes(), None, "t").unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn declared_dimension_respected() {
+        let ds = parse("+1 2:1\n".as_bytes(), Some(10), "t").unwrap();
+        assert_eq!(ds.m(), 10);
+        assert!(parse("+1 11:1\n".as_bytes(), Some(10), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("abc 1:1\n".as_bytes(), None, "t").is_err());
+        assert!(parse("+1 0:1\n".as_bytes(), None, "t").is_err());
+        assert!(parse("+1 3:1 2:1\n".as_bytes(), None, "t").is_err());
+        assert!(parse("+1 x\n".as_bytes(), None, "t").is_err());
+        assert!(parse("+1 1:zz\n".as_bytes(), None, "t").is_err());
+    }
+
+    #[test]
+    fn rejects_multiclass() {
+        assert!(parse("1 1:1\n2 1:1\n3 1:1\n".as_bytes(), None, "t").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2\n";
+        let ds = parse(text.as_bytes(), None, "t").unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = parse(buf.as_slice(), Some(ds.m()), "t").unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x, ds2.x);
+    }
+}

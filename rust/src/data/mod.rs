@@ -1,0 +1,135 @@
+//! Datasets: storage, libsvm I/O, synthetic generators matching the
+//! paper's Table 1, and the example/feature partitioners of §3 and §5.
+
+pub mod libsvm;
+pub mod partition;
+pub mod synth;
+
+use crate::linalg::Csr;
+
+/// An in-memory labeled dataset: sparse design matrix + ±1 labels.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub x: Csr,
+    /// labels in {+1.0, −1.0}
+    pub y: Vec<f64>,
+    /// human-readable name (figures/tables key on it)
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn m(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Split into train/test by a deterministic shuffled index split.
+    pub fn split(&self, test_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_fraction));
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        rng.shuffle(&mut idx);
+        let n_test = ((self.n() as f64) * test_fraction).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.select(train_idx, "train"), self.select(test_idx, "test"))
+    }
+
+    /// Sub-dataset of the given row indices.
+    pub fn select(&self, rows: &[usize], suffix: &str) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+            name: format!("{}:{suffix}", self.name),
+        }
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_fraction(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.y.len() as f64
+    }
+
+    /// Basic integrity checks (labels ±1, shapes line up).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.y.len() != self.x.rows {
+            return Err(format!(
+                "label count {} != row count {}",
+                self.y.len(),
+                self.x.rows
+            ));
+        }
+        if let Some(bad) = self.y.iter().find(|&&v| v != 1.0 && v != -1.0) {
+            return Err(format!("label {bad} not in {{+1, -1}}"));
+        }
+        if self.x.row_ptr.len() != self.x.rows + 1 {
+            return Err("row_ptr length mismatch".into());
+        }
+        if self.x.col_idx.iter().any(|&c| c as usize >= self.x.cols) {
+            return Err("column index out of range".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: Csr::from_rows(
+                2,
+                &[vec![(0, 1.0)], vec![(1, 1.0)], vec![(0, 1.0), (1, 1.0)], vec![]],
+            ),
+            y: vec![1.0, -1.0, 1.0, -1.0],
+            name: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.m(), 2);
+        assert_eq!(d.nnz(), 4);
+        assert_eq!(d.positive_fraction(), 0.5);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = tiny();
+        let (train, test) = d.split(0.25, 7);
+        assert_eq!(train.n() + test.n(), 4);
+        assert_eq!(test.n(), 1);
+        train.validate().unwrap();
+        test.validate().unwrap();
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let d = tiny();
+        let (a, _) = d.split(0.5, 3);
+        let (b, _) = d.split(0.5, 3);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn validate_catches_bad_labels() {
+        let mut d = tiny();
+        d.y[0] = 0.5;
+        assert!(d.validate().is_err());
+        let mut d2 = tiny();
+        d2.y.pop();
+        assert!(d2.validate().is_err());
+    }
+}

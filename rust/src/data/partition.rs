@@ -1,0 +1,277 @@
+//! Example and feature partitioners.
+//!
+//! §3 of the paper assumes examples partitioned over P nodes; §5 relaxes
+//! this in two ways we also implement: *resampling* (an example may be
+//! replicated into several nodes — gradient consistency still holds as
+//! long as per-example weights keep the global objective unchanged) and
+//! *feature partitioning* (possibly overlapping feature subsets J_p with
+//! gradient sub-consistency).
+
+use crate::util::rng::Pcg64;
+
+/// Strategy for assigning examples to nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// contiguous equal-size chunks (the on-disk Hadoop layout)
+    Contiguous,
+    /// round-robin by index
+    RoundRobin,
+    /// uniform random assignment
+    Random,
+}
+
+/// Example partition: `assignments[p]` lists the global row indices held
+/// by node p, and `weights[p][k]` the per-example weight (1.0 under a
+/// true partition; 1/replication under resampling so that the summed
+/// objective equals the original).
+#[derive(Clone, Debug)]
+pub struct ExamplePartition {
+    pub assignments: Vec<Vec<usize>>,
+    pub weights: Vec<Vec<f64>>,
+}
+
+impl ExamplePartition {
+    /// Partition `n` examples over `p` nodes.
+    pub fn build(n: usize, p: usize, strategy: Strategy, seed: u64) -> ExamplePartition {
+        assert!(p > 0, "need at least one node");
+        let mut assignments = vec![Vec::new(); p];
+        match strategy {
+            Strategy::Contiguous => {
+                // balanced chunk sizes: first (n % p) nodes get one extra
+                let base = n / p;
+                let extra = n % p;
+                let mut start = 0;
+                for (node, slot) in assignments.iter_mut().enumerate() {
+                    let len = base + usize::from(node < extra);
+                    slot.extend(start..start + len);
+                    start += len;
+                }
+            }
+            Strategy::RoundRobin => {
+                for i in 0..n {
+                    assignments[i % p].push(i);
+                }
+            }
+            Strategy::Random => {
+                let mut rng = Pcg64::new(seed);
+                for i in 0..n {
+                    assignments[rng.below(p)].push(i);
+                }
+            }
+        }
+        let weights = assignments
+            .iter()
+            .map(|a| vec![1.0; a.len()])
+            .collect();
+        ExamplePartition {
+            assignments,
+            weights,
+        }
+    }
+
+    /// Resampling (§5): every example lands in `replication ≥ 1` distinct
+    /// nodes with weight 1/replication, so Σ_p Σ_k w_pk l_ik ≡ Σ_i l_i.
+    pub fn build_resampled(n: usize, p: usize, replication: usize, seed: u64) -> ExamplePartition {
+        assert!(replication >= 1 && replication <= p);
+        let mut rng = Pcg64::new(seed);
+        let mut assignments = vec![Vec::new(); p];
+        let mut weights = vec![Vec::new(); p];
+        let w = 1.0 / replication as f64;
+        for i in 0..n {
+            for node in rng.sample_indices(p, replication) {
+                assignments[node].push(i);
+                weights[node].push(w);
+            }
+        }
+        ExamplePartition {
+            assignments,
+            weights,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Total weighted example count (must equal n for a valid partition
+    /// or resampling — the invariant the property tests check).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().flatten().sum()
+    }
+
+    /// Max/min shard size ratio (load balance).
+    pub fn imbalance(&self) -> f64 {
+        let sizes: Vec<usize> = self.assignments.iter().map(|a| a.len()).collect();
+        let max = *sizes.iter().max().unwrap_or(&0);
+        let min = *sizes.iter().min().unwrap_or(&0);
+        if min == 0 {
+            f64::INFINITY
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// Check the partition invariants; `replication = 1` means each
+    /// example appears exactly once overall.
+    pub fn validate(&self, n: usize, replication: usize) -> Result<(), String> {
+        let mut seen = vec![0usize; n];
+        for (node, a) in self.assignments.iter().enumerate() {
+            if a.len() != self.weights[node].len() {
+                return Err(format!("node {node}: weight/assignment length mismatch"));
+            }
+            for &i in a {
+                if i >= n {
+                    return Err(format!("node {node}: row {i} out of range"));
+                }
+                seen[i] += 1;
+            }
+        }
+        if let Some(i) = seen.iter().position(|&c| c != replication) {
+            return Err(format!(
+                "row {i} appears {} times, expected {replication}",
+                seen[i]
+            ));
+        }
+        let tw = self.total_weight();
+        if (tw - n as f64).abs() > 1e-6 * n as f64 {
+            return Err(format!("total weight {tw} != n {n}"));
+        }
+        Ok(())
+    }
+}
+
+/// Feature partition (§5): J_p ⊂ {0..m}; subsets may overlap so that
+/// "important features can be included in all the nodes".
+#[derive(Clone, Debug)]
+pub struct FeaturePartition {
+    pub subsets: Vec<Vec<usize>>,
+    pub m: usize,
+}
+
+impl FeaturePartition {
+    /// Disjoint contiguous feature blocks.
+    pub fn contiguous(m: usize, p: usize) -> FeaturePartition {
+        assert!(p > 0);
+        let base = m / p;
+        let extra = m % p;
+        let mut subsets = Vec::with_capacity(p);
+        let mut start = 0;
+        for node in 0..p {
+            let len = base + usize::from(node < extra);
+            subsets.push((start..start + len).collect());
+            start += len;
+        }
+        FeaturePartition { subsets, m }
+    }
+
+    /// Disjoint blocks plus a shared set of hot features replicated into
+    /// every node (the paper's "important features in all the nodes").
+    pub fn with_shared(m: usize, p: usize, shared: &[usize]) -> FeaturePartition {
+        let mut fp = FeaturePartition::contiguous(m, p);
+        for subset in &mut fp.subsets {
+            for &j in shared {
+                assert!(j < m);
+                if !subset.contains(&j) {
+                    subset.push(j);
+                }
+            }
+            subset.sort_unstable();
+        }
+        fp
+    }
+
+    /// Every feature must be covered by at least one node.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut covered = vec![false; self.m];
+        for (node, s) in self.subsets.iter().enumerate() {
+            for &j in s {
+                if j >= self.m {
+                    return Err(format!("node {node}: feature {j} out of range"));
+                }
+                covered[j] = true;
+            }
+        }
+        if let Some(j) = covered.iter().position(|&c| !c) {
+            return Err(format!("feature {j} uncovered"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_is_balanced_partition() {
+        let p = ExamplePartition::build(103, 8, Strategy::Contiguous, 0);
+        p.validate(103, 1).unwrap();
+        assert!(p.imbalance() <= 14.0 / 12.0 + 1e-9);
+        // order preserved within shards
+        for a in &p.assignments {
+            assert!(a.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn round_robin_partition() {
+        let p = ExamplePartition::build(10, 3, Strategy::RoundRobin, 0);
+        p.validate(10, 1).unwrap();
+        assert_eq!(p.assignments[0], vec![0, 3, 6, 9]);
+        assert_eq!(p.assignments[1], vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn random_partition_covers_all() {
+        let p = ExamplePartition::build(1000, 16, Strategy::Random, 7);
+        p.validate(1000, 1).unwrap();
+        // every node should get something with overwhelming probability
+        assert!(p.assignments.iter().all(|a| !a.is_empty()));
+    }
+
+    #[test]
+    fn resampling_preserves_total_weight() {
+        let p = ExamplePartition::build_resampled(200, 8, 3, 11);
+        p.validate(200, 3).unwrap();
+        assert!((p.total_weight() - 200.0).abs() < 1e-9);
+        // each replica of an example sits in a distinct node
+        for node in 0..8 {
+            let mut a = p.assignments[node].clone();
+            a.sort_unstable();
+            let len = a.len();
+            a.dedup();
+            assert_eq!(a.len(), len);
+        }
+    }
+
+    #[test]
+    fn single_node_partition() {
+        let p = ExamplePartition::build(5, 1, Strategy::Contiguous, 0);
+        p.validate(5, 1).unwrap();
+        assert_eq!(p.assignments[0], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn more_nodes_than_examples() {
+        let p = ExamplePartition::build(3, 8, Strategy::Contiguous, 0);
+        p.validate(3, 1).unwrap();
+        assert_eq!(p.assignments.iter().filter(|a| !a.is_empty()).count(), 3);
+    }
+
+    #[test]
+    fn feature_partition_covers() {
+        let fp = FeaturePartition::contiguous(100, 7);
+        fp.validate().unwrap();
+        let total: usize = fp.subsets.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn feature_partition_with_shared() {
+        let fp = FeaturePartition::with_shared(50, 4, &[0, 1, 2]);
+        fp.validate().unwrap();
+        for s in &fp.subsets {
+            assert!(s.contains(&0) && s.contains(&1) && s.contains(&2));
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Synthetic dataset generators matching the paper's Table 1.
+//!
+//! The real datasets (kdd2010, url, webspam, mnist8m, rcv) are not
+//! redistributable inside this repo, so we generate synthetic stand-ins
+//! that preserve the *shape statistics* that drive every comparison in
+//! the paper (DESIGN.md §4): the example count n, feature dimension m,
+//! nonzero count nz (hence the nz/m ratio of eq. (21)), the sparsity
+//! pattern (power-law feature popularity for the text-like sets; fully
+//! dense rows for mnist8m), the label balance, and the regularizer λ.
+//! A planted separating hyperplane with controllable label noise keeps
+//! the learning problem realistic (AUPRC climbs as training proceeds).
+
+use super::Dataset;
+use crate::linalg::Csr;
+use crate::util::rng::Pcg64;
+
+/// How nonzero feature values are drawn.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ValueDist {
+    /// binary indicator features (kdd2010 / url style)
+    Binary,
+    /// tf-idf-like positive values (webspam / rcv style): |N(0,1)|·0.5 + 0.1
+    TfIdf,
+    /// pixel-like dense values in [0, 1] (mnist8m style)
+    Pixel,
+}
+
+/// Full description of a synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    /// average nonzeros per row (m == avg_row_nnz means dense rows)
+    pub avg_row_nnz: usize,
+    /// the paper's Table 1 regularization constant
+    pub lambda: f64,
+    pub values: ValueDist,
+    /// probability a label is flipped away from the planted hyperplane
+    pub label_noise: f64,
+    /// power-law exponent for feature popularity (ignored when dense)
+    pub zipf_exponent: f64,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Expected nonzero count.
+    pub fn expected_nnz(&self) -> usize {
+        self.n * self.avg_row_nnz
+    }
+
+    /// The eq.-(21) communication-regime statistic nz/m.
+    pub fn nz_over_m(&self) -> f64 {
+        self.expected_nnz() as f64 / self.m as f64
+    }
+}
+
+/// The five Table-1 datasets, scaled down by `scale` (rows and features
+/// scale together so nz/m — the regime selector of eq. (21) — and the
+/// row density are preserved; mnist8m keeps its fixed 784 features).
+pub fn paper_specs(scale: f64, seed: u64) -> Vec<DatasetSpec> {
+    assert!(scale > 0.0 && scale <= 1.0);
+    let s = |v: f64| ((v * scale).round() as usize).max(16);
+    vec![
+        DatasetSpec {
+            // 8.41e6 examples, 20.21e6 features, 0.31e9 nz → ~37 nz/row
+            name: "kdd2010".into(),
+            n: s(8.41e6),
+            m: s(20.21e6),
+            avg_row_nnz: 37,
+            lambda: 1.25e-6,
+            values: ValueDist::Binary,
+            label_noise: 0.15,
+            zipf_exponent: 1.6,
+            seed,
+        },
+        DatasetSpec {
+            // 1.91e6 examples, 3.23e6 features, 0.22e9 nz → ~115 nz/row
+            name: "url".into(),
+            n: s(1.91e6),
+            m: s(3.23e6),
+            avg_row_nnz: 115,
+            lambda: 0.11e-6,
+            values: ValueDist::Binary,
+            label_noise: 0.12,
+            zipf_exponent: 1.5,
+            seed: seed + 1,
+        },
+        DatasetSpec {
+            // 0.35e6 examples, 16.6e6 features, 0.98e9 nz → ~2800 nz/row
+            name: "webspam".into(),
+            n: s(0.35e6),
+            m: s(16.6e6),
+            avg_row_nnz: 2800.min(s(16.6e6)),
+            lambda: 1.0e-4,
+            values: ValueDist::TfIdf,
+            label_noise: 0.12,
+            zipf_exponent: 1.4,
+            seed: seed + 2,
+        },
+        DatasetSpec {
+            // 8.1e6 examples, 784 features, dense rows
+            name: "mnist8m".into(),
+            n: s(8.1e6),
+            m: 784,
+            avg_row_nnz: 784,
+            lambda: 1.0e-4,
+            values: ValueDist::Pixel,
+            label_noise: 0.10,
+            zipf_exponent: 1.0,
+            seed: seed + 3,
+        },
+        DatasetSpec {
+            // 0.5e6 examples, 47236 features, 0.5e8 nz → ~100 nz/row
+            name: "rcv".into(),
+            n: s(0.5e6),
+            m: s(47236.0 * 1000.0).min(47236).max(64), // keep the real m when scale permits
+            avg_row_nnz: 100,
+            lambda: 1.0e-4,
+            values: ValueDist::TfIdf,
+            label_noise: 0.12,
+            zipf_exponent: 1.5,
+            seed: seed + 4,
+        },
+    ]
+}
+
+/// Look up a paper spec by name.
+pub fn paper_spec(name: &str, scale: f64, seed: u64) -> Option<DatasetSpec> {
+    paper_specs(scale, seed).into_iter().find(|s| s.name == name)
+}
+
+/// Generate the dataset for a spec.
+pub fn generate(spec: &DatasetSpec) -> Dataset {
+    let mut rng = Pcg64::new(spec.seed);
+    let dense = spec.avg_row_nnz >= spec.m;
+
+    // Planted hyperplane with popularity-weighted coefficients: under
+    // the zipf pattern low feature ids are the frequent ones, and — as
+    // in real text/click data — they carry most of the class signal,
+    // while the long tail contributes little. This matters for the
+    // distributed methods: if rare features carried the signal, no
+    // node could model curvature for features it never observes and
+    // every local-approximation method (FADL, SSZ, ADMM locals) would
+    // degrade in a way the paper's datasets do not show.
+    let hot = (spec.m as f64 * 0.02).max(8.0);
+    let w_star: Vec<f64> = (0..spec.m)
+        .map(|j| {
+            let weight = 1.0 / (1.0 + (j as f64 / hot).powi(2)).sqrt();
+            rng.normal() * weight
+        })
+        .collect();
+
+    // Effective vocabulary: a size-n subsample of a power-law corpus
+    // touches far fewer distinct features than the nominal dimension m
+    // (in the real kdd2010 a 1/1000 row subsample sees ~0.1% of the 20M
+    // features). Without this cap, scaled-down data would give every
+    // example near-unique "ID" features, making the problem separable
+    // and f* ≈ 0 — degenerating the relative-gap plots. Communication
+    // still pays for full m-vectors, so the eq.-(21) regime holds.
+    let effective_m = if dense {
+        spec.m
+    } else {
+        // n/8 keeps a node's shard (n/P examples) marginally determined
+        // relative to the live feature space at small P while becoming
+        // clearly rank-deficient at large P — reproducing the paper's
+        // observed degradation of the local approximations as the node
+        // count grows (§4.7.1) without making the problem separable.
+        spec.m.min((spec.n / 8).max(spec.avg_row_nnz * 4).max(16))
+    };
+
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(spec.n);
+    let mut labels: Vec<f64> = Vec::with_capacity(spec.n);
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut seen_mask = vec![false; effective_m];
+    for _ in 0..spec.n {
+        let mut row: Vec<(u32, f32)> = if dense {
+            (0..spec.m as u32)
+                .map(|c| (c, draw_value(spec.values, &mut rng)))
+                .collect()
+        } else {
+            // target row nnz: geometric-ish spread around the mean, ≥ 1
+            let target =
+                ((spec.avg_row_nnz as f64) * (0.5 + rng.f64())).round().max(1.0) as usize;
+            let target = target.min(effective_m);
+            scratch.clear();
+            // O(target) dedup via a reusable membership mask (a linear
+            // `contains` scan is O(target²) and dominates generation for
+            // the webspam-like 2800-nnz rows)
+            while scratch.len() < target {
+                let c = rng.zipf(effective_m, spec.zipf_exponent) as u32;
+                if !seen_mask[c as usize] {
+                    seen_mask[c as usize] = true;
+                    scratch.push(c);
+                }
+            }
+            for &c in &scratch {
+                seen_mask[c as usize] = false;
+            }
+            scratch.sort_unstable();
+            scratch
+                .iter()
+                .map(|&c| (c, draw_value(spec.values, &mut rng)))
+                .collect()
+        };
+        row.sort_unstable_by_key(|&(c, _)| c);
+
+        // margin under the planted model, normalized by row norm so the
+        // label noise level is scale-free
+        let mut margin = 0.0;
+        let mut norm_sq = 0.0;
+        for &(c, v) in &row {
+            margin += v as f64 * w_star[c as usize];
+            norm_sq += (v as f64) * (v as f64);
+        }
+        let normed = margin / norm_sq.sqrt().max(1e-12);
+        labels.push(normed); // raw margins for now; labeled below
+        rows.push(row);
+    }
+
+    // Center the decision threshold at the empirical median margin so
+    // classes stay roughly balanced (positively-valued features plus
+    // popularity-weighted w* otherwise tilt the whole population to one
+    // side for some seeds), then apply two-component label noise:
+    //  * a soft boundary blur — examples near the separating plane flip
+    //    often, which makes AUPRC climb *gradually* with optimization
+    //    quality instead of saturating after the SGD warm start;
+    //  * a uniform flip — irreducible errors that keep a permanent
+    //    active set at the optimum, so f* is substantially nonzero and
+    //    the loss retains curvature near w* (the real datasets are NOT
+    //    separable; a separable stand-in would degenerate the
+    //    relative-gap plots of Figs 5–8).
+    let threshold = {
+        let mut sorted = labels.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[sorted.len() / 2]
+    };
+    let margin_spread = {
+        let mean = crate::util::mean(&labels);
+        crate::util::stddev(&labels).max(mean.abs() * 1e-3).max(1e-9)
+    };
+    for normed in labels.iter_mut() {
+        let centered = (*normed - threshold) / margin_spread;
+        let soft = rng.normal() * spec.label_noise * 4.0;
+        let mut label = if centered + soft >= 0.0 { 1.0 } else { -1.0 };
+        if rng.f64() < spec.label_noise {
+            label = -label;
+        }
+        *normed = label;
+    }
+
+    let ds = Dataset {
+        x: Csr::from_rows(spec.m, &rows),
+        y: labels,
+        name: spec.name.clone(),
+    };
+    debug_assert!(ds.validate().is_ok());
+    ds
+}
+
+fn draw_value(dist: ValueDist, rng: &mut Pcg64) -> f32 {
+    match dist {
+        ValueDist::Binary => 1.0,
+        ValueDist::TfIdf => (rng.normal().abs() * 0.5 + 0.1) as f32,
+        ValueDist::Pixel => rng.f64() as f32,
+    }
+}
+
+/// A small quick dataset for tests and the quickstart example.
+pub fn quick(n: usize, m: usize, avg_row_nnz: usize, seed: u64) -> Dataset {
+    generate(&DatasetSpec {
+        name: format!("quick{n}x{m}"),
+        n,
+        m,
+        avg_row_nnz,
+        lambda: 1e-4,
+        values: ValueDist::TfIdf,
+        label_noise: 0.05,
+        zipf_exponent: 1.5,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_specs_cover_table1() {
+        let specs = paper_specs(1e-3, 0);
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["kdd2010", "url", "webspam", "mnist8m", "rcv"]);
+        // high-dim sets keep nz/m below the low-dim ones by orders of magnitude
+        let kdd = &specs[0];
+        let mnist = &specs[3];
+        assert!(kdd.nz_over_m() < 50.0);
+        assert!(mnist.nz_over_m() > 1000.0);
+        assert_eq!(mnist.m, 784);
+    }
+
+    #[test]
+    fn generate_respects_spec() {
+        let spec = DatasetSpec {
+            name: "t".into(),
+            n: 200,
+            m: 500,
+            avg_row_nnz: 20,
+            lambda: 1e-4,
+            values: ValueDist::Binary,
+            label_noise: 0.05,
+            zipf_exponent: 1.5,
+            seed: 42,
+        };
+        let ds = generate(&spec);
+        ds.validate().unwrap();
+        assert_eq!(ds.n(), 200);
+        assert_eq!(ds.m(), 500);
+        let avg = ds.nnz() as f64 / ds.n() as f64;
+        assert!((10.0..=30.0).contains(&avg), "avg row nnz {avg}");
+        // labels roughly balanced under a symmetric planted model
+        let pos = ds.positive_fraction();
+        assert!((0.3..=0.7).contains(&pos), "positive fraction {pos}");
+    }
+
+    #[test]
+    fn dense_spec_generates_dense_rows() {
+        let spec = DatasetSpec {
+            name: "d".into(),
+            n: 16,
+            m: 32,
+            avg_row_nnz: 32,
+            lambda: 1e-4,
+            values: ValueDist::Pixel,
+            label_noise: 0.0,
+            zipf_exponent: 1.0,
+            seed: 1,
+        };
+        let ds = generate(&spec);
+        assert_eq!(ds.nnz(), 16 * 32);
+        for i in 0..ds.n() {
+            assert_eq!(ds.x.row_nnz(i), 32);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = quick(50, 100, 10, 9);
+        let b = quick(50, 100, 10, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = quick(50, 100, 10, 10);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn signal_is_learnable() {
+        // a few steps of margin perceptron on the planted data must beat chance
+        let ds = quick(400, 60, 12, 3);
+        let mut w = vec![0.0f64; ds.m()];
+        for _ in 0..5 {
+            for i in 0..ds.n() {
+                let z = ds.x.row_dot(i, &w);
+                if ds.y[i] * z <= 0.5 {
+                    ds.x.row_axpy(i, 0.1 * ds.y[i], &mut w);
+                }
+            }
+        }
+        let correct = (0..ds.n())
+            .filter(|&i| ds.y[i] * ds.x.row_dot(i, &w) > 0.0)
+            .count();
+        assert!(
+            correct as f64 / ds.n() as f64 > 0.7,
+            "accuracy {}",
+            correct as f64 / ds.n() as f64
+        );
+    }
+
+    #[test]
+    fn popularity_is_power_law() {
+        let ds = quick(500, 1000, 20, 5);
+        let counts = ds.x.feature_counts();
+        let top: u32 = {
+            let mut c = counts.clone();
+            c.sort_unstable_by(|a, b| b.cmp(a));
+            c[..50].iter().sum()
+        };
+        let total: u32 = counts.iter().sum();
+        // top 5% of features should carry the majority of mass
+        assert!(top as f64 / total as f64 > 0.5);
+    }
+}

@@ -1,0 +1,52 @@
+//! # FADL — Function-Approximation-based Distributed Learning
+//!
+//! A full reproduction of *"An efficient distributed learning algorithm
+//! based on effective local functional approximations"* (Mahajan,
+//! Agrawal, Keerthi, Sellamanickam, Bottou; 2013).
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` for the complete
+//! system inventory):
+//!
+//! * [`util`] — offline-build substrates: deterministic RNG, CLI parser,
+//!   TOML-subset config parser, JSON writer, property-test harness.
+//! * [`linalg`] — dense vector ops and the CSR sparse matrix kernels
+//!   that carry the native hot path.
+//! * [`data`] — datasets: libsvm reader, synthetic generators matching
+//!   the paper's Table 1 statistics, example/feature partitioners.
+//! * [`loss`] — smooth convex losses (squared hinge, logistic, least
+//!   squares) with margin-space first/second derivatives.
+//! * [`objective`] — the regularized risk functional of eq. (8) and the
+//!   per-shard compute backends (native CSR or AOT/PJRT dense blocks).
+//! * [`approx`] — the paper's §3.2 local functional approximations
+//!   (Linear, Hybrid, Quadratic, Nonlinear, BFGS), all satisfying the
+//!   gradient-consistency condition A3.
+//! * [`optim`] — inner optimizers `M` with global linear rate: TRON,
+//!   L-BFGS, primal coordinate descent, SGD, SVRG; plus the
+//!   Armijo–Wolfe distributed line search of §3.4.
+//! * [`cluster`] — the simulated distributed environment: worker shards,
+//!   AllReduce binary tree, and the Appendix-A communication cost model.
+//! * [`methods`] — FADL (Algorithm 2) and the paper's baselines: TERA
+//!   (SQM), ADMM, CoCoA, SSZ — plus the §5 feature-partitioning
+//!   extension.
+//! * [`metrics`] — AUPRC, convergence traces, comm-pass accounting.
+//! * [`runtime`] — the PJRT client wrapper that loads and executes the
+//!   AOT HLO artifacts produced by `python/compile/aot.py`.
+//! * [`coordinator`] — config system, experiment driver, reporting.
+//! * [`benchkit`] — the micro/e2e benchmark harness behind `cargo bench`.
+
+pub mod approx;
+pub mod benchkit;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod loss;
+pub mod methods;
+pub mod metrics;
+pub mod objective;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+
+pub use coordinator::config::Config;
+pub use objective::Objective;

@@ -1,0 +1,316 @@
+//! Compressed-sparse-row matrix: the data-matrix representation for the
+//! example-partitioned shards.
+//!
+//! The three kernels here are the native hot path charged `c1·nz/P` per
+//! pass in the paper's Appendix-A cost model:
+//!
+//! * [`Csr::margins_into`] — z = X·w (one pass, used for gradients and
+//!   the `e_i = d·x_i` pass of Algorithm 2 step 9),
+//! * [`Csr::accumulate_rows`] — g += Xᵀr (the gradient reduction),
+//! * [`Csr::hvp_into`] — Hs = Xᵀ(D·(X·s)) fused in a single pass per
+//!   row (TRON's CG product).
+
+/// CSR matrix with f32 values (data precision) and f64 compute.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// row i occupies indices[row_ptr[i]..row_ptr[i+1]]
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-row (col, value) lists. Panics if a column index
+    /// is out of range; duplicate columns within a row are allowed (they
+    /// simply sum in every kernel, matching a COO interpretation).
+    pub fn from_rows(cols: usize, rows: &[Vec<(u32, f32)>]) -> Csr {
+        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for row in rows {
+            for &(c, v) in row {
+                assert!((c as usize) < cols, "col {c} out of range {cols}");
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr {
+            rows: rows.len(),
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (col, value) pairs of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let span = self.row_ptr[i]..self.row_ptr[i + 1];
+        self.col_idx[span.clone()]
+            .iter()
+            .copied()
+            .zip(self.values[span].iter().copied())
+    }
+
+    /// Number of nonzeros in row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// x_i · w for a single row.
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        let s = self.row_ptr[i];
+        let e = self.row_ptr[i + 1];
+        let mut acc = 0.0;
+        for k in s..e {
+            acc += self.values[k] as f64 * w[self.col_idx[k] as usize];
+        }
+        acc
+    }
+
+    /// w ← w + a·x_i (sparse axpy into a dense vector).
+    #[inline]
+    pub fn row_axpy(&self, i: usize, a: f64, w: &mut [f64]) {
+        let s = self.row_ptr[i];
+        let e = self.row_ptr[i + 1];
+        for k in s..e {
+            w[self.col_idx[k] as usize] += a * self.values[k] as f64;
+        }
+    }
+
+    /// ‖x_i‖²
+    #[inline]
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        let s = self.row_ptr[i];
+        let e = self.row_ptr[i + 1];
+        let mut acc = 0.0;
+        for k in s..e {
+            let v = self.values[k] as f64;
+            acc += v * v;
+        }
+        acc
+    }
+
+    /// z ← X·w.  `z.len() == rows`.
+    pub fn margins_into(&self, w: &[f64], z: &mut [f64]) {
+        debug_assert_eq!(w.len(), self.cols);
+        debug_assert_eq!(z.len(), self.rows);
+        for i in 0..self.rows {
+            z[i] = self.row_dot(i, w);
+        }
+    }
+
+    /// g ← g + Xᵀ·r (r over rows; g over cols).
+    pub fn accumulate_rows(&self, r: &[f64], g: &mut [f64]) {
+        debug_assert_eq!(r.len(), self.rows);
+        debug_assert_eq!(g.len(), self.cols);
+        for i in 0..self.rows {
+            let ri = r[i];
+            if ri != 0.0 {
+                self.row_axpy(i, ri, g);
+            }
+        }
+    }
+
+    /// out ← Xᵀ·diag(d)·X·s fused in one pass over rows.
+    /// `d` is the per-row curvature weight (c_i·l''(z_i, y_i)); rows with
+    /// d == 0 are skipped entirely (the squared-hinge active set).
+    pub fn hvp_into(&self, d: &[f64], s: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(d.len(), self.rows);
+        debug_assert_eq!(s.len(), self.cols);
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let di = d[i];
+            if di == 0.0 {
+                continue;
+            }
+            let t = self.row_dot(i, s);
+            if t != 0.0 {
+                self.row_axpy(i, di * t, out);
+            }
+        }
+    }
+
+    /// Per-feature presence counts (how many rows touch each column) —
+    /// used by TERA's per-feature weight averaging (Agarwal et al. 2011).
+    pub fn feature_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.cols];
+        for &c in &self.col_idx {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Extract the sub-matrix of the given rows (shard construction).
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for &i in rows {
+            let span = self.row_ptr[i]..self.row_ptr[i + 1];
+            col_idx.extend_from_slice(&self.col_idx[span.clone()]);
+            values.extend_from_slice(&self.values[span]);
+            row_ptr.push(col_idx.len());
+        }
+        Csr {
+            rows: rows.len(),
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Dense row materialization (dense-backend block building).
+    pub fn densify_row(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for (c, v) in self.row(i) {
+            out[c as usize] += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [ 1 0 2 ]
+        // [ 0 3 0 ]
+        // [ 4 5 6 ]
+        Csr::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, 4.0), (1, 5.0), (2, 6.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn margins_matches_dense() {
+        let m = sample();
+        let w = [1.0, 10.0, 100.0];
+        let mut z = vec![0.0; 3];
+        m.margins_into(&w, &mut z);
+        assert_eq!(z, vec![201.0, 30.0, 654.0]);
+    }
+
+    #[test]
+    fn accumulate_is_transpose() {
+        let m = sample();
+        let r = [1.0, 2.0, 3.0];
+        let mut g = vec![0.0; 3];
+        m.accumulate_rows(&r, &mut g);
+        // Xᵀ r = [1*1+4*3, 3*2+5*3, 2*1+6*3]
+        assert_eq!(g, vec![13.0, 21.0, 20.0]);
+    }
+
+    #[test]
+    fn adjoint_identity() {
+        // <Xw, r> == <w, Xᵀr> for random data
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let rows: Vec<Vec<(u32, f32)>> = (0..20)
+            .map(|_| {
+                (0..rng.below(8))
+                    .map(|_| (rng.below(15) as u32, rng.normal() as f32))
+                    .collect()
+            })
+            .collect();
+        let m = Csr::from_rows(15, &rows);
+        let w: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let r: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let mut z = vec![0.0; 20];
+        m.margins_into(&w, &mut z);
+        let lhs = crate::linalg::dot(&z, &r);
+        let mut g = vec![0.0; 15];
+        m.accumulate_rows(&r, &mut g);
+        let rhs = crate::linalg::dot(&w, &g);
+        assert!((lhs - rhs).abs() < 1e-9 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn hvp_matches_composition() {
+        let m = sample();
+        let d = [2.0, 0.0, 1.0];
+        let s = [1.0, -1.0, 0.5];
+        let mut out = vec![0.0; 3];
+        m.hvp_into(&d, &s, &mut out);
+        // t = X s = [2.0, -3.0, 2.0]; weighted r = [4.0, 0, 2.0]; Xᵀ r
+        assert_eq!(out, vec![4.0 + 8.0, 10.0, 8.0 + 12.0]);
+    }
+
+    #[test]
+    fn hvp_is_positive_semidefinite() {
+        let m = sample();
+        let d = [1.0, 0.5, 2.0];
+        for s in [[1.0, 0.0, 0.0], [0.3, -0.7, 0.2], [-1.0, 2.0, -3.0]] {
+            let mut out = vec![0.0; 3];
+            m.hvp_into(&d, &s, &mut out);
+            assert!(crate::linalg::dot(&s, &out) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn select_rows_and_counts() {
+        let m = sample();
+        let sub = m.select_rows(&[2, 0]);
+        assert_eq!(sub.rows, 2);
+        assert_eq!(sub.nnz(), 5);
+        assert_eq!(sub.row_dot(0, &[1.0, 1.0, 1.0]), 15.0);
+        assert_eq!(sub.row_dot(1, &[1.0, 1.0, 1.0]), 3.0);
+        assert_eq!(m.feature_counts(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn densify_row_roundtrip() {
+        let m = sample();
+        let mut buf = vec![0.0f32; 3];
+        m.densify_row(2, &mut buf);
+        assert_eq!(buf, vec![4.0, 5.0, 6.0]);
+        m.densify_row(1, &mut buf);
+        assert_eq!(buf, vec![0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn row_helpers() {
+        let m = sample();
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_norm_sq(0), 5.0);
+        let collected: Vec<(u32, f32)> = m.row(2).collect();
+        assert_eq!(collected, vec![(0, 4.0), (1, 5.0), (2, 6.0)]);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let m = Csr::from_rows(4, &[vec![], vec![(3, 1.0)], vec![]]);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.nnz(), 1);
+        let mut z = vec![9.0; 3];
+        m.margins_into(&[0.0, 0.0, 0.0, 2.0], &mut z);
+        assert_eq!(z, vec![0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_col_panics() {
+        Csr::from_rows(2, &[vec![(5, 1.0)]]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Dense vector operations on `&[f64]`.
+//!
+//! These back every optimizer's bookkeeping (w, g, d, CG residuals).
+//! Loops are written unrolled-by-4 where it matters; with
+//! `opt-level = 3` LLVM autovectorizes them to AVX on the benchmark
+//! machine (see EXPERIMENTS.md §Perf for the measured roofline).
+
+/// x · y
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let b = i * 4;
+        s0 += x[b] * y[b];
+        s1 += x[b + 1] * y[b + 1];
+        s2 += x[b + 2] * y[b + 2];
+        s3 += x[b + 3] * y[b + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// ‖x‖₂
+#[inline]
+pub fn norm(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ‖x − y‖₂²
+#[inline]
+pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// y ← y + a·x
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// y ← a·x + b·y
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// x ← a·x
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out ← x − y
+#[inline]
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// out ← x + y
+#[inline]
+pub fn add(x: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a + b).collect()
+}
+
+/// Elementwise accumulate: acc ← acc + x
+#[inline]
+pub fn accum(acc: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for i in 0..x.len() {
+        acc[i] += x[i];
+    }
+}
+
+/// The angle condition of eq. (1): cos∠(−g, d) = −g·d / (‖g‖‖d‖).
+/// Returns `None` when either vector is (numerically) zero.
+pub fn descent_cosine(g: &[f64], d: &[f64]) -> Option<f64> {
+    let gn = norm(g);
+    let dn = norm(d);
+    if gn <= f64::MIN_POSITIVE || dn <= f64::MIN_POSITIVE {
+        return None;
+    }
+    Some(-dot(g, d) / (gn * dn))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..103).map(|i| i as f64 * 0.5).collect();
+        let y: Vec<f64> = (0..103).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_empty_and_single() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[3.0], &[4.0]), 12.0);
+    }
+
+    #[test]
+    fn axpy_and_axpby() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        axpby(1.0, &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 14.0]);
+    }
+
+    #[test]
+    fn norm_and_dist() {
+        assert_eq!(norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(dist_sq(&[1.0, 1.0], &[4.0, 5.0]), 25.0);
+    }
+
+    #[test]
+    fn descent_cosine_signs() {
+        let g = [1.0, 0.0];
+        // steepest descent direction: cos = 1
+        assert!((descent_cosine(&g, &[-1.0, 0.0]).unwrap() - 1.0).abs() < 1e-12);
+        // ascent direction: cos = -1
+        assert!((descent_cosine(&g, &[1.0, 0.0]).unwrap() + 1.0).abs() < 1e-12);
+        // orthogonal: cos = 0
+        assert!(descent_cosine(&g, &[0.0, 1.0]).unwrap().abs() < 1e-12);
+        assert!(descent_cosine(&[0.0, 0.0], &[1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn scale_sub_add_accum() {
+        let mut x = vec![1.0, -2.0];
+        scale(-3.0, &mut x);
+        assert_eq!(x, vec![-3.0, 6.0]);
+        assert_eq!(sub(&[5.0, 1.0], &[2.0, 2.0]), vec![3.0, -1.0]);
+        assert_eq!(add(&[5.0, 1.0], &[2.0, 2.0]), vec![7.0, 3.0]);
+        let mut acc = vec![1.0, 1.0];
+        accum(&mut acc, &[0.5, -0.5]);
+        assert_eq!(acc, vec![1.5, 0.5]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Linear-algebra substrate: dense vector ops and the CSR sparse
+//! kernels that carry the native per-node hot path.
+
+pub mod csr;
+pub mod dense;
+
+pub use csr::Csr;
+pub use dense::*;

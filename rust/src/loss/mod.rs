@@ -1,0 +1,214 @@
+//! Smooth convex losses over margins (paper §3).
+//!
+//! Binary labels y ∈ {+1, −1}, margin z = w·x. Each loss exposes value,
+//! first derivative, and second derivative w.r.t. z — the third is the
+//! Gauss–Newton curvature used by TRON and the Hybrid/Quadratic
+//! approximations. Hinge loss is deliberately absent: the paper's theory
+//! requires Lipschitz-continuous gradients (assumption A1).
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly; the cross-layer
+//! consistency test in `rust/tests/` checks the two against each other
+//! through the PJRT runtime.
+
+/// Loss kind selector (also the config-file spelling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Loss {
+    /// l(z, y) = max(0, 1 − y·z)² — used in all paper experiments.
+    SquaredHinge,
+    /// l(z, y) = log(1 + exp(−y·z))
+    Logistic,
+    /// l(z, y) = (z − y)²
+    LeastSquares,
+}
+
+impl Loss {
+    pub fn from_name(name: &str) -> Option<Loss> {
+        match name {
+            "squared_hinge" => Some(Loss::SquaredHinge),
+            "logistic" => Some(Loss::Logistic),
+            "least_squares" => Some(Loss::LeastSquares),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::SquaredHinge => "squared_hinge",
+            Loss::Logistic => "logistic",
+            Loss::LeastSquares => "least_squares",
+        }
+    }
+
+    /// l(z, y)
+    #[inline]
+    pub fn value(&self, z: f64, y: f64) -> f64 {
+        match self {
+            Loss::SquaredHinge => {
+                let m = (1.0 - y * z).max(0.0);
+                m * m
+            }
+            Loss::Logistic => {
+                // stable log(1 + exp(-yz))
+                let a = -y * z;
+                if a > 0.0 {
+                    a + (1.0 + (-a).exp()).ln()
+                } else {
+                    (1.0 + a.exp()).ln()
+                }
+            }
+            Loss::LeastSquares => {
+                let d = z - y;
+                d * d
+            }
+        }
+    }
+
+    /// dl/dz
+    #[inline]
+    pub fn dz(&self, z: f64, y: f64) -> f64 {
+        match self {
+            Loss::SquaredHinge => -2.0 * y * (1.0 - y * z).max(0.0),
+            Loss::Logistic => -y / (1.0 + (y * z).exp()),
+            Loss::LeastSquares => 2.0 * (z - y),
+        }
+    }
+
+    /// d²l/dz² (Gauss–Newton curvature; for squared hinge the generalized
+    /// second derivative on the active set, as in Chang–Hsieh–Lin 2008).
+    #[inline]
+    pub fn d2z(&self, z: f64, y: f64) -> f64 {
+        match self {
+            Loss::SquaredHinge => {
+                if y * z < 1.0 {
+                    2.0
+                } else {
+                    0.0
+                }
+            }
+            Loss::Logistic => {
+                let s = 1.0 / (1.0 + (-y * z).exp());
+                s * (1.0 - s)
+            }
+            Loss::LeastSquares => 2.0,
+        }
+    }
+
+    /// Value and derivative in one call (line-search inner loop).
+    #[inline]
+    pub fn value_dz(&self, z: f64, y: f64) -> (f64, f64) {
+        (self.value(z, y), self.dz(z, y))
+    }
+
+    /// Global Lipschitz bound on d²l/dz² (the per-example contribution
+    /// to the paper's L; the data-dependent factor ‖x_i‖² multiplies it).
+    pub fn curvature_bound(&self) -> f64 {
+        match self {
+            Loss::SquaredHinge => 2.0,
+            Loss::Logistic => 0.25,
+            Loss::LeastSquares => 2.0,
+        }
+    }
+
+    /// Convexity/differentiability sanity used by debug assertions.
+    pub fn is_smooth(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOSSES: [Loss; 3] = [Loss::SquaredHinge, Loss::Logistic, Loss::LeastSquares];
+
+    #[test]
+    fn names_roundtrip() {
+        for l in LOSSES {
+            assert_eq!(Loss::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Loss::from_name("hinge"), None);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let h = 1e-6;
+        for l in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for i in -30..=30 {
+                    let z = i as f64 / 7.0;
+                    if l == Loss::SquaredHinge && (y * z - 1.0).abs() < 1e-2 {
+                        continue; // kink of the generalized derivative
+                    }
+                    let num = (l.value(z + h, y) - l.value(z - h, y)) / (2.0 * h);
+                    assert!(
+                        (l.dz(z, y) - num).abs() < 1e-4,
+                        "{l:?} y={y} z={z}: {} vs {num}",
+                        l.dz(z, y)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn second_derivative_matches_finite_difference() {
+        let h = 1e-5;
+        for l in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for i in -20..=20 {
+                    let z = i as f64 / 5.0 + 0.01;
+                    if l == Loss::SquaredHinge && (y * z - 1.0).abs() < 1e-1 {
+                        continue;
+                    }
+                    let num = (l.dz(z + h, y) - l.dz(z - h, y)) / (2.0 * h);
+                    assert!(
+                        (l.d2z(z, y) - num).abs() < 1e-3,
+                        "{l:?} y={y} z={z}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn convexity_nonneg_curvature() {
+        for l in LOSSES {
+            for &y in &[1.0, -1.0] {
+                for i in -50..=50 {
+                    let z = i as f64 / 10.0;
+                    assert!(l.d2z(z, y) >= 0.0);
+                    assert!(l.d2z(z, y) <= l.curvature_bound() + 1e-12);
+                    assert!(l.value(z, y) >= 0.0 || l == Loss::Logistic);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn squared_hinge_inactive_beyond_margin() {
+        let l = Loss::SquaredHinge;
+        assert_eq!(l.value(2.0, 1.0), 0.0);
+        assert_eq!(l.dz(2.0, 1.0), 0.0);
+        assert_eq!(l.d2z(2.0, 1.0), 0.0);
+        assert_eq!(l.value(0.0, 1.0), 1.0);
+        assert_eq!(l.dz(0.0, 1.0), -2.0);
+    }
+
+    #[test]
+    fn logistic_extreme_margins_stable() {
+        let l = Loss::Logistic;
+        assert!(l.value(1000.0, 1.0) < 1e-10);
+        assert!(l.value(-1000.0, 1.0) > 999.0);
+        assert!(l.value(-1000.0, 1.0).is_finite());
+        assert!(l.dz(-1000.0, 1.0).is_finite());
+    }
+
+    #[test]
+    fn value_dz_consistent() {
+        for l in LOSSES {
+            let (v, d) = l.value_dz(0.3, -1.0);
+            assert_eq!(v, l.value(0.3, -1.0));
+            assert_eq!(d, l.dz(0.3, -1.0));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! `fadl` — the leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train       run one experiment from a config file (+ overrides)
+//!   datasets    print the Table-1 synthetic dataset inventory
+//!   costmodel   evaluate the eq.-(21) computation/communication regime
+//!   verify      smoke-check the AOT artifacts through the PJRT runtime
+//!
+//! Examples:
+//!   fadl train --config configs/quickstart.toml
+//!   fadl train --config configs/fig5_kdd2010.toml --nodes 128 --method tera
+//!   fadl datasets --scale 0.001
+//!   fadl costmodel --gamma 500 --k-hat 10
+//!   fadl verify --artifacts artifacts
+
+use fadl::coordinator::{config::Config, driver, report};
+use fadl::data::synth;
+use fadl::metrics::log_rel_diff;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let mut args = std::env::args().skip(1).peekable();
+    let sub = args.peek().cloned().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = args.skip(1).collect();
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "datasets" => cmd_datasets(rest),
+        "costmodel" => cmd_costmodel(rest),
+        "verify" => cmd_verify(rest),
+        _ => {
+            eprintln!(
+                "fadl — Function-Approximation-based Distributed Learning\n\n\
+                 USAGE: fadl <train|datasets|costmodel|verify> [flags]\n\
+                 Run `fadl <subcommand> --help` for details."
+            );
+            std::process::exit(if sub == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn parse_or_exit(cli: &Cli, argv: Vec<String>) -> fadl::util::cli::Args {
+    match cli.parse_from(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(argv: Vec<String>) {
+    let cli = Cli::new("fadl train", "run one experiment")
+        .flag("config", "", "TOML config path (empty = defaults)")
+        .flag("method", "", "override method name")
+        .flag("dataset", "", "override dataset kind")
+        .flag("nodes", "", "override node count P")
+        .flag("max-outer", "", "override outer-iteration cap")
+        .flag("gamma", "", "override comm/comp ratio γ")
+        .flag("out", "", "write the trace JSON here")
+        .switch("no-warm-start", "disable the SGD warm start");
+    let a = parse_or_exit(&cli, argv);
+    let mut cfg = if a.get("config").is_empty() {
+        Config::default()
+    } else {
+        Config::from_file(a.get("config")).unwrap_or_else(|e| die(&e))
+    };
+    if !a.get("method").is_empty() {
+        cfg.method = a.get("method").to_string();
+    }
+    if !a.get("dataset").is_empty() {
+        cfg.dataset = a.get("dataset").to_string();
+    }
+    if !a.get("nodes").is_empty() {
+        cfg.nodes = a.get_usize("nodes");
+    }
+    if !a.get("max-outer").is_empty() {
+        cfg.max_outer = a.get_usize("max-outer");
+    }
+    if !a.get("gamma").is_empty() {
+        cfg.cost.gamma = a.get_f64("gamma");
+    }
+    if !a.get("out").is_empty() {
+        cfg.out_json = Some(a.get("out").to_string());
+    }
+    if a.on("no-warm-start") {
+        cfg.warm_start = false;
+    }
+
+    let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
+    println!(
+        "experiment {}: dataset {} (n={}, m={}, nz={}), P={}, method={}, backend={:?}",
+        cfg.name,
+        exp.train.name,
+        exp.train.n(),
+        exp.train.m(),
+        exp.train.nnz(),
+        cfg.nodes,
+        cfg.method,
+        cfg.backend,
+    );
+    let (w, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
+    println!("{}", report::trace_summary(&trace, trace.best_f()));
+    if let Some(r) = trace.records.last() {
+        println!(
+            "final: f={:.6} ‖g‖={:.3e} comm_passes={:.0} sim_time={:.3}s wall={:.3}s auprc={:.4}",
+            r.f, r.grad_norm, r.comm_passes, r.sim_secs, r.wall_secs, r.auprc
+        );
+    }
+    println!("‖w‖ = {:.6}", fadl::linalg::norm(&w));
+}
+
+fn cmd_datasets(argv: Vec<String>) {
+    let cli = Cli::new("fadl datasets", "print the Table-1 dataset inventory")
+        .flag("scale", "0.001", "scale factor vs the paper's sizes")
+        .flag("seed", "42", "generator seed");
+    let a = parse_or_exit(&cli, argv);
+    let rows: Vec<Vec<String>> = synth::paper_specs(a.get_f64("scale"), a.get_u64("seed"))
+        .iter()
+        .map(|s| {
+            vec![
+                s.name.clone(),
+                s.n.to_string(),
+                s.m.to_string(),
+                s.expected_nnz().to_string(),
+                format!("{:.0}", s.nz_over_m()),
+                format!("{:.2e}", s.lambda),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["dataset", "n", "m", "~nz", "nz/m", "lambda"], &rows)
+    );
+}
+
+fn cmd_costmodel(argv: Vec<String>) {
+    let cli = Cli::new("fadl costmodel", "evaluate the eq.-(21) regime")
+        .flag("gamma", "500", "comm/comp ratio γ")
+        .flag("k-hat", "10", "FADL inner iterations k̂");
+    let a = parse_or_exit(&cli, argv);
+    let cost = fadl::cluster::CostModel {
+        gamma: a.get_f64("gamma"),
+        ..Default::default()
+    };
+    let k_hat = a.get_usize("k-hat");
+    let mut rows = Vec::new();
+    for spec in synth::paper_specs(1.0, 0) {
+        // full-size statistics: the regime question is about the paper's
+        // actual datasets, so evaluate eq. (21) at scale 1.0
+        let nz = spec.expected_nnz();
+        let mut row = vec![
+            spec.name.clone(),
+            format!("{:.1}", nz as f64 / spec.m as f64),
+        ];
+        for p in [8usize, 32, 128] {
+            row.push(if cost.fadl_favored(nz, spec.m, p, k_hat) {
+                "FADL".into()
+            } else {
+                "SQM".into()
+            });
+        }
+        rows.push(row);
+    }
+    println!(
+        "eq. (21): FADL favored iff nz/m < γP/(2k̂)   [γ={} k̂={k_hat}]\n\n{}",
+        cost.gamma,
+        report::table(&["dataset", "nz/m", "P=8", "P=32", "P=128"], &rows)
+    );
+}
+
+fn cmd_verify(argv: Vec<String>) {
+    let cli = Cli::new("fadl verify", "smoke-check the AOT artifacts")
+        .flag("artifacts", "artifacts", "artifacts directory");
+    let a = parse_or_exit(&cli, argv);
+    let dir = std::path::PathBuf::from(a.get("artifacts"));
+    let rt = fadl::runtime::AotRuntime::load(&dir)
+        .unwrap_or_else(|e| die(&format!("load artifacts: {e:#}")));
+    println!(
+        "artifacts OK: platform={} batch={} features={} loss={}",
+        rt.platform(),
+        rt.batch,
+        rt.features,
+        rt.loss.name()
+    );
+    // numeric cross-check against the native Rust implementation
+    let b = rt.batch;
+    let m = rt.features;
+    let mut rng = fadl::util::rng::Pcg64::new(7);
+    let x: Vec<f32> = (0..b * m).map(|_| rng.normal() as f32 * 0.1).collect();
+    let y: Vec<f32> = (0..b).map(|_| rng.label(0.5) as f32).collect();
+    let c: Vec<f32> = vec![1.0; b];
+    let w: Vec<f32> = (0..m).map(|_| rng.normal() as f32 * 0.05).collect();
+    let (loss, grad, z) = rt
+        .obj_grad(&x, &y, &c, &w)
+        .unwrap_or_else(|e| die(&format!("execute: {e:#}")));
+    // native reference
+    let mut want_loss = 0.0f64;
+    for i in 0..b {
+        let zi: f64 = (0..m).map(|j| x[i * m + j] as f64 * w[j] as f64).sum();
+        want_loss += rt.loss.value(zi, y[i] as f64);
+        assert!((z[i] as f64 - zi).abs() < 1e-2, "margin mismatch at {i}");
+    }
+    let rel = (loss as f64 - want_loss).abs() / want_loss.abs().max(1.0);
+    assert!(rel < 1e-3, "loss mismatch: {loss} vs {want_loss}");
+    println!(
+        "numerics OK: loss rel err {:.2e}, ‖grad‖ = {:.4}, margins checked",
+        rel,
+        grad.iter()
+            .map(|&g| (g as f64) * (g as f64))
+            .sum::<f64>()
+            .sqrt()
+    );
+    println!(
+        "verify PASSED — log-rel sanity: {:.1}",
+        log_rel_diff(want_loss * (1.0 + rel), want_loss)
+    );
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
+}

@@ -1,0 +1,421 @@
+//! ADMM — consensus-form Alternating Direction Method of Multipliers
+//! for example-partitioned linear classification (Boyd et al. 2011 §8;
+//! Zhang, Lee, Shin 2012), the dual baseline of §4.4.
+//!
+//! Consensus formulation:  min Σ_p L_p(w_p) + λ/2‖z‖²  s.t. w_p = z.
+//! Scaled-dual iterations with penalty ρ:
+//!
+//!   w_p ← argmin L_p(w) + ρ/2‖w − z + u_p‖²        (local TRON solve)
+//!   z   ← ρ·Σ_p(w_p + u_p) / (λ + ρP)              (1 AllReduce)
+//!   u_p ← u_p + w_p − z
+//!
+//! ρ policies (§4.4): **Adap** — Boyd eq. (3.13) residual balancing;
+//! **Analytic** — the Deng–Yin linear-rate-optimal formula
+//! ρ* = √(σ·L) from strong-convexity/smoothness bounds; **Search** —
+//! start at Analytic, probe a neighborhood for 10 iterations each and
+//! keep the best (charging the probe time, as the paper notes).
+
+use std::time::Instant;
+
+use super::{common, TrainContext, Trainer};
+use crate::approx::LocalApprox;
+use crate::linalg;
+use crate::loss::Loss;
+use crate::metrics::Trace;
+use crate::objective::ShardCompute;
+use crate::optim::{tron::Tron, InnerOptimizer};
+
+/// ρ selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RhoPolicy {
+    Adap,
+    Analytic,
+    Search,
+}
+
+#[derive(Clone, Debug)]
+pub struct Admm {
+    pub rho_policy: RhoPolicy,
+    /// TRON iterations for each local proximal solve
+    pub local_iters: usize,
+    /// Adap parameters (Boyd et al. §3.4.1): μ and τ
+    pub adap_mu: f64,
+    pub adap_tau: f64,
+    pub warm_start: bool,
+    pub warm_start_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for Admm {
+    fn default() -> Self {
+        Admm {
+            rho_policy: RhoPolicy::Adap,
+            local_iters: 8,
+            adap_mu: 10.0,
+            adap_tau: 2.0,
+            warm_start: true,
+            warm_start_epochs: 5,
+            seed: 0xadd,
+        }
+    }
+}
+
+/// The local proximal objective L_p(w) + ρ/2‖w − v‖² exposed through
+/// the [`LocalApprox`] oracle so TRON can minimize it.
+struct ProxLocal<'a> {
+    shard: &'a dyn ShardCompute,
+    loss: Loss,
+    rho: f64,
+    /// prox center v = z − u_p
+    center: Vec<f64>,
+    /// warm start point (previous w_p)
+    start: Vec<f64>,
+    last_margins: Vec<f64>,
+    passes: f64,
+}
+
+impl<'a> LocalApprox for ProxLocal<'a> {
+    fn m(&self) -> usize {
+        self.center.len()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let (lv, lg, z) = self.shard.loss_grad(self.loss, v);
+        self.passes += 2.0;
+        self.last_margins = z;
+        let mut value = lv;
+        let mut grad = lg;
+        for j in 0..v.len() {
+            let d = v[j] - self.center[j];
+            value += 0.5 * self.rho * d * d;
+            grad[j] += self.rho * d;
+        }
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        let mut out = self.shard.hvp(self.loss, &self.last_margins, s);
+        linalg::axpy(self.rho, s, &mut out);
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    fn anchor(&self) -> &[f64] {
+        &self.start
+    }
+}
+
+impl Trainer for Admm {
+    fn label(&self) -> String {
+        match self.rho_policy {
+            RhoPolicy::Adap => "admm-adap".into(),
+            RhoPolicy::Analytic => "admm-analytic".into(),
+            RhoPolicy::Search => "admm-search".into(),
+        }
+    }
+
+    fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let p = cluster.p();
+        let mut trace = Trace::new(&self.label(), "", p);
+        let wall = Instant::now();
+
+        let z0 = if self.warm_start {
+            common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
+        } else {
+            ctx.w0.clone()
+        };
+
+        // analytic ρ (Deng–Yin): √(σ_f · L_f) with σ = λ and L from a
+        // power-iteration bound (charged to the clock)
+        let rho0 = match self.rho_policy {
+            RhoPolicy::Adap => obj.lambda.max(1e-6) * 10.0,
+            RhoPolicy::Analytic | RhoPolicy::Search => {
+                let l_data = common::estimate_hessian_norm(cluster, obj, &z0, 10, self.seed);
+                (obj.lambda * (obj.lambda + l_data)).sqrt().max(1e-12)
+            }
+        };
+
+        let rho = match self.rho_policy {
+            RhoPolicy::Search => {
+                // probe ρ ∈ rho0·{0.1, 0.3, 1, 3, 10} for 10 iterations
+                // each and keep the best objective — the "late start"
+                // cost the paper describes is charged in full.
+                let mut best = (f64::INFINITY, rho0);
+                for mult in [0.1, 0.3, 1.0, 3.0, 10.0] {
+                    let probe_rho = rho0 * mult;
+                    let (f_end, _, _) =
+                        self.run_iters(ctx, &z0, probe_rho, 10, false, None, &mut trace, &wall);
+                    if f_end < best.0 {
+                        best = (f_end, probe_rho);
+                    }
+                }
+                best.1
+            }
+            _ => rho0,
+        };
+
+        let adaptive = self.rho_policy == RhoPolicy::Adap;
+        let (_, z, _) = self.run_iters(
+            ctx,
+            &z0,
+            rho,
+            ctx.max_outer,
+            adaptive,
+            Some(&mut trace),
+            &mut Trace::new("scratch", "", p),
+            &wall,
+        );
+        (z, trace)
+    }
+}
+
+impl Admm {
+    /// Run ADMM iterations from consensus start z0; returns
+    /// (final f, final z, iterations done). When `record` is Some, every
+    /// iteration appends to it (otherwise the scratch trace is used —
+    /// the clock still advances, matching the Search policy's cost).
+    #[allow(clippy::too_many_arguments)]
+    fn run_iters(
+        &self,
+        ctx: &TrainContext,
+        z0: &[f64],
+        rho_init: f64,
+        iters: usize,
+        adaptive: bool,
+        mut record: Option<&mut Trace>,
+        scratch: &mut Trace,
+        wall: &Instant,
+    ) -> (f64, Vec<f64>, usize) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let p = cluster.p();
+        let m = cluster.m();
+        let mut rho = rho_init;
+        let mut z = z0.to_vec();
+        let mut w_locals: Vec<Vec<f64>> = vec![z.clone(); p];
+        let mut u_locals: Vec<Vec<f64>> = vec![vec![0.0; m]; p];
+        let tron = Tron::default();
+        let mut f_last = f64::INFINITY;
+        let mut done = 0;
+
+        for it in 0..iters {
+            // ---- local proximal solves (parallel) ----
+            let rho_now = rho;
+            let z_ref = &z;
+            let results: Vec<Vec<f64>> = {
+                let w_snapshot = &w_locals;
+                let u_snapshot = &u_locals;
+                cluster.map(|node, shard| {
+                    let center = linalg::sub(z_ref, &u_snapshot[node]);
+                    let mut prox = ProxLocal {
+                        shard,
+                        loss: obj.loss,
+                        rho: rho_now,
+                        center,
+                        start: w_snapshot[node].clone(),
+                        last_margins: Vec::new(),
+                        passes: 0.0,
+                    };
+                    let res = tron.minimize(&mut prox, self.local_iters);
+                    let units = prox.passes * 2.0 * shard.nnz() as f64;
+                    (res.w, units)
+                })
+            };
+            w_locals = results;
+
+            // ---- consensus update: AllReduce Σ(w_p + u_p) ----
+            let sums: Vec<Vec<f64>> = w_locals
+                .iter()
+                .zip(&u_locals)
+                .map(|(wp, up)| linalg::add(wp, up))
+                .collect();
+            let total = cluster.allreduce(sums);
+            let z_old = z.clone();
+            z = total
+                .iter()
+                .map(|&s| rho * s / (obj.lambda + rho * p as f64))
+                .collect();
+
+            // ---- dual updates (local) ----
+            for node in 0..p {
+                for j in 0..m {
+                    u_locals[node][j] += w_locals[node][j] - z[j];
+                }
+            }
+
+            // ---- residuals (scalar aggregations) ----
+            let r_primal: f64 = w_locals
+                .iter()
+                .map(|wp| linalg::dist_sq(wp, &z))
+                .sum::<f64>()
+                .sqrt();
+            let s_dual = rho * (p as f64).sqrt() * linalg::dist_sq(&z, &z_old).sqrt();
+            cluster.charge_scalar_round();
+            if adaptive {
+                // Boyd eq. (3.13); the scaled duals u = y/ρ must be
+                // rescaled whenever ρ changes.
+                if r_primal > self.adap_mu * s_dual {
+                    rho *= self.adap_tau;
+                    for u in &mut u_locals {
+                        linalg::scale(1.0 / self.adap_tau, u);
+                    }
+                } else if s_dual > self.adap_mu * r_primal {
+                    rho /= self.adap_tau;
+                    for u in &mut u_locals {
+                        linalg::scale(self.adap_tau, u);
+                    }
+                }
+            }
+
+            // ---- primal objective at z for the trace (scalar round) ----
+            f_last = obj.value_from(&z, cluster.loss_pass(obj.loss, &z));
+            let t = record.as_deref_mut().unwrap_or(scratch);
+            t.push(
+                it,
+                &cluster.clock(),
+                &cluster.cost,
+                wall.elapsed().as_secs_f64(),
+                f_last,
+                f64::NAN,
+                ctx.eval_auprc(&z),
+            );
+            done = it + 1;
+            if ctx.should_stop_f(f_last) {
+                break;
+            }
+        }
+        (f_last, z, done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::tests::cluster_from;
+    use crate::data::synth;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    fn f_star(ds: &crate::data::Dataset, obj: Objective) -> f64 {
+        let cluster = cluster_from(ds, 1);
+        let ctx = TrainContext {
+            max_outer: 300,
+            eps_g: 1e-12,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, t) = super::super::tera::Tera::default().train(&ctx);
+        t.final_f()
+    }
+
+    #[test]
+    fn adap_converges_close_to_optimum() {
+        let ds = synth::quick(320, 30, 8, 60);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 120,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = Admm::default().train(&ctx);
+        let rel = (trace.best_f() - fs) / fs.abs();
+        assert!(rel < 1e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn consensus_reached() {
+        // after convergence the consensus variable must classify as well
+        // as a direct solve: compare objective values loosely
+        let ds = synth::quick(100, 20, 6, 61);
+        let obj = Objective::new(1e-1, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 80,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (z, trace) = Admm::default().train(&ctx);
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let (fz, _) = obj.eval(&[&whole], &z);
+        assert!((fz - trace.final_f()).abs() < 1e-9 * fz.abs().max(1.0));
+    }
+
+    #[test]
+    fn one_allreduce_per_iteration() {
+        let ds = synth::quick(80, 16, 6, 62);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 6,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let admm = Admm {
+            warm_start: false,
+            ..Default::default()
+        };
+        let (_, trace) = admm.train(&ctx);
+        let per_iter: Vec<f64> = trace
+            .records
+            .windows(2)
+            .map(|w| w[1].comm_passes - w[0].comm_passes)
+            .collect();
+        assert!(per_iter.iter().all(|&c| (c - 1.0).abs() < 1e-9), "{per_iter:?}");
+    }
+
+    #[test]
+    fn analytic_and_adap_both_converge() {
+        // §4.4 compares Adap vs Analytic at the paper's scale (Fig. 2);
+        // at unit-test scale we only certify that both policies drive
+        // the primal objective close to the optimum. The fig2_admm
+        // bench reproduces the actual ordering experiment.
+        let ds = synth::quick(240, 24, 6, 63);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let run = |policy: RhoPolicy, iters: usize| {
+            let cluster = cluster_from(&ds, 4);
+            let ctx = TrainContext {
+                max_outer: iters,
+                ..TrainContext::new(&cluster, obj)
+            };
+            let (_, t) = Admm {
+                rho_policy: policy,
+                ..Default::default()
+            }
+            .train(&ctx);
+            t.best_f()
+        };
+        let adap = run(RhoPolicy::Adap, 40);
+        let analytic = run(RhoPolicy::Analytic, 40);
+        assert!((adap - fs) / fs < 0.05, "adap gap {}", (adap - fs) / fs);
+        assert!(
+            (analytic - fs) / fs < 0.20,
+            "analytic gap {}",
+            (analytic - fs) / fs
+        );
+    }
+
+    #[test]
+    fn search_finds_workable_rho() {
+        let ds = synth::quick(100, 20, 6, 64);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 40,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = Admm {
+            rho_policy: RhoPolicy::Search,
+            ..Default::default()
+        }
+        .train(&ctx);
+        // search probes appear in the trace (late start) and the end
+        // result still approaches the optimum
+        assert!(trace.records.len() > 40, "{}", trace.records.len());
+        let rel = (trace.best_f() - fs) / fs.abs();
+        assert!(rel < 0.15, "rel {rel}");
+    }
+}

@@ -1,0 +1,264 @@
+//! CoCoA — Communication-Efficient Distributed Dual Coordinate Ascent
+//! (Jaggi et al. 2014), the distributed-dual baseline of §4.5
+//! (representing Pechyony et al. 2011; Yang 2013; Yang et al. 2013).
+//!
+//! For f(w) = λ/2‖w‖² + Σ_i max(0, 1 − y_i·w·x_i)² the dual is
+//!
+//!   max_{α ≥ 0}  D(α) = −λ/2‖w(α)‖² + Σ_i (α_i − α_i²/4),
+//!   w(α) = (1/λ)·Σ_i α_i y_i x_i.
+//!
+//! Each outer iteration every node runs `inner_epochs` epochs of SDCA on
+//! its local dual block against a local copy of w, then the w-deltas are
+//! averaged (the safe 1/P combiner): exactly one m-vector AllReduce per
+//! outer iteration. The per-coordinate maximizer (derivation in
+//! `sdca_delta`) is closed-form for the squared hinge.
+//!
+//! Being a dual method, the primal objective is **not** monotone — the
+//! trace exhibits the jumps the paper points out (§4.5, footnote 11).
+
+use std::time::Instant;
+
+use super::{TrainContext, Trainer};
+use crate::linalg;
+use crate::loss::Loss;
+use crate::metrics::Trace;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct CoCoA {
+    /// local SDCA epochs per outer iteration (the §4.5 sweep is
+    /// {0.1, 1, 10}; 1 works best overall and is the default)
+    pub inner_epochs: f64,
+    pub seed: u64,
+}
+
+impl Default for CoCoA {
+    fn default() -> Self {
+        CoCoA {
+            inner_epochs: 1.0,
+            seed: 0xc0c0,
+        }
+    }
+}
+
+/// Closed-form SDCA coordinate step for the squared hinge:
+/// maximize D(α + δe_i):  δ* = (1 − y_i·w·x_i − α_i/2)/(‖x_i‖²/λ + 1/2),
+/// then clip to α_i + δ ≥ 0.
+#[inline]
+pub fn sdca_delta(margin_y: f64, alpha_i: f64, xsq_over_lambda: f64) -> f64 {
+    let delta = (1.0 - margin_y - 0.5 * alpha_i) / (xsq_over_lambda + 0.5);
+    delta.max(-alpha_i)
+}
+
+impl Trainer for CoCoA {
+    fn label(&self) -> String {
+        format!("cocoa-{}", self.inner_epochs)
+    }
+
+    fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        assert_eq!(
+            ctx.objective.loss,
+            Loss::SquaredHinge,
+            "CoCoA implements the squared-hinge dual (the paper's loss)"
+        );
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let p = cluster.p();
+        let m = cluster.m();
+        let mut trace = Trace::new(&self.label(), "", p);
+        let wall = Instant::now();
+
+        // duals start at 0 → w(α) = 0 (no SGD warm start: footnote 10 —
+        // CoCoA's primal iterate must stay consistent with its duals)
+        let mut w = vec![0.0; m];
+        let mut alphas: Vec<Vec<f64>> = cluster
+            .workers
+            .iter()
+            .map(|s| vec![0.0; s.n()])
+            .collect();
+
+        for it in 0..ctx.max_outer {
+            // ---- local SDCA epochs (parallel) ----
+            let lambda = obj.lambda;
+            let epochs = self.inner_epochs;
+            let seed = self.seed;
+            let w_ref = &w;
+            let alpha_snapshot = &alphas;
+            let results: Vec<(Vec<f64>, Vec<f64>)> = cluster.map(|node, shard| {
+                let Some(data) = shard.shard() else {
+                    return ((vec![0.0; m], alpha_snapshot[node].clone()), 0.0);
+                };
+                let n = data.n();
+                let mut alpha = alpha_snapshot[node].clone();
+                let mut w_loc = w_ref.clone();
+                let mut delta_w = vec![0.0; m];
+                if n > 0 {
+                    let steps = ((n as f64) * epochs).ceil() as usize;
+                    let mut rng = Pcg64::with_stream(seed ^ it as u64, node as u64);
+                    for _ in 0..steps {
+                        let i = rng.below(n);
+                        let xsq = data.x.row_norm_sq(i);
+                        if xsq == 0.0 {
+                            continue;
+                        }
+                        let margin_y = data.y[i] * data.x.row_dot(i, &w_loc);
+                        let d = sdca_delta(margin_y, alpha[i], xsq / lambda);
+                        if d != 0.0 {
+                            alpha[i] += d;
+                            let coef = d * data.y[i] / lambda;
+                            data.x.row_axpy(i, coef, &mut w_loc);
+                            data.x.row_axpy(i, coef, &mut delta_w);
+                        }
+                    }
+                }
+                let units = epochs * 2.0 * shard.nnz() as f64;
+                ((delta_w, alpha), units)
+            });
+
+            // ---- safe averaging combine: w += (1/P)·Σ Δw_p, and the
+            // dual increments are scaled by the same 1/P so that
+            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent ----
+            let mut deltas = Vec::with_capacity(p);
+            for (node, (dw, alpha_new)) in results.into_iter().enumerate() {
+                deltas.push(dw);
+                let old = &mut alphas[node];
+                for i in 0..old.len() {
+                    old[i] += (alpha_new[i] - old[i]) / p as f64;
+                }
+            }
+            let sum = cluster.allreduce(deltas);
+            linalg::axpy(1.0 / p as f64, &sum, &mut w);
+
+            // ---- primal objective trace (scalar round) ----
+            let f = obj.value_from(&w, cluster.loss_pass(obj.loss, &w));
+            trace.push(
+                it,
+                &cluster.clock(),
+                &cluster.cost,
+                wall.elapsed().as_secs_f64(),
+                f,
+                f64::NAN,
+                ctx.eval_auprc(&w),
+            );
+            if ctx.should_stop_f(f) {
+                break;
+            }
+        }
+        (w, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::tests::cluster_from;
+    use crate::data::synth;
+    use crate::objective::Objective;
+
+    fn f_star(ds: &crate::data::Dataset, obj: Objective) -> f64 {
+        let cluster = cluster_from(ds, 1);
+        let ctx = TrainContext {
+            max_outer: 300,
+            eps_g: 1e-12,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, t) = super::super::tera::Tera::default().train(&ctx);
+        t.final_f()
+    }
+
+    #[test]
+    fn sdca_delta_closed_form() {
+        // at α = 0 with margin 0 and unit x, λ = 1: δ = 1/(1.5)
+        assert!((sdca_delta(0.0, 0.0, 1.0) - 1.0 / 1.5).abs() < 1e-12);
+        // never drives α negative
+        assert_eq!(sdca_delta(5.0, 0.3, 1.0), -0.3);
+        // already-satisfied example with α = 0 stays put or decreases to 0
+        assert_eq!(sdca_delta(2.0, 0.0, 1.0).max(0.0), 0.0);
+    }
+
+    #[test]
+    fn dual_feasibility_maintained() {
+        let ds = synth::quick(100, 20, 6, 70);
+        let obj = Objective::new(1e-1, crate::loss::Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 10,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let cocoa = CoCoA::default();
+        let (_, trace) = cocoa.train(&ctx);
+        assert_eq!(trace.records.len(), 10);
+        // objective stays finite and eventually below the zero-model value
+        let f_zero = obj.value_from(&vec![0.0; 20], cluster.loss_pass(obj.loss, &vec![0.0; 20]));
+        assert!(trace.best_f() < f_zero);
+    }
+
+    #[test]
+    fn single_node_sdca_approaches_optimum() {
+        // P = 1: plain SDCA, must converge to the primal optimum
+        let ds = synth::quick(300, 25, 6, 71);
+        let obj = Objective::new(1e-1, crate::loss::Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let cluster = cluster_from(&ds, 1);
+        let ctx = TrainContext {
+            max_outer: 250,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = CoCoA::default().train(&ctx);
+        let rel = (trace.best_f() - fs) / fs.abs();
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn converges_multinode_but_slower_with_more_nodes() {
+        // §4.5/§4.7: CoCoA degrades as P grows (averaging dilutes the
+        // local progress). The effect shows in the *tail* of the run, so
+        // compare the iteration count needed to reach a fixed gap.
+        let ds = synth::quick(480, 30, 8, 72);
+        let obj = Objective::new(1e-1, crate::loss::Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let thr = fs * 1.01;
+        let iters_to_thr = |p: usize| {
+            let cluster = cluster_from(&ds, p);
+            let ctx = TrainContext {
+                max_outer: 200,
+                f_stop: Some(thr),
+                ..TrainContext::new(&cluster, obj)
+            };
+            let (_, t) = CoCoA::default().train(&ctx);
+            (t.records.len(), t.best_f())
+        };
+        let (i1, f1) = iters_to_thr(1);
+        let (i16, _f16) = iters_to_thr(16);
+        assert!(f1 <= thr, "P=1 never reached threshold: {f1} vs {thr}");
+        assert!(i1 <= i16, "P=1 took {i1}, P=16 took {i16}");
+    }
+
+    #[test]
+    fn one_comm_pass_per_outer() {
+        let ds = synth::quick(80, 16, 6, 73);
+        let obj = Objective::new(1e-1, crate::loss::Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 5,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = CoCoA::default().train(&ctx);
+        let per_iter: Vec<f64> = trace
+            .records
+            .windows(2)
+            .map(|w| w[1].comm_passes - w[0].comm_passes)
+            .collect();
+        assert!(per_iter.iter().all(|&c| (c - 1.0).abs() < 1e-9), "{per_iter:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_squared_hinge() {
+        let ds = synth::quick(40, 10, 4, 74);
+        let obj = Objective::new(1e-1, crate::loss::Loss::Logistic);
+        let cluster = cluster_from(&ds, 2);
+        let ctx = TrainContext::new(&cluster, obj);
+        CoCoA::default().train(&ctx);
+    }
+}

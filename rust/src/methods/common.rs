@@ -1,0 +1,156 @@
+//! Shared machinery: the SGD warm start of §4.3 (used by TERA, FADL and
+//! ADMM per footnote 10) and small helpers every method reuses.
+
+use crate::cluster::Cluster;
+use crate::linalg;
+use crate::objective::Objective;
+use crate::util::rng::Pcg64;
+
+/// One-pass-style SGD warm start (Agarwal et al. 2011, as used in §4.3):
+/// each node minimizes its *local* objective λ/2‖w‖² + L_p(w) with
+/// `epochs` epochs of SGD, then the weights are averaged **per feature**
+/// — feature j's average is weighted by how often j appears in each
+/// node's data, so features unseen by a node do not drag its average
+/// toward zero. Charges the SGD passes and the two aggregation passes.
+pub fn sgd_warmstart(
+    cluster: &Cluster,
+    obj: Objective,
+    epochs: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let m = cluster.m();
+    let results = cluster.map(|p, shard| {
+        let Some(data) = shard.shard() else {
+            // block-only backend: contribute nothing (zero weight, zero counts)
+            return ((vec![0.0; m], vec![0u32; m]), 0.0);
+        };
+        let n = data.n();
+        if n == 0 {
+            return ((vec![0.0; m], vec![0u32; m]), 0.0);
+        }
+        // safe step size from the local Lipschitz bound
+        let mut max_row_sq: f64 = 0.0;
+        for i in 0..n {
+            max_row_sq = max_row_sq.max(data.x.row_norm_sq(i));
+        }
+        let eta = 0.5 / (max_row_sq * obj.loss.curvature_bound() + obj.lambda).max(1e-12);
+        let mut w = vec![0.0; m];
+        let mut rng = Pcg64::with_stream(seed, p as u64);
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let z = data.x.row_dot(i, &w);
+                let dz = data.c[i] * obj.loss.dz(z, data.y[i]);
+                // w ← (1 − ηλ)w − η·dz·x_i
+                linalg::scale(1.0 - eta * obj.lambda, &mut w);
+                data.x.row_axpy(i, -eta * dz, &mut w);
+            }
+        }
+        let counts = shard.feature_counts();
+        ((w, counts), epochs as f64 * 2.0 * shard.nnz() as f64)
+    });
+
+    // per-feature weighted average: two m-vector AllReduce passes
+    let mut weighted: Vec<Vec<f64>> = Vec::with_capacity(results.len());
+    let mut counts: Vec<Vec<f64>> = Vec::with_capacity(results.len());
+    for (w, c) in results {
+        let cf: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+        let wv: Vec<f64> = w.iter().zip(&cf).map(|(wj, cj)| wj * cj).collect();
+        weighted.push(wv);
+        counts.push(cf);
+    }
+    let num = cluster.allreduce(weighted);
+    let den = cluster.allreduce(counts);
+    num.iter()
+        .zip(&den)
+        .map(|(&n, &d)| if d > 0.0 { n / d } else { 0.0 })
+        .collect()
+}
+
+/// Power-iteration estimate of the largest eigenvalue of the *data*
+/// Hessian Σ c·l''·x xᵀ at w (used by ADMM-Analytic's ρ formula).
+/// Charges the Hv passes it performs.
+pub fn estimate_hessian_norm(
+    cluster: &Cluster,
+    obj: Objective,
+    w: &[f64],
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let margins = cluster.margins_pass(w);
+    let mut rng = Pcg64::new(seed);
+    let mut v: Vec<f64> = (0..w.len()).map(|_| rng.normal()).collect();
+    let nv = linalg::norm(&v).max(1e-300);
+    linalg::scale(1.0 / nv, &mut v);
+    let mut eig = 0.0;
+    for _ in 0..iters {
+        let hv = cluster.hvp_pass(obj.loss, &margins, &v);
+        eig = linalg::dot(&v, &hv);
+        let n = linalg::norm(&hv);
+        if n <= 1e-300 {
+            return 0.0;
+        }
+        v = hv;
+        linalg::scale(1.0 / n, &mut v);
+    }
+    eig.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::tests::cluster_from;
+    use crate::data::synth;
+    use crate::loss::Loss;
+    use crate::objective::{Shard, SparseShard};
+
+    #[test]
+    fn warmstart_beats_zero_init() {
+        let ds = synth::quick(400, 60, 10, 17);
+        let cluster = cluster_from(&ds, 4);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let w = sgd_warmstart(&cluster, obj, 5, 1);
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let (f_warm, _) = obj.eval(&[&whole], &w);
+        let (f_zero, _) = obj.eval(&[&whole], &vec![0.0; 60]);
+        assert!(f_warm < f_zero, "{f_warm} !< {f_zero}");
+    }
+
+    #[test]
+    fn warmstart_charges_clock() {
+        let ds = synth::quick(100, 30, 8, 18);
+        let cluster = cluster_from(&ds, 4);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        sgd_warmstart(&cluster, obj, 5, 1);
+        let clock = cluster.clock();
+        assert!(clock.compute_units > 0.0);
+        assert_eq!(clock.comm_passes, 2.0); // weighted sum + counts
+    }
+
+    #[test]
+    fn warmstart_deterministic() {
+        let ds = synth::quick(100, 30, 8, 19);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let a = sgd_warmstart(&cluster_from(&ds, 4), obj, 3, 7);
+        let b = sgd_warmstart(&cluster_from(&ds, 4), obj, 3, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hessian_norm_estimate_positive_and_bounded() {
+        let ds = synth::quick(120, 25, 6, 20);
+        let cluster = cluster_from(&ds, 4);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let w = vec![0.0; 25];
+        let eig = estimate_hessian_norm(&cluster, obj, &w, 15, 3);
+        assert!(eig > 0.0);
+        // crude upper bound: 2·Σ‖x_i‖² for squared hinge
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let mut bound = 0.0;
+        for i in 0..ds.n() {
+            bound += 2.0 * whole.data.x.row_norm_sq(i);
+        }
+        assert!(eig <= bound, "{eig} > {bound}");
+    }
+}

@@ -1,0 +1,445 @@
+//! FADL — Function Approximation based Distributed Learning
+//! (Algorithm 2, the paper's contribution).
+//!
+//! Per outer iteration r:
+//!   1. distributed gradient pass → g^r (1 AllReduce); by-product
+//!      z_i = w^r·x_i cached per node;
+//!   2. stop when ‖g^r‖ ≤ ε_g‖g⁰‖;
+//!   3. every node builds f̂_p (gradient-consistent, §3.2) and runs k̂
+//!      iterations of the inner optimizer `M` from w^r → w_p;
+//!   4. d^r = convex combination of {d_p = w_p − w^r} (1 AllReduce);
+//!   5. one pass computes e_i = d^r·x_i;
+//!   6. Armijo–Wolfe line search over cached (z, e): scalar rounds only;
+//!   7. w^{r+1} = w^r + t·d^r.
+//!
+//! Communication: exactly 2 m-vector passes per outer iteration
+//! (Appendix A, Table 3's c3 = 2), which is the whole point.
+
+use std::time::Instant;
+
+use super::{common, TrainContext, Trainer};
+use crate::approx::{self, ApproxKind, BfgsCurvature};
+use crate::linalg;
+use crate::metrics::Trace;
+use crate::optim::linesearch::LineSearch;
+use crate::optim::{self};
+
+/// How {d_p} are combined into d^r (any convex combination preserves
+/// the angle condition — §3.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Combiner {
+    /// uniform average (the default; matches the paper's experiments)
+    Average,
+    /// weight node p by its example count n_p
+    ByExamples,
+}
+
+/// FADL configuration.
+#[derive(Clone, Debug)]
+pub struct Fadl {
+    pub approx: ApproxKind,
+    /// inner optimizer `M` name (see [`crate::optim::by_name`])
+    pub inner: String,
+    /// inner iterations k̂ per outer iteration (Lemma 3's constant)
+    pub k_hat: usize,
+    pub combiner: Combiner,
+    /// run the §4.3 SGD warm start before iterating (footnote 10)
+    pub warm_start: bool,
+    pub warm_start_epochs: usize,
+    pub seed: u64,
+    /// safeguard: if the combined direction fails −g·d > 0 (cannot
+    /// happen in exact arithmetic, Lemma 5), fall back to −g
+    pub descent_safeguard: bool,
+}
+
+impl Default for Fadl {
+    fn default() -> Self {
+        Fadl {
+            approx: ApproxKind::Quadratic,
+            inner: "tron".into(),
+            k_hat: 10,
+            combiner: Combiner::Average,
+            warm_start: true,
+            warm_start_epochs: 5,
+            seed: 0xFAD1,
+            descent_safeguard: true,
+        }
+    }
+}
+
+impl Trainer for Fadl {
+    fn label(&self) -> String {
+        format!("fadl-{}", self.approx.name())
+    }
+
+    fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let p = cluster.p();
+        let m = cluster.m();
+        assert!(
+            optim::by_name(&self.inner).is_some(),
+            "unknown inner optimizer {:?}",
+            self.inner
+        );
+        let mut trace = Trace::new(&self.label(), "", p);
+        let wall = Instant::now();
+
+        let mut w = if self.warm_start {
+            common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
+        } else {
+            ctx.w0.clone()
+        };
+
+        // per-node BFGS curvature state (only used by ApproxKind::Bfgs)
+        let mut bfgs: Vec<BfgsCurvature> = vec![BfgsCurvature::default(); p];
+        let mut prev: Option<(Vec<f64>, Vec<f64>, Vec<Vec<f64>>)> = None; // (w, ∇L, ∇L_p per node)
+        let mut g0_norm = None;
+        // adaptive inner trust radius: the squared hinge is piecewise
+        // quadratic, so the local models are only trustworthy within the
+        // region where the anchor's active set is representative; the
+        // line search measures that region (t·‖d‖) and we carry it into
+        // the next iteration's inner TRON.
+        let mut trust_radius: Option<f64> = None;
+
+        for r in 0..ctx.max_outer {
+            // ---- step 1: distributed gradient (by-product: margins) ----
+            let (loss_sum, data_grad, margins, local_grads) =
+                cluster.gradient_pass(obj.loss, &w);
+            let f = obj.value_from(&w, loss_sum);
+            let mut g = data_grad.clone();
+            obj.finish_grad(&w, &mut g);
+            let gnorm = linalg::norm(&g);
+            let g0 = *g0_norm.get_or_insert(gnorm);
+
+            trace.push(
+                r,
+                &cluster.clock(),
+                &cluster.cost,
+                wall.elapsed().as_secs_f64(),
+                f,
+                gnorm,
+                ctx.eval_auprc(&w),
+            );
+
+            // ---- step 2: stopping rules ----
+            if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
+                break;
+            }
+
+            // ---- BFGS cross-iteration curvature update ----
+            if self.approx == ApproxKind::Bfgs {
+                if let Some((w_prev, dg_prev, lg_prev)) = &prev {
+                    let s = linalg::sub(&w, w_prev);
+                    for node in 0..p {
+                        // y = Δ[∇(L − L_p)] for this node
+                        let mut y = linalg::sub(&data_grad, dg_prev);
+                        let dl = linalg::sub(&local_grads[node], &lg_prev[node]);
+                        linalg::axpy(-1.0, &dl, &mut y);
+                        bfgs[node].update(&s, &y);
+                    }
+                }
+                prev = Some((w.clone(), data_grad.clone(), local_grads.clone()));
+            }
+
+            // ---- steps 3–7: local inner optimization on f̂_p ----
+            let kind = self.approx;
+            let k_hat = self.k_hat;
+            let w_anchor = w.clone();
+            let g_full = g.clone();
+            let inner: Box<dyn optim::InnerOptimizer> = if self.inner == "tron" {
+                Box::new(crate::optim::tron::Tron {
+                    init_radius: trust_radius,
+                    ..Default::default()
+                })
+            } else {
+                optim::by_name(&self.inner).unwrap()
+            };
+            let node_results = cluster.map(|node, shard| {
+                let ctx_p = approx::ApproxContext {
+                    shard,
+                    loss: obj.loss,
+                    lambda: obj.lambda,
+                    p_nodes: p as f64,
+                    anchor: w_anchor.clone(),
+                    full_grad: g_full.clone(),
+                    local_grad: local_grads[node].clone(),
+                    anchor_margins: margins[node].clone(),
+                };
+                let mut fp = approx::build(kind, ctx_p, Some(&bfgs[node]));
+                let result = inner.minimize(fp.as_mut(), k_hat);
+                let units = fp.passes() * 2.0 * shard.nnz() as f64;
+                ((result.w, shard.n()), units)
+            });
+
+            // ---- step 8: convex combination of directions (AllReduce) ----
+            let total_n: usize = node_results.iter().map(|(_, n)| n).sum();
+            let parts: Vec<Vec<f64>> = node_results
+                .into_iter()
+                .map(|(wp, np)| {
+                    let coef = match self.combiner {
+                        Combiner::Average => 1.0 / p as f64,
+                        Combiner::ByExamples => np as f64 / total_n.max(1) as f64,
+                    };
+                    let mut d = linalg::sub(&wp, &w);
+                    linalg::scale(coef, &mut d);
+                    d
+                })
+                .collect();
+            let mut d = cluster.allreduce(parts);
+
+            // ---- descent safeguard (floating point only) ----
+            let mut gd = linalg::dot(&g, &d);
+            if gd >= 0.0 {
+                if !self.descent_safeguard {
+                    break;
+                }
+                d = g.iter().map(|&x| -x).collect();
+                gd = -linalg::dot(&g, &g);
+            }
+
+            // ---- step 9: e_i = d·x_i (one pass, no communication) ----
+            let dirs = cluster.margins_pass(&d);
+
+            // ---- step 10: distributed Armijo–Wolfe line search ----
+            let w_dot_d = linalg::dot(&w, &d);
+            let d_dot_d = linalg::dot(&d, &d);
+            let ls = LineSearch::default();
+            let res = ls.search(f, gd, |t| {
+                let (phi_data, dphi_data) =
+                    cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+                // add the analytically-known regularizer part
+                let reg = 0.5
+                    * obj.lambda
+                    * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
+                let dreg = obj.lambda * (w_dot_d + t * d_dot_d);
+                (phi_data + reg, dphi_data + dreg)
+            });
+
+            // ---- step 11 ----
+            linalg::axpy(res.t, &d, &mut w);
+            // grow/shrink the inner region toward twice the accepted
+            // step length (doubling lets a too-small radius recover)
+            let step_norm = res.t * linalg::norm(&d);
+            trust_radius = Some(match trust_radius {
+                Some(prev_r) => (2.0 * step_norm).min(4.0 * prev_r).max(prev_r * 0.25),
+                None => 2.0 * step_norm,
+            }
+            .max(1e-10));
+            cluster.charge_compute(2.0 * m as f64);
+        }
+        (w, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::tests::cluster_from;
+    use crate::data::synth;
+    use crate::loss::Loss;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    fn reference_optimum(ds: &crate::data::Dataset, obj: Objective) -> (Vec<f64>, f64) {
+        // near-exact optimum via FADL with P=1 (then f̂ ≈ f) many iters
+        let cluster = cluster_from(ds, 1);
+        let ctx = TrainContext {
+            max_outer: 200,
+            eps_g: 1e-12,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let fadl = Fadl {
+            warm_start: false,
+            k_hat: 30,
+            ..Default::default()
+        };
+        let (w, trace) = fadl.train(&ctx);
+        (w, trace.final_f())
+    }
+
+    #[test]
+    fn converges_to_single_machine_optimum() {
+        let ds = synth::quick(600, 40, 8, 42);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let (_, f_star) = reference_optimum(&ds, obj);
+        for p in [2usize, 4, 8] {
+            let cluster = cluster_from(&ds, p);
+            let ctx = TrainContext {
+                max_outer: 60,
+                eps_g: 1e-10,
+                ..TrainContext::new(&cluster, obj)
+            };
+            let (_, trace) = Fadl::default().train(&ctx);
+            let rel = (trace.final_f() - f_star) / f_star.abs();
+            assert!(rel < 1e-5, "P={p}: rel gap {rel}");
+        }
+    }
+
+    #[test]
+    fn monotone_descent_every_iteration() {
+        // Theorem 2: FADL is a monotone descent method (unlike the dual
+        // baselines) — every accepted step lowers f.
+        let ds = synth::quick(400, 30, 8, 43);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 25,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = Fadl::default().train(&ctx);
+        for pair in trace.records.windows(2) {
+            assert!(
+                pair[1].f <= pair[0].f + 1e-10,
+                "iter {}: {} > {}",
+                pair[1].iter,
+                pair[1].f,
+                pair[0].f
+            );
+        }
+    }
+
+    #[test]
+    fn all_approximations_converge() {
+        let ds = synth::quick(400, 25, 6, 44);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let (_, f_star) = reference_optimum(&ds, obj);
+        for kind in [
+            ApproxKind::Linear,
+            ApproxKind::Hybrid,
+            ApproxKind::Quadratic,
+            ApproxKind::Nonlinear,
+            ApproxKind::Bfgs,
+        ] {
+            let cluster = cluster_from(&ds, 4);
+            let ctx = TrainContext {
+                max_outer: 80,
+                eps_g: 1e-10,
+                ..TrainContext::new(&cluster, obj)
+            };
+            let fadl = Fadl {
+                approx: kind,
+                ..Default::default()
+            };
+            let (_, trace) = fadl.train(&ctx);
+            let rel = (trace.final_f() - f_star) / f_star.abs();
+            assert!(rel < 1e-4, "{kind:?}: rel gap {rel}");
+        }
+    }
+
+    #[test]
+    fn glrc_observed_on_trace() {
+        // global linear rate: the gap shrinks at least geometrically on
+        // average — check gap halves over every 8 iterations
+        let ds = synth::quick(480, 30, 8, 45);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let (_, f_star) = reference_optimum(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 24,
+            eps_g: 0.0,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let fadl = Fadl {
+            warm_start: false,
+            ..Default::default()
+        };
+        let (_, trace) = fadl.train(&ctx);
+        let gap = |i: usize| (trace.records[i].f - f_star).max(1e-16);
+        let n = trace.records.len();
+        assert!(n >= 16, "trace too short: {n}");
+        assert!(gap(8) < 0.6 * gap(0), "{} vs {}", gap(8), gap(0));
+        assert!(gap(15) < 0.6 * gap(7));
+    }
+
+    #[test]
+    fn two_comm_passes_per_outer_iteration() {
+        // Table 3: c3 = 2 for FADL (gradient AllReduce + direction
+        // AllReduce); warm start adds its own 2 once.
+        let ds = synth::quick(200, 20, 6, 46);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 5,
+            eps_g: 0.0,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let fadl = Fadl {
+            warm_start: false,
+            ..Default::default()
+        };
+        let (_, trace) = fadl.train(&ctx);
+        let per_iter: Vec<f64> = trace
+            .records
+            .windows(2)
+            .map(|w| w[1].comm_passes - w[0].comm_passes)
+            .collect();
+        assert!(
+            per_iter.iter().all(|&c| (c - 2.0).abs() < 1e-9),
+            "{per_iter:?}"
+        );
+    }
+
+    #[test]
+    fn fewer_nodes_steeper_rate() {
+        // §4.7.1: the approximation tightens as P shrinks, so P = 2
+        // should need no more iterations than P = 8 to reach a threshold
+        let ds = synth::quick(480, 30, 8, 47);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let (_, f_star) = reference_optimum(&ds, obj);
+        let thr = f_star * 1.001;
+        let iters_for = |p: usize| {
+            let cluster = cluster_from(&ds, p);
+            let ctx = TrainContext {
+                max_outer: 100,
+                eps_g: 1e-12,
+                f_stop: Some(thr),
+                ..TrainContext::new(&cluster, obj)
+            };
+            let (_, trace) = Fadl::default().train(&ctx);
+            trace.records.len()
+        };
+        let i2 = iters_for(2);
+        let i8 = iters_for(8);
+        assert!(i2 <= i8 + 1, "P=2 took {i2}, P=8 took {i8}");
+    }
+
+    #[test]
+    fn svrg_inner_converges() {
+        // §3.5: the parallel-SGD instantiation still converges
+        let ds = synth::quick(360, 25, 6, 48);
+        let obj = Objective::new(1e-1, Loss::SquaredHinge);
+        let (_, f_star) = reference_optimum(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 60,
+            eps_g: 1e-10,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let fadl = super::super::by_name("fadl-svrg").unwrap();
+        let (_, trace) = fadl.train(&ctx);
+        let rel = (trace.final_f() - f_star) / f_star.abs();
+        // stochastic inner steps converge more slowly than TRON; this is
+        // a convergence certificate, not a rate claim (§3.5)
+        assert!(rel < 1e-2, "rel gap {rel}");
+    }
+
+    #[test]
+    fn auprc_improves_during_training() {
+        let ds = synth::quick(400, 40, 8, 49);
+        let (train, test) = ds.split(0.25, 7);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_from(&train, 4);
+        let ctx = TrainContext {
+            max_outer: 20,
+            test_set: Some(&test),
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, trace) = Fadl::default().train(&ctx);
+        let first = trace.records.first().unwrap().auprc;
+        let last = trace.records.last().unwrap().auprc;
+        // soft boundary noise caps the reachable AUPRC; converged training
+        // may trade a little test AUPRC for train objective (mild overfit)
+        assert!(last > first - 0.05, "AUPRC {first} → {last}");
+        assert!(last > 0.6, "final AUPRC {last}");
+    }
+}

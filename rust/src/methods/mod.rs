@@ -1,0 +1,157 @@
+//! Distributed training methods: FADL (the paper's contribution,
+//! Algorithm 2) and the four baselines of §4.2, all driving the same
+//! simulated [`crate::cluster::Cluster`] so communication passes and
+//! simulated time are directly comparable.
+//!
+//! * [`fadl::Fadl`] — Function-Approximation-based Distributed Learning
+//!   with any §3.2 approximation and any inner optimizer `M`.
+//! * [`tera::Tera`] — the Terascale SQM baseline (Agarwal et al. 2011):
+//!   distributed gradient + TRON or L-BFGS outer, per-feature-averaged
+//!   one-pass SGD warm start.
+//! * [`admm::Admm`] — consensus-form ADMM (Boyd et al. 2011; Zhang et
+//!   al. 2012) with the Adap / Analytic / Search ρ policies of §4.4.
+//! * [`cocoa::CoCoA`] — communication-efficient dual coordinate ascent
+//!   (Jaggi et al. 2014) with local SDCA epochs.
+//! * [`ssz::Ssz`] — the approximate-Newton method of Sharir–Srebro–
+//!   Zhang (DANE-style), μ = 3λ, η = 1, fixed steps, non-monotone.
+//! * [`fadl_feature::FadlFeature`] — the §5 feature-partitioning
+//!   extension with gradient sub-consistency.
+
+pub mod admm;
+pub mod cocoa;
+pub mod common;
+pub mod fadl;
+pub mod fadl_feature;
+pub mod ssz;
+pub mod tera;
+
+use crate::cluster::Cluster;
+use crate::data::Dataset;
+use crate::metrics::Trace;
+use crate::objective::Objective;
+
+/// Everything a method needs to run: the cluster, the objective, the
+/// stopping rules and the (optional) held-out set for AUPRC traces.
+pub struct TrainContext<'a> {
+    pub cluster: &'a Cluster,
+    pub objective: Objective,
+    /// held-out data for the AUPRC column of the trace (evaluated
+    /// outside the simulated clock — it is instrumentation, not work)
+    pub test_set: Option<&'a Dataset>,
+    /// outer-iteration cap
+    pub max_outer: usize,
+    /// relative gradient-norm stop: ‖g^r‖ ≤ eps_g·‖g⁰‖ (Algorithm 2)
+    pub eps_g: f64,
+    /// optional objective-value stop (used by figure drivers)
+    pub f_stop: Option<f64>,
+    /// initial point (pre-warm-start)
+    pub w0: Vec<f64>,
+}
+
+impl<'a> TrainContext<'a> {
+    pub fn new(cluster: &'a Cluster, objective: Objective) -> TrainContext<'a> {
+        let m = cluster.m();
+        TrainContext {
+            cluster,
+            objective,
+            test_set: None,
+            max_outer: 100,
+            eps_g: 1e-8,
+            f_stop: None,
+            w0: vec![0.0; m],
+        }
+    }
+
+    pub(crate) fn eval_auprc(&self, w: &[f64]) -> f64 {
+        match self.test_set {
+            Some(ds) => crate::metrics::auprc::auprc_of_model(ds, w),
+            None => f64::NAN,
+        }
+    }
+
+    pub(crate) fn should_stop_f(&self, f: f64) -> bool {
+        self.f_stop.map(|thr| f <= thr).unwrap_or(false)
+    }
+}
+
+/// A distributed training method.
+pub trait Trainer {
+    /// Method label used in traces and figure legends.
+    fn label(&self) -> String;
+
+    /// Run to termination; returns the final weights and the trace.
+    fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace);
+}
+
+/// Construct a method by config name (see `configs/`).
+pub fn by_name(name: &str) -> Option<Box<dyn Trainer>> {
+    match name {
+        "fadl" | "fadl-quadratic" => Some(Box::new(fadl::Fadl::default())),
+        "fadl-linear" => Some(Box::new(fadl::Fadl {
+            approx: crate::approx::ApproxKind::Linear,
+            ..Default::default()
+        })),
+        "fadl-hybrid" => Some(Box::new(fadl::Fadl {
+            approx: crate::approx::ApproxKind::Hybrid,
+            ..Default::default()
+        })),
+        "fadl-nonlinear" => Some(Box::new(fadl::Fadl {
+            approx: crate::approx::ApproxKind::Nonlinear,
+            ..Default::default()
+        })),
+        "fadl-bfgs" => Some(Box::new(fadl::Fadl {
+            approx: crate::approx::ApproxKind::Bfgs,
+            ..Default::default()
+        })),
+        "fadl-svrg" => Some(Box::new(fadl::Fadl {
+            approx: crate::approx::ApproxKind::Linear,
+            inner: "svrg".into(),
+            k_hat: 3,
+            ..Default::default()
+        })),
+        "tera" | "tera-tron" => Some(Box::new(tera::Tera::default())),
+        "tera-lbfgs" => Some(Box::new(tera::Tera {
+            solver: tera::OuterSolver::Lbfgs,
+            ..Default::default()
+        })),
+        "admm" | "admm-adap" => Some(Box::new(admm::Admm::default())),
+        "admm-analytic" => Some(Box::new(admm::Admm {
+            rho_policy: admm::RhoPolicy::Analytic,
+            ..Default::default()
+        })),
+        "admm-search" => Some(Box::new(admm::Admm {
+            rho_policy: admm::RhoPolicy::Search,
+            ..Default::default()
+        })),
+        "cocoa" => Some(Box::new(cocoa::CoCoA::default())),
+        "ssz" => Some(Box::new(ssz::Ssz::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_paper_methods() {
+        for n in [
+            "fadl",
+            "fadl-linear",
+            "fadl-hybrid",
+            "fadl-nonlinear",
+            "fadl-bfgs",
+            "fadl-svrg",
+            "tera",
+            "tera-lbfgs",
+            "admm",
+            "admm-analytic",
+            "admm-search",
+            "cocoa",
+            "ssz",
+        ] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("sgd-only").is_none());
+    }
+}

@@ -1,0 +1,406 @@
+//! TERA — the Terascale SQM baseline (Agarwal, Chapelle, Dudík,
+//! Langford 2011; Chu et al. 2006).
+//!
+//! Distributed computation is used *only* for function / gradient /
+//! Hessian-vector values; the optimization logic itself is replicated
+//! deterministically on every node. Warm start per §4.3: five epochs of
+//! SGD on each node's local objective, averaged per feature. Outer
+//! solver: TRON (the paper's better variant, Fig. 1) or L-BFGS (the
+//! original Agarwal et al. choice).
+//!
+//! Communication: one m-vector AllReduce per gradient and one per CG
+//! product (Table 3's c3 = 1 per inner step) — cheap compute per pass,
+//! many passes: the exact trade-off FADL attacks.
+
+use std::time::Instant;
+
+use super::{common, TrainContext, Trainer};
+use crate::linalg;
+use crate::metrics::Trace;
+use crate::optim::linesearch::LineSearch;
+
+/// Outer solver choice (Fig. 1 compares the two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OuterSolver {
+    Tron,
+    Lbfgs,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tera {
+    pub solver: OuterSolver,
+    /// CG iteration cap per TRON step
+    pub max_cg: usize,
+    pub cg_tol: f64,
+    /// L-BFGS memory
+    pub memory: usize,
+    pub warm_start: bool,
+    pub warm_start_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for Tera {
+    fn default() -> Self {
+        Tera {
+            solver: OuterSolver::Tron,
+            max_cg: 10,
+            cg_tol: 0.1,
+            memory: 10,
+            warm_start: true,
+            warm_start_epochs: 5,
+            seed: 0x7e4a,
+        }
+    }
+}
+
+impl Trainer for Tera {
+    fn label(&self) -> String {
+        match self.solver {
+            OuterSolver::Tron => "tera-tron".into(),
+            OuterSolver::Lbfgs => "tera-lbfgs".into(),
+        }
+    }
+
+    fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        match self.solver {
+            OuterSolver::Tron => self.train_tron(ctx),
+            OuterSolver::Lbfgs => self.train_lbfgs(ctx),
+        }
+    }
+}
+
+impl Tera {
+    fn initial_w(&self, ctx: &TrainContext) -> Vec<f64> {
+        if self.warm_start {
+            common::sgd_warmstart(ctx.cluster, ctx.objective, self.warm_start_epochs, self.seed)
+        } else {
+            ctx.w0.clone()
+        }
+    }
+
+    /// Distributed TRON: trust-region Newton where every f/g/Hv is a
+    /// cluster operation.
+    fn train_tron(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let mut trace = Trace::new(&self.label(), "", cluster.p());
+        let wall = Instant::now();
+        let mut w = self.initial_w(ctx);
+        let mut g0_norm = None;
+        let mut radius: Option<f64> = None;
+
+        for r in 0..ctx.max_outer {
+            let (loss_sum, data_grad, margins, _) = cluster.gradient_pass(obj.loss, &w);
+            let f = obj.value_from(&w, loss_sum);
+            let mut g = data_grad;
+            obj.finish_grad(&w, &mut g);
+            let gnorm = linalg::norm(&g);
+            let g0 = *g0_norm.get_or_insert(gnorm);
+            trace.push(
+                r,
+                &cluster.clock(),
+                &cluster.cost,
+                wall.elapsed().as_secs_f64(),
+                f,
+                gnorm,
+                ctx.eval_auprc(&w),
+            );
+            if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
+                break;
+            }
+            let delta = *radius.get_or_insert(gnorm);
+
+            // ---- Steihaug CG with distributed Hv (1 AllReduce each) ----
+            let m = w.len();
+            let mut s = vec![0.0; m];
+            let mut res: Vec<f64> = g.iter().map(|&x| -x).collect();
+            let mut dvec = res.clone();
+            let r0 = linalg::norm(&res);
+            let mut rr = r0 * r0;
+            let mut hit_boundary = false;
+            for _ in 0..self.max_cg {
+                if rr.sqrt() <= self.cg_tol * r0 {
+                    break;
+                }
+                let mut hd = cluster.hvp_pass(obj.loss, &margins, &dvec);
+                linalg::axpy(obj.lambda, &dvec, &mut hd); // + λ·d (regularizer)
+                let dhd = linalg::dot(&dvec, &hd);
+                if dhd <= 0.0 {
+                    hit_boundary = true;
+                    break;
+                }
+                let alpha = rr / dhd;
+                let mut s_next = s.clone();
+                linalg::axpy(alpha, &dvec, &mut s_next);
+                if linalg::norm(&s_next) >= delta {
+                    // walk to the boundary
+                    let dd = linalg::dot(&dvec, &dvec);
+                    let sd = linalg::dot(&s, &dvec);
+                    let ss = linalg::dot(&s, &s);
+                    let disc = (sd * sd + dd * (delta * delta - ss)).max(0.0);
+                    let tau = (-sd + disc.sqrt()) / dd.max(1e-300);
+                    linalg::axpy(tau, &dvec, &mut s);
+                    hit_boundary = true;
+                    break;
+                }
+                s = s_next;
+                linalg::axpy(-alpha, &hd, &mut res);
+                let rr_new = linalg::dot(&res, &res);
+                let beta = rr_new / rr;
+                rr = rr_new;
+                linalg::axpby(1.0, &res, beta, &mut dvec);
+            }
+
+            // predicted reduction (needs one more Hv)
+            let mut hs = cluster.hvp_pass(obj.loss, &margins, &s);
+            linalg::axpy(obj.lambda, &s, &mut hs);
+            let predicted = -(linalg::dot(&g, &s) + 0.5 * linalg::dot(&s, &hs));
+
+            // actual reduction: one data pass, scalar aggregation only
+            let mut w_try = w.clone();
+            linalg::accum(&mut w_try, &s);
+            let f_try = obj.value_from(&w_try, cluster.loss_pass(obj.loss, &w_try));
+            let rho = if predicted.abs() < 1e-300 {
+                1.0
+            } else {
+                (f - f_try) / predicted
+            };
+            if rho > 1e-4 {
+                w = w_try;
+                if rho > 0.75 && hit_boundary {
+                    radius = Some(delta * 2.0);
+                }
+            } else {
+                radius = Some(delta * 0.25);
+            }
+        }
+        (w, trace)
+    }
+
+    /// Distributed L-BFGS with the cached-margin Armijo–Wolfe search.
+    fn train_lbfgs(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let mut trace = Trace::new(&self.label(), "", cluster.p());
+        let wall = Instant::now();
+        let mut w = self.initial_w(ctx);
+        let mut g0_norm = None;
+        let mut history: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::new(); // (s, y, 1/yᵀs)
+        let mut gamma = 1.0;
+        let mut prev: Option<(Vec<f64>, Vec<f64>)> = None; // (w, g)
+
+        for r in 0..ctx.max_outer {
+            let (loss_sum, data_grad, margins, _) = cluster.gradient_pass(obj.loss, &w);
+            let f = obj.value_from(&w, loss_sum);
+            let mut g = data_grad;
+            obj.finish_grad(&w, &mut g);
+            let gnorm = linalg::norm(&g);
+            let g0 = *g0_norm.get_or_insert(gnorm);
+            trace.push(
+                r,
+                &cluster.clock(),
+                &cluster.cost,
+                wall.elapsed().as_secs_f64(),
+                f,
+                gnorm,
+                ctx.eval_auprc(&w),
+            );
+            if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
+                break;
+            }
+
+            if let Some((w_prev, g_prev)) = &prev {
+                let s = linalg::sub(&w, w_prev);
+                let y = linalg::sub(&g, g_prev);
+                let ys = linalg::dot(&y, &s);
+                if ys > 1e-12 * linalg::dot(&s, &s).max(1e-300) {
+                    gamma = ys / linalg::dot(&y, &y).max(1e-300);
+                    history.push((s, y, 1.0 / ys));
+                    if history.len() > self.memory {
+                        history.remove(0);
+                    }
+                }
+            }
+            prev = Some((w.clone(), g.clone()));
+
+            // two-loop on replicated state (no communication)
+            let mut q = g.clone();
+            let mut alphas = Vec::with_capacity(history.len());
+            for (s, y, rho) in history.iter().rev() {
+                let a = rho * linalg::dot(s, &q);
+                linalg::axpy(-a, y, &mut q);
+                alphas.push(a);
+            }
+            linalg::scale(gamma, &mut q);
+            for ((s, y, rho), &a) in history.iter().zip(alphas.iter().rev()) {
+                let b = rho * linalg::dot(y, &q);
+                linalg::axpy(a - b, s, &mut q);
+            }
+            let mut d: Vec<f64> = q.iter().map(|&x| -x).collect();
+            let mut gd = linalg::dot(&g, &d);
+            if gd >= 0.0 {
+                d = g.iter().map(|&x| -x).collect();
+                gd = -linalg::dot(&g, &g);
+            }
+
+            // line search over cached margins: 1 compute pass for e, then
+            // scalar rounds only
+            let dirs = cluster.margins_pass(&d);
+            let w_dot_d = linalg::dot(&w, &d);
+            let d_dot_d = linalg::dot(&d, &d);
+            let res = LineSearch::default().search(f, gd, |t| {
+                let (phi, dphi) = cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+                let reg = 0.5
+                    * obj.lambda
+                    * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
+                (phi + reg, dphi + obj.lambda * (w_dot_d + t * d_dot_d))
+            });
+            linalg::axpy(res.t, &d, &mut w);
+        }
+        (w, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::tests::cluster_from;
+    use crate::data::synth;
+    use crate::loss::Loss;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    fn f_star(ds: &crate::data::Dataset, obj: Objective) -> f64 {
+        let cluster = cluster_from(ds, 1);
+        let ctx = TrainContext {
+            max_outer: 300,
+            eps_g: 1e-12,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (_, t) = Tera::default().train(&ctx);
+        t.final_f()
+    }
+
+    #[test]
+    fn tron_converges_and_matches_reference() {
+        let ds = synth::quick(500, 40, 8, 50);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 120,
+            eps_g: 1e-10,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let (w, trace) = Tera::default().train(&ctx);
+        let rel = (trace.final_f() - fs) / fs.abs();
+        assert!(rel < 1e-5, "rel {rel}");
+        // sanity: the solution actually classifies
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let (fv, _) = obj.eval(&[&whole], &w);
+        // the returned w includes one accepted step after the last trace
+        // record, so f(w) can only be equal or lower (TRON is monotone)
+        assert!(fv <= trace.final_f() + 1e-9 * fv.abs());
+    }
+
+    #[test]
+    fn lbfgs_converges() {
+        let ds = synth::quick(400, 30, 8, 51);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let fs = f_star(&ds, obj);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 200,
+            eps_g: 1e-10,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let tera = Tera {
+            solver: OuterSolver::Lbfgs,
+            ..Default::default()
+        };
+        let (_, trace) = tera.train(&ctx);
+        let rel = (trace.final_f() - fs) / fs.abs();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn iterations_insensitive_to_p() {
+        // §4.3: TERA's outer-iteration count is essentially independent
+        // of P (same optimization, same replicated state; only the warm
+        // start differs slightly). Without warm start it is *identical*.
+        let ds = synth::quick(240, 24, 6, 52);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let run = |p: usize| {
+            let cluster = cluster_from(&ds, p);
+            let ctx = TrainContext {
+                max_outer: 40,
+                eps_g: 1e-8,
+                ..TrainContext::new(&cluster, obj)
+            };
+            let tera = Tera {
+                warm_start: false,
+                ..Default::default()
+            };
+            let (_, t) = tera.train(&ctx);
+            (t.records.len(), t.final_f())
+        };
+        let (i2, f2) = run(2);
+        let (i8, f8) = run(8);
+        assert_eq!(i2, i8);
+        assert!((f2 - f8).abs() < 1e-6 * f2.abs());
+    }
+
+    #[test]
+    fn comm_passes_grow_with_cg_iterations() {
+        // TERA's defining cost: ~1 AllReduce per CG product, so comm
+        // passes per outer iteration >> FADL's 2.
+        let ds = synth::quick(300, 30, 8, 53);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 4);
+        let ctx = TrainContext {
+            max_outer: 6,
+            eps_g: 0.0,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let tera = Tera {
+            warm_start: false,
+            ..Default::default()
+        };
+        let (_, trace) = tera.train(&ctx);
+        let per_iter: Vec<f64> = trace
+            .records
+            .windows(2)
+            .map(|w| w[1].comm_passes - w[0].comm_passes)
+            .collect();
+        assert!(
+            per_iter.iter().all(|&c| c >= 3.0),
+            "expected ≥3 passes/iter (grad + CG products), got {per_iter:?}"
+        );
+    }
+
+    #[test]
+    fn tron_beats_lbfgs_fig1_shape() {
+        // Fig. 1: TERA-TRON dominates TERA-LBFGS per communication pass
+        let ds = synth::quick(400, 50, 10, 54);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let budget_f = |solver: OuterSolver| {
+            let cluster = cluster_from(&ds, 4);
+            let ctx = TrainContext {
+                max_outer: 12,
+                eps_g: 1e-14,
+                ..TrainContext::new(&cluster, obj)
+            };
+            let (_, t) = Tera {
+                solver,
+                ..Default::default()
+            }
+            .train(&ctx);
+            t.final_f()
+        };
+        let f_tron = budget_f(OuterSolver::Tron);
+        let f_lbfgs = budget_f(OuterSolver::Lbfgs);
+        assert!(
+            f_tron <= f_lbfgs + 1e-12,
+            "tron {f_tron} vs lbfgs {f_lbfgs}"
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Area under the Precision–Recall curve.
+//!
+//! Computed by sorting scores descending and integrating precision over
+//! recall with the step-wise (average-precision) rule, the standard
+//! estimator for ranking classifiers. Ties are handled by processing
+//! equal scores as one block (precision evaluated after the whole
+//! block), which makes the value permutation-invariant.
+
+/// AUPRC for scores vs ±1 labels. Returns 0 when there are no
+/// positives (undefined recall), 1 when there are no negatives.
+pub fn auprc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let total_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    if total_pos == 0 {
+        return 0.0;
+    }
+    if total_pos == labels.len() {
+        return 1.0;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut area = 0.0;
+    let mut prev_recall = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        // process a tie-block of equal scores atomically
+        let mut j = i;
+        while j < idx.len() && scores[idx[j]] == scores[idx[i]] {
+            if labels[idx[j]] > 0.0 {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            j += 1;
+        }
+        let recall = tp as f64 / total_pos as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        area += (recall - prev_recall) * precision;
+        prev_recall = recall;
+        i = j;
+    }
+    area
+}
+
+/// AUPRC of a linear model w on a dataset (scores = X·w).
+pub fn auprc_of_model(ds: &crate::data::Dataset, w: &[f64]) -> f64 {
+    let mut scores = vec![0.0; ds.n()];
+    ds.x.margins_into(w, &mut scores);
+    auprc(&scores, &ds.y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_is_one() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [1.0, 1.0, -1.0, -1.0];
+        assert!((auprc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_ranking_is_low() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [1.0, 1.0, -1.0, -1.0];
+        let v = auprc(&scores, &labels);
+        assert!(v < 0.6, "{v}");
+    }
+
+    #[test]
+    fn random_scores_near_base_rate() {
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let n = 20_000;
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let labels: Vec<f64> = (0..n).map(|_| rng.label(0.3)).collect();
+        let v = auprc(&scores, &labels);
+        assert!((v - 0.3).abs() < 0.03, "{v}");
+    }
+
+    #[test]
+    fn tie_handling_is_permutation_invariant() {
+        let scores = [0.5, 0.5, 0.5, 0.1];
+        let labels_a = [1.0, -1.0, 1.0, -1.0];
+        let labels_b = [1.0, 1.0, -1.0, -1.0]; // same multiset within the tie
+        assert_eq!(auprc(&scores, &labels_a), auprc(&scores, &labels_b));
+    }
+
+    #[test]
+    fn degenerate_label_sets() {
+        assert_eq!(auprc(&[0.1, 0.2], &[-1.0, -1.0]), 0.0);
+        assert_eq!(auprc(&[0.1, 0.2], &[1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // ranking: +, -, + → AP = 1/2·(1·1 + ... ) step rule:
+        // after 1st: r=0.5, p=1 → area 0.5
+        // after 2nd: r=0.5 (no change)
+        // after 3rd: r=1.0, p=2/3 → area += 0.5·2/3
+        let scores = [0.9, 0.5, 0.3];
+        let labels = [1.0, -1.0, 1.0];
+        let want = 0.5 + 0.5 * (2.0 / 3.0);
+        assert!((auprc(&scores, &labels) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_auprc_improves_with_signal() {
+        let ds = crate::data::synth::quick(300, 40, 8, 2);
+        let zero = auprc_of_model(&ds, &vec![0.0; 40]);
+        // a planted-signal-aligned w: one perceptron epoch
+        let mut w = vec![0.0f64; 40];
+        for i in 0..ds.n() {
+            if ds.y[i] * ds.x.row_dot(i, &w) <= 0.0 {
+                ds.x.row_axpy(i, 0.1 * ds.y[i], &mut w);
+            }
+        }
+        let trained = auprc_of_model(&ds, &w);
+        assert!(trained > zero + 0.1, "{trained} vs {zero}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Evaluation metrics and convergence traces.
+//!
+//! The paper's two criteria (§4.1): relative difference to the optimal
+//! objective value, log₁₀((f − f*)/f*), and AUPRC on held-out data. The
+//! stopping rule for Figures 9–10 is "within 0.1% of the steady-state
+//! AUPRC of full, perfect training".
+
+pub mod auprc;
+pub mod trace;
+
+pub use auprc::auprc;
+pub use trace::{IterRecord, Trace};
+
+/// log₁₀((f − f*)/f*) — the y-axis of Figures 1–8. Clamped below at
+/// −16 (double-precision floor) so plots stay finite.
+pub fn log_rel_diff(f: f64, f_star: f64) -> f64 {
+    let rel = (f - f_star) / f_star.abs().max(1e-300);
+    rel.max(1e-16).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_rel_diff_scales() {
+        assert!((log_rel_diff(1.1, 1.0) - (-1.0)).abs() < 1e-9);
+        assert!((log_rel_diff(1.001, 1.0) - (-3.0)).abs() < 1e-6);
+        assert_eq!(log_rel_diff(1.0, 1.0), -16.0);
+        assert_eq!(log_rel_diff(0.9, 1.0), -16.0); // below optimum clamps
+    }
+}

@@ -1,0 +1,209 @@
+//! Convergence traces: the per-outer-iteration record every method
+//! emits, from which every figure of the paper is regenerated.
+
+use crate::cluster::SimClock;
+use crate::util::json::{arr_f64, obj, Json};
+
+/// One outer-iteration snapshot.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// cumulative m-vector communication passes (x-axis of Figs 5–6, 9)
+    pub comm_passes: f64,
+    /// cumulative simulated seconds, compute + comm (x-axis of Figs 7–8, 10)
+    pub sim_secs: f64,
+    pub sim_compute_secs: f64,
+    pub sim_comm_secs: f64,
+    /// cumulative wall-clock seconds of the native run
+    pub wall_secs: f64,
+    /// objective value f(w^r)
+    pub f: f64,
+    /// ‖g(w^r)‖
+    pub grad_norm: f64,
+    /// AUPRC on the held-out set (NaN when not evaluated)
+    pub auprc: f64,
+}
+
+/// A full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub method: String,
+    pub dataset: String,
+    pub nodes: usize,
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    pub fn new(method: &str, dataset: &str, nodes: usize) -> Trace {
+        Trace {
+            method: method.to_string(),
+            dataset: dataset.to_string(),
+            nodes,
+            records: Vec::new(),
+        }
+    }
+
+    /// Append a record built from a clock snapshot.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        iter: usize,
+        clock: &SimClock,
+        cost: &crate::cluster::CostModel,
+        wall_secs: f64,
+        f: f64,
+        grad_norm: f64,
+        auprc: f64,
+    ) {
+        self.records.push(IterRecord {
+            iter,
+            comm_passes: clock.comm_passes,
+            sim_secs: cost.units_to_secs(clock.total_units()),
+            sim_compute_secs: cost.units_to_secs(clock.compute_units),
+            sim_comm_secs: cost.units_to_secs(clock.comm_units),
+            wall_secs,
+            f,
+            grad_norm,
+            auprc,
+        });
+    }
+
+    pub fn final_f(&self) -> f64 {
+        self.records.last().map(|r| r.f).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn best_f(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.f)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// First record index reaching f ≤ threshold (monotone methods hit it
+    /// once; dual methods may oscillate so we take the first crossing).
+    pub fn first_reaching_f(&self, threshold: f64) -> Option<&IterRecord> {
+        self.records.iter().find(|r| r.f <= threshold)
+    }
+
+    /// First record whose AUPRC is within `tol` (e.g. 0.001) of the
+    /// steady-state value — the Figures 9–10 stopping rule.
+    pub fn first_reaching_auprc(&self, steady: f64, tol: f64) -> Option<&IterRecord> {
+        self.records
+            .iter()
+            .find(|r| !r.auprc.is_nan() && r.auprc >= steady * (1.0 - tol))
+    }
+
+    /// Total computation : communication cost ratio (Table 2).
+    pub fn comp_comm_ratio_at(&self, rec: &IterRecord) -> f64 {
+        if rec.sim_comm_secs == 0.0 {
+            f64::INFINITY
+        } else {
+            rec.sim_compute_secs / rec.sim_comm_secs
+        }
+    }
+
+    /// Serialize to JSON (written next to bench outputs so figures can
+    /// be re-plotted without re-running).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            (
+                "iter",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| Json::Num(r.iter as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "comm_passes",
+                arr_f64(&self.records.iter().map(|r| r.comm_passes).collect::<Vec<_>>()),
+            ),
+            (
+                "sim_secs",
+                arr_f64(&self.records.iter().map(|r| r.sim_secs).collect::<Vec<_>>()),
+            ),
+            (
+                "wall_secs",
+                arr_f64(&self.records.iter().map(|r| r.wall_secs).collect::<Vec<_>>()),
+            ),
+            (
+                "f",
+                arr_f64(&self.records.iter().map(|r| r.f).collect::<Vec<_>>()),
+            ),
+            (
+                "grad_norm",
+                arr_f64(&self.records.iter().map(|r| r.grad_norm).collect::<Vec<_>>()),
+            ),
+            (
+                "auprc",
+                arr_f64(&self.records.iter().map(|r| r.auprc).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new("fadl", "kdd2010", 8);
+        let cost = CostModel::default();
+        let mut clock = SimClock::default();
+        for i in 0..5 {
+            clock.add_compute(100.0);
+            clock.comm_pass(50.0);
+            t.push(
+                i,
+                &clock,
+                &cost,
+                i as f64 * 0.1,
+                10.0 / (i + 1) as f64,
+                1.0 / (i + 1) as f64,
+                0.5 + 0.1 * i as f64,
+            );
+        }
+        t
+    }
+
+    #[test]
+    fn records_accumulate() {
+        let t = sample_trace();
+        assert_eq!(t.records.len(), 5);
+        assert_eq!(t.records[4].comm_passes, 5.0);
+        assert!(t.records[4].sim_secs > t.records[0].sim_secs);
+        assert_eq!(t.final_f(), 2.0);
+        assert_eq!(t.best_f(), 2.0);
+    }
+
+    #[test]
+    fn stopping_rules() {
+        let t = sample_trace();
+        let r = t.first_reaching_f(5.0).unwrap();
+        assert_eq!(r.iter, 1);
+        let r2 = t.first_reaching_auprc(0.9, 0.001).unwrap();
+        assert_eq!(r2.iter, 4);
+        assert!(t.first_reaching_f(0.1).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_structure() {
+        let t = sample_trace();
+        let j = t.to_json();
+        let parsed = crate::util::json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("method").unwrap().as_str(), Some("fadl"));
+        assert_eq!(parsed.get("f").unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn comp_comm_ratio() {
+        let t = sample_trace();
+        let last = t.records.last().unwrap();
+        assert!((t.comp_comm_ratio_at(last) - 2.0).abs() < 1e-12);
+    }
+}

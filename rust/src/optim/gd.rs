@@ -1,0 +1,110 @@
+//! Plain gradient descent with Armijo backtracking — the pessimistic
+//! baseline inner `M`. Theorem 2's rate bound
+//! δ ≤ 1 − 2α(1−β)(σ/L)²cos²θ is stated for exactly this class; the
+//! ablation bench compares it against TRON to show how much the choice
+//! of `M` matters in practice.
+
+use super::{InnerOptimizer, InnerResult};
+use crate::approx::LocalApprox;
+use crate::linalg;
+
+#[derive(Clone, Debug)]
+pub struct GradientDescent {
+    pub c1: f64,
+    pub shrink: f64,
+    pub grow: f64,
+    pub max_backtracks: usize,
+}
+
+impl Default for GradientDescent {
+    fn default() -> Self {
+        GradientDescent {
+            c1: 1e-4,
+            shrink: 0.5,
+            grow: 2.0,
+            max_backtracks: 40,
+        }
+    }
+}
+
+impl InnerOptimizer for GradientDescent {
+    fn minimize(&self, approx: &mut dyn LocalApprox, k_hat: usize) -> InnerResult {
+        let mut v = approx.anchor().to_vec();
+        let (mut fv, mut g) = approx.eval(&v);
+        let mut t = 1.0;
+        let mut iters = 0;
+        for _ in 0..k_hat {
+            let gg = linalg::dot(&g, &g);
+            if gg <= 1e-28 {
+                break;
+            }
+            let mut accepted = None;
+            let mut step = t;
+            for _ in 0..self.max_backtracks {
+                let mut v_try = v.clone();
+                linalg::axpy(-step, &g, &mut v_try);
+                let (f_try, g_try) = approx.eval(&v_try);
+                if f_try <= fv - self.c1 * step * gg {
+                    accepted = Some((v_try, f_try, g_try, step));
+                    break;
+                }
+                step *= self.shrink;
+            }
+            iters += 1;
+            let Some((v_new, f_new, g_new, used)) = accepted else {
+                break;
+            };
+            v = v_new;
+            fv = f_new;
+            g = g_new;
+            // mild step growth so a too-small initial step recovers
+            t = used * self.grow;
+        }
+        InnerResult {
+            w: v,
+            value: fv,
+            iters,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Quadratic;
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut q = Quadratic::new(10, 21);
+        let res = GradientDescent::default().minimize(&mut q, 300);
+        assert!(res.value < 1e-8, "value {}", res.value);
+    }
+
+    #[test]
+    fn descent_is_monotone_in_budget() {
+        let run = |k| {
+            let mut q = Quadratic::new(8, 22);
+            GradientDescent::default().minimize(&mut q, k).value
+        };
+        assert!(run(10) <= run(2) + 1e-12);
+        assert!(run(50) <= run(10) + 1e-12);
+    }
+
+    #[test]
+    fn slower_than_tron_per_iteration() {
+        // sanity for the ablation claim: with the same tiny budget TRON
+        // reaches a much lower value than GD on an ill-conditioned problem
+        let budget = 5;
+        let mut q1 = Quadratic::new(25, 23);
+        let gd = GradientDescent::default().minimize(&mut q1, budget).value;
+        let mut q2 = Quadratic::new(25, 23);
+        let tr = super::super::tron::Tron::default()
+            .minimize(&mut q2, budget)
+            .value;
+        assert!(tr < gd, "tron {tr} vs gd {gd}");
+    }
+}

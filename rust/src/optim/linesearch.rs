@@ -1,0 +1,250 @@
+//! Armijo–Wolfe line search over cached margins (§3.4, Lemma 1).
+//!
+//! Lemma 1 shows the acceptable set {t : Armijo (4) ∧ Wolfe (5)} is the
+//! nonempty interval [t_β, t_α]. The search below brackets it starting
+//! from t = 1 (the natural first guess since d^r comes from approximate
+//! minimization), expanding forward while Wolfe fails and zooming
+//! backward when Armijo fails — the forward/backward stepping +
+//! bracketing procedure the paper describes. Each φ(t), φ'(t) evaluation
+//! is *cheap* in the distributed setting: only the scalar t moves, the
+//! nodes evaluate over cached (z_i, e_i) without touching the data
+//! matrix. The caller supplies φ as a closure so the same routine runs
+//! single-machine (tests) and distributed (cluster aggregation).
+
+/// Result of a line search.
+#[derive(Clone, Debug)]
+pub struct LineSearchResult {
+    /// the accepted step
+    pub t: f64,
+    /// φ(t) at the accepted step
+    pub value: f64,
+    /// φ evaluations consumed (each = one scalar communication round)
+    pub evals: usize,
+    /// whether both conditions were certified (false = fell back to the
+    /// best Armijo point after hitting the iteration cap)
+    pub wolfe_ok: bool,
+}
+
+/// Parameters: the paper fixes α = 1e-4, β = 0.9 (§3.4).
+#[derive(Clone, Copy, Debug)]
+pub struct LineSearch {
+    pub alpha: f64,
+    pub beta: f64,
+    pub max_expand: usize,
+    pub max_zoom: usize,
+}
+
+impl Default for LineSearch {
+    fn default() -> Self {
+        LineSearch {
+            alpha: 1e-4,
+            beta: 0.9,
+            max_expand: 20,
+            max_zoom: 30,
+        }
+    }
+}
+
+impl LineSearch {
+    /// Find t satisfying (4) and (5).
+    ///
+    /// `phi(t)` must return (φ(t), φ'(t)) where φ(t) = f(w + t·d);
+    /// `f0` = φ(0) and `g0d` = φ'(0) = gᵀd < 0.
+    pub fn search<F: FnMut(f64) -> (f64, f64)>(
+        &self,
+        f0: f64,
+        g0d: f64,
+        mut phi: F,
+    ) -> LineSearchResult {
+        assert!(
+            g0d < 0.0,
+            "line search needs a descent direction (gᵀd = {g0d})"
+        );
+        let armijo = |t: f64, ft: f64| ft <= f0 + self.alpha * t * g0d;
+        let wolfe = |dft: f64| dft >= self.beta * g0d;
+
+        let mut evals = 0;
+        // bracketing phase: expand t until the minimum is bracketed
+        let mut lo = 0.0f64;
+        let mut f_lo = f0;
+        let mut t = 1.0f64;
+        let mut prev_f = f0;
+        for _ in 0..self.max_expand {
+            let (ft, dft) = phi(t);
+            evals += 1;
+            if !armijo(t, ft) || ft >= prev_f {
+                // overshot: minimum lies in (lo, t)
+                return self.zoom(lo, f_lo, t, f0, g0d, phi, evals);
+            }
+            if wolfe(dft) {
+                return LineSearchResult {
+                    t,
+                    value: ft,
+                    evals,
+                    wolfe_ok: true,
+                };
+            }
+            if dft >= 0.0 {
+                // derivative turned positive without violating Armijo:
+                // the minimum is in (lo, t) as well
+                return self.zoom(lo, f_lo, t, f0, g0d, phi, evals);
+            }
+            lo = t;
+            f_lo = ft;
+            prev_f = ft;
+            t *= 2.0;
+        }
+        // Wolfe never certified within the expansion budget; accept the
+        // last Armijo point (still a valid monotone-descent step).
+        LineSearchResult {
+            t: lo.max(1.0),
+            value: f_lo,
+            evals,
+            wolfe_ok: false,
+        }
+    }
+
+    /// Zoom/bisection phase on a bracketing interval (lo, hi) where lo
+    /// satisfies Armijo and the minimum is inside.
+    #[allow(clippy::too_many_arguments)]
+    fn zoom<F: FnMut(f64) -> (f64, f64)>(
+        &self,
+        mut lo: f64,
+        mut f_lo: f64,
+        mut hi: f64,
+        f0: f64,
+        g0d: f64,
+        mut phi: F,
+        mut evals: usize,
+    ) -> LineSearchResult {
+        let armijo = |t: f64, ft: f64| ft <= f0 + self.alpha * t * g0d;
+        let wolfe = |dft: f64| dft >= self.beta * g0d;
+        let mut best = (lo, f_lo);
+        for _ in 0..self.max_zoom {
+            let t = 0.5 * (lo + hi);
+            let (ft, dft) = phi(t);
+            evals += 1;
+            if !armijo(t, ft) || ft >= f_lo {
+                hi = t;
+            } else {
+                if wolfe(dft) {
+                    return LineSearchResult {
+                        t,
+                        value: ft,
+                        evals,
+                        wolfe_ok: true,
+                    };
+                }
+                if ft < best.1 {
+                    best = (t, ft);
+                }
+                if dft * (hi - lo) >= 0.0 {
+                    hi = lo;
+                }
+                lo = t;
+                f_lo = ft;
+            }
+            if (hi - lo).abs() < 1e-14 {
+                break;
+            }
+        }
+        // interval collapsed: return the best Armijo point seen
+        let (t, value) = if best.0 > 0.0 { best } else { (lo.max(1e-12), f_lo) };
+        LineSearchResult {
+            t,
+            value,
+            evals,
+            wolfe_ok: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// φ from a 1-D strongly convex quadratic: f(w+td) along d.
+    fn quad_phi(t: f64) -> (f64, f64) {
+        // f(t) = (t-3)², f' = 2(t-3); f0 = 9, g0d = -6
+        ((t - 3.0) * (t - 3.0), 2.0 * (t - 3.0))
+    }
+
+    #[test]
+    fn finds_admissible_step_on_quadratic() {
+        let ls = LineSearch::default();
+        let res = ls.search(9.0, -6.0, quad_phi);
+        assert!(res.wolfe_ok);
+        // Armijo: (t-3)² ≤ 9 − 1e-4·6t; Wolfe: 2(t−3) ≥ −5.4
+        assert!(res.value <= 9.0 + 1e-4 * res.t * -6.0);
+        assert!(2.0 * (res.t - 3.0) >= 0.9 * -6.0);
+        assert!(res.t > 0.0);
+    }
+
+    #[test]
+    fn immediate_accept_when_t1_is_good() {
+        // minimum near t = 1: φ(t) = (t−1)², φ'(1) = 0 satisfies Wolfe
+        let ls = LineSearch::default();
+        let res = ls.search(1.0, -2.0, |t| ((t - 1.0) * (t - 1.0), 2.0 * (t - 1.0)));
+        assert_eq!(res.evals, 1);
+        assert!(res.wolfe_ok);
+        assert_eq!(res.t, 1.0);
+    }
+
+    #[test]
+    fn backtracks_when_t1_overshoots() {
+        // minimum at t = 0.01 → t = 1 violates Armijo badly.
+        // φ(t) = 100(t−0.01)²: f0 = 0.01, φ'(0) = −2.
+        let ls = LineSearch::default();
+        let res = ls.search(0.01, -2.0, |t| {
+            let d = t - 0.01;
+            (100.0 * d * d, 200.0 * d)
+        });
+        assert!(res.t < 0.6, "t = {}", res.t);
+        assert!(res.value <= 0.01 + ls.alpha * res.t * -2.0);
+    }
+
+    #[test]
+    fn expands_when_minimum_is_far() {
+        // minimum at t = 40. With β = 0.9 the Wolfe condition already
+        // holds at t = 4 (φ'(4) = −72 = β·φ'(0)), the first expansion
+        // point inside [t_β, t_α] — expansion must reach at least there.
+        let ls = LineSearch::default();
+        let res = ls.search(1600.0, -80.0, |t| {
+            let d = t - 40.0;
+            (d * d, 2.0 * d)
+        });
+        assert!(res.t >= 4.0, "t = {}", res.t);
+        assert!(res.wolfe_ok);
+    }
+
+    #[test]
+    fn wolfe_interval_matches_lemma1() {
+        // Lemma 1: the admissible set is [t_β, t_α]. For φ(t) = (t−3)²,
+        // f0 = 9, g0d = −6, α = 1e-4, β = 0.9:
+        //   t_β: 2(t−3) = −5.4 → t_β = 0.3
+        //   t_α: (t−3)² = 9 − 6e-4·t → t_α ≈ 5.9994
+        let ls = LineSearch::default();
+        let res = ls.search(9.0, -6.0, quad_phi);
+        assert!(res.t >= 0.3 - 1e-9 && res.t <= 6.0, "t = {}", res.t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ascent_direction() {
+        LineSearch::default().search(1.0, 0.5, quad_phi);
+    }
+
+    #[test]
+    fn eval_count_is_small() {
+        // the paper's point: line search is cheap — single digits of
+        // scalar rounds even for awkward curvatures
+        let ls = LineSearch::default();
+        for &tmin in &[0.03, 0.3, 1.0, 7.0, 29.0] {
+            let res = ls.search(tmin * tmin, -2.0 * tmin, |t| {
+                let d = t - tmin;
+                (d * d, 2.0 * d)
+            });
+            assert!(res.evals <= 15, "tmin={tmin}: {} evals", res.evals);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Inner optimizers `M` and the distributed line search.
+//!
+//! Theorem 4 only needs `M` to have global linear rate of convergence on
+//! the σ-strongly-convex f̂_p; Lemma 3 then guarantees a *constant*
+//! number k̂ of iterations suffices for the sufficient-angle condition.
+//! We provide the choices §3.4 lists:
+//!
+//! * [`tron::Tron`] — Trust Region Newton (Lin–Weng–Keerthi 2008), the
+//!   paper's default `M` (and the TERA outer solver),
+//! * [`lbfgs::Lbfgs`] — limited-memory BFGS with Armijo backtracking,
+//! * [`gd::GradientDescent`] — plain gradient descent w/ backtracking
+//!   (the pessimistic baseline covered by Theorem 2's rate bound),
+//! * [`sgd::Sgd`] / [`sgd::Svrg`] — example-wise methods for the
+//!   parallel-SGD instantiation of §3.5 (SVRG update ≡ eq. (20)),
+//! * [`linesearch`] — the Armijo–Wolfe search over cached margins
+//!   (Algorithm 2 step 10, Lemma 1).
+
+pub mod gd;
+pub mod lbfgs;
+pub mod linesearch;
+pub mod sgd;
+pub mod tron;
+
+use crate::approx::LocalApprox;
+
+/// Outcome of an inner minimization.
+#[derive(Clone, Debug)]
+pub struct InnerResult {
+    /// the approximate minimizer w_p
+    pub w: Vec<f64>,
+    /// f̂_p(w_p)
+    pub value: f64,
+    /// iterations actually performed
+    pub iters: usize,
+}
+
+/// An inner optimizer `M` for f̂_p: run `k_hat` iterations from the
+/// anchor w^r (Algorithm 2 steps 4–7).
+pub trait InnerOptimizer: Send + Sync {
+    fn minimize(&self, approx: &mut dyn LocalApprox, k_hat: usize) -> InnerResult;
+    fn name(&self) -> &'static str;
+}
+
+/// Inner optimizer selector (config-file spelling).
+pub fn by_name(name: &str) -> Option<Box<dyn InnerOptimizer>> {
+    match name {
+        "tron" => Some(Box::new(tron::Tron::default())),
+        "lbfgs" => Some(Box::new(lbfgs::Lbfgs::default())),
+        "gd" => Some(Box::new(gd::GradientDescent::default())),
+        "sgd" => Some(Box::new(sgd::Sgd::default())),
+        "svrg" => Some(Box::new(sgd::Svrg::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! A synthetic strongly-convex quadratic exposed through the
+    //! [`LocalApprox`] interface so every optimizer can be tested
+    //! against a problem with a known minimizer.
+    use crate::approx::LocalApprox;
+    use crate::linalg;
+
+    /// f(v) = ½(v−c)ᵀA(v−c), A = diag + rank-1, SPD.
+    pub struct Quadratic {
+        pub diag: Vec<f64>,
+        pub rank1: Vec<f64>,
+        pub center: Vec<f64>,
+        pub anchor: Vec<f64>,
+        pub evals: usize,
+    }
+
+    impl Quadratic {
+        pub fn new(dim: usize, seed: u64) -> Quadratic {
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            Quadratic {
+                diag: (0..dim).map(|_| 0.5 + rng.f64() * 4.0).collect(),
+                rank1: (0..dim).map(|_| rng.normal() * 0.3).collect(),
+                center: (0..dim).map(|_| rng.normal()).collect(),
+                anchor: vec![0.0; dim],
+                evals: 0,
+            }
+        }
+
+        pub fn apply_a(&self, v: &[f64]) -> Vec<f64> {
+            let rv = linalg::dot(&self.rank1, v);
+            (0..v.len())
+                .map(|j| self.diag[j] * v[j] + self.rank1[j] * rv)
+                .collect()
+        }
+
+        pub fn optimum(&self) -> &[f64] {
+            &self.center
+        }
+    }
+
+    impl LocalApprox for Quadratic {
+        fn m(&self) -> usize {
+            self.center.len()
+        }
+
+        fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+            self.evals += 1;
+            let d = linalg::sub(v, &self.center);
+            let ad = self.apply_a(&d);
+            (0.5 * linalg::dot(&d, &ad), ad)
+        }
+
+        fn hvp(&self, s: &[f64]) -> Vec<f64> {
+            self.apply_a(s)
+        }
+
+        fn passes(&self) -> f64 {
+            self.evals as f64
+        }
+
+        fn anchor(&self) -> &[f64] {
+            &self.anchor
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ["tron", "lbfgs", "gd", "sgd", "svrg"] {
+            assert!(by_name(n).is_some(), "{n}");
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("adam").is_none());
+    }
+}

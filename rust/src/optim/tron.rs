@@ -1,0 +1,256 @@
+//! TRON — Trust Region Newton method (Lin, Weng, Keerthi 2008).
+//!
+//! The paper's default inner optimizer `M` and also the outer solver of
+//! TERA-TRON (§4.3). Each iteration evaluates (f, g) at the current
+//! point, runs Steihaug conjugate gradient on the quadratic model
+//! ½sᵀHs + gᵀs inside the trust region, and accepts/rejects the step by
+//! the actual-vs-predicted reduction ratio. On σ-strongly-convex
+//! objectives TRON has global linear rate, which is exactly what
+//! Lemma 3 requires of `M`.
+
+use super::{InnerOptimizer, InnerResult};
+use crate::approx::LocalApprox;
+use crate::linalg;
+
+/// TRON parameters (the η/σ update constants of Lin–Weng–Keerthi).
+#[derive(Clone, Debug)]
+pub struct Tron {
+    /// CG iterations cap per Newton step (the k̂ driver in Appendix A is
+    /// the *total* CG products; this bounds each inner solve)
+    pub max_cg: usize,
+    /// CG relative residual tolerance
+    pub cg_tol: f64,
+    /// step acceptance threshold η₀
+    pub eta0: f64,
+    /// good-step threshold η₂ (expand region beyond it)
+    pub eta2: f64,
+    /// initial trust radius as a multiple of ‖g‖
+    pub init_radius_scale: f64,
+    /// explicit initial trust radius (overrides the ‖g‖ scaling).
+    /// FADL threads the previous outer iteration's accepted step length
+    /// through this: with a piecewise-quadratic loss the local model's
+    /// trust region is exactly the region where the anchor's active set
+    /// is representative, which the last line search measured.
+    pub init_radius: Option<f64>,
+}
+
+impl Default for Tron {
+    fn default() -> Self {
+        Tron {
+            max_cg: 20,
+            cg_tol: 0.1,
+            eta0: 1e-4,
+            eta2: 0.75,
+            init_radius_scale: 1.0,
+            init_radius: None,
+        }
+    }
+}
+
+/// Steihaug-CG: approximately minimize ½sᵀHs + gᵀs s.t. ‖s‖ ≤ Δ.
+/// Returns (s, hit_boundary, cg_iters).
+fn steihaug(
+    approx: &dyn LocalApprox,
+    g: &[f64],
+    delta: f64,
+    max_cg: usize,
+    tol: f64,
+) -> (Vec<f64>, bool, usize) {
+    let m = g.len();
+    let mut s = vec![0.0; m];
+    let mut r: Vec<f64> = g.iter().map(|&x| -x).collect(); // r = -g - Hs (s=0)
+    let mut d = r.clone();
+    let r0_norm = linalg::norm(&r);
+    if r0_norm == 0.0 {
+        return (s, false, 0);
+    }
+    let mut rr = linalg::dot(&r, &r);
+    for it in 0..max_cg {
+        let hd = approx.hvp(&d);
+        let dhd = linalg::dot(&d, &hd);
+        if dhd <= 0.0 {
+            // nonconvex direction cannot happen for our f̂_p (σ-convex),
+            // but guard anyway: walk to the boundary.
+            let tau = boundary_tau(&s, &d, delta);
+            linalg::axpy(tau, &d, &mut s);
+            return (s, true, it + 1);
+        }
+        let alpha = rr / dhd;
+        // would the step leave the region?
+        let mut s_next = s.clone();
+        linalg::axpy(alpha, &d, &mut s_next);
+        if linalg::norm(&s_next) >= delta {
+            let tau = boundary_tau(&s, &d, delta);
+            linalg::axpy(tau, &d, &mut s);
+            return (s, true, it + 1);
+        }
+        s = s_next;
+        linalg::axpy(-alpha, &hd, &mut r);
+        let rr_new = linalg::dot(&r, &r);
+        if rr_new.sqrt() <= tol * r0_norm {
+            return (s, false, it + 1);
+        }
+        let beta = rr_new / rr;
+        rr = rr_new;
+        linalg::axpby(1.0, &r, beta, &mut d);
+    }
+    (s, false, max_cg)
+}
+
+/// τ ≥ 0 with ‖s + τd‖ = Δ.
+fn boundary_tau(s: &[f64], d: &[f64], delta: f64) -> f64 {
+    let dd = linalg::dot(d, d);
+    let sd = linalg::dot(s, d);
+    let ss = linalg::dot(s, s);
+    let disc = (sd * sd + dd * (delta * delta - ss)).max(0.0);
+    (-sd + disc.sqrt()) / dd.max(1e-300)
+}
+
+impl InnerOptimizer for Tron {
+    /// `k_hat` is the **total CG-product budget**, matching the paper's
+    /// Appendix-A definition ("k̂ is the average number of conjugate
+    /// gradient iterations required per outer iteration", typically
+    /// 5–20). This matters beyond cost accounting: truncated CG only
+    /// moves within the Krylov space of the local Hessian, which
+    /// regularizes the f̂_p minimizer in directions where the node has
+    /// no curvature (features unseen in its shard) — the exact
+    /// minimizer would move those coordinates by −g_j/λ, a direction
+    /// that makes the combined d^r nearly orthogonal to −g.
+    fn minimize(&self, approx: &mut dyn LocalApprox, k_hat: usize) -> InnerResult {
+        let mut v = approx.anchor().to_vec();
+        let (mut fv, mut g) = approx.eval(&v);
+        let mut radius = self
+            .init_radius
+            .unwrap_or_else(|| self.init_radius_scale * linalg::norm(&g))
+            .max(1e-12);
+        let mut iters = 0;
+        let mut cg_budget = k_hat;
+        while cg_budget > 0 {
+            let gnorm = linalg::norm(&g);
+            if gnorm <= 1e-14 {
+                break;
+            }
+            let cg_cap = self.max_cg.min(cg_budget);
+            let (s, hit_boundary, cg_used) =
+                steihaug(approx, &g, radius, cg_cap, self.cg_tol);
+            cg_budget -= cg_used.max(1).min(cg_budget);
+            let hs = approx.hvp(&s);
+            let predicted = -(linalg::dot(&g, &s) + 0.5 * linalg::dot(&s, &hs));
+            let mut v_try = v.clone();
+            linalg::accum(&mut v_try, &s);
+            let (f_try, g_try) = approx.eval(&v_try);
+            let actual = fv - f_try;
+            let rho = if predicted.abs() < 1e-300 {
+                1.0
+            } else {
+                actual / predicted
+            };
+            iters += cg_used.max(1);
+            if rho > self.eta0 {
+                v = v_try;
+                fv = f_try;
+                g = g_try;
+                if rho > self.eta2 && hit_boundary {
+                    radius *= 2.0;
+                }
+            } else {
+                radius *= 0.25;
+            }
+            if rho <= self.eta0 && radius < 1e-16 {
+                break;
+            }
+        }
+        InnerResult {
+            w: v,
+            value: fv,
+            iters,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "tron"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Quadratic;
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut q = Quadratic::new(20, 1);
+        let opt = q.optimum().to_vec();
+        let res = Tron::default().minimize(&mut q, 30);
+        let err = linalg::dist_sq(&res.w, &opt).sqrt();
+        assert!(err < 1e-6, "err {err}");
+        assert!(res.value < 1e-10, "value {}", res.value);
+    }
+
+    #[test]
+    fn monotone_descent() {
+        let mut q = Quadratic::new(12, 2);
+        let (f0, _) = q.eval(&vec![0.0; 12]);
+        let mut prev = f0;
+        for k in 1..=6 {
+            let mut q2 = Quadratic::new(12, 2);
+            let res = Tron::default().minimize(&mut q2, k);
+            assert!(
+                res.value <= prev + 1e-12,
+                "k={k}: {} > {prev}",
+                res.value
+            );
+            prev = res.value;
+        }
+    }
+
+    #[test]
+    fn linear_rate_on_quadratic() {
+        // glrc check: value must shrink geometrically with k̂
+        let run = |k| {
+            let mut q = Quadratic::new(15, 3);
+            Tron::default().minimize(&mut q, k).value
+        };
+        let f2 = run(2);
+        let f4 = run(4);
+        let f8 = run(8);
+        assert!(f4 < 0.5 * f2, "{f4} vs {f2}");
+        assert!(f8 < 0.5 * f4 || f8 < 1e-12, "{f8} vs {f4}");
+    }
+
+    #[test]
+    fn zero_iterations_returns_anchor() {
+        let mut q = Quadratic::new(5, 4);
+        let res = Tron::default().minimize(&mut q, 0);
+        assert_eq!(res.w, vec![0.0; 5]);
+        assert_eq!(res.iters, 0);
+    }
+
+    #[test]
+    fn steihaug_respects_radius() {
+        let q = Quadratic::new(10, 5);
+        let g: Vec<f64> = (0..10).map(|i| (i as f64 + 1.0) * 0.3).collect();
+        for &delta in &[1e-3, 0.1, 1.0] {
+            let (s, _hit, _) = steihaug(&q, &g, delta, 50, 1e-10);
+            assert!(linalg::norm(&s) <= delta * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn boundary_tau_is_exact() {
+        let s = vec![0.5, 0.0];
+        let d = vec![1.0, 0.0];
+        let tau = boundary_tau(&s, &d, 2.0);
+        assert!((tau - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn already_optimal_stays_put() {
+        let mut q = Quadratic::new(8, 6);
+        // move anchor to the optimum
+        q.anchor = q.center.clone();
+        let res = Tron::default().minimize(&mut q, 10);
+        let err = linalg::dist_sq(&res.w, &q.center).sqrt();
+        assert!(err < 1e-9);
+    }
+}

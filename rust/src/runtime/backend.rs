@@ -1,0 +1,200 @@
+//! Dense-block shard backend: [`crate::objective::ShardCompute`] served
+//! by the AOT/PJRT runtime.
+//!
+//! The shard's rows are materialized into fixed (B, M) f32 blocks (B =
+//! the artifact batch size); the final ragged block is padded with zero
+//! rows carrying weight c = 0, which the Layer-2 model treats as
+//! perfectly neutral (see `python/tests/test_model.py::
+//! test_padding_rows_are_neutral`). Every block operation is one
+//! executable call; accumulation across blocks happens in f64 on the
+//! Rust side to keep the shard-level sums well conditioned.
+
+use std::sync::Arc;
+
+use super::pjrt::AotRuntime;
+use crate::loss::Loss;
+use crate::objective::{Shard, ShardCompute};
+
+/// A dense example shard whose compute runs through the AOT artifacts.
+pub struct DenseBlockShard {
+    runtime: Arc<AotRuntime>,
+    /// (B·M) f32 per block, row-major
+    blocks: Vec<Vec<f32>>,
+    /// (B) labels per block (+1 padding rows)
+    ys: Vec<Vec<f32>>,
+    /// (B) weights per block (0 padding rows)
+    cs: Vec<Vec<f32>>,
+    /// true (unpadded) number of examples
+    n: usize,
+    nnz: usize,
+    feature_counts: Vec<u32>,
+}
+
+impl DenseBlockShard {
+    /// Build from a CSR shard. Requires `shard.x.cols == runtime.features`.
+    pub fn new(runtime: Arc<AotRuntime>, shard: &Shard) -> DenseBlockShard {
+        let b = runtime.batch;
+        let m = runtime.features;
+        assert_eq!(
+            shard.x.cols, m,
+            "shard has {} features but artifacts were lowered for {m}",
+            shard.x.cols
+        );
+        let n = shard.x.rows;
+        let nblocks = n.div_ceil(b).max(1);
+        let mut blocks = Vec::with_capacity(nblocks);
+        let mut ys = Vec::with_capacity(nblocks);
+        let mut cs = Vec::with_capacity(nblocks);
+        let mut rowbuf = vec![0.0f32; m];
+        for blk in 0..nblocks {
+            let mut x = vec![0.0f32; b * m];
+            let mut y = vec![1.0f32; b];
+            let mut c = vec![0.0f32; b];
+            for r in 0..b {
+                let i = blk * b + r;
+                if i >= n {
+                    break;
+                }
+                shard.x.densify_row(i, &mut rowbuf);
+                x[r * m..(r + 1) * m].copy_from_slice(&rowbuf);
+                y[r] = shard.y[i] as f32;
+                c[r] = shard.c[i] as f32;
+            }
+            blocks.push(x);
+            ys.push(y);
+            cs.push(c);
+        }
+        DenseBlockShard {
+            runtime,
+            blocks,
+            ys,
+            cs,
+            n,
+            nnz: shard.x.nnz(),
+            feature_counts: shard.x.feature_counts(),
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn w32(&self, w: &[f64]) -> Vec<f32> {
+        w.iter().map(|&x| x as f32).collect()
+    }
+
+    fn check_loss(&self, loss: Loss) {
+        assert_eq!(
+            loss, self.runtime.loss,
+            "artifacts were lowered for {:?}",
+            self.runtime.loss
+        );
+    }
+}
+
+impl ShardCompute for DenseBlockShard {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn m(&self) -> usize {
+        self.runtime.features
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn loss_grad(&self, loss: Loss, w: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
+        self.check_loss(loss);
+        let wf = self.w32(w);
+        let mut total = 0.0f64;
+        let mut grad = vec![0.0f64; w.len()];
+        let mut margins = Vec::with_capacity(self.n);
+        for blk in 0..self.blocks.len() {
+            let (l, g, z) = self
+                .runtime
+                .obj_grad(&self.blocks[blk], &self.ys[blk], &self.cs[blk], &wf)
+                .expect("obj_grad artifact execution failed");
+            total += l as f64;
+            for (acc, &gi) in grad.iter_mut().zip(&g) {
+                *acc += gi as f64;
+            }
+            let keep = (self.n - blk * self.runtime.batch).min(self.runtime.batch);
+            margins.extend(z[..keep].iter().map(|&v| v as f64));
+        }
+        (total, grad, margins)
+    }
+
+    fn margins(&self, d: &[f64]) -> Vec<f64> {
+        let df = self.w32(d);
+        let mut out = Vec::with_capacity(self.n);
+        for blk in 0..self.blocks.len() {
+            let z = self
+                .runtime
+                .margins(&self.blocks[blk], &df)
+                .expect("margins artifact execution failed");
+            let keep = (self.n - blk * self.runtime.batch).min(self.runtime.batch);
+            out.extend(z[..keep].iter().map(|&v| v as f64));
+        }
+        out
+    }
+
+    fn hvp(&self, loss: Loss, z: &[f64], s: &[f64]) -> Vec<f64> {
+        self.check_loss(loss);
+        let sf = self.w32(s);
+        let b = self.runtime.batch;
+        let mut out = vec![0.0f64; s.len()];
+        for blk in 0..self.blocks.len() {
+            // re-pad the cached margins to the block shape (padding rows
+            // have c = 0, so their z value is irrelevant)
+            let lo = blk * b;
+            let hi = (lo + b).min(self.n);
+            let mut zf = vec![0.0f32; b];
+            for (k, &zv) in z[lo..hi].iter().enumerate() {
+                zf[k] = zv as f32;
+            }
+            let hv = self
+                .runtime
+                .hvp(&self.blocks[blk], &self.ys[blk], &self.cs[blk], &zf, &sf)
+                .expect("hvp artifact execution failed");
+            for (acc, &h) in out.iter_mut().zip(&hv) {
+                *acc += h as f64;
+            }
+        }
+        out
+    }
+
+    fn linesearch_eval(&self, loss: Loss, z: &[f64], e: &[f64], t: f64) -> (f64, f64) {
+        self.check_loss(loss);
+        let b = self.runtime.batch;
+        let mut phi = 0.0f64;
+        let mut dphi = 0.0f64;
+        for blk in 0..self.blocks.len() {
+            let lo = blk * b;
+            let hi = (lo + b).min(self.n);
+            let mut zf = vec![0.0f32; b];
+            let mut ef = vec![0.0f32; b];
+            for k in 0..(hi - lo) {
+                zf[k] = z[lo + k] as f32;
+                ef[k] = e[lo + k] as f32;
+            }
+            let (p, d) = self
+                .runtime
+                .linesearch(&zf, &ef, &self.ys[blk], &self.cs[blk], t as f32)
+                .expect("linesearch artifact execution failed");
+            phi += p as f64;
+            dphi += d as f64;
+        }
+        (phi, dphi)
+    }
+
+    // no per-example access: SGD-style inner optimizers fall back to GD
+    // (documented in optim::sgd)
+
+    fn feature_counts(&self) -> Vec<u32> {
+        self.feature_counts.clone()
+    }
+}
+
+// Integration tests against real artifacts: rust/tests/aot_runtime.rs.

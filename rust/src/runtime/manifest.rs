@@ -1,0 +1,142 @@
+//! `artifacts/manifest.json` reader: the shape contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+/// One AOT entry: HLO file plus declared input shapes / output names.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub features: usize,
+    pub loss: String,
+    pub entries: BTreeMap<String, Entry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = json::parse(text)?;
+        let need = |k: &str| v.get(k).ok_or_else(|| format!("manifest missing {k:?}"));
+        let batch = need("batch")?.as_usize().ok_or("batch not a number")?;
+        let features = need("features")?.as_usize().ok_or("features not a number")?;
+        let loss = need("loss")?.as_str().ok_or("loss not a string")?.to_string();
+        let format = need("format")?.as_str().unwrap_or("");
+        if format != "hlo-text/return-tuple" {
+            return Err(format!("unsupported artifact format {format:?}"));
+        }
+        let mut entries = BTreeMap::new();
+        let ents = need("entries")?.as_obj().ok_or("entries not an object")?;
+        for (name, e) in ents {
+            let file = e
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| format!("entry {name}: missing file"))?;
+            let inputs = e
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| format!("entry {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect();
+            let outputs = e
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            batch,
+            features,
+            loss,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, prefix: &str) -> Result<&Entry, String> {
+        self.entries
+            .values()
+            .find(|e| e.name.starts_with(prefix))
+            .ok_or_else(|| format!("no artifact entry starting with {prefix:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 32, "features": 16, "loss": "squared_hinge",
+      "format": "hlo-text/return-tuple",
+      "entries": {
+        "obj_grad_b32_f16": {
+          "file": "obj_grad_b32_f16.hlo.txt",
+          "inputs": [[32, 16], [32, 1], [32, 1], [16, 1]],
+          "outputs": ["loss", "grad", "z"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.features, 16);
+        assert_eq!(m.loss, "squared_hinge");
+        let e = m.entry("obj_grad").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[0], vec![32, 16]);
+        assert_eq!(e.outputs, vec!["loss", "grad", "z"]);
+        assert_eq!(e.file, Path::new("/tmp/a/obj_grad_b32_f16.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("hlo-text/return-tuple", "proto");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_entry_reported() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.entry("hvp").is_err());
+    }
+}

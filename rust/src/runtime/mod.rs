@@ -1,0 +1,23 @@
+//! Runtime: load and execute the AOT-compiled XLA artifacts from the
+//! Layer-3 hot path.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 JAX graphs (which embed
+//! the Layer-1 Pallas kernels) to **HLO text** under `artifacts/`;
+//! [`pjrt::AotRuntime`] loads them with
+//! `HloModuleProto::from_text_file`, compiles once per entry on the
+//! PJRT CPU client, and serves block-level loss/grad/Hv/line-search
+//! evaluations. [`backend::DenseBlockShard`] adapts that to the
+//! [`crate::objective::ShardCompute`] trait so every training method
+//! can run on the AOT path unchanged (the dense mnist8m-like workloads
+//! — DESIGN.md §5 explains why sparse shards stay native).
+//!
+//! Python never runs at serving/training time: once `make artifacts`
+//! has produced the HLO text, the Rust binary is self-contained.
+
+pub mod backend;
+pub mod manifest;
+pub mod pjrt;
+
+pub use backend::DenseBlockShard;
+pub use manifest::Manifest;
+pub use pjrt::AotRuntime;

@@ -1,0 +1,178 @@
+//! PJRT client wrapper: compile the HLO-text artifacts once, execute
+//! them from the hot path.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* (never
+//! serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! All entries were lowered with `return_tuple=True`, so outputs are
+//! unpacked with `to_tuple`.
+//!
+//! Execution is serialized behind a mutex: the CPU PJRT client is not
+//! documented thread-safe for concurrent executes, and the simulated
+//! cluster's virtual clock is unaffected by host-side serialization.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// Block-shape-specialized executables for the four AOT entries.
+pub struct AotRuntime {
+    /// rows per block (B)
+    pub batch: usize,
+    /// feature dimension (M)
+    pub features: usize,
+    /// loss the artifacts were lowered with
+    pub loss: crate::loss::Loss,
+    client_platform: String,
+    exec: Mutex<Executables>,
+}
+
+struct Executables {
+    margins: xla::PjRtLoadedExecutable,
+    obj_grad: xla::PjRtLoadedExecutable,
+    hvp: xla::PjRtLoadedExecutable,
+    linesearch: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the xla wrapper types hold raw PJRT pointers and an Rc'd
+// client handle, so they are not auto-Send/Sync. Every access to them
+// in this crate goes through `AotRuntime::exec`'s Mutex (including the
+// Rc refcount: no clone of the client escapes the struct), so moving
+// the whole bundle across threads and sharing &AotRuntime is sound.
+// The PJRT CPU client itself is documented to tolerate calls from any
+// single thread at a time, which the Mutex enforces.
+unsafe impl Send for Executables {}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+impl AotRuntime {
+    /// Load and compile every artifact under `dir` (see `make artifacts`).
+    pub fn load(dir: &Path) -> Result<AotRuntime> {
+        let manifest = Manifest::load(dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |prefix: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let entry = manifest.entry(prefix).map_err(anyhow::Error::msg)?;
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parse {}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let exec = Executables {
+            margins: compile("margins")?,
+            obj_grad: compile("obj_grad")?,
+            hvp: compile("hvp")?,
+            linesearch: compile("linesearch")?,
+        };
+        let loss = crate::loss::Loss::from_name(&manifest.loss)
+            .ok_or_else(|| anyhow::anyhow!("unknown loss {:?}", manifest.loss))?;
+        Ok(AotRuntime {
+            batch: manifest.batch,
+            features: manifest.features,
+            loss,
+            client_platform: client.platform_name(),
+            exec: Mutex::new(exec),
+        })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.client_platform
+    }
+
+    /// z = X·w for one (B, M) block. `w` length M.
+    pub fn margins(&self, x: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let m = self.features;
+        let lx = literal_2d(x, b, m)?;
+        let lw = literal_2d(w, m, 1)?;
+        let exec = self.exec.lock().unwrap();
+        let result = exec.margins.execute::<xla::Literal>(&[lx, lw])?[0][0]
+            .to_literal_sync()?;
+        let z = result.to_tuple1()?;
+        Ok(z.to_vec::<f32>()?)
+    }
+
+    /// (Σ c·l, Xᵀ(c·l'), z) for one block.
+    pub fn obj_grad(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        c: &[f32],
+        w: &[f32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let b = self.batch;
+        let m = self.features;
+        let args = [
+            literal_2d(x, b, m)?,
+            literal_2d(y, b, 1)?,
+            literal_2d(c, b, 1)?,
+            literal_2d(w, m, 1)?,
+        ];
+        let exec = self.exec.lock().unwrap();
+        let result = exec.obj_grad.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (loss, grad, z) = result.to_tuple3()?;
+        Ok((
+            loss.to_vec::<f32>()?[0],
+            grad.to_vec::<f32>()?,
+            z.to_vec::<f32>()?,
+        ))
+    }
+
+    /// Hv = Xᵀ(c ⊙ l''(z) ⊙ (X·s)) for one block.
+    pub fn hvp(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        c: &[f32],
+        z: &[f32],
+        s: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let m = self.features;
+        let args = [
+            literal_2d(x, b, m)?,
+            literal_2d(y, b, 1)?,
+            literal_2d(c, b, 1)?,
+            literal_2d(z, b, 1)?,
+            literal_2d(s, m, 1)?,
+        ];
+        let exec = self.exec.lock().unwrap();
+        let result = exec.hvp.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let hv = result.to_tuple1()?;
+        Ok(hv.to_vec::<f32>()?)
+    }
+
+    /// (φ(t), φ'(t)) over one block's cached (z, e).
+    pub fn linesearch(
+        &self,
+        z: &[f32],
+        e: &[f32],
+        y: &[f32],
+        c: &[f32],
+        t: f32,
+    ) -> Result<(f32, f32)> {
+        let b = self.batch;
+        let args = [
+            literal_2d(z, b, 1)?,
+            literal_2d(e, b, 1)?,
+            literal_2d(y, b, 1)?,
+            literal_2d(c, b, 1)?,
+            literal_2d(&[t], 1, 1)?,
+        ];
+        let exec = self.exec.lock().unwrap();
+        let result = exec.linesearch.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (phi, dphi) = result.to_tuple2()?;
+        Ok((phi.to_vec::<f32>()?[0], dphi.to_vec::<f32>()?[0]))
+    }
+}
+
+// Integration tests against the real artifacts live in
+// rust/tests/aot_runtime.rs (they need `make artifacts` to have run).

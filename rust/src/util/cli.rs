@@ -1,0 +1,301 @@
+//! Declarative command-line flag parser (replaces `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean switches, defaults,
+//! required flags, positional arguments, subcommands, and auto-generated
+//! `--help` text. Every binary in `rust/src/bin/` and `examples/` builds
+//! its interface from this.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    required: bool,
+    is_switch: bool,
+}
+
+/// A declarative CLI: flags + positionals + optional subcommands.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// An option flag with a default value.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            required: false,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A required option flag.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            required: true,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A boolean switch (present = true).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            required: false,
+            is_switch: true,
+        });
+        self
+    }
+
+    /// A positional argument (named only for help text).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.program, self.about);
+        let _ = write!(out, "\nUSAGE:\n  {} [FLAGS]", self.program);
+        for (p, _) in &self.positionals {
+            let _ = write!(out, " <{p}>");
+        }
+        let _ = writeln!(out, "\n\nFLAGS:");
+        for f in &self.flags {
+            let kind = if f.is_switch {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            let _ = writeln!(out, "  --{}{}\n      {}", f.name, kind, f.help);
+        }
+        let _ = writeln!(out, "  --help\n      print this message");
+        for (p, h) in &self.positionals {
+            let _ = writeln!(out, "\nARGS:\n  <{p}>  {h}");
+        }
+        out
+    }
+
+    /// Parse an explicit argument list (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.clone(), d.clone());
+            }
+            if f.is_switch {
+                args.switches.insert(f.name.clone(), false);
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.help_text()))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    args.switches.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} expects a value"))?,
+                    };
+                    args.values.insert(name, value);
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        for f in &self.flags {
+            if f.required && !args.values.contains_key(&f.name) {
+                return Err(format!(
+                    "missing required flag --{}\n\n{}",
+                    f.name,
+                    self.help_text()
+                ));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(&self.program) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
+    /// Comma-separated list of usize (e.g. `--nodes 8,16,32`).
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}"))
+            })
+            .collect()
+    }
+
+    pub fn on(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("prog", "test program")
+            .flag("nodes", "8", "node count")
+            .flag("gamma", "500", "comm/comp ratio")
+            .switch("verbose", "chatty")
+            .required("dataset", "which dataset")
+            .positional("out", "output path")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli()
+            .parse_from(sv(&["--dataset", "rcv", "--nodes=32", "out.json"]))
+            .unwrap();
+        assert_eq!(a.get_usize("nodes"), 32);
+        assert_eq!(a.get_f64("gamma"), 500.0);
+        assert_eq!(a.get("dataset"), "rcv");
+        assert!(!a.on("verbose"));
+        assert_eq!(a.positional(0), Some("out.json"));
+    }
+
+    #[test]
+    fn switch_toggles() {
+        let a = cli()
+            .parse_from(sv(&["--dataset", "url", "--verbose"]))
+            .unwrap();
+        assert!(a.on("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(sv(&["--nodes", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli()
+            .parse_from(sv(&["--dataset", "x", "--bogus", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn switch_with_value_errors() {
+        assert!(cli()
+            .parse_from(sv(&["--dataset", "x", "--verbose=1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = cli().help_text();
+        assert!(h.contains("--nodes"));
+        assert!(h.contains("--dataset"));
+        assert!(h.contains("required"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let c = Cli::new("p", "t").flag("ps", "8,16", "list");
+        let a = c.parse_from(sv(&["--ps", "8,64,128"])).unwrap();
+        assert_eq!(a.get_usize_list("ps"), vec![8, 64, 128]);
+    }
+}

@@ -1,0 +1,258 @@
+//! Minimal shrinking property-test harness (replaces `proptest`).
+//!
+//! Used by the coordinator-invariant tests (routing of shards,
+//! partition/batching bookkeeping, AllReduce correctness, optimizer
+//! descent properties). A property runs against `cases` random inputs
+//! drawn from a [`Gen`]; on failure the harness greedily shrinks the
+//! input before reporting, so failures are small and readable.
+
+use super::rng::Pcg64;
+
+/// A generator: draws a value and can propose smaller variants of one.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn draw(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate shrinks, in decreasing preference order.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner {
+            cases: 64,
+            seed: 0x5eed,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Runner {
+            cases,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Check `prop` over `cases` random draws; panic with the (shrunk)
+    /// counterexample on failure.
+    pub fn run<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(&self, gen: &G, prop: F) {
+        let mut rng = Pcg64::new(self.seed);
+        for case in 0..self.cases {
+            let value = gen.draw(&mut rng);
+            if let Err(msg) = prop(&value) {
+                let (shrunk, steps, last_msg) = self.shrink_loop(gen, value, msg, &prop);
+                panic!(
+                    "property failed (case {case}, after {steps} shrink steps):\n  \
+                     input: {shrunk:?}\n  error: {last_msg}"
+                );
+            }
+        }
+    }
+
+    fn shrink_loop<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+        &self,
+        gen: &G,
+        mut value: G::Value,
+        mut msg: String,
+        prop: &F,
+    ) -> (G::Value, usize, String) {
+        let mut steps = 0;
+        'outer: while steps < self.max_shrink_steps {
+            for cand in gen.shrink(&value) {
+                if let Err(m) = prop(&cand) {
+                    value = cand;
+                    msg = m;
+                    steps += 1;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        (value, steps, msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi], shrinking toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn draw(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in [lo, hi], shrinking toward 0 (clamped to range).
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+
+    fn draw(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let target = 0.0f64.clamp(self.0, self.1);
+        if (v - target).abs() < 1e-9 {
+            Vec::new()
+        } else {
+            vec![target, target + (v - target) / 2.0]
+        }
+    }
+}
+
+/// Vec<f64> with length in [min_len, max_len], elements in [lo, hi];
+/// shrinks by halving length, then zeroing elements.
+pub struct VecF64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for VecF64 {
+    type Value = Vec<f64>;
+
+    fn draw(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.range_f64(self.lo, self.hi)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let mut half = v.clone();
+            half.truncate((v.len() / 2).max(self.min_len));
+            out.push(half);
+            let mut minus1 = v.clone();
+            minus1.pop();
+            out.push(minus1);
+        }
+        if let Some(i) = v.iter().position(|&x| x != 0.0) {
+            if self.lo <= 0.0 && self.hi >= 0.0 {
+                let mut z = v.clone();
+                z[i] = 0.0;
+                out.push(z);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn draw(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.draw(rng), self.1.draw(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::default().run(&UsizeRange(0, 100), |&n| {
+            if n <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::default().run(&UsizeRange(0, 1000), |&n| {
+                if n < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} too big"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink must land on the boundary value 50
+        assert!(msg.contains("input: 50"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecF64 {
+            min_len: 2,
+            max_len: 10,
+            lo: -1.0,
+            hi: 1.0,
+        };
+        Runner::new(200, 1).run(&g, |v| {
+            if v.len() >= 2 && v.len() <= 10 && v.iter().all(|x| (-1.0..=1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("bounds violated".into())
+            }
+        });
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = Pair(UsizeRange(0, 10), UsizeRange(0, 10));
+        let mut rng = Pcg64::new(2);
+        let v = g.draw(&mut rng);
+        if v.0 > 0 || v.1 > 0 {
+            assert!(!g.shrink(&v).is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = UsizeRange(0, 1_000_000);
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        assert_eq!(g.draw(&mut a), g.draw(&mut b));
+    }
+}

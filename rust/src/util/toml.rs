@@ -1,0 +1,282 @@
+//! Minimal TOML-subset parser for the experiment config system
+//! (replaces `toml` + `serde`).
+//!
+//! Supported grammar (everything the configs in `configs/` use):
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean, and homogeneous-array values, `#` comments,
+//! and bare/quoted keys. Keys are flattened to `section.sub.key`.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened TOML document: `section.key -> Value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Keys under a section prefix (e.g. `section("dataset")`).
+    pub fn section(&self, prefix: &str) -> impl Iterator<Item = (&str, &Value)> {
+        let want = format!("{prefix}.");
+        self.entries.iter().filter_map(move |(k, v)| {
+            k.strip_prefix(&want).map(|rest| (rest, v))
+        })
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, String> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().trim_matches('"');
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.entries.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> = split_array_items(body)
+            .into_iter()
+            .map(|it| parse_value(it.trim()))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unrecognized value {s:?}"))
+}
+
+fn split_array_items(body: &str) -> Vec<&str> {
+    // split on commas not inside quotes or nested brackets
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&body[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+# experiment config
+name = "fig5"           # trailing comment
+[dataset]
+kind = "kdd2010"
+scale = 0.01
+[cluster]
+nodes = 128
+gamma = 1_000
+pipelined = true
+sweep = [8, 16, 32]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig5");
+        assert_eq!(doc.str_or("dataset.kind", ""), "kdd2010");
+        assert_eq!(doc.f64_or("dataset.scale", 0.0), 0.01);
+        assert_eq!(doc.usize_or("cluster.nodes", 0), 128);
+        assert_eq!(doc.f64_or("cluster.gamma", 0.0), 1000.0);
+        assert!(doc.bool_or("cluster.pipelined", false));
+        let sweep = doc.get("cluster.sweep").unwrap().as_array().unwrap();
+        assert_eq!(sweep.len(), 3);
+        assert_eq!(sweep[2].as_usize(), Some(32));
+    }
+
+    #[test]
+    fn string_with_hash_and_escapes() {
+        let doc = parse(r#"path = "a#b\"c""#).unwrap();
+        assert_eq!(doc.str_or("path", ""), "a#b\"c");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.usize_or("cluster.nodes", 7), 7);
+        assert_eq!(doc.str_or("x", "d"), "d");
+    }
+
+    #[test]
+    fn section_iteration() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.section("a").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("x = \"open").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = what").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse("a = -4\nb = 1.25e-6\nc = -0.5").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-4));
+        assert_eq!(doc.f64_or("b", 0.0), 1.25e-6);
+        assert_eq!(doc.f64_or("c", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests over the AOT/PJRT path: artifacts → runtime →
+//! DenseBlockShard → training methods. Requires `make artifacts` to
+//! have produced `artifacts/` (the Makefile runs it before tests);
+//! every test skips with a notice when artifacts are absent so plain
+//! `cargo test` still passes in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fadl::cluster::{Cluster, CostModel};
+use fadl::data::synth::{self, DatasetSpec, ValueDist};
+use fadl::loss::Loss;
+use fadl::methods::{fadl::Fadl, TrainContext, Trainer};
+use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
+use fadl::runtime::{AotRuntime, DenseBlockShard};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Arc<AotRuntime>> {
+    artifacts_dir().map(|d| Arc::new(AotRuntime::load(&d).expect("load artifacts")))
+}
+
+/// A dense dataset matching the artifact feature dimension.
+fn dense_dataset(rt: &AotRuntime, n: usize) -> fadl::data::Dataset {
+    synth::generate(&DatasetSpec {
+        name: "dense-test".into(),
+        n,
+        m: rt.features,
+        avg_row_nnz: rt.features,
+        lambda: 1e-3,
+        values: ValueDist::Pixel,
+        label_noise: 0.05,
+        zipf_exponent: 1.0,
+        seed: 99,
+    })
+}
+
+#[test]
+fn aot_matches_native_backend_numerics() {
+    let Some(rt) = runtime() else { return };
+    let ds = dense_dataset(&rt, 300); // 2 blocks: one full + one ragged
+    let shard = Shard::whole(&ds);
+    let native = SparseShard::new(shard.clone());
+    let aot = DenseBlockShard::new(rt.clone(), &shard);
+    assert_eq!(aot.num_blocks(), 2);
+    assert_eq!(aot.n(), 300);
+
+    let mut rng = fadl::util::rng::Pcg64::new(3);
+    let w: Vec<f64> = (0..rt.features).map(|_| 0.05 * rng.normal()).collect();
+
+    let (l_native, g_native, z_native) = native.loss_grad(rt.loss, &w);
+    let (l_aot, g_aot, z_aot) = aot.loss_grad(rt.loss, &w);
+    assert!(
+        (l_native - l_aot).abs() < 1e-3 * l_native.abs().max(1.0),
+        "loss {l_native} vs {l_aot}"
+    );
+    assert_eq!(z_native.len(), z_aot.len());
+    for i in (0..z_native.len()).step_by(37) {
+        assert!((z_native[i] - z_aot[i]).abs() < 1e-3, "z[{i}]");
+    }
+    for j in (0..g_native.len()).step_by(31) {
+        assert!(
+            (g_native[j] - g_aot[j]).abs() < 1e-2 * g_native[j].abs().max(1.0),
+            "g[{j}]: {} vs {}",
+            g_native[j],
+            g_aot[j]
+        );
+    }
+
+    // hvp agreement at the cached margins
+    let s: Vec<f64> = (0..rt.features).map(|_| rng.normal()).collect();
+    let hv_native = native.hvp(rt.loss, &z_native, &s);
+    let hv_aot = aot.hvp(rt.loss, &z_aot, &s);
+    for j in (0..hv_native.len()).step_by(53) {
+        assert!(
+            (hv_native[j] - hv_aot[j]).abs() < 5e-2 * hv_native[j].abs().max(1.0),
+            "hv[{j}]: {} vs {}",
+            hv_native[j],
+            hv_aot[j]
+        );
+    }
+
+    // line-search agreement over cached margins
+    let e_native = native.margins(&s);
+    let e_aot = aot.margins(&s);
+    for t in [0.0, 0.5, 1.5] {
+        let (p_native, d_native) = native.linesearch_eval(rt.loss, &z_native, &e_native, t);
+        let (p_aot, d_aot) = aot.linesearch_eval(rt.loss, &z_aot, &e_aot, t);
+        assert!(
+            (p_native - p_aot).abs() < 1e-2 * p_native.abs().max(1.0),
+            "phi({t})"
+        );
+        assert!(
+            (d_native - d_aot).abs() < 1e-2 * d_native.abs().max(1.0).max(p_native.abs()),
+            "dphi({t}): {d_native} vs {d_aot}"
+        );
+    }
+}
+
+#[test]
+fn fadl_trains_identically_enough_on_both_backends() {
+    let Some(rt) = runtime() else { return };
+    let ds = dense_dataset(&rt, 512);
+    let p = 2;
+    let part = fadl::data::partition::ExamplePartition::build(
+        ds.n(),
+        p,
+        fadl::data::partition::Strategy::Contiguous,
+        0,
+    );
+    let obj = Objective::new(1e-3, Loss::SquaredHinge);
+    let run = |aot: bool| {
+        let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+            .map(|i| {
+                let shard = Shard::from_dataset(&ds, &part.assignments[i], &part.weights[i]);
+                if aot {
+                    Box::new(DenseBlockShard::new(rt.clone(), &shard)) as Box<dyn ShardCompute>
+                } else {
+                    Box::new(SparseShard::new(shard)) as Box<dyn ShardCompute>
+                }
+            })
+            .collect();
+        let cluster = Cluster::new(workers, CostModel::default());
+        let ctx = TrainContext {
+            max_outer: 6,
+            eps_g: 1e-10,
+            ..TrainContext::new(&cluster, obj)
+        };
+        let method = Fadl {
+            warm_start: false, // block backend has no per-example SGD
+            ..Default::default()
+        };
+        let (_, trace) = method.train(&ctx);
+        trace
+    };
+    let native = run(false);
+    let aot = run(true);
+    assert_eq!(native.records.len(), aot.records.len());
+    // the very first record (pre-step) must agree to f32 tolerance
+    assert!(
+        (native.records[0].f - aot.records[0].f).abs()
+            < 1e-3 * native.records[0].f.abs().max(1.0),
+        "initial f: {} vs {}",
+        native.records[0].f,
+        aot.records[0].f
+    );
+    // CG inside TRON is chaotic w.r.t. f32 rounding, so the *paths*
+    // may diverge; the contract is that both are monotone descent runs
+    // that make comparable progress.
+    for t in [&native, &aot] {
+        for w in t.records.windows(2) {
+            assert!(w[1].f <= w[0].f + 1e-6, "non-monotone");
+        }
+    }
+    let drop_native = native.records[0].f - native.best_f();
+    let drop_aot = aot.records[0].f - aot.best_f();
+    assert!(
+        drop_aot > 0.5 * drop_native,
+        "AOT backend made too little progress: {drop_aot} vs {drop_native}"
+    );
+}
+
+#[test]
+fn runtime_rejects_dimension_mismatch() {
+    let Some(rt) = runtime() else { return };
+    let ds = synth::quick(32, rt.features + 1, 8, 1);
+    let shard = Shard::whole(&ds);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        DenseBlockShard::new(rt.clone(), &shard)
+    }));
+    assert!(result.is_err(), "mismatched m must panic with a clear message");
+}
+
+#[test]
+fn margins_artifact_agrees_with_csr() {
+    let Some(rt) = runtime() else { return };
+    let ds = dense_dataset(&rt, 256);
+    let shard = Shard::whole(&ds);
+    let native = SparseShard::new(shard.clone());
+    let aot = DenseBlockShard::new(rt.clone(), &shard);
+    let mut rng = fadl::util::rng::Pcg64::new(8);
+    let d: Vec<f64> = (0..rt.features).map(|_| rng.normal()).collect();
+    let e_native = native.margins(&d);
+    let e_aot = aot.margins(&d);
+    for i in (0..e_native.len()).step_by(17) {
+        assert!(
+            (e_native[i] - e_aot[i]).abs() < 2e-2 * e_native[i].abs().max(1.0),
+            "e[{i}]: {} vs {}",
+            e_native[i],
+            e_aot[i]
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Cross-module integration tests: the driver pipeline, every method on
+//! every Table-1 dataset shape, trace serialization, and the
+//! cross-method agreement that everything optimizes the same objective.
+
+use fadl::coordinator::config::Config;
+use fadl::coordinator::driver;
+use fadl::linalg;
+use fadl::metrics::auprc::auprc_of_model;
+
+fn small_cfg(dataset: &str, method: &str, p: usize) -> Config {
+    Config {
+        dataset: dataset.into(),
+        scale: 5e-5,
+        nodes: p,
+        method: method.into(),
+        max_outer: 25,
+        eps_g: 1e-9,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_methods_agree_on_the_optimum() {
+    // FADL, TERA and ADMM all minimize eq. (8); run each to (near)
+    // convergence on the same data and require consistent objectives.
+    let mut finals = Vec::new();
+    for method in ["fadl", "tera", "admm"] {
+        let cfg = Config {
+            quick_n: 400,
+            quick_m: 50,
+            quick_nnz: 10,
+            method: method.into(),
+            nodes: 4,
+            max_outer: 80,
+            eps_g: 1e-10,
+            lambda: Some(1e-2),
+            ..Default::default()
+        };
+        let exp = driver::prepare(&cfg).unwrap();
+        let (_, trace) = driver::run(&exp).unwrap();
+        finals.push((method, trace.best_f()));
+    }
+    let f0 = finals[0].1;
+    for (method, f) in &finals {
+        assert!(
+            (f - f0).abs() / f0 < 5e-3,
+            "{method}: {f} vs fadl {f0}"
+        );
+    }
+}
+
+#[test]
+fn every_paper_dataset_shape_trains() {
+    for dataset in ["kdd2010", "url", "webspam", "mnist8m", "rcv"] {
+        let cfg = small_cfg(dataset, "fadl", 4);
+        let exp = driver::prepare(&cfg).unwrap();
+        let (_, trace) = driver::run(&exp).unwrap();
+        let first = trace.records.first().unwrap().f;
+        let last = trace.records.last().unwrap().f;
+        assert!(last < first, "{dataset}: {first} -> {last}");
+        assert!(last.is_finite());
+    }
+}
+
+#[test]
+fn solutions_generalize_above_chance() {
+    let cfg = Config {
+        quick_n: 2_000,
+        quick_m: 200,
+        quick_nnz: 15,
+        nodes: 8,
+        max_outer: 30,
+        ..Default::default()
+    };
+    let exp = driver::prepare(&cfg).unwrap();
+    let (w, _) = driver::run(&exp).unwrap();
+    let base_rate = exp.test.positive_fraction();
+    let auprc = auprc_of_model(&exp.test, &w);
+    assert!(
+        auprc > base_rate + 0.15,
+        "AUPRC {auprc} vs base rate {base_rate}"
+    );
+}
+
+#[test]
+fn comm_pass_ordering_matches_table3() {
+    // per outer iteration: TERA ≥ 3 passes (grad + CG), FADL = 2,
+    // CoCoA = ADMM = 1 — the core cost claim of the paper.
+    let passes_per_iter = |method: &str| {
+        let mut cfg = small_cfg("url", method, 4);
+        cfg.warm_start = false;
+        cfg.max_outer = 4;
+        let exp = driver::prepare(&cfg).unwrap();
+        let (_, trace) = driver::run(&exp).unwrap();
+        let r = &trace.records;
+        (r.last().unwrap().comm_passes - r[0].comm_passes) / (r.len() - 1) as f64
+    };
+    let fadl = passes_per_iter("fadl");
+    let tera = passes_per_iter("tera");
+    let admm = passes_per_iter("admm");
+    let cocoa = passes_per_iter("cocoa");
+    assert!((fadl - 2.0).abs() < 1e-9, "fadl {fadl}");
+    assert!(tera >= 3.0, "tera {tera}");
+    assert!((admm - 1.0).abs() < 1e-9, "admm {admm}");
+    assert!((cocoa - 1.0).abs() < 1e-9, "cocoa {cocoa}");
+}
+
+#[test]
+fn fadl_beats_tera_on_comm_passes_high_dim() {
+    // the paper's headline: on high-dimensional data FADL reaches a
+    // given objective level in far fewer communication passes. Needs a
+    // scale where shards are meaningfully sized (the approximations
+    // degrade on toy shards — §4.7.1's P-dependence).
+    let f_star = {
+        let mut cfg = small_cfg("kdd2010", "tera", 1);
+        cfg.scale = 2e-4;
+        cfg.max_outer = 300;
+        cfg.eps_g = 1e-13;
+        let exp = driver::prepare(&cfg).unwrap();
+        driver::run(&exp).unwrap().1.best_f()
+    };
+    let run = |method: &str| {
+        let mut cfg = small_cfg("kdd2010", method, 8);
+        cfg.scale = 2e-4;
+        cfg.max_outer = 100;
+        let exp = driver::prepare(&cfg).unwrap();
+        driver::run(&exp).unwrap().1
+    };
+    let fadl = run("fadl");
+    let tera = run("tera");
+    // target: close 98% of the initial optimality gap (the gap is huge
+    // on this near-separable set, so multiplicative f*·(1+ε) is
+    // unreachable in a bounded run)
+    let f0 = fadl.records[0].f.max(tera.records[0].f);
+    let target = f_star + 0.02 * (f0 - f_star);
+    let fadl_cost = fadl.first_reaching_f(target).map(|r| r.comm_passes);
+    let tera_cost = tera.first_reaching_f(target).map(|r| r.comm_passes);
+    let (Some(fc), Some(tc)) = (fadl_cost, tera_cost) else {
+        panic!("a method never reached f* + 5%: fadl {fadl_cost:?} tera {tera_cost:?}");
+    };
+    assert!(fc < tc, "fadl {fc} passes vs tera {tc}");
+}
+
+#[test]
+fn trace_json_roundtrips_through_driver() {
+    let dir = std::env::temp_dir().join("fadl_integration_json");
+    let path = dir.join("t.json");
+    let mut cfg = small_cfg("rcv", "fadl", 2);
+    cfg.out_json = Some(path.to_string_lossy().into_owned());
+    cfg.max_outer = 3;
+    let exp = driver::prepare(&cfg).unwrap();
+    let (_, trace) = driver::run(&exp).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = fadl::util::json::parse(&text).unwrap();
+    assert_eq!(
+        parsed.get("f").unwrap().as_arr().unwrap().len(),
+        trace.records.len()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    // full pipeline determinism: same config ⇒ identical weights
+    let cfg = small_cfg("url", "fadl", 4);
+    let run = || {
+        let exp = driver::prepare(&cfg).unwrap();
+        driver::run(&exp).unwrap().0
+    };
+    let w1 = run();
+    let w2 = run();
+    assert_eq!(w1, w2);
+    assert!(linalg::norm(&w1) > 0.0);
+}
+
+#[test]
+fn gamma_shifts_the_time_balance_not_the_path() {
+    // raising γ must leave iterates identical but inflate comm time —
+    // the cost model is observability, not dynamics.
+    let run = |gamma: f64| {
+        let mut cfg = small_cfg("kdd2010", "fadl", 4);
+        cfg.cost.gamma = gamma;
+        cfg.max_outer = 6;
+        let exp = driver::prepare(&cfg).unwrap();
+        driver::run(&exp).unwrap()
+    };
+    let (w_lo, t_lo) = run(10.0);
+    let (w_hi, t_hi) = run(1000.0);
+    assert_eq!(w_lo, w_hi);
+    let last_lo = t_lo.records.last().unwrap();
+    let last_hi = t_hi.records.last().unwrap();
+    assert_eq!(last_lo.comm_passes, last_hi.comm_passes);
+    assert!(last_hi.sim_comm_secs > 10.0 * last_lo.sim_comm_secs);
+}

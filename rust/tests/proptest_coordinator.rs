@@ -1,0 +1,249 @@
+//! Property-based tests (in-repo shrinking harness, DESIGN.md §8) on
+//! the coordinator invariants: routing (partitioning), batching
+//! (AllReduce/aggregation), and state management (objective
+//! consistency, descent geometry).
+
+use fadl::cluster::{Cluster, CostModel};
+use fadl::data::partition::{ExamplePartition, Strategy};
+use fadl::data::synth;
+use fadl::linalg;
+use fadl::loss::Loss;
+use fadl::metrics::auprc::auprc;
+use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
+use fadl::util::proptest::{Gen, Pair, Runner, UsizeRange, VecF64};
+use fadl::util::rng::Pcg64;
+
+fn cluster_over(ds: &fadl::data::Dataset, p: usize, strategy: Strategy) -> Cluster {
+    let part = ExamplePartition::build(ds.n(), p, strategy, 13);
+    let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+        .map(|i| {
+            Box::new(SparseShard::new(Shard::from_dataset(
+                ds,
+                &part.assignments[i],
+                &part.weights[i],
+            ))) as Box<dyn ShardCompute>
+        })
+        .collect();
+    Cluster::new(workers, CostModel::default())
+}
+
+#[test]
+fn prop_partition_routes_every_example_once() {
+    // routing invariant: for any (n, p, strategy) the partition is a
+    // true partition — every example on exactly one node, weights sum n
+    let gen = Pair(UsizeRange(1, 500), UsizeRange(1, 64));
+    Runner::new(128, 0xA).run(&gen, |&(n, p)| {
+        for strategy in [Strategy::Contiguous, Strategy::RoundRobin, Strategy::Random] {
+            let part = ExamplePartition::build(n, p, strategy, 7);
+            part.validate(n, 1).map_err(|e| format!("{strategy:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resampling_preserves_objective_weight() {
+    let gen = Pair(UsizeRange(1, 200), UsizeRange(2, 16));
+    Runner::new(64, 0xB).run(&gen, |&(n, p)| {
+        let repl = 2.min(p);
+        let part = ExamplePartition::build_resampled(n, p, repl, 3);
+        part.validate(n, repl)?;
+        if (part.total_weight() - n as f64).abs() > 1e-6 {
+            return Err(format!("total weight {}", part.total_weight()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_equals_naive_sum() {
+    // batching invariant: the binary-tree AllReduce must agree with the
+    // naive sum to floating-point reassociation tolerance
+    let gen = Pair(UsizeRange(1, 24), UsizeRange(1, 40));
+    Runner::new(64, 0xC).run(&gen, |&(p, m)| {
+        let ds = synth::quick((p * 3).max(4), 8, 3, 1);
+        let cluster = cluster_over(&ds, p, Strategy::Contiguous);
+        let mut rng = Pcg64::new((p * 1000 + m) as u64);
+        let parts: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..m).map(|_| rng.normal()).collect())
+            .collect();
+        let naive: Vec<f64> = (0..m)
+            .map(|j| parts.iter().map(|v| v[j]).sum())
+            .collect();
+        let tree = cluster.allreduce(parts);
+        for j in 0..m {
+            if (tree[j] - naive[j]).abs() > 1e-9 * naive[j].abs().max(1.0) {
+                return Err(format!("coord {j}: {} vs {}", tree[j], naive[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_gradient_matches_single_machine_for_any_p() {
+    // state-management invariant: the distributed gradient pass is
+    // exactly the single-machine gradient for every partitioning
+    let gen = Pair(UsizeRange(1, 16), UsizeRange(0, 2));
+    Runner::new(32, 0xD).run(&gen, |&(p, strat)| {
+        let strategy = [Strategy::Contiguous, Strategy::RoundRobin, Strategy::Random][strat];
+        let ds = synth::quick(120, 30, 8, 5);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let mut rng = Pcg64::new(p as u64);
+        let w: Vec<f64> = (0..30).map(|_| 0.2 * rng.normal()).collect();
+        let (want_f, want_g) = obj.eval(&[&whole], &w);
+        let cluster = cluster_over(&ds, p, strategy);
+        let (loss_sum, mut g, _, _) = cluster.gradient_pass(obj.loss, &w);
+        obj.finish_grad(&w, &mut g);
+        if (obj.value_from(&w, loss_sum) - want_f).abs() > 1e-8 * want_f.abs().max(1.0) {
+            return Err(format!("value mismatch p={p}"));
+        }
+        for j in 0..30 {
+            if (g[j] - want_g[j]).abs() > 1e-8 {
+                return Err(format!("grad[{j}] p={p}: {} vs {}", g[j], want_g[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linesearch_phi_matches_direct_evaluation() {
+    // cached-margin line search ≡ full re-evaluation at w + t·d
+    let gen = Pair(UsizeRange(1, 8), VecF64 { min_len: 1, max_len: 1, lo: 0.0, hi: 4.0 });
+    Runner::new(32, 0xE).run(&gen, |(p, ts)| {
+        let t = ts[0];
+        let ds = synth::quick(80, 20, 6, 9);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_over(&ds, *p, Strategy::Contiguous);
+        let mut rng = Pcg64::new(*p as u64 + 77);
+        let w: Vec<f64> = (0..20).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..20).map(|_| 0.1 * rng.normal()).collect();
+        let (_, _, margins, _) = cluster.gradient_pass(obj.loss, &w);
+        let dirs = cluster.margins_pass(&d);
+        let (phi, _) = cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+        let mut wt = w.clone();
+        linalg::axpy(t, &d, &mut wt);
+        let direct = cluster.loss_pass(obj.loss, &wt);
+        if (phi - direct).abs() > 1e-8 * direct.abs().max(1.0) {
+            return Err(format!("t={t}: {phi} vs {direct}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fadl_direction_is_descent() {
+    // Lemma 5 geometry: the combined FADL direction satisfies
+    // −g·d > 0 for any partition count and any anchor
+    let gen = Pair(UsizeRange(1, 8), UsizeRange(0, 10_000));
+    Runner::new(24, 0xF).run(&gen, |&(p, seed)| {
+        use fadl::approx::{self, ApproxKind};
+        use fadl::optim::{tron::Tron, InnerOptimizer};
+        let ds = synth::quick(160, 24, 6, 21);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let cluster = cluster_over(&ds, p, Strategy::Contiguous);
+        let mut rng = Pcg64::new(seed as u64);
+        let w: Vec<f64> = (0..24).map(|_| 0.3 * rng.normal()).collect();
+        let (_, data_grad, margins, locals) = cluster.gradient_pass(obj.loss, &w);
+        let mut g = data_grad;
+        obj.finish_grad(&w, &mut g);
+        if linalg::norm(&g) < 1e-10 {
+            return Ok(()); // already optimal: no direction needed
+        }
+        let mut d = vec![0.0; 24];
+        for node in 0..p {
+            let ctx = approx::ApproxContext {
+                shard: cluster.workers[node].as_ref(),
+                loss: obj.loss,
+                lambda: obj.lambda,
+                p_nodes: p as f64,
+                anchor: w.clone(),
+                full_grad: g.clone(),
+                local_grad: locals[node].clone(),
+                anchor_margins: margins[node].clone(),
+            };
+            let mut fp = approx::build(ApproxKind::Quadratic, ctx, None);
+            let res = Tron::default().minimize(fp.as_mut(), 10);
+            for j in 0..24 {
+                d[j] += (res.w[j] - w[j]) / p as f64;
+            }
+        }
+        let gd = linalg::dot(&g, &d);
+        if gd >= 0.0 {
+            return Err(format!("non-descent: g·d = {gd}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_auprc_bounded_and_order_invariant() {
+    let gen = VecF64 {
+        min_len: 2,
+        max_len: 60,
+        lo: -1.0,
+        hi: 1.0,
+    };
+    Runner::new(128, 0x10).run(&gen, |scores| {
+        let mut rng = Pcg64::new(scores.len() as u64);
+        let labels: Vec<f64> = scores.iter().map(|_| rng.label(0.5)).collect();
+        let v = auprc(scores, &labels);
+        if !(0.0..=1.0).contains(&v) {
+            return Err(format!("auprc {v} out of [0,1]"));
+        }
+        // permuting (score, label) pairs must not change the value
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        rng.shuffle(&mut idx);
+        let s2: Vec<f64> = idx.iter().map(|&i| scores[i]).collect();
+        let l2: Vec<f64> = idx.iter().map(|&i| labels[i]).collect();
+        let v2 = auprc(&s2, &l2);
+        if (v - v2).abs() > 1e-12 {
+            return Err(format!("permutation changed auprc: {v} vs {v2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_monotone() {
+    // more nodes / bigger vectors never make a communication round
+    // cheaper (non-pipelined tree)
+    let gen = Pair(UsizeRange(2, 512), UsizeRange(1, 1_000_000));
+    Runner::new(128, 0x11).run(&gen, |&(p, m)| {
+        let c = CostModel::default();
+        if c.allreduce_units(m, p) < c.allreduce_units(m, p / 2 + 1) - 1e-9 {
+            return Err("allreduce cheaper with more nodes".into());
+        }
+        if m > 1 && c.allreduce_units(m, p) < c.allreduce_units(m - 1, p) {
+            return Err("allreduce cheaper with bigger vector".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clock_deltas_are_additive() {
+    let gen = VecF64 {
+        min_len: 1,
+        max_len: 20,
+        lo: 0.0,
+        hi: 1e6,
+    };
+    Runner::new(64, 0x12).run(&gen, |units| {
+        let mut clock = fadl::cluster::SimClock::default();
+        let mut total = 0.0;
+        for &u in units {
+            clock.comm_pass(u);
+            total += u;
+        }
+        if (clock.comm_units - total).abs() > 1e-6 * total.max(1.0) {
+            return Err(format!("{} vs {total}", clock.comm_units));
+        }
+        if clock.comm_passes != units.len() as f64 {
+            return Err("pass count mismatch".into());
+        }
+        Ok(())
+    });
+}
