@@ -1,0 +1,35 @@
+# Developer entry points. `make check` is what CI runs.
+
+CARGO ?= cargo
+
+.PHONY: check fmt clippy test build smoke bench artifacts
+
+## fmt --check + clippy -D warnings + tier-1 tests
+check: fmt clippy test
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## tier-1: cargo build --release && cargo test -q
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+## end-to-end TCP transport proof (P real worker processes on loopback)
+smoke:
+	$(CARGO) run --release --bin net_smoke
+
+bench:
+	$(CARGO) bench --bench hotpath
+	$(CARGO) bench --bench end_to_end
+
+## AOT artifacts for the (feature-gated) PJRT backend; needs a JAX
+## python environment, see python/compile/aot.py
+artifacts:
+	python3 python/compile/aot.py --out-dir artifacts

@@ -1,0 +1,57 @@
+//! Transport & topology walkthrough: the same FADL run under the three
+//! AllReduce topologies, with the simulated fabric cost next to the
+//! measured wall-clock the transport actually spent.
+//!
+//!   cargo run --example transports [-- --nodes 8 --max-outer 8]
+//!
+//! Every topology produces the same optimization path up to fp-rounding
+//! of the reduction order (and the *identical* path when you rerun a
+//! topology — schedules are deterministic). The simulated comm cost
+//! differs: flat serializes P−1 vector transfers through the master,
+//! the paper's binary tree pays ⌈log₂P⌉, the ring is bandwidth-optimal.
+//! For the multi-process TCP variant of the same comparison, run
+//! `cargo run --bin net_smoke -- --topology ring`.
+
+use fadl::coordinator::{config::Config, driver};
+use fadl::net::Topology;
+use fadl::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("transports", "compare AllReduce topologies")
+        .flag("nodes", "8", "cluster size P")
+        .flag("max-outer", "8", "outer iterations");
+    let a = match cli.parse_from(std::env::args().skip(1).collect()) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+
+    println!("topology  iters  comm  sim_comm_secs  meas_phase  meas_reduce  final_f");
+    for topology in Topology::all() {
+        let cfg = Config {
+            name: format!("transports-{}", topology.name()),
+            quick_n: 1200,
+            quick_m: 120,
+            quick_nnz: 12,
+            nodes: a.get_usize("nodes"),
+            max_outer: a.get_usize("max-outer"),
+            topology,
+            ..Config::default()
+        };
+        let exp = driver::prepare(&cfg).expect("prepare");
+        let (_, trace) = driver::run(&exp).expect("run");
+        let last = trace.records.last().expect("records");
+        println!(
+            "{:<8}  {:>5}  {:>4.0}  {:>13.6}  {:>10.4}  {:>11.5}  {:.8}",
+            topology.name(),
+            trace.records.len(),
+            last.comm_passes,
+            last.sim_comm_secs,
+            last.meas_phase_secs,
+            last.meas_reduce_secs,
+            last.f,
+        );
+    }
+}

@@ -99,6 +99,41 @@ fn main() {
         println!("{}", s.report());
     }
 
+    // ---- AllReduce topology schedules (net/) ----
+    // wall time of the plan execution plus the simulated fabric cost
+    // each topology would charge, side by side
+    {
+        use fadl::net::{topology, Topology};
+        let p = 8usize;
+        let m_ar = 100_000usize;
+        let mut trng = Pcg64::new(5);
+        let parts: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..m_ar).map(|_| trng.normal()).collect()).collect();
+        let cost = CostModel::default();
+        // clone-only baseline: the per-iteration parts.clone() below is
+        // identical across topologies — subtract this row to compare
+        // the schedules themselves
+        let s = bench.run("net/reduce baseline (clone only) P=8 m=100k", || {
+            black_box(black_box(&parts).clone());
+        });
+        println!("{}", s.report());
+        for topo in Topology::all() {
+            let plan = topo.plan(p, m_ar);
+            let s = bench.run(
+                &format!("net/reduce {} P={p} m=100k", topo.name()),
+                || {
+                    black_box(topology::reduce(black_box(parts.clone()), &plan));
+                },
+            );
+            println!(
+                "{}   [sim {:.2e} units, {:.1} vector-hops]",
+                s.report(),
+                cost.allreduce_units_topo(m_ar, p, topo),
+                plan.vector_hops()
+            );
+        }
+    }
+
     // ---- TRON inner solve on the quadratic approximation ----
     let obj = Objective::new(1e-4, Loss::SquaredHinge);
     let small = synth::quick(2_000, 2_000, 20, 4);

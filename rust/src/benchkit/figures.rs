@@ -218,7 +218,16 @@ mod tests {
         let mut clock = crate::cluster::SimClock::default();
         for i in 0..5 {
             clock.comm_pass(1.0);
-            trace.push(i, &clock, &cost, 0.0, 1.0, 1.0, 0.2 * i as f64);
+            trace.push(
+                i,
+                &clock,
+                &cost,
+                &crate::net::Measured::default(),
+                0.0,
+                1.0,
+                1.0,
+                0.2 * i as f64,
+            );
         }
         let (passes, _) = cost_to_auprc(&trace, 0.6, 0.001).unwrap();
         assert_eq!(passes, 4.0);

@@ -1,0 +1,145 @@
+//! `net_smoke` — end-to-end proof of the TCP transport.
+//!
+//! Trains FADL on the `quick` dataset twice: once on the in-process
+//! transport and once with P real worker OS processes over TCP
+//! loopback, then demands the two final objectives agree to ≤ 1e-10
+//! (they are in fact bitwise identical: both transports execute the
+//! same worker code and the same topology-scheduled reduction order).
+//! Also prints the per-iteration trace with both clocks — simulated
+//! seconds from the Appendix-A cost model next to the measured
+//! wall-clock and real bytes of the transport.
+//!
+//!   cargo run --bin net_smoke [-- --nodes 4 --topology tree]
+//!
+//! When the dedicated `worker` bin is not built alongside (e.g. plain
+//! `cargo run --bin net_smoke`), the driver re-executes *this* binary
+//! with `--worker`, which is handled below.
+
+use fadl::coordinator::{config::Config, driver, report};
+use fadl::metrics::Trace;
+use fadl::net::Topology;
+use fadl::util::cli::Cli;
+
+fn main() {
+    // self-exec fallback: serve as a worker when asked to
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(outcome) = fadl::net::worker::serve_if_requested(&raw) {
+        if let Err(e) = outcome {
+            eprintln!("net_smoke worker: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let cli = Cli::new("net_smoke", "TCP transport end-to-end smoke test")
+        .flag("nodes", "4", "worker process count P")
+        .flag("topology", "tree", "reduction topology: flat | tree | ring")
+        .flag("n", "1000", "quick dataset rows")
+        .flag("m", "60", "quick dataset features")
+        .flag("row-nnz", "10", "quick dataset nonzeros per row")
+        .flag("max-outer", "12", "outer iterations")
+        .flag("method", "fadl", "fadl variant to train");
+    let a = match cli.parse_from(raw) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let topology = Topology::from_name(a.get("topology")).unwrap_or_else(|| {
+        eprintln!("unknown topology {:?}", a.get("topology"));
+        std::process::exit(2);
+    });
+    let base = Config {
+        name: "net_smoke".into(),
+        quick_n: a.get_usize("n"),
+        quick_m: a.get_usize("m"),
+        quick_nnz: a.get_usize("row-nnz"),
+        nodes: a.get_usize("nodes"),
+        max_outer: a.get_usize("max-outer"),
+        method: a.get("method").to_string(),
+        topology,
+        ..Config::default()
+    };
+
+    let (f_in, trace_in) = run_transport(&base, "inproc");
+    let (f_tcp, trace_tcp) = run_transport(&base, "tcp");
+
+    println!("\n== trace (tcp transport: P = {} worker processes) ==", base.nodes);
+    print_trace(&trace_tcp);
+    println!("\n== trace (inproc transport) ==");
+    print_trace(&trace_in);
+
+    println!(
+        "\nfinal objective  inproc = {f_in:.15e}\n                 tcp    = {f_tcp:.15e}"
+    );
+    let tol = 1e-10 * f_in.abs().max(1.0);
+    let diff = (f_in - f_tcp).abs();
+    println!("|Δf| = {diff:.3e}  (tolerance {tol:.3e})");
+    let moved = trace_tcp.records.last().map(|r| r.net_bytes).unwrap_or(0.0);
+    println!("tcp bytes moved: {:.1} KiB", moved / 1024.0);
+    if diff <= tol && moved > 0.0 {
+        println!("net_smoke PASSED");
+    } else {
+        println!("net_smoke FAILED");
+        std::process::exit(1);
+    }
+}
+
+fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
+    let cfg = Config {
+        transport: transport.into(),
+        ..base.clone()
+    };
+    let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
+    let (_, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
+    println!(
+        "{transport}: {} iterations, topology {}, final f = {:.12e}",
+        trace.records.len(),
+        cfg.topology.name(),
+        trace.final_f()
+    );
+    (trace.final_f(), trace)
+}
+
+fn print_trace(trace: &Trace) {
+    let rows: Vec<Vec<String>> = trace
+        .records
+        .iter()
+        .map(|r| {
+            vec![
+                r.iter.to_string(),
+                format!("{:.0}", r.comm_passes),
+                format!("{:.6}", r.sim_secs),
+                format!("{:.4}", r.wall_secs),
+                format!("{:.4}", r.meas_phase_secs),
+                format!("{:.5}", r.meas_reduce_secs),
+                format!("{:.0}", r.net_bytes),
+                format!("{:.8}", r.f),
+                format!("{:.2e}", r.grad_norm),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &[
+                "iter",
+                "comm",
+                "sim_secs",
+                "wall_secs",
+                "meas_phase",
+                "meas_reduce",
+                "net_bytes",
+                "f",
+                "|g|",
+            ],
+            &rows,
+        )
+    );
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
+}

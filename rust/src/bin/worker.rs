@@ -1,0 +1,31 @@
+//! `worker` — one rank of the TCP transport.
+//!
+//! Spawned by the driver (`TcpDriver::launch`); not normally run by
+//! hand. Connects to the driver, receives its shard recipe, then
+//! serves BSP phase commands until `Shutdown`.
+//!
+//!   worker --connect 127.0.0.1:PORT
+
+use fadl::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("worker", "FADL tcp-transport worker process")
+        .flag("connect", "", "driver address host:port")
+        .switch("worker", "ignored (self-exec fallback compatibility)");
+    let args = match cli.parse_from(std::env::args().skip(1).collect()) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let connect = args.get("connect").to_string();
+    if connect.is_empty() {
+        eprintln!("worker: --connect is required (this bin is spawned by the driver)");
+        std::process::exit(2);
+    }
+    if let Err(e) = fadl::net::worker::serve(&connect) {
+        eprintln!("worker: {e}");
+        std::process::exit(1);
+    }
+}

@@ -57,6 +57,16 @@ impl SimClock {
         }
     }
 
+    /// Add another clock's accumulations onto this one. Phases build a
+    /// delta `SimClock` lock-free from per-worker costs and merge it
+    /// under a single lock acquisition (see `Cluster::charge`).
+    pub fn merge(&mut self, delta: &SimClock) {
+        self.compute_units += delta.compute_units;
+        self.comm_units += delta.comm_units;
+        self.comm_passes += delta.comm_passes;
+        self.scalar_rounds += delta.scalar_rounds;
+    }
+
     /// Difference snapshot (per-iteration deltas for traces).
     pub fn since(&self, earlier: &SimClock) -> SimClock {
         SimClock {
@@ -91,6 +101,22 @@ mod tests {
         assert_eq!(c.scalar_rounds, 1);
         assert_eq!(c.comm_units, 201.0);
         assert_eq!(c.total_units(), 201.0);
+    }
+
+    #[test]
+    fn merge_is_fieldwise_addition() {
+        let mut a = SimClock::default();
+        a.add_compute(10.0);
+        a.comm_pass(5.0);
+        let mut d = SimClock::default();
+        d.compute_phase(&[3.0, 7.0]);
+        d.comm_pass(2.0);
+        d.scalar_round(1.0);
+        a.merge(&d);
+        assert_eq!(a.compute_units, 17.0);
+        assert_eq!(a.comm_units, 8.0);
+        assert_eq!(a.comm_passes, 2.0);
+        assert_eq!(a.scalar_rounds, 1);
     }
 
     #[test]

@@ -36,7 +36,8 @@ impl Default for CostModel {
 }
 
 impl CostModel {
-    /// Cost in flop-equivalents of AllReduce-ing one m-vector over P nodes.
+    /// Cost in flop-equivalents of AllReduce-ing one m-vector over P
+    /// nodes on the binary tree (the paper's fabric).
     pub fn allreduce_units(&self, m: usize, p: usize) -> f64 {
         let tree = if self.pipelined {
             1.0
@@ -46,9 +47,62 @@ impl CostModel {
         self.gamma * m as f64 * tree + self.latency
     }
 
+    /// Topology-aware AllReduce cost (see `net::Topology`): the tree is
+    /// the paper's fabric and keeps the seed formula exactly (one
+    /// footnote-16 block-latency term); a flat gather serializes P−1
+    /// vector transfers over the master link and pays the per-message
+    /// latency on every one of them; the ring's reduce-scatter moves
+    /// 2·(P−1)/P of a vector per node but pays the per-round latency
+    /// 2·(P−1) times. Latency is charged per serialized round so the
+    /// flat/ring comparison is consistent in the latency-dominated
+    /// (small m, large P) regime.
+    pub fn allreduce_units_topo(
+        &self,
+        m: usize,
+        p: usize,
+        topo: crate::net::Topology,
+    ) -> f64 {
+        use crate::net::Topology;
+        match topo {
+            Topology::Tree => self.allreduce_units(m, p),
+            Topology::Flat => {
+                let hops = p.saturating_sub(1).max(1) as f64;
+                (self.gamma * m as f64 + self.latency) * hops
+            }
+            Topology::Ring => {
+                let pf = p.max(2) as f64;
+                let rounds = 2.0 * (pf - 1.0);
+                2.0 * self.gamma * m as f64 * (pf - 1.0) / pf + self.latency * rounds
+            }
+        }
+    }
+
     /// Cost of broadcasting one m-vector (same tree shape).
     pub fn broadcast_units(&self, m: usize, p: usize) -> f64 {
         self.allreduce_units(m, p)
+    }
+
+    /// Topology-aware broadcast cost: the tree keeps the seed formula;
+    /// flat sends P−1 copies over the master link; the ring pipelines a
+    /// single copy around P−1 hops.
+    pub fn broadcast_units_topo(
+        &self,
+        m: usize,
+        p: usize,
+        topo: crate::net::Topology,
+    ) -> f64 {
+        use crate::net::Topology;
+        match topo {
+            Topology::Tree => self.broadcast_units(m, p),
+            Topology::Flat => {
+                let hops = p.saturating_sub(1).max(1) as f64;
+                (self.gamma * m as f64 + self.latency) * hops
+            }
+            Topology::Ring => {
+                let hops = p.saturating_sub(1).max(1) as f64;
+                self.gamma * m as f64 + self.latency * hops
+            }
+        }
     }
 
     /// Cost of one scalar aggregation round (line-search t probes).
@@ -119,6 +173,35 @@ mod tests {
         };
         assert_eq!(c.allreduce_units(1, 2), 1.0 + 99.0);
         assert!(c.scalar_round_units(128) < c.allreduce_units(1_000_000, 128));
+    }
+
+    #[test]
+    fn topology_units_ordering_at_scale() {
+        use crate::net::Topology;
+        let c = CostModel::default(); // non-pipelined, γ = 500
+        let m = 1_000_000;
+        let p = 128;
+        let flat = c.allreduce_units_topo(m, p, Topology::Flat);
+        let tree = c.allreduce_units_topo(m, p, Topology::Tree);
+        let ring = c.allreduce_units_topo(m, p, Topology::Ring);
+        // bandwidth terms dominate at m = 1e6: ring < tree < flat
+        assert!(ring < tree, "{ring} !< {tree}");
+        assert!(tree < flat, "{tree} !< {flat}");
+        // tree default stays exactly the seed formula
+        assert_eq!(tree, c.allreduce_units(m, p));
+        // broadcast: ring pipelines one copy, flat pays P−1 copies
+        assert!(
+            c.broadcast_units_topo(m, p, Topology::Ring)
+                < c.broadcast_units_topo(m, p, Topology::Flat)
+        );
+        // latency-dominated regime (tiny m, large P): every topology
+        // pays latency per serialized round — flat's P−1 rounds must
+        // not be reported cheaper than ring's 2(P−1)/2
+        let tiny = 1;
+        let flat_lat = c.allreduce_units_topo(tiny, p, Topology::Flat);
+        let ring_lat = c.allreduce_units_topo(tiny, p, Topology::Ring);
+        assert!(flat_lat > (p - 1) as f64 * c.latency * 0.99, "{flat_lat}");
+        assert!(ring_lat / flat_lat < 2.5, "{ring_lat} vs {flat_lat}");
     }
 
     #[test]

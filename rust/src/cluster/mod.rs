@@ -1,13 +1,17 @@
-//! The simulated distributed environment.
+//! The distributed environment: a transport-pluggable cluster façade.
 //!
 //! The paper ran on a 379-node Hadoop cluster with an AllReduce binary
 //! tree between mappers (§4.1). We reproduce the *behaviourally
-//! relevant* parts in-process (DESIGN.md §4): P workers each holding an
-//! example shard, BSP-synchronized parallel phases (std::thread — real
-//! parallelism for wall time), a binary-tree AllReduce whose summation
-//! order actually follows the tree (bitwise-reproducible regardless of
-//! thread scheduling), and a virtual clock charging the Appendix-A cost
-//! model for every compute pass and every m-vector moved.
+//! relevant* parts behind [`crate::net::Transport`]: P workers each
+//! holding an example shard, BSP-synchronized parallel phases, a
+//! reduction whose summation order follows an explicit topology plan
+//! (bitwise-reproducible regardless of thread scheduling *and* of
+//! transport), and a virtual clock charging the Appendix-A cost model
+//! for every compute pass and every m-vector moved. The default
+//! transport is [`crate::net::InProc`] (the seed behaviour); the TCP
+//! transport runs the same phases against real worker processes, and
+//! real wall-clock/traffic is accumulated in [`Measured`] alongside
+//! the simulated clock.
 //!
 //! Every training method in [`crate::methods`] drives the same
 //! [`Cluster`]; the per-iteration clock snapshots become the
@@ -20,46 +24,90 @@ pub use clock::SimClock;
 pub use cost::CostModel;
 
 use std::sync::Mutex;
+use std::time::Instant;
 
-use crate::linalg;
+use crate::net::{
+    self, Command, InProc, InnerSolveSpec, Measured, Reply, Topology, Transport,
+};
 use crate::objective::ShardCompute;
 
-/// A simulated cluster of P workers plus the master-side clock.
+/// A cluster of P workers plus the master-side clocks: the simulated
+/// Appendix-A clock and the measured (wall/traffic) clock.
 pub struct Cluster {
-    pub workers: Vec<Box<dyn ShardCompute>>,
+    transport: Box<dyn Transport>,
     pub cost: CostModel,
     clock: Mutex<SimClock>,
+    measured: Mutex<Measured>,
+    topology: Topology,
     /// run worker phases on real threads (false = deterministic serial
     /// execution; the simulated clock is identical either way)
     pub threaded: bool,
 }
 
 impl Cluster {
+    /// In-process cluster over local shards (the default transport,
+    /// binary-tree topology — the seed behaviour).
     pub fn new(workers: Vec<Box<dyn ShardCompute>>, cost: CostModel) -> Cluster {
-        assert!(!workers.is_empty());
-        let m = workers[0].m();
-        assert!(workers.iter().all(|w| w.m() == m), "shards disagree on m");
+        Cluster::with_transport(Box::new(InProc::new(workers)), cost, Topology::Tree)
+    }
+
+    /// Cluster over an arbitrary transport (see [`crate::net`]).
+    pub fn with_transport(
+        transport: Box<dyn Transport>,
+        cost: CostModel,
+        topology: Topology,
+    ) -> Cluster {
+        assert!(transport.p() > 0);
         Cluster {
-            workers,
+            transport,
             cost,
             clock: Mutex::new(SimClock::default()),
+            measured: Mutex::new(Measured::default()),
+            topology,
             threaded: true,
         }
     }
 
     /// Number of nodes P.
     pub fn p(&self) -> usize {
-        self.workers.len()
+        self.transport.p()
     }
 
     /// Feature dimension m.
     pub fn m(&self) -> usize {
-        self.workers[0].m()
+        self.transport.m()
     }
 
     /// Total nonzeros across shards (the `nz` of eq. (21)).
     pub fn total_nnz(&self) -> usize {
-        self.workers.iter().map(|w| w.nnz()).sum()
+        self.transport.total_nnz()
+    }
+
+    /// The reduction topology in effect.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
+    }
+
+    /// Transport label ("inproc", "tcp") for reports.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// In-process shards, for methods built on closure phases
+    /// ([`Cluster::map`]). Panics on remote transports — those methods
+    /// require `transport = "inproc"`.
+    pub fn workers(&self) -> &[Box<dyn ShardCompute>] {
+        self.transport.local_workers().unwrap_or_else(|| {
+            panic!(
+                "the {:?} transport has no in-process workers; this method \
+                 requires transport = \"inproc\"",
+                self.transport.name()
+            )
+        })
     }
 
     /// Snapshot of the simulated clock.
@@ -67,130 +115,261 @@ impl Cluster {
         *self.clock.lock().unwrap()
     }
 
+    /// Snapshot of the measured (wall-clock / traffic) counters.
+    pub fn measured(&self) -> Measured {
+        *self.measured.lock().unwrap()
+    }
+
     pub fn reset_clock(&self) {
         *self.clock.lock().unwrap() = SimClock::default();
+        *self.measured.lock().unwrap() = Measured::default();
+    }
+
+    /// Apply a batch of charges with a single lock acquisition (phases
+    /// collect per-worker costs lock-free and charge once — at high P
+    /// this keeps the clock mutex out of the workers' way entirely).
+    fn charge(&self, delta: SimClock) {
+        self.clock.lock().unwrap().merge(&delta);
+    }
+
+    fn add_measured(&self, delta: &Measured) {
+        self.measured.lock().unwrap().merge(delta);
     }
 
     // -----------------------------------------------------------------
-    // Parallel phases
+    // Parallel phases (in-process closures)
     // -----------------------------------------------------------------
 
+    /// Run `f(p, worker)` on every worker without charging the clock;
+    /// returns results and per-worker costs. In-process transport only.
+    fn run_map<R, F>(&self, f: F) -> (Vec<R>, Vec<f64>)
+    where
+        R: Send,
+        F: Fn(usize, &dyn ShardCompute) -> (R, f64) + Sync,
+    {
+        let workers = self.workers();
+        let t0 = Instant::now();
+        let pairs = net::parallel_indexed(workers.len(), self.threaded, |i| {
+            f(i, workers[i].as_ref())
+        });
+        self.add_measured(&Measured {
+            phase_secs: t0.elapsed().as_secs_f64(),
+            ..Measured::default()
+        });
+        let mut out = Vec::with_capacity(pairs.len());
+        let mut costs = Vec::with_capacity(pairs.len());
+        for (r, c) in pairs {
+            out.push(r);
+            costs.push(c);
+        }
+        (out, costs)
+    }
+
     /// Run `f(p, worker)` on every worker (BSP phase). The closure
-    /// returns (result, cost_units); the clock advances by the max cost.
+    /// returns (result, cost_units); the clock advances by the max cost
+    /// (one lock per phase).
     pub fn map<R, F>(&self, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize, &dyn ShardCompute) -> (R, f64) + Sync,
     {
-        let p = self.workers.len();
-        let pairs: Vec<(R, f64)> = if self.threaded && p > 1 {
-            // Spawn at most ncpu OS threads and stride the P simulated
-            // workers across them: at P = 128 a thread-per-worker scheme
-            // spends more wall time in spawn/join than in compute (see
-            // EXPERIMENTS.md §Perf), and the virtual clock is identical
-            // either way because costs are collected per worker.
-            let threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(8)
-                .min(p);
-            let mut slots: Vec<Option<(R, f64)>> = Vec::with_capacity(p);
-            slots.resize_with(p, || None);
-            let slot_chunks: Vec<&mut [Option<(R, f64)>]> = {
-                // one contiguous chunk of the result buffer per thread
-                let base = p / threads;
-                let extra = p % threads;
-                let mut rest = slots.as_mut_slice();
-                let mut chunks = Vec::with_capacity(threads);
-                for t in 0..threads {
-                    let len = base + usize::from(t < extra);
-                    let (head, tail) = rest.split_at_mut(len);
-                    chunks.push(head);
-                    rest = tail;
-                }
-                chunks
-            };
-            std::thread::scope(|scope| {
-                let mut start = 0usize;
-                for chunk in slot_chunks {
-                    let begin = start;
-                    start += chunk.len();
-                    let f = &f;
-                    let workers = &self.workers;
-                    scope.spawn(move || {
-                        for (off, slot) in chunk.iter_mut().enumerate() {
-                            let idx = begin + off;
-                            *slot = Some(f(idx, workers[idx].as_ref()));
-                        }
-                    });
-                }
-            });
-            slots.into_iter().map(|s| s.unwrap()).collect()
-        } else {
-            self.workers
-                .iter()
-                .enumerate()
-                .map(|(p, w)| f(p, w.as_ref()))
-                .collect()
-        };
-        let costs: Vec<f64> = pairs.iter().map(|(_, c)| *c).collect();
-        self.clock.lock().unwrap().compute_phase(&costs);
-        pairs.into_iter().map(|(r, _)| r).collect()
+        let (out, costs) = self.run_map(f);
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        self.charge(delta);
+        out
     }
 
     // -----------------------------------------------------------------
     // Communication primitives
     // -----------------------------------------------------------------
 
-    /// Binary-tree AllReduce (sum) of per-worker m-vectors. The pairwise
-    /// summation follows the tree exactly, so results are reproducible
-    /// and match what the Hadoop tree would produce. Charges one
-    /// m-vector communication pass.
-    pub fn allreduce(&self, mut parts: Vec<Vec<f64>>) -> Vec<f64> {
-        assert_eq!(parts.len(), self.p());
+    /// Execute the topology's reduction plan driver-side. Returns the
+    /// sum and the simulated cost units of the collective.
+    fn reduce_timed(&self, parts: Vec<Vec<f64>>) -> (Vec<f64>, f64) {
         let m = parts[0].len();
-        // tree reduction: stride doubling (rank i ← rank i+s)
-        let mut stride = 1;
-        while stride < parts.len() {
-            let mut i = 0;
-            while i + stride < parts.len() {
-                let (lo, hi) = parts.split_at_mut(i + stride);
-                linalg::accum(&mut lo[i], &hi[0]);
-                i += stride * 2;
-            }
-            stride *= 2;
-        }
-        self.clock
-            .lock()
-            .unwrap()
-            .comm_pass(self.cost.allreduce_units(m, self.p()));
-        parts.swap_remove(0)
+        let p = parts.len();
+        let plan = self.topology.plan(p, m);
+        let t0 = Instant::now();
+        let sum = net::reduce(parts, &plan);
+        self.add_measured(&Measured {
+            reduce_secs: t0.elapsed().as_secs_f64(),
+            ..Measured::default()
+        });
+        (sum, self.cost.allreduce_units_topo(m, p, self.topology))
+    }
+
+    /// AllReduce (sum) of per-worker m-vectors following the selected
+    /// topology's fixed summation schedule (default: the §4.1 binary
+    /// tree, bitwise-identical to the seed implementation). Charges one
+    /// m-vector communication pass.
+    pub fn allreduce(&self, parts: Vec<Vec<f64>>) -> Vec<f64> {
+        assert_eq!(parts.len(), self.p());
+        let (sum, units) = self.reduce_timed(parts);
+        let mut delta = SimClock::default();
+        delta.comm_pass(units);
+        self.charge(delta);
+        sum
     }
 
     /// Charge the broadcast of one m-vector to all workers (the vector
     /// itself is shared memory here — only the clock moves).
     pub fn charge_broadcast(&self, m: usize) {
-        self.clock
-            .lock()
-            .unwrap()
-            .comm_pass(self.cost.broadcast_units(m, self.p()));
+        let mut delta = SimClock::default();
+        delta.comm_pass(self.cost.broadcast_units_topo(m, self.p(), self.topology));
+        self.charge(delta);
     }
 
     /// Charge one scalar aggregation round (line-search probe).
     pub fn charge_scalar_round(&self) {
-        self.clock
-            .lock()
-            .unwrap()
-            .scalar_round(self.cost.scalar_round_units(self.p()));
+        let mut delta = SimClock::default();
+        delta.scalar_round(self.cost.scalar_round_units(self.p()));
+        self.charge(delta);
     }
 
     /// Charge extra compute units outside a map phase (e.g. master-side
     /// vector arithmetic charged at one worker's rate).
     pub fn charge_compute(&self, units: f64) {
-        self.clock.lock().unwrap().add_compute(units);
+        let mut delta = SimClock::default();
+        delta.add_compute(units);
+        self.charge(delta);
     }
 
     // -----------------------------------------------------------------
-    // Composite operations shared by all methods
+    // Transport phases (named commands; work on every transport)
+    // -----------------------------------------------------------------
+
+    /// Execute a command on all workers, returning per-rank replies.
+    /// Panics on transport failure (a dead worker is unrecoverable
+    /// mid-training).
+    fn phase(&self, cmd: &Command) -> Vec<Reply> {
+        let out = self
+            .transport
+            .phase(cmd, self.threaded)
+            .unwrap_or_else(|e| {
+                panic!("{} transport phase failed: {e}", self.transport.name())
+            });
+        self.add_measured(&out.stats);
+        out.replies
+    }
+
+    /// Clear per-worker session state (start of a training run).
+    /// Free in the simulated cost model.
+    pub fn reset_phase(&self) {
+        let _ = self.phase(&Command::Reset);
+    }
+
+    /// Distributed gradient pass at replicated w (Algorithm 2 step 1):
+    /// every worker computes (Σ c·l, ∇L_p) and caches its margins
+    /// z_p = X_p·w and ∇L_p; the gradients are AllReduced. Charges the
+    /// compute phase plus one m-vector pass. Returns (Σ loss_p, Σ ∇L_p).
+    pub fn grad_phase(&self, loss: crate::loss::Loss, w: &[f64]) -> (f64, Vec<f64>) {
+        let replies = self.phase(&Command::Grad { loss, w: w.to_vec() });
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut losses = Vec::with_capacity(replies.len());
+        let mut grads = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let Reply::Grad { loss: lv, grad, units } = reply else {
+                panic!("grad phase: unexpected reply");
+            };
+            costs.push(units);
+            losses.push(lv);
+            grads.push(grad);
+        }
+        let (grad, comm_units) = self.reduce_timed(grads);
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.comm_pass(comm_units);
+        self.charge(delta);
+        let loss_sum: f64 = losses.iter().sum(); // piggybacks on the same pass
+        (loss_sum, grad)
+    }
+
+    /// Run the inner optimizer on every worker's local approximation
+    /// (Algorithm 2 steps 3–7). Pure computation (the spec's vectors
+    /// are replicated state). Returns per-rank (w_p, n_p).
+    pub fn inner_solve_phase(&self, spec: &InnerSolveSpec) -> Vec<(Vec<f64>, usize)> {
+        let replies = self.phase(&Command::InnerSolve(spec.clone()));
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut out = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let Reply::Solve { w, n, units } = reply else {
+                panic!("inner solve phase: unexpected reply");
+            };
+            costs.push(units);
+            out.push((w, n));
+        }
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        self.charge(delta);
+        out
+    }
+
+    /// Cache direction margins e_p = X_p·d on every worker (Algorithm 2
+    /// step 9): d is replicated after its AllReduce, so this is pure
+    /// computation.
+    pub fn dirs_phase(&self, d: &[f64]) {
+        let replies = self.phase(&Command::Dirs { d: d.to_vec() });
+        let costs: Vec<f64> = replies.iter().map(Reply::units).collect();
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        self.charge(delta);
+    }
+
+    /// One distributed Armijo–Wolfe probe over cached (z, e)
+    /// (Algorithm 2 step 10): aggregates two scalars per worker.
+    pub fn linesearch_phase(&self, loss: crate::loss::Loss, t: f64) -> (f64, f64) {
+        let replies = self.phase(&Command::Linesearch { loss, t });
+        let mut costs = Vec::with_capacity(replies.len());
+        let (mut phi, mut dphi) = (0.0, 0.0);
+        for reply in replies {
+            let Reply::Pair { a, b, units } = reply else {
+                panic!("linesearch phase: unexpected reply");
+            };
+            costs.push(units);
+            phi += a;
+            dphi += b;
+        }
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.scalar_round(self.cost.scalar_round_units(self.p()));
+        self.charge(delta);
+        (phi, dphi)
+    }
+
+    /// §4.3 SGD warm start on every worker's local objective. Returns
+    /// per-rank (local weights, per-feature counts). Charges the local
+    /// SGD passes; the caller aggregates via [`Cluster::allreduce`].
+    pub fn warm_phase(
+        &self,
+        loss: crate::loss::Loss,
+        lambda: f64,
+        epochs: usize,
+        seed: u64,
+    ) -> Vec<(Vec<f64>, Vec<f64>)> {
+        let replies = self.phase(&Command::Warmstart {
+            loss,
+            lambda,
+            epochs: epochs as u32,
+            seed,
+        });
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut out = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let Reply::Warm { w, counts, units } = reply else {
+                panic!("warm start phase: unexpected reply");
+            };
+            costs.push(units);
+            out.push((w, counts));
+        }
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        self.charge(delta);
+        out
+    }
+
+    // -----------------------------------------------------------------
+    // Composite operations shared by the in-process methods
     // -----------------------------------------------------------------
 
     /// Distributed gradient pass (Algorithm 2 step 1): every node holds
@@ -199,13 +378,14 @@ impl Cluster {
     /// paper's c3 counts come out to 1 per SQM inner step and 2 per FADL
     /// outer step), computes per-shard (loss, ∇L_p, z_p), AllReduces the
     /// gradient. Returns (Σ loss_p, Σ ∇L_p, per-worker margins,
-    /// per-worker ∇L_p).
+    /// per-worker ∇L_p). In-process transport only (the margins cross
+    /// the driver boundary); FADL uses [`Cluster::grad_phase`] instead.
     pub fn gradient_pass(
         &self,
         loss: crate::loss::Loss,
         w: &[f64],
     ) -> (f64, Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
-        let results = self.map(|_p, shard| {
+        let (results, costs) = self.run_map(|_p, shard| {
             let out = shard.loss_grad(loss, w);
             let units = 2.0 * 2.0 * shard.nnz() as f64; // two passes × 2 flops/nz
             (out, units)
@@ -220,7 +400,11 @@ impl Cluster {
             local_grads.push(g.clone());
             grads.push(g);
         }
-        let grad = self.allreduce(grads);
+        let (grad, comm_units) = self.reduce_timed(grads);
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.comm_pass(comm_units);
+        self.charge(delta);
         let loss_sum: f64 = losses.iter().sum(); // piggybacks on the same pass
         (loss_sum, grad, margins, local_grads)
     }
@@ -242,21 +426,29 @@ impl Cluster {
         margins: &[Vec<f64>],
         s: &[f64],
     ) -> Vec<f64> {
-        let parts = self.map(|p, shard| {
+        let (parts, costs) = self.run_map(|p, shard| {
             let hv = shard.hvp(loss, &margins[p], s);
             (hv, 2.0 * 2.0 * shard.nnz() as f64)
         });
-        self.allreduce(parts)
+        let (hv, comm_units) = self.reduce_timed(parts);
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.comm_pass(comm_units);
+        self.charge(delta);
+        hv
     }
 
     /// Distributed data-loss evaluation at w (one pass, scalar
     /// aggregation only — used by trust-region accept/reject and by dual
     /// methods' primal-objective traces).
     pub fn loss_pass(&self, loss: crate::loss::Loss, w: &[f64]) -> f64 {
-        let parts = self.map(|_p, shard| {
+        let (parts, costs) = self.run_map(|_p, shard| {
             (shard.loss_value(loss, w), 2.0 * shard.nnz() as f64)
         });
-        self.charge_scalar_round();
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.scalar_round(self.cost.scalar_round_units(self.p()));
+        self.charge(delta);
         parts.iter().sum()
     }
 
@@ -269,12 +461,15 @@ impl Cluster {
         dirs: &[Vec<f64>],
         t: f64,
     ) -> (f64, f64) {
-        let parts = self.map(|p, shard| {
+        let (parts, costs) = self.run_map(|p, shard| {
             let out = shard.linesearch_eval(loss, &margins[p], &dirs[p], t);
             // O(n_p) scalar work; charge one flop per example
             (out, margins[p].len() as f64)
         });
-        self.charge_scalar_round();
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.scalar_round(self.cost.scalar_round_units(self.p()));
+        self.charge(delta);
         parts
             .iter()
             .fold((0.0, 0.0), |acc, &(a, b)| (acc.0 + a, acc.1 + b))
@@ -325,6 +520,17 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn allreduce_exact_under_every_topology() {
+        for topo in Topology::all() {
+            let mut c = make_cluster(40, 10, 4, 1);
+            c.set_topology(topo);
+            let parts: Vec<Vec<f64>> = (0..4).map(|p| vec![p as f64 + 1.0; 10]).collect();
+            assert_eq!(c.allreduce(parts), vec![10.0; 10], "{topo:?}");
+            assert_eq!(c.clock().comm_passes, 1.0);
+        }
+    }
+
+    #[test]
     fn gradient_pass_equals_single_machine() {
         let ds = synth::quick(60, 20, 8, 3);
         let obj = Objective::new(1e-3, Loss::SquaredHinge);
@@ -345,6 +551,22 @@ pub(crate) mod tests {
         // one m-vector AllReduce = 1 comm pass (replicated-state model)
         assert_eq!(cluster.clock().comm_passes, 1.0);
         assert!(cluster.clock().compute_units > 0.0);
+    }
+
+    #[test]
+    fn grad_phase_matches_gradient_pass() {
+        // the named transport phase and the legacy composite op are the
+        // same computation — results and clock must agree exactly
+        let ds = synth::quick(80, 18, 6, 13);
+        let mut rng = crate::util::rng::Pcg64::new(14);
+        let w: Vec<f64> = (0..18).map(|_| 0.2 * rng.normal()).collect();
+        let a = cluster_from(&ds, 3);
+        let b = cluster_from(&ds, 3);
+        let (loss_a, grad_a, _, _) = a.gradient_pass(Loss::Logistic, &w);
+        let (loss_b, grad_b) = b.grad_phase(Loss::Logistic, &w);
+        assert_eq!(loss_a, loss_b);
+        assert_eq!(grad_a, grad_b);
+        assert_eq!(a.clock(), b.clock());
     }
 
     #[test]
@@ -378,6 +600,27 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn linesearch_phase_matches_linesearch_eval() {
+        let ds = synth::quick(50, 14, 4, 15);
+        let mut rng = crate::util::rng::Pcg64::new(16);
+        let w: Vec<f64> = (0..14).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..14).map(|_| 0.1 * rng.normal()).collect();
+
+        let legacy = cluster_from(&ds, 4);
+        let (_, _, margins, _) = legacy.gradient_pass(Loss::SquaredHinge, &w);
+        let dirs = legacy.margins_pass(&d);
+        let want = legacy.linesearch_eval(Loss::SquaredHinge, &margins, &dirs, 0.375);
+
+        let phased = cluster_from(&ds, 4);
+        phased.reset_phase();
+        let _ = phased.grad_phase(Loss::SquaredHinge, &w);
+        phased.dirs_phase(&d);
+        let got = phased.linesearch_phase(Loss::SquaredHinge, 0.375);
+        assert_eq!(want, got);
+        assert_eq!(legacy.clock(), phased.clock());
+    }
+
+    #[test]
     fn clock_charges_comm_per_vector_pass() {
         let c = make_cluster(30, 10, 2, 9);
         let before = c.clock();
@@ -387,6 +630,18 @@ pub(crate) mod tests {
         assert!(after.comm_units > before.comm_units);
         c.reset_clock();
         assert_eq!(c.clock(), SimClock::default());
+        assert_eq!(c.measured(), Measured::default());
+    }
+
+    #[test]
+    fn measured_clock_accumulates() {
+        let c = make_cluster(60, 12, 4, 10);
+        let w = vec![0.1; 12];
+        let _ = c.grad_phase(Loss::SquaredHinge, &w);
+        let meas = c.measured();
+        assert!(meas.phase_secs > 0.0, "phase wall-clock recorded");
+        // in-process transport moves no socket bytes
+        assert_eq!(meas.bytes_total(), 0);
     }
 
     #[test]

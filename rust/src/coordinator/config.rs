@@ -4,6 +4,7 @@
 use crate::cluster::CostModel;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
+use crate::net::Topology;
 use crate::util::toml;
 
 /// Where the per-shard compute runs.
@@ -40,6 +41,14 @@ pub struct Config {
     pub cost: CostModel,
     pub threaded: bool,
     pub partition: Strategy,
+    /// transport backend: "inproc" (simulated, default) or "tcp"
+    /// (P real worker processes over loopback)
+    pub transport: String,
+    /// AllReduce reduction topology (flat | tree | ring)
+    pub topology: Topology,
+    /// explicit worker executable for the tcp transport (empty = auto:
+    /// sibling `worker` bin, else self-exec with `--worker`)
+    pub worker_bin: String,
     // method
     pub method: String,
     pub k_hat: usize,
@@ -72,6 +81,9 @@ impl Default for Config {
             cost: CostModel::default(),
             threaded: true,
             partition: Strategy::Contiguous,
+            transport: "inproc".into(),
+            topology: Topology::Tree,
+            worker_bin: String::new(),
             method: "fadl".into(),
             k_hat: 10,
             inner: "tron".into(),
@@ -117,6 +129,14 @@ impl Config {
             "random" => Strategy::Random,
             other => return Err(format!("unknown partition strategy {other:?}")),
         };
+        cfg.transport = match doc.str_or("cluster.transport", &cfg.transport) {
+            t @ ("inproc" | "tcp") => t.to_string(),
+            other => return Err(format!("unknown transport {other:?}")),
+        };
+        let topo_name = doc.str_or("cluster.topology", cfg.topology.name());
+        cfg.topology = Topology::from_name(topo_name)
+            .ok_or_else(|| format!("unknown topology {topo_name:?}"))?;
+        cfg.worker_bin = doc.str_or("cluster.worker_bin", &cfg.worker_bin).to_string();
         cfg.method = doc.str_or("method.name", &cfg.method).to_string();
         cfg.k_hat = doc.usize_or("method.k_hat", cfg.k_hat);
         cfg.inner = doc.str_or("method.inner", &cfg.inner).to_string();
@@ -155,6 +175,20 @@ mod tests {
         assert_eq!(cfg.method, "fadl");
         assert_eq!(cfg.backend, Backend::Sparse);
         assert!(cfg.lambda.is_none());
+        assert_eq!(cfg.transport, "inproc");
+        assert_eq!(cfg.topology, Topology::Tree);
+        assert!(cfg.worker_bin.is_empty());
+    }
+
+    #[test]
+    fn transport_and_topology_parse() {
+        let cfg = Config::from_toml(
+            "[cluster]\ntransport = \"tcp\"\ntopology = \"ring\"\nworker_bin = \"/x/worker\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, "tcp");
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.worker_bin, "/x/worker");
     }
 
     #[test]
@@ -205,5 +239,7 @@ json = "out/fig5.json"
         assert!(Config::from_toml("[objective]\nloss = \"hinge\"").is_err());
         assert!(Config::from_toml("[backend]\nkind = \"gpu\"").is_err());
         assert!(Config::from_toml("[cluster]\npartition = \"hash\"").is_err());
+        assert!(Config::from_toml("[cluster]\ntransport = \"rdma\"").is_err());
+        assert!(Config::from_toml("[cluster]\ntopology = \"mesh\"").is_err());
     }
 }

@@ -12,6 +12,7 @@ use crate::data::partition::ExamplePartition;
 use crate::data::{libsvm, synth, Dataset};
 use crate::metrics::Trace;
 use crate::methods::{self, TrainContext};
+use crate::net::{TcpDriver, Transport, WorkerSetup};
 use crate::objective::{Objective, Shard, ShardCompute, SparseShard};
 use crate::runtime::{AotRuntime, DenseBlockShard};
 
@@ -37,6 +38,63 @@ pub fn build_dataset(cfg: &Config) -> Result<Dataset, String> {
     }
 }
 
+/// Train/test split for the config's dataset — the single source of
+/// truth shared by [`prepare`] and [`build_worker_shard`], so a TCP
+/// worker process reconstructs exactly the shards the in-process
+/// transport would hold.
+pub fn build_train_split(cfg: &Config) -> Result<(Dataset, Dataset), String> {
+    let ds = build_dataset(cfg)?;
+    ds.validate()?;
+    Ok(ds.split(cfg.test_fraction, cfg.seed ^ 0x5011))
+}
+
+/// The dataset/partition recipe a TCP worker needs (rank 0 template;
+/// `TcpDriver::launch` stamps each rank).
+pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
+    WorkerSetup {
+        rank: 0,
+        p,
+        dataset: cfg.dataset.clone(),
+        quick_n: cfg.quick_n,
+        quick_m: cfg.quick_m,
+        quick_nnz: cfg.quick_nnz,
+        scale: cfg.scale,
+        seed: cfg.seed,
+        test_fraction: cfg.test_fraction,
+        file_path: cfg.file_path.clone(),
+        partition: cfg.partition,
+    }
+}
+
+/// Rebuild one rank's shard from a [`WorkerSetup`] recipe (the worker
+/// process entry path — runs the same pipeline as [`build_cluster`]).
+pub fn build_worker_shard(setup: &WorkerSetup) -> Result<Box<dyn ShardCompute>, String> {
+    let cfg = Config {
+        dataset: setup.dataset.clone(),
+        quick_n: setup.quick_n,
+        quick_m: setup.quick_m,
+        quick_nnz: setup.quick_nnz,
+        scale: setup.scale,
+        seed: setup.seed,
+        test_fraction: setup.test_fraction,
+        file_path: setup.file_path.clone(),
+        partition: setup.partition,
+        nodes: setup.p,
+        ..Config::default()
+    };
+    if setup.rank >= setup.p {
+        return Err(format!("rank {} out of range (P = {})", setup.rank, setup.p));
+    }
+    let (train, _test) = build_train_split(&cfg)?;
+    let part = ExamplePartition::build(train.n(), setup.p, cfg.partition, cfg.seed);
+    part.validate(train.n(), 1)?;
+    Ok(Box::new(SparseShard::new(Shard::from_dataset(
+        &train,
+        &part.assignments[setup.rank],
+        &part.weights[setup.rank],
+    ))))
+}
+
 /// The λ for the experiment: explicit override or the Table-1 value.
 pub fn resolve_lambda(cfg: &Config) -> f64 {
     if let Some(l) = cfg.lambda {
@@ -55,6 +113,22 @@ pub fn build_cluster(
     p: usize,
     cost: CostModel,
 ) -> Result<Cluster, String> {
+    if cfg.transport == "tcp" {
+        if cfg.backend != Backend::Sparse {
+            return Err("the tcp transport supports the sparse backend only".into());
+        }
+        let transport = TcpDriver::launch(&worker_setup(cfg, p), &cfg.worker_bin)?;
+        if transport.m() != train.m() {
+            return Err(format!(
+                "tcp workers rebuilt m = {} but the driver dataset has m = {}",
+                transport.m(),
+                train.m()
+            ));
+        }
+        let mut cluster = Cluster::with_transport(Box::new(transport), cost, cfg.topology);
+        cluster.threaded = cfg.threaded;
+        return Ok(cluster);
+    }
     let part = ExamplePartition::build(train.n(), p, cfg.partition, cfg.seed);
     part.validate(train.n(), 1)?;
     let workers: Vec<Box<dyn ShardCompute>> = match cfg.backend {
@@ -93,14 +167,14 @@ pub fn build_cluster(
     };
     let mut cluster = Cluster::new(workers, cost);
     cluster.threaded = cfg.threaded;
+    cluster.set_topology(cfg.topology);
     Ok(cluster)
 }
 
 /// Materialize the experiment described by the config.
 pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
-    let ds = build_dataset(cfg)?;
-    ds.validate()?;
-    let (train, test) = ds.split(cfg.test_fraction, cfg.seed ^ 0x5011);
+    check_transport_support(cfg)?;
+    let (train, test) = build_train_split(cfg)?;
     let lambda = resolve_lambda(cfg);
     let cluster = build_cluster(cfg, &train, cfg.nodes, cfg.cost)?;
     Ok(Experiment {
@@ -112,10 +186,35 @@ pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
     })
 }
 
+/// The tcp transport serves the methods whose worker-side phases are
+/// fully expressed in the `net::Command` vocabulary — advertised by
+/// [`methods::Trainer::supports_remote_transport`] (currently the fadl
+/// family; TERA needs an Hvp command, ADMM/CoCoA/SSZ local-solve
+/// commands; see rust/src/net/README.md). Checked before any worker
+/// process is spawned.
+fn check_transport_support(cfg: &Config) -> Result<(), String> {
+    if cfg.transport == "tcp" && !build_method(cfg)?.supports_remote_transport() {
+        return Err(format!(
+            "method {:?} is not yet supported over the tcp transport \
+             (its phases are not expressed in the net::Command vocabulary)",
+            cfg.method
+        ));
+    }
+    Ok(())
+}
+
 /// Run the configured method on a prepared experiment.
 pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
     let cfg = &exp.config;
     let trainer = build_method(cfg)?;
+    // prepare() already gated before spawning workers; re-check here on
+    // the built trainer for callers that assembled an Experiment by hand
+    if cfg.transport == "tcp" && !trainer.supports_remote_transport() {
+        return Err(format!(
+            "method {:?} is not yet supported over the tcp transport",
+            cfg.method
+        ));
+    }
     let obj = Objective::new(exp.lambda, cfg.loss);
     let ctx = TrainContext {
         test_set: Some(&exp.test),
@@ -271,6 +370,44 @@ mod tests {
             ..quick_cfg()
         };
         assert!(build_dataset(&cfg2).is_err());
+    }
+
+    #[test]
+    fn worker_shard_matches_inproc_construction() {
+        // a TCP worker rebuilding its shard from the setup recipe must
+        // land on exactly the shard the in-process cluster would hold
+        let cfg = quick_cfg();
+        let exp = prepare(&cfg).unwrap();
+        let setup = worker_setup(&cfg, cfg.nodes);
+        for rank in 0..cfg.nodes {
+            let mut s = setup.clone();
+            s.rank = rank;
+            let shard = build_worker_shard(&s).unwrap();
+            let local = &exp.cluster.workers()[rank];
+            assert_eq!(shard.n(), local.n(), "rank {rank}");
+            assert_eq!(shard.m(), local.m(), "rank {rank}");
+            assert_eq!(shard.nnz(), local.nnz(), "rank {rank}");
+            let w: Vec<f64> = (0..shard.m()).map(|j| 0.01 * j as f64).collect();
+            let (la, ga, za) = shard.loss_grad(crate::loss::Loss::SquaredHinge, &w);
+            let (lb, gb, zb) = local.loss_grad(crate::loss::Loss::SquaredHinge, &w);
+            assert_eq!(la, lb, "rank {rank}");
+            assert_eq!(ga, gb, "rank {rank}");
+            assert_eq!(za, zb, "rank {rank}");
+        }
+        let mut bad = setup;
+        bad.rank = cfg.nodes;
+        assert!(build_worker_shard(&bad).is_err());
+    }
+
+    #[test]
+    fn tcp_transport_gates_unsupported_methods() {
+        let cfg = Config {
+            transport: "tcp".into(),
+            method: "tera".into(),
+            ..quick_cfg()
+        };
+        let err = prepare(&cfg).unwrap_err();
+        assert!(err.contains("tcp transport"), "{err}");
     }
 
     #[test]

@@ -96,7 +96,16 @@ mod tests {
         let mut clock = SimClock::default();
         for i in 0..30 {
             clock.comm_pass(10.0);
-            trace.push(i, &clock, &cost, 0.0, 100.0 / (i + 1) as f64, 1.0, f64::NAN);
+            trace.push(
+                i,
+                &clock,
+                &cost,
+                &crate::net::Measured::default(),
+                0.0,
+                100.0 / (i + 1) as f64,
+                1.0,
+                f64::NAN,
+            );
         }
         let s = trace_summary(&trace, 1.0);
         assert!(s.contains("method=fadl"));

@@ -23,8 +23,13 @@
 //! * [`optim`] — inner optimizers `M` with global linear rate: TRON,
 //!   L-BFGS, primal coordinate descent, SGD, SVRG; plus the
 //!   Armijo–Wolfe distributed line search of §3.4.
-//! * [`cluster`] — the simulated distributed environment: worker shards,
-//!   AllReduce binary tree, and the Appendix-A communication cost model.
+//! * [`cluster`] — the distributed environment façade: worker shards,
+//!   topology-scheduled AllReduce, and the Appendix-A communication
+//!   cost model (simulated clock) next to measured wall-clock/traffic.
+//! * [`net`] — the pluggable transport subsystem: the `Transport`
+//!   trait, the in-process backend, the multi-process TCP backend with
+//!   its length-prefixed wire format, and the flat/tree/ring reduction
+//!   topologies (see `rust/src/net/README.md`).
 //! * [`methods`] — FADL (Algorithm 2) and the paper's baselines: TERA
 //!   (SQM), ADMM, CoCoA, SSZ — plus the §5 feature-partitioning
 //!   extension.
@@ -43,6 +48,7 @@ pub mod linalg;
 pub mod loss;
 pub mod methods;
 pub mod metrics;
+pub mod net;
 pub mod objective;
 pub mod optim;
 pub mod runtime;

@@ -19,7 +19,19 @@ use fadl::metrics::log_rel_diff;
 use fadl::util::cli::Cli;
 
 fn main() {
-    let mut args = std::env::args().skip(1).peekable();
+    // tcp-transport self-exec fallback: when the dedicated `worker` bin
+    // is not built alongside, the driver re-executes this binary with
+    // `--worker --connect host:port` (see net::tcp::resolve_worker_command)
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(outcome) = fadl::net::worker::serve_if_requested(&all) {
+        if let Err(e) = outcome {
+            eprintln!("fadl worker: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let mut args = all.into_iter().peekable();
     let sub = args.peek().cloned().unwrap_or_else(|| "help".to_string());
     let rest: Vec<String> = args.skip(1).collect();
     match sub.as_str() {
@@ -56,6 +68,8 @@ fn cmd_train(argv: Vec<String>) {
         .flag("nodes", "", "override node count P")
         .flag("max-outer", "", "override outer-iteration cap")
         .flag("gamma", "", "override comm/comp ratio γ")
+        .flag("transport", "", "override transport: inproc | tcp")
+        .flag("topology", "", "override AllReduce topology: flat | tree | ring")
         .flag("out", "", "write the trace JSON here")
         .switch("no-warm-start", "disable the SGD warm start");
     let a = parse_or_exit(&cli, argv);
@@ -79,6 +93,16 @@ fn cmd_train(argv: Vec<String>) {
     if !a.get("gamma").is_empty() {
         cfg.cost.gamma = a.get_f64("gamma");
     }
+    if !a.get("transport").is_empty() {
+        cfg.transport = match a.get("transport") {
+            t @ ("inproc" | "tcp") => t.to_string(),
+            other => die(&format!("unknown transport {other:?}")),
+        };
+    }
+    if !a.get("topology").is_empty() {
+        cfg.topology = fadl::net::Topology::from_name(a.get("topology"))
+            .unwrap_or_else(|| die(&format!("unknown topology {:?}", a.get("topology"))));
+    }
     if !a.get("out").is_empty() {
         cfg.out_json = Some(a.get("out").to_string());
     }
@@ -88,7 +112,8 @@ fn cmd_train(argv: Vec<String>) {
 
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
     println!(
-        "experiment {}: dataset {} (n={}, m={}, nz={}), P={}, method={}, backend={:?}",
+        "experiment {}: dataset {} (n={}, m={}, nz={}), P={}, method={}, backend={:?}, \
+         transport={}, topology={}",
         cfg.name,
         exp.train.name,
         exp.train.n(),
@@ -97,6 +122,8 @@ fn cmd_train(argv: Vec<String>) {
         cfg.nodes,
         cfg.method,
         cfg.backend,
+        cfg.transport,
+        cfg.topology.name(),
     );
     let (w, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
     println!("{}", report::trace_summary(&trace, trace.best_f()));

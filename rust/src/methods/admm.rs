@@ -279,6 +279,7 @@ impl Admm {
                 it,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f_last,
                 f64::NAN,

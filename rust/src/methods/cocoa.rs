@@ -72,7 +72,7 @@ impl Trainer for CoCoA {
         // CoCoA's primal iterate must stay consistent with its duals)
         let mut w = vec![0.0; m];
         let mut alphas: Vec<Vec<f64>> = cluster
-            .workers
+            .workers()
             .iter()
             .map(|s| vec![0.0; s.n()])
             .collect();
@@ -135,6 +135,7 @@ impl Trainer for CoCoA {
                 it,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 f64::NAN,

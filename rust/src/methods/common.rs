@@ -12,50 +12,23 @@ use crate::util::rng::Pcg64;
 /// — feature j's average is weighted by how often j appears in each
 /// node's data, so features unseen by a node do not drag its average
 /// toward zero. Charges the SGD passes and the two aggregation passes.
+///
+/// The per-node SGD loop lives worker-side
+/// ([`crate::net::endpoint::local_warmstart`]) and runs through the
+/// `Warmstart` transport phase, so every warm-started method works
+/// unchanged over the TCP transport.
 pub fn sgd_warmstart(
     cluster: &Cluster,
     obj: Objective,
     epochs: usize,
     seed: u64,
 ) -> Vec<f64> {
-    let m = cluster.m();
-    let results = cluster.map(|p, shard| {
-        let Some(data) = shard.shard() else {
-            // block-only backend: contribute nothing (zero weight, zero counts)
-            return ((vec![0.0; m], vec![0u32; m]), 0.0);
-        };
-        let n = data.n();
-        if n == 0 {
-            return ((vec![0.0; m], vec![0u32; m]), 0.0);
-        }
-        // safe step size from the local Lipschitz bound
-        let mut max_row_sq: f64 = 0.0;
-        for i in 0..n {
-            max_row_sq = max_row_sq.max(data.x.row_norm_sq(i));
-        }
-        let eta = 0.5 / (max_row_sq * obj.loss.curvature_bound() + obj.lambda).max(1e-12);
-        let mut w = vec![0.0; m];
-        let mut rng = Pcg64::with_stream(seed, p as u64);
-        let mut order: Vec<usize> = (0..n).collect();
-        for _ in 0..epochs {
-            rng.shuffle(&mut order);
-            for &i in &order {
-                let z = data.x.row_dot(i, &w);
-                let dz = data.c[i] * obj.loss.dz(z, data.y[i]);
-                // w ← (1 − ηλ)w − η·dz·x_i
-                linalg::scale(1.0 - eta * obj.lambda, &mut w);
-                data.x.row_axpy(i, -eta * dz, &mut w);
-            }
-        }
-        let counts = shard.feature_counts();
-        ((w, counts), epochs as f64 * 2.0 * shard.nnz() as f64)
-    });
+    let results = cluster.warm_phase(obj.loss, obj.lambda, epochs, seed);
 
     // per-feature weighted average: two m-vector AllReduce passes
     let mut weighted: Vec<Vec<f64>> = Vec::with_capacity(results.len());
     let mut counts: Vec<Vec<f64>> = Vec::with_capacity(results.len());
-    for (w, c) in results {
-        let cf: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+    for (w, cf) in results {
         let wv: Vec<f64> = w.iter().zip(&cf).map(|(wj, cj)| wj * cj).collect();
         weighted.push(wv);
         counts.push(cf);

@@ -18,9 +18,10 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::approx::{self, ApproxKind, BfgsCurvature};
+use crate::approx::ApproxKind;
 use crate::linalg;
 use crate::metrics::Trace;
+use crate::net::InnerSolveSpec;
 use crate::optim::linesearch::LineSearch;
 use crate::optim::{self};
 
@@ -72,6 +73,12 @@ impl Trainer for Fadl {
         format!("fadl-{}", self.approx.name())
     }
 
+    // every phase of Algorithm 2 is expressed in the net::Command
+    // vocabulary (see train below), so FADL runs over any transport
+    fn supports_remote_transport(&self) -> bool {
+        true
+    }
+
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
@@ -85,15 +92,19 @@ impl Trainer for Fadl {
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
 
+        // FADL runs entirely on the named transport phases, so it works
+        // unchanged over the in-process *and* the TCP transport. The
+        // per-node state Algorithm 2 keeps local (margins z_p, ∇L_p,
+        // direction margins e_p, BFGS curvature) lives worker-side in
+        // net::WorkerState; Reset clears any previous run's leftovers.
+        cluster.reset_phase();
+
         let mut w = if self.warm_start {
             common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
         } else {
             ctx.w0.clone()
         };
 
-        // per-node BFGS curvature state (only used by ApproxKind::Bfgs)
-        let mut bfgs: Vec<BfgsCurvature> = vec![BfgsCurvature::default(); p];
-        let mut prev: Option<(Vec<f64>, Vec<f64>, Vec<Vec<f64>>)> = None; // (w, ∇L, ∇L_p per node)
         let mut g0_norm = None;
         // adaptive inner trust radius: the squared hinge is piecewise
         // quadratic, so the local models are only trustworthy within the
@@ -103,9 +114,9 @@ impl Trainer for Fadl {
         let mut trust_radius: Option<f64> = None;
 
         for r in 0..ctx.max_outer {
-            // ---- step 1: distributed gradient (by-product: margins) ----
-            let (loss_sum, data_grad, margins, local_grads) =
-                cluster.gradient_pass(obj.loss, &w);
+            // ---- step 1: distributed gradient (by-product: every
+            // worker caches its margins z_p and local gradient ∇L_p) ----
+            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
             let f = obj.value_from(&w, loss_sum);
             let mut g = data_grad.clone();
             obj.finish_grad(&w, &mut g);
@@ -116,6 +127,7 @@ impl Trainer for Fadl {
                 r,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
@@ -127,53 +139,26 @@ impl Trainer for Fadl {
                 break;
             }
 
-            // ---- BFGS cross-iteration curvature update ----
-            if self.approx == ApproxKind::Bfgs {
-                if let Some((w_prev, dg_prev, lg_prev)) = &prev {
-                    let s = linalg::sub(&w, w_prev);
-                    for node in 0..p {
-                        // y = Δ[∇(L − L_p)] for this node
-                        let mut y = linalg::sub(&data_grad, dg_prev);
-                        let dl = linalg::sub(&local_grads[node], &lg_prev[node]);
-                        linalg::axpy(-1.0, &dl, &mut y);
-                        bfgs[node].update(&s, &y);
-                    }
-                }
-                prev = Some((w.clone(), data_grad.clone(), local_grads.clone()));
-            }
-
             // ---- steps 3–7: local inner optimization on f̂_p ----
-            let kind = self.approx;
-            let k_hat = self.k_hat;
-            let w_anchor = w.clone();
-            let g_full = g.clone();
-            let inner: Box<dyn optim::InnerOptimizer> = if self.inner == "tron" {
-                Box::new(crate::optim::tron::Tron {
-                    init_radius: trust_radius,
-                    ..Default::default()
-                })
-            } else {
-                optim::by_name(&self.inner).unwrap()
+            // The BFGS cross-iteration curvature update happens on the
+            // worker (it only needs Δ∇L, shipped in the spec, plus the
+            // worker's own Δ∇L_p history).
+            let spec = InnerSolveSpec {
+                kind: self.approx,
+                inner: self.inner.clone(),
+                k_hat: self.k_hat,
+                trust_radius,
+                lambda: obj.lambda,
+                loss: obj.loss,
+                anchor: w.clone(),
+                full_grad: g.clone(),
+                data_grad: (self.approx == ApproxKind::Bfgs)
+                    .then(|| data_grad.clone()),
             };
-            let node_results = cluster.map(|node, shard| {
-                let ctx_p = approx::ApproxContext {
-                    shard,
-                    loss: obj.loss,
-                    lambda: obj.lambda,
-                    p_nodes: p as f64,
-                    anchor: w_anchor.clone(),
-                    full_grad: g_full.clone(),
-                    local_grad: local_grads[node].clone(),
-                    anchor_margins: margins[node].clone(),
-                };
-                let mut fp = approx::build(kind, ctx_p, Some(&bfgs[node]));
-                let result = inner.minimize(fp.as_mut(), k_hat);
-                let units = fp.passes() * 2.0 * shard.nnz() as f64;
-                ((result.w, shard.n()), units)
-            });
+            let node_results = cluster.inner_solve_phase(&spec);
 
             // ---- step 8: convex combination of directions (AllReduce) ----
-            let total_n: usize = node_results.iter().map(|(_, n)| n).sum();
+            let total_n: usize = node_results.iter().map(|(_, n)| *n).sum();
             let parts: Vec<Vec<f64>> = node_results
                 .into_iter()
                 .map(|(wp, np)| {
@@ -198,16 +183,16 @@ impl Trainer for Fadl {
                 gd = -linalg::dot(&g, &g);
             }
 
-            // ---- step 9: e_i = d·x_i (one pass, no communication) ----
-            let dirs = cluster.margins_pass(&d);
+            // ---- step 9: e_i = d·x_i (one pass, no communication;
+            // cached worker-side) ----
+            cluster.dirs_phase(&d);
 
             // ---- step 10: distributed Armijo–Wolfe line search ----
             let w_dot_d = linalg::dot(&w, &d);
             let d_dot_d = linalg::dot(&d, &d);
             let ls = LineSearch::default();
             let res = ls.search(f, gd, |t| {
-                let (phi_data, dphi_data) =
-                    cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+                let (phi_data, dphi_data) = cluster.linesearch_phase(obj.loss, t);
                 // add the analytically-known regularizer part
                 let reg = 0.5
                     * obj.lambda

@@ -134,6 +134,7 @@ impl Trainer for FadlFeature {
                 r,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
@@ -290,7 +291,7 @@ mod tests {
         let mut g = data_grad;
         obj.finish_grad(&vec![0.0; 10], &mut g);
         let ctx_p = approx::ApproxContext {
-            shard: cluster.workers[0].as_ref(),
+            shard: cluster.workers()[0].as_ref(),
             loss: obj.loss,
             lambda: obj.lambda,
             p_nodes: 1.0,

@@ -79,6 +79,16 @@ pub trait Trainer {
     /// Method label used in traces and figure legends.
     fn label(&self) -> String;
 
+    /// Whether [`Trainer::train`] drives the cluster exclusively
+    /// through the named transport phases (`Cluster::grad_phase` & co),
+    /// and therefore runs over remote transports such as tcp. Methods
+    /// that use in-process closure phases (`Cluster::map`) or direct
+    /// shard access must leave this false — the driver gates transport
+    /// selection on it before spawning any worker process.
+    fn supports_remote_transport(&self) -> bool {
+        false
+    }
+
     /// Run to termination; returns the final weights and the trace.
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace);
 }

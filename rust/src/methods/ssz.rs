@@ -121,6 +121,7 @@ impl Trainer for Ssz {
                 r,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,

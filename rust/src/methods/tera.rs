@@ -100,6 +100,7 @@ impl Tera {
                 r,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
@@ -200,6 +201,7 @@ impl Tera {
                 r,
                 &cluster.clock(),
                 &cluster.cost,
+                &cluster.measured(),
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,

@@ -1,7 +1,13 @@
 //! Convergence traces: the per-outer-iteration record every method
 //! emits, from which every figure of the paper is regenerated.
+//!
+//! Since the transport subsystem landed, each record carries *both*
+//! clocks: the simulated Appendix-A clock (`sim_*`) and the measured
+//! wall-clock/traffic of the real transport (`meas_*`, `net_bytes`) —
+//! the columns the cost model is validated against (`net_smoke`).
 
 use crate::cluster::SimClock;
+use crate::net::Measured;
 use crate::util::json::{arr_f64, obj, Json};
 
 /// One outer-iteration snapshot.
@@ -16,6 +22,13 @@ pub struct IterRecord {
     pub sim_comm_secs: f64,
     /// cumulative wall-clock seconds of the native run
     pub wall_secs: f64,
+    /// cumulative measured wall-clock inside BSP transport phases (for
+    /// TCP: wire time + remote compute; 0 until the first phase)
+    pub meas_phase_secs: f64,
+    /// cumulative measured wall-clock executing reduction plans
+    pub meas_reduce_secs: f64,
+    /// cumulative real bytes moved over sockets (0 for in-process)
+    pub net_bytes: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -43,13 +56,15 @@ impl Trace {
         }
     }
 
-    /// Append a record built from a clock snapshot.
+    /// Append a record built from a simulated-clock snapshot plus the
+    /// transport's measured counters.
     #[allow(clippy::too_many_arguments)]
     pub fn push(
         &mut self,
         iter: usize,
         clock: &SimClock,
         cost: &crate::cluster::CostModel,
+        net: &Measured,
         wall_secs: f64,
         f: f64,
         grad_norm: f64,
@@ -62,6 +77,9 @@ impl Trace {
             sim_compute_secs: cost.units_to_secs(clock.compute_units),
             sim_comm_secs: cost.units_to_secs(clock.comm_units),
             wall_secs,
+            meas_phase_secs: net.phase_secs,
+            meas_reduce_secs: net.reduce_secs,
+            net_bytes: net.bytes_total() as f64,
             f,
             grad_norm,
             auprc,
@@ -131,6 +149,30 @@ impl Trace {
                 arr_f64(&self.records.iter().map(|r| r.wall_secs).collect::<Vec<_>>()),
             ),
             (
+                "meas_phase_secs",
+                arr_f64(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| r.meas_phase_secs)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "meas_reduce_secs",
+                arr_f64(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| r.meas_reduce_secs)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "net_bytes",
+                arr_f64(&self.records.iter().map(|r| r.net_bytes).collect::<Vec<_>>()),
+            ),
+            (
                 "f",
                 arr_f64(&self.records.iter().map(|r| r.f).collect::<Vec<_>>()),
             ),
@@ -155,13 +197,17 @@ mod tests {
         let mut t = Trace::new("fadl", "kdd2010", 8);
         let cost = CostModel::default();
         let mut clock = SimClock::default();
+        let mut net = Measured::default();
         for i in 0..5 {
             clock.add_compute(100.0);
             clock.comm_pass(50.0);
+            net.phase_secs += 0.01;
+            net.bytes_rx += 1000;
             t.push(
                 i,
                 &clock,
                 &cost,
+                &net,
                 i as f64 * 0.1,
                 10.0 / (i + 1) as f64,
                 1.0 / (i + 1) as f64,
@@ -182,6 +228,15 @@ mod tests {
     }
 
     #[test]
+    fn measured_columns_accumulate() {
+        let t = sample_trace();
+        assert!((t.records[4].meas_phase_secs - 0.05).abs() < 1e-12);
+        assert_eq!(t.records[4].net_bytes, 5000.0);
+        assert_eq!(t.records[0].net_bytes, 1000.0);
+        assert_eq!(t.records[4].meas_reduce_secs, 0.0);
+    }
+
+    #[test]
     fn stopping_rules() {
         let t = sample_trace();
         let r = t.first_reaching_f(5.0).unwrap();
@@ -198,6 +253,13 @@ mod tests {
         let parsed = crate::util::json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed.get("method").unwrap().as_str(), Some("fadl"));
         assert_eq!(parsed.get("f").unwrap().as_arr().unwrap().len(), 5);
+        // both clocks present: simulated and measured wall-clock columns
+        assert_eq!(
+            parsed.get("meas_phase_secs").unwrap().as_arr().unwrap().len(),
+            5
+        );
+        assert_eq!(parsed.get("net_bytes").unwrap().as_arr().unwrap().len(), 5);
+        assert!(parsed.get("sim_secs").is_some());
     }
 
     #[test]

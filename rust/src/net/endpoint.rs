@@ -1,0 +1,285 @@
+//! Worker-side phase execution, shared verbatim by both transports.
+//!
+//! [`exec`] is the single implementation of the [`Command`] vocabulary:
+//! the in-process transport calls it on its worker threads, the TCP
+//! `worker` bin calls it in its frame loop. Having exactly one
+//! execution path is what makes the two transports agree to the last
+//! bit — there is no "remote flavour" of any computation.
+//!
+//! Session state that a real distributed worker would keep local
+//! (anchor margins z_p, direction margins e_p, the local gradient
+//! ∇L_p, BFGS curvature and its cross-iteration history) lives in
+//! [`WorkerState`] and never needs to cross the wire.
+
+use crate::approx::{self, ApproxKind, BfgsCurvature};
+use crate::linalg;
+use crate::loss::Loss;
+use crate::objective::ShardCompute;
+use crate::optim;
+use crate::util::rng::Pcg64;
+
+use super::{Command, Reply};
+
+/// Per-worker session state (one per shard, reset by [`Command::Reset`]).
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    pub rank: usize,
+    pub p: usize,
+    /// z_p = X_p·w at the current anchor (cached by `Grad`)
+    margins: Vec<f64>,
+    /// ∇L_p at the current anchor (cached by `Grad`)
+    local_grad: Vec<f64>,
+    /// e_p = X_p·d for the current direction (cached by `Dirs`)
+    dirs: Vec<f64>,
+    /// BFGS curvature accumulated across outer iterations
+    bfgs: BfgsCurvature,
+    /// previous (anchor, ∇L, ∇L_p) for the BFGS y-vector
+    prev: Option<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl WorkerState {
+    pub fn new(rank: usize, p: usize) -> WorkerState {
+        WorkerState {
+            rank,
+            p,
+            margins: Vec::new(),
+            local_grad: Vec::new(),
+            dirs: Vec::new(),
+            bfgs: BfgsCurvature::default(),
+            prev: None,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.margins.clear();
+        self.local_grad.clear();
+        self.dirs.clear();
+        self.bfgs = BfgsCurvature::default();
+        self.prev = None;
+    }
+}
+
+/// Execute one phase command against a shard. Pure compute — no clock,
+/// no I/O; cost units are returned inside the [`Reply`].
+pub fn exec(
+    shard: &dyn ShardCompute,
+    st: &mut WorkerState,
+    cmd: &Command,
+) -> Result<Reply, String> {
+    match cmd {
+        Command::Reset => {
+            st.reset();
+            Ok(Reply::Ack { units: 0.0 })
+        }
+        Command::Grad { loss, w } => {
+            let (loss_val, grad, z) = shard.loss_grad(*loss, w);
+            st.margins = z;
+            st.local_grad = grad.clone();
+            // two passes × 2 flops/nz (Appendix A)
+            let units = 2.0 * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Grad { loss: loss_val, grad, units })
+        }
+        Command::Dirs { d } => {
+            st.dirs = shard.margins(d);
+            Ok(Reply::Ack { units: 2.0 * shard.nnz() as f64 })
+        }
+        Command::Linesearch { loss, t } => {
+            if st.margins.len() != shard.n() || st.dirs.len() != shard.n() {
+                return Err(format!(
+                    "linesearch probe without cached margins/dirs \
+                     (rank {}: |z| = {}, |e| = {}, n = {})",
+                    st.rank,
+                    st.margins.len(),
+                    st.dirs.len(),
+                    shard.n()
+                ));
+            }
+            let (a, b) = shard.linesearch_eval(*loss, &st.margins, &st.dirs, *t);
+            // O(n_p) scalar work; charge one flop per example
+            Ok(Reply::Pair { a, b, units: st.margins.len() as f64 })
+        }
+        Command::InnerSolve(spec) => {
+            if st.local_grad.len() != shard.m() || st.margins.len() != shard.n() {
+                return Err(format!(
+                    "inner solve without a preceding gradient pass (rank {})",
+                    st.rank
+                ));
+            }
+            if spec.kind == ApproxKind::Bfgs {
+                let data_grad = spec.data_grad.as_ref().ok_or_else(|| {
+                    "BFGS inner solve needs the reduced data gradient".to_string()
+                })?;
+                if let Some((w_prev, dg_prev, lg_prev)) = &st.prev {
+                    // y = Δ[∇(L − L_p)] for this node (as in Fadl::train
+                    // before the transport refactor — op order preserved
+                    // for bitwise identity)
+                    let s = linalg::sub(&spec.anchor, w_prev);
+                    let mut y = linalg::sub(data_grad, dg_prev);
+                    let dl = linalg::sub(&st.local_grad, lg_prev);
+                    linalg::axpy(-1.0, &dl, &mut y);
+                    st.bfgs.update(&s, &y);
+                }
+                st.prev = Some((
+                    spec.anchor.clone(),
+                    data_grad.clone(),
+                    st.local_grad.clone(),
+                ));
+            }
+            let ctx_p = approx::ApproxContext {
+                shard,
+                loss: spec.loss,
+                lambda: spec.lambda,
+                p_nodes: st.p as f64,
+                anchor: spec.anchor.clone(),
+                full_grad: spec.full_grad.clone(),
+                local_grad: st.local_grad.clone(),
+                anchor_margins: st.margins.clone(),
+            };
+            let mut fp = approx::build(spec.kind, ctx_p, Some(&st.bfgs));
+            let inner = optim::build_inner(&spec.inner, spec.trust_radius)
+                .ok_or_else(|| format!("unknown inner optimizer {:?}", spec.inner))?;
+            let result = inner.minimize(fp.as_mut(), spec.k_hat);
+            let units = fp.passes() * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Solve { w: result.w, n: shard.n(), units })
+        }
+        Command::Warmstart { loss, lambda, epochs, seed } => {
+            let (w, counts, units) =
+                local_warmstart(shard, st.rank, *loss, *lambda, *epochs as usize, *seed);
+            Ok(Reply::Warm {
+                w,
+                counts: counts.into_iter().map(f64::from).collect(),
+                units,
+            })
+        }
+    }
+}
+
+/// One node's share of the §4.3 warm start (Agarwal et al. 2011):
+/// `epochs` epochs of SGD on the *local* objective λ/2‖w‖² + L_p(w).
+/// Returns (local weights, per-feature presence counts, cost units);
+/// the driver combines nodes per-feature (see
+/// [`crate::methods::common::sgd_warmstart`]).
+pub fn local_warmstart(
+    shard: &dyn ShardCompute,
+    rank: usize,
+    loss: Loss,
+    lambda: f64,
+    epochs: usize,
+    seed: u64,
+) -> (Vec<f64>, Vec<u32>, f64) {
+    let m = shard.m();
+    let Some(data) = shard.shard() else {
+        // block-only backend: contribute nothing (zero weight, zero counts)
+        return (vec![0.0; m], vec![0u32; m], 0.0);
+    };
+    let n = data.n();
+    if n == 0 {
+        return (vec![0.0; m], vec![0u32; m], 0.0);
+    }
+    // safe step size from the local Lipschitz bound
+    let mut max_row_sq: f64 = 0.0;
+    for i in 0..n {
+        max_row_sq = max_row_sq.max(data.x.row_norm_sq(i));
+    }
+    let eta = 0.5 / (max_row_sq * loss.curvature_bound() + lambda).max(1e-12);
+    let mut w = vec![0.0; m];
+    let mut rng = Pcg64::with_stream(seed, rank as u64);
+    let mut order: Vec<usize> = (0..n).collect();
+    for _ in 0..epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let z = data.x.row_dot(i, &w);
+            let dz = data.c[i] * loss.dz(z, data.y[i]);
+            // w ← (1 − ηλ)w − η·dz·x_i
+            linalg::scale(1.0 - eta * lambda, &mut w);
+            data.x.row_axpy(i, -eta * dz, &mut w);
+        }
+    }
+    let counts = shard.feature_counts();
+    (w, counts, epochs as f64 * 2.0 * shard.nnz() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::objective::{Shard, SparseShard};
+
+    fn shard_of(n: usize, m: usize, seed: u64) -> SparseShard {
+        SparseShard::new(Shard::whole(&synth::quick(n, m, 6, seed)))
+    }
+
+    #[test]
+    fn grad_caches_margins_then_linesearch_works() {
+        let sh = shard_of(50, 12, 1);
+        let mut st = WorkerState::new(0, 1);
+        let w = vec![0.1; 12];
+        let r = exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w })
+            .unwrap();
+        let Reply::Grad { grad, units, .. } = r else { panic!("wrong reply") };
+        assert_eq!(grad.len(), 12);
+        assert!(units > 0.0);
+        exec(&sh, &mut st, &Command::Dirs { d: vec![0.01; 12] }).unwrap();
+        let r = exec(
+            &sh,
+            &mut st,
+            &Command::Linesearch { loss: Loss::SquaredHinge, t: 0.0 },
+        )
+        .unwrap();
+        let Reply::Pair { a, .. } = r else { panic!("wrong reply") };
+        assert!(a.is_finite());
+    }
+
+    #[test]
+    fn linesearch_without_caches_errors() {
+        let sh = shard_of(20, 8, 2);
+        let mut st = WorkerState::new(0, 1);
+        let err = exec(
+            &sh,
+            &mut st,
+            &Command::Linesearch { loss: Loss::SquaredHinge, t: 0.5 },
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn inner_solve_requires_grad_first() {
+        let sh = shard_of(20, 8, 3);
+        let mut st = WorkerState::new(0, 2);
+        let spec = crate::net::InnerSolveSpec {
+            kind: ApproxKind::Quadratic,
+            inner: "tron".into(),
+            k_hat: 3,
+            trust_radius: None,
+            lambda: 1e-3,
+            loss: Loss::SquaredHinge,
+            anchor: vec![0.0; 8],
+            full_grad: vec![0.0; 8],
+            data_grad: None,
+        };
+        assert!(exec(&sh, &mut st, &Command::InnerSolve(spec)).is_err());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let sh = shard_of(30, 10, 4);
+        let mut st = WorkerState::new(0, 1);
+        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: vec![0.0; 10] })
+            .unwrap();
+        assert!(!st.margins.is_empty());
+        exec(&sh, &mut st, &Command::Reset).unwrap();
+        assert!(st.margins.is_empty() && st.local_grad.is_empty());
+    }
+
+    #[test]
+    fn warmstart_deterministic_per_rank() {
+        let sh = shard_of(60, 15, 5);
+        let (w1, c1, u1) = local_warmstart(&sh, 2, Loss::SquaredHinge, 1e-3, 3, 9);
+        let (w2, c2, u2) = local_warmstart(&sh, 2, Loss::SquaredHinge, 1e-3, 3, 9);
+        assert_eq!(w1, w2);
+        assert_eq!(c1, c2);
+        assert_eq!(u1, u2);
+        let (w3, _, _) = local_warmstart(&sh, 3, Loss::SquaredHinge, 1e-3, 3, 9);
+        assert_ne!(w1, w3, "rank must select a distinct RNG stream");
+    }
+}

@@ -1,0 +1,128 @@
+//! The in-process transport: the seed's simulated BSP cluster,
+//! unchanged semantics, now speaking the shared [`Command`] vocabulary.
+//!
+//! Workers are `ShardCompute` boxes in this process; a phase runs them
+//! on scoped threads (or serially when `threaded` is off — the results
+//! are identical either way because every worker's reply is collected
+//! into its own rank slot). Per-worker session state sits behind
+//! per-rank mutexes that are never contended: each rank is touched by
+//! exactly one thread per phase.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::objective::ShardCompute;
+
+use super::endpoint::{exec, WorkerState};
+use super::{parallel_indexed, Command, Measured, PhaseOutput, Transport};
+
+/// P in-process workers plus their per-rank session state.
+pub struct InProc {
+    workers: Vec<Box<dyn ShardCompute>>,
+    state: Vec<Mutex<WorkerState>>,
+}
+
+impl InProc {
+    pub fn new(workers: Vec<Box<dyn ShardCompute>>) -> InProc {
+        assert!(!workers.is_empty());
+        let m = workers[0].m();
+        assert!(workers.iter().all(|w| w.m() == m), "shards disagree on m");
+        let p = workers.len();
+        let state = (0..p).map(|rank| Mutex::new(WorkerState::new(rank, p))).collect();
+        InProc { workers, state }
+    }
+}
+
+impl Transport for InProc {
+    fn p(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn m(&self) -> usize {
+        self.workers[0].m()
+    }
+
+    fn total_nnz(&self) -> usize {
+        self.workers.iter().map(|w| w.nnz()).sum()
+    }
+
+    fn phase(&self, cmd: &Command, threaded: bool) -> Result<PhaseOutput, String> {
+        let t0 = Instant::now();
+        let results = parallel_indexed(self.workers.len(), threaded, |rank| {
+            let mut st = self.state[rank].lock().unwrap();
+            exec(self.workers[rank].as_ref(), &mut st, cmd)
+        });
+        let mut replies = Vec::with_capacity(results.len());
+        for r in results {
+            replies.push(r?);
+        }
+        Ok(PhaseOutput {
+            replies,
+            stats: Measured {
+                phase_secs: t0.elapsed().as_secs_f64(),
+                ..Measured::default()
+            },
+        })
+    }
+
+    fn local_workers(&self) -> Option<&[Box<dyn ShardCompute>]> {
+        Some(&self.workers)
+    }
+
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::loss::Loss;
+    use crate::net::Reply;
+    use crate::objective::{Shard, SparseShard};
+
+    fn transport(p: usize) -> InProc {
+        let ds = synth::quick(120, 16, 6, 11);
+        let part = crate::data::partition::ExamplePartition::build(
+            ds.n(),
+            p,
+            crate::data::partition::Strategy::Contiguous,
+            0,
+        );
+        InProc::new(
+            (0..p)
+                .map(|i| {
+                    Box::new(SparseShard::new(Shard::from_dataset(
+                        &ds,
+                        &part.assignments[i],
+                        &part.weights[i],
+                    ))) as Box<dyn ShardCompute>
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn threaded_and_serial_phases_agree() {
+        let t = transport(4);
+        let cmd = Command::Grad { loss: Loss::SquaredHinge, w: vec![0.05; 16] };
+        t.phase(&Command::Reset, true).unwrap();
+        let a = t.phase(&cmd, true).unwrap().replies;
+        t.phase(&Command::Reset, false).unwrap();
+        let b = t.phase(&cmd, false).unwrap().replies;
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(matches!(a[0], Reply::Grad { .. }));
+    }
+
+    #[test]
+    fn exposes_local_workers() {
+        let t = transport(3);
+        assert_eq!(t.local_workers().unwrap().len(), 3);
+        assert_eq!(t.p(), 3);
+        assert_eq!(t.m(), 16);
+        assert!(t.total_nnz() > 0);
+        assert_eq!(t.name(), "inproc");
+    }
+}

@@ -1,0 +1,311 @@
+//! The pluggable transport subsystem: real communication for the
+//! simulated cluster.
+//!
+//! The seed reproduction moved every byte through in-process function
+//! calls, so communication could only be *simulated* (Appendix-A cost
+//! units on a virtual clock) — never *measured*. This module abstracts
+//! the collective operations the training methods actually use behind
+//! [`Transport`] and provides two implementations:
+//!
+//! * [`inproc::InProc`] — the default: today's BSP-threaded in-process
+//!   workers, unchanged semantics, zero configuration.
+//! * [`tcp::TcpDriver`] — a real multi-process backend: P workers run
+//!   as separate OS processes (the `worker` bin), coordinated by the
+//!   driver over length-prefixed binary frames on TCP loopback (or any
+//!   reachable address).
+//!
+//! A BSP *phase* is one [`Command`] executed on every worker; per-rank
+//! results come back as [`Reply`]s and are reduced **driver-side** with
+//! a [`topology::ReducePlan`] — a fixed pairwise summation schedule
+//! (flat gather / §4.1 binary tree / ring), so sums are bitwise
+//! reproducible across thread schedules *and* transports. The physical
+//! routing of the TCP backend is a star (every worker ⇄ driver); the
+//! logical topology fixes the summation order and the simulated cost.
+//! A true peer-to-peer data plane is a ROADMAP item.
+//!
+//! See `rust/src/net/README.md` for the wire format and an operator's
+//! guide, and `cargo run --bin net_smoke` for the end-to-end proof that
+//! TCP training matches in-process training to the last bit.
+
+pub mod endpoint;
+pub mod inproc;
+pub mod tcp;
+pub mod topology;
+pub mod wire;
+pub mod worker;
+
+pub use endpoint::WorkerState;
+pub use inproc::InProc;
+pub use tcp::TcpDriver;
+pub use topology::{reduce, ReducePlan, Topology};
+
+use crate::approx::ApproxKind;
+use crate::data::partition::Strategy;
+use crate::loss::Loss;
+use crate::objective::ShardCompute;
+
+// ---------------------------------------------------------------------------
+// Phase vocabulary
+// ---------------------------------------------------------------------------
+
+/// One BSP phase command, executed by every worker against its shard
+/// and per-worker session state (cached margins z, direction margins e,
+/// local gradient, BFGS curvature). This is exactly the wire
+/// vocabulary; the in-process transport executes the same enum.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// Clear per-worker session state (start of a training run).
+    Reset,
+    /// Gradient pass at w: worker returns (Σ c·l, ∇L_p) and caches the
+    /// margins z_p = X_p·w and ∇L_p (Algorithm 2 step 1).
+    Grad { loss: Loss, w: Vec<f64> },
+    /// Cache direction margins e_p = X_p·d (Algorithm 2 step 9).
+    Dirs { d: Vec<f64> },
+    /// One Armijo–Wolfe probe over cached (z, e): returns (φ_p, φ'_p)
+    /// (Algorithm 2 step 10).
+    Linesearch { loss: Loss, t: f64 },
+    /// Run k̂ iterations of the inner optimizer M on the local
+    /// approximation f̂_p (Algorithm 2 steps 3–7).
+    InnerSolve(InnerSolveSpec),
+    /// §4.3 one-pass SGD warm start on the local objective; returns the
+    /// local weights and per-feature presence counts.
+    Warmstart {
+        loss: Loss,
+        lambda: f64,
+        epochs: u32,
+        seed: u64,
+    },
+}
+
+/// Everything a worker needs to build f̂_p and run the inner optimizer;
+/// the per-node inputs (∇L_p, z_p, BFGS state) are already cached
+/// worker-side by the preceding [`Command::Grad`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct InnerSolveSpec {
+    pub kind: ApproxKind,
+    /// inner optimizer name (see [`crate::optim::by_name`])
+    pub inner: String,
+    pub k_hat: usize,
+    /// explicit initial TRON trust radius carried across outer iters
+    pub trust_radius: Option<f64>,
+    pub lambda: f64,
+    pub loss: Loss,
+    /// the anchor w^r
+    pub anchor: Vec<f64>,
+    /// g^r = λw^r + ∇L(w^r)
+    pub full_grad: Vec<f64>,
+    /// ∇L(w^r) — only shipped for [`ApproxKind::Bfgs`], whose curvature
+    /// update needs Δ∇L across outer iterations
+    pub data_grad: Option<Vec<f64>>,
+}
+
+/// Per-worker phase result. `units` is the Appendix-A compute cost the
+/// worker spent (flop-equivalents), charged to the simulated clock by
+/// the driver as one BSP max.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Ack { units: f64 },
+    Grad { loss: f64, grad: Vec<f64>, units: f64 },
+    Pair { a: f64, b: f64, units: f64 },
+    Solve { w: Vec<f64>, n: usize, units: f64 },
+    Warm { w: Vec<f64>, counts: Vec<f64>, units: f64 },
+}
+
+impl Reply {
+    pub fn units(&self) -> f64 {
+        match self {
+            Reply::Ack { units }
+            | Reply::Grad { units, .. }
+            | Reply::Pair { units, .. }
+            | Reply::Solve { units, .. }
+            | Reply::Warm { units, .. } => *units,
+        }
+    }
+}
+
+/// Everything a worker process needs to rebuild its shard
+/// deterministically: dataset recipe + split + partition + rank. The
+/// worker reruns the exact driver pipeline
+/// ([`crate::coordinator::driver::build_worker_shard`]), so shard
+/// contents are identical to the in-process construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSetup {
+    pub rank: usize,
+    pub p: usize,
+    pub dataset: String,
+    pub quick_n: usize,
+    pub quick_m: usize,
+    pub quick_nnz: usize,
+    pub scale: f64,
+    pub seed: u64,
+    pub test_fraction: f64,
+    pub file_path: String,
+    pub partition: Strategy,
+}
+
+// ---------------------------------------------------------------------------
+// Measured (wall-clock) accounting
+// ---------------------------------------------------------------------------
+
+/// Real wall-clock and traffic spent in the transport — the measured
+/// counterpart of the simulated [`crate::cluster::SimClock`], recorded
+/// alongside it in every trace so the cost model can be validated
+/// against actual communication.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Measured {
+    /// seconds spent in BSP phases (command fan-out → last reply; for
+    /// TCP this includes wire time and waiting on remote compute)
+    pub phase_secs: f64,
+    /// seconds spent executing reduction plans driver-side
+    pub reduce_secs: f64,
+    /// bytes written to worker sockets (0 for in-process)
+    pub bytes_tx: u64,
+    /// bytes read from worker sockets (0 for in-process)
+    pub bytes_rx: u64,
+}
+
+impl Measured {
+    pub fn merge(&mut self, other: &Measured) {
+        self.phase_secs += other.phase_secs;
+        self.reduce_secs += other.reduce_secs;
+        self.bytes_tx += other.bytes_tx;
+        self.bytes_rx += other.bytes_rx;
+    }
+
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_tx + self.bytes_rx
+    }
+}
+
+/// Replies plus the wall-clock/traffic the phase cost.
+pub struct PhaseOutput {
+    pub replies: Vec<Reply>,
+    pub stats: Measured,
+}
+
+// ---------------------------------------------------------------------------
+// The Transport trait
+// ---------------------------------------------------------------------------
+
+/// A set of P workers that can execute named BSP phases. The cluster
+/// façade ([`crate::cluster::Cluster`]) owns the simulated clock and
+/// the reduction topology; transports own *where the workers live* and
+/// *how bytes reach them*.
+pub trait Transport: Send + Sync {
+    /// Number of workers P.
+    fn p(&self) -> usize;
+
+    /// Feature dimension m (agreed by every shard).
+    fn m(&self) -> usize;
+
+    /// Total nonzeros across shards (the `nz` of eq. (21)).
+    fn total_nnz(&self) -> usize;
+
+    /// Execute one command on every worker (BSP barrier: returns when
+    /// all replies are in, rank order preserved).
+    fn phase(&self, cmd: &Command, threaded: bool) -> Result<PhaseOutput, String>;
+
+    /// In-process shards for closure-based phases (`Cluster::map`).
+    /// `None` for remote transports — methods that need arbitrary local
+    /// closures only run on the in-process transport.
+    fn local_workers(&self) -> Option<&[Box<dyn ShardCompute>]> {
+        None
+    }
+
+    /// Transport label for traces and error messages.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// BSP scatter helper (shared by Cluster::map and InProc::phase)
+// ---------------------------------------------------------------------------
+
+/// Run `f(rank)` for every rank, on at most ncpu OS threads with the
+/// ranks strided across them in contiguous chunks (at P = 128 a
+/// thread-per-worker scheme spends more wall time in spawn/join than in
+/// compute; see EXPERIMENTS.md §Perf). Results come back in rank order.
+pub(crate) fn parallel_indexed<R, F>(p: usize, threaded: bool, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if !threaded || p <= 1 {
+        return (0..p).map(f).collect();
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8)
+        .min(p);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(p);
+    slots.resize_with(p, || None);
+    let slot_chunks: Vec<&mut [Option<R>]> = {
+        // one contiguous chunk of the result buffer per thread
+        let base = p / threads;
+        let extra = p % threads;
+        let mut rest = slots.as_mut_slice();
+        let mut chunks = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let len = base + usize::from(t < extra);
+            let (head, tail) = rest.split_at_mut(len);
+            chunks.push(head);
+            rest = tail;
+        }
+        chunks
+    };
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        for chunk in slot_chunks {
+            let begin = start;
+            start += chunk.len();
+            let f = &f;
+            scope.spawn(move || {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(begin + off));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_indexed_preserves_rank_order() {
+        for threaded in [false, true] {
+            for p in [1usize, 2, 3, 8, 29] {
+                let out = parallel_indexed(p, threaded, |i| i * i);
+                assert_eq!(out, (0..p).map(|i| i * i).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn measured_merges() {
+        let mut a = Measured {
+            phase_secs: 1.0,
+            reduce_secs: 0.5,
+            bytes_tx: 10,
+            bytes_rx: 20,
+        };
+        a.merge(&Measured {
+            phase_secs: 2.0,
+            reduce_secs: 0.25,
+            bytes_tx: 1,
+            bytes_rx: 2,
+        });
+        assert_eq!(a.phase_secs, 3.0);
+        assert_eq!(a.bytes_total(), 33);
+    }
+
+    #[test]
+    fn reply_units_accessor() {
+        assert_eq!(Reply::Ack { units: 3.0 }.units(), 3.0);
+        assert_eq!(
+            Reply::Pair { a: 0.0, b: 0.0, units: 7.0 }.units(),
+            7.0
+        );
+    }
+}

@@ -1,0 +1,302 @@
+//! The TCP transport, driver side: P workers as separate OS processes.
+//!
+//! Lifecycle:
+//!
+//! 1. [`TcpDriver::launch`] binds an ephemeral loopback listener and
+//!    spawns P worker processes (the `worker` bin — or, as a fallback,
+//!    the current executable re-run with `--worker`).
+//! 2. Each worker connects; the driver assigns ranks in accept order
+//!    and sends a [`WorkerSetup`] frame. The worker rebuilds its shard
+//!    deterministically (same dataset recipe → same split → same
+//!    partition) and answers `Ready`.
+//! 3. Every BSP phase is one command frame fanned out to all workers
+//!    followed by one reply frame read back per rank, in rank order.
+//!    Workers compute concurrently — the fan-out completes before any
+//!    reply is awaited.
+//! 4. Drop sends `Shutdown` and reaps the children (kill after a grace
+//!    period).
+//!
+//! The physical routing is a star (worker ⇄ driver); reductions are
+//! executed driver-side with the run's [`super::Topology`] plan so the
+//! summation order — and therefore every bit of the result — matches
+//! the in-process transport. Real wall-clock and byte counts are
+//! recorded per phase and surface in traces as the measured columns.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command as ProcCommand, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Msg};
+use super::{Command, Measured, PhaseOutput, Reply, Transport, WorkerSetup};
+
+/// One worker connection (split stream for buffered reads and writes).
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    fn send(&mut self, msg: &Msg) -> Result<u64, String> {
+        let n = wire::send(&mut self.w, msg)?;
+        self.w.flush().map_err(|e| format!("flush: {e}"))?;
+        Ok(n)
+    }
+
+    fn send_raw(&mut self, payload: &[u8]) -> Result<u64, String> {
+        let n = wire::write_frame(&mut self.w, payload)?;
+        self.w.flush().map_err(|e| format!("flush: {e}"))?;
+        Ok(n)
+    }
+
+    fn recv(&mut self) -> Result<(Msg, u64), String> {
+        let frame = wire::read_frame(&mut self.r)?
+            .ok_or_else(|| "worker closed the connection".to_string())?;
+        let bytes = 4 + frame.len() as u64;
+        Ok((wire::decode(&frame)?, bytes))
+    }
+}
+
+/// Driver handle over P worker processes.
+pub struct TcpDriver {
+    conns: Mutex<Vec<Conn>>,
+    children: Mutex<Vec<Child>>,
+    p: usize,
+    m: usize,
+    nnz: usize,
+}
+
+impl TcpDriver {
+    /// Spawn and initialize P workers. `setup` is the rank-0 template
+    /// (every rank gets a copy with its own `rank`); `worker_bin` is an
+    /// explicit worker executable path, or empty for auto-resolution.
+    pub fn launch(setup: &WorkerSetup, worker_bin: &str) -> Result<TcpDriver, String> {
+        let p = setup.p;
+        assert!(p > 0, "launch with zero workers");
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| format!("bind loopback listener: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("listener addr: {e}"))?
+            .to_string();
+        let (bin, pre_args) = resolve_worker_command(worker_bin)?;
+
+        let mut children = Vec::with_capacity(p);
+        for _ in 0..p {
+            let child = ProcCommand::new(&bin)
+                .args(&pre_args)
+                .arg("--connect")
+                .arg(&addr)
+                .stdin(Stdio::null())
+                .stdout(Stdio::inherit())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| format!("spawn worker {}: {e}", bin.display()))?;
+            children.push(child);
+        }
+
+        let accept = |children: &mut Vec<Child>| -> Result<TcpStream, String> {
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| format!("listener nonblocking: {e}"))?;
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream
+                            .set_nonblocking(false)
+                            .map_err(|e| format!("stream blocking: {e}"))?;
+                        return Ok(stream);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        // surface early worker deaths instead of hanging
+                        for child in children.iter_mut() {
+                            if let Ok(Some(status)) = child.try_wait() {
+                                return Err(format!(
+                                    "worker exited during startup: {status}"
+                                ));
+                            }
+                        }
+                        if Instant::now() > deadline {
+                            return Err("timed out waiting for workers to connect".into());
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(format!("accept: {e}")),
+                }
+            }
+        };
+
+        let mut conns = Vec::with_capacity(p);
+        for rank in 0..p {
+            let stream = match accept(&mut children) {
+                Ok(s) => s,
+                Err(e) => {
+                    reap(&mut children);
+                    return Err(e);
+                }
+            };
+            let _ = stream.set_nodelay(true);
+            let rs = match stream.try_clone() {
+                Ok(rs) => rs,
+                Err(e) => {
+                    reap(&mut children);
+                    return Err(format!("clone stream: {e}"));
+                }
+            };
+            let mut conn = Conn {
+                r: BufReader::new(rs),
+                w: BufWriter::new(stream),
+            };
+            let mut rank_setup = setup.clone();
+            rank_setup.rank = rank;
+            if let Err(e) = conn.send(&Msg::Setup(rank_setup)) {
+                reap(&mut children);
+                return Err(format!("send setup to rank {rank}: {e}"));
+            }
+            conns.push(conn);
+        }
+
+        // collect Ready acknowledgements (workers build shards in parallel)
+        let mut m = 0usize;
+        let mut nnz = 0usize;
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            match conn.recv() {
+                Ok((Msg::Ready { m: wm, nnz: wnnz, .. }, _)) => {
+                    if rank == 0 {
+                        m = wm;
+                    } else if wm != m {
+                        reap(&mut children);
+                        return Err(format!(
+                            "rank {rank} reports m = {wm}, rank 0 reports m = {m}"
+                        ));
+                    }
+                    nnz += wnnz;
+                }
+                Ok((Msg::Abort { msg }, _)) => {
+                    reap(&mut children);
+                    return Err(format!("rank {rank} aborted during setup: {msg}"));
+                }
+                Ok((other, _)) => {
+                    reap(&mut children);
+                    return Err(format!("rank {rank}: unexpected setup reply {other:?}"));
+                }
+                Err(e) => {
+                    reap(&mut children);
+                    return Err(format!("rank {rank} setup: {e}"));
+                }
+            }
+        }
+
+        Ok(TcpDriver {
+            conns: Mutex::new(conns),
+            children: Mutex::new(children),
+            p,
+            m,
+            nnz,
+        })
+    }
+}
+
+/// Locate the worker executable: explicit path → sibling `worker` bin →
+/// this executable re-run with `--worker` (the `net_smoke` fallback for
+/// `cargo run --bin net_smoke`, which builds only the requested bin).
+fn resolve_worker_command(worker_bin: &str) -> Result<(PathBuf, Vec<String>), String> {
+    if !worker_bin.is_empty() {
+        return Ok((PathBuf::from(worker_bin), Vec::new()));
+    }
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    if let Some(dir) = exe.parent() {
+        let sibling = dir.join(format!("worker{}", std::env::consts::EXE_SUFFIX));
+        if sibling.is_file() {
+            return Ok((sibling, Vec::new()));
+        }
+    }
+    Ok((exe, vec!["--worker".to_string()]))
+}
+
+fn reap(children: &mut Vec<Child>) {
+    for child in children.iter_mut() {
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() > deadline => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                Err(_) => break,
+            }
+        }
+    }
+    children.clear();
+}
+
+impl Transport for TcpDriver {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn total_nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn phase(&self, cmd: &Command, _threaded: bool) -> Result<PhaseOutput, String> {
+        let t0 = Instant::now();
+        let mut stats = Measured::default();
+        let mut conns = self.conns.lock().unwrap();
+        // fan the command out to every rank first (one shared encoding),
+        // so remote compute overlaps across processes ...
+        let payload = wire::encode(&Msg::Cmd(cmd.clone()));
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            stats.bytes_tx += conn
+                .send_raw(&payload)
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+        }
+        // ... then collect replies in rank order (BSP barrier)
+        let mut replies: Vec<Reply> = Vec::with_capacity(self.p);
+        for rank in 0..self.p {
+            let (msg, bytes) = conns[rank]
+                .recv()
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.bytes_rx += bytes;
+            match msg {
+                Msg::Reply(reply) => replies.push(reply),
+                Msg::Abort { msg } => {
+                    return Err(format!("rank {rank} aborted: {msg}"))
+                }
+                other => {
+                    return Err(format!("rank {rank}: unexpected reply {other:?}"))
+                }
+            }
+        }
+        stats.phase_secs = t0.elapsed().as_secs_f64();
+        Ok(PhaseOutput { replies, stats })
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpDriver {
+    fn drop(&mut self) {
+        if let Ok(mut conns) = self.conns.lock() {
+            for conn in conns.iter_mut() {
+                let _ = conn.send(&Msg::Shutdown);
+            }
+            conns.clear(); // closes the sockets
+        }
+        if let Ok(mut children) = self.children.lock() {
+            reap(&mut children);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! AllReduce topologies: deterministic pairwise-summation schedules.
+//!
+//! The paper's grid ran a *binary tree* AllReduce between mappers
+//! (§4.1, the Terascale design of Agarwal et al. 2011); CoCoA-era
+//! systems favour bandwidth-optimal *rings*; a *flat* master gather is
+//! the baseline every Hadoop shuffle degenerates to. All three are
+//! expressed here as an explicit [`ReducePlan`]: an ordered list of
+//! `dst += src` accumulation steps over per-rank vectors (chunked for
+//! the ring). Because the plan fixes the floating-point summation
+//! order, a reduction is **bitwise reproducible** — independent of
+//! thread scheduling, of the transport that carried the parts (in-proc
+//! or TCP), and of the physical routing. Both the simulated cluster and
+//! the TCP driver execute the *same* plan through [`reduce`], which is
+//! what lets `net_smoke` demand exact agreement between transports.
+
+use crate::linalg;
+
+/// Logical reduction topology, selectable per run via
+/// `[cluster] topology` in the config (see `coordinator/config.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Master gathers and adds every rank's vector in rank order:
+    /// P−1 sequential vector transfers over the master link.
+    Flat,
+    /// Stride-doubling binary tree (the paper's §4.1 AllReduce; the
+    /// default, and bitwise-identical to the seed implementation).
+    Tree,
+    /// Bandwidth-optimal ring: the vector is split into P chunks and
+    /// chunk c is accumulated travelling around the ring starting at
+    /// rank c (the reduce-scatter half of ring-allreduce).
+    Ring,
+}
+
+impl Topology {
+    pub fn from_name(name: &str) -> Option<Topology> {
+        match name {
+            "flat" => Some(Topology::Flat),
+            "tree" => Some(Topology::Tree),
+            "ring" => Some(Topology::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Tree => "tree",
+            Topology::Ring => "ring",
+        }
+    }
+
+    pub fn all() -> [Topology; 3] {
+        [Topology::Flat, Topology::Tree, Topology::Ring]
+    }
+
+    /// The deterministic reduction schedule for P ranks and m-vectors.
+    pub fn plan(&self, p: usize, m: usize) -> ReducePlan {
+        assert!(p > 0, "plan over zero ranks");
+        let chunks = match self {
+            Topology::Flat => {
+                let steps = (1..p).map(|s| (0, s)).collect();
+                vec![Chunk { lo: 0, hi: m, steps, root: 0 }]
+            }
+            Topology::Tree => {
+                // stride doubling: rank i ← rank i+s — exactly the
+                // seed's in-process tree, so Tree stays bit-compatible.
+                let mut steps = Vec::new();
+                let mut stride = 1;
+                while stride < p {
+                    let mut i = 0;
+                    while i + stride < p {
+                        steps.push((i, i + stride));
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                vec![Chunk { lo: 0, hi: m, steps, root: 0 }]
+            }
+            Topology::Ring => (0..p)
+                .map(|c| {
+                    let steps = (0..p.saturating_sub(1))
+                        .map(|k| (((c + k + 1) % p), ((c + k) % p)))
+                        .collect();
+                    Chunk {
+                        lo: c * m / p,
+                        hi: (c + 1) * m / p,
+                        steps,
+                        root: (c + p - 1) % p,
+                    }
+                })
+                .collect(),
+        };
+        ReducePlan { p, m, chunks }
+    }
+}
+
+/// One contiguous index range reduced by an ordered step list; the
+/// chunk's sum ends up at `root`.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub lo: usize,
+    pub hi: usize,
+    /// ordered `dst += src` accumulations over the [lo, hi) range
+    pub steps: Vec<(usize, usize)>,
+    pub root: usize,
+}
+
+/// A full deterministic reduction schedule.
+#[derive(Clone, Debug)]
+pub struct ReducePlan {
+    pub p: usize,
+    pub m: usize,
+    pub chunks: Vec<Chunk>,
+}
+
+impl ReducePlan {
+    /// Vector hops the schedule moves (in units of full m-vectors) —
+    /// the *logical* traffic, used by the measured-traffic report.
+    pub fn vector_hops(&self) -> f64 {
+        let m = self.m.max(1) as f64;
+        self.chunks
+            .iter()
+            .map(|c| c.steps.len() as f64 * (c.hi - c.lo) as f64 / m)
+            .sum()
+    }
+}
+
+fn two_mut<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &T) {
+    assert_ne!(i, j, "reduction step with dst == src");
+    if i < j {
+        let (a, b) = v.split_at_mut(j);
+        (&mut a[i], &b[0])
+    } else {
+        let (a, b) = v.split_at_mut(i);
+        (&mut b[0], &a[j])
+    }
+}
+
+/// Execute a reduction plan over per-rank parts. The summation order is
+/// exactly the plan's step order, so the result is a pure function of
+/// (parts, plan) — no threading, no transport dependence.
+pub fn reduce(mut parts: Vec<Vec<f64>>, plan: &ReducePlan) -> Vec<f64> {
+    assert_eq!(parts.len(), plan.p, "parts/plan rank mismatch");
+    let m = parts[0].len();
+    assert!(
+        parts.iter().all(|v| v.len() == m),
+        "ragged parts in reduction"
+    );
+    assert_eq!(m, plan.m, "parts/plan length mismatch");
+    let mut out = vec![0.0; m];
+    for ch in &plan.chunks {
+        if ch.hi <= ch.lo {
+            continue;
+        }
+        for &(dst, src) in &ch.steps {
+            let (d, s) = two_mut(&mut parts, dst, src);
+            linalg::accum(&mut d[ch.lo..ch.hi], &s[ch.lo..ch.hi]);
+        }
+        out[ch.lo..ch.hi].copy_from_slice(&parts[ch.root][ch.lo..ch.hi]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn int_parts(p: usize, m: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..p)
+            .map(|_| (0..m).map(|_| rng.below(41) as f64 - 20.0).collect())
+            .collect()
+    }
+
+    fn naive_sum(parts: &[Vec<f64>]) -> Vec<f64> {
+        let m = parts[0].len();
+        let mut out = vec![0.0; m];
+        for part in parts {
+            for j in 0..m {
+                out[j] += part[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn all_topologies_sum_exactly() {
+        for topo in Topology::all() {
+            for p in 1..=9 {
+                for m in [1usize, 2, 5, 16, 33] {
+                    let parts = int_parts(p, m, 7 * p as u64 + m as u64);
+                    let want = naive_sum(&parts);
+                    let got = reduce(parts, &topo.plan(p, m));
+                    assert_eq!(got, want, "{topo:?} p={p} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_matches_seed_stride_doubling() {
+        // reference: the seed's in-place tree loop
+        let p = 7;
+        let m = 13;
+        let mut parts = int_parts(p, m, 42);
+        // perturb to non-integers so order matters
+        for (i, part) in parts.iter_mut().enumerate() {
+            for (j, v) in part.iter_mut().enumerate() {
+                *v += 1e-13 * ((i * 31 + j) as f64);
+            }
+        }
+        let mut legacy = parts.clone();
+        let mut stride = 1;
+        while stride < legacy.len() {
+            let mut i = 0;
+            while i + stride < legacy.len() {
+                let (lo, hi) = legacy.split_at_mut(i + stride);
+                crate::linalg::accum(&mut lo[i], &hi[0]);
+                i += stride * 2;
+            }
+            stride *= 2;
+        }
+        let want = legacy.swap_remove(0);
+        let got = reduce(parts, &Topology::Tree.plan(p, m));
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "tree plan diverged from the seed summation order"
+        );
+    }
+
+    #[test]
+    fn reduce_is_bitwise_deterministic() {
+        for topo in Topology::all() {
+            let mut rng = crate::util::rng::Pcg64::new(9);
+            let parts: Vec<Vec<f64>> =
+                (0..5).map(|_| (0..17).map(|_| rng.normal()).collect()).collect();
+            let plan = topo.plan(5, 17);
+            let a = reduce(parts.clone(), &plan);
+            let b = reduce(parts, &plan);
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn ring_handles_short_vectors() {
+        // m < P leaves some chunks empty — the sum must still be exact
+        let parts = int_parts(6, 3, 3);
+        let want = naive_sum(&parts);
+        assert_eq!(reduce(parts, &Topology::Ring.plan(6, 3)), want);
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        for topo in Topology::all() {
+            let parts = vec![vec![1.5, -2.5, 3.0]];
+            assert_eq!(
+                reduce(parts.clone(), &topo.plan(1, 3)),
+                parts[0],
+                "{topo:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn vector_hops_ordering() {
+        // flat moves P−1 full vectors; tree the same count but fewer
+        // serialized rounds; ring moves (P−1)/P per chunk × P chunks.
+        let p = 8;
+        let m = 64;
+        let flat = Topology::Flat.plan(p, m).vector_hops();
+        let tree = Topology::Tree.plan(p, m).vector_hops();
+        let ring = Topology::Ring.plan(p, m).vector_hops();
+        assert_eq!(flat, (p - 1) as f64);
+        assert_eq!(tree, (p - 1) as f64);
+        // P chunks × (P−1) steps × m/P elements each = P−1 full vectors
+        assert!((ring - (p - 1) as f64).abs() < 1e-12, "ring hops {ring}");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for topo in Topology::all() {
+            assert_eq!(Topology::from_name(topo.name()), Some(topo));
+        }
+        assert_eq!(Topology::from_name("mesh"), None);
+    }
+}

@@ -1,0 +1,648 @@
+//! Length-prefixed binary framing and the message codec (replaces
+//! `bincode` + `serde`, in the same spirit as `util::toml` / `util::json`).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! [ len: u32 ][ payload: len bytes ]
+//! payload = [ tag: u8 ][ body ]
+//! ```
+//!
+//! Body primitives:
+//!
+//! | type      | encoding                                   |
+//! |-----------|--------------------------------------------|
+//! | `u8/u32/u64` | little-endian fixed width               |
+//! | `usize`   | as `u64`                                   |
+//! | `f64`     | IEEE-754 bits, little-endian (lossless)    |
+//! | `bool`    | one byte, 0/1                              |
+//! | `String`  | `u32` length + UTF-8 bytes                 |
+//! | `Vec<f64>`| `u64` length + raw f64 bits                |
+//! | `Option<f64>` | one flag byte + value if present       |
+//!
+//! Floats cross the wire as raw bits, so a value decodes to exactly the
+//! f64 that was encoded — the property the bitwise-reproducibility
+//! tests in `rust/tests/proptest_net.rs` pin down.
+
+use std::io::{Read, Write};
+
+use crate::approx::ApproxKind;
+use crate::data::partition::Strategy;
+use crate::loss::Loss;
+
+use super::{Command, InnerSolveSpec, Reply, WorkerSetup};
+
+/// Hard cap on a single frame (guards against corrupt length prefixes).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Wire protocol version. Carried in `Setup` and echoed in `Ready`, so
+/// a stale `worker` binary from an earlier build fails fast at the
+/// handshake instead of silently rebuilding a subtly different shard.
+/// Bump on ANY change to the frame layout, message tags, field order,
+/// or the semantics of the shard-rebuild recipe.
+pub const PROTO_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one `[len][payload]` frame. Returns the bytes put on the wire.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<u64, String> {
+    if payload.len() > MAX_FRAME {
+        return Err(format!("frame too large: {} bytes", payload.len()));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(payload))
+        .map_err(|e| format!("write frame: {e}"))?;
+    Ok(4 + payload.len() as u64)
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary;
+/// EOF *inside* the 4-byte length prefix is a truncated stream and
+/// reported as an error, not an orderly close.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, String> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(format!(
+                    "stream truncated mid frame header ({got}/4 length bytes)"
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read frame length: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(format!("frame length {len} exceeds MAX_FRAME"));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| format!("read frame body ({len} bytes): {e}"))?;
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Appends primitives to a byte buffer.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub fn opt_vec_f64(&mut self, v: Option<&[f64]>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.vec_f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Cursor-based decoder over a frame payload.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated frame: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, String> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, String> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad utf-8 string: {e}"))
+    }
+
+    pub fn vec_f64(&mut self) -> Result<Vec<f64>, String> {
+        let len = self.u64()? as usize;
+        if len.saturating_mul(8) > self.buf.len() - self.pos {
+            return Err(format!("truncated f64 vector of claimed length {len}"));
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>, String> {
+        Ok(if self.u8()? == 1 { Some(self.f64()?) } else { None })
+    }
+
+    pub fn opt_vec_f64(&mut self) -> Result<Option<Vec<f64>>, String> {
+        Ok(if self.u8()? == 1 { Some(self.vec_f64()?) } else { None })
+    }
+
+    pub fn finish(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes after message body",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Named-enum helpers
+// ---------------------------------------------------------------------------
+
+fn strategy_name(s: Strategy) -> &'static str {
+    match s {
+        Strategy::Contiguous => "contiguous",
+        Strategy::RoundRobin => "round_robin",
+        Strategy::Random => "random",
+    }
+}
+
+fn strategy_from(name: &str) -> Result<Strategy, String> {
+    match name {
+        "contiguous" => Ok(Strategy::Contiguous),
+        "round_robin" => Ok(Strategy::RoundRobin),
+        "random" => Ok(Strategy::Random),
+        other => Err(format!("unknown partition strategy {other:?}")),
+    }
+}
+
+fn loss_from(name: &str) -> Result<Loss, String> {
+    Loss::from_name(name).ok_or_else(|| format!("unknown loss {name:?}"))
+}
+
+fn approx_from(name: &str) -> Result<ApproxKind, String> {
+    ApproxKind::from_name(name).ok_or_else(|| format!("unknown approximation {name:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Every message either side can send. Driver → worker: `Setup`,
+/// `Cmd`, `Shutdown`. Worker → driver: `Ready`, `Reply`, `Abort`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Setup(WorkerSetup),
+    Shutdown,
+    Ready { m: usize, n: usize, nnz: usize },
+    Abort { msg: String },
+    Cmd(Command),
+    Reply(Reply),
+}
+
+mod tag {
+    pub const SETUP: u8 = 1;
+    pub const SHUTDOWN: u8 = 2;
+    pub const READY: u8 = 3;
+    pub const ABORT: u8 = 4;
+    pub const CMD_RESET: u8 = 10;
+    pub const CMD_GRAD: u8 = 11;
+    pub const CMD_DIRS: u8 = 12;
+    pub const CMD_LINESEARCH: u8 = 13;
+    pub const CMD_INNER_SOLVE: u8 = 14;
+    pub const CMD_WARMSTART: u8 = 15;
+    pub const REPLY_ACK: u8 = 30;
+    pub const REPLY_GRAD: u8 = 31;
+    pub const REPLY_PAIR: u8 = 32;
+    pub const REPLY_SOLVE: u8 = 33;
+    pub const REPLY_WARM: u8 = 34;
+}
+
+fn check_version(got: u32) -> Result<(), String> {
+    if got != PROTO_VERSION {
+        return Err(format!(
+            "wire protocol version mismatch: peer speaks v{got}, this binary \
+             speaks v{PROTO_VERSION} — rebuild all binaries from the same tree \
+             (a stale `worker` executable is the usual cause)"
+        ));
+    }
+    Ok(())
+}
+
+/// Serialize a message into a frame payload.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut e = Enc::new();
+    match msg {
+        Msg::Setup(s) => {
+            e.u8(tag::SETUP);
+            e.u32(PROTO_VERSION);
+            e.usize(s.rank);
+            e.usize(s.p);
+            e.str(&s.dataset);
+            e.usize(s.quick_n);
+            e.usize(s.quick_m);
+            e.usize(s.quick_nnz);
+            e.f64(s.scale);
+            e.u64(s.seed);
+            e.f64(s.test_fraction);
+            e.str(&s.file_path);
+            e.str(strategy_name(s.partition));
+        }
+        Msg::Shutdown => e.u8(tag::SHUTDOWN),
+        Msg::Ready { m, n, nnz } => {
+            e.u8(tag::READY);
+            e.u32(PROTO_VERSION);
+            e.usize(*m);
+            e.usize(*n);
+            e.usize(*nnz);
+        }
+        Msg::Abort { msg } => {
+            e.u8(tag::ABORT);
+            e.str(msg);
+        }
+        Msg::Cmd(cmd) => match cmd {
+            Command::Reset => e.u8(tag::CMD_RESET),
+            Command::Grad { loss, w } => {
+                e.u8(tag::CMD_GRAD);
+                e.str(loss.name());
+                e.vec_f64(w);
+            }
+            Command::Dirs { d } => {
+                e.u8(tag::CMD_DIRS);
+                e.vec_f64(d);
+            }
+            Command::Linesearch { loss, t } => {
+                e.u8(tag::CMD_LINESEARCH);
+                e.str(loss.name());
+                e.f64(*t);
+            }
+            Command::InnerSolve(spec) => {
+                e.u8(tag::CMD_INNER_SOLVE);
+                e.str(spec.kind.name());
+                e.str(&spec.inner);
+                e.usize(spec.k_hat);
+                e.opt_f64(spec.trust_radius);
+                e.f64(spec.lambda);
+                e.str(spec.loss.name());
+                e.vec_f64(&spec.anchor);
+                e.vec_f64(&spec.full_grad);
+                e.opt_vec_f64(spec.data_grad.as_deref());
+            }
+            Command::Warmstart { loss, lambda, epochs, seed } => {
+                e.u8(tag::CMD_WARMSTART);
+                e.str(loss.name());
+                e.f64(*lambda);
+                e.u32(*epochs);
+                e.u64(*seed);
+            }
+        },
+        Msg::Reply(reply) => match reply {
+            Reply::Ack { units } => {
+                e.u8(tag::REPLY_ACK);
+                e.f64(*units);
+            }
+            Reply::Grad { loss, grad, units } => {
+                e.u8(tag::REPLY_GRAD);
+                e.f64(*loss);
+                e.vec_f64(grad);
+                e.f64(*units);
+            }
+            Reply::Pair { a, b, units } => {
+                e.u8(tag::REPLY_PAIR);
+                e.f64(*a);
+                e.f64(*b);
+                e.f64(*units);
+            }
+            Reply::Solve { w, n, units } => {
+                e.u8(tag::REPLY_SOLVE);
+                e.vec_f64(w);
+                e.usize(*n);
+                e.f64(*units);
+            }
+            Reply::Warm { w, counts, units } => {
+                e.u8(tag::REPLY_WARM);
+                e.vec_f64(w);
+                e.vec_f64(counts);
+                e.f64(*units);
+            }
+        },
+    }
+    e.buf
+}
+
+/// Deserialize a frame payload.
+pub fn decode(payload: &[u8]) -> Result<Msg, String> {
+    let mut d = Dec::new(payload);
+    let t = d.u8()?;
+    let msg = match t {
+        tag::SETUP => Msg::Setup(WorkerSetup {
+            rank: {
+                check_version(d.u32()?)?;
+                d.usize()?
+            },
+            p: d.usize()?,
+            dataset: d.str()?,
+            quick_n: d.usize()?,
+            quick_m: d.usize()?,
+            quick_nnz: d.usize()?,
+            scale: d.f64()?,
+            seed: d.u64()?,
+            test_fraction: d.f64()?,
+            file_path: d.str()?,
+            partition: strategy_from(&d.str()?)?,
+        }),
+        tag::SHUTDOWN => Msg::Shutdown,
+        tag::READY => Msg::Ready {
+            m: {
+                check_version(d.u32()?)?;
+                d.usize()?
+            },
+            n: d.usize()?,
+            nnz: d.usize()?,
+        },
+        tag::ABORT => Msg::Abort { msg: d.str()? },
+        tag::CMD_RESET => Msg::Cmd(Command::Reset),
+        tag::CMD_GRAD => Msg::Cmd(Command::Grad {
+            loss: loss_from(&d.str()?)?,
+            w: d.vec_f64()?,
+        }),
+        tag::CMD_DIRS => Msg::Cmd(Command::Dirs { d: d.vec_f64()? }),
+        tag::CMD_LINESEARCH => Msg::Cmd(Command::Linesearch {
+            loss: loss_from(&d.str()?)?,
+            t: d.f64()?,
+        }),
+        tag::CMD_INNER_SOLVE => Msg::Cmd(Command::InnerSolve(InnerSolveSpec {
+            kind: approx_from(&d.str()?)?,
+            inner: d.str()?,
+            k_hat: d.usize()?,
+            trust_radius: d.opt_f64()?,
+            lambda: d.f64()?,
+            loss: loss_from(&d.str()?)?,
+            anchor: d.vec_f64()?,
+            full_grad: d.vec_f64()?,
+            data_grad: d.opt_vec_f64()?,
+        })),
+        tag::CMD_WARMSTART => Msg::Cmd(Command::Warmstart {
+            loss: loss_from(&d.str()?)?,
+            lambda: d.f64()?,
+            epochs: d.u32()?,
+            seed: d.u64()?,
+        }),
+        tag::REPLY_ACK => Msg::Reply(Reply::Ack { units: d.f64()? }),
+        tag::REPLY_GRAD => Msg::Reply(Reply::Grad {
+            loss: d.f64()?,
+            grad: d.vec_f64()?,
+            units: d.f64()?,
+        }),
+        tag::REPLY_PAIR => Msg::Reply(Reply::Pair {
+            a: d.f64()?,
+            b: d.f64()?,
+            units: d.f64()?,
+        }),
+        tag::REPLY_SOLVE => Msg::Reply(Reply::Solve {
+            w: d.vec_f64()?,
+            n: d.usize()?,
+            units: d.f64()?,
+        }),
+        tag::REPLY_WARM => Msg::Reply(Reply::Warm {
+            w: d.vec_f64()?,
+            counts: d.vec_f64()?,
+            units: d.f64()?,
+        }),
+        other => return Err(format!("unknown message tag {other}")),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+/// Convenience: encode + frame in one call, returning bytes written.
+pub fn send(w: &mut impl Write, msg: &Msg) -> Result<u64, String> {
+    write_frame(w, &encode(msg))
+}
+
+/// Convenience: read + decode one message. `Ok(None)` on clean EOF.
+pub fn recv(r: &mut impl Read) -> Result<Option<Msg>, String> {
+    match read_frame(r)? {
+        Some(payload) => Ok(Some(decode(&payload)?)),
+        None => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::ApproxKind;
+    use crate::data::partition::Strategy;
+    use crate::loss::Loss;
+    use crate::net::{Command, InnerSolveSpec, Reply, WorkerSetup};
+
+    fn roundtrip(msg: Msg) {
+        let bytes = encode(&msg);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Ready { m: 10, n: 99, nnz: 1234 });
+        roundtrip(Msg::Abort { msg: "boom ü".into() });
+        roundtrip(Msg::Setup(WorkerSetup {
+            rank: 3,
+            p: 8,
+            dataset: "quick".into(),
+            quick_n: 500,
+            quick_m: 40,
+            quick_nnz: 8,
+            scale: 1e-3,
+            seed: 42,
+            test_fraction: 0.2,
+            file_path: String::new(),
+            partition: Strategy::RoundRobin,
+        }));
+        roundtrip(Msg::Cmd(Command::Reset));
+        roundtrip(Msg::Cmd(Command::Grad {
+            loss: Loss::Logistic,
+            w: vec![1.0, -2.5, f64::MIN_POSITIVE, 0.1 + 0.2],
+        }));
+        roundtrip(Msg::Cmd(Command::Dirs { d: vec![] }));
+        roundtrip(Msg::Cmd(Command::Linesearch {
+            loss: Loss::SquaredHinge,
+            t: 0.625,
+        }));
+        roundtrip(Msg::Cmd(Command::InnerSolve(InnerSolveSpec {
+            kind: ApproxKind::Bfgs,
+            inner: "tron".into(),
+            k_hat: 10,
+            trust_radius: Some(0.75),
+            lambda: 1e-4,
+            loss: Loss::SquaredHinge,
+            anchor: vec![0.1, 0.2],
+            full_grad: vec![-0.3, 0.4],
+            data_grad: Some(vec![7.0]),
+        })));
+        roundtrip(Msg::Cmd(Command::Warmstart {
+            loss: Loss::LeastSquares,
+            lambda: 0.5,
+            epochs: 5,
+            seed: 7,
+        }));
+        roundtrip(Msg::Reply(Reply::Ack { units: 12.0 }));
+        roundtrip(Msg::Reply(Reply::Grad {
+            loss: 3.5,
+            grad: vec![1.0; 7],
+            units: 2.0,
+        }));
+        roundtrip(Msg::Reply(Reply::Pair { a: 1.0, b: -2.0, units: 3.0 }));
+        roundtrip(Msg::Reply(Reply::Solve {
+            w: vec![9.0, 8.0],
+            n: 55,
+            units: 4.0,
+        }));
+        roundtrip(Msg::Reply(Reply::Warm {
+            w: vec![0.5],
+            counts: vec![3.0],
+            units: 5.0,
+        }));
+    }
+
+    #[test]
+    fn f64_bits_survive_exactly() {
+        for v in [0.1 + 0.2, -0.0, f64::MAX, f64::MIN_POSITIVE, 1e-308] {
+            let msg = Msg::Cmd(Command::Dirs { d: vec![v] });
+            let Msg::Cmd(Command::Dirs { d }) = decode(&encode(&msg)).unwrap() else {
+                panic!()
+            };
+            assert_eq!(d[0].to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn framing_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        let n1 = write_frame(&mut buf, b"hello").unwrap();
+        let n2 = write_frame(&mut buf, b"").unwrap();
+        assert_eq!(n1, 9);
+        assert_eq!(n2, 4);
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello".to_vec());
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), Vec::<u8>::new());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = encode(&Msg::Ready { m: 1, n: 2, nnz: 3 });
+        // version is the u32 right after the tag byte
+        bytes[1..5].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode(&[200]).is_err());
+        // trailing garbage
+        let mut bytes = encode(&Msg::Shutdown);
+        bytes.push(0);
+        assert!(decode(&bytes).is_err());
+        // truncated vector
+        let bytes = encode(&Msg::Cmd(Command::Dirs { d: vec![1.0, 2.0] }));
+        assert!(decode(&bytes[..bytes.len() - 4]).is_err());
+        // absurd length prefix
+        let mut r = std::io::Cursor::new((u32::MAX).to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // EOF inside the length prefix is truncation, not a clean close
+        let mut r = std::io::Cursor::new(vec![7u8, 0]);
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

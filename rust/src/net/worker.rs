@@ -1,0 +1,90 @@
+//! The TCP worker process: one shard, one frame loop.
+//!
+//! Spawned by [`super::tcp::TcpDriver`] (directly as the `worker` bin
+//! or via the `--worker` self-exec fallback). The worker rebuilds its
+//! shard from the [`super::WorkerSetup`] recipe using the *same*
+//! coordinator pipeline as the in-process driver, then serves commands
+//! with the shared [`super::endpoint::exec`] until `Shutdown` or EOF.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use super::endpoint::{exec, WorkerState};
+use super::wire::{self, Msg};
+
+/// The `--worker --connect host:port` self-exec handshake, shared by
+/// every binary that can be re-executed as a worker (see
+/// `tcp::resolve_worker_command`). Returns `None` when the args don't
+/// request worker mode; otherwise serves and returns the outcome —
+/// the caller should exit(0/1) without running its own main.
+pub fn serve_if_requested(args: &[String]) -> Option<Result<(), String>> {
+    if !args.iter().any(|a| a == "--worker") {
+        return None;
+    }
+    let connect = args
+        .iter()
+        .position(|a| a == "--connect")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_default();
+    if connect.is_empty() {
+        return Some(Err("--worker: missing --connect".into()));
+    }
+    Some(serve(&connect))
+}
+
+/// Connect to the driver and serve phases until shutdown. Returns
+/// `Err` on protocol or setup failures (after attempting to send an
+/// `Abort` so the driver fails fast instead of hanging).
+pub fn serve(connect: &str) -> Result<(), String> {
+    let stream = TcpStream::connect(connect)
+        .map_err(|e| format!("connect to driver at {connect}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let rs = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    let mut r = BufReader::new(rs);
+    let mut w = BufWriter::new(stream);
+
+    let send = |msg: &Msg, w: &mut BufWriter<TcpStream>| -> Result<(), String> {
+        wire::send(w, msg)?;
+        w.flush().map_err(|e| format!("flush: {e}"))
+    };
+
+    // --- setup ---
+    let setup = match wire::recv(&mut r)? {
+        Some(Msg::Setup(s)) => s,
+        Some(other) => return Err(format!("expected Setup, got {other:?}")),
+        None => return Err("driver closed before setup".into()),
+    };
+    let shard = match crate::coordinator::driver::build_worker_shard(&setup) {
+        Ok(shard) => shard,
+        Err(e) => {
+            let _ = send(&Msg::Abort { msg: e.clone() }, &mut w);
+            return Err(format!("build shard for rank {}: {e}", setup.rank));
+        }
+    };
+    let mut st = WorkerState::new(setup.rank, setup.p);
+    send(
+        &Msg::Ready { m: shard.m(), n: shard.n(), nnz: shard.nnz() },
+        &mut w,
+    )?;
+
+    // --- phase loop ---
+    loop {
+        let msg = match wire::recv(&mut r)? {
+            Some(msg) => msg,
+            // driver went away (e.g. it was killed): exit quietly
+            None => return Ok(()),
+        };
+        match msg {
+            Msg::Shutdown => return Ok(()),
+            Msg::Cmd(cmd) => match exec(shard.as_ref(), &mut st, &cmd) {
+                Ok(reply) => send(&Msg::Reply(reply), &mut w)?,
+                Err(e) => {
+                    let _ = send(&Msg::Abort { msg: e.clone() }, &mut w);
+                    return Err(format!("rank {}: {e}", setup.rank));
+                }
+            },
+            other => return Err(format!("unexpected message {other:?}")),
+        }
+    }
+}

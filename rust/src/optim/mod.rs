@@ -53,6 +53,20 @@ pub fn by_name(name: &str) -> Option<Box<dyn InnerOptimizer>> {
     }
 }
 
+/// [`by_name`] with FADL's carried-over TRON trust radius applied (the
+/// adaptive inner region of Algorithm 2; only TRON consumes it). Used
+/// by the worker-side inner solve so the in-process and TCP transports
+/// build the identical optimizer.
+pub fn build_inner(name: &str, trust_radius: Option<f64>) -> Option<Box<dyn InnerOptimizer>> {
+    if name == "tron" {
+        return Some(Box::new(tron::Tron {
+            init_radius: trust_radius,
+            ..Default::default()
+        }));
+    }
+    by_name(name)
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     //! A synthetic strongly-convex quadratic exposed through the

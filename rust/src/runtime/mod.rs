@@ -16,6 +16,10 @@
 
 pub mod backend;
 pub mod manifest;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use backend::DenseBlockShard;

@@ -1,0 +1,119 @@
+//! Offline stub for the PJRT runtime (compiled when the `xla` feature
+//! is off, which is the default).
+//!
+//! The real implementation in `pjrt.rs` links the `xla` extension
+//! wrapper (plus `anyhow`), neither of which is available in the
+//! dependency-free offline build. This stub preserves the exact public
+//! surface [`crate::runtime::backend::DenseBlockShard`] and the CLI
+//! use, but every entry point reports the runtime as unavailable at
+//! *load* time — callers that never touch the AOT backend (the default
+//! sparse path and all tier-1 tests) are unaffected.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the `anyhow::Error` surface the real runtime
+/// uses: `Display` (including the `{:#}` alternate form used by the
+/// CLI) and `Debug` for `.expect()` call sites.
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Stub of the block-shape-specialized AOT runtime. Construction always
+/// fails, so the methods below are unreachable in practice; they exist
+/// to keep [`super::backend::DenseBlockShard`] compiling unchanged.
+pub struct AotRuntime {
+    /// rows per block (B)
+    pub batch: usize,
+    /// feature dimension (M)
+    pub features: usize,
+    /// loss the artifacts were lowered with
+    pub loss: crate::loss::Loss,
+}
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError(
+        "AOT/PJRT runtime unavailable: this binary was built without the \
+         `xla` cargo feature (see Cargo.toml). Use the sparse backend, or \
+         rebuild with `--features xla` in an environment that provides \
+         the xla extension."
+            .into(),
+    ))
+}
+
+impl AotRuntime {
+    /// Always fails in the offline build.
+    pub fn load(_dir: &Path) -> Result<AotRuntime> {
+        unavailable()
+    }
+
+    pub fn platform(&self) -> &str {
+        "unavailable"
+    }
+
+    /// z = X·w for one (B, M) block.
+    pub fn margins(&self, _x: &[f32], _w: &[f32]) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// (Σ c·l, Xᵀ(c·l'), z) for one block.
+    pub fn obj_grad(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _c: &[f32],
+        _w: &[f32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        unavailable()
+    }
+
+    /// Hv = Xᵀ(c ⊙ l''(z) ⊙ (X·s)) for one block.
+    pub fn hvp(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _c: &[f32],
+        _z: &[f32],
+        _s: &[f32],
+    ) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    /// (φ(t), φ'(t)) over one block's cached (z, e).
+    pub fn linesearch(
+        &self,
+        _z: &[f32],
+        _e: &[f32],
+        _y: &[f32],
+        _c: &[f32],
+        _t: f32,
+    ) -> Result<(f32, f32)> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = AotRuntime::load(Path::new("artifacts")).err().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "{msg}");
+    }
+}

@@ -1,0 +1,93 @@
+//! TCP-loopback transport integration: real worker OS processes must
+//! reproduce the in-process transport exactly.
+//!
+//! Uses the `worker` binary Cargo builds for this package
+//! (`CARGO_BIN_EXE_worker`), so no self-exec fallback is involved.
+
+use fadl::coordinator::driver;
+use fadl::net::Topology;
+use fadl::Config;
+
+fn base_cfg() -> Config {
+    Config {
+        name: "net_tcp_test".into(),
+        quick_n: 240,
+        quick_m: 30,
+        quick_nnz: 6,
+        nodes: 2,
+        max_outer: 4,
+        worker_bin: env!("CARGO_BIN_EXE_worker").to_string(),
+        ..Config::default()
+    }
+}
+
+fn run_with(cfg: &Config) -> fadl::metrics::Trace {
+    let exp = driver::prepare(cfg).expect("prepare");
+    let (_, trace) = driver::run(&exp).expect("run");
+    trace
+}
+
+#[test]
+fn tcp_training_matches_inproc_bitwise() {
+    for topology in [Topology::Tree, Topology::Ring] {
+        let inproc = run_with(&Config {
+            transport: "inproc".into(),
+            topology,
+            ..base_cfg()
+        });
+        let tcp = run_with(&Config {
+            transport: "tcp".into(),
+            topology,
+            ..base_cfg()
+        });
+        assert_eq!(inproc.records.len(), tcp.records.len(), "{topology:?}");
+        for (a, b) in inproc.records.iter().zip(&tcp.records) {
+            // same worker code + same reduction schedule ⇒ bitwise equal
+            assert_eq!(
+                a.f.to_bits(),
+                b.f.to_bits(),
+                "{topology:?} iter {}: {} vs {}",
+                a.iter,
+                a.f,
+                b.f
+            );
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            // the simulated clock must be transport-independent
+            assert_eq!(a.comm_passes, b.comm_passes);
+            assert_eq!(a.sim_secs, b.sim_secs);
+        }
+        // measured columns: real bytes moved over TCP, none in-process
+        let last_tcp = tcp.records.last().unwrap();
+        let last_in = inproc.records.last().unwrap();
+        assert!(last_tcp.net_bytes > 0.0, "tcp moved no bytes?");
+        assert_eq!(last_in.net_bytes, 0.0);
+        assert!(last_tcp.meas_phase_secs > 0.0);
+    }
+}
+
+#[test]
+fn tcp_without_warmstart_also_matches() {
+    let mut cfg = base_cfg();
+    cfg.warm_start = false;
+    cfg.max_outer = 3;
+    let inproc = run_with(&Config { transport: "inproc".into(), ..cfg.clone() });
+    let tcp = run_with(&Config { transport: "tcp".into(), ..cfg });
+    assert_eq!(
+        inproc.final_f().to_bits(),
+        tcp.final_f().to_bits(),
+        "{} vs {}",
+        inproc.final_f(),
+        tcp.final_f()
+    );
+}
+
+#[test]
+fn tcp_rejects_unsupported_method_before_spawning() {
+    let cfg = Config {
+        transport: "tcp".into(),
+        method: "cocoa".into(),
+        ..base_cfg()
+    };
+    let err = driver::prepare(&cfg).unwrap_err();
+    assert!(err.contains("tcp transport"), "{err}");
+}

@@ -155,7 +155,7 @@ fn prop_fadl_direction_is_descent() {
         let mut d = vec![0.0; 24];
         for node in 0..p {
             let ctx = approx::ApproxContext {
-                shard: cluster.workers[node].as_ref(),
+                shard: cluster.workers()[node].as_ref(),
                 loss: obj.loss,
                 lambda: obj.lambda,
                 p_nodes: p as f64,

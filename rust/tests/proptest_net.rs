@@ -1,0 +1,167 @@
+//! Property tests for the transport subsystem: AllReduce results are a
+//! pure function of (parts, topology plan) — exact for exact inputs,
+//! bitwise identical across threaded/serial clusters, and bitwise
+//! identical after a round trip through real TCP loopback framing.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+
+use fadl::cluster::{CostModel, Cluster};
+use fadl::data::partition::{ExamplePartition, Strategy};
+use fadl::data::synth;
+use fadl::net::topology;
+use fadl::net::wire::{read_frame, write_frame, Dec, Enc};
+use fadl::net::Topology;
+use fadl::objective::{Shard, ShardCompute, SparseShard};
+use fadl::util::proptest::{Pair, Runner, UsizeRange};
+use fadl::util::rng::Pcg64;
+
+fn cluster_over(p: usize, threaded: bool) -> Cluster {
+    let ds = synth::quick(20.max(4 * p), 8, 4, 77);
+    let part = ExamplePartition::build(ds.n(), p, Strategy::Contiguous, 0);
+    let workers: Vec<Box<dyn ShardCompute>> = (0..p)
+        .map(|i| {
+            Box::new(SparseShard::new(Shard::from_dataset(
+                &ds,
+                &part.assignments[i],
+                &part.weights[i],
+            ))) as Box<dyn ShardCompute>
+        })
+        .collect();
+    let mut c = Cluster::new(workers, CostModel::default());
+    c.threaded = threaded;
+    c
+}
+
+fn draw_parts(p: usize, m: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::new(seed);
+    (0..p)
+        .map(|_| (0..m).map(|_| rng.normal() * 10f64.powi(rng.below(5) as i32 - 2)).collect())
+        .collect()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Round-trip each part through a real TCP loopback socket (length-
+/// prefixed f64-vector frames), then reduce — models the TCP driver's
+/// gather without spawning processes.
+fn reduce_via_loopback(parts: &[Vec<f64>], plan: &topology::ReducePlan) -> Vec<f64> {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let sent = parts.to_vec();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+        for part in &sent {
+            let mut e = Enc::new();
+            e.vec_f64(part);
+            write_frame(&mut w, &e.buf).expect("frame");
+        }
+        w.flush().unwrap();
+        drop(w);
+        // hold the read half open until the client is done
+        let _ = read_frame(&mut r);
+    });
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut r = BufReader::new(stream);
+    let mut received = Vec::with_capacity(parts.len());
+    for _ in 0..parts.len() {
+        let frame = read_frame(&mut r).expect("read").expect("frame");
+        let mut d = Dec::new(&frame);
+        received.push(d.vec_f64().expect("vec"));
+    }
+    // close our end so the server's trailing read sees EOF before join
+    drop(r);
+    server.join().unwrap();
+    topology::reduce(received, plan)
+}
+
+#[test]
+fn reductions_are_exact_for_integer_parts() {
+    let gen = Pair(UsizeRange(1, 8), UsizeRange(1, 40));
+    Runner::new(48, 0xA11E).run(&gen, |&(p, m)| {
+        let mut rng = Pcg64::new((p * 1000 + m) as u64);
+        let parts: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..m).map(|_| rng.below(201) as f64 - 100.0).collect())
+            .collect();
+        let mut want = vec![0.0; m];
+        for part in &parts {
+            for j in 0..m {
+                want[j] += part[j];
+            }
+        }
+        for topo in Topology::all() {
+            let got = topology::reduce(parts.clone(), &topo.plan(p, m));
+            if got != want {
+                return Err(format!("{topo:?} p={p} m={m}: {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allreduce_bitwise_identical_across_threading_and_topologies() {
+    let gen = Pair(UsizeRange(1, 6), UsizeRange(1, 33));
+    Runner::new(24, 0xB17).run(&gen, |&(p, m)| {
+        let parts = draw_parts(p, m, (31 * p + m) as u64);
+        for topo in Topology::all() {
+            let reference = topology::reduce(parts.clone(), &topo.plan(p, m));
+            for threaded in [false, true] {
+                let mut c = cluster_over(p, threaded);
+                c.set_topology(topo);
+                let got = c.allreduce(parts.clone());
+                if bits(&got) != bits(&reference) {
+                    return Err(format!(
+                        "{topo:?} threaded={threaded} diverged from plan reduce"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allreduce_bitwise_identical_over_tcp_loopback() {
+    let gen = Pair(UsizeRange(1, 6), UsizeRange(1, 25));
+    Runner::new(12, 0x7C9).run(&gen, |&(p, m)| {
+        let parts = draw_parts(p, m, (47 * p + m) as u64);
+        for topo in Topology::all() {
+            let plan = topo.plan(p, m);
+            let direct = topology::reduce(parts.clone(), &plan);
+            let via_wire = reduce_via_loopback(&parts, &plan);
+            if bits(&direct) != bits(&via_wire) {
+                return Err(format!(
+                    "{topo:?} p={p} m={m}: loopback round trip changed bits"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topologies_agree_within_rounding() {
+    // different summation orders may differ in the last bits, but the
+    // sums must agree to fp-rounding accuracy
+    let p = 6;
+    let m = 20;
+    let parts = draw_parts(p, m, 99);
+    let tree = topology::reduce(parts.clone(), &Topology::Tree.plan(p, m));
+    for topo in [Topology::Flat, Topology::Ring] {
+        let other = topology::reduce(parts.clone(), &topo.plan(p, m));
+        for j in 0..m {
+            let scale = tree[j].abs().max(1.0);
+            assert!(
+                (tree[j] - other[j]).abs() <= 1e-12 * scale,
+                "{topo:?} j={j}: {} vs {}",
+                tree[j],
+                other[j]
+            );
+        }
+    }
+}
