@@ -4,8 +4,14 @@
 //! optimization rounds.
 //!
 //! Run: cargo bench --bench end_to_end
+//! CI smoke: cargo bench --bench end_to_end -- --test --out-dir bench-out
+//!
+//! With `--out-dir`, one per-method convergence trace is written as
+//! `trace_<method>.csv` (plus the stats as end_to_end.csv) — the CI
+//! bench-smoke job uploads these as artifacts, so the BENCH_*.json
+//! trajectories always have a CI-produced source.
 
-use fadl::benchkit::{black_box, Bench};
+use fadl::benchkit::{black_box, Bench, BenchArgs, Stats};
 use fadl::coordinator::config::Config;
 use fadl::coordinator::driver;
 use fadl::util::rng::Pcg64;
@@ -22,11 +28,15 @@ fn cfg(method: &str, max_outer: usize) -> Config {
     }
 }
 
+const METHODS: [&str; 6] = ["fadl", "fadl_feature", "tera", "admm", "cocoa", "ssz"];
+
 fn main() {
-    let bench = Bench::quick();
+    let args = BenchArgs::parse(Bench::quick());
+    let bench = args.bench;
+    let mut all: Vec<Stats> = Vec::new();
     println!("== end-to-end benches (kdd2010 @ 2e-4, P = 8) ==");
 
-    for method in ["fadl", "tera", "admm", "cocoa", "ssz"] {
+    for method in METHODS {
         // one outer iteration, warm-started cluster build excluded
         let c = cfg(method, 1);
         let s = bench.run(&format!("outer-iter/{method}"), || {
@@ -34,15 +44,18 @@ fn main() {
             black_box(driver::run(&exp).expect("run"));
         });
         println!("{}", s.report());
+        all.push(s);
     }
 
     // a full converged FADL run (the quickstart workload)
-    let s = bench.run("full-run/fadl 30 outer iters", || {
-        let c = cfg("fadl", 30);
+    let full_iters = if args.quick { 5 } else { 30 };
+    let s = bench.run(&format!("full-run/fadl {full_iters} outer iters"), || {
+        let c = cfg("fadl", full_iters);
         let exp = driver::prepare(&c).expect("prepare");
         black_box(driver::run(&exp).expect("run"));
     });
     println!("{}", s.report());
+    all.push(s);
 
     // dataset generation (the synthetic substrate itself)
     let mut seed_rng = Pcg64::new(9);
@@ -52,6 +65,29 @@ fn main() {
         black_box(fadl::data::synth::generate(&spec));
     });
     println!("{}", s.report());
+    all.push(s);
+
+    // per-method convergence traces → CSV artifacts
+    if let Some(dir) = args.out_dir.clone() {
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            eprintln!("bench: create {}: {e}", dir.display());
+        } else {
+            let trace_iters = if args.quick { 4 } else { 20 };
+            for method in METHODS {
+                let c = cfg(method, trace_iters);
+                let exp = driver::prepare(&c).expect("prepare");
+                let (_, trace) = driver::run(&exp).expect("run");
+                let path = dir.join(format!("trace_{method}.csv"));
+                match std::fs::write(&path, trace.to_csv()) {
+                    Ok(()) => println!("trace written to {}", path.display()),
+                    Err(e) => eprintln!("bench: write {}: {e}", path.display()),
+                }
+            }
+        }
+    }
+    if let Some(path) = args.write_stats_csv("end_to_end", &all) {
+        println!("stats written to {}", path.display());
+    }
 
     println!("== end-to-end done ==");
 }

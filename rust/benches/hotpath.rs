@@ -4,9 +4,12 @@
 //! search.
 //!
 //! Run: cargo bench --bench hotpath
+//! CI smoke: cargo bench --bench hotpath -- --test --out-dir bench-out
+//! (`--test` shrinks the harness and problem sizes; `--out-dir` writes
+//! the collected stats as hotpath.csv)
 
 use fadl::approx::{self, ApproxKind};
-use fadl::benchkit::{black_box, Bench};
+use fadl::benchkit::{black_box, Bench, BenchArgs, Stats};
 use fadl::cluster::{Cluster, CostModel};
 use fadl::data::partition::{ExamplePartition, Strategy};
 use fadl::data::synth;
@@ -17,34 +20,40 @@ use fadl::optim::{tron::Tron, InnerOptimizer};
 use fadl::util::rng::Pcg64;
 
 fn main() {
-    let bench = Bench::default();
+    let args = BenchArgs::parse(Bench::default());
+    let bench = args.bench;
+    let mut all: Vec<Stats> = Vec::new();
     println!("== hotpath micro-benchmarks ==");
 
     // ---- dense vector ops ----
     let mut rng = Pcg64::new(1);
-    let m = 100_000;
+    let m = if args.quick { 10_000 } else { 100_000 };
     let a: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
-    let s = bench.run("dense/dot 100k", || {
+    let s = bench.run("dense/dot", || {
         black_box(linalg::dot(black_box(&a), black_box(&b)));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * m as f64) / 1e9);
+    all.push(s);
     let mut y = b.clone();
-    let s = bench.run("dense/axpy 100k", || {
+    let s = bench.run("dense/axpy", || {
         linalg::axpy(black_box(0.5), black_box(&a), black_box(&mut y));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * m as f64) / 1e9);
+    all.push(s);
 
     // ---- CSR kernels (kdd2010-shaped shard) ----
-    let ds = synth::quick(20_000, 40_000, 40, 2);
+    let (csr_n, csr_m) = if args.quick { (2_000, 4_000) } else { (20_000, 40_000) };
+    let ds = synth::quick(csr_n, csr_m, 40, 2);
     let shard = SparseShard::new(Shard::whole(&ds));
     let nnz = shard.nnz() as f64;
     let w: Vec<f64> = (0..ds.m()).map(|_| 0.1 * rng.normal()).collect();
     let mut z = vec![0.0; ds.n()];
-    let s = bench.run("csr/margins 20k x 40k (nnz ~800k)", || {
+    let s = bench.run("csr/margins", || {
         shard.data.x.margins_into(black_box(&w), black_box(&mut z));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * nnz) / 1e9);
+    all.push(s);
 
     let r: Vec<f64> = (0..ds.n()).map(|_| rng.normal()).collect();
     let mut g = vec![0.0; ds.m()];
@@ -53,6 +62,7 @@ fn main() {
         shard.data.x.accumulate_rows(black_box(&r), black_box(&mut g));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(2.0 * nnz) / 1e9);
+    all.push(s);
 
     let (_, _, margins) = shard.loss_grad(Loss::SquaredHinge, &w);
     let dir: Vec<f64> = (0..ds.m()).map(|_| rng.normal()).collect();
@@ -60,11 +70,13 @@ fn main() {
         black_box(shard.hvp(Loss::SquaredHinge, black_box(&margins), black_box(&dir)));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(4.0 * nnz) / 1e9);
+    all.push(s);
 
     let s = bench.run("shard/loss_grad full pass", || {
         black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
     });
     println!("{}   [{:.2} GFLOP/s]", s.report(), s.per_sec(4.0 * nnz) / 1e9);
+    all.push(s);
 
     // ---- line-search evaluation over cached margins ----
     let e = shard.margins(&dir);
@@ -77,6 +89,7 @@ fn main() {
         ));
     });
     println!("{}", s.report());
+    all.push(s);
 
     // ---- AllReduce tree ----
     for p in [8usize, 32, 128] {
@@ -92,11 +105,13 @@ fn main() {
             })
             .collect();
         let cluster = Cluster::new(workers, CostModel::default());
-        let vecs: Vec<Vec<f64>> = (0..p).map(|i| vec![i as f64; 20_000]).collect();
-        let s = bench.run(&format!("cluster/allreduce 20k-vec P={p}"), || {
+        let ar_m = if args.quick { 2_000 } else { 20_000 };
+        let vecs: Vec<Vec<f64>> = (0..p).map(|i| vec![i as f64; ar_m]).collect();
+        let s = bench.run(&format!("cluster/allreduce P={p}"), || {
             black_box(cluster.allreduce(black_box(vecs.clone())));
         });
         println!("{}", s.report());
+        all.push(s);
     }
 
     // ---- AllReduce topology schedules (net/) ----
@@ -105,7 +120,7 @@ fn main() {
     {
         use fadl::net::{topology, Topology};
         let p = 8usize;
-        let m_ar = 100_000usize;
+        let m_ar = if args.quick { 10_000usize } else { 100_000usize };
         let mut trng = Pcg64::new(5);
         let parts: Vec<Vec<f64>> =
             (0..p).map(|_| (0..m_ar).map(|_| trng.normal()).collect()).collect();
@@ -113,41 +128,42 @@ fn main() {
         // clone-only baseline: the per-iteration parts.clone() below is
         // identical across topologies — subtract this row to compare
         // the schedules themselves
-        let s = bench.run("net/reduce baseline (clone only) P=8 m=100k", || {
+        let s = bench.run("net/reduce baseline (clone only) P=8", || {
             black_box(black_box(&parts).clone());
         });
         println!("{}", s.report());
+        all.push(s);
         for topo in Topology::all() {
             let plan = topo.plan(p, m_ar);
-            let s = bench.run(
-                &format!("net/reduce {} P={p} m=100k", topo.name()),
-                || {
-                    black_box(topology::reduce(black_box(parts.clone()), &plan));
-                },
-            );
+            let s = bench.run(&format!("net/reduce {} P={p}", topo.name()), || {
+                black_box(topology::reduce(black_box(parts.clone()), &plan));
+            });
             println!(
                 "{}   [sim {:.2e} units, {:.1} vector-hops]",
                 s.report(),
                 cost.allreduce_units_topo(m_ar, p, topo),
                 plan.vector_hops()
             );
+            all.push(s);
         }
     }
 
     // ---- TRON inner solve on the quadratic approximation ----
     let obj = Objective::new(1e-4, Loss::SquaredHinge);
-    let small = synth::quick(2_000, 2_000, 20, 4);
+    let tron_m = if args.quick { 500 } else { 2_000 };
+    let small = synth::quick(tron_m, tron_m, 20, 4);
     let sshard = SparseShard::new(Shard::whole(&small));
-    let (_, gdata, zs) = sshard.loss_grad(obj.loss, &vec![0.0; 2_000]);
+    let (_, gdata, zs) = sshard.loss_grad(obj.loss, &vec![0.0; tron_m]);
     let mut gfull = gdata.clone();
-    obj.finish_grad(&vec![0.0; 2_000], &mut gfull);
-    let s = Bench::quick().run("optim/tron k̂=10 on quadratic f̂_p", || {
+    obj.finish_grad(&vec![0.0; tron_m], &mut gfull);
+    let tron_bench = if args.quick { bench } else { Bench::quick() };
+    let s = tron_bench.run("optim/tron k̂=10 on quadratic f̂_p", || {
         let ctx = approx::ApproxContext {
             shard: &sshard,
             loss: obj.loss,
             lambda: obj.lambda,
             p_nodes: 8.0,
-            anchor: vec![0.0; 2_000],
+            anchor: vec![0.0; tron_m],
             full_grad: gfull.clone(),
             local_grad: gdata.clone(),
             anchor_margins: zs.clone(),
@@ -156,6 +172,10 @@ fn main() {
         black_box(Tron::default().minimize(fp.as_mut(), 10));
     });
     println!("{}", s.report());
+    all.push(s);
 
+    if let Some(path) = args.write_stats_csv("hotpath", &all) {
+        println!("stats written to {}", path.display());
+    }
     println!("== hotpath done ==");
 }

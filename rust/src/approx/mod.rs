@@ -29,8 +29,10 @@ use crate::loss::Loss;
 use crate::objective::{Shard, ShardCompute};
 
 pub mod bfgs;
+pub mod wrappers;
 
 pub use bfgs::BfgsCurvature;
+pub use wrappers::{MaskedApprox, ProxLocal, ProxWrap};
 
 /// Borrowed per-example view for the stochastic inner optimizers of
 /// §3.5 (SGD/SVRG). Only backends with per-example access provide it.

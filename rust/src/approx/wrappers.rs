@@ -1,0 +1,306 @@
+//! Composable wrappers around [`LocalApprox`] and node-local
+//! objectives, shared by the driver-side methods and the worker-side
+//! phase executor ([`crate::net::endpoint::exec`]).
+//!
+//! These used to live inside `methods/{admm,ssz,fadl_feature}.rs`; they
+//! moved here when those methods' node-local solves became transport
+//! phases — the worker endpoint must build the exact same objects, and
+//! having one definition is what keeps the transports bitwise equal.
+
+use crate::linalg;
+use crate::loss::Loss;
+use crate::objective::ShardCompute;
+
+use super::LocalApprox;
+
+/// The ADMM local proximal objective L_p(w) + ρ/2‖w − v‖² exposed
+/// through the [`LocalApprox`] oracle so TRON can minimize it.
+pub struct ProxLocal<'a> {
+    shard: &'a dyn ShardCompute,
+    loss: Loss,
+    rho: f64,
+    /// prox center v = z − u_p
+    center: Vec<f64>,
+    /// warm start point (previous w_p)
+    start: Vec<f64>,
+    last_margins: Vec<f64>,
+    passes: f64,
+}
+
+impl<'a> ProxLocal<'a> {
+    pub fn new(
+        shard: &'a dyn ShardCompute,
+        loss: Loss,
+        rho: f64,
+        center: Vec<f64>,
+        start: Vec<f64>,
+    ) -> ProxLocal<'a> {
+        ProxLocal {
+            shard,
+            loss,
+            rho,
+            center,
+            start,
+            last_margins: Vec::new(),
+            passes: 0.0,
+        }
+    }
+}
+
+impl<'a> LocalApprox for ProxLocal<'a> {
+    fn m(&self) -> usize {
+        self.center.len()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let (lv, lg, z) = self.shard.loss_grad(self.loss, v);
+        self.passes += 2.0;
+        self.last_margins = z;
+        let mut value = lv;
+        let mut grad = lg;
+        for j in 0..v.len() {
+            let d = v[j] - self.center[j];
+            value += 0.5 * self.rho * d * d;
+            grad[j] += self.rho * d;
+        }
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        let mut out = self.shard.hvp(self.loss, &self.last_margins, s);
+        linalg::axpy(self.rho, s, &mut out);
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    fn anchor(&self) -> &[f64] {
+        &self.start
+    }
+}
+
+/// Wrap a [`LocalApprox`] with a proximal term μ/2‖v − anchor‖² and a
+/// gradient shift folded into the linear part (SSZ's η scaling is
+/// realized as shift = (η−1)·∇L(w^r) without rebuilding the model).
+pub struct ProxWrap<'a> {
+    inner: Box<dyn LocalApprox + 'a>,
+    mu: f64,
+    grad_shift: Vec<f64>,
+    anchor: Vec<f64>,
+}
+
+impl<'a> ProxWrap<'a> {
+    pub fn new(
+        inner: Box<dyn LocalApprox + 'a>,
+        mu: f64,
+        grad_shift: Vec<f64>,
+        anchor: Vec<f64>,
+    ) -> ProxWrap<'a> {
+        ProxWrap {
+            inner,
+            mu,
+            grad_shift,
+            anchor,
+        }
+    }
+}
+
+impl<'a> LocalApprox for ProxWrap<'a> {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let (mut value, mut grad) = self.inner.eval(v);
+        let delta = linalg::sub(v, &self.anchor);
+        value += 0.5 * self.mu * linalg::dot(&delta, &delta);
+        value += linalg::dot(&self.grad_shift, &delta);
+        linalg::axpy(self.mu, &delta, &mut grad);
+        linalg::axpy(1.0, &self.grad_shift, &mut grad);
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        let mut out = self.inner.hvp(s);
+        linalg::axpy(self.mu, s, &mut out);
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.inner.passes()
+    }
+
+    fn anchor(&self) -> &[f64] {
+        &self.anchor
+    }
+}
+
+/// Restrict an approximation to a coordinate subset: gradient and Hv
+/// are zeroed outside J_p, so any optimizer stays in the subspace
+/// (gradient sub-consistency, §5).
+pub struct MaskedApprox<'a> {
+    inner: Box<dyn LocalApprox + 'a>,
+    mask: Vec<bool>,
+}
+
+impl<'a> MaskedApprox<'a> {
+    pub fn new(inner: Box<dyn LocalApprox + 'a>, mask: Vec<bool>) -> MaskedApprox<'a> {
+        MaskedApprox { inner, mask }
+    }
+}
+
+impl<'a> LocalApprox for MaskedApprox<'a> {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
+        let (value, mut grad) = self.inner.eval(v);
+        for (j, g) in grad.iter_mut().enumerate() {
+            if !self.mask[j] {
+                *g = 0.0;
+            }
+        }
+        (value, grad)
+    }
+
+    fn hvp(&self, s: &[f64]) -> Vec<f64> {
+        // H restricted to the subspace: mask input and output so CG
+        // never leaves span{e_j : j ∈ J_p}
+        let masked_s: Vec<f64> = s
+            .iter()
+            .enumerate()
+            .map(|(j, &x)| if self.mask[j] { x } else { 0.0 })
+            .collect();
+        let mut out = self.inner.hvp(&masked_s);
+        for (j, o) in out.iter_mut().enumerate() {
+            if !self.mask[j] {
+                *o = 0.0;
+            }
+        }
+        out
+    }
+
+    fn passes(&self) -> f64 {
+        self.inner.passes()
+    }
+
+    fn anchor(&self) -> &[f64] {
+        self.inner.anchor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{self, ApproxKind};
+    use crate::data::synth;
+    use crate::objective::{Objective, Shard, SparseShard};
+    use crate::optim::{tron::Tron, InnerOptimizer};
+
+    #[test]
+    fn prox_local_grad_matches_finite_difference() {
+        let ds = synth::quick(60, 12, 5, 21);
+        let shard = SparseShard::new(Shard::whole(&ds));
+        let mut rng = crate::util::rng::Pcg64::new(22);
+        let center: Vec<f64> = (0..12).map(|_| 0.1 * rng.normal()).collect();
+        let v: Vec<f64> = (0..12).map(|_| 0.1 * rng.normal()).collect();
+        let mut prox = ProxLocal::new(
+            &shard,
+            Loss::SquaredHinge,
+            0.7,
+            center,
+            vec![0.0; 12],
+        );
+        let (_, g) = prox.eval(&v);
+        let h = 1e-6;
+        for j in [0usize, 5, 11] {
+            let mut vp = v.clone();
+            vp[j] += h;
+            let mut vm = v.clone();
+            vm[j] -= h;
+            let num = (prox.eval(&vp).0 - prox.eval(&vm).0) / (2.0 * h);
+            assert!((g[j] - num).abs() < 1e-4 * num.abs().max(1.0), "coord {j}");
+        }
+        assert!(prox.passes() > 0.0);
+    }
+
+    #[test]
+    fn prox_wrap_adds_mu_curvature() {
+        let ds = synth::quick(50, 10, 4, 23);
+        let shard = SparseShard::new(Shard::whole(&ds));
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let (_, data_grad, z) = shard.loss_grad(obj.loss, &vec![0.0; 10]);
+        let mut g = data_grad.clone();
+        obj.finish_grad(&vec![0.0; 10], &mut g);
+        fn mk<'a>(
+            shard: &'a SparseShard,
+            obj: Objective,
+            g: &[f64],
+            data_grad: &[f64],
+            z: &[f64],
+            mu: f64,
+        ) -> ProxWrap<'a> {
+            let ctx = approx::ApproxContext {
+                shard,
+                loss: obj.loss,
+                lambda: obj.lambda,
+                p_nodes: 2.0,
+                anchor: vec![0.0; 10],
+                full_grad: g.to_vec(),
+                local_grad: data_grad.to_vec(),
+                anchor_margins: z.to_vec(),
+            };
+            ProxWrap::new(
+                approx::build(ApproxKind::Nonlinear, ctx, None),
+                mu,
+                vec![0.0; 10],
+                vec![0.0; 10],
+            )
+        }
+        let mut plain = mk(&shard, obj, &g, &data_grad, &z, 0.0);
+        let mut prox = mk(&shard, obj, &g, &data_grad, &z, 3.0 * obj.lambda);
+        plain.eval(&vec![0.0; 10]);
+        prox.eval(&vec![0.0; 10]);
+        let s = vec![1.0; 10];
+        let hv0 = plain.hvp(&s);
+        let hv1 = prox.hvp(&s);
+        for j in 0..10 {
+            assert!((hv1[j] - hv0[j] - 3.0 * obj.lambda).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn masked_direction_stays_in_subspace() {
+        let ds = synth::quick(60, 10, 4, 93);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let shard = SparseShard::new(Shard::whole(&ds));
+        let (_, local_grad, z) = shard.loss_grad(obj.loss, &vec![0.0; 10]);
+        let mut g = local_grad.clone();
+        obj.finish_grad(&vec![0.0; 10], &mut g);
+        let ctx = approx::ApproxContext {
+            shard: &shard,
+            loss: obj.loss,
+            lambda: obj.lambda,
+            p_nodes: 1.0,
+            anchor: vec![0.0; 10],
+            full_grad: g,
+            local_grad,
+            anchor_margins: z,
+        };
+        let inner = approx::build(ApproxKind::Quadratic, ctx, None);
+        let mut mask = vec![false; 10];
+        mask[2] = true;
+        mask[5] = true;
+        let mut masked = MaskedApprox::new(inner, mask);
+        let res = Tron::default().minimize(&mut masked, 10);
+        for j in 0..10 {
+            if j != 2 && j != 5 {
+                assert_eq!(res.w[j], 0.0, "coordinate {j} moved");
+            }
+        }
+        assert!(res.w[2] != 0.0 || res.w[5] != 0.0);
+    }
+}

@@ -90,6 +90,17 @@ impl Bench {
         }
     }
 
+    /// Smoke preset for CI (`cargo bench ... -- --test`): just enough
+    /// samples to prove the bench runs and emit plausible numbers.
+    pub fn smoke() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(2),
+            min_total: Duration::from_millis(5),
+            min_samples: 2,
+            max_samples: 5,
+        }
+    }
+
     /// Time `f`, auto-calibrating the per-sample iteration count so one
     /// sample is ≥ ~1ms (amortizing timer overhead).
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
@@ -124,9 +135,79 @@ impl Bench {
     }
 }
 
+/// Shared bench-bin argument handling: `--test`/`--quick` selects the
+/// smoke preset (what the CI bench-smoke job passes), `--out-dir DIR`
+/// is where stats/trace CSVs land (`None` = don't write files).
+pub struct BenchArgs {
+    pub bench: Bench,
+    pub quick: bool,
+    pub out_dir: Option<std::path::PathBuf>,
+}
+
+impl BenchArgs {
+    /// Parse `std::env::args()`, defaulting to `full` when `--test` is
+    /// absent.
+    pub fn parse(full: Bench) -> BenchArgs {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let quick = args.iter().any(|a| a == "--test" || a == "--quick");
+        let out_dir = args
+            .iter()
+            .position(|a| a == "--out-dir")
+            .and_then(|i| args.get(i + 1))
+            .map(std::path::PathBuf::from);
+        BenchArgs {
+            bench: if quick { Bench::smoke() } else { full },
+            quick,
+            out_dir,
+        }
+    }
+
+    /// Write collected stats as `NAME.csv` under `--out-dir` (no-op
+    /// without one). Returns the path written.
+    pub fn write_stats_csv(
+        &self,
+        name: &str,
+        stats: &[Stats],
+    ) -> Option<std::path::PathBuf> {
+        let dir = self.out_dir.as_ref()?;
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("bench: create {}: {e}", dir.display());
+            return None;
+        }
+        let mut csv = String::from("name,median_ns,mean_ns,p10_ns,p90_ns,samples\n");
+        for s in stats {
+            csv.push_str(&format!(
+                "{:?},{},{},{},{},{}\n",
+                s.name,
+                s.median_ns(),
+                s.mean_ns(),
+                s.p10_ns(),
+                s.p90_ns(),
+                s.samples_ns.len()
+            ));
+        }
+        let path = dir.join(format!("{name}.csv"));
+        match std::fs::write(&path, csv) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                eprintln!("bench: write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn smoke_preset_is_cheaper_than_quick() {
+        let s = Bench::smoke();
+        let q = Bench::quick();
+        assert!(s.min_total < q.min_total);
+        assert!(s.max_samples <= q.max_samples);
+    }
 
     #[test]
     fn measures_a_cheap_op() {

@@ -1,24 +1,28 @@
-//! `net_smoke` — end-to-end proof of the TCP transport.
+//! `net_smoke` — end-to-end method×transport parity proof.
 //!
-//! Trains FADL on the `quick` dataset twice: once on the in-process
-//! transport and once with P real worker OS processes over TCP
-//! loopback, then demands the two final objectives agree to ≤ 1e-10
-//! (they are in fact bitwise identical: both transports execute the
-//! same worker code and the same topology-scheduled reduction order).
-//! Also prints the per-iteration trace with both clocks — simulated
-//! seconds from the Appendix-A cost model next to the measured
-//! wall-clock and real bytes of the transport.
+//! Trains the selected method (`--method`, any of fadl*, fadl_feature,
+//! tera*, admm*, cocoa, ssz) on the `quick` dataset twice: once on the
+//! in-process transport and once with P real worker OS processes over
+//! TCP loopback, then demands the two trajectories agree to ≤ 1e-10 at
+//! every recorded iteration (they are in fact bitwise identical: both
+//! transports execute the same worker code and the same
+//! topology-scheduled reduction order). Also prints the per-iteration
+//! trace with both clocks — simulated seconds from the Appendix-A cost
+//! model next to the measured wall-clock and real bytes of the
+//! transport. The CI `parity` job runs this for every method.
 //!
-//!   cargo run --bin net_smoke [-- --nodes 4 --topology tree]
+//!   cargo run --bin net_smoke [-- --method tera --nodes 4 --topology tree]
 //!
-//! When the dedicated `worker` bin is not built alongside (e.g. plain
+//! Flags are the shared experiment CLI (`coordinator::config`), so the
+//! same overrides work here and on `fadl train`; `--transport` is
+//! ignored (both transports always run) and `--out X.json` writes one
+//! trace per transport (`X-inproc.json`, `X-tcp.json`). When the
+//! dedicated `worker` bin is not built alongside (e.g. plain
 //! `cargo run --bin net_smoke`), the driver re-executes *this* binary
-//! with `--worker`, which is handled below.
+//! with `--worker`, handled below.
 
-use fadl::coordinator::{config::Config, driver, report};
+use fadl::coordinator::{config, config::Config, driver, report};
 use fadl::metrics::Trace;
-use fadl::net::Topology;
-use fadl::util::cli::Cli;
 
 fn main() {
     // self-exec fallback: serve as a worker when asked to
@@ -31,14 +35,10 @@ fn main() {
         return;
     }
 
-    let cli = Cli::new("net_smoke", "TCP transport end-to-end smoke test")
-        .flag("nodes", "4", "worker process count P")
-        .flag("topology", "tree", "reduction topology: flat | tree | ring")
-        .flag("n", "1000", "quick dataset rows")
-        .flag("m", "60", "quick dataset features")
-        .flag("row-nnz", "10", "quick dataset nonzeros per row")
-        .flag("max-outer", "12", "outer iterations")
-        .flag("method", "fadl", "fadl variant to train");
+    let cli = config::experiment_cli(
+        "net_smoke",
+        "method×transport parity check (inproc vs tcp; --transport is ignored)",
+    );
     let a = match cli.parse_from(raw) {
         Ok(a) => a,
         Err(msg) => {
@@ -46,26 +46,24 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let topology = Topology::from_name(a.get("topology")).unwrap_or_else(|| {
-        eprintln!("unknown topology {:?}", a.get("topology"));
-        std::process::exit(2);
-    });
-    let base = Config {
+    let smoke_defaults = Config {
         name: "net_smoke".into(),
-        quick_n: a.get_usize("n"),
-        quick_m: a.get_usize("m"),
-        quick_nnz: a.get_usize("row-nnz"),
-        nodes: a.get_usize("nodes"),
-        max_outer: a.get_usize("max-outer"),
-        method: a.get("method").to_string(),
-        topology,
+        quick_n: 1000,
+        quick_m: 60,
+        quick_nnz: 10,
+        nodes: 4,
+        max_outer: 12,
         ..Config::default()
     };
+    let base = Config::from_cli(smoke_defaults, &a).unwrap_or_else(|e| die(&e));
 
     let (f_in, trace_in) = run_transport(&base, "inproc");
     let (f_tcp, trace_tcp) = run_transport(&base, "tcp");
 
-    println!("\n== trace (tcp transport: P = {} worker processes) ==", base.nodes);
+    println!(
+        "\n== trace (tcp transport: P = {} worker processes) ==",
+        base.nodes
+    );
     print_trace(&trace_tcp);
     println!("\n== trace (inproc transport) ==");
     print_trace(&trace_in);
@@ -75,26 +73,44 @@ fn main() {
     );
     let tol = 1e-10 * f_in.abs().max(1.0);
     let diff = (f_in - f_tcp).abs();
-    println!("|Δf| = {diff:.3e}  (tolerance {tol:.3e})");
+    // the whole trajectory must agree, not just the endpoint
+    let len_ok = trace_in.records.len() == trace_tcp.records.len();
+    let max_iter_diff = trace_in
+        .records
+        .iter()
+        .zip(&trace_tcp.records)
+        .map(|(a, b)| (a.f - b.f).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "|Δf| = {diff:.3e}  max per-iter |Δf| = {max_iter_diff:.3e}  (tolerance {tol:.3e})"
+    );
     let moved = trace_tcp.records.last().map(|r| r.net_bytes).unwrap_or(0.0);
     println!("tcp bytes moved: {:.1} KiB", moved / 1024.0);
-    if diff <= tol && moved > 0.0 {
-        println!("net_smoke PASSED");
+    if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 {
+        println!("net_smoke PASSED ({} over inproc vs tcp)", base.method);
     } else {
-        println!("net_smoke FAILED");
+        println!("net_smoke FAILED ({})", base.method);
         std::process::exit(1);
     }
 }
 
 fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
+    // both transports run from the same base; suffix --out per
+    // transport so the inproc trace isn't overwritten by the tcp one
+    let out_json = base.out_json.as_ref().map(|p| match p.strip_suffix(".json") {
+        Some(stem) => format!("{stem}-{transport}.json"),
+        None => format!("{p}-{transport}"),
+    });
     let cfg = Config {
         transport: transport.into(),
+        out_json,
         ..base.clone()
     };
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
     let (_, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
     println!(
-        "{transport}: {} iterations, topology {}, final f = {:.12e}",
+        "{transport}: method {}, {} iterations, topology {}, final f = {:.12e}",
+        cfg.method,
         trace.records.len(),
         cfg.topology.name(),
         trace.final_f()

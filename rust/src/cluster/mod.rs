@@ -27,7 +27,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::net::{
-    self, Command, InProc, InnerSolveSpec, Measured, Reply, Topology, Transport,
+    self, Command, DualUpdateSpec, InProc, InnerSolveSpec, LocalSolveSpec, Measured,
+    Reply, Topology, Transport,
 };
 use crate::objective::ShardCompute;
 
@@ -337,6 +338,88 @@ impl Cluster {
         (phi, dphi)
     }
 
+    /// Distributed Hessian-vector product at the margins cached by the
+    /// last [`Cluster::grad_phase`] (TERA-TRON's CG hot loop): every
+    /// worker computes Xᵀ(D(X s)); the parts are reduced driver-side.
+    /// Charges the compute phase plus one m-vector pass — identical to
+    /// the legacy [`Cluster::hvp_pass`].
+    pub fn hvp_phase(&self, loss: crate::loss::Loss, s: &[f64]) -> Vec<f64> {
+        let replies = self.phase(&Command::Hvp { loss, s: s.to_vec() });
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut parts = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let Reply::Vector { v, units } = reply else {
+                panic!("hvp phase: unexpected reply");
+            };
+            costs.push(units);
+            parts.push(v);
+        }
+        let (hv, comm_units) = self.reduce_timed(parts);
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.comm_pass(comm_units);
+        self.charge(delta);
+        hv
+    }
+
+    /// Distributed data-loss evaluation at a replicated w (one pass,
+    /// scalar aggregation only); cached margins are left untouched.
+    /// Identical charges to the legacy [`Cluster::loss_pass`].
+    pub fn loss_phase(&self, loss: crate::loss::Loss, w: &[f64]) -> f64 {
+        let replies = self.phase(&Command::LossEval { loss, w: w.to_vec() });
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut sum = 0.0;
+        for reply in replies {
+            let Reply::Scalar { v, units } = reply else {
+                panic!("loss phase: unexpected reply");
+            };
+            costs.push(units);
+            sum += v;
+        }
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        delta.scalar_round(self.cost.scalar_round_units(self.p()));
+        self.charge(delta);
+        sum
+    }
+
+    /// Node-local subproblem solve (ADMM prox / CoCoA SDCA / SSZ prox /
+    /// feature-partitioned FADL). Pure computation; returns per-rank
+    /// (vector, n_p) in rank order.
+    pub fn local_solve_phase(&self, spec: &LocalSolveSpec) -> Vec<(Vec<f64>, usize)> {
+        let replies = self.phase(&Command::LocalSolve(spec.clone()));
+        let mut costs = Vec::with_capacity(replies.len());
+        let mut out = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let Reply::Solve { w, n, units } = reply else {
+                panic!("local solve phase: unexpected reply");
+            };
+            costs.push(units);
+            out.push((w, n));
+        }
+        let mut delta = SimClock::default();
+        delta.compute_phase(&costs);
+        self.charge(delta);
+        out
+    }
+
+    /// Per-method node-local state update (e.g. ADMM's scaled-dual
+    /// step); returns one scalar per rank. Free in the simulated cost
+    /// model — it replaces O(m) driver-side bookkeeping the seed never
+    /// charged (residual scalar rounds are charged by the caller).
+    pub fn dual_update_phase(&self, spec: &DualUpdateSpec) -> Vec<f64> {
+        let replies = self.phase(&Command::DualUpdate(spec.clone()));
+        replies
+            .into_iter()
+            .map(|reply| {
+                let Reply::Scalar { v, .. } = reply else {
+                    panic!("dual update phase: unexpected reply");
+                };
+                v
+            })
+            .collect()
+    }
+
     /// §4.3 SGD warm start on every worker's local objective. Returns
     /// per-rank (local weights, per-feature counts). Charges the local
     /// SGD passes; the caller aggregates via [`Cluster::allreduce`].
@@ -618,6 +701,56 @@ pub(crate) mod tests {
         let got = phased.linesearch_phase(Loss::SquaredHinge, 0.375);
         assert_eq!(want, got);
         assert_eq!(legacy.clock(), phased.clock());
+    }
+
+    #[test]
+    fn hvp_phase_matches_hvp_pass() {
+        // the named transport phase and the legacy composite op are the
+        // same computation — results and clock must agree exactly
+        let ds = synth::quick(70, 16, 6, 21);
+        let mut rng = crate::util::rng::Pcg64::new(22);
+        let w: Vec<f64> = (0..16).map(|_| 0.2 * rng.normal()).collect();
+        let s: Vec<f64> = (0..16).map(|_| rng.normal()).collect();
+        let legacy = cluster_from(&ds, 3);
+        let (_, _, margins, _) = legacy.gradient_pass(Loss::SquaredHinge, &w);
+        let want = legacy.hvp_pass(Loss::SquaredHinge, &margins, &s);
+        let phased = cluster_from(&ds, 3);
+        phased.reset_phase();
+        let _ = phased.grad_phase(Loss::SquaredHinge, &w);
+        let got = phased.hvp_phase(Loss::SquaredHinge, &s);
+        assert_eq!(want, got);
+        assert_eq!(legacy.clock(), phased.clock());
+    }
+
+    #[test]
+    fn loss_phase_matches_loss_pass() {
+        let ds = synth::quick(50, 12, 5, 23);
+        let w = vec![0.07; 12];
+        let legacy = cluster_from(&ds, 4);
+        let want = legacy.loss_pass(Loss::Logistic, &w);
+        let phased = cluster_from(&ds, 4);
+        let got = phased.loss_phase(Loss::Logistic, &w);
+        assert_eq!(want, got);
+        assert_eq!(legacy.clock(), phased.clock());
+    }
+
+    #[test]
+    fn dual_update_phase_is_free_on_the_sim_clock() {
+        let c = make_cluster(40, 10, 2, 24);
+        let z = vec![0.1; 10];
+        let _ = c.local_solve_phase(&LocalSolveSpec::AdmmProx {
+            loss: Loss::SquaredHinge,
+            rho: 0.5,
+            local_iters: 2,
+            init: true,
+            u_scale: 1.0,
+            z: z.clone(),
+        });
+        let before = c.clock();
+        let dists = c.dual_update_phase(&DualUpdateSpec::AdmmDual { z });
+        assert_eq!(dists.len(), 2);
+        assert!(dists.iter().all(|d| d.is_finite()));
+        assert_eq!(c.clock(), before);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use crate::cluster::CostModel;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
 use crate::net::Topology;
+use crate::util::cli::{Args, Cli};
 use crate::util::toml;
 
 /// Where the per-shard compute runs.
@@ -162,6 +163,106 @@ impl Config {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         Config::from_toml(&text)
     }
+
+    /// Resolve a config from parsed [`experiment_cli`] arguments:
+    /// `--config FILE` (if given) replaces `base`, then the flag
+    /// overrides are applied on top. This is the single CLI→Config path
+    /// every experiment binary shares, so flags stay consistent across
+    /// `fadl train`, `net_smoke`, and future bins.
+    pub fn from_cli(base: Config, a: &Args) -> Result<Config, String> {
+        let mut cfg = if a.get("config").is_empty() {
+            base
+        } else {
+            Config::from_file(a.get("config"))?
+        };
+        cfg.apply_cli(a)?;
+        Ok(cfg)
+    }
+
+    /// Apply [`experiment_cli`] overrides in place (empty string = keep
+    /// the config value). Numeric flags are parsed fallibly — a typo'd
+    /// `--nodes four` comes back as `Err`, not a panic.
+    pub fn apply_cli(&mut self, a: &Args) -> Result<(), String> {
+        fn num<T: std::str::FromStr>(a: &Args, name: &str) -> Result<Option<T>, String> {
+            let v = a.get(name);
+            if v.is_empty() {
+                return Ok(None);
+            }
+            v.parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected a number, got {v:?}"))
+        }
+        if !a.get("method").is_empty() {
+            self.method = a.get("method").to_string();
+        }
+        if !a.get("dataset").is_empty() {
+            self.dataset = a.get("dataset").to_string();
+        }
+        if let Some(v) = num(a, "nodes")? {
+            self.nodes = v;
+        }
+        if let Some(v) = num(a, "max-outer")? {
+            self.max_outer = v;
+        }
+        if let Some(v) = num(a, "n")? {
+            self.quick_n = v;
+        }
+        if let Some(v) = num(a, "m")? {
+            self.quick_m = v;
+        }
+        if let Some(v) = num(a, "row-nnz")? {
+            self.quick_nnz = v;
+        }
+        if let Some(v) = num(a, "seed")? {
+            self.seed = v;
+        }
+        if let Some(v) = num(a, "gamma")? {
+            self.cost.gamma = v;
+        }
+        if !a.get("transport").is_empty() {
+            self.transport = match a.get("transport") {
+                t @ ("inproc" | "tcp") => t.to_string(),
+                other => return Err(format!("unknown transport {other:?}")),
+            };
+        }
+        if !a.get("topology").is_empty() {
+            self.topology = Topology::from_name(a.get("topology"))
+                .ok_or_else(|| format!("unknown topology {:?}", a.get("topology")))?;
+        }
+        if !a.get("worker-bin").is_empty() {
+            self.worker_bin = a.get("worker-bin").to_string();
+        }
+        if !a.get("out").is_empty() {
+            self.out_json = Some(a.get("out").to_string());
+        }
+        if a.on("no-warm-start") {
+            self.warm_start = false;
+        }
+        Ok(())
+    }
+}
+
+/// The shared experiment CLI: one flag per commonly-overridden
+/// [`Config`] field, with empty-string defaults meaning "keep the
+/// config value". Parse with [`Cli::parse_from`], resolve with
+/// [`Config::from_cli`].
+pub fn experiment_cli(program: &str, about: &str) -> Cli {
+    Cli::new(program, about)
+        .flag("config", "", "TOML config path (empty = defaults)")
+        .flag("method", "", "override method name")
+        .flag("dataset", "", "override dataset kind")
+        .flag("nodes", "", "override node count P")
+        .flag("max-outer", "", "override outer-iteration cap")
+        .flag("n", "", "override quick-dataset rows")
+        .flag("m", "", "override quick-dataset features")
+        .flag("row-nnz", "", "override quick-dataset nonzeros per row")
+        .flag("seed", "", "override dataset/method seed")
+        .flag("gamma", "", "override comm/comp ratio γ")
+        .flag("transport", "", "override transport: inproc | tcp")
+        .flag("topology", "", "override AllReduce topology: flat | tree | ring")
+        .flag("worker-bin", "", "explicit worker executable for the tcp transport")
+        .flag("out", "", "write the trace JSON here")
+        .switch("no-warm-start", "disable the SGD warm start")
 }
 
 #[cfg(test)]
@@ -232,6 +333,68 @@ json = "out/fig5.json"
         assert_eq!(cfg.backend, Backend::Aot);
         assert_eq!(cfg.artifacts_dir, "my_artifacts");
         assert_eq!(cfg.out_json.as_deref(), Some("out/fig5.json"));
+    }
+
+    #[test]
+    fn shared_cli_overrides_apply_on_top_of_base() {
+        let cli = experiment_cli("test", "shared CLI");
+        let argv: Vec<String> = [
+            "--method",
+            "tera",
+            "--nodes",
+            "4",
+            "--max-outer",
+            "7",
+            "--n",
+            "500",
+            "--transport",
+            "tcp",
+            "--topology",
+            "ring",
+            "--no-warm-start",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let a = cli.parse_from(argv).unwrap();
+        let base = Config {
+            quick_m: 33,
+            ..Config::default()
+        };
+        let cfg = Config::from_cli(base, &a).unwrap();
+        assert_eq!(cfg.method, "tera");
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.max_outer, 7);
+        assert_eq!(cfg.quick_n, 500);
+        assert_eq!(cfg.quick_m, 33, "unset flags keep the base value");
+        assert_eq!(cfg.transport, "tcp");
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert!(!cfg.warm_start);
+    }
+
+    #[test]
+    fn shared_cli_rejects_bad_transport_and_topology() {
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--transport".to_string(), "rdma".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
+        let a = cli
+            .parse_from(vec!["--topology".to_string(), "mesh".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
+    }
+
+    #[test]
+    fn shared_cli_rejects_non_numeric_overrides_without_panicking() {
+        let cli = experiment_cli("test", "shared CLI");
+        for flags in [["--nodes", "four"], ["--max-outer", "x"], ["--gamma", "fast"]] {
+            let a = cli
+                .parse_from(flags.iter().map(|s| s.to_string()))
+                .unwrap();
+            let err = Config::from_cli(Config::default(), &a).unwrap_err();
+            assert!(err.contains("expected a number"), "{err}");
+        }
     }
 
     #[test]

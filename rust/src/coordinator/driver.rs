@@ -171,9 +171,13 @@ pub fn build_cluster(
     Ok(cluster)
 }
 
-/// Materialize the experiment described by the config.
+/// Materialize the experiment described by the config. Every built-in
+/// method runs over every transport (the full `net::Command` vocabulary
+/// landed with the Hvp/LocalSolve/DualUpdate phases), so the method is
+/// resolved first only to fail fast on an unknown name before any
+/// worker process is spawned.
 pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
-    check_transport_support(cfg)?;
+    let _ = build_method(cfg)?;
     let (train, test) = build_train_split(cfg)?;
     let lambda = resolve_lambda(cfg);
     let cluster = build_cluster(cfg, &train, cfg.nodes, cfg.cost)?;
@@ -186,35 +190,10 @@ pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
     })
 }
 
-/// The tcp transport serves the methods whose worker-side phases are
-/// fully expressed in the `net::Command` vocabulary — advertised by
-/// [`methods::Trainer::supports_remote_transport`] (currently the fadl
-/// family; TERA needs an Hvp command, ADMM/CoCoA/SSZ local-solve
-/// commands; see rust/src/net/README.md). Checked before any worker
-/// process is spawned.
-fn check_transport_support(cfg: &Config) -> Result<(), String> {
-    if cfg.transport == "tcp" && !build_method(cfg)?.supports_remote_transport() {
-        return Err(format!(
-            "method {:?} is not yet supported over the tcp transport \
-             (its phases are not expressed in the net::Command vocabulary)",
-            cfg.method
-        ));
-    }
-    Ok(())
-}
-
 /// Run the configured method on a prepared experiment.
 pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
     let cfg = &exp.config;
     let trainer = build_method(cfg)?;
-    // prepare() already gated before spawning workers; re-check here on
-    // the built trainer for callers that assembled an Experiment by hand
-    if cfg.transport == "tcp" && !trainer.supports_remote_transport() {
-        return Err(format!(
-            "method {:?} is not yet supported over the tcp transport",
-            cfg.method
-        ));
-    }
     let obj = Objective::new(exp.lambda, cfg.loss);
     let ctx = TrainContext {
         test_set: Some(&exp.test),
@@ -235,13 +214,16 @@ pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
 }
 
 /// Instantiate the configured method with config overrides applied.
+/// Method names accept `_` as a separator alias (`fadl_feature` ≡
+/// `fadl-feature`), keeping CLI matrices shell-friendly.
 pub fn build_method(cfg: &Config) -> Result<Box<dyn methods::Trainer>, String> {
+    let method = cfg.method.replace('_', "-");
     // method-specific knobs the config can override
-    if cfg.method.starts_with("fadl") && cfg.method != "fadl-feature" {
-        let base = methods::by_name(&cfg.method)
+    if method.starts_with("fadl") && method != "fadl-feature" {
+        let base = methods::by_name(&method)
             .ok_or_else(|| format!("unknown method {:?}", cfg.method))?;
         let _ = base; // by_name validated the name; rebuild with overrides
-        let approx = match cfg.method.as_str() {
+        let approx = match method.as_str() {
             "fadl" | "fadl-quadratic" => crate::approx::ApproxKind::Quadratic,
             "fadl-linear" => crate::approx::ApproxKind::Linear,
             "fadl-hybrid" => crate::approx::ApproxKind::Hybrid,
@@ -250,7 +232,7 @@ pub fn build_method(cfg: &Config) -> Result<Box<dyn methods::Trainer>, String> {
             "fadl-svrg" => crate::approx::ApproxKind::Linear,
             other => return Err(format!("unknown fadl variant {other:?}")),
         };
-        let inner = if cfg.method == "fadl-svrg" {
+        let inner = if method == "fadl-svrg" {
             "svrg".to_string()
         } else {
             cfg.inner.clone()
@@ -264,7 +246,11 @@ pub fn build_method(cfg: &Config) -> Result<Box<dyn methods::Trainer>, String> {
             ..Default::default()
         }));
     }
-    match cfg.method.as_str() {
+    match method.as_str() {
+        "fadl-feature" => Ok(Box::new(methods::fadl_feature::FadlFeature {
+            partition: None,
+            k_hat: cfg.k_hat,
+        })),
         "tera" | "tera-tron" => Ok(Box::new(methods::tera::Tera {
             warm_start: cfg.warm_start,
             seed: cfg.seed,
@@ -277,7 +263,7 @@ pub fn build_method(cfg: &Config) -> Result<Box<dyn methods::Trainer>, String> {
             ..Default::default()
         })),
         "admm" | "admm-adap" | "admm-analytic" | "admm-search" => {
-            let policy = match cfg.method.as_str() {
+            let policy = match method.as_str() {
                 "admm-analytic" => methods::admm::RhoPolicy::Analytic,
                 "admm-search" => methods::admm::RhoPolicy::Search,
                 _ => methods::admm::RhoPolicy::Adap,
@@ -345,7 +331,16 @@ mod tests {
 
     #[test]
     fn every_method_runs_end_to_end() {
-        for method in ["fadl", "fadl-linear", "tera", "tera-lbfgs", "admm", "cocoa", "ssz"] {
+        for method in [
+            "fadl",
+            "fadl-linear",
+            "fadl-feature",
+            "tera",
+            "tera-lbfgs",
+            "admm",
+            "cocoa",
+            "ssz",
+        ] {
             let cfg = Config {
                 method: method.into(),
                 max_outer: 3,
@@ -400,14 +395,30 @@ mod tests {
     }
 
     #[test]
-    fn tcp_transport_gates_unsupported_methods() {
+    fn method_names_accept_underscore_alias() {
+        // CI matrices pass shell-friendly names like `fadl_feature`
+        for (alias, canonical) in [
+            ("fadl_feature", "fadl-feature"),
+            ("tera_lbfgs", "tera-lbfgs"),
+            ("admm_search", "admm-search"),
+        ] {
+            let a = build_method(&Config { method: alias.into(), ..quick_cfg() })
+                .unwrap();
+            let b = build_method(&Config { method: canonical.into(), ..quick_cfg() })
+                .unwrap();
+            assert_eq!(a.label(), b.label(), "{alias}");
+        }
+    }
+
+    #[test]
+    fn tcp_prepare_fails_fast_on_unknown_method_before_spawning() {
         let cfg = Config {
             transport: "tcp".into(),
-            method: "tera".into(),
+            method: "magic".into(),
             ..quick_cfg()
         };
         let err = prepare(&cfg).unwrap_err();
-        assert!(err.contains("tcp transport"), "{err}");
+        assert!(err.contains("unknown method"), "{err}");
     }
 
     #[test]

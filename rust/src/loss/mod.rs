@@ -115,6 +115,17 @@ impl Loss {
     }
 }
 
+/// Closed-form SDCA coordinate step for the squared hinge (the CoCoA
+/// dual; lives here because it is loss-specific math shared by the
+/// driver-side method and the worker-side phase executor):
+/// maximize D(α + δe_i):  δ* = (1 − y_i·w·x_i − α_i/2)/(‖x_i‖²/λ + 1/2),
+/// then clip to α_i + δ ≥ 0.
+#[inline]
+pub fn sdca_delta(margin_y: f64, alpha_i: f64, xsq_over_lambda: f64) -> f64 {
+    let delta = (1.0 - margin_y - 0.5 * alpha_i) / (xsq_over_lambda + 0.5);
+    delta.max(-alpha_i)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

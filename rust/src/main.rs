@@ -13,7 +13,7 @@
 //!   fadl costmodel --gamma 500 --k-hat 10
 //!   fadl verify --artifacts artifacts
 
-use fadl::coordinator::{config::Config, driver, report};
+use fadl::coordinator::{config, config::Config, driver, report};
 use fadl::data::synth;
 use fadl::metrics::log_rel_diff;
 use fadl::util::cli::Cli;
@@ -61,54 +61,11 @@ fn parse_or_exit(cli: &Cli, argv: Vec<String>) -> fadl::util::cli::Args {
 }
 
 fn cmd_train(argv: Vec<String>) {
-    let cli = Cli::new("fadl train", "run one experiment")
-        .flag("config", "", "TOML config path (empty = defaults)")
-        .flag("method", "", "override method name")
-        .flag("dataset", "", "override dataset kind")
-        .flag("nodes", "", "override node count P")
-        .flag("max-outer", "", "override outer-iteration cap")
-        .flag("gamma", "", "override comm/comp ratio γ")
-        .flag("transport", "", "override transport: inproc | tcp")
-        .flag("topology", "", "override AllReduce topology: flat | tree | ring")
-        .flag("out", "", "write the trace JSON here")
-        .switch("no-warm-start", "disable the SGD warm start");
+    // the shared experiment CLI (coordinator::config): the same flags
+    // work on every experiment bin (net_smoke, future harnesses)
+    let cli = config::experiment_cli("fadl train", "run one experiment");
     let a = parse_or_exit(&cli, argv);
-    let mut cfg = if a.get("config").is_empty() {
-        Config::default()
-    } else {
-        Config::from_file(a.get("config")).unwrap_or_else(|e| die(&e))
-    };
-    if !a.get("method").is_empty() {
-        cfg.method = a.get("method").to_string();
-    }
-    if !a.get("dataset").is_empty() {
-        cfg.dataset = a.get("dataset").to_string();
-    }
-    if !a.get("nodes").is_empty() {
-        cfg.nodes = a.get_usize("nodes");
-    }
-    if !a.get("max-outer").is_empty() {
-        cfg.max_outer = a.get_usize("max-outer");
-    }
-    if !a.get("gamma").is_empty() {
-        cfg.cost.gamma = a.get_f64("gamma");
-    }
-    if !a.get("transport").is_empty() {
-        cfg.transport = match a.get("transport") {
-            t @ ("inproc" | "tcp") => t.to_string(),
-            other => die(&format!("unknown transport {other:?}")),
-        };
-    }
-    if !a.get("topology").is_empty() {
-        cfg.topology = fadl::net::Topology::from_name(a.get("topology"))
-            .unwrap_or_else(|| die(&format!("unknown topology {:?}", a.get("topology"))));
-    }
-    if !a.get("out").is_empty() {
-        cfg.out_json = Some(a.get("out").to_string());
-    }
-    if a.on("no-warm-start") {
-        cfg.warm_start = false;
-    }
+    let cfg = Config::from_cli(Config::default(), &a).unwrap_or_else(|e| die(&e));
 
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
     println!(

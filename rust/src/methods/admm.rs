@@ -18,12 +18,9 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::approx::LocalApprox;
 use crate::linalg;
-use crate::loss::Loss;
 use crate::metrics::Trace;
-use crate::objective::ShardCompute;
-use crate::optim::{tron::Tron, InnerOptimizer};
+use crate::net::{DualUpdateSpec, LocalSolveSpec};
 
 /// ρ selection policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,54 +57,6 @@ impl Default for Admm {
     }
 }
 
-/// The local proximal objective L_p(w) + ρ/2‖w − v‖² exposed through
-/// the [`LocalApprox`] oracle so TRON can minimize it.
-struct ProxLocal<'a> {
-    shard: &'a dyn ShardCompute,
-    loss: Loss,
-    rho: f64,
-    /// prox center v = z − u_p
-    center: Vec<f64>,
-    /// warm start point (previous w_p)
-    start: Vec<f64>,
-    last_margins: Vec<f64>,
-    passes: f64,
-}
-
-impl<'a> LocalApprox for ProxLocal<'a> {
-    fn m(&self) -> usize {
-        self.center.len()
-    }
-
-    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
-        let (lv, lg, z) = self.shard.loss_grad(self.loss, v);
-        self.passes += 2.0;
-        self.last_margins = z;
-        let mut value = lv;
-        let mut grad = lg;
-        for j in 0..v.len() {
-            let d = v[j] - self.center[j];
-            value += 0.5 * self.rho * d * d;
-            grad[j] += self.rho * d;
-        }
-        (value, grad)
-    }
-
-    fn hvp(&self, s: &[f64]) -> Vec<f64> {
-        let mut out = self.shard.hvp(self.loss, &self.last_margins, s);
-        linalg::axpy(self.rho, s, &mut out);
-        out
-    }
-
-    fn passes(&self) -> f64 {
-        self.passes
-    }
-
-    fn anchor(&self) -> &[f64] {
-        &self.start
-    }
-}
-
 impl Trainer for Admm {
     fn label(&self) -> String {
         match self.rho_policy {
@@ -117,12 +66,16 @@ impl Trainer for Admm {
         }
     }
 
+    // the proximal solves and scaled-dual updates run worker-side
+    // through the LocalSolve/DualUpdate phases (the per-node (w_p, u_p)
+    // state lives in net::WorkerState), so ADMM runs over any transport
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let p = cluster.p();
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
+        cluster.reset_phase();
 
         let z0 = if self.warm_start {
             common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
@@ -179,6 +132,10 @@ impl Admm {
     /// (final f, final z, iterations done). When `record` is Some, every
     /// iteration appends to it (otherwise the scratch trace is used —
     /// the clock still advances, matching the Search policy's cost).
+    ///
+    /// The per-node state (w_p, u_p) lives worker-side; `init: true` on
+    /// the first proximal phase resets it (w_p ← z0, u_p ← 0), so Search
+    /// probes restart cleanly.
     #[allow(clippy::too_many_arguments)]
     fn run_iters(
         &self,
@@ -194,46 +151,31 @@ impl Admm {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let p = cluster.p();
-        let m = cluster.m();
         let mut rho = rho_init;
         let mut z = z0.to_vec();
-        let mut w_locals: Vec<Vec<f64>> = vec![z.clone(); p];
-        let mut u_locals: Vec<Vec<f64>> = vec![vec![0.0; m]; p];
-        let tron = Tron::default();
+        // a ρ change rescales the scaled duals u = y/ρ; the factor is
+        // applied worker-side at the start of the next proximal phase
+        let mut u_scale = 1.0;
         let mut f_last = f64::INFINITY;
         let mut done = 0;
 
         for it in 0..iters {
-            // ---- local proximal solves (parallel) ----
-            let rho_now = rho;
-            let z_ref = &z;
-            let results: Vec<Vec<f64>> = {
-                let w_snapshot = &w_locals;
-                let u_snapshot = &u_locals;
-                cluster.map(|node, shard| {
-                    let center = linalg::sub(z_ref, &u_snapshot[node]);
-                    let mut prox = ProxLocal {
-                        shard,
-                        loss: obj.loss,
-                        rho: rho_now,
-                        center,
-                        start: w_snapshot[node].clone(),
-                        last_margins: Vec::new(),
-                        passes: 0.0,
-                    };
-                    let res = tron.minimize(&mut prox, self.local_iters);
-                    let units = prox.passes * 2.0 * shard.nnz() as f64;
-                    (res.w, units)
-                })
-            };
-            w_locals = results;
+            // ---- local proximal solves (one LocalSolve phase); each
+            // rank replies w_p + u_p for the consensus AllReduce. z is
+            // shipped only at init — afterwards workers reuse the z
+            // they cached from the previous DualUpdate ----
+            let parts = cluster.local_solve_phase(&LocalSolveSpec::AdmmProx {
+                loss: obj.loss,
+                rho,
+                local_iters: self.local_iters as u32,
+                init: it == 0,
+                u_scale,
+                z: if it == 0 { z.clone() } else { Vec::new() },
+            });
+            u_scale = 1.0;
 
             // ---- consensus update: AllReduce Σ(w_p + u_p) ----
-            let sums: Vec<Vec<f64>> = w_locals
-                .iter()
-                .zip(&u_locals)
-                .map(|(wp, up)| linalg::add(wp, up))
-                .collect();
+            let sums: Vec<Vec<f64>> = parts.into_iter().map(|(wu, _)| wu).collect();
             let total = cluster.allreduce(sums);
             let z_old = z.clone();
             z = total
@@ -241,19 +183,13 @@ impl Admm {
                 .map(|&s| rho * s / (obj.lambda + rho * p as f64))
                 .collect();
 
-            // ---- dual updates (local) ----
-            for node in 0..p {
-                for j in 0..m {
-                    u_locals[node][j] += w_locals[node][j] - z[j];
-                }
-            }
+            // ---- dual updates (worker-local); each rank replies its
+            // ‖w_p − z‖² term of the primal residual ----
+            let dists =
+                cluster.dual_update_phase(&DualUpdateSpec::AdmmDual { z: z.clone() });
 
             // ---- residuals (scalar aggregations) ----
-            let r_primal: f64 = w_locals
-                .iter()
-                .map(|wp| linalg::dist_sq(wp, &z))
-                .sum::<f64>()
-                .sqrt();
+            let r_primal: f64 = dists.iter().sum::<f64>().sqrt();
             let s_dual = rho * (p as f64).sqrt() * linalg::dist_sq(&z, &z_old).sqrt();
             cluster.charge_scalar_round();
             if adaptive {
@@ -261,19 +197,15 @@ impl Admm {
                 // rescaled whenever ρ changes.
                 if r_primal > self.adap_mu * s_dual {
                     rho *= self.adap_tau;
-                    for u in &mut u_locals {
-                        linalg::scale(1.0 / self.adap_tau, u);
-                    }
+                    u_scale = 1.0 / self.adap_tau;
                 } else if s_dual > self.adap_mu * r_primal {
                     rho /= self.adap_tau;
-                    for u in &mut u_locals {
-                        linalg::scale(self.adap_tau, u);
-                    }
+                    u_scale = self.adap_tau;
                 }
             }
 
             // ---- primal objective at z for the trace (scalar round) ----
-            f_last = obj.value_from(&z, cluster.loss_pass(obj.loss, &z));
+            f_last = obj.value_from(&z, cluster.loss_phase(obj.loss, &z));
             let t = record.as_deref_mut().unwrap_or(scratch);
             t.push(
                 it,
@@ -299,6 +231,7 @@ mod tests {
     use super::*;
     use crate::cluster::tests::cluster_from;
     use crate::data::synth;
+    use crate::loss::Loss;
     use crate::objective::{Objective, Shard, SparseShard};
 
     fn f_star(ds: &crate::data::Dataset, obj: Objective) -> f64 {

@@ -22,7 +22,11 @@ use super::{TrainContext, Trainer};
 use crate::linalg;
 use crate::loss::Loss;
 use crate::metrics::Trace;
-use crate::util::rng::Pcg64;
+use crate::net::LocalSolveSpec;
+
+// the per-coordinate maximizer is loss-specific math shared with the
+// worker-side phase executor; re-exported here for compatibility
+pub use crate::loss::sdca_delta;
 
 #[derive(Clone, Debug)]
 pub struct CoCoA {
@@ -41,20 +45,14 @@ impl Default for CoCoA {
     }
 }
 
-/// Closed-form SDCA coordinate step for the squared hinge:
-/// maximize D(α + δe_i):  δ* = (1 − y_i·w·x_i − α_i/2)/(‖x_i‖²/λ + 1/2),
-/// then clip to α_i + δ ≥ 0.
-#[inline]
-pub fn sdca_delta(margin_y: f64, alpha_i: f64, xsq_over_lambda: f64) -> f64 {
-    let delta = (1.0 - margin_y - 0.5 * alpha_i) / (xsq_over_lambda + 0.5);
-    delta.max(-alpha_i)
-}
-
 impl Trainer for CoCoA {
     fn label(&self) -> String {
         format!("cocoa-{}", self.inner_epochs)
     }
 
+    // the SDCA epochs and the per-node dual blocks α_p live worker-side
+    // (net::WorkerState, through the LocalSolve phase), so CoCoA runs
+    // over any transport; the driver only ever sees Δw_p
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         assert_eq!(
             ctx.objective.loss,
@@ -69,68 +67,31 @@ impl Trainer for CoCoA {
         let wall = Instant::now();
 
         // duals start at 0 → w(α) = 0 (no SGD warm start: footnote 10 —
-        // CoCoA's primal iterate must stay consistent with its duals)
+        // CoCoA's primal iterate must stay consistent with its duals);
+        // Reset clears any previous run's worker-side α_p
+        cluster.reset_phase();
         let mut w = vec![0.0; m];
-        let mut alphas: Vec<Vec<f64>> = cluster
-            .workers()
-            .iter()
-            .map(|s| vec![0.0; s.n()])
-            .collect();
 
         for it in 0..ctx.max_outer {
-            // ---- local SDCA epochs (parallel) ----
-            let lambda = obj.lambda;
-            let epochs = self.inner_epochs;
-            let seed = self.seed;
-            let w_ref = &w;
-            let alpha_snapshot = &alphas;
-            let results: Vec<(Vec<f64>, Vec<f64>)> = cluster.map(|node, shard| {
-                let Some(data) = shard.shard() else {
-                    return ((vec![0.0; m], alpha_snapshot[node].clone()), 0.0);
-                };
-                let n = data.n();
-                let mut alpha = alpha_snapshot[node].clone();
-                let mut w_loc = w_ref.clone();
-                let mut delta_w = vec![0.0; m];
-                if n > 0 {
-                    let steps = ((n as f64) * epochs).ceil() as usize;
-                    let mut rng = Pcg64::with_stream(seed ^ it as u64, node as u64);
-                    for _ in 0..steps {
-                        let i = rng.below(n);
-                        let xsq = data.x.row_norm_sq(i);
-                        if xsq == 0.0 {
-                            continue;
-                        }
-                        let margin_y = data.y[i] * data.x.row_dot(i, &w_loc);
-                        let d = sdca_delta(margin_y, alpha[i], xsq / lambda);
-                        if d != 0.0 {
-                            alpha[i] += d;
-                            let coef = d * data.y[i] / lambda;
-                            data.x.row_axpy(i, coef, &mut w_loc);
-                            data.x.row_axpy(i, coef, &mut delta_w);
-                        }
-                    }
-                }
-                let units = epochs * 2.0 * shard.nnz() as f64;
-                ((delta_w, alpha), units)
+            // ---- local SDCA epochs (one LocalSolve phase); each rank
+            // replies Δw_p and keeps its 1/P-averaged duals local ----
+            let results = cluster.local_solve_phase(&LocalSolveSpec::CocoaSdca {
+                lambda: obj.lambda,
+                epochs: self.inner_epochs,
+                seed: self.seed,
+                round: it as u64,
+                w: w.clone(),
             });
 
-            // ---- safe averaging combine: w += (1/P)·Σ Δw_p, and the
-            // dual increments are scaled by the same 1/P so that
-            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent ----
-            let mut deltas = Vec::with_capacity(p);
-            for (node, (dw, alpha_new)) in results.into_iter().enumerate() {
-                deltas.push(dw);
-                let old = &mut alphas[node];
-                for i in 0..old.len() {
-                    old[i] += (alpha_new[i] - old[i]) / p as f64;
-                }
-            }
+            // ---- safe averaging combine: w += (1/P)·Σ Δw_p (the dual
+            // increments were scaled by the same 1/P worker-side so
+            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent) ----
+            let deltas: Vec<Vec<f64>> = results.into_iter().map(|(dw, _)| dw).collect();
             let sum = cluster.allreduce(deltas);
             linalg::axpy(1.0 / p as f64, &sum, &mut w);
 
             // ---- primal objective trace (scalar round) ----
-            let f = obj.value_from(&w, cluster.loss_pass(obj.loss, &w));
+            let f = obj.value_from(&w, cluster.loss_phase(obj.loss, &w));
             trace.push(
                 it,
                 &cluster.clock(),

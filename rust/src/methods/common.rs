@@ -43,7 +43,9 @@ pub fn sgd_warmstart(
 
 /// Power-iteration estimate of the largest eigenvalue of the *data*
 /// Hessian Σ c·l''·x xᵀ at w (used by ADMM-Analytic's ρ formula).
-/// Charges the Hv passes it performs.
+/// Runs entirely on transport phases: one gradient pass caches the
+/// margins worker-side (the anchor of every Hv), then one Hvp phase per
+/// power iteration. Charges every pass it performs.
 pub fn estimate_hessian_norm(
     cluster: &Cluster,
     obj: Objective,
@@ -51,14 +53,14 @@ pub fn estimate_hessian_norm(
     iters: usize,
     seed: u64,
 ) -> f64 {
-    let margins = cluster.margins_pass(w);
+    let _ = cluster.grad_phase(obj.loss, w);
     let mut rng = Pcg64::new(seed);
     let mut v: Vec<f64> = (0..w.len()).map(|_| rng.normal()).collect();
     let nv = linalg::norm(&v).max(1e-300);
     linalg::scale(1.0 / nv, &mut v);
     let mut eig = 0.0;
     for _ in 0..iters {
-        let hv = cluster.hvp_pass(obj.loss, &margins, &v);
+        let hv = cluster.hvp_phase(obj.loss, &v);
         eig = linalg::dot(&v, &hv);
         let n = linalg::norm(&hv);
         if n <= 1e-300 {

@@ -75,10 +75,6 @@ impl Trainer for Fadl {
 
     // every phase of Algorithm 2 is expressed in the net::Command
     // vocabulary (see train below), so FADL runs over any transport
-    fn supports_remote_transport(&self) -> bool {
-        true
-    }
-
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;

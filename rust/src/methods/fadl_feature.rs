@@ -6,79 +6,46 @@
 //! The local model satisfies **gradient sub-consistency**:
 //! ∂f̂_p/∂w(j)(w^r) = ∂f/∂w(j)(w^r) for j ∈ J_p — realized by masking
 //! the full-gradient-consistent Quadratic approximation to the J_p
-//! subspace. Directions are combined per coordinate, dividing by the
-//! coverage count so overlapping features are averaged, then the usual
-//! Armijo–Wolfe line search certifies descent (the combined direction
-//! has −g·d = Σ_j cover_j⁻¹·Σ_p (−g_j·d_pj) > 0).
+//! subspace (see [`crate::approx::MaskedApprox`]). Directions are
+//! combined per coordinate, dividing by the coverage count so
+//! overlapping features are averaged, then the usual Armijo–Wolfe line
+//! search certifies descent (the combined direction has
+//! −g·d = Σ_j cover_j⁻¹·Σ_p (−g_j·d_pj) > 0).
+//!
+//! The masked solves run worker-side through the `LocalSolve` phase
+//! (each rank indexes its J_p out of the broadcast subset list), so the
+//! method runs over any transport.
 
 use std::time::Instant;
 
 use super::{TrainContext, Trainer};
-use crate::approx::{self, ApproxKind, LocalApprox};
 use crate::data::partition::FeaturePartition;
 use crate::linalg;
 use crate::metrics::Trace;
+use crate::net::LocalSolveSpec;
 use crate::optim::linesearch::LineSearch;
-use crate::optim::{tron::Tron, InnerOptimizer};
-
-/// Restrict an approximation to a coordinate subset: gradient and Hv
-/// are zeroed outside J_p, so any optimizer stays in the subspace.
-struct MaskedApprox<'a> {
-    inner: Box<dyn LocalApprox + 'a>,
-    mask: Vec<bool>,
-}
-
-impl<'a> LocalApprox for MaskedApprox<'a> {
-    fn m(&self) -> usize {
-        self.inner.m()
-    }
-
-    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
-        let (value, mut grad) = self.inner.eval(v);
-        for (j, g) in grad.iter_mut().enumerate() {
-            if !self.mask[j] {
-                *g = 0.0;
-            }
-        }
-        (value, grad)
-    }
-
-    fn hvp(&self, s: &[f64]) -> Vec<f64> {
-        // H restricted to the subspace: mask input and output so CG
-        // never leaves span{e_j : j ∈ J_p}
-        let masked_s: Vec<f64> = s
-            .iter()
-            .enumerate()
-            .map(|(j, &x)| if self.mask[j] { x } else { 0.0 })
-            .collect();
-        let mut out = self.inner.hvp(&masked_s);
-        for (j, o) in out.iter_mut().enumerate() {
-            if !self.mask[j] {
-                *o = 0.0;
-            }
-        }
-        out
-    }
-
-    fn passes(&self) -> f64 {
-        self.inner.passes()
-    }
-
-    fn anchor(&self) -> &[f64] {
-        self.inner.anchor()
-    }
-}
 
 #[derive(Clone, Debug)]
 pub struct FadlFeature {
-    pub partition: FeaturePartition,
+    /// explicit feature partition; `None` = disjoint contiguous blocks
+    /// over (m, P), resolved at train time from the cluster shape
+    pub partition: Option<FeaturePartition>,
     pub k_hat: usize,
 }
 
 impl FadlFeature {
     pub fn new(partition: FeaturePartition) -> FadlFeature {
         FadlFeature {
-            partition,
+            partition: Some(partition),
+            k_hat: 10,
+        }
+    }
+
+    /// Config-driven construction (`method = "fadl-feature"`): the
+    /// contiguous partition is built when the cluster shape is known.
+    pub fn auto() -> FadlFeature {
+        FadlFeature {
+            partition: None,
             k_hat: 10,
         }
     }
@@ -94,37 +61,36 @@ impl Trainer for FadlFeature {
         let obj = ctx.objective;
         let p = cluster.p();
         let m = cluster.m();
-        assert_eq!(self.partition.subsets.len(), p, "partition/cluster mismatch");
-        self.partition.validate().expect("invalid feature partition");
+        let partition = self
+            .partition
+            .clone()
+            .unwrap_or_else(|| FeaturePartition::contiguous(m, p));
+        assert_eq!(partition.subsets.len(), p, "partition/cluster mismatch");
+        partition.validate().expect("invalid feature partition");
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
+        cluster.reset_phase();
         let mut w = ctx.w0.clone();
         let mut g0_norm = None;
-        let tron = Tron::default();
 
         // per-coordinate coverage for the overlap-aware combiner
         let mut coverage = vec![0.0f64; m];
-        for s in &self.partition.subsets {
+        for s in &partition.subsets {
             for &j in s {
                 coverage[j] += 1.0;
             }
         }
-        let masks: Vec<Vec<bool>> = self
-            .partition
+        // the subsets ride inside the (shared) LocalSolve command; each
+        // rank picks its own
+        let subsets_wire: Vec<Vec<u32>> = partition
             .subsets
             .iter()
-            .map(|s| {
-                let mut mask = vec![false; m];
-                for &j in s {
-                    mask[j] = true;
-                }
-                mask
-            })
+            .map(|s| s.iter().map(|&j| j as u32).collect())
             .collect();
 
         for r in 0..ctx.max_outer {
-            let (loss_sum, data_grad, margins, local_grads) =
-                cluster.gradient_pass(obj.loss, &w);
+            // gradient phase; margins z_p and ∇L_p cached worker-side
+            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
             let f = obj.value_from(&w, loss_sum);
             let mut g = data_grad;
             obj.finish_grad(&w, &mut g);
@@ -144,34 +110,26 @@ impl Trainer for FadlFeature {
                 break;
             }
 
-            let w_anchor = w.clone();
-            let g_full = g.clone();
-            let k_hat = self.k_hat;
-            let results = cluster.map(|node, shard| {
-                let ctx_p = approx::ApproxContext {
-                    shard,
-                    loss: obj.loss,
-                    lambda: obj.lambda,
-                    p_nodes: p as f64,
-                    anchor: w_anchor.clone(),
-                    full_grad: g_full.clone(),
-                    local_grad: local_grads[node].clone(),
-                    anchor_margins: margins[node].clone(),
-                };
-                let inner = approx::build(ApproxKind::Quadratic, ctx_p, None);
-                let mut masked = MaskedApprox {
-                    inner,
-                    mask: masks[node].clone(),
-                };
-                let res = tron.minimize(&mut masked, k_hat);
-                let units = masked.passes() * 2.0 * shard.nnz() as f64;
-                (res.w, units)
+            // masked local solves (one LocalSolve phase); the static
+            // partition ships on the first round only — workers cache
+            // their own mask afterwards
+            let results = cluster.local_solve_phase(&LocalSolveSpec::FeatureSolve {
+                loss: obj.loss,
+                lambda: obj.lambda,
+                k_hat: self.k_hat as u32,
+                anchor: w.clone(),
+                full_grad: g.clone(),
+                subsets: if r == 0 {
+                    subsets_wire.clone()
+                } else {
+                    Vec::new()
+                },
             });
 
             // coverage-weighted combine (AllReduce)
             let parts: Vec<Vec<f64>> = results
                 .into_iter()
-                .map(|wp| {
+                .map(|(wp, _)| {
                     (0..m)
                         .map(|j| {
                             if coverage[j] > 0.0 {
@@ -189,11 +147,13 @@ impl Trainer for FadlFeature {
                 d = g.iter().map(|&x| -x).collect();
                 gd = -linalg::dot(&g, &g);
             }
-            let dirs = cluster.margins_pass(&d);
+            // direction margins e_p cached worker-side, then the
+            // scalar-round Armijo–Wolfe search
+            cluster.dirs_phase(&d);
             let w_dot_d = linalg::dot(&w, &d);
             let d_dot_d = linalg::dot(&d, &d);
             let res = LineSearch::default().search(f, gd, |t| {
-                let (phi, dphi) = cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+                let (phi, dphi) = cluster.linesearch_phase(obj.loss, t);
                 let reg = 0.5
                     * obj.lambda
                     * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
@@ -244,6 +204,23 @@ mod tests {
     }
 
     #[test]
+    fn auto_partition_matches_explicit_contiguous() {
+        let ds = synth::quick(200, 20, 6, 94);
+        let obj = Objective::new(1e-2, Loss::SquaredHinge);
+        let run = |method: FadlFeature| {
+            let cluster = cluster_from(&ds, 4);
+            let ctx = TrainContext {
+                max_outer: 10,
+                ..TrainContext::new(&cluster, obj)
+            };
+            method.train(&ctx).1.final_f()
+        };
+        let explicit = run(FadlFeature::new(FeaturePartition::contiguous(20, 4)));
+        let auto = run(FadlFeature::auto());
+        assert_eq!(explicit.to_bits(), auto.to_bits());
+    }
+
+    #[test]
     fn overlapping_partition_converges() {
         let ds = synth::quick(320, 24, 6, 91);
         let obj = Objective::new(1e-2, Loss::SquaredHinge);
@@ -278,39 +255,5 @@ mod tests {
         for pair in trace.records.windows(2) {
             assert!(pair[1].f <= pair[0].f + 1e-10);
         }
-    }
-
-    #[test]
-    fn direction_stays_in_union_of_subspaces() {
-        // with a partition missing some coordinates entirely the masked
-        // hvp/eval must never move them — verified via MaskedApprox
-        let ds = synth::quick(60, 10, 4, 93);
-        let obj = Objective::new(1e-2, Loss::SquaredHinge);
-        let cluster = cluster_from(&ds, 1);
-        let (_, data_grad, margins, locals) = cluster.gradient_pass(obj.loss, &vec![0.0; 10]);
-        let mut g = data_grad;
-        obj.finish_grad(&vec![0.0; 10], &mut g);
-        let ctx_p = approx::ApproxContext {
-            shard: cluster.workers()[0].as_ref(),
-            loss: obj.loss,
-            lambda: obj.lambda,
-            p_nodes: 1.0,
-            anchor: vec![0.0; 10],
-            full_grad: g,
-            local_grad: locals[0].clone(),
-            anchor_margins: margins[0].clone(),
-        };
-        let inner = approx::build(ApproxKind::Quadratic, ctx_p, None);
-        let mut mask = vec![false; 10];
-        mask[2] = true;
-        mask[5] = true;
-        let mut masked = MaskedApprox { inner, mask };
-        let res = Tron::default().minimize(&mut masked, 10);
-        for j in 0..10 {
-            if j != 2 && j != 5 {
-                assert_eq!(res.w[j], 0.0, "coordinate {j} moved");
-            }
-        }
-        assert!(res.w[2] != 0.0 || res.w[5] != 0.0);
     }
 }

@@ -81,21 +81,28 @@ pub trait Trainer {
 
     /// Whether [`Trainer::train`] drives the cluster exclusively
     /// through the named transport phases (`Cluster::grad_phase` & co),
-    /// and therefore runs over remote transports such as tcp. Methods
-    /// that use in-process closure phases (`Cluster::map`) or direct
-    /// shard access must leave this false — the driver gates transport
-    /// selection on it before spawning any worker process.
+    /// and therefore runs over remote transports such as tcp. Every
+    /// built-in method does (the full command vocabulary landed with
+    /// the Hvp/LocalSolve/DualUpdate phases), so the default is true
+    /// and the driver no longer gates transport selection on it. The
+    /// flag is advisory: a custom method built on in-process closure
+    /// phases (`Cluster::map`) or direct shard access should override
+    /// to false so its callers can check before handing it a remote
+    /// cluster (whose `Cluster::workers()` panics).
     fn supports_remote_transport(&self) -> bool {
-        false
+        true
     }
 
     /// Run to termination; returns the final weights and the trace.
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace);
 }
 
-/// Construct a method by config name (see `configs/`).
+/// Construct a method by config name (see `configs/`). `_` is accepted
+/// as a separator alias everywhere (`fadl_feature` ≡ `fadl-feature`),
+/// keeping CLI matrices shell-friendly — the single normalization layer
+/// shared with [`crate::coordinator::driver::build_method`].
 pub fn by_name(name: &str) -> Option<Box<dyn Trainer>> {
-    match name {
+    match name.replace('_', "-").as_str() {
         "fadl" | "fadl-quadratic" => Some(Box::new(fadl::Fadl::default())),
         "fadl-linear" => Some(Box::new(fadl::Fadl {
             approx: crate::approx::ApproxKind::Linear,
@@ -135,6 +142,8 @@ pub fn by_name(name: &str) -> Option<Box<dyn Trainer>> {
         })),
         "cocoa" => Some(Box::new(cocoa::CoCoA::default())),
         "ssz" => Some(Box::new(ssz::Ssz::default())),
+        // contiguous partition resolved at train time from (m, P)
+        "fadl-feature" => Some(Box::new(fadl_feature::FadlFeature::auto())),
         _ => None,
     }
 }
@@ -159,9 +168,21 @@ mod tests {
             "admm-search",
             "cocoa",
             "ssz",
+            "fadl-feature",
+            // underscore aliases normalize everywhere, not just fadl
+            "fadl_feature",
+            "tera_lbfgs",
+            "admm_search",
         ] {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("sgd-only").is_none());
+    }
+
+    #[test]
+    fn every_builtin_method_supports_remote_transports() {
+        for n in ["fadl", "tera", "admm", "cocoa", "ssz", "fadl-feature"] {
+            assert!(by_name(n).unwrap().supports_remote_transport(), "{n}");
+        }
     }
 }

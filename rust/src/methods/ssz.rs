@@ -16,10 +16,9 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::approx::{self, ApproxKind, LocalApprox};
 use crate::linalg;
 use crate::metrics::Trace;
-use crate::optim::{tron::Tron, InnerOptimizer};
+use crate::net::LocalSolveSpec;
 
 #[derive(Clone, Debug)]
 pub struct Ssz {
@@ -47,71 +46,33 @@ impl Default for Ssz {
     }
 }
 
-/// Wrap a LocalApprox with a proximal term μ/2‖v − anchor‖² and an η
-/// scaling folded into the linear part (applied via gradient shift).
-struct ProxWrap<'a> {
-    inner: Box<dyn LocalApprox + 'a>,
-    mu: f64,
-    /// (η − 1)·∇L(w^r): added to the inner gradient to realize the η
-    /// scaling without rebuilding the approximation
-    grad_shift: Vec<f64>,
-    anchor: Vec<f64>,
-}
-
-impl<'a> LocalApprox for ProxWrap<'a> {
-    fn m(&self) -> usize {
-        self.inner.m()
-    }
-
-    fn eval(&mut self, v: &[f64]) -> (f64, Vec<f64>) {
-        let (mut value, mut grad) = self.inner.eval(v);
-        let delta = linalg::sub(v, &self.anchor);
-        value += 0.5 * self.mu * linalg::dot(&delta, &delta);
-        value += linalg::dot(&self.grad_shift, &delta);
-        linalg::axpy(self.mu, &delta, &mut grad);
-        linalg::axpy(1.0, &self.grad_shift, &mut grad);
-        (value, grad)
-    }
-
-    fn hvp(&self, s: &[f64]) -> Vec<f64> {
-        let mut out = self.inner.hvp(s);
-        linalg::axpy(self.mu, s, &mut out);
-        out
-    }
-
-    fn passes(&self) -> f64 {
-        self.inner.passes()
-    }
-
-    fn anchor(&self) -> &[f64] {
-        &self.anchor
-    }
-}
-
 impl Trainer for Ssz {
     fn label(&self) -> String {
         "ssz".into()
     }
 
+    // the prox-regularized local solves run worker-side against the
+    // margins/local gradients cached by the gradient phase (through
+    // LocalSolve), so SSZ runs over any transport
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let p = cluster.p();
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
+        cluster.reset_phase();
         let mut w = if self.warm_start {
             common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
         } else {
             ctx.w0.clone()
         };
         let mut g0_norm = None;
-        let tron = Tron::default();
         let mu = self.mu_over_lambda * obj.lambda;
         let eta = self.eta;
 
         for r in 0..ctx.max_outer {
-            let (loss_sum, data_grad, margins, local_grads) =
-                cluster.gradient_pass(obj.loss, &w);
+            // caches every worker's (z_p, ∇L_p) for the local solves
+            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
             let f = obj.value_from(&w, loss_sum);
             let mut g = data_grad.clone();
             obj.finish_grad(&w, &mut g);
@@ -131,39 +92,23 @@ impl Trainer for Ssz {
                 break;
             }
 
-            let w_anchor = w.clone();
-            let g_full = g.clone();
-            let local_iters = self.local_iters;
-            // (η − 1)·∇L(w^r)
+            // (η − 1)·∇L(w^r), precomputed once driver-side
             let mut shift = data_grad.clone();
             linalg::scale(eta - 1.0, &mut shift);
-            let results = cluster.map(|node, shard| {
-                let ctx_p = approx::ApproxContext {
-                    shard,
-                    loss: obj.loss,
-                    lambda: obj.lambda,
-                    p_nodes: p as f64,
-                    anchor: w_anchor.clone(),
-                    full_grad: g_full.clone(),
-                    local_grad: local_grads[node].clone(),
-                    anchor_margins: margins[node].clone(),
-                };
-                let inner = approx::build(ApproxKind::Nonlinear, ctx_p, None);
-                let mut prox = ProxWrap {
-                    inner,
-                    mu,
-                    grad_shift: shift.clone(),
-                    anchor: w_anchor.clone(),
-                };
-                let res = tron.minimize(&mut prox, local_iters);
-                let units = prox.passes() * 2.0 * shard.nnz() as f64;
-                (res.w, units)
+            let results = cluster.local_solve_phase(&LocalSolveSpec::SszProx {
+                loss: obj.loss,
+                lambda: obj.lambda,
+                mu,
+                local_iters: self.local_iters as u32,
+                anchor: w.clone(),
+                full_grad: g.clone(),
+                grad_shift: shift,
             });
 
             // fixed-step average — no line search (the SSZ signature)
             let parts: Vec<Vec<f64>> = results
                 .into_iter()
-                .map(|mut wp| {
+                .map(|(mut wp, _)| {
                     linalg::scale(1.0 / p as f64, &mut wp);
                     wp
                 })

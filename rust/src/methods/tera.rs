@@ -61,6 +61,9 @@ impl Trainer for Tera {
         }
     }
 
+    // every cluster operation below is a named transport phase (grad /
+    // hvp / loss-eval / dirs / linesearch / warm start), so TERA runs
+    // unchanged over the in-process and the TCP transport
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         match self.solver {
             OuterSolver::Tron => self.train_tron(ctx),
@@ -85,12 +88,15 @@ impl Tera {
         let obj = ctx.objective;
         let mut trace = Trace::new(&self.label(), "", cluster.p());
         let wall = Instant::now();
+        cluster.reset_phase();
         let mut w = self.initial_w(ctx);
         let mut g0_norm = None;
         let mut radius: Option<f64> = None;
 
         for r in 0..ctx.max_outer {
-            let (loss_sum, data_grad, margins, _) = cluster.gradient_pass(obj.loss, &w);
+            // the gradient phase caches every worker's margins z_p,
+            // which the Hvp phases below multiply against
+            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
             let f = obj.value_from(&w, loss_sum);
             let mut g = data_grad;
             obj.finish_grad(&w, &mut g);
@@ -123,7 +129,7 @@ impl Tera {
                 if rr.sqrt() <= self.cg_tol * r0 {
                     break;
                 }
-                let mut hd = cluster.hvp_pass(obj.loss, &margins, &dvec);
+                let mut hd = cluster.hvp_phase(obj.loss, &dvec);
                 linalg::axpy(obj.lambda, &dvec, &mut hd); // + λ·d (regularizer)
                 let dhd = linalg::dot(&dvec, &hd);
                 if dhd <= 0.0 {
@@ -153,14 +159,14 @@ impl Tera {
             }
 
             // predicted reduction (needs one more Hv)
-            let mut hs = cluster.hvp_pass(obj.loss, &margins, &s);
+            let mut hs = cluster.hvp_phase(obj.loss, &s);
             linalg::axpy(obj.lambda, &s, &mut hs);
             let predicted = -(linalg::dot(&g, &s) + 0.5 * linalg::dot(&s, &hs));
 
             // actual reduction: one data pass, scalar aggregation only
             let mut w_try = w.clone();
             linalg::accum(&mut w_try, &s);
-            let f_try = obj.value_from(&w_try, cluster.loss_pass(obj.loss, &w_try));
+            let f_try = obj.value_from(&w_try, cluster.loss_phase(obj.loss, &w_try));
             let rho = if predicted.abs() < 1e-300 {
                 1.0
             } else {
@@ -184,6 +190,7 @@ impl Tera {
         let obj = ctx.objective;
         let mut trace = Trace::new(&self.label(), "", cluster.p());
         let wall = Instant::now();
+        cluster.reset_phase();
         let mut w = self.initial_w(ctx);
         let mut g0_norm = None;
         let mut history: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::new(); // (s, y, 1/yᵀs)
@@ -191,7 +198,8 @@ impl Tera {
         let mut prev: Option<(Vec<f64>, Vec<f64>)> = None; // (w, g)
 
         for r in 0..ctx.max_outer {
-            let (loss_sum, data_grad, margins, _) = cluster.gradient_pass(obj.loss, &w);
+            // margins z_p cached worker-side for the line search below
+            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
             let f = obj.value_from(&w, loss_sum);
             let mut g = data_grad;
             obj.finish_grad(&w, &mut g);
@@ -247,11 +255,11 @@ impl Tera {
 
             // line search over cached margins: 1 compute pass for e, then
             // scalar rounds only
-            let dirs = cluster.margins_pass(&d);
+            cluster.dirs_phase(&d);
             let w_dot_d = linalg::dot(&w, &d);
             let d_dot_d = linalg::dot(&d, &d);
             let res = LineSearch::default().search(f, gd, |t| {
-                let (phi, dphi) = cluster.linesearch_eval(obj.loss, &margins, &dirs, t);
+                let (phi, dphi) = cluster.linesearch_phase(obj.loss, t);
                 let reg = 0.5
                     * obj.lambda
                     * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);

@@ -120,6 +120,36 @@ impl Trace {
         }
     }
 
+    /// Serialize to CSV, one row per outer iteration (the bench-smoke
+    /// CI job uploads these as artifacts so the BENCH_*.json
+    /// trajectories always have a CI-produced source). f64 columns use
+    /// Rust's shortest-roundtrip `Display`, so parsing the CSV back
+    /// recovers the exact values.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "iter,comm_passes,sim_secs,sim_compute_secs,sim_comm_secs,wall_secs,\
+             meas_phase_secs,meas_reduce_secs,net_bytes,f,grad_norm,auprc\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                r.iter,
+                r.comm_passes,
+                r.sim_secs,
+                r.sim_compute_secs,
+                r.sim_comm_secs,
+                r.wall_secs,
+                r.meas_phase_secs,
+                r.meas_reduce_secs,
+                r.net_bytes,
+                r.f,
+                r.grad_norm,
+                r.auprc
+            ));
+        }
+        out
+    }
+
     /// Serialize to JSON (written next to bench outputs so figures can
     /// be re-plotted without re-running).
     pub fn to_json(&self) -> Json {
@@ -260,6 +290,22 @@ mod tests {
         );
         assert_eq!(parsed.get("net_bytes").unwrap().as_arr().unwrap().len(), 5);
         assert!(parsed.get("sim_secs").is_some());
+    }
+
+    #[test]
+    fn csv_has_header_and_one_row_per_record() {
+        let t = sample_trace();
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].starts_with("iter,comm_passes,"));
+        assert_eq!(lines[0].split(',').count(), 12);
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), 12, "{line}");
+        }
+        // Display round-trips f64 exactly
+        let f0: f64 = lines[1].split(',').nth(9).unwrap().parse().unwrap();
+        assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 
     #[test]

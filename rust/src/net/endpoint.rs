@@ -11,14 +11,16 @@
 //! ∇L_p, BFGS curvature and its cross-iteration history) lives in
 //! [`WorkerState`] and never needs to cross the wire.
 
-use crate::approx::{self, ApproxKind, BfgsCurvature};
+use crate::approx::{
+    self, ApproxKind, BfgsCurvature, LocalApprox, MaskedApprox, ProxLocal, ProxWrap,
+};
 use crate::linalg;
-use crate::loss::Loss;
+use crate::loss::{self, Loss};
 use crate::objective::ShardCompute;
-use crate::optim;
+use crate::optim::{self, tron::Tron, InnerOptimizer};
 use crate::util::rng::Pcg64;
 
-use super::{Command, Reply};
+use super::{Command, DualUpdateSpec, LocalSolveSpec, Reply};
 
 /// Per-worker session state (one per shard, reset by [`Command::Reset`]).
 #[derive(Clone, Debug)]
@@ -35,6 +37,19 @@ pub struct WorkerState {
     bfgs: BfgsCurvature,
     /// previous (anchor, ∇L, ∇L_p) for the BFGS y-vector
     prev: Option<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+    /// ADMM per-node primal iterate w_p (initialized by the first
+    /// `LocalSolve(AdmmProx { init: true, .. })`)
+    admm_w: Vec<f64>,
+    /// ADMM per-node scaled dual u_p
+    admm_u: Vec<f64>,
+    /// ADMM consensus iterate z, cached from `DualUpdate` so the next
+    /// proximal solve doesn't need it re-broadcast
+    admm_z: Vec<f64>,
+    /// CoCoA per-node dual block α_p (lazily sized to the shard)
+    cocoa_alpha: Vec<f64>,
+    /// feature-partitioned FADL: this rank's coordinate mask, cached
+    /// from the first `FeatureSolve` (the partition is static per run)
+    feature_mask: Vec<bool>,
 }
 
 impl WorkerState {
@@ -47,6 +62,11 @@ impl WorkerState {
             dirs: Vec::new(),
             bfgs: BfgsCurvature::default(),
             prev: None,
+            admm_w: Vec::new(),
+            admm_u: Vec::new(),
+            admm_z: Vec::new(),
+            cocoa_alpha: Vec::new(),
+            feature_mask: Vec::new(),
         }
     }
 
@@ -56,6 +76,11 @@ impl WorkerState {
         self.dirs.clear();
         self.bfgs = BfgsCurvature::default();
         self.prev = None;
+        self.admm_w.clear();
+        self.admm_u.clear();
+        self.admm_z.clear();
+        self.cocoa_alpha.clear();
+        self.feature_mask.clear();
     }
 }
 
@@ -150,6 +175,208 @@ pub fn exec(
                 counts: counts.into_iter().map(f64::from).collect(),
                 units,
             })
+        }
+        Command::Hvp { loss, s } => {
+            if st.margins.len() != shard.n() {
+                return Err(format!(
+                    "hvp without cached margins (rank {}: |z| = {}, n = {})",
+                    st.rank,
+                    st.margins.len(),
+                    shard.n()
+                ));
+            }
+            let hv = shard.hvp(*loss, &st.margins, s);
+            // fused Xᵀ(D(X·s)): two passes × 2 flops/nz (Appendix A)
+            Ok(Reply::Vector { v: hv, units: 2.0 * 2.0 * shard.nnz() as f64 })
+        }
+        Command::LossEval { loss, w } => {
+            let v = shard.loss_value(*loss, w);
+            Ok(Reply::Scalar { v, units: 2.0 * shard.nnz() as f64 })
+        }
+        Command::LocalSolve(spec) => local_solve(shard, st, spec),
+        Command::DualUpdate(spec) => match spec {
+            DualUpdateSpec::AdmmDual { z } => {
+                if st.admm_w.len() != z.len() || st.admm_u.len() != z.len() {
+                    return Err(format!(
+                        "admm dual update before a proximal solve (rank {})",
+                        st.rank
+                    ));
+                }
+                for j in 0..z.len() {
+                    st.admm_u[j] += st.admm_w[j] - z[j];
+                }
+                // cache z: the next AdmmProx uses it without the driver
+                // re-broadcasting the same vector
+                st.admm_z = z.clone();
+                // O(m) bookkeeping — free, like the driver-side loop it
+                // replaces (the residual round is charged by the driver)
+                Ok(Reply::Scalar { v: linalg::dist_sq(&st.admm_w, z), units: 0.0 })
+            }
+        },
+    }
+}
+
+/// Execute one node-local subproblem solve (the per-method payloads of
+/// [`Command::LocalSolve`]).
+fn local_solve(
+    shard: &dyn ShardCompute,
+    st: &mut WorkerState,
+    spec: &LocalSolveSpec,
+) -> Result<Reply, String> {
+    match spec {
+        LocalSolveSpec::AdmmProx { loss, rho, local_iters, init, u_scale, z } => {
+            let m = shard.m();
+            if *init {
+                if z.len() != m {
+                    return Err(format!("admm prox init: |z| = {} but m = {m}", z.len()));
+                }
+                st.admm_w = z.clone();
+                st.admm_u = vec![0.0; m];
+                st.admm_z = z.clone();
+            }
+            if st.admm_w.len() != m || st.admm_z.len() != m {
+                return Err(format!(
+                    "admm prox without init (rank {}: no node state)",
+                    st.rank
+                ));
+            }
+            if *u_scale != 1.0 {
+                // scaled duals u = y/ρ must be rescaled when ρ changed
+                linalg::scale(*u_scale, &mut st.admm_u);
+            }
+            let center = linalg::sub(&st.admm_z, &st.admm_u);
+            let mut prox =
+                ProxLocal::new(shard, *loss, *rho, center, st.admm_w.clone());
+            let res = Tron::default().minimize(&mut prox, *local_iters as usize);
+            let units = prox.passes() * 2.0 * shard.nnz() as f64;
+            st.admm_w = res.w;
+            // the part the driver AllReduces for the consensus update
+            let part = linalg::add(&st.admm_w, &st.admm_u);
+            Ok(Reply::Solve { w: part, n: shard.n(), units })
+        }
+        LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
+            let m = shard.m();
+            let Some(data) = shard.shard() else {
+                // block-only backend: no per-example access, no progress
+                return Ok(Reply::Solve { w: vec![0.0; m], n: shard.n(), units: 0.0 });
+            };
+            let n = data.n();
+            if st.cocoa_alpha.len() != n {
+                st.cocoa_alpha = vec![0.0; n];
+            }
+            let mut alpha = st.cocoa_alpha.clone();
+            let mut w_loc = w.clone();
+            let mut delta_w = vec![0.0; m];
+            if n > 0 {
+                let steps = ((n as f64) * epochs).ceil() as usize;
+                let mut rng = Pcg64::with_stream(seed ^ round, st.rank as u64);
+                for _ in 0..steps {
+                    let i = rng.below(n);
+                    let xsq = data.x.row_norm_sq(i);
+                    if xsq == 0.0 {
+                        continue;
+                    }
+                    let margin_y = data.y[i] * data.x.row_dot(i, &w_loc);
+                    let d = loss::sdca_delta(margin_y, alpha[i], xsq / lambda);
+                    if d != 0.0 {
+                        alpha[i] += d;
+                        let coef = d * data.y[i] / lambda;
+                        data.x.row_axpy(i, coef, &mut w_loc);
+                        data.x.row_axpy(i, coef, &mut delta_w);
+                    }
+                }
+            }
+            // safe 1/P averaging of the dual increments, so that
+            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent with the
+            // driver's w += (1/P)·Σ Δw_p combine
+            let pf = st.p as f64;
+            for i in 0..n {
+                st.cocoa_alpha[i] += (alpha[i] - st.cocoa_alpha[i]) / pf;
+            }
+            let units = epochs * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Solve { w: delta_w, n: shard.n(), units })
+        }
+        LocalSolveSpec::SszProx {
+            loss,
+            lambda,
+            mu,
+            local_iters,
+            anchor,
+            full_grad,
+            grad_shift,
+        } => {
+            if st.local_grad.len() != shard.m() || st.margins.len() != shard.n() {
+                return Err(format!(
+                    "ssz solve without a preceding gradient pass (rank {})",
+                    st.rank
+                ));
+            }
+            let ctx_p = approx::ApproxContext {
+                shard,
+                loss: *loss,
+                lambda: *lambda,
+                p_nodes: st.p as f64,
+                anchor: anchor.clone(),
+                full_grad: full_grad.clone(),
+                local_grad: st.local_grad.clone(),
+                anchor_margins: st.margins.clone(),
+            };
+            let inner = approx::build(ApproxKind::Nonlinear, ctx_p, None);
+            let mut prox =
+                ProxWrap::new(inner, *mu, grad_shift.clone(), anchor.clone());
+            let res = Tron::default().minimize(&mut prox, *local_iters as usize);
+            let units = prox.passes() * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Solve { w: res.w, n: shard.n(), units })
+        }
+        LocalSolveSpec::FeatureSolve { loss, lambda, k_hat, anchor, full_grad, subsets } => {
+            if st.local_grad.len() != shard.m() || st.margins.len() != shard.n() {
+                return Err(format!(
+                    "feature solve without a preceding gradient pass (rank {})",
+                    st.rank
+                ));
+            }
+            let m = shard.m();
+            if !subsets.is_empty() {
+                // first round: pick and cache this rank's mask (the
+                // partition is static, so later rounds ship no subsets)
+                let subset = subsets.get(st.rank).ok_or_else(|| {
+                    format!(
+                        "feature solve: {} subsets for rank {}",
+                        subsets.len(),
+                        st.rank
+                    )
+                })?;
+                let mut mask = vec![false; m];
+                for &j in subset {
+                    let j = j as usize;
+                    if j >= m {
+                        return Err(format!("feature solve: feature {j} out of range"));
+                    }
+                    mask[j] = true;
+                }
+                st.feature_mask = mask;
+            }
+            if st.feature_mask.len() != m {
+                return Err(format!(
+                    "feature solve without a cached subset (rank {})",
+                    st.rank
+                ));
+            }
+            let ctx_p = approx::ApproxContext {
+                shard,
+                loss: *loss,
+                lambda: *lambda,
+                p_nodes: st.p as f64,
+                anchor: anchor.clone(),
+                full_grad: full_grad.clone(),
+                local_grad: st.local_grad.clone(),
+                anchor_margins: st.margins.clone(),
+            };
+            let inner = approx::build(ApproxKind::Quadratic, ctx_p, None);
+            let mut masked = MaskedApprox::new(inner, st.feature_mask.clone());
+            let res = Tron::default().minimize(&mut masked, *k_hat as usize);
+            let units = masked.passes() * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Solve { w: res.w, n: shard.n(), units })
         }
     }
 }
@@ -269,6 +496,152 @@ mod tests {
         assert!(!st.margins.is_empty());
         exec(&sh, &mut st, &Command::Reset).unwrap();
         assert!(st.margins.is_empty() && st.local_grad.is_empty());
+    }
+
+    #[test]
+    fn hvp_uses_cached_margins_and_losseval_keeps_them() {
+        let sh = shard_of(40, 10, 6);
+        let mut st = WorkerState::new(0, 1);
+        let w = vec![0.05; 10];
+        let s = vec![0.3; 10];
+        // Hvp before Grad must fail
+        assert!(exec(
+            &sh,
+            &mut st,
+            &Command::Hvp { loss: Loss::SquaredHinge, s: s.clone() }
+        )
+        .is_err());
+        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: w.clone() })
+            .unwrap();
+        let want = {
+            let (_, _, z) = sh.loss_grad(Loss::SquaredHinge, &w);
+            sh.hvp(Loss::SquaredHinge, &z, &s)
+        };
+        // a LossEval at a different point must not disturb the anchor
+        let r = exec(
+            &sh,
+            &mut st,
+            &Command::LossEval { loss: Loss::SquaredHinge, w: vec![9.0; 10] },
+        )
+        .unwrap();
+        let Reply::Scalar { v, .. } = r else { panic!("wrong reply") };
+        assert_eq!(v, sh.loss_value(Loss::SquaredHinge, &vec![9.0; 10]));
+        let r = exec(&sh, &mut st, &Command::Hvp { loss: Loss::SquaredHinge, s })
+            .unwrap();
+        let Reply::Vector { v, units } = r else { panic!("wrong reply") };
+        assert_eq!(v, want);
+        assert!(units > 0.0);
+    }
+
+    #[test]
+    fn admm_prox_then_dual_update_maintains_state() {
+        let sh = shard_of(30, 8, 7);
+        let mut st = WorkerState::new(0, 2);
+        // dual update before any prox solve errors
+        assert!(exec(
+            &sh,
+            &mut st,
+            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual {
+                z: vec![0.0; 8]
+            })
+        )
+        .is_err());
+        let z = vec![0.1; 8];
+        let solve = Command::LocalSolve(crate::net::LocalSolveSpec::AdmmProx {
+            loss: Loss::SquaredHinge,
+            rho: 0.5,
+            local_iters: 4,
+            init: true,
+            u_scale: 1.0,
+            z: z.clone(),
+        });
+        let Reply::Solve { w: part, units, .. } = exec(&sh, &mut st, &solve).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        // u = 0 after init, so the reduced part IS w_p
+        assert_eq!(part, st.admm_w);
+        assert!(units > 0.0);
+        let Reply::Scalar { v, units } = exec(
+            &sh,
+            &mut st,
+            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual {
+                z: z.clone(),
+            }),
+        )
+        .unwrap() else {
+            panic!("wrong reply")
+        };
+        assert_eq!(v, crate::linalg::dist_sq(&st.admm_w, &z));
+        assert_eq!(units, 0.0);
+        // u must now be w − z
+        for j in 0..8 {
+            assert_eq!(st.admm_u[j], st.admm_w[j] - z[j]);
+        }
+        exec(&sh, &mut st, &Command::Reset).unwrap();
+        assert!(st.admm_w.is_empty() && st.admm_u.is_empty());
+    }
+
+    #[test]
+    fn cocoa_duals_persist_across_rounds() {
+        let sh = shard_of(50, 12, 8);
+        let mut st = WorkerState::new(1, 2);
+        let solve = |round: u64, st: &mut WorkerState| {
+            let cmd = Command::LocalSolve(crate::net::LocalSolveSpec::CocoaSdca {
+                lambda: 0.1,
+                epochs: 1.0,
+                seed: 99,
+                round,
+                w: vec![0.0; 12],
+            });
+            let Reply::Solve { w, .. } = exec(&sh, st, &cmd).unwrap() else {
+                panic!("wrong reply")
+            };
+            w
+        };
+        let d0 = solve(0, &mut st);
+        assert!(d0.iter().any(|&x| x != 0.0), "no SDCA progress");
+        let alpha_after_0 = st.cocoa_alpha.clone();
+        assert!(alpha_after_0.iter().any(|&a| a != 0.0));
+        let _ = solve(1, &mut st);
+        assert_ne!(alpha_after_0, st.cocoa_alpha, "duals should keep moving");
+        exec(&sh, &mut st, &Command::Reset).unwrap();
+        assert!(st.cocoa_alpha.is_empty());
+    }
+
+    #[test]
+    fn ssz_and_feature_solves_require_grad_first() {
+        let sh = shard_of(20, 8, 9);
+        let mut st = WorkerState::new(0, 2);
+        let ssz = Command::LocalSolve(crate::net::LocalSolveSpec::SszProx {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-2,
+            mu: 3e-2,
+            local_iters: 3,
+            anchor: vec![0.0; 8],
+            full_grad: vec![0.0; 8],
+            grad_shift: vec![0.0; 8],
+        });
+        assert!(exec(&sh, &mut st, &ssz).is_err());
+        let feat = Command::LocalSolve(crate::net::LocalSolveSpec::FeatureSolve {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-2,
+            k_hat: 3,
+            anchor: vec![0.0; 8],
+            full_grad: vec![0.0; 8],
+            subsets: vec![vec![0, 1], vec![2, 3]],
+        });
+        assert!(exec(&sh, &mut st, &feat).is_err());
+        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: vec![0.0; 8] })
+            .unwrap();
+        assert!(exec(&sh, &mut st, &ssz).is_ok());
+        let Reply::Solve { w, .. } = exec(&sh, &mut st, &feat).unwrap() else {
+            panic!("wrong reply")
+        };
+        // rank 0 may only move features {0, 1}
+        for j in 2..8 {
+            assert_eq!(w[j], 0.0, "coordinate {j} moved");
+        }
     }
 
     #[test]

@@ -50,7 +50,8 @@ use crate::objective::ShardCompute;
 
 /// One BSP phase command, executed by every worker against its shard
 /// and per-worker session state (cached margins z, direction margins e,
-/// local gradient, BFGS curvature). This is exactly the wire
+/// local gradient, BFGS curvature, and the per-method node state:
+/// ADMM's (w_p, u_p), CoCoA's duals α_p). This is exactly the wire
 /// vocabulary; the in-process transport executes the same enum.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
@@ -75,6 +76,99 @@ pub enum Command {
         epochs: u32,
         seed: u64,
     },
+    /// Hessian-vector product Xᵀ(D(X·s)) at the margins cached by the
+    /// preceding [`Command::Grad`] (TERA-TRON's CG hot loop; Table 3's
+    /// one AllReduce per inner step).
+    Hvp { loss: Loss, s: Vec<f64> },
+    /// Data-loss value Σ c·l at an arbitrary replicated w (trust-region
+    /// accept/reject, dual methods' primal traces). Leaves the cached
+    /// margins untouched — a following `Hvp` still sees the anchor.
+    LossEval { loss: Loss, w: Vec<f64> },
+    /// Node-local subproblem solve with a per-method payload (ADMM's
+    /// proximal step, CoCoA's SDCA epochs, SSZ's prox-regularized local
+    /// model, feature-partitioned FADL's masked solve).
+    LocalSolve(LocalSolveSpec),
+    /// Per-method node-local state update with a per-method payload
+    /// (e.g. ADMM's scaled-dual step), replying one scalar per rank.
+    DualUpdate(DualUpdateSpec),
+}
+
+/// Payload of [`Command::LocalSolve`]: everything a node-local
+/// subproblem solve needs beyond what is already worker-side. The
+/// command is broadcast identically to every rank; per-rank inputs
+/// (the shard, cached ∇L_p/z_p, and per-node primal/dual state) live
+/// in [`endpoint::WorkerState`] and never cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LocalSolveSpec {
+    /// ADMM §4.4 proximal step: w_p ← argmin L_p(w) + ρ/2‖w−(z−u_p)‖²,
+    /// warm-started from the node's previous w_p. Replies w_p + u_p
+    /// (the part the driver AllReduces for the consensus update).
+    AdmmProx {
+        loss: Loss,
+        rho: f64,
+        /// TRON iterations for the proximal solve
+        local_iters: u32,
+        /// initialize node state (w_p ← z, u_p ← 0) before solving
+        init: bool,
+        /// scaled-dual rescale from the previous iteration's ρ change,
+        /// applied to u_p before the solve (1.0 = no change)
+        u_scale: f64,
+        /// consensus iterate z — shipped only when `init` (empty
+        /// otherwise: the worker reuses the z it cached from the
+        /// previous `DualUpdate`, halving ADMM's broadcast volume)
+        z: Vec<f64>,
+    },
+    /// CoCoA local SDCA epochs on the node's dual block against a local
+    /// copy of w. The duals α_p persist worker-side across rounds (the
+    /// safe 1/P averaging of the increments happens worker-side too).
+    /// Replies Δw_p.
+    CocoaSdca {
+        lambda: f64,
+        epochs: f64,
+        seed: u64,
+        /// outer round index (selects the per-round RNG stream)
+        round: u64,
+        w: Vec<f64>,
+    },
+    /// SSZ node-local solve: the Nonlinear local model plus a proximal
+    /// term μ/2‖w−w^r‖² and the η gradient shift. Replies ŵ_p.
+    SszProx {
+        loss: Loss,
+        lambda: f64,
+        mu: f64,
+        /// TRON iterations
+        local_iters: u32,
+        /// the anchor w^r
+        anchor: Vec<f64>,
+        /// g^r = λw^r + ∇L(w^r)
+        full_grad: Vec<f64>,
+        /// (η−1)·∇L(w^r), precomputed driver-side
+        grad_shift: Vec<f64>,
+    },
+    /// Feature-partitioned FADL (§5): rank p minimizes the Quadratic
+    /// local model restricted to its coordinate subset J_p.
+    FeatureSolve {
+        loss: Loss,
+        lambda: f64,
+        /// inner TRON iterations k̂
+        k_hat: u32,
+        anchor: Vec<f64>,
+        full_grad: Vec<f64>,
+        /// J_p per rank — the shared command carries every subset and
+        /// each rank caches its own, so the (static) partition is
+        /// shipped on the first round only (empty afterwards)
+        subsets: Vec<Vec<u32>>,
+    },
+}
+
+/// Payload of [`Command::DualUpdate`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum DualUpdateSpec {
+    /// ADMM scaled-dual step u_p ← u_p + w_p − z; the worker also
+    /// caches z for the next proximal solve. Replies ‖w_p − z‖² (the
+    /// node's term of the primal residual). Free in the simulated cost
+    /// model, matching the driver-side loop it replaces.
+    AdmmDual { z: Vec<f64> },
 }
 
 /// Everything a worker needs to build f̂_p and run the inner optimizer;
@@ -109,6 +203,10 @@ pub enum Reply {
     Pair { a: f64, b: f64, units: f64 },
     Solve { w: Vec<f64>, n: usize, units: f64 },
     Warm { w: Vec<f64>, counts: Vec<f64>, units: f64 },
+    /// One m-vector (Hvp parts, reduced driver-side).
+    Vector { v: Vec<f64>, units: f64 },
+    /// One scalar (LossEval values, DualUpdate residual terms).
+    Scalar { v: f64, units: f64 },
 }
 
 impl Reply {
@@ -118,7 +216,9 @@ impl Reply {
             | Reply::Grad { units, .. }
             | Reply::Pair { units, .. }
             | Reply::Solve { units, .. }
-            | Reply::Warm { units, .. } => *units,
+            | Reply::Warm { units, .. }
+            | Reply::Vector { units, .. }
+            | Reply::Scalar { units, .. } => *units,
         }
     }
 }

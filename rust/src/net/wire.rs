@@ -30,7 +30,7 @@ use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
 
-use super::{Command, InnerSolveSpec, Reply, WorkerSetup};
+use super::{Command, DualUpdateSpec, InnerSolveSpec, LocalSolveSpec, Reply, WorkerSetup};
 
 /// Hard cap on a single frame (guards against corrupt length prefixes).
 pub const MAX_FRAME: usize = 1 << 30;
@@ -40,7 +40,11 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// handshake instead of silently rebuilding a subtly different shard.
 /// Bump on ANY change to the frame layout, message tags, field order,
 /// or the semantics of the shard-rebuild recipe.
-pub const PROTO_VERSION: u32 = 1;
+///
+/// v2: full-vocabulary transports — `Hvp`, `LossEval`, `LocalSolve`
+/// (ADMM/CoCoA/SSZ/feature-FADL payloads), `DualUpdate`, and the
+/// `Vector`/`Scalar` replies.
+pub const PROTO_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -156,6 +160,20 @@ impl Enc {
             None => self.u8(0),
         }
     }
+
+    pub fn vec_u32(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    pub fn vec_vec_u32(&mut self, v: &[Vec<u32>]) {
+        self.u64(v.len() as u64);
+        for inner in v {
+            self.vec_u32(inner);
+        }
+    }
 }
 
 /// Cursor-based decoder over a frame payload.
@@ -232,6 +250,31 @@ impl<'a> Dec<'a> {
         Ok(if self.u8()? == 1 { Some(self.vec_f64()?) } else { None })
     }
 
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>, String> {
+        let len = self.u64()? as usize;
+        if len.saturating_mul(4) > self.buf.len() - self.pos {
+            return Err(format!("truncated u32 vector of claimed length {len}"));
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_vec_u32(&mut self) -> Result<Vec<Vec<u32>>, String> {
+        let len = self.u64()? as usize;
+        // each inner vector costs at least its 8-byte length prefix
+        if len.saturating_mul(8) > self.buf.len() - self.pos {
+            return Err(format!("truncated vector list of claimed length {len}"));
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.vec_u32()?);
+        }
+        Ok(v)
+    }
+
     pub fn finish(&self) -> Result<(), String> {
         if self.pos != self.buf.len() {
             return Err(format!(
@@ -299,11 +342,24 @@ mod tag {
     pub const CMD_LINESEARCH: u8 = 13;
     pub const CMD_INNER_SOLVE: u8 = 14;
     pub const CMD_WARMSTART: u8 = 15;
+    pub const CMD_HVP: u8 = 16;
+    pub const CMD_LOSS_EVAL: u8 = 17;
+    pub const CMD_LOCAL_SOLVE: u8 = 18;
+    pub const CMD_DUAL_UPDATE: u8 = 19;
     pub const REPLY_ACK: u8 = 30;
     pub const REPLY_GRAD: u8 = 31;
     pub const REPLY_PAIR: u8 = 32;
     pub const REPLY_SOLVE: u8 = 33;
     pub const REPLY_WARM: u8 = 34;
+    pub const REPLY_VECTOR: u8 = 35;
+    pub const REPLY_SCALAR: u8 = 36;
+    // LocalSolve payload sub-tags
+    pub const SOLVE_ADMM_PROX: u8 = 1;
+    pub const SOLVE_COCOA_SDCA: u8 = 2;
+    pub const SOLVE_SSZ_PROX: u8 = 3;
+    pub const SOLVE_FEATURE: u8 = 4;
+    // DualUpdate payload sub-tags
+    pub const DUAL_ADMM: u8 = 1;
 }
 
 fn check_version(got: u32) -> Result<(), String> {
@@ -383,6 +439,81 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 e.u32(*epochs);
                 e.u64(*seed);
             }
+            Command::Hvp { loss, s } => {
+                e.u8(tag::CMD_HVP);
+                e.str(loss.name());
+                e.vec_f64(s);
+            }
+            Command::LossEval { loss, w } => {
+                e.u8(tag::CMD_LOSS_EVAL);
+                e.str(loss.name());
+                e.vec_f64(w);
+            }
+            Command::LocalSolve(spec) => {
+                e.u8(tag::CMD_LOCAL_SOLVE);
+                match spec {
+                    LocalSolveSpec::AdmmProx { loss, rho, local_iters, init, u_scale, z } => {
+                        e.u8(tag::SOLVE_ADMM_PROX);
+                        e.str(loss.name());
+                        e.f64(*rho);
+                        e.u32(*local_iters);
+                        e.bool(*init);
+                        e.f64(*u_scale);
+                        e.vec_f64(z);
+                    }
+                    LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
+                        e.u8(tag::SOLVE_COCOA_SDCA);
+                        e.f64(*lambda);
+                        e.f64(*epochs);
+                        e.u64(*seed);
+                        e.u64(*round);
+                        e.vec_f64(w);
+                    }
+                    LocalSolveSpec::SszProx {
+                        loss,
+                        lambda,
+                        mu,
+                        local_iters,
+                        anchor,
+                        full_grad,
+                        grad_shift,
+                    } => {
+                        e.u8(tag::SOLVE_SSZ_PROX);
+                        e.str(loss.name());
+                        e.f64(*lambda);
+                        e.f64(*mu);
+                        e.u32(*local_iters);
+                        e.vec_f64(anchor);
+                        e.vec_f64(full_grad);
+                        e.vec_f64(grad_shift);
+                    }
+                    LocalSolveSpec::FeatureSolve {
+                        loss,
+                        lambda,
+                        k_hat,
+                        anchor,
+                        full_grad,
+                        subsets,
+                    } => {
+                        e.u8(tag::SOLVE_FEATURE);
+                        e.str(loss.name());
+                        e.f64(*lambda);
+                        e.u32(*k_hat);
+                        e.vec_f64(anchor);
+                        e.vec_f64(full_grad);
+                        e.vec_vec_u32(subsets);
+                    }
+                }
+            }
+            Command::DualUpdate(spec) => {
+                e.u8(tag::CMD_DUAL_UPDATE);
+                match spec {
+                    DualUpdateSpec::AdmmDual { z } => {
+                        e.u8(tag::DUAL_ADMM);
+                        e.vec_f64(z);
+                    }
+                }
+            }
         },
         Msg::Reply(reply) => match reply {
             Reply::Ack { units } => {
@@ -411,6 +542,16 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 e.u8(tag::REPLY_WARM);
                 e.vec_f64(w);
                 e.vec_f64(counts);
+                e.f64(*units);
+            }
+            Reply::Vector { v, units } => {
+                e.u8(tag::REPLY_VECTOR);
+                e.vec_f64(v);
+                e.f64(*units);
+            }
+            Reply::Scalar { v, units } => {
+                e.u8(tag::REPLY_SCALAR);
+                e.f64(*v);
                 e.f64(*units);
             }
         },
@@ -476,6 +617,61 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             epochs: d.u32()?,
             seed: d.u64()?,
         }),
+        tag::CMD_HVP => Msg::Cmd(Command::Hvp {
+            loss: loss_from(&d.str()?)?,
+            s: d.vec_f64()?,
+        }),
+        tag::CMD_LOSS_EVAL => Msg::Cmd(Command::LossEval {
+            loss: loss_from(&d.str()?)?,
+            w: d.vec_f64()?,
+        }),
+        tag::CMD_LOCAL_SOLVE => {
+            let sub = d.u8()?;
+            let spec = match sub {
+                tag::SOLVE_ADMM_PROX => LocalSolveSpec::AdmmProx {
+                    loss: loss_from(&d.str()?)?,
+                    rho: d.f64()?,
+                    local_iters: d.u32()?,
+                    init: d.bool()?,
+                    u_scale: d.f64()?,
+                    z: d.vec_f64()?,
+                },
+                tag::SOLVE_COCOA_SDCA => LocalSolveSpec::CocoaSdca {
+                    lambda: d.f64()?,
+                    epochs: d.f64()?,
+                    seed: d.u64()?,
+                    round: d.u64()?,
+                    w: d.vec_f64()?,
+                },
+                tag::SOLVE_SSZ_PROX => LocalSolveSpec::SszProx {
+                    loss: loss_from(&d.str()?)?,
+                    lambda: d.f64()?,
+                    mu: d.f64()?,
+                    local_iters: d.u32()?,
+                    anchor: d.vec_f64()?,
+                    full_grad: d.vec_f64()?,
+                    grad_shift: d.vec_f64()?,
+                },
+                tag::SOLVE_FEATURE => LocalSolveSpec::FeatureSolve {
+                    loss: loss_from(&d.str()?)?,
+                    lambda: d.f64()?,
+                    k_hat: d.u32()?,
+                    anchor: d.vec_f64()?,
+                    full_grad: d.vec_f64()?,
+                    subsets: d.vec_vec_u32()?,
+                },
+                other => return Err(format!("unknown local-solve payload tag {other}")),
+            };
+            Msg::Cmd(Command::LocalSolve(spec))
+        }
+        tag::CMD_DUAL_UPDATE => {
+            let sub = d.u8()?;
+            let spec = match sub {
+                tag::DUAL_ADMM => DualUpdateSpec::AdmmDual { z: d.vec_f64()? },
+                other => return Err(format!("unknown dual-update payload tag {other}")),
+            };
+            Msg::Cmd(Command::DualUpdate(spec))
+        }
         tag::REPLY_ACK => Msg::Reply(Reply::Ack { units: d.f64()? }),
         tag::REPLY_GRAD => Msg::Reply(Reply::Grad {
             loss: d.f64()?,
@@ -495,6 +691,14 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
         tag::REPLY_WARM => Msg::Reply(Reply::Warm {
             w: d.vec_f64()?,
             counts: d.vec_f64()?,
+            units: d.f64()?,
+        }),
+        tag::REPLY_VECTOR => Msg::Reply(Reply::Vector {
+            v: d.vec_f64()?,
+            units: d.f64()?,
+        }),
+        tag::REPLY_SCALAR => Msg::Reply(Reply::Scalar {
+            v: d.f64()?,
             units: d.f64()?,
         }),
         other => return Err(format!("unknown message tag {other}")),
@@ -592,6 +796,69 @@ mod tests {
             counts: vec![3.0],
             units: 5.0,
         }));
+        roundtrip(Msg::Reply(Reply::Vector { v: vec![1.5, -2.5], units: 6.0 }));
+        roundtrip(Msg::Reply(Reply::Scalar { v: 0.25, units: 0.0 }));
+    }
+
+    #[test]
+    fn full_vocabulary_variants_roundtrip() {
+        use crate::net::{DualUpdateSpec, LocalSolveSpec};
+        roundtrip(Msg::Cmd(Command::Hvp {
+            loss: Loss::SquaredHinge,
+            s: vec![0.1, -0.2, 0.3],
+        }));
+        roundtrip(Msg::Cmd(Command::LossEval {
+            loss: Loss::Logistic,
+            w: vec![],
+        }));
+        roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::AdmmProx {
+            loss: Loss::SquaredHinge,
+            rho: 0.75,
+            local_iters: 8,
+            init: true,
+            u_scale: 0.5,
+            z: vec![1.0, 2.0, 3.0],
+        })));
+        roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::CocoaSdca {
+            lambda: 1e-3,
+            epochs: 0.1,
+            seed: 0xc0c0,
+            round: 7,
+            w: vec![0.0; 4],
+        })));
+        roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::SszProx {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-2,
+            mu: 3e-2,
+            local_iters: 10,
+            anchor: vec![0.1],
+            full_grad: vec![-0.1],
+            grad_shift: vec![],
+        })));
+        roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-2,
+            k_hat: 10,
+            anchor: vec![0.0; 3],
+            full_grad: vec![1.0; 3],
+            subsets: vec![vec![0, 2], vec![], vec![1]],
+        })));
+        roundtrip(Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual {
+            z: vec![5.0, -5.0],
+        })));
+    }
+
+    #[test]
+    fn truncated_u32_vectors_rejected() {
+        let mut e = Enc::new();
+        e.vec_vec_u32(&[vec![1, 2, 3], vec![4]]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.vec_vec_u32().unwrap(), vec![vec![1, 2, 3], vec![4]]);
+        // absurd claimed lengths fail fast instead of allocating
+        let mut d = Dec::new(&u64::MAX.to_le_bytes());
+        assert!(d.vec_u32().is_err());
+        let mut d = Dec::new(&u64::MAX.to_le_bytes());
+        assert!(d.vec_vec_u32().is_err());
     }
 
     #[test]

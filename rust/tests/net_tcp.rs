@@ -82,12 +82,52 @@ fn tcp_without_warmstart_also_matches() {
 }
 
 #[test]
-fn tcp_rejects_unsupported_method_before_spawning() {
-    let cfg = Config {
-        transport: "tcp".into(),
-        method: "cocoa".into(),
-        ..base_cfg()
-    };
-    let err = driver::prepare(&cfg).unwrap_err();
-    assert!(err.contains("tcp transport"), "{err}");
+fn every_method_matches_inproc_bitwise_over_tcp() {
+    // the full-vocabulary guarantee: every baseline — not just fadl* —
+    // trains over real worker processes and reproduces the in-process
+    // trajectory bit for bit (the CI parity matrix enforces the same
+    // property through net_smoke at P = 4)
+    for method in [
+        "fadl",
+        "fadl_feature",
+        "tera",
+        "tera-lbfgs",
+        "admm",
+        "cocoa",
+        "ssz",
+    ] {
+        let cfg = Config {
+            method: method.into(),
+            max_outer: 3,
+            ..base_cfg()
+        };
+        let inproc = run_with(&Config {
+            transport: "inproc".into(),
+            ..cfg.clone()
+        });
+        let tcp = run_with(&Config {
+            transport: "tcp".into(),
+            ..cfg
+        });
+        assert_eq!(inproc.records.len(), tcp.records.len(), "{method}");
+        for (a, b) in inproc.records.iter().zip(&tcp.records) {
+            assert_eq!(
+                a.f.to_bits(),
+                b.f.to_bits(),
+                "{method} iter {}: {} vs {}",
+                a.iter,
+                a.f,
+                b.f
+            );
+            // NaN for the dual methods, identical bits either way
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "{method}");
+            // the simulated clock must be transport-independent
+            assert_eq!(a.comm_passes, b.comm_passes, "{method}");
+            assert_eq!(a.sim_secs, b.sim_secs, "{method}");
+        }
+        assert!(
+            tcp.records.last().unwrap().net_bytes > 0.0,
+            "{method}: tcp moved no bytes?"
+        );
+    }
 }

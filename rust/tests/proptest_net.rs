@@ -9,9 +9,10 @@ use std::net::{TcpListener, TcpStream};
 use fadl::cluster::{CostModel, Cluster};
 use fadl::data::partition::{ExamplePartition, Strategy};
 use fadl::data::synth;
+use fadl::loss::Loss;
 use fadl::net::topology;
-use fadl::net::wire::{read_frame, write_frame, Dec, Enc};
-use fadl::net::Topology;
+use fadl::net::wire::{self, read_frame, write_frame, Dec, Enc, Msg};
+use fadl::net::{Command, DualUpdateSpec, LocalSolveSpec, Topology};
 use fadl::objective::{Shard, ShardCompute, SparseShard};
 use fadl::util::proptest::{Pair, Runner, UsizeRange};
 use fadl::util::rng::Pcg64;
@@ -142,6 +143,129 @@ fn allreduce_bitwise_identical_over_tcp_loopback() {
         }
         Ok(())
     });
+}
+
+fn draw_vec(rng: &mut Pcg64, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|_| rng.normal() * 10f64.powi(rng.below(7) as i32 - 3))
+        .collect()
+}
+
+/// Frame a message, push it through the length-prefixed framing, and
+/// decode — the exact driver↔worker path minus the socket.
+fn wire_roundtrip(msg: &Msg) -> Msg {
+    let mut buf = Vec::new();
+    wire::send(&mut buf, msg).expect("send");
+    let mut cursor = std::io::Cursor::new(buf);
+    let back = wire::recv(&mut cursor).expect("recv").expect("frame");
+    assert!(wire::recv(&mut cursor).expect("recv").is_none(), "clean EOF");
+    back
+}
+
+#[test]
+fn full_vocabulary_frames_roundtrip_bitwise() {
+    // every new command frame, over random payload sizes *including
+    // empty vectors* — the decoded message must equal the encoded one
+    // (f64 bits travel raw, so equality here is bitwise)
+    let gen = UsizeRange(0, 48);
+    Runner::new(40, 0xF00D).run(&gen, |&len| {
+        let mut rng = Pcg64::new(len as u64 + 1);
+        let msgs = vec![
+            Msg::Cmd(Command::Hvp {
+                loss: Loss::SquaredHinge,
+                s: draw_vec(&mut rng, len),
+            }),
+            Msg::Cmd(Command::LossEval {
+                loss: Loss::Logistic,
+                w: draw_vec(&mut rng, len),
+            }),
+            Msg::Cmd(Command::LocalSolve(LocalSolveSpec::AdmmProx {
+                loss: Loss::SquaredHinge,
+                rho: rng.normal().abs() + 1e-9,
+                local_iters: rng.below(20) as u32,
+                init: rng.below(2) == 0,
+                u_scale: rng.normal(),
+                z: draw_vec(&mut rng, len),
+            })),
+            Msg::Cmd(Command::LocalSolve(LocalSolveSpec::CocoaSdca {
+                lambda: rng.normal().abs() + 1e-12,
+                epochs: rng.normal().abs(),
+                seed: rng.next_u64(),
+                round: rng.next_u64(),
+                w: draw_vec(&mut rng, len),
+            })),
+            Msg::Cmd(Command::LocalSolve(LocalSolveSpec::SszProx {
+                loss: Loss::SquaredHinge,
+                lambda: rng.normal(),
+                mu: rng.normal(),
+                local_iters: rng.below(20) as u32,
+                anchor: draw_vec(&mut rng, len),
+                full_grad: draw_vec(&mut rng, len),
+                grad_shift: draw_vec(&mut rng, len),
+            })),
+            Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
+                loss: Loss::SquaredHinge,
+                lambda: rng.normal(),
+                k_hat: rng.below(30) as u32,
+                anchor: draw_vec(&mut rng, len),
+                full_grad: draw_vec(&mut rng, len),
+                subsets: (0..rng.below(5))
+                    .map(|_| (0..rng.below(len + 1)).map(|j| j as u32).collect())
+                    .collect(),
+            })),
+            Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual {
+                z: draw_vec(&mut rng, len),
+            })),
+            Msg::Reply(fadl::net::Reply::Vector {
+                v: draw_vec(&mut rng, len),
+                units: rng.normal().abs(),
+            }),
+            Msg::Reply(fadl::net::Reply::Scalar {
+                v: rng.normal(),
+                units: 0.0,
+            }),
+        ];
+        for msg in msgs {
+            let back = wire_roundtrip(&msg);
+            if back != msg {
+                return Err(format!("len {len}: {msg:?} != {back:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn max_length_payload_frames_roundtrip() {
+    // a command payload at realistic maximum size (a full m-vector of
+    // the paper-scale runs) survives the frame loop bit for bit
+    let mut rng = Pcg64::new(0xB16);
+    let big = draw_vec(&mut rng, 1 << 16);
+    let msg = Msg::Cmd(Command::Hvp { loss: Loss::SquaredHinge, s: big.clone() });
+    let Msg::Cmd(Command::Hvp { s, .. }) = wire_roundtrip(&msg) else {
+        panic!("wrong variant");
+    };
+    assert_eq!(s.len(), big.len());
+    for (a, b) in s.iter().zip(&big) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // the subsets list also survives at width (every rank's full J_p)
+    let subsets: Vec<Vec<u32>> = (0..64).map(|p| (p..1024).collect()).collect();
+    let msg = Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
+        loss: Loss::SquaredHinge,
+        lambda: 1e-6,
+        k_hat: 10,
+        anchor: vec![],
+        full_grad: vec![],
+        subsets: subsets.clone(),
+    }));
+    let Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
+        subsets: back, ..
+    })) = wire_roundtrip(&msg)
+    else {
+        panic!("wrong variant");
+    };
+    assert_eq!(back, subsets);
 }
 
 #[test]
