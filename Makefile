@@ -2,7 +2,11 @@
 
 CARGO ?= cargo
 
-.PHONY: check fmt clippy test build smoke bench artifacts
+PARITY_METHODS ?= fadl fadl_feature tera tera_lbfgs admm cocoa ssz
+PARITY_PLANES  ?= star p2p
+PARITY_TOPOS   ?= tree ring
+
+.PHONY: check fmt clippy test build smoke parity bench artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -24,6 +28,22 @@ build:
 ## end-to-end TCP transport proof (P real worker processes on loopback)
 smoke:
 	$(CARGO) run --release --bin net_smoke
+
+## the full local parity matrix: every method must produce a bitwise
+## identical trajectory on inproc ≡ tcp-star ≡ tcp-p2p, on the tree and
+## the ring topology (what the CI parity jobs run, in one command)
+parity:
+	$(CARGO) build --release --bin worker --bin net_smoke
+	@for m in $(PARITY_METHODS); do \
+	  for plane in $(PARITY_PLANES); do \
+	    for topo in $(PARITY_TOPOS); do \
+	      echo "== parity: $$m / $$plane / $$topo =="; \
+	      $(CARGO) run --release --bin net_smoke -- \
+	        --method $$m --nodes 4 --max-outer 8 \
+	        --data-plane $$plane --topology $$topo || exit 1; \
+	    done; \
+	  done; \
+	done
 
 bench:
 	$(CARGO) bench --bench hotpath

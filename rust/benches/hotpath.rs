@@ -146,6 +146,25 @@ fn main() {
             );
             all.push(s);
         }
+        // p2p data plane: compiling the per-rank send/recv schedules
+        // (what every mesh AllReduce pays up front) and the full
+        // simulated schedule execution against FIFO queues
+        for topo in Topology::all() {
+            let plan = topo.plan(p, m_ar);
+            let s = bench.run(&format!("net/p2p compile {} P={p}", topo.name()), || {
+                black_box(black_box(&plan).rank_schedules());
+            });
+            println!("{}", s.report());
+            all.push(s);
+        }
+        {
+            let plan = Topology::Ring.plan(p, m_ar);
+            let s = bench.run("net/p2p simulate ring P=8", || {
+                black_box(topology::simulate_schedules(black_box(&parts), &plan));
+            });
+            println!("{}", s.report());
+            all.push(s);
+        }
     }
 
     // ---- TRON inner solve on the quadratic approximation ----

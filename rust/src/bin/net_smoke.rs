@@ -3,15 +3,19 @@
 //! Trains the selected method (`--method`, any of fadl*, fadl_feature,
 //! tera*, admm*, cocoa, ssz) on the `quick` dataset twice: once on the
 //! in-process transport and once with P real worker OS processes over
-//! TCP loopback, then demands the two trajectories agree to ≤ 1e-10 at
-//! every recorded iteration (they are in fact bitwise identical: both
-//! transports execute the same worker code and the same
-//! topology-scheduled reduction order). Also prints the per-iteration
-//! trace with both clocks — simulated seconds from the Appendix-A cost
-//! model next to the measured wall-clock and real bytes of the
-//! transport. The CI `parity` job runs this for every method.
+//! TCP loopback — star or peer-to-peer data plane per `--data-plane` —
+//! then demands the two trajectories agree to ≤ 1e-10 at every recorded
+//! iteration (they are in fact bitwise identical: both transports
+//! execute the same worker code and the same topology-scheduled
+//! reduction order, wherever the bytes physically move). Also prints
+//! the per-iteration trace with both clocks — simulated seconds from
+//! the Appendix-A cost model next to the measured wall-clock, the real
+//! control-plane bytes, and the worker ⇄ worker mesh bytes of the p2p
+//! data plane. The CI `parity` matrix runs this for every method on
+//! both planes; `make parity` runs the full local matrix.
 //!
-//!   cargo run --bin net_smoke [-- --method tera --nodes 4 --topology tree]
+//!   cargo run --bin net_smoke [-- --method tera --nodes 4 \
+//!       --topology ring --data-plane p2p]
 //!
 //! Flags are the shared experiment CLI (`coordinator::config`), so the
 //! same overrides work here and on `fadl train`; `--transport` is
@@ -61,8 +65,9 @@ fn main() {
     let (f_tcp, trace_tcp) = run_transport(&base, "tcp");
 
     println!(
-        "\n== trace (tcp transport: P = {} worker processes) ==",
-        base.nodes
+        "\n== trace (tcp transport: P = {} worker processes, {} data plane) ==",
+        base.nodes,
+        base.data_plane.name()
     );
     print_trace(&trace_tcp);
     println!("\n== trace (inproc transport) ==");
@@ -85,11 +90,28 @@ fn main() {
         "|Δf| = {diff:.3e}  max per-iter |Δf| = {max_iter_diff:.3e}  (tolerance {tol:.3e})"
     );
     let moved = trace_tcp.records.last().map(|r| r.net_bytes).unwrap_or(0.0);
-    println!("tcp bytes moved: {:.1} KiB", moved / 1024.0);
+    let mesh = trace_tcp
+        .records
+        .last()
+        .map(|r| r.net_data_bytes)
+        .unwrap_or(0.0);
+    println!(
+        "tcp control bytes: {:.1} KiB   p2p mesh bytes: {:.1} KiB",
+        moved / 1024.0,
+        mesh / 1024.0
+    );
     if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 {
-        println!("net_smoke PASSED ({} over inproc vs tcp)", base.method);
+        println!(
+            "net_smoke PASSED ({} over inproc vs tcp-{})",
+            base.method,
+            base.data_plane.name()
+        );
     } else {
-        println!("net_smoke FAILED ({})", base.method);
+        println!(
+            "net_smoke FAILED ({} over tcp-{})",
+            base.method,
+            base.data_plane.name()
+        );
         std::process::exit(1);
     }
 }
@@ -109,10 +131,12 @@ fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
     let (_, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
     println!(
-        "{transport}: method {}, {} iterations, topology {}, final f = {:.12e}",
+        "{transport}: method {}, {} iterations, topology {}, data plane {}, \
+         final f = {:.12e}",
         cfg.method,
         trace.records.len(),
         cfg.topology.name(),
+        cfg.data_plane.name(),
         trace.final_f()
     );
     (trace.final_f(), trace)
@@ -131,6 +155,7 @@ fn print_trace(trace: &Trace) {
                 format!("{:.4}", r.meas_phase_secs),
                 format!("{:.5}", r.meas_reduce_secs),
                 format!("{:.0}", r.net_bytes),
+                format!("{:.0}", r.net_data_bytes),
                 format!("{:.8}", r.f),
                 format!("{:.2e}", r.grad_norm),
             ]
@@ -147,6 +172,7 @@ fn print_trace(trace: &Trace) {
                 "meas_phase",
                 "meas_reduce",
                 "net_bytes",
+                "net_data",
                 "f",
                 "|g|",
             ],

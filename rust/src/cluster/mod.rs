@@ -260,30 +260,45 @@ impl Cluster {
         let _ = self.phase(&Command::Reset);
     }
 
+    /// Execute a fused phase + AllReduce on the transport (the vector
+    /// collectives of the hot loops). The transport owns where the
+    /// reduction physically executes — driver-side for in-process and
+    /// tcp-star, on the worker mesh for tcp-p2p — while the topology
+    /// plan fixes the summation order, so the result is bitwise
+    /// identical everywhere. Panics on transport failure.
+    fn reduce_phase(&self, cmd: &Command) -> net::ReduceOutput {
+        let out = self
+            .transport
+            .reduce_phase(cmd, self.topology, self.threaded)
+            .unwrap_or_else(|e| {
+                panic!("{} transport reduce failed: {e}", self.transport.name())
+            });
+        self.add_measured(&out.stats);
+        out
+    }
+
     /// Distributed gradient pass at replicated w (Algorithm 2 step 1):
     /// every worker computes (Σ c·l, ∇L_p) and caches its margins
     /// z_p = X_p·w and ∇L_p; the gradients are AllReduced. Charges the
     /// compute phase plus one m-vector pass. Returns (Σ loss_p, Σ ∇L_p).
     pub fn grad_phase(&self, loss: crate::loss::Loss, w: &[f64]) -> (f64, Vec<f64>) {
-        let replies = self.phase(&Command::Grad { loss, w: w.to_vec() });
-        let mut costs = Vec::with_capacity(replies.len());
-        let mut losses = Vec::with_capacity(replies.len());
-        let mut grads = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let Reply::Grad { loss: lv, grad, units } = reply else {
+        let out = self.reduce_phase(&Command::Grad { loss, w: w.to_vec() });
+        let mut costs = Vec::with_capacity(out.replies.len());
+        let mut loss_sum = 0.0;
+        for reply in &out.replies {
+            let Reply::Grad { loss: lv, units, .. } = reply else {
                 panic!("grad phase: unexpected reply");
             };
-            costs.push(units);
-            losses.push(lv);
-            grads.push(grad);
+            costs.push(*units);
+            loss_sum += lv; // piggybacks on the same pass
         }
-        let (grad, comm_units) = self.reduce_timed(grads);
+        let comm_units =
+            self.cost.allreduce_units_topo(out.reduced.len(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
         delta.comm_pass(comm_units);
         self.charge(delta);
-        let loss_sum: f64 = losses.iter().sum(); // piggybacks on the same pass
-        (loss_sum, grad)
+        (loss_sum, out.reduced)
     }
 
     /// Run the inner optimizer on every worker's local approximation
@@ -340,26 +355,25 @@ impl Cluster {
 
     /// Distributed Hessian-vector product at the margins cached by the
     /// last [`Cluster::grad_phase`] (TERA-TRON's CG hot loop): every
-    /// worker computes Xᵀ(D(X s)); the parts are reduced driver-side.
-    /// Charges the compute phase plus one m-vector pass — identical to
-    /// the legacy [`Cluster::hvp_pass`].
+    /// worker computes Xᵀ(D(X s)); the parts are AllReduced on the
+    /// transport's data plane. Charges the compute phase plus one
+    /// m-vector pass — identical to the legacy [`Cluster::hvp_pass`].
     pub fn hvp_phase(&self, loss: crate::loss::Loss, s: &[f64]) -> Vec<f64> {
-        let replies = self.phase(&Command::Hvp { loss, s: s.to_vec() });
-        let mut costs = Vec::with_capacity(replies.len());
-        let mut parts = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let Reply::Vector { v, units } = reply else {
+        let out = self.reduce_phase(&Command::Hvp { loss, s: s.to_vec() });
+        let mut costs = Vec::with_capacity(out.replies.len());
+        for reply in &out.replies {
+            let Reply::Vector { units, .. } = reply else {
                 panic!("hvp phase: unexpected reply");
             };
-            costs.push(units);
-            parts.push(v);
+            costs.push(*units);
         }
-        let (hv, comm_units) = self.reduce_timed(parts);
+        let comm_units =
+            self.cost.allreduce_units_topo(out.reduced.len(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
         delta.comm_pass(comm_units);
         self.charge(delta);
-        hv
+        out.reduced
     }
 
     /// Distributed data-loss evaluation at a replicated w (one pass,

@@ -4,7 +4,7 @@
 use crate::cluster::CostModel;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
-use crate::net::Topology;
+use crate::net::{DataPlane, Topology};
 use crate::util::cli::{Args, Cli};
 use crate::util::toml;
 
@@ -47,6 +47,16 @@ pub struct Config {
     pub transport: String,
     /// AllReduce reduction topology (flat | tree | ring)
     pub topology: Topology,
+    /// where the tcp transport's reduction bytes move: "star" routes
+    /// every vector through the driver, "p2p" executes the plan on a
+    /// worker ⇄ worker mesh (ignored by the in-process transport)
+    pub data_plane: DataPlane,
+    /// comma-separated per-rank data-plane bind hosts (one entry covers
+    /// all ranks; groundwork for the non-loopback worker launcher)
+    pub p2p_bind: String,
+    /// first data-plane listener port, rank r binds base + r
+    /// (0 = ephemeral ports)
+    pub p2p_port_base: u16,
     /// explicit worker executable for the tcp transport (empty = auto:
     /// sibling `worker` bin, else self-exec with `--worker`)
     pub worker_bin: String,
@@ -84,6 +94,9 @@ impl Default for Config {
             partition: Strategy::Contiguous,
             transport: "inproc".into(),
             topology: Topology::Tree,
+            data_plane: DataPlane::Star,
+            p2p_bind: "127.0.0.1".into(),
+            p2p_port_base: 0,
             worker_bin: String::new(),
             method: "fadl".into(),
             k_hat: 10,
@@ -137,6 +150,13 @@ impl Config {
         let topo_name = doc.str_or("cluster.topology", cfg.topology.name());
         cfg.topology = Topology::from_name(topo_name)
             .ok_or_else(|| format!("unknown topology {topo_name:?}"))?;
+        let plane_name = doc.str_or("cluster.data_plane", cfg.data_plane.name());
+        cfg.data_plane = DataPlane::from_name(plane_name)
+            .ok_or_else(|| format!("unknown data plane {plane_name:?}"))?;
+        cfg.p2p_bind = doc.str_or("cluster.p2p_bind", &cfg.p2p_bind).to_string();
+        let port_base = doc.usize_or("cluster.p2p_port_base", cfg.p2p_port_base as usize);
+        cfg.p2p_port_base = u16::try_from(port_base)
+            .map_err(|_| format!("cluster.p2p_port_base {port_base} out of range"))?;
         cfg.worker_bin = doc.str_or("cluster.worker_bin", &cfg.worker_bin).to_string();
         cfg.method = doc.str_or("method.name", &cfg.method).to_string();
         cfg.k_hat = doc.usize_or("method.k_hat", cfg.k_hat);
@@ -229,6 +249,11 @@ impl Config {
             self.topology = Topology::from_name(a.get("topology"))
                 .ok_or_else(|| format!("unknown topology {:?}", a.get("topology")))?;
         }
+        if !a.get("data-plane").is_empty() {
+            self.data_plane = DataPlane::from_name(a.get("data-plane")).ok_or_else(
+                || format!("unknown data plane {:?}", a.get("data-plane")),
+            )?;
+        }
         if !a.get("worker-bin").is_empty() {
             self.worker_bin = a.get("worker-bin").to_string();
         }
@@ -260,6 +285,7 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
         .flag("gamma", "", "override comm/comp ratio γ")
         .flag("transport", "", "override transport: inproc | tcp")
         .flag("topology", "", "override AllReduce topology: flat | tree | ring")
+        .flag("data-plane", "", "override tcp data plane: star | p2p")
         .flag("worker-bin", "", "explicit worker executable for the tcp transport")
         .flag("out", "", "write the trace JSON here")
         .switch("no-warm-start", "disable the SGD warm start")
@@ -278,6 +304,9 @@ mod tests {
         assert!(cfg.lambda.is_none());
         assert_eq!(cfg.transport, "inproc");
         assert_eq!(cfg.topology, Topology::Tree);
+        assert_eq!(cfg.data_plane, DataPlane::Star);
+        assert_eq!(cfg.p2p_bind, "127.0.0.1");
+        assert_eq!(cfg.p2p_port_base, 0);
         assert!(cfg.worker_bin.is_empty());
     }
 
@@ -290,6 +319,19 @@ mod tests {
         assert_eq!(cfg.transport, "tcp");
         assert_eq!(cfg.topology, Topology::Ring);
         assert_eq!(cfg.worker_bin, "/x/worker");
+    }
+
+    #[test]
+    fn data_plane_keys_parse() {
+        let cfg = Config::from_toml(
+            "[cluster]\ndata_plane = \"p2p\"\np2p_bind = \"10.0.0.1,10.0.0.2\"\np2p_port_base = 9100",
+        )
+        .unwrap();
+        assert_eq!(cfg.data_plane, DataPlane::P2p);
+        assert_eq!(cfg.p2p_bind, "10.0.0.1,10.0.0.2");
+        assert_eq!(cfg.p2p_port_base, 9100);
+        assert!(Config::from_toml("[cluster]\ndata_plane = \"mesh\"").is_err());
+        assert!(Config::from_toml("[cluster]\np2p_port_base = 70000").is_err());
     }
 
     #[test]
@@ -351,6 +393,8 @@ json = "out/fig5.json"
             "tcp",
             "--topology",
             "ring",
+            "--data-plane",
+            "p2p",
             "--no-warm-start",
         ]
         .iter()
@@ -369,6 +413,7 @@ json = "out/fig5.json"
         assert_eq!(cfg.quick_m, 33, "unset flags keep the base value");
         assert_eq!(cfg.transport, "tcp");
         assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.data_plane, DataPlane::P2p);
         assert!(!cfg.warm_start);
     }
 
@@ -381,6 +426,10 @@ json = "out/fig5.json"
         assert!(Config::from_cli(Config::default(), &a).is_err());
         let a = cli
             .parse_from(vec!["--topology".to_string(), "mesh".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
+        let a = cli
+            .parse_from(vec!["--data-plane".to_string(), "rdma".to_string()])
             .unwrap();
         assert!(Config::from_cli(Config::default(), &a).is_err());
     }

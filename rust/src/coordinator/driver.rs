@@ -63,6 +63,9 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         test_fraction: cfg.test_fraction,
         file_path: cfg.file_path.clone(),
         partition: cfg.partition,
+        data_plane: cfg.data_plane,
+        p2p_bind: cfg.p2p_bind.clone(),
+        p2p_port_base: cfg.p2p_port_base,
     }
 }
 

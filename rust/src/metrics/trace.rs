@@ -27,8 +27,12 @@ pub struct IterRecord {
     pub meas_phase_secs: f64,
     /// cumulative measured wall-clock executing reduction plans
     pub meas_reduce_secs: f64,
-    /// cumulative real bytes moved over sockets (0 for in-process)
+    /// cumulative real control-plane bytes moved over driver ⇄ worker
+    /// sockets (0 for in-process)
     pub net_bytes: f64,
+    /// cumulative real data-plane bytes moved worker ⇄ worker over the
+    /// p2p mesh (0 for in-process and the star data plane)
+    pub net_data_bytes: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -80,6 +84,7 @@ impl Trace {
             meas_phase_secs: net.phase_secs,
             meas_reduce_secs: net.reduce_secs,
             net_bytes: net.bytes_total() as f64,
+            net_data_bytes: net.data_bytes as f64,
             f,
             grad_norm,
             auprc,
@@ -128,11 +133,12 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "iter,comm_passes,sim_secs,sim_compute_secs,sim_comm_secs,wall_secs,\
-             meas_phase_secs,meas_reduce_secs,net_bytes,f,grad_norm,auprc\n",
+             meas_phase_secs,meas_reduce_secs,net_bytes,net_data_bytes,f,grad_norm,\
+             auprc\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.comm_passes,
                 r.sim_secs,
@@ -142,6 +148,7 @@ impl Trace {
                 r.meas_phase_secs,
                 r.meas_reduce_secs,
                 r.net_bytes,
+                r.net_data_bytes,
                 r.f,
                 r.grad_norm,
                 r.auprc
@@ -203,6 +210,16 @@ impl Trace {
                 arr_f64(&self.records.iter().map(|r| r.net_bytes).collect::<Vec<_>>()),
             ),
             (
+                "net_data_bytes",
+                arr_f64(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| r.net_data_bytes)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
                 "f",
                 arr_f64(&self.records.iter().map(|r| r.f).collect::<Vec<_>>()),
             ),
@@ -233,6 +250,7 @@ mod tests {
             clock.comm_pass(50.0);
             net.phase_secs += 0.01;
             net.bytes_rx += 1000;
+            net.data_bytes += 300;
             t.push(
                 i,
                 &clock,
@@ -263,6 +281,8 @@ mod tests {
         assert!((t.records[4].meas_phase_secs - 0.05).abs() < 1e-12);
         assert_eq!(t.records[4].net_bytes, 5000.0);
         assert_eq!(t.records[0].net_bytes, 1000.0);
+        assert_eq!(t.records[4].net_data_bytes, 1500.0);
+        assert_eq!(t.records[0].net_data_bytes, 300.0);
         assert_eq!(t.records[4].meas_reduce_secs, 0.0);
     }
 
@@ -289,6 +309,10 @@ mod tests {
             5
         );
         assert_eq!(parsed.get("net_bytes").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(
+            parsed.get("net_data_bytes").unwrap().as_arr().unwrap().len(),
+            5
+        );
         assert!(parsed.get("sim_secs").is_some());
     }
 
@@ -299,12 +323,13 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 12);
+        assert_eq!(lines[0].split(',').count(), 13);
+        assert!(lines[0].contains(",net_bytes,net_data_bytes,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 12, "{line}");
+            assert_eq!(line.split(',').count(), 13, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(9).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(10).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 

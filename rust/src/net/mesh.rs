@@ -1,0 +1,489 @@
+//! The worker-side data plane: a rank ⇄ rank TCP mesh that physically
+//! executes reduction plans, so m-vectors move worker ↔ worker instead
+//! of star-routing through the driver.
+//!
+//! Establishment (driver-orchestrated, `wire` PROTO_VERSION 3):
+//!
+//! 1. Each worker binds a data-plane listener at `Setup` time (an
+//!    explicit `p2p_port_base + rank`, or an ephemeral port) and
+//!    advertises the port in its `Ready` frame.
+//! 2. The driver collects every rank's address and broadcasts the full
+//!    list in a `Mesh` frame.
+//! 3. Rank r dials every lower rank (sending a one-frame rank hello)
+//!    and then accepts every higher rank, so each unordered pair holds
+//!    exactly one connection. Kernel listen backlogs make the
+//!    sequential dial-then-accept order race-free.
+//! 4. Each worker replies `MeshOk`; the driver unblocks.
+//!
+//! Execution ([`Mesh::allreduce`]): the rank runs its compiled
+//! [`RankSchedule`] — receives (and their accumulations) happen on the
+//! calling thread in schedule order, which is what preserves the plan's
+//! bitwise summation order; sends are snapshotted at their schedule
+//! position and drained by one writer thread per peer, so a blocked
+//! peer can never deadlock the schedule (see
+//! `ReducePlan::rank_schedules` for the ordering guarantees).
+//!
+//! Frames on the mesh are `[len: u32][raw little-endian f64 bits]` —
+//! the same lossless float encoding as the control plane, minus the
+//! message tag (both ends know the range from the schedule).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::topology::{MeshOp, RankSchedule};
+
+/// Backstop against a peer that wedges mid-plan: erroring out (and
+/// exiting) beats orphaning a worker that holds ports. Generous because
+/// `Reduce` fuses the phase compute with the AllReduce — a fast rank
+/// legitimately blocks in its first receive while a skewed peer is
+/// still computing its part, and that skew must not read as death
+/// (a peer that actually dies closes its socket and fails the read
+/// immediately; the timeout only catches wedged-but-alive peers).
+/// Applied to writes as well, so a peer that stops draining its socket
+/// can't park a writer thread in `write_all` forever.
+const MESH_READ_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Mesh-handshake accepts are short: every peer's listener was already
+/// bound when the driver broadcast the address list, so a dial that
+/// doesn't arrive promptly means the peer died.
+const MESH_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Traffic and wall-clock one [`Mesh::allreduce`] spent.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MeshStats {
+    /// bytes this rank put on the mesh (frame headers + payloads)
+    pub tx: u64,
+    /// bytes this rank read off the mesh
+    pub rx: u64,
+    /// wall-clock seconds executing the schedule
+    pub secs: f64,
+}
+
+/// One rank's side of the fully-connected data plane.
+pub struct Mesh {
+    rank: usize,
+    /// connection to each peer rank (`None` at `self.rank`)
+    conns: Vec<Option<TcpStream>>,
+}
+
+impl Mesh {
+    /// Establish the mesh: dial every lower rank, accept every higher
+    /// rank (step 3 of the handshake above). `addrs[r]` is rank r's
+    /// advertised data-plane address; `listener` is this rank's bound
+    /// data-plane listener.
+    pub fn establish(
+        rank: usize,
+        addrs: &[String],
+        listener: &TcpListener,
+    ) -> Result<Mesh, String> {
+        let p = addrs.len();
+        let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(p);
+        conns.resize_with(p, || None);
+        for (peer, addr) in addrs.iter().enumerate().take(rank) {
+            let stream = TcpStream::connect(addr)
+                .map_err(|e| format!("rank {rank}: dial rank {peer} at {addr}: {e}"))?;
+            configure(&stream)?;
+            write_hello(&stream, rank)?;
+            conns[peer] = Some(stream);
+        }
+        // accept with a deadline: a peer that died between its Ready and
+        // its dial must fail this rank's handshake (the Abort unblocks
+        // the driver, which then reaps everyone) instead of hanging the
+        // whole run in accept() — mirroring the driver's own guarded
+        // startup accept loop
+        if rank + 1 < p {
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| format!("rank {rank}: listener nonblocking: {e}"))?;
+            let deadline = Instant::now() + MESH_ACCEPT_TIMEOUT;
+            let mut accepted = rank + 1;
+            while accepted < p {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream
+                            .set_nonblocking(false)
+                            .map_err(|e| format!("rank {rank}: stream blocking: {e}"))?;
+                        configure(&stream)?;
+                        // bound the hello read by the handshake deadline,
+                        // not the generous in-plan read timeout — a stray
+                        // connection that never sends a hello must not
+                        // stall the handshake for minutes
+                        let _ = stream.set_read_timeout(Some(MESH_ACCEPT_TIMEOUT));
+                        let peer = read_hello(&stream)?;
+                        let _ = stream.set_read_timeout(Some(MESH_READ_TIMEOUT));
+                        if peer <= rank || peer >= p {
+                            return Err(format!(
+                                "rank {rank}: unexpected mesh hello from rank {peer}"
+                            ));
+                        }
+                        if conns[peer].is_some() {
+                            return Err(format!(
+                                "rank {rank}: duplicate mesh hello from {peer}"
+                            ));
+                        }
+                        conns[peer] = Some(stream);
+                        accepted += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() > deadline {
+                            return Err(format!(
+                                "rank {rank}: timed out waiting for mesh peers \
+                                 ({accepted}/{p} connected)"
+                            ));
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(format!("rank {rank}: accept mesh peer: {e}")),
+                }
+            }
+            listener
+                .set_nonblocking(false)
+                .map_err(|e| format!("rank {rank}: listener blocking: {e}"))?;
+        }
+        Ok(Mesh { rank, conns })
+    }
+
+    /// A mesh with no peers (P = 1): every schedule is a no-op.
+    pub fn solo(rank: usize) -> Mesh {
+        Mesh { rank, conns: vec![None] }
+    }
+
+    /// Execute this rank's share of a full AllReduce: on return `buf`
+    /// holds the plan-ordered sum on **every** rank (reduce half plus
+    /// mirrored broadcast), bitwise identical to
+    /// [`super::topology::reduce`] over the same parts. `sched` is this
+    /// rank's compiled schedule (`ReducePlan::rank_schedule`) — callers
+    /// cache it per `(topology, m)` so the compile cost is paid once,
+    /// not per reduce.
+    pub fn allreduce(
+        &self,
+        buf: &mut [f64],
+        sched: &RankSchedule,
+    ) -> Result<MeshStats, String> {
+        if sched.rank != self.rank {
+            return Err(format!(
+                "schedule for rank {} executed on rank {}",
+                sched.rank, self.rank
+            ));
+        }
+        let mut tx = 0u64;
+        let mut rx = 0u64;
+        let mut secs = 0.0f64;
+        // reused across receive ops: payload bytes land here, then fold
+        // straight into `buf` — no per-op vector allocations on the
+        // path whose wall-clock MeshStats reports
+        let mut scratch: Vec<u8> = Vec::new();
+        // one writer thread per peer this schedule sends to: the main
+        // thread snapshots each Send at its schedule position (so the
+        // frame sees exactly the accumulations that precede it) and the
+        // writer drains the FIFO, keeping per-connection frame order
+        // while never blocking the receive loop. Writers are scoped per
+        // call (spawned outside the timed region): simple ownership and
+        // per-reduce tx accounting for ~tens of µs per reduce — if a
+        // profile ever shows the spawn cost next to the wire time,
+        // promote them to persistent per-connection threads created in
+        // `establish`
+        let result = std::thread::scope(|scope| -> Result<(), String> {
+            let mut senders: Vec<Option<mpsc::Sender<Vec<u8>>>> = Vec::new();
+            senders.resize_with(self.conns.len(), || None);
+            let mut writers = Vec::new();
+            for op in &sched.ops {
+                let MeshOp::Send { to, .. } = *op else { continue };
+                if senders[to].is_some() {
+                    continue;
+                }
+                let stream = self
+                    .peer(to)?
+                    .try_clone()
+                    .map_err(|e| format!("clone mesh stream to rank {to}: {e}"))?;
+                let (send, recv) = mpsc::channel::<Vec<u8>>();
+                writers.push(scope.spawn(move || -> Result<u64, String> {
+                    let mut stream = stream;
+                    let mut written = 0u64;
+                    for frame in recv {
+                        stream
+                            .write_all(&frame)
+                            .map_err(|e| format!("mesh write to rank {to}: {e}"))?;
+                        written += frame.len() as u64;
+                    }
+                    Ok(written)
+                }));
+                senders[to] = Some(send);
+            }
+            // timed region: the schedule's actual data movement — the
+            // writer-thread setup above is harness cost, not wire cost
+            let t0 = Instant::now();
+            for op in &sched.ops {
+                match *op {
+                    MeshOp::Send { to, lo, hi } => {
+                        let frame = encode_range(&buf[lo..hi]);
+                        senders[to]
+                            .as_ref()
+                            .expect("writer exists for every send peer")
+                            .send(frame)
+                            .map_err(|_| {
+                                format!("mesh writer to rank {to} died early")
+                            })?;
+                    }
+                    MeshOp::RecvAccum { from, lo, hi } => {
+                        read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        rx += (4 + 8 * (hi - lo)) as u64;
+                        // elementwise adds in index order — the same
+                        // per-element operation linalg::accum applies,
+                        // so the plan's summation order is unchanged
+                        for (o, c) in
+                            buf[lo..hi].iter_mut().zip(scratch.chunks_exact(8))
+                        {
+                            *o += f64::from_bits(u64::from_le_bytes(
+                                c.try_into().unwrap(),
+                            ));
+                        }
+                    }
+                    MeshOp::RecvCopy { from, lo, hi } => {
+                        read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        rx += (4 + 8 * (hi - lo)) as u64;
+                        for (o, c) in
+                            buf[lo..hi].iter_mut().zip(scratch.chunks_exact(8))
+                        {
+                            *o = f64::from_bits(u64::from_le_bytes(
+                                c.try_into().unwrap(),
+                            ));
+                        }
+                    }
+                }
+            }
+            drop(senders); // close the FIFOs so the writers finish
+            for writer in writers {
+                match writer.join() {
+                    Ok(Ok(written)) => tx += written,
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => return Err("mesh writer thread panicked".into()),
+                }
+            }
+            secs = t0.elapsed().as_secs_f64();
+            Ok(())
+        });
+        result?;
+        Ok(MeshStats { tx, rx, secs })
+    }
+
+    fn peer(&self, rank: usize) -> Result<&TcpStream, String> {
+        self.conns
+            .get(rank)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| format!("rank {}: no mesh connection to rank {rank}", self.rank))
+    }
+}
+
+fn configure(stream: &TcpStream) -> Result<(), String> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(MESH_READ_TIMEOUT))
+        .map_err(|e| format!("mesh read timeout: {e}"))?;
+    stream
+        .set_write_timeout(Some(MESH_READ_TIMEOUT))
+        .map_err(|e| format!("mesh write timeout: {e}"))
+}
+
+fn write_hello(mut stream: &TcpStream, rank: usize) -> Result<(), String> {
+    let mut frame = Vec::with_capacity(8);
+    frame.extend_from_slice(&4u32.to_le_bytes());
+    frame.extend_from_slice(&(rank as u32).to_le_bytes());
+    stream
+        .write_all(&frame)
+        .map_err(|e| format!("mesh hello from rank {rank}: {e}"))
+}
+
+fn read_hello(mut stream: &TcpStream) -> Result<usize, String> {
+    let mut buf = [0u8; 8];
+    stream
+        .read_exact(&mut buf)
+        .map_err(|e| format!("read mesh hello: {e}"))?;
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if len != 4 {
+        return Err(format!("mesh hello with frame length {len}"));
+    }
+    Ok(u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize)
+}
+
+/// `[len: u32][raw f64 bits]` — lossless, same float encoding as the
+/// control plane's `wire::Enc::vec_f64` minus the element count (the
+/// schedule fixes the range on both sides).
+fn encode_range(vals: &[f64]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(4 + 8 * vals.len());
+    frame.extend_from_slice(&((8 * vals.len()) as u32).to_le_bytes());
+    for &v in vals {
+        frame.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    frame
+}
+
+/// Read one schedule frame (`n` f64s) into the reusable `scratch`
+/// buffer, validating the length prefix against the expected range.
+fn read_frame_into(
+    mut stream: &TcpStream,
+    from: usize,
+    n: usize,
+    scratch: &mut Vec<u8>,
+) -> Result<(), String> {
+    let mut len_buf = [0u8; 4];
+    stream
+        .read_exact(&mut len_buf)
+        .map_err(|e| format!("mesh read from rank {from}: {e}"))?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len != 8 * n {
+        return Err(format!(
+            "mesh frame from rank {from}: {len} bytes, expected {}",
+            8 * n
+        ));
+    }
+    scratch.resize(len, 0);
+    stream
+        .read_exact(scratch)
+        .map_err(|e| format!("mesh read from rank {from}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::{reduce, Topology};
+    use crate::util::rng::Pcg64;
+
+    /// Spin up P real in-process "ranks" on threads, establish the mesh
+    /// over loopback, and allreduce — the full data plane minus the
+    /// worker processes.
+    fn mesh_allreduce(parts: Vec<Vec<f64>>, topo: Topology) -> Vec<Vec<f64>> {
+        let p = parts.len();
+        let m = parts[0].len();
+        let plan = topo.plan(p, m);
+        let listeners: Vec<TcpListener> = (0..p)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("bind"))
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, (mut buf, listener)) in
+                parts.into_iter().zip(&listeners).enumerate()
+            {
+                let addrs = &addrs;
+                let plan = &plan;
+                handles.push(scope.spawn(move || {
+                    let mesh = if addrs.len() == 1 {
+                        Mesh::solo(rank)
+                    } else {
+                        Mesh::establish(rank, addrs, listener).expect("establish")
+                    };
+                    let sched = plan.rank_schedule(rank);
+                    let stats = mesh.allreduce(&mut buf, &sched).expect("allreduce");
+                    (buf, stats)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("rank")).collect::<Vec<_>>()
+        })
+        .into_iter()
+        .map(|(buf, _)| buf)
+        .collect()
+    }
+
+    fn float_parts(p: usize, m: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Pcg64::new(seed);
+        (0..p)
+            .map(|_| (0..m).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn mesh_allreduce_matches_plan_reduce_bitwise() {
+        for topo in Topology::all() {
+            for (p, m) in [(1usize, 5usize), (2, 8), (3, 7), (4, 4), (5, 3)] {
+                let parts = float_parts(p, m, 13 * p as u64 + m as u64);
+                let want = reduce(parts.clone(), &topo.plan(p, m));
+                let bufs = mesh_allreduce(parts, topo);
+                for (rank, buf) in bufs.iter().enumerate() {
+                    assert!(
+                        buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{topo:?} p={p} m={m} rank={rank}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_stats_count_real_frames() {
+        let p = 4;
+        let m = 16;
+        let parts = float_parts(p, m, 99);
+        let plan = Topology::Ring.plan(p, m);
+        let scheds = plan.rank_schedules();
+        let listeners: Vec<TcpListener> = (0..p)
+            .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("bind"))
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let stats: Vec<MeshStats> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, (mut buf, listener)) in
+                parts.into_iter().zip(&listeners).enumerate()
+            {
+                let addrs = &addrs;
+                let plan = &plan;
+                handles.push(scope.spawn(move || {
+                    let mesh = Mesh::establish(rank, addrs, listener).unwrap();
+                    let sched = plan.rank_schedule(rank);
+                    mesh.allreduce(&mut buf, &sched).unwrap()
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, s) in stats.iter().enumerate() {
+            let send_ops = scheds[rank]
+                .ops
+                .iter()
+                .filter(|op| matches!(op, MeshOp::Send { .. }))
+                .count() as u64;
+            let expect = 8 * scheds[rank].send_elems() as u64 + 4 * send_ops;
+            assert_eq!(s.tx, expect, "rank {rank} tx");
+            assert!(s.secs >= 0.0);
+        }
+        // every byte sent is a byte received somewhere
+        let tx: u64 = stats.iter().map(|s| s.tx).sum();
+        let rx: u64 = stats.iter().map(|s| s.rx).sum();
+        assert_eq!(tx, rx);
+    }
+
+    #[test]
+    fn solo_mesh_is_identity() {
+        let mesh = Mesh::solo(0);
+        let mut buf = vec![1.5, -2.5];
+        let sched = Topology::Ring.plan(1, 2).rank_schedule(0);
+        let stats = mesh.allreduce(&mut buf, &sched).unwrap();
+        assert_eq!(buf, vec![1.5, -2.5]);
+        assert_eq!((stats.tx, stats.rx), (0, 0));
+        // a foreign rank's schedule is rejected
+        let other = Topology::Ring.plan(2, 4).rank_schedule(1);
+        assert!(mesh.allreduce(&mut buf, &other).is_err());
+    }
+
+    #[test]
+    fn hello_frames_roundtrip() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            write_hello(&stream, 7).unwrap();
+            stream
+        });
+        let (server, _) = listener.accept().unwrap();
+        assert_eq!(read_hello(&server).unwrap(), 7);
+        drop(client.join().unwrap());
+    }
+}

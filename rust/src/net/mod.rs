@@ -15,13 +15,24 @@
 //!   reachable address).
 //!
 //! A BSP *phase* is one [`Command`] executed on every worker; per-rank
-//! results come back as [`Reply`]s and are reduced **driver-side** with
-//! a [`topology::ReducePlan`] — a fixed pairwise summation schedule
+//! results come back as [`Reply`]s and are reduced with a
+//! [`topology::ReducePlan`] — a fixed pairwise summation schedule
 //! (flat gather / §4.1 binary tree / ring), so sums are bitwise
-//! reproducible across thread schedules *and* transports. The physical
-//! routing of the TCP backend is a star (every worker ⇄ driver); the
-//! logical topology fixes the summation order and the simulated cost.
-//! A true peer-to-peer data plane is a ROADMAP item.
+//! reproducible across thread schedules *and* transports. The TCP
+//! backend splits its traffic into two planes:
+//!
+//! * **control plane** — the driver ⇄ worker star: commands, scalar
+//!   replies, handshakes (always present);
+//! * **data plane** — where reduction bytes physically move. Under
+//!   `data_plane = "star"` (the historical behaviour) per-rank vectors
+//!   return over the star and the driver executes the plan; under
+//!   `data_plane = "p2p"` the workers hold a rank ⇄ rank TCP mesh and
+//!   execute the plan themselves ([`mesh::Mesh`]) — the driver receives
+//!   only the final reduced vector (rank 0's reply), so the topology's
+//!   simulated cost finally has a measured counterpart.
+//!
+//! The logical topology fixes the summation order on every plane, which
+//! is what keeps inproc ≡ tcp-star ≡ tcp-p2p bitwise identical.
 //!
 //! See `rust/src/net/README.md` for the wire format and an operator's
 //! guide, and `cargo run --bin net_smoke` for the end-to-end proof that
@@ -29,6 +40,7 @@
 
 pub mod endpoint;
 pub mod inproc;
+pub mod mesh;
 pub mod tcp;
 pub mod topology;
 pub mod wire;
@@ -39,10 +51,50 @@ pub use inproc::InProc;
 pub use tcp::TcpDriver;
 pub use topology::{reduce, ReducePlan, Topology};
 
+use std::time::Instant;
+
 use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
 use crate::objective::ShardCompute;
+
+// ---------------------------------------------------------------------------
+// Data plane selection
+// ---------------------------------------------------------------------------
+
+/// Where reduction bytes physically move on the TCP transport (the
+/// in-process transport has no wire, so the setting is moot there).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Per-rank vectors return to the driver, which executes the
+    /// reduction plan itself (the historical routing).
+    #[default]
+    Star,
+    /// Workers execute the plan over a rank ⇄ rank TCP mesh; only the
+    /// final reduced vector reaches the driver.
+    P2p,
+}
+
+impl DataPlane {
+    pub fn from_name(name: &str) -> Option<DataPlane> {
+        match name {
+            "star" => Some(DataPlane::Star),
+            "p2p" => Some(DataPlane::P2p),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataPlane::Star => "star",
+            DataPlane::P2p => "p2p",
+        }
+    }
+
+    pub fn all() -> [DataPlane; 2] {
+        [DataPlane::Star, DataPlane::P2p]
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Phase vocabulary
@@ -241,6 +293,32 @@ pub struct WorkerSetup {
     pub test_fraction: f64,
     pub file_path: String,
     pub partition: Strategy,
+    /// where reduction bytes move (see [`DataPlane`])
+    pub data_plane: DataPlane,
+    /// comma-separated per-rank data-plane bind hosts (one entry = all
+    /// ranks; groundwork for the non-loopback launcher)
+    pub p2p_bind: String,
+    /// first data-plane listener port (rank r binds base + r); 0 =
+    /// ephemeral ports, reported back through `Ready`
+    pub p2p_port_base: u16,
+}
+
+impl WorkerSetup {
+    /// The data-plane bind host for `rank`: entry `rank` of the
+    /// comma-separated `p2p_bind` list, the last entry when the list is
+    /// shorter, loopback when empty.
+    pub fn p2p_host(&self, rank: usize) -> String {
+        let hosts: Vec<&str> = self
+            .p2p_bind
+            .split(',')
+            .map(str::trim)
+            .filter(|h| !h.is_empty())
+            .collect();
+        match hosts.get(rank).or_else(|| hosts.last()) {
+            Some(h) => (*h).to_string(),
+            None => "127.0.0.1".to_string(),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -256,12 +334,22 @@ pub struct Measured {
     /// seconds spent in BSP phases (command fan-out → last reply; for
     /// TCP this includes wire time and waiting on remote compute)
     pub phase_secs: f64,
-    /// seconds spent executing reduction plans driver-side
+    /// seconds spent executing reduction plans: driver-side plan
+    /// execution (in-process and tcp-star), or the slowest rank's mesh
+    /// schedule (tcp-p2p) — the measured counterpart of the topology's
+    /// simulated AllReduce cost
     pub reduce_secs: f64,
-    /// bytes written to worker sockets (0 for in-process)
+    /// control-plane bytes written to worker sockets (0 for in-process)
     pub bytes_tx: u64,
-    /// bytes read from worker sockets (0 for in-process)
+    /// control-plane bytes read from worker sockets (0 for in-process)
     pub bytes_rx: u64,
+    /// driver-link bytes that carried reduction *parts* — the tcp-star
+    /// gather of P per-rank vectors (a subset of `bytes_rx`; 0 under
+    /// p2p, where no part vector transits the driver, and in-process)
+    pub reduce_bytes: u64,
+    /// data-plane bytes moved worker ⇄ worker over the p2p mesh,
+    /// counted once at each sender (0 under star and in-process)
+    pub data_bytes: u64,
 }
 
 impl Measured {
@@ -270,8 +358,11 @@ impl Measured {
         self.reduce_secs += other.reduce_secs;
         self.bytes_tx += other.bytes_tx;
         self.bytes_rx += other.bytes_rx;
+        self.reduce_bytes += other.reduce_bytes;
+        self.data_bytes += other.data_bytes;
     }
 
+    /// Total control-plane (driver-link) traffic.
     pub fn bytes_total(&self) -> u64 {
         self.bytes_tx + self.bytes_rx
     }
@@ -281,6 +372,65 @@ impl Measured {
 pub struct PhaseOutput {
     pub replies: Vec<Reply>,
     pub stats: Measured,
+}
+
+/// Output of a fused phase + AllReduce ([`Transport::reduce_phase`]):
+/// per-rank replies with the vector slot emptied (their scalar payloads
+/// — loss values, cost units — intact), plus the plan-ordered sum.
+pub struct ReduceOutput {
+    pub replies: Vec<Reply>,
+    pub reduced: Vec<f64>,
+    pub stats: Measured,
+}
+
+/// Take the reducible m-vector out of a phase reply (the `Grad` and
+/// `Hvp` phases — the AllReduces of the methods' hot loops).
+pub(crate) fn take_vector(reply: &mut Reply) -> Result<Vec<f64>, String> {
+    match reply {
+        Reply::Grad { grad, .. } => Ok(std::mem::take(grad)),
+        Reply::Vector { v, .. } => Ok(std::mem::take(v)),
+        other => Err(format!("reply {other:?} carries no reducible vector")),
+    }
+}
+
+/// Put a reduced vector back into the reply it came out of.
+pub(crate) fn put_vector(reply: &mut Reply, vec: Vec<f64>) {
+    match reply {
+        Reply::Grad { grad, .. } => *grad = vec,
+        Reply::Vector { v, .. } => *v = vec,
+        _ => unreachable!("put_vector on a vector-free reply"),
+    }
+}
+
+/// The gather-and-reduce execution of [`Transport::reduce_phase`]: run
+/// the phase, collect every rank's vector, execute the plan locally.
+/// This is the in-process behaviour and the TCP *star* data plane; on a
+/// real link the gathered part payloads are attributed to
+/// [`Measured::reduce_bytes`].
+pub(crate) fn gather_reduce_phase<T: Transport + ?Sized>(
+    transport: &T,
+    cmd: &Command,
+    topo: Topology,
+    threaded: bool,
+) -> Result<ReduceOutput, String> {
+    let out = transport.phase(cmd, threaded)?;
+    let mut replies = out.replies;
+    let mut stats = out.stats;
+    let mut parts = Vec::with_capacity(replies.len());
+    for reply in &mut replies {
+        parts.push(take_vector(reply)?);
+    }
+    if stats.bytes_rx > 0 {
+        // a real link carried the P part vectors to the driver: that
+        // gather IS the star data plane (raw f64 payload bytes)
+        stats.reduce_bytes = parts.iter().map(|p| 8 * p.len() as u64).sum();
+    }
+    let m = parts.first().map(Vec::len).unwrap_or(0);
+    let plan = topo.plan(transport.p(), m);
+    let t0 = Instant::now();
+    let reduced = topology::reduce(parts, &plan);
+    stats.reduce_secs += t0.elapsed().as_secs_f64();
+    Ok(ReduceOutput { replies, reduced, stats })
 }
 
 // ---------------------------------------------------------------------------
@@ -304,6 +454,22 @@ pub trait Transport: Send + Sync {
     /// Execute one command on every worker (BSP barrier: returns when
     /// all replies are in, rank order preserved).
     fn phase(&self, cmd: &Command, threaded: bool) -> Result<PhaseOutput, String>;
+
+    /// Execute one command on every worker and AllReduce the per-rank
+    /// reply vectors with the topology's [`ReducePlan`]. The plan fixes
+    /// the summation order, so the reduced vector is bitwise identical
+    /// on every transport and data plane. The default implementation
+    /// gathers the vectors and reduces locally (in-process, tcp-star);
+    /// the TCP p2p data plane overrides it to execute the plan on the
+    /// worker mesh, with only the final vector returning to the driver.
+    fn reduce_phase(
+        &self,
+        cmd: &Command,
+        topo: Topology,
+        threaded: bool,
+    ) -> Result<ReduceOutput, String> {
+        gather_reduce_phase(self, cmd, topo, threaded)
+    }
 
     /// In-process shards for closure-based phases (`Cluster::map`).
     /// `None` for remote transports — methods that need arbitrary local
@@ -389,15 +555,73 @@ mod tests {
             reduce_secs: 0.5,
             bytes_tx: 10,
             bytes_rx: 20,
+            reduce_bytes: 16,
+            data_bytes: 100,
         };
         a.merge(&Measured {
             phase_secs: 2.0,
             reduce_secs: 0.25,
             bytes_tx: 1,
             bytes_rx: 2,
+            reduce_bytes: 4,
+            data_bytes: 50,
         });
         assert_eq!(a.phase_secs, 3.0);
-        assert_eq!(a.bytes_total(), 33);
+        assert_eq!(a.bytes_total(), 33, "control-plane total excludes the mesh");
+        assert_eq!(a.reduce_bytes, 20);
+        assert_eq!(a.data_bytes, 150);
+    }
+
+    #[test]
+    fn data_plane_names_roundtrip() {
+        for plane in DataPlane::all() {
+            assert_eq!(DataPlane::from_name(plane.name()), Some(plane));
+        }
+        assert_eq!(DataPlane::from_name("rdma"), None);
+        assert_eq!(DataPlane::default(), DataPlane::Star);
+    }
+
+    #[test]
+    fn p2p_host_resolution() {
+        let mut setup = WorkerSetup {
+            rank: 0,
+            p: 4,
+            dataset: "quick".into(),
+            quick_n: 10,
+            quick_m: 4,
+            quick_nnz: 2,
+            scale: 1.0,
+            seed: 1,
+            test_fraction: 0.0,
+            file_path: String::new(),
+            partition: Strategy::Contiguous,
+            data_plane: DataPlane::P2p,
+            p2p_bind: String::new(),
+            p2p_port_base: 0,
+        };
+        assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
+        setup.p2p_bind = "10.0.0.1".into();
+        assert_eq!(setup.p2p_host(3), "10.0.0.1", "single entry covers all ranks");
+        setup.p2p_bind = "10.0.0.1, 10.0.0.2".into();
+        assert_eq!(setup.p2p_host(0), "10.0.0.1");
+        assert_eq!(setup.p2p_host(1), "10.0.0.2");
+        assert_eq!(setup.p2p_host(3), "10.0.0.2", "short list repeats the last");
+    }
+
+    #[test]
+    fn take_and_put_vector_roundtrip() {
+        let mut r = Reply::Grad { loss: 1.5, grad: vec![1.0, 2.0], units: 3.0 };
+        let v = take_vector(&mut r).unwrap();
+        assert_eq!(v, vec![1.0, 2.0]);
+        let Reply::Grad { grad, loss, units } = &r else { panic!() };
+        assert!(grad.is_empty());
+        assert_eq!((*loss, *units), (1.5, 3.0));
+        put_vector(&mut r, vec![9.0]);
+        let Reply::Grad { grad, .. } = &r else { panic!() };
+        assert_eq!(grad, &vec![9.0]);
+        let mut v = Reply::Vector { v: vec![4.0], units: 0.0 };
+        assert_eq!(take_vector(&mut v).unwrap(), vec![4.0]);
+        assert!(take_vector(&mut Reply::Ack { units: 0.0 }).is_err());
     }
 
     #[test]

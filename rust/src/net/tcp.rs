@@ -16,11 +16,26 @@
 //! 4. Drop sends `Shutdown` and reaps the children (kill after a grace
 //!    period).
 //!
-//! The physical routing is a star (worker ⇄ driver); reductions are
-//! executed driver-side with the run's [`super::Topology`] plan so the
-//! summation order — and therefore every bit of the result — matches
-//! the in-process transport. Real wall-clock and byte counts are
-//! recorded per phase and surface in traces as the measured columns.
+//! The control plane is always a star (worker ⇄ driver): commands fan
+//! out, replies fan in. Where reduction bytes move depends on the
+//! configured [`super::DataPlane`]:
+//!
+//! * **star** — per-rank vectors return in the replies and the driver
+//!   executes the run's [`super::Topology`] plan itself (the gathered
+//!   part payloads are attributed to `Measured::reduce_bytes`);
+//! * **p2p** — launch additionally runs the mesh handshake (workers
+//!   advertise data-plane ports in `Ready`, the driver broadcasts the
+//!   address list in `Mesh`, workers dial each other and answer
+//!   `MeshOk`), and every reduced phase becomes one `Reduce` frame:
+//!   the workers execute the plan over their mesh and only rank 0's
+//!   reply carries the final vector — no per-rank m-vector ever
+//!   transits the driver, whose reduce traffic is control-sized.
+//!
+//! Both planes execute the same plan in the same summation order, so
+//! every bit of the result matches the in-process transport. Real
+//! wall-clock and byte counts are recorded per phase and surface in
+//! traces as the measured columns (`net_bytes` control vs
+//! `net_data_bytes` mesh).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -30,7 +45,10 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::wire::{self, Msg};
-use super::{Command, Measured, PhaseOutput, Reply, Transport, WorkerSetup};
+use super::{
+    gather_reduce_phase, take_vector, Command, DataPlane, Measured, PhaseOutput,
+    ReduceOutput, Reply, Topology, Transport, WorkerSetup,
+};
 
 /// One worker connection (split stream for buffered reads and writes).
 struct Conn {
@@ -66,6 +84,7 @@ pub struct TcpDriver {
     p: usize,
     m: usize,
     nnz: usize,
+    plane: DataPlane,
 }
 
 impl TcpDriver {
@@ -162,9 +181,10 @@ impl TcpDriver {
         // collect Ready acknowledgements (workers build shards in parallel)
         let mut m = 0usize;
         let mut nnz = 0usize;
+        let mut data_ports = Vec::with_capacity(p);
         for (rank, conn) in conns.iter_mut().enumerate() {
             match conn.recv() {
-                Ok((Msg::Ready { m: wm, nnz: wnnz, .. }, _)) => {
+                Ok((Msg::Ready { m: wm, nnz: wnnz, data_port, .. }, _)) => {
                     if rank == 0 {
                         m = wm;
                     } else if wm != m {
@@ -174,6 +194,7 @@ impl TcpDriver {
                         ));
                     }
                     nnz += wnnz;
+                    data_ports.push(data_port);
                 }
                 Ok((Msg::Abort { msg }, _)) => {
                     reap(&mut children);
@@ -190,12 +211,47 @@ impl TcpDriver {
             }
         }
 
+        // p2p data plane: broadcast the rank-indexed address list and
+        // wait for every worker to finish dialling its mesh peers
+        if setup.data_plane == DataPlane::P2p {
+            let addrs: Vec<String> = data_ports
+                .iter()
+                .enumerate()
+                .map(|(rank, port)| format!("{}:{port}", setup.p2p_host(rank)))
+                .collect();
+            let mesh = Msg::Mesh { addrs };
+            for (rank, conn) in conns.iter_mut().enumerate() {
+                if let Err(e) = conn.send(&mesh) {
+                    reap(&mut children);
+                    return Err(format!("rank {rank} mesh: {e}"));
+                }
+            }
+            for (rank, conn) in conns.iter_mut().enumerate() {
+                match conn.recv() {
+                    Ok((Msg::MeshOk, _)) => {}
+                    Ok((Msg::Abort { msg }, _)) => {
+                        reap(&mut children);
+                        return Err(format!("rank {rank} aborted mesh setup: {msg}"));
+                    }
+                    Ok((other, _)) => {
+                        reap(&mut children);
+                        return Err(format!("rank {rank}: unexpected mesh reply {other:?}"));
+                    }
+                    Err(e) => {
+                        reap(&mut children);
+                        return Err(format!("rank {rank} mesh: {e}"));
+                    }
+                }
+            }
+        }
+
         Ok(TcpDriver {
             conns: Mutex::new(conns),
             children: Mutex::new(children),
             p,
             m,
             nnz,
+            plane: setup.data_plane,
         })
     }
 }
@@ -217,21 +273,25 @@ fn resolve_worker_command(worker_bin: &str) -> Result<(PathBuf, Vec<String>), St
     Ok((exe, vec!["--worker".to_string()]))
 }
 
+/// Reap worker processes: poll every child against one shared grace
+/// deadline, then kill whatever is left — so a single wedged worker
+/// costs one grace period, not one per child, and no orphan survives
+/// holding its control or data-plane ports.
 fn reap(children: &mut Vec<Child>) {
-    for child in children.iter_mut() {
-        let deadline = Instant::now() + Duration::from_secs(2);
-        loop {
-            match child.try_wait() {
-                Ok(Some(_)) => break,
-                Ok(None) if Instant::now() > deadline => {
-                    let _ = child.kill();
-                    let _ = child.wait();
-                    break;
-                }
-                Ok(None) => std::thread::sleep(Duration::from_millis(10)),
-                Err(_) => break,
-            }
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        children.retain_mut(|child| !matches!(child.try_wait(), Ok(Some(_)) | Err(_)));
+        if children.is_empty() {
+            return;
         }
+        if Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for child in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
     }
     children.clear();
 }
@@ -282,12 +342,88 @@ impl Transport for TcpDriver {
         Ok(PhaseOutput { replies, stats })
     }
 
+    fn reduce_phase(
+        &self,
+        cmd: &Command,
+        topo: Topology,
+        threaded: bool,
+    ) -> Result<ReduceOutput, String> {
+        match self.plane {
+            // star: gather the per-rank vectors and reduce driver-side
+            DataPlane::Star => gather_reduce_phase(self, cmd, topo, threaded),
+            DataPlane::P2p => self.p2p_reduce_phase(cmd, topo),
+        }
+    }
+
     fn name(&self) -> &'static str {
         "tcp"
     }
 }
 
+impl TcpDriver {
+    /// One `Reduce` round trip: the command fans out once, the workers
+    /// execute the phase and then the topology plan over their mesh,
+    /// and rank 0's reply carries the final reduced vector. The per-rank
+    /// part vectors never touch the driver: its reduce traffic is the
+    /// command fan-out plus P small `Reduced` headers.
+    fn p2p_reduce_phase(&self, cmd: &Command, topo: Topology) -> Result<ReduceOutput, String> {
+        let t0 = Instant::now();
+        let mut stats = Measured::default();
+        let mut conns = self.conns.lock().unwrap();
+        let payload = wire::encode(&Msg::Reduce { cmd: cmd.clone(), topology: topo });
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            stats.bytes_tx += conn
+                .send_raw(&payload)
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+        }
+        let mut replies: Vec<Reply> = Vec::with_capacity(self.p);
+        let mut reduced = Vec::new();
+        let mut mesh_secs = 0.0f64;
+        for rank in 0..self.p {
+            let (msg, bytes) = conns[rank]
+                .recv()
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.bytes_rx += bytes;
+            match msg {
+                Msg::Reduced { mut reply, data_tx, data_rx: _, secs } => {
+                    // mesh traffic is counted once, at each sender
+                    stats.data_bytes += data_tx;
+                    mesh_secs = mesh_secs.max(secs);
+                    if rank == 0 {
+                        reduced = take_vector(&mut reply)?;
+                    }
+                    replies.push(reply);
+                }
+                Msg::Abort { msg } => {
+                    return Err(format!("rank {rank} aborted: {msg}"))
+                }
+                other => {
+                    return Err(format!("rank {rank}: unexpected reduce reply {other:?}"))
+                }
+            }
+        }
+        if reduced.len() != self.m {
+            return Err(format!(
+                "p2p reduce returned {} elements, expected m = {}",
+                reduced.len(),
+                self.m
+            ));
+        }
+        // attribute the slowest rank's mesh schedule to the reduce
+        // clock (the measured counterpart of the topology's simulated
+        // AllReduce cost) and the rest of the round trip to the phase
+        let total = t0.elapsed().as_secs_f64();
+        stats.reduce_secs = mesh_secs;
+        stats.phase_secs = (total - mesh_secs).max(0.0);
+        Ok(ReduceOutput { replies, reduced, stats })
+    }
+}
+
 impl Drop for TcpDriver {
+    /// Graceful shutdown: every worker gets a `Shutdown` frame (closing
+    /// its mesh sockets and data-plane port with it), then the children
+    /// are reaped against a shared grace deadline with a kill fallback —
+    /// a failed test or bench never leaves orphan workers holding ports.
     fn drop(&mut self) {
         if let Ok(mut conns) = self.conns.lock() {
             for conn in conns.iter_mut() {

@@ -123,6 +123,182 @@ impl ReducePlan {
             .map(|c| c.steps.len() as f64 * (c.hi - c.lo) as f64 / m)
             .sum()
     }
+
+    /// Compile the plan into per-rank peer-to-peer schedules for a full
+    /// AllReduce: the plan's accumulation steps become matched
+    /// `Send`/`RecvAccum` pairs (reduce half), then the step list is
+    /// mirrored in reverse as `Send`/`RecvCopy` pairs so every rank ends
+    /// holding the reduced vector (broadcast half — the §4.1 tree's
+    /// mirrored downward broadcast, the ring's allgather rotation).
+    ///
+    /// Guarantees the data plane relies on:
+    ///
+    /// * **Bitwise identity with [`reduce`]**: each rank applies its
+    ///   accumulations in the plan's step order over each chunk range,
+    ///   and a rank only sends a range after applying every accumulation
+    ///   that precedes that step in the plan — so the summation order is
+    ///   exactly the plan's, element for element.
+    /// * **Deadlock freedom**: ops are grouped into rounds (the step
+    ///   index within each chunk); within a round every rank's sends
+    ///   precede its receives, and for any pair of ranks both sides see
+    ///   their mutual ops in the same relative order (both schedules are
+    ///   filtered from one global emission sequence), so per-connection
+    ///   FIFO delivery matches each blocking receive to the right frame.
+    /// * **Degeneration**: P = 1 and empty chunk ranges (m < P leaves
+    ///   ring chunks with `lo == hi`) produce no ops at all.
+    pub fn rank_schedules(&self) -> Vec<RankSchedule> {
+        (0..self.p).map(|rank| self.rank_schedule(rank)).collect()
+    }
+
+    /// One rank's slice of [`ReducePlan::rank_schedules`], compiled
+    /// without materializing the other P − 1 — what the mesh executor
+    /// compiles (once per `(topology, m)`, cached by the worker). The
+    /// per-rank op order is identical to filtering the joint schedule,
+    /// which is what the pairing and ordering guarantees above rely on.
+    pub fn rank_schedule(&self, rank: usize) -> RankSchedule {
+        let mut ops = Vec::new();
+        let rounds = self.chunks.iter().map(|c| c.steps.len()).max().unwrap_or(0);
+        // reduce half: plan step k of every chunk is round k
+        for round in 0..rounds {
+            for ch in &self.chunks {
+                if ch.hi <= ch.lo {
+                    continue;
+                }
+                if let Some(&(dst, src)) = ch.steps.get(round) {
+                    if src == rank {
+                        ops.push(MeshOp::Send { to: dst, lo: ch.lo, hi: ch.hi });
+                    }
+                }
+            }
+            for ch in &self.chunks {
+                if ch.hi <= ch.lo {
+                    continue;
+                }
+                if let Some(&(dst, src)) = ch.steps.get(round) {
+                    if dst == rank {
+                        ops.push(MeshOp::RecvAccum { from: src, lo: ch.lo, hi: ch.hi });
+                    }
+                }
+            }
+        }
+        // broadcast half: mirror the steps in reverse — step k's dst
+        // already holds the final chunk value when its mirror comes up
+        // (it received it from a mirror step with a larger k earlier)
+        for round in 0..rounds {
+            for ch in &self.chunks {
+                if ch.hi <= ch.lo || round >= ch.steps.len() {
+                    continue;
+                }
+                let (dst, src) = ch.steps[ch.steps.len() - 1 - round];
+                if dst == rank {
+                    ops.push(MeshOp::Send { to: src, lo: ch.lo, hi: ch.hi });
+                }
+            }
+            for ch in &self.chunks {
+                if ch.hi <= ch.lo || round >= ch.steps.len() {
+                    continue;
+                }
+                let (dst, src) = ch.steps[ch.steps.len() - 1 - round];
+                if src == rank {
+                    ops.push(MeshOp::RecvCopy { from: dst, lo: ch.lo, hi: ch.hi });
+                }
+            }
+        }
+        RankSchedule { rank, ops }
+    }
+}
+
+/// One data-plane action in a rank's compiled AllReduce schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeshOp {
+    /// Send the current `[lo, hi)` of the local buffer to rank `to`.
+    Send { to: usize, lo: usize, hi: usize },
+    /// Receive `[lo, hi)` from rank `from` and accumulate (`buf += recv`).
+    RecvAccum { from: usize, lo: usize, hi: usize },
+    /// Receive `[lo, hi)` from rank `from`, overwriting (broadcast half).
+    RecvCopy { from: usize, lo: usize, hi: usize },
+}
+
+/// One rank's compiled peer-to-peer schedule.
+#[derive(Clone, Debug)]
+pub struct RankSchedule {
+    pub rank: usize,
+    pub ops: Vec<MeshOp>,
+}
+
+impl RankSchedule {
+    /// Elements this rank puts on the wire executing the schedule.
+    pub fn send_elems(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                MeshOp::Send { lo, hi, .. } => hi - lo,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Reference executor for per-rank schedules: runs every rank's ops
+/// against in-memory FIFO queues (one per directed rank pair — exactly
+/// the ordering a TCP connection provides) and returns each rank's
+/// final buffer. Used by the property tests to pin the p2p schedules
+/// against the flat [`reduce`] execution, and doubling as a deadlock
+/// detector: a stalled schedule panics instead of hanging.
+pub fn simulate_schedules(parts: &[Vec<f64>], plan: &ReducePlan) -> Vec<Vec<f64>> {
+    use std::collections::{BTreeMap, VecDeque};
+    assert_eq!(parts.len(), plan.p, "parts/plan rank mismatch");
+    let scheds = plan.rank_schedules();
+    let mut bufs: Vec<Vec<f64>> = parts.to_vec();
+    let mut queues: BTreeMap<(usize, usize), VecDeque<Vec<f64>>> = BTreeMap::new();
+    let mut next: Vec<usize> = vec![0; plan.p];
+    loop {
+        let mut progressed = false;
+        let mut done = true;
+        for r in 0..plan.p {
+            // drain every op this rank can execute right now
+            while let Some(op) = scheds[r].ops.get(next[r]) {
+                match *op {
+                    MeshOp::Send { to, lo, hi } => {
+                        let frame = bufs[r][lo..hi].to_vec();
+                        queues.entry((r, to)).or_default().push_back(frame);
+                    }
+                    MeshOp::RecvAccum { from, lo, hi } => {
+                        let Some(frame) =
+                            queues.entry((from, r)).or_default().pop_front()
+                        else {
+                            break;
+                        };
+                        assert_eq!(frame.len(), hi - lo, "frame/range mismatch");
+                        linalg::accum(&mut bufs[r][lo..hi], &frame);
+                    }
+                    MeshOp::RecvCopy { from, lo, hi } => {
+                        let Some(frame) =
+                            queues.entry((from, r)).or_default().pop_front()
+                        else {
+                            break;
+                        };
+                        assert_eq!(frame.len(), hi - lo, "frame/range mismatch");
+                        bufs[r][lo..hi].copy_from_slice(&frame);
+                    }
+                }
+                next[r] += 1;
+                progressed = true;
+            }
+            if next[r] < scheds[r].ops.len() {
+                done = false;
+            }
+        }
+        if done {
+            break;
+        }
+        assert!(progressed, "schedule deadlock: no rank can progress");
+    }
+    assert!(
+        queues.values().all(VecDeque::is_empty),
+        "schedule left undelivered frames"
+    );
+    bufs
 }
 
 fn two_mut<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &T) {
@@ -274,6 +450,91 @@ mod tests {
         assert_eq!(tree, (p - 1) as f64);
         // P chunks × (P−1) steps × m/P elements each = P−1 full vectors
         assert!((ring - (p - 1) as f64).abs() < 1e-12, "ring hops {ring}");
+    }
+
+    #[test]
+    fn schedules_allreduce_bitwise_matches_plan_reduce() {
+        for topo in Topology::all() {
+            for p in 1..=8 {
+                for m in [1usize, 3, 5, 16, 33] {
+                    let mut parts = int_parts(p, m, 11 * p as u64 + m as u64);
+                    // perturb so summation order matters
+                    for (i, part) in parts.iter_mut().enumerate() {
+                        for (j, v) in part.iter_mut().enumerate() {
+                            *v += 1e-13 * ((i * 17 + j) as f64);
+                        }
+                    }
+                    let plan = topo.plan(p, m);
+                    let want = reduce(parts.clone(), &plan);
+                    let bufs = simulate_schedules(&parts, &plan);
+                    for (rank, buf) in bufs.iter().enumerate() {
+                        assert!(
+                            buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{topo:?} p={p} m={m} rank={rank} diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_schedule_is_a_noop() {
+        for topo in Topology::all() {
+            let scheds = topo.plan(1, 7).rank_schedules();
+            assert_eq!(scheds.len(), 1, "{topo:?}");
+            assert!(scheds[0].ops.is_empty(), "{topo:?}: {:?}", scheds[0].ops);
+        }
+    }
+
+    #[test]
+    fn empty_ring_chunks_produce_no_ops() {
+        // m < P: some ring chunks are empty; no zero-length frames
+        let scheds = Topology::Ring.plan(6, 3).rank_schedules();
+        for s in &scheds {
+            for op in &s.ops {
+                let (lo, hi) = match *op {
+                    MeshOp::Send { lo, hi, .. }
+                    | MeshOp::RecvAccum { lo, hi, .. }
+                    | MeshOp::RecvCopy { lo, hi, .. } => (lo, hi),
+                };
+                assert!(hi > lo, "zero-length op {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sends_and_recvs_pair_up() {
+        for topo in Topology::all() {
+            for (p, m) in [(2usize, 4usize), (4, 4), (5, 16), (8, 3)] {
+                let scheds = topo.plan(p, m).rank_schedules();
+                let mut sends = 0usize;
+                let mut recvs = 0usize;
+                let mut sent_elems = 0usize;
+                for s in &scheds {
+                    for op in &s.ops {
+                        match *op {
+                            MeshOp::Send { to, .. } => {
+                                assert!(to < p);
+                                assert_ne!(to, s.rank, "self-send");
+                                sends += 1;
+                            }
+                            MeshOp::RecvAccum { from, .. }
+                            | MeshOp::RecvCopy { from, .. } => {
+                                assert!(from < p);
+                                assert_ne!(from, s.rank, "self-recv");
+                                recvs += 1;
+                            }
+                        }
+                    }
+                    sent_elems += s.send_elems();
+                }
+                assert_eq!(sends, recvs, "{topo:?} p={p} m={m}");
+                // reduce + mirrored broadcast: twice the plan's hops
+                let expect = 2.0 * topo.plan(p, m).vector_hops() * m as f64;
+                assert_eq!(sent_elems as f64, expect, "{topo:?} p={p} m={m}");
+            }
+        }
     }
 
     #[test]

@@ -30,7 +30,10 @@ use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
 
-use super::{Command, DualUpdateSpec, InnerSolveSpec, LocalSolveSpec, Reply, WorkerSetup};
+use super::{
+    Command, DataPlane, DualUpdateSpec, InnerSolveSpec, LocalSolveSpec, Reply, Topology,
+    WorkerSetup,
+};
 
 /// Hard cap on a single frame (guards against corrupt length prefixes).
 pub const MAX_FRAME: usize = 1 << 30;
@@ -44,7 +47,12 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// v2: full-vocabulary transports — `Hvp`, `LossEval`, `LocalSolve`
 /// (ADMM/CoCoA/SSZ/feature-FADL payloads), `DualUpdate`, and the
 /// `Vector`/`Scalar` replies.
-pub const PROTO_VERSION: u32 = 2;
+///
+/// v3: the peer-to-peer data plane — `Setup` carries the data-plane
+/// selection (plane, bind hosts, port base), `Ready` advertises the
+/// worker's data-plane port, and the `Mesh`/`MeshOk` handshake plus the
+/// `Reduce`/`Reduced` fused phase+AllReduce round trip landed.
+pub const PROTO_VERSION: u32 = 3;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -315,20 +323,38 @@ fn approx_from(name: &str) -> Result<ApproxKind, String> {
     ApproxKind::from_name(name).ok_or_else(|| format!("unknown approximation {name:?}"))
 }
 
+fn port_from(v: u32) -> Result<u16, String> {
+    u16::try_from(v).map_err(|_| format!("port {v} out of range"))
+}
+
 // ---------------------------------------------------------------------------
 // Messages
 // ---------------------------------------------------------------------------
 
 /// Every message either side can send. Driver → worker: `Setup`,
-/// `Cmd`, `Shutdown`. Worker → driver: `Ready`, `Reply`, `Abort`.
+/// `Mesh`, `Cmd`, `Reduce`, `Shutdown`. Worker → driver: `Ready`,
+/// `MeshOk`, `Reply`, `Reduced`, `Abort`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     Setup(WorkerSetup),
     Shutdown,
-    Ready { m: usize, n: usize, nnz: usize },
+    /// `data_port` is the worker's bound data-plane listener port
+    /// (0 when the star plane is in effect).
+    Ready { m: usize, n: usize, nnz: usize, data_port: u16 },
     Abort { msg: String },
     Cmd(Command),
     Reply(Reply),
+    /// Every rank's advertised data-plane address, rank-indexed; the
+    /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
+    Mesh { addrs: Vec<String> },
+    MeshOk,
+    /// Fused phase + AllReduce: execute `cmd`, then run this rank's
+    /// share of `topology`'s plan over the mesh.
+    Reduce { cmd: Command, topology: Topology },
+    /// Reply to `Reduce`: the phase reply with its vector slot holding
+    /// the reduced vector on rank 0 and emptied elsewhere, plus the
+    /// rank's data-plane traffic and mesh wall-clock.
+    Reduced { reply: Reply, data_tx: u64, data_rx: u64, secs: f64 },
 }
 
 mod tag {
@@ -336,6 +362,10 @@ mod tag {
     pub const SHUTDOWN: u8 = 2;
     pub const READY: u8 = 3;
     pub const ABORT: u8 = 4;
+    pub const MESH: u8 = 5;
+    pub const MESH_OK: u8 = 6;
+    pub const REDUCE: u8 = 7;
+    pub const REDUCED: u8 = 8;
     pub const CMD_RESET: u8 = 10;
     pub const CMD_GRAD: u8 = 11;
     pub const CMD_DIRS: u8 = 12;
@@ -391,172 +421,208 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.f64(s.test_fraction);
             e.str(&s.file_path);
             e.str(strategy_name(s.partition));
+            e.str(s.data_plane.name());
+            e.str(&s.p2p_bind);
+            e.u32(u32::from(s.p2p_port_base));
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
-        Msg::Ready { m, n, nnz } => {
+        Msg::Ready { m, n, nnz, data_port } => {
             e.u8(tag::READY);
             e.u32(PROTO_VERSION);
             e.usize(*m);
             e.usize(*n);
             e.usize(*nnz);
+            e.u32(u32::from(*data_port));
         }
         Msg::Abort { msg } => {
             e.u8(tag::ABORT);
             e.str(msg);
         }
-        Msg::Cmd(cmd) => match cmd {
-            Command::Reset => e.u8(tag::CMD_RESET),
-            Command::Grad { loss, w } => {
-                e.u8(tag::CMD_GRAD);
-                e.str(loss.name());
-                e.vec_f64(w);
+        Msg::Mesh { addrs } => {
+            e.u8(tag::MESH);
+            e.u64(addrs.len() as u64);
+            for addr in addrs {
+                e.str(addr);
             }
-            Command::Dirs { d } => {
-                e.u8(tag::CMD_DIRS);
-                e.vec_f64(d);
-            }
-            Command::Linesearch { loss, t } => {
-                e.u8(tag::CMD_LINESEARCH);
-                e.str(loss.name());
-                e.f64(*t);
-            }
-            Command::InnerSolve(spec) => {
-                e.u8(tag::CMD_INNER_SOLVE);
-                e.str(spec.kind.name());
-                e.str(&spec.inner);
-                e.usize(spec.k_hat);
-                e.opt_f64(spec.trust_radius);
-                e.f64(spec.lambda);
-                e.str(spec.loss.name());
-                e.vec_f64(&spec.anchor);
-                e.vec_f64(&spec.full_grad);
-                e.opt_vec_f64(spec.data_grad.as_deref());
-            }
-            Command::Warmstart { loss, lambda, epochs, seed } => {
-                e.u8(tag::CMD_WARMSTART);
-                e.str(loss.name());
-                e.f64(*lambda);
-                e.u32(*epochs);
-                e.u64(*seed);
-            }
-            Command::Hvp { loss, s } => {
-                e.u8(tag::CMD_HVP);
-                e.str(loss.name());
-                e.vec_f64(s);
-            }
-            Command::LossEval { loss, w } => {
-                e.u8(tag::CMD_LOSS_EVAL);
-                e.str(loss.name());
-                e.vec_f64(w);
-            }
-            Command::LocalSolve(spec) => {
-                e.u8(tag::CMD_LOCAL_SOLVE);
-                match spec {
-                    LocalSolveSpec::AdmmProx { loss, rho, local_iters, init, u_scale, z } => {
-                        e.u8(tag::SOLVE_ADMM_PROX);
-                        e.str(loss.name());
-                        e.f64(*rho);
-                        e.u32(*local_iters);
-                        e.bool(*init);
-                        e.f64(*u_scale);
-                        e.vec_f64(z);
-                    }
-                    LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
-                        e.u8(tag::SOLVE_COCOA_SDCA);
-                        e.f64(*lambda);
-                        e.f64(*epochs);
-                        e.u64(*seed);
-                        e.u64(*round);
-                        e.vec_f64(w);
-                    }
-                    LocalSolveSpec::SszProx {
-                        loss,
-                        lambda,
-                        mu,
-                        local_iters,
-                        anchor,
-                        full_grad,
-                        grad_shift,
-                    } => {
-                        e.u8(tag::SOLVE_SSZ_PROX);
-                        e.str(loss.name());
-                        e.f64(*lambda);
-                        e.f64(*mu);
-                        e.u32(*local_iters);
-                        e.vec_f64(anchor);
-                        e.vec_f64(full_grad);
-                        e.vec_f64(grad_shift);
-                    }
-                    LocalSolveSpec::FeatureSolve {
-                        loss,
-                        lambda,
-                        k_hat,
-                        anchor,
-                        full_grad,
-                        subsets,
-                    } => {
-                        e.u8(tag::SOLVE_FEATURE);
-                        e.str(loss.name());
-                        e.f64(*lambda);
-                        e.u32(*k_hat);
-                        e.vec_f64(anchor);
-                        e.vec_f64(full_grad);
-                        e.vec_vec_u32(subsets);
-                    }
-                }
-            }
-            Command::DualUpdate(spec) => {
-                e.u8(tag::CMD_DUAL_UPDATE);
-                match spec {
-                    DualUpdateSpec::AdmmDual { z } => {
-                        e.u8(tag::DUAL_ADMM);
-                        e.vec_f64(z);
-                    }
-                }
-            }
-        },
-        Msg::Reply(reply) => match reply {
-            Reply::Ack { units } => {
-                e.u8(tag::REPLY_ACK);
-                e.f64(*units);
-            }
-            Reply::Grad { loss, grad, units } => {
-                e.u8(tag::REPLY_GRAD);
-                e.f64(*loss);
-                e.vec_f64(grad);
-                e.f64(*units);
-            }
-            Reply::Pair { a, b, units } => {
-                e.u8(tag::REPLY_PAIR);
-                e.f64(*a);
-                e.f64(*b);
-                e.f64(*units);
-            }
-            Reply::Solve { w, n, units } => {
-                e.u8(tag::REPLY_SOLVE);
-                e.vec_f64(w);
-                e.usize(*n);
-                e.f64(*units);
-            }
-            Reply::Warm { w, counts, units } => {
-                e.u8(tag::REPLY_WARM);
-                e.vec_f64(w);
-                e.vec_f64(counts);
-                e.f64(*units);
-            }
-            Reply::Vector { v, units } => {
-                e.u8(tag::REPLY_VECTOR);
-                e.vec_f64(v);
-                e.f64(*units);
-            }
-            Reply::Scalar { v, units } => {
-                e.u8(tag::REPLY_SCALAR);
-                e.f64(*v);
-                e.f64(*units);
-            }
-        },
+        }
+        Msg::MeshOk => e.u8(tag::MESH_OK),
+        Msg::Reduce { cmd, topology } => {
+            e.u8(tag::REDUCE);
+            e.str(topology.name());
+            enc_cmd(&mut e, cmd);
+        }
+        Msg::Reduced { reply, data_tx, data_rx, secs } => {
+            e.u8(tag::REDUCED);
+            e.u64(*data_tx);
+            e.u64(*data_rx);
+            e.f64(*secs);
+            enc_reply(&mut e, reply);
+        }
+        Msg::Cmd(cmd) => enc_cmd(&mut e, cmd),
+        Msg::Reply(reply) => enc_reply(&mut e, reply),
     }
     e.buf
+}
+
+/// Append a command (with its `CMD_*` tag) — shared by `Cmd` and the
+/// fused `Reduce` encoding.
+fn enc_cmd(e: &mut Enc, cmd: &Command) {
+    match cmd {
+        Command::Reset => e.u8(tag::CMD_RESET),
+        Command::Grad { loss, w } => {
+            e.u8(tag::CMD_GRAD);
+            e.str(loss.name());
+            e.vec_f64(w);
+        }
+        Command::Dirs { d } => {
+            e.u8(tag::CMD_DIRS);
+            e.vec_f64(d);
+        }
+        Command::Linesearch { loss, t } => {
+            e.u8(tag::CMD_LINESEARCH);
+            e.str(loss.name());
+            e.f64(*t);
+        }
+        Command::InnerSolve(spec) => {
+            e.u8(tag::CMD_INNER_SOLVE);
+            e.str(spec.kind.name());
+            e.str(&spec.inner);
+            e.usize(spec.k_hat);
+            e.opt_f64(spec.trust_radius);
+            e.f64(spec.lambda);
+            e.str(spec.loss.name());
+            e.vec_f64(&spec.anchor);
+            e.vec_f64(&spec.full_grad);
+            e.opt_vec_f64(spec.data_grad.as_deref());
+        }
+        Command::Warmstart { loss, lambda, epochs, seed } => {
+            e.u8(tag::CMD_WARMSTART);
+            e.str(loss.name());
+            e.f64(*lambda);
+            e.u32(*epochs);
+            e.u64(*seed);
+        }
+        Command::Hvp { loss, s } => {
+            e.u8(tag::CMD_HVP);
+            e.str(loss.name());
+            e.vec_f64(s);
+        }
+        Command::LossEval { loss, w } => {
+            e.u8(tag::CMD_LOSS_EVAL);
+            e.str(loss.name());
+            e.vec_f64(w);
+        }
+        Command::LocalSolve(spec) => {
+            e.u8(tag::CMD_LOCAL_SOLVE);
+            match spec {
+                LocalSolveSpec::AdmmProx { loss, rho, local_iters, init, u_scale, z } => {
+                    e.u8(tag::SOLVE_ADMM_PROX);
+                    e.str(loss.name());
+                    e.f64(*rho);
+                    e.u32(*local_iters);
+                    e.bool(*init);
+                    e.f64(*u_scale);
+                    e.vec_f64(z);
+                }
+                LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
+                    e.u8(tag::SOLVE_COCOA_SDCA);
+                    e.f64(*lambda);
+                    e.f64(*epochs);
+                    e.u64(*seed);
+                    e.u64(*round);
+                    e.vec_f64(w);
+                }
+                LocalSolveSpec::SszProx {
+                    loss,
+                    lambda,
+                    mu,
+                    local_iters,
+                    anchor,
+                    full_grad,
+                    grad_shift,
+                } => {
+                    e.u8(tag::SOLVE_SSZ_PROX);
+                    e.str(loss.name());
+                    e.f64(*lambda);
+                    e.f64(*mu);
+                    e.u32(*local_iters);
+                    e.vec_f64(anchor);
+                    e.vec_f64(full_grad);
+                    e.vec_f64(grad_shift);
+                }
+                LocalSolveSpec::FeatureSolve {
+                    loss,
+                    lambda,
+                    k_hat,
+                    anchor,
+                    full_grad,
+                    subsets,
+                } => {
+                    e.u8(tag::SOLVE_FEATURE);
+                    e.str(loss.name());
+                    e.f64(*lambda);
+                    e.u32(*k_hat);
+                    e.vec_f64(anchor);
+                    e.vec_f64(full_grad);
+                    e.vec_vec_u32(subsets);
+                }
+            }
+        }
+        Command::DualUpdate(spec) => {
+            e.u8(tag::CMD_DUAL_UPDATE);
+            match spec {
+                DualUpdateSpec::AdmmDual { z } => {
+                    e.u8(tag::DUAL_ADMM);
+                    e.vec_f64(z);
+                }
+            }
+        }
+    }
+}
+
+/// Append a reply (with its `REPLY_*` tag) — shared by `Reply` and the
+/// fused `Reduced` encoding.
+fn enc_reply(e: &mut Enc, reply: &Reply) {
+    match reply {
+        Reply::Ack { units } => {
+            e.u8(tag::REPLY_ACK);
+            e.f64(*units);
+        }
+        Reply::Grad { loss, grad, units } => {
+            e.u8(tag::REPLY_GRAD);
+            e.f64(*loss);
+            e.vec_f64(grad);
+            e.f64(*units);
+        }
+        Reply::Pair { a, b, units } => {
+            e.u8(tag::REPLY_PAIR);
+            e.f64(*a);
+            e.f64(*b);
+            e.f64(*units);
+        }
+        Reply::Solve { w, n, units } => {
+            e.u8(tag::REPLY_SOLVE);
+            e.vec_f64(w);
+            e.usize(*n);
+            e.f64(*units);
+        }
+        Reply::Warm { w, counts, units } => {
+            e.u8(tag::REPLY_WARM);
+            e.vec_f64(w);
+            e.vec_f64(counts);
+            e.f64(*units);
+        }
+        Reply::Vector { v, units } => {
+            e.u8(tag::REPLY_VECTOR);
+            e.vec_f64(v);
+            e.f64(*units);
+        }
+        Reply::Scalar { v, units } => {
+            e.u8(tag::REPLY_SCALAR);
+            e.f64(*v);
+            e.f64(*units);
+        }
+    }
 }
 
 /// Deserialize a frame payload.
@@ -579,6 +645,13 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             test_fraction: d.f64()?,
             file_path: d.str()?,
             partition: strategy_from(&d.str()?)?,
+            data_plane: {
+                let name = d.str()?;
+                DataPlane::from_name(&name)
+                    .ok_or_else(|| format!("unknown data plane {name:?}"))?
+            },
+            p2p_bind: d.str()?,
+            p2p_port_base: port_from(d.u32()?)?,
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -588,19 +661,59 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             },
             n: d.usize()?,
             nnz: d.usize()?,
+            data_port: port_from(d.u32()?)?,
         },
         tag::ABORT => Msg::Abort { msg: d.str()? },
-        tag::CMD_RESET => Msg::Cmd(Command::Reset),
-        tag::CMD_GRAD => Msg::Cmd(Command::Grad {
+        tag::MESH => {
+            let len = d.u64()? as usize;
+            // each address costs at least its 4-byte length prefix
+            if len.saturating_mul(4) > payload.len() {
+                return Err(format!("truncated mesh list of claimed length {len}"));
+            }
+            let mut addrs = Vec::with_capacity(len);
+            for _ in 0..len {
+                addrs.push(d.str()?);
+            }
+            Msg::Mesh { addrs }
+        }
+        tag::MESH_OK => Msg::MeshOk,
+        tag::REDUCE => {
+            let topo_name = d.str()?;
+            let topology = Topology::from_name(&topo_name)
+                .ok_or_else(|| format!("unknown topology {topo_name:?}"))?;
+            let ct = d.u8()?;
+            Msg::Reduce { cmd: dec_cmd(&mut d, ct)?, topology }
+        }
+        tag::REDUCED => {
+            let data_tx = d.u64()?;
+            let data_rx = d.u64()?;
+            let secs = d.f64()?;
+            let rt = d.u8()?;
+            Msg::Reduced { reply: dec_reply(&mut d, rt)?, data_tx, data_rx, secs }
+        }
+        t @ tag::CMD_RESET..=tag::CMD_DUAL_UPDATE => Msg::Cmd(dec_cmd(&mut d, t)?),
+        t @ tag::REPLY_ACK..=tag::REPLY_SCALAR => Msg::Reply(dec_reply(&mut d, t)?),
+        other => return Err(format!("unknown message tag {other}")),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+/// Decode a command whose `CMD_*` tag byte has already been read —
+/// shared by `Cmd` and the fused `Reduce` decoding.
+fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
+    Ok(match t {
+        tag::CMD_RESET => Command::Reset,
+        tag::CMD_GRAD => Command::Grad {
             loss: loss_from(&d.str()?)?,
             w: d.vec_f64()?,
-        }),
-        tag::CMD_DIRS => Msg::Cmd(Command::Dirs { d: d.vec_f64()? }),
-        tag::CMD_LINESEARCH => Msg::Cmd(Command::Linesearch {
+        },
+        tag::CMD_DIRS => Command::Dirs { d: d.vec_f64()? },
+        tag::CMD_LINESEARCH => Command::Linesearch {
             loss: loss_from(&d.str()?)?,
             t: d.f64()?,
-        }),
-        tag::CMD_INNER_SOLVE => Msg::Cmd(Command::InnerSolve(InnerSolveSpec {
+        },
+        tag::CMD_INNER_SOLVE => Command::InnerSolve(InnerSolveSpec {
             kind: approx_from(&d.str()?)?,
             inner: d.str()?,
             k_hat: d.usize()?,
@@ -610,21 +723,21 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             anchor: d.vec_f64()?,
             full_grad: d.vec_f64()?,
             data_grad: d.opt_vec_f64()?,
-        })),
-        tag::CMD_WARMSTART => Msg::Cmd(Command::Warmstart {
+        }),
+        tag::CMD_WARMSTART => Command::Warmstart {
             loss: loss_from(&d.str()?)?,
             lambda: d.f64()?,
             epochs: d.u32()?,
             seed: d.u64()?,
-        }),
-        tag::CMD_HVP => Msg::Cmd(Command::Hvp {
+        },
+        tag::CMD_HVP => Command::Hvp {
             loss: loss_from(&d.str()?)?,
             s: d.vec_f64()?,
-        }),
-        tag::CMD_LOSS_EVAL => Msg::Cmd(Command::LossEval {
+        },
+        tag::CMD_LOSS_EVAL => Command::LossEval {
             loss: loss_from(&d.str()?)?,
             w: d.vec_f64()?,
-        }),
+        },
         tag::CMD_LOCAL_SOLVE => {
             let sub = d.u8()?;
             let spec = match sub {
@@ -662,7 +775,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 },
                 other => return Err(format!("unknown local-solve payload tag {other}")),
             };
-            Msg::Cmd(Command::LocalSolve(spec))
+            Command::LocalSolve(spec)
         }
         tag::CMD_DUAL_UPDATE => {
             let sub = d.u8()?;
@@ -670,41 +783,47 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 tag::DUAL_ADMM => DualUpdateSpec::AdmmDual { z: d.vec_f64()? },
                 other => return Err(format!("unknown dual-update payload tag {other}")),
             };
-            Msg::Cmd(Command::DualUpdate(spec))
+            Command::DualUpdate(spec)
         }
-        tag::REPLY_ACK => Msg::Reply(Reply::Ack { units: d.f64()? }),
-        tag::REPLY_GRAD => Msg::Reply(Reply::Grad {
+        other => return Err(format!("unknown command tag {other}")),
+    })
+}
+
+/// Decode a reply whose `REPLY_*` tag byte has already been read —
+/// shared by `Reply` and the fused `Reduced` decoding.
+fn dec_reply(d: &mut Dec, t: u8) -> Result<Reply, String> {
+    Ok(match t {
+        tag::REPLY_ACK => Reply::Ack { units: d.f64()? },
+        tag::REPLY_GRAD => Reply::Grad {
             loss: d.f64()?,
             grad: d.vec_f64()?,
             units: d.f64()?,
-        }),
-        tag::REPLY_PAIR => Msg::Reply(Reply::Pair {
+        },
+        tag::REPLY_PAIR => Reply::Pair {
             a: d.f64()?,
             b: d.f64()?,
             units: d.f64()?,
-        }),
-        tag::REPLY_SOLVE => Msg::Reply(Reply::Solve {
+        },
+        tag::REPLY_SOLVE => Reply::Solve {
             w: d.vec_f64()?,
             n: d.usize()?,
             units: d.f64()?,
-        }),
-        tag::REPLY_WARM => Msg::Reply(Reply::Warm {
+        },
+        tag::REPLY_WARM => Reply::Warm {
             w: d.vec_f64()?,
             counts: d.vec_f64()?,
             units: d.f64()?,
-        }),
-        tag::REPLY_VECTOR => Msg::Reply(Reply::Vector {
+        },
+        tag::REPLY_VECTOR => Reply::Vector {
             v: d.vec_f64()?,
             units: d.f64()?,
-        }),
-        tag::REPLY_SCALAR => Msg::Reply(Reply::Scalar {
+        },
+        tag::REPLY_SCALAR => Reply::Scalar {
             v: d.f64()?,
             units: d.f64()?,
-        }),
-        other => return Err(format!("unknown message tag {other}")),
-    };
-    d.finish()?;
-    Ok(msg)
+        },
+        other => return Err(format!("unknown reply tag {other}")),
+    })
 }
 
 /// Convenience: encode + frame in one call, returning bytes written.
@@ -737,7 +856,7 @@ mod tests {
     #[test]
     fn every_variant_roundtrips() {
         roundtrip(Msg::Shutdown);
-        roundtrip(Msg::Ready { m: 10, n: 99, nnz: 1234 });
+        roundtrip(Msg::Ready { m: 10, n: 99, nnz: 1234, data_port: 40551 });
         roundtrip(Msg::Abort { msg: "boom ü".into() });
         roundtrip(Msg::Setup(WorkerSetup {
             rank: 3,
@@ -751,6 +870,9 @@ mod tests {
             test_fraction: 0.2,
             file_path: String::new(),
             partition: Strategy::RoundRobin,
+            data_plane: crate::net::DataPlane::P2p,
+            p2p_bind: "127.0.0.1,10.0.0.2".into(),
+            p2p_port_base: 9100,
         }));
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
@@ -849,6 +971,46 @@ mod tests {
     }
 
     #[test]
+    fn data_plane_variants_roundtrip() {
+        roundtrip(Msg::Mesh { addrs: vec![] });
+        roundtrip(Msg::Mesh {
+            addrs: vec!["127.0.0.1:9100".into(), "10.0.0.2:9101".into()],
+        });
+        roundtrip(Msg::MeshOk);
+        for topology in crate::net::Topology::all() {
+            roundtrip(Msg::Reduce {
+                cmd: Command::Grad {
+                    loss: Loss::SquaredHinge,
+                    w: vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE],
+                },
+                topology,
+            });
+        }
+        roundtrip(Msg::Reduce {
+            cmd: Command::Hvp { loss: Loss::Logistic, s: vec![] },
+            topology: crate::net::Topology::Ring,
+        });
+        roundtrip(Msg::Reduced {
+            reply: Reply::Grad { loss: 2.5, grad: vec![1.0, -2.0], units: 7.0 },
+            data_tx: 1234,
+            data_rx: 4321,
+            secs: 0.015625,
+        });
+        roundtrip(Msg::Reduced {
+            reply: Reply::Vector { v: vec![], units: 0.0 },
+            data_tx: 0,
+            data_rx: 0,
+            secs: 0.0,
+        });
+        // an unknown topology name inside Reduce is rejected
+        let mut e = Enc::new();
+        e.u8(tag::REDUCE);
+        e.str("mesh");
+        e.u8(tag::CMD_RESET);
+        assert!(decode(&e.buf).unwrap_err().contains("unknown topology"));
+    }
+
+    #[test]
     fn truncated_u32_vectors_rejected() {
         let mut e = Enc::new();
         e.vec_vec_u32(&[vec![1, 2, 3], vec![4]]);
@@ -887,7 +1049,7 @@ mod tests {
 
     #[test]
     fn version_mismatch_rejected() {
-        let mut bytes = encode(&Msg::Ready { m: 1, n: 2, nnz: 3 });
+        let mut bytes = encode(&Msg::Ready { m: 1, n: 2, nnz: 3, data_port: 0 });
         // version is the u32 right after the tag byte
         bytes[1..5].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
         let err = decode(&bytes).unwrap_err();

@@ -1,16 +1,27 @@
-//! The TCP worker process: one shard, one frame loop.
+//! The TCP worker process: one shard, one frame loop, and (under the
+//! p2p data plane) one side of the rank ⇄ rank mesh.
 //!
 //! Spawned by [`super::tcp::TcpDriver`] (directly as the `worker` bin
 //! or via the `--worker` self-exec fallback). The worker rebuilds its
 //! shard from the [`super::WorkerSetup`] recipe using the *same*
 //! coordinator pipeline as the in-process driver, then serves commands
 //! with the shared [`super::endpoint::exec`] until `Shutdown` or EOF.
+//!
+//! Control plane: `Setup` → `Ready` → (`Mesh` → `MeshOk` under p2p) →
+//! `Cmd`/`Reduce` frames. A `Reduce` frame executes the command and
+//! then runs this rank's share of the topology's [`ReducePlan`] over
+//! the mesh ([`super::mesh::Mesh::allreduce`]), so the reduced
+//! m-vectors move worker ↔ worker; only rank 0 returns the final
+//! vector to the driver.
 
 use std::io::{BufReader, BufWriter, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 
 use super::endpoint::{exec, WorkerState};
+use super::mesh::Mesh;
+use super::topology::RankSchedule;
 use super::wire::{self, Msg};
+use super::{put_vector, take_vector, DataPlane, Topology};
 
 /// The `--worker --connect host:port` self-exec handshake, shared by
 /// every binary that can be re-executed as a worker (see
@@ -55,35 +66,147 @@ pub fn serve(connect: &str) -> Result<(), String> {
         Some(other) => return Err(format!("expected Setup, got {other:?}")),
         None => return Err("driver closed before setup".into()),
     };
+    let abort = |e: String, w: &mut BufWriter<TcpStream>| -> String {
+        let _ = send(&Msg::Abort { msg: e.clone() }, w);
+        format!("rank {}: {e}", setup.rank)
+    };
+    // bind the data-plane listener before Ready so the frame can
+    // advertise the port (p2p only)
+    let data_listener = if setup.data_plane == DataPlane::P2p {
+        let host = setup.p2p_host(setup.rank);
+        let port = if setup.p2p_port_base == 0 {
+            0
+        } else {
+            match u16::try_from(setup.rank)
+                .ok()
+                .and_then(|r| setup.p2p_port_base.checked_add(r))
+            {
+                Some(port) => port,
+                None => {
+                    return Err(abort(
+                        format!(
+                            "p2p_port_base {} + rank {} overflows the port range",
+                            setup.p2p_port_base, setup.rank
+                        ),
+                        &mut w,
+                    ))
+                }
+            }
+        };
+        match TcpListener::bind((host.as_str(), port)) {
+            Ok(l) => Some(l),
+            Err(e) => {
+                return Err(abort(
+                    format!("bind data-plane listener on {host}:{port}: {e}"),
+                    &mut w,
+                ))
+            }
+        }
+    } else {
+        None
+    };
+    let data_port = match &data_listener {
+        Some(l) => l
+            .local_addr()
+            .map_err(|e| format!("data listener addr: {e}"))?
+            .port(),
+        None => 0,
+    };
     let shard = match crate::coordinator::driver::build_worker_shard(&setup) {
         Ok(shard) => shard,
-        Err(e) => {
-            let _ = send(&Msg::Abort { msg: e.clone() }, &mut w);
-            return Err(format!("build shard for rank {}: {e}", setup.rank));
-        }
+        Err(e) => return Err(abort(format!("build shard: {e}"), &mut w)),
     };
     let mut st = WorkerState::new(setup.rank, setup.p);
     send(
-        &Msg::Ready { m: shard.m(), n: shard.n(), nnz: shard.nnz() },
+        &Msg::Ready { m: shard.m(), n: shard.n(), nnz: shard.nnz(), data_port },
         &mut w,
     )?;
 
     // --- phase loop ---
+    let mut mesh: Option<Mesh> = None;
+    // compiled mesh schedules, one per (topology, m) seen — reduces are
+    // hot-loop operations, the compile is paid once per shape
+    let mut scheds: Vec<(Topology, usize, RankSchedule)> = Vec::new();
     loop {
         let msg = match wire::recv(&mut r)? {
             Some(msg) => msg,
-            // driver went away (e.g. it was killed): exit quietly
+            // driver went away (e.g. it was killed): exit quietly,
+            // dropping the mesh sockets and the data-plane port with us
             None => return Ok(()),
         };
         match msg {
             Msg::Shutdown => return Ok(()),
+            Msg::Mesh { addrs } => {
+                let Some(listener) = &data_listener else {
+                    return Err(abort(
+                        "mesh handshake on the star data plane".into(),
+                        &mut w,
+                    ));
+                };
+                if addrs.len() != setup.p {
+                    return Err(abort(
+                        format!("mesh lists {} ranks, P = {}", addrs.len(), setup.p),
+                        &mut w,
+                    ));
+                }
+                let established = if setup.p == 1 {
+                    Ok(Mesh::solo(setup.rank))
+                } else {
+                    Mesh::establish(setup.rank, &addrs, listener)
+                };
+                match established {
+                    Ok(m) => mesh = Some(m),
+                    Err(e) => return Err(abort(e, &mut w)),
+                }
+                send(&Msg::MeshOk, &mut w)?;
+            }
             Msg::Cmd(cmd) => match exec(shard.as_ref(), &mut st, &cmd) {
                 Ok(reply) => send(&Msg::Reply(reply), &mut w)?,
-                Err(e) => {
-                    let _ = send(&Msg::Abort { msg: e.clone() }, &mut w);
-                    return Err(format!("rank {}: {e}", setup.rank));
-                }
+                Err(e) => return Err(abort(e, &mut w)),
             },
+            Msg::Reduce { cmd, topology } => {
+                let Some(mesh) = &mesh else {
+                    return Err(abort("Reduce before the mesh handshake".into(), &mut w));
+                };
+                let mut reply = match exec(shard.as_ref(), &mut st, &cmd) {
+                    Ok(reply) => reply,
+                    Err(e) => return Err(abort(e, &mut w)),
+                };
+                let mut vector = match take_vector(&mut reply) {
+                    Ok(v) => v,
+                    Err(e) => return Err(abort(e, &mut w)),
+                };
+                let m = vector.len();
+                let cached =
+                    scheds.iter().position(|(t, mm, _)| *t == topology && *mm == m);
+                let idx = match cached {
+                    Some(i) => i,
+                    None => {
+                        let sched =
+                            topology.plan(setup.p, m).rank_schedule(setup.rank);
+                        scheds.push((topology, m, sched));
+                        scheds.len() - 1
+                    }
+                };
+                let stats = match mesh.allreduce(&mut vector, &scheds[idx].2) {
+                    Ok(stats) => stats,
+                    Err(e) => return Err(abort(e, &mut w)),
+                };
+                // every rank now holds the reduced vector; only rank 0
+                // returns it — the driver never sees the P part vectors
+                if setup.rank == 0 {
+                    put_vector(&mut reply, vector);
+                }
+                send(
+                    &Msg::Reduced {
+                        reply,
+                        data_tx: stats.tx,
+                        data_rx: stats.rx,
+                        secs: stats.secs,
+                    },
+                    &mut w,
+                )?;
+            }
             other => return Err(format!("unexpected message {other:?}")),
         }
     }

@@ -1,11 +1,14 @@
-//! TCP-loopback transport integration: real worker OS processes must
-//! reproduce the in-process transport exactly.
+//! TCP transport integration: real worker OS processes must reproduce
+//! the in-process transport exactly — on the star data plane (vectors
+//! gathered through the driver) AND on the peer-to-peer data plane
+//! (the worker ⇄ worker mesh executes the reduction plan).
 //!
 //! Uses the `worker` binary Cargo builds for this package
 //! (`CARGO_BIN_EXE_worker`), so no self-exec fallback is involved.
 
 use fadl::coordinator::driver;
-use fadl::net::Topology;
+use fadl::loss::Loss;
+use fadl::net::{DataPlane, Topology};
 use fadl::Config;
 
 fn base_cfg() -> Config {
@@ -21,72 +24,92 @@ fn base_cfg() -> Config {
     }
 }
 
+fn tcp_cfg(base: &Config, plane: DataPlane) -> Config {
+    Config {
+        transport: "tcp".into(),
+        data_plane: plane,
+        ..base.clone()
+    }
+}
+
 fn run_with(cfg: &Config) -> fadl::metrics::Trace {
     let exp = driver::prepare(cfg).expect("prepare");
     let (_, trace) = driver::run(&exp).expect("run");
     trace
 }
 
+fn assert_traces_bitwise(
+    a: &fadl::metrics::Trace,
+    b: &fadl::metrics::Trace,
+    label: &str,
+) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        // same worker code + same reduction schedule ⇒ bitwise equal
+        assert_eq!(
+            ra.f.to_bits(),
+            rb.f.to_bits(),
+            "{label} iter {}: {} vs {}",
+            ra.iter,
+            ra.f,
+            rb.f
+        );
+        // NaN for the dual methods, identical bits either way
+        assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{label}");
+        // the simulated clock must be transport- and plane-independent
+        assert_eq!(ra.comm_passes, rb.comm_passes, "{label}");
+        assert_eq!(ra.sim_secs, rb.sim_secs, "{label}");
+    }
+}
+
 #[test]
-fn tcp_training_matches_inproc_bitwise() {
+fn tcp_training_matches_inproc_bitwise_on_both_planes() {
     for topology in [Topology::Tree, Topology::Ring] {
-        let inproc = run_with(&Config {
-            transport: "inproc".into(),
-            topology,
-            ..base_cfg()
-        });
-        let tcp = run_with(&Config {
-            transport: "tcp".into(),
-            topology,
-            ..base_cfg()
-        });
-        assert_eq!(inproc.records.len(), tcp.records.len(), "{topology:?}");
-        for (a, b) in inproc.records.iter().zip(&tcp.records) {
-            // same worker code + same reduction schedule ⇒ bitwise equal
-            assert_eq!(
-                a.f.to_bits(),
-                b.f.to_bits(),
-                "{topology:?} iter {}: {} vs {}",
-                a.iter,
-                a.f,
-                b.f
-            );
-            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
-            // the simulated clock must be transport-independent
-            assert_eq!(a.comm_passes, b.comm_passes);
-            assert_eq!(a.sim_secs, b.sim_secs);
-        }
-        // measured columns: real bytes moved over TCP, none in-process
-        let last_tcp = tcp.records.last().unwrap();
+        let base = Config { topology, ..base_cfg() };
+        let inproc = run_with(&Config { transport: "inproc".into(), ..base.clone() });
+        let star = run_with(&tcp_cfg(&base, DataPlane::Star));
+        let p2p = run_with(&tcp_cfg(&base, DataPlane::P2p));
+        assert_traces_bitwise(&inproc, &star, &format!("{topology:?} star"));
+        assert_traces_bitwise(&inproc, &p2p, &format!("{topology:?} p2p"));
+        // measured columns: star moves control bytes only; p2p moves
+        // real mesh bytes; in-process moves nothing
         let last_in = inproc.records.last().unwrap();
-        assert!(last_tcp.net_bytes > 0.0, "tcp moved no bytes?");
+        let last_star = star.records.last().unwrap();
+        let last_p2p = p2p.records.last().unwrap();
         assert_eq!(last_in.net_bytes, 0.0);
-        assert!(last_tcp.meas_phase_secs > 0.0);
+        assert!(last_star.net_bytes > 0.0, "star moved no bytes?");
+        assert_eq!(last_star.net_data_bytes, 0.0, "star has no mesh");
+        assert!(last_p2p.net_data_bytes > 0.0, "p2p mesh moved no bytes?");
+        assert!(last_star.meas_phase_secs > 0.0);
     }
 }
 
 #[test]
 fn tcp_without_warmstart_also_matches() {
-    let mut cfg = base_cfg();
-    cfg.warm_start = false;
-    cfg.max_outer = 3;
-    let inproc = run_with(&Config { transport: "inproc".into(), ..cfg.clone() });
-    let tcp = run_with(&Config { transport: "tcp".into(), ..cfg });
-    assert_eq!(
-        inproc.final_f().to_bits(),
-        tcp.final_f().to_bits(),
-        "{} vs {}",
-        inproc.final_f(),
-        tcp.final_f()
-    );
+    let mut base = base_cfg();
+    base.warm_start = false;
+    base.max_outer = 3;
+    let inproc = run_with(&Config { transport: "inproc".into(), ..base.clone() });
+    for plane in DataPlane::all() {
+        let tcp = run_with(&tcp_cfg(&base, plane));
+        assert_eq!(
+            inproc.final_f().to_bits(),
+            tcp.final_f().to_bits(),
+            "{}: {} vs {}",
+            plane.name(),
+            inproc.final_f(),
+            tcp.final_f()
+        );
+    }
 }
 
 #[test]
-fn every_method_matches_inproc_bitwise_over_tcp() {
-    // the full-vocabulary guarantee: every baseline — not just fadl* —
-    // trains over real worker processes and reproduces the in-process
-    // trajectory bit for bit (the CI parity matrix enforces the same
-    // property through net_smoke at P = 4)
+fn every_method_matches_inproc_bitwise_on_both_planes() {
+    // the full guarantee: every baseline — not just fadl* — trains over
+    // real worker processes and reproduces the in-process trajectory
+    // bit for bit on tree AND ring, wherever the reduction bytes move
+    // (the CI parity matrix enforces the same property through
+    // net_smoke at P = 4)
     for method in [
         "fadl",
         "fadl_feature",
@@ -96,38 +119,98 @@ fn every_method_matches_inproc_bitwise_over_tcp() {
         "cocoa",
         "ssz",
     ] {
-        let cfg = Config {
-            method: method.into(),
-            max_outer: 3,
-            ..base_cfg()
-        };
-        let inproc = run_with(&Config {
-            transport: "inproc".into(),
-            ..cfg.clone()
-        });
-        let tcp = run_with(&Config {
-            transport: "tcp".into(),
-            ..cfg
-        });
-        assert_eq!(inproc.records.len(), tcp.records.len(), "{method}");
-        for (a, b) in inproc.records.iter().zip(&tcp.records) {
-            assert_eq!(
-                a.f.to_bits(),
-                b.f.to_bits(),
-                "{method} iter {}: {} vs {}",
-                a.iter,
-                a.f,
-                b.f
-            );
-            // NaN for the dual methods, identical bits either way
-            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "{method}");
-            // the simulated clock must be transport-independent
-            assert_eq!(a.comm_passes, b.comm_passes, "{method}");
-            assert_eq!(a.sim_secs, b.sim_secs, "{method}");
+        for topology in [Topology::Tree, Topology::Ring] {
+            let base = Config {
+                method: method.into(),
+                topology,
+                max_outer: 3,
+                ..base_cfg()
+            };
+            let inproc =
+                run_with(&Config { transport: "inproc".into(), ..base.clone() });
+            for plane in DataPlane::all() {
+                let label = format!("{method} {topology:?} {}", plane.name());
+                let tcp = run_with(&tcp_cfg(&base, plane));
+                assert_traces_bitwise(&inproc, &tcp, &label);
+                assert!(
+                    tcp.records.last().unwrap().net_bytes > 0.0,
+                    "{label}: tcp moved no bytes?"
+                );
+            }
         }
+    }
+}
+
+/// The acceptance assertion on [`fadl::net::Measured`]: under the p2p
+/// data plane the driver executes no reduction gather — its
+/// reduce-attributed traffic is zero and its total per-phase receive
+/// traffic is O(one reduced vector + headers), while the P part
+/// vectors move worker ⇄ worker (exactly the schedule's frame bytes).
+/// Under star the same phase gathers all P part vectors through the
+/// driver.
+#[test]
+fn p2p_driver_reduce_traffic_is_control_only() {
+    let nodes = 4;
+    for topology in [Topology::Tree, Topology::Ring] {
+        let base = Config { nodes, topology, ..base_cfg() };
+        let mut grads = Vec::new();
+        for plane in DataPlane::all() {
+            let cfg = tcp_cfg(&base, plane);
+            let (train, _) = driver::build_train_split(&cfg).expect("split");
+            let cluster =
+                driver::build_cluster(&cfg, &train, cfg.nodes, cfg.cost).expect("cluster");
+            let m = cluster.m();
+            let w = vec![0.01; m];
+            cluster.reset_phase();
+            let before = cluster.measured();
+            let (_, grad) = cluster.grad_phase(Loss::SquaredHinge, &w);
+            let after = cluster.measured();
+            let rx = after.bytes_rx - before.bytes_rx;
+            let reduce = after.reduce_bytes - before.reduce_bytes;
+            let data = after.data_bytes - before.data_bytes;
+            let label = format!("{topology:?} {}", plane.name());
+            match plane {
+                DataPlane::Star => {
+                    // the driver gathered all P part vectors
+                    assert_eq!(reduce, 8 * (m * nodes) as u64, "{label}");
+                    assert_eq!(data, 0, "{label}: star has no mesh");
+                    assert!(rx > 8 * (m * nodes) as u64, "{label}");
+                }
+                DataPlane::P2p => {
+                    // no m-vector gather transits the driver …
+                    assert_eq!(reduce, 0, "{label}");
+                    // … the driver receives one reduced vector (rank
+                    // 0's reply) plus per-rank headers, not P vectors
+                    assert!(rx < 8 * 2 * m as u64 + 1024, "{label}: rx = {rx}");
+                    // … and the mesh moved exactly the schedule's frames
+                    let plan = topology.plan(nodes, m);
+                    let expected: u64 = plan
+                        .rank_schedules()
+                        .iter()
+                        .map(|s| {
+                            let sends = s
+                                .ops
+                                .iter()
+                                .filter(|op| {
+                                    matches!(
+                                        op,
+                                        fadl::net::topology::MeshOp::Send { .. }
+                                    )
+                                })
+                                .count() as u64;
+                            8 * s.send_elems() as u64 + 4 * sends
+                        })
+                        .sum();
+                    assert_eq!(data, expected, "{label}");
+                }
+            }
+            grads.push(grad);
+        }
+        // and the reduced gradient itself is bitwise identical
+        let (a, b) = (&grads[0], &grads[1]);
         assert!(
-            tcp.records.last().unwrap().net_bytes > 0.0,
-            "{method}: tcp moved no bytes?"
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{topology:?}: star and p2p reduced gradients diverged"
         );
     }
 }

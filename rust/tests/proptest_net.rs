@@ -224,6 +224,28 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 v: rng.normal(),
                 units: 0.0,
             }),
+            Msg::Mesh {
+                addrs: (0..rng.below(9))
+                    .map(|r| format!("127.0.0.1:{}", 9000 + r))
+                    .collect(),
+            },
+            Msg::Reduce {
+                cmd: Command::Grad {
+                    loss: Loss::SquaredHinge,
+                    w: draw_vec(&mut rng, len),
+                },
+                topology: Topology::all()[rng.below(3)],
+            },
+            Msg::Reduced {
+                reply: fadl::net::Reply::Grad {
+                    loss: rng.normal(),
+                    grad: draw_vec(&mut rng, len),
+                    units: rng.normal().abs(),
+                },
+                data_tx: rng.next_u64(),
+                data_rx: rng.next_u64(),
+                secs: rng.normal().abs(),
+            },
         ];
         for msg in msgs {
             let back = wire_roundtrip(&msg);
@@ -266,6 +288,57 @@ fn max_length_payload_frames_roundtrip() {
         panic!("wrong variant");
     };
     assert_eq!(back, subsets);
+}
+
+#[test]
+fn p2p_schedules_match_plan_reduce_bitwise() {
+    // the compiled per-rank send/recv/accumulate schedules, executed
+    // over simulated FIFO connections, must land every rank on exactly
+    // the bits the flat plan execution produces — for every topology,
+    // including m < P (empty ring chunks) and m not divisible by P
+    let gen = Pair(UsizeRange(1, 8), UsizeRange(1, 40));
+    Runner::new(32, 0x9E9).run(&gen, |&(p, m)| {
+        let parts = draw_parts(p, m, (53 * p + m) as u64);
+        for topo in Topology::all() {
+            let plan = topo.plan(p, m);
+            let want = topology::reduce(parts.clone(), &plan);
+            let bufs = topology::simulate_schedules(&parts, &plan);
+            for (rank, buf) in bufs.iter().enumerate() {
+                if bits(buf) != bits(&want) {
+                    return Err(format!(
+                        "{topo:?} p={p} m={m}: rank {rank} diverged from the plan"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p2p_schedule_edge_cases() {
+    // m < P: ring chunks with lo == hi must vanish from the schedules
+    for (p, m) in [(6usize, 3usize), (4, 1), (5, 7), (7, 20)] {
+        for topo in Topology::all() {
+            let parts = draw_parts(p, m, (7 * p + m) as u64);
+            let plan = topo.plan(p, m);
+            let want = topology::reduce(parts.clone(), &plan);
+            for buf in topology::simulate_schedules(&parts, &plan) {
+                assert_eq!(bits(&buf), bits(&want), "{topo:?} p={p} m={m}");
+            }
+        }
+    }
+    // P = 1: the schedule must degenerate to a no-op
+    for topo in Topology::all() {
+        let scheds = topo.plan(1, 9).rank_schedules();
+        assert_eq!(scheds.len(), 1);
+        assert!(scheds[0].ops.is_empty(), "{topo:?}: {:?}", scheds[0].ops);
+        let parts = vec![vec![1.25, -3.5, 0.0]];
+        assert_eq!(
+            topology::simulate_schedules(&parts, &topo.plan(1, 3))[0],
+            parts[0]
+        );
+    }
 }
 
 #[test]
