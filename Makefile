@@ -6,7 +6,7 @@ PARITY_METHODS ?= fadl fadl_feature tera tera_lbfgs admm cocoa ssz
 PARITY_PLANES  ?= star p2p
 PARITY_TOPOS   ?= tree ring
 
-.PHONY: check fmt clippy test build smoke parity bench artifacts
+.PHONY: check fmt clippy test build smoke parity bytes bench artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -44,6 +44,23 @@ parity:
 	    done; \
 	  done; \
 	done
+
+## per-method driver/mesh byte table: every method runs under the p2p
+## data plane with the scalar-driver assertion on (any m-sized payload
+## over a driver link after round 0 fails) and writes its per-iteration
+## byte CSV to bytes-out/ — the local twin of the CI parity artifacts
+bytes:
+	$(CARGO) build --release --bin worker --bin net_smoke
+	@for m in $(PARITY_METHODS); do \
+	  for topo in $(PARITY_TOPOS); do \
+	    echo "== bytes: $$m / p2p / $$topo =="; \
+	    $(CARGO) run --release --bin net_smoke -- \
+	      --method $$m --nodes 4 --max-outer 8 \
+	      --data-plane p2p --topology $$topo \
+	      --assert-scalar-driver --bytes-csv bytes-out/$$m-$$topo.csv || exit 1; \
+	  done; \
+	done
+	@echo "byte CSVs in bytes-out/"
 
 bench:
 	$(CARGO) bench --bench hotpath

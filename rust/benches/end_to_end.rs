@@ -57,32 +57,39 @@ fn main() {
     println!("{}", s.report());
     all.push(s);
 
-    // transport data planes: one FADL outer iteration over P = 4 real
-    // worker processes, star (vectors gathered through the driver) vs
-    // p2p (reductions on the worker ⇄ worker mesh) — the wall-clock
-    // cost of where the bytes physically move
-    for plane in fadl::net::DataPlane::all() {
-        let c = Config {
-            method: "fadl".into(),
-            max_outer: 1,
-            nodes: 4,
-            transport: "tcp".into(),
-            data_plane: plane,
-            worker_bin: env!("CARGO_BIN_EXE_worker").to_string(),
-            quick_n: 1000,
-            quick_m: 60,
-            quick_nnz: 10,
-            ..Config::default()
-        };
-        // spawn + handshake once; each sample re-trains over the same
-        // worker processes (Reset clears their session state), so the
-        // timing isolates the per-iteration data movement
-        let exp = driver::prepare(&c).expect("prepare");
-        let s = bench.run(&format!("tcp-{}/fadl outer-iter P=4", plane.name()), || {
-            black_box(driver::run(&exp).expect("run"));
-        });
-        println!("{}", s.report());
-        all.push(s);
+    // transport data planes: one outer iteration over P = 4 real
+    // worker processes, star (parts gathered through the driver, sums
+    // broadcast back) vs p2p (combines on the worker ⇄ worker mesh) —
+    // measured where each method's per-iteration traffic actually
+    // lives: fadl's gradient+direction combines, admm's consensus
+    // combine, cocoa's Δw mix
+    for method in ["fadl", "admm", "cocoa"] {
+        for plane in fadl::net::DataPlane::all() {
+            let c = Config {
+                method: method.into(),
+                max_outer: 1,
+                nodes: 4,
+                transport: "tcp".into(),
+                data_plane: plane,
+                worker_bin: env!("CARGO_BIN_EXE_worker").to_string(),
+                quick_n: 1000,
+                quick_m: 60,
+                quick_nnz: 10,
+                ..Config::default()
+            };
+            // spawn + handshake once; each sample re-trains over the
+            // same worker processes (Reset clears their session state),
+            // so the timing isolates the per-iteration data movement
+            let exp = driver::prepare(&c).expect("prepare");
+            let s = bench.run(
+                &format!("tcp-{}/{method} outer-iter P=4", plane.name()),
+                || {
+                    black_box(driver::run(&exp).expect("run"));
+                },
+            );
+            println!("{}", s.report());
+            all.push(s);
+        }
     }
 
     // dataset generation (the synthetic substrate itself)

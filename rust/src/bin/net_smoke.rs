@@ -42,6 +42,16 @@ fn main() {
     let cli = config::experiment_cli(
         "net_smoke",
         "method×transport parity check (inproc vs tcp; --transport is ignored)",
+    )
+    .switch(
+        "assert-scalar-driver",
+        "fail if any m-sized payload crosses a driver link after round 0 \
+         under p2p (disables AUPRC instrumentation: test fraction 0)",
+    )
+    .flag(
+        "bytes-csv",
+        "",
+        "write the tcp run's per-iteration byte columns here (CSV)",
     );
     let a = match cli.parse_from(raw) {
         Ok(a) => a,
@@ -59,7 +69,17 @@ fn main() {
         max_outer: 12,
         ..Config::default()
     };
-    let base = Config::from_cli(smoke_defaults, &a).unwrap_or_else(|e| die(&e));
+    let mut base = Config::from_cli(smoke_defaults, &a).unwrap_or_else(|e| die(&e));
+    let assert_scalar = a.on("assert-scalar-driver");
+    if assert_scalar {
+        if base.data_plane != fadl::net::DataPlane::P2p {
+            die("--assert-scalar-driver requires --data-plane p2p");
+        }
+        // AUPRC is driver-side instrumentation: scoring the held-out set
+        // fetches the iterate each round. Disable it so the assertion
+        // measures the data path, not the instrumentation.
+        base.test_fraction = 0.0;
+    }
 
     let (f_in, trace_in) = run_transport(&base, "inproc");
     let (f_tcp, trace_tcp) = run_transport(&base, "tcp");
@@ -95,12 +115,54 @@ fn main() {
         .last()
         .map(|r| r.net_data_bytes)
         .unwrap_or(0.0);
+    let driver_data = trace_tcp
+        .records
+        .last()
+        .map(|r| r.driver_data_bytes)
+        .unwrap_or(0.0);
     println!(
-        "tcp control bytes: {:.1} KiB   p2p mesh bytes: {:.1} KiB",
+        "tcp control bytes: {:.1} KiB   p2p mesh bytes: {:.1} KiB   \
+         driver m-vector bytes: {:.0} B",
         moved / 1024.0,
-        mesh / 1024.0
+        mesh / 1024.0,
+        driver_data
     );
-    if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 {
+
+    if let Some(path) = bytes_csv(&a) {
+        write_bytes_csv(&path, &base, &trace_tcp);
+    }
+
+    // --assert-scalar-driver: after round 0, the cumulative m-sized
+    // driver payload must not grow — the driver carries only commands,
+    // specs, and scalars on the p2p plane
+    let scalar_ok = if assert_scalar {
+        let base_bytes = trace_tcp
+            .records
+            .first()
+            .map(|r| r.driver_data_bytes)
+            .unwrap_or(0.0);
+        let violations: Vec<(usize, f64)> = trace_tcp
+            .records
+            .iter()
+            .filter(|r| r.driver_data_bytes > base_bytes)
+            .map(|r| (r.iter, r.driver_data_bytes - base_bytes))
+            .collect();
+        println!("\n== scalar-driver report ({}) ==", base.method);
+        println!(
+            "round-0 driver m-vector bytes: {base_bytes:.0}   \
+             after round 0: {}",
+            if violations.is_empty() {
+                "0 (scalar-only driver)".to_string()
+            } else {
+                format!("VIOLATED at {} records: {violations:?}", violations.len())
+            }
+        );
+        violations.is_empty()
+    } else {
+        true
+    };
+
+    if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 && scalar_ok {
         println!(
             "net_smoke PASSED ({} over inproc vs tcp-{})",
             base.method,
@@ -113,6 +175,40 @@ fn main() {
             base.data_plane.name()
         );
         std::process::exit(1);
+    }
+}
+
+fn bytes_csv(a: &fadl::util::cli::Args) -> Option<String> {
+    let path = a.get("bytes-csv");
+    (!path.is_empty()).then(|| path.to_string())
+}
+
+/// Per-iteration byte columns of the tcp run (`make bytes` and the CI
+/// parity artifacts): control vs mesh vs m-sized driver payloads.
+fn write_bytes_csv(path: &str, cfg: &Config, trace: &Trace) {
+    let mut out = String::from(
+        "method,plane,topology,iter,comm_passes,net_bytes,net_data_bytes,\
+         driver_data_bytes\n",
+    );
+    for r in &trace.records {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            cfg.method,
+            cfg.data_plane.name(),
+            cfg.topology.name(),
+            r.iter,
+            r.comm_passes,
+            r.net_bytes,
+            r.net_data_bytes,
+            r.driver_data_bytes
+        ));
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    match std::fs::write(path, out) {
+        Ok(()) => println!("byte report written to {path}"),
+        Err(e) => eprintln!("net_smoke: write {path}: {e}"),
     }
 }
 
@@ -156,6 +252,7 @@ fn print_trace(trace: &Trace) {
                 format!("{:.5}", r.meas_reduce_secs),
                 format!("{:.0}", r.net_bytes),
                 format!("{:.0}", r.net_data_bytes),
+                format!("{:.0}", r.driver_data_bytes),
                 format!("{:.8}", r.f),
                 format!("{:.2e}", r.grad_norm),
             ]
@@ -173,6 +270,7 @@ fn print_trace(trace: &Trace) {
                 "meas_reduce",
                 "net_bytes",
                 "net_data",
+                "drv_data",
                 "f",
                 "|g|",
             ],

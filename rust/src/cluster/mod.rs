@@ -27,8 +27,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::net::{
-    self, Command, DualUpdateSpec, InProc, InnerSolveSpec, LocalSolveSpec, Measured,
-    Reply, Topology, Transport,
+    self, Command, CombineSpec, DualUpdateSpec, InProc, InnerSolveSpec, LocalSolveSpec,
+    Measured, Reply, Topology, Transport, VecOp, VecRef,
 };
 use crate::objective::ShardCompute;
 
@@ -82,6 +82,13 @@ impl Cluster {
     /// Total nonzeros across shards (the `nz` of eq. (21)).
     pub fn total_nnz(&self) -> usize {
         self.transport.total_nnz()
+    }
+
+    /// Per-rank example counts n_p (static shard sizes, known to the
+    /// driver without a phase — used to build example-weighted combine
+    /// specs).
+    pub fn rank_examples(&self) -> Vec<usize> {
+        self.transport.rank_examples()
     }
 
     /// The reduction topology in effect.
@@ -260,29 +267,73 @@ impl Cluster {
         let _ = self.phase(&Command::Reset);
     }
 
-    /// Execute a fused phase + AllReduce on the transport (the vector
-    /// collectives of the hot loops). The transport owns where the
-    /// reduction physically executes — driver-side for in-process and
-    /// tcp-star, on the worker mesh for tcp-p2p — while the topology
-    /// plan fixes the summation order, so the result is bitwise
-    /// identical everywhere. Panics on transport failure.
-    fn reduce_phase(&self, cmd: &Command) -> net::ReduceOutput {
+    /// Execute a fused phase + combine on the transport (every m-vector
+    /// collective goes through here). The transport owns where the
+    /// bytes physically move — no wire for in-process, a driver gather
+    /// + sum broadcast for tcp-star, the worker mesh for tcp-p2p —
+    /// while the topology plan fixes the summation order and the
+    /// rank-side combine arithmetic is shared, so the result (and the
+    /// replicated register caches) is bitwise identical everywhere.
+    /// Panics on transport failure.
+    fn combine(&self, cmd: &Command, spec: &CombineSpec) -> net::CombineOutput {
         let out = self
             .transport
-            .reduce_phase(cmd, self.topology, self.threaded)
+            .combine_phase(cmd, self.topology, spec, self.threaded)
             .unwrap_or_else(|e| {
-                panic!("{} transport reduce failed: {e}", self.transport.name())
+                panic!("{} transport combine failed: {e}", self.transport.name())
             });
         self.add_measured(&out.stats);
         out
     }
 
-    /// Distributed gradient pass at replicated w (Algorithm 2 step 1):
-    /// every worker computes (Σ c·l, ∇L_p) and caches its margins
-    /// z_p = X_p·w and ∇L_p; the gradients are AllReduced. Charges the
-    /// compute phase plus one m-vector pass. Returns (Σ loss_p, Σ ∇L_p).
-    pub fn grad_phase(&self, loss: crate::loss::Loss, w: &[f64]) -> (f64, Vec<f64>) {
-        let out = self.reduce_phase(&Command::Grad { loss, w: w.to_vec() });
+    /// Free replicated-register bookkeeping: apply `ops` on every rank
+    /// and return the requested replicated dot products. Replaces
+    /// driver-side vector arithmetic the seed never charged, so it is
+    /// free on the simulated clock.
+    pub fn vec_phase(&self, ops: &[VecOp], dots: &[(u32, u32)]) -> Vec<f64> {
+        let replies = self.phase(&Command::VecOps {
+            ops: ops.to_vec(),
+            dots: dots.to_vec(),
+        });
+        match replies.into_iter().next() {
+            Some(Reply::Dots { vals, .. }) => vals,
+            _ => panic!("vec phase: unexpected reply"),
+        }
+    }
+
+    /// Load an explicit vector into a register on every rank (round-0
+    /// initialization — the one place the driver ships an m-vector
+    /// down). Free on the simulated clock, like the replicated-state
+    /// w0 it replaces.
+    pub fn set_reg_phase(&self, reg: u32, v: &[f64]) {
+        let _ = self.phase(&Command::SetReg { reg, v: v.to_vec() });
+    }
+
+    /// Fetch a register's replicated value (rank 0's copy) — end-of-run
+    /// result retrieval and AUPRC instrumentation. Free on the
+    /// simulated clock (the value is already replicated; nothing in the
+    /// simulated system moves).
+    pub fn fetch_reg(&self, reg: u32) -> Vec<f64> {
+        let replies = self.phase(&Command::FetchReg { reg });
+        match replies.into_iter().next() {
+            Some(Reply::Vector { v, .. }) => v,
+            _ => panic!("fetch reg: unexpected reply"),
+        }
+    }
+
+    /// Distributed gradient pass at a replicated w (Algorithm 2 step
+    /// 1): every worker computes (Σ c·l, ∇L_p) and caches its margins
+    /// z_p = X_p·w and ∇L_p; the gradients are combined per `spec`
+    /// (typically a plain sum stored into the gradient register).
+    /// Charges the compute phase plus one m-vector pass. Returns
+    /// (Σ loss_p, requested dots).
+    pub fn grad_combine_phase(
+        &self,
+        loss: crate::loss::Loss,
+        w: VecRef,
+        spec: &CombineSpec,
+    ) -> (f64, Vec<f64>) {
+        let out = self.combine(&Command::Grad { loss, w }, spec);
         let mut costs = Vec::with_capacity(out.replies.len());
         let mut loss_sum = 0.0;
         for reply in &out.replies {
@@ -293,39 +344,55 @@ impl Cluster {
             loss_sum += lv; // piggybacks on the same pass
         }
         let comm_units =
-            self.cost.allreduce_units_topo(out.reduced.len(), self.p(), self.topology);
+            self.cost.allreduce_units_topo(self.m(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
         delta.comm_pass(comm_units);
         self.charge(delta);
-        (loss_sum, out.reduced)
+        (loss_sum, out.dots)
     }
 
-    /// Run the inner optimizer on every worker's local approximation
-    /// (Algorithm 2 steps 3–7). Pure computation (the spec's vectors
-    /// are replicated state). Returns per-rank (w_p, n_p).
-    pub fn inner_solve_phase(&self, spec: &InnerSolveSpec) -> Vec<(Vec<f64>, usize)> {
-        let replies = self.phase(&Command::InnerSolve(spec.clone()));
-        let mut costs = Vec::with_capacity(replies.len());
-        let mut out = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let Reply::Solve { w, n, units } = reply else {
-                panic!("inner solve phase: unexpected reply");
+    /// Fused inner solve + direction combine (Algorithm 2 steps 3–8):
+    /// every worker runs k̂ inner iterations on f̂_p, then the directions
+    /// are combined per `spec` (the convex combination, cached as the
+    /// replicated direction register). Charges the compute phase plus
+    /// the combine's m-vector pass — identical to the unfused
+    /// solve-then-AllReduce it replaces. Returns (per-rank n_p, dots).
+    pub fn inner_solve_combine_phase(
+        &self,
+        spec: &InnerSolveSpec,
+        combine: &CombineSpec,
+    ) -> (Vec<usize>, Vec<f64>) {
+        let out = self.combine(&Command::InnerSolve(spec.clone()), combine);
+        self.charge_solve_combine(&out)
+    }
+
+    /// Shared accounting for the fused solve + combine phases: compute
+    /// units from the replies, one m-vector comm pass for the combine.
+    fn charge_solve_combine(&self, out: &net::CombineOutput) -> (Vec<usize>, Vec<f64>) {
+        let mut costs = Vec::with_capacity(out.replies.len());
+        let mut ns = Vec::with_capacity(out.replies.len());
+        for reply in &out.replies {
+            let Reply::Solve { n, units, .. } = reply else {
+                panic!("solve combine phase: unexpected reply");
             };
-            costs.push(units);
-            out.push((w, n));
+            costs.push(*units);
+            ns.push(*n);
         }
+        let comm_units =
+            self.cost.allreduce_units_topo(self.m(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
+        delta.comm_pass(comm_units);
         self.charge(delta);
-        out
+        (ns, out.dots.clone())
     }
 
     /// Cache direction margins e_p = X_p·d on every worker (Algorithm 2
-    /// step 9): d is replicated after its AllReduce, so this is pure
-    /// computation.
-    pub fn dirs_phase(&self, d: &[f64]) {
-        let replies = self.phase(&Command::Dirs { d: d.to_vec() });
+    /// step 9): d is the replicated direction register after its
+    /// combine, so this is pure computation with zero payload.
+    pub fn dirs_phase(&self, d: VecRef) {
+        let replies = self.phase(&Command::Dirs { d });
         let costs: Vec<f64> = replies.iter().map(Reply::units).collect();
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
@@ -354,12 +421,18 @@ impl Cluster {
     }
 
     /// Distributed Hessian-vector product at the margins cached by the
-    /// last [`Cluster::grad_phase`] (TERA-TRON's CG hot loop): every
-    /// worker computes Xᵀ(D(X s)); the parts are AllReduced on the
+    /// last gradient phase (TERA-TRON's CG hot loop): every worker
+    /// computes Xᵀ(D(X s)); the parts are combined per `spec` on the
     /// transport's data plane. Charges the compute phase plus one
     /// m-vector pass — identical to the legacy [`Cluster::hvp_pass`].
-    pub fn hvp_phase(&self, loss: crate::loss::Loss, s: &[f64]) -> Vec<f64> {
-        let out = self.reduce_phase(&Command::Hvp { loss, s: s.to_vec() });
+    /// Returns the requested dots.
+    pub fn hvp_combine_phase(
+        &self,
+        loss: crate::loss::Loss,
+        s: VecRef,
+        spec: &CombineSpec,
+    ) -> Vec<f64> {
+        let out = self.combine(&Command::Hvp { loss, s }, spec);
         let mut costs = Vec::with_capacity(out.replies.len());
         for reply in &out.replies {
             let Reply::Vector { units, .. } = reply else {
@@ -368,19 +441,19 @@ impl Cluster {
             costs.push(*units);
         }
         let comm_units =
-            self.cost.allreduce_units_topo(out.reduced.len(), self.p(), self.topology);
+            self.cost.allreduce_units_topo(self.m(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
         delta.comm_pass(comm_units);
         self.charge(delta);
-        out.reduced
+        out.dots
     }
 
     /// Distributed data-loss evaluation at a replicated w (one pass,
     /// scalar aggregation only); cached margins are left untouched.
     /// Identical charges to the legacy [`Cluster::loss_pass`].
-    pub fn loss_phase(&self, loss: crate::loss::Loss, w: &[f64]) -> f64 {
-        let replies = self.phase(&Command::LossEval { loss, w: w.to_vec() });
+    pub fn loss_phase(&self, loss: crate::loss::Loss, w: VecRef) -> f64 {
+        let replies = self.phase(&Command::LossEval { loss, w });
         let mut costs = Vec::with_capacity(replies.len());
         let mut sum = 0.0;
         for reply in replies {
@@ -397,30 +470,25 @@ impl Cluster {
         sum
     }
 
-    /// Node-local subproblem solve (ADMM prox / CoCoA SDCA / SSZ prox /
-    /// feature-partitioned FADL). Pure computation; returns per-rank
-    /// (vector, n_p) in rank order.
-    pub fn local_solve_phase(&self, spec: &LocalSolveSpec) -> Vec<(Vec<f64>, usize)> {
-        let replies = self.phase(&Command::LocalSolve(spec.clone()));
-        let mut costs = Vec::with_capacity(replies.len());
-        let mut out = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let Reply::Solve { w, n, units } = reply else {
-                panic!("local solve phase: unexpected reply");
-            };
-            costs.push(units);
-            out.push((w, n));
-        }
-        let mut delta = SimClock::default();
-        delta.compute_phase(&costs);
-        self.charge(delta);
-        out
+    /// Fused node-local subproblem solve + combine (ADMM prox →
+    /// consensus, CoCoA SDCA → 1/P mix, SSZ prox → average,
+    /// feature-FADL → coverage direction). Charges the compute phase
+    /// plus the combine's m-vector pass — identical to the unfused
+    /// solve-then-AllReduce it replaces. Returns (per-rank n_p, dots).
+    pub fn local_solve_combine_phase(
+        &self,
+        spec: &LocalSolveSpec,
+        combine: &CombineSpec,
+    ) -> (Vec<usize>, Vec<f64>) {
+        let out = self.combine(&Command::LocalSolve(spec.clone()), combine);
+        self.charge_solve_combine(&out)
     }
 
-    /// Per-method node-local state update (e.g. ADMM's scaled-dual
-    /// step); returns one scalar per rank. Free in the simulated cost
-    /// model — it replaces O(m) driver-side bookkeeping the seed never
-    /// charged (residual scalar rounds are charged by the caller).
+    /// Per-method node-local state update (e.g. ADMM's scaled-dual step
+    /// against the worker-cached consensus z); returns one scalar per
+    /// rank. Free in the simulated cost model — it replaces O(m)
+    /// driver-side bookkeeping the seed never charged (residual scalar
+    /// rounds are charged by the caller).
     pub fn dual_update_phase(&self, spec: &DualUpdateSpec) -> Vec<f64> {
         let replies = self.phase(&Command::DualUpdate(spec.clone()));
         replies
@@ -434,35 +502,39 @@ impl Cluster {
             .collect()
     }
 
-    /// §4.3 SGD warm start on every worker's local objective. Returns
-    /// per-rank (local weights, per-feature counts). Charges the local
-    /// SGD passes; the caller aggregates via [`Cluster::allreduce`].
-    pub fn warm_phase(
+    /// §4.3 SGD warm start fused with its per-feature weighted-average
+    /// combine: every worker runs the local SGD, the (weighted, counts)
+    /// pair is plan-reduced and divided rank-side, and the result lands
+    /// replicated in the spec's store register. Charges the local SGD
+    /// passes plus two m-vector passes — exactly the legacy
+    /// two-AllReduce path. Returns the requested dots.
+    pub fn warm_combine_phase(
         &self,
         loss: crate::loss::Loss,
         lambda: f64,
         epochs: usize,
         seed: u64,
-    ) -> Vec<(Vec<f64>, Vec<f64>)> {
-        let replies = self.phase(&Command::Warmstart {
-            loss,
-            lambda,
-            epochs: epochs as u32,
-            seed,
-        });
-        let mut costs = Vec::with_capacity(replies.len());
-        let mut out = Vec::with_capacity(replies.len());
-        for reply in replies {
-            let Reply::Warm { w, counts, units } = reply else {
+        combine: &CombineSpec,
+    ) -> Vec<f64> {
+        let out = self.combine(
+            &Command::Warmstart { loss, lambda, epochs: epochs as u32, seed },
+            combine,
+        );
+        let mut costs = Vec::with_capacity(out.replies.len());
+        for reply in &out.replies {
+            let Reply::Warm { units, .. } = reply else {
                 panic!("warm start phase: unexpected reply");
             };
-            costs.push(units);
-            out.push((w, counts));
+            costs.push(*units);
         }
+        let comm_units =
+            self.cost.allreduce_units_topo(self.m(), self.p(), self.topology);
         let mut delta = SimClock::default();
         delta.compute_phase(&costs);
+        delta.comm_pass(comm_units); // weighted sum
+        delta.comm_pass(comm_units); // counts
         self.charge(delta);
-        out
+        out.dots
     }
 
     // -----------------------------------------------------------------
@@ -476,7 +548,8 @@ impl Cluster {
     /// outer step), computes per-shard (loss, ∇L_p, z_p), AllReduces the
     /// gradient. Returns (Σ loss_p, Σ ∇L_p, per-worker margins,
     /// per-worker ∇L_p). In-process transport only (the margins cross
-    /// the driver boundary); FADL uses [`Cluster::grad_phase`] instead.
+    /// the driver boundary); the methods use
+    /// [`Cluster::grad_combine_phase`] instead.
     pub fn gradient_pass(
         &self,
         loss: crate::loss::Loss,
@@ -651,19 +724,47 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn grad_phase_matches_gradient_pass() {
-        // the named transport phase and the legacy composite op are the
-        // same computation — results and clock must agree exactly
+    fn grad_combine_matches_gradient_pass() {
+        // the fused combine phase and the legacy composite op are the
+        // same computation — results and clock must agree exactly (the
+        // fetch of the stored register is free instrumentation)
         let ds = synth::quick(80, 18, 6, 13);
         let mut rng = crate::util::rng::Pcg64::new(14);
         let w: Vec<f64> = (0..18).map(|_| 0.2 * rng.normal()).collect();
         let a = cluster_from(&ds, 3);
         let b = cluster_from(&ds, 3);
         let (loss_a, grad_a, _, _) = a.gradient_pass(Loss::Logistic, &w);
-        let (loss_b, grad_b) = b.grad_phase(Loss::Logistic, &w);
+        let (loss_b, dots) = b.grad_combine_phase(
+            Loss::Logistic,
+            VecRef::inline(&w),
+            &CombineSpec::sum_into(1).with_dots(&[(1, 1)]),
+        );
+        let grad_b = b.fetch_reg(1);
         assert_eq!(loss_a, loss_b);
         assert_eq!(grad_a, grad_b);
+        assert_eq!(dots[0], crate::linalg::dot(&grad_a, &grad_a));
         assert_eq!(a.clock(), b.clock());
+    }
+
+    #[test]
+    fn vec_phase_is_free_and_replicates() {
+        let c = make_cluster(40, 10, 3, 31);
+        c.set_reg_phase(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        let before = c.clock();
+        let dots = c.vec_phase(
+            &[
+                VecOp::Copy { dst: 1, src: 0 },
+                VecOp::Scale { dst: 1, a: 2.0 },
+                VecOp::Axpy { dst: 1, a: -1.0, src: 0 },
+            ],
+            &[(0, 1)],
+        );
+        assert_eq!(c.clock(), before, "register bookkeeping is free");
+        // r1 = 2·r0 − r0 = r0
+        let r0 = c.fetch_reg(0);
+        let r1 = c.fetch_reg(1);
+        assert_eq!(r0, r1);
+        assert_eq!(dots[0], crate::linalg::dot(&r0, &r0));
     }
 
     #[test]
@@ -710,16 +811,20 @@ pub(crate) mod tests {
 
         let phased = cluster_from(&ds, 4);
         phased.reset_phase();
-        let _ = phased.grad_phase(Loss::SquaredHinge, &w);
-        phased.dirs_phase(&d);
+        let _ = phased.grad_combine_phase(
+            Loss::SquaredHinge,
+            VecRef::inline(&w),
+            &CombineSpec::sum_into(0),
+        );
+        phased.dirs_phase(VecRef::inline(&d));
         let got = phased.linesearch_phase(Loss::SquaredHinge, 0.375);
         assert_eq!(want, got);
         assert_eq!(legacy.clock(), phased.clock());
     }
 
     #[test]
-    fn hvp_phase_matches_hvp_pass() {
-        // the named transport phase and the legacy composite op are the
+    fn hvp_combine_matches_hvp_pass() {
+        // the fused combine phase and the legacy composite op are the
         // same computation — results and clock must agree exactly
         let ds = synth::quick(70, 16, 6, 21);
         let mut rng = crate::util::rng::Pcg64::new(22);
@@ -730,9 +835,20 @@ pub(crate) mod tests {
         let want = legacy.hvp_pass(Loss::SquaredHinge, &margins, &s);
         let phased = cluster_from(&ds, 3);
         phased.reset_phase();
-        let _ = phased.grad_phase(Loss::SquaredHinge, &w);
-        let got = phased.hvp_phase(Loss::SquaredHinge, &s);
+        let _ = phased.grad_combine_phase(
+            Loss::SquaredHinge,
+            VecRef::inline(&w),
+            &CombineSpec::sum_into(0),
+        );
+        let _ = phased.hvp_combine_phase(
+            Loss::SquaredHinge,
+            VecRef::inline(&s),
+            &CombineSpec::sum_into(1),
+        );
+        let got = phased.fetch_reg(1);
         assert_eq!(want, got);
+        // one extra free grad-store; comm/compute charges match the
+        // legacy gradient_pass + hvp_pass sequence exactly
         assert_eq!(legacy.clock(), phased.clock());
     }
 
@@ -743,25 +859,40 @@ pub(crate) mod tests {
         let legacy = cluster_from(&ds, 4);
         let want = legacy.loss_pass(Loss::Logistic, &w);
         let phased = cluster_from(&ds, 4);
-        let got = phased.loss_phase(Loss::Logistic, &w);
+        let got = phased.loss_phase(Loss::Logistic, VecRef::inline(&w));
         assert_eq!(want, got);
         assert_eq!(legacy.clock(), phased.clock());
     }
 
     #[test]
-    fn dual_update_phase_is_free_on_the_sim_clock() {
+    fn admm_consensus_combine_then_free_dual_update() {
         let c = make_cluster(40, 10, 2, 24);
         let z = vec![0.1; 10];
-        let _ = c.local_solve_phase(&LocalSolveSpec::AdmmProx {
-            loss: Loss::SquaredHinge,
-            rho: 0.5,
-            local_iters: 2,
-            init: true,
-            u_scale: 1.0,
-            z: z.clone(),
-        });
+        c.set_reg_phase(0, &z);
+        let (ns, dots) = c.local_solve_combine_phase(
+            &LocalSolveSpec::AdmmProx {
+                loss: Loss::SquaredHinge,
+                rho: 0.5,
+                local_iters: 2,
+                init: true,
+                u_scale: 1.0,
+                z: VecRef::Reg(0),
+            },
+            &CombineSpec {
+                weights: Vec::new(),
+                kind: net::Combine::AdmmConsensus { rho: 0.5, lambda: 1e-2 },
+                store: Some(1),
+                dots: vec![(1, 1)],
+            },
+        );
+        assert_eq!(ns.len(), 2);
+        assert!(dots[0].is_finite());
+        // one m-vector combine pass was charged
+        assert_eq!(c.clock().comm_passes, 1.0);
+        // the consensus z is cached worker-side: the dual step needs no
+        // payload and is free on the simulated clock
         let before = c.clock();
-        let dists = c.dual_update_phase(&DualUpdateSpec::AdmmDual { z });
+        let dists = c.dual_update_phase(&DualUpdateSpec::AdmmDual);
         assert_eq!(dists.len(), 2);
         assert!(dists.iter().all(|d| d.is_finite()));
         assert_eq!(c.clock(), before);
@@ -784,11 +915,25 @@ pub(crate) mod tests {
     fn measured_clock_accumulates() {
         let c = make_cluster(60, 12, 4, 10);
         let w = vec![0.1; 12];
-        let _ = c.grad_phase(Loss::SquaredHinge, &w);
+        let _ = c.grad_combine_phase(
+            Loss::SquaredHinge,
+            VecRef::inline(&w),
+            &CombineSpec::sum_into(0),
+        );
         let meas = c.measured();
         assert!(meas.phase_secs > 0.0, "phase wall-clock recorded");
         // in-process transport moves no socket bytes
         assert_eq!(meas.bytes_total(), 0);
+        assert_eq!(meas.driver_data_bytes, 0);
+    }
+
+    #[test]
+    fn rank_examples_are_static_shard_sizes() {
+        let ds = synth::quick(50, 10, 4, 33);
+        let c = cluster_from(&ds, 3);
+        let ns = c.rank_examples();
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns.iter().sum::<usize>(), 50);
     }
 
     #[test]

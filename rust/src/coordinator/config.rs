@@ -236,6 +236,12 @@ impl Config {
         if let Some(v) = num(a, "seed")? {
             self.seed = v;
         }
+        if let Some(v) = num::<f64>(a, "test-fraction")? {
+            if !(0.0..1.0).contains(&v) {
+                return Err(format!("--test-fraction: {v} outside [0, 1)"));
+            }
+            self.test_fraction = v;
+        }
         if let Some(v) = num(a, "gamma")? {
             self.cost.gamma = v;
         }
@@ -282,6 +288,11 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
         .flag("m", "", "override quick-dataset features")
         .flag("row-nnz", "", "override quick-dataset nonzeros per row")
         .flag("seed", "", "override dataset/method seed")
+        .flag(
+            "test-fraction",
+            "",
+            "override the held-out fraction (0 disables AUPRC instrumentation)",
+        )
         .flag("gamma", "", "override comm/comp ratio γ")
         .flag("transport", "", "override transport: inproc | tcp")
         .flag("topology", "", "override AllReduce topology: flat | tree | ring")
@@ -430,6 +441,20 @@ json = "out/fig5.json"
         assert!(Config::from_cli(Config::default(), &a).is_err());
         let a = cli
             .parse_from(vec!["--data-plane".to_string(), "rdma".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
+    }
+
+    #[test]
+    fn test_fraction_override_parses_and_validates() {
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--test-fraction".to_string(), "0".to_string()])
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert_eq!(cfg.test_fraction, 0.0);
+        let a = cli
+            .parse_from(vec!["--test-fraction".to_string(), "1.5".to_string()])
             .unwrap();
         assert!(Config::from_cli(Config::default(), &a).is_err());
     }

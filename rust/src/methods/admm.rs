@@ -18,9 +18,14 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::linalg;
 use crate::metrics::Trace;
-use crate::net::{DualUpdateSpec, LocalSolveSpec};
+use crate::net::{Combine, CombineSpec, DualUpdateSpec, LocalSolveSpec, VecOp, VecRef};
+
+// replicated register map
+const R_Z0: u32 = 0; // the start point z⁰ (warm or w0) — probe restarts
+const R_Z: u32 = 1; // consensus iterate z
+const R_ZOLD: u32 = 2; // previous z (dual-residual bookkeeping)
+const R_DIFF: u32 = 3; // z − z_old scratch
 
 /// ρ selection policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,9 +71,10 @@ impl Trainer for Admm {
         }
     }
 
-    // the proximal solves and scaled-dual updates run worker-side
-    // through the LocalSolve/DualUpdate phases (the per-node (w_p, u_p)
-    // state lives in net::WorkerState), so ADMM runs over any transport
+    // the proximal solves, the consensus combine and the scaled-dual
+    // updates all run worker-side (the per-node (w_p, u_p) state lives
+    // in net::WorkerState, z in the replicated register file), so ADMM
+    // runs over any transport with a scalar-only driver
     fn train(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
@@ -77,18 +83,26 @@ impl Trainer for Admm {
         let wall = Instant::now();
         cluster.reset_phase();
 
-        let z0 = if self.warm_start {
-            common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
-        } else {
-            ctx.w0.clone()
-        };
+        common::init_iterate(
+            cluster,
+            obj,
+            &ctx.w0,
+            self.warm_start.then_some((self.warm_start_epochs, self.seed)),
+            R_Z0,
+        );
 
         // analytic ρ (Deng–Yin): √(σ_f · L_f) with σ = λ and L from a
         // power-iteration bound (charged to the clock)
         let rho0 = match self.rho_policy {
             RhoPolicy::Adap => obj.lambda.max(1e-6) * 10.0,
             RhoPolicy::Analytic | RhoPolicy::Search => {
-                let l_data = common::estimate_hessian_norm(cluster, obj, &z0, 10, self.seed);
+                let l_data = common::estimate_hessian_norm(
+                    cluster,
+                    obj,
+                    VecRef::Reg(R_Z0),
+                    10,
+                    self.seed,
+                );
                 (obj.lambda * (obj.lambda + l_data)).sqrt().max(1e-12)
             }
         };
@@ -101,8 +115,8 @@ impl Trainer for Admm {
                 let mut best = (f64::INFINITY, rho0);
                 for mult in [0.1, 0.3, 1.0, 3.0, 10.0] {
                     let probe_rho = rho0 * mult;
-                    let (f_end, _, _) =
-                        self.run_iters(ctx, &z0, probe_rho, 10, false, None, &mut trace, &wall);
+                    let (f_end, _) =
+                        self.run_iters(ctx, probe_rho, 10, false, None, &mut trace, &wall);
                     if f_end < best.0 {
                         best = (f_end, probe_rho);
                     }
@@ -113,9 +127,8 @@ impl Trainer for Admm {
         };
 
         let adaptive = self.rho_policy == RhoPolicy::Adap;
-        let (_, z, _) = self.run_iters(
+        let (_, done) = self.run_iters(
             ctx,
-            &z0,
             rho,
             ctx.max_outer,
             adaptive,
@@ -123,36 +136,38 @@ impl Trainer for Admm {
             &mut Trace::new("scratch", "", p),
             &wall,
         );
+        // the consensus iterate stays replicated worker-side; one fetch
+        // delivers the result (z⁰ if no iteration ran)
+        let z = cluster.fetch_reg(if done == 0 { R_Z0 } else { R_Z });
         (z, trace)
     }
 }
 
 impl Admm {
-    /// Run ADMM iterations from consensus start z0; returns
-    /// (final f, final z, iterations done). When `record` is Some, every
-    /// iteration appends to it (otherwise the scratch trace is used —
-    /// the clock still advances, matching the Search policy's cost).
+    /// Run ADMM iterations from the replicated start register `R_Z0`;
+    /// returns (final f, iterations done) — the final consensus z stays
+    /// in `R_Z`. When `record` is Some, every iteration appends to it
+    /// (otherwise the scratch trace is used — the clock still advances,
+    /// matching the Search policy's cost).
     ///
     /// The per-node state (w_p, u_p) lives worker-side; `init: true` on
-    /// the first proximal phase resets it (w_p ← z0, u_p ← 0), so Search
-    /// probes restart cleanly.
+    /// the first proximal phase resets it (w_p ← z⁰, u_p ← 0), so
+    /// Search probes restart cleanly.
     #[allow(clippy::too_many_arguments)]
     fn run_iters(
         &self,
         ctx: &TrainContext,
-        z0: &[f64],
         rho_init: f64,
         iters: usize,
         adaptive: bool,
         mut record: Option<&mut Trace>,
         scratch: &mut Trace,
         wall: &Instant,
-    ) -> (f64, Vec<f64>, usize) {
+    ) -> (f64, usize) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let p = cluster.p();
         let mut rho = rho_init;
-        let mut z = z0.to_vec();
         // a ρ change rescales the scaled duals u = y/ρ; the factor is
         // applied worker-side at the start of the next proximal phase
         let mut u_scale = 1.0;
@@ -160,37 +175,62 @@ impl Admm {
         let mut done = 0;
 
         for it in 0..iters {
-            // ---- local proximal solves (one LocalSolve phase); each
-            // rank replies w_p + u_p for the consensus AllReduce. z is
-            // shipped only at init — afterwards workers reuse the z
-            // they cached from the previous DualUpdate ----
-            let parts = cluster.local_solve_phase(&LocalSolveSpec::AdmmProx {
-                loss: obj.loss,
-                rho,
-                local_iters: self.local_iters as u32,
-                init: it == 0,
-                u_scale,
-                z: if it == 0 { z.clone() } else { Vec::new() },
-            });
+            // z_old ← current z (z⁰ on the first iteration), replicated
+            cluster.vec_phase(
+                &[VecOp::Copy { dst: R_ZOLD, src: if it == 0 { R_Z0 } else { R_Z } }],
+                &[],
+            );
+            // ---- local proximal solves fused with the consensus
+            // combine: each rank contributes w_p + u_p, the plan sums
+            // them, and the AdmmConsensus epilogue shrinks
+            // z = ρ·Σ/(λ+ρP) on every rank — caching z both in the
+            // register file and for the scaled-dual step. z⁰ is
+            // referenced only at init; z never ships afterwards. ----
+            let (_, dots) = cluster.local_solve_combine_phase(
+                &LocalSolveSpec::AdmmProx {
+                    loss: obj.loss,
+                    rho,
+                    local_iters: self.local_iters as u32,
+                    init: it == 0,
+                    u_scale,
+                    z: if it == 0 {
+                        VecRef::Reg(R_Z0)
+                    } else {
+                        VecRef::Inline(Vec::new())
+                    },
+                },
+                &CombineSpec {
+                    weights: Vec::new(),
+                    kind: Combine::AdmmConsensus { rho, lambda: obj.lambda },
+                    store: Some(R_Z),
+                    dots: vec![(R_Z, R_Z)],
+                },
+            );
+            let zz = dots[0];
             u_scale = 1.0;
 
-            // ---- consensus update: AllReduce Σ(w_p + u_p) ----
-            let sums: Vec<Vec<f64>> = parts.into_iter().map(|(wu, _)| wu).collect();
-            let total = cluster.allreduce(sums);
-            let z_old = z.clone();
-            z = total
-                .iter()
-                .map(|&s| rho * s / (obj.lambda + rho * p as f64))
-                .collect();
+            // ---- dual updates (worker-local, zero payload — z is the
+            // cached consensus); each rank replies its ‖w_p − z‖² term
+            // of the primal residual ----
+            let dists = cluster.dual_update_phase(&DualUpdateSpec::AdmmDual);
 
-            // ---- dual updates (worker-local); each rank replies its
-            // ‖w_p − z‖² term of the primal residual ----
-            let dists =
-                cluster.dual_update_phase(&DualUpdateSpec::AdmmDual { z: z.clone() });
-
-            // ---- residuals (scalar aggregations) ----
+            // ---- residuals (scalar aggregations; ‖z − z_old‖ from the
+            // replicated registers). Note: the replicated dot uses the
+            // 4-lane-unrolled `linalg::dot` accumulation, where the old
+            // driver-side `dist_sq` summed sequentially — s_dual can
+            // differ from the pre-combine-plane value in its last bits
+            // (identical across transports either way; only the Adap
+            // ρ-policy's comparisons could see it, on a knife-edge
+            // iteration) ----
             let r_primal: f64 = dists.iter().sum::<f64>().sqrt();
-            let s_dual = rho * (p as f64).sqrt() * linalg::dist_sq(&z, &z_old).sqrt();
+            let diff2 = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_DIFF, src: R_Z },
+                    VecOp::Axpy { dst: R_DIFF, a: -1.0, src: R_ZOLD },
+                ],
+                &[(R_DIFF, R_DIFF)],
+            )[0];
+            let s_dual = rho * (p as f64).sqrt() * diff2.sqrt();
             cluster.charge_scalar_round();
             if adaptive {
                 // Boyd eq. (3.13); the scaled duals u = y/ρ must be
@@ -205,7 +245,8 @@ impl Admm {
             }
 
             // ---- primal objective at z for the trace (scalar round) ----
-            f_last = obj.value_from(&z, cluster.loss_phase(obj.loss, &z));
+            f_last =
+                0.5 * obj.lambda * zz + cluster.loss_phase(obj.loss, VecRef::Reg(R_Z));
             let t = record.as_deref_mut().unwrap_or(scratch);
             t.push(
                 it,
@@ -215,14 +256,14 @@ impl Admm {
                 wall.elapsed().as_secs_f64(),
                 f_last,
                 f64::NAN,
-                ctx.eval_auprc(&z),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_Z)),
             );
             done = it + 1;
             if ctx.should_stop_f(f_last) {
                 break;
             }
         }
-        (f_last, z, done)
+        (f_last, done)
     }
 }
 

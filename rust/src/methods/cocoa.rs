@@ -19,14 +19,16 @@
 use std::time::Instant;
 
 use super::{TrainContext, Trainer};
-use crate::linalg;
 use crate::loss::Loss;
 use crate::metrics::Trace;
-use crate::net::LocalSolveSpec;
+use crate::net::{Combine, CombineSpec, LocalSolveSpec, VecOp, VecRef};
 
 // the per-coordinate maximizer is loss-specific math shared with the
 // worker-side phase executor; re-exported here for compatibility
 pub use crate::loss::sdca_delta;
+
+// replicated register map
+const R_W: u32 = 0; // the primal iterate w(α)
 
 #[derive(Clone, Debug)]
 pub struct CoCoA {
@@ -62,7 +64,6 @@ impl Trainer for CoCoA {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let p = cluster.p();
-        let m = cluster.m();
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
 
@@ -70,28 +71,35 @@ impl Trainer for CoCoA {
         // CoCoA's primal iterate must stay consistent with its duals);
         // Reset clears any previous run's worker-side α_p
         cluster.reset_phase();
-        let mut w = vec![0.0; m];
+        cluster.vec_phase(&[VecOp::Zero { dst: R_W }], &[]);
 
         for it in 0..ctx.max_outer {
-            // ---- local SDCA epochs (one LocalSolve phase); each rank
-            // replies Δw_p and keeps its 1/P-averaged duals local ----
-            let results = cluster.local_solve_phase(&LocalSolveSpec::CocoaSdca {
-                lambda: obj.lambda,
-                epochs: self.inner_epochs,
-                seed: self.seed,
-                round: it as u64,
-                w: w.clone(),
-            });
-
-            // ---- safe averaging combine: w += (1/P)·Σ Δw_p (the dual
+            // ---- local SDCA epochs fused with the safe averaging mix
+            // w ← w + (1/P)·Σ Δw_p (the Step combine — the dual
             // increments were scaled by the same 1/P worker-side so
-            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent) ----
-            let deltas: Vec<Vec<f64>> = results.into_iter().map(|(dw, _)| dw).collect();
-            let sum = cluster.allreduce(deltas);
-            linalg::axpy(1.0 / p as f64, &sum, &mut w);
+            // w = (1/λ)Σ α_i y_i x_i stays exactly consistent); the new
+            // w lands replicated in the register file and the driver
+            // reads ‖w‖² only ----
+            let (_, dots) = cluster.local_solve_combine_phase(
+                &LocalSolveSpec::CocoaSdca {
+                    lambda: obj.lambda,
+                    epochs: self.inner_epochs,
+                    seed: self.seed,
+                    round: it as u64,
+                    w: VecRef::Reg(R_W),
+                },
+                &CombineSpec {
+                    weights: Vec::new(),
+                    kind: Combine::Step { anchor: R_W, scale: 1.0 / p as f64 },
+                    store: Some(R_W),
+                    dots: vec![(R_W, R_W)],
+                },
+            );
+            let ww = dots[0];
 
             // ---- primal objective trace (scalar round) ----
-            let f = obj.value_from(&w, cluster.loss_phase(obj.loss, &w));
+            let f =
+                0.5 * obj.lambda * ww + cluster.loss_phase(obj.loss, VecRef::Reg(R_W));
             trace.push(
                 it,
                 &cluster.clock(),
@@ -100,13 +108,13 @@ impl Trainer for CoCoA {
                 wall.elapsed().as_secs_f64(),
                 f,
                 f64::NAN,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
             if ctx.should_stop_f(f) {
                 break;
             }
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 }
 

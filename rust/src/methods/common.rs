@@ -1,10 +1,24 @@
 //! Shared machinery: the SGD warm start of §4.3 (used by TERA, FADL and
-//! ADMM per footnote 10) and small helpers every method reuses.
+//! ADMM per footnote 10) and small helpers every method reuses — all on
+//! the combine plane, so they keep the driver scalar-only.
+//!
+//! Register convention: methods own registers 0..60 (each file defines
+//! its own map; tera-lbfgs' ring-allocated history is the widest user
+//! and asserts it stays below the band edge); the helpers here use the
+//! reserved band 60+ so they can be called mid-training without
+//! clobbering a method's state.
 
 use crate::cluster::Cluster;
 use crate::linalg;
+use crate::net::{Combine, CombineSpec, VecOp, VecRef};
 use crate::objective::Objective;
 use crate::util::rng::Pcg64;
+
+/// First register of the reserved helper band (methods stay below it).
+pub const HELPER_REG_BASE: u32 = 60;
+/// Reserved scratch registers for the helpers in this module.
+const HN_V: u32 = 62;
+const HN_HV: u32 = 63;
 
 /// One-pass-style SGD warm start (Agarwal et al. 2011, as used in §4.3):
 /// each node minimizes its *local* objective λ/2‖w‖² + L_p(w) with
@@ -14,60 +28,95 @@ use crate::util::rng::Pcg64;
 /// toward zero. Charges the SGD passes and the two aggregation passes.
 ///
 /// The per-node SGD loop lives worker-side
-/// ([`crate::net::endpoint::local_warmstart`]) and runs through the
-/// `Warmstart` transport phase, so every warm-started method works
-/// unchanged over the TCP transport.
+/// ([`crate::net::endpoint::local_warmstart`]) and the per-feature
+/// average forms *on the workers* through the `WeightedAvg` combine:
+/// the (count-weighted weights, counts) pair is plan-reduced and
+/// divided rank-side, landing the result replicated in `store` —
+/// nothing but scalars returns to the driver.
 pub fn sgd_warmstart(
     cluster: &Cluster,
     obj: Objective,
     epochs: usize,
     seed: u64,
-) -> Vec<f64> {
-    let results = cluster.warm_phase(obj.loss, obj.lambda, epochs, seed);
+    store: u32,
+) {
+    let _ = cluster.warm_combine_phase(
+        obj.loss,
+        obj.lambda,
+        epochs,
+        seed,
+        &CombineSpec {
+            weights: Vec::new(),
+            kind: Combine::WeightedAvg,
+            store: Some(store),
+            dots: Vec::new(),
+        },
+    );
+}
 
-    // per-feature weighted average: two m-vector AllReduce passes
-    let mut weighted: Vec<Vec<f64>> = Vec::with_capacity(results.len());
-    let mut counts: Vec<Vec<f64>> = Vec::with_capacity(results.len());
-    for (w, cf) in results {
-        let wv: Vec<f64> = w.iter().zip(&cf).map(|(wj, cj)| wj * cj).collect();
-        weighted.push(wv);
-        counts.push(cf);
+/// Land a method's initial iterate in register `reg` on every rank:
+/// the §4.3 warm start when configured, a free replicated `Zero` for
+/// the default all-zero w0, or an explicit round-0 inline ship for a
+/// custom start point — the one shared round-0 entry path of every
+/// combine-plane method driver.
+pub fn init_iterate(
+    cluster: &Cluster,
+    obj: Objective,
+    w0: &[f64],
+    warm: Option<(usize, u64)>,
+    reg: u32,
+) {
+    match warm {
+        Some((epochs, seed)) => sgd_warmstart(cluster, obj, epochs, seed, reg),
+        None if w0.iter().all(|&x| x == 0.0) => {
+            cluster.vec_phase(&[VecOp::Zero { dst: reg }], &[]);
+        }
+        None => cluster.set_reg_phase(reg, w0),
     }
-    let num = cluster.allreduce(weighted);
-    let den = cluster.allreduce(counts);
-    num.iter()
-        .zip(&den)
-        .map(|(&n, &d)| if d > 0.0 { n / d } else { 0.0 })
-        .collect()
 }
 
 /// Power-iteration estimate of the largest eigenvalue of the *data*
 /// Hessian Σ c·l''·x xᵀ at w (used by ADMM-Analytic's ρ formula).
 /// Runs entirely on transport phases: one gradient pass caches the
-/// margins worker-side (the anchor of every Hv), then one Hvp phase per
-/// power iteration. Charges every pass it performs.
+/// margins worker-side (the anchor of every Hv), then one Hvp combine
+/// per power iteration against the replicated iterate register —
+/// only the initial random vector ships inline (pre-round-0), the
+/// driver reads eigenvalue estimates as replicated dots. Charges every
+/// pass it performs.
 pub fn estimate_hessian_norm(
     cluster: &Cluster,
     obj: Objective,
-    w: &[f64],
+    w: VecRef,
     iters: usize,
     seed: u64,
 ) -> f64 {
-    let _ = cluster.grad_phase(obj.loss, w);
+    let _ = cluster.grad_combine_phase(obj.loss, w, &CombineSpec::sum_into(HN_HV));
+    let m = cluster.m();
     let mut rng = Pcg64::new(seed);
-    let mut v: Vec<f64> = (0..w.len()).map(|_| rng.normal()).collect();
+    let mut v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
     let nv = linalg::norm(&v).max(1e-300);
     linalg::scale(1.0 / nv, &mut v);
+    cluster.set_reg_phase(HN_V, &v);
     let mut eig = 0.0;
     for _ in 0..iters {
-        let hv = cluster.hvp_phase(obj.loss, &v);
-        eig = linalg::dot(&v, &hv);
-        let n = linalg::norm(&hv);
+        let dots = cluster.hvp_combine_phase(
+            obj.loss,
+            VecRef::Reg(HN_V),
+            &CombineSpec::sum_into(HN_HV).with_dots(&[(HN_V, HN_HV), (HN_HV, HN_HV)]),
+        );
+        eig = dots[0];
+        let n = dots[1].sqrt();
         if n <= 1e-300 {
             return 0.0;
         }
-        v = hv;
-        linalg::scale(1.0 / n, &mut v);
+        // v ← hv / ‖hv‖, replicated bookkeeping
+        cluster.vec_phase(
+            &[
+                VecOp::Copy { dst: HN_V, src: HN_HV },
+                VecOp::Scale { dst: HN_V, a: 1.0 / n },
+            ],
+            &[],
+        );
     }
     eig.max(0.0)
 }
@@ -85,7 +134,8 @@ mod tests {
         let ds = synth::quick(400, 60, 10, 17);
         let cluster = cluster_from(&ds, 4);
         let obj = Objective::new(1e-3, Loss::SquaredHinge);
-        let w = sgd_warmstart(&cluster, obj, 5, 1);
+        sgd_warmstart(&cluster, obj, 5, 1, 0);
+        let w = cluster.fetch_reg(0);
         let whole = SparseShard::new(Shard::whole(&ds));
         let (f_warm, _) = obj.eval(&[&whole], &w);
         let (f_zero, _) = obj.eval(&[&whole], &vec![0.0; 60]);
@@ -97,7 +147,7 @@ mod tests {
         let ds = synth::quick(100, 30, 8, 18);
         let cluster = cluster_from(&ds, 4);
         let obj = Objective::new(1e-3, Loss::SquaredHinge);
-        sgd_warmstart(&cluster, obj, 5, 1);
+        sgd_warmstart(&cluster, obj, 5, 1, 0);
         let clock = cluster.clock();
         assert!(clock.compute_units > 0.0);
         assert_eq!(clock.comm_passes, 2.0); // weighted sum + counts
@@ -107,9 +157,64 @@ mod tests {
     fn warmstart_deterministic() {
         let ds = synth::quick(100, 30, 8, 19);
         let obj = Objective::new(1e-3, Loss::SquaredHinge);
-        let a = sgd_warmstart(&cluster_from(&ds, 4), obj, 3, 7);
-        let b = sgd_warmstart(&cluster_from(&ds, 4), obj, 3, 7);
-        assert_eq!(a, b);
+        let run = || {
+            let c = cluster_from(&ds, 4);
+            sgd_warmstart(&c, obj, 3, 7, 0);
+            c.fetch_reg(0)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn warmstart_matches_driver_side_per_feature_average() {
+        // the WeightedAvg combine must reproduce the exact bits of the
+        // legacy driver-side combine: num = Σ w_p⊙c_p, den = Σ c_p
+        // (both tree-reduced), then num/den with the zero guard
+        let ds = synth::quick(120, 20, 6, 21);
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let cluster = cluster_from(&ds, 3);
+        sgd_warmstart(&cluster, obj, 2, 5, 0);
+        let got = cluster.fetch_reg(0);
+        // reference: per-shard local warm starts + driver-side combine
+        let part = crate::data::partition::ExamplePartition::build(
+            ds.n(),
+            3,
+            crate::data::partition::Strategy::Contiguous,
+            0,
+        );
+        let mut weighted = Vec::new();
+        let mut counts = Vec::new();
+        for rank in 0..3 {
+            let shard = SparseShard::new(Shard::from_dataset(
+                &ds,
+                &part.assignments[rank],
+                &part.weights[rank],
+            ));
+            let (w, cf, _) = crate::net::endpoint::local_warmstart(
+                &shard,
+                rank,
+                obj.loss,
+                obj.lambda,
+                2,
+                5,
+            );
+            let cf: Vec<f64> = cf.into_iter().map(f64::from).collect();
+            let wv: Vec<f64> = w.iter().zip(&cf).map(|(wj, cj)| wj * cj).collect();
+            weighted.push(wv);
+            counts.push(cf);
+        }
+        let plan = crate::net::Topology::Tree.plan(3, 20);
+        let num = crate::net::reduce(weighted, &plan);
+        let den = crate::net::reduce(counts, &plan);
+        let want: Vec<f64> = num
+            .iter()
+            .zip(&den)
+            .map(|(&n, &d)| if d > 0.0 { n / d } else { 0.0 })
+            .collect();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]
@@ -117,8 +222,8 @@ mod tests {
         let ds = synth::quick(120, 25, 6, 20);
         let cluster = cluster_from(&ds, 4);
         let obj = Objective::new(1e-3, Loss::SquaredHinge);
-        let w = vec![0.0; 25];
-        let eig = estimate_hessian_norm(&cluster, obj, &w, 15, 3);
+        cluster.set_reg_phase(0, &vec![0.0; 25]);
+        let eig = estimate_hessian_norm(&cluster, obj, VecRef::Reg(0), 15, 3);
         assert!(eig > 0.0);
         // crude upper bound: 2·Σ‖x_i‖² for squared hinge
         let whole = SparseShard::new(Shard::whole(&ds));

@@ -19,11 +19,17 @@ use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
 use crate::approx::ApproxKind;
-use crate::linalg;
 use crate::metrics::Trace;
-use crate::net::InnerSolveSpec;
+use crate::net::{Combine, CombineSpec, InnerSolveSpec, VecOp, VecRef};
 use crate::optim::linesearch::LineSearch;
 use crate::optim::{self};
+
+// replicated register map (worker-side register file; the driver stays
+// scalar-only under the p2p data plane)
+const R_W: u32 = 0; // the iterate w^r
+const R_GDATA: u32 = 1; // reduced data gradient Σ∇L_p
+const R_G: u32 = 2; // full gradient g = ∇L + λw
+const R_D: u32 = 3; // combined direction d^r
 
 /// How {d_p} are combined into d^r (any convex combination preserves
 /// the angle condition — §3.1).
@@ -88,18 +94,21 @@ impl Trainer for Fadl {
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
 
-        // FADL runs entirely on the named transport phases, so it works
-        // unchanged over the in-process *and* the TCP transport. The
-        // per-node state Algorithm 2 keeps local (margins z_p, ∇L_p,
-        // direction margins e_p, BFGS curvature) lives worker-side in
-        // net::WorkerState; Reset clears any previous run's leftovers.
+        // FADL runs entirely on the combine plane: the iterate, the
+        // gradients and the direction live in the replicated register
+        // file worker-side (alongside the per-node state Algorithm 2
+        // keeps local — margins z_p, ∇L_p, e_p, BFGS curvature), and
+        // the driver reads only scalars (losses, replicated dot
+        // products). Reset clears any previous run's leftovers.
         cluster.reset_phase();
 
-        let mut w = if self.warm_start {
-            common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
-        } else {
-            ctx.w0.clone()
-        };
+        common::init_iterate(
+            cluster,
+            obj,
+            &ctx.w0,
+            self.warm_start.then_some((self.warm_start_epochs, self.seed)),
+            R_W,
+        );
 
         let mut g0_norm = None;
         // adaptive inner trust radius: the squared hinge is piecewise
@@ -110,13 +119,26 @@ impl Trainer for Fadl {
         let mut trust_radius: Option<f64> = None;
 
         for r in 0..ctx.max_outer {
-            // ---- step 1: distributed gradient (by-product: every
-            // worker caches its margins z_p and local gradient ∇L_p) ----
-            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
-            let f = obj.value_from(&w, loss_sum);
-            let mut g = data_grad.clone();
-            obj.finish_grad(&w, &mut g);
-            let gnorm = linalg::norm(&g);
+            // ---- step 1: distributed gradient at the replicated
+            // anchor (by-product: every worker caches its margins z_p
+            // and local gradient ∇L_p) ----
+            let (loss_sum, _) = cluster.grad_combine_phase(
+                obj.loss,
+                VecRef::Reg(R_W),
+                &CombineSpec::sum_into(R_GDATA),
+            );
+            // g = ĝ + λw: the finish_grad the driver used to run, now
+            // free replicated bookkeeping; the driver reads ‖g‖², ‖w‖²
+            let dots = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_G, src: R_GDATA },
+                    VecOp::Axpy { dst: R_G, a: obj.lambda, src: R_W },
+                ],
+                &[(R_G, R_G), (R_W, R_W)],
+            );
+            let (gg, ww) = (dots[0], dots[1]);
+            let f = 0.5 * obj.lambda * ww + loss_sum;
+            let gnorm = gg.sqrt();
             let g0 = *g0_norm.get_or_insert(gnorm);
 
             trace.push(
@@ -127,7 +149,7 @@ impl Trainer for Fadl {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
 
             // ---- step 2: stopping rules ----
@@ -135,10 +157,19 @@ impl Trainer for Fadl {
                 break;
             }
 
-            // ---- steps 3–7: local inner optimization on f̂_p ----
+            // ---- steps 3–8: local inner optimization on f̂_p, fused
+            // with the convex direction combine d = Σ w̃_p(w_p − w).
             // The BFGS cross-iteration curvature update happens on the
-            // worker (it only needs Δ∇L, shipped in the spec, plus the
-            // worker's own Δ∇L_p history).
+            // worker (it only needs Δ∇L — the replicated gradient
+            // register — plus the worker's own Δ∇L_p history). ----
+            let weights: Vec<f64> = match self.combiner {
+                Combiner::Average => vec![1.0 / p as f64; p],
+                Combiner::ByExamples => {
+                    let ns = cluster.rank_examples();
+                    let total: usize = ns.iter().sum();
+                    ns.iter().map(|&n| n as f64 / total.max(1) as f64).collect()
+                }
+            };
             let spec = InnerSolveSpec {
                 kind: self.approx,
                 inner: self.inner.clone(),
@@ -146,62 +177,57 @@ impl Trainer for Fadl {
                 trust_radius,
                 lambda: obj.lambda,
                 loss: obj.loss,
-                anchor: w.clone(),
-                full_grad: g.clone(),
+                anchor: VecRef::Reg(R_W),
+                full_grad: VecRef::Reg(R_G),
                 data_grad: (self.approx == ApproxKind::Bfgs)
-                    .then(|| data_grad.clone()),
+                    .then_some(VecRef::Reg(R_GDATA)),
             };
-            let node_results = cluster.inner_solve_phase(&spec);
-
-            // ---- step 8: convex combination of directions (AllReduce) ----
-            let total_n: usize = node_results.iter().map(|(_, n)| *n).sum();
-            let parts: Vec<Vec<f64>> = node_results
-                .into_iter()
-                .map(|(wp, np)| {
-                    let coef = match self.combiner {
-                        Combiner::Average => 1.0 / p as f64,
-                        Combiner::ByExamples => np as f64 / total_n.max(1) as f64,
-                    };
-                    let mut d = linalg::sub(&wp, &w);
-                    linalg::scale(coef, &mut d);
-                    d
-                })
-                .collect();
-            let mut d = cluster.allreduce(parts);
+            let (_, dots) = cluster.inner_solve_combine_phase(
+                &spec,
+                &CombineSpec {
+                    weights,
+                    kind: Combine::Direction { anchor: R_W },
+                    store: Some(R_D),
+                    dots: vec![(R_G, R_D), (R_W, R_D), (R_D, R_D)],
+                },
+            );
+            let (mut gd, mut w_dot_d, mut d_dot_d) = (dots[0], dots[1], dots[2]);
 
             // ---- descent safeguard (floating point only) ----
-            let mut gd = linalg::dot(&g, &d);
             if gd >= 0.0 {
                 if !self.descent_safeguard {
                     break;
                 }
-                d = g.iter().map(|&x| -x).collect();
-                gd = -linalg::dot(&g, &g);
+                // d ← −g, replicated
+                let dots = cluster.vec_phase(
+                    &[VecOp::Copy { dst: R_D, src: R_G }, VecOp::Scale { dst: R_D, a: -1.0 }],
+                    &[(R_G, R_D), (R_W, R_D), (R_D, R_D)],
+                );
+                gd = dots[0];
+                w_dot_d = dots[1];
+                d_dot_d = dots[2];
             }
 
-            // ---- step 9: e_i = d·x_i (one pass, no communication;
+            // ---- step 9: e_i = d·x_i (one pass, zero payload;
             // cached worker-side) ----
-            cluster.dirs_phase(&d);
+            cluster.dirs_phase(VecRef::Reg(R_D));
 
             // ---- step 10: distributed Armijo–Wolfe line search ----
-            let w_dot_d = linalg::dot(&w, &d);
-            let d_dot_d = linalg::dot(&d, &d);
             let ls = LineSearch::default();
             let res = ls.search(f, gd, |t| {
                 let (phi_data, dphi_data) = cluster.linesearch_phase(obj.loss, t);
                 // add the analytically-known regularizer part
-                let reg = 0.5
-                    * obj.lambda
-                    * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
+                let reg =
+                    0.5 * obj.lambda * (ww + 2.0 * t * w_dot_d + t * t * d_dot_d);
                 let dreg = obj.lambda * (w_dot_d + t * d_dot_d);
                 (phi_data + reg, dphi_data + dreg)
             });
 
-            // ---- step 11 ----
-            linalg::axpy(res.t, &d, &mut w);
+            // ---- step 11: w ← w + t·d, replicated ----
+            cluster.vec_phase(&[VecOp::Axpy { dst: R_W, a: res.t, src: R_D }], &[]);
             // grow/shrink the inner region toward twice the accepted
             // step length (doubling lets a too-small radius recover)
-            let step_norm = res.t * linalg::norm(&d);
+            let step_norm = res.t * d_dot_d.sqrt();
             trust_radius = Some(match trust_radius {
                 Some(prev_r) => (2.0 * step_norm).min(4.0 * prev_r).max(prev_r * 0.25),
                 None => 2.0 * step_norm,
@@ -209,7 +235,7 @@ impl Trainer for Fadl {
             .max(1e-10));
             cluster.charge_compute(2.0 * m as f64);
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 }
 

@@ -20,10 +20,15 @@ use std::time::Instant;
 
 use super::{TrainContext, Trainer};
 use crate::data::partition::FeaturePartition;
-use crate::linalg;
 use crate::metrics::Trace;
-use crate::net::LocalSolveSpec;
+use crate::net::{Combine, CombineSpec, LocalSolveSpec, VecOp, VecRef};
 use crate::optim::linesearch::LineSearch;
+
+// replicated register map (see fadl.rs)
+const R_W: u32 = 0;
+const R_GDATA: u32 = 1;
+const R_G: u32 = 2;
+const R_D: u32 = 3;
 
 #[derive(Clone, Debug)]
 pub struct FadlFeature {
@@ -70,18 +75,12 @@ impl Trainer for FadlFeature {
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
         cluster.reset_phase();
-        let mut w = ctx.w0.clone();
+        super::common::init_iterate(cluster, obj, &ctx.w0, None, R_W);
         let mut g0_norm = None;
 
-        // per-coordinate coverage for the overlap-aware combiner
-        let mut coverage = vec![0.0f64; m];
-        for s in &partition.subsets {
-            for &j in s {
-                coverage[j] += 1.0;
-            }
-        }
         // the subsets ride inside the (shared) LocalSolve command; each
-        // rank picks its own
+        // rank picks its own mask and caches the per-feature coverage
+        // counts the CoverageDirection combine divides by
         let subsets_wire: Vec<Vec<u32>> = partition
             .subsets
             .iter()
@@ -89,12 +88,23 @@ impl Trainer for FadlFeature {
             .collect();
 
         for r in 0..ctx.max_outer {
-            // gradient phase; margins z_p and ∇L_p cached worker-side
-            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
-            let f = obj.value_from(&w, loss_sum);
-            let mut g = data_grad;
-            obj.finish_grad(&w, &mut g);
-            let gnorm = linalg::norm(&g);
+            // gradient phase; margins z_p and ∇L_p cached worker-side,
+            // the reduced gradient replicated in the register file
+            let (loss_sum, _) = cluster.grad_combine_phase(
+                obj.loss,
+                VecRef::Reg(R_W),
+                &CombineSpec::sum_into(R_GDATA),
+            );
+            let dots = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_G, src: R_GDATA },
+                    VecOp::Axpy { dst: R_G, a: obj.lambda, src: R_W },
+                ],
+                &[(R_G, R_G), (R_W, R_W)],
+            );
+            let (gg, ww) = (dots[0], dots[1]);
+            let f = 0.5 * obj.lambda * ww + loss_sum;
+            let gnorm = gg.sqrt();
             let g0 = *g0_norm.get_or_insert(gnorm);
             trace.push(
                 r,
@@ -104,64 +114,60 @@ impl Trainer for FadlFeature {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;
             }
 
-            // masked local solves (one LocalSolve phase); the static
-            // partition ships on the first round only — workers cache
-            // their own mask afterwards
-            let results = cluster.local_solve_phase(&LocalSolveSpec::FeatureSolve {
-                loss: obj.loss,
-                lambda: obj.lambda,
-                k_hat: self.k_hat as u32,
-                anchor: w.clone(),
-                full_grad: g.clone(),
-                subsets: if r == 0 {
-                    subsets_wire.clone()
-                } else {
-                    Vec::new()
+            // masked local solves fused with the coverage-weighted
+            // direction combine; the static partition ships on the
+            // first round only — workers cache mask + coverage after
+            let (_, dots) = cluster.local_solve_combine_phase(
+                &LocalSolveSpec::FeatureSolve {
+                    loss: obj.loss,
+                    lambda: obj.lambda,
+                    k_hat: self.k_hat as u32,
+                    anchor: VecRef::Reg(R_W),
+                    full_grad: VecRef::Reg(R_G),
+                    subsets: if r == 0 {
+                        subsets_wire.clone()
+                    } else {
+                        Vec::new()
+                    },
                 },
-            });
-
-            // coverage-weighted combine (AllReduce)
-            let parts: Vec<Vec<f64>> = results
-                .into_iter()
-                .map(|(wp, _)| {
-                    (0..m)
-                        .map(|j| {
-                            if coverage[j] > 0.0 {
-                                (wp[j] - w[j]) / coverage[j]
-                            } else {
-                                0.0
-                            }
-                        })
-                        .collect()
-                })
-                .collect();
-            let mut d = cluster.allreduce(parts);
-            let mut gd = linalg::dot(&g, &d);
+                &CombineSpec {
+                    weights: Vec::new(),
+                    kind: Combine::CoverageDirection { anchor: R_W },
+                    store: Some(R_D),
+                    dots: vec![(R_G, R_D), (R_W, R_D), (R_D, R_D)],
+                },
+            );
+            let (mut gd, mut w_dot_d, mut d_dot_d) = (dots[0], dots[1], dots[2]);
             if gd >= 0.0 {
-                d = g.iter().map(|&x| -x).collect();
-                gd = -linalg::dot(&g, &g);
+                let dots = cluster.vec_phase(
+                    &[
+                        VecOp::Copy { dst: R_D, src: R_G },
+                        VecOp::Scale { dst: R_D, a: -1.0 },
+                    ],
+                    &[(R_G, R_D), (R_W, R_D), (R_D, R_D)],
+                );
+                gd = dots[0];
+                w_dot_d = dots[1];
+                d_dot_d = dots[2];
             }
             // direction margins e_p cached worker-side, then the
             // scalar-round Armijo–Wolfe search
-            cluster.dirs_phase(&d);
-            let w_dot_d = linalg::dot(&w, &d);
-            let d_dot_d = linalg::dot(&d, &d);
+            cluster.dirs_phase(VecRef::Reg(R_D));
             let res = LineSearch::default().search(f, gd, |t| {
                 let (phi, dphi) = cluster.linesearch_phase(obj.loss, t);
-                let reg = 0.5
-                    * obj.lambda
-                    * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
+                let reg =
+                    0.5 * obj.lambda * (ww + 2.0 * t * w_dot_d + t * t * d_dot_d);
                 (phi + reg, dphi + obj.lambda * (w_dot_d + t * d_dot_d))
             });
-            linalg::axpy(res.t, &d, &mut w);
+            cluster.vec_phase(&[VecOp::Axpy { dst: R_W, a: res.t, src: R_D }], &[]);
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 }
 

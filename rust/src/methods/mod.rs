@@ -62,10 +62,14 @@ impl<'a> TrainContext<'a> {
         }
     }
 
-    pub(crate) fn eval_auprc(&self, w: &[f64]) -> f64 {
+    /// AUPRC on the held-out set, with the iterate fetched lazily —
+    /// under the scalar-only p2p driver the weights live worker-side,
+    /// so the (instrumentation-only) `FetchReg` round trip is paid only
+    /// when there is actually a non-empty test set to score.
+    pub(crate) fn eval_auprc_with<F: FnOnce() -> Vec<f64>>(&self, w: F) -> f64 {
         match self.test_set {
-            Some(ds) => crate::metrics::auprc::auprc_of_model(ds, w),
-            None => f64::NAN,
+            Some(ds) if ds.n() > 0 => crate::metrics::auprc::auprc_of_model(ds, &w()),
+            _ => f64::NAN,
         }
     }
 
@@ -80,7 +84,7 @@ pub trait Trainer {
     fn label(&self) -> String;
 
     /// Whether [`Trainer::train`] drives the cluster exclusively
-    /// through the named transport phases (`Cluster::grad_phase` & co),
+    /// through the named transport phases (`Cluster::grad_combine_phase` & co),
     /// and therefore runs over remote transports such as tcp. Every
     /// built-in method does (the full command vocabulary landed with
     /// the Hvp/LocalSolve/DualUpdate phases), so the default is true

@@ -16,9 +16,14 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::linalg;
 use crate::metrics::Trace;
-use crate::net::LocalSolveSpec;
+use crate::net::{Combine, CombineSpec, LocalSolveSpec, VecOp, VecRef};
+
+// replicated register map
+const R_W: u32 = 0; // the iterate w^r
+const R_GDATA: u32 = 1; // reduced data gradient ∇L(w^r)
+const R_G: u32 = 2; // full gradient g^r = ∇L + λw
+const R_SH: u32 = 3; // (η−1)·∇L(w^r)
 
 #[derive(Clone, Debug)]
 pub struct Ssz {
@@ -61,22 +66,35 @@ impl Trainer for Ssz {
         let mut trace = Trace::new(&self.label(), "", p);
         let wall = Instant::now();
         cluster.reset_phase();
-        let mut w = if self.warm_start {
-            common::sgd_warmstart(cluster, obj, self.warm_start_epochs, self.seed)
-        } else {
-            ctx.w0.clone()
-        };
+        common::init_iterate(
+            cluster,
+            obj,
+            &ctx.w0,
+            self.warm_start.then_some((self.warm_start_epochs, self.seed)),
+            R_W,
+        );
         let mut g0_norm = None;
         let mu = self.mu_over_lambda * obj.lambda;
         let eta = self.eta;
 
         for r in 0..ctx.max_outer {
-            // caches every worker's (z_p, ∇L_p) for the local solves
-            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
-            let f = obj.value_from(&w, loss_sum);
-            let mut g = data_grad.clone();
-            obj.finish_grad(&w, &mut g);
-            let gnorm = linalg::norm(&g);
+            // caches every worker's (z_p, ∇L_p) for the local solves;
+            // the reduced gradient replicates in the register file
+            let (loss_sum, _) = cluster.grad_combine_phase(
+                obj.loss,
+                VecRef::Reg(R_W),
+                &CombineSpec::sum_into(R_GDATA),
+            );
+            let dots = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_G, src: R_GDATA },
+                    VecOp::Axpy { dst: R_G, a: obj.lambda, src: R_W },
+                ],
+                &[(R_G, R_G), (R_W, R_W)],
+            );
+            let (gg, ww) = (dots[0], dots[1]);
+            let f = 0.5 * obj.lambda * ww + loss_sum;
+            let gnorm = gg.sqrt();
             let g0 = *g0_norm.get_or_insert(gnorm);
             trace.push(
                 r,
@@ -86,36 +104,42 @@ impl Trainer for Ssz {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) || !f.is_finite() {
                 break;
             }
 
-            // (η − 1)·∇L(w^r), precomputed once driver-side
-            let mut shift = data_grad.clone();
-            linalg::scale(eta - 1.0, &mut shift);
-            let results = cluster.local_solve_phase(&LocalSolveSpec::SszProx {
-                loss: obj.loss,
-                lambda: obj.lambda,
-                mu,
-                local_iters: self.local_iters as u32,
-                anchor: w.clone(),
-                full_grad: g.clone(),
-                grad_shift: shift,
-            });
-
-            // fixed-step average — no line search (the SSZ signature)
-            let parts: Vec<Vec<f64>> = results
-                .into_iter()
-                .map(|(mut wp, _)| {
-                    linalg::scale(1.0 / p as f64, &mut wp);
-                    wp
-                })
-                .collect();
-            w = cluster.allreduce(parts);
+            // (η − 1)·∇L(w^r), replicated bookkeeping
+            cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_SH, src: R_GDATA },
+                    VecOp::Scale { dst: R_SH, a: eta - 1.0 },
+                ],
+                &[],
+            );
+            // fixed-step average — no line search (the SSZ signature):
+            // the 1/P weights scale each ŵ_p before the plan sum, and
+            // the average becomes the next replicated iterate
+            let _ = cluster.local_solve_combine_phase(
+                &LocalSolveSpec::SszProx {
+                    loss: obj.loss,
+                    lambda: obj.lambda,
+                    mu,
+                    local_iters: self.local_iters as u32,
+                    anchor: VecRef::Reg(R_W),
+                    full_grad: VecRef::Reg(R_G),
+                    grad_shift: VecRef::Reg(R_SH),
+                },
+                &CombineSpec {
+                    weights: vec![1.0 / p as f64; p],
+                    kind: Combine::WeightedSum,
+                    store: Some(R_W),
+                    dots: Vec::new(),
+                },
+            );
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 }
 

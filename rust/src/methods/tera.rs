@@ -15,9 +15,32 @@
 use std::time::Instant;
 
 use super::{common, TrainContext, Trainer};
-use crate::linalg;
 use crate::metrics::Trace;
+use crate::net::{CombineSpec, VecOp, VecRef};
 use crate::optim::linesearch::LineSearch;
+
+// replicated register map: the Terascale design replicates the
+// optimizer state on every node — here that is literal: the CG /
+// L-BFGS vectors live in the worker-side register file, updated by
+// free replicated bookkeeping, and the driver steers with scalars.
+const R_W: u32 = 0; // iterate w
+const R_GDATA: u32 = 1; // reduced data gradient
+const R_G: u32 = 2; // full gradient g = ∇L + λw
+const R_S: u32 = 3; // CG solution s
+const R_RES: u32 = 4; // CG residual
+const R_DV: u32 = 5; // CG direction
+const R_HD: u32 = 6; // H·d (+λd)
+const R_SNEXT: u32 = 7; // candidate s + α·d
+const R_HS: u32 = 8; // H·s (+λs)
+const R_WTRY: u32 = 9; // trial iterate w + s
+const R_D: u32 = 10; // L-BFGS direction
+const R_Q: u32 = 11; // L-BFGS two-loop scratch
+const R_WPREV: u32 = 12; // previous iterate
+const R_GPREV: u32 = 13; // previous gradient
+const R_STMP: u32 = 14; // candidate curvature pair s
+const R_YTMP: u32 = 15; // candidate curvature pair y
+/// first (s, y) history slot; pair i occupies 16 + 2i / 17 + 2i
+const R_HIST: u32 = 16;
 
 /// Outer solver choice (Fig. 1 compares the two).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,34 +96,55 @@ impl Trainer for Tera {
 }
 
 impl Tera {
-    fn initial_w(&self, ctx: &TrainContext) -> Vec<f64> {
-        if self.warm_start {
-            common::sgd_warmstart(ctx.cluster, ctx.objective, self.warm_start_epochs, self.seed)
-        } else {
-            ctx.w0.clone()
-        }
+    /// Land the initial iterate in the replicated `R_W` register.
+    fn init_w(&self, ctx: &TrainContext) {
+        common::init_iterate(
+            ctx.cluster,
+            ctx.objective,
+            &ctx.w0,
+            self.warm_start.then_some((self.warm_start_epochs, self.seed)),
+            R_W,
+        );
+    }
+
+    /// The shared gradient prologue: grad combine into `R_GDATA`, full
+    /// gradient into `R_G`, returns (f, ‖g‖, ‖w‖²).
+    fn grad_prologue(&self, ctx: &TrainContext) -> (f64, f64, f64) {
+        let cluster = ctx.cluster;
+        let obj = ctx.objective;
+        let (loss_sum, _) = cluster.grad_combine_phase(
+            obj.loss,
+            VecRef::Reg(R_W),
+            &CombineSpec::sum_into(R_GDATA),
+        );
+        let dots = cluster.vec_phase(
+            &[
+                VecOp::Copy { dst: R_G, src: R_GDATA },
+                VecOp::Axpy { dst: R_G, a: obj.lambda, src: R_W },
+            ],
+            &[(R_G, R_G), (R_W, R_W)],
+        );
+        let (gg, ww) = (dots[0], dots[1]);
+        (0.5 * obj.lambda * ww + loss_sum, gg.sqrt(), ww)
     }
 
     /// Distributed TRON: trust-region Newton where every f/g/Hv is a
-    /// cluster operation.
+    /// cluster operation and the CG state is replicated register
+    /// bookkeeping — the driver steers with scalars only.
     fn train_tron(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
         let mut trace = Trace::new(&self.label(), "", cluster.p());
         let wall = Instant::now();
         cluster.reset_phase();
-        let mut w = self.initial_w(ctx);
+        self.init_w(ctx);
         let mut g0_norm = None;
         let mut radius: Option<f64> = None;
 
         for r in 0..ctx.max_outer {
             // the gradient phase caches every worker's margins z_p,
             // which the Hvp phases below multiply against
-            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
-            let f = obj.value_from(&w, loss_sum);
-            let mut g = data_grad;
-            obj.finish_grad(&w, &mut g);
-            let gnorm = linalg::norm(&g);
+            let (f, gnorm, _) = self.grad_prologue(ctx);
             let g0 = *g0_norm.get_or_insert(gnorm);
             trace.push(
                 r,
@@ -110,70 +154,114 @@ impl Tera {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;
             }
             let delta = *radius.get_or_insert(gnorm);
 
-            // ---- Steihaug CG with distributed Hv (1 AllReduce each) ----
-            let m = w.len();
-            let mut s = vec![0.0; m];
-            let mut res: Vec<f64> = g.iter().map(|&x| -x).collect();
-            let mut dvec = res.clone();
-            let r0 = linalg::norm(&res);
+            // ---- Steihaug CG with distributed Hv (1 AllReduce each);
+            // s, res, dvec replicate on every rank ----
+            let dots = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_RES, src: R_G },
+                    VecOp::Scale { dst: R_RES, a: -1.0 },
+                    VecOp::Copy { dst: R_DV, src: R_RES },
+                    VecOp::Zero { dst: R_S },
+                ],
+                &[(R_RES, R_RES)],
+            );
+            let r0 = dots[0].sqrt();
             let mut rr = r0 * r0;
             let mut hit_boundary = false;
             for _ in 0..self.max_cg {
                 if rr.sqrt() <= self.cg_tol * r0 {
                     break;
                 }
-                let mut hd = cluster.hvp_phase(obj.loss, &dvec);
-                linalg::axpy(obj.lambda, &dvec, &mut hd); // + λ·d (regularizer)
-                let dhd = linalg::dot(&dvec, &hd);
+                let _ = cluster.hvp_combine_phase(
+                    obj.loss,
+                    VecRef::Reg(R_DV),
+                    &CombineSpec::sum_into(R_HD),
+                );
+                // hd += λ·d (regularizer), then dhd = d·hd
+                let dots = cluster.vec_phase(
+                    &[VecOp::Axpy { dst: R_HD, a: obj.lambda, src: R_DV }],
+                    &[(R_DV, R_HD)],
+                );
+                let dhd = dots[0];
                 if dhd <= 0.0 {
                     hit_boundary = true;
                     break;
                 }
                 let alpha = rr / dhd;
-                let mut s_next = s.clone();
-                linalg::axpy(alpha, &dvec, &mut s_next);
-                if linalg::norm(&s_next) >= delta {
+                // materialize s + α·d so its norm has the exact bits
+                // the driver-side candidate used to have
+                let dots = cluster.vec_phase(
+                    &[
+                        VecOp::Copy { dst: R_SNEXT, src: R_S },
+                        VecOp::Axpy { dst: R_SNEXT, a: alpha, src: R_DV },
+                    ],
+                    &[(R_SNEXT, R_SNEXT)],
+                );
+                if dots[0].sqrt() >= delta {
                     // walk to the boundary
-                    let dd = linalg::dot(&dvec, &dvec);
-                    let sd = linalg::dot(&s, &dvec);
-                    let ss = linalg::dot(&s, &s);
+                    let dots = cluster
+                        .vec_phase(&[], &[(R_DV, R_DV), (R_S, R_DV), (R_S, R_S)]);
+                    let (dd, sd, ss) = (dots[0], dots[1], dots[2]);
                     let disc = (sd * sd + dd * (delta * delta - ss)).max(0.0);
                     let tau = (-sd + disc.sqrt()) / dd.max(1e-300);
-                    linalg::axpy(tau, &dvec, &mut s);
+                    cluster.vec_phase(&[VecOp::Axpy { dst: R_S, a: tau, src: R_DV }], &[]);
                     hit_boundary = true;
                     break;
                 }
-                s = s_next;
-                linalg::axpy(-alpha, &hd, &mut res);
-                let rr_new = linalg::dot(&res, &res);
+                // s ← s_next; res ← res − α·hd; dvec ← res + β·dvec
+                let dots = cluster.vec_phase(
+                    &[
+                        VecOp::Copy { dst: R_S, src: R_SNEXT },
+                        VecOp::Axpy { dst: R_RES, a: -alpha, src: R_HD },
+                    ],
+                    &[(R_RES, R_RES)],
+                );
+                let rr_new = dots[0];
                 let beta = rr_new / rr;
                 rr = rr_new;
-                linalg::axpby(1.0, &res, beta, &mut dvec);
+                cluster.vec_phase(
+                    &[VecOp::Axpby { dst: R_DV, a: 1.0, src: R_RES, b: beta }],
+                    &[],
+                );
             }
 
             // predicted reduction (needs one more Hv)
-            let mut hs = cluster.hvp_phase(obj.loss, &s);
-            linalg::axpy(obj.lambda, &s, &mut hs);
-            let predicted = -(linalg::dot(&g, &s) + 0.5 * linalg::dot(&s, &hs));
+            let _ = cluster.hvp_combine_phase(
+                obj.loss,
+                VecRef::Reg(R_S),
+                &CombineSpec::sum_into(R_HS),
+            );
+            let dots = cluster.vec_phase(
+                &[VecOp::Axpy { dst: R_HS, a: obj.lambda, src: R_S }],
+                &[(R_G, R_S), (R_S, R_HS)],
+            );
+            let predicted = -(dots[0] + 0.5 * dots[1]);
 
             // actual reduction: one data pass, scalar aggregation only
-            let mut w_try = w.clone();
-            linalg::accum(&mut w_try, &s);
-            let f_try = obj.value_from(&w_try, cluster.loss_phase(obj.loss, &w_try));
+            let dots = cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_WTRY, src: R_W },
+                    VecOp::Axpy { dst: R_WTRY, a: 1.0, src: R_S },
+                ],
+                &[(R_WTRY, R_WTRY)],
+            );
+            let wtry2 = dots[0];
+            let f_try = 0.5 * obj.lambda * wtry2
+                + cluster.loss_phase(obj.loss, VecRef::Reg(R_WTRY));
             let rho = if predicted.abs() < 1e-300 {
                 1.0
             } else {
                 (f - f_try) / predicted
             };
             if rho > 1e-4 {
-                w = w_try;
+                cluster.vec_phase(&[VecOp::Copy { dst: R_W, src: R_WTRY }], &[]);
                 if rho > 0.75 && hit_boundary {
                     radius = Some(delta * 2.0);
                 }
@@ -181,29 +269,38 @@ impl Tera {
                 radius = Some(delta * 0.25);
             }
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 
     /// Distributed L-BFGS with the cached-margin Armijo–Wolfe search.
+    /// The (s, y) history pairs are differences of replicated vectors,
+    /// so they live in ring-allocated registers; the two-loop recursion
+    /// is register bookkeeping steered by replicated dot products.
     fn train_lbfgs(&self, ctx: &TrainContext) -> (Vec<f64>, Trace) {
         let cluster = ctx.cluster;
         let obj = ctx.objective;
+        // the ring-allocated history must stay below the reserved
+        // helper register band (a colliding slot would silently corrupt
+        // live (s, y) pairs — the register file errors only on unset
+        // registers, never on ownership)
+        assert!(
+            R_HIST + 2 * self.memory as u32 <= common::HELPER_REG_BASE,
+            "l-bfgs memory {} overflows the method register band",
+            self.memory
+        );
         let mut trace = Trace::new(&self.label(), "", cluster.p());
         let wall = Instant::now();
         cluster.reset_phase();
-        let mut w = self.initial_w(ctx);
+        self.init_w(ctx);
         let mut g0_norm = None;
-        let mut history: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::new(); // (s, y, 1/yᵀs)
+        // (s register, y register, 1/yᵀs) — values replicated worker-side
+        let mut history: Vec<(u32, u32, f64)> = Vec::new();
         let mut gamma = 1.0;
-        let mut prev: Option<(Vec<f64>, Vec<f64>)> = None; // (w, g)
+        let mut have_prev = false;
 
         for r in 0..ctx.max_outer {
             // margins z_p cached worker-side for the line search below
-            let (loss_sum, data_grad) = cluster.grad_phase(obj.loss, &w);
-            let f = obj.value_from(&w, loss_sum);
-            let mut g = data_grad;
-            obj.finish_grad(&w, &mut g);
-            let gnorm = linalg::norm(&g);
+            let (f, gnorm, ww) = self.grad_prologue(ctx);
             let g0 = *g0_norm.get_or_insert(gnorm);
             trace.push(
                 r,
@@ -213,61 +310,107 @@ impl Tera {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc(&w),
+                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;
             }
 
-            if let Some((w_prev, g_prev)) = &prev {
-                let s = linalg::sub(&w, w_prev);
-                let y = linalg::sub(&g, g_prev);
-                let ys = linalg::dot(&y, &s);
-                if ys > 1e-12 * linalg::dot(&s, &s).max(1e-300) {
-                    gamma = ys / linalg::dot(&y, &y).max(1e-300);
-                    history.push((s, y, 1.0 / ys));
-                    if history.len() > self.memory {
-                        history.remove(0);
+            if have_prev {
+                // candidate pair s = w − w_prev, y = g − g_prev, formed
+                // in scratch so a rejected pair can't corrupt history
+                let dots = cluster.vec_phase(
+                    &[
+                        VecOp::Copy { dst: R_STMP, src: R_W },
+                        VecOp::Axpy { dst: R_STMP, a: -1.0, src: R_WPREV },
+                        VecOp::Copy { dst: R_YTMP, src: R_G },
+                        VecOp::Axpy { dst: R_YTMP, a: -1.0, src: R_GPREV },
+                    ],
+                    &[(R_YTMP, R_STMP), (R_STMP, R_STMP), (R_YTMP, R_YTMP)],
+                );
+                let (ys, ss, yy) = (dots[0], dots[1], dots[2]);
+                if ys > 1e-12 * ss.max(1e-300) {
+                    gamma = ys / yy.max(1e-300);
+                    // memory 0 degrades to memoryless L-BFGS (γ-scaled
+                    // steepest descent), like the legacy push-then-trim
+                    if self.memory > 0 {
+                        // evicting the oldest pair frees its registers
+                        let (sr, yr) = if history.len() == self.memory {
+                            let (sr, yr, _) = history.remove(0);
+                            (sr, yr)
+                        } else {
+                            let k = history.len() as u32;
+                            (R_HIST + 2 * k, R_HIST + 2 * k + 1)
+                        };
+                        cluster.vec_phase(
+                            &[
+                                VecOp::Copy { dst: sr, src: R_STMP },
+                                VecOp::Copy { dst: yr, src: R_YTMP },
+                            ],
+                            &[],
+                        );
+                        history.push((sr, yr, 1.0 / ys));
                     }
                 }
             }
-            prev = Some((w.clone(), g.clone()));
+            cluster.vec_phase(
+                &[
+                    VecOp::Copy { dst: R_WPREV, src: R_W },
+                    VecOp::Copy { dst: R_GPREV, src: R_G },
+                ],
+                &[],
+            );
+            have_prev = true;
 
-            // two-loop on replicated state (no communication)
-            let mut q = g.clone();
+            // two-loop on replicated registers (free bookkeeping; the
+            // driver only reads the a/b coefficients' dot products).
+            // Each phase carries the previous step's register update,
+            // so the recursion costs one round trip per dependent dot
+            // instead of two — ops run before dots inside a VecOps
+            // phase, and the op order is identical to the unfused loop.
+            let mut pending = vec![VecOp::Copy { dst: R_Q, src: R_G }];
             let mut alphas = Vec::with_capacity(history.len());
-            for (s, y, rho) in history.iter().rev() {
-                let a = rho * linalg::dot(s, &q);
-                linalg::axpy(-a, y, &mut q);
+            for &(sr, yr, rho) in history.iter().rev() {
+                let a = rho * cluster.vec_phase(&pending, &[(sr, R_Q)])[0];
+                pending = vec![VecOp::Axpy { dst: R_Q, a: -a, src: yr }];
                 alphas.push(a);
             }
-            linalg::scale(gamma, &mut q);
-            for ((s, y, rho), &a) in history.iter().zip(alphas.iter().rev()) {
-                let b = rho * linalg::dot(y, &q);
-                linalg::axpy(a - b, s, &mut q);
+            pending.push(VecOp::Scale { dst: R_Q, a: gamma });
+            for (&(sr, yr, rho), &a) in history.iter().zip(alphas.iter().rev()) {
+                let b = rho * cluster.vec_phase(&pending, &[(yr, R_Q)])[0];
+                pending = vec![VecOp::Axpy { dst: R_Q, a: a - b, src: sr }];
             }
-            let mut d: Vec<f64> = q.iter().map(|&x| -x).collect();
-            let mut gd = linalg::dot(&g, &d);
+            // d = −q, fused with the recursion's final update
+            pending.push(VecOp::Copy { dst: R_D, src: R_Q });
+            pending.push(VecOp::Scale { dst: R_D, a: -1.0 });
+            let dots =
+                cluster.vec_phase(&pending, &[(R_G, R_D), (R_W, R_D), (R_D, R_D)]);
+            let (mut gd, mut w_dot_d, mut d_dot_d) = (dots[0], dots[1], dots[2]);
             if gd >= 0.0 {
-                d = g.iter().map(|&x| -x).collect();
-                gd = -linalg::dot(&g, &g);
+                let dots = cluster.vec_phase(
+                    &[
+                        VecOp::Copy { dst: R_D, src: R_G },
+                        VecOp::Scale { dst: R_D, a: -1.0 },
+                    ],
+                    &[(R_G, R_D), (R_W, R_D), (R_D, R_D)],
+                );
+                gd = dots[0];
+                w_dot_d = dots[1];
+                d_dot_d = dots[2];
             }
 
             // line search over cached margins: 1 compute pass for e, then
             // scalar rounds only
-            cluster.dirs_phase(&d);
-            let w_dot_d = linalg::dot(&w, &d);
-            let d_dot_d = linalg::dot(&d, &d);
+            cluster.dirs_phase(VecRef::Reg(R_D));
             let res = LineSearch::default().search(f, gd, |t| {
                 let (phi, dphi) = cluster.linesearch_phase(obj.loss, t);
-                let reg = 0.5
-                    * obj.lambda
-                    * (linalg::dot(&w, &w) + 2.0 * t * w_dot_d + t * t * d_dot_d);
+                let reg =
+                    0.5 * obj.lambda * (ww + 2.0 * t * w_dot_d + t * t * d_dot_d);
                 (phi + reg, dphi + obj.lambda * (w_dot_d + t * d_dot_d))
             });
-            linalg::axpy(res.t, &d, &mut w);
+            cluster.vec_phase(&[VecOp::Axpy { dst: R_W, a: res.t, src: R_D }], &[]);
         }
-        (w, trace)
+        (cluster.fetch_reg(R_W), trace)
     }
 }
 

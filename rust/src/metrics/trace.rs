@@ -33,6 +33,11 @@ pub struct IterRecord {
     /// cumulative real data-plane bytes moved worker ⇄ worker over the
     /// p2p mesh (0 for in-process and the star data plane)
     pub net_data_bytes: f64,
+    /// cumulative m-sized f64 payload bytes that crossed a driver link
+    /// in either direction (inline vector refs, register loads/fetches,
+    /// star part gathers and sum broadcasts). The scalar-only driver
+    /// invariant: constant after round 0 under the p2p data plane.
+    pub driver_data_bytes: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -85,6 +90,7 @@ impl Trace {
             meas_reduce_secs: net.reduce_secs,
             net_bytes: net.bytes_total() as f64,
             net_data_bytes: net.data_bytes as f64,
+            driver_data_bytes: net.driver_data_bytes as f64,
             f,
             grad_norm,
             auprc,
@@ -133,12 +139,12 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "iter,comm_passes,sim_secs,sim_compute_secs,sim_comm_secs,wall_secs,\
-             meas_phase_secs,meas_reduce_secs,net_bytes,net_data_bytes,f,grad_norm,\
-             auprc\n",
+             meas_phase_secs,meas_reduce_secs,net_bytes,net_data_bytes,\
+             driver_data_bytes,f,grad_norm,auprc\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.comm_passes,
                 r.sim_secs,
@@ -149,6 +155,7 @@ impl Trace {
                 r.meas_reduce_secs,
                 r.net_bytes,
                 r.net_data_bytes,
+                r.driver_data_bytes,
                 r.f,
                 r.grad_norm,
                 r.auprc
@@ -220,6 +227,16 @@ impl Trace {
                 ),
             ),
             (
+                "driver_data_bytes",
+                arr_f64(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| r.driver_data_bytes)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
                 "f",
                 arr_f64(&self.records.iter().map(|r| r.f).collect::<Vec<_>>()),
             ),
@@ -251,6 +268,7 @@ mod tests {
             net.phase_secs += 0.01;
             net.bytes_rx += 1000;
             net.data_bytes += 300;
+            net.driver_data_bytes += 40;
             t.push(
                 i,
                 &clock,
@@ -283,6 +301,8 @@ mod tests {
         assert_eq!(t.records[0].net_bytes, 1000.0);
         assert_eq!(t.records[4].net_data_bytes, 1500.0);
         assert_eq!(t.records[0].net_data_bytes, 300.0);
+        assert_eq!(t.records[4].driver_data_bytes, 200.0);
+        assert_eq!(t.records[0].driver_data_bytes, 40.0);
         assert_eq!(t.records[4].meas_reduce_secs, 0.0);
     }
 
@@ -313,6 +333,15 @@ mod tests {
             parsed.get("net_data_bytes").unwrap().as_arr().unwrap().len(),
             5
         );
+        assert_eq!(
+            parsed
+                .get("driver_data_bytes")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            5
+        );
         assert!(parsed.get("sim_secs").is_some());
     }
 
@@ -323,13 +352,13 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 13);
-        assert!(lines[0].contains(",net_bytes,net_data_bytes,"));
+        assert_eq!(lines[0].split(',').count(), 14);
+        assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 13, "{line}");
+            assert_eq!(line.split(',').count(), 14, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(10).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(11).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 

@@ -10,6 +10,19 @@
 //! (anchor margins z_p, direction margins e_p, the local gradient
 //! ∇L_p, BFGS curvature and its cross-iteration history) lives in
 //! [`WorkerState`] and never needs to cross the wire.
+//!
+//! The **replicated register file** also lives here: every combine
+//! phase leaves its result replicated on all ranks (that is what an
+//! AllReduce does), so the combined vectors — the iterate w, the
+//! reduced gradient, directions, consensus iterates — are cached in
+//! numbered registers and referenced by later commands
+//! ([`super::VecRef::Reg`]) instead of being re-shipped by the driver.
+//! The combine arithmetic ([`pre_combine`], [`complete_combine`]) and
+//! the free register bookkeeping ([`apply_vec_ops`]) are shared
+//! verbatim by the in-process transport, the TCP star plane (the
+//! driver ships the plan sums back for the rank-side epilogue) and the
+//! TCP p2p plane (the mesh leaves the sums on every rank), which is
+//! what keeps all three bitwise identical.
 
 use crate::approx::{
     self, ApproxKind, BfgsCurvature, LocalApprox, MaskedApprox, ProxLocal, ProxWrap,
@@ -20,7 +33,9 @@ use crate::objective::ShardCompute;
 use crate::optim::{self, tron::Tron, InnerOptimizer};
 use crate::util::rng::Pcg64;
 
-use super::{Command, DualUpdateSpec, LocalSolveSpec, Reply};
+use super::{
+    Combine, CombineSpec, Command, DualUpdateSpec, LocalSolveSpec, Reply, VecOp, VecRef,
+};
 
 /// Per-worker session state (one per shard, reset by [`Command::Reset`]).
 #[derive(Clone, Debug)]
@@ -42,14 +57,20 @@ pub struct WorkerState {
     admm_w: Vec<f64>,
     /// ADMM per-node scaled dual u_p
     admm_u: Vec<f64>,
-    /// ADMM consensus iterate z, cached from `DualUpdate` so the next
-    /// proximal solve doesn't need it re-broadcast
+    /// ADMM consensus iterate z, cached by the `AdmmConsensus` combine
+    /// (and the proximal init) so it never needs re-broadcasting
     admm_z: Vec<f64>,
     /// CoCoA per-node dual block α_p (lazily sized to the shard)
     cocoa_alpha: Vec<f64>,
     /// feature-partitioned FADL: this rank's coordinate mask, cached
     /// from the first `FeatureSolve` (the partition is static per run)
     feature_mask: Vec<bool>,
+    /// per-feature coverage counts over ALL subsets (the
+    /// `CoverageDirection` combine divisor), cached with the mask
+    feature_coverage: Vec<f64>,
+    /// the replicated register file: combined results and their
+    /// replicated derivations (an empty slot is "unset")
+    regs: Vec<Vec<f64>>,
 }
 
 impl WorkerState {
@@ -67,6 +88,8 @@ impl WorkerState {
             admm_z: Vec::new(),
             cocoa_alpha: Vec::new(),
             feature_mask: Vec::new(),
+            feature_coverage: Vec::new(),
+            regs: Vec::new(),
         }
     }
 
@@ -81,7 +104,130 @@ impl WorkerState {
         self.admm_z.clear();
         self.cocoa_alpha.clear();
         self.feature_mask.clear();
+        self.feature_coverage.clear();
+        self.regs.clear();
     }
+
+    /// Read register `i`; an unset (never-written) register is an error
+    /// — a method bug, not a recoverable condition.
+    pub fn reg(&self, i: u32) -> Result<&[f64], String> {
+        match self.regs.get(i as usize) {
+            Some(v) if !v.is_empty() => Ok(v),
+            _ => Err(format!("rank {}: register r{i} is unset", self.rank)),
+        }
+    }
+
+    /// Write register `i`, growing the file as needed.
+    pub fn set_reg(&mut self, i: u32, v: Vec<f64>) {
+        let i = i as usize;
+        if self.regs.len() <= i {
+            self.regs.resize_with(i + 1, Vec::new);
+        }
+        self.regs[i] = v;
+    }
+
+    /// Mutable view of register `i` (must be set).
+    fn reg_mut(&mut self, i: u32) -> Result<&mut [f64], String> {
+        let rank = self.rank;
+        match self.regs.get_mut(i as usize) {
+            Some(v) if !v.is_empty() => Ok(v),
+            _ => Err(format!("rank {rank}: register r{i} is unset")),
+        }
+    }
+
+    /// Simultaneous (src &, dst &mut) views of two distinct registers —
+    /// the in-place half of the axpy-style ops (no per-op clones on the
+    /// register hot path).
+    fn reg_pair(&mut self, src: u32, dst: u32) -> Result<(&[f64], &mut [f64]), String> {
+        if src == dst {
+            return Err(format!("rank {}: aliased register op on r{src}", self.rank));
+        }
+        let (s, d) = (src as usize, dst as usize);
+        for (name, i) in [(src, s), (dst, d)] {
+            if self.regs.get(i).map(Vec::is_empty).unwrap_or(true) {
+                return Err(format!("rank {}: register r{name} is unset", self.rank));
+            }
+        }
+        let hi = s.max(d);
+        let (lo_part, hi_part) = self.regs.split_at_mut(hi);
+        if s < d {
+            Ok((&lo_part[s], &mut hi_part[0]))
+        } else {
+            Ok((&hi_part[0], &mut lo_part[d]))
+        }
+    }
+}
+
+/// Resolve a command's vector input: clone of the inline payload or of
+/// the referenced register. The deliberate O(m) copy keeps `exec`'s
+/// `&mut WorkerState` borrow simple (several commands mutate state the
+/// resolved vector was read from); it is one copy per phase, the same
+/// order as materializing the reply itself.
+fn resolve_vec(st: &WorkerState, r: &VecRef, what: &str) -> Result<Vec<f64>, String> {
+    match r {
+        VecRef::Inline(v) => Ok(v.clone()),
+        VecRef::Reg(i) => st
+            .reg(*i)
+            .map(<[f64]>::to_vec)
+            .map_err(|e| format!("{what}: {e}")),
+    }
+}
+
+/// Apply a free register-bookkeeping op list (the replicated half of
+/// what used to be driver-side vector arithmetic). `m` sizes `Zero`;
+/// the in-place ops mutate the register file directly — this is the
+/// hot path of the CG/L-BFGS register programs, so no per-op clones.
+pub fn apply_vec_ops(st: &mut WorkerState, ops: &[VecOp], m: usize) -> Result<(), String> {
+    for op in ops {
+        match *op {
+            VecOp::Copy { dst, src } => {
+                let v = st.reg(src)?.to_vec();
+                st.set_reg(dst, v);
+            }
+            VecOp::Zero { dst } => st.set_reg(dst, vec![0.0; m]),
+            VecOp::Scale { dst, a } => linalg::scale(a, st.reg_mut(dst)?),
+            VecOp::Axpy { dst, a, src } => {
+                let (x, y) = st.reg_pair(src, dst)?;
+                if x.len() != y.len() {
+                    return Err(format!(
+                        "axpy r{dst} += {a}·r{src}: lengths {} vs {}",
+                        y.len(),
+                        x.len()
+                    ));
+                }
+                linalg::axpy(a, x, y);
+            }
+            VecOp::Axpby { dst, a, src, b } => {
+                let (x, y) = st.reg_pair(src, dst)?;
+                if x.len() != y.len() {
+                    return Err(format!(
+                        "axpby r{dst}: lengths {} vs {}",
+                        y.len(),
+                        x.len()
+                    ));
+                }
+                linalg::axpby(a, x, b, y);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The replicated dot products a phase returns to the scalar-only
+/// driver (identical on every rank — pure functions of replicated
+/// registers).
+pub fn compute_dots(st: &WorkerState, pairs: &[(u32, u32)]) -> Result<Vec<f64>, String> {
+    pairs
+        .iter()
+        .map(|&(a, b)| {
+            let x = st.reg(a)?;
+            let y = st.reg(b)?;
+            if x.len() != y.len() {
+                return Err(format!("dot(r{a}, r{b}): lengths {} vs {}", x.len(), y.len()));
+            }
+            Ok(linalg::dot(x, y))
+        })
+        .collect()
 }
 
 /// Execute one phase command against a shard. Pure compute — no clock,
@@ -97,7 +243,8 @@ pub fn exec(
             Ok(Reply::Ack { units: 0.0 })
         }
         Command::Grad { loss, w } => {
-            let (loss_val, grad, z) = shard.loss_grad(*loss, w);
+            let w = resolve_vec(st, w, "grad")?;
+            let (loss_val, grad, z) = shard.loss_grad(*loss, &w);
             st.margins = z;
             st.local_grad = grad.clone();
             // two passes × 2 flops/nz (Appendix A)
@@ -105,7 +252,8 @@ pub fn exec(
             Ok(Reply::Grad { loss: loss_val, grad, units })
         }
         Command::Dirs { d } => {
-            st.dirs = shard.margins(d);
+            let d = resolve_vec(st, d, "dirs")?;
+            st.dirs = shard.margins(&d);
             Ok(Reply::Ack { units: 2.0 * shard.nnz() as f64 })
         }
         Command::Linesearch { loss, t } => {
@@ -130,33 +278,36 @@ pub fn exec(
                     st.rank
                 ));
             }
+            let anchor = resolve_vec(st, &spec.anchor, "inner solve anchor")?;
+            let full_grad = resolve_vec(st, &spec.full_grad, "inner solve grad")?;
             if spec.kind == ApproxKind::Bfgs {
-                let data_grad = spec.data_grad.as_ref().ok_or_else(|| {
-                    "BFGS inner solve needs the reduced data gradient".to_string()
-                })?;
+                let data_grad = match &spec.data_grad {
+                    Some(r) => resolve_vec(st, r, "inner solve data grad")?,
+                    None => {
+                        return Err(
+                            "BFGS inner solve needs the reduced data gradient".to_string()
+                        )
+                    }
+                };
                 if let Some((w_prev, dg_prev, lg_prev)) = &st.prev {
                     // y = Δ[∇(L − L_p)] for this node (as in Fadl::train
                     // before the transport refactor — op order preserved
                     // for bitwise identity)
-                    let s = linalg::sub(&spec.anchor, w_prev);
-                    let mut y = linalg::sub(data_grad, dg_prev);
+                    let s = linalg::sub(&anchor, w_prev);
+                    let mut y = linalg::sub(&data_grad, dg_prev);
                     let dl = linalg::sub(&st.local_grad, lg_prev);
                     linalg::axpy(-1.0, &dl, &mut y);
                     st.bfgs.update(&s, &y);
                 }
-                st.prev = Some((
-                    spec.anchor.clone(),
-                    data_grad.clone(),
-                    st.local_grad.clone(),
-                ));
+                st.prev = Some((anchor.clone(), data_grad, st.local_grad.clone()));
             }
             let ctx_p = approx::ApproxContext {
                 shard,
                 loss: spec.loss,
                 lambda: spec.lambda,
                 p_nodes: st.p as f64,
-                anchor: spec.anchor.clone(),
-                full_grad: spec.full_grad.clone(),
+                anchor,
+                full_grad,
                 local_grad: st.local_grad.clone(),
                 anchor_margins: st.margins.clone(),
             };
@@ -170,11 +321,14 @@ pub fn exec(
         Command::Warmstart { loss, lambda, epochs, seed } => {
             let (w, counts, units) =
                 local_warmstart(shard, st.rank, *loss, *lambda, *epochs as usize, *seed);
-            Ok(Reply::Warm {
-                w,
-                counts: counts.into_iter().map(f64::from).collect(),
-                units,
-            })
+            let counts: Vec<f64> = counts.into_iter().map(f64::from).collect();
+            // the per-feature weighting w_j·c_j happens here (the exact
+            // per-element products the driver-side §4.3 combine used to
+            // form), so the `WeightedAvg` combine reduces (Σ w⊙c, Σ c)
+            // and divides — all worker-side
+            let weighted: Vec<f64> =
+                w.iter().zip(&counts).map(|(wj, cj)| wj * cj).collect();
+            Ok(Reply::Warm { w: weighted, counts, units })
         }
         Command::Hvp { loss, s } => {
             if st.margins.len() != shard.n() {
@@ -185,34 +339,60 @@ pub fn exec(
                     shard.n()
                 ));
             }
-            let hv = shard.hvp(*loss, &st.margins, s);
+            let s = resolve_vec(st, s, "hvp")?;
+            let hv = shard.hvp(*loss, &st.margins, &s);
             // fused Xᵀ(D(X·s)): two passes × 2 flops/nz (Appendix A)
             Ok(Reply::Vector { v: hv, units: 2.0 * 2.0 * shard.nnz() as f64 })
         }
         Command::LossEval { loss, w } => {
-            let v = shard.loss_value(*loss, w);
+            let w = resolve_vec(st, w, "loss eval")?;
+            let v = shard.loss_value(*loss, &w);
             Ok(Reply::Scalar { v, units: 2.0 * shard.nnz() as f64 })
         }
         Command::LocalSolve(spec) => local_solve(shard, st, spec),
         Command::DualUpdate(spec) => match spec {
-            DualUpdateSpec::AdmmDual { z } => {
-                if st.admm_w.len() != z.len() || st.admm_u.len() != z.len() {
+            DualUpdateSpec::AdmmDual => {
+                let m = shard.m();
+                if st.admm_w.len() != m || st.admm_u.len() != m || st.admm_z.len() != m {
                     return Err(format!(
                         "admm dual update before a proximal solve (rank {})",
                         st.rank
                     ));
                 }
-                for j in 0..z.len() {
-                    st.admm_u[j] += st.admm_w[j] - z[j];
+                // u_p ← u_p + w_p − z, against the z cached by the
+                // consensus combine — no payload crosses the wire
+                for j in 0..m {
+                    st.admm_u[j] += st.admm_w[j] - st.admm_z[j];
                 }
-                // cache z: the next AdmmProx uses it without the driver
-                // re-broadcasting the same vector
-                st.admm_z = z.clone();
                 // O(m) bookkeeping — free, like the driver-side loop it
                 // replaces (the residual round is charged by the driver)
-                Ok(Reply::Scalar { v: linalg::dist_sq(&st.admm_w, z), units: 0.0 })
+                Ok(Reply::Scalar {
+                    v: linalg::dist_sq(&st.admm_w, &st.admm_z),
+                    units: 0.0,
+                })
             }
         },
+        Command::VecOps { ops, dots } => {
+            apply_vec_ops(st, ops, shard.m())?;
+            let vals = compute_dots(st, dots)?;
+            Ok(Reply::Dots { vals, units: 0.0 })
+        }
+        Command::SetReg { reg, v } => {
+            st.set_reg(*reg, v.clone());
+            Ok(Reply::Ack { units: 0.0 })
+        }
+        Command::FetchReg { reg } => {
+            // replicated registers hold identical bits on every rank;
+            // only rank 0's reply carries the payload so a star gather
+            // doesn't move P copies
+            let v = if st.rank == 0 {
+                st.reg(*reg)?.to_vec()
+            } else {
+                st.reg(*reg)?; // still validate the register exists
+                Vec::new()
+            };
+            Ok(Reply::Vector { v, units: 0.0 })
+        }
     }
 }
 
@@ -227,12 +407,13 @@ fn local_solve(
         LocalSolveSpec::AdmmProx { loss, rho, local_iters, init, u_scale, z } => {
             let m = shard.m();
             if *init {
+                let z = resolve_vec(st, z, "admm prox init")?;
                 if z.len() != m {
                     return Err(format!("admm prox init: |z| = {} but m = {m}", z.len()));
                 }
                 st.admm_w = z.clone();
                 st.admm_u = vec![0.0; m];
-                st.admm_z = z.clone();
+                st.admm_z = z;
             }
             if st.admm_w.len() != m || st.admm_z.len() != m {
                 return Err(format!(
@@ -265,7 +446,7 @@ fn local_solve(
                 st.cocoa_alpha = vec![0.0; n];
             }
             let mut alpha = st.cocoa_alpha.clone();
-            let mut w_loc = w.clone();
+            let mut w_loc = resolve_vec(st, w, "cocoa sdca")?;
             let mut delta_w = vec![0.0; m];
             if n > 0 {
                 let steps = ((n as f64) * epochs).ceil() as usize;
@@ -311,19 +492,21 @@ fn local_solve(
                     st.rank
                 ));
             }
+            let anchor = resolve_vec(st, anchor, "ssz anchor")?;
+            let full_grad = resolve_vec(st, full_grad, "ssz grad")?;
+            let grad_shift = resolve_vec(st, grad_shift, "ssz shift")?;
             let ctx_p = approx::ApproxContext {
                 shard,
                 loss: *loss,
                 lambda: *lambda,
                 p_nodes: st.p as f64,
                 anchor: anchor.clone(),
-                full_grad: full_grad.clone(),
+                full_grad,
                 local_grad: st.local_grad.clone(),
                 anchor_margins: st.margins.clone(),
             };
             let inner = approx::build(ApproxKind::Nonlinear, ctx_p, None);
-            let mut prox =
-                ProxWrap::new(inner, *mu, grad_shift.clone(), anchor.clone());
+            let mut prox = ProxWrap::new(inner, *mu, grad_shift, anchor);
             let res = Tron::default().minimize(&mut prox, *local_iters as usize);
             let units = prox.passes() * 2.0 * shard.nnz() as f64;
             Ok(Reply::Solve { w: res.w, n: shard.n(), units })
@@ -337,8 +520,10 @@ fn local_solve(
             }
             let m = shard.m();
             if !subsets.is_empty() {
-                // first round: pick and cache this rank's mask (the
-                // partition is static, so later rounds ship no subsets)
+                // first round: pick and cache this rank's mask AND the
+                // per-feature coverage counts over all subsets (the
+                // `CoverageDirection` combine divisor) — the partition
+                // is static, so later rounds ship no subsets
                 let subset = subsets.get(st.rank).ok_or_else(|| {
                     format!(
                         "feature solve: {} subsets for rank {}",
@@ -354,7 +539,20 @@ fn local_solve(
                     }
                     mask[j] = true;
                 }
+                let mut coverage = vec![0.0f64; m];
+                for s in subsets {
+                    for &j in s {
+                        let j = j as usize;
+                        if j >= m {
+                            return Err(format!(
+                                "feature solve: feature {j} out of range"
+                            ));
+                        }
+                        coverage[j] += 1.0;
+                    }
+                }
                 st.feature_mask = mask;
+                st.feature_coverage = coverage;
             }
             if st.feature_mask.len() != m {
                 return Err(format!(
@@ -362,13 +560,15 @@ fn local_solve(
                     st.rank
                 ));
             }
+            let anchor = resolve_vec(st, anchor, "feature solve anchor")?;
+            let full_grad = resolve_vec(st, full_grad, "feature solve grad")?;
             let ctx_p = approx::ApproxContext {
                 shard,
                 loss: *loss,
                 lambda: *lambda,
                 p_nodes: st.p as f64,
-                anchor: anchor.clone(),
-                full_grad: full_grad.clone(),
+                anchor,
+                full_grad,
                 local_grad: st.local_grad.clone(),
                 anchor_margins: st.margins.clone(),
             };
@@ -379,6 +579,173 @@ fn local_solve(
             Ok(Reply::Solve { w: res.w, n: shard.n(), units })
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Combine-plane helpers (shared verbatim by every transport/data plane)
+// ---------------------------------------------------------------------------
+
+/// Take the reducible vectors out of a combine-phase reply (scalar
+/// payloads — losses, n_p, cost units — stay behind). Most replies
+/// carry one vector; `Warm` carries the (weighted, counts) pair the
+/// `WeightedAvg` combine reduces with two plan executions.
+pub fn take_combine_vectors(reply: &mut Reply) -> Result<Vec<Vec<f64>>, String> {
+    match reply {
+        Reply::Grad { grad, .. } => Ok(vec![std::mem::take(grad)]),
+        Reply::Vector { v, .. } => Ok(vec![std::mem::take(v)]),
+        Reply::Solve { w, .. } => Ok(vec![std::mem::take(w)]),
+        Reply::Warm { w, counts, .. } => {
+            Ok(vec![std::mem::take(w), std::mem::take(counts)])
+        }
+        other => Err(format!("reply {other:?} carries no reducible vector")),
+    }
+}
+
+/// Put part vectors back into the reply they were taken from (the TCP
+/// star plane rides the reply slots to carry pre-transformed parts to
+/// the driver's plan execution).
+pub fn put_combine_vectors(reply: &mut Reply, mut vecs: Vec<Vec<f64>>) -> Result<(), String> {
+    let want = match reply {
+        Reply::Warm { .. } => 2,
+        Reply::Grad { .. } | Reply::Vector { .. } | Reply::Solve { .. } => 1,
+        other => return Err(format!("reply {other:?} carries no reducible vector")),
+    };
+    if vecs.len() != want {
+        return Err(format!("{} vectors for a {want}-slot reply", vecs.len()));
+    }
+    match reply {
+        Reply::Grad { grad, .. } => *grad = vecs.pop().unwrap(),
+        Reply::Vector { v, .. } => *v = vecs.pop().unwrap(),
+        Reply::Solve { w, .. } => *w = vecs.pop().unwrap(),
+        Reply::Warm { w, counts, .. } => {
+            *counts = vecs.pop().unwrap();
+            *w = vecs.pop().unwrap();
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+/// The per-rank pre-sum transform of a combine: this rank's weight and,
+/// for the direction combines, the anchor-relative difference — exactly
+/// the per-part arithmetic the driver-side combines used to apply
+/// before the AllReduce, so the plan's summation input (and therefore
+/// every bit of the result) is unchanged.
+pub fn pre_combine(
+    st: &WorkerState,
+    spec: &CombineSpec,
+    rank: usize,
+    vectors: &mut [Vec<f64>],
+) -> Result<(), String> {
+    if vectors.is_empty() {
+        return Err("combine with no reply vectors".into());
+    }
+    if !spec.weights.is_empty() && spec.weights.len() != st.p {
+        return Err(format!(
+            "combine weights list has {} entries for P = {}",
+            spec.weights.len(),
+            st.p
+        ));
+    }
+    let weight = spec.weights.get(rank).copied().unwrap_or(1.0);
+    match &spec.kind {
+        Combine::Direction { anchor } => {
+            let a = st.reg(*anchor)?;
+            let v = &mut vectors[0];
+            if a.len() != v.len() {
+                return Err(format!(
+                    "direction combine: |anchor| = {} but |v_p| = {}",
+                    a.len(),
+                    v.len()
+                ));
+            }
+            // d_p = weight·(v_p − anchor), op-for-op the driver combine
+            let mut d = linalg::sub(v, a);
+            linalg::scale(weight, &mut d);
+            *v = d;
+        }
+        Combine::CoverageDirection { anchor } => {
+            let a = st.reg(*anchor)?;
+            let cov = &st.feature_coverage;
+            let v = &mut vectors[0];
+            if a.len() != v.len() || cov.len() != v.len() {
+                return Err(format!(
+                    "coverage combine: |anchor| = {}, |coverage| = {}, |v_p| = {}",
+                    a.len(),
+                    cov.len(),
+                    v.len()
+                ));
+            }
+            for j in 0..v.len() {
+                v[j] = if cov[j] > 0.0 { (v[j] - a[j]) / cov[j] } else { 0.0 };
+            }
+        }
+        _ => {
+            if weight != 1.0 {
+                for v in vectors.iter_mut() {
+                    linalg::scale(weight, v);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The post-sum half of a combine, executed on every rank against the
+/// replicated plan sums: the combine epilogue (step, per-feature
+/// divide, consensus shrink + z-cache), the register store, and the
+/// replicated dot products the driver asked for. Returns the dots —
+/// the combined vector lives in the spec's store register (nobody but
+/// the register file needs it, so it is built exactly once).
+pub fn complete_combine(
+    st: &mut WorkerState,
+    spec: &CombineSpec,
+    sums: &[Vec<f64>],
+) -> Result<Vec<f64>, String> {
+    let first = sums.first().ok_or("combine produced no sums")?;
+    let combined = match &spec.kind {
+        Combine::WeightedSum
+        | Combine::Direction { .. }
+        | Combine::CoverageDirection { .. } => first.clone(),
+        Combine::Step { anchor, scale } => {
+            let mut c = st.reg(*anchor)?.to_vec();
+            if c.len() != first.len() {
+                return Err(format!(
+                    "step combine: |anchor| = {} but |sum| = {}",
+                    c.len(),
+                    first.len()
+                ));
+            }
+            linalg::axpy(*scale, first, &mut c);
+            c
+        }
+        Combine::WeightedAvg => {
+            let den = sums
+                .get(1)
+                .ok_or("weighted-avg combine needs (weighted, counts) sums")?;
+            if den.len() != first.len() {
+                return Err("weighted-avg combine: num/den length mismatch".into());
+            }
+            first
+                .iter()
+                .zip(den)
+                .map(|(&n, &d)| if d > 0.0 { n / d } else { 0.0 })
+                .collect()
+        }
+        Combine::AdmmConsensus { rho, lambda } => {
+            let pf = st.p as f64;
+            let z: Vec<f64> =
+                first.iter().map(|&s| rho * s / (lambda + rho * pf)).collect();
+            // cache z for the scaled-dual step and the next proximal
+            // solve — the driver never re-broadcasts it
+            st.admm_z = z.clone();
+            z
+        }
+    };
+    if let Some(reg) = spec.store {
+        st.set_reg(reg, combined);
+    }
+    compute_dots(st, &spec.dots)
 }
 
 /// One node's share of the §4.3 warm start (Agarwal et al. 2011):
@@ -440,13 +807,14 @@ mod tests {
     fn grad_caches_margins_then_linesearch_works() {
         let sh = shard_of(50, 12, 1);
         let mut st = WorkerState::new(0, 1);
-        let w = vec![0.1; 12];
+        let w = VecRef::inline(&vec![0.1; 12]);
         let r = exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w })
             .unwrap();
         let Reply::Grad { grad, units, .. } = r else { panic!("wrong reply") };
         assert_eq!(grad.len(), 12);
         assert!(units > 0.0);
-        exec(&sh, &mut st, &Command::Dirs { d: vec![0.01; 12] }).unwrap();
+        exec(&sh, &mut st, &Command::Dirs { d: VecRef::inline(&vec![0.01; 12]) })
+            .unwrap();
         let r = exec(
             &sh,
             &mut st,
@@ -455,6 +823,66 @@ mod tests {
         .unwrap();
         let Reply::Pair { a, .. } = r else { panic!("wrong reply") };
         assert!(a.is_finite());
+    }
+
+    #[test]
+    fn registers_and_vec_ops() {
+        let sh = shard_of(20, 4, 11);
+        let mut st = WorkerState::new(0, 2);
+        // reading an unset register errors on every path
+        assert!(st.reg(0).is_err());
+        assert!(exec(&sh, &mut st, &Command::FetchReg { reg: 0 }).is_err());
+        assert!(exec(
+            &sh,
+            &mut st,
+            &Command::Grad { loss: Loss::SquaredHinge, w: VecRef::Reg(0) }
+        )
+        .is_err());
+        // SetReg → ops → dots
+        exec(&sh, &mut st, &Command::SetReg { reg: 0, v: vec![1.0, 2.0, 3.0, 4.0] })
+            .unwrap();
+        let r = exec(
+            &sh,
+            &mut st,
+            &Command::VecOps {
+                ops: vec![
+                    VecOp::Copy { dst: 1, src: 0 },
+                    VecOp::Scale { dst: 1, a: 2.0 },
+                    VecOp::Axpy { dst: 1, a: 1.0, src: 0 },
+                    VecOp::Zero { dst: 2 },
+                    VecOp::Axpby { dst: 2, a: 1.0, src: 1, b: 0.5 },
+                ],
+                dots: vec![(0, 1), (2, 2)],
+            },
+        )
+        .unwrap();
+        let Reply::Dots { vals, units } = r else { panic!("wrong reply") };
+        // r1 = 3·r0, r2 = r1
+        assert_eq!(st.reg(1).unwrap(), &[3.0, 6.0, 9.0, 12.0]);
+        assert_eq!(st.reg(2).unwrap(), &[3.0, 6.0, 9.0, 12.0]);
+        assert_eq!(vals[0], 3.0 * (1.0 + 4.0 + 9.0 + 16.0));
+        assert_eq!(vals[1], 9.0 * (1.0 + 4.0 + 9.0 + 16.0));
+        assert_eq!(units, 0.0, "register bookkeeping is free");
+        // Zero is sized by the shard's m
+        assert_eq!(st.reg(2).unwrap().len(), 4);
+        // FetchReg: rank 0 carries the payload, other ranks reply empty
+        let Reply::Vector { v, .. } =
+            exec(&sh, &mut st, &Command::FetchReg { reg: 1 }).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        assert_eq!(v, vec![3.0, 6.0, 9.0, 12.0]);
+        let mut st1 = WorkerState::new(1, 2);
+        exec(&sh, &mut st1, &Command::SetReg { reg: 1, v: vec![1.0; 4] }).unwrap();
+        let Reply::Vector { v, .. } =
+            exec(&sh, &mut st1, &Command::FetchReg { reg: 1 }).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        assert!(v.is_empty(), "rank 1 must not duplicate the payload");
+        // Reset clears the file
+        exec(&sh, &mut st, &Command::Reset).unwrap();
+        assert!(st.reg(0).is_err());
     }
 
     #[test]
@@ -480,8 +908,8 @@ mod tests {
             trust_radius: None,
             lambda: 1e-3,
             loss: Loss::SquaredHinge,
-            anchor: vec![0.0; 8],
-            full_grad: vec![0.0; 8],
+            anchor: VecRef::inline(&vec![0.0; 8]),
+            full_grad: VecRef::inline(&vec![0.0; 8]),
             data_grad: None,
         };
         assert!(exec(&sh, &mut st, &Command::InnerSolve(spec)).is_err());
@@ -491,8 +919,15 @@ mod tests {
     fn reset_clears_state() {
         let sh = shard_of(30, 10, 4);
         let mut st = WorkerState::new(0, 1);
-        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: vec![0.0; 10] })
-            .unwrap();
+        exec(
+            &sh,
+            &mut st,
+            &Command::Grad {
+                loss: Loss::SquaredHinge,
+                w: VecRef::inline(&vec![0.0; 10]),
+            },
+        )
+        .unwrap();
         assert!(!st.margins.is_empty());
         exec(&sh, &mut st, &Command::Reset).unwrap();
         assert!(st.margins.is_empty() && st.local_grad.is_empty());
@@ -508,11 +943,15 @@ mod tests {
         assert!(exec(
             &sh,
             &mut st,
-            &Command::Hvp { loss: Loss::SquaredHinge, s: s.clone() }
+            &Command::Hvp { loss: Loss::SquaredHinge, s: VecRef::inline(&s) }
         )
         .is_err());
-        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: w.clone() })
-            .unwrap();
+        exec(
+            &sh,
+            &mut st,
+            &Command::Grad { loss: Loss::SquaredHinge, w: VecRef::inline(&w) },
+        )
+        .unwrap();
         let want = {
             let (_, _, z) = sh.loss_grad(Loss::SquaredHinge, &w);
             sh.hvp(Loss::SquaredHinge, &z, &s)
@@ -521,13 +960,20 @@ mod tests {
         let r = exec(
             &sh,
             &mut st,
-            &Command::LossEval { loss: Loss::SquaredHinge, w: vec![9.0; 10] },
+            &Command::LossEval {
+                loss: Loss::SquaredHinge,
+                w: VecRef::inline(&vec![9.0; 10]),
+            },
         )
         .unwrap();
         let Reply::Scalar { v, .. } = r else { panic!("wrong reply") };
         assert_eq!(v, sh.loss_value(Loss::SquaredHinge, &vec![9.0; 10]));
-        let r = exec(&sh, &mut st, &Command::Hvp { loss: Loss::SquaredHinge, s })
-            .unwrap();
+        let r = exec(
+            &sh,
+            &mut st,
+            &Command::Hvp { loss: Loss::SquaredHinge, s: VecRef::inline(&s) },
+        )
+        .unwrap();
         let Reply::Vector { v, units } = r else { panic!("wrong reply") };
         assert_eq!(v, want);
         assert!(units > 0.0);
@@ -541,9 +987,7 @@ mod tests {
         assert!(exec(
             &sh,
             &mut st,
-            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual {
-                z: vec![0.0; 8]
-            })
+            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual)
         )
         .is_err());
         let z = vec![0.1; 8];
@@ -553,7 +997,7 @@ mod tests {
             local_iters: 4,
             init: true,
             u_scale: 1.0,
-            z: z.clone(),
+            z: VecRef::inline(&z),
         });
         let Reply::Solve { w: part, units, .. } = exec(&sh, &mut st, &solve).unwrap()
         else {
@@ -562,12 +1006,13 @@ mod tests {
         // u = 0 after init, so the reduced part IS w_p
         assert_eq!(part, st.admm_w);
         assert!(units > 0.0);
+        // the dual step runs against the cached z (init cached it) —
+        // zero payload on the wire
+        assert_eq!(st.admm_z, z);
         let Reply::Scalar { v, units } = exec(
             &sh,
             &mut st,
-            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual {
-                z: z.clone(),
-            }),
+            &Command::DualUpdate(crate::net::DualUpdateSpec::AdmmDual),
         )
         .unwrap() else {
             panic!("wrong reply")
@@ -583,6 +1028,39 @@ mod tests {
     }
 
     #[test]
+    fn admm_consensus_combine_caches_z() {
+        let sh = shard_of(30, 8, 7);
+        let mut st = WorkerState::new(0, 2);
+        let z0 = vec![0.1; 8];
+        exec(
+            &sh,
+            &mut st,
+            &Command::LocalSolve(crate::net::LocalSolveSpec::AdmmProx {
+                loss: Loss::SquaredHinge,
+                rho: 0.5,
+                local_iters: 2,
+                init: true,
+                u_scale: 1.0,
+                z: VecRef::inline(&z0),
+            }),
+        )
+        .unwrap();
+        let spec = CombineSpec {
+            weights: Vec::new(),
+            kind: Combine::AdmmConsensus { rho: 0.5, lambda: 1e-2 },
+            store: Some(4),
+            dots: vec![(4, 4)],
+        };
+        let total = vec![2.0; 8];
+        let dots = complete_combine(&mut st, &spec, &[total.clone()]).unwrap();
+        let want: Vec<f64> =
+            total.iter().map(|&s| 0.5 * s / (1e-2 + 0.5 * 2.0)).collect();
+        assert_eq!(st.admm_z, want, "consensus combine must cache z");
+        assert_eq!(st.reg(4).unwrap(), &want[..]);
+        assert_eq!(dots[0], crate::linalg::dot(&want, &want));
+    }
+
+    #[test]
     fn cocoa_duals_persist_across_rounds() {
         let sh = shard_of(50, 12, 8);
         let mut st = WorkerState::new(1, 2);
@@ -592,7 +1070,7 @@ mod tests {
                 epochs: 1.0,
                 seed: 99,
                 round,
-                w: vec![0.0; 12],
+                w: VecRef::inline(&vec![0.0; 12]),
             });
             let Reply::Solve { w, .. } = exec(&sh, st, &cmd).unwrap() else {
                 panic!("wrong reply")
@@ -613,27 +1091,32 @@ mod tests {
     fn ssz_and_feature_solves_require_grad_first() {
         let sh = shard_of(20, 8, 9);
         let mut st = WorkerState::new(0, 2);
+        let zeros = || VecRef::inline(&vec![0.0; 8]);
         let ssz = Command::LocalSolve(crate::net::LocalSolveSpec::SszProx {
             loss: Loss::SquaredHinge,
             lambda: 1e-2,
             mu: 3e-2,
             local_iters: 3,
-            anchor: vec![0.0; 8],
-            full_grad: vec![0.0; 8],
-            grad_shift: vec![0.0; 8],
+            anchor: zeros(),
+            full_grad: zeros(),
+            grad_shift: zeros(),
         });
         assert!(exec(&sh, &mut st, &ssz).is_err());
         let feat = Command::LocalSolve(crate::net::LocalSolveSpec::FeatureSolve {
             loss: Loss::SquaredHinge,
             lambda: 1e-2,
             k_hat: 3,
-            anchor: vec![0.0; 8],
-            full_grad: vec![0.0; 8],
+            anchor: zeros(),
+            full_grad: zeros(),
             subsets: vec![vec![0, 1], vec![2, 3]],
         });
         assert!(exec(&sh, &mut st, &feat).is_err());
-        exec(&sh, &mut st, &Command::Grad { loss: Loss::SquaredHinge, w: vec![0.0; 8] })
-            .unwrap();
+        exec(
+            &sh,
+            &mut st,
+            &Command::Grad { loss: Loss::SquaredHinge, w: zeros() },
+        )
+        .unwrap();
         assert!(exec(&sh, &mut st, &ssz).is_ok());
         let Reply::Solve { w, .. } = exec(&sh, &mut st, &feat).unwrap() else {
             panic!("wrong reply")
@@ -642,6 +1125,78 @@ mod tests {
         for j in 2..8 {
             assert_eq!(w[j], 0.0, "coordinate {j} moved");
         }
+        // the first-round subsets also cached the coverage counts
+        assert_eq!(st.feature_coverage, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn combine_vector_take_put_and_pre() {
+        let mut r = Reply::Warm { w: vec![2.0, 4.0], counts: vec![1.0, 2.0], units: 3.0 };
+        let vecs = take_combine_vectors(&mut r).unwrap();
+        assert_eq!(vecs, vec![vec![2.0, 4.0], vec![1.0, 2.0]]);
+        let Reply::Warm { w, counts, units } = &r else { panic!() };
+        assert!(w.is_empty() && counts.is_empty());
+        assert_eq!(*units, 3.0);
+        put_combine_vectors(&mut r, vecs).unwrap();
+        let Reply::Warm { w, .. } = &r else { panic!() };
+        assert_eq!(w, &vec![2.0, 4.0]);
+        assert!(take_combine_vectors(&mut Reply::Ack { units: 0.0 }).is_err());
+
+        // direction pre-transform = weight·(v − anchor), op-for-op the
+        // driver combine it replaces
+        let mut st = WorkerState::new(1, 4);
+        st.set_reg(0, vec![1.0, 1.0]);
+        let spec = CombineSpec {
+            weights: vec![0.5, 0.25, 0.5, 0.5],
+            kind: Combine::Direction { anchor: 0 },
+            store: None,
+            dots: Vec::new(),
+        };
+        let mut vs = vec![vec![3.0, 5.0]];
+        pre_combine(&st, &spec, 1, &mut vs).unwrap();
+        assert_eq!(vs[0], vec![0.5, 1.0]);
+        // weighted-sum pre-transform scales every vector by this rank's
+        // weight; weight 1.0 (or an empty list) leaves bits untouched
+        let spec = CombineSpec {
+            weights: vec![1.0, 2.0, 1.0, 1.0],
+            kind: Combine::WeightedSum,
+            store: None,
+            dots: Vec::new(),
+        };
+        let mut vs = vec![vec![3.0, -1.0]];
+        pre_combine(&st, &spec, 1, &mut vs).unwrap();
+        assert_eq!(vs[0], vec![6.0, -2.0]);
+        // a weights list of the wrong length is a shape error, not a
+        // silent 1.0 fallback
+        let bad = CombineSpec {
+            weights: vec![1.0, 2.0],
+            kind: Combine::WeightedSum,
+            store: None,
+            dots: Vec::new(),
+        };
+        let mut vs = vec![vec![3.0, -1.0]];
+        assert!(pre_combine(&st, &bad, 1, &mut vs).is_err());
+        // step combine: c = anchor + scale·sum, then the store
+        let mut st = WorkerState::new(0, 2);
+        st.set_reg(0, vec![1.0, 1.0]);
+        let spec = CombineSpec {
+            weights: Vec::new(),
+            kind: Combine::Step { anchor: 0, scale: 0.5 },
+            store: Some(0),
+            dots: vec![(0, 0)],
+        };
+        let dots = complete_combine(&mut st, &spec, &[vec![2.0, 4.0]]).unwrap();
+        assert_eq!(st.reg(0).unwrap(), &[2.0, 3.0], "step re-anchors in place");
+        assert_eq!(dots[0], 13.0);
+        // weighted-avg epilogue: num/den with a zero-count guard
+        let spec = CombineSpec {
+            weights: Vec::new(),
+            kind: Combine::WeightedAvg,
+            store: Some(2),
+            dots: Vec::new(),
+        };
+        complete_combine(&mut st, &spec, &[vec![6.0, 5.0], vec![2.0, 0.0]]).unwrap();
+        assert_eq!(st.reg(2).unwrap(), &[3.0, 0.0]);
     }
 
     #[test]

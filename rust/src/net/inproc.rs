@@ -13,8 +13,11 @@ use std::time::Instant;
 
 use crate::objective::ShardCompute;
 
-use super::endpoint::{exec, WorkerState};
-use super::{parallel_indexed, Command, Measured, PhaseOutput, Transport};
+use super::endpoint::{self, exec, WorkerState};
+use super::{
+    parallel_indexed, Command, CombineOutput, CombineSpec, Measured, PhaseOutput,
+    Topology, Transport,
+};
 
 /// P in-process workers plus their per-rank session state.
 pub struct InProc {
@@ -46,6 +49,10 @@ impl Transport for InProc {
         self.workers.iter().map(|w| w.nnz()).sum()
     }
 
+    fn rank_examples(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.n()).collect()
+    }
+
     fn phase(&self, cmd: &Command, threaded: bool) -> Result<PhaseOutput, String> {
         let t0 = Instant::now();
         let results = parallel_indexed(self.workers.len(), threaded, |rank| {
@@ -63,6 +70,42 @@ impl Transport for InProc {
                 ..Measured::default()
             },
         })
+    }
+
+    /// The combine plane without a wire: phase, per-rank pre-transform,
+    /// plan reduction, and the rank-side epilogue + register store —
+    /// all through the same [`endpoint`] helpers the TCP workers run,
+    /// so every bit matches tcp-star and tcp-p2p.
+    fn combine_phase(
+        &self,
+        cmd: &Command,
+        topo: Topology,
+        spec: &CombineSpec,
+        threaded: bool,
+    ) -> Result<CombineOutput, String> {
+        let out = self.phase(cmd, threaded)?;
+        let mut replies = out.replies;
+        let mut stats = out.stats;
+        let p = self.workers.len();
+        let mut per_rank = Vec::with_capacity(p);
+        for (rank, reply) in replies.iter_mut().enumerate() {
+            let mut vecs = endpoint::take_combine_vectors(reply)?;
+            {
+                let st = self.state[rank].lock().unwrap();
+                endpoint::pre_combine(&st, spec, rank, &mut vecs)?;
+            }
+            per_rank.push(vecs);
+        }
+        let sums = super::reduce_columns(p, topo, per_rank, &mut stats)?;
+        let mut dots = Vec::new();
+        for rank in 0..p {
+            let mut st = self.state[rank].lock().unwrap();
+            let d = endpoint::complete_combine(&mut st, spec, &sums)?;
+            if rank == 0 {
+                dots = d;
+            }
+        }
+        Ok(CombineOutput { replies, dots, stats })
     }
 
     fn local_workers(&self) -> Option<&[Box<dyn ShardCompute>]> {
@@ -106,7 +149,10 @@ mod tests {
     #[test]
     fn threaded_and_serial_phases_agree() {
         let t = transport(4);
-        let cmd = Command::Grad { loss: Loss::SquaredHinge, w: vec![0.05; 16] };
+        let cmd = Command::Grad {
+            loss: Loss::SquaredHinge,
+            w: crate::net::VecRef::inline(&vec![0.05; 16]),
+        };
         t.phase(&Command::Reset, true).unwrap();
         let a = t.phase(&cmd, true).unwrap().replies;
         t.phase(&Command::Reset, false).unwrap();
@@ -114,6 +160,39 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.len(), 4);
         assert!(matches!(a[0], Reply::Grad { .. }));
+    }
+
+    #[test]
+    fn combine_phase_stores_replicated_result_on_every_rank() {
+        use crate::net::{CombineSpec, VecRef};
+        let t = transport(3);
+        t.phase(&Command::Reset, false).unwrap();
+        let w = vec![0.05; 16];
+        let spec = CombineSpec::sum_into(7).with_dots(&[(7, 7)]);
+        let out = t
+            .combine_phase(
+                &Command::Grad { loss: Loss::SquaredHinge, w: VecRef::inline(&w) },
+                crate::net::Topology::Tree,
+                &spec,
+                false,
+            )
+            .unwrap();
+        assert_eq!(out.replies.len(), 3);
+        // reply vector slots were consumed by the combine
+        for r in &out.replies {
+            let Reply::Grad { grad, .. } = r else { panic!("wrong reply") };
+            assert!(grad.is_empty());
+        }
+        // every rank holds the identical combined register; rank 0's
+        // fetch returns it and the dots agree with a direct dot
+        let fetched = {
+            let replies = t.phase(&Command::FetchReg { reg: 7 }, false).unwrap().replies;
+            let Reply::Vector { v, .. } = &replies[0] else { panic!() };
+            v.clone()
+        };
+        assert_eq!(fetched.len(), 16);
+        assert_eq!(out.dots.len(), 1);
+        assert_eq!(out.dots[0], crate::linalg::dot(&fetched, &fetched));
     }
 
     #[test]

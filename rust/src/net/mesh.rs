@@ -61,6 +61,17 @@ pub struct MeshStats {
     pub secs: f64,
 }
 
+impl MeshStats {
+    /// Accumulate another schedule execution's traffic (combines that
+    /// reduce more than one vector — e.g. the warm start's
+    /// (weighted, counts) pair — run the schedule once per vector).
+    pub fn merge(&mut self, other: &MeshStats) {
+        self.tx += other.tx;
+        self.rx += other.rx;
+        self.secs += other.secs;
+    }
+}
+
 /// One rank's side of the fully-connected data plane.
 pub struct Mesh {
     rank: usize,

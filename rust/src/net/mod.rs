@@ -27,12 +27,28 @@
 //!   `data_plane = "star"` (the historical behaviour) per-rank vectors
 //!   return over the star and the driver executes the plan; under
 //!   `data_plane = "p2p"` the workers hold a rank ⇄ rank TCP mesh and
-//!   execute the plan themselves ([`mesh::Mesh`]) — the driver receives
-//!   only the final reduced vector (rank 0's reply), so the topology's
+//!   execute the plan themselves ([`mesh::Mesh`]), so the topology's
 //!   simulated cost finally has a measured counterpart.
 //!
-//! The logical topology fixes the summation order on every plane, which
-//! is what keeps inproc ≡ tcp-star ≡ tcp-p2p bitwise identical.
+//! On top of the raw reduction sits the **combine plane**: every
+//! m-vector collective a method performs — the gradient/Hvp AllReduces,
+//! Algorithm 2's direction combine d = Σ w̃ₚ(w_p − w), the §4.3
+//! warm-start per-feature averaging, ADMM's consensus z-update and
+//! CoCoA's (1/P)·ΣΔw_p mix — is one fused phase + [`CombineSpec`]:
+//! per-rank weights and a combine kind applied by the *workers*, with
+//! the combined result cached in a replicated per-rank **register
+//! file** ([`endpoint::WorkerState`]). Because an AllReduce leaves its
+//! sum replicated on every rank, follow-up commands reference registers
+//! ([`VecRef::Reg`]) instead of re-shipping m floats, and free
+//! replicated bookkeeping ([`Command::VecOps`]) keeps derived vectors
+//! (full gradients, CG state, iterate updates) in sync on every rank.
+//! Under `data_plane = "p2p"` the driver is therefore a **scalar-only
+//! control plane**: after round 0 no m-sized f64 payload transits a
+//! driver link in either direction ([`Measured::driver_data_bytes`]).
+//!
+//! The logical topology fixes the summation order on every plane, and
+//! the weight/combine arithmetic is shared verbatim by every transport,
+//! which is what keeps inproc ≡ tcp-star ≡ tcp-p2p bitwise identical.
 //!
 //! See `rust/src/net/README.md` for the wire format and an operator's
 //! guide, and `cargo run --bin net_smoke` for the end-to-end proof that
@@ -50,8 +66,6 @@ pub use endpoint::WorkerState;
 pub use inproc::InProc;
 pub use tcp::TcpDriver;
 pub use topology::{reduce, ReducePlan, Topology};
-
-use std::time::Instant;
 
 use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
@@ -97,23 +111,127 @@ impl DataPlane {
 }
 
 // ---------------------------------------------------------------------------
+// Replicated vector registers
+// ---------------------------------------------------------------------------
+
+/// Reference to an m-vector input of a command: an inline payload (the
+/// round-0 escape hatch, counted against the driver's data bytes on a
+/// real link) or an index into the worker's replicated register file
+/// ([`endpoint::WorkerState`]) — zero wire payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VecRef {
+    Inline(Vec<f64>),
+    Reg(u32),
+}
+
+impl VecRef {
+    pub fn inline(v: &[f64]) -> VecRef {
+        VecRef::Inline(v.to_vec())
+    }
+}
+
+/// One replicated-register bookkeeping op. A [`Command::VecOps`] phase
+/// applies the same op list on every rank (and is free on the simulated
+/// clock — it replaces driver-side vector arithmetic the seed never
+/// charged), so derived vectors stay bit-identical and replicated
+/// without ever crossing a wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VecOp {
+    /// regs[dst] ← regs[src]
+    Copy { dst: u32, src: u32 },
+    /// regs[dst] ← 0 (length m)
+    Zero { dst: u32 },
+    /// regs[dst] ← a·regs[dst]
+    Scale { dst: u32, a: f64 },
+    /// regs[dst] ← regs[dst] + a·regs[src]
+    Axpy { dst: u32, a: f64, src: u32 },
+    /// regs[dst] ← a·regs[src] + b·regs[dst]
+    Axpby { dst: u32, a: f64, src: u32, b: f64 },
+}
+
+/// How a combine-phase's per-rank reply vectors are merged into the
+/// replicated result. The per-rank weight/transform runs *before* the
+/// plan sum and the rest after it, op-for-op identical to the
+/// driver-side combines these replace — which is what keeps the
+/// rewritten methods' trajectories bitwise unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Combine {
+    /// c = Σ_p w_p·v_p
+    WeightedSum,
+    /// Algorithm 2's direction combine: c = Σ_p w_p·(v_p − regs[anchor])
+    /// (the subtraction and scale are applied per rank before the sum).
+    Direction { anchor: u32 },
+    /// Feature-partitioned FADL (§5): c = Σ_p (v_p − regs[anchor]) ⊘
+    /// coverage, per-coordinate, 0 where a feature is uncovered. The
+    /// coverage counts are cached worker-side from the `FeatureSolve`
+    /// subsets (static per run, shipped once).
+    CoverageDirection { anchor: u32 },
+    /// CoCoA's mix: c = regs[anchor] + scale·Σ_p v_p.
+    Step { anchor: u32, scale: f64 },
+    /// §4.3 warm start: the reply carries (w ⊙ counts, counts); both are
+    /// plan-reduced and c_j = num_j / den_j (0 where den_j = 0).
+    WeightedAvg,
+    /// ADMM's consensus shrink z = ρ·Σ_p(w_p + u_p) / (λ + ρ·P); the
+    /// workers additionally cache z for the scaled-dual step, so the
+    /// driver never re-broadcasts it.
+    AdmmConsensus { rho: f64, lambda: f64 },
+}
+
+/// Everything a fused phase + AllReduce needs beyond the command: how
+/// the per-rank vectors are combined, where the replicated result is
+/// cached, and which replicated dot products come back to the
+/// (scalar-only) driver.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CombineSpec {
+    /// per-rank pre-sum weights (empty = all 1.0; per-rank scalars, not
+    /// an m-vector — this is control data)
+    pub weights: Vec<f64>,
+    pub kind: Combine,
+    /// cache the combined result in this register on every rank (the
+    /// replicated anchor follow-up commands reference)
+    pub store: Option<u32>,
+    /// register pairs whose dot products are computed after the combine
+    /// (identically on every rank) and returned to the driver — the
+    /// scalars the driver's bookkeeping needs instead of the vectors
+    pub dots: Vec<(u32, u32)>,
+}
+
+impl CombineSpec {
+    /// Plain sum cached into `store` — the Grad/Hvp AllReduce shape.
+    pub fn sum_into(store: u32) -> CombineSpec {
+        CombineSpec {
+            weights: Vec::new(),
+            kind: Combine::WeightedSum,
+            store: Some(store),
+            dots: Vec::new(),
+        }
+    }
+
+    pub fn with_dots(mut self, dots: &[(u32, u32)]) -> CombineSpec {
+        self.dots = dots.to_vec();
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Phase vocabulary
 // ---------------------------------------------------------------------------
 
 /// One BSP phase command, executed by every worker against its shard
 /// and per-worker session state (cached margins z, direction margins e,
-/// local gradient, BFGS curvature, and the per-method node state:
-/// ADMM's (w_p, u_p), CoCoA's duals α_p). This is exactly the wire
-/// vocabulary; the in-process transport executes the same enum.
+/// local gradient, BFGS curvature, the replicated register file, and
+/// the per-method node state: ADMM's (w_p, u_p), CoCoA's duals α_p).
+/// This is exactly the wire vocabulary; the in-process transport
+/// executes the same enum.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     /// Clear per-worker session state (start of a training run).
     Reset,
     /// Gradient pass at w: worker returns (Σ c·l, ∇L_p) and caches the
     /// margins z_p = X_p·w and ∇L_p (Algorithm 2 step 1).
-    Grad { loss: Loss, w: Vec<f64> },
+    Grad { loss: Loss, w: VecRef },
     /// Cache direction margins e_p = X_p·d (Algorithm 2 step 9).
-    Dirs { d: Vec<f64> },
+    Dirs { d: VecRef },
     /// One Armijo–Wolfe probe over cached (z, e): returns (φ_p, φ'_p)
     /// (Algorithm 2 step 10).
     Linesearch { loss: Loss, t: f64 },
@@ -121,7 +239,8 @@ pub enum Command {
     /// approximation f̂_p (Algorithm 2 steps 3–7).
     InnerSolve(InnerSolveSpec),
     /// §4.3 one-pass SGD warm start on the local objective; returns the
-    /// local weights and per-feature presence counts.
+    /// count-weighted local weights and per-feature presence counts
+    /// (the two vectors of the `WeightedAvg` combine).
     Warmstart {
         loss: Loss,
         lambda: f64,
@@ -131,11 +250,11 @@ pub enum Command {
     /// Hessian-vector product Xᵀ(D(X·s)) at the margins cached by the
     /// preceding [`Command::Grad`] (TERA-TRON's CG hot loop; Table 3's
     /// one AllReduce per inner step).
-    Hvp { loss: Loss, s: Vec<f64> },
+    Hvp { loss: Loss, s: VecRef },
     /// Data-loss value Σ c·l at an arbitrary replicated w (trust-region
     /// accept/reject, dual methods' primal traces). Leaves the cached
     /// margins untouched — a following `Hvp` still sees the anchor.
-    LossEval { loss: Loss, w: Vec<f64> },
+    LossEval { loss: Loss, w: VecRef },
     /// Node-local subproblem solve with a per-method payload (ADMM's
     /// proximal step, CoCoA's SDCA epochs, SSZ's prox-regularized local
     /// model, feature-partitioned FADL's masked solve).
@@ -143,6 +262,20 @@ pub enum Command {
     /// Per-method node-local state update with a per-method payload
     /// (e.g. ADMM's scaled-dual step), replying one scalar per rank.
     DualUpdate(DualUpdateSpec),
+    /// Free replicated-register bookkeeping: apply `ops` on every rank,
+    /// then return the requested dot products (replicated — every rank
+    /// computes identical values; the driver reads rank 0's).
+    VecOps {
+        ops: Vec<VecOp>,
+        dots: Vec<(u32, u32)>,
+    },
+    /// Load an explicit vector into a register on every rank (round-0
+    /// initialization; an m-sized driver payload by construction).
+    SetReg { reg: u32, v: Vec<f64> },
+    /// Fetch a register's replicated value (rank 0 replies the vector,
+    /// other ranks reply empty) — end-of-run result retrieval and
+    /// AUPRC instrumentation.
+    FetchReg { reg: u32 },
 }
 
 /// Payload of [`Command::LocalSolve`]: everything a node-local
@@ -154,7 +287,7 @@ pub enum Command {
 pub enum LocalSolveSpec {
     /// ADMM §4.4 proximal step: w_p ← argmin L_p(w) + ρ/2‖w−(z−u_p)‖²,
     /// warm-started from the node's previous w_p. Replies w_p + u_p
-    /// (the part the driver AllReduces for the consensus update).
+    /// (the part the `AdmmConsensus` combine reduces into z).
     AdmmProx {
         loss: Loss,
         rho: f64,
@@ -165,10 +298,10 @@ pub enum LocalSolveSpec {
         /// scaled-dual rescale from the previous iteration's ρ change,
         /// applied to u_p before the solve (1.0 = no change)
         u_scale: f64,
-        /// consensus iterate z — shipped only when `init` (empty
-        /// otherwise: the worker reuses the z it cached from the
-        /// previous `DualUpdate`, halving ADMM's broadcast volume)
-        z: Vec<f64>,
+        /// consensus iterate z — referenced only when `init` (an empty
+        /// inline ref otherwise: the worker reuses the z it cached from
+        /// the previous `AdmmConsensus` combine, so z never re-ships)
+        z: VecRef,
     },
     /// CoCoA local SDCA epochs on the node's dual block against a local
     /// copy of w. The duals α_p persist worker-side across rounds (the
@@ -180,7 +313,7 @@ pub enum LocalSolveSpec {
         seed: u64,
         /// outer round index (selects the per-round RNG stream)
         round: u64,
-        w: Vec<f64>,
+        w: VecRef,
     },
     /// SSZ node-local solve: the Nonlinear local model plus a proximal
     /// term μ/2‖w−w^r‖² and the η gradient shift. Replies ŵ_p.
@@ -191,11 +324,11 @@ pub enum LocalSolveSpec {
         /// TRON iterations
         local_iters: u32,
         /// the anchor w^r
-        anchor: Vec<f64>,
+        anchor: VecRef,
         /// g^r = λw^r + ∇L(w^r)
-        full_grad: Vec<f64>,
-        /// (η−1)·∇L(w^r), precomputed driver-side
-        grad_shift: Vec<f64>,
+        full_grad: VecRef,
+        /// (η−1)·∇L(w^r) — replicated bookkeeping of the grad register
+        grad_shift: VecRef,
     },
     /// Feature-partitioned FADL (§5): rank p minimizes the Quadratic
     /// local model restricted to its coordinate subset J_p.
@@ -204,11 +337,12 @@ pub enum LocalSolveSpec {
         lambda: f64,
         /// inner TRON iterations k̂
         k_hat: u32,
-        anchor: Vec<f64>,
-        full_grad: Vec<f64>,
+        anchor: VecRef,
+        full_grad: VecRef,
         /// J_p per rank — the shared command carries every subset and
-        /// each rank caches its own, so the (static) partition is
-        /// shipped on the first round only (empty afterwards)
+        /// each rank caches its own mask *and* the per-feature coverage
+        /// counts (for the `CoverageDirection` combine), so the static
+        /// partition is shipped on the first round only (empty after)
         subsets: Vec<Vec<u32>>,
     },
 }
@@ -216,11 +350,11 @@ pub enum LocalSolveSpec {
 /// Payload of [`Command::DualUpdate`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum DualUpdateSpec {
-    /// ADMM scaled-dual step u_p ← u_p + w_p − z; the worker also
-    /// caches z for the next proximal solve. Replies ‖w_p − z‖² (the
-    /// node's term of the primal residual). Free in the simulated cost
-    /// model, matching the driver-side loop it replaces.
-    AdmmDual { z: Vec<f64> },
+    /// ADMM scaled-dual step u_p ← u_p + w_p − z against the z cached
+    /// by the `AdmmConsensus` combine (zero payload). Replies
+    /// ‖w_p − z‖² (the node's term of the primal residual). Free in the
+    /// simulated cost model, matching the driver-side loop it replaces.
+    AdmmDual,
 }
 
 /// Everything a worker needs to build f̂_p and run the inner optimizer;
@@ -236,13 +370,13 @@ pub struct InnerSolveSpec {
     pub trust_radius: Option<f64>,
     pub lambda: f64,
     pub loss: Loss,
-    /// the anchor w^r
-    pub anchor: Vec<f64>,
+    /// the anchor w^r (the replicated iterate register)
+    pub anchor: VecRef,
     /// g^r = λw^r + ∇L(w^r)
-    pub full_grad: Vec<f64>,
-    /// ∇L(w^r) — only shipped for [`ApproxKind::Bfgs`], whose curvature
-    /// update needs Δ∇L across outer iterations
-    pub data_grad: Option<Vec<f64>>,
+    pub full_grad: VecRef,
+    /// ∇L(w^r) — only referenced for [`ApproxKind::Bfgs`], whose
+    /// curvature update needs Δ∇L across outer iterations
+    pub data_grad: Option<VecRef>,
 }
 
 /// Per-worker phase result. `units` is the Appendix-A compute cost the
@@ -255,10 +389,14 @@ pub enum Reply {
     Pair { a: f64, b: f64, units: f64 },
     Solve { w: Vec<f64>, n: usize, units: f64 },
     Warm { w: Vec<f64>, counts: Vec<f64>, units: f64 },
-    /// One m-vector (Hvp parts, reduced driver-side).
+    /// One m-vector (Hvp parts — consumed by the combine plane; also
+    /// `FetchReg`, where only rank 0 carries the payload).
     Vector { v: Vec<f64>, units: f64 },
     /// One scalar (LossEval values, DualUpdate residual terms).
     Scalar { v: f64, units: f64 },
+    /// Replicated dot products (`VecOps` bookkeeping phases) — scalar
+    /// aggregates, identical on every rank.
+    Dots { vals: Vec<f64>, units: f64 },
 }
 
 impl Reply {
@@ -270,7 +408,8 @@ impl Reply {
             | Reply::Solve { units, .. }
             | Reply::Warm { units, .. }
             | Reply::Vector { units, .. }
-            | Reply::Scalar { units, .. } => *units,
+            | Reply::Scalar { units, .. }
+            | Reply::Dots { units, .. } => *units,
         }
     }
 }
@@ -350,6 +489,13 @@ pub struct Measured {
     /// data-plane bytes moved worker ⇄ worker over the p2p mesh,
     /// counted once at each sender (0 under star and in-process)
     pub data_bytes: u64,
+    /// f64 data-vector payload bytes that crossed a driver link in
+    /// either direction (inline `VecRef`s, `SetReg`/`FetchReg`
+    /// payloads, star part gathers and sum broadcasts). Scalar
+    /// aggregates — losses, dot products, cost units, per-rank combine
+    /// weights — are control traffic and excluded. The scalar-only
+    /// driver invariant: 0 after round 0 under `data_plane = "p2p"`.
+    pub driver_data_bytes: u64,
 }
 
 impl Measured {
@@ -360,6 +506,7 @@ impl Measured {
         self.bytes_rx += other.bytes_rx;
         self.reduce_bytes += other.reduce_bytes;
         self.data_bytes += other.data_bytes;
+        self.driver_data_bytes += other.driver_data_bytes;
     }
 
     /// Total control-plane (driver-link) traffic.
@@ -374,63 +521,60 @@ pub struct PhaseOutput {
     pub stats: Measured,
 }
 
-/// Output of a fused phase + AllReduce ([`Transport::reduce_phase`]):
-/// per-rank replies with the vector slot emptied (their scalar payloads
-/// — loss values, cost units — intact), plus the plan-ordered sum.
-pub struct ReduceOutput {
+/// Output of a fused phase + combine ([`Transport::combine_phase`]):
+/// per-rank replies with their vector slots emptied (scalar payloads —
+/// loss values, n_p, cost units — intact), plus the replicated dot
+/// products the spec requested. The combined vector itself stays on
+/// the ranks (cached in the spec's `store` register); the driver reads
+/// scalars and, when it truly needs the vector (end-of-run weights,
+/// AUPRC instrumentation), issues an explicit [`Command::FetchReg`].
+pub struct CombineOutput {
     pub replies: Vec<Reply>,
-    pub reduced: Vec<f64>,
+    pub dots: Vec<f64>,
     pub stats: Measured,
 }
 
-/// Take the reducible m-vector out of a phase reply (the `Grad` and
-/// `Hvp` phases — the AllReduces of the methods' hot loops).
-pub(crate) fn take_vector(reply: &mut Reply) -> Result<Vec<f64>, String> {
-    match reply {
-        Reply::Grad { grad, .. } => Ok(std::mem::take(grad)),
-        Reply::Vector { v, .. } => Ok(std::mem::take(v)),
-        other => Err(format!("reply {other:?} carries no reducible vector")),
-    }
-}
-
-/// Put a reduced vector back into the reply it came out of.
-pub(crate) fn put_vector(reply: &mut Reply, vec: Vec<f64>) {
-    match reply {
-        Reply::Grad { grad, .. } => *grad = vec,
-        Reply::Vector { v, .. } => *v = vec,
-        _ => unreachable!("put_vector on a vector-free reply"),
-    }
-}
-
-/// The gather-and-reduce execution of [`Transport::reduce_phase`]: run
-/// the phase, collect every rank's vector, execute the plan locally.
-/// This is the in-process behaviour and the TCP *star* data plane; on a
-/// real link the gathered part payloads are attributed to
-/// [`Measured::reduce_bytes`].
-pub(crate) fn gather_reduce_phase<T: Transport + ?Sized>(
-    transport: &T,
-    cmd: &Command,
+/// Gather per-rank pre-transformed combine vectors into columns and
+/// execute the topology plan over each — the driver-side half of a
+/// combine shared by the in-process transport and the TCP star plane
+/// (the p2p plane runs the plan on the worker mesh instead).
+/// `per_rank[rank]` is that rank's vector list (1, or 2 for the warm
+/// start); the plan-execution wall-clock lands in `stats.reduce_secs`.
+pub(crate) fn reduce_columns(
+    p: usize,
     topo: Topology,
-    threaded: bool,
-) -> Result<ReduceOutput, String> {
-    let out = transport.phase(cmd, threaded)?;
-    let mut replies = out.replies;
-    let mut stats = out.stats;
-    let mut parts = Vec::with_capacity(replies.len());
-    for reply in &mut replies {
-        parts.push(take_vector(reply)?);
+    per_rank: Vec<Vec<Vec<f64>>>,
+    stats: &mut Measured,
+) -> Result<Vec<Vec<f64>>, String> {
+    let mut columns: Vec<Vec<Vec<f64>>> = Vec::new();
+    for (rank, vecs) in per_rank.into_iter().enumerate() {
+        if columns.is_empty() {
+            columns.resize_with(vecs.len(), Vec::new);
+        }
+        if vecs.len() != columns.len() {
+            return Err(format!(
+                "rank {rank} replied {} combine vectors, rank 0 replied {}",
+                vecs.len(),
+                columns.len()
+            ));
+        }
+        for (k, v) in vecs.into_iter().enumerate() {
+            columns[k].push(v);
+        }
     }
-    if stats.bytes_rx > 0 {
-        // a real link carried the P part vectors to the driver: that
-        // gather IS the star data plane (raw f64 payload bytes)
-        stats.reduce_bytes = parts.iter().map(|p| 8 * p.len() as u64).sum();
-    }
-    let m = parts.first().map(Vec::len).unwrap_or(0);
-    let plan = topo.plan(transport.p(), m);
-    let t0 = Instant::now();
-    let reduced = topology::reduce(parts, &plan);
+    let m = columns
+        .first()
+        .and_then(|c| c.first())
+        .map(Vec::len)
+        .unwrap_or(0);
+    let plan = topo.plan(p, m);
+    let t0 = std::time::Instant::now();
+    let sums = columns
+        .into_iter()
+        .map(|parts| topology::reduce(parts, &plan))
+        .collect();
     stats.reduce_secs += t0.elapsed().as_secs_f64();
-    Ok(ReduceOutput { replies, reduced, stats })
+    Ok(sums)
 }
 
 // ---------------------------------------------------------------------------
@@ -451,25 +595,33 @@ pub trait Transport: Send + Sync {
     /// Total nonzeros across shards (the `nz` of eq. (21)).
     fn total_nnz(&self) -> usize;
 
+    /// Per-rank example counts n_p (static shard sizes; the driver
+    /// computes example-weighted combine weights from these without a
+    /// phase — the TCP transport learns them from the `Ready`
+    /// handshake, the in-process transport from its shards).
+    fn rank_examples(&self) -> Vec<usize>;
+
     /// Execute one command on every worker (BSP barrier: returns when
     /// all replies are in, rank order preserved).
     fn phase(&self, cmd: &Command, threaded: bool) -> Result<PhaseOutput, String>;
 
-    /// Execute one command on every worker and AllReduce the per-rank
-    /// reply vectors with the topology's [`ReducePlan`]. The plan fixes
-    /// the summation order, so the reduced vector is bitwise identical
-    /// on every transport and data plane. The default implementation
-    /// gathers the vectors and reduces locally (in-process, tcp-star);
-    /// the TCP p2p data plane overrides it to execute the plan on the
-    /// worker mesh, with only the final vector returning to the driver.
-    fn reduce_phase(
+    /// Execute one command on every worker and combine the per-rank
+    /// reply vectors: per-rank weights/transforms, the topology plan's
+    /// fixed-order sum, the combine epilogue, the replicated register
+    /// store and the requested dot products — all applied with the
+    /// shared [`endpoint`] helpers, so the result is bitwise identical
+    /// on every transport and data plane. Where the bytes move differs:
+    /// in-process touches no wire, tcp-star gathers parts through the
+    /// driver and broadcasts the sums back for the rank-side epilogue,
+    /// tcp-p2p executes the plan on the worker mesh and returns only
+    /// scalars to the driver.
+    fn combine_phase(
         &self,
         cmd: &Command,
         topo: Topology,
+        spec: &CombineSpec,
         threaded: bool,
-    ) -> Result<ReduceOutput, String> {
-        gather_reduce_phase(self, cmd, topo, threaded)
-    }
+    ) -> Result<CombineOutput, String>;
 
     /// In-process shards for closure-based phases (`Cluster::map`).
     /// `None` for remote transports — methods that need arbitrary local
@@ -557,6 +709,7 @@ mod tests {
             bytes_rx: 20,
             reduce_bytes: 16,
             data_bytes: 100,
+            driver_data_bytes: 8,
         };
         a.merge(&Measured {
             phase_secs: 2.0,
@@ -565,11 +718,13 @@ mod tests {
             bytes_rx: 2,
             reduce_bytes: 4,
             data_bytes: 50,
+            driver_data_bytes: 16,
         });
         assert_eq!(a.phase_secs, 3.0);
         assert_eq!(a.bytes_total(), 33, "control-plane total excludes the mesh");
         assert_eq!(a.reduce_bytes, 20);
         assert_eq!(a.data_bytes, 150);
+        assert_eq!(a.driver_data_bytes, 24);
     }
 
     #[test]
@@ -609,27 +764,22 @@ mod tests {
     }
 
     #[test]
-    fn take_and_put_vector_roundtrip() {
-        let mut r = Reply::Grad { loss: 1.5, grad: vec![1.0, 2.0], units: 3.0 };
-        let v = take_vector(&mut r).unwrap();
-        assert_eq!(v, vec![1.0, 2.0]);
-        let Reply::Grad { grad, loss, units } = &r else { panic!() };
-        assert!(grad.is_empty());
-        assert_eq!((*loss, *units), (1.5, 3.0));
-        put_vector(&mut r, vec![9.0]);
-        let Reply::Grad { grad, .. } = &r else { panic!() };
-        assert_eq!(grad, &vec![9.0]);
-        let mut v = Reply::Vector { v: vec![4.0], units: 0.0 };
-        assert_eq!(take_vector(&mut v).unwrap(), vec![4.0]);
-        assert!(take_vector(&mut Reply::Ack { units: 0.0 }).is_err());
-    }
-
-    #[test]
     fn reply_units_accessor() {
         assert_eq!(Reply::Ack { units: 3.0 }.units(), 3.0);
         assert_eq!(
             Reply::Pair { a: 0.0, b: 0.0, units: 7.0 }.units(),
             7.0
         );
+        assert_eq!(Reply::Dots { vals: vec![1.0], units: 0.0 }.units(), 0.0);
+    }
+
+    #[test]
+    fn combine_spec_builders() {
+        let spec = CombineSpec::sum_into(3).with_dots(&[(3, 3), (0, 3)]);
+        assert_eq!(spec.kind, Combine::WeightedSum);
+        assert_eq!(spec.store, Some(3));
+        assert!(spec.weights.is_empty(), "empty weights = all 1.0");
+        assert_eq!(spec.dots, vec![(3, 3), (0, 3)]);
+        assert_eq!(VecRef::inline(&[1.5]), VecRef::Inline(vec![1.5]));
     }
 }

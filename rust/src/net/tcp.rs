@@ -17,25 +17,30 @@
 //!    period).
 //!
 //! The control plane is always a star (worker ⇄ driver): commands fan
-//! out, replies fan in. Where reduction bytes move depends on the
+//! out, replies fan in. Where a combine's bytes move depends on the
 //! configured [`super::DataPlane`]:
 //!
-//! * **star** — per-rank vectors return in the replies and the driver
-//!   executes the run's [`super::Topology`] plan itself (the gathered
-//!   part payloads are attributed to `Measured::reduce_bytes`);
+//! * **star** — the workers pre-transform their parts, the driver
+//!   gathers them (attributed to `Measured::reduce_bytes`), executes
+//!   the run's [`super::Topology`] plan, and ships the sums back in a
+//!   `Finish` frame so every rank completes the combine (epilogue +
+//!   replicated register store) with the shared endpoint code;
 //! * **p2p** — launch additionally runs the mesh handshake (workers
 //!   advertise data-plane ports in `Ready`, the driver broadcasts the
 //!   address list in `Mesh`, workers dial each other and answer
-//!   `MeshOk`), and every reduced phase becomes one `Reduce` frame:
-//!   the workers execute the plan over their mesh and only rank 0's
-//!   reply carries the final vector — no per-rank m-vector ever
-//!   transits the driver, whose reduce traffic is control-sized.
+//!   `MeshOk`), and every combine becomes one `Reduce` frame: the
+//!   workers execute the plan over their mesh and complete the combine
+//!   locally, replying **scalars only** (cost units, losses, the
+//!   spec's replicated dot products). No m-sized payload transits the
+//!   driver in either direction — the scalar-only control plane,
+//!   counted by `Measured::driver_data_bytes`.
 //!
-//! Both planes execute the same plan in the same summation order, so
-//! every bit of the result matches the in-process transport. Real
-//! wall-clock and byte counts are recorded per phase and surface in
-//! traces as the measured columns (`net_bytes` control vs
-//! `net_data_bytes` mesh).
+//! Both planes execute the same plan in the same summation order and
+//! the same rank-side combine arithmetic, so every bit of the result
+//! matches the in-process transport. Real wall-clock and byte counts
+//! are recorded per phase and surface in traces as the measured
+//! columns (`net_bytes` control, `net_data_bytes` mesh,
+//! `driver_data_bytes` m-sized driver payloads).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -44,10 +49,11 @@ use std::process::{Child, Command as ProcCommand, Stdio};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::endpoint::take_combine_vectors;
 use super::wire::{self, Msg};
 use super::{
-    gather_reduce_phase, take_vector, Command, DataPlane, Measured, PhaseOutput,
-    ReduceOutput, Reply, Topology, Transport, WorkerSetup,
+    Command, CombineOutput, CombineSpec, DataPlane, Measured, PhaseOutput, Reply,
+    Topology, Transport, WorkerSetup,
 };
 
 /// One worker connection (split stream for buffered reads and writes).
@@ -84,6 +90,9 @@ pub struct TcpDriver {
     p: usize,
     m: usize,
     nnz: usize,
+    /// per-rank example counts from the `Ready` handshake (static
+    /// shard sizes — the driver computes combine weights from these)
+    ns: Vec<usize>,
     plane: DataPlane,
 }
 
@@ -181,10 +190,11 @@ impl TcpDriver {
         // collect Ready acknowledgements (workers build shards in parallel)
         let mut m = 0usize;
         let mut nnz = 0usize;
+        let mut ns = Vec::with_capacity(p);
         let mut data_ports = Vec::with_capacity(p);
         for (rank, conn) in conns.iter_mut().enumerate() {
             match conn.recv() {
-                Ok((Msg::Ready { m: wm, nnz: wnnz, data_port, .. }, _)) => {
+                Ok((Msg::Ready { m: wm, n: wn, nnz: wnnz, data_port }, _)) => {
                     if rank == 0 {
                         m = wm;
                     } else if wm != m {
@@ -194,6 +204,7 @@ impl TcpDriver {
                         ));
                     }
                     nnz += wnnz;
+                    ns.push(wn);
                     data_ports.push(data_port);
                 }
                 Ok((Msg::Abort { msg }, _)) => {
@@ -251,6 +262,7 @@ impl TcpDriver {
             p,
             m,
             nnz,
+            ns,
             plane: setup.data_plane,
         })
     }
@@ -309,17 +321,24 @@ impl Transport for TcpDriver {
         self.nnz
     }
 
+    fn rank_examples(&self) -> Vec<usize> {
+        self.ns.clone()
+    }
+
     fn phase(&self, cmd: &Command, _threaded: bool) -> Result<PhaseOutput, String> {
         let t0 = Instant::now();
         let mut stats = Measured::default();
         let mut conns = self.conns.lock().unwrap();
         // fan the command out to every rank first (one shared encoding),
         // so remote compute overlaps across processes ...
-        let payload = wire::encode(&Msg::Cmd(cmd.clone()));
+        let msg = Msg::Cmd(cmd.clone());
+        let cmd_data = wire::msg_data_bytes(&msg);
+        let payload = wire::encode(&msg);
         for (rank, conn) in conns.iter_mut().enumerate() {
             stats.bytes_tx += conn
                 .send_raw(&payload)
                 .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.driver_data_bytes += cmd_data;
         }
         // ... then collect replies in rank order (BSP barrier)
         let mut replies: Vec<Reply> = Vec::with_capacity(self.p);
@@ -328,6 +347,7 @@ impl Transport for TcpDriver {
                 .recv()
                 .map_err(|e| format!("rank {rank}: {e}"))?;
             stats.bytes_rx += bytes;
+            stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
                 Msg::Reply(reply) => replies.push(reply),
                 Msg::Abort { msg } => {
@@ -342,16 +362,16 @@ impl Transport for TcpDriver {
         Ok(PhaseOutput { replies, stats })
     }
 
-    fn reduce_phase(
+    fn combine_phase(
         &self,
         cmd: &Command,
         topo: Topology,
-        threaded: bool,
-    ) -> Result<ReduceOutput, String> {
+        spec: &CombineSpec,
+        _threaded: bool,
+    ) -> Result<CombineOutput, String> {
         match self.plane {
-            // star: gather the per-rank vectors and reduce driver-side
-            DataPlane::Star => gather_reduce_phase(self, cmd, topo, threaded),
-            DataPlane::P2p => self.p2p_reduce_phase(cmd, topo),
+            DataPlane::Star => self.star_combine_phase(cmd, topo, spec),
+            DataPlane::P2p => self.p2p_combine_phase(cmd, topo, spec),
         }
     }
 
@@ -361,36 +381,134 @@ impl Transport for TcpDriver {
 }
 
 impl TcpDriver {
-    /// One `Reduce` round trip: the command fans out once, the workers
-    /// execute the phase and then the topology plan over their mesh,
-    /// and rank 0's reply carries the final reduced vector. The per-rank
-    /// part vectors never touch the driver: its reduce traffic is the
-    /// command fan-out plus P small `Reduced` headers.
-    fn p2p_reduce_phase(&self, cmd: &Command, topo: Topology) -> Result<ReduceOutput, String> {
-        let t0 = Instant::now();
-        let mut stats = Measured::default();
-        let mut conns = self.conns.lock().unwrap();
-        let payload = wire::encode(&Msg::Reduce { cmd: cmd.clone(), topology: topo });
+    /// Fan a `Reduce` frame out to every rank, counting control and
+    /// data-payload bytes.
+    fn send_reduce(
+        &self,
+        conns: &mut [Conn],
+        cmd: &Command,
+        topo: Topology,
+        spec: &CombineSpec,
+        stats: &mut Measured,
+    ) -> Result<(), String> {
+        let msg = Msg::Reduce { cmd: cmd.clone(), topology: topo, spec: spec.clone() };
+        let cmd_data = wire::msg_data_bytes(&msg);
+        let payload = wire::encode(&msg);
         for (rank, conn) in conns.iter_mut().enumerate() {
             stats.bytes_tx += conn
                 .send_raw(&payload)
                 .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.driver_data_bytes += cmd_data;
         }
+        Ok(())
+    }
+
+    /// Star combine: the workers execute the phase and pre-transform
+    /// their parts, the driver gathers them and executes the topology
+    /// plan, then ships the sums back in a `Finish` frame so every rank
+    /// applies the same epilogue/register-store the p2p ranks apply —
+    /// keeping the worker-side caches identical across data planes.
+    fn star_combine_phase(
+        &self,
+        cmd: &Command,
+        topo: Topology,
+        spec: &CombineSpec,
+    ) -> Result<CombineOutput, String> {
+        let t0 = Instant::now();
+        let mut stats = Measured::default();
+        let mut conns = self.conns.lock().unwrap();
+        self.send_reduce(&mut conns, cmd, topo, spec, &mut stats)?;
+        // gather the pre-transformed parts
         let mut replies: Vec<Reply> = Vec::with_capacity(self.p);
-        let mut reduced = Vec::new();
+        let mut per_rank = Vec::with_capacity(self.p);
+        for rank in 0..self.p {
+            let (msg, bytes) = conns[rank]
+                .recv()
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.bytes_rx += bytes;
+            stats.driver_data_bytes += wire::msg_data_bytes(&msg);
+            match msg {
+                Msg::Reduced { mut reply, .. } => {
+                    let vecs = take_combine_vectors(&mut reply)?;
+                    // the gathered part payloads ARE the star data plane
+                    stats.reduce_bytes +=
+                        vecs.iter().map(|v| 8 * v.len() as u64).sum::<u64>();
+                    per_rank.push(vecs);
+                    replies.push(reply);
+                }
+                Msg::Abort { msg } => return Err(format!("rank {rank} aborted: {msg}")),
+                other => {
+                    return Err(format!("rank {rank}: unexpected reduce reply {other:?}"))
+                }
+            }
+        }
+        // execute the plan driver-side (the star's defining move)
+        let sums = super::reduce_columns(self.p, topo, per_rank, &mut stats)?;
+        // ship the sums back down for the rank-side combine completion
+        let finish = Msg::Finish { sums };
+        let finish_data = wire::msg_data_bytes(&finish);
+        let payload = wire::encode(&finish);
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            stats.bytes_tx += conn
+                .send_raw(&payload)
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.driver_data_bytes += finish_data;
+        }
+        let mut dots = Vec::new();
+        for rank in 0..self.p {
+            let (msg, bytes) = conns[rank]
+                .recv()
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+            stats.bytes_rx += bytes;
+            stats.driver_data_bytes += wire::msg_data_bytes(&msg);
+            match msg {
+                Msg::Finished { dots: d } => {
+                    if rank == 0 {
+                        dots = d;
+                    }
+                }
+                Msg::Abort { msg } => return Err(format!("rank {rank} aborted: {msg}")),
+                other => {
+                    return Err(format!("rank {rank}: unexpected finish reply {other:?}"))
+                }
+            }
+        }
+        stats.phase_secs = (t0.elapsed().as_secs_f64() - stats.reduce_secs).max(0.0);
+        Ok(CombineOutput { replies, dots, stats })
+    }
+
+    /// One p2p `Reduce` round trip: the command fans out once, the
+    /// workers execute the phase, the topology plan over their mesh and
+    /// the combine completion — and reply scalars only (cost units,
+    /// losses, the spec's replicated dot products). No per-rank part,
+    /// no combined vector, no m-sized payload of any kind transits the
+    /// driver: its traffic is commands, specs, and scalars.
+    fn p2p_combine_phase(
+        &self,
+        cmd: &Command,
+        topo: Topology,
+        spec: &CombineSpec,
+    ) -> Result<CombineOutput, String> {
+        let t0 = Instant::now();
+        let mut stats = Measured::default();
+        let mut conns = self.conns.lock().unwrap();
+        self.send_reduce(&mut conns, cmd, topo, spec, &mut stats)?;
+        let mut replies: Vec<Reply> = Vec::with_capacity(self.p);
+        let mut dots = Vec::new();
         let mut mesh_secs = 0.0f64;
         for rank in 0..self.p {
             let (msg, bytes) = conns[rank]
                 .recv()
                 .map_err(|e| format!("rank {rank}: {e}"))?;
             stats.bytes_rx += bytes;
+            stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { mut reply, data_tx, data_rx: _, secs } => {
+                Msg::Reduced { reply, data_tx, data_rx: _, secs, dots: d } => {
                     // mesh traffic is counted once, at each sender
                     stats.data_bytes += data_tx;
                     mesh_secs = mesh_secs.max(secs);
                     if rank == 0 {
-                        reduced = take_vector(&mut reply)?;
+                        dots = d;
                     }
                     replies.push(reply);
                 }
@@ -402,11 +520,11 @@ impl TcpDriver {
                 }
             }
         }
-        if reduced.len() != self.m {
+        if dots.len() != spec.dots.len() {
             return Err(format!(
-                "p2p reduce returned {} elements, expected m = {}",
-                reduced.len(),
-                self.m
+                "p2p combine returned {} dots, spec requested {}",
+                dots.len(),
+                spec.dots.len()
             ));
         }
         // attribute the slowest rank's mesh schedule to the reduce
@@ -415,7 +533,7 @@ impl TcpDriver {
         let total = t0.elapsed().as_secs_f64();
         stats.reduce_secs = mesh_secs;
         stats.phase_secs = (total - mesh_secs).max(0.0);
-        Ok(ReduceOutput { replies, reduced, stats })
+        Ok(CombineOutput { replies, dots, stats })
     }
 }
 

@@ -237,6 +237,31 @@ impl RankSchedule {
             })
             .sum()
     }
+
+    /// Send frames this rank emits executing the schedule.
+    pub fn send_frames(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, MeshOp::Send { .. }))
+            .count()
+    }
+
+    /// Exact mesh bytes this rank puts on the wire for one AllReduce:
+    /// each frame is a 4-byte length prefix plus raw f64 payload.
+    pub fn send_bytes(&self) -> u64 {
+        8 * self.send_elems() as u64 + 4 * self.send_frames() as u64
+    }
+}
+
+impl ReducePlan {
+    /// Exact total mesh bytes one AllReduce of this plan moves over the
+    /// p2p data plane (summed across ranks, counted once at each
+    /// sender) — the deterministic counts `net_smoke`'s byte report and
+    /// the parity tests pin, and the per-topology table in
+    /// `net/README.md`.
+    pub fn mesh_bytes(&self) -> u64 {
+        (0..self.p).map(|r| self.rank_schedule(r).send_bytes()).sum()
+    }
 }
 
 /// Reference executor for per-rank schedules: runs every rank's ops
@@ -533,6 +558,68 @@ mod tests {
                 // reduce + mirrored broadcast: twice the plan's hops
                 let expect = 2.0 * topo.plan(p, m).vector_hops() * m as f64;
                 assert_eq!(sent_elems as f64, expect, "{topo:?} p={p} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_bytes_match_schedule_sends() {
+        for topo in Topology::all() {
+            for (p, m) in [(1usize, 5usize), (4, 60), (6, 3), (5, 17)] {
+                let plan = topo.plan(p, m);
+                let want: u64 = plan
+                    .rank_schedules()
+                    .iter()
+                    .map(|s| 8 * s.send_elems() as u64 + 4 * s.send_frames() as u64)
+                    .sum();
+                assert_eq!(plan.mesh_bytes(), want, "{topo:?} p={p} m={m}");
+            }
+        }
+        // the README's P = 4, m = 60 table: flat/tree 6 × (4 + 480),
+        // ring 24 × (4 + 120)
+        assert_eq!(Topology::Flat.plan(4, 60).mesh_bytes(), 6 * 484);
+        assert_eq!(Topology::Tree.plan(4, 60).mesh_bytes(), 6 * 484);
+        assert_eq!(Topology::Ring.plan(4, 60).mesh_bytes(), 24 * 124);
+        // P = 1 is a no-op on every topology
+        for topo in Topology::all() {
+            assert_eq!(topo.plan(1, 9).mesh_bytes(), 0, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_combine_schedules_match_flat_weighted_sum() {
+        // the combine plane's pre-transform (per-rank weights, incl.
+        // zero weights) followed by the compiled schedules must land
+        // every rank on exactly the bits of the driver-style weighted
+        // sum (scale each part, then plan-reduce) — for m < P, m ∤ P
+        // and P = 1
+        let mut rng = crate::util::rng::Pcg64::new(0xC0DE);
+        for topo in Topology::all() {
+            for (p, m) in [(1usize, 4usize), (4, 60), (6, 3), (5, 17), (7, 20)] {
+                let parts: Vec<Vec<f64>> = (0..p)
+                    .map(|_| (0..m).map(|_| rng.normal()).collect())
+                    .collect();
+                let weights: Vec<f64> = (0..p)
+                    .map(|r| if r % 3 == 2 { 0.0 } else { 0.25 + 0.5 * rng.normal().abs() })
+                    .collect();
+                let scaled: Vec<Vec<f64>> = parts
+                    .iter()
+                    .zip(&weights)
+                    .map(|(v, &w)| {
+                        let mut v = v.clone();
+                        crate::linalg::scale(w, &mut v);
+                        v
+                    })
+                    .collect();
+                let plan = topo.plan(p, m);
+                let want = reduce(scaled.clone(), &plan);
+                for (rank, buf) in simulate_schedules(&scaled, &plan).iter().enumerate()
+                {
+                    assert!(
+                        buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{topo:?} p={p} m={m} rank={rank} diverged"
+                    );
+                }
             }
         }
     }

@@ -31,8 +31,8 @@ use crate::data::partition::Strategy;
 use crate::loss::Loss;
 
 use super::{
-    Command, DataPlane, DualUpdateSpec, InnerSolveSpec, LocalSolveSpec, Reply, Topology,
-    WorkerSetup,
+    Combine, CombineSpec, Command, DataPlane, DualUpdateSpec, InnerSolveSpec,
+    LocalSolveSpec, Reply, Topology, VecOp, VecRef, WorkerSetup,
 };
 
 /// Hard cap on a single frame (guards against corrupt length prefixes).
@@ -52,7 +52,15 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// selection (plane, bind hosts, port base), `Ready` advertises the
 /// worker's data-plane port, and the `Mesh`/`MeshOk` handshake plus the
 /// `Reduce`/`Reduced` fused phase+AllReduce round trip landed.
-pub const PROTO_VERSION: u32 = 3;
+///
+/// v4: the worker-resident combine plane — commands reference the
+/// replicated register file (`VecRef`), `Reduce` carries a
+/// `CombineSpec` (per-rank weights, combine kind, store register,
+/// requested dots), `Reduced` returns replicated dot products instead
+/// of the combined vector, the star plane's `Finish`/`Finished` pair
+/// ships plan sums down for the rank-side epilogue, and the
+/// `VecOps`/`SetReg`/`FetchReg` commands plus the `Dots` reply landed.
+pub const PROTO_VERSION: u32 = 4;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -332,8 +340,8 @@ fn port_from(v: u32) -> Result<u16, String> {
 // ---------------------------------------------------------------------------
 
 /// Every message either side can send. Driver → worker: `Setup`,
-/// `Mesh`, `Cmd`, `Reduce`, `Shutdown`. Worker → driver: `Ready`,
-/// `MeshOk`, `Reply`, `Reduced`, `Abort`.
+/// `Mesh`, `Cmd`, `Reduce`, `Finish`, `Shutdown`. Worker → driver:
+/// `Ready`, `MeshOk`, `Reply`, `Reduced`, `Finished`, `Abort`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     Setup(WorkerSetup),
@@ -348,13 +356,33 @@ pub enum Msg {
     /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
     Mesh { addrs: Vec<String> },
     MeshOk,
-    /// Fused phase + AllReduce: execute `cmd`, then run this rank's
-    /// share of `topology`'s plan over the mesh.
-    Reduce { cmd: Command, topology: Topology },
-    /// Reply to `Reduce`: the phase reply with its vector slot holding
-    /// the reduced vector on rank 0 and emptied elsewhere, plus the
-    /// rank's data-plane traffic and mesh wall-clock.
-    Reduced { reply: Reply, data_tx: u64, data_rx: u64, secs: f64 },
+    /// Fused phase + combine: execute `cmd`, pre-transform this rank's
+    /// reply vectors per `spec`, then — p2p — run the topology plan
+    /// over the mesh and complete the combine locally, or — star —
+    /// return the pre-transformed parts and await `Finish`.
+    Reduce {
+        cmd: Command,
+        topology: Topology,
+        spec: CombineSpec,
+    },
+    /// Reply to `Reduce`. Under p2p the reply's vector slots are empty
+    /// (the combined result lives in the replicated registers) and
+    /// `dots` carries the spec's replicated dot products; under star
+    /// the slots carry this rank's pre-transformed parts and `dots` is
+    /// empty until `Finished`.
+    Reduced {
+        reply: Reply,
+        data_tx: u64,
+        data_rx: u64,
+        secs: f64,
+        dots: Vec<f64>,
+    },
+    /// Star-plane combine completion: the driver's plan sums, shipped
+    /// back so the rank applies the same epilogue/store the p2p ranks
+    /// apply after their mesh schedules.
+    Finish { sums: Vec<Vec<f64>> },
+    /// Reply to `Finish`: the spec's replicated dot products.
+    Finished { dots: Vec<f64> },
 }
 
 mod tag {
@@ -366,6 +394,7 @@ mod tag {
     pub const MESH_OK: u8 = 6;
     pub const REDUCE: u8 = 7;
     pub const REDUCED: u8 = 8;
+    pub const FINISH: u8 = 9;
     pub const CMD_RESET: u8 = 10;
     pub const CMD_GRAD: u8 = 11;
     pub const CMD_DIRS: u8 = 12;
@@ -376,6 +405,10 @@ mod tag {
     pub const CMD_LOSS_EVAL: u8 = 17;
     pub const CMD_LOCAL_SOLVE: u8 = 18;
     pub const CMD_DUAL_UPDATE: u8 = 19;
+    pub const CMD_VEC_OPS: u8 = 20;
+    pub const CMD_SET_REG: u8 = 21;
+    pub const CMD_FETCH_REG: u8 = 22;
+    pub const FINISHED: u8 = 23;
     pub const REPLY_ACK: u8 = 30;
     pub const REPLY_GRAD: u8 = 31;
     pub const REPLY_PAIR: u8 = 32;
@@ -383,6 +416,7 @@ mod tag {
     pub const REPLY_WARM: u8 = 34;
     pub const REPLY_VECTOR: u8 = 35;
     pub const REPLY_SCALAR: u8 = 36;
+    pub const REPLY_DOTS: u8 = 37;
     // LocalSolve payload sub-tags
     pub const SOLVE_ADMM_PROX: u8 = 1;
     pub const SOLVE_COCOA_SDCA: u8 = 2;
@@ -390,6 +424,161 @@ mod tag {
     pub const SOLVE_FEATURE: u8 = 4;
     // DualUpdate payload sub-tags
     pub const DUAL_ADMM: u8 = 1;
+    // VecRef sub-tags
+    pub const REF_INLINE: u8 = 0;
+    pub const REF_REG: u8 = 1;
+    // VecOp sub-tags
+    pub const OP_COPY: u8 = 1;
+    pub const OP_ZERO: u8 = 2;
+    pub const OP_SCALE: u8 = 3;
+    pub const OP_AXPY: u8 = 4;
+    pub const OP_AXPBY: u8 = 5;
+    // Combine sub-tags
+    pub const COMBINE_WEIGHTED_SUM: u8 = 1;
+    pub const COMBINE_DIRECTION: u8 = 2;
+    pub const COMBINE_COVERAGE: u8 = 3;
+    pub const COMBINE_STEP: u8 = 4;
+    pub const COMBINE_WEIGHTED_AVG: u8 = 5;
+    pub const COMBINE_ADMM: u8 = 6;
+}
+
+fn enc_vecref(e: &mut Enc, r: &VecRef) {
+    match r {
+        VecRef::Inline(v) => {
+            e.u8(tag::REF_INLINE);
+            e.vec_f64(v);
+        }
+        VecRef::Reg(i) => {
+            e.u8(tag::REF_REG);
+            e.u32(*i);
+        }
+    }
+}
+
+fn dec_vecref(d: &mut Dec) -> Result<VecRef, String> {
+    match d.u8()? {
+        tag::REF_INLINE => Ok(VecRef::Inline(d.vec_f64()?)),
+        tag::REF_REG => Ok(VecRef::Reg(d.u32()?)),
+        other => Err(format!("unknown vector-ref tag {other}")),
+    }
+}
+
+fn enc_vecop(e: &mut Enc, op: &VecOp) {
+    match *op {
+        VecOp::Copy { dst, src } => {
+            e.u8(tag::OP_COPY);
+            e.u32(dst);
+            e.u32(src);
+        }
+        VecOp::Zero { dst } => {
+            e.u8(tag::OP_ZERO);
+            e.u32(dst);
+        }
+        VecOp::Scale { dst, a } => {
+            e.u8(tag::OP_SCALE);
+            e.u32(dst);
+            e.f64(a);
+        }
+        VecOp::Axpy { dst, a, src } => {
+            e.u8(tag::OP_AXPY);
+            e.u32(dst);
+            e.f64(a);
+            e.u32(src);
+        }
+        VecOp::Axpby { dst, a, src, b } => {
+            e.u8(tag::OP_AXPBY);
+            e.u32(dst);
+            e.f64(a);
+            e.u32(src);
+            e.f64(b);
+        }
+    }
+}
+
+fn dec_vecop(d: &mut Dec) -> Result<VecOp, String> {
+    Ok(match d.u8()? {
+        tag::OP_COPY => VecOp::Copy { dst: d.u32()?, src: d.u32()? },
+        tag::OP_ZERO => VecOp::Zero { dst: d.u32()? },
+        tag::OP_SCALE => VecOp::Scale { dst: d.u32()?, a: d.f64()? },
+        tag::OP_AXPY => VecOp::Axpy { dst: d.u32()?, a: d.f64()?, src: d.u32()? },
+        tag::OP_AXPBY => VecOp::Axpby {
+            dst: d.u32()?,
+            a: d.f64()?,
+            src: d.u32()?,
+            b: d.f64()?,
+        },
+        other => return Err(format!("unknown vec-op tag {other}")),
+    })
+}
+
+fn enc_dots(e: &mut Enc, dots: &[(u32, u32)]) {
+    e.u64(dots.len() as u64);
+    for &(a, b) in dots {
+        e.u32(a);
+        e.u32(b);
+    }
+}
+
+fn dec_dots(d: &mut Dec) -> Result<Vec<(u32, u32)>, String> {
+    let len = d.u64()? as usize;
+    if len.saturating_mul(8) > d.buf.len() - d.pos {
+        return Err(format!("truncated dot list of claimed length {len}"));
+    }
+    let mut dots = Vec::with_capacity(len);
+    for _ in 0..len {
+        dots.push((d.u32()?, d.u32()?));
+    }
+    Ok(dots)
+}
+
+fn enc_combine(e: &mut Enc, spec: &CombineSpec) {
+    e.vec_f64(&spec.weights);
+    match &spec.kind {
+        Combine::WeightedSum => e.u8(tag::COMBINE_WEIGHTED_SUM),
+        Combine::Direction { anchor } => {
+            e.u8(tag::COMBINE_DIRECTION);
+            e.u32(*anchor);
+        }
+        Combine::CoverageDirection { anchor } => {
+            e.u8(tag::COMBINE_COVERAGE);
+            e.u32(*anchor);
+        }
+        Combine::Step { anchor, scale } => {
+            e.u8(tag::COMBINE_STEP);
+            e.u32(*anchor);
+            e.f64(*scale);
+        }
+        Combine::WeightedAvg => e.u8(tag::COMBINE_WEIGHTED_AVG),
+        Combine::AdmmConsensus { rho, lambda } => {
+            e.u8(tag::COMBINE_ADMM);
+            e.f64(*rho);
+            e.f64(*lambda);
+        }
+    }
+    match spec.store {
+        Some(r) => {
+            e.u8(1);
+            e.u32(r);
+        }
+        None => e.u8(0),
+    }
+    enc_dots(e, &spec.dots);
+}
+
+fn dec_combine(d: &mut Dec) -> Result<CombineSpec, String> {
+    let weights = d.vec_f64()?;
+    let kind = match d.u8()? {
+        tag::COMBINE_WEIGHTED_SUM => Combine::WeightedSum,
+        tag::COMBINE_DIRECTION => Combine::Direction { anchor: d.u32()? },
+        tag::COMBINE_COVERAGE => Combine::CoverageDirection { anchor: d.u32()? },
+        tag::COMBINE_STEP => Combine::Step { anchor: d.u32()?, scale: d.f64()? },
+        tag::COMBINE_WEIGHTED_AVG => Combine::WeightedAvg,
+        tag::COMBINE_ADMM => Combine::AdmmConsensus { rho: d.f64()?, lambda: d.f64()? },
+        other => return Err(format!("unknown combine tag {other}")),
+    };
+    let store = if d.u8()? == 1 { Some(d.u32()?) } else { None };
+    let dots = dec_dots(d)?;
+    Ok(CombineSpec { weights, kind, store, dots })
 }
 
 fn check_version(got: u32) -> Result<(), String> {
@@ -446,17 +635,30 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             }
         }
         Msg::MeshOk => e.u8(tag::MESH_OK),
-        Msg::Reduce { cmd, topology } => {
+        Msg::Reduce { cmd, topology, spec } => {
             e.u8(tag::REDUCE);
             e.str(topology.name());
+            enc_combine(&mut e, spec);
             enc_cmd(&mut e, cmd);
         }
-        Msg::Reduced { reply, data_tx, data_rx, secs } => {
+        Msg::Reduced { reply, data_tx, data_rx, secs, dots } => {
             e.u8(tag::REDUCED);
             e.u64(*data_tx);
             e.u64(*data_rx);
             e.f64(*secs);
+            e.vec_f64(dots);
             enc_reply(&mut e, reply);
+        }
+        Msg::Finish { sums } => {
+            e.u8(tag::FINISH);
+            e.u64(sums.len() as u64);
+            for s in sums {
+                e.vec_f64(s);
+            }
+        }
+        Msg::Finished { dots } => {
+            e.u8(tag::FINISHED);
+            e.vec_f64(dots);
         }
         Msg::Cmd(cmd) => enc_cmd(&mut e, cmd),
         Msg::Reply(reply) => enc_reply(&mut e, reply),
@@ -472,11 +674,11 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
         Command::Grad { loss, w } => {
             e.u8(tag::CMD_GRAD);
             e.str(loss.name());
-            e.vec_f64(w);
+            enc_vecref(e, w);
         }
         Command::Dirs { d } => {
             e.u8(tag::CMD_DIRS);
-            e.vec_f64(d);
+            enc_vecref(e, d);
         }
         Command::Linesearch { loss, t } => {
             e.u8(tag::CMD_LINESEARCH);
@@ -491,9 +693,15 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
             e.opt_f64(spec.trust_radius);
             e.f64(spec.lambda);
             e.str(spec.loss.name());
-            e.vec_f64(&spec.anchor);
-            e.vec_f64(&spec.full_grad);
-            e.opt_vec_f64(spec.data_grad.as_deref());
+            enc_vecref(e, &spec.anchor);
+            enc_vecref(e, &spec.full_grad);
+            match &spec.data_grad {
+                Some(r) => {
+                    e.u8(1);
+                    enc_vecref(e, r);
+                }
+                None => e.u8(0),
+            }
         }
         Command::Warmstart { loss, lambda, epochs, seed } => {
             e.u8(tag::CMD_WARMSTART);
@@ -505,12 +713,12 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
         Command::Hvp { loss, s } => {
             e.u8(tag::CMD_HVP);
             e.str(loss.name());
-            e.vec_f64(s);
+            enc_vecref(e, s);
         }
         Command::LossEval { loss, w } => {
             e.u8(tag::CMD_LOSS_EVAL);
             e.str(loss.name());
-            e.vec_f64(w);
+            enc_vecref(e, w);
         }
         Command::LocalSolve(spec) => {
             e.u8(tag::CMD_LOCAL_SOLVE);
@@ -522,7 +730,7 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
                     e.u32(*local_iters);
                     e.bool(*init);
                     e.f64(*u_scale);
-                    e.vec_f64(z);
+                    enc_vecref(e, z);
                 }
                 LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
                     e.u8(tag::SOLVE_COCOA_SDCA);
@@ -530,7 +738,7 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
                     e.f64(*epochs);
                     e.u64(*seed);
                     e.u64(*round);
-                    e.vec_f64(w);
+                    enc_vecref(e, w);
                 }
                 LocalSolveSpec::SszProx {
                     loss,
@@ -546,9 +754,9 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
                     e.f64(*lambda);
                     e.f64(*mu);
                     e.u32(*local_iters);
-                    e.vec_f64(anchor);
-                    e.vec_f64(full_grad);
-                    e.vec_f64(grad_shift);
+                    enc_vecref(e, anchor);
+                    enc_vecref(e, full_grad);
+                    enc_vecref(e, grad_shift);
                 }
                 LocalSolveSpec::FeatureSolve {
                     loss,
@@ -562,8 +770,8 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
                     e.str(loss.name());
                     e.f64(*lambda);
                     e.u32(*k_hat);
-                    e.vec_f64(anchor);
-                    e.vec_f64(full_grad);
+                    enc_vecref(e, anchor);
+                    enc_vecref(e, full_grad);
                     e.vec_vec_u32(subsets);
                 }
             }
@@ -571,11 +779,25 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
         Command::DualUpdate(spec) => {
             e.u8(tag::CMD_DUAL_UPDATE);
             match spec {
-                DualUpdateSpec::AdmmDual { z } => {
-                    e.u8(tag::DUAL_ADMM);
-                    e.vec_f64(z);
-                }
+                DualUpdateSpec::AdmmDual => e.u8(tag::DUAL_ADMM),
             }
+        }
+        Command::VecOps { ops, dots } => {
+            e.u8(tag::CMD_VEC_OPS);
+            e.u64(ops.len() as u64);
+            for op in ops {
+                enc_vecop(e, op);
+            }
+            enc_dots(e, dots);
+        }
+        Command::SetReg { reg, v } => {
+            e.u8(tag::CMD_SET_REG);
+            e.u32(*reg);
+            e.vec_f64(v);
+        }
+        Command::FetchReg { reg } => {
+            e.u8(tag::CMD_FETCH_REG);
+            e.u32(*reg);
         }
     }
 }
@@ -620,6 +842,11 @@ fn enc_reply(e: &mut Enc, reply: &Reply) {
         Reply::Scalar { v, units } => {
             e.u8(tag::REPLY_SCALAR);
             e.f64(*v);
+            e.f64(*units);
+        }
+        Reply::Dots { vals, units } => {
+            e.u8(tag::REPLY_DOTS);
+            e.vec_f64(vals);
             e.f64(*units);
         }
     }
@@ -681,18 +908,39 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let topo_name = d.str()?;
             let topology = Topology::from_name(&topo_name)
                 .ok_or_else(|| format!("unknown topology {topo_name:?}"))?;
+            let spec = dec_combine(&mut d)?;
             let ct = d.u8()?;
-            Msg::Reduce { cmd: dec_cmd(&mut d, ct)?, topology }
+            Msg::Reduce { cmd: dec_cmd(&mut d, ct)?, topology, spec }
         }
         tag::REDUCED => {
             let data_tx = d.u64()?;
             let data_rx = d.u64()?;
             let secs = d.f64()?;
+            let dots = d.vec_f64()?;
             let rt = d.u8()?;
-            Msg::Reduced { reply: dec_reply(&mut d, rt)?, data_tx, data_rx, secs }
+            Msg::Reduced {
+                reply: dec_reply(&mut d, rt)?,
+                data_tx,
+                data_rx,
+                secs,
+                dots,
+            }
         }
-        t @ tag::CMD_RESET..=tag::CMD_DUAL_UPDATE => Msg::Cmd(dec_cmd(&mut d, t)?),
-        t @ tag::REPLY_ACK..=tag::REPLY_SCALAR => Msg::Reply(dec_reply(&mut d, t)?),
+        tag::FINISH => {
+            let len = d.u64()? as usize;
+            // each sum costs at least its 8-byte length prefix
+            if len.saturating_mul(8) > payload.len() {
+                return Err(format!("truncated finish list of claimed length {len}"));
+            }
+            let mut sums = Vec::with_capacity(len);
+            for _ in 0..len {
+                sums.push(d.vec_f64()?);
+            }
+            Msg::Finish { sums }
+        }
+        tag::FINISHED => Msg::Finished { dots: d.vec_f64()? },
+        t @ tag::CMD_RESET..=tag::CMD_FETCH_REG => Msg::Cmd(dec_cmd(&mut d, t)?),
+        t @ tag::REPLY_ACK..=tag::REPLY_DOTS => Msg::Reply(dec_reply(&mut d, t)?),
         other => return Err(format!("unknown message tag {other}")),
     };
     d.finish()?;
@@ -706,9 +954,9 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
         tag::CMD_RESET => Command::Reset,
         tag::CMD_GRAD => Command::Grad {
             loss: loss_from(&d.str()?)?,
-            w: d.vec_f64()?,
+            w: dec_vecref(d)?,
         },
-        tag::CMD_DIRS => Command::Dirs { d: d.vec_f64()? },
+        tag::CMD_DIRS => Command::Dirs { d: dec_vecref(d)? },
         tag::CMD_LINESEARCH => Command::Linesearch {
             loss: loss_from(&d.str()?)?,
             t: d.f64()?,
@@ -720,9 +968,9 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
             trust_radius: d.opt_f64()?,
             lambda: d.f64()?,
             loss: loss_from(&d.str()?)?,
-            anchor: d.vec_f64()?,
-            full_grad: d.vec_f64()?,
-            data_grad: d.opt_vec_f64()?,
+            anchor: dec_vecref(d)?,
+            full_grad: dec_vecref(d)?,
+            data_grad: if d.u8()? == 1 { Some(dec_vecref(d)?) } else { None },
         }),
         tag::CMD_WARMSTART => Command::Warmstart {
             loss: loss_from(&d.str()?)?,
@@ -732,11 +980,11 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
         },
         tag::CMD_HVP => Command::Hvp {
             loss: loss_from(&d.str()?)?,
-            s: d.vec_f64()?,
+            s: dec_vecref(d)?,
         },
         tag::CMD_LOSS_EVAL => Command::LossEval {
             loss: loss_from(&d.str()?)?,
-            w: d.vec_f64()?,
+            w: dec_vecref(d)?,
         },
         tag::CMD_LOCAL_SOLVE => {
             let sub = d.u8()?;
@@ -747,30 +995,30 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
                     local_iters: d.u32()?,
                     init: d.bool()?,
                     u_scale: d.f64()?,
-                    z: d.vec_f64()?,
+                    z: dec_vecref(d)?,
                 },
                 tag::SOLVE_COCOA_SDCA => LocalSolveSpec::CocoaSdca {
                     lambda: d.f64()?,
                     epochs: d.f64()?,
                     seed: d.u64()?,
                     round: d.u64()?,
-                    w: d.vec_f64()?,
+                    w: dec_vecref(d)?,
                 },
                 tag::SOLVE_SSZ_PROX => LocalSolveSpec::SszProx {
                     loss: loss_from(&d.str()?)?,
                     lambda: d.f64()?,
                     mu: d.f64()?,
                     local_iters: d.u32()?,
-                    anchor: d.vec_f64()?,
-                    full_grad: d.vec_f64()?,
-                    grad_shift: d.vec_f64()?,
+                    anchor: dec_vecref(d)?,
+                    full_grad: dec_vecref(d)?,
+                    grad_shift: dec_vecref(d)?,
                 },
                 tag::SOLVE_FEATURE => LocalSolveSpec::FeatureSolve {
                     loss: loss_from(&d.str()?)?,
                     lambda: d.f64()?,
                     k_hat: d.u32()?,
-                    anchor: d.vec_f64()?,
-                    full_grad: d.vec_f64()?,
+                    anchor: dec_vecref(d)?,
+                    full_grad: dec_vecref(d)?,
                     subsets: d.vec_vec_u32()?,
                 },
                 other => return Err(format!("unknown local-solve payload tag {other}")),
@@ -780,11 +1028,25 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
         tag::CMD_DUAL_UPDATE => {
             let sub = d.u8()?;
             let spec = match sub {
-                tag::DUAL_ADMM => DualUpdateSpec::AdmmDual { z: d.vec_f64()? },
+                tag::DUAL_ADMM => DualUpdateSpec::AdmmDual,
                 other => return Err(format!("unknown dual-update payload tag {other}")),
             };
             Command::DualUpdate(spec)
         }
+        tag::CMD_VEC_OPS => {
+            let len = d.u64()? as usize;
+            // each op costs at least its tag + one u32 operand
+            if len.saturating_mul(5) > d.buf.len() - d.pos {
+                return Err(format!("truncated op list of claimed length {len}"));
+            }
+            let mut ops = Vec::with_capacity(len);
+            for _ in 0..len {
+                ops.push(dec_vecop(d)?);
+            }
+            Command::VecOps { ops, dots: dec_dots(d)? }
+        }
+        tag::CMD_SET_REG => Command::SetReg { reg: d.u32()?, v: d.vec_f64()? },
+        tag::CMD_FETCH_REG => Command::FetchReg { reg: d.u32()? },
         other => return Err(format!("unknown command tag {other}")),
     })
 }
@@ -822,8 +1084,93 @@ fn dec_reply(d: &mut Dec, t: u8) -> Result<Reply, String> {
             v: d.f64()?,
             units: d.f64()?,
         },
+        tag::REPLY_DOTS => Reply::Dots {
+            vals: d.vec_f64()?,
+            units: d.f64()?,
+        },
         other => return Err(format!("unknown reply tag {other}")),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Driver data-payload accounting
+// ---------------------------------------------------------------------------
+
+fn vecref_bytes(r: &VecRef) -> u64 {
+    match r {
+        VecRef::Inline(v) => 8 * v.len() as u64,
+        VecRef::Reg(_) => 0,
+    }
+}
+
+/// f64 data-vector payload bytes a command carries (inline `VecRef`s
+/// and explicit vector payloads). Scalar aggregates — dot-request
+/// lists, op coefficients, per-rank weights — are control traffic and
+/// excluded; so are the `u32` feature subsets (static partition
+/// metadata, shipped once).
+pub fn cmd_data_bytes(cmd: &Command) -> u64 {
+    match cmd {
+        Command::Reset
+        | Command::Linesearch { .. }
+        | Command::Warmstart { .. }
+        | Command::VecOps { .. }
+        | Command::FetchReg { .. } => 0,
+        Command::Grad { w, .. } | Command::LossEval { w, .. } => vecref_bytes(w),
+        Command::Dirs { d } => vecref_bytes(d),
+        Command::Hvp { s, .. } => vecref_bytes(s),
+        Command::InnerSolve(spec) => {
+            vecref_bytes(&spec.anchor)
+                + vecref_bytes(&spec.full_grad)
+                + spec.data_grad.as_ref().map(vecref_bytes).unwrap_or(0)
+        }
+        Command::LocalSolve(spec) => match spec {
+            LocalSolveSpec::AdmmProx { z, .. } => vecref_bytes(z),
+            LocalSolveSpec::CocoaSdca { w, .. } => vecref_bytes(w),
+            LocalSolveSpec::SszProx { anchor, full_grad, grad_shift, .. } => {
+                vecref_bytes(anchor) + vecref_bytes(full_grad) + vecref_bytes(grad_shift)
+            }
+            LocalSolveSpec::FeatureSolve { anchor, full_grad, .. } => {
+                vecref_bytes(anchor) + vecref_bytes(full_grad)
+            }
+        },
+        Command::DualUpdate(DualUpdateSpec::AdmmDual) => 0,
+        Command::SetReg { v, .. } => 8 * v.len() as u64,
+    }
+}
+
+/// f64 data-vector payload bytes a reply carries. The `Dots` reply is
+/// a scalar aggregate (replicated dot products) — control traffic.
+pub fn reply_data_bytes(reply: &Reply) -> u64 {
+    match reply {
+        Reply::Ack { .. } | Reply::Pair { .. } | Reply::Scalar { .. } => 0,
+        Reply::Dots { .. } => 0,
+        Reply::Grad { grad, .. } => 8 * grad.len() as u64,
+        Reply::Solve { w, .. } => 8 * w.len() as u64,
+        Reply::Warm { w, counts, .. } => 8 * (w.len() + counts.len()) as u64,
+        Reply::Vector { v, .. } => 8 * v.len() as u64,
+    }
+}
+
+/// f64 data-vector payload bytes a message moves over a driver link —
+/// the [`super::Measured::driver_data_bytes`] accounting. Under the p2p
+/// data plane this must be 0 for every frame after round 0: the
+/// scalar-only driver invariant.
+pub fn msg_data_bytes(msg: &Msg) -> u64 {
+    match msg {
+        Msg::Setup(_)
+        | Msg::Shutdown
+        | Msg::Ready { .. }
+        | Msg::Abort { .. }
+        | Msg::Mesh { .. }
+        | Msg::MeshOk
+        | Msg::Finished { .. } => 0,
+        Msg::Cmd(cmd) | Msg::Reduce { cmd, .. } => cmd_data_bytes(cmd),
+        Msg::Reply(reply) => reply_data_bytes(reply),
+        Msg::Reduced { reply, .. } => reply_data_bytes(reply),
+        Msg::Finish { sums } => {
+            sums.iter().map(|s| 8 * s.len() as u64).sum()
+        }
+    }
 }
 
 /// Convenience: encode + frame in one call, returning bytes written.
@@ -845,7 +1192,7 @@ mod tests {
     use crate::approx::ApproxKind;
     use crate::data::partition::Strategy;
     use crate::loss::Loss;
-    use crate::net::{Command, InnerSolveSpec, Reply, WorkerSetup};
+    use crate::net::{Command, InnerSolveSpec, Reply, VecOp, VecRef, WorkerSetup};
 
     fn roundtrip(msg: Msg) {
         let bytes = encode(&msg);
@@ -877,9 +1224,11 @@ mod tests {
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
             loss: Loss::Logistic,
-            w: vec![1.0, -2.5, f64::MIN_POSITIVE, 0.1 + 0.2],
+            w: VecRef::Inline(vec![1.0, -2.5, f64::MIN_POSITIVE, 0.1 + 0.2]),
         }));
-        roundtrip(Msg::Cmd(Command::Dirs { d: vec![] }));
+        roundtrip(Msg::Cmd(Command::Grad { loss: Loss::Logistic, w: VecRef::Reg(3) }));
+        roundtrip(Msg::Cmd(Command::Dirs { d: VecRef::Inline(vec![]) }));
+        roundtrip(Msg::Cmd(Command::Dirs { d: VecRef::Reg(0) }));
         roundtrip(Msg::Cmd(Command::Linesearch {
             loss: Loss::SquaredHinge,
             t: 0.625,
@@ -891,9 +1240,9 @@ mod tests {
             trust_radius: Some(0.75),
             lambda: 1e-4,
             loss: Loss::SquaredHinge,
-            anchor: vec![0.1, 0.2],
-            full_grad: vec![-0.3, 0.4],
-            data_grad: Some(vec![7.0]),
+            anchor: VecRef::Inline(vec![0.1, 0.2]),
+            full_grad: VecRef::Reg(2),
+            data_grad: Some(VecRef::Inline(vec![7.0])),
         })));
         roundtrip(Msg::Cmd(Command::Warmstart {
             loss: Loss::LeastSquares,
@@ -920,18 +1269,20 @@ mod tests {
         }));
         roundtrip(Msg::Reply(Reply::Vector { v: vec![1.5, -2.5], units: 6.0 }));
         roundtrip(Msg::Reply(Reply::Scalar { v: 0.25, units: 0.0 }));
+        roundtrip(Msg::Reply(Reply::Dots { vals: vec![0.5, -1.5], units: 0.0 }));
     }
 
     #[test]
     fn full_vocabulary_variants_roundtrip() {
-        use crate::net::{DualUpdateSpec, LocalSolveSpec};
+        use crate::net::{DualUpdateSpec, LocalSolveSpec, VecOp};
         roundtrip(Msg::Cmd(Command::Hvp {
             loss: Loss::SquaredHinge,
-            s: vec![0.1, -0.2, 0.3],
+            s: VecRef::Inline(vec![0.1, -0.2, 0.3]),
         }));
+        roundtrip(Msg::Cmd(Command::Hvp { loss: Loss::SquaredHinge, s: VecRef::Reg(5) }));
         roundtrip(Msg::Cmd(Command::LossEval {
             loss: Loss::Logistic,
-            w: vec![],
+            w: VecRef::Inline(vec![]),
         }));
         roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::AdmmProx {
             loss: Loss::SquaredHinge,
@@ -939,75 +1290,183 @@ mod tests {
             local_iters: 8,
             init: true,
             u_scale: 0.5,
-            z: vec![1.0, 2.0, 3.0],
+            z: VecRef::Inline(vec![1.0, 2.0, 3.0]),
         })));
         roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::CocoaSdca {
             lambda: 1e-3,
             epochs: 0.1,
             seed: 0xc0c0,
             round: 7,
-            w: vec![0.0; 4],
+            w: VecRef::Reg(0),
         })));
         roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::SszProx {
             loss: Loss::SquaredHinge,
             lambda: 1e-2,
             mu: 3e-2,
             local_iters: 10,
-            anchor: vec![0.1],
-            full_grad: vec![-0.1],
-            grad_shift: vec![],
+            anchor: VecRef::Inline(vec![0.1]),
+            full_grad: VecRef::Reg(2),
+            grad_shift: VecRef::Inline(vec![]),
         })));
         roundtrip(Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
             loss: Loss::SquaredHinge,
             lambda: 1e-2,
             k_hat: 10,
-            anchor: vec![0.0; 3],
-            full_grad: vec![1.0; 3],
+            anchor: VecRef::Inline(vec![0.0; 3]),
+            full_grad: VecRef::Inline(vec![1.0; 3]),
             subsets: vec![vec![0, 2], vec![], vec![1]],
         })));
-        roundtrip(Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual {
-            z: vec![5.0, -5.0],
-        })));
+        roundtrip(Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual)));
+        roundtrip(Msg::Cmd(Command::VecOps {
+            ops: vec![
+                VecOp::Copy { dst: 1, src: 0 },
+                VecOp::Zero { dst: 2 },
+                VecOp::Scale { dst: 1, a: -0.5 },
+                VecOp::Axpy { dst: 1, a: 0.25, src: 2 },
+                VecOp::Axpby { dst: 2, a: 1.0, src: 1, b: 0.75 },
+            ],
+            dots: vec![(0, 1), (2, 2)],
+        }));
+        roundtrip(Msg::Cmd(Command::VecOps { ops: vec![], dots: vec![] }));
+        roundtrip(Msg::Cmd(Command::SetReg { reg: 9, v: vec![0.1 + 0.2, -0.0] }));
+        roundtrip(Msg::Cmd(Command::FetchReg { reg: 63 }));
     }
 
     #[test]
     fn data_plane_variants_roundtrip() {
+        use crate::net::{Combine, CombineSpec};
         roundtrip(Msg::Mesh { addrs: vec![] });
         roundtrip(Msg::Mesh {
             addrs: vec!["127.0.0.1:9100".into(), "10.0.0.2:9101".into()],
         });
         roundtrip(Msg::MeshOk);
-        for topology in crate::net::Topology::all() {
+        let kinds = [
+            Combine::WeightedSum,
+            Combine::Direction { anchor: 0 },
+            Combine::CoverageDirection { anchor: 7 },
+            Combine::Step { anchor: 1, scale: 0.25 },
+            Combine::WeightedAvg,
+            Combine::AdmmConsensus { rho: 0.5, lambda: 1e-3 },
+        ];
+        for (topology, kind) in crate::net::Topology::all().iter().cycle().zip(kinds) {
             roundtrip(Msg::Reduce {
                 cmd: Command::Grad {
                     loss: Loss::SquaredHinge,
-                    w: vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE],
+                    w: VecRef::Inline(vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE]),
                 },
-                topology,
+                topology: *topology,
+                spec: CombineSpec {
+                    weights: vec![0.5, 0.25, 0.0, 1.0],
+                    kind,
+                    store: Some(4),
+                    dots: vec![(4, 4), (0, 4)],
+                },
             });
         }
         roundtrip(Msg::Reduce {
-            cmd: Command::Hvp { loss: Loss::Logistic, s: vec![] },
+            cmd: Command::Hvp { loss: Loss::Logistic, s: VecRef::Reg(2) },
             topology: crate::net::Topology::Ring,
+            spec: CombineSpec::sum_into(3),
         });
         roundtrip(Msg::Reduced {
             reply: Reply::Grad { loss: 2.5, grad: vec![1.0, -2.0], units: 7.0 },
             data_tx: 1234,
             data_rx: 4321,
             secs: 0.015625,
+            dots: vec![0.5, -0.25],
         });
         roundtrip(Msg::Reduced {
             reply: Reply::Vector { v: vec![], units: 0.0 },
             data_tx: 0,
             data_rx: 0,
             secs: 0.0,
+            dots: vec![],
         });
+        roundtrip(Msg::Finish { sums: vec![] });
+        roundtrip(Msg::Finish {
+            sums: vec![vec![0.1 + 0.2, -0.0], vec![1.0, 2.0]],
+        });
+        roundtrip(Msg::Finished { dots: vec![] });
+        roundtrip(Msg::Finished { dots: vec![9.5] });
         // an unknown topology name inside Reduce is rejected
         let mut e = Enc::new();
         e.u8(tag::REDUCE);
         e.str("mesh");
         e.u8(tag::CMD_RESET);
         assert!(decode(&e.buf).unwrap_err().contains("unknown topology"));
+    }
+
+    #[test]
+    fn data_byte_accounting_counts_inline_vectors_only() {
+        // inline refs and vector payloads count; register refs, dot
+        // lists and scalar aggregates are control traffic
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::Grad {
+                loss: Loss::Logistic,
+                w: VecRef::Inline(vec![0.0; 5]),
+            })),
+            40
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::Grad {
+                loss: Loss::Logistic,
+                w: VecRef::Reg(0),
+            })),
+            0
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::VecOps {
+                ops: vec![VecOp::Scale { dst: 0, a: 2.0 }],
+                dots: vec![(0, 0)],
+            })),
+            0,
+            "bookkeeping ops and dot requests are control traffic"
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::SetReg { reg: 0, v: vec![0.0; 3] })),
+            24
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Reply(Reply::Dots { vals: vec![1.0; 8], units: 0.0 })),
+            0,
+            "replicated dots are scalar aggregates"
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Reply(Reply::Warm {
+                w: vec![0.0; 4],
+                counts: vec![0.0; 4],
+                units: 1.0,
+            })),
+            64
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Reduced {
+                reply: Reply::Solve { w: vec![], n: 10, units: 1.0 },
+                data_tx: 99,
+                data_rx: 99,
+                secs: 0.5,
+                dots: vec![1.0, 2.0],
+            }),
+            0,
+            "an emptied combine reply is scalar-only"
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Finish { sums: vec![vec![0.0; 6], vec![0.0; 6]] }),
+            96
+        );
+        use crate::net::CombineSpec;
+        assert_eq!(
+            msg_data_bytes(&Msg::Reduce {
+                cmd: Command::Hvp { loss: Loss::Logistic, s: VecRef::Reg(1) },
+                topology: crate::net::Topology::Tree,
+                spec: CombineSpec {
+                    weights: vec![0.25; 4],
+                    ..CombineSpec::sum_into(2)
+                },
+            }),
+            0,
+            "per-rank weights are control scalars, not an m-vector"
+        );
     }
 
     #[test]
@@ -1026,8 +1485,10 @@ mod tests {
     #[test]
     fn f64_bits_survive_exactly() {
         for v in [0.1 + 0.2, -0.0, f64::MAX, f64::MIN_POSITIVE, 1e-308] {
-            let msg = Msg::Cmd(Command::Dirs { d: vec![v] });
-            let Msg::Cmd(Command::Dirs { d }) = decode(&encode(&msg)).unwrap() else {
+            let msg = Msg::Cmd(Command::Dirs { d: VecRef::Inline(vec![v]) });
+            let Msg::Cmd(Command::Dirs { d: VecRef::Inline(d) }) =
+                decode(&encode(&msg)).unwrap()
+            else {
                 panic!()
             };
             assert_eq!(d[0].to_bits(), v.to_bits());
@@ -1064,7 +1525,8 @@ mod tests {
         bytes.push(0);
         assert!(decode(&bytes).is_err());
         // truncated vector
-        let bytes = encode(&Msg::Cmd(Command::Dirs { d: vec![1.0, 2.0] }));
+        let bytes =
+            encode(&Msg::Cmd(Command::Dirs { d: VecRef::Inline(vec![1.0, 2.0]) }));
         assert!(decode(&bytes[..bytes.len() - 4]).is_err());
         // absurd length prefix
         let mut r = std::io::Cursor::new((u32::MAX).to_le_bytes().to_vec());

@@ -8,20 +8,26 @@
 //! with the shared [`super::endpoint::exec`] until `Shutdown` or EOF.
 //!
 //! Control plane: `Setup` → `Ready` → (`Mesh` → `MeshOk` under p2p) →
-//! `Cmd`/`Reduce` frames. A `Reduce` frame executes the command and
-//! then runs this rank's share of the topology's [`ReducePlan`] over
-//! the mesh ([`super::mesh::Mesh::allreduce`]), so the reduced
-//! m-vectors move worker ↔ worker; only rank 0 returns the final
-//! vector to the driver.
+//! `Cmd`/`Reduce` frames. A `Reduce` frame executes the command,
+//! applies the combine spec's per-rank pre-transform, and then — p2p —
+//! runs this rank's share of the topology's [`ReducePlan`] over the
+//! mesh ([`super::mesh::Mesh::allreduce`]) and completes the combine
+//! locally (epilogue, replicated register store, dot products), so the
+//! driver receives only scalars; or — star — returns the
+//! pre-transformed parts and completes the combine on the driver's
+//! `Finish` frame carrying the plan sums.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 
-use super::endpoint::{exec, WorkerState};
-use super::mesh::Mesh;
+use super::endpoint::{
+    complete_combine, exec, pre_combine, put_combine_vectors, take_combine_vectors,
+    WorkerState,
+};
+use super::mesh::{Mesh, MeshStats};
 use super::topology::RankSchedule;
 use super::wire::{self, Msg};
-use super::{put_vector, take_vector, DataPlane, Topology};
+use super::{DataPlane, Topology};
 
 /// The `--worker --connect host:port` self-exec handshake, shared by
 /// every binary that can be re-executed as a worker (see
@@ -164,48 +170,99 @@ pub fn serve(connect: &str) -> Result<(), String> {
                 Ok(reply) => send(&Msg::Reply(reply), &mut w)?,
                 Err(e) => return Err(abort(e, &mut w)),
             },
-            Msg::Reduce { cmd, topology } => {
-                let Some(mesh) = &mesh else {
+            Msg::Reduce { cmd, topology, spec } => {
+                if setup.data_plane == DataPlane::P2p && mesh.is_none() {
                     return Err(abort("Reduce before the mesh handshake".into(), &mut w));
-                };
+                }
                 let mut reply = match exec(shard.as_ref(), &mut st, &cmd) {
                     Ok(reply) => reply,
                     Err(e) => return Err(abort(e, &mut w)),
                 };
-                let mut vector = match take_vector(&mut reply) {
+                let mut vectors = match take_combine_vectors(&mut reply) {
                     Ok(v) => v,
                     Err(e) => return Err(abort(e, &mut w)),
                 };
-                let m = vector.len();
-                let cached =
-                    scheds.iter().position(|(t, mm, _)| *t == topology && *mm == m);
-                let idx = match cached {
-                    Some(i) => i,
-                    None => {
-                        let sched =
-                            topology.plan(setup.p, m).rank_schedule(setup.rank);
-                        scheds.push((topology, m, sched));
-                        scheds.len() - 1
-                    }
-                };
-                let stats = match mesh.allreduce(&mut vector, &scheds[idx].2) {
-                    Ok(stats) => stats,
-                    Err(e) => return Err(abort(e, &mut w)),
-                };
-                // every rank now holds the reduced vector; only rank 0
-                // returns it — the driver never sees the P part vectors
-                if setup.rank == 0 {
-                    put_vector(&mut reply, vector);
+                if let Err(e) = pre_combine(&st, &spec, setup.rank, &mut vectors) {
+                    return Err(abort(e, &mut w));
                 }
-                send(
-                    &Msg::Reduced {
-                        reply,
-                        data_tx: stats.tx,
-                        data_rx: stats.rx,
-                        secs: stats.secs,
-                    },
-                    &mut w,
-                )?;
+                match &mesh {
+                    Some(mesh) => {
+                        // p2p: execute the plan over the mesh (once per
+                        // vector — the warm start reduces two), then
+                        // complete the combine locally. Every rank ends
+                        // holding the combined result in its registers;
+                        // the driver gets scalars only.
+                        let m = vectors[0].len();
+                        let cached = scheds
+                            .iter()
+                            .position(|(t, mm, _)| *t == topology && *mm == m);
+                        let idx = match cached {
+                            Some(i) => i,
+                            None => {
+                                let sched =
+                                    topology.plan(setup.p, m).rank_schedule(setup.rank);
+                                scheds.push((topology, m, sched));
+                                scheds.len() - 1
+                            }
+                        };
+                        let mut stats = MeshStats::default();
+                        for vector in vectors.iter_mut() {
+                            match mesh.allreduce(vector, &scheds[idx].2) {
+                                Ok(s) => stats.merge(&s),
+                                Err(e) => return Err(abort(e, &mut w)),
+                            }
+                        }
+                        // the mesh left the plan sums replicated here
+                        let dots = match complete_combine(&mut st, &spec, &vectors) {
+                            Ok(dots) => dots,
+                            Err(e) => return Err(abort(e, &mut w)),
+                        };
+                        send(
+                            &Msg::Reduced {
+                                reply,
+                                data_tx: stats.tx,
+                                data_rx: stats.rx,
+                                secs: stats.secs,
+                                dots,
+                            },
+                            &mut w,
+                        )?;
+                    }
+                    None => {
+                        // star: the pre-transformed parts ride the
+                        // reply slots to the driver's plan execution;
+                        // the epilogue runs here on the Finish sums so
+                        // the register file matches the p2p ranks'.
+                        if let Err(e) = put_combine_vectors(&mut reply, vectors) {
+                            return Err(abort(e, &mut w));
+                        }
+                        send(
+                            &Msg::Reduced {
+                                reply,
+                                data_tx: 0,
+                                data_rx: 0,
+                                secs: 0.0,
+                                dots: Vec::new(),
+                            },
+                            &mut w,
+                        )?;
+                        let sums = match wire::recv(&mut r)? {
+                            Some(Msg::Finish { sums }) => sums,
+                            Some(Msg::Shutdown) | None => return Ok(()),
+                            Some(other) => {
+                                return Err(abort(
+                                    format!("expected Finish, got {other:?}"),
+                                    &mut w,
+                                ))
+                            }
+                        };
+                        let dots = match complete_combine(&mut st, &spec, &sums) {
+                            Ok(dots) => dots,
+                            Err(e) => return Err(abort(e, &mut w)),
+                        };
+                        send(&Msg::Finished { dots }, &mut w)?;
+                    }
+                }
             }
             other => return Err(format!("unexpected message {other:?}")),
         }

@@ -8,7 +8,7 @@
 
 use fadl::coordinator::driver;
 use fadl::loss::Loss;
-use fadl::net::{DataPlane, Topology};
+use fadl::net::{CombineSpec, DataPlane, Topology, VecRef};
 use fadl::Config;
 
 fn base_cfg() -> Config {
@@ -141,15 +141,15 @@ fn every_method_matches_inproc_bitwise_on_both_planes() {
     }
 }
 
-/// The acceptance assertion on [`fadl::net::Measured`]: under the p2p
-/// data plane the driver executes no reduction gather — its
-/// reduce-attributed traffic is zero and its total per-phase receive
-/// traffic is O(one reduced vector + headers), while the P part
-/// vectors move worker ⇄ worker (exactly the schedule's frame bytes).
-/// Under star the same phase gathers all P part vectors through the
-/// driver.
+/// The combine-plane byte assertion on [`fadl::net::Measured`]: under
+/// the p2p data plane the driver executes no reduction gather — its
+/// reduce-attributed traffic is zero and, with the vectors referenced
+/// by register, **no m-sized payload transits the driver at all**; the
+/// P part vectors move worker ⇄ worker (exactly the schedule's frame
+/// bytes). Under star the same phase gathers all P part vectors
+/// through the driver and broadcasts the sums back.
 #[test]
-fn p2p_driver_reduce_traffic_is_control_only() {
+fn p2p_driver_combine_traffic_is_scalar_only() {
     let nodes = 4;
     for topology in [Topology::Tree, Topology::Ring] {
         let base = Config { nodes, topology, ..base_cfg() };
@@ -162,55 +162,153 @@ fn p2p_driver_reduce_traffic_is_control_only() {
             let m = cluster.m();
             let w = vec![0.01; m];
             cluster.reset_phase();
+            // preload the iterate register (round-0 inline ship),
+            // then measure one register-referenced grad combine
+            cluster.set_reg_phase(0, &w);
             let before = cluster.measured();
-            let (_, grad) = cluster.grad_phase(Loss::SquaredHinge, &w);
+            let _ = cluster.grad_combine_phase(
+                Loss::SquaredHinge,
+                VecRef::Reg(0),
+                &CombineSpec::sum_into(1).with_dots(&[(1, 1)]),
+            );
             let after = cluster.measured();
             let rx = after.bytes_rx - before.bytes_rx;
             let reduce = after.reduce_bytes - before.reduce_bytes;
             let data = after.data_bytes - before.data_bytes;
+            let driver_data = after.driver_data_bytes - before.driver_data_bytes;
             let label = format!("{topology:?} {}", plane.name());
             match plane {
                 DataPlane::Star => {
-                    // the driver gathered all P part vectors
+                    // the driver gathered all P part vectors …
                     assert_eq!(reduce, 8 * (m * nodes) as u64, "{label}");
                     assert_eq!(data, 0, "{label}: star has no mesh");
                     assert!(rx > 8 * (m * nodes) as u64, "{label}");
+                    // … and shipped the sums back for the rank-side
+                    // epilogue: gather + P broadcast copies
+                    assert_eq!(
+                        driver_data,
+                        8 * (m * nodes) as u64 + 8 * (m * nodes) as u64,
+                        "{label}"
+                    );
                 }
                 DataPlane::P2p => {
-                    // no m-vector gather transits the driver …
+                    // no m-vector of any kind transits the driver:
+                    // no gather, no combined-result reply, no payload
                     assert_eq!(reduce, 0, "{label}");
-                    // … the driver receives one reduced vector (rank
-                    // 0's reply) plus per-rank headers, not P vectors
-                    assert!(rx < 8 * 2 * m as u64 + 1024, "{label}: rx = {rx}");
+                    assert_eq!(driver_data, 0, "{label}: scalar-only driver");
+                    // the per-rank replies are scalar-sized
+                    assert!(rx < 1024, "{label}: rx = {rx}");
                     // … and the mesh moved exactly the schedule's frames
-                    let plan = topology.plan(nodes, m);
-                    let expected: u64 = plan
-                        .rank_schedules()
-                        .iter()
-                        .map(|s| {
-                            let sends = s
-                                .ops
-                                .iter()
-                                .filter(|op| {
-                                    matches!(
-                                        op,
-                                        fadl::net::topology::MeshOp::Send { .. }
-                                    )
-                                })
-                                .count() as u64;
-                            8 * s.send_elems() as u64 + 4 * sends
-                        })
-                        .sum();
-                    assert_eq!(data, expected, "{label}");
+                    assert_eq!(data, topology.plan(nodes, m).mesh_bytes(), "{label}");
                 }
             }
-            grads.push(grad);
+            // the combined register is bitwise identical on both planes
+            // (fetched as instrumentation, after the measurement above)
+            grads.push(cluster.fetch_reg(1));
         }
-        // and the reduced gradient itself is bitwise identical
         let (a, b) = (&grads[0], &grads[1]);
         assert!(
             a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
             "{topology:?}: star and p2p reduced gradients diverged"
         );
+    }
+}
+
+/// The endgame invariant of the combine plane: for ALL seven methods,
+/// trained end-to-end through the real driver pipeline under
+/// `data_plane = "p2p"`, **no m-sized f64 payload crosses a driver
+/// link after round 0** — every trace record's cumulative
+/// `driver_data_bytes` is 0 (with AUPRC instrumentation disabled via
+/// `test_fraction = 0`, since scoring a held-out set fetches the
+/// iterate; the end-of-run weight fetch happens after the last record).
+/// Also pins the exact per-iteration mesh byte counts for the new
+/// combine collectives.
+#[test]
+fn scalar_only_driver_for_every_method_after_round_zero() {
+    for method in [
+        "fadl",
+        "fadl_feature",
+        "tera",
+        "tera-lbfgs",
+        "admm",
+        "cocoa",
+        "ssz",
+    ] {
+        for topology in [Topology::Tree, Topology::Ring] {
+            let cfg = Config {
+                method: method.into(),
+                topology,
+                max_outer: 3,
+                test_fraction: 0.0,
+                ..tcp_cfg(&base_cfg(), DataPlane::P2p)
+            };
+            let trace = run_with(&cfg);
+            let label = format!("{method} {topology:?}");
+            assert!(!trace.records.is_empty(), "{label}");
+            for r in &trace.records {
+                assert_eq!(
+                    r.driver_data_bytes, 0.0,
+                    "{label} iter {}: the driver carried an m-vector",
+                    r.iter
+                );
+            }
+            // the mesh carried every collective: at least one full
+            // AllReduce's worth of schedule frames per comm pass
+            let last = trace.records.last().unwrap();
+            let sched_bytes = topology.plan(cfg.nodes, cfg.quick_m).mesh_bytes() as f64;
+            assert!(
+                (last.net_data_bytes - last.comm_passes * sched_bytes).abs() < 1e-9,
+                "{label}: {} mesh bytes over {} passes (1 pass = {sched_bytes})",
+                last.net_data_bytes,
+                last.comm_passes,
+            );
+        }
+    }
+}
+
+/// Exact per-iteration mesh byte counts for the combine collectives:
+/// FADL moves 2 AllReduces per outer iteration (gradient + direction
+/// combine) and its warm start 2 more; ADMM moves exactly 1 (the
+/// consensus combine).
+#[test]
+fn combine_collectives_have_exact_mesh_byte_counts() {
+    for topology in [Topology::Tree, Topology::Ring] {
+        // fadl with warm start: record 0 sits after warm (2 passes) +
+        // grad (1); every following record adds direction + grad = 2
+        let cfg = Config {
+            topology,
+            test_fraction: 0.0,
+            ..tcp_cfg(&base_cfg(), DataPlane::P2p)
+        };
+        let sched = topology.plan(cfg.nodes, cfg.quick_m).mesh_bytes() as f64;
+        let trace = run_with(&cfg);
+        assert_eq!(trace.records[0].net_data_bytes, 3.0 * sched, "{topology:?}");
+        for pair in trace.records.windows(2) {
+            assert_eq!(
+                pair[1].net_data_bytes - pair[0].net_data_bytes,
+                2.0 * sched,
+                "{topology:?} iter {}",
+                pair[1].iter
+            );
+        }
+        // admm: records sit after each iteration's single consensus
+        // combine (plus the warm start's 2 passes before record 0)
+        let cfg = Config {
+            method: "admm".into(),
+            topology,
+            test_fraction: 0.0,
+            max_outer: 3,
+            ..tcp_cfg(&base_cfg(), DataPlane::P2p)
+        };
+        let trace = run_with(&cfg);
+        assert_eq!(trace.records[0].net_data_bytes, 3.0 * sched, "{topology:?} admm");
+        for pair in trace.records.windows(2) {
+            assert_eq!(
+                pair[1].net_data_bytes - pair[0].net_data_bytes,
+                sched,
+                "{topology:?} admm iter {}",
+                pair[1].iter
+            );
+        }
     }
 }

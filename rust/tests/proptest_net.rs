@@ -12,7 +12,10 @@ use fadl::data::synth;
 use fadl::loss::Loss;
 use fadl::net::topology;
 use fadl::net::wire::{self, read_frame, write_frame, Dec, Enc, Msg};
-use fadl::net::{Command, DualUpdateSpec, LocalSolveSpec, Topology};
+use fadl::net::{
+    Combine, CombineSpec, Command, DualUpdateSpec, LocalSolveSpec, Topology, VecOp,
+    VecRef,
+};
 use fadl::objective::{Shard, ShardCompute, SparseShard};
 use fadl::util::proptest::{Pair, Runner, UsizeRange};
 use fadl::util::rng::Pcg64;
@@ -162,22 +165,50 @@ fn wire_roundtrip(msg: &Msg) -> Msg {
     back
 }
 
+fn draw_vecref(rng: &mut Pcg64, len: usize) -> VecRef {
+    if rng.below(3) == 0 {
+        VecRef::Reg(rng.below(64) as u32)
+    } else {
+        VecRef::Inline(draw_vec(rng, len))
+    }
+}
+
+fn draw_combine(rng: &mut Pcg64) -> CombineSpec {
+    let kind = match rng.below(6) {
+        0 => Combine::WeightedSum,
+        1 => Combine::Direction { anchor: rng.below(32) as u32 },
+        2 => Combine::CoverageDirection { anchor: rng.below(32) as u32 },
+        3 => Combine::Step { anchor: rng.below(32) as u32, scale: rng.normal() },
+        4 => Combine::WeightedAvg,
+        _ => Combine::AdmmConsensus { rho: rng.normal().abs(), lambda: rng.normal() },
+    };
+    CombineSpec {
+        weights: draw_vec(rng, rng.below(9)),
+        kind,
+        store: if rng.below(2) == 0 { Some(rng.below(64) as u32) } else { None },
+        dots: (0..rng.below(4))
+            .map(|_| (rng.below(32) as u32, rng.below(32) as u32))
+            .collect(),
+    }
+}
+
 #[test]
 fn full_vocabulary_frames_roundtrip_bitwise() {
-    // every new command frame, over random payload sizes *including
-    // empty vectors* — the decoded message must equal the encoded one
-    // (f64 bits travel raw, so equality here is bitwise)
+    // every wire-v4 command frame, over random payload sizes *including
+    // empty vectors* and both VecRef flavours — the decoded message
+    // must equal the encoded one (f64 bits travel raw, so equality here
+    // is bitwise)
     let gen = UsizeRange(0, 48);
     Runner::new(40, 0xF00D).run(&gen, |&len| {
         let mut rng = Pcg64::new(len as u64 + 1);
         let msgs = vec![
             Msg::Cmd(Command::Hvp {
                 loss: Loss::SquaredHinge,
-                s: draw_vec(&mut rng, len),
+                s: draw_vecref(&mut rng, len),
             }),
             Msg::Cmd(Command::LossEval {
                 loss: Loss::Logistic,
-                w: draw_vec(&mut rng, len),
+                w: draw_vecref(&mut rng, len),
             }),
             Msg::Cmd(Command::LocalSolve(LocalSolveSpec::AdmmProx {
                 loss: Loss::SquaredHinge,
@@ -185,43 +216,76 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 local_iters: rng.below(20) as u32,
                 init: rng.below(2) == 0,
                 u_scale: rng.normal(),
-                z: draw_vec(&mut rng, len),
+                z: draw_vecref(&mut rng, len),
             })),
             Msg::Cmd(Command::LocalSolve(LocalSolveSpec::CocoaSdca {
                 lambda: rng.normal().abs() + 1e-12,
                 epochs: rng.normal().abs(),
                 seed: rng.next_u64(),
                 round: rng.next_u64(),
-                w: draw_vec(&mut rng, len),
+                w: draw_vecref(&mut rng, len),
             })),
             Msg::Cmd(Command::LocalSolve(LocalSolveSpec::SszProx {
                 loss: Loss::SquaredHinge,
                 lambda: rng.normal(),
                 mu: rng.normal(),
                 local_iters: rng.below(20) as u32,
-                anchor: draw_vec(&mut rng, len),
-                full_grad: draw_vec(&mut rng, len),
-                grad_shift: draw_vec(&mut rng, len),
+                anchor: draw_vecref(&mut rng, len),
+                full_grad: draw_vecref(&mut rng, len),
+                grad_shift: draw_vecref(&mut rng, len),
             })),
             Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
                 loss: Loss::SquaredHinge,
                 lambda: rng.normal(),
                 k_hat: rng.below(30) as u32,
-                anchor: draw_vec(&mut rng, len),
-                full_grad: draw_vec(&mut rng, len),
+                anchor: draw_vecref(&mut rng, len),
+                full_grad: draw_vecref(&mut rng, len),
                 subsets: (0..rng.below(5))
                     .map(|_| (0..rng.below(len + 1)).map(|j| j as u32).collect())
                     .collect(),
             })),
-            Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual {
-                z: draw_vec(&mut rng, len),
-            })),
+            Msg::Cmd(Command::DualUpdate(DualUpdateSpec::AdmmDual)),
+            Msg::Cmd(Command::VecOps {
+                ops: (0..rng.below(6))
+                    .map(|_| match rng.below(5) {
+                        0 => VecOp::Copy {
+                            dst: rng.below(64) as u32,
+                            src: rng.below(64) as u32,
+                        },
+                        1 => VecOp::Zero { dst: rng.below(64) as u32 },
+                        2 => VecOp::Scale { dst: rng.below(64) as u32, a: rng.normal() },
+                        3 => VecOp::Axpy {
+                            dst: rng.below(64) as u32,
+                            a: rng.normal(),
+                            src: rng.below(64) as u32,
+                        },
+                        _ => VecOp::Axpby {
+                            dst: rng.below(64) as u32,
+                            a: rng.normal(),
+                            src: rng.below(64) as u32,
+                            b: rng.normal(),
+                        },
+                    })
+                    .collect(),
+                dots: (0..rng.below(4))
+                    .map(|_| (rng.below(64) as u32, rng.below(64) as u32))
+                    .collect(),
+            }),
+            Msg::Cmd(Command::SetReg {
+                reg: rng.below(64) as u32,
+                v: draw_vec(&mut rng, len),
+            }),
+            Msg::Cmd(Command::FetchReg { reg: rng.below(64) as u32 }),
             Msg::Reply(fadl::net::Reply::Vector {
                 v: draw_vec(&mut rng, len),
                 units: rng.normal().abs(),
             }),
             Msg::Reply(fadl::net::Reply::Scalar {
                 v: rng.normal(),
+                units: 0.0,
+            }),
+            Msg::Reply(fadl::net::Reply::Dots {
+                vals: draw_vec(&mut rng, rng.below(6)),
                 units: 0.0,
             }),
             Msg::Mesh {
@@ -232,9 +296,10 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
             Msg::Reduce {
                 cmd: Command::Grad {
                     loss: Loss::SquaredHinge,
-                    w: draw_vec(&mut rng, len),
+                    w: draw_vecref(&mut rng, len),
                 },
                 topology: Topology::all()[rng.below(3)],
+                spec: draw_combine(&mut rng),
             },
             Msg::Reduced {
                 reply: fadl::net::Reply::Grad {
@@ -245,7 +310,14 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 data_tx: rng.next_u64(),
                 data_rx: rng.next_u64(),
                 secs: rng.normal().abs(),
+                dots: draw_vec(&mut rng, rng.below(5)),
             },
+            Msg::Finish {
+                sums: (0..rng.below(3))
+                    .map(|_| draw_vec(&mut rng, len))
+                    .collect(),
+            },
+            Msg::Finished { dots: draw_vec(&mut rng, rng.below(5)) },
         ];
         for msg in msgs {
             let back = wire_roundtrip(&msg);
@@ -263,13 +335,29 @@ fn max_length_payload_frames_roundtrip() {
     // the paper-scale runs) survives the frame loop bit for bit
     let mut rng = Pcg64::new(0xB16);
     let big = draw_vec(&mut rng, 1 << 16);
-    let msg = Msg::Cmd(Command::Hvp { loss: Loss::SquaredHinge, s: big.clone() });
-    let Msg::Cmd(Command::Hvp { s, .. }) = wire_roundtrip(&msg) else {
+    let msg = Msg::Cmd(Command::Hvp {
+        loss: Loss::SquaredHinge,
+        s: VecRef::Inline(big.clone()),
+    });
+    let Msg::Cmd(Command::Hvp { s: VecRef::Inline(s), .. }) = wire_roundtrip(&msg)
+    else {
         panic!("wrong variant");
     };
     assert_eq!(s.len(), big.len());
     for (a, b) in s.iter().zip(&big) {
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // a star Finish frame at full width survives too (the sums the
+    // driver broadcasts back for the rank-side combine epilogue)
+    let msg = Msg::Finish { sums: vec![big.clone(), big.clone()] };
+    let Msg::Finish { sums } = wire_roundtrip(&msg) else {
+        panic!("wrong variant");
+    };
+    assert_eq!(sums.len(), 2);
+    for s in &sums {
+        for (a, b) in s.iter().zip(&big) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
     // the subsets list also survives at width (every rank's full J_p)
     let subsets: Vec<Vec<u32>> = (0..64).map(|p| (p..1024).collect()).collect();
@@ -277,8 +365,8 @@ fn max_length_payload_frames_roundtrip() {
         loss: Loss::SquaredHinge,
         lambda: 1e-6,
         k_hat: 10,
-        anchor: vec![],
-        full_grad: vec![],
+        anchor: VecRef::Inline(vec![]),
+        full_grad: VecRef::Reg(0),
         subsets: subsets.clone(),
     }));
     let Msg::Cmd(Command::LocalSolve(LocalSolveSpec::FeatureSolve {
@@ -288,6 +376,95 @@ fn max_length_payload_frames_roundtrip() {
         panic!("wrong variant");
     };
     assert_eq!(back, subsets);
+}
+
+#[test]
+fn weighted_combine_schedules_match_flat_weighted_sum_bitwise() {
+    // the combine plane's per-rank weighting (incl. zero-weight ranks)
+    // followed by the compiled p2p schedules must land every rank on
+    // exactly the bits of the driver-style weighted sum — across
+    // m < P, m ∤ P, and P = 1 (a no-op schedule)
+    let gen = Pair(UsizeRange(1, 8), UsizeRange(1, 40));
+    Runner::new(32, 0x3E1).run(&gen, |&(p, m)| {
+        let mut rng = Pcg64::new((61 * p + m) as u64);
+        let parts = draw_parts(p, m, (59 * p + m) as u64);
+        let weights: Vec<f64> = (0..p)
+            .map(|r| if r % 3 == 2 { 0.0 } else { rng.normal().abs() })
+            .collect();
+        for topo in Topology::all() {
+            // driver-style reference: scale each part, then plan-reduce
+            let scaled: Vec<Vec<f64>> = parts
+                .iter()
+                .zip(&weights)
+                .map(|(v, &wt)| {
+                    let mut v = v.clone();
+                    fadl::linalg::scale(wt, &mut v);
+                    v
+                })
+                .collect();
+            let plan = topo.plan(p, m);
+            let want = topology::reduce(scaled.clone(), &plan);
+            for (rank, buf) in
+                topology::simulate_schedules(&scaled, &plan).iter().enumerate()
+            {
+                if bits(buf) != bits(&want) {
+                    return Err(format!("{topo:?} p={p} m={m} rank={rank} diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn direction_combine_matches_driver_side_combine_bitwise() {
+    // d = Σ w̃_p(v_p − anchor): the worker-side pre-transform + plan sum
+    // must equal the old driver-side sub/scale/AllReduce op-for-op
+    let gen = Pair(UsizeRange(1, 6), UsizeRange(1, 24));
+    Runner::new(24, 0xD1C).run(&gen, |&(p, m)| {
+        let mut rng = Pcg64::new((67 * p + m) as u64);
+        let parts = draw_parts(p, m, (71 * p + m) as u64);
+        let anchor = draw_vec(&mut rng, m);
+        let weights: Vec<f64> = (0..p).map(|_| 1.0 / p as f64).collect();
+        for topo in Topology::all() {
+            // legacy driver combine: d_p = coef·(v_p − w), then reduce
+            let legacy: Vec<Vec<f64>> = parts
+                .iter()
+                .zip(&weights)
+                .map(|(v, &coef)| {
+                    let mut d = fadl::linalg::sub(v, &anchor);
+                    fadl::linalg::scale(coef, &mut d);
+                    d
+                })
+                .collect();
+            let plan = topo.plan(p, m);
+            let want = topology::reduce(legacy, &plan);
+            // combine-plane: per-rank pre_combine with the anchor in a
+            // register, then the simulated schedules
+            let spec = CombineSpec {
+                weights: weights.clone(),
+                kind: Combine::Direction { anchor: 0 },
+                store: None,
+                dots: Vec::new(),
+            };
+            let mut pre = Vec::with_capacity(p);
+            for (rank, v) in parts.iter().enumerate() {
+                let mut st = fadl::net::WorkerState::new(rank, p);
+                st.set_reg(0, anchor.clone());
+                let mut vecs = vec![v.clone()];
+                fadl::net::endpoint::pre_combine(&st, &spec, rank, &mut vecs)?;
+                pre.push(vecs.pop().unwrap());
+            }
+            for (rank, buf) in
+                topology::simulate_schedules(&pre, &plan).iter().enumerate()
+            {
+                if bits(buf) != bits(&want) {
+                    return Err(format!("{topo:?} p={p} m={m} rank={rank} diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
