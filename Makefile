@@ -6,7 +6,7 @@ PARITY_METHODS ?= fadl fadl_feature tera tera_lbfgs admm cocoa ssz
 PARITY_PLANES  ?= star p2p
 PARITY_TOPOS   ?= tree ring
 
-.PHONY: check fmt clippy test build smoke parity bytes bench artifacts
+.PHONY: check fmt clippy test build smoke parity bytes bench scaling artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -42,6 +42,10 @@ parity:
 	        --method $$m --nodes 4 --max-outer 8 \
 	        --data-plane $$plane --topology $$topo || exit 1; \
 	    done; \
+	    echo "== parity: $$m / $$plane / tree / threads=4 =="; \
+	    $(CARGO) run --release --bin net_smoke -- \
+	      --method $$m --nodes 4 --max-outer 8 \
+	      --data-plane $$plane --topology tree --threads 4 || exit 1; \
 	  done; \
 	done
 
@@ -65,6 +69,15 @@ bytes:
 bench:
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench end_to_end
+
+## intra-worker engine scaling: the blocked ShardCompute kernels at
+## T ∈ {1, 2, 4, 8} on a ≥10⁶-nnz synthetic shard — prints the
+## per-kernel compute-seconds speedup table and refreshes the
+## BENCH_5.json scaling artifact at the repo root (CI's bench-smoke job
+## uploads the quick-mode twin from bench-out/)
+scaling:
+	$(CARGO) bench --bench hotpath -- --scaling --out-dir bench-out
+	cp bench-out/BENCH_5.json BENCH_5.json
 
 ## AOT artifacts for the (feature-gated) PJRT backend; needs a JAX
 ## python environment, see python/compile/aot.py

@@ -15,14 +15,130 @@ use fadl::data::partition::{ExamplePartition, Strategy};
 use fadl::data::synth;
 use fadl::linalg;
 use fadl::loss::Loss;
+use fadl::objective::engine::ComputePool;
 use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
 use fadl::optim::{tron::Tron, InnerOptimizer};
+use fadl::util::json::{arr_f64, obj, Json};
 use fadl::util::rng::Pcg64;
+
+/// Intra-worker engine scaling: the blocked `ShardCompute` hot loops at
+/// T ∈ {1, 2, 4, 8} on one big synthetic shard (≥ 10⁶ nnz in full
+/// mode), printing the per-kernel speedup table (`make scaling`) and
+/// writing the `BENCH_5.json` scaling artifact.
+fn run_scaling(args: &BenchArgs, all: &mut Vec<Stats>) {
+    let bench = args.bench;
+    let threads = [1usize, 2, 4, 8];
+    let (n, m, row_nnz) = if args.quick {
+        (4_000, 4_000, 16)
+    } else {
+        (25_000, 40_000, 40)
+    };
+    let ds = synth::quick(n, m, row_nnz, 55);
+    let data = Shard::whole(&ds);
+    println!(
+        "-- engine scaling: n={n} m={m} nnz={} ({} blocks) --",
+        ds.nnz(),
+        SparseShard::new(data.clone()).blocks().len()
+    );
+    let mut rng = Pcg64::new(56);
+    let w: Vec<f64> = (0..m).map(|_| 0.1 * rng.normal()).collect();
+    let dir: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    // kernel name → median ns per thread count
+    let kernels = ["loss_grad", "hvp", "linesearch"];
+    let mut medians: Vec<Vec<f64>> = vec![Vec::new(); kernels.len()];
+    for &t in &threads {
+        let shard = SparseShard::with_pool(data.clone(), ComputePool::new(t));
+        let (_, _, z) = shard.loss_grad(Loss::SquaredHinge, &w);
+        let e = shard.margins(&dir);
+        let s = bench.run(&format!("engine/loss_grad T={t}"), || {
+            black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
+        });
+        println!("{}", s.report());
+        medians[0].push(s.median_ns());
+        all.push(s);
+        let s = bench.run(&format!("engine/hvp T={t}"), || {
+            black_box(shard.hvp(Loss::SquaredHinge, black_box(&z), black_box(&dir)));
+        });
+        println!("{}", s.report());
+        medians[1].push(s.median_ns());
+        all.push(s);
+        let plan = shard.linesearch_plan(&z, &e).expect("plan");
+        let s = bench.run(&format!("engine/linesearch(packed) T={t}"), || {
+            black_box(plan.eval(Loss::SquaredHinge, black_box(0.7)));
+        });
+        println!("{}", s.report());
+        medians[2].push(s.median_ns());
+        all.push(s);
+    }
+    println!("-- per-kernel speedup vs T=1 --");
+    println!("{:<12} {:>8} {:>8} {:>8} {:>8}", "kernel", "T=1", "T=2", "T=4", "T=8");
+    for (k, name) in kernels.iter().enumerate() {
+        let base = medians[k][0];
+        let cells: Vec<String> = medians[k]
+            .iter()
+            .map(|&ns| format!("{:>7.2}x", base / ns))
+            .collect();
+        println!("{:<12} {}", name, cells.join(" "));
+    }
+    // the BENCH_5.json scaling artifact (CI uploads bench-out/)
+    let entries: Vec<Json> = kernels
+        .iter()
+        .enumerate()
+        .map(|(k, name)| {
+            obj(vec![
+                ("kernel", Json::Str((*name).to_string())),
+                (
+                    "threads",
+                    Json::Arr(
+                        threads.iter().map(|&t| Json::Num(t as f64)).collect(),
+                    ),
+                ),
+                ("median_ns", arr_f64(&medians[k])),
+                (
+                    "speedup",
+                    arr_f64(
+                        &medians[k]
+                            .iter()
+                            .map(|&ns| medians[k][0] / ns)
+                            .collect::<Vec<_>>(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("engine-scaling".to_string())),
+        ("quick", Json::Bool(args.quick)),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("nnz", Json::Num(ds.nnz() as f64)),
+        ("kernels", Json::Arr(entries)),
+    ]);
+    // gated on --out-dir like every other artifact in this bin, so a
+    // plain `cargo bench` never litters the working directory
+    if let Some(dir) = &args.out_dir {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join("BENCH_5.json");
+        match std::fs::write(&path, doc.pretty()) {
+            Ok(()) => println!("scaling artifact written to {}", path.display()),
+            Err(e) => eprintln!("scaling artifact: write {}: {e}", path.display()),
+        }
+    }
+}
 
 fn main() {
     let args = BenchArgs::parse(Bench::default());
     let bench = args.bench;
     let mut all: Vec<Stats> = Vec::new();
+    // `--scaling` runs only the engine-scaling section (what `make
+    // scaling` invokes; full problem sizes unless --test is also given)
+    if std::env::args().any(|a| a == "--scaling") {
+        run_scaling(&args, &mut all);
+        if let Some(path) = args.write_stats_csv("hotpath-scaling", &all) {
+            println!("stats written to {}", path.display());
+        }
+        return;
+    }
     println!("== hotpath micro-benchmarks ==");
 
     // ---- dense vector ops ----
@@ -192,6 +308,10 @@ fn main() {
     });
     println!("{}", s.report());
     all.push(s);
+
+    // engine scaling rides the default run too, so the CI bench-smoke
+    // job always produces (and uploads) the BENCH_5.json artifact
+    run_scaling(&args, &mut all);
 
     if let Some(path) = args.write_stats_csv("hotpath", &all) {
         println!("stats written to {}", path.display());

@@ -158,15 +158,19 @@ impl Cluster {
         let workers = self.workers();
         let t0 = Instant::now();
         let pairs = net::parallel_indexed(workers.len(), self.threaded, |i| {
-            f(i, workers[i].as_ref())
+            let tk = Instant::now();
+            let out = f(i, workers[i].as_ref());
+            (out, tk.elapsed().as_secs_f64())
         });
+        let compute_secs = pairs.iter().map(|&(_, s)| s).fold(0.0, f64::max);
         self.add_measured(&Measured {
             phase_secs: t0.elapsed().as_secs_f64(),
+            compute_secs,
             ..Measured::default()
         });
         let mut out = Vec::with_capacity(pairs.len());
         let mut costs = Vec::with_capacity(pairs.len());
-        for (r, c) in pairs {
+        for ((r, c), _) in pairs {
             out.push(r);
             costs.push(c);
         }
@@ -318,6 +322,22 @@ impl Cluster {
         match replies.into_iter().next() {
             Some(Reply::Vector { v, .. }) => v,
             _ => panic!("fetch reg: unexpected reply"),
+        }
+    }
+
+    /// Score the transport-resident held-out set at a replicated
+    /// iterate (worker-side AUPRC instrumentation): rank 0 scores its
+    /// test copy and replies one scalar (the inputs are replicated, so
+    /// other ranks skip the redundant work), keeping instrumented runs
+    /// on the scalar-only driver. Returns NaN when the transport holds
+    /// no test set (the caller may fall back to driver-side scoring).
+    /// Free on the simulated clock — instrumentation, not work,
+    /// exactly like the driver-side scoring it replaces.
+    pub fn test_auprc_phase(&self, w: VecRef) -> f64 {
+        let replies = self.phase(&Command::TestAuprc { w });
+        match replies.into_iter().next() {
+            Some(Reply::Scalar { v, .. }) => v,
+            _ => panic!("test auprc phase: unexpected reply"),
         }
     }
 
@@ -922,9 +942,20 @@ pub(crate) mod tests {
         );
         let meas = c.measured();
         assert!(meas.phase_secs > 0.0, "phase wall-clock recorded");
+        assert!(meas.compute_secs > 0.0, "kernel wall-clock recorded");
         // in-process transport moves no socket bytes
         assert_eq!(meas.bytes_total(), 0);
         assert_eq!(meas.driver_data_bytes, 0);
+    }
+
+    #[test]
+    fn test_auprc_phase_is_free_and_nan_without_a_test_set() {
+        let c = make_cluster(40, 10, 3, 41);
+        c.set_reg_phase(0, &[0.1; 10]);
+        let before = c.clock();
+        let v = c.test_auprc_phase(VecRef::Reg(0));
+        assert!(v.is_nan(), "no transport-resident test set → NaN fallback");
+        assert_eq!(c.clock(), before, "instrumentation is free on the sim clock");
     }
 
     #[test]

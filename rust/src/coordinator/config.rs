@@ -41,6 +41,13 @@ pub struct Config {
     pub nodes: usize,
     pub cost: CostModel,
     pub threaded: bool,
+    /// intra-worker compute parallelism T (`[worker] threads` /
+    /// `--threads`): every worker's persistent block pool runs the
+    /// ShardCompute hot loops on T threads. 1 (default) = serial
+    /// inline, 0 = one thread per available core. Trajectories are
+    /// bitwise identical for every T — the engine's fixed-order block
+    /// merge pins the arithmetic.
+    pub threads: usize,
     pub partition: Strategy,
     /// transport backend: "inproc" (simulated, default) or "tcp"
     /// (P real worker processes over loopback)
@@ -91,6 +98,7 @@ impl Default for Config {
             nodes: 8,
             cost: CostModel::default(),
             threaded: true,
+            threads: 1,
             partition: Strategy::Contiguous,
             transport: "inproc".into(),
             topology: Topology::Tree,
@@ -137,6 +145,7 @@ impl Config {
         cfg.cost.latency = doc.f64_or("cluster.latency", cfg.cost.latency);
         cfg.cost.flops_per_sec = doc.f64_or("cluster.flops_per_sec", cfg.cost.flops_per_sec);
         cfg.threaded = doc.bool_or("cluster.threaded", cfg.threaded);
+        cfg.threads = doc.usize_or("worker.threads", cfg.threads);
         cfg.partition = match doc.str_or("cluster.partition", "contiguous") {
             "contiguous" => Strategy::Contiguous,
             "round_robin" => Strategy::RoundRobin,
@@ -245,6 +254,9 @@ impl Config {
         if let Some(v) = num(a, "gamma")? {
             self.cost.gamma = v;
         }
+        if let Some(v) = num(a, "threads")? {
+            self.threads = v;
+        }
         if !a.get("transport").is_empty() {
             self.transport = match a.get("transport") {
                 t @ ("inproc" | "tcp") => t.to_string(),
@@ -294,6 +306,11 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
             "override the held-out fraction (0 disables AUPRC instrumentation)",
         )
         .flag("gamma", "", "override comm/comp ratio γ")
+        .flag(
+            "threads",
+            "",
+            "override intra-worker compute threads T (1 = serial, 0 = all cores)",
+        )
         .flag("transport", "", "override transport: inproc | tcp")
         .flag("topology", "", "override AllReduce topology: flat | tree | ring")
         .flag("data-plane", "", "override tcp data plane: star | p2p")
@@ -310,6 +327,7 @@ mod tests {
     fn defaults_roundtrip() {
         let cfg = Config::from_toml("").unwrap();
         assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.threads, 1, "serial engine by default");
         assert_eq!(cfg.method, "fadl");
         assert_eq!(cfg.backend, Backend::Sparse);
         assert!(cfg.lambda.is_none());
@@ -343,6 +361,22 @@ mod tests {
         assert_eq!(cfg.p2p_port_base, 9100);
         assert!(Config::from_toml("[cluster]\ndata_plane = \"mesh\"").is_err());
         assert!(Config::from_toml("[cluster]\np2p_port_base = 70000").is_err());
+    }
+
+    #[test]
+    fn worker_threads_key_and_flag_parse() {
+        let cfg = Config::from_toml("[worker]\nthreads = 4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--threads".to_string(), "8".to_string()])
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert_eq!(cfg.threads, 8);
+        let a = cli
+            .parse_from(vec!["--threads".to_string(), "many".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
     }
 
     #[test]

@@ -12,7 +12,8 @@ use crate::data::partition::ExamplePartition;
 use crate::data::{libsvm, synth, Dataset};
 use crate::metrics::Trace;
 use crate::methods::{self, TrainContext};
-use crate::net::{TcpDriver, Transport, WorkerSetup};
+use crate::net::{InProc, TcpDriver, Transport, WorkerSetup};
+use crate::objective::engine::{self, ComputePool};
 use crate::objective::{Objective, Shard, ShardCompute, SparseShard};
 use crate::runtime::{AotRuntime, DenseBlockShard};
 
@@ -66,12 +67,20 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         data_plane: cfg.data_plane,
         p2p_bind: cfg.p2p_bind.clone(),
         p2p_port_base: cfg.p2p_port_base,
+        threads: cfg.threads,
     }
 }
 
-/// Rebuild one rank's shard from a [`WorkerSetup`] recipe (the worker
-/// process entry path — runs the same pipeline as [`build_cluster`]).
-pub fn build_worker_shard(setup: &WorkerSetup) -> Result<Box<dyn ShardCompute>, String> {
+/// Rebuild one rank's full worker context from a [`WorkerSetup`]
+/// recipe (the worker process entry path — runs the same pipeline as
+/// [`build_cluster`]): the shard on its persistent block pool (sized
+/// by `setup.threads`, spawned here exactly once per worker process)
+/// plus the held-out set when the recipe has one — worker-resident
+/// AUPRC instrumentation needs no test bytes on the wire because the
+/// deterministic split reproduces it from the recipe.
+pub fn build_worker_context(
+    setup: &WorkerSetup,
+) -> Result<(Box<dyn ShardCompute>, Option<Dataset>), String> {
     let cfg = Config {
         dataset: setup.dataset.clone(),
         quick_n: setup.quick_n,
@@ -83,19 +92,31 @@ pub fn build_worker_shard(setup: &WorkerSetup) -> Result<Box<dyn ShardCompute>, 
         file_path: setup.file_path.clone(),
         partition: setup.partition,
         nodes: setup.p,
+        threads: setup.threads,
         ..Config::default()
     };
     if setup.rank >= setup.p {
         return Err(format!("rank {} out of range (P = {})", setup.rank, setup.p));
     }
-    let (train, _test) = build_train_split(&cfg)?;
+    let (train, test) = build_train_split(&cfg)?;
     let part = ExamplePartition::build(train.n(), setup.p, cfg.partition, cfg.seed);
     part.validate(train.n(), 1)?;
-    Ok(Box::new(SparseShard::new(Shard::from_dataset(
-        &train,
-        &part.assignments[setup.rank],
-        &part.weights[setup.rank],
-    ))))
+    let pool = ComputePool::new(engine::resolve_threads(setup.threads));
+    let shard = Box::new(SparseShard::with_pool(
+        Shard::from_dataset(
+            &train,
+            &part.assignments[setup.rank],
+            &part.weights[setup.rank],
+        ),
+        pool,
+    )) as Box<dyn ShardCompute>;
+    Ok((shard, (test.n() > 0).then_some(test)))
+}
+
+/// Rebuild one rank's shard only (kept for tests and tools that don't
+/// need the held-out set).
+pub fn build_worker_shard(setup: &WorkerSetup) -> Result<Box<dyn ShardCompute>, String> {
+    Ok(build_worker_context(setup)?.0)
 }
 
 /// The λ for the experiment: explicit override or the Table-1 value.
@@ -109,10 +130,14 @@ pub fn resolve_lambda(cfg: &Config) -> f64 {
 }
 
 /// Build a cluster over `train` with `p` nodes using the configured
-/// backend and cost model.
+/// backend and cost model. `test` is the run's held-out set (when
+/// present it lives transport-side, so AUPRC instrumentation is
+/// worker-resident on every transport — TCP workers rebuild it from
+/// their setup recipe instead).
 pub fn build_cluster(
     cfg: &Config,
     train: &Dataset,
+    test: Option<&Dataset>,
     p: usize,
     cost: CostModel,
 ) -> Result<Cluster, String> {
@@ -135,15 +160,23 @@ pub fn build_cluster(
     let part = ExamplePartition::build(train.n(), p, cfg.partition, cfg.seed);
     part.validate(train.n(), 1)?;
     let workers: Vec<Box<dyn ShardCompute>> = match cfg.backend {
-        Backend::Sparse => (0..p)
-            .map(|i| {
-                Box::new(SparseShard::new(Shard::from_dataset(
-                    train,
-                    &part.assignments[i],
-                    &part.weights[i],
-                ))) as Box<dyn ShardCompute>
-            })
-            .collect(),
+        Backend::Sparse => {
+            // one persistent block pool shared by the in-process
+            // workers (the process IS the worker host here)
+            let pool = ComputePool::new(engine::resolve_threads(cfg.threads));
+            (0..p)
+                .map(|i| {
+                    Box::new(SparseShard::with_pool(
+                        Shard::from_dataset(
+                            train,
+                            &part.assignments[i],
+                            &part.weights[i],
+                        ),
+                        pool.clone(),
+                    )) as Box<dyn ShardCompute>
+                })
+                .collect()
+        }
         Backend::Aot => {
             let runtime = Arc::new(
                 AotRuntime::load(std::path::Path::new(&cfg.artifacts_dir))
@@ -168,9 +201,9 @@ pub fn build_cluster(
                 .collect()
         }
     };
-    let mut cluster = Cluster::new(workers, cost);
+    let transport = InProc::with_test(workers, test.filter(|t| t.n() > 0).cloned());
+    let mut cluster = Cluster::with_transport(Box::new(transport), cost, cfg.topology);
     cluster.threaded = cfg.threaded;
-    cluster.set_topology(cfg.topology);
     Ok(cluster)
 }
 
@@ -183,7 +216,7 @@ pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
     let _ = build_method(cfg)?;
     let (train, test) = build_train_split(cfg)?;
     let lambda = resolve_lambda(cfg);
-    let cluster = build_cluster(cfg, &train, cfg.nodes, cfg.cost)?;
+    let cluster = build_cluster(cfg, &train, Some(&test), cfg.nodes, cfg.cost)?;
     Ok(Experiment {
         config: cfg.clone(),
         train,

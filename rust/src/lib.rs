@@ -16,7 +16,11 @@
 //! * [`loss`] — smooth convex losses (squared hinge, logistic, least
 //!   squares) with margin-space first/second derivatives.
 //! * [`objective`] — the regularized risk functional of eq. (8) and the
-//!   per-shard compute backends (native CSR or AOT/PJRT dense blocks).
+//!   per-shard compute backends (native CSR or AOT/PJRT dense blocks),
+//!   plus `objective::engine`: the intra-worker parallel compute engine
+//!   (persistent block thread pool + cache-sized row blocking with a
+//!   fixed-order deterministic merge — `threads = T` is bitwise
+//!   identical to `threads = 1`).
 //! * [`approx`] — the paper's §3.2 local functional approximations
 //!   (Linear, Hybrid, Quadratic, Nonlinear, BFGS), all satisfying the
 //!   gradient-consistency condition A3.

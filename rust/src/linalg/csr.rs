@@ -108,8 +108,22 @@ impl Csr {
     pub fn margins_into(&self, w: &[f64], z: &mut [f64]) {
         debug_assert_eq!(w.len(), self.cols);
         debug_assert_eq!(z.len(), self.rows);
-        for i in 0..self.rows {
-            z[i] = self.row_dot(i, w);
+        self.margins_block_into(0..self.rows, w, z);
+    }
+
+    /// Block-sliced margins: z_block[k] = x_{rows.start + k}·w for one
+    /// contiguous row block (`z_block.len() == rows.len()`). Disjoint
+    /// blocks write disjoint slices, so the engine runs them in
+    /// parallel with bitwise-identical output for any thread count.
+    pub fn margins_block_into(
+        &self,
+        rows: std::ops::Range<usize>,
+        w: &[f64],
+        z_block: &mut [f64],
+    ) {
+        debug_assert_eq!(z_block.len(), rows.len());
+        for (k, i) in rows.enumerate() {
+            z_block[k] = self.row_dot(i, w);
         }
     }
 
@@ -133,8 +147,24 @@ impl Csr {
         debug_assert_eq!(s.len(), self.cols);
         debug_assert_eq!(out.len(), self.cols);
         out.fill(0.0);
-        for i in 0..self.rows {
-            let di = d[i];
+        self.hvp_block_into(0..self.rows, d, s, out);
+    }
+
+    /// Block-sliced Hvp: out += Xᵀ·diag(d)·X·s restricted to one
+    /// contiguous row block, with `d_block[k]` the curvature weight of
+    /// row `rows.start + k` (`out` is NOT cleared — each engine block
+    /// accumulates into its own buffer and the buffers are merged in
+    /// fixed block order). Row skipping matches `hvp_into` exactly.
+    pub fn hvp_block_into(
+        &self,
+        rows: std::ops::Range<usize>,
+        d_block: &[f64],
+        s: &[f64],
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(d_block.len(), rows.len());
+        for (k, i) in rows.enumerate() {
+            let di = d_block[k];
             if di == 0.0 {
                 continue;
             }
@@ -312,5 +342,25 @@ mod tests {
     #[should_panic]
     fn out_of_range_col_panics() {
         Csr::from_rows(2, &[vec![(5, 1.0)]]);
+    }
+
+    #[test]
+    fn block_kernels_match_full_kernels() {
+        let m = sample();
+        let w = [1.0, 10.0, 100.0];
+        let mut z = vec![0.0; 3];
+        m.margins_into(&w, &mut z);
+        let mut zb = vec![0.0; 2];
+        m.margins_block_into(1..3, &w, &mut zb);
+        assert_eq!(zb, z[1..3]);
+        // two accumulated blocks reproduce the one-shot Hvp exactly
+        let d = [2.0, 0.0, 1.0];
+        let s = [1.0, -1.0, 0.5];
+        let mut want = vec![0.0; 3];
+        m.hvp_into(&d, &s, &mut want);
+        let mut got = vec![0.0; 3];
+        m.hvp_block_into(0..2, &d[0..2], &s, &mut got);
+        m.hvp_block_into(2..3, &d[2..3], &s, &mut got);
+        assert_eq!(got, want);
     }
 }

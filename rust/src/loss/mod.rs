@@ -99,6 +99,19 @@ impl Loss {
         (self.value(z, y), self.dz(z, y))
     }
 
+    /// One example's contribution to a line-search probe over cached
+    /// margins: (c·l(z + t·e, y), c·l'(z + t·e, y)·e). The single
+    /// per-row arithmetic shared by the plain `linesearch_eval` kernel
+    /// and the packed [`crate::objective::engine::LinesearchPlan`] —
+    /// having exactly one implementation is what keeps the two bitwise
+    /// identical.
+    #[inline]
+    pub fn linesearch_term(&self, z: f64, e: f64, y: f64, c: f64, t: f64) -> (f64, f64) {
+        let zt = z + t * e;
+        let (v, d) = self.value_dz(zt, y);
+        (c * v, c * d * e)
+    }
+
     /// Global Lipschitz bound on d²l/dz² (the per-example contribution
     /// to the paper's L; the data-dependent factor ‖x_i‖² multiplies it).
     pub fn curvature_bound(&self) -> f64 {

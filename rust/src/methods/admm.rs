@@ -256,7 +256,7 @@ impl Admm {
                 wall.elapsed().as_secs_f64(),
                 f_last,
                 f64::NAN,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_Z)),
+                ctx.eval_auprc_reg(R_Z),
             );
             done = it + 1;
             if ctx.should_stop_f(f_last) {

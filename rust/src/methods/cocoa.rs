@@ -108,7 +108,7 @@ impl Trainer for CoCoA {
                 wall.elapsed().as_secs_f64(),
                 f,
                 f64::NAN,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
+                ctx.eval_auprc_reg(R_W),
             );
             if ctx.should_stop_f(f) {
                 break;

@@ -149,7 +149,7 @@ impl Trainer for Fadl {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
+                ctx.eval_auprc_reg(R_W),
             );
 
             // ---- step 2: stopping rules ----

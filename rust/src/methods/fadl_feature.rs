@@ -114,7 +114,7 @@ impl Trainer for FadlFeature {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
+                ctx.eval_auprc_reg(R_W),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;

@@ -62,13 +62,29 @@ impl<'a> TrainContext<'a> {
         }
     }
 
-    /// AUPRC on the held-out set, with the iterate fetched lazily —
-    /// under the scalar-only p2p driver the weights live worker-side,
-    /// so the (instrumentation-only) `FetchReg` round trip is paid only
-    /// when there is actually a non-empty test set to score.
-    pub(crate) fn eval_auprc_with<F: FnOnce() -> Vec<f64>>(&self, w: F) -> f64 {
+    /// AUPRC on the held-out set at the replicated iterate register —
+    /// worker-resident: every rank scores its own test copy and only a
+    /// scalar returns, so instrumented runs keep the scalar-only-driver
+    /// invariant (no per-traced-iteration `FetchReg`). When the
+    /// transport holds no test set (hand-built clusters in tests), the
+    /// phase replies NaN and we fall back to fetching the iterate and
+    /// scoring driver-side — same dataset, same margins arithmetic,
+    /// identical value.
+    pub(crate) fn eval_auprc_reg(&self, reg: u32) -> f64 {
         match self.test_set {
-            Some(ds) if ds.n() > 0 => crate::metrics::auprc::auprc_of_model(ds, &w()),
+            Some(ds) if ds.n() > 0 => {
+                let v = self
+                    .cluster
+                    .test_auprc_phase(crate::net::VecRef::Reg(reg));
+                if v.is_nan() {
+                    crate::metrics::auprc::auprc_of_model(
+                        ds,
+                        &self.cluster.fetch_reg(reg),
+                    )
+                } else {
+                    v
+                }
+            }
             _ => f64::NAN,
         }
     }

@@ -154,7 +154,7 @@ impl Tera {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
+                ctx.eval_auprc_reg(R_W),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;
@@ -310,7 +310,7 @@ impl Tera {
                 wall.elapsed().as_secs_f64(),
                 f,
                 gnorm,
-                ctx.eval_auprc_with(|| cluster.fetch_reg(R_W)),
+                ctx.eval_auprc_reg(R_W),
             );
             if gnorm <= ctx.eps_g * g0 || ctx.should_stop_f(f) {
                 break;

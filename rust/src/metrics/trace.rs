@@ -25,6 +25,10 @@ pub struct IterRecord {
     /// cumulative measured wall-clock inside BSP transport phases (for
     /// TCP: wire time + remote compute; 0 until the first phase)
     pub meas_phase_secs: f64,
+    /// cumulative measured wall-clock inside worker compute kernels
+    /// (max across ranks per phase — the column `[worker] threads`
+    /// shrinks; see `make scaling`)
+    pub meas_compute_secs: f64,
     /// cumulative measured wall-clock executing reduction plans
     pub meas_reduce_secs: f64,
     /// cumulative real control-plane bytes moved over driver ⇄ worker
@@ -87,6 +91,7 @@ impl Trace {
             sim_comm_secs: cost.units_to_secs(clock.comm_units),
             wall_secs,
             meas_phase_secs: net.phase_secs,
+            meas_compute_secs: net.compute_secs,
             meas_reduce_secs: net.reduce_secs,
             net_bytes: net.bytes_total() as f64,
             net_data_bytes: net.data_bytes as f64,
@@ -139,12 +144,12 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "iter,comm_passes,sim_secs,sim_compute_secs,sim_comm_secs,wall_secs,\
-             meas_phase_secs,meas_reduce_secs,net_bytes,net_data_bytes,\
-             driver_data_bytes,f,grad_norm,auprc\n",
+             meas_phase_secs,meas_compute_secs,meas_reduce_secs,net_bytes,\
+             net_data_bytes,driver_data_bytes,f,grad_norm,auprc\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.comm_passes,
                 r.sim_secs,
@@ -152,6 +157,7 @@ impl Trace {
                 r.sim_comm_secs,
                 r.wall_secs,
                 r.meas_phase_secs,
+                r.meas_compute_secs,
                 r.meas_reduce_secs,
                 r.net_bytes,
                 r.net_data_bytes,
@@ -199,6 +205,16 @@ impl Trace {
                         .records
                         .iter()
                         .map(|r| r.meas_phase_secs)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "meas_compute_secs",
+                arr_f64(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| r.meas_compute_secs)
                         .collect::<Vec<_>>(),
                 ),
             ),
@@ -266,6 +282,7 @@ mod tests {
             clock.add_compute(100.0);
             clock.comm_pass(50.0);
             net.phase_secs += 0.01;
+            net.compute_secs += 0.004;
             net.bytes_rx += 1000;
             net.data_bytes += 300;
             net.driver_data_bytes += 40;
@@ -297,6 +314,7 @@ mod tests {
     fn measured_columns_accumulate() {
         let t = sample_trace();
         assert!((t.records[4].meas_phase_secs - 0.05).abs() < 1e-12);
+        assert!((t.records[4].meas_compute_secs - 0.02).abs() < 1e-12);
         assert_eq!(t.records[4].net_bytes, 5000.0);
         assert_eq!(t.records[0].net_bytes, 1000.0);
         assert_eq!(t.records[4].net_data_bytes, 1500.0);
@@ -328,6 +346,15 @@ mod tests {
             parsed.get("meas_phase_secs").unwrap().as_arr().unwrap().len(),
             5
         );
+        assert_eq!(
+            parsed
+                .get("meas_compute_secs")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            5
+        );
         assert_eq!(parsed.get("net_bytes").unwrap().as_arr().unwrap().len(), 5);
         assert_eq!(
             parsed.get("net_data_bytes").unwrap().as_arr().unwrap().len(),
@@ -352,13 +379,14 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 14);
+        assert_eq!(lines[0].split(',').count(), 15);
         assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
+        assert!(lines[0].contains(",meas_compute_secs,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 14, "{line}");
+            assert_eq!(line.split(',').count(), 15, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(11).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(12).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 

@@ -48,6 +48,12 @@ pub struct WorkerState {
     local_grad: Vec<f64>,
     /// e_p = X_p·d for the current direction (cached by `Dirs`)
     dirs: Vec<f64>,
+    /// packed (z, e, y, c) line-search blocks, gathered once per
+    /// search when `Dirs` lands and reused by every `Linesearch` trial
+    /// (invalidated when `Grad` moves the anchor; `None` on backends
+    /// without per-example access — trials fall back to the plain
+    /// kernel, which computes identical bits)
+    ls_plan: Option<crate::objective::engine::LinesearchPlan>,
     /// BFGS curvature accumulated across outer iterations
     bfgs: BfgsCurvature,
     /// previous (anchor, ∇L, ∇L_p) for the BFGS y-vector
@@ -81,6 +87,7 @@ impl WorkerState {
             margins: Vec::new(),
             local_grad: Vec::new(),
             dirs: Vec::new(),
+            ls_plan: None,
             bfgs: BfgsCurvature::default(),
             prev: None,
             admm_w: Vec::new(),
@@ -97,6 +104,7 @@ impl WorkerState {
         self.margins.clear();
         self.local_grad.clear();
         self.dirs.clear();
+        self.ls_plan = None;
         self.bfgs = BfgsCurvature::default();
         self.prev = None;
         self.admm_w.clear();
@@ -247,6 +255,8 @@ pub fn exec(
             let (loss_val, grad, z) = shard.loss_grad(*loss, &w);
             st.margins = z;
             st.local_grad = grad.clone();
+            // the anchor moved: any packed line-search gather is stale
+            st.ls_plan = None;
             // two passes × 2 flops/nz (Appendix A)
             let units = 2.0 * 2.0 * shard.nnz() as f64;
             Ok(Reply::Grad { loss: loss_val, grad, units })
@@ -254,6 +264,9 @@ pub fn exec(
         Command::Dirs { d } => {
             let d = resolve_vec(st, d, "dirs")?;
             st.dirs = shard.margins(&d);
+            // gather the packed (z, e, y, c) blocks once; every trial
+            // step of the coming search streams this buffer
+            st.ls_plan = shard.linesearch_plan(&st.margins, &st.dirs);
             Ok(Reply::Ack { units: 2.0 * shard.nnz() as f64 })
         }
         Command::Linesearch { loss, t } => {
@@ -267,7 +280,12 @@ pub fn exec(
                     shard.n()
                 ));
             }
-            let (a, b) = shard.linesearch_eval(*loss, &st.margins, &st.dirs, *t);
+            // reuse the packed per-search gather when the backend built
+            // one (bitwise identical to the plain kernel)
+            let (a, b) = match &st.ls_plan {
+                Some(plan) => plan.eval(*loss, *t),
+                None => shard.linesearch_eval(*loss, &st.margins, &st.dirs, *t),
+            };
             // O(n_p) scalar work; charge one flop per example
             Ok(Reply::Pair { a, b, units: st.margins.len() as f64 })
         }
@@ -393,7 +411,37 @@ pub fn exec(
             };
             Ok(Reply::Vector { v, units: 0.0 })
         }
+        Command::TestAuprc { .. } => Err(
+            "TestAuprc is executed by the transport (it owns the held-out set), \
+             not by the shard executor"
+                .to_string(),
+        ),
     }
+}
+
+/// Score the worker-resident held-out set at a replicated iterate —
+/// the transport-level implementation of [`Command::TestAuprc`] (the
+/// transports call this directly because `exec` has no access to the
+/// test shard). Only rank 0 actually scores: the iterate and the test
+/// copy are replicated, so every rank would compute identical bits and
+/// the driver reads exactly one reply — ranks > 0 validate the iterate
+/// reference and reply NaN without touching their test copy. A NaN
+/// from rank 0 means "no held-out set here", which the driver treats
+/// as "evaluate driver-side if you can". Instrumentation: free on the
+/// simulated clock, like the driver-side scoring it replaces.
+pub fn eval_test_auprc(
+    test: Option<&crate::data::Dataset>,
+    st: &WorkerState,
+    w: &VecRef,
+) -> Result<Reply, String> {
+    let w = resolve_vec(st, w, "test auprc")?;
+    let v = match test {
+        Some(ds) if st.rank == 0 && ds.n() > 0 => {
+            crate::metrics::auprc::auprc_of_model(ds, &w)
+        }
+        _ => f64::NAN,
+    };
+    Ok(Reply::Scalar { v, units: 0.0 })
 }
 
 /// Execute one node-local subproblem solve (the per-method payloads of
@@ -883,6 +931,44 @@ mod tests {
         // Reset clears the file
         exec(&sh, &mut st, &Command::Reset).unwrap();
         assert!(st.reg(0).is_err());
+    }
+
+    #[test]
+    fn test_auprc_helper_scores_or_signals_fallback() {
+        let sh = shard_of(40, 8, 12);
+        let mut st = WorkerState::new(0, 1);
+        let w = vec![0.05; 8];
+        exec(&sh, &mut st, &Command::SetReg { reg: 0, v: w.clone() }).unwrap();
+        // no held-out set → NaN (the driver-side fallback signal), free
+        let Reply::Scalar { v, units } =
+            eval_test_auprc(None, &st, &VecRef::Reg(0)).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        assert!(v.is_nan());
+        assert_eq!(units, 0.0);
+        // with one → the exact driver-side score
+        let test_ds = crate::data::synth::quick(30, 8, 4, 5);
+        let Reply::Scalar { v, .. } =
+            eval_test_auprc(Some(&test_ds), &st, &VecRef::Reg(0)).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        assert_eq!(v, crate::metrics::auprc::auprc_of_model(&test_ds, &w));
+        // ranks > 0 skip the redundant scoring (the value would be
+        // identical) and reply the NaN filler even with a test set
+        let mut st1 = WorkerState::new(1, 2);
+        exec(&sh, &mut st1, &Command::SetReg { reg: 0, v: w.clone() }).unwrap();
+        let Reply::Scalar { v, .. } =
+            eval_test_auprc(Some(&test_ds), &st1, &VecRef::Reg(0)).unwrap()
+        else {
+            panic!("wrong reply")
+        };
+        assert!(v.is_nan());
+        // an unset register is an error, and exec itself refuses the
+        // command (the transport owns the test shard)
+        assert!(eval_test_auprc(None, &st, &VecRef::Reg(9)).is_err());
+        assert!(exec(&sh, &mut st, &Command::TestAuprc { w: VecRef::Reg(0) }).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::data::Dataset;
 use crate::objective::ShardCompute;
 
 use super::endpoint::{self, exec, WorkerState};
@@ -19,20 +20,31 @@ use super::{
     Topology, Transport,
 };
 
-/// P in-process workers plus their per-rank session state.
+/// P in-process workers plus their per-rank session state (and, when
+/// the run has a held-out set, the shared test dataset every "rank"
+/// scores for the worker-resident `TestAuprc` instrumentation).
 pub struct InProc {
     workers: Vec<Box<dyn ShardCompute>>,
     state: Vec<Mutex<WorkerState>>,
+    test: Option<Dataset>,
 }
 
 impl InProc {
     pub fn new(workers: Vec<Box<dyn ShardCompute>>) -> InProc {
+        InProc::with_test(workers, None)
+    }
+
+    /// In-process workers that also hold the run's held-out set, so
+    /// AUPRC instrumentation is worker-resident here exactly as on the
+    /// TCP transport (where each worker process rebuilds the test split
+    /// from its setup recipe).
+    pub fn with_test(workers: Vec<Box<dyn ShardCompute>>, test: Option<Dataset>) -> InProc {
         assert!(!workers.is_empty());
         let m = workers[0].m();
         assert!(workers.iter().all(|w| w.m() == m), "shards disagree on m");
         let p = workers.len();
         let state = (0..p).map(|rank| Mutex::new(WorkerState::new(rank, p))).collect();
-        InProc { workers, state }
+        InProc { workers, state, test }
     }
 }
 
@@ -57,16 +69,37 @@ impl Transport for InProc {
         let t0 = Instant::now();
         let results = parallel_indexed(self.workers.len(), threaded, |rank| {
             let mut st = self.state[rank].lock().unwrap();
-            exec(self.workers[rank].as_ref(), &mut st, cmd)
+            match cmd {
+                // the transport owns the held-out set, so it executes
+                // the instrumentation command itself
+                Command::TestAuprc { w } => {
+                    (endpoint::eval_test_auprc(self.test.as_ref(), &st, w), 0.0)
+                }
+                // only shard-compute kernels report time, keeping
+                // `meas_compute_secs` a pure measure of the engine's
+                // shard sweeps (no bookkeeping, no instrumentation)
+                _ if !cmd.is_compute() => {
+                    (exec(self.workers[rank].as_ref(), &mut st, cmd), 0.0)
+                }
+                _ => {
+                    let tk = Instant::now();
+                    let reply = exec(self.workers[rank].as_ref(), &mut st, cmd);
+                    (reply, tk.elapsed().as_secs_f64())
+                }
+            }
         });
         let mut replies = Vec::with_capacity(results.len());
-        for r in results {
+        let mut compute_secs = 0.0f64;
+        for (r, secs) in results {
             replies.push(r?);
+            // BSP: the phase is as slow as its slowest rank
+            compute_secs = compute_secs.max(secs);
         }
         Ok(PhaseOutput {
             replies,
             stats: Measured {
                 phase_secs: t0.elapsed().as_secs_f64(),
+                compute_secs,
                 ..Measured::default()
             },
         })
@@ -193,6 +226,54 @@ mod tests {
         assert_eq!(fetched.len(), 16);
         assert_eq!(out.dots.len(), 1);
         assert_eq!(out.dots[0], crate::linalg::dot(&fetched, &fetched));
+    }
+
+    #[test]
+    fn test_auprc_is_worker_resident_and_replicated() {
+        use crate::net::VecRef;
+        let ds = synth::quick(160, 16, 6, 21);
+        let (train, test) = ds.split(0.25, 3);
+        let part = crate::data::partition::ExamplePartition::build(
+            train.n(),
+            3,
+            crate::data::partition::Strategy::Contiguous,
+            0,
+        );
+        let workers = |ds: &crate::data::Dataset| -> Vec<Box<dyn ShardCompute>> {
+            (0..3)
+                .map(|i| {
+                    Box::new(SparseShard::new(Shard::from_dataset(
+                        ds,
+                        &part.assignments[i],
+                        &part.weights[i],
+                    ))) as Box<dyn ShardCompute>
+                })
+                .collect()
+        };
+        let t = InProc::with_test(workers(&train), Some(test.clone()));
+        let w = vec![0.05; 16];
+        let out = t
+            .phase(&Command::TestAuprc { w: VecRef::inline(&w) }, false)
+            .unwrap();
+        let want = crate::metrics::auprc::auprc_of_model(&test, &w);
+        for (rank, reply) in out.replies.iter().enumerate() {
+            let Reply::Scalar { v, units } = reply else { panic!("wrong reply") };
+            if rank == 0 {
+                assert_eq!(*v, want, "rank 0 scores the replicated value");
+            } else {
+                // the value would be identical on every rank, so only
+                // rank 0 pays for it — the rest reply the NaN filler
+                assert!(v.is_nan(), "rank {rank} should not re-score");
+            }
+            assert_eq!(*units, 0.0, "instrumentation is free");
+        }
+        // without a held-out set the reply is the NaN fallback signal
+        let bare = InProc::with_test(workers(&train), None);
+        let out = bare
+            .phase(&Command::TestAuprc { w: VecRef::inline(&w) }, false)
+            .unwrap();
+        let Reply::Scalar { v, .. } = &out.replies[0] else { panic!("wrong reply") };
+        assert!(v.is_nan());
     }
 
     #[test]

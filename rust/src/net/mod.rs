@@ -273,9 +273,37 @@ pub enum Command {
     /// initialization; an m-sized driver payload by construction).
     SetReg { reg: u32, v: Vec<f64> },
     /// Fetch a register's replicated value (rank 0 replies the vector,
-    /// other ranks reply empty) — end-of-run result retrieval and
-    /// AUPRC instrumentation.
+    /// other ranks reply empty) — end-of-run result retrieval.
     FetchReg { reg: u32 },
+    /// Score the worker-resident held-out set at a replicated iterate:
+    /// rank 0 computes AUPRC over its test copy and replies the scalar
+    /// (the iterate and the test copy are replicated, so other ranks
+    /// would produce identical bits — they skip the work and reply
+    /// NaN) — instrumentation without an m-vector ever crossing a
+    /// driver link, so traced runs keep the scalar-only-driver
+    /// invariant even with `test_fraction > 0`. A NaN from rank 0
+    /// means "no held-out set worker-side" (the driver's fallback
+    /// signal). Executed by the transport (which owns the test shard),
+    /// not by [`endpoint::exec`].
+    TestAuprc { w: VecRef },
+}
+
+impl Command {
+    /// Whether this command runs a shard-compute kernel — the work the
+    /// engine parallelizes and [`Measured::compute_secs`] times. Free
+    /// register bookkeeping, session control, and instrumentation are
+    /// excluded, so the column stays a pure measure of the sweeps that
+    /// `[worker] threads` is supposed to shrink.
+    pub fn is_compute(&self) -> bool {
+        !matches!(
+            self,
+            Command::Reset
+                | Command::VecOps { .. }
+                | Command::SetReg { .. }
+                | Command::FetchReg { .. }
+                | Command::TestAuprc { .. }
+        )
+    }
 }
 
 /// Payload of [`Command::LocalSolve`]: everything a node-local
@@ -440,6 +468,12 @@ pub struct WorkerSetup {
     /// first data-plane listener port (rank r binds base + r); 0 =
     /// ephemeral ports, reported back through `Ready`
     pub p2p_port_base: u16,
+    /// intra-worker compute parallelism T: the worker spawns its
+    /// persistent block pool at `Setup` with this many threads (1 =
+    /// serial inline, 0 = one thread per available core). Bitwise
+    /// irrelevant to results — the engine's fixed-order block merge
+    /// makes every T produce identical bits.
+    pub threads: usize,
 }
 
 impl WorkerSetup {
@@ -473,6 +507,18 @@ pub struct Measured {
     /// seconds spent in BSP phases (command fan-out → last reply; for
     /// TCP this includes wire time and waiting on remote compute)
     pub phase_secs: f64,
+    /// seconds spent inside worker shard-compute kernels (only
+    /// [`Command::is_compute`] phases; bookkeeping and instrumentation
+    /// report 0), max across ranks per phase (BSP: the phase is as
+    /// slow as its slowest rank) and summed over phases — the measured
+    /// counterpart of the simulated compute units, and the number the
+    /// `[worker] threads` engine is supposed to shrink (`make
+    /// scaling`). Caveat: the in-process transport's P ranks share one
+    /// pool, so at P > 1 their timings include cross-rank pool
+    /// contention — TCP (one pool per worker process) and the
+    /// single-shard `make scaling` bench are the measurement-grade
+    /// paths.
+    pub compute_secs: f64,
     /// seconds spent executing reduction plans: driver-side plan
     /// execution (in-process and tcp-star), or the slowest rank's mesh
     /// schedule (tcp-p2p) — the measured counterpart of the topology's
@@ -501,6 +547,7 @@ pub struct Measured {
 impl Measured {
     pub fn merge(&mut self, other: &Measured) {
         self.phase_secs += other.phase_secs;
+        self.compute_secs += other.compute_secs;
         self.reduce_secs += other.reduce_secs;
         self.bytes_tx += other.bytes_tx;
         self.bytes_rx += other.bytes_rx;
@@ -704,6 +751,7 @@ mod tests {
     fn measured_merges() {
         let mut a = Measured {
             phase_secs: 1.0,
+            compute_secs: 0.75,
             reduce_secs: 0.5,
             bytes_tx: 10,
             bytes_rx: 20,
@@ -713,6 +761,7 @@ mod tests {
         };
         a.merge(&Measured {
             phase_secs: 2.0,
+            compute_secs: 0.25,
             reduce_secs: 0.25,
             bytes_tx: 1,
             bytes_rx: 2,
@@ -721,6 +770,7 @@ mod tests {
             driver_data_bytes: 16,
         });
         assert_eq!(a.phase_secs, 3.0);
+        assert_eq!(a.compute_secs, 1.0);
         assert_eq!(a.bytes_total(), 33, "control-plane total excludes the mesh");
         assert_eq!(a.reduce_bytes, 20);
         assert_eq!(a.data_bytes, 150);
@@ -753,6 +803,7 @@ mod tests {
             data_plane: DataPlane::P2p,
             p2p_bind: String::new(),
             p2p_port_base: 0,
+            threads: 1,
         };
         assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
         setup.p2p_bind = "10.0.0.1".into();
@@ -771,6 +822,26 @@ mod tests {
             7.0
         );
         assert_eq!(Reply::Dots { vals: vec![1.0], units: 0.0 }.units(), 0.0);
+    }
+
+    #[test]
+    fn compute_command_classification() {
+        use crate::loss::Loss;
+        // kernels are timed …
+        assert!(Command::Grad {
+            loss: Loss::SquaredHinge,
+            w: VecRef::Reg(0)
+        }
+        .is_compute());
+        assert!(Command::Linesearch { loss: Loss::SquaredHinge, t: 0.5 }.is_compute());
+        assert!(Command::Hvp { loss: Loss::SquaredHinge, s: VecRef::Reg(0) }
+            .is_compute());
+        // … bookkeeping, session control and instrumentation are not
+        assert!(!Command::Reset.is_compute());
+        assert!(!Command::VecOps { ops: vec![], dots: vec![] }.is_compute());
+        assert!(!Command::SetReg { reg: 0, v: vec![] }.is_compute());
+        assert!(!Command::FetchReg { reg: 0 }.is_compute());
+        assert!(!Command::TestAuprc { w: VecRef::Reg(0) }.is_compute());
     }
 
     #[test]

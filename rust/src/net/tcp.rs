@@ -349,7 +349,11 @@ impl Transport for TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reply(reply) => replies.push(reply),
+                Msg::Reply { reply, secs } => {
+                    // BSP: the phase costs its slowest rank's kernel
+                    stats.compute_secs = stats.compute_secs.max(secs);
+                    replies.push(reply);
+                }
                 Msg::Abort { msg } => {
                     return Err(format!("rank {rank} aborted: {msg}"))
                 }
@@ -428,7 +432,8 @@ impl TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { mut reply, .. } => {
+                Msg::Reduced { mut reply, compute_secs, .. } => {
+                    stats.compute_secs = stats.compute_secs.max(compute_secs);
                     let vecs = take_combine_vectors(&mut reply)?;
                     // the gathered part payloads ARE the star data plane
                     stats.reduce_bytes +=
@@ -503,9 +508,10 @@ impl TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { reply, data_tx, data_rx: _, secs, dots: d } => {
+                Msg::Reduced { reply, data_tx, data_rx: _, secs, compute_secs, dots: d } => {
                     // mesh traffic is counted once, at each sender
                     stats.data_bytes += data_tx;
+                    stats.compute_secs = stats.compute_secs.max(compute_secs);
                     mesh_secs = mesh_secs.max(secs);
                     if rank == 0 {
                         dots = d;

@@ -60,7 +60,13 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// of the combined vector, the star plane's `Finish`/`Finished` pair
 /// ships plan sums down for the rank-side epilogue, and the
 /// `VecOps`/`SetReg`/`FetchReg` commands plus the `Dots` reply landed.
-pub const PROTO_VERSION: u32 = 4;
+///
+/// v5: the intra-worker parallel compute engine — `Setup` carries the
+/// worker's `threads` (the persistent block-pool size), `Reply` and
+/// `Reduced` report the rank's measured compute seconds (the
+/// `meas_compute_secs` trace column), and the `TestAuprc` command
+/// (worker-resident held-out scoring, scalar reply) landed.
+pub const PROTO_VERSION: u32 = 5;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -351,7 +357,10 @@ pub enum Msg {
     Ready { m: usize, n: usize, nnz: usize, data_port: u16 },
     Abort { msg: String },
     Cmd(Command),
-    Reply(Reply),
+    /// Reply to `Cmd`. `secs` is the rank's measured wall-clock inside
+    /// the shard-compute kernel (the `meas_compute_secs` accounting —
+    /// the driver takes the max across ranks per phase).
+    Reply { reply: Reply, secs: f64 },
     /// Every rank's advertised data-plane address, rank-indexed; the
     /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
     Mesh { addrs: Vec<String> },
@@ -375,6 +384,9 @@ pub enum Msg {
         data_tx: u64,
         data_rx: u64,
         secs: f64,
+        /// the rank's measured compute seconds inside the fused phase
+        /// (kernel time only — mesh time is `secs`)
+        compute_secs: f64,
         dots: Vec<f64>,
     },
     /// Star-plane combine completion: the driver's plan sums, shipped
@@ -409,6 +421,7 @@ mod tag {
     pub const CMD_SET_REG: u8 = 21;
     pub const CMD_FETCH_REG: u8 = 22;
     pub const FINISHED: u8 = 23;
+    pub const CMD_TEST_AUPRC: u8 = 24;
     pub const REPLY_ACK: u8 = 30;
     pub const REPLY_GRAD: u8 = 31;
     pub const REPLY_PAIR: u8 = 32;
@@ -613,6 +626,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.str(s.data_plane.name());
             e.str(&s.p2p_bind);
             e.u32(u32::from(s.p2p_port_base));
+            e.usize(s.threads);
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
         Msg::Ready { m, n, nnz, data_port } => {
@@ -641,11 +655,12 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             enc_combine(&mut e, spec);
             enc_cmd(&mut e, cmd);
         }
-        Msg::Reduced { reply, data_tx, data_rx, secs, dots } => {
+        Msg::Reduced { reply, data_tx, data_rx, secs, compute_secs, dots } => {
             e.u8(tag::REDUCED);
             e.u64(*data_tx);
             e.u64(*data_rx);
             e.f64(*secs);
+            e.f64(*compute_secs);
             e.vec_f64(dots);
             enc_reply(&mut e, reply);
         }
@@ -661,7 +676,10 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.vec_f64(dots);
         }
         Msg::Cmd(cmd) => enc_cmd(&mut e, cmd),
-        Msg::Reply(reply) => enc_reply(&mut e, reply),
+        Msg::Reply { reply, secs } => {
+            enc_reply(&mut e, reply);
+            e.f64(*secs);
+        }
     }
     e.buf
 }
@@ -799,6 +817,10 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
             e.u8(tag::CMD_FETCH_REG);
             e.u32(*reg);
         }
+        Command::TestAuprc { w } => {
+            e.u8(tag::CMD_TEST_AUPRC);
+            enc_vecref(e, w);
+        }
     }
 }
 
@@ -879,6 +901,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             },
             p2p_bind: d.str()?,
             p2p_port_base: port_from(d.u32()?)?,
+            threads: d.usize()?,
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -916,6 +939,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let data_tx = d.u64()?;
             let data_rx = d.u64()?;
             let secs = d.f64()?;
+            let compute_secs = d.f64()?;
             let dots = d.vec_f64()?;
             let rt = d.u8()?;
             Msg::Reduced {
@@ -923,6 +947,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 data_tx,
                 data_rx,
                 secs,
+                compute_secs,
                 dots,
             }
         }
@@ -939,8 +964,14 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             Msg::Finish { sums }
         }
         tag::FINISHED => Msg::Finished { dots: d.vec_f64()? },
-        t @ tag::CMD_RESET..=tag::CMD_FETCH_REG => Msg::Cmd(dec_cmd(&mut d, t)?),
-        t @ tag::REPLY_ACK..=tag::REPLY_DOTS => Msg::Reply(dec_reply(&mut d, t)?),
+        t @ (tag::CMD_RESET..=tag::CMD_FETCH_REG | tag::CMD_TEST_AUPRC) => {
+            Msg::Cmd(dec_cmd(&mut d, t)?)
+        }
+        t @ tag::REPLY_ACK..=tag::REPLY_DOTS => {
+            let reply = dec_reply(&mut d, t)?;
+            let secs = d.f64()?;
+            Msg::Reply { reply, secs }
+        }
         other => return Err(format!("unknown message tag {other}")),
     };
     d.finish()?;
@@ -1047,6 +1078,7 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
         }
         tag::CMD_SET_REG => Command::SetReg { reg: d.u32()?, v: d.vec_f64()? },
         tag::CMD_FETCH_REG => Command::FetchReg { reg: d.u32()? },
+        tag::CMD_TEST_AUPRC => Command::TestAuprc { w: dec_vecref(d)? },
         other => return Err(format!("unknown command tag {other}")),
     })
 }
@@ -1115,7 +1147,9 @@ pub fn cmd_data_bytes(cmd: &Command) -> u64 {
         | Command::Warmstart { .. }
         | Command::VecOps { .. }
         | Command::FetchReg { .. } => 0,
-        Command::Grad { w, .. } | Command::LossEval { w, .. } => vecref_bytes(w),
+        Command::Grad { w, .. }
+        | Command::LossEval { w, .. }
+        | Command::TestAuprc { w } => vecref_bytes(w),
         Command::Dirs { d } => vecref_bytes(d),
         Command::Hvp { s, .. } => vecref_bytes(s),
         Command::InnerSolve(spec) => {
@@ -1165,7 +1199,7 @@ pub fn msg_data_bytes(msg: &Msg) -> u64 {
         | Msg::MeshOk
         | Msg::Finished { .. } => 0,
         Msg::Cmd(cmd) | Msg::Reduce { cmd, .. } => cmd_data_bytes(cmd),
-        Msg::Reply(reply) => reply_data_bytes(reply),
+        Msg::Reply { reply, .. } => reply_data_bytes(reply),
         Msg::Reduced { reply, .. } => reply_data_bytes(reply),
         Msg::Finish { sums } => {
             sums.iter().map(|s| 8 * s.len() as u64).sum()
@@ -1220,6 +1254,7 @@ mod tests {
             data_plane: crate::net::DataPlane::P2p,
             p2p_bind: "127.0.0.1,10.0.0.2".into(),
             p2p_port_base: 9100,
+            threads: 4,
         }));
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
@@ -1250,26 +1285,24 @@ mod tests {
             epochs: 5,
             seed: 7,
         }));
-        roundtrip(Msg::Reply(Reply::Ack { units: 12.0 }));
-        roundtrip(Msg::Reply(Reply::Grad {
-            loss: 3.5,
-            grad: vec![1.0; 7],
-            units: 2.0,
-        }));
-        roundtrip(Msg::Reply(Reply::Pair { a: 1.0, b: -2.0, units: 3.0 }));
-        roundtrip(Msg::Reply(Reply::Solve {
-            w: vec![9.0, 8.0],
-            n: 55,
-            units: 4.0,
-        }));
-        roundtrip(Msg::Reply(Reply::Warm {
-            w: vec![0.5],
-            counts: vec![3.0],
-            units: 5.0,
-        }));
-        roundtrip(Msg::Reply(Reply::Vector { v: vec![1.5, -2.5], units: 6.0 }));
-        roundtrip(Msg::Reply(Reply::Scalar { v: 0.25, units: 0.0 }));
-        roundtrip(Msg::Reply(Reply::Dots { vals: vec![0.5, -1.5], units: 0.0 }));
+        let reply = |reply: Reply, secs: f64| Msg::Reply { reply, secs };
+        roundtrip(reply(Reply::Ack { units: 12.0 }, 0.5));
+        roundtrip(reply(
+            Reply::Grad { loss: 3.5, grad: vec![1.0; 7], units: 2.0 },
+            0.015625,
+        ));
+        roundtrip(reply(Reply::Pair { a: 1.0, b: -2.0, units: 3.0 }, 0.0));
+        roundtrip(reply(
+            Reply::Solve { w: vec![9.0, 8.0], n: 55, units: 4.0 },
+            1.5,
+        ));
+        roundtrip(reply(
+            Reply::Warm { w: vec![0.5], counts: vec![3.0], units: 5.0 },
+            0.25,
+        ));
+        roundtrip(reply(Reply::Vector { v: vec![1.5, -2.5], units: 6.0 }, 0.0));
+        roundtrip(reply(Reply::Scalar { v: 0.25, units: 0.0 }, 0.0));
+        roundtrip(reply(Reply::Dots { vals: vec![0.5, -1.5], units: 0.0 }, 0.0));
     }
 
     #[test]
@@ -1330,6 +1363,10 @@ mod tests {
         roundtrip(Msg::Cmd(Command::VecOps { ops: vec![], dots: vec![] }));
         roundtrip(Msg::Cmd(Command::SetReg { reg: 9, v: vec![0.1 + 0.2, -0.0] }));
         roundtrip(Msg::Cmd(Command::FetchReg { reg: 63 }));
+        roundtrip(Msg::Cmd(Command::TestAuprc { w: VecRef::Reg(0) }));
+        roundtrip(Msg::Cmd(Command::TestAuprc {
+            w: VecRef::Inline(vec![0.1 + 0.2, -0.0]),
+        }));
     }
 
     #[test]
@@ -1373,6 +1410,7 @@ mod tests {
             data_tx: 1234,
             data_rx: 4321,
             secs: 0.015625,
+            compute_secs: 0.0078125,
             dots: vec![0.5, -0.25],
         });
         roundtrip(Msg::Reduced {
@@ -1380,6 +1418,7 @@ mod tests {
             data_tx: 0,
             data_rx: 0,
             secs: 0.0,
+            compute_secs: 0.0,
             dots: vec![],
         });
         roundtrip(Msg::Finish { sums: vec![] });
@@ -1427,17 +1466,28 @@ mod tests {
             24
         );
         assert_eq!(
-            msg_data_bytes(&Msg::Reply(Reply::Dots { vals: vec![1.0; 8], units: 0.0 })),
+            msg_data_bytes(&Msg::Reply {
+                reply: Reply::Dots { vals: vec![1.0; 8], units: 0.0 },
+                secs: 0.25,
+            }),
             0,
-            "replicated dots are scalar aggregates"
+            "replicated dots (and compute seconds) are scalar aggregates"
         );
         assert_eq!(
-            msg_data_bytes(&Msg::Reply(Reply::Warm {
-                w: vec![0.0; 4],
-                counts: vec![0.0; 4],
-                units: 1.0,
-            })),
+            msg_data_bytes(&Msg::Reply {
+                reply: Reply::Warm {
+                    w: vec![0.0; 4],
+                    counts: vec![0.0; 4],
+                    units: 1.0,
+                },
+                secs: 0.0,
+            }),
             64
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::TestAuprc { w: VecRef::Reg(3) })),
+            0,
+            "register-referenced held-out scoring is control traffic"
         );
         assert_eq!(
             msg_data_bytes(&Msg::Reduced {
@@ -1445,6 +1495,7 @@ mod tests {
                 data_tx: 99,
                 data_rx: 99,
                 secs: 0.5,
+                compute_secs: 0.25,
                 dots: vec![1.0, 2.0],
             }),
             0,

@@ -19,15 +19,16 @@
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
 
 use super::endpoint::{
-    complete_combine, exec, pre_combine, put_combine_vectors, take_combine_vectors,
-    WorkerState,
+    complete_combine, eval_test_auprc, exec, pre_combine, put_combine_vectors,
+    take_combine_vectors, WorkerState,
 };
 use super::mesh::{Mesh, MeshStats};
 use super::topology::RankSchedule;
 use super::wire::{self, Msg};
-use super::{DataPlane, Topology};
+use super::{Command, DataPlane, Topology};
 
 /// The `--worker --connect host:port` self-exec handshake, shared by
 /// every binary that can be re-executed as a worker (see
@@ -118,8 +119,11 @@ pub fn serve(connect: &str) -> Result<(), String> {
             .port(),
         None => 0,
     };
-    let shard = match crate::coordinator::driver::build_worker_shard(&setup) {
-        Ok(shard) => shard,
+    // shard + held-out set + the persistent block pool (sized by the
+    // Setup frame's `threads`, spawned once, joined when this function
+    // returns — a `Shutdown` frame or driver EOF tears it down cleanly)
+    let (shard, test) = match crate::coordinator::driver::build_worker_context(&setup) {
+        Ok(ctx) => ctx,
         Err(e) => return Err(abort(format!("build shard: {e}"), &mut w)),
     };
     let mut st = WorkerState::new(setup.rank, setup.p);
@@ -166,18 +170,41 @@ pub fn serve(connect: &str) -> Result<(), String> {
                 }
                 send(&Msg::MeshOk, &mut w)?;
             }
-            Msg::Cmd(cmd) => match exec(shard.as_ref(), &mut st, &cmd) {
-                Ok(reply) => send(&Msg::Reply(reply), &mut w)?,
-                Err(e) => return Err(abort(e, &mut w)),
-            },
+            Msg::Cmd(cmd) => {
+                // only shard-compute kernels report time, so the
+                // `meas_compute_secs` column stays a pure measure of
+                // the engine's shard sweeps (no instrumentation, no
+                // register bookkeeping)
+                let (result, secs) = match &cmd {
+                    // the worker owns the held-out set; exec owns only
+                    // the shard
+                    Command::TestAuprc { w: wref } => {
+                        (eval_test_auprc(test.as_ref(), &st, wref), 0.0)
+                    }
+                    _ if !cmd.is_compute() => {
+                        (exec(shard.as_ref(), &mut st, &cmd), 0.0)
+                    }
+                    _ => {
+                        let t0 = Instant::now();
+                        let result = exec(shard.as_ref(), &mut st, &cmd);
+                        (result, t0.elapsed().as_secs_f64())
+                    }
+                };
+                match result {
+                    Ok(reply) => send(&Msg::Reply { reply, secs }, &mut w)?,
+                    Err(e) => return Err(abort(e, &mut w)),
+                }
+            }
             Msg::Reduce { cmd, topology, spec } => {
                 if setup.data_plane == DataPlane::P2p && mesh.is_none() {
                     return Err(abort("Reduce before the mesh handshake".into(), &mut w));
                 }
+                let t_exec = Instant::now();
                 let mut reply = match exec(shard.as_ref(), &mut st, &cmd) {
                     Ok(reply) => reply,
                     Err(e) => return Err(abort(e, &mut w)),
                 };
+                let compute_secs = t_exec.elapsed().as_secs_f64();
                 let mut vectors = match take_combine_vectors(&mut reply) {
                     Ok(v) => v,
                     Err(e) => return Err(abort(e, &mut w)),
@@ -223,6 +250,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 data_tx: stats.tx,
                                 data_rx: stats.rx,
                                 secs: stats.secs,
+                                compute_secs,
                                 dots,
                             },
                             &mut w,
@@ -242,6 +270,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 data_tx: 0,
                                 data_rx: 0,
                                 secs: 0.0,
+                                compute_secs,
                                 dots: Vec::new(),
                             },
                             &mut w,

@@ -1,0 +1,699 @@
+//! The intra-worker parallel compute engine: a persistent deterministic
+//! thread pool plus cache-sized row blocking for the `ShardCompute` hot
+//! loops.
+//!
+//! After the combine plane made every m-vector collective worker-
+//! resident, a worker's *single-threaded* sweep over its shard became
+//! the critical path. This module makes that sweep block-parallel while
+//! keeping the bitwise-reproducibility contract the topology plans
+//! already pin for communication:
+//!
+//! * **Blocking** is a pure function of the shard ([`row_blocks`]):
+//!   contiguous row ranges closed when a block reaches
+//!   [`TARGET_BLOCK_NNZ`] stored nonzeros (≈ a quarter MiB of CSR
+//!   payload — L2-resident on every deployment target). The thread
+//!   count never influences where blocks fall.
+//! * **Execution** is dynamic (threads grab the next unclaimed block
+//!   index from an atomic counter), but every block writes only its own
+//!   output slot, so *which* thread computes a block cannot affect any
+//!   bit of it.
+//! * **Merging** is fixed-order: per-block partial sums are folded in
+//!   block order (block 0 first, always), and per-coordinate gradient
+//!   merges add block buffers in block order per coordinate. Therefore
+//!   `threads = T` is bitwise identical to `threads = 1` for every
+//!   kernel — the determinism contract `rust/tests/proptest_engine.rs`
+//!   pins across adversarial blockings.
+//!
+//! The pool itself ([`ComputePool`]) is std-only and persistent: worker
+//! threads are spawned once (per worker process at `Setup`, or once per
+//! in-process cluster) and parked on a condvar between kernels, so the
+//! CG/line-search hot loops pay no spawn/join latency. `threads = 1`
+//! (the default) spawns no OS threads at all and runs inline — the
+//! seed's behaviour.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::linalg::Csr;
+use crate::loss::Loss;
+
+/// Close a row block once it holds this many stored nonzeros (values +
+/// column indices ≈ 8 bytes/nnz → ~256 KiB per block). Small test
+/// shards fall below the target and get exactly one block, which makes
+/// the blocked kernels bit-identical to the historical unblocked loops
+/// there.
+pub const TARGET_BLOCK_NNZ: usize = 32_768;
+
+/// Upper bound on the default block count: the gradient/Hvp kernels
+/// materialize one m-width accumulator per block, so huge shards widen
+/// their blocks instead of multiplying buffers (transient memory and
+/// merge traffic stay ≤ MAX_BLOCKS·m while dynamic claiming still has
+/// plenty of slack over any sane thread count). Like the target, a
+/// pure function of the shard — never of T.
+pub const MAX_BLOCKS: usize = 64;
+
+/// Coordinate-chunk width of the fixed-order gradient merge (a pure
+/// constant — chunk boundaries never depend on the thread count, and
+/// per-coordinate sums are independent, so chunking cannot change bits).
+const MERGE_CHUNK: usize = 4_096;
+
+// ---------------------------------------------------------------------------
+// Row blocking
+// ---------------------------------------------------------------------------
+
+/// Pre-split a CSR matrix into contiguous row blocks of roughly
+/// `target_nnz` stored nonzeros (at least one row per block; empty rows
+/// are carried along with their neighbours, and an all-empty tail rides
+/// with the last block — so a shard never splits into more than
+/// ⌈nnz / target⌉ blocks). Depends only on the matrix shape — never on
+/// the thread count.
+pub fn row_blocks_with_target(x: &Csr, target_nnz: usize) -> Vec<Range<usize>> {
+    let target = target_nnz.max(1);
+    let mut blocks: Vec<Range<usize>> = Vec::new();
+    let mut start = 0usize;
+    let mut nnz = 0usize;
+    for i in 0..x.rows {
+        nnz += x.row_nnz(i);
+        if nnz >= target {
+            blocks.push(start..i + 1);
+            start = i + 1;
+            nnz = 0;
+        }
+    }
+    if start < x.rows {
+        match blocks.last_mut() {
+            // a tail of empty rows extends the previous block instead
+            // of opening a (MAX_BLOCKS + 1)-th buffer
+            Some(last) if nnz == 0 => last.end = x.rows,
+            _ => blocks.push(start..x.rows),
+        }
+    }
+    blocks
+}
+
+/// The default blocking: [`TARGET_BLOCK_NNZ`]-sized blocks, widened so
+/// no shard splits into more than [`MAX_BLOCKS`] of them.
+pub fn row_blocks(x: &Csr) -> Vec<Range<usize>> {
+    let target = TARGET_BLOCK_NNZ.max(x.nnz().div_ceil(MAX_BLOCKS));
+    row_blocks_with_target(x, target)
+}
+
+/// Resolve a configured `threads` value: 0 means one thread per
+/// available core, anything else is taken literally (min 1). Results
+/// are bitwise independent of the resolution either way.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The persistent thread pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+/// A persistent worker pool executing index-addressed block jobs.
+/// `ComputePool::new(1)` (and [`ComputePool::serial`]) spawn no OS
+/// threads and run everything inline on the caller.
+pub struct ComputePool {
+    /// configured parallelism T (the caller participates, so T − 1
+    /// helper threads are spawned)
+    threads: usize,
+    shared: Option<Arc<PoolShared>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+/// Per-`run` coordination: the next unclaimed block index, the number
+/// of helper jobs still holding the borrowed closure, and a panic flag.
+struct RunState {
+    next: AtomicUsize,
+    n: usize,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl RunState {
+    fn finish_one(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        self.done.notify_all();
+    }
+
+    fn wait_idle(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.done.wait(pending).unwrap();
+        }
+    }
+}
+
+/// Decrements the run's pending count when dropped — keeps the caller's
+/// `wait_idle` honest even if a helper job unwinds.
+struct FinishGuard(Arc<RunState>);
+
+impl Drop for FinishGuard {
+    fn drop(&mut self) {
+        self.0.finish_one();
+    }
+}
+
+/// Blocks until every helper job of a run has retired — runs in `Drop`
+/// so an unwinding caller still outlives every borrow the helpers hold.
+struct WaitGuard<'a>(&'a RunState);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait_idle();
+    }
+}
+
+impl ComputePool {
+    /// A pool of parallelism `threads` (clamped to ≥ 1). `threads − 1`
+    /// helper OS threads are spawned once and live until the pool is
+    /// dropped; the calling thread is always the T-th worker.
+    pub fn new(threads: usize) -> Arc<ComputePool> {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Arc::new(ComputePool {
+                threads,
+                shared: None,
+                handles: Mutex::new(Vec::new()),
+            });
+        }
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for _ in 0..threads - 1 {
+            let shared = shared.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let mut state = shared.state.lock().unwrap();
+                    loop {
+                        if let Some(job) = state.queue.pop_front() {
+                            break job;
+                        }
+                        if state.shutdown {
+                            return;
+                        }
+                        state = shared.available.wait(state).unwrap();
+                    }
+                };
+                // jobs are panic-isolated by their own catch_unwind
+                job();
+            }));
+        }
+        Arc::new(ComputePool {
+            threads,
+            shared: Some(shared),
+            handles: Mutex::new(handles),
+        })
+    }
+
+    /// The inline (no OS threads) pool — the seed's serial behaviour.
+    pub fn serial() -> Arc<ComputePool> {
+        ComputePool::new(1)
+    }
+
+    /// Configured parallelism T.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, spread over the pool's threads
+    /// (the caller participates). Returns when every call has finished.
+    /// Indices are claimed dynamically, so callers must make `f(i)`
+    /// write only into index-`i` state — then the output is identical
+    /// for every thread count by construction.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        let Some(shared) = &self.shared else {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        };
+        if n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let helpers = (self.threads - 1).min(n - 1);
+        let run = Arc::new(RunState {
+            next: AtomicUsize::new(0),
+            n,
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the lifetime of `f` is erased so helper jobs can be
+        // queued as 'static. Every helper decrements `pending` when it
+        // retires (FinishGuard runs even on unwind) and this function
+        // cannot return — or unwind past — `WaitGuard` below before
+        // `pending` reaches 0, so no helper can touch `f` after this
+        // frame dies.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                f_ref,
+            )
+        };
+        {
+            let mut state = shared.state.lock().unwrap();
+            for _ in 0..helpers {
+                let run = run.clone();
+                state.queue.push_back(Box::new(move || {
+                    let _finish = FinishGuard(run.clone());
+                    let outcome = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| loop {
+                            let i = run.next.fetch_add(1, Ordering::Relaxed);
+                            if i >= run.n {
+                                break;
+                            }
+                            f_static(i);
+                        }),
+                    );
+                    if outcome.is_err() {
+                        run.panicked.store(true, Ordering::Relaxed);
+                    }
+                }));
+            }
+            shared.available.notify_all();
+        }
+        {
+            let _wait = WaitGuard(run.as_ref());
+            // the caller is the T-th worker
+            loop {
+                let i = run.next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f_ref(i);
+            }
+            // _wait drops here: block until the helpers retire
+        }
+        if run.panicked.load(Ordering::Relaxed) {
+            panic!("compute pool: a block job panicked");
+        }
+    }
+
+    /// Run `f(i)` over `0..n` collecting one result per index (results
+    /// land in index order regardless of execution order).
+    pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run(n, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().unwrap())
+            .collect()
+    }
+
+    /// Run `f(i, slice_i)` over pre-split disjoint mutable slices (one
+    /// per index). The slices are handed out by index, so writes stay
+    /// disjoint and the result is thread-count-independent.
+    pub fn run_over_slices<T, F>(&self, parts: Vec<&mut [T]>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let slots: Vec<Mutex<Option<&mut [T]>>> =
+            parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        self.run(slots.len(), |i| {
+            let part = slots[i].lock().unwrap().take().unwrap();
+            f(i, part);
+        });
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.state.lock().unwrap().shutdown = true;
+            shared.available.notify_all();
+        }
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-order merge helpers
+// ---------------------------------------------------------------------------
+
+/// Split a mutable slice into per-`ranges` sub-slices (the ranges must
+/// be contiguous, in order and cover `0..buf.len()` — row blocks are).
+pub fn split_by_ranges<'a, T>(
+    buf: &'a mut [T],
+    ranges: &[Range<usize>],
+) -> Vec<&'a mut [T]> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    let mut consumed = 0usize;
+    for r in ranges {
+        debug_assert_eq!(r.start, consumed, "ranges must be contiguous");
+        let (head, tail) = rest.split_at_mut(r.end - r.start);
+        parts.push(head);
+        rest = tail;
+        consumed = r.end;
+    }
+    debug_assert!(rest.is_empty(), "ranges must cover the whole slice");
+    parts
+}
+
+/// out[j] = Σ_b bufs[b][j], summed in block order for every coordinate
+/// (block 0 is copied, later blocks added — bitwise independent of the
+/// thread count because per-coordinate sums never interleave). The
+/// merge is chunk-parallel over coordinates with fixed chunk bounds.
+pub fn merge_block_sums(pool: &ComputePool, bufs: &[Vec<f64>], out: &mut [f64]) {
+    let Some(first) = bufs.first() else {
+        out.fill(0.0);
+        return;
+    };
+    debug_assert!(bufs.iter().all(|b| b.len() == out.len()));
+    debug_assert_eq!(first.len(), out.len());
+    if bufs.len() == 1 {
+        out.copy_from_slice(first);
+        return;
+    }
+    let m = out.len();
+    let chunks: Vec<Range<usize>> = (0..m)
+        .step_by(MERGE_CHUNK)
+        .map(|s| s..(s + MERGE_CHUNK).min(m))
+        .collect();
+    let parts = split_by_ranges(out, &chunks);
+    pool.run_over_slices(parts, |c, part| {
+        let lo = chunks[c].start;
+        part.copy_from_slice(&bufs[0][lo..lo + part.len()]);
+        for buf in &bufs[1..] {
+            for (j, slot) in part.iter_mut().enumerate() {
+                *slot += buf[lo + j];
+            }
+        }
+    });
+}
+
+/// Fold per-block scalar partials in block order (partial 0 is the
+/// seed, so a single block reproduces the unblocked sum bit for bit).
+pub fn fold_block_scalars(parts: &[f64]) -> f64 {
+    let mut it = parts.iter();
+    let Some(&first) = it.next() else { return 0.0 };
+    it.fold(first, |acc, &v| acc + v)
+}
+
+// ---------------------------------------------------------------------------
+// The reusable line-search evaluation plan
+// ---------------------------------------------------------------------------
+
+/// Packed per-row line-search inputs: for each example the quadruple
+/// (z_i, e_i, y_i, c_i), gathered once per search (when the direction
+/// margins are cached) and reused across every trial step t — each
+/// Armijo–Wolfe probe then streams a single contiguous buffer instead
+/// of four parallel arrays. Evaluation is block-parallel with the same
+/// fixed-order merge as the plain kernel, and the per-row arithmetic is
+/// shared ([`Loss::linesearch_term`]), so the plan's value is bitwise
+/// identical to [`super::ShardCompute::linesearch_eval`].
+#[derive(Clone, Debug)]
+pub struct LinesearchPlan {
+    blocks: Vec<Range<usize>>,
+    /// AoS layout: packed[4i..4i+4] = (z, e, y, c) of example i
+    packed: Vec<f64>,
+    pool: Arc<ComputePool>,
+}
+
+impl LinesearchPlan {
+    /// Gather (z, e, y, c) into the packed buffer. `blocks` is the
+    /// shard's row blocking.
+    pub fn build(
+        blocks: &[Range<usize>],
+        pool: Arc<ComputePool>,
+        z: &[f64],
+        e: &[f64],
+        y: &[f64],
+        c: &[f64],
+    ) -> LinesearchPlan {
+        let n = z.len();
+        debug_assert_eq!(e.len(), n);
+        debug_assert_eq!(y.len(), n);
+        debug_assert_eq!(c.len(), n);
+        let mut packed = vec![0.0; 4 * n];
+        {
+            let chunks: Vec<Range<usize>> =
+                blocks.iter().map(|b| 4 * b.start..4 * b.end).collect();
+            let parts = split_by_ranges(&mut packed, &chunks);
+            pool.run_over_slices(parts, |b, part| {
+                let rows = &blocks[b];
+                for (k, i) in rows.clone().enumerate() {
+                    part[4 * k] = z[i];
+                    part[4 * k + 1] = e[i];
+                    part[4 * k + 2] = y[i];
+                    part[4 * k + 3] = c[i];
+                }
+            });
+        }
+        LinesearchPlan {
+            blocks: blocks.to_vec(),
+            packed,
+            pool,
+        }
+    }
+
+    /// Number of packed examples.
+    pub fn n(&self) -> usize {
+        self.packed.len() / 4
+    }
+
+    /// (φ(t), φ'(t)) over the packed buffer — one trial step of the
+    /// search, reusing the gathered blocks.
+    pub fn eval(&self, loss: Loss, t: f64) -> (f64, f64) {
+        let nb = self.blocks.len();
+        let partials = self.pool.map(nb, |b| {
+            let rows = &self.blocks[b];
+            let mut phi = 0.0;
+            let mut dphi = 0.0;
+            for i in rows.clone() {
+                let q = &self.packed[4 * i..4 * i + 4];
+                let (p, d) = loss.linesearch_term(q[0], q[1], q[2], q[3], t);
+                phi += p;
+                dphi += d;
+            }
+            (phi, dphi)
+        });
+        let phis: Vec<f64> = partials.iter().map(|&(p, _)| p).collect();
+        let dphis: Vec<f64> = partials.iter().map(|&(_, d)| d).collect();
+        (fold_block_scalars(&phis), fold_block_scalars(&dphis))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_every_index_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ComputePool::new(threads);
+            for n in [0usize, 1, 2, 3, 7, 64] {
+                let hits: Vec<AtomicU64> =
+                    (0..n).map(|_| AtomicU64::new(0)).collect();
+                pool.run(n, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "threads={threads} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_map_lands_in_index_order() {
+        for threads in [1usize, 3] {
+            let pool = ComputePool::new(threads);
+            let out = pool.map(17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_runs() {
+        let pool = ComputePool::new(4);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.run(round % 9, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            let n = (round % 9) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        }
+        assert_eq!(pool.threads(), 4);
+    }
+
+    #[test]
+    fn pool_propagates_block_panics() {
+        let pool = ComputePool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // the pool survives a panicked run
+        let sum = AtomicU64::new(0);
+        pool.run(4, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn run_over_slices_writes_disjointly() {
+        let pool = ComputePool::new(2);
+        let mut buf = vec![0u32; 10];
+        let ranges = vec![0..3usize, 3..3, 3..10];
+        let parts = split_by_ranges(&mut buf, &ranges);
+        assert_eq!(parts.iter().map(|p| p.len()).collect::<Vec<_>>(), [3, 0, 7]);
+        pool.run_over_slices(parts, |i, part| {
+            for slot in part.iter_mut() {
+                *slot = i as u32 + 1;
+            }
+        });
+        assert_eq!(buf, [1, 1, 1, 3, 3, 3, 3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn blocking_is_threads_independent_and_covers_rows() {
+        let rows: Vec<Vec<(u32, f32)>> = (0..100)
+            .map(|i| (0..(i % 7)).map(|k| (k as u32, 1.0)).collect())
+            .collect();
+        let x = Csr::from_rows(8, &rows);
+        let blocks = row_blocks_with_target(&x, 10);
+        assert!(!blocks.is_empty());
+        assert_eq!(blocks[0].start, 0);
+        assert_eq!(blocks.last().unwrap().end, 100);
+        for pair in blocks.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start, "blocks must be contiguous");
+        }
+        // blocking is a function of the matrix only — recomputing gives
+        // identical ranges
+        assert_eq!(blocks, row_blocks_with_target(&x, 10));
+        // an all-empty tail extends the last block instead of opening a
+        // fresh one (keeps the block count ≤ ⌈nnz / target⌉)
+        let tailed = Csr::from_rows(
+            4,
+            &[vec![(0, 1.0)], vec![(1, 1.0)], vec![], vec![], vec![]],
+        );
+        let blocks = row_blocks_with_target(&tailed, 1);
+        assert_eq!(blocks, vec![0..1, 1..5]);
+        // a small matrix falls in one default block
+        assert_eq!(row_blocks(&x).len(), 1);
+        // empty matrix → no blocks
+        assert!(row_blocks(&Csr::from_rows(4, &[])).is_empty());
+    }
+
+    #[test]
+    fn default_blocking_caps_block_count() {
+        // past MAX_BLOCKS·TARGET_BLOCK_NNZ nonzeros the blocks widen
+        // instead of multiplying (the kernels hold one m-width buffer
+        // per block, so the cap bounds transient memory)
+        let nnz_per_row = 32usize;
+        let rows_needed = (MAX_BLOCKS * TARGET_BLOCK_NNZ) / nnz_per_row + 1_000;
+        let row: Vec<(u32, f32)> = (0..nnz_per_row as u32).map(|c| (c, 1.0)).collect();
+        let rows = vec![row; rows_needed];
+        let x = Csr::from_rows(64, &rows);
+        let blocks = row_blocks(&x);
+        assert!(
+            blocks.len() <= MAX_BLOCKS,
+            "{} blocks for {} nnz",
+            blocks.len(),
+            x.nnz()
+        );
+        assert!(blocks.len() > MAX_BLOCKS / 2, "cap should stay near-saturated");
+        assert_eq!(blocks.last().unwrap().end, rows_needed);
+    }
+
+    #[test]
+    fn merge_block_sums_is_block_ordered() {
+        let pool = ComputePool::serial();
+        let bufs = vec![vec![1.0, -0.0, 2.0], vec![0.5, 0.0, -2.0]];
+        let mut out = vec![9.0; 3];
+        merge_block_sums(&pool, &bufs, &mut out);
+        assert_eq!(out, vec![1.5, 0.0, 0.0]);
+        // a single block is copied verbatim — even -0.0 survives
+        let one = vec![vec![-0.0, 3.0]];
+        let mut out = vec![0.0; 2];
+        merge_block_sums(&pool, &one, &mut out);
+        assert_eq!(out[0].to_bits(), (-0.0f64).to_bits());
+        // no blocks → zeros
+        let mut out = vec![5.0; 2];
+        merge_block_sums(&pool, &[], &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn fold_block_scalars_seeds_with_first() {
+        assert_eq!(fold_block_scalars(&[]), 0.0);
+        assert_eq!(fold_block_scalars(&[-0.0]).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(fold_block_scalars(&[1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn merge_is_bitwise_identical_across_thread_counts() {
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        let bufs: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..10_000).map(|_| rng.normal()).collect())
+            .collect();
+        let serial = ComputePool::serial();
+        let mut want = vec![0.0; 10_000];
+        merge_block_sums(&serial, &bufs, &mut want);
+        for threads in [2usize, 4, 8] {
+            let pool = ComputePool::new(threads);
+            let mut got = vec![0.0; 10_000];
+            merge_block_sums(&pool, &bufs, &mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+}

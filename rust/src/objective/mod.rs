@@ -9,9 +9,15 @@
 //! implementation lives here, the AOT/PJRT dense-block implementation
 //! in [`crate::runtime`] — methods are backend-agnostic.
 
+pub mod engine;
+
+use std::sync::Arc;
+
 use crate::data::Dataset;
 use crate::linalg::{self, Csr};
 use crate::loss::Loss;
+
+use engine::{ComputePool, LinesearchPlan};
 
 /// One node's slice of the data (plus per-example weights for the
 /// resampling extension; all 1.0 under a plain partition).
@@ -72,6 +78,18 @@ pub trait ShardCompute: Send + Sync {
     /// (φ(t), φ'(t)) over cached (z, e): φ(t) = Σ c·l(z + t·e, y).
     fn linesearch_eval(&self, loss: Loss, z: &[f64], e: &[f64], t: f64) -> (f64, f64);
 
+    /// Build a reusable packed evaluation plan for a line search over
+    /// cached (z, e): the per-row (z, e, y, c) gather is paid once and
+    /// every trial step of the same search streams the packed blocks
+    /// ([`engine::LinesearchPlan`]), bitwise identical to
+    /// `linesearch_eval`. `None` for backends without per-example
+    /// access (the PJRT dense backend) — callers fall back to
+    /// `linesearch_eval`.
+    fn linesearch_plan(&self, z: &[f64], e: &[f64]) -> Option<LinesearchPlan> {
+        let _ = (z, e);
+        None
+    }
+
     /// Per-example sparse access for example-wise methods (SGD, SVRG,
     /// dual coordinate ascent). `None` for backends that only expose
     /// block operations (the PJRT dense backend).
@@ -83,14 +101,53 @@ pub trait ShardCompute: Send + Sync {
     fn feature_counts(&self) -> Vec<u32>;
 }
 
-/// Native CSR backend.
+/// Native CSR backend, pre-split at construction into cache-sized
+/// contiguous row blocks (see [`engine::row_blocks`]) and executed
+/// block-parallel on a persistent [`ComputePool`]. Every kernel merges
+/// its per-block partials in fixed block order, so the output is
+/// bitwise identical for every thread count — `threads = 1` (the
+/// default serial pool) is the reference ordering, not a special case.
 pub struct SparseShard {
     pub data: Shard,
+    /// contiguous row blocks — a pure function of the data, never of
+    /// the thread count
+    blocks: Vec<std::ops::Range<usize>>,
+    pool: Arc<ComputePool>,
 }
 
 impl SparseShard {
+    /// Serial shard (inline pool, no OS threads) — the seed behaviour.
     pub fn new(data: Shard) -> SparseShard {
-        SparseShard { data }
+        SparseShard::with_pool(data, ComputePool::serial())
+    }
+
+    /// Shard executing its blocks on `pool` (shared across the worker's
+    /// shards; sized by the `[worker] threads` config key).
+    pub fn with_pool(data: Shard, pool: Arc<ComputePool>) -> SparseShard {
+        let blocks = engine::row_blocks(&data.x);
+        SparseShard { data, blocks, pool }
+    }
+
+    /// Explicit block-size override (tests pin the determinism contract
+    /// across adversarial blockings: more blocks than threads, fewer,
+    /// single-row blocks, empty rows).
+    pub fn with_blocking(
+        data: Shard,
+        target_block_nnz: usize,
+        pool: Arc<ComputePool>,
+    ) -> SparseShard {
+        let blocks = engine::row_blocks_with_target(&data.x, target_block_nnz);
+        SparseShard { data, blocks, pool }
+    }
+
+    /// The row blocking in effect.
+    pub fn blocks(&self) -> &[std::ops::Range<usize>] {
+        &self.blocks
+    }
+
+    /// The compute pool in effect.
+    pub fn pool(&self) -> &Arc<ComputePool> {
+        &self.pool
     }
 }
 
@@ -108,59 +165,178 @@ impl ShardCompute for SparseShard {
     }
 
     fn loss_grad(&self, loss: Loss, w: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
-        // Single fused pass: each row is traversed once while its
-        // entries are still cache-hot, computing the margin, the loss
-        // term, and the gradient scatter together (vs the naive
-        // margins → residuals → XᵀR three-pass structure; see
-        // EXPERIMENTS.md §Perf for the measured ~1.8× on this path).
+        // Fused pass, block-parallel: each block traverses its rows
+        // once while the entries are cache-hot, computing the margin,
+        // the loss term and the gradient scatter together (see
+        // EXPERIMENTS.md §Perf). Margins land directly in disjoint
+        // slices of z; per-block (loss, gradient) partials are merged
+        // in fixed block order, so bits never depend on thread count.
         let x = &self.data.x;
         let mut z = vec![0.0; x.rows];
-        let mut g = vec![0.0; x.cols];
-        let mut value = 0.0;
-        for i in 0..x.rows {
-            let zi = x.row_dot(i, w);
-            z[i] = zi;
-            let (v, d) = loss.value_dz(zi, self.data.y[i]);
-            let ci = self.data.c[i];
-            value += ci * v;
-            let r = ci * d;
-            if r != 0.0 {
-                x.row_axpy(i, r, &mut g);
-            }
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, vec![0.0; x.cols], z);
         }
-        (value, g, z)
+        let y = &self.data.y;
+        let c = &self.data.c;
+        let blocks = &self.blocks;
+        // one block's fused sweep: margins into z_part, gradient
+        // scatter into g; returns the block's loss partial
+        let block_pass = |b: usize, z_part: &mut [f64], g: &mut [f64]| -> f64 {
+            let mut value = 0.0;
+            for (k, i) in blocks[b].clone().enumerate() {
+                let zi = x.row_dot(i, w);
+                z_part[k] = zi;
+                let (v, d) = loss.value_dz(zi, y[i]);
+                let ci = c[i];
+                value += ci * v;
+                let r = ci * d;
+                if r != 0.0 {
+                    x.row_axpy(i, r, g);
+                }
+            }
+            value
+        };
+        let mut g = vec![0.0; x.cols];
+        if self.pool.threads() == 1 {
+            // streaming serial path: block 0 scatters into the
+            // accumulator, later blocks go through ONE reusable
+            // scratch buffer folded in block order — O(2m) transient
+            // memory instead of O(blocks·m), bitwise identical to the
+            // threaded merge (same per-coordinate left-fold order)
+            let mut value = 0.0;
+            let mut scratch = if nb > 1 { vec![0.0; x.cols] } else { Vec::new() };
+            let z_parts = engine::split_by_ranges(&mut z, blocks);
+            for (b, z_part) in z_parts.into_iter().enumerate() {
+                if b == 0 {
+                    value = block_pass(b, z_part, &mut g[..]);
+                } else {
+                    scratch.fill(0.0);
+                    value += block_pass(b, z_part, &mut scratch[..]);
+                    for (gj, sj) in g.iter_mut().zip(&scratch) {
+                        *gj += *sj;
+                    }
+                }
+            }
+            return (value, g, z);
+        }
+        let slots: Vec<std::sync::Mutex<Option<(f64, Vec<f64>)>>> =
+            (0..nb).map(|_| std::sync::Mutex::new(None)).collect();
+        {
+            let z_parts = engine::split_by_ranges(&mut z, blocks);
+            self.pool.run_over_slices(z_parts, |b, z_part| {
+                let mut gb = vec![0.0; x.cols];
+                let vb = block_pass(b, z_part, &mut gb[..]);
+                *slots[b].lock().unwrap() = Some((vb, gb));
+            });
+        }
+        let mut values = Vec::with_capacity(nb);
+        let mut grads = Vec::with_capacity(nb);
+        for slot in slots {
+            let (vb, gb) = slot.into_inner().unwrap().unwrap();
+            values.push(vb);
+            grads.push(gb);
+        }
+        engine::merge_block_sums(&self.pool, &grads, &mut g);
+        (engine::fold_block_scalars(&values), g, z)
     }
 
     fn margins(&self, d: &[f64]) -> Vec<f64> {
-        let mut e = vec![0.0; self.data.x.rows];
-        self.data.x.margins_into(d, &mut e);
+        let x = &self.data.x;
+        let mut e = vec![0.0; x.rows];
+        let blocks = &self.blocks;
+        let parts = engine::split_by_ranges(&mut e, blocks);
+        self.pool.run_over_slices(parts, |b, part| {
+            x.margins_block_into(blocks[b].clone(), d, part);
+        });
         e
     }
 
     fn hvp(&self, loss: Loss, z: &[f64], s: &[f64]) -> Vec<f64> {
         let x = &self.data.x;
         debug_assert_eq!(z.len(), x.rows);
-        let mut dvec = vec![0.0; x.rows];
-        for i in 0..x.rows {
-            dvec[i] = self.data.c[i] * loss.d2z(z[i], self.data.y[i]);
-        }
         let mut out = vec![0.0; x.cols];
-        x.hvp_into(&dvec, s, &mut out);
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return out;
+        }
+        let y = &self.data.y;
+        let c = &self.data.c;
+        let blocks = &self.blocks;
+        let block_pass = |b: usize, part: &mut [f64]| {
+            let rows = blocks[b].clone();
+            let mut d_block = Vec::with_capacity(rows.len());
+            for i in rows.clone() {
+                d_block.push(c[i] * loss.d2z(z[i], y[i]));
+            }
+            x.hvp_block_into(rows, &d_block, s, part);
+        };
+        if self.pool.threads() == 1 {
+            // streaming serial path — O(2m) transient memory, same
+            // per-coordinate block-order fold as the threaded merge
+            let mut scratch = if nb > 1 { vec![0.0; x.cols] } else { Vec::new() };
+            for b in 0..nb {
+                if b == 0 {
+                    block_pass(b, &mut out[..]);
+                } else {
+                    scratch.fill(0.0);
+                    block_pass(b, &mut scratch[..]);
+                    for (oj, sj) in out.iter_mut().zip(&scratch) {
+                        *oj += *sj;
+                    }
+                }
+            }
+            return out;
+        }
+        let parts = self.pool.map(nb, |b| {
+            let mut part = vec![0.0; x.cols];
+            block_pass(b, &mut part[..]);
+            part
+        });
+        engine::merge_block_sums(&self.pool, &parts, &mut out);
         out
     }
 
     fn linesearch_eval(&self, loss: Loss, z: &[f64], e: &[f64], t: f64) -> (f64, f64) {
         debug_assert_eq!(z.len(), self.n());
         debug_assert_eq!(e.len(), self.n());
-        let mut phi = 0.0;
-        let mut dphi = 0.0;
-        for i in 0..z.len() {
-            let zt = z[i] + t * e[i];
-            let (v, d) = loss.value_dz(zt, self.data.y[i]);
-            phi += self.data.c[i] * v;
-            dphi += self.data.c[i] * d * e[i];
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, 0.0);
         }
-        (phi, dphi)
+        let y = &self.data.y;
+        let c = &self.data.c;
+        let blocks = &self.blocks;
+        let partials = self.pool.map(nb, |b| {
+            let mut phi = 0.0;
+            let mut dphi = 0.0;
+            for i in blocks[b].clone() {
+                let (p, d) = loss.linesearch_term(z[i], e[i], y[i], c[i], t);
+                phi += p;
+                dphi += d;
+            }
+            (phi, dphi)
+        });
+        let phis: Vec<f64> = partials.iter().map(|&(p, _)| p).collect();
+        let dphis: Vec<f64> = partials.iter().map(|&(_, d)| d).collect();
+        (
+            engine::fold_block_scalars(&phis),
+            engine::fold_block_scalars(&dphis),
+        )
+    }
+
+    fn linesearch_plan(&self, z: &[f64], e: &[f64]) -> Option<LinesearchPlan> {
+        if z.len() != self.n() || e.len() != self.n() {
+            return None;
+        }
+        Some(LinesearchPlan::build(
+            &self.blocks,
+            self.pool.clone(),
+            z,
+            e,
+            &self.data.y,
+            &self.data.c,
+        ))
     }
 
     fn shard(&self) -> Option<&Shard> {
@@ -325,6 +501,67 @@ mod tests {
         let mut g = vec![1.0, 1.0];
         obj.finish_grad(&w, &mut g);
         assert_eq!(g, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn threaded_blocked_kernels_bitwise_match_serial() {
+        // the engine's determinism contract: with the blocking held
+        // fixed, every kernel's output is bitwise identical for any
+        // thread count (the fixed-order block merge)
+        let ds = synth::quick(257, 48, 8, 9);
+        let data = Shard::whole(&ds);
+        let serial =
+            SparseShard::with_blocking(data.clone(), 64, ComputePool::serial());
+        assert!(serial.blocks().len() > 4, "blocking too coarse for the test");
+        let mut rng = crate::util::rng::Pcg64::new(10);
+        let w: Vec<f64> = (0..48).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..48).map(|_| rng.normal()).collect();
+        let (v0, g0, z0) = serial.loss_grad(Loss::Logistic, &w);
+        let e0 = serial.margins(&d);
+        let h0 = serial.hvp(Loss::Logistic, &z0, &d);
+        let (p0, q0) = serial.linesearch_eval(Loss::Logistic, &z0, &e0, 0.375);
+        for threads in [2usize, 4, 8] {
+            let pool = ComputePool::new(threads);
+            let shard = SparseShard::with_blocking(data.clone(), 64, pool);
+            let (v, g, z) = shard.loss_grad(Loss::Logistic, &w);
+            assert_eq!(v.to_bits(), v0.to_bits(), "threads={threads}");
+            assert!(
+                g.iter().zip(&g0).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}: gradient bits diverged"
+            );
+            assert_eq!(z, z0, "threads={threads}");
+            assert_eq!(shard.margins(&d), e0, "threads={threads}");
+            let h = shard.hvp(Loss::Logistic, &z, &d);
+            assert!(
+                h.iter().zip(&h0).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}: hvp bits diverged"
+            );
+            let (p, q) = shard.linesearch_eval(Loss::Logistic, &z, &e0, 0.375);
+            assert_eq!(p.to_bits(), p0.to_bits(), "threads={threads}");
+            assert_eq!(q.to_bits(), q0.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn linesearch_plan_matches_plain_eval_bitwise() {
+        let ds = synth::quick(200, 30, 6, 12);
+        let shard =
+            SparseShard::with_blocking(Shard::whole(&ds), 100, ComputePool::new(3));
+        let mut rng = crate::util::rng::Pcg64::new(13);
+        let w: Vec<f64> = (0..30).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..30).map(|_| 0.1 * rng.normal()).collect();
+        let (_, _, z) = shard.loss_grad(Loss::SquaredHinge, &w);
+        let e = shard.margins(&d);
+        let plan = shard.linesearch_plan(&z, &e).expect("sparse backend has a plan");
+        assert_eq!(plan.n(), shard.n());
+        for t in [0.0, 0.25, 1.0, 3.0] {
+            let (pp, pd) = plan.eval(Loss::SquaredHinge, t);
+            let (wp, wd) = shard.linesearch_eval(Loss::SquaredHinge, &z, &e, t);
+            assert_eq!(pp.to_bits(), wp.to_bits(), "t={t}");
+            assert_eq!(pd.to_bits(), wd.to_bits(), "t={t}");
+        }
+        // a mismatched cache is rejected, not mis-packed
+        assert!(shard.linesearch_plan(&z[1..], &e).is_none());
     }
 
     #[test]

@@ -157,8 +157,8 @@ fn p2p_driver_combine_traffic_is_scalar_only() {
         for plane in DataPlane::all() {
             let cfg = tcp_cfg(&base, plane);
             let (train, _) = driver::build_train_split(&cfg).expect("split");
-            let cluster =
-                driver::build_cluster(&cfg, &train, cfg.nodes, cfg.cost).expect("cluster");
+            let cluster = driver::build_cluster(&cfg, &train, None, cfg.nodes, cfg.cost)
+                .expect("cluster");
             let m = cluster.m();
             let w = vec![0.01; m];
             cluster.reset_phase();
@@ -218,10 +218,12 @@ fn p2p_driver_combine_traffic_is_scalar_only() {
 /// trained end-to-end through the real driver pipeline under
 /// `data_plane = "p2p"`, **no m-sized f64 payload crosses a driver
 /// link after round 0** — every trace record's cumulative
-/// `driver_data_bytes` is 0 (with AUPRC instrumentation disabled via
-/// `test_fraction = 0`, since scoring a held-out set fetches the
-/// iterate; the end-of-run weight fetch happens after the last record).
-/// Also pins the exact per-iteration mesh byte counts for the new
+/// `driver_data_bytes` is 0. Since the held-out set became
+/// worker-resident this holds WITH AUPRC instrumentation on
+/// (`test_fraction` keeps its 0.2 default here): scoring is a
+/// `TestAuprc` phase replying one scalar per rank, not a `FetchReg` of
+/// the iterate (the end-of-run weight fetch happens after the last
+/// record). Also pins the exact per-iteration mesh byte counts for the
 /// combine collectives.
 #[test]
 fn scalar_only_driver_for_every_method_after_round_zero() {
@@ -239,7 +241,6 @@ fn scalar_only_driver_for_every_method_after_round_zero() {
                 method: method.into(),
                 topology,
                 max_outer: 3,
-                test_fraction: 0.0,
                 ..tcp_cfg(&base_cfg(), DataPlane::P2p)
             };
             let trace = run_with(&cfg);
@@ -263,6 +264,46 @@ fn scalar_only_driver_for_every_method_after_round_zero() {
                 last.comm_passes,
             );
         }
+    }
+}
+
+/// The engine's end-to-end determinism contract: at `threads = 4`
+/// every transport/data-plane combination reproduces the `threads = 1`
+/// trajectory bit for bit — the blocked kernels' fixed-order merge
+/// makes intra-worker parallelism invisible to the arithmetic, on the
+/// in-process transport AND on real worker processes whose pools are
+/// sized by the `Setup` frame.
+#[test]
+fn threads_four_trajectories_bitwise_match_threads_one_three_way() {
+    // large enough shards that each rank's blocking actually splits
+    // (≈72k nnz per rank → several TARGET_BLOCK_NNZ blocks)
+    let base = Config {
+        quick_n: 6_000,
+        quick_nnz: 30,
+        max_outer: 3,
+        ..base_cfg()
+    };
+    let reference = run_with(&Config {
+        transport: "inproc".into(),
+        threads: 1,
+        ..base.clone()
+    });
+    let inproc4 = run_with(&Config {
+        transport: "inproc".into(),
+        threads: 4,
+        ..base.clone()
+    });
+    assert_traces_bitwise(&reference, &inproc4, "inproc T=4");
+    for plane in DataPlane::all() {
+        let tcp4 = run_with(&Config {
+            threads: 4,
+            ..tcp_cfg(&base, plane)
+        });
+        assert_traces_bitwise(
+            &reference,
+            &tcp4,
+            &format!("tcp-{} T=4 vs inproc T=1", plane.name()),
+        );
     }
 }
 

@@ -1,0 +1,188 @@
+//! Engine determinism properties: the blocked, pool-parallel
+//! `ShardCompute` kernels must be **bitwise identical** to the serial
+//! reference for every thread count, across adversarial blockings —
+//! more blocks than threads, fewer blocks than threads (n < T), single
+//! block (T = 1 / tiny shards), single-row blocks, empty rows, empty
+//! shards. The blocking is held fixed per case (it is a pure function
+//! of the data), so any bit divergence is a real scheduling leak.
+
+use fadl::linalg::Csr;
+use fadl::loss::Loss;
+use fadl::objective::engine::ComputePool;
+use fadl::objective::{Shard, ShardCompute, SparseShard};
+use fadl::util::proptest::{Gen, Runner};
+use fadl::util::rng::Pcg64;
+
+/// (rows, cols, target_block_nnz, seed) — rows may be 0 (empty shard)
+/// and target 1 forces one-row blocks.
+struct EngineCase;
+
+impl Gen for EngineCase {
+    type Value = (usize, usize, usize, u64);
+
+    fn draw(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            rng.below(40),
+            1 + rng.below(24),
+            1 + rng.below(40),
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 0 {
+            out.push((v.0 / 2, v.1, v.2, v.3));
+        }
+        if v.2 > 1 {
+            out.push((v.0, v.1, 1, v.3));
+        }
+        out
+    }
+}
+
+fn random_shard(n: usize, m: usize, seed: u64) -> Shard {
+    let mut rng = Pcg64::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            // rng.below(6) == 0 leaves the row empty on purpose
+            (0..rng.below(6))
+                .map(|_| (rng.below(m) as u32, rng.normal() as f32))
+                .collect()
+        })
+        .collect();
+    let x = Csr::from_rows(m, &rows);
+    let y: Vec<f64> = (0..n)
+        .map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    Shard { x, y, c }
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn blocked_kernels_bitwise_equal_across_thread_counts() {
+    Runner::new(48, 0xE61E).run(&EngineCase, |&(n, m, target, seed)| {
+        let data = random_shard(n, m, seed);
+        let loss = if seed % 2 == 0 { Loss::SquaredHinge } else { Loss::Logistic };
+        let mut rng = Pcg64::new(seed ^ 0x77);
+        let w: Vec<f64> = (0..m).map(|_| 0.3 * rng.normal()).collect();
+        let s: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let t = rng.range_f64(0.0, 2.0);
+
+        let serial = SparseShard::with_blocking(data.clone(), target, ComputePool::serial());
+        let (v0, g0, z0) = serial.loss_grad(loss, &w);
+        let e0 = serial.margins(&s);
+        let h0 = serial.hvp(loss, &z0, &s);
+        let (p0, q0) = serial.linesearch_eval(loss, &z0, &e0, t);
+
+        for threads in [2usize, 3, 8] {
+            let shard =
+                SparseShard::with_blocking(data.clone(), target, ComputePool::new(threads));
+            if shard.blocks() != serial.blocks() {
+                return Err(format!(
+                    "blocking depends on the pool: {:?} vs {:?}",
+                    shard.blocks(),
+                    serial.blocks()
+                ));
+            }
+            let (v, g, z) = shard.loss_grad(loss, &w);
+            if v.to_bits() != v0.to_bits() {
+                return Err(format!("T={threads}: loss {v} != {v0}"));
+            }
+            if !bits_equal(&g, &g0) {
+                return Err(format!("T={threads}: gradient bits diverged"));
+            }
+            if !bits_equal(&z, &z0) {
+                return Err(format!("T={threads}: margin bits diverged"));
+            }
+            if !bits_equal(&shard.margins(&s), &e0) {
+                return Err(format!("T={threads}: margins() bits diverged"));
+            }
+            if !bits_equal(&shard.hvp(loss, &z, &s), &h0) {
+                return Err(format!("T={threads}: hvp bits diverged"));
+            }
+            let (p, q) = shard.linesearch_eval(loss, &z, &e0, t);
+            if p.to_bits() != p0.to_bits() || q.to_bits() != q0.to_bits() {
+                return Err(format!("T={threads}: linesearch bits diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_linesearch_plan_bitwise_equals_plain_eval() {
+    Runner::new(48, 0x9ACD).run(&EngineCase, |&(n, m, target, seed)| {
+        let data = random_shard(n, m, seed);
+        let loss = if seed % 2 == 0 { Loss::SquaredHinge } else { Loss::Logistic };
+        let mut rng = Pcg64::new(seed ^ 0x3131);
+        let w: Vec<f64> = (0..m).map(|_| 0.3 * rng.normal()).collect();
+        let d: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        for threads in [1usize, 4] {
+            let shard =
+                SparseShard::with_blocking(data.clone(), target, ComputePool::new(threads));
+            let (_, _, z) = shard.loss_grad(loss, &w);
+            let e = shard.margins(&d);
+            let Some(plan) = shard.linesearch_plan(&z, &e) else {
+                return Err("sparse backend refused to build a plan".into());
+            };
+            if plan.n() != n {
+                return Err(format!("plan packed {} of {n} rows", plan.n()));
+            }
+            // the same plan serves every trial step of the search
+            for _ in 0..4 {
+                let t = rng.range_f64(-1.0, 3.0);
+                let (pp, pd) = plan.eval(loss, t);
+                let (wp, wd) = shard.linesearch_eval(loss, &z, &e, t);
+                if pp.to_bits() != wp.to_bits() || pd.to_bits() != wd.to_bits() {
+                    return Err(format!(
+                        "T={threads} t={t}: packed ({pp}, {pd}) != plain ({wp}, {wd})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn default_blocking_single_block_matches_seed_arithmetic() {
+    // a shard under TARGET_BLOCK_NNZ has exactly one block, whose
+    // fused pass reproduces the historical unblocked loop bit for bit
+    // (value fold seeds from block 0; gradient merge copies block 0) —
+    // pinned here by comparing against an explicit single-block shard
+    let data = random_shard(30, 12, 7);
+    let auto = SparseShard::new(data.clone());
+    assert_eq!(auto.blocks().len(), 1);
+    let one = SparseShard::with_blocking(data, usize::MAX, ComputePool::new(4));
+    let w = vec![0.1; 12];
+    let (va, ga, za) = auto.loss_grad(Loss::SquaredHinge, &w);
+    let (vo, go, zo) = one.loss_grad(Loss::SquaredHinge, &w);
+    assert_eq!(va.to_bits(), vo.to_bits());
+    assert!(bits_equal(&ga, &go));
+    assert!(bits_equal(&za, &zo));
+}
+
+#[test]
+fn empty_shard_kernels_are_well_defined() {
+    let data = random_shard(0, 5, 1);
+    for threads in [1usize, 4] {
+        let shard = SparseShard::with_blocking(data.clone(), 4, ComputePool::new(threads));
+        let (v, g, z) = shard.loss_grad(Loss::Logistic, &[0.0; 5]);
+        assert_eq!(v, 0.0);
+        assert_eq!(g, vec![0.0; 5]);
+        assert!(z.is_empty());
+        assert!(shard.margins(&[0.0; 5]).is_empty());
+        assert_eq!(shard.hvp(Loss::Logistic, &z, &[0.0; 5]), vec![0.0; 5]);
+        assert_eq!(shard.linesearch_eval(Loss::Logistic, &z, &z, 0.5), (0.0, 0.0));
+        let plan = shard.linesearch_plan(&z, &z).expect("empty plan is fine");
+        assert_eq!(plan.eval(Loss::Logistic, 0.5), (0.0, 0.0));
+    }
+}

@@ -276,18 +276,25 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 v: draw_vec(&mut rng, len),
             }),
             Msg::Cmd(Command::FetchReg { reg: rng.below(64) as u32 }),
-            Msg::Reply(fadl::net::Reply::Vector {
-                v: draw_vec(&mut rng, len),
-                units: rng.normal().abs(),
-            }),
-            Msg::Reply(fadl::net::Reply::Scalar {
-                v: rng.normal(),
-                units: 0.0,
-            }),
-            Msg::Reply(fadl::net::Reply::Dots {
-                vals: draw_vec(&mut rng, rng.below(6)),
-                units: 0.0,
-            }),
+            Msg::Cmd(Command::TestAuprc { w: draw_vecref(&mut rng, len) }),
+            Msg::Reply {
+                reply: fadl::net::Reply::Vector {
+                    v: draw_vec(&mut rng, len),
+                    units: rng.normal().abs(),
+                },
+                secs: rng.normal().abs(),
+            },
+            Msg::Reply {
+                reply: fadl::net::Reply::Scalar { v: rng.normal(), units: 0.0 },
+                secs: 0.0,
+            },
+            Msg::Reply {
+                reply: fadl::net::Reply::Dots {
+                    vals: draw_vec(&mut rng, rng.below(6)),
+                    units: 0.0,
+                },
+                secs: rng.normal().abs(),
+            },
             Msg::Mesh {
                 addrs: (0..rng.below(9))
                     .map(|r| format!("127.0.0.1:{}", 9000 + r))
@@ -310,6 +317,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 data_tx: rng.next_u64(),
                 data_rx: rng.next_u64(),
                 secs: rng.normal().abs(),
+                compute_secs: rng.normal().abs(),
                 dots: draw_vec(&mut rng, rng.below(5)),
             },
             Msg::Finish {
