@@ -6,7 +6,10 @@ PARITY_METHODS ?= fadl fadl_feature tera tera_lbfgs admm cocoa ssz
 PARITY_PLANES  ?= star p2p
 PARITY_TOPOS   ?= tree ring
 
-.PHONY: check fmt clippy test build smoke parity bytes bench scaling artifacts
+TRACE_METHOD ?= fadl
+TRACE_PLANE  ?= p2p
+
+.PHONY: check fmt clippy test build smoke parity bytes bench bench-check trace scaling artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -69,6 +72,25 @@ bytes:
 bench:
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench end_to_end
+
+## bench regression gate: record the quick-mode scaling artifact, then
+## compare it against the committed tolerance bands (exit nonzero on a
+## regression or a missing metric) — what the CI bench-smoke job runs
+bench-check:
+	$(CARGO) bench --bench hotpath -- --test --scaling --out-dir bench-out
+	$(CARGO) run --release --bin bench_check -- \
+	  bench-out/BENCH_5.json rust/benches/baseline.json
+
+## capture a per-rank span timeline for any method (TRACE_METHOD,
+## TRACE_PLANE override): writes trace-out/$(TRACE_METHOD).trace.json —
+## open it in https://ui.perfetto.dev or chrome://tracing
+trace:
+	$(CARGO) build --release --bin worker --bin net_smoke
+	$(CARGO) run --release --bin net_smoke -- \
+	  --method $(TRACE_METHOD) --nodes 4 --max-outer 8 \
+	  --data-plane $(TRACE_PLANE) --topology tree \
+	  --telemetry-out trace-out/$(TRACE_METHOD).trace.json
+	@echo "timeline in trace-out/$(TRACE_METHOD).trace.json"
 
 ## intra-worker engine scaling: the blocked ShardCompute kernels at
 ## T ∈ {1, 2, 4, 8} on a ≥10⁶-nnz synthetic shard — prints the

@@ -8,6 +8,9 @@
 //! (`--test` shrinks the harness and problem sizes; `--out-dir` writes
 //! the collected stats as hotpath.csv)
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use fadl::approx::{self, ApproxKind};
 use fadl::benchkit::{black_box, Bench, BenchArgs, Stats};
 use fadl::cluster::{Cluster, CostModel};
@@ -20,6 +23,55 @@ use fadl::objective::{Objective, Shard, ShardCompute, SparseShard};
 use fadl::optim::{tron::Tron, InnerOptimizer};
 use fadl::util::json::{arr_f64, obj, Json};
 use fadl::util::rng::Pcg64;
+
+/// Allocation-counting shim over the system allocator, powering the
+/// telemetry-off smoke assertion below.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Telemetry-off hot path (the default every bench and production run
+/// takes): opening and dropping spans — including ones with lazily
+/// built dynamic names — must perform zero allocations, and the
+/// per-span cost is timed so overhead regressions show up next to the
+/// kernels the spans bracket.
+fn telemetry_off_smoke(bench: &Bench, all: &mut Vec<Stats>) {
+    use fadl::metrics::telemetry::{self, SpanGuard};
+    assert!(!telemetry::enabled(), "benches must run with telemetry off");
+    // a throwaway span first: lazy statics may allocate on first touch
+    drop(SpanGuard::open("bench:warm"));
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..1_000u32 {
+        let _a = SpanGuard::open("bench:static-name");
+        let _b = SpanGuard::open_with(|| format!("bench:dyn:{i}"));
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after, before,
+        "telemetry-off span path allocated ({} allocs / 2000 spans)",
+        after - before
+    );
+    println!("telemetry-off smoke: 0 allocations across 2000 spans");
+    let s = bench.run("telemetry/span open+drop (off)", || {
+        drop(black_box(SpanGuard::open(black_box("bench:probe"))));
+    });
+    println!("{}", s.report());
+    all.push(s);
+}
 
 /// Intra-worker engine scaling: the blocked `ShardCompute` hot loops at
 /// T ∈ {1, 2, 4, 8} on one big synthetic shard (≥ 10⁶ nnz in full
@@ -140,6 +192,9 @@ fn main() {
         return;
     }
     println!("== hotpath micro-benchmarks ==");
+
+    // ---- telemetry disabled-path overhead gate ----
+    telemetry_off_smoke(&bench, &mut all);
 
     // ---- dense vector ops ----
     let mut rng = Pcg64::new(1);

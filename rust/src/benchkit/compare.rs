@@ -1,0 +1,252 @@
+//! Bench regression gate: compare a recorded `BENCH_*.json` artifact
+//! against the committed `benches/baseline.json` tolerance bands
+//! (ROADMAP: benchkit must *compare*, not just record).
+//!
+//! A baseline is a list of bands, each pinning one scalar extracted
+//! from the artifact's per-kernel arrays:
+//!
+//! ```json
+//! { "artifact": "BENCH_5.json",
+//!   "bands": [ { "kernel": "loss_grad", "threads": 4,
+//!                "metric": "speedup", "baseline": 2.0,
+//!                "rel_tol": 0.85, "direction": "higher" } ] }
+//! ```
+//!
+//! `direction: "higher"` gates `value ≥ baseline·(1 − rel_tol)` (for
+//! speedups — bigger is better); `"lower"` gates
+//! `value ≤ baseline·(1 + rel_tol)` (for latencies). Bands are wide by
+//! design: CI hardware varies wildly, so the gate exists to catch
+//! catastrophic regressions (accidental serialization, an O(n²) slip),
+//! not single-digit-percent drift. A band whose (kernel, threads,
+//! metric) is missing from the artifact is itself a failure — renames
+//! can't silently disarm the gate.
+
+use crate::util::json::Json;
+
+/// One tolerance band from `baseline.json`.
+#[derive(Clone, Debug)]
+pub struct Band {
+    pub kernel: String,
+    pub threads: usize,
+    pub metric: String,
+    pub baseline: f64,
+    pub rel_tol: f64,
+    /// `true` = higher is better (speedup), `false` = lower is better
+    /// (latency).
+    pub higher_is_better: bool,
+}
+
+impl Band {
+    /// The pass threshold this band implies.
+    pub fn threshold(&self) -> f64 {
+        if self.higher_is_better {
+            self.baseline * (1.0 - self.rel_tol)
+        } else {
+            self.baseline * (1.0 + self.rel_tol)
+        }
+    }
+}
+
+/// One band's outcome against the artifact.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub band: Band,
+    /// `None` when the metric is absent from the artifact.
+    pub value: Option<f64>,
+}
+
+impl Verdict {
+    pub fn ok(&self) -> bool {
+        match self.value {
+            None => false,
+            Some(v) if !v.is_finite() => false,
+            Some(v) => {
+                if self.band.higher_is_better {
+                    v >= self.band.threshold()
+                } else {
+                    v <= self.band.threshold()
+                }
+            }
+        }
+    }
+
+    /// One console line in the gate report.
+    pub fn report(&self) -> String {
+        let b = &self.band;
+        let bound = if b.higher_is_better { "≥" } else { "≤" };
+        let value = match self.value {
+            Some(v) => format!("{v:.3}"),
+            None => "MISSING".into(),
+        };
+        format!(
+            "{} {:<28} {:>10}  (want {bound} {:.3}, baseline {:.3} ±{:.0}%)",
+            if self.ok() { "ok  " } else { "FAIL" },
+            format!("{}/{} T={}", b.kernel, b.metric, b.threads),
+            value,
+            b.threshold(),
+            b.baseline,
+            b.rel_tol * 100.0
+        )
+    }
+}
+
+/// Parse the committed baseline document into its bands.
+pub fn parse_baseline(doc: &Json) -> Result<Vec<Band>, String> {
+    let bands = doc
+        .get("bands")
+        .and_then(Json::as_arr)
+        .ok_or("baseline: missing \"bands\" array")?;
+    bands
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let field = |k: &str| {
+                b.get(k).ok_or_else(|| format!("baseline band {i}: missing {k:?}"))
+            };
+            let direction = field("direction")?
+                .as_str()
+                .ok_or_else(|| format!("baseline band {i}: direction not a string"))?;
+            let higher_is_better = match direction {
+                "higher" => true,
+                "lower" => false,
+                other => {
+                    return Err(format!(
+                        "baseline band {i}: direction {other:?} (want \"higher\" \
+                         or \"lower\")"
+                    ))
+                }
+            };
+            Ok(Band {
+                kernel: field("kernel")?
+                    .as_str()
+                    .ok_or_else(|| format!("baseline band {i}: kernel not a string"))?
+                    .to_string(),
+                threads: field("threads")?
+                    .as_usize()
+                    .ok_or_else(|| format!("baseline band {i}: threads not a number"))?,
+                metric: field("metric")?
+                    .as_str()
+                    .ok_or_else(|| format!("baseline band {i}: metric not a string"))?
+                    .to_string(),
+                baseline: field("baseline")?
+                    .as_f64()
+                    .ok_or_else(|| format!("baseline band {i}: baseline not a number"))?,
+                rel_tol: field("rel_tol")?
+                    .as_f64()
+                    .ok_or_else(|| format!("baseline band {i}: rel_tol not a number"))?,
+                higher_is_better,
+            })
+        })
+        .collect()
+}
+
+/// Look one band's value up in a `BENCH_5.json`-shaped artifact
+/// (`kernels[].kernel` + parallel `threads`/`median_ns`/`speedup`
+/// arrays).
+fn lookup(artifact: &Json, band: &Band) -> Option<f64> {
+    let kernels = artifact.get("kernels")?.as_arr()?;
+    let entry = kernels
+        .iter()
+        .find(|k| k.get("kernel").and_then(Json::as_str) == Some(&band.kernel))?;
+    let threads = entry.get("threads")?.as_arr()?;
+    let idx = threads
+        .iter()
+        .position(|t| t.as_usize() == Some(band.threads))?;
+    entry.get(&band.metric)?.as_arr()?.get(idx)?.as_f64()
+}
+
+/// Check every baseline band against the artifact. The gate passes iff
+/// every verdict is ok (a missing metric fails).
+pub fn compare(artifact: &Json, baseline: &Json) -> Result<Vec<Verdict>, String> {
+    let bands = parse_baseline(baseline)?;
+    if bands.is_empty() {
+        return Err("baseline: no bands (an empty gate gates nothing)".into());
+    }
+    Ok(bands
+        .into_iter()
+        .map(|band| Verdict {
+            value: lookup(artifact, &band),
+            band,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{arr_f64, obj, parse};
+
+    fn artifact() -> Json {
+        obj(vec![(
+            "kernels",
+            Json::Arr(vec![obj(vec![
+                ("kernel", Json::Str("loss_grad".into())),
+                (
+                    "threads",
+                    Json::Arr(vec![Json::Num(1.0), Json::Num(4.0)]),
+                ),
+                ("median_ns", arr_f64(&[50_000.0, 16_000.0])),
+                ("speedup", arr_f64(&[1.0, 3.125])),
+            ])]),
+        )])
+    }
+
+    fn baseline(speedup_floor_base: f64) -> Json {
+        parse(&format!(
+            r#"{{ "artifact": "BENCH_5.json", "bands": [
+                 {{ "kernel": "loss_grad", "threads": 4, "metric": "speedup",
+                    "baseline": {speedup_floor_base}, "rel_tol": 0.5,
+                    "direction": "higher" }},
+                 {{ "kernel": "loss_grad", "threads": 1, "metric": "median_ns",
+                    "baseline": 50000, "rel_tol": 9.0, "direction": "lower" }}
+               ] }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_band_passes() {
+        let verdicts = compare(&artifact(), &baseline(2.0)).unwrap();
+        assert_eq!(verdicts.len(), 2);
+        assert!(verdicts.iter().all(Verdict::ok), "{verdicts:?}");
+        // thresholds: speedup ≥ 2.0·0.5 = 1.0; median_ns ≤ 50000·10
+        assert_eq!(verdicts[0].band.threshold(), 1.0);
+        assert_eq!(verdicts[1].band.threshold(), 500_000.0);
+        assert!(verdicts[0].report().starts_with("ok"));
+    }
+
+    #[test]
+    fn regression_fails() {
+        // demand speedup ≥ 8.0·0.5 = 4.0 > measured 3.125
+        let verdicts = compare(&artifact(), &baseline(8.0)).unwrap();
+        assert!(!verdicts[0].ok());
+        assert!(verdicts[0].report().starts_with("FAIL"), "{}", verdicts[0].report());
+        assert!(verdicts[1].ok());
+    }
+
+    #[test]
+    fn missing_metric_fails_closed() {
+        let b = parse(
+            r#"{ "bands": [ { "kernel": "renamed", "threads": 4,
+                 "metric": "speedup", "baseline": 1.0, "rel_tol": 0.5,
+                 "direction": "higher" } ] }"#,
+        )
+        .unwrap();
+        let verdicts = compare(&artifact(), &b).unwrap();
+        assert_eq!(verdicts[0].value, None);
+        assert!(!verdicts[0].ok());
+        assert!(verdicts[0].report().contains("MISSING"));
+    }
+
+    #[test]
+    fn malformed_baseline_rejected() {
+        assert!(compare(&artifact(), &parse("{}").unwrap()).is_err());
+        assert!(compare(&artifact(), &parse(r#"{"bands": []}"#).unwrap()).is_err());
+        let bad_dir = parse(
+            r#"{ "bands": [ { "kernel": "x", "threads": 1, "metric": "speedup",
+                 "baseline": 1.0, "rel_tol": 0.5, "direction": "sideways" } ] }"#,
+        )
+        .unwrap();
+        assert!(compare(&artifact(), &bad_dir).is_err());
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+pub mod compare;
 pub mod figures;
 
 /// Optimization barrier (re-exported so benches import one module).

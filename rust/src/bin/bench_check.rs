@@ -1,0 +1,49 @@
+//! `bench_check` — the bench regression gate (`make bench-check`).
+//!
+//! Compares a recorded scaling artifact against the committed baseline
+//! tolerance bands and exits nonzero on any regression or missing
+//! metric:
+//!
+//!   cargo run --bin bench_check -- bench-out/BENCH_5.json \
+//!       rust/benches/baseline.json
+//!
+//! See `benchkit::compare` for the band semantics (wide bands by
+//! design — the gate catches catastrophic regressions, not noise).
+
+use fadl::benchkit::compare;
+use fadl::util::json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [artifact_path, baseline_path] = args.as_slice() else {
+        eprintln!("usage: bench_check <BENCH_artifact.json> <baseline.json>");
+        std::process::exit(2);
+    };
+    let artifact = read_json(artifact_path);
+    let baseline = read_json(baseline_path);
+    let verdicts = compare::compare(&artifact, &baseline).unwrap_or_else(|e| {
+        eprintln!("bench_check: {e}");
+        std::process::exit(2);
+    });
+    println!("== bench gate: {artifact_path} vs {baseline_path} ==");
+    for v in &verdicts {
+        println!("{}", v.report());
+    }
+    let failed = verdicts.iter().filter(|v| !v.ok()).count();
+    if failed > 0 {
+        println!("bench_check FAILED ({failed}/{} bands)", verdicts.len());
+        std::process::exit(1);
+    }
+    println!("bench_check PASSED ({} bands)", verdicts.len());
+}
+
+fn read_json(path: &str) -> json::Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("bench_check: read {path}: {e}");
+        std::process::exit(2);
+    });
+    json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("bench_check: parse {path}: {e}");
+        std::process::exit(2);
+    })
+}

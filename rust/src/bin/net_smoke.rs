@@ -20,7 +20,9 @@
 //! Flags are the shared experiment CLI (`coordinator::config`), so the
 //! same overrides work here and on `fadl train`; `--transport` is
 //! ignored (both transports always run) and `--out X.json` writes one
-//! trace per transport (`X-inproc.json`, `X-tcp.json`). When the
+//! trace per transport (`X-inproc.json`, `X-tcp.json`);
+//! `--telemetry-out T.json` captures the tcp leg's merged per-rank
+//! span timeline (Chrome trace-event / Perfetto JSON). When the
 //! dedicated `worker` bin is not built alongside (e.g. plain
 //! `cargo run --bin net_smoke`), the driver re-executes *this* binary
 //! with `--worker`, handled below.
@@ -217,12 +219,26 @@ fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
         Some(stem) => format!("{stem}-{transport}.json"),
         None => format!("{p}-{transport}"),
     });
+    // --telemetry-out captures the tcp leg (the timeline with real
+    // worker processes, mesh sockets, and pool threads); the inproc leg
+    // runs with telemetry off so the artifact holds exactly one leg
+    let telemetry_out = if transport == "tcp" {
+        base.telemetry_out.clone()
+    } else {
+        None
+    };
     let cfg = Config {
         transport: transport.into(),
         out_json,
+        telemetry_out,
         ..base.clone()
     };
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
+    // legs share one process: drain the driver-side telemetry rings and
+    // zero the cluster's cumulative Measured/SimClock counters so the
+    // comparison tables below cannot silently mix legs
+    fadl::metrics::telemetry::reset();
+    exp.cluster.reset_clock();
     let (_, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
     println!(
         "{transport}: method {}, {} iterations, topology {}, data plane {}, \
@@ -249,6 +265,8 @@ fn print_trace(trace: &Trace) {
                 format!("{:.4}", r.meas_phase_secs),
                 format!("{:.4}", r.meas_compute_secs),
                 format!("{:.5}", r.meas_reduce_secs),
+                format!("{:.4}", r.queue_wait_secs),
+                format!("{:.4}", r.mesh_stall_secs),
                 format!("{:.0}", r.net_bytes),
                 format!("{:.0}", r.net_data_bytes),
                 format!("{:.0}", r.driver_data_bytes),
@@ -268,6 +286,8 @@ fn print_trace(trace: &Trace) {
                 "meas_phase",
                 "meas_comp",
                 "meas_reduce",
+                "queue_wait",
+                "mesh_stall",
                 "net_bytes",
                 "net_data",
                 "drv_data",

@@ -255,6 +255,11 @@ impl Cluster {
     /// Panics on transport failure (a dead worker is unrecoverable
     /// mid-training).
     fn phase(&self, cmd: &Command) -> Vec<Reply> {
+        // driver-side issue/await span: one per BSP phase, named after
+        // the command so the timeline shows what each barrier waited on
+        let _span = crate::metrics::telemetry::SpanGuard::open_with(|| {
+            format!("phase:{}", cmd.name())
+        });
         let out = self
             .transport
             .phase(cmd, self.threaded)
@@ -271,6 +276,34 @@ impl Cluster {
         let _ = self.phase(&Command::Reset);
     }
 
+    /// Drain every participant's telemetry rings into per-rank span
+    /// streams rebased onto the driver's clock: one `FetchTelemetry`
+    /// phase ships the workers' buffers up the control plane (zero
+    /// data-plane bytes — the command and its reply are bookkeeping,
+    /// like `Reset`), then the driver drains its own process-local
+    /// rings. Called only at trace boundaries (end of run), never
+    /// inside the phase loop. Free on the simulated clock.
+    pub fn fetch_telemetry(&self) -> Vec<crate::metrics::telemetry::RankStream> {
+        use crate::metrics::telemetry::RankStream;
+        let offsets = self.transport.clock_offsets();
+        let replies = self.phase(&Command::FetchTelemetry);
+        let mut streams: Vec<RankStream> = replies
+            .into_iter()
+            .zip(offsets)
+            .map(|(reply, offset_ns)| match reply {
+                Reply::Telemetry { spans, dropped, .. } => {
+                    RankStream { spans, dropped, offset_ns }
+                }
+                other => panic!("fetch telemetry: unexpected reply {other:?}"),
+            })
+            .collect();
+        // the driver's own rings (and, in-process, every "rank"'s —
+        // they share the process) come last, already on its clock
+        let (spans, dropped) = crate::metrics::telemetry::collect();
+        streams.push(RankStream { spans, dropped, offset_ns: 0 });
+        streams
+    }
+
     /// Execute a fused phase + combine on the transport (every m-vector
     /// collective goes through here). The transport owns where the
     /// bytes physically move — no wire for in-process, a driver gather
@@ -280,6 +313,9 @@ impl Cluster {
     /// replicated register caches) is bitwise identical everywhere.
     /// Panics on transport failure.
     fn combine(&self, cmd: &Command, spec: &CombineSpec) -> net::CombineOutput {
+        let _span = crate::metrics::telemetry::SpanGuard::open_with(|| {
+            format!("combine:{}", cmd.name())
+        });
         let out = self
             .transport
             .combine_phase(cmd, self.topology, spec, self.threaded)

@@ -79,6 +79,12 @@ pub struct Config {
     pub artifacts_dir: String,
     // output
     pub out_json: Option<String>,
+    /// write a merged per-rank span timeline here (Chrome trace-event /
+    /// Perfetto JSON). `Some` switches the telemetry plane on for the
+    /// whole run — driver, every rank, every pool thread; `None`
+    /// (default) keeps recording compiled in but disabled (one relaxed
+    /// atomic load per would-be span).
+    pub telemetry_out: Option<String>,
 }
 
 impl Default for Config {
@@ -115,6 +121,7 @@ impl Default for Config {
             backend: Backend::Sparse,
             artifacts_dir: "artifacts".into(),
             out_json: None,
+            telemetry_out: None,
         }
     }
 }
@@ -183,6 +190,10 @@ impl Config {
             .to_string();
         if let Some(v) = doc.get("output.json") {
             cfg.out_json = Some(v.as_str().ok_or("output.json not a string")?.to_string());
+        }
+        if let Some(v) = doc.get("output.telemetry") {
+            cfg.telemetry_out =
+                Some(v.as_str().ok_or("output.telemetry not a string")?.to_string());
         }
         Ok(cfg)
     }
@@ -278,6 +289,9 @@ impl Config {
         if !a.get("out").is_empty() {
             self.out_json = Some(a.get("out").to_string());
         }
+        if !a.get("telemetry-out").is_empty() {
+            self.telemetry_out = Some(a.get("telemetry-out").to_string());
+        }
         if a.on("no-warm-start") {
             self.warm_start = false;
         }
@@ -316,6 +330,12 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
         .flag("data-plane", "", "override tcp data plane: star | p2p")
         .flag("worker-bin", "", "explicit worker executable for the tcp transport")
         .flag("out", "", "write the trace JSON here")
+        .flag(
+            "telemetry-out",
+            "",
+            "write a per-rank span timeline (Perfetto/Chrome trace JSON) here \
+             and enable telemetry for the run",
+        )
         .switch("no-warm-start", "disable the SGD warm start")
 }
 
@@ -477,6 +497,20 @@ json = "out/fig5.json"
             .parse_from(vec!["--data-plane".to_string(), "rdma".to_string()])
             .unwrap();
         assert!(Config::from_cli(Config::default(), &a).is_err());
+    }
+
+    #[test]
+    fn telemetry_out_key_and_flag_parse() {
+        assert!(Config::from_toml("").unwrap().telemetry_out.is_none());
+        let cfg =
+            Config::from_toml("[output]\ntelemetry = \"out/run.trace.json\"").unwrap();
+        assert_eq!(cfg.telemetry_out.as_deref(), Some("out/run.trace.json"));
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--telemetry-out".to_string(), "t.json".to_string()])
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert_eq!(cfg.telemetry_out.as_deref(), Some("t.json"));
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         p2p_bind: cfg.p2p_bind.clone(),
         p2p_port_base: cfg.p2p_port_base,
         threads: cfg.threads,
+        telemetry: cfg.telemetry_out.is_some(),
     }
 }
 
@@ -214,6 +215,11 @@ pub fn build_cluster(
 /// worker process is spawned.
 pub fn prepare(cfg: &Config) -> Result<Experiment, String> {
     let _ = build_method(cfg)?;
+    // switch the driver-side telemetry plane on before any phase runs;
+    // workers get the flag through their Setup frames
+    if cfg.telemetry_out.is_some() {
+        crate::metrics::telemetry::enable();
+    }
     let (train, test) = build_train_split(cfg)?;
     let lambda = resolve_lambda(cfg);
     let cluster = build_cluster(cfg, &train, Some(&test), cfg.nodes, cfg.cost)?;
@@ -246,7 +252,24 @@ pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
         std::fs::write(path, trace.to_json().pretty())
             .map_err(|e| format!("write {path}: {e}"))?;
     }
+    if let Some(path) = &cfg.telemetry_out {
+        let summary = write_telemetry(&exp.cluster, path)?;
+        eprintln!("{summary}");
+    }
     Ok((w, trace))
+}
+
+/// Trace boundary: drain every participant's telemetry rings through
+/// the cluster, write the merged Perfetto/Chrome trace-event timeline
+/// to `path`, and return the per-rank phase breakdown table.
+pub fn write_telemetry(cluster: &Cluster, path: &str) -> Result<String, String> {
+    let streams = cluster.fetch_telemetry();
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let doc = crate::metrics::telemetry::to_chrome_trace(&streams);
+    std::fs::write(path, doc.pretty()).map_err(|e| format!("write {path}: {e}"))?;
+    Ok(super::report::telemetry_summary(&streams))
 }
 
 /// Instantiate the configured method with config overrides applied.
@@ -455,6 +478,53 @@ mod tests {
         };
         let err = prepare(&cfg).unwrap_err();
         assert!(err.contains("unknown method"), "{err}");
+    }
+
+    #[test]
+    fn back_to_back_runs_do_not_mix_counters() {
+        // net_smoke runs its two legs in one process; the second leg's
+        // trace must carry exactly the counters a fresh process would —
+        // no cumulative state bleeding through process globals
+        let cfg = quick_cfg();
+        let run_once = || {
+            let exp = prepare(&cfg).unwrap();
+            crate::metrics::telemetry::reset();
+            exp.cluster.reset_clock();
+            let (_, trace) = run(&exp).unwrap();
+            trace
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.f.to_bits(), rb.f.to_bits(), "iter {}", ra.iter);
+            assert_eq!(ra.net_bytes, rb.net_bytes, "iter {}", ra.iter);
+            assert_eq!(ra.net_data_bytes, rb.net_data_bytes, "iter {}", ra.iter);
+            assert_eq!(ra.driver_data_bytes, rb.driver_data_bytes, "iter {}", ra.iter);
+            assert_eq!(ra.comm_passes, rb.comm_passes, "iter {}", ra.iter);
+        }
+    }
+
+    #[test]
+    fn telemetry_out_written_and_valid() {
+        let _g = crate::metrics::telemetry::test_lock();
+        let dir = std::env::temp_dir().join("fadl_driver_telemetry_test");
+        let path = dir.join("run.trace.json");
+        let cfg = Config {
+            telemetry_out: Some(path.to_string_lossy().into_owned()),
+            max_outer: 2,
+            ..quick_cfg()
+        };
+        let exp = prepare(&cfg).unwrap();
+        run(&exp).unwrap();
+        crate::metrics::telemetry::disable();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        // the in-process run records driver phase spans at minimum
+        let crate::util::json::Json::Arr(events) = doc else { panic!("not an array") };
+        assert!(!events.is_empty());
+        assert!(text.contains("phase:grad") || text.contains("combine:grad"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Console reporting: fixed-width tables and trace summaries shared by
 //! the CLI and the figure benches.
 
+use crate::metrics::telemetry::{phase_breakdown, RankStream};
 use crate::metrics::{log_rel_diff, Trace};
 
 /// Render a fixed-width table. `widths` are minimum column widths.
@@ -32,6 +33,52 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
         out.push('\n');
     }
     out
+}
+
+/// Per-rank phase breakdown for a run's telemetry streams: one row per
+/// participant (streams follow [`crate::cluster::Cluster::fetch_telemetry`]
+/// order — ranks 0..P then the driver), one column per span family,
+/// plus a straggler-skew row (max/median across the worker ranks — 1.0
+/// means perfectly balanced; the driver row is excluded because its
+/// phase spans measure the whole barrier, not one rank's share).
+pub fn telemetry_summary(streams: &[RankStream]) -> String {
+    let (families, rows) = phase_breakdown(streams);
+    if families.is_empty() {
+        return "telemetry: no spans recorded".into();
+    }
+    let p = streams.len().saturating_sub(1);
+    let label = |i: usize| {
+        if i == p {
+            "driver".to_string()
+        } else {
+            format!("rank {i}")
+        }
+    };
+    let mut out_rows: Vec<Vec<String>> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut cells = vec![label(i)];
+            cells.extend(row.iter().map(|s| format!("{s:.4}")));
+            cells
+        })
+        .collect();
+    let mut skew = vec!["skew".to_string()];
+    for c in 0..families.len() {
+        let mut vals: Vec<f64> = rows.iter().take(p).map(|r| r[c]).collect();
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let median = if vals.is_empty() { 0.0 } else { vals[vals.len() / 2] };
+        let max = vals.last().copied().unwrap_or(0.0);
+        skew.push(if median > 0.0 {
+            format!("{:.2}x", max / median)
+        } else {
+            "-".into()
+        });
+    }
+    out_rows.push(skew);
+    let mut headers: Vec<&str> = vec!["participant"];
+    headers.extend(families.iter().map(|f| f.as_str()));
+    format!("per-rank phase seconds\n{}", table(&headers, &out_rows))
 }
 
 /// Summarize a trace against a reference optimum: the console analogue
@@ -87,6 +134,43 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("a    bbbb"));
         assert!(lines[2].starts_with("1    2"));
+    }
+
+    #[test]
+    fn telemetry_summary_reports_skew() {
+        use crate::metrics::telemetry::{Span, DRIVER_RANK};
+        use std::borrow::Cow;
+        let span = |rank: u32, name: &'static str, ns: u64| Span {
+            name: Cow::Borrowed(name),
+            rank,
+            thread: 0,
+            t_start_ns: 0,
+            t_end_ns: ns,
+            bytes: 0,
+        };
+        let streams = vec![
+            RankStream {
+                spans: vec![span(0, "cmd:grad", 1_000_000_000)],
+                dropped: 0,
+                offset_ns: 0,
+            },
+            RankStream {
+                spans: vec![span(1, "cmd:grad", 2_000_000_000)],
+                dropped: 0,
+                offset_ns: 0,
+            },
+            RankStream {
+                spans: vec![span(DRIVER_RANK, "phase:grad", 2_100_000_000)],
+                dropped: 0,
+                offset_ns: 0,
+            },
+        ];
+        let s = telemetry_summary(&streams);
+        assert!(s.contains("rank 0"), "{s}");
+        assert!(s.contains("driver"), "{s}");
+        // median of {1, 2} picks the upper value → skew 2/2 = 1.00x
+        assert!(s.contains("1.00x"), "{s}");
+        assert_eq!(telemetry_summary(&[]), "telemetry: no spans recorded");
     }
 
     #[test]

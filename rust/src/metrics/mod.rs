@@ -6,6 +6,7 @@
 //! AUPRC of full, perfect training".
 
 pub mod auprc;
+pub mod telemetry;
 pub mod trace;
 
 pub use auprc::auprc;

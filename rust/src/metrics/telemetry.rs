@@ -1,0 +1,519 @@
+//! Per-rank span tracing: a std-only, always-compiled, opt-in span
+//! recorder for the distributed runtime.
+//!
+//! Every participant — the driver, every worker rank, every
+//! [`crate::objective::engine::ComputePool`] helper thread — records
+//! [`Span`]s into a per-thread ring buffer (fixed capacity,
+//! drop-oldest, drop counter exported). Recording is gated on one
+//! process-global atomic flag: when telemetry is off (the default) a
+//! span attempt is a single relaxed load and an early return — no
+//! allocation, no lock, no clock read — so the hot path pays nothing
+//! (asserted by `benches/hotpath`).
+//!
+//! Workers ship their buffers to the driver via the wire-v6
+//! `FetchTelemetry` command, flushed only at trace boundaries and
+//! Shutdown and byte-accounted as control plane, so the scalar-driver
+//! invariant after round 0 is untouched. The driver merges per-rank
+//! streams on a common clock base (the Setup/Ready handshake records
+//! per-rank monotonic offsets) and emits a Chrome trace-event /
+//! Perfetto JSON timeline (`--telemetry-out run.trace.json`,
+//! loadable in `chrome://tracing` or <https://ui.perfetto.dev>).
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Ring capacity per thread. At ~64 bytes a span this bounds each
+/// thread's telemetry memory to a few hundred KiB.
+pub const RING_CAPACITY: usize = 4096;
+
+/// The driver records spans under this sentinel rank; worker ranks
+/// are their 0-based rank id.
+pub const DRIVER_RANK: u32 = u32::MAX;
+
+/// One recorded interval on one thread of one rank. Times are
+/// nanoseconds on the *recording process's* monotonic clock
+/// ([`now_ns`]); the driver rebases them when merging ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Span label (phase/kernel/mesh-op name). `Cow` so the hot path
+    /// records `&'static str` without allocating.
+    pub name: Cow<'static, str>,
+    /// Recording rank ([`DRIVER_RANK`] for the driver).
+    pub rank: u32,
+    /// Recording thread (sequential per-process id, 0 = first).
+    pub thread: u32,
+    /// Start, ns since the process telemetry epoch.
+    pub t_start_ns: u64,
+    /// End, ns since the process telemetry epoch.
+    pub t_end_ns: u64,
+    /// Free counter (bytes moved, trial index, …); 0 when unused.
+    pub bytes: u64,
+}
+
+// ---------------------------------------------------------------------------
+// process-global state
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RANK: AtomicU32 = AtomicU32::new(DRIVER_RANK);
+static NEXT_THREAD: AtomicU32 = AtomicU32::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+struct RingInner {
+    spans: Vec<Span>,
+    /// index of the logically-oldest span once the ring wrapped
+    head: usize,
+    dropped: u64,
+}
+
+impl RingInner {
+    fn new() -> RingInner {
+        RingInner { spans: Vec::new(), head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, span: Span) {
+        if self.spans.len() < RING_CAPACITY {
+            self.spans.push(span);
+        } else {
+            // drop-oldest: overwrite the head slot
+            self.spans[self.head] = span;
+            self.head = (self.head + 1) % RING_CAPACITY;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(&mut self) -> (Vec<Span>, u64) {
+        let mut out = Vec::with_capacity(self.spans.len());
+        out.extend_from_slice(&self.spans[self.head..]);
+        out.extend_from_slice(&self.spans[..self.head]);
+        self.spans.clear();
+        self.head = 0;
+        let dropped = std::mem::take(&mut self.dropped);
+        (out, dropped)
+    }
+}
+
+/// Registry of every thread's ring (weak ordering is fine: rings are
+/// registered once per thread and only read under their own mutex).
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<RingInner>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<RingInner>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: (u32, Arc<Mutex<RingInner>>) = {
+        let ring = Arc::new(Mutex::new(RingInner::new()));
+        registry().lock().unwrap().push(ring.clone());
+        let id = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+        (id, ring)
+    };
+}
+
+/// Nanoseconds since the process telemetry epoch (first call wins the
+/// epoch — [`enable`] pins it so all threads share one base).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Turn span recording on (idempotent). Pins the clock epoch.
+pub fn enable() {
+    let _ = now_ns();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn span recording off (rings keep their contents until drained).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Is span recording on?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set this process's rank stamp ([`DRIVER_RANK`] by default; a TCP
+/// worker sets its rank right after the Setup handshake).
+pub fn set_rank(rank: u32) {
+    RANK.store(rank, Ordering::Relaxed);
+}
+
+/// Record one finished span into the calling thread's ring.
+pub fn record(name: Cow<'static, str>, t_start_ns: u64, t_end_ns: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    let rank = RANK.load(Ordering::Relaxed);
+    LOCAL.with(|(thread, ring)| {
+        ring.lock().unwrap().push(Span {
+            name,
+            rank,
+            thread: *thread,
+            t_start_ns,
+            t_end_ns,
+            bytes,
+        });
+    });
+}
+
+/// RAII span: records `[creation, drop]` under `name` when telemetry
+/// is on; a no-op shell (no clock read) when off.
+pub struct SpanGuard {
+    name: Option<Cow<'static, str>>,
+    t_start_ns: u64,
+    bytes: u64,
+}
+
+impl SpanGuard {
+    /// Open a span. When telemetry is off this is one relaxed load.
+    #[inline]
+    pub fn open(name: impl Into<Cow<'static, str>>) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { name: None, t_start_ns: 0, bytes: 0 };
+        }
+        SpanGuard { name: Some(name.into()), t_start_ns: now_ns(), bytes: 0 }
+    }
+
+    /// Open a span whose name is built lazily — the closure (and any
+    /// allocation it performs) runs only when telemetry is enabled, so
+    /// dynamic names stay free on the disabled hot path.
+    #[inline]
+    pub fn open_with<F: FnOnce() -> String>(name: F) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { name: None, t_start_ns: 0, bytes: 0 };
+        }
+        SpanGuard { name: Some(Cow::Owned(name())), t_start_ns: now_ns(), bytes: 0 }
+    }
+
+    /// Attach a counter value (bytes moved, trial index, …).
+    pub fn bytes(&mut self, bytes: u64) {
+        self.bytes = bytes;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(name) = self.name.take() {
+            record(name, self.t_start_ns, now_ns(), self.bytes);
+        }
+    }
+}
+
+/// Drain every thread ring in this process: all recorded spans (ring
+/// registration order, oldest-first within a ring) plus the total
+/// dropped-span count.
+pub fn collect() -> (Vec<Span>, u64) {
+    let rings: Vec<_> = registry().lock().unwrap().clone();
+    let mut spans = Vec::new();
+    let mut dropped = 0u64;
+    for ring in rings {
+        let (mut s, d) = ring.lock().unwrap().drain();
+        spans.append(&mut s);
+        dropped += d;
+    }
+    (spans, dropped)
+}
+
+/// Drop all recorded spans and reset the drop counters without
+/// touching the enabled flag (net_smoke resets between legs).
+pub fn reset() {
+    let _ = collect();
+}
+
+// ---------------------------------------------------------------------------
+// driver-side merge + Chrome trace-event emission
+// ---------------------------------------------------------------------------
+
+/// Spans from one participant with its clock offset: adding
+/// `offset_ns` to a span timestamp rebases it onto the driver clock.
+pub struct RankStream {
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+    pub offset_ns: i64,
+}
+
+/// Merge per-participant streams onto the driver clock base and emit
+/// a Chrome trace-event JSON document (the "JSON array format":
+/// `[{"ph":"X",...}, ...]`), loadable in `chrome://tracing` and
+/// <https://ui.perfetto.dev>. One track (pid) per rank — pid 0 is the
+/// driver, pid r+1 is rank r — and one tid per recording thread.
+pub fn to_chrome_trace(streams: &[RankStream]) -> Json {
+    let mut events = Vec::new();
+    let mut tracks: Vec<(u32, u64)> = Vec::new(); // (pid, dropped)
+    for stream in streams {
+        for span in &stream.spans {
+            let pid = track_pid(span.rank);
+            if !tracks.iter().any(|(p, _)| *p == pid) {
+                tracks.push((pid, 0));
+            }
+            let start = span.t_start_ns as i64 + stream.offset_ns;
+            let end = span.t_end_ns as i64 + stream.offset_ns;
+            // trace-event timestamps are microseconds (f64); clamp so
+            // skewed clocks can't produce negative times or durations
+            let ts = start.max(0) as f64 / 1e3;
+            let dur = (end - start).max(0) as f64 / 1e3;
+            let mut fields = vec![
+                ("name", Json::Str(span.name.clone().into_owned())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(ts)),
+                ("dur", Json::Num(dur)),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(span.thread as f64)),
+            ];
+            if span.bytes != 0 {
+                fields.push((
+                    "args",
+                    json::obj(vec![("bytes", Json::Num(span.bytes as f64))]),
+                ));
+            }
+            events.push(json::obj(fields));
+        }
+        for span in &stream.spans {
+            let pid = track_pid(span.rank);
+            if let Some(t) = tracks.iter_mut().find(|(p, _)| *p == pid) {
+                t.1 = stream.dropped;
+            }
+        }
+    }
+    // metadata events naming each track
+    for (pid, dropped) in tracks {
+        let label = if pid == 0 {
+            "driver".to_string()
+        } else {
+            format!("rank {}", pid - 1)
+        };
+        let label = if dropped > 0 {
+            format!("{label} ({dropped} spans dropped)")
+        } else {
+            label
+        };
+        events.push(json::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", json::obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+    Json::Arr(events)
+}
+
+fn track_pid(rank: u32) -> u32 {
+    if rank == DRIVER_RANK {
+        0
+    } else {
+        rank + 1
+    }
+}
+
+/// Per-rank per-phase wall-time totals for the straggler-skew report:
+/// returns `(phase names, per-rank seconds matrix)` where row r is the
+/// participant index in `streams` and columns follow `phases`.
+pub fn phase_breakdown(streams: &[RankStream]) -> (Vec<String>, Vec<Vec<f64>>) {
+    let mut phases: Vec<String> = Vec::new();
+    for stream in streams {
+        for span in &stream.spans {
+            let base = base_name(&span.name);
+            if !phases.iter().any(|p| p == base) {
+                phases.push(base.to_string());
+            }
+        }
+    }
+    let mut rows = vec![vec![0.0f64; phases.len()]; streams.len()];
+    for (r, stream) in streams.iter().enumerate() {
+        for span in &stream.spans {
+            let base = base_name(&span.name);
+            if let Some(c) = phases.iter().position(|p| p == base) {
+                rows[r][c] +=
+                    span.t_end_ns.saturating_sub(span.t_start_ns) as f64 / 1e9;
+            }
+        }
+    }
+    (phases, rows)
+}
+
+/// Span names are hierarchical `family:detail` — the breakdown groups
+/// by the family prefix.
+fn base_name(name: &str) -> &str {
+    name.split(':').next().unwrap_or(name)
+}
+
+/// Serialize tests that toggle the process-global telemetry state
+/// (cargo runs tests threaded by default). Any test — in this module
+/// or elsewhere in the crate — that calls [`enable`]/[`disable`]/
+/// [`reset`] must hold this guard for its whole body.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = lock();
+        disable();
+        reset();
+        record(Cow::Borrowed("ghost"), 0, 1, 0);
+        drop(SpanGuard::open("ghost2"));
+        let (spans, dropped) = collect();
+        assert!(spans.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn span_guard_records_interval() {
+        let _g = lock();
+        enable();
+        reset();
+        {
+            let mut g = SpanGuard::open("phase:grad");
+            g.bytes(128);
+        }
+        disable();
+        let (spans, dropped) = collect();
+        assert_eq!(dropped, 0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "phase:grad");
+        assert_eq!(spans[0].bytes, 128);
+        assert!(spans[0].t_end_ns >= spans[0].t_start_ns);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let _g = lock();
+        enable();
+        reset();
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            record(Cow::Borrowed("x"), i, i + 1, i);
+        }
+        disable();
+        let (spans, dropped) = collect();
+        assert_eq!(spans.len(), RING_CAPACITY);
+        assert_eq!(dropped, 10);
+        // oldest-first: the first surviving span is the 10th recorded
+        assert_eq!(spans[0].t_start_ns, 10);
+        assert_eq!(spans.last().unwrap().t_start_ns, RING_CAPACITY as u64 + 9);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_adversarial_names() {
+        let _g = lock();
+        let evil = "ph\"ase\\:with\nnewline\tand\u{1}ctl";
+        let streams = vec![
+            RankStream {
+                spans: vec![Span {
+                    name: Cow::Owned(evil.to_string()),
+                    rank: DRIVER_RANK,
+                    thread: 0,
+                    t_start_ns: 1_000,
+                    t_end_ns: 5_000,
+                    bytes: 7,
+                }],
+                dropped: 0,
+                offset_ns: 0,
+            },
+            RankStream {
+                spans: vec![Span {
+                    name: Cow::Borrowed("phase:grad"),
+                    rank: 1,
+                    thread: 2,
+                    t_start_ns: 2_000,
+                    t_end_ns: 3_000,
+                    bytes: 0,
+                }],
+                dropped: 3,
+                offset_ns: -500,
+            },
+        ];
+        let text = to_chrome_trace(&streams).pretty();
+        let parsed = json::parse(&text).expect("trace JSON parses");
+        let events = parsed.as_arr().unwrap();
+        // 2 span events + 2 track metadata events
+        assert_eq!(events.len(), 4);
+        // durations are non-negative, timestamps monotone per span
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) == Some("X") {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // the adversarial name round-trips through escaping
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some(evil)));
+        // rank 1's metadata track reports its drop count
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    == Some("rank 1 (3 spans dropped)")
+        }));
+    }
+
+    #[test]
+    fn clock_offset_rebases_and_clamps() {
+        let _g = lock();
+        let streams = vec![RankStream {
+            spans: vec![Span {
+                name: Cow::Borrowed("early"),
+                rank: 0,
+                thread: 0,
+                t_start_ns: 100,
+                t_end_ns: 200,
+                bytes: 0,
+            }],
+            dropped: 0,
+            offset_ns: -1_000_000, // skewed clock: would go negative
+        }];
+        let trace = to_chrome_trace(&streams);
+        let events = trace.as_arr().unwrap();
+        let ts = events[0].get("ts").unwrap().as_f64().unwrap();
+        assert_eq!(ts, 0.0, "negative rebased start clamps to 0");
+    }
+
+    #[test]
+    fn phase_breakdown_groups_by_family() {
+        let _g = lock();
+        let span = |name: &'static str, a: u64, b: u64| Span {
+            name: Cow::Borrowed(name),
+            rank: 0,
+            thread: 0,
+            t_start_ns: a,
+            t_end_ns: b,
+            bytes: 0,
+        };
+        let streams = vec![
+            RankStream {
+                spans: vec![
+                    span("cmd:grad", 0, 2_000_000_000),
+                    span("cmd:linesearch", 0, 1_000_000_000),
+                ],
+                dropped: 0,
+                offset_ns: 0,
+            },
+            RankStream {
+                spans: vec![span("cmd:grad", 0, 4_000_000_000)],
+                dropped: 0,
+                offset_ns: 0,
+            },
+        ];
+        let (phases, rows) = phase_breakdown(&streams);
+        assert_eq!(phases, vec!["cmd".to_string()]);
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0][0] - 3.0).abs() < 1e-9);
+        assert!((rows[1][0] - 4.0).abs() < 1e-9);
+    }
+}

@@ -42,6 +42,13 @@ pub struct IterRecord {
     /// star part gathers and sum broadcasts). The scalar-only driver
     /// invariant: constant after round 0 under the p2p data plane.
     pub driver_data_bytes: f64,
+    /// cumulative seconds jobs sat in worker compute-pool queues before
+    /// a helper thread picked them up (slowest rank per phase; 0 for
+    /// serial pools)
+    pub queue_wait_secs: f64,
+    /// cumulative seconds the slowest rank spent blocked in mesh
+    /// `read_frame` calls during p2p allreduce (0 off the p2p plane)
+    pub mesh_stall_secs: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -96,6 +103,8 @@ impl Trace {
             net_bytes: net.bytes_total() as f64,
             net_data_bytes: net.data_bytes as f64,
             driver_data_bytes: net.driver_data_bytes as f64,
+            queue_wait_secs: net.queue_wait_secs,
+            mesh_stall_secs: net.mesh_stall_secs,
             f,
             grad_norm,
             auprc,
@@ -142,131 +151,71 @@ impl Trace {
     /// Rust's shortest-roundtrip `Display`, so parsing the CSV back
     /// recovers the exact values.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "iter,comm_passes,sim_secs,sim_compute_secs,sim_comm_secs,wall_secs,\
-             meas_phase_secs,meas_compute_secs,meas_reduce_secs,net_bytes,\
-             net_data_bytes,driver_data_bytes,f,grad_norm,auprc\n",
-        );
+        let mut out = String::new();
+        for (j, (name, _)) in COLUMNS.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(name);
+        }
+        out.push('\n');
         for r in &self.records {
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
-                r.iter,
-                r.comm_passes,
-                r.sim_secs,
-                r.sim_compute_secs,
-                r.sim_comm_secs,
-                r.wall_secs,
-                r.meas_phase_secs,
-                r.meas_compute_secs,
-                r.meas_reduce_secs,
-                r.net_bytes,
-                r.net_data_bytes,
-                r.driver_data_bytes,
-                r.f,
-                r.grad_norm,
-                r.auprc
-            ));
+            for (j, (_, get)) in COLUMNS.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&get(r).to_string());
+            }
+            out.push('\n');
         }
         out
     }
 
     /// Serialize to JSON (written next to bench outputs so figures can
-    /// be re-plotted without re-running).
+    /// be re-plotted without re-running). Column keys and order come
+    /// from the same [`COLUMNS`] schema as the CSV header.
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("method", Json::Str(self.method.clone())),
             ("dataset", Json::Str(self.dataset.clone())),
             ("nodes", Json::Num(self.nodes as f64)),
-            (
-                "iter",
-                Json::Arr(
-                    self.records
-                        .iter()
-                        .map(|r| Json::Num(r.iter as f64))
-                        .collect(),
-                ),
-            ),
-            (
-                "comm_passes",
-                arr_f64(&self.records.iter().map(|r| r.comm_passes).collect::<Vec<_>>()),
-            ),
-            (
-                "sim_secs",
-                arr_f64(&self.records.iter().map(|r| r.sim_secs).collect::<Vec<_>>()),
-            ),
-            (
-                "wall_secs",
-                arr_f64(&self.records.iter().map(|r| r.wall_secs).collect::<Vec<_>>()),
-            ),
-            (
-                "meas_phase_secs",
-                arr_f64(
-                    &self
-                        .records
-                        .iter()
-                        .map(|r| r.meas_phase_secs)
-                        .collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "meas_compute_secs",
-                arr_f64(
-                    &self
-                        .records
-                        .iter()
-                        .map(|r| r.meas_compute_secs)
-                        .collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "meas_reduce_secs",
-                arr_f64(
-                    &self
-                        .records
-                        .iter()
-                        .map(|r| r.meas_reduce_secs)
-                        .collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "net_bytes",
-                arr_f64(&self.records.iter().map(|r| r.net_bytes).collect::<Vec<_>>()),
-            ),
-            (
-                "net_data_bytes",
-                arr_f64(
-                    &self
-                        .records
-                        .iter()
-                        .map(|r| r.net_data_bytes)
-                        .collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "driver_data_bytes",
-                arr_f64(
-                    &self
-                        .records
-                        .iter()
-                        .map(|r| r.driver_data_bytes)
-                        .collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "f",
-                arr_f64(&self.records.iter().map(|r| r.f).collect::<Vec<_>>()),
-            ),
-            (
-                "grad_norm",
-                arr_f64(&self.records.iter().map(|r| r.grad_norm).collect::<Vec<_>>()),
-            ),
-            (
-                "auprc",
-                arr_f64(&self.records.iter().map(|r| r.auprc).collect::<Vec<_>>()),
-            ),
-        ])
+        ];
+        for (name, get) in COLUMNS {
+            fields.push((
+                name,
+                arr_f64(&self.records.iter().map(get).collect::<Vec<_>>()),
+            ));
+        }
+        obj(fields)
     }
 }
+
+/// The single column schema behind every trace serialization: name and
+/// accessor, in emission order. `to_csv` derives its header and rows
+/// from this table and `to_json` its per-column keys, so the two
+/// formats cannot drift (pinned by `csv_header_matches_json_keys`).
+/// Integral columns (`iter`, byte counts) serialize losslessly — f64
+/// holds every value they take exactly, and `Display` prints whole
+/// numbers without a fraction.
+pub const COLUMNS: &[(&str, fn(&IterRecord) -> f64)] = &[
+    ("iter", |r| r.iter as f64),
+    ("comm_passes", |r| r.comm_passes),
+    ("sim_secs", |r| r.sim_secs),
+    ("sim_compute_secs", |r| r.sim_compute_secs),
+    ("sim_comm_secs", |r| r.sim_comm_secs),
+    ("wall_secs", |r| r.wall_secs),
+    ("meas_phase_secs", |r| r.meas_phase_secs),
+    ("meas_compute_secs", |r| r.meas_compute_secs),
+    ("meas_reduce_secs", |r| r.meas_reduce_secs),
+    ("net_bytes", |r| r.net_bytes),
+    ("net_data_bytes", |r| r.net_data_bytes),
+    ("driver_data_bytes", |r| r.driver_data_bytes),
+    ("queue_wait_secs", |r| r.queue_wait_secs),
+    ("mesh_stall_secs", |r| r.mesh_stall_secs),
+    ("f", |r| r.f),
+    ("grad_norm", |r| r.grad_norm),
+    ("auprc", |r| r.auprc),
+];
 
 #[cfg(test)]
 mod tests {
@@ -286,6 +235,8 @@ mod tests {
             net.bytes_rx += 1000;
             net.data_bytes += 300;
             net.driver_data_bytes += 40;
+            net.queue_wait_secs += 0.002;
+            net.mesh_stall_secs += 0.001;
             t.push(
                 i,
                 &clock,
@@ -322,6 +273,8 @@ mod tests {
         assert_eq!(t.records[4].driver_data_bytes, 200.0);
         assert_eq!(t.records[0].driver_data_bytes, 40.0);
         assert_eq!(t.records[4].meas_reduce_secs, 0.0);
+        assert!((t.records[4].queue_wait_secs - 0.01).abs() < 1e-12);
+        assert!((t.records[4].mesh_stall_secs - 0.005).abs() < 1e-12);
     }
 
     #[test]
@@ -379,15 +332,38 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 15);
+        assert_eq!(lines[0].split(',').count(), 17);
         assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
+        assert!(lines[0].contains(",queue_wait_secs,mesh_stall_secs,f,"));
         assert!(lines[0].contains(",meas_compute_secs,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 15, "{line}");
+            assert_eq!(line.split(',').count(), 17, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(12).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(14).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
+    }
+
+    #[test]
+    fn csv_header_matches_json_keys() {
+        // the single-schema guarantee: CSV header names and JSON column
+        // keys are the same strings in the same order
+        let t = sample_trace();
+        let csv = t.to_csv();
+        let csv_header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+        let json = t.to_json().pretty();
+        let parsed = crate::util::json::parse(&json).unwrap();
+        for (name, _) in COLUMNS {
+            assert!(
+                parsed.get(name).and_then(|v| v.as_arr()).is_some(),
+                "JSON missing column {name}"
+            );
+        }
+        let schema_names: Vec<&str> = COLUMNS.iter().map(|(n, _)| *n).collect();
+        assert_eq!(csv_header, schema_names);
+        // integral columns survive the f64 accessors losslessly
+        let row1: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row1[0], "0", "iter prints as an integer");
     }
 
     #[test]

@@ -245,6 +245,7 @@ pub fn exec(
     st: &mut WorkerState,
     cmd: &Command,
 ) -> Result<Reply, String> {
+    let _span = crate::metrics::telemetry::SpanGuard::open_with(|| format!("cmd:{}", cmd.name()));
     match cmd {
         Command::Reset => {
             st.reset();
@@ -414,6 +415,11 @@ pub fn exec(
         Command::TestAuprc { .. } => Err(
             "TestAuprc is executed by the transport (it owns the held-out set), \
              not by the shard executor"
+                .to_string(),
+        ),
+        Command::FetchTelemetry => Err(
+            "FetchTelemetry is executed by the transport (telemetry rings are \
+             process-global), not by the shard executor"
                 .to_string(),
         ),
     }

@@ -17,7 +17,7 @@ use crate::objective::ShardCompute;
 use super::endpoint::{self, exec, WorkerState};
 use super::{
     parallel_indexed, Command, CombineOutput, CombineSpec, Measured, PhaseOutput,
-    Topology, Transport,
+    Reply, Topology, Transport,
 };
 
 /// P in-process workers plus their per-rank session state (and, when
@@ -75,6 +75,13 @@ impl Transport for InProc {
                 Command::TestAuprc { w } => {
                     (endpoint::eval_test_auprc(self.test.as_ref(), &st, w), 0.0)
                 }
+                // in-process, every "rank" shares the driver's rings —
+                // the driver drains them with its own local collect, so
+                // the per-rank reply carries nothing
+                Command::FetchTelemetry => (
+                    Ok(Reply::Telemetry { spans: Vec::new(), dropped: 0, units: 0.0 }),
+                    0.0,
+                ),
                 // only shard-compute kernels report time, keeping
                 // `meas_compute_secs` a pure measure of the engine's
                 // shard sweeps (no bookkeeping, no instrumentation)
@@ -95,11 +102,19 @@ impl Transport for InProc {
             // BSP: the phase is as slow as its slowest rank
             compute_secs = compute_secs.max(secs);
         }
+        // same BSP convention for the pool queue-wait: the phase waits
+        // on its slowest rank's backlog (the counters drain per phase)
+        let queue_wait_secs = self
+            .workers
+            .iter()
+            .map(|w| w.take_queue_wait_ns() as f64 * 1e-9)
+            .fold(0.0f64, f64::max);
         Ok(PhaseOutput {
             replies,
             stats: Measured {
                 phase_secs: t0.elapsed().as_secs_f64(),
                 compute_secs,
+                queue_wait_secs,
                 ..Measured::default()
             },
         })

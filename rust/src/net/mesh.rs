@@ -59,6 +59,10 @@ pub struct MeshStats {
     pub rx: u64,
     /// wall-clock seconds executing the schedule
     pub secs: f64,
+    /// seconds of `secs` spent blocked inside receive frames — waiting
+    /// on a peer that hasn't sent yet (straggler skew made visible; the
+    /// `mesh_stall_secs` trace column)
+    pub stall_secs: f64,
 }
 
 impl MeshStats {
@@ -69,6 +73,7 @@ impl MeshStats {
         self.tx += other.tx;
         self.rx += other.rx;
         self.secs += other.secs;
+        self.stall_secs += other.stall_secs;
     }
 }
 
@@ -179,9 +184,11 @@ impl Mesh {
                 sched.rank, self.rank
             ));
         }
+        let mut span = crate::metrics::telemetry::SpanGuard::open("mesh:allreduce");
         let mut tx = 0u64;
         let mut rx = 0u64;
         let mut secs = 0.0f64;
+        let mut stall_secs = 0.0f64;
         // reused across receive ops: payload bytes land here, then fold
         // straight into `buf` — no per-op vector allocations on the
         // path whose wall-clock MeshStats reports
@@ -239,7 +246,9 @@ impl Mesh {
                             })?;
                     }
                     MeshOp::RecvAccum { from, lo, hi } => {
+                        let tr = Instant::now();
                         read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        stall_secs += tr.elapsed().as_secs_f64();
                         rx += (4 + 8 * (hi - lo)) as u64;
                         // elementwise adds in index order — the same
                         // per-element operation linalg::accum applies,
@@ -253,7 +262,9 @@ impl Mesh {
                         }
                     }
                     MeshOp::RecvCopy { from, lo, hi } => {
+                        let tr = Instant::now();
                         read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        stall_secs += tr.elapsed().as_secs_f64();
                         rx += (4 + 8 * (hi - lo)) as u64;
                         for (o, c) in
                             buf[lo..hi].iter_mut().zip(scratch.chunks_exact(8))
@@ -277,7 +288,8 @@ impl Mesh {
             Ok(())
         });
         result?;
-        Ok(MeshStats { tx, rx, secs })
+        span.bytes(tx + rx);
+        Ok(MeshStats { tx, rx, secs, stall_secs })
     }
 
     fn peer(&self, rank: usize) -> Result<&TcpStream, String> {

@@ -286,6 +286,14 @@ pub enum Command {
     /// signal). Executed by the transport (which owns the test shard),
     /// not by [`endpoint::exec`].
     TestAuprc { w: VecRef },
+    /// Flush the worker process's telemetry rings: every rank drains
+    /// its per-thread span buffers and replies them (plus the dropped
+    /// counter). Issued only at trace boundaries and before Shutdown —
+    /// control traffic by construction (zero data bytes), so the
+    /// scalar-only-driver invariant holds with telemetry enabled.
+    /// Executed by the transport (telemetry state is process-global),
+    /// not by [`endpoint::exec`].
+    FetchTelemetry,
 }
 
 impl Command {
@@ -302,7 +310,30 @@ impl Command {
                 | Command::SetReg { .. }
                 | Command::FetchReg { .. }
                 | Command::TestAuprc { .. }
+                | Command::FetchTelemetry
         )
+    }
+
+    /// Stable lowercase label — the telemetry span name family for
+    /// driver phase issue/await and worker command exec spans.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Command::Reset => "reset",
+            Command::Grad { .. } => "grad",
+            Command::Dirs { .. } => "dirs",
+            Command::Linesearch { .. } => "linesearch",
+            Command::InnerSolve(_) => "inner_solve",
+            Command::Warmstart { .. } => "warmstart",
+            Command::Hvp { .. } => "hvp",
+            Command::LossEval { .. } => "loss_eval",
+            Command::LocalSolve(_) => "local_solve",
+            Command::DualUpdate(_) => "dual_update",
+            Command::VecOps { .. } => "vec_ops",
+            Command::SetReg { .. } => "set_reg",
+            Command::FetchReg { .. } => "fetch_reg",
+            Command::TestAuprc { .. } => "test_auprc",
+            Command::FetchTelemetry => "fetch_telemetry",
+        }
     }
 }
 
@@ -425,6 +456,14 @@ pub enum Reply {
     /// Replicated dot products (`VecOps` bookkeeping phases) — scalar
     /// aggregates, identical on every rank.
     Dots { vals: Vec<f64>, units: f64 },
+    /// The rank's drained telemetry rings ([`Command::FetchTelemetry`]):
+    /// recorded spans plus the count of spans lost to ring overflow.
+    /// Instrumentation, never model data — zero data bytes on the wire.
+    Telemetry {
+        spans: Vec<crate::metrics::telemetry::Span>,
+        dropped: u64,
+        units: f64,
+    },
 }
 
 impl Reply {
@@ -437,7 +476,8 @@ impl Reply {
             | Reply::Warm { units, .. }
             | Reply::Vector { units, .. }
             | Reply::Scalar { units, .. }
-            | Reply::Dots { units, .. } => *units,
+            | Reply::Dots { units, .. }
+            | Reply::Telemetry { units, .. } => *units,
         }
     }
 }
@@ -474,6 +514,10 @@ pub struct WorkerSetup {
     /// irrelevant to results — the engine's fixed-order block merge
     /// makes every T produce identical bits.
     pub threads: usize,
+    /// enable span recording in the worker process (the driver's
+    /// `--telemetry-out`; off by default — recording is opt-in and the
+    /// disabled path is allocation-free)
+    pub telemetry: bool,
 }
 
 impl WorkerSetup {
@@ -542,6 +586,15 @@ pub struct Measured {
     /// weights — are control traffic and excluded. The scalar-only
     /// driver invariant: 0 after round 0 under `data_plane = "p2p"`.
     pub driver_data_bytes: u64,
+    /// seconds a rank's kernel blocks sat queued in the compute pool
+    /// before a thread picked them up (max across ranks per phase,
+    /// summed over phases — the pool-pressure counterpart of
+    /// `compute_secs`; 0 on the serial pool)
+    pub queue_wait_secs: f64,
+    /// seconds the slowest rank spent blocked in mesh receives during
+    /// p2p combine schedules (a subset of `reduce_secs` wall time;
+    /// 0 under star and in-process)
+    pub mesh_stall_secs: f64,
 }
 
 impl Measured {
@@ -554,6 +607,8 @@ impl Measured {
         self.reduce_bytes += other.reduce_bytes;
         self.data_bytes += other.data_bytes;
         self.driver_data_bytes += other.driver_data_bytes;
+        self.queue_wait_secs += other.queue_wait_secs;
+        self.mesh_stall_secs += other.mesh_stall_secs;
     }
 
     /// Total control-plane (driver-link) traffic.
@@ -677,6 +732,15 @@ pub trait Transport: Send + Sync {
         None
     }
 
+    /// Per-rank clock rebase offsets in nanoseconds: the driver adds
+    /// `offset[rank]` to a rank's span timestamps to place them on its
+    /// own monotonic timeline. In-process workers share the driver's
+    /// clock (all zeros); the TCP driver samples each worker's clock
+    /// from the `Ready` handshake.
+    fn clock_offsets(&self) -> Vec<i64> {
+        vec![0; self.p()]
+    }
+
     /// Transport label for traces and error messages.
     fn name(&self) -> &'static str;
 }
@@ -758,6 +822,8 @@ mod tests {
             reduce_bytes: 16,
             data_bytes: 100,
             driver_data_bytes: 8,
+            queue_wait_secs: 0.125,
+            mesh_stall_secs: 0.0625,
         };
         a.merge(&Measured {
             phase_secs: 2.0,
@@ -768,6 +834,8 @@ mod tests {
             reduce_bytes: 4,
             data_bytes: 50,
             driver_data_bytes: 16,
+            queue_wait_secs: 0.375,
+            mesh_stall_secs: 0.1875,
         });
         assert_eq!(a.phase_secs, 3.0);
         assert_eq!(a.compute_secs, 1.0);
@@ -775,6 +843,8 @@ mod tests {
         assert_eq!(a.reduce_bytes, 20);
         assert_eq!(a.data_bytes, 150);
         assert_eq!(a.driver_data_bytes, 24);
+        assert_eq!(a.queue_wait_secs, 0.5);
+        assert_eq!(a.mesh_stall_secs, 0.25);
     }
 
     #[test]
@@ -804,6 +874,7 @@ mod tests {
             p2p_bind: String::new(),
             p2p_port_base: 0,
             threads: 1,
+            telemetry: false,
         };
         assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
         setup.p2p_bind = "10.0.0.1".into();
@@ -842,6 +913,7 @@ mod tests {
         assert!(!Command::SetReg { reg: 0, v: vec![] }.is_compute());
         assert!(!Command::FetchReg { reg: 0 }.is_compute());
         assert!(!Command::TestAuprc { w: VecRef::Reg(0) }.is_compute());
+        assert!(!Command::FetchTelemetry.is_compute());
     }
 
     #[test]

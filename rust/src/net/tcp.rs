@@ -55,6 +55,7 @@ use super::{
     Command, CombineOutput, CombineSpec, DataPlane, Measured, PhaseOutput, Reply,
     Topology, Transport, WorkerSetup,
 };
+use crate::metrics::telemetry;
 
 /// One worker connection (split stream for buffered reads and writes).
 struct Conn {
@@ -93,6 +94,9 @@ pub struct TcpDriver {
     /// per-rank example counts from the `Ready` handshake (static
     /// shard sizes — the driver computes combine weights from these)
     ns: Vec<usize>,
+    /// per-rank telemetry clock offsets (driver clock − worker clock,
+    /// sampled at `Ready` receipt; see `Transport::clock_offsets`)
+    offsets: Vec<i64>,
     plane: DataPlane,
 }
 
@@ -192,9 +196,14 @@ impl TcpDriver {
         let mut nnz = 0usize;
         let mut ns = Vec::with_capacity(p);
         let mut data_ports = Vec::with_capacity(p);
+        let mut offsets = Vec::with_capacity(p);
         for (rank, conn) in conns.iter_mut().enumerate() {
             match conn.recv() {
-                Ok((Msg::Ready { m: wm, n: wn, nnz: wnnz, data_port }, _)) => {
+                Ok((Msg::Ready { m: wm, n: wn, nnz: wnnz, data_port, now_ns }, _)) => {
+                    // rebase: worker t maps to driver t + offset. The
+                    // one-way frame latency biases this by < the RTT —
+                    // fine for timeline alignment, not for clock sync.
+                    offsets.push(telemetry::now_ns() as i64 - now_ns as i64);
                     if rank == 0 {
                         m = wm;
                     } else if wm != m {
@@ -263,6 +272,7 @@ impl TcpDriver {
             m,
             nnz,
             ns,
+            offsets,
             plane: setup.data_plane,
         })
     }
@@ -349,9 +359,11 @@ impl Transport for TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reply { reply, secs } => {
+                Msg::Reply { reply, secs, queue_ns } => {
                     // BSP: the phase costs its slowest rank's kernel
                     stats.compute_secs = stats.compute_secs.max(secs);
+                    stats.queue_wait_secs =
+                        stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
                     replies.push(reply);
                 }
                 Msg::Abort { msg } => {
@@ -377,6 +389,10 @@ impl Transport for TcpDriver {
             DataPlane::Star => self.star_combine_phase(cmd, topo, spec),
             DataPlane::P2p => self.p2p_combine_phase(cmd, topo, spec),
         }
+    }
+
+    fn clock_offsets(&self) -> Vec<i64> {
+        self.offsets.clone()
     }
 
     fn name(&self) -> &'static str {
@@ -432,8 +448,10 @@ impl TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { mut reply, compute_secs, .. } => {
+                Msg::Reduced { mut reply, compute_secs, queue_ns, .. } => {
                     stats.compute_secs = stats.compute_secs.max(compute_secs);
+                    stats.queue_wait_secs =
+                        stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
                     let vecs = take_combine_vectors(&mut reply)?;
                     // the gathered part payloads ARE the star data plane
                     stats.reduce_bytes +=
@@ -508,10 +526,23 @@ impl TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { reply, data_tx, data_rx: _, secs, compute_secs, dots: d } => {
+                Msg::Reduced {
+                    reply,
+                    data_tx,
+                    data_rx: _,
+                    secs,
+                    compute_secs,
+                    queue_ns,
+                    stall_ns,
+                    dots: d,
+                } => {
                     // mesh traffic is counted once, at each sender
                     stats.data_bytes += data_tx;
                     stats.compute_secs = stats.compute_secs.max(compute_secs);
+                    stats.queue_wait_secs =
+                        stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
+                    stats.mesh_stall_secs =
+                        stats.mesh_stall_secs.max(stall_ns as f64 * 1e-9);
                     mesh_secs = mesh_secs.max(secs);
                     if rank == 0 {
                         dots = d;

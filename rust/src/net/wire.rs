@@ -30,6 +30,8 @@ use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
 
+use crate::metrics::telemetry::Span as TelemetrySpan;
+
 use super::{
     Combine, CombineSpec, Command, DataPlane, DualUpdateSpec, InnerSolveSpec,
     LocalSolveSpec, Reply, Topology, VecOp, VecRef, WorkerSetup,
@@ -66,7 +68,15 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// `Reduced` report the rank's measured compute seconds (the
 /// `meas_compute_secs` trace column), and the `TestAuprc` command
 /// (worker-resident held-out scoring, scalar reply) landed.
-pub const PROTO_VERSION: u32 = 5;
+///
+/// v6: the telemetry plane — `Setup` carries the span-recording flag,
+/// `Ready` reports the worker's monotonic clock reading (the driver
+/// derives per-rank clock offsets for the merged timeline), `Reply`
+/// and `Reduced` carry the rank's pool queue-wait nanoseconds (and,
+/// for `Reduced`, mesh stall nanoseconds), and the `FetchTelemetry`
+/// command / `Telemetry` reply (span-buffer flush, control plane —
+/// zero data bytes) landed.
+pub const PROTO_VERSION: u32 = 6;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -353,14 +363,19 @@ pub enum Msg {
     Setup(WorkerSetup),
     Shutdown,
     /// `data_port` is the worker's bound data-plane listener port
-    /// (0 when the star plane is in effect).
-    Ready { m: usize, n: usize, nnz: usize, data_port: u16 },
+    /// (0 when the star plane is in effect). `now_ns` is the worker's
+    /// telemetry clock reading at send time — the driver pairs it with
+    /// its own clock at receipt to derive the rank's clock offset for
+    /// the merged timeline.
+    Ready { m: usize, n: usize, nnz: usize, data_port: u16, now_ns: u64 },
     Abort { msg: String },
     Cmd(Command),
     /// Reply to `Cmd`. `secs` is the rank's measured wall-clock inside
     /// the shard-compute kernel (the `meas_compute_secs` accounting —
-    /// the driver takes the max across ranks per phase).
-    Reply { reply: Reply, secs: f64 },
+    /// the driver takes the max across ranks per phase); `queue_ns` is
+    /// the pool queue wait accumulated by the rank's kernel blocks
+    /// (the `queue_wait_secs` trace column).
+    Reply { reply: Reply, secs: f64, queue_ns: u64 },
     /// Every rank's advertised data-plane address, rank-indexed; the
     /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
     Mesh { addrs: Vec<String> },
@@ -387,6 +402,10 @@ pub enum Msg {
         /// the rank's measured compute seconds inside the fused phase
         /// (kernel time only — mesh time is `secs`)
         compute_secs: f64,
+        /// pool queue wait accumulated by the rank's kernel blocks
+        queue_ns: u64,
+        /// wall time the rank spent blocked in mesh receives
+        stall_ns: u64,
         dots: Vec<f64>,
     },
     /// Star-plane combine completion: the driver's plan sums, shipped
@@ -422,6 +441,7 @@ mod tag {
     pub const CMD_FETCH_REG: u8 = 22;
     pub const FINISHED: u8 = 23;
     pub const CMD_TEST_AUPRC: u8 = 24;
+    pub const CMD_FETCH_TELEMETRY: u8 = 25;
     pub const REPLY_ACK: u8 = 30;
     pub const REPLY_GRAD: u8 = 31;
     pub const REPLY_PAIR: u8 = 32;
@@ -430,6 +450,7 @@ mod tag {
     pub const REPLY_VECTOR: u8 = 35;
     pub const REPLY_SCALAR: u8 = 36;
     pub const REPLY_DOTS: u8 = 37;
+    pub const REPLY_TELEMETRY: u8 = 38;
     // LocalSolve payload sub-tags
     pub const SOLVE_ADMM_PROX: u8 = 1;
     pub const SOLVE_COCOA_SDCA: u8 = 2;
@@ -627,15 +648,17 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.str(&s.p2p_bind);
             e.u32(u32::from(s.p2p_port_base));
             e.usize(s.threads);
+            e.bool(s.telemetry);
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
-        Msg::Ready { m, n, nnz, data_port } => {
+        Msg::Ready { m, n, nnz, data_port, now_ns } => {
             e.u8(tag::READY);
             e.u32(PROTO_VERSION);
             e.usize(*m);
             e.usize(*n);
             e.usize(*nnz);
             e.u32(u32::from(*data_port));
+            e.u64(*now_ns);
         }
         Msg::Abort { msg } => {
             e.u8(tag::ABORT);
@@ -655,12 +678,23 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             enc_combine(&mut e, spec);
             enc_cmd(&mut e, cmd);
         }
-        Msg::Reduced { reply, data_tx, data_rx, secs, compute_secs, dots } => {
+        Msg::Reduced {
+            reply,
+            data_tx,
+            data_rx,
+            secs,
+            compute_secs,
+            queue_ns,
+            stall_ns,
+            dots,
+        } => {
             e.u8(tag::REDUCED);
             e.u64(*data_tx);
             e.u64(*data_rx);
             e.f64(*secs);
             e.f64(*compute_secs);
+            e.u64(*queue_ns);
+            e.u64(*stall_ns);
             e.vec_f64(dots);
             enc_reply(&mut e, reply);
         }
@@ -676,9 +710,10 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.vec_f64(dots);
         }
         Msg::Cmd(cmd) => enc_cmd(&mut e, cmd),
-        Msg::Reply { reply, secs } => {
+        Msg::Reply { reply, secs, queue_ns } => {
             enc_reply(&mut e, reply);
             e.f64(*secs);
+            e.u64(*queue_ns);
         }
     }
     e.buf
@@ -821,6 +856,7 @@ fn enc_cmd(e: &mut Enc, cmd: &Command) {
             e.u8(tag::CMD_TEST_AUPRC);
             enc_vecref(e, w);
         }
+        Command::FetchTelemetry => e.u8(tag::CMD_FETCH_TELEMETRY),
     }
 }
 
@@ -871,6 +907,20 @@ fn enc_reply(e: &mut Enc, reply: &Reply) {
             e.vec_f64(vals);
             e.f64(*units);
         }
+        Reply::Telemetry { spans, dropped, units } => {
+            e.u8(tag::REPLY_TELEMETRY);
+            e.u64(spans.len() as u64);
+            for s in spans {
+                e.str(&s.name);
+                e.u32(s.rank);
+                e.u32(s.thread);
+                e.u64(s.t_start_ns);
+                e.u64(s.t_end_ns);
+                e.u64(s.bytes);
+            }
+            e.u64(*dropped);
+            e.f64(*units);
+        }
     }
 }
 
@@ -902,6 +952,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             p2p_bind: d.str()?,
             p2p_port_base: port_from(d.u32()?)?,
             threads: d.usize()?,
+            telemetry: d.bool()?,
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -912,6 +963,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             n: d.usize()?,
             nnz: d.usize()?,
             data_port: port_from(d.u32()?)?,
+            now_ns: d.u64()?,
         },
         tag::ABORT => Msg::Abort { msg: d.str()? },
         tag::MESH => {
@@ -940,6 +992,8 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let data_rx = d.u64()?;
             let secs = d.f64()?;
             let compute_secs = d.f64()?;
+            let queue_ns = d.u64()?;
+            let stall_ns = d.u64()?;
             let dots = d.vec_f64()?;
             let rt = d.u8()?;
             Msg::Reduced {
@@ -948,6 +1002,8 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 data_rx,
                 secs,
                 compute_secs,
+                queue_ns,
+                stall_ns,
                 dots,
             }
         }
@@ -964,13 +1020,14 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             Msg::Finish { sums }
         }
         tag::FINISHED => Msg::Finished { dots: d.vec_f64()? },
-        t @ (tag::CMD_RESET..=tag::CMD_FETCH_REG | tag::CMD_TEST_AUPRC) => {
-            Msg::Cmd(dec_cmd(&mut d, t)?)
-        }
-        t @ tag::REPLY_ACK..=tag::REPLY_DOTS => {
+        t @ (tag::CMD_RESET..=tag::CMD_FETCH_REG
+        | tag::CMD_TEST_AUPRC
+        | tag::CMD_FETCH_TELEMETRY) => Msg::Cmd(dec_cmd(&mut d, t)?),
+        t @ tag::REPLY_ACK..=tag::REPLY_TELEMETRY => {
             let reply = dec_reply(&mut d, t)?;
             let secs = d.f64()?;
-            Msg::Reply { reply, secs }
+            let queue_ns = d.u64()?;
+            Msg::Reply { reply, secs, queue_ns }
         }
         other => return Err(format!("unknown message tag {other}")),
     };
@@ -1079,6 +1136,7 @@ fn dec_cmd(d: &mut Dec, t: u8) -> Result<Command, String> {
         tag::CMD_SET_REG => Command::SetReg { reg: d.u32()?, v: d.vec_f64()? },
         tag::CMD_FETCH_REG => Command::FetchReg { reg: d.u32()? },
         tag::CMD_TEST_AUPRC => Command::TestAuprc { w: dec_vecref(d)? },
+        tag::CMD_FETCH_TELEMETRY => Command::FetchTelemetry,
         other => return Err(format!("unknown command tag {other}")),
     })
 }
@@ -1120,6 +1178,29 @@ fn dec_reply(d: &mut Dec, t: u8) -> Result<Reply, String> {
             vals: d.vec_f64()?,
             units: d.f64()?,
         },
+        tag::REPLY_TELEMETRY => {
+            let len = d.u64()? as usize;
+            // each span costs at least its name length prefix + fixed fields
+            if len.saturating_mul(36) > d.buf.len() - d.pos {
+                return Err(format!("truncated span list of claimed length {len}"));
+            }
+            let mut spans = Vec::with_capacity(len);
+            for _ in 0..len {
+                spans.push(TelemetrySpan {
+                    name: std::borrow::Cow::Owned(d.str()?),
+                    rank: d.u32()?,
+                    thread: d.u32()?,
+                    t_start_ns: d.u64()?,
+                    t_end_ns: d.u64()?,
+                    bytes: d.u64()?,
+                });
+            }
+            Reply::Telemetry {
+                spans,
+                dropped: d.u64()?,
+                units: d.f64()?,
+            }
+        }
         other => return Err(format!("unknown reply tag {other}")),
     })
 }
@@ -1146,7 +1227,8 @@ pub fn cmd_data_bytes(cmd: &Command) -> u64 {
         | Command::Linesearch { .. }
         | Command::Warmstart { .. }
         | Command::VecOps { .. }
-        | Command::FetchReg { .. } => 0,
+        | Command::FetchReg { .. }
+        | Command::FetchTelemetry => 0,
         Command::Grad { w, .. }
         | Command::LossEval { w, .. }
         | Command::TestAuprc { w } => vecref_bytes(w),
@@ -1173,11 +1255,13 @@ pub fn cmd_data_bytes(cmd: &Command) -> u64 {
 }
 
 /// f64 data-vector payload bytes a reply carries. The `Dots` reply is
-/// a scalar aggregate (replicated dot products) — control traffic.
+/// a scalar aggregate (replicated dot products) — control traffic,
+/// and so is the `Telemetry` span flush (instrumentation, not model
+/// data — the scalar-driver invariant is unaffected by telemetry).
 pub fn reply_data_bytes(reply: &Reply) -> u64 {
     match reply {
         Reply::Ack { .. } | Reply::Pair { .. } | Reply::Scalar { .. } => 0,
-        Reply::Dots { .. } => 0,
+        Reply::Dots { .. } | Reply::Telemetry { .. } => 0,
         Reply::Grad { grad, .. } => 8 * grad.len() as u64,
         Reply::Solve { w, .. } => 8 * w.len() as u64,
         Reply::Warm { w, counts, .. } => 8 * (w.len() + counts.len()) as u64,
@@ -1237,7 +1321,13 @@ mod tests {
     #[test]
     fn every_variant_roundtrips() {
         roundtrip(Msg::Shutdown);
-        roundtrip(Msg::Ready { m: 10, n: 99, nnz: 1234, data_port: 40551 });
+        roundtrip(Msg::Ready {
+            m: 10,
+            n: 99,
+            nnz: 1234,
+            data_port: 40551,
+            now_ns: 987_654_321,
+        });
         roundtrip(Msg::Abort { msg: "boom ü".into() });
         roundtrip(Msg::Setup(WorkerSetup {
             rank: 3,
@@ -1255,6 +1345,7 @@ mod tests {
             p2p_bind: "127.0.0.1,10.0.0.2".into(),
             p2p_port_base: 9100,
             threads: 4,
+            telemetry: true,
         }));
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
@@ -1285,7 +1376,7 @@ mod tests {
             epochs: 5,
             seed: 7,
         }));
-        let reply = |reply: Reply, secs: f64| Msg::Reply { reply, secs };
+        let reply = |reply: Reply, secs: f64| Msg::Reply { reply, secs, queue_ns: 512 };
         roundtrip(reply(Reply::Ack { units: 12.0 }, 0.5));
         roundtrip(reply(
             Reply::Grad { loss: 3.5, grad: vec![1.0; 7], units: 2.0 },
@@ -1303,6 +1394,36 @@ mod tests {
         roundtrip(reply(Reply::Vector { v: vec![1.5, -2.5], units: 6.0 }, 0.0));
         roundtrip(reply(Reply::Scalar { v: 0.25, units: 0.0 }, 0.0));
         roundtrip(reply(Reply::Dots { vals: vec![0.5, -1.5], units: 0.0 }, 0.0));
+        roundtrip(Msg::Cmd(Command::FetchTelemetry));
+        // empty flush, a populated ring, and a full-ring flush with drops
+        roundtrip(reply(
+            Reply::Telemetry { spans: vec![], dropped: 0, units: 0.0 },
+            0.0,
+        ));
+        let span = |name: &str, t: u64| crate::metrics::telemetry::Span {
+            name: std::borrow::Cow::Owned(name.to_string()),
+            rank: 3,
+            thread: t as u32,
+            t_start_ns: t,
+            t_end_ns: t + 17,
+            bytes: t * 8,
+        };
+        roundtrip(reply(
+            Reply::Telemetry {
+                spans: vec![span("cmd:grad", 1), span("mesh:recv \"x\"\n", 2)],
+                dropped: 0,
+                units: 0.0,
+            },
+            0.0,
+        ));
+        roundtrip(reply(
+            Reply::Telemetry {
+                spans: (0..64).map(|i| span("k", i)).collect(),
+                dropped: 4096,
+                units: 0.0,
+            },
+            0.0,
+        ));
     }
 
     #[test]
@@ -1411,6 +1532,8 @@ mod tests {
             data_rx: 4321,
             secs: 0.015625,
             compute_secs: 0.0078125,
+            queue_ns: 2048,
+            stall_ns: 1024,
             dots: vec![0.5, -0.25],
         });
         roundtrip(Msg::Reduced {
@@ -1419,6 +1542,8 @@ mod tests {
             data_rx: 0,
             secs: 0.0,
             compute_secs: 0.0,
+            queue_ns: 0,
+            stall_ns: 0,
             dots: vec![],
         });
         roundtrip(Msg::Finish { sums: vec![] });
@@ -1469,6 +1594,7 @@ mod tests {
             msg_data_bytes(&Msg::Reply {
                 reply: Reply::Dots { vals: vec![1.0; 8], units: 0.0 },
                 secs: 0.25,
+                queue_ns: 99,
             }),
             0,
             "replicated dots (and compute seconds) are scalar aggregates"
@@ -1481,8 +1607,34 @@ mod tests {
                     units: 1.0,
                 },
                 secs: 0.0,
+                queue_ns: 0,
             }),
             64
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Cmd(Command::FetchTelemetry)),
+            0,
+            "telemetry flush requests are control traffic"
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Reply {
+                reply: Reply::Telemetry {
+                    spans: vec![crate::metrics::telemetry::Span {
+                        name: std::borrow::Cow::Borrowed("cmd:grad"),
+                        rank: 0,
+                        thread: 0,
+                        t_start_ns: 0,
+                        t_end_ns: 100,
+                        bytes: 1 << 20,
+                    }],
+                    dropped: 7,
+                    units: 0.0,
+                },
+                secs: 0.0,
+                queue_ns: 0,
+            }),
+            0,
+            "span flushes are control traffic — scalar-only driver holds"
         );
         assert_eq!(
             msg_data_bytes(&Msg::Cmd(Command::TestAuprc { w: VecRef::Reg(3) })),
@@ -1496,6 +1648,8 @@ mod tests {
                 data_rx: 99,
                 secs: 0.5,
                 compute_secs: 0.25,
+                queue_ns: 11,
+                stall_ns: 22,
                 dots: vec![1.0, 2.0],
             }),
             0,
@@ -1561,7 +1715,13 @@ mod tests {
 
     #[test]
     fn version_mismatch_rejected() {
-        let mut bytes = encode(&Msg::Ready { m: 1, n: 2, nnz: 3, data_port: 0 });
+        let mut bytes = encode(&Msg::Ready {
+            m: 1,
+            n: 2,
+            nnz: 3,
+            data_port: 0,
+            now_ns: 0,
+        });
         // version is the u32 right after the tag byte
         bytes[1..5].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
         let err = decode(&bytes).unwrap_err();

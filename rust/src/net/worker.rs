@@ -28,7 +28,8 @@ use super::endpoint::{
 use super::mesh::{Mesh, MeshStats};
 use super::topology::RankSchedule;
 use super::wire::{self, Msg};
-use super::{Command, DataPlane, Topology};
+use super::{Command, DataPlane, Reply, Topology};
+use crate::metrics::telemetry;
 
 /// The `--worker --connect host:port` self-exec handshake, shared by
 /// every binary that can be re-executed as a worker (see
@@ -126,9 +127,22 @@ pub fn serve(connect: &str) -> Result<(), String> {
         Ok(ctx) => ctx,
         Err(e) => return Err(abort(format!("build shard: {e}"), &mut w)),
     };
+    // telemetry is opt-in per run: the Setup frame carries the switch,
+    // and the Ready frame carries this process's monotonic clock sample
+    // so the driver can rebase our spans onto its own timeline
+    if setup.telemetry {
+        telemetry::set_rank(setup.rank);
+        telemetry::enable();
+    }
     let mut st = WorkerState::new(setup.rank, setup.p);
     send(
-        &Msg::Ready { m: shard.m(), n: shard.n(), nnz: shard.nnz(), data_port },
+        &Msg::Ready {
+            m: shard.m(),
+            n: shard.n(),
+            nnz: shard.nnz(),
+            data_port,
+            now_ns: telemetry::now_ns(),
+        },
         &mut w,
     )?;
 
@@ -181,6 +195,13 @@ pub fn serve(connect: &str) -> Result<(), String> {
                     Command::TestAuprc { w: wref } => {
                         (eval_test_auprc(test.as_ref(), &st, wref), 0.0)
                     }
+                    // the rings are process-global, so the transport
+                    // (not exec) drains them; flushing happens only at
+                    // trace boundaries, never inside the phase loop
+                    Command::FetchTelemetry => {
+                        let (spans, dropped) = telemetry::collect();
+                        (Ok(Reply::Telemetry { spans, dropped, units: 0.0 }), 0.0)
+                    }
                     _ if !cmd.is_compute() => {
                         (exec(shard.as_ref(), &mut st, &cmd), 0.0)
                     }
@@ -191,7 +212,10 @@ pub fn serve(connect: &str) -> Result<(), String> {
                     }
                 };
                 match result {
-                    Ok(reply) => send(&Msg::Reply { reply, secs }, &mut w)?,
+                    Ok(reply) => {
+                        let queue_ns = shard.take_queue_wait_ns();
+                        send(&Msg::Reply { reply, secs, queue_ns }, &mut w)?
+                    }
                     Err(e) => return Err(abort(e, &mut w)),
                 }
             }
@@ -251,6 +275,8 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 data_rx: stats.rx,
                                 secs: stats.secs,
                                 compute_secs,
+                                queue_ns: shard.take_queue_wait_ns(),
+                                stall_ns: (stats.stall_secs * 1e9) as u64,
                                 dots,
                             },
                             &mut w,
@@ -271,6 +297,8 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 data_rx: 0,
                                 secs: 0.0,
                                 compute_secs,
+                                queue_ns: shard.take_queue_wait_ns(),
+                                stall_ns: 0,
                                 dots: Vec::new(),
                             },
                             &mut w,

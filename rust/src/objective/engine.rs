@@ -33,12 +33,14 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::linalg::Csr;
 use crate::loss::Loss;
+use crate::metrics::telemetry::SpanGuard;
 
 /// Close a row block once it holds this many stored nonzeros (values +
 /// column indices ≈ 8 bytes/nnz → ~256 KiB per block). Small test
@@ -128,6 +130,10 @@ struct PoolState {
 struct PoolShared {
     state: Mutex<PoolState>,
     available: Condvar,
+    /// nanoseconds helper jobs sat queued before a thread picked them
+    /// up, accumulated since the last [`ComputePool::take_queue_wait_ns`]
+    /// (the `queue_wait_secs` trace column)
+    queue_wait_ns: AtomicU64,
 }
 
 /// A persistent worker pool executing index-addressed block jobs.
@@ -213,6 +219,7 @@ impl ComputePool {
                 shutdown: false,
             }),
             available: Condvar::new(),
+            queue_wait_ns: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(threads - 1);
         for _ in 0..threads - 1 {
@@ -249,6 +256,16 @@ impl ComputePool {
     /// Configured parallelism T.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Drain the accumulated helper-job queue-wait nanoseconds (the
+    /// time jobs sat in the pool queue before a thread claimed them).
+    /// Always 0 on the serial pool — nothing ever queues inline.
+    pub fn take_queue_wait_ns(&self) -> u64 {
+        match &self.shared {
+            Some(shared) => shared.queue_wait_ns.swap(0, Ordering::Relaxed),
+            None => 0,
+        }
     }
 
     /// Run `f(i)` for every `i in 0..n`, spread over the pool's threads
@@ -293,7 +310,14 @@ impl ComputePool {
             let mut state = shared.state.lock().unwrap();
             for _ in 0..helpers {
                 let run = run.clone();
+                let pool_shared = shared.clone();
+                let t_enqueue = Instant::now();
                 state.queue.push_back(Box::new(move || {
+                    pool_shared.queue_wait_ns.fetch_add(
+                        t_enqueue.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    let _span = SpanGuard::open("pool:job");
                     let _finish = FinishGuard(run.clone());
                     let outcome = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| loop {
@@ -313,6 +337,7 @@ impl ComputePool {
         }
         {
             let _wait = WaitGuard(run.as_ref());
+            let _span = SpanGuard::open("pool:run");
             // the caller is the T-th worker
             loop {
                 let i = run.next.fetch_add(1, Ordering::Relaxed);
@@ -503,6 +528,7 @@ impl LinesearchPlan {
     /// (φ(t), φ'(t)) over the packed buffer — one trial step of the
     /// search, reusing the gathered blocks.
     pub fn eval(&self, loss: Loss, t: f64) -> (f64, f64) {
+        let _span = SpanGuard::open("linesearch:trial");
         let nb = self.blocks.len();
         let partials = self.pool.map(nb, |b| {
             let rows = &self.blocks[b];
@@ -543,6 +569,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn queue_wait_accumulates_and_drains() {
+        // serial pool: nothing ever queues
+        let serial = ComputePool::serial();
+        serial.run(8, |_| {});
+        assert_eq!(serial.take_queue_wait_ns(), 0);
+        // threaded pool: jobs were enqueued, so some (possibly tiny)
+        // wait accumulated, and take() drains it to zero
+        let pool = ComputePool::new(3);
+        pool.run(64, |i| {
+            std::hint::black_box(i * i);
+        });
+        let _ = pool.take_queue_wait_ns();
+        assert_eq!(pool.take_queue_wait_ns(), 0, "take drains the counter");
     }
 
     #[test]

@@ -99,6 +99,13 @@ pub trait ShardCompute: Send + Sync {
 
     /// Per-feature presence counts (TERA's per-feature averaging).
     fn feature_counts(&self) -> Vec<u32>;
+
+    /// Drain the nanoseconds this shard's kernel blocks sat queued in
+    /// the compute pool since the last call (the `queue_wait_secs`
+    /// trace column). 0 for backends without a block pool.
+    fn take_queue_wait_ns(&self) -> u64 {
+        0
+    }
 }
 
 /// Native CSR backend, pre-split at construction into cache-sized
@@ -345,6 +352,10 @@ impl ShardCompute for SparseShard {
 
     fn feature_counts(&self) -> Vec<u32> {
         self.data.x.feature_counts()
+    }
+
+    fn take_queue_wait_ns(&self) -> u64 {
+        self.pool.take_queue_wait_ns()
     }
 }
 

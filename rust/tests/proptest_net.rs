@@ -154,6 +154,23 @@ fn draw_vec(rng: &mut Pcg64, len: usize) -> Vec<f64> {
         .collect()
 }
 
+fn draw_spans(rng: &mut Pcg64, n: usize) -> Vec<fadl::metrics::telemetry::Span> {
+    // names deliberately include separators, quotes, and non-ASCII to
+    // exercise the length-prefixed string encoding
+    const NAMES: &[&str] =
+        &["cmd:grad", "pool:run", "a\"b\\c", "mesh:allreduce", "Δphase", ""];
+    (0..n)
+        .map(|_| fadl::metrics::telemetry::Span {
+            name: std::borrow::Cow::Borrowed(NAMES[rng.below(NAMES.len())]),
+            rank: rng.below(1 << 16) as u32,
+            thread: rng.below(1 << 8) as u32,
+            t_start_ns: rng.next_u64(),
+            t_end_ns: rng.next_u64(),
+            bytes: rng.next_u64(),
+        })
+        .collect()
+}
+
 /// Frame a message, push it through the length-prefixed framing, and
 /// decode — the exact driver↔worker path minus the socket.
 fn wire_roundtrip(msg: &Msg) -> Msg {
@@ -194,7 +211,7 @@ fn draw_combine(rng: &mut Pcg64) -> CombineSpec {
 
 #[test]
 fn full_vocabulary_frames_roundtrip_bitwise() {
-    // every wire-v4 command frame, over random payload sizes *including
+    // every wire-v6 command frame, over random payload sizes *including
     // empty vectors* and both VecRef flavours — the decoded message
     // must equal the encoded one (f64 bits travel raw, so equality here
     // is bitwise)
@@ -283,10 +300,12 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                     units: rng.normal().abs(),
                 },
                 secs: rng.normal().abs(),
+                queue_ns: rng.next_u64(),
             },
             Msg::Reply {
                 reply: fadl::net::Reply::Scalar { v: rng.normal(), units: 0.0 },
                 secs: 0.0,
+                queue_ns: 0,
             },
             Msg::Reply {
                 reply: fadl::net::Reply::Dots {
@@ -294,6 +313,17 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                     units: 0.0,
                 },
                 secs: rng.normal().abs(),
+                queue_ns: rng.next_u64(),
+            },
+            Msg::Cmd(Command::FetchTelemetry),
+            Msg::Reply {
+                reply: fadl::net::Reply::Telemetry {
+                    spans: draw_spans(&mut rng, rng.below(len + 1)),
+                    dropped: rng.next_u64(),
+                    units: 0.0,
+                },
+                secs: 0.0,
+                queue_ns: 0,
             },
             Msg::Mesh {
                 addrs: (0..rng.below(9))
@@ -318,6 +348,8 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 data_rx: rng.next_u64(),
                 secs: rng.normal().abs(),
                 compute_secs: rng.normal().abs(),
+                queue_ns: rng.next_u64(),
+                stall_ns: rng.next_u64(),
                 dots: draw_vec(&mut rng, rng.below(5)),
             },
             Msg::Finish {
@@ -335,6 +367,44 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn full_ring_telemetry_flush_roundtrips() {
+    // a worker flushing a completely full span ring (capacity 4096) with
+    // overflow recorded in `dropped` survives the frame loop intact
+    let mut rng = Pcg64::new(0x7E1E);
+    let spans = draw_spans(&mut rng, 4096);
+    let msg = Msg::Reply {
+        reply: fadl::net::Reply::Telemetry {
+            spans: spans.clone(),
+            dropped: 517,
+            units: 0.0,
+        },
+        secs: 0.25,
+        queue_ns: 12,
+    };
+    let Msg::Reply {
+        reply: fadl::net::Reply::Telemetry { spans: back, dropped, .. },
+        ..
+    } = wire_roundtrip(&msg)
+    else {
+        panic!("wrong variant");
+    };
+    assert_eq!(back.len(), 4096);
+    assert_eq!(dropped, 517);
+    assert_eq!(back, spans);
+    // the empty flush (telemetry off worker-side) is the common case
+    let msg = Msg::Reply {
+        reply: fadl::net::Reply::Telemetry {
+            spans: Vec::new(),
+            dropped: 0,
+            units: 0.0,
+        },
+        secs: 0.0,
+        queue_ns: 0,
+    };
+    assert_eq!(wire_roundtrip(&msg), msg);
 }
 
 #[test]
