@@ -9,7 +9,7 @@ PARITY_TOPOS   ?= tree ring
 TRACE_METHOD ?= fadl
 TRACE_PLANE  ?= p2p
 
-.PHONY: check fmt clippy test build smoke parity bytes bench bench-check trace scaling artifacts
+.PHONY: check fmt clippy test build smoke serve parity bytes bench bench-check trace scaling artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -31,6 +31,13 @@ build:
 ## end-to-end TCP transport proof (P real worker processes on loopback)
 smoke:
 	$(CARGO) run --release --bin net_smoke
+
+## serving-plane proof: train → ModelArtifact → TCP front; bitwise
+## served-vs-inproc parity, hot swap mid-stream, online update, and the
+## measured scores/sec + p50/p99 artifact (SERVE_7.json, gated by
+## bench-check) — what the CI serve-smoke job runs in --quick mode
+serve:
+	$(CARGO) run --release --bin serve_smoke -- --out-dir bench-out
 
 ## the full local parity matrix: every method must produce a bitwise
 ## identical trajectory on inproc ≡ tcp-star ≡ tcp-p2p, on the tree and
@@ -73,13 +80,15 @@ bench:
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench end_to_end
 
-## bench regression gate: record the quick-mode scaling artifact, then
-## compare it against the committed tolerance bands (exit nonzero on a
-## regression or a missing metric) — what the CI bench-smoke job runs
+## bench regression gate: record the quick-mode scaling artifact and
+## the quick-mode serving artifact, then compare both against the
+## committed tolerance bands (exit nonzero on a regression or a missing
+## metric) — what the CI bench-smoke job runs
 bench-check:
 	$(CARGO) bench --bench hotpath -- --test --scaling --out-dir bench-out
+	$(CARGO) run --release --bin serve_smoke -- --quick --out-dir bench-out
 	$(CARGO) run --release --bin bench_check -- \
-	  bench-out/BENCH_5.json rust/benches/baseline.json
+	  bench-out/BENCH_5.json bench-out/SERVE_7.json rust/benches/baseline.json
 
 ## capture a per-rank span timeline for any method (TRACE_METHOD,
 ## TRACE_PLANE override): writes trace-out/$(TRACE_METHOD).trace.json —

@@ -1,31 +1,53 @@
 //! `bench_check` — the bench regression gate (`make bench-check`).
 //!
-//! Compares a recorded scaling artifact against the committed baseline
-//! tolerance bands and exits nonzero on any regression or missing
-//! metric:
+//! Compares recorded artifacts against the committed baseline tolerance
+//! bands and exits nonzero on any regression or missing metric. Every
+//! argument before the last is an artifact (their `kernels` arrays are
+//! merged, so one baseline file gates the scaling artifact and the
+//! serving artifact together); the last argument is the baseline:
 //!
 //!   cargo run --bin bench_check -- bench-out/BENCH_5.json \
-//!       rust/benches/baseline.json
+//!       bench-out/SERVE_7.json rust/benches/baseline.json
 //!
 //! See `benchkit::compare` for the band semantics (wide bands by
 //! design — the gate catches catastrophic regressions, not noise).
 
 use fadl::benchkit::compare;
-use fadl::util::json;
+use fadl::util::json::{self, Json};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let [artifact_path, baseline_path] = args.as_slice() else {
-        eprintln!("usage: bench_check <BENCH_artifact.json> <baseline.json>");
+    let Some((baseline_path, artifact_paths)) = args.split_last() else {
+        eprintln!("usage: bench_check <artifact.json>... <baseline.json>");
         std::process::exit(2);
     };
-    let artifact = read_json(artifact_path);
+    if artifact_paths.is_empty() {
+        eprintln!("usage: bench_check <artifact.json>... <baseline.json>");
+        std::process::exit(2);
+    }
+    // merge the artifacts' kernels arrays; band lookup is by kernel
+    // name, so each band finds its entry wherever it was recorded
+    let mut kernels: Vec<Json> = Vec::new();
+    for path in artifact_paths {
+        let artifact = read_json(path);
+        match artifact.get("kernels").and_then(Json::as_arr) {
+            Some(ks) => kernels.extend(ks.iter().cloned()),
+            None => {
+                eprintln!("bench_check: {path}: no kernels array");
+                std::process::exit(2);
+            }
+        }
+    }
+    let merged = json::obj(vec![("kernels", Json::Arr(kernels))]);
     let baseline = read_json(baseline_path);
-    let verdicts = compare::compare(&artifact, &baseline).unwrap_or_else(|e| {
+    let verdicts = compare::compare(&merged, &baseline).unwrap_or_else(|e| {
         eprintln!("bench_check: {e}");
         std::process::exit(2);
     });
-    println!("== bench gate: {artifact_path} vs {baseline_path} ==");
+    println!(
+        "== bench gate: {} vs {baseline_path} ==",
+        artifact_paths.join(" + ")
+    );
     for v in &verdicts {
         println!("{}", v.report());
     }

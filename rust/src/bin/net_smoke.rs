@@ -20,13 +20,18 @@
 //! Flags are the shared experiment CLI (`coordinator::config`), so the
 //! same overrides work here and on `fadl train`; `--transport` is
 //! ignored (both transports always run) and `--out X.json` writes one
-//! trace per transport (`X-inproc.json`, `X-tcp.json`);
+//! trace per transport (`X-inproc.json`, `X-tcp.json`). `--model-out`
+//! likewise publishes one `ModelArtifact` per transport and then loads
+//! both back and demands **bitwise** weight equality — the served-model
+//! analogue of the trajectory parity check (no more hand `FetchReg` +
+//! ad-hoc weight diffing);
 //! `--telemetry-out T.json` captures the tcp leg's merged per-rank
 //! span timeline (Chrome trace-event / Perfetto JSON). When the
 //! dedicated `worker` bin is not built alongside (e.g. plain
 //! `cargo run --bin net_smoke`), the driver re-executes *this* binary
 //! with `--worker`, handled below.
 
+use fadl::coordinator::artifact::ModelArtifact;
 use fadl::coordinator::{config, config::Config, driver, report};
 use fadl::metrics::Trace;
 
@@ -132,6 +137,37 @@ fn main() {
         write_bytes_csv(&path, &base, &trace_tcp);
     }
 
+    // --model-out: each leg published a versioned ModelArtifact (the
+    // driver does it; the paths were suffixed per transport). Load both
+    // back through the artifact API and demand bitwise weight equality
+    // — the train→serve joint must hand serving the same bits whichever
+    // transport trained them.
+    let artifact_ok = match &base.model_out {
+        Some(p) => {
+            let a_in = ModelArtifact::load(&transport_path(p, "inproc"))
+                .unwrap_or_else(|e| die(&e));
+            let a_tcp = ModelArtifact::load(&transport_path(p, "tcp"))
+                .unwrap_or_else(|e| die(&e));
+            let bits_eq = a_in.m == a_tcp.m
+                && a_in
+                    .weights
+                    .iter()
+                    .zip(&a_tcp.weights)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+            println!(
+                "model artifacts: inproc ({} iters, f={:.6e}) vs tcp ({} iters, \
+                 f={:.6e}) — weights {}",
+                a_in.provenance.outer_iters,
+                a_in.provenance.final_f,
+                a_tcp.provenance.outer_iters,
+                a_tcp.provenance.final_f,
+                if bits_eq { "bitwise equal" } else { "DIFFER" }
+            );
+            bits_eq
+        }
+        None => true,
+    };
+
     // --assert-scalar-driver: after round 0, the cumulative m-sized
     // driver payload must not grow — the driver carries only commands,
     // specs, and scalars on the p2p plane
@@ -162,7 +198,8 @@ fn main() {
         true
     };
 
-    if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 && scalar_ok {
+    if diff <= tol && max_iter_diff <= tol && len_ok && moved > 0.0 && scalar_ok && artifact_ok
+    {
         println!(
             "net_smoke PASSED ({} over inproc vs tcp-{})",
             base.method,
@@ -181,6 +218,15 @@ fn main() {
 fn bytes_csv(a: &fadl::util::cli::Args) -> Option<String> {
     let path = a.get("bytes-csv");
     (!path.is_empty()).then(|| path.to_string())
+}
+
+/// Suffix an output path with the transport name, extension-aware:
+/// `model.fadl` → `model-tcp.fadl`, `model` → `model-tcp`.
+fn transport_path(p: &str, transport: &str) -> String {
+    match p.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => format!("{stem}-{transport}.{ext}"),
+        _ => format!("{p}-{transport}"),
+    }
 }
 
 /// Per-iteration byte columns of the tcp run (`make bytes` and the CI
@@ -227,10 +273,15 @@ fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
     } else {
         None
     };
+    let model_out = base
+        .model_out
+        .as_ref()
+        .map(|p| transport_path(p, transport));
     let cfg = Config {
         transport: transport.into(),
         out_json,
         telemetry_out,
+        model_out,
         ..base.clone()
     };
     let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));

@@ -1,0 +1,290 @@
+//! `serve_smoke` — end-to-end proof of the serving plane (`make serve`,
+//! the CI `serve-smoke` job).
+//!
+//! Trains a quick model through the normal driver (publishing a
+//! `ModelArtifact` via `model_out`, exactly like `fadl train
+//! --model-out`), loads the artifact back, stands up a TCP serving
+//! front, and demands three things:
+//!
+//! 1. **Parity** — margins scored over the wire are *bitwise* equal to
+//!    the in-process `SparseShard::margins` reference on the same rows,
+//!    at every pool size tried (the engine's fixed-order block merge
+//!    makes the thread count irrelevant to the bits).
+//! 2. **Hot swap** — a `Publish` landing mid-stream advances the epoch
+//!    while a concurrent client keeps scoring; every reply carries the
+//!    epoch its margins were computed against, the per-connection epoch
+//!    sequence is monotone, both epochs are observed, and every reply's
+//!    margins bitwise-match the weights of *its* epoch — no torn reads.
+//! 3. **Throughput** — measured scores/sec with p50/p99 request
+//!    latency, per pool size, written as `SERVE_7.json` (gated by
+//!    `rust/benches/baseline.json` through `bench_check`) plus a
+//!    per-request `serve_latency.csv` when `--out-dir` is given.
+//!
+//! Also exercises the online-update mode: absorbs streamed examples
+//! into `serve::online::OnlineUpdater` and flushes, which must publish
+//! a further epoch.
+//!
+//!   cargo run --release --bin serve_smoke [-- --quick --out-dir bench-out]
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fadl::coordinator::artifact::ModelArtifact;
+use fadl::coordinator::{config::Config, driver};
+use fadl::data::Dataset;
+use fadl::linalg::Csr;
+use fadl::objective::{Shard, ShardCompute, SparseShard};
+use fadl::serve::{client::ScoreClient, percentile_ns, server, Front};
+use fadl::util::cli::Cli;
+use fadl::util::json::{arr_f64, obj, Json};
+
+fn main() {
+    let cli = Cli::new("serve_smoke", "serving-plane parity + hot swap + throughput")
+        .switch("quick", "CI sizes (small model, short measurement)")
+        .flag("replicas", "2", "model replicas behind the front")
+        .flag("threads", "4", "block threads per replica in the timed run")
+        .flag("batch", "256", "rows per Score request")
+        .flag("batches", "64", "timed requests per pool size")
+        .flag("out-dir", "", "write SERVE_7.json + serve_latency.csv here");
+    let a = cli.parse();
+    let quick = a.on("quick");
+    let replicas = a.get_usize("replicas").max(1);
+    let threads = a.get_usize("threads").max(1);
+    let batch = a.get_usize("batch").max(1);
+    let batches = a.get_usize("batches").max(1);
+
+    // ---- train → publish the artifact (the same path `fadl train
+    // --model-out` takes; serving never sees the training process) ----
+    let model_path = std::env::temp_dir()
+        .join(format!("serve_smoke_model_{}.fadl", std::process::id()));
+    let model_path = model_path.to_string_lossy().to_string();
+    let (n, m) = if quick { (600, 80) } else { (4_000, 400) };
+    let cfg = Config {
+        name: "serve_smoke".into(),
+        dataset: "quick".into(),
+        quick_n: n,
+        quick_m: m,
+        quick_nnz: 10,
+        nodes: 2,
+        max_outer: 6,
+        model_out: Some(model_path.clone()),
+        ..Config::default()
+    };
+    let exp = driver::prepare(&cfg).unwrap_or_else(|e| die(&e));
+    let (_, trace) = driver::run(&exp).unwrap_or_else(|e| die(&e));
+    let artifact = ModelArtifact::load(&model_path).unwrap_or_else(|e| die(&e));
+    let _ = std::fs::remove_file(&model_path);
+    println!(
+        "trained {} on {} ({} iters, f = {:.6e}) → artifact m = {}",
+        artifact.provenance.method,
+        artifact.provenance.dataset,
+        artifact.provenance.outer_iters,
+        artifact.provenance.final_f,
+        artifact.m
+    );
+    assert_eq!(trace.records.len(), artifact.provenance.outer_iters);
+
+    // one fixed batch reused everywhere: rows 0..batch of the train set
+    let x = batch_csr(&exp.train, 0, batch);
+    let reference = inproc_margins(&x, &artifact.weights);
+
+    // ---- parity + throughput per pool size ----
+    let mut pool_sizes = vec![1usize];
+    if threads > 1 {
+        pool_sizes.push(threads);
+    }
+    let mut rates = Vec::new();
+    let mut p50s = Vec::new();
+    let mut p99s = Vec::new();
+    let mut latency_csv = String::from("threads,request,ns\n");
+    for &t in &pool_sizes {
+        let front = Arc::new(Front::from_artifact(&artifact, replicas, t));
+        let (addr, _handle) =
+            server::spawn(front, "127.0.0.1:0").unwrap_or_else(|e| die(&e));
+        let mut client =
+            ScoreClient::connect(&addr.to_string()).unwrap_or_else(|e| die(&e));
+        // parity gate: the first reply must be bitwise identical to the
+        // serial in-process reference
+        let (epoch, margins) = client.score_csr(&x).unwrap_or_else(|e| die(&e));
+        assert_eq!(epoch, 1);
+        assert_bitwise(&margins, &reference, &format!("parity T={t}"));
+        // warmup, then the timed loop
+        for _ in 0..3 {
+            client.score_csr(&x).unwrap_or_else(|e| die(&e));
+        }
+        let mut lat_ns: Vec<u64> = Vec::with_capacity(batches);
+        let t0 = Instant::now();
+        for _ in 0..batches {
+            let r0 = Instant::now();
+            let (_, mm) = client.score_csr(&x).unwrap_or_else(|e| die(&e));
+            lat_ns.push(r0.elapsed().as_nanos() as u64);
+            assert_eq!(mm.len(), x.rows);
+        }
+        let total = t0.elapsed().as_secs_f64();
+        client.shutdown();
+        for (i, ns) in lat_ns.iter().enumerate() {
+            latency_csv.push_str(&format!("{t},{i},{ns}\n"));
+        }
+        lat_ns.sort_unstable();
+        let rate = (batches * batch) as f64 / total.max(1e-12);
+        let p50 = percentile_ns(&lat_ns, 50.0);
+        let p99 = percentile_ns(&lat_ns, 99.0);
+        println!(
+            "serve_score T={t}: {rate:.0} scores/sec over {} rows \
+             (p50 {:.1}µs  p99 {:.1}µs per {batch}-row request)",
+            batches * batch,
+            p50 as f64 / 1e3,
+            p99 as f64 / 1e3
+        );
+        rates.push(rate);
+        p50s.push(p50 as f64);
+        p99s.push(p99 as f64);
+    }
+
+    // ---- hot swap mid-stream ----
+    let front = Arc::new(Front::from_artifact(
+        &artifact,
+        replicas,
+        if quick { 2 } else { threads },
+    ));
+    let (addr, _handle) =
+        server::spawn(front.clone(), "127.0.0.1:0").unwrap_or_else(|e| die(&e));
+    let w2: Vec<f64> = artifact.weights.iter().map(|w| w * 2.0 + 0.125).collect();
+    let reference2 = inproc_margins(&x, &w2);
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let stream_addr = addr.to_string();
+    let stream_x = x.clone();
+    let stream_ref1 = reference.clone();
+    let stream_ref2 = reference2.clone();
+    let streamer = std::thread::spawn(move || -> Result<Vec<u64>, String> {
+        let mut c = ScoreClient::connect(&stream_addr)?;
+        let mut epochs = Vec::new();
+        for i in 0..2_000_000usize {
+            let (e, mm) = c.score_csr(&stream_x)?;
+            let want = match e {
+                1 => &stream_ref1,
+                2 => &stream_ref2,
+                other => return Err(format!("reply on unpublished epoch {other}")),
+            };
+            if mm.iter().zip(want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("epoch-{e} reply does not match its weights"));
+            }
+            epochs.push(e);
+            if i == 0 {
+                let _ = started_tx.send(());
+            }
+            if e >= 2 {
+                c.shutdown();
+                return Ok(epochs);
+            }
+        }
+        Err("streamed 2M batches without observing the swap".into())
+    });
+    started_rx.recv().unwrap_or_else(|_| die("streamer died before first reply"));
+    let mut publisher =
+        ScoreClient::connect(&addr.to_string()).unwrap_or_else(|e| die(&e));
+    let e2 = publisher
+        .publish(artifact.loss, artifact.lambda, w2)
+        .unwrap_or_else(|e| die(&e));
+    assert_eq!(e2, 2, "first publish lands as epoch 2");
+    let epochs = streamer
+        .join()
+        .unwrap_or_else(|_| die("streamer panicked"))
+        .unwrap_or_else(|e| die(&e));
+    assert!(
+        epochs.windows(2).all(|w| w[0] <= w[1]),
+        "per-connection epoch sequence must be monotone: {epochs:?}"
+    );
+    let on_old = epochs.iter().filter(|&&e| e == 1).count();
+    let on_new = epochs.iter().filter(|&&e| e == 2).count();
+    assert!(on_old >= 1 && on_new >= 1, "swap not observed mid-stream");
+    println!(
+        "hot swap: {on_old} replies on epoch 1, then {on_new} on epoch 2 \
+         — every reply matched its own epoch's weights bitwise"
+    );
+
+    // ---- online-update mode: absorb a stream, flush, epoch advances ----
+    let mut upd = fadl::serve::online::OnlineUpdater::new(2, 0.5, 77);
+    let take = (exp.train.n()).min(if quick { 200 } else { 1_000 });
+    for i in 0..take {
+        upd.absorb(exp.train.x.row(i).collect(), exp.train.y[i]);
+    }
+    let e3 = upd
+        .flush(&front)
+        .unwrap_or_else(|e| die(&e))
+        .unwrap_or_else(|| die("flush with pending examples published nothing"));
+    assert_eq!(e3, 3, "online flush publishes the next epoch");
+    println!("online update: absorbed {take} examples, flushed as epoch {e3}");
+
+    // ---- artifacts ----
+    if let Some(dir) = non_empty(a.get("out-dir")) {
+        let dir = std::path::PathBuf::from(dir);
+        let _ = std::fs::create_dir_all(&dir);
+        let doc = obj(vec![
+            ("bench", Json::Str("serve-smoke".to_string())),
+            ("quick", Json::Bool(quick)),
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("replicas", Json::Num(replicas as f64)),
+            (
+                "kernels",
+                Json::Arr(vec![obj(vec![
+                    ("kernel", Json::Str("serve_score".to_string())),
+                    (
+                        "threads",
+                        Json::Arr(
+                            pool_sizes.iter().map(|&t| Json::Num(t as f64)).collect(),
+                        ),
+                    ),
+                    ("scores_per_sec", arr_f64(&rates)),
+                    ("p50_ns", arr_f64(&p50s)),
+                    ("p99_ns", arr_f64(&p99s)),
+                ])]),
+            ),
+        ]);
+        let path = dir.join("SERVE_7.json");
+        match std::fs::write(&path, doc.pretty()) {
+            Ok(()) => println!("serving artifact written to {}", path.display()),
+            Err(e) => die(&format!("write {}: {e}", path.display())),
+        }
+        let csv = dir.join("serve_latency.csv");
+        match std::fs::write(&csv, latency_csv) {
+            Ok(()) => println!("latency samples written to {}", csv.display()),
+            Err(e) => die(&format!("write {}: {e}", csv.display())),
+        }
+    }
+    println!("serve_smoke PASSED");
+}
+
+/// `count` training rows starting at `start` (wrapping), as a CSR batch.
+fn batch_csr(ds: &Dataset, start: usize, count: usize) -> Csr {
+    let rows: Vec<Vec<(u32, f32)>> = (0..count)
+        .map(|i| ds.x.row((start + i) % ds.n()).collect())
+        .collect();
+    Csr::from_rows(ds.m(), &rows)
+}
+
+/// The serial in-process reference the wire path must match bitwise.
+fn inproc_margins(x: &Csr, w: &[f64]) -> Vec<f64> {
+    let rows = x.rows;
+    SparseShard::new(Shard { x: x.clone(), y: vec![0.0; rows], c: vec![1.0; rows] })
+        .margins(w)
+}
+
+fn assert_bitwise(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: row {i}: {a} vs {b}");
+    }
+}
+
+fn non_empty(s: &str) -> Option<&str> {
+    (!s.is_empty()).then_some(s)
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("serve_smoke: error: {msg}");
+    std::process::exit(1);
+}

@@ -1,0 +1,222 @@
+//! The versioned `ModelArtifact`: the train → serve joint.
+//!
+//! Training used to end with an ad-hoc `FetchReg` of the final iterate
+//! register and callers re-deriving metadata by hand; serving had no
+//! input format at all. A [`ModelArtifact`] closes that gap: the final
+//! weights plus everything a scorer needs to reproduce margins exactly
+//! (loss, λ, feature dimension) and enough provenance to answer "which
+//! run produced this file" — behind a magic + version header so a stale
+//! artifact from an earlier layout fails fast at load, exactly like the
+//! wire protocol's `PROTO_VERSION` handshake.
+//!
+//! The on-disk format reuses the wire codec primitives
+//! ([`crate::net::wire::Enc`] / [`Dec`]): integers little-endian, f64 as
+//! raw IEEE bits — so weights survive a save/load round trip bitwise,
+//! which is what keeps served margins equal to in-process margins to
+//! the last bit.
+//!
+//! ```text
+//! [ magic: 8 bytes "FADLMDL\0" ][ version: u32 ][ body ]
+//! body = loss name | lambda | m | weights | provenance
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::loss::Loss;
+use crate::net::wire::{Dec, Enc};
+
+/// File magic: identifies a FADL model artifact before any parsing.
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"FADLMDL\0";
+
+/// Artifact format version. Bump on ANY change to the field layout.
+///
+/// v1: loss/λ/m metadata, f64 weights, training provenance (method,
+/// dataset, nodes, seed, outer iterations, final objective value).
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Where the weights came from: enough to answer "which run produced
+/// this file" without re-reading the experiment config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    pub method: String,
+    pub dataset: String,
+    pub nodes: usize,
+    pub seed: u64,
+    /// outer iterations the training run performed
+    pub outer_iters: usize,
+    /// final regularized objective value f(w)
+    pub final_f: f64,
+}
+
+/// A trained model in its serving form: weights + the scoring metadata
+/// + provenance, versioned on disk. Training ends by publishing one
+/// ([`crate::coordinator::driver`]'s `--model-out`,
+/// [`crate::methods::TrainContext::into_artifact`]); serving starts by
+/// loading one ([`crate::serve`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArtifact {
+    pub loss: Loss,
+    pub lambda: f64,
+    /// feature dimension (weights.len() — stored explicitly so a
+    /// truncated weight vector is caught at load, not at first score)
+    pub m: usize,
+    pub weights: Vec<f64>,
+    pub provenance: Provenance,
+}
+
+impl ModelArtifact {
+    /// Serialize with the magic + version header.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&ARTIFACT_MAGIC);
+        e.u32(ARTIFACT_VERSION);
+        e.str(self.loss.name());
+        e.f64(self.lambda);
+        e.usize(self.m);
+        e.vec_f64(&self.weights);
+        e.str(&self.provenance.method);
+        e.str(&self.provenance.dataset);
+        e.usize(self.provenance.nodes);
+        e.u64(self.provenance.seed);
+        e.usize(self.provenance.outer_iters);
+        e.f64(self.provenance.final_f);
+        e.buf
+    }
+
+    /// Parse, rejecting foreign files (bad magic), future layouts (bad
+    /// version), and internally inconsistent weight vectors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelArtifact, String> {
+        if bytes.len() < 12 {
+            return Err(format!("model artifact too short: {} bytes", bytes.len()));
+        }
+        if bytes[..8] != ARTIFACT_MAGIC {
+            return Err("not a FADL model artifact (bad magic)".to_string());
+        }
+        let mut d = Dec::new(&bytes[8..]);
+        let version = d.u32()?;
+        if version != ARTIFACT_VERSION {
+            return Err(format!(
+                "model artifact version mismatch: file is v{version}, this \
+                 binary reads v{ARTIFACT_VERSION} — re-export the model with \
+                 a matching build"
+            ));
+        }
+        let loss_name = d.str()?;
+        let loss = Loss::from_name(&loss_name)
+            .ok_or_else(|| format!("unknown loss {loss_name:?} in model artifact"))?;
+        let lambda = d.f64()?;
+        let m = d.usize()?;
+        let weights = d.vec_f64()?;
+        let provenance = Provenance {
+            method: d.str()?,
+            dataset: d.str()?,
+            nodes: d.usize()?,
+            seed: d.u64()?,
+            outer_iters: d.usize()?,
+            final_f: d.f64()?,
+        };
+        d.finish()?;
+        if weights.len() != m {
+            return Err(format!(
+                "model artifact header says m = {m} but carries {} weights",
+                weights.len()
+            ));
+        }
+        Ok(ModelArtifact { loss, lambda, m, weights, provenance })
+    }
+
+    /// Write to `path`, creating parent directories as needed.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("create {}: {e}", parent.display()))?;
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| format!("create {}: {e}", path.display()))?;
+        f.write_all(&self.to_bytes())
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelArtifact, String> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        ModelArtifact::from_bytes(&bytes)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelArtifact {
+        ModelArtifact {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-4,
+            m: 4,
+            // awkward bit patterns must survive exactly
+            weights: vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE, 1e-308],
+            provenance: Provenance {
+                method: "fadl".into(),
+                dataset: "quick".into(),
+                nodes: 4,
+                seed: 42,
+                outer_iters: 17,
+                final_f: 0.3125,
+            },
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_bitwise() {
+        let a = sample();
+        let back = ModelArtifact::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(back, a);
+        for (x, y) in a.weights.iter().zip(&back.weights) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("fadl-artifact-test");
+        let path = dir.join("nested/model.fadl");
+        let a = sample();
+        a.save(&path).unwrap();
+        let back = ModelArtifact::load(&path).unwrap();
+        assert_eq!(back, a);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_and_stale_files_rejected() {
+        let err = ModelArtifact::from_bytes(b"PNG\x0d\x0a\x1a\x0a____").unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+        let err = ModelArtifact::from_bytes(&[1, 2, 3]).unwrap_err();
+        assert!(err.contains("too short"), "{err}");
+        // future version fails fast
+        let mut bytes = sample().to_bytes();
+        bytes[8..12].copy_from_slice(&(ARTIFACT_VERSION + 1).to_le_bytes());
+        let err = ModelArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(err.contains("version mismatch"), "{err}");
+        // truncation is caught
+        let bytes = sample().to_bytes();
+        assert!(ModelArtifact::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn inconsistent_m_rejected() {
+        let mut a = sample();
+        a.m = 7;
+        let err = ModelArtifact::from_bytes(&a.to_bytes()).unwrap_err();
+        assert!(err.contains("carries"), "{err}");
+    }
+}

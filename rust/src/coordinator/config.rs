@@ -79,6 +79,11 @@ pub struct Config {
     pub artifacts_dir: String,
     // output
     pub out_json: Option<String>,
+    /// write the trained model as a versioned
+    /// [`crate::coordinator::artifact::ModelArtifact`] here — training
+    /// ends by publishing an artifact, `fadl serve` starts by loading
+    /// one (`[output] model` / `--model-out`)
+    pub model_out: Option<String>,
     /// write a merged per-rank span timeline here (Chrome trace-event /
     /// Perfetto JSON). `Some` switches the telemetry plane on for the
     /// whole run — driver, every rank, every pool thread; `None`
@@ -121,15 +126,54 @@ impl Default for Config {
             backend: Backend::Sparse,
             artifacts_dir: "artifacts".into(),
             out_json: None,
+            model_out: None,
             telemetry_out: None,
         }
     }
 }
 
 impl Config {
-    /// Parse a TOML document on top of the defaults.
+    /// Parse a TOML document on top of the defaults. Dashed key aliases
+    /// are accepted silently here — use [`Config::from_toml_with_warnings`]
+    /// (what [`Config::from_file`] does) to surface the deprecation.
     pub fn from_toml(text: &str) -> Result<Config, String> {
+        Ok(Config::from_toml_with_warnings(text)?.0)
+    }
+
+    /// Parse a TOML document, normalizing deprecated `-` key spellings
+    /// to the canonical `_` ones (`test-fraction` → `test_fraction`)
+    /// and returning at most ONE warning line naming every alias used.
+    /// When both spellings appear, the canonical key wins.
+    pub fn from_toml_with_warnings(
+        text: &str,
+    ) -> Result<(Config, Option<String>), String> {
         let doc = toml::parse(text)?;
+        let mut norm = toml::Document::default();
+        let mut aliased: Vec<String> = Vec::new();
+        for (key, value) in &doc.entries {
+            if !key.contains('-') {
+                norm.entries.insert(key.clone(), value.clone());
+            }
+        }
+        for (key, value) in &doc.entries {
+            if key.contains('-') {
+                let canon = key.replace('-', "_");
+                aliased.push(format!("{key} → {canon}"));
+                norm.entries.entry(canon).or_insert_with(|| value.clone());
+            }
+        }
+        let warning = (!aliased.is_empty()).then(|| {
+            format!(
+                "config: deprecated '-' key spelling (use '_'): {}",
+                aliased.join(", ")
+            )
+        });
+        Ok((Config::resolve(&norm)?, warning))
+    }
+
+    /// Resolve a normalized (canonical-key) document on top of the
+    /// defaults.
+    fn resolve(doc: &toml::Document) -> Result<Config, String> {
         let mut cfg = Config::default();
         cfg.name = doc.str_or("name", &cfg.name).to_string();
         cfg.dataset = doc.str_or("dataset.kind", &cfg.dataset).to_string();
@@ -191,6 +235,10 @@ impl Config {
         if let Some(v) = doc.get("output.json") {
             cfg.out_json = Some(v.as_str().ok_or("output.json not a string")?.to_string());
         }
+        if let Some(v) = doc.get("output.model") {
+            cfg.model_out =
+                Some(v.as_str().ok_or("output.model not a string")?.to_string());
+        }
         if let Some(v) = doc.get("output.telemetry") {
             cfg.telemetry_out =
                 Some(v.as_str().ok_or("output.telemetry not a string")?.to_string());
@@ -198,10 +246,15 @@ impl Config {
         Ok(cfg)
     }
 
-    /// Load from a file path.
+    /// Load from a file path, surfacing the deprecated-alias warning
+    /// (once per load) on stderr.
     pub fn from_file(path: &str) -> Result<Config, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
-        Config::from_toml(&text)
+        let (cfg, warning) = Config::from_toml_with_warnings(&text)?;
+        if let Some(w) = warning {
+            eprintln!("{path}: {w}");
+        }
+        Ok(cfg)
     }
 
     /// Resolve a config from parsed [`experiment_cli`] arguments:
@@ -289,6 +342,9 @@ impl Config {
         if !a.get("out").is_empty() {
             self.out_json = Some(a.get("out").to_string());
         }
+        if !a.get("model-out").is_empty() {
+            self.model_out = Some(a.get("model-out").to_string());
+        }
         if !a.get("telemetry-out").is_empty() {
             self.telemetry_out = Some(a.get("telemetry-out").to_string());
         }
@@ -330,6 +386,11 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
         .flag("data-plane", "", "override tcp data plane: star | p2p")
         .flag("worker-bin", "", "explicit worker executable for the tcp transport")
         .flag("out", "", "write the trace JSON here")
+        .flag(
+            "model-out",
+            "",
+            "publish the trained model as a versioned ModelArtifact here",
+        )
         .flag(
             "telemetry-out",
             "",
@@ -511,6 +572,60 @@ json = "out/fig5.json"
             .unwrap();
         let cfg = Config::from_cli(Config::default(), &a).unwrap();
         assert_eq!(cfg.telemetry_out.as_deref(), Some("t.json"));
+    }
+
+    #[test]
+    fn model_out_key_and_flag_parse() {
+        assert!(Config::from_toml("").unwrap().model_out.is_none());
+        let cfg = Config::from_toml("[output]\nmodel = \"out/model.fadl\"").unwrap();
+        assert_eq!(cfg.model_out.as_deref(), Some("out/model.fadl"));
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--model-out".to_string(), "m.fadl".to_string()])
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert_eq!(cfg.model_out.as_deref(), Some("m.fadl"));
+    }
+
+    #[test]
+    fn dashed_key_aliases_normalize_with_single_warning() {
+        let (cfg, warn) = Config::from_toml_with_warnings(
+            "[dataset]\ntest-fraction = 0.25\n\
+             [method]\nmax-outer = 9\n\
+             [cluster]\ndata-plane = \"p2p\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.test_fraction, 0.25);
+        assert_eq!(cfg.max_outer, 9);
+        assert_eq!(cfg.data_plane, DataPlane::P2p);
+        let warn = warn.expect("deprecated aliases warn");
+        assert_eq!(
+            warn.matches("deprecated").count(),
+            1,
+            "one warning line for the whole document: {warn}"
+        );
+        assert!(warn.contains("test-fraction"), "{warn}");
+        assert!(warn.contains("max-outer"), "{warn}");
+        assert!(warn.contains("data-plane"), "{warn}");
+        // when both spellings appear, the canonical key wins
+        let (cfg, warn) =
+            Config::from_toml_with_warnings("[method]\nmax_outer = 5\nmax-outer = 9")
+                .unwrap();
+        assert_eq!(cfg.max_outer, 5);
+        assert!(warn.is_some());
+        // canonical-only documents stay warning-free, and a dashed
+        // document resolves to exactly what its canonical twin does
+        let (canon, warn_canon) = Config::from_toml_with_warnings(
+            "[dataset]\ntest_fraction = 0.3\n[method]\nmax_outer = 11",
+        )
+        .unwrap();
+        assert!(warn_canon.is_none());
+        let (dashed, _) = Config::from_toml_with_warnings(
+            "[dataset]\ntest-fraction = 0.3\n[method]\nmax-outer = 11",
+        )
+        .unwrap();
+        assert_eq!(dashed.test_fraction, canon.test_fraction);
+        assert_eq!(dashed.max_outer, canon.max_outer);
     }
 
     #[test]

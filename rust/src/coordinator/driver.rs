@@ -245,6 +245,11 @@ pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
     };
     let (w, mut trace) = trainer.train(&ctx);
     trace.dataset = exp.train.name.clone();
+    if let Some(path) = &cfg.model_out {
+        // training ends by publishing the versioned artifact — the
+        // file `fadl serve` starts from
+        ctx.into_artifact(w.clone(), &trace, cfg.seed).save(path)?;
+    }
     if let Some(path) = &cfg.out_json {
         if let Some(parent) = std::path::Path::new(path).parent() {
             let _ = std::fs::create_dir_all(parent);
@@ -524,6 +529,35 @@ mod tests {
         let crate::util::json::Json::Arr(events) = doc else { panic!("not an array") };
         assert!(!events.is_empty());
         assert!(text.contains("phase:grad") || text.contains("combine:grad"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn model_out_publishes_loadable_artifact() {
+        use crate::coordinator::artifact::ModelArtifact;
+        let dir = std::env::temp_dir().join("fadl_driver_artifact_test");
+        let path = dir.join("model.fadl");
+        let cfg = Config {
+            model_out: Some(path.to_string_lossy().into_owned()),
+            max_outer: 3,
+            ..quick_cfg()
+        };
+        let exp = prepare(&cfg).unwrap();
+        let (w, trace) = run(&exp).unwrap();
+        let a = ModelArtifact::load(&path).unwrap();
+        // the artifact's weights are the returned weights, bitwise
+        assert_eq!(a.m, w.len());
+        for (x, y) in a.weights.iter().zip(&w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.loss, cfg.loss);
+        assert_eq!(a.lambda, exp.lambda);
+        assert_eq!(a.provenance.method, trace.method);
+        assert_eq!(a.provenance.dataset, exp.train.name);
+        assert_eq!(a.provenance.nodes, cfg.nodes);
+        assert_eq!(a.provenance.seed, cfg.seed);
+        assert_eq!(a.provenance.outer_iters, trace.records.len());
+        assert_eq!(a.provenance.final_f.to_bits(), trace.final_f().to_bits());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

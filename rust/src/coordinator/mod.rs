@@ -3,6 +3,7 @@
 //! benches, the examples) funnels through [`driver`], so a run is fully
 //! described by its [`config::Config`].
 
+pub mod artifact;
 pub mod config;
 pub mod driver;
 pub mod report;

@@ -81,6 +81,17 @@ pub fn telemetry_summary(streams: &[RankStream]) -> String {
     format!("per-rank phase seconds\n{}", table(&headers, &out_rows))
 }
 
+/// Render an AUPRC value for a report cell. The NaN sentinel (no
+/// held-out set: `test_fraction = 0`, or an empty split) used to leak
+/// into tables as `NaN` — it means "not instrumented", so say so.
+pub fn fmt_auprc(v: f64) -> String {
+    if v.is_nan() {
+        "n/a".into()
+    } else {
+        format!("{v:.4}")
+    }
+}
+
 /// Summarize a trace against a reference optimum: the console analogue
 /// of one curve in Figures 5–8.
 pub fn trace_summary(trace: &Trace, f_star: f64) -> String {
@@ -97,11 +108,7 @@ pub fn trace_summary(trace: &Trace, f_star: f64) -> String {
             format!("{:.0}", r.comm_passes),
             format!("{:.3}", r.sim_secs),
             format!("{:.2}", log_rel_diff(r.f, f_star)),
-            if r.auprc.is_nan() {
-                "-".into()
-            } else {
-                format!("{:.4}", r.auprc)
-            },
+            fmt_auprc(r.auprc),
         ]);
     }
     format!(
@@ -171,6 +178,31 @@ mod tests {
         // median of {1, 2} picks the upper value → skew 2/2 = 1.00x
         assert!(s.contains("1.00x"), "{s}");
         assert_eq!(telemetry_summary(&[]), "telemetry: no spans recorded");
+    }
+
+    #[test]
+    fn nan_auprc_renders_as_na_not_nan() {
+        assert_eq!(fmt_auprc(f64::NAN), "n/a");
+        assert_eq!(fmt_auprc(0.5), "0.5000");
+        // regression: the eval_auprc_reg empty-test-set sentinel must
+        // never leak the literal "NaN" into a report table
+        let mut trace = Trace::new("fadl", "quick", 2);
+        let cost = CostModel::default();
+        let mut clock = SimClock::default();
+        clock.comm_pass(1.0);
+        trace.push(
+            0,
+            &clock,
+            &cost,
+            &crate::net::Measured::default(),
+            0.0,
+            1.0,
+            1.0,
+            f64::NAN,
+        );
+        let s = trace_summary(&trace, 1.0);
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(s.contains("n/a"), "{s}");
     }
 
     #[test]

@@ -40,7 +40,13 @@
 //! * [`metrics`] — AUPRC, convergence traces, comm-pass accounting.
 //! * [`runtime`] — the PJRT client wrapper that loads and executes the
 //!   AOT HLO artifacts produced by `python/compile/aot.py`.
-//! * [`coordinator`] — config system, experiment driver, reporting.
+//! * [`coordinator`] — config system, experiment driver, reporting, and
+//!   the versioned [`coordinator::artifact::ModelArtifact`] training
+//!   publishes and serving loads.
+//! * [`serve`] — the serving plane: per-shard model replicas behind a
+//!   round-robin front, hot model swap via an epoch pointer, batched
+//!   CSR scoring over the v7 wire frames, and online SGD updates
+//!   between full retrains.
 //! * [`benchkit`] — the micro/e2e benchmark harness behind `cargo bench`.
 
 pub mod approx;
@@ -56,6 +62,7 @@ pub mod net;
 pub mod objective;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use coordinator::config::Config;

@@ -2,20 +2,35 @@
 //!
 //! Subcommands:
 //!   train       run one experiment from a config file (+ overrides)
+//!   serve       score batches over tcp from a published ModelArtifact
+//!   score       client for a serving front: batch, send, time, print
 //!   datasets    print the Table-1 synthetic dataset inventory
 //!   costmodel   evaluate the eq.-(21) computation/communication regime
 //!   verify      smoke-check the AOT artifacts through the PJRT runtime
 //!
+//! `train`, `serve` and `score` share the experiment CLI
+//! ([`config::experiment_cli`]): the same `--config`/`--dataset`/
+//! `--seed` flags describe the data everywhere, and training ends by
+//! publishing the artifact (`--model-out`) that serving starts from
+//! (`--model`).
+//!
 //! Examples:
 //!   fadl train --config configs/quickstart.toml
 //!   fadl train --config configs/fig5_kdd2010.toml --nodes 128 --method tera
+//!   fadl train --dataset quick --model-out model.fadl
+//!   fadl serve --model model.fadl --bind 127.0.0.1:7070
+//!   fadl score --connect 127.0.0.1:7070 --dataset quick --batch 64
 //!   fadl datasets --scale 0.001
 //!   fadl costmodel --gamma 500 --k-hat 10
 //!   fadl verify --artifacts artifacts
 
+use std::sync::Arc;
+
+use fadl::coordinator::artifact::ModelArtifact;
 use fadl::coordinator::{config, config::Config, driver, report};
 use fadl::data::synth;
 use fadl::metrics::log_rel_diff;
+use fadl::serve::{client::ScoreClient, percentile_ns, server, Front};
 use fadl::util::cli::Cli;
 
 fn main() {
@@ -36,13 +51,15 @@ fn main() {
     let rest: Vec<String> = args.skip(1).collect();
     match sub.as_str() {
         "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "score" => cmd_score(rest),
         "datasets" => cmd_datasets(rest),
         "costmodel" => cmd_costmodel(rest),
         "verify" => cmd_verify(rest),
         _ => {
             eprintln!(
                 "fadl — Function-Approximation-based Distributed Learning\n\n\
-                 USAGE: fadl <train|datasets|costmodel|verify> [flags]\n\
+                 USAGE: fadl <train|serve|score|datasets|costmodel|verify> [flags]\n\
                  Run `fadl <subcommand> --help` for details."
             );
             std::process::exit(if sub == "help" { 0 } else { 2 });
@@ -86,11 +103,100 @@ fn cmd_train(argv: Vec<String>) {
     println!("{}", report::trace_summary(&trace, trace.best_f()));
     if let Some(r) = trace.records.last() {
         println!(
-            "final: f={:.6} ‖g‖={:.3e} comm_passes={:.0} sim_time={:.3}s wall={:.3}s auprc={:.4}",
-            r.f, r.grad_norm, r.comm_passes, r.sim_secs, r.wall_secs, r.auprc
+            "final: f={:.6} ‖g‖={:.3e} comm_passes={:.0} sim_time={:.3}s wall={:.3}s auprc={}",
+            r.f,
+            r.grad_norm,
+            r.comm_passes,
+            r.sim_secs,
+            r.wall_secs,
+            report::fmt_auprc(r.auprc)
         );
     }
     println!("‖w‖ = {:.6}", fadl::linalg::norm(&w));
+    if let Some(path) = &cfg.model_out {
+        println!("model artifact → {path}");
+    }
+}
+
+fn cmd_serve(argv: Vec<String>) {
+    let cli = config::experiment_cli("fadl serve", "serve a published model over tcp")
+        .flag("model", "", "ModelArtifact path (default: the config's output.model)")
+        .flag("bind", "127.0.0.1:7070", "listen address (port 0 = ephemeral)")
+        .flag("replicas", "1", "model replicas behind the round-robin front");
+    let a = parse_or_exit(&cli, argv);
+    let cfg = Config::from_cli(Config::default(), &a).unwrap_or_else(|e| die(&e));
+    let path = match a.get("model") {
+        "" => cfg
+            .model_out
+            .clone()
+            .unwrap_or_else(|| die("serve needs --model (or output.model in the config)")),
+        p => p.to_string(),
+    };
+    let artifact = ModelArtifact::load(&path).unwrap_or_else(|e| die(&e));
+    let front = Arc::new(Front::from_artifact(
+        &artifact,
+        a.get_usize("replicas"),
+        cfg.threads,
+    ));
+    let (addr, handle) =
+        server::spawn(front.clone(), a.get("bind")).unwrap_or_else(|e| die(&e));
+    let model = front.model();
+    println!(
+        "serving {path} at {addr}: m={} loss={} lambda={:.3e} epoch={} \
+         (trained by {} on {}, {} replicas)",
+        model.m,
+        model.loss.name(),
+        model.lambda,
+        model.epoch,
+        artifact.provenance.method,
+        artifact.provenance.dataset,
+        front.replicas(),
+    );
+    // serve until the accept loop exits (listener error); connections
+    // are handled on their own threads
+    handle.join().unwrap_or_else(|_| die("accept loop panicked"));
+}
+
+fn cmd_score(argv: Vec<String>) {
+    let cli = config::experiment_cli("fadl score", "score batches against a serving front")
+        .flag("connect", "127.0.0.1:7070", "serving front address")
+        .flag("batch", "64", "rows per Score request")
+        .flag("batches", "16", "number of requests to send");
+    let a = parse_or_exit(&cli, argv);
+    let cfg = Config::from_cli(Config::default(), &a).unwrap_or_else(|e| die(&e));
+    // rows come from the shared experiment config — the same synthetic
+    // generators / libsvm reader training used, so a parity check
+    // against a local train run scores identical examples
+    let ds = driver::build_dataset(&cfg).unwrap_or_else(|e| die(&e));
+    let batch = a.get_usize("batch").max(1);
+    let batches = a.get_usize("batches").max(1);
+    let mut client = ScoreClient::connect(a.get("connect")).unwrap_or_else(|e| die(&e));
+    let mut lat_ns: Vec<u64> = Vec::with_capacity(batches);
+    let mut scored = 0usize;
+    let mut last_epoch = 0u64;
+    let mut checksum = 0.0f64;
+    for b in 0..batches {
+        let rows: Vec<Vec<(u32, f32)>> = (0..batch)
+            .map(|i| ds.x.row((b * batch + i) % ds.n()).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        let (epoch, margins) =
+            client.score_rows(ds.m(), &rows).unwrap_or_else(|e| die(&e));
+        lat_ns.push(t0.elapsed().as_nanos() as u64);
+        scored += margins.len();
+        last_epoch = epoch;
+        checksum += margins.iter().sum::<f64>();
+    }
+    client.shutdown();
+    lat_ns.sort_unstable();
+    let total_ns: u64 = lat_ns.iter().sum();
+    let rate = scored as f64 / (total_ns.max(1) as f64 / 1e9);
+    println!(
+        "scored {scored} rows in {batches} batches of {batch} (epoch {last_epoch}): \
+         {rate:.0} scores/sec, p50 {:.1}µs p99 {:.1}µs, Σmargins={checksum:.6}",
+        percentile_ns(&lat_ns, 50.0) as f64 / 1e3,
+        percentile_ns(&lat_ns, 99.0) as f64 / 1e3,
+    );
 }
 
 fn cmd_datasets(argv: Vec<String>) {

@@ -26,6 +26,7 @@ pub mod ssz;
 pub mod tera;
 
 use crate::cluster::Cluster;
+use crate::coordinator::artifact::{ModelArtifact, Provenance};
 use crate::data::Dataset;
 use crate::metrics::Trace;
 use crate::objective::Objective;
@@ -91,6 +92,34 @@ impl<'a> TrainContext<'a> {
 
     pub(crate) fn should_stop_f(&self, f: f64) -> bool {
         self.f_stop.map(|thr| f <= thr).unwrap_or(false)
+    }
+
+    /// Bundle a finished run into the versioned [`ModelArtifact`] — the
+    /// train → serve joint. `weights` is what [`Trainer::train`]
+    /// returned, the scoring metadata comes from the context's
+    /// objective, and the provenance from the trace. This replaces the
+    /// old ad-hoc pattern of `FetchReg`-ing the final iterate and
+    /// re-deriving loss/λ by hand at every call site.
+    pub fn into_artifact(
+        self,
+        weights: Vec<f64>,
+        trace: &Trace,
+        seed: u64,
+    ) -> ModelArtifact {
+        ModelArtifact {
+            loss: self.objective.loss,
+            lambda: self.objective.lambda,
+            m: weights.len(),
+            weights,
+            provenance: Provenance {
+                method: trace.method.clone(),
+                dataset: trace.dataset.clone(),
+                nodes: trace.nodes,
+                seed,
+                outer_iters: trace.records.len(),
+                final_f: trace.final_f(),
+            },
+        }
     }
 }
 

@@ -76,7 +76,16 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// for `Reduced`, mesh stall nanoseconds), and the `FetchTelemetry`
 /// command / `Telemetry` reply (span-buffer flush, control plane —
 /// zero data bytes) landed.
-pub const PROTO_VERSION: u32 = 6;
+///
+/// v7: the serving plane — `Score`/`Scores` (batched CSR scoring: the
+/// request carries per-row nnz counts plus flat column/value arrays
+/// with f32 values, the reply carries f64 margins tagged with the
+/// model epoch they were computed against) and `Publish`/`Published`
+/// (hot model swap: new weights in, the freshly published epoch
+/// number back). `Score` and `Publish` carry `PROTO_VERSION` right
+/// after the tag, like `Setup`/`Ready`, so a stale scorer fails fast
+/// at its first request instead of silently mis-decoding a batch.
+pub const PROTO_VERSION: u32 = 7;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -206,6 +215,15 @@ impl Enc {
             self.vec_u32(inner);
         }
     }
+
+    /// f32 vector as raw IEEE bits — the serving plane's feature
+    /// values ([`crate::linalg::Csr`] stores values as f32).
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x.to_bits());
+        }
+    }
 }
 
 /// Cursor-based decoder over a frame payload.
@@ -290,6 +308,18 @@ impl<'a> Dec<'a> {
         let mut v = Vec::with_capacity(len);
         for _ in 0..len {
             v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>, String> {
+        let len = self.u64()? as usize;
+        if len.saturating_mul(4) > self.buf.len() - self.pos {
+            return Err(format!("truncated f32 vector of claimed length {len}"));
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(f32::from_bits(self.u32()?));
         }
         Ok(v)
     }
@@ -414,6 +444,29 @@ pub enum Msg {
     Finish { sums: Vec<Vec<f64>> },
     /// Reply to `Finish`: the spec's replicated dot products.
     Finished { dots: Vec<f64> },
+    /// Serving plane: score a batch of sparse rows. `cols` is the
+    /// feature dimension the client believes the model has (checked
+    /// against the served model), `row_nnz[i]` the number of nonzeros
+    /// in row `i`, and `col_idx`/`values` the flat concatenation of
+    /// every row's (column, value) pairs. Carries `PROTO_VERSION`
+    /// after the tag, like `Setup`. `id` is echoed in `Scores`.
+    Score {
+        id: u64,
+        cols: usize,
+        row_nnz: Vec<u32>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    },
+    /// Reply to `Score`: `margins[i] = x_i · w` under the model epoch
+    /// `epoch` — every reply is attributable to exactly one published
+    /// epoch, the hot-swap atomicity contract.
+    Scores { id: u64, epoch: u64, margins: Vec<f64> },
+    /// Serving plane: atomically publish new weights as the next model
+    /// epoch (a retrain landing, or an online-update flush). Carries
+    /// `PROTO_VERSION` after the tag.
+    Publish { loss: Loss, lambda: f64, weights: Vec<f64> },
+    /// Reply to `Publish`: the epoch number the new weights received.
+    Published { epoch: u64 },
 }
 
 mod tag {
@@ -451,6 +504,11 @@ mod tag {
     pub const REPLY_SCALAR: u8 = 36;
     pub const REPLY_DOTS: u8 = 37;
     pub const REPLY_TELEMETRY: u8 = 38;
+    // serving plane (v7)
+    pub const SCORE: u8 = 40;
+    pub const SCORES: u8 = 41;
+    pub const PUBLISH: u8 = 42;
+    pub const PUBLISHED: u8 = 43;
     // LocalSolve payload sub-tags
     pub const SOLVE_ADMM_PROX: u8 = 1;
     pub const SOLVE_COCOA_SDCA: u8 = 2;
@@ -714,6 +772,32 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             enc_reply(&mut e, reply);
             e.f64(*secs);
             e.u64(*queue_ns);
+        }
+        Msg::Score { id, cols, row_nnz, col_idx, values } => {
+            e.u8(tag::SCORE);
+            e.u32(PROTO_VERSION);
+            e.u64(*id);
+            e.usize(*cols);
+            e.vec_u32(row_nnz);
+            e.vec_u32(col_idx);
+            e.vec_f32(values);
+        }
+        Msg::Scores { id, epoch, margins } => {
+            e.u8(tag::SCORES);
+            e.u64(*id);
+            e.u64(*epoch);
+            e.vec_f64(margins);
+        }
+        Msg::Publish { loss, lambda, weights } => {
+            e.u8(tag::PUBLISH);
+            e.u32(PROTO_VERSION);
+            e.str(loss.name());
+            e.f64(*lambda);
+            e.vec_f64(weights);
+        }
+        Msg::Published { epoch } => {
+            e.u8(tag::PUBLISHED);
+            e.u64(*epoch);
         }
     }
     e.buf
@@ -1029,6 +1113,30 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let queue_ns = d.u64()?;
             Msg::Reply { reply, secs, queue_ns }
         }
+        tag::SCORE => Msg::Score {
+            id: {
+                check_version(d.u32()?)?;
+                d.u64()?
+            },
+            cols: d.usize()?,
+            row_nnz: d.vec_u32()?,
+            col_idx: d.vec_u32()?,
+            values: d.vec_f32()?,
+        },
+        tag::SCORES => Msg::Scores {
+            id: d.u64()?,
+            epoch: d.u64()?,
+            margins: d.vec_f64()?,
+        },
+        tag::PUBLISH => Msg::Publish {
+            loss: {
+                check_version(d.u32()?)?;
+                loss_from(&d.str()?)?
+            },
+            lambda: d.f64()?,
+            weights: d.vec_f64()?,
+        },
+        tag::PUBLISHED => Msg::Published { epoch: d.u64()? },
         other => return Err(format!("unknown message tag {other}")),
     };
     d.finish()?;
@@ -1272,7 +1380,10 @@ pub fn reply_data_bytes(reply: &Reply) -> u64 {
 /// f64 data-vector payload bytes a message moves over a driver link —
 /// the [`super::Measured::driver_data_bytes`] accounting. Under the p2p
 /// data plane this must be 0 for every frame after round 0: the
-/// scalar-only driver invariant.
+/// scalar-only driver invariant. The v7 serving frames ride serving
+/// connections, never a training driver link, but are accounted the
+/// same way (data vectors count, ids/epochs are control scalars) so a
+/// serving-plane byte budget composes with the training one.
 pub fn msg_data_bytes(msg: &Msg) -> u64 {
     match msg {
         Msg::Setup(_)
@@ -1281,13 +1392,17 @@ pub fn msg_data_bytes(msg: &Msg) -> u64 {
         | Msg::Abort { .. }
         | Msg::Mesh { .. }
         | Msg::MeshOk
-        | Msg::Finished { .. } => 0,
+        | Msg::Finished { .. }
+        | Msg::Published { .. } => 0,
         Msg::Cmd(cmd) | Msg::Reduce { cmd, .. } => cmd_data_bytes(cmd),
         Msg::Reply { reply, .. } => reply_data_bytes(reply),
         Msg::Reduced { reply, .. } => reply_data_bytes(reply),
         Msg::Finish { sums } => {
             sums.iter().map(|s| 8 * s.len() as u64).sum()
         }
+        Msg::Score { values, .. } => 4 * values.len() as u64,
+        Msg::Scores { margins, .. } => 8 * margins.len() as u64,
+        Msg::Publish { weights, .. } => 8 * weights.len() as u64,
     }
 }
 
@@ -1558,6 +1673,114 @@ mod tests {
         e.str("mesh");
         e.u8(tag::CMD_RESET);
         assert!(decode(&e.buf).unwrap_err().contains("unknown topology"));
+    }
+
+    #[test]
+    fn serving_frames_roundtrip() {
+        // empty batch
+        roundtrip(Msg::Score {
+            id: 1,
+            cols: 10,
+            row_nnz: vec![],
+            col_idx: vec![],
+            values: vec![],
+        });
+        // a real batch, including an all-zero row and awkward f32 bits
+        roundtrip(Msg::Score {
+            id: u64::MAX,
+            cols: 5,
+            row_nnz: vec![2, 0, 1],
+            col_idx: vec![0, 4, 2],
+            values: vec![0.1, -0.0, f32::MIN_POSITIVE],
+        });
+        roundtrip(Msg::Scores { id: 7, epoch: 3, margins: vec![] });
+        roundtrip(Msg::Scores {
+            id: 7,
+            epoch: 3,
+            margins: vec![0.1 + 0.2, -0.0, f64::MIN_POSITIVE],
+        });
+        roundtrip(Msg::Publish {
+            loss: Loss::Logistic,
+            lambda: 1e-4,
+            weights: vec![0.1 + 0.2, -1.5],
+        });
+        roundtrip(Msg::Publish {
+            loss: Loss::SquaredHinge,
+            lambda: 0.5,
+            weights: vec![],
+        });
+        roundtrip(Msg::Published { epoch: 1 });
+        roundtrip(Msg::Published { epoch: u64::MAX });
+    }
+
+    #[test]
+    fn serving_frame_version_and_bits() {
+        // Score carries the version right after the tag, like Setup
+        let mut bytes = encode(&Msg::Score {
+            id: 1,
+            cols: 3,
+            row_nnz: vec![1],
+            col_idx: vec![0],
+            values: vec![1.0],
+        });
+        bytes[1..5].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("version mismatch"), "{err}");
+        // so does Publish
+        let mut bytes = encode(&Msg::Publish {
+            loss: Loss::Logistic,
+            lambda: 1e-3,
+            weights: vec![1.0],
+        });
+        bytes[1..5].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("version mismatch"), "{err}");
+        // f32 feature values survive bitwise
+        for v in [0.1f32, -0.0, f32::MAX, f32::MIN_POSITIVE] {
+            let msg = Msg::Score {
+                id: 0,
+                cols: 1,
+                row_nnz: vec![1],
+                col_idx: vec![0],
+                values: vec![v],
+            };
+            let Msg::Score { values, .. } = decode(&encode(&msg)).unwrap() else {
+                panic!()
+            };
+            assert_eq!(values[0].to_bits(), v.to_bits());
+        }
+        // absurd claimed f32 length fails fast instead of allocating
+        let mut d = Dec::new(&u64::MAX.to_le_bytes());
+        assert!(d.vec_f32().is_err());
+    }
+
+    #[test]
+    fn serving_frame_accounting() {
+        assert_eq!(
+            msg_data_bytes(&Msg::Score {
+                id: 9,
+                cols: 100,
+                row_nnz: vec![3, 2],
+                col_idx: vec![0, 1, 2, 3, 4],
+                values: vec![0.0; 5],
+            }),
+            20,
+            "f32 feature values are data; nnz counts and columns are \
+             structure, ids are control"
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Scores { id: 9, epoch: 2, margins: vec![0.0; 6] }),
+            48
+        );
+        assert_eq!(
+            msg_data_bytes(&Msg::Publish {
+                loss: Loss::Logistic,
+                lambda: 1e-3,
+                weights: vec![0.0; 4],
+            }),
+            32
+        );
+        assert_eq!(msg_data_bytes(&Msg::Published { epoch: 5 }), 0);
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Blocking client for the serving plane: one TCP connection, one
+//! in-flight request (the batched protocol gets its throughput from
+//! batch size and from many connections, not from pipelining).
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use crate::linalg::Csr;
+use crate::loss::Loss;
+use crate::net::wire::{self, Msg};
+
+use super::csr_to_batch;
+
+/// A connected scoring client. Request ids are per-connection
+/// monotonic and echoed by the server, so a mismatched reply is a
+/// protocol error, not silent misattribution.
+pub struct ScoreClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl ScoreClient {
+    pub fn connect(addr: &str) -> Result<ScoreClient, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+        );
+        Ok(ScoreClient { reader, writer: BufWriter::new(stream), next_id: 0 })
+    }
+
+    /// Score a batch already in CSR form. Returns (epoch, margins):
+    /// the epoch is the published model the margins were computed
+    /// against — the attribution handle for hot-swap tests.
+    pub fn score_csr(&mut self, x: &Csr) -> Result<(u64, Vec<f64>), String> {
+        let (row_nnz, col_idx, values) = csr_to_batch(x);
+        self.score_parts(x.cols, row_nnz, col_idx, values)
+    }
+
+    /// Score a batch given as per-row (col, value) lists.
+    pub fn score_rows(
+        &mut self,
+        cols: usize,
+        rows: &[Vec<(u32, f32)>],
+    ) -> Result<(u64, Vec<f64>), String> {
+        let mut row_nnz = Vec::with_capacity(rows.len());
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for row in rows {
+            row_nnz.push(row.len() as u32);
+            for &(c, v) in row {
+                col_idx.push(c);
+                values.push(v);
+            }
+        }
+        self.score_parts(cols, row_nnz, col_idx, values)
+    }
+
+    fn score_parts(
+        &mut self,
+        cols: usize,
+        row_nnz: Vec<u32>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<(u64, Vec<f64>), String> {
+        self.next_id += 1;
+        let id = self.next_id;
+        wire::send(
+            &mut self.writer,
+            &Msg::Score { id, cols, row_nnz, col_idx, values },
+        )?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        match wire::recv(&mut self.reader)? {
+            Some(Msg::Scores { id: got, epoch, margins }) => {
+                if got != id {
+                    return Err(format!("reply id {got} for request {id}"));
+                }
+                Ok((epoch, margins))
+            }
+            Some(Msg::Abort { msg }) => Err(format!("server aborted: {msg}")),
+            Some(other) => Err(format!("unexpected reply to Score: {other:?}")),
+            None => Err("server closed the connection mid-request".to_string()),
+        }
+    }
+
+    /// Publish new weights as the next model epoch (a retrain landing,
+    /// or a test driving a hot swap). Returns the new epoch number.
+    pub fn publish(
+        &mut self,
+        loss: Loss,
+        lambda: f64,
+        weights: Vec<f64>,
+    ) -> Result<u64, String> {
+        wire::send(&mut self.writer, &Msg::Publish { loss, lambda, weights })?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        match wire::recv(&mut self.reader)? {
+            Some(Msg::Published { epoch }) => Ok(epoch),
+            Some(Msg::Abort { msg }) => Err(format!("server aborted: {msg}")),
+            Some(other) => Err(format!("unexpected reply to Publish: {other:?}")),
+            None => Err("server closed the connection mid-request".to_string()),
+        }
+    }
+
+    /// Orderly close: the server drops the connection without an abort.
+    pub fn shutdown(mut self) {
+        let _ = wire::send(&mut self.writer, &Msg::Shutdown);
+        let _ = self.writer.flush();
+    }
+}

@@ -1,0 +1,355 @@
+//! The serving plane: train-to-inference scoring over the wire.
+//!
+//! Training produces a [`crate::coordinator::artifact::ModelArtifact`];
+//! this module turns one into a running scorer. A [`Front`] holds the
+//! current model epoch behind an [`EpochPtr`] (an `ArcSwap`-style
+//! atomically published pointer built from `Mutex<Arc<_>>` — the crate
+//! is dependency-free) and a set of per-shard [`Replica`]s, each with
+//! its own persistent [`ComputePool`], dispatched round-robin.
+//!
+//! Scoring reuses the PR-5 block kernels verbatim: a request batch
+//! becomes a [`Csr`], is wrapped in a [`SparseShard`] on the replica's
+//! pool, and scored with the same [`ShardCompute::margins`] code path
+//! training uses — which is what makes served margins **bitwise equal**
+//! to in-process margins on the same rows (the engine's fixed-order
+//! block merge makes the thread count irrelevant to the bits).
+//!
+//! Hot model swap: [`EpochPtr::publish`] atomically replaces the
+//! current epoch. Every batch snapshots the `Arc` once at entry, so
+//! in-flight batches finish on the epoch they started with and every
+//! `Scores` reply is attributable to exactly one published epoch —
+//! no torn reads by construction.
+//!
+//! Between full retrains, [`online::OnlineUpdater`] absorbs streaming
+//! examples with the paper's parallel-SGD special case (§4.3 / the
+//! local-approximation scheme with one SGD pass as the inner solver)
+//! and publishes the averaged result as a new epoch.
+//!
+//! Wire format: the v7 `Score`/`Scores`/`Publish`/`Published` frames
+//! (`rust/src/net/README.md` has the diagrams); [`server`] is the
+//! accept loop, [`client`] the blocking request client.
+
+pub mod client;
+pub mod online;
+pub mod server;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::artifact::ModelArtifact;
+use crate::linalg::Csr;
+use crate::loss::Loss;
+use crate::objective::engine::{self, ComputePool};
+use crate::objective::{Shard, ShardCompute, SparseShard};
+
+/// One published model epoch: immutable once built, shared by `Arc`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeModel {
+    /// monotonically increasing publish counter (first load = 1)
+    pub epoch: u64,
+    pub loss: Loss,
+    pub lambda: f64,
+    pub m: usize,
+    pub weights: Vec<f64>,
+}
+
+impl ServeModel {
+    /// Epoch 1: the artifact a serving process starts from.
+    pub fn from_artifact(a: &ModelArtifact) -> ServeModel {
+        ServeModel {
+            epoch: 1,
+            loss: a.loss,
+            lambda: a.lambda,
+            m: a.m,
+            weights: a.weights.clone(),
+        }
+    }
+}
+
+/// Atomically published model pointer. `load` clones the `Arc` under a
+/// briefly held lock (no reader ever blocks on a scoring pass);
+/// `publish` swaps in a new epoch. In-flight batches keep scoring the
+/// `Arc` they snapshotted — the old epoch is freed when its last
+/// in-flight batch drops it.
+pub struct EpochPtr {
+    cur: Mutex<Arc<ServeModel>>,
+}
+
+impl EpochPtr {
+    pub fn new(model: ServeModel) -> EpochPtr {
+        EpochPtr { cur: Mutex::new(Arc::new(model)) }
+    }
+
+    /// Snapshot the current epoch (one `Arc` clone).
+    pub fn load(&self) -> Arc<ServeModel> {
+        self.cur.lock().unwrap().clone()
+    }
+
+    /// Atomically publish new weights as the next epoch; returns the
+    /// new epoch number. The epoch counter is advanced under the same
+    /// lock as the swap, so concurrent publishers serialize and every
+    /// epoch number names exactly one weight vector.
+    pub fn publish(&self, loss: Loss, lambda: f64, weights: Vec<f64>) -> u64 {
+        let mut cur = self.cur.lock().unwrap();
+        let epoch = cur.epoch + 1;
+        let m = weights.len();
+        *cur = Arc::new(ServeModel { epoch, loss, lambda, m, weights });
+        epoch
+    }
+}
+
+/// Validate and assemble a wire batch (per-row nnz counts + flat
+/// column/value arrays) into a [`Csr`]. Rejects inconsistent counts
+/// and out-of-range columns instead of panicking in a kernel.
+pub fn batch_to_csr(
+    cols: usize,
+    row_nnz: &[u32],
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+) -> Result<Csr, String> {
+    let nnz: usize = row_nnz.iter().map(|&k| k as usize).sum();
+    if col_idx.len() != nnz || values.len() != nnz {
+        return Err(format!(
+            "inconsistent score batch: row counts claim {nnz} nonzeros, got \
+             {} columns / {} values",
+            col_idx.len(),
+            values.len()
+        ));
+    }
+    if let Some(&bad) = col_idx.iter().find(|&&c| c as usize >= cols) {
+        return Err(format!("column {bad} out of range for m = {cols}"));
+    }
+    let mut row_ptr = Vec::with_capacity(row_nnz.len() + 1);
+    row_ptr.push(0usize);
+    let mut acc = 0usize;
+    for &k in row_nnz {
+        acc += k as usize;
+        row_ptr.push(acc);
+    }
+    Ok(Csr { rows: row_nnz.len(), cols, row_ptr, col_idx, values })
+}
+
+/// The inverse of [`batch_to_csr`]: flatten a [`Csr`] into the wire
+/// batch triple (per-row nnz, columns, values).
+pub fn csr_to_batch(x: &Csr) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+    let row_nnz = (0..x.rows).map(|i| x.row_nnz(i) as u32).collect();
+    (row_nnz, x.col_idx.clone(), x.values.clone())
+}
+
+/// One model replica: a persistent block pool that scores batches with
+/// the training margins kernel. Replicas share the published model
+/// (immutable `Arc`), so "replica" costs a thread pool, not a weight
+/// copy.
+pub struct Replica {
+    pool: Arc<ComputePool>,
+}
+
+impl Replica {
+    /// `threads = 0` sizes the pool to all available cores, 1 is the
+    /// serial inline pool (see [`engine::resolve_threads`]).
+    pub fn new(threads: usize) -> Replica {
+        Replica { pool: ComputePool::new(engine::resolve_threads(threads)) }
+    }
+
+    /// Score a batch: margins = X·w via the block-parallel training
+    /// kernel. Bitwise identical to `SparseShard::margins` on the same
+    /// rows for ANY pool size — it *is* `SparseShard::margins`.
+    pub fn score(&self, model: &ServeModel, x: Csr) -> Vec<f64> {
+        let rows = x.rows;
+        let shard = Shard { x, y: vec![0.0; rows], c: vec![1.0; rows] };
+        SparseShard::with_pool(shard, self.pool.clone()).margins(&model.weights)
+    }
+}
+
+/// The round-robin front: N replicas behind an atomic dispatch
+/// counter, one shared [`EpochPtr`]. This is the object a server
+/// thread-per-connection loop shares ([`server::spawn`]).
+pub struct Front {
+    epoch: EpochPtr,
+    replicas: Vec<Replica>,
+    next: AtomicUsize,
+}
+
+impl Front {
+    /// `replicas` pools of `threads` block threads each (both floors at
+    /// 1 replica; `threads = 0` = all cores).
+    pub fn new(model: ServeModel, replicas: usize, threads: usize) -> Front {
+        let n = replicas.max(1);
+        Front {
+            epoch: EpochPtr::new(model),
+            replicas: (0..n).map(|_| Replica::new(threads)).collect(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn from_artifact(a: &ModelArtifact, replicas: usize, threads: usize) -> Front {
+        Front::new(ServeModel::from_artifact(a), replicas, threads)
+    }
+
+    /// Current epoch snapshot (what the online updater trains from).
+    pub fn model(&self) -> Arc<ServeModel> {
+        self.epoch.load()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Score one wire batch on the next replica. The epoch is
+    /// snapshotted *before* assembly, so the reply's epoch is the one
+    /// the margins were computed against even if a publish lands
+    /// mid-batch.
+    pub fn score_batch(
+        &self,
+        cols: usize,
+        row_nnz: &[u32],
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<(u64, Vec<f64>), String> {
+        let model = self.epoch.load();
+        if cols != model.m {
+            return Err(format!(
+                "score batch has m = {cols}, the served model has m = {}",
+                model.m
+            ));
+        }
+        let x = batch_to_csr(cols, row_nnz, col_idx, values)?;
+        let r = self.next.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        Ok((model.epoch, self.replicas[r].score(&model, x)))
+    }
+
+    /// Publish new weights as the next epoch (the `Publish` frame and
+    /// the online updater both land here).
+    pub fn publish(
+        &self,
+        loss: Loss,
+        lambda: f64,
+        weights: Vec<f64>,
+    ) -> Result<u64, String> {
+        let m = self.epoch.load().m;
+        if weights.len() != m {
+            return Err(format!(
+                "published weights have m = {}, the served model has m = {m}",
+                weights.len()
+            ));
+        }
+        Ok(self.epoch.publish(loss, lambda, weights))
+    }
+}
+
+/// Percentile over an ASCENDING-sorted latency sample (nearest-rank).
+/// `p` in [0, 100]; returns 0 on an empty sample.
+pub fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::artifact::Provenance;
+
+    fn artifact(m: usize) -> ModelArtifact {
+        ModelArtifact {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-4,
+            m,
+            weights: (0..m).map(|j| (j as f64 + 1.0) * 0.25).collect(),
+            provenance: Provenance {
+                method: "tera".into(),
+                dataset: "quick".into(),
+                nodes: 2,
+                seed: 7,
+                outer_iters: 3,
+                final_f: 1.0,
+            },
+        }
+    }
+
+    fn batch() -> Csr {
+        Csr::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![],
+                vec![(1, -1.0), (2, 0.5)],
+            ],
+        )
+    }
+
+    #[test]
+    fn served_margins_match_inproc_bitwise() {
+        let front = Front::from_artifact(&artifact(3), 3, 2);
+        let x = batch();
+        let reference = SparseShard::new(Shard {
+            x: x.clone(),
+            y: vec![0.0; x.rows],
+            c: vec![1.0; x.rows],
+        })
+        .margins(&front.model().weights);
+        // every replica must produce the same bits as the serial
+        // in-process reference
+        for _ in 0..front.replicas() * 2 {
+            let (row_nnz, cols_idx, vals) = csr_to_batch(&x);
+            let (epoch, margins) =
+                front.score_batch(3, &row_nnz, cols_idx, vals).unwrap();
+            assert_eq!(epoch, 1);
+            assert_eq!(margins.len(), reference.len());
+            for (a, b) in margins.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn publish_advances_epoch_and_inflight_semantics() {
+        let front = Front::from_artifact(&artifact(3), 1, 1);
+        // a snapshot taken before the publish keeps the old epoch
+        let before = front.model();
+        let e2 = front
+            .publish(Loss::SquaredHinge, 1e-4, vec![1.0, 2.0, 3.0])
+            .unwrap();
+        assert_eq!(before.epoch, 1, "in-flight batches finish on the old epoch");
+        assert_eq!(e2, 2);
+        assert_eq!(front.model().epoch, 2);
+        assert_eq!(front.model().weights, vec![1.0, 2.0, 3.0]);
+        // wrong dimension is refused, epoch unchanged
+        assert!(front.publish(Loss::SquaredHinge, 1e-4, vec![1.0]).is_err());
+        assert_eq!(front.model().epoch, 2);
+    }
+
+    #[test]
+    fn batch_validation_rejects_garbage() {
+        // counts that don't match the flat arrays
+        assert!(batch_to_csr(3, &[2, 1], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // out-of-range column
+        assert!(batch_to_csr(3, &[1], vec![3], vec![1.0]).is_err());
+        // mismatched m at the front
+        let front = Front::from_artifact(&artifact(3), 1, 1);
+        assert!(front.score_batch(4, &[], vec![], vec![]).is_err());
+        // the empty batch is legal and scores to an empty margin vector
+        let (epoch, margins) = front.score_batch(3, &[], vec![], vec![]).unwrap();
+        assert_eq!((epoch, margins.len()), (1, 0));
+    }
+
+    #[test]
+    fn batch_roundtrips_through_wire_triple() {
+        let x = batch();
+        let (row_nnz, col_idx, values) = csr_to_batch(&x);
+        let back = batch_to_csr(x.cols, &row_nnz, col_idx, values).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        assert_eq!(percentile_ns(&[], 99.0), 0);
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&s, 50.0), 50);
+        assert_eq!(percentile_ns(&s, 99.0), 99);
+        assert_eq!(percentile_ns(&s, 100.0), 100);
+        assert_eq!(percentile_ns(&[7], 50.0), 7);
+    }
+}

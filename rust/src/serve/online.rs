@@ -1,0 +1,245 @@
+//! Online updates between full retrains: the paper's parallel-SGD
+//! special case.
+//!
+//! The local-approximation scheme degenerates to parallel SGD when the
+//! inner solver is a single stochastic pass (§4.3 uses exactly this as
+//! the warm start). The serving twin: streaming examples accumulate in
+//! a buffer; on flush the buffer is partitioned into contiguous blocks
+//! (one per virtual node), each block runs a deterministic local SGD
+//! pass *starting from the currently served weights*, and the per-block
+//! results are example-count-weighted averaged — then published as the
+//! next epoch through the same [`Front::publish`] path a full retrain
+//! uses. Every step is sequential-deterministic (seeded per-part RNG,
+//! fixed part order in the average), so an online epoch is a pure
+//! function of (served model, buffered examples, seed).
+
+use crate::loss::Loss;
+use crate::util::rng::Pcg64;
+
+use super::Front;
+
+/// Streaming-example absorber. Not `Sync` by design: one updater owns
+/// its buffer (feed it from one ingest thread); publication is the
+/// only cross-thread effect and goes through the epoch pointer.
+pub struct OnlineUpdater {
+    parts: usize,
+    eta0: f64,
+    seed: u64,
+    /// examples absorbed over the updater's lifetime (decays the step
+    /// size across flushes, like a continued SGD schedule)
+    absorbed: u64,
+    rows: Vec<Vec<(u32, f32)>>,
+    labels: Vec<f64>,
+}
+
+impl OnlineUpdater {
+    /// `parts` virtual SGD nodes per flush (floored at 1), base step
+    /// size `eta0`, deterministic `seed`.
+    pub fn new(parts: usize, eta0: f64, seed: u64) -> OnlineUpdater {
+        OnlineUpdater {
+            parts: parts.max(1),
+            eta0,
+            seed,
+            absorbed: 0,
+            rows: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Buffer one example (sparse row + label).
+    pub fn absorb(&mut self, row: Vec<(u32, f32)>, label: f64) {
+        self.rows.push(row);
+        self.labels.push(label);
+    }
+
+    /// Buffered examples not yet folded into a published epoch.
+    pub fn pending(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Fold the buffer into the served model and publish the result as
+    /// a new epoch. Returns `Ok(None)` when the buffer is empty,
+    /// `Ok(Some(epoch))` after a publish. The buffer is consumed
+    /// either way; a validation error (feature index out of range)
+    /// leaves the model unchanged.
+    pub fn flush(&mut self, front: &Front) -> Result<Option<u64>, String> {
+        if self.rows.is_empty() {
+            return Ok(None);
+        }
+        let model = front.model();
+        let m = model.m;
+        let rows = std::mem::take(&mut self.rows);
+        let labels = std::mem::take(&mut self.labels);
+        for row in &rows {
+            if let Some(&(c, _)) = row.iter().find(|&&(c, _)| c as usize >= m) {
+                return Err(format!(
+                    "online example has feature {c}, the served model has m = {m}"
+                ));
+            }
+        }
+        let n = rows.len();
+        let parts = self.parts.min(n);
+        // contiguous blocks, sizes differing by at most one — the same
+        // scheme the example partitioner's contiguous strategy uses
+        let base = n / parts;
+        let extra = n % parts;
+        let mut start = 0usize;
+        let mut averaged = vec![0.0f64; m];
+        for p in 0..parts {
+            let len = base + usize::from(p < extra);
+            let span = start..start + len;
+            start += len;
+            let wp = local_sgd(
+                model.loss,
+                model.lambda,
+                &model.weights,
+                &rows[span.clone()],
+                &labels[span.clone()],
+                self.eta0,
+                self.absorbed,
+                self.seed,
+                p as u64,
+            );
+            // fixed part order ⇒ deterministic average
+            let weight = len as f64 / n as f64;
+            for (aj, wj) in averaged.iter_mut().zip(&wp) {
+                *aj += weight * wj;
+            }
+        }
+        self.absorbed += n as u64;
+        front.publish(model.loss, model.lambda, averaged).map(Some)
+    }
+}
+
+/// One deterministic local SGD pass over a block, warm-started from
+/// `w0`. Regularization uses the lazy-scale representation w = s·v, so
+/// a step costs O(nnz(x_i)) instead of O(m).
+#[allow(clippy::too_many_arguments)]
+fn local_sgd(
+    loss: Loss,
+    lambda: f64,
+    w0: &[f64],
+    rows: &[Vec<(u32, f32)>],
+    labels: &[f64],
+    eta0: f64,
+    t0: u64,
+    seed: u64,
+    part: u64,
+) -> Vec<f64> {
+    let mut v = w0.to_vec();
+    let mut s = 1.0f64;
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    Pcg64::with_stream(seed, part).shuffle(&mut order);
+    for (k, &i) in order.iter().enumerate() {
+        let t = t0 + k as u64;
+        let eta = eta0 / (1.0 + t as f64).sqrt();
+        let mut z = 0.0;
+        for &(c, x) in &rows[i] {
+            z += x as f64 * v[c as usize];
+        }
+        z *= s;
+        let g = loss.dz(z, labels[i]);
+        // shrink (the λ/2‖w‖² gradient), then the sparse data step
+        s *= (1.0 - eta * lambda).max(1e-12);
+        if s < 1e-9 {
+            for vj in v.iter_mut() {
+                *vj *= s;
+            }
+            s = 1.0;
+        }
+        if g != 0.0 {
+            let a = -eta * g / s;
+            for &(c, x) in &rows[i] {
+                v[c as usize] += a * x as f64;
+            }
+        }
+    }
+    for vj in v.iter_mut() {
+        *vj *= s;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::artifact::{ModelArtifact, Provenance};
+    use crate::data::synth;
+    use crate::objective::{Objective, Shard, SparseShard};
+
+    fn zero_artifact(m: usize) -> ModelArtifact {
+        ModelArtifact {
+            loss: Loss::SquaredHinge,
+            lambda: 1e-3,
+            m,
+            weights: vec![0.0; m],
+            provenance: Provenance {
+                method: "tera".into(),
+                dataset: "quick".into(),
+                nodes: 1,
+                seed: 1,
+                outer_iters: 0,
+                final_f: f64::NAN,
+            },
+        }
+    }
+
+    fn dataset_rows(
+        ds: &crate::data::Dataset,
+    ) -> (Vec<Vec<(u32, f32)>>, Vec<f64>) {
+        let rows = (0..ds.n()).map(|i| ds.x.row(i).collect()).collect();
+        (rows, ds.y.clone())
+    }
+
+    #[test]
+    fn flush_publishes_and_improves_objective() {
+        let ds = synth::quick(300, 40, 8, 23);
+        let front = Front::from_artifact(&zero_artifact(40), 2, 1);
+        let mut upd = OnlineUpdater::new(4, 0.5, 11);
+        let (rows, ys) = dataset_rows(&ds);
+        for (row, y) in rows.into_iter().zip(ys) {
+            upd.absorb(row, y);
+        }
+        assert_eq!(upd.pending(), 300);
+        let epoch = upd.flush(&front).unwrap();
+        assert_eq!(epoch, Some(2));
+        assert_eq!(upd.pending(), 0);
+        assert_eq!(upd.flush(&front).unwrap(), None, "empty buffer is a no-op");
+        // the absorbed stream must beat the zero model on its own data
+        let obj = Objective::new(1e-3, Loss::SquaredHinge);
+        let whole = SparseShard::new(Shard::whole(&ds));
+        let (f_new, _) = obj.eval(&[&whole], &front.model().weights);
+        let (f_zero, _) = obj.eval(&[&whole], &[0.0; 40]);
+        assert!(f_new < f_zero, "{f_new} !< {f_zero}");
+    }
+
+    #[test]
+    fn flush_is_deterministic() {
+        let ds = synth::quick(120, 20, 6, 29);
+        let run = || {
+            let front = Front::from_artifact(&zero_artifact(20), 3, 2);
+            let mut upd = OnlineUpdater::new(3, 0.25, 5);
+            let (rows, ys) = dataset_rows(&ds);
+            for (row, y) in rows.into_iter().zip(ys) {
+                upd.absorb(row, y);
+            }
+            upd.flush(&front).unwrap();
+            front.model().weights.clone()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn out_of_range_feature_leaves_model_unchanged() {
+        let front = Front::from_artifact(&zero_artifact(4), 1, 1);
+        let mut upd = OnlineUpdater::new(2, 0.1, 1);
+        upd.absorb(vec![(9, 1.0)], 1.0);
+        assert!(upd.flush(&front).is_err());
+        assert_eq!(front.model().epoch, 1);
+    }
+}

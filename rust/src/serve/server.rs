@@ -1,0 +1,101 @@
+//! The serving accept loop: thread-per-connection over the v7 frames.
+//!
+//! Each connection speaks the length-prefixed wire protocol
+//! ([`crate::net::wire`]): `Score` requests are answered with `Scores`
+//! (the margins plus the epoch they were computed against), `Publish`
+//! atomically swaps in a new model epoch for EVERY connection and is
+//! acknowledged with `Published`, `Shutdown` (or a clean EOF) closes
+//! the connection. Malformed traffic gets an `Abort` with the reason
+//! and the connection is dropped — one bad client never takes the
+//! front down.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::net::wire::{self, Msg};
+
+use super::Front;
+
+/// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and run the
+/// accept loop on a background thread. Returns the bound address —
+/// what a [`super::client::ScoreClient`] connects to — and the accept
+/// thread's handle. The loop runs for the life of the process.
+pub fn spawn(front: Arc<Front>, addr: &str) -> Result<(SocketAddr, JoinHandle<()>), String> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| format!("serve bind {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("serve local_addr: {e}"))?;
+    let handle = std::thread::spawn(move || accept_loop(listener, front));
+    Ok((local, handle))
+}
+
+fn accept_loop(listener: TcpListener, front: Arc<Front>) {
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let front = front.clone();
+                std::thread::spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".to_string());
+                    if let Err(e) = handle_conn(&front, stream) {
+                        eprintln!("serve: connection {peer}: {e}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("serve: accept: {e}"),
+        }
+    }
+}
+
+/// One connection's frame loop.
+fn handle_conn(front: &Front, stream: TcpStream) -> Result<(), String> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+    );
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let msg = match wire::recv(&mut reader)? {
+            Some(m) => m,
+            None => return Ok(()), // clean EOF
+        };
+        match msg {
+            Msg::Score { id, cols, row_nnz, col_idx, values } => {
+                match front.score_batch(cols, &row_nnz, col_idx, values) {
+                    Ok((epoch, margins)) => {
+                        wire::send(&mut writer, &Msg::Scores { id, epoch, margins })?;
+                        writer.flush().map_err(|e| format!("flush: {e}"))?;
+                    }
+                    Err(msg) => return abort(&mut writer, msg),
+                }
+            }
+            Msg::Publish { loss, lambda, weights } => {
+                match front.publish(loss, lambda, weights) {
+                    Ok(epoch) => {
+                        wire::send(&mut writer, &Msg::Published { epoch })?;
+                        writer.flush().map_err(|e| format!("flush: {e}"))?;
+                    }
+                    Err(msg) => return abort(&mut writer, msg),
+                }
+            }
+            Msg::Shutdown => return Ok(()),
+            other => {
+                return abort(
+                    &mut writer,
+                    format!("unexpected frame on a serving connection: {other:?}"),
+                )
+            }
+        }
+    }
+}
+
+fn abort(writer: &mut impl Write, msg: String) -> Result<(), String> {
+    let _ = wire::send(writer, &Msg::Abort { msg: msg.clone() });
+    let _ = writer.flush();
+    Err(msg)
+}

@@ -369,6 +369,134 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
     });
 }
 
+/// Random wire batch with adversarial nnz patterns: many empty rows, a
+/// rare heavy row, denormal/negative-zero f32 payloads.
+fn draw_batch(rng: &mut Pcg64, rows: usize) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+    let mut row_nnz = Vec::with_capacity(rows);
+    let mut col_idx = Vec::new();
+    let mut values = Vec::new();
+    for _ in 0..rows {
+        let nnz = match rng.below(5) {
+            0 | 1 => 0,                 // empty rows dominate sparse traffic
+            2 | 3 => rng.below(4),
+            _ => 16 + rng.below(48),    // the occasional heavy row
+        };
+        row_nnz.push(nnz as u32);
+        for _ in 0..nnz {
+            col_idx.push(rng.below(1 << 20) as u32);
+            values.push(match rng.below(6) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE / 2.0, // subnormal
+                3 => f32::MAX,
+                _ => (rng.normal() * 10f64.powi(rng.below(7) as i32 - 3)) as f32,
+            });
+        }
+    }
+    (row_nnz, col_idx, values)
+}
+
+#[test]
+fn serving_frames_roundtrip_bitwise() {
+    // the v7 serving vocabulary over random batch shapes, *including the
+    // empty batch*: Score's f32 payload and Scores/Publish's f64 payload
+    // must travel bit for bit, and ids/epochs at the u64 extremes
+    let gen = UsizeRange(0, 48);
+    Runner::new(40, 0x5E7E).run(&gen, |&rows| {
+        let mut rng = Pcg64::new(rows as u64 + 0xC0FFEE);
+        let (row_nnz, col_idx, values) = draw_batch(&mut rng, rows);
+        let id = if rng.below(4) == 0 { u64::MAX } else { rng.next_u64() };
+        let score = Msg::Score {
+            id,
+            cols: 1 << 20,
+            row_nnz,
+            col_idx,
+            values: values.clone(),
+        };
+        let back = wire_roundtrip(&score);
+        if back != score {
+            return Err(format!("Score rows={rows}: {score:?} != {back:?}"));
+        }
+        let Msg::Score { values: vback, .. } = back else { unreachable!() };
+        for (a, b) in vback.iter().zip(&values) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("Score f32 bits changed: {a} vs {b}"));
+            }
+        }
+        let msgs = vec![
+            Msg::Scores {
+                id,
+                epoch: if rng.below(4) == 0 { u64::MAX } else { rng.next_u64() },
+                margins: draw_vec(&mut rng, rows),
+            },
+            Msg::Publish {
+                loss: Loss::Logistic,
+                lambda: rng.normal().abs() + 1e-12,
+                weights: draw_vec(&mut rng, rng.below(40)),
+            },
+            Msg::Published { epoch: rng.next_u64() },
+        ];
+        for msg in msgs {
+            let back = wire_roundtrip(&msg);
+            if back != msg {
+                return Err(format!("rows={rows}: {msg:?} != {back:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serving_batch_at_width_roundtrips() {
+    // a 64k-row Score frame (the protocol's intended max batch) with a
+    // mixed nnz profile survives the frame loop intact
+    let rows = 1 << 16;
+    let mut rng = Pcg64::new(0x64AB);
+    let mut row_nnz = Vec::with_capacity(rows);
+    let mut col_idx = Vec::new();
+    let mut values = Vec::new();
+    for i in 0..rows {
+        // one pathological row carries 4096 nonzeros; the rest 0–2
+        let nnz = if i == rows / 2 { 4096 } else { rng.below(3) };
+        row_nnz.push(nnz as u32);
+        for _ in 0..nnz {
+            col_idx.push(rng.below(1 << 24) as u32);
+            values.push(rng.normal() as f32);
+        }
+    }
+    let msg = Msg::Score {
+        id: 3,
+        cols: 1 << 24,
+        row_nnz: row_nnz.clone(),
+        col_idx: col_idx.clone(),
+        values: values.clone(),
+    };
+    let Msg::Score {
+        row_nnz: rn,
+        col_idx: ci,
+        values: vs,
+        ..
+    } = wire_roundtrip(&msg)
+    else {
+        panic!("wrong variant");
+    };
+    assert_eq!(rn, row_nnz);
+    assert_eq!(ci, col_idx);
+    assert_eq!(vs.len(), values.len());
+    for (a, b) in vs.iter().zip(&values) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // the 64k-margin reply survives too
+    let margins: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    let msg = Msg::Scores { id: 3, epoch: 9, margins: margins.clone() };
+    let Msg::Scores { margins: back, .. } = wire_roundtrip(&msg) else {
+        panic!("wrong variant");
+    };
+    for (a, b) in back.iter().zip(&margins) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
 #[test]
 fn full_ring_telemetry_flush_roundtrips() {
     // a worker flushing a completely full span ring (capacity 4096) with

@@ -1,0 +1,195 @@
+//! Integration tests for the serving plane: a real TCP server, the
+//! blocking client, and the train → artifact → serve joint.
+//!
+//! The load-bearing claims: margins scored over the wire are bitwise
+//! equal to the in-process reference; a hot swap mid-connection
+//! attributes every reply to exactly one published epoch; the online
+//! updater's flush lands over the same `Publish` path a retrain uses.
+
+use std::sync::Arc;
+
+use fadl::coordinator::artifact::{ModelArtifact, Provenance};
+use fadl::coordinator::config::Config;
+use fadl::coordinator::driver;
+use fadl::data::synth;
+use fadl::linalg::Csr;
+use fadl::loss::Loss;
+use fadl::objective::{Shard, ShardCompute, SparseShard};
+use fadl::serve::online::OnlineUpdater;
+use fadl::serve::{client::ScoreClient, server, Front};
+use fadl::util::rng::Pcg64;
+
+fn artifact(m: usize, seed: u64) -> ModelArtifact {
+    let mut rng = Pcg64::new(seed);
+    ModelArtifact {
+        loss: Loss::SquaredHinge,
+        lambda: 1e-4,
+        m,
+        weights: (0..m).map(|_| rng.normal()).collect(),
+        provenance: Provenance {
+            method: "fadl".into(),
+            dataset: "quick".into(),
+            nodes: 2,
+            seed,
+            outer_iters: 5,
+            final_f: 0.5,
+        },
+    }
+}
+
+fn inproc_margins(x: &Csr, w: &[f64]) -> Vec<f64> {
+    let rows = x.rows;
+    SparseShard::new(Shard { x: x.clone(), y: vec![0.0; rows], c: vec![1.0; rows] })
+        .margins(w)
+}
+
+fn assert_bits(got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn served_margins_bitwise_equal_inproc_over_tcp() {
+    let a = artifact(40, 11);
+    let ds = synth::quick(200, 40, 8, 12);
+    let front = Arc::new(Front::from_artifact(&a, 2, 2));
+    let (addr, _h) = server::spawn(front, "127.0.0.1:0").unwrap();
+    let mut client = ScoreClient::connect(&addr.to_string()).unwrap();
+    // several batch shapes, including the empty batch and batches with
+    // all-empty rows
+    for (start, count) in [(0usize, 64usize), (64, 1), (65, 0), (70, 128)] {
+        let rows: Vec<Vec<(u32, f32)>> = (0..count)
+            .map(|i| ds.x.row((start + i) % ds.n()).collect())
+            .collect();
+        let x = Csr::from_rows(ds.m(), &rows);
+        let want = inproc_margins(&x, &a.weights);
+        let (epoch, got) = client.score_csr(&x).unwrap();
+        assert_eq!(epoch, 1);
+        assert_bits(&got, &want);
+        // the row-list entry point must hit the same path
+        let (epoch, got) = client.score_rows(ds.m(), &rows).unwrap();
+        assert_eq!(epoch, 1);
+        assert_bits(&got, &want);
+    }
+    client.shutdown();
+}
+
+#[test]
+fn hot_swap_attributes_every_reply_to_one_epoch() {
+    let a = artifact(16, 21);
+    let w2: Vec<f64> = a.weights.iter().map(|w| w + 1.0).collect();
+    let x = Csr::from_rows(16, &[vec![(0, 1.0), (5, -2.0)], vec![(15, 0.5)]]);
+    let ref1 = inproc_margins(&x, &a.weights);
+    let ref2 = inproc_margins(&x, &w2);
+    let front = Arc::new(Front::from_artifact(&a, 1, 1));
+    let (addr, _h) = server::spawn(front, "127.0.0.1:0").unwrap();
+    let mut scorer = ScoreClient::connect(&addr.to_string()).unwrap();
+    let mut publisher = ScoreClient::connect(&addr.to_string()).unwrap();
+    // before the swap: epoch 1, epoch-1 bits
+    let (e, m) = scorer.score_csr(&x).unwrap();
+    assert_eq!(e, 1);
+    assert_bits(&m, &ref1);
+    // the swap lands on a *different* connection — the front is shared
+    let e2 = publisher.publish(a.loss, a.lambda, w2).unwrap();
+    assert_eq!(e2, 2);
+    // after the swap: the same scoring connection sees epoch 2 and the
+    // new weights' bits — never a mix
+    let (e, m) = scorer.score_csr(&x).unwrap();
+    assert_eq!(e, 2);
+    assert_bits(&m, &ref2);
+    // a dimension-mismatched publish is refused server-side and the
+    // epoch does not advance
+    assert!(publisher.publish(a.loss, a.lambda, vec![1.0]).is_err());
+    let mut fresh = ScoreClient::connect(&addr.to_string()).unwrap();
+    let (e, _) = fresh.score_csr(&x).unwrap();
+    assert_eq!(e, 2);
+    scorer.shutdown();
+    fresh.shutdown();
+}
+
+#[test]
+fn online_updater_flush_publishes_over_the_wire_path() {
+    // the updater flushes into the same Front a TCP server scores from:
+    // a client connected across the swap observes the new epoch
+    let a = artifact(30, 31);
+    let ds = synth::quick(300, 30, 6, 32);
+    let front = Arc::new(Front::from_artifact(&a, 1, 2));
+    let (addr, _h) = server::spawn(front.clone(), "127.0.0.1:0").unwrap();
+    let mut client = ScoreClient::connect(&addr.to_string()).unwrap();
+    let x = Csr::from_rows(
+        30,
+        &(0..16)
+            .map(|i| ds.x.row(i).collect::<Vec<_>>())
+            .collect::<Vec<_>>(),
+    );
+    let (e, _) = client.score_csr(&x).unwrap();
+    assert_eq!(e, 1);
+    let mut upd = OnlineUpdater::new(3, 0.5, 7);
+    for i in 0..ds.n() {
+        upd.absorb(ds.x.row(i).collect(), ds.y[i]);
+    }
+    let e2 = upd.flush(&front).unwrap().expect("non-empty flush publishes");
+    assert_eq!(e2, 2);
+    // the served margins now carry the flushed weights' bits
+    let want = inproc_margins(&x, &front.model().weights);
+    let (e, m) = client.score_csr(&x).unwrap();
+    assert_eq!(e, 2);
+    assert_bits(&m, &want);
+    client.shutdown();
+}
+
+#[test]
+fn train_artifact_serve_joint_end_to_end() {
+    // the full joint: train through the driver with model_out, load the
+    // artifact, serve it, and demand the served margins match scoring
+    // the training weights in-process — bit for bit
+    let dir = std::env::temp_dir().join(format!("fadl_serve_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.fadl").to_string_lossy().to_string();
+    let cfg = Config {
+        name: "serve-it".into(),
+        dataset: "quick".into(),
+        quick_n: 240,
+        quick_m: 32,
+        quick_nnz: 6,
+        nodes: 2,
+        max_outer: 4,
+        model_out: Some(model_path.clone()),
+        ..Config::default()
+    };
+    let exp = driver::prepare(&cfg).unwrap();
+    let (w, _) = driver::run(&exp).unwrap();
+    let a = ModelArtifact::load(&model_path).unwrap();
+    assert_bits(&a.weights, &w);
+    let front = Arc::new(Front::from_artifact(&a, 2, 2));
+    let (addr, _h) = server::spawn(front, "127.0.0.1:0").unwrap();
+    let mut client = ScoreClient::connect(&addr.to_string()).unwrap();
+    let rows: Vec<Vec<(u32, f32)>> =
+        (0..50).map(|i| exp.train.x.row(i).collect()).collect();
+    let x = Csr::from_rows(exp.train.m(), &rows);
+    let (epoch, got) = client.score_csr(&x).unwrap();
+    assert_eq!(epoch, 1);
+    assert_bits(&got, &inproc_margins(&x, &w));
+    client.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_batch_aborts_cleanly_without_killing_the_server() {
+    let a = artifact(8, 41);
+    let front = Arc::new(Front::from_artifact(&a, 1, 1));
+    let (addr, _h) = server::spawn(front, "127.0.0.1:0").unwrap();
+    // a batch whose m disagrees with the served model: the server must
+    // reply Abort (surfaced as Err) and stay up for new connections
+    let mut bad = ScoreClient::connect(&addr.to_string()).unwrap();
+    let x = Csr::from_rows(9, &[vec![(8, 1.0)]]);
+    assert!(bad.score_csr(&x).is_err());
+    let mut ok = ScoreClient::connect(&addr.to_string()).unwrap();
+    let good = Csr::from_rows(8, &[vec![(7, 1.0)]]);
+    let (epoch, m) = ok.score_csr(&good).unwrap();
+    assert_eq!(epoch, 1);
+    assert_eq!(m.len(), 1);
+    ok.shutdown();
+}
