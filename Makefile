@@ -57,6 +57,18 @@ parity:
 	      --method $$m --nodes 4 --max-outer 8 \
 	      --data-plane $$plane --topology tree --threads 4 || exit 1; \
 	  done; \
+	  echo "== parity: $$m / p2p / tree / overlap (bitwise) =="; \
+	  $(CARGO) run --release --bin net_smoke -- \
+	    --method $$m --nodes 4 --max-outer 8 \
+	    --data-plane p2p --topology tree --overlap || exit 1; \
+	  echo "== parity: $$m / p2p / tree / f32 frames (accuracy gate) =="; \
+	  $(CARGO) run --release --bin net_smoke -- \
+	    --method $$m --nodes 4 --max-outer 8 \
+	    --data-plane p2p --topology tree --frame-encoding f32 || exit 1; \
+	  echo "== parity: $$m / inproc+tcp / tree / simd off =="; \
+	  $(CARGO) run --release --bin net_smoke -- \
+	    --method $$m --nodes 4 --max-outer 8 \
+	    --data-plane p2p --topology tree --no-simd || exit 1; \
 	done
 
 ## per-method driver/mesh byte table: every method runs under the p2p
@@ -88,7 +100,8 @@ bench-check:
 	$(CARGO) bench --bench hotpath -- --test --scaling --out-dir bench-out
 	$(CARGO) run --release --bin serve_smoke -- --quick --out-dir bench-out
 	$(CARGO) run --release --bin bench_check -- \
-	  bench-out/BENCH_5.json bench-out/SERVE_7.json rust/benches/baseline.json
+	  bench-out/BENCH_5.json bench-out/BENCH_8.json bench-out/SERVE_7.json \
+	  rust/benches/baseline.json
 
 ## capture a per-rank span timeline for any method (TRACE_METHOD,
 ## TRACE_PLANE override): writes trace-out/$(TRACE_METHOD).trace.json —
@@ -104,11 +117,13 @@ trace:
 ## intra-worker engine scaling: the blocked ShardCompute kernels at
 ## T ∈ {1, 2, 4, 8} on a ≥10⁶-nnz synthetic shard — prints the
 ## per-kernel compute-seconds speedup table and refreshes the
-## BENCH_5.json scaling artifact at the repo root (CI's bench-smoke job
-## uploads the quick-mode twin from bench-out/)
+## BENCH_5.json scaling artifact at the repo root, plus the SIMD-vs-
+## scalar / overlap A/B artifact BENCH_8.json (CI's bench-smoke job
+## uploads the quick-mode twins from bench-out/)
 scaling:
 	$(CARGO) bench --bench hotpath -- --scaling --out-dir bench-out
 	cp bench-out/BENCH_5.json BENCH_5.json
+	cp bench-out/BENCH_8.json BENCH_8.json
 
 ## AOT artifacts for the (feature-gated) PJRT backend; needs a JAX
 ## python environment, see python/compile/aot.py

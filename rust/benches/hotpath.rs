@@ -178,6 +178,132 @@ fn run_scaling(args: &BenchArgs, all: &mut Vec<Stats>) {
     }
 }
 
+/// SIMD A/B and overlap A/B: the `BENCH_8.json` artifact. The
+/// lane-chunked row kernels against the indexed scalar path on one
+/// serial shard (per-kernel speedup, same bits by contract), plus a
+/// small tcp-p2p training with and without compute/communication
+/// overlap comparing the cumulative `meas_compute_secs +
+/// meas_reduce_secs` total. `bench_check` gates both through the
+/// `simd_*` / `overlap_reduce` bands in `baseline.json`.
+fn run_simd_overlap_ab(args: &BenchArgs, all: &mut Vec<Stats>) {
+    let bench = args.bench;
+    let (n, m, row_nnz) = if args.quick {
+        (4_000, 4_000, 16)
+    } else {
+        (25_000, 40_000, 40)
+    };
+    let ds = synth::quick(n, m, row_nnz, 77);
+    let data = Shard::whole(&ds);
+    let mut rng = Pcg64::new(78);
+    let w: Vec<f64> = (0..m).map(|_| 0.1 * rng.normal()).collect();
+    let dir: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    println!("-- simd A/B: n={n} m={m} nnz={} (serial pool) --", ds.nnz());
+    let kernels = ["simd_loss_grad", "simd_hvp", "simd_linesearch", "simd_margins"];
+    let mut simd_ns = vec![0.0; kernels.len()];
+    let mut scalar_ns = vec![0.0; kernels.len()];
+    for (simd_on, medians) in [(true, &mut simd_ns), (false, &mut scalar_ns)] {
+        let mut shard = SparseShard::with_pool(data.clone(), ComputePool::serial());
+        shard.set_simd(simd_on);
+        let tag = if simd_on { "simd" } else { "scalar" };
+        let (_, _, z) = shard.loss_grad(Loss::SquaredHinge, &w);
+        let e = shard.margins(&dir);
+        let s = bench.run(&format!("engine/loss_grad [{tag}]"), || {
+            black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
+        });
+        println!("{}", s.report());
+        medians[0] = s.median_ns();
+        all.push(s);
+        let s = bench.run(&format!("engine/hvp [{tag}]"), || {
+            black_box(shard.hvp(Loss::SquaredHinge, black_box(&z), black_box(&dir)));
+        });
+        println!("{}", s.report());
+        medians[1] = s.median_ns();
+        all.push(s);
+        let plan = shard.linesearch_plan(&z, &e).expect("plan");
+        let s = bench.run(&format!("engine/linesearch(packed) [{tag}]"), || {
+            black_box(plan.eval(Loss::SquaredHinge, black_box(0.7)));
+        });
+        println!("{}", s.report());
+        medians[2] = s.median_ns();
+        all.push(s);
+        let s = bench.run(&format!("engine/margins [{tag}]"), || {
+            black_box(shard.margins(black_box(&w)));
+        });
+        println!("{}", s.report());
+        medians[3] = s.median_ns();
+        all.push(s);
+    }
+    println!("-- per-kernel simd speedup (scalar_ns / simd_ns) --");
+    let mut entries: Vec<Json> = Vec::new();
+    for (k, name) in kernels.iter().enumerate() {
+        let speedup = scalar_ns[k] / simd_ns[k].max(1e-9);
+        println!("{name:<16} {speedup:>6.2}x");
+        entries.push(obj(vec![
+            ("kernel", Json::Str((*name).to_string())),
+            ("threads", Json::Arr(vec![Json::Num(1.0)])),
+            ("simd_ns", arr_f64(&[simd_ns[k]])),
+            ("scalar_ns", arr_f64(&[scalar_ns[k]])),
+            ("speedup", arr_f64(&[speedup])),
+        ]));
+    }
+    // overlap A/B: a real tcp-p2p training, streaming off vs on. The
+    // plan pins the arithmetic, so only the clocks may move; the
+    // artifact records the cumulative reduce+compute total both ways.
+    let (ov_n, ov_nnz) = if args.quick { (6_000, 30) } else { (20_000, 40) };
+    let totals: Vec<f64> = [false, true]
+        .iter()
+        .map(|&overlap| {
+            let cfg = fadl::Config {
+                name: "bench8_overlap".into(),
+                transport: "tcp".into(),
+                data_plane: fadl::net::DataPlane::P2p,
+                overlap,
+                quick_n: ov_n,
+                quick_m: 200,
+                quick_nnz: ov_nnz,
+                nodes: 2,
+                max_outer: 3,
+                test_fraction: 0.0,
+                worker_bin: env!("CARGO_BIN_EXE_worker").to_string(),
+                ..fadl::Config::default()
+            };
+            let exp = fadl::coordinator::driver::prepare(&cfg).expect("prepare");
+            let (_, trace) = fadl::coordinator::driver::run(&exp).expect("run");
+            let last = trace.records.last().expect("records");
+            last.meas_compute_secs + last.meas_reduce_secs
+        })
+        .collect();
+    let ratio = totals[0] / totals[1].max(1e-12);
+    println!(
+        "overlap A/B (tcp-p2p, n={ov_n}): reduce+compute {:.4}s plain vs {:.4}s \
+         overlapped ({ratio:.2}x)",
+        totals[0], totals[1]
+    );
+    entries.push(obj(vec![
+        ("kernel", Json::Str("overlap_reduce".to_string())),
+        ("threads", Json::Arr(vec![Json::Num(1.0)])),
+        ("plain_secs", arr_f64(&[totals[0]])),
+        ("overlap_secs", arr_f64(&[totals[1]])),
+        ("total_ratio", arr_f64(&[ratio])),
+    ]));
+    let doc = obj(vec![
+        ("bench", Json::Str("simd-overlap-ab".to_string())),
+        ("quick", Json::Bool(args.quick)),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("nnz", Json::Num(ds.nnz() as f64)),
+        ("kernels", Json::Arr(entries)),
+    ]);
+    if let Some(dir) = &args.out_dir {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join("BENCH_8.json");
+        match std::fs::write(&path, doc.pretty()) {
+            Ok(()) => println!("simd/overlap artifact written to {}", path.display()),
+            Err(e) => eprintln!("simd/overlap artifact: write {}: {e}", path.display()),
+        }
+    }
+}
+
 fn main() {
     let args = BenchArgs::parse(Bench::default());
     let bench = args.bench;
@@ -186,6 +312,7 @@ fn main() {
     // scaling` invokes; full problem sizes unless --test is also given)
     if std::env::args().any(|a| a == "--scaling") {
         run_scaling(&args, &mut all);
+        run_simd_overlap_ab(&args, &mut all);
         if let Some(path) = args.write_stats_csv("hotpath-scaling", &all) {
             println!("stats written to {}", path.display());
         }
@@ -364,9 +491,11 @@ fn main() {
     println!("{}", s.report());
     all.push(s);
 
-    // engine scaling rides the default run too, so the CI bench-smoke
-    // job always produces (and uploads) the BENCH_5.json artifact
+    // engine scaling and the simd/overlap A/B ride the default run too,
+    // so the CI bench-smoke job always produces (and uploads) the
+    // BENCH_5.json and BENCH_8.json artifacts
     run_scaling(&args, &mut all);
+    run_simd_overlap_ab(&args, &mut all);
 
     if let Some(path) = args.write_stats_csv("hotpath", &all) {
         println!("stats written to {}", path.display());

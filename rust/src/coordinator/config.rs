@@ -4,7 +4,7 @@
 use crate::cluster::CostModel;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
-use crate::net::{DataPlane, Topology};
+use crate::net::{DataPlane, FrameEncoding, Topology};
 use crate::util::cli::{Args, Cli};
 use crate::util::toml;
 
@@ -48,6 +48,12 @@ pub struct Config {
     /// bitwise identical for every T — the engine's fixed-order block
     /// merge pins the arithmetic.
     pub threads: usize,
+    /// lane-chunked SIMD row kernels (`[worker] simd` / `--no-simd`):
+    /// on (default) runs the fused hot loops through the vectorizable
+    /// `LANES`-wide dot pipeline; off forces the indexed scalar path.
+    /// Both produce bitwise-identical trajectories — the flag exists
+    /// for A/B benchmarking, not for accuracy trades.
+    pub simd: bool,
     pub partition: Strategy,
     /// transport backend: "inproc" (simulated, default) or "tcp"
     /// (P real worker processes over loopback)
@@ -64,6 +70,22 @@ pub struct Config {
     /// first data-plane listener port, rank r binds base + r
     /// (0 = ephemeral ports)
     pub p2p_port_base: u16,
+    /// compute/communication overlap (`[cluster] overlap`): stream
+    /// completed row-block partials into the p2p mesh schedule while
+    /// the remaining blocks compute. Only the tcp transport's p2p data
+    /// plane overlaps; the plan pins the accumulation order, so the
+    /// trajectory stays bitwise identical to overlap = off. Default
+    /// off (the seed's wire accounting).
+    pub overlap: bool,
+    /// reduction-frame element encoding on the p2p mesh
+    /// (`[cluster] frame_encoding`): "f64" (default, bitwise) or "f32"
+    /// (payload halved; encode rounds to nearest-even, accumulation
+    /// stays f64). f32 runs are gated by the `frame_tol` accuracy check
+    /// in `net_smoke`, not by bitwise parity.
+    pub frame_encoding: FrameEncoding,
+    /// accuracy tolerance for f32-frame runs (`[cluster] frame_tol`):
+    /// max allowed |Δ| on final objective and AUPRC vs the f64 leg.
+    pub frame_tol: f64,
     /// explicit worker executable for the tcp transport (empty = auto:
     /// sibling `worker` bin, else self-exec with `--worker`)
     pub worker_bin: String,
@@ -110,12 +132,16 @@ impl Default for Config {
             cost: CostModel::default(),
             threaded: true,
             threads: 1,
+            simd: true,
             partition: Strategy::Contiguous,
             transport: "inproc".into(),
             topology: Topology::Tree,
             data_plane: DataPlane::Star,
             p2p_bind: "127.0.0.1".into(),
             p2p_port_base: 0,
+            overlap: false,
+            frame_encoding: FrameEncoding::F64,
+            frame_tol: 1e-3,
             worker_bin: String::new(),
             method: "fadl".into(),
             k_hat: 10,
@@ -197,6 +223,12 @@ impl Config {
         cfg.cost.flops_per_sec = doc.f64_or("cluster.flops_per_sec", cfg.cost.flops_per_sec);
         cfg.threaded = doc.bool_or("cluster.threaded", cfg.threaded);
         cfg.threads = doc.usize_or("worker.threads", cfg.threads);
+        cfg.simd = doc.bool_or("worker.simd", cfg.simd);
+        cfg.overlap = doc.bool_or("cluster.overlap", cfg.overlap);
+        let frame_name = doc.str_or("cluster.frame_encoding", cfg.frame_encoding.name());
+        cfg.frame_encoding = FrameEncoding::from_name(frame_name)
+            .ok_or_else(|| format!("unknown frame encoding {frame_name:?}"))?;
+        cfg.frame_tol = doc.f64_or("cluster.frame_tol", cfg.frame_tol);
         cfg.partition = match doc.str_or("cluster.partition", "contiguous") {
             "contiguous" => Strategy::Contiguous,
             "round_robin" => Strategy::RoundRobin,
@@ -336,6 +368,21 @@ impl Config {
                 || format!("unknown data plane {:?}", a.get("data-plane")),
             )?;
         }
+        if a.on("no-simd") {
+            self.simd = false;
+        }
+        if a.on("overlap") {
+            self.overlap = true;
+        }
+        if !a.get("frame-encoding").is_empty() {
+            self.frame_encoding = FrameEncoding::from_name(a.get("frame-encoding"))
+                .ok_or_else(|| {
+                    format!("unknown frame encoding {:?}", a.get("frame-encoding"))
+                })?;
+        }
+        if let Some(v) = num(a, "frame-tol")? {
+            self.frame_tol = v;
+        }
         if !a.get("worker-bin").is_empty() {
             self.worker_bin = a.get("worker-bin").to_string();
         }
@@ -384,6 +431,16 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
         .flag("transport", "", "override transport: inproc | tcp")
         .flag("topology", "", "override AllReduce topology: flat | tree | ring")
         .flag("data-plane", "", "override tcp data plane: star | p2p")
+        .flag(
+            "frame-encoding",
+            "",
+            "override p2p reduction-frame encoding: f64 | f32",
+        )
+        .flag(
+            "frame-tol",
+            "",
+            "accuracy tolerance for f32-frame runs (|Δf| and |ΔAUPRC| vs f64)",
+        )
         .flag("worker-bin", "", "explicit worker executable for the tcp transport")
         .flag("out", "", "write the trace JSON here")
         .flag(
@@ -398,6 +455,11 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
              and enable telemetry for the run",
         )
         .switch("no-warm-start", "disable the SGD warm start")
+        .switch("no-simd", "force the indexed scalar row kernels (A/B benchmarking)")
+        .switch(
+            "overlap",
+            "stream row-block partials into the p2p mesh while later blocks compute",
+        )
 }
 
 #[cfg(test)]
@@ -418,6 +480,39 @@ mod tests {
         assert_eq!(cfg.p2p_bind, "127.0.0.1");
         assert_eq!(cfg.p2p_port_base, 0);
         assert!(cfg.worker_bin.is_empty());
+        assert!(cfg.simd, "SIMD kernels on by default");
+        assert!(!cfg.overlap, "overlap opt-in");
+        assert_eq!(cfg.frame_encoding, FrameEncoding::F64);
+        assert_eq!(cfg.frame_tol, 1e-3);
+    }
+
+    #[test]
+    fn simd_overlap_and_frame_keys_parse() {
+        let cfg = Config::from_toml(
+            "[worker]\nsimd = false\n\
+             [cluster]\noverlap = true\nframe_encoding = \"f32\"\nframe_tol = 5e-4",
+        )
+        .unwrap();
+        assert!(!cfg.simd);
+        assert!(cfg.overlap);
+        assert_eq!(cfg.frame_encoding, FrameEncoding::F32);
+        assert_eq!(cfg.frame_tol, 5e-4);
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(
+                ["--no-simd", "--overlap", "--frame-encoding", "f32"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert!(!cfg.simd);
+        assert!(cfg.overlap);
+        assert_eq!(cfg.frame_encoding, FrameEncoding::F32);
+        let a = cli
+            .parse_from(vec!["--frame-encoding".to_string(), "f16".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
     }
 
     #[test]
@@ -661,5 +756,6 @@ json = "out/fig5.json"
         assert!(Config::from_toml("[cluster]\npartition = \"hash\"").is_err());
         assert!(Config::from_toml("[cluster]\ntransport = \"rdma\"").is_err());
         assert!(Config::from_toml("[cluster]\ntopology = \"mesh\"").is_err());
+        assert!(Config::from_toml("[cluster]\nframe_encoding = \"f16\"").is_err());
     }
 }

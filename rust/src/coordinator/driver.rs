@@ -69,6 +69,9 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         p2p_port_base: cfg.p2p_port_base,
         threads: cfg.threads,
         telemetry: cfg.telemetry_out.is_some(),
+        simd: cfg.simd,
+        overlap: cfg.overlap,
+        frame_encoding: cfg.frame_encoding,
     }
 }
 
@@ -103,15 +106,16 @@ pub fn build_worker_context(
     let part = ExamplePartition::build(train.n(), setup.p, cfg.partition, cfg.seed);
     part.validate(train.n(), 1)?;
     let pool = ComputePool::new(engine::resolve_threads(setup.threads));
-    let shard = Box::new(SparseShard::with_pool(
+    let mut shard = SparseShard::with_pool(
         Shard::from_dataset(
             &train,
             &part.assignments[setup.rank],
             &part.weights[setup.rank],
         ),
         pool,
-    )) as Box<dyn ShardCompute>;
-    Ok((shard, (test.n() > 0).then_some(test)))
+    );
+    shard.set_simd(setup.simd);
+    Ok((Box::new(shard) as Box<dyn ShardCompute>, (test.n() > 0).then_some(test)))
 }
 
 /// Rebuild one rank's shard only (kept for tests and tools that don't
@@ -167,14 +171,16 @@ pub fn build_cluster(
             let pool = ComputePool::new(engine::resolve_threads(cfg.threads));
             (0..p)
                 .map(|i| {
-                    Box::new(SparseShard::with_pool(
+                    let mut shard = SparseShard::with_pool(
                         Shard::from_dataset(
                             train,
                             &part.assignments[i],
                             &part.weights[i],
                         ),
                         pool.clone(),
-                    )) as Box<dyn ShardCompute>
+                    );
+                    shard.set_simd(cfg.simd);
+                    Box::new(shard) as Box<dyn ShardCompute>
                 })
                 .collect()
         }

@@ -10,6 +10,66 @@
 //! * [`Csr::hvp_into`] — Hs = Xᵀ(D·(X·s)) fused in a single pass per
 //!   row (TRON's CG product).
 
+/// Lane width of the chunked dot-product DAG: four f64 accumulators,
+/// one 256-bit register on AVX2-class hardware (two on 128-bit NEON —
+/// still a win, the lanes are independent).
+///
+/// Every row kernel computes the *same* lane-chunked summation DAG
+/// regardless of the `simd` flag: nonzeros are processed in fixed
+/// chunks of `LANES` into `LANES` independent accumulators, the lanes
+/// are folded pairwise `(a0 + a1) + (a2 + a3)`, and the remainder
+/// (`nnz % LANES` elements) is added sequentially onto the folded sum.
+/// The flag only selects between a plain indexed reference
+/// implementation and a `chunks_exact` form shaped for the
+/// auto-vectorizer — both produce bitwise-identical results by
+/// construction, which is what lets `simd = on` coexist with the
+/// repo's determinism contract (threads = T ≡ T = 1 across
+/// inproc/tcp-star/tcp-p2p) without a single tolerance.
+pub const LANES: usize = 4;
+
+/// Reference implementation of the lane-chunked dot DAG (the
+/// `simd = off` path, and the canonical definition of the arithmetic).
+#[inline]
+fn dot_span_ref(cols: &[u32], vals: &[f32], w: &[f64]) -> f64 {
+    let n = cols.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f64; LANES];
+    for t in 0..chunks {
+        for l in 0..LANES {
+            let k = t * LANES + l;
+            acc[l] += vals[k] as f64 * w[cols[k] as usize];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for k in chunks * LANES..n {
+        s += vals[k] as f64 * w[cols[k] as usize];
+    }
+    s
+}
+
+/// Vectorizer-shaped implementation of the same DAG (the `simd = on`
+/// path): `chunks_exact` gives the compiler fixed-trip-count inner
+/// loops with no bounds checks on the index/value streams, so the f32
+/// widening and the four independent multiply-adds map onto vector
+/// lanes. The summation order is element-for-element identical to
+/// [`dot_span_ref`].
+#[inline]
+fn dot_span_simd(cols: &[u32], vals: &[f32], w: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut cc = cols.chunks_exact(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (c4, v4) in (&mut cc).zip(&mut vc) {
+        for l in 0..LANES {
+            acc[l] += v4[l] as f64 * w[c4[l] as usize];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (&c, &v) in cc.remainder().iter().zip(vc.remainder()) {
+        s += v as f64 * w[c as usize];
+    }
+    s
+}
+
 /// CSR matrix with f32 values (data precision) and f64 compute.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Csr {
@@ -69,16 +129,25 @@ impl Csr {
         self.row_ptr[i + 1] - self.row_ptr[i]
     }
 
-    /// x_i · w for a single row.
+    /// x_i · w for a single row — the canonical lane-chunked DAG (see
+    /// [`LANES`]); rows with fewer than `LANES` nonzeros degenerate to
+    /// the plain sequential sum.
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
-        let s = self.row_ptr[i];
-        let e = self.row_ptr[i + 1];
-        let mut acc = 0.0;
-        for k in s..e {
-            acc += self.values[k] as f64 * w[self.col_idx[k] as usize];
+        let span = self.row_ptr[i]..self.row_ptr[i + 1];
+        dot_span_ref(&self.col_idx[span.clone()], &self.values[span], w)
+    }
+
+    /// [`Csr::row_dot`] with the implementation selected by `simd`;
+    /// both paths return bitwise-identical results.
+    #[inline]
+    pub fn row_dot_s(&self, i: usize, w: &[f64], simd: bool) -> f64 {
+        let span = self.row_ptr[i]..self.row_ptr[i + 1];
+        if simd {
+            dot_span_simd(&self.col_idx[span.clone()], &self.values[span], w)
+        } else {
+            dot_span_ref(&self.col_idx[span.clone()], &self.values[span], w)
         }
-        acc
     }
 
     /// w ← w + a·x_i (sparse axpy into a dense vector).
@@ -108,22 +177,24 @@ impl Csr {
     pub fn margins_into(&self, w: &[f64], z: &mut [f64]) {
         debug_assert_eq!(w.len(), self.cols);
         debug_assert_eq!(z.len(), self.rows);
-        self.margins_block_into(0..self.rows, w, z);
+        self.margins_block_into(0..self.rows, w, z, false);
     }
 
     /// Block-sliced margins: z_block[k] = x_{rows.start + k}·w for one
     /// contiguous row block (`z_block.len() == rows.len()`). Disjoint
     /// blocks write disjoint slices, so the engine runs them in
     /// parallel with bitwise-identical output for any thread count.
+    /// `simd` selects the row-dot implementation (never the bits).
     pub fn margins_block_into(
         &self,
         rows: std::ops::Range<usize>,
         w: &[f64],
         z_block: &mut [f64],
+        simd: bool,
     ) {
         debug_assert_eq!(z_block.len(), rows.len());
         for (k, i) in rows.enumerate() {
-            z_block[k] = self.row_dot(i, w);
+            z_block[k] = self.row_dot_s(i, w, simd);
         }
     }
 
@@ -147,7 +218,7 @@ impl Csr {
         debug_assert_eq!(s.len(), self.cols);
         debug_assert_eq!(out.len(), self.cols);
         out.fill(0.0);
-        self.hvp_block_into(0..self.rows, d, s, out);
+        self.hvp_block_into(0..self.rows, d, s, out, false);
     }
 
     /// Block-sliced Hvp: out += Xᵀ·diag(d)·X·s restricted to one
@@ -155,12 +226,14 @@ impl Csr {
     /// row `rows.start + k` (`out` is NOT cleared — each engine block
     /// accumulates into its own buffer and the buffers are merged in
     /// fixed block order). Row skipping matches `hvp_into` exactly.
+    /// `simd` selects the row-dot implementation (never the bits).
     pub fn hvp_block_into(
         &self,
         rows: std::ops::Range<usize>,
         d_block: &[f64],
         s: &[f64],
         out: &mut [f64],
+        simd: bool,
     ) {
         debug_assert_eq!(d_block.len(), rows.len());
         for (k, i) in rows.enumerate() {
@@ -168,7 +241,7 @@ impl Csr {
             if di == 0.0 {
                 continue;
             }
-            let t = self.row_dot(i, s);
+            let t = self.row_dot_s(i, s, simd);
             if t != 0.0 {
                 self.row_axpy(i, di * t, out);
             }
@@ -351,7 +424,7 @@ mod tests {
         let mut z = vec![0.0; 3];
         m.margins_into(&w, &mut z);
         let mut zb = vec![0.0; 2];
-        m.margins_block_into(1..3, &w, &mut zb);
+        m.margins_block_into(1..3, &w, &mut zb, false);
         assert_eq!(zb, z[1..3]);
         // two accumulated blocks reproduce the one-shot Hvp exactly
         let d = [2.0, 0.0, 1.0];
@@ -359,8 +432,44 @@ mod tests {
         let mut want = vec![0.0; 3];
         m.hvp_into(&d, &s, &mut want);
         let mut got = vec![0.0; 3];
-        m.hvp_block_into(0..2, &d[0..2], &s, &mut got);
-        m.hvp_block_into(2..3, &d[2..3], &s, &mut got);
+        m.hvp_block_into(0..2, &d[0..2], &s, &mut got, false);
+        m.hvp_block_into(2..3, &d[2..3], &s, &mut got, false);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn simd_dot_is_bitwise_identical_to_reference() {
+        // random long rows (several full lane chunks + ragged
+        // remainders) where a different summation order would show
+        let mut rng = crate::util::rng::Pcg64::new(0x51D);
+        let cols = 37;
+        let rows: Vec<Vec<(u32, f32)>> = (0..64)
+            .map(|i| {
+                (0..i % 23)
+                    .map(|_| (rng.below(cols as u64) as u32, rng.normal() as f32))
+                    .collect()
+            })
+            .collect();
+        let m = Csr::from_rows(cols, &rows);
+        let w: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        for i in 0..m.rows {
+            let a = m.row_dot_s(i, &w, false);
+            let b = m.row_dot_s(i, &w, true);
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i} nnz {}", m.row_nnz(i));
+            assert_eq!(a.to_bits(), m.row_dot(i, &w).to_bits());
+        }
+        // block kernels agree bitwise across the flag too
+        let mut z0 = vec![0.0; m.rows];
+        let mut z1 = vec![0.0; m.rows];
+        m.margins_block_into(0..m.rows, &w, &mut z0, false);
+        m.margins_block_into(0..m.rows, &w, &mut z1, true);
+        assert!(z0.iter().zip(&z1).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let d: Vec<f64> = (0..m.rows).map(|_| rng.normal().abs()).collect();
+        let s: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let mut h0 = vec![0.0; cols];
+        let mut h1 = vec![0.0; cols];
+        m.hvp_block_into(0..m.rows, &d, &s, &mut h0, false);
+        m.hvp_block_into(0..m.rows, &d, &s, &mut h1, true);
+        assert!(h0.iter().zip(&h1).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

@@ -4,5 +4,5 @@
 pub mod csr;
 pub mod dense;
 
-pub use csr::Csr;
+pub use csr::{Csr, LANES};
 pub use dense::*;

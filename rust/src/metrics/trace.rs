@@ -49,6 +49,11 @@ pub struct IterRecord {
     /// cumulative seconds the slowest rank spent blocked in mesh
     /// `read_frame` calls during p2p allreduce (0 off the p2p plane)
     pub mesh_stall_secs: f64,
+    /// cumulative seconds of compute/communication overlap: time between
+    /// the first row-block partial flushed into the p2p mesh and the end
+    /// of the kernel it overlapped (slowest rank per phase; 0 with
+    /// `[cluster] overlap` off or off the p2p plane)
+    pub overlap_secs: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -105,6 +110,7 @@ impl Trace {
             driver_data_bytes: net.driver_data_bytes as f64,
             queue_wait_secs: net.queue_wait_secs,
             mesh_stall_secs: net.mesh_stall_secs,
+            overlap_secs: net.overlap_secs,
             f,
             grad_norm,
             auprc,
@@ -212,6 +218,7 @@ pub const COLUMNS: &[(&str, fn(&IterRecord) -> f64)] = &[
     ("driver_data_bytes", |r| r.driver_data_bytes),
     ("queue_wait_secs", |r| r.queue_wait_secs),
     ("mesh_stall_secs", |r| r.mesh_stall_secs),
+    ("overlap_secs", |r| r.overlap_secs),
     ("f", |r| r.f),
     ("grad_norm", |r| r.grad_norm),
     ("auprc", |r| r.auprc),
@@ -237,6 +244,7 @@ mod tests {
             net.driver_data_bytes += 40;
             net.queue_wait_secs += 0.002;
             net.mesh_stall_secs += 0.001;
+            net.overlap_secs += 0.003;
             t.push(
                 i,
                 &clock,
@@ -275,6 +283,7 @@ mod tests {
         assert_eq!(t.records[4].meas_reduce_secs, 0.0);
         assert!((t.records[4].queue_wait_secs - 0.01).abs() < 1e-12);
         assert!((t.records[4].mesh_stall_secs - 0.005).abs() < 1e-12);
+        assert!((t.records[4].overlap_secs - 0.015).abs() < 1e-12);
     }
 
     #[test]
@@ -332,15 +341,15 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 17);
+        assert_eq!(lines[0].split(',').count(), 18);
         assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
-        assert!(lines[0].contains(",queue_wait_secs,mesh_stall_secs,f,"));
+        assert!(lines[0].contains(",queue_wait_secs,mesh_stall_secs,overlap_secs,f,"));
         assert!(lines[0].contains(",meas_compute_secs,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 17, "{line}");
+            assert_eq!(line.split(',').count(), 18, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(14).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(15).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 

@@ -425,6 +425,51 @@ pub fn exec(
     }
 }
 
+/// Execute a streamable phase command (`Grad` or `Hvp`) with a
+/// per-row-block partial sink — the compute/communication overlap
+/// path. `sink(b, partial)` fires as block `b`'s full-length partial
+/// finishes, so the transport can flush it onto the mesh while later
+/// blocks are still computing. Replies and worker-state bookkeeping are
+/// identical to [`exec`]'s arms for the same commands — the streamed
+/// vector is the raw pre-combine partial, so callers must only use this
+/// when the combine's pre-transform is the identity (empty weights,
+/// `WeightedSum`).
+pub fn exec_streamed(
+    shard: &dyn ShardCompute,
+    st: &mut WorkerState,
+    cmd: &Command,
+    sink: &(dyn Fn(usize, &[f64]) + Sync),
+) -> Result<Reply, String> {
+    let _span =
+        crate::metrics::telemetry::SpanGuard::open_with(|| format!("cmd:{}", cmd.name()));
+    match cmd {
+        Command::Grad { loss, w } => {
+            let w = resolve_vec(st, w, "grad")?;
+            let (loss_val, grad, z) = shard.loss_grad_streaming(*loss, &w, sink);
+            st.margins = z;
+            st.local_grad = grad.clone();
+            // the anchor moved: any packed line-search gather is stale
+            st.ls_plan = None;
+            let units = 2.0 * 2.0 * shard.nnz() as f64;
+            Ok(Reply::Grad { loss: loss_val, grad, units })
+        }
+        Command::Hvp { loss, s } => {
+            if st.margins.len() != shard.n() {
+                return Err(format!(
+                    "hvp without cached margins (rank {}: |z| = {}, n = {})",
+                    st.rank,
+                    st.margins.len(),
+                    shard.n()
+                ));
+            }
+            let s = resolve_vec(st, s, "hvp")?;
+            let hv = shard.hvp_streaming(*loss, &st.margins, &s, sink);
+            Ok(Reply::Vector { v: hv, units: 2.0 * 2.0 * shard.nnz() as f64 })
+        }
+        other => Err(format!("command {} is not streamable", other.name())),
+    }
+}
+
 /// Score the worker-resident held-out set at a replicated iterate —
 /// the transport-level implementation of [`Command::TestAuprc`] (the
 /// transports call this directly because `exec` has no access to the

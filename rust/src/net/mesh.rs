@@ -25,14 +25,20 @@
 //!
 //! Frames on the mesh are `[len: u32][raw little-endian f64 bits]` —
 //! the same lossless float encoding as the control plane, minus the
-//! message tag (both ends know the range from the schedule).
+//! message tag (both ends know the range from the schedule). With
+//! [`FrameEncoding::F32`] the payload carries f32 bits instead (half
+//! the bytes; accumulation stays f64 on the receive side), and with
+//! compute/communication overlap a streamable range is shipped as a
+//! `[len = 4][B: u32]` header followed by `B` per-block partial frames
+//! (see [`Mesh::begin_stream`]).
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::topology::{MeshOp, RankSchedule};
+use super::FrameEncoding;
 
 /// Backstop against a peer that wedges mid-plan: erroring out (and
 /// exiting) beats orphaning a worker that holds ports. Generous because
@@ -82,6 +88,9 @@ pub struct Mesh {
     rank: usize,
     /// connection to each peer rank (`None` at `self.rank`)
     conns: Vec<Option<TcpStream>>,
+    /// payload element encoding for reduction frames (both ends must
+    /// agree — the driver broadcasts the choice in `Setup`)
+    encoding: FrameEncoding,
 }
 
 impl Mesh {
@@ -158,12 +167,19 @@ impl Mesh {
                 .set_nonblocking(false)
                 .map_err(|e| format!("rank {rank}: listener blocking: {e}"))?;
         }
-        Ok(Mesh { rank, conns })
+        Ok(Mesh { rank, conns, encoding: FrameEncoding::F64 })
     }
 
     /// A mesh with no peers (P = 1): every schedule is a no-op.
     pub fn solo(rank: usize) -> Mesh {
-        Mesh { rank, conns: vec![None] }
+        Mesh { rank, conns: vec![None], encoding: FrameEncoding::F64 }
+    }
+
+    /// Switch the payload element encoding (default lossless
+    /// [`FrameEncoding::F64`]). Every rank must pick the same encoding —
+    /// frame lengths are validated against it on receive.
+    pub fn set_encoding(&mut self, encoding: FrameEncoding) {
+        self.encoding = encoding;
     }
 
     /// Execute this rank's share of a full AllReduce: on return `buf`
@@ -233,10 +249,11 @@ impl Mesh {
             // timed region: the schedule's actual data movement — the
             // writer-thread setup above is harness cost, not wire cost
             let t0 = Instant::now();
+            let eb = self.encoding.elem_bytes() as u64;
             for op in &sched.ops {
                 match *op {
                     MeshOp::Send { to, lo, hi } => {
-                        let frame = encode_range(&buf[lo..hi]);
+                        let frame = encode_range(&buf[lo..hi], self.encoding);
                         senders[to]
                             .as_ref()
                             .expect("writer exists for every send peer")
@@ -247,32 +264,32 @@ impl Mesh {
                     }
                     MeshOp::RecvAccum { from, lo, hi } => {
                         let tr = Instant::now();
-                        read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        read_frame_into(
+                            self.peer(from)?,
+                            from,
+                            hi - lo,
+                            self.encoding,
+                            &mut scratch,
+                        )?;
                         stall_secs += tr.elapsed().as_secs_f64();
-                        rx += (4 + 8 * (hi - lo)) as u64;
+                        rx += 4 + eb * (hi - lo) as u64;
                         // elementwise adds in index order — the same
                         // per-element operation linalg::accum applies,
                         // so the plan's summation order is unchanged
-                        for (o, c) in
-                            buf[lo..hi].iter_mut().zip(scratch.chunks_exact(8))
-                        {
-                            *o += f64::from_bits(u64::from_le_bytes(
-                                c.try_into().unwrap(),
-                            ));
-                        }
+                        fold_payload(&scratch, self.encoding, &mut buf[lo..hi], true);
                     }
                     MeshOp::RecvCopy { from, lo, hi } => {
                         let tr = Instant::now();
-                        read_frame_into(self.peer(from)?, from, hi - lo, &mut scratch)?;
+                        read_frame_into(
+                            self.peer(from)?,
+                            from,
+                            hi - lo,
+                            self.encoding,
+                            &mut scratch,
+                        )?;
                         stall_secs += tr.elapsed().as_secs_f64();
-                        rx += (4 + 8 * (hi - lo)) as u64;
-                        for (o, c) in
-                            buf[lo..hi].iter_mut().zip(scratch.chunks_exact(8))
-                        {
-                            *o = f64::from_bits(u64::from_le_bytes(
-                                c.try_into().unwrap(),
-                            ));
-                        }
+                        rx += 4 + eb * (hi - lo) as u64;
+                        fold_payload(&scratch, self.encoding, &mut buf[lo..hi], false);
                     }
                 }
             }
@@ -292,11 +309,324 @@ impl Mesh {
         Ok(MeshStats { tx, rx, secs, stall_secs })
     }
 
+    /// Open the compute/communication-overlap path for one reduce: for
+    /// every streamable `Send` in `sched` (per `flags`, from
+    /// [`super::topology::ReducePlan::overlap_flags`]) a dedicated
+    /// writer thread spawns now and a `[len = 4][n_blocks: u32]` header
+    /// goes on the wire immediately; per-block partials offered through
+    /// [`StreamHandle::offer`] while later blocks are still computing
+    /// follow it in block order. Complete the reduce with
+    /// [`Mesh::allreduce_overlap`], which consumes the handle.
+    pub fn begin_stream(
+        &self,
+        sched: &RankSchedule,
+        flags: &[bool],
+        n_blocks: usize,
+    ) -> Result<StreamHandle, String> {
+        if sched.rank != self.rank {
+            return Err(format!(
+                "schedule for rank {} streamed on rank {}",
+                sched.rank, self.rank
+            ));
+        }
+        if flags.len() != sched.ops.len() {
+            return Err("overlap flags do not match schedule".into());
+        }
+        let mut chans: Vec<Option<mpsc::Sender<Vec<u8>>>> = Vec::new();
+        chans.resize_with(self.conns.len(), || None);
+        let mut writers = Vec::new();
+        let mut ranges = Vec::new();
+        for (op, &streamed) in sched.ops.iter().zip(flags) {
+            let MeshOp::Send { to, lo, hi } = *op else { continue };
+            if !streamed {
+                continue;
+            }
+            if chans[to].is_some() {
+                return Err(format!("two streamed sends to rank {to}"));
+            }
+            let stream = self
+                .peer(to)?
+                .try_clone()
+                .map_err(|e| format!("clone mesh stream to rank {to}: {e}"))?;
+            let (send, recv) = mpsc::channel::<Vec<u8>>();
+            writers.push(std::thread::spawn(move || -> Result<u64, String> {
+                let mut stream = stream;
+                let mut written = 0u64;
+                for frame in recv {
+                    stream
+                        .write_all(&frame)
+                        .map_err(|e| format!("mesh write to rank {to}: {e}"))?;
+                    written += frame.len() as u64;
+                }
+                Ok(written)
+            }));
+            let mut header = Vec::with_capacity(8);
+            header.extend_from_slice(&4u32.to_le_bytes());
+            header.extend_from_slice(&(n_blocks as u32).to_le_bytes());
+            send.send(header)
+                .map_err(|_| format!("mesh writer to rank {to} died early"))?;
+            ranges.push((to, lo, hi));
+            chans[to] = Some(send);
+        }
+        Ok(StreamHandle {
+            rank: self.rank,
+            encoding: self.encoding,
+            writers,
+            ranges,
+            n_blocks,
+            state: Mutex::new(StreamState {
+                chans,
+                pending: (0..n_blocks).map(|_| None).collect(),
+                next: 0,
+                first_flush: None,
+            }),
+        })
+    }
+
+    /// Complete an overlapped reduce begun with [`Mesh::begin_stream`]:
+    /// executes `sched` exactly like [`Mesh::allreduce`] except that
+    /// streamed sends already left through the handle's writers, and a
+    /// streamed receive arrives as `[header][B partial frames]` which
+    /// are staged — copy the first, accumulate the rest in arrival
+    /// (= block) order, then add the stage into `buf` — reproducing the
+    /// sender's block merge plus the plan's `RecvAccum` bit for bit.
+    pub fn allreduce_overlap(
+        &self,
+        buf: &mut [f64],
+        sched: &RankSchedule,
+        flags: &[bool],
+        handle: StreamHandle,
+    ) -> Result<MeshStats, String> {
+        if sched.rank != self.rank || handle.rank != self.rank {
+            return Err(format!(
+                "schedule for rank {} executed on rank {}",
+                sched.rank, self.rank
+            ));
+        }
+        if flags.len() != sched.ops.len() {
+            return Err("overlap flags do not match schedule".into());
+        }
+        let stream_state = handle
+            .state
+            .into_inner()
+            .map_err(|_| "stream state poisoned".to_string())?;
+        if !handle.ranges.is_empty() && stream_state.next != handle.n_blocks {
+            return Err(format!(
+                "overlapped reduce with {}/{} blocks offered",
+                stream_state.next, handle.n_blocks
+            ));
+        }
+        let mut span = crate::metrics::telemetry::SpanGuard::open("mesh:allreduce");
+        let mut tx = 0u64;
+        let mut rx = 0u64;
+        let mut secs = 0.0f64;
+        let mut stall_secs = 0.0f64;
+        let mut scratch: Vec<u8> = Vec::new();
+        // staged streamed receive: folded here, then added into `buf`
+        let mut stage: Vec<f64> = Vec::new();
+        let eb = self.encoding.elem_bytes() as u64;
+        let stream_chans = stream_state.chans;
+        let stream_writers = handle.writers;
+        let result = std::thread::scope(|scope| -> Result<(), String> {
+            // reuse the stream writers' FIFOs for their connections'
+            // remaining frames (per-connection order must survive), and
+            // spawn the usual scoped writer for every other send peer
+            let mut chans = stream_chans;
+            let mut writers = Vec::new();
+            for (op, &streamed) in sched.ops.iter().zip(flags) {
+                let MeshOp::Send { to, .. } = *op else { continue };
+                if streamed || chans[to].is_some() {
+                    continue;
+                }
+                let stream = self
+                    .peer(to)?
+                    .try_clone()
+                    .map_err(|e| format!("clone mesh stream to rank {to}: {e}"))?;
+                let (send, recv) = mpsc::channel::<Vec<u8>>();
+                writers.push(scope.spawn(move || -> Result<u64, String> {
+                    let mut stream = stream;
+                    let mut written = 0u64;
+                    for frame in recv {
+                        stream
+                            .write_all(&frame)
+                            .map_err(|e| format!("mesh write to rank {to}: {e}"))?;
+                        written += frame.len() as u64;
+                    }
+                    Ok(written)
+                }));
+                chans[to] = Some(send);
+            }
+            let t0 = Instant::now();
+            for (k, op) in sched.ops.iter().enumerate() {
+                match *op {
+                    MeshOp::Send { to, lo, hi } => {
+                        if flags[k] {
+                            continue; // already streamed, block by block
+                        }
+                        let frame = encode_range(&buf[lo..hi], self.encoding);
+                        chans[to]
+                            .as_ref()
+                            .expect("writer exists for every send peer")
+                            .send(frame)
+                            .map_err(|_| {
+                                format!("mesh writer to rank {to} died early")
+                            })?;
+                    }
+                    MeshOp::RecvAccum { from, lo, hi } if flags[k] => {
+                        let tr = Instant::now();
+                        let blocks = read_stream_header(self.peer(from)?, from)?;
+                        stage.clear();
+                        stage.resize(hi - lo, 0.0);
+                        for b in 0..blocks {
+                            read_frame_into(
+                                self.peer(from)?,
+                                from,
+                                hi - lo,
+                                self.encoding,
+                                &mut scratch,
+                            )?;
+                            // copy the first partial, accumulate the
+                            // rest: the sender's own block merge is a
+                            // copy-then-add left fold, and seeding the
+                            // stage with `+ 0.0` would flip a −0.0
+                            fold_payload(&scratch, self.encoding, &mut stage, b > 0);
+                        }
+                        stall_secs += tr.elapsed().as_secs_f64();
+                        rx += 8 + blocks as u64 * (4 + eb * (hi - lo) as u64);
+                        for (o, s) in buf[lo..hi].iter_mut().zip(&stage) {
+                            *o += *s;
+                        }
+                    }
+                    MeshOp::RecvAccum { from, lo, hi } => {
+                        let tr = Instant::now();
+                        read_frame_into(
+                            self.peer(from)?,
+                            from,
+                            hi - lo,
+                            self.encoding,
+                            &mut scratch,
+                        )?;
+                        stall_secs += tr.elapsed().as_secs_f64();
+                        rx += 4 + eb * (hi - lo) as u64;
+                        fold_payload(&scratch, self.encoding, &mut buf[lo..hi], true);
+                    }
+                    MeshOp::RecvCopy { from, lo, hi } => {
+                        let tr = Instant::now();
+                        read_frame_into(
+                            self.peer(from)?,
+                            from,
+                            hi - lo,
+                            self.encoding,
+                            &mut scratch,
+                        )?;
+                        stall_secs += tr.elapsed().as_secs_f64();
+                        rx += 4 + eb * (hi - lo) as u64;
+                        fold_payload(&scratch, self.encoding, &mut buf[lo..hi], false);
+                    }
+                }
+            }
+            drop(chans); // close every FIFO so all writers finish
+            for writer in writers {
+                match writer.join() {
+                    Ok(Ok(written)) => tx += written,
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => return Err("mesh writer thread panicked".into()),
+                }
+            }
+            secs = t0.elapsed().as_secs_f64();
+            Ok(())
+        });
+        result?;
+        for writer in stream_writers {
+            match writer.join() {
+                Ok(Ok(written)) => tx += written,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err("mesh stream writer thread panicked".into()),
+            }
+        }
+        span.bytes(tx + rx);
+        Ok(MeshStats { tx, rx, secs, stall_secs })
+    }
+
     fn peer(&self, rank: usize) -> Result<&TcpStream, String> {
         self.conns
             .get(rank)
             .and_then(Option::as_ref)
             .ok_or_else(|| format!("rank {}: no mesh connection to rank {rank}", self.rank))
+    }
+}
+
+/// Sender-side state of one overlapped reduce (see
+/// [`Mesh::begin_stream`]). [`StreamHandle::offer`] takes `&self` and
+/// the handle is `Sync` (the channels live inside the mutex), so the
+/// compute pool's block closures can call it directly as row blocks
+/// finish.
+pub struct StreamHandle {
+    rank: usize,
+    encoding: FrameEncoding,
+    writers: Vec<std::thread::JoinHandle<Result<u64, String>>>,
+    /// streamed send ranges: (peer, lo, hi)
+    ranges: Vec<(usize, usize, usize)>,
+    n_blocks: usize,
+    state: Mutex<StreamState>,
+}
+
+struct StreamState {
+    /// open FIFO to the writer thread per peer with a streamed send —
+    /// reused for that connection's remaining (non-streamed) frames so
+    /// per-connection frame order survives
+    chans: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    /// per block: the encoded frame per streamed range, parked until
+    /// every earlier block has flushed — frames must leave in block
+    /// order, which is what pins the receiver's accumulation order
+    pending: Vec<Option<Vec<(usize, Vec<u8>)>>>,
+    /// next block index to flush
+    next: usize,
+    /// when the first partial frame was handed to a writer
+    first_flush: Option<Instant>,
+}
+
+impl StreamHandle {
+    /// Offer row block `block`'s full-length partial vector. Safe to
+    /// call from any thread and in any completion order: frames park
+    /// until every earlier block has flushed, so the wire always sees
+    /// block order. Writer-thread errors are deferred to
+    /// [`Mesh::allreduce_overlap`]'s join.
+    pub fn offer(&self, block: usize, partial: &[f64]) {
+        if self.ranges.is_empty() {
+            return;
+        }
+        let frames: Vec<(usize, Vec<u8>)> = self
+            .ranges
+            .iter()
+            .map(|&(to, lo, hi)| (to, encode_range(&partial[lo..hi], self.encoding)))
+            .collect();
+        let mut span = crate::metrics::telemetry::SpanGuard::open("mesh:flush");
+        let mut flushed = 0u64;
+        let mut state = self.state.lock().expect("stream state poisoned");
+        state.pending[block] = Some(frames);
+        while state.next < self.n_blocks {
+            let next = state.next;
+            let Some(frames) = state.pending[next].take() else { break };
+            if state.first_flush.is_none() {
+                state.first_flush = Some(Instant::now());
+            }
+            for (to, frame) in frames {
+                flushed += frame.len() as u64;
+                // a dead writer surfaces at join; dropping the frame
+                // here lets compute run through to that clean error
+                let _ = state.chans[to].as_ref().expect("channel per range").send(frame);
+            }
+            state.next += 1;
+        }
+        drop(state);
+        span.bytes(flushed);
+    }
+
+    /// When the first partial frame left for the wire (`None` when
+    /// nothing streamed — no streamable sends, or no offers yet).
+    pub fn first_flush(&self) -> Option<Instant> {
+        self.state.lock().expect("stream state poisoned").first_flush
     }
 }
 
@@ -331,24 +661,87 @@ fn read_hello(mut stream: &TcpStream) -> Result<usize, String> {
     Ok(u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize)
 }
 
-/// `[len: u32][raw f64 bits]` — lossless, same float encoding as the
-/// control plane's `wire::Enc::vec_f64` minus the element count (the
-/// schedule fixes the range on both sides).
-fn encode_range(vals: &[f64]) -> Vec<u8> {
-    let mut frame = Vec::with_capacity(4 + 8 * vals.len());
-    frame.extend_from_slice(&((8 * vals.len()) as u32).to_le_bytes());
-    for &v in vals {
-        frame.extend_from_slice(&v.to_bits().to_le_bytes());
+/// `[len: u32][raw element bits]` — with [`FrameEncoding::F64`] the
+/// lossless control-plane float encoding (`wire::Enc::vec_f64` minus
+/// the element count; the schedule fixes the range on both sides), with
+/// [`FrameEncoding::F32`] each element down-converted to the nearest
+/// f32 (round-to-nearest-even, the `as f32` cast) for half the payload.
+fn encode_range(vals: &[f64], enc: FrameEncoding) -> Vec<u8> {
+    let eb = enc.elem_bytes();
+    let mut frame = Vec::with_capacity(4 + eb * vals.len());
+    frame.extend_from_slice(&((eb * vals.len()) as u32).to_le_bytes());
+    match enc {
+        FrameEncoding::F64 => {
+            for &v in vals {
+                frame.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        FrameEncoding::F32 => {
+            let mut span = crate::metrics::telemetry::SpanGuard::open("mesh:encode");
+            for &v in vals {
+                super::wire::put_f32(&mut frame, v as f32);
+            }
+            span.bytes(frame.len() as u64);
+        }
     }
     frame
 }
 
-/// Read one schedule frame (`n` f64s) into the reusable `scratch`
-/// buffer, validating the length prefix against the expected range.
+/// Decode one received payload into `out` — widening f32 bits back to
+/// f64 under [`FrameEncoding::F32`], so accumulation always runs in
+/// f64 regardless of what moved on the wire. `accumulate` selects
+/// `RecvAccum` (`+=`) vs `RecvCopy` (`=`) semantics.
+fn fold_payload(scratch: &[u8], enc: FrameEncoding, out: &mut [f64], accumulate: bool) {
+    match enc {
+        FrameEncoding::F64 => {
+            for (o, c) in out.iter_mut().zip(scratch.chunks_exact(8)) {
+                let v = f64::from_bits(u64::from_le_bytes(c.try_into().unwrap()));
+                if accumulate {
+                    *o += v;
+                } else {
+                    *o = v;
+                }
+            }
+        }
+        FrameEncoding::F32 => {
+            let mut span = crate::metrics::telemetry::SpanGuard::open("mesh:decode");
+            for (o, c) in out.iter_mut().zip(scratch.chunks_exact(4)) {
+                let v = super::wire::get_f32(c.try_into().unwrap()) as f64;
+                if accumulate {
+                    *o += v;
+                } else {
+                    *o = v;
+                }
+            }
+            span.bytes(scratch.len() as u64);
+        }
+    }
+}
+
+/// Read the `[len = 4][B: u32]` block-count header that precedes a
+/// streamed range.
+fn read_stream_header(mut stream: &TcpStream, from: usize) -> Result<usize, String> {
+    let mut buf = [0u8; 8];
+    stream
+        .read_exact(&mut buf)
+        .map_err(|e| format!("mesh stream header from rank {from}: {e}"))?;
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if len != 4 {
+        return Err(format!(
+            "mesh stream header from rank {from}: frame length {len}"
+        ));
+    }
+    Ok(u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize)
+}
+
+/// Read one schedule frame (`n` elements under `enc`) into the reusable
+/// `scratch` buffer, validating the length prefix against the expected
+/// range.
 fn read_frame_into(
     mut stream: &TcpStream,
     from: usize,
     n: usize,
+    enc: FrameEncoding,
     scratch: &mut Vec<u8>,
 ) -> Result<(), String> {
     let mut len_buf = [0u8; 4];
@@ -356,10 +749,10 @@ fn read_frame_into(
         .read_exact(&mut len_buf)
         .map_err(|e| format!("mesh read from rank {from}: {e}"))?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len != 8 * n {
+    if len != enc.elem_bytes() * n {
         return Err(format!(
             "mesh frame from rank {from}: {len} bytes, expected {}",
-            8 * n
+            enc.elem_bytes() * n
         ));
     }
     scratch.resize(len, 0);
@@ -494,6 +887,151 @@ mod tests {
         // a foreign rank's schedule is rejected
         let other = Topology::Ring.plan(2, 4).rank_schedule(1);
         assert!(mesh.allreduce(&mut buf, &other).is_err());
+    }
+
+    /// The engine's block merge: copy the first partial, accumulate the
+    /// rest per coordinate in block order (what `merge_block_sums`
+    /// produces on a worker).
+    fn fold_blocks(blocks: &[Vec<f64>], m: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m];
+        for (b, part) in blocks.iter().enumerate() {
+            for (o, v) in out.iter_mut().zip(part) {
+                if b == 0 {
+                    *o = *v;
+                } else {
+                    *o += *v;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn overlapped_allreduce_matches_plain_bitwise() {
+        for topo in Topology::all() {
+            let p = 4;
+            let m = 13;
+            let mut rng = Pcg64::new(0xA5);
+            // heterogeneous block counts per rank, incl. a no-block rank
+            let rank_blocks: Vec<Vec<Vec<f64>>> = [3usize, 1, 0, 5]
+                .iter()
+                .map(|&nb| {
+                    (0..nb)
+                        .map(|_| (0..m).map(|_| rng.normal()).collect())
+                        .collect()
+                })
+                .collect();
+            let parts: Vec<Vec<f64>> =
+                rank_blocks.iter().map(|b| fold_blocks(b, m)).collect();
+            let plan = topo.plan(p, m);
+            let want = reduce(parts.clone(), &plan);
+            let listeners: Vec<TcpListener> = (0..p)
+                .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("bind"))
+                .collect();
+            let addrs: Vec<String> = listeners
+                .iter()
+                .map(|l| l.local_addr().unwrap().to_string())
+                .collect();
+            let bufs: Vec<Vec<f64>> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (rank, (blocks, listener)) in
+                    rank_blocks.iter().zip(&listeners).enumerate()
+                {
+                    let addrs = &addrs;
+                    let plan = &plan;
+                    handles.push(scope.spawn(move || {
+                        let mesh = Mesh::establish(rank, addrs, listener).unwrap();
+                        let sched = plan.rank_schedule(rank);
+                        let flags = plan.overlap_flags(rank);
+                        let handle =
+                            mesh.begin_stream(&sched, &flags, blocks.len()).unwrap();
+                        // offer in reverse completion order: the flush
+                        // logic must restore block order on the wire
+                        for b in (0..blocks.len()).rev() {
+                            handle.offer(b, &blocks[b]);
+                        }
+                        let mut buf = fold_blocks(blocks, m);
+                        mesh.allreduce_overlap(&mut buf, &sched, &flags, handle)
+                            .unwrap();
+                        buf
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, buf) in bufs.iter().enumerate() {
+                assert!(
+                    buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{topo:?} rank={rank} overlapped reduce diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_frames_sum_exactly_on_representable_values() {
+        for topo in Topology::all() {
+            let p = 3;
+            let m = 9;
+            let mut rng = Pcg64::new(31);
+            // small integers survive the f32 round trip losslessly
+            let parts: Vec<Vec<f64>> = (0..p)
+                .map(|_| (0..m).map(|_| rng.below(41) as f64 - 20.0).collect())
+                .collect();
+            let plan = topo.plan(p, m);
+            let want = reduce(parts.clone(), &plan);
+            let listeners: Vec<TcpListener> = (0..p)
+                .map(|_| TcpListener::bind(("127.0.0.1", 0)).expect("bind"))
+                .collect();
+            let addrs: Vec<String> = listeners
+                .iter()
+                .map(|l| l.local_addr().unwrap().to_string())
+                .collect();
+            let out: Vec<(Vec<f64>, MeshStats)> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (rank, (mut buf, listener)) in
+                    parts.clone().into_iter().zip(&listeners).enumerate()
+                {
+                    let addrs = &addrs;
+                    let plan = &plan;
+                    handles.push(scope.spawn(move || {
+                        let mut mesh =
+                            Mesh::establish(rank, addrs, listener).unwrap();
+                        mesh.set_encoding(FrameEncoding::F32);
+                        let sched = plan.rank_schedule(rank);
+                        let stats = mesh.allreduce(&mut buf, &sched).unwrap();
+                        (buf, stats)
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, (buf, _)) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "{topo:?} rank={rank}");
+            }
+            // compact frames really halve the payload: 4 bytes/element
+            let scheds = plan.rank_schedules();
+            for (rank, (_, s)) in out.iter().enumerate() {
+                let expect =
+                    4 * scheds[rank].send_elems() as u64 + 4 * scheds[rank].send_frames() as u64;
+                assert_eq!(s.tx, expect, "{topo:?} rank={rank} tx");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_frame_codec_rounds_to_nearest_even() {
+        let vals = [0.1, -0.0, 1e-310, f64::MAX, 3.5, -7.25];
+        let frame = encode_range(&vals, FrameEncoding::F32);
+        assert_eq!(frame.len(), 4 + 4 * vals.len());
+        assert_eq!(
+            u32::from_le_bytes(frame[0..4].try_into().unwrap()),
+            4 * vals.len() as u32
+        );
+        let mut out = vec![0.0f64; vals.len()];
+        fold_payload(&frame[4..], FrameEncoding::F32, &mut out, false);
+        for (v, o) in vals.iter().zip(&out) {
+            let want = (*v as f32) as f64;
+            assert_eq!(want.to_bits(), o.to_bits(), "value {v}");
+        }
     }
 
     #[test]

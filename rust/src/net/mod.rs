@@ -110,6 +110,50 @@ impl DataPlane {
     }
 }
 
+/// On-wire element encoding of p2p reduction frames (`[cluster]
+/// frame_encoding`). `F64` ships raw IEEE-754 bits and is the bitwise-
+/// deterministic default; `F32` down-converts each element on encode
+/// (nearest-even) and widens back on receive — accumulation stays f64,
+/// so only the wire narrows. Halves mesh bytes at the price of exact
+/// transport parity, which is why `net_smoke` swaps its bitwise
+/// trajectory assert for the accuracy-delta gate (final f and AUPRC
+/// within `[cluster] frame_tol` of the f64 run) when f32 is on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FrameEncoding {
+    #[default]
+    F64,
+    F32,
+}
+
+impl FrameEncoding {
+    pub fn from_name(name: &str) -> Option<FrameEncoding> {
+        match name {
+            "f64" => Some(FrameEncoding::F64),
+            "f32" => Some(FrameEncoding::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameEncoding::F64 => "f64",
+            FrameEncoding::F32 => "f32",
+        }
+    }
+
+    pub fn all() -> [FrameEncoding; 2] {
+        [FrameEncoding::F64, FrameEncoding::F32]
+    }
+
+    /// Payload bytes per vector element on the wire.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            FrameEncoding::F64 => 8,
+            FrameEncoding::F32 => 4,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Replicated vector registers
 // ---------------------------------------------------------------------------
@@ -518,6 +562,20 @@ pub struct WorkerSetup {
     /// `--telemetry-out`; off by default — recording is opt-in and the
     /// disabled path is allocation-free)
     pub telemetry: bool,
+    /// kernel implementation toggle (`[worker] simd`, default on):
+    /// selects between the vectorizer-shaped and the indexed reference
+    /// row kernels. Both compute the same lane-chunked DAG, so the
+    /// flag is bitwise irrelevant to every result.
+    pub simd: bool,
+    /// compute/communication overlap (`[cluster] overlap`, default
+    /// off): under the p2p plane, eligible reduces stream per-block
+    /// partial frames into the mesh schedule while later blocks still
+    /// compute. The partial accumulate order is pinned by the plan, so
+    /// results stay bitwise identical to the non-overlapped path.
+    pub overlap: bool,
+    /// p2p reduction-frame element encoding (`[cluster]
+    /// frame_encoding`, default f64 — see [`FrameEncoding`])
+    pub frame_encoding: FrameEncoding,
 }
 
 impl WorkerSetup {
@@ -595,6 +653,12 @@ pub struct Measured {
     /// p2p combine schedules (a subset of `reduce_secs` wall time;
     /// 0 under star and in-process)
     pub mesh_stall_secs: f64,
+    /// seconds of compute hidden behind the mesh by the overlap plane:
+    /// per eligible reduce, the window between a rank's first streamed
+    /// partial frame entering the wire and its kernel finishing (max
+    /// across ranks per phase, summed over phases; 0 with `[cluster]
+    /// overlap` off, under star, and in-process)
+    pub overlap_secs: f64,
 }
 
 impl Measured {
@@ -609,6 +673,7 @@ impl Measured {
         self.driver_data_bytes += other.driver_data_bytes;
         self.queue_wait_secs += other.queue_wait_secs;
         self.mesh_stall_secs += other.mesh_stall_secs;
+        self.overlap_secs += other.overlap_secs;
     }
 
     /// Total control-plane (driver-link) traffic.
@@ -824,6 +889,7 @@ mod tests {
             driver_data_bytes: 8,
             queue_wait_secs: 0.125,
             mesh_stall_secs: 0.0625,
+            overlap_secs: 0.03125,
         };
         a.merge(&Measured {
             phase_secs: 2.0,
@@ -836,6 +902,7 @@ mod tests {
             driver_data_bytes: 16,
             queue_wait_secs: 0.375,
             mesh_stall_secs: 0.1875,
+            overlap_secs: 0.09375,
         });
         assert_eq!(a.phase_secs, 3.0);
         assert_eq!(a.compute_secs, 1.0);
@@ -845,6 +912,7 @@ mod tests {
         assert_eq!(a.driver_data_bytes, 24);
         assert_eq!(a.queue_wait_secs, 0.5);
         assert_eq!(a.mesh_stall_secs, 0.25);
+        assert_eq!(a.overlap_secs, 0.125);
     }
 
     #[test]
@@ -854,6 +922,13 @@ mod tests {
         }
         assert_eq!(DataPlane::from_name("rdma"), None);
         assert_eq!(DataPlane::default(), DataPlane::Star);
+        for enc in FrameEncoding::all() {
+            assert_eq!(FrameEncoding::from_name(enc.name()), Some(enc));
+        }
+        assert_eq!(FrameEncoding::from_name("f16"), None);
+        assert_eq!(FrameEncoding::default(), FrameEncoding::F64);
+        assert_eq!(FrameEncoding::F64.elem_bytes(), 8);
+        assert_eq!(FrameEncoding::F32.elem_bytes(), 4);
     }
 
     #[test]
@@ -875,6 +950,9 @@ mod tests {
             p2p_port_base: 0,
             threads: 1,
             telemetry: false,
+            simd: true,
+            overlap: false,
+            frame_encoding: FrameEncoding::F64,
         };
         assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
         setup.p2p_bind = "10.0.0.1".into();

@@ -534,6 +534,7 @@ impl TcpDriver {
                     compute_secs,
                     queue_ns,
                     stall_ns,
+                    overlap_ns,
                     dots: d,
                 } => {
                     // mesh traffic is counted once, at each sender
@@ -543,6 +544,8 @@ impl TcpDriver {
                         stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
                     stats.mesh_stall_secs =
                         stats.mesh_stall_secs.max(stall_ns as f64 * 1e-9);
+                    stats.overlap_secs =
+                        stats.overlap_secs.max(overlap_ns as f64 * 1e-9);
                     mesh_secs = mesh_secs.max(secs);
                     if rank == 0 {
                         dots = d;

@@ -262,6 +262,71 @@ impl ReducePlan {
     pub fn mesh_bytes(&self) -> u64 {
         (0..self.p).map(|r| self.rank_schedule(r).send_bytes()).sum()
     }
+
+    /// Per-op compute/communication-overlap flags for `rank`'s compiled
+    /// schedule, aligned index-for-index with
+    /// [`ReducePlan::rank_schedule`]`(rank).ops`.
+    ///
+    /// A `Send` is *streamable* when the range it ships is still a pure
+    /// local partial — no earlier receive in the rank's schedule
+    /// overlaps `[lo, hi)` — so the sender may stream it as per-block
+    /// partial frames while later blocks are still computing (one
+    /// streamed send per destination: frames of a second streamed range
+    /// would interleave with the first on the same connection). A
+    /// receive is streamable exactly when its matching peer send is:
+    /// per-connection FIFO pairs the k-th receive-from-X here with the
+    /// k-th send-to-`rank` in X's schedule, so both sides derive the
+    /// same verdict from the plan alone — no negotiation on the wire.
+    pub fn overlap_flags(&self, rank: usize) -> Vec<bool> {
+        use std::collections::BTreeMap;
+        let sched = self.rank_schedule(rank);
+        let mut flags = streamable_sends(&sched.ops);
+        // peer → stream flags of its sends addressed to us, in order
+        let mut peer_sends: BTreeMap<usize, Vec<bool>> = BTreeMap::new();
+        let mut recv_seen: BTreeMap<usize, usize> = BTreeMap::new();
+        for (k, op) in sched.ops.iter().enumerate() {
+            let from = match *op {
+                MeshOp::RecvAccum { from, .. } | MeshOp::RecvCopy { from, .. } => from,
+                MeshOp::Send { .. } => continue,
+            };
+            let to_me = peer_sends.entry(from).or_insert_with(|| {
+                let peer = self.rank_schedule(from);
+                streamable_sends(&peer.ops)
+                    .into_iter()
+                    .zip(&peer.ops)
+                    .filter_map(|(f, op)| match *op {
+                        MeshOp::Send { to, .. } if to == rank => Some(f),
+                        _ => None,
+                    })
+                    .collect()
+            });
+            let idx = recv_seen.entry(from).or_insert(0);
+            flags[k] = to_me.get(*idx).copied().unwrap_or(false);
+            *idx += 1;
+        }
+        flags
+    }
+}
+
+/// The sender half of [`ReducePlan::overlap_flags`]: which `Send` ops
+/// ship a pure local partial (no earlier receive overlapping the
+/// range), deduplicated to the first per destination.
+fn streamable_sends(ops: &[MeshOp]) -> Vec<bool> {
+    let mut streamed_to: Vec<usize> = Vec::new();
+    let mut flags = vec![false; ops.len()];
+    for (k, op) in ops.iter().enumerate() {
+        let MeshOp::Send { to, lo, hi } = *op else { continue };
+        let touched = ops[..k].iter().any(|prev| match *prev {
+            MeshOp::RecvAccum { lo: plo, hi: phi, .. }
+            | MeshOp::RecvCopy { lo: plo, hi: phi, .. } => plo < hi && lo < phi,
+            MeshOp::Send { .. } => false,
+        });
+        if !touched && !streamed_to.contains(&to) {
+            streamed_to.push(to);
+            flags[k] = true;
+        }
+    }
+    flags
 }
 
 /// Reference executor for per-rank schedules: runs every rank's ops
@@ -630,5 +695,134 @@ mod tests {
             assert_eq!(Topology::from_name(topo.name()), Some(topo));
         }
         assert_eq!(Topology::from_name("mesh"), None);
+    }
+
+    #[test]
+    fn overlap_flags_flat_streams_every_reduce_leg() {
+        let plan = Topology::Flat.plan(4, 60);
+        // non-root ranks stream their single reduce-half send; the
+        // broadcast copy back never streams
+        for rank in 1..4 {
+            let sched = plan.rank_schedule(rank);
+            let flags = plan.overlap_flags(rank);
+            assert_eq!(flags.len(), sched.ops.len());
+            assert!(matches!(sched.ops[0], MeshOp::Send { to: 0, .. }));
+            assert!(flags[0], "rank {rank} reduce send should stream");
+            assert!(!flags[1..].iter().any(|&f| f), "rank {rank} broadcast streamed");
+        }
+        // the root stages every reduce-half receive; its broadcast
+        // sends carry the merged sum and must not stream
+        let sched = plan.rank_schedule(0);
+        let flags = plan.overlap_flags(0);
+        for (k, op) in sched.ops.iter().enumerate() {
+            match *op {
+                MeshOp::RecvAccum { .. } => assert!(flags[k], "root recv {k} unstaged"),
+                _ => assert!(!flags[k], "root op {k} streamed"),
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_flags_tree_streams_leaf_sends_only() {
+        let plan = Topology::Tree.plan(4, 16);
+        // stride-1 leaves (1 and 3) ship pure local partials
+        assert!(plan.overlap_flags(1)[0]);
+        assert!(plan.overlap_flags(3)[0]);
+        // interior rank 2 forwards an already-accumulated range
+        let sched = plan.rank_schedule(2);
+        let flags = plan.overlap_flags(2);
+        for (k, op) in sched.ops.iter().enumerate() {
+            match *op {
+                MeshOp::RecvAccum { from: 3, .. } => assert!(flags[k]),
+                MeshOp::Send { .. } => assert!(!flags[k], "interior send streamed"),
+                _ => assert!(!flags[k]),
+            }
+        }
+        // the root stages only the stream arriving from leaf 1
+        let sched = plan.rank_schedule(0);
+        let flags = plan.overlap_flags(0);
+        for (k, op) in sched.ops.iter().enumerate() {
+            match *op {
+                MeshOp::RecvAccum { from, .. } => assert_eq!(flags[k], from == 1),
+                _ => assert!(!flags[k]),
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_flags_ring_streams_step_zero_chunks() {
+        let plan = Topology::Ring.plan(4, 16);
+        for rank in 0..4 {
+            let sched = plan.rank_schedule(rank);
+            let flags = plan.overlap_flags(rank);
+            let streamed_sends: Vec<&MeshOp> = sched
+                .ops
+                .iter()
+                .zip(&flags)
+                .filter(|&(op, &f)| f && matches!(op, MeshOp::Send { .. }))
+                .map(|(op, _)| op)
+                .collect();
+            // exactly the rank's own chunk leaves at reduce step 0
+            assert_eq!(streamed_sends.len(), 1, "rank {rank}");
+            let lo = rank * 4;
+            assert!(
+                matches!(*streamed_sends[0], MeshOp::Send { to, lo: l, hi }
+                    if to == (rank + 1) % 4 && l == lo && hi == lo + 4),
+                "rank {rank} streamed {:?}",
+                streamed_sends[0]
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_flags_are_symmetric_across_connections() {
+        use std::collections::BTreeMap;
+        for topo in Topology::all() {
+            for (p, m) in [(1usize, 5usize), (2, 4), (4, 60), (5, 17), (6, 3), (8, 8)] {
+                let plan = topo.plan(p, m);
+                // per-connection flag sequences, in wire (FIFO) order
+                let mut send_seq: BTreeMap<(usize, usize), Vec<bool>> = BTreeMap::new();
+                let mut recv_seq: BTreeMap<(usize, usize), Vec<bool>> = BTreeMap::new();
+                for rank in 0..p {
+                    let sched = plan.rank_schedule(rank);
+                    let flags = plan.overlap_flags(rank);
+                    assert_eq!(flags.len(), sched.ops.len(), "{topo:?} p={p} m={m}");
+                    let mut received: Vec<(usize, usize)> = Vec::new();
+                    for (k, op) in sched.ops.iter().enumerate() {
+                        match *op {
+                            MeshOp::Send { to, lo, hi } => {
+                                if flags[k] {
+                                    // a streamed range is a pure local
+                                    // partial: nothing merged into it yet
+                                    assert!(
+                                        !received
+                                            .iter()
+                                            .any(|&(plo, phi)| plo < hi && lo < phi),
+                                        "{topo:?} p={p} m={m} rank={rank} streamed a merged range"
+                                    );
+                                }
+                                send_seq.entry((rank, to)).or_default().push(flags[k]);
+                            }
+                            MeshOp::RecvAccum { from, lo, hi } => {
+                                received.push((lo, hi));
+                                recv_seq.entry((from, rank)).or_default().push(flags[k]);
+                            }
+                            MeshOp::RecvCopy { from, lo, hi } => {
+                                assert!(!flags[k], "{topo:?} RecvCopy streamed");
+                                received.push((lo, hi));
+                                recv_seq.entry((from, rank)).or_default().push(flags[k]);
+                            }
+                        }
+                    }
+                }
+                // both endpoints of every connection derive the same
+                // verdict for every frame — no negotiation needed
+                assert_eq!(send_seq, recv_seq, "{topo:?} p={p} m={m}");
+                if p > 1 {
+                    let streamed = send_seq.values().flatten().filter(|&&f| f).count();
+                    assert!(streamed > 0, "{topo:?} p={p} m={m} streams nothing");
+                }
+            }
+        }
     }
 }

@@ -33,8 +33,8 @@ use crate::loss::Loss;
 use crate::metrics::telemetry::Span as TelemetrySpan;
 
 use super::{
-    Combine, CombineSpec, Command, DataPlane, DualUpdateSpec, InnerSolveSpec,
-    LocalSolveSpec, Reply, Topology, VecOp, VecRef, WorkerSetup,
+    Combine, CombineSpec, Command, DataPlane, DualUpdateSpec, FrameEncoding,
+    InnerSolveSpec, LocalSolveSpec, Reply, Topology, VecOp, VecRef, WorkerSetup,
 };
 
 /// Hard cap on a single frame (guards against corrupt length prefixes).
@@ -85,7 +85,17 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// number back). `Score` and `Publish` carry `PROTO_VERSION` right
 /// after the tag, like `Setup`/`Ready`, so a stale scorer fails fast
 /// at its first request instead of silently mis-decoding a batch.
-pub const PROTO_VERSION: u32 = 7;
+///
+/// v8: the hot-path perf plane — `Setup` carries the SIMD kernel
+/// toggle, the compute/communication overlap toggle, and the mesh
+/// reduction-frame element encoding (`f64` lossless, or compact `f32`
+/// at half the payload bytes); `Reduced` reports the rank's measured
+/// overlap nanoseconds (wall time the mesh was draining streamed
+/// partials while later row blocks were still computing — the
+/// `overlap_secs` trace column). Mesh data-plane frames gained the
+/// streamed-range layout (`[len = 4][B: u32]` header + `B` per-block
+/// partial frames) used when overlap is on.
+pub const PROTO_VERSION: u32 = 8;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -221,9 +231,25 @@ impl Enc {
     pub fn vec_f32(&mut self, v: &[f32]) {
         self.u64(v.len() as u64);
         for &x in v {
-            self.u32(x.to_bits());
+            put_f32(&mut self.buf, x);
         }
     }
+}
+
+/// Append one f32 as little-endian raw IEEE bits — the single element
+/// codec shared by the control plane's [`Enc::vec_f32`] (the serving
+/// plane's CSR row values) and the mesh data plane's compact
+/// [`FrameEncoding::F32`] reduction frames.
+#[inline]
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Decode one f32 from its little-endian raw bits — the inverse of
+/// [`put_f32`], lossless by construction.
+#[inline]
+pub fn get_f32(bytes: [u8; 4]) -> f32 {
+    f32::from_bits(u32::from_le_bytes(bytes))
 }
 
 /// Cursor-based decoder over a frame payload.
@@ -319,7 +345,7 @@ impl<'a> Dec<'a> {
         }
         let mut v = Vec::with_capacity(len);
         for _ in 0..len {
-            v.push(f32::from_bits(self.u32()?));
+            v.push(get_f32(self.take(4)?.try_into().unwrap()));
         }
         Ok(v)
     }
@@ -436,6 +462,10 @@ pub enum Msg {
         queue_ns: u64,
         /// wall time the rank spent blocked in mesh receives
         stall_ns: u64,
+        /// wall time streamed partials were draining onto the mesh
+        /// while later row blocks still computed (0 when the
+        /// compute/communication overlap is off or ineligible)
+        overlap_ns: u64,
         dots: Vec<f64>,
     },
     /// Star-plane combine completion: the driver's plan sums, shipped
@@ -707,6 +737,9 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.u32(u32::from(s.p2p_port_base));
             e.usize(s.threads);
             e.bool(s.telemetry);
+            e.bool(s.simd);
+            e.bool(s.overlap);
+            e.str(s.frame_encoding.name());
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
         Msg::Ready { m, n, nnz, data_port, now_ns } => {
@@ -744,6 +777,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             compute_secs,
             queue_ns,
             stall_ns,
+            overlap_ns,
             dots,
         } => {
             e.u8(tag::REDUCED);
@@ -753,6 +787,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.f64(*compute_secs);
             e.u64(*queue_ns);
             e.u64(*stall_ns);
+            e.u64(*overlap_ns);
             e.vec_f64(dots);
             enc_reply(&mut e, reply);
         }
@@ -1037,6 +1072,13 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             p2p_port_base: port_from(d.u32()?)?,
             threads: d.usize()?,
             telemetry: d.bool()?,
+            simd: d.bool()?,
+            overlap: d.bool()?,
+            frame_encoding: {
+                let name = d.str()?;
+                FrameEncoding::from_name(&name)
+                    .ok_or_else(|| format!("unknown frame encoding {name:?}"))?
+            },
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -1078,6 +1120,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let compute_secs = d.f64()?;
             let queue_ns = d.u64()?;
             let stall_ns = d.u64()?;
+            let overlap_ns = d.u64()?;
             let dots = d.vec_f64()?;
             let rt = d.u8()?;
             Msg::Reduced {
@@ -1088,6 +1131,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 compute_secs,
                 queue_ns,
                 stall_ns,
+                overlap_ns,
                 dots,
             }
         }
@@ -1461,6 +1505,9 @@ mod tests {
             p2p_port_base: 9100,
             threads: 4,
             telemetry: true,
+            simd: false,
+            overlap: true,
+            frame_encoding: FrameEncoding::F32,
         }));
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
@@ -1649,6 +1696,7 @@ mod tests {
             compute_secs: 0.0078125,
             queue_ns: 2048,
             stall_ns: 1024,
+            overlap_ns: 4096,
             dots: vec![0.5, -0.25],
         });
         roundtrip(Msg::Reduced {
@@ -1659,6 +1707,7 @@ mod tests {
             compute_secs: 0.0,
             queue_ns: 0,
             stall_ns: 0,
+            overlap_ns: 0,
             dots: vec![],
         });
         roundtrip(Msg::Finish { sums: vec![] });
@@ -1873,6 +1922,7 @@ mod tests {
                 compute_secs: 0.25,
                 queue_ns: 11,
                 stall_ns: 22,
+                overlap_ns: 33,
                 dots: vec![1.0, 2.0],
             }),
             0,

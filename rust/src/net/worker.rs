@@ -22,13 +22,13 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use super::endpoint::{
-    complete_combine, eval_test_auprc, exec, pre_combine, put_combine_vectors,
-    take_combine_vectors, WorkerState,
+    complete_combine, eval_test_auprc, exec, exec_streamed, pre_combine,
+    put_combine_vectors, take_combine_vectors, WorkerState,
 };
 use super::mesh::{Mesh, MeshStats};
 use super::topology::RankSchedule;
 use super::wire::{self, Msg};
-use super::{Command, DataPlane, Reply, Topology};
+use super::{Combine, Command, DataPlane, Reply, Topology};
 use crate::metrics::telemetry;
 
 /// The `--worker --connect host:port` self-exec handshake, shared by
@@ -148,9 +148,10 @@ pub fn serve(connect: &str) -> Result<(), String> {
 
     // --- phase loop ---
     let mut mesh: Option<Mesh> = None;
-    // compiled mesh schedules, one per (topology, m) seen — reduces are
-    // hot-loop operations, the compile is paid once per shape
-    let mut scheds: Vec<(Topology, usize, RankSchedule)> = Vec::new();
+    // compiled mesh schedules plus their overlap-streamability flags,
+    // one per (topology, m) seen — reduces are hot-loop operations, the
+    // compile is paid once per shape
+    let mut scheds: Vec<(Topology, usize, RankSchedule, Vec<bool>)> = Vec::new();
     loop {
         let msg = match wire::recv(&mut r)? {
             Some(msg) => msg,
@@ -179,7 +180,10 @@ pub fn serve(connect: &str) -> Result<(), String> {
                     Mesh::establish(setup.rank, &addrs, listener)
                 };
                 match established {
-                    Ok(m) => mesh = Some(m),
+                    Ok(mut m) => {
+                        m.set_encoding(setup.frame_encoding);
+                        mesh = Some(m);
+                    }
                     Err(e) => return Err(abort(e, &mut w)),
                 }
                 send(&Msg::MeshOk, &mut w)?;
@@ -223,12 +227,56 @@ pub fn serve(connect: &str) -> Result<(), String> {
                 if setup.data_plane == DataPlane::P2p && mesh.is_none() {
                     return Err(abort("Reduce before the mesh handshake".into(), &mut w));
                 }
-                let t_exec = Instant::now();
-                let mut reply = match exec(shard.as_ref(), &mut st, &cmd) {
+                // compute/communication overlap: when the combine's
+                // pre-transform is the identity (no weights, plain
+                // WeightedSum) and the phase is a block-streamable
+                // kernel, flush finished row-block partials onto the
+                // mesh while the remaining blocks are still computing.
+                // Eligibility depends only on the command and spec —
+                // never on this rank's block count — so every rank
+                // takes the same branch and the plan stays symmetric.
+                let overlap_ok = setup.overlap
+                    && mesh.is_some()
+                    && spec.weights.is_empty()
+                    && matches!(spec.kind, Combine::WeightedSum)
+                    && matches!(&cmd, Command::Grad { .. } | Command::Hvp { .. });
+                let mut streamed = None;
+                let mut sched_idx = None;
+                let (result, compute_secs) = if overlap_ok {
+                    let m = shard.m();
+                    let idx = cached_sched(&mut scheds, topology, m, setup.p, setup.rank);
+                    sched_idx = Some(idx);
+                    let mesh_ref = mesh.as_ref().expect("overlap implies mesh");
+                    let handle = match mesh_ref.begin_stream(
+                        &scheds[idx].2,
+                        &scheds[idx].3,
+                        shard.stream_block_count(),
+                    ) {
+                        Ok(h) => h,
+                        Err(e) => return Err(abort(e, &mut w)),
+                    };
+                    let t_exec = Instant::now();
+                    let sink = |b: usize, partial: &[f64]| handle.offer(b, partial);
+                    let result = exec_streamed(shard.as_ref(), &mut st, &cmd, &sink);
+                    let compute_secs = t_exec.elapsed().as_secs_f64();
+                    // the overlap window: first partial on the wire →
+                    // kernel done (what a blocking reduce would have
+                    // serialized after compute instead)
+                    let overlap_ns = handle
+                        .first_flush()
+                        .map(|t0| Instant::now().duration_since(t0).as_nanos() as u64)
+                        .unwrap_or(0);
+                    streamed = Some((handle, overlap_ns));
+                    (result, compute_secs)
+                } else {
+                    let t_exec = Instant::now();
+                    let result = exec(shard.as_ref(), &mut st, &cmd);
+                    (result, t_exec.elapsed().as_secs_f64())
+                };
+                let mut reply = match result {
                     Ok(reply) => reply,
                     Err(e) => return Err(abort(e, &mut w)),
                 };
-                let compute_secs = t_exec.elapsed().as_secs_f64();
                 let mut vectors = match take_combine_vectors(&mut reply) {
                     Ok(v) => v,
                     Err(e) => return Err(abort(e, &mut w)),
@@ -244,23 +292,40 @@ pub fn serve(connect: &str) -> Result<(), String> {
                         // holding the combined result in its registers;
                         // the driver gets scalars only.
                         let m = vectors[0].len();
-                        let cached = scheds
-                            .iter()
-                            .position(|(t, mm, _)| *t == topology && *mm == m);
-                        let idx = match cached {
+                        let idx = match sched_idx {
                             Some(i) => i,
-                            None => {
-                                let sched =
-                                    topology.plan(setup.p, m).rank_schedule(setup.rank);
-                                scheds.push((topology, m, sched));
-                                scheds.len() - 1
-                            }
+                            None => cached_sched(
+                                &mut scheds,
+                                topology,
+                                m,
+                                setup.p,
+                                setup.rank,
+                            ),
                         };
                         let mut stats = MeshStats::default();
-                        for vector in vectors.iter_mut() {
-                            match mesh.allreduce(vector, &scheds[idx].2) {
-                                Ok(s) => stats.merge(&s),
-                                Err(e) => return Err(abort(e, &mut w)),
+                        let mut overlap_ns = 0u64;
+                        match streamed {
+                            Some((handle, ons)) => {
+                                // streamable phases reduce exactly one
+                                // vector; the handle completes it
+                                match mesh.allreduce_overlap(
+                                    &mut vectors[0],
+                                    &scheds[idx].2,
+                                    &scheds[idx].3,
+                                    handle,
+                                ) {
+                                    Ok(s) => stats.merge(&s),
+                                    Err(e) => return Err(abort(e, &mut w)),
+                                }
+                                overlap_ns = ons;
+                            }
+                            None => {
+                                for vector in vectors.iter_mut() {
+                                    match mesh.allreduce(vector, &scheds[idx].2) {
+                                        Ok(s) => stats.merge(&s),
+                                        Err(e) => return Err(abort(e, &mut w)),
+                                    }
+                                }
                             }
                         }
                         // the mesh left the plan sums replicated here
@@ -277,6 +342,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 compute_secs,
                                 queue_ns: shard.take_queue_wait_ns(),
                                 stall_ns: (stats.stall_secs * 1e9) as u64,
+                                overlap_ns,
                                 dots,
                             },
                             &mut w,
@@ -299,6 +365,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 compute_secs,
                                 queue_ns: shard.take_queue_wait_ns(),
                                 stall_ns: 0,
+                                overlap_ns: 0,
                                 dots: Vec::new(),
                             },
                             &mut w,
@@ -324,4 +391,25 @@ pub fn serve(connect: &str) -> Result<(), String> {
             other => return Err(format!("unexpected message {other:?}")),
         }
     }
+}
+
+/// Index of the compiled `(topology, m)` schedule in the worker's
+/// cache, compiling the rank schedule plus its overlap-streamability
+/// flags on first use.
+fn cached_sched(
+    scheds: &mut Vec<(Topology, usize, RankSchedule, Vec<bool>)>,
+    topology: Topology,
+    m: usize,
+    p: usize,
+    rank: usize,
+) -> usize {
+    if let Some(i) = scheds.iter().position(|(t, mm, _, _)| *t == topology && *mm == m)
+    {
+        return i;
+    }
+    let plan = topology.plan(p, m);
+    let sched = plan.rank_schedule(rank);
+    let flags = plan.overlap_flags(rank);
+    scheds.push((topology, m, sched, flags));
+    scheds.len() - 1
 }

@@ -464,6 +464,87 @@ pub fn fold_block_scalars(parts: &[f64]) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// Lane-chunked line-search accumulation
+// ---------------------------------------------------------------------------
+
+use crate::linalg::LANES;
+
+/// (φ, φ') over one block of per-row line-search terms, accumulated
+/// with the canonical lane-chunked DAG (see [`crate::linalg::LANES`]):
+/// rows are consumed in fixed chunks of `LANES` into `LANES`
+/// independent (φ, φ') accumulator pairs, the lanes fold pairwise
+/// `(a0 + a1) + (a2 + a3)`, and the `n % LANES` remainder rows are
+/// added sequentially onto the folded sums. `term(k)` yields row `k`'s
+/// (p, d) contribution; the chunk bounds depend only on `n`, so the
+/// result is a pure function of the terms — not of threads or of the
+/// `simd` toggle (both kernel paths call this same fold).
+#[inline]
+pub fn linesearch_lanes_fold(
+    n: usize,
+    term: impl Fn(usize) -> (f64, f64),
+) -> (f64, f64) {
+    let chunks = n / LANES;
+    let mut pa = [0.0f64; LANES];
+    let mut da = [0.0f64; LANES];
+    for t in 0..chunks {
+        for l in 0..LANES {
+            let (p, d) = term(t * LANES + l);
+            pa[l] += p;
+            da[l] += d;
+        }
+    }
+    let mut phi = (pa[0] + pa[1]) + (pa[2] + pa[3]);
+    let mut dphi = (da[0] + da[1]) + (da[2] + da[3]);
+    for k in chunks * LANES..n {
+        let (p, d) = term(k);
+        phi += p;
+        dphi += d;
+    }
+    (phi, dphi)
+}
+
+/// (φ, φ') over one block's packed (z, e, y, c) quadruples — the plan's
+/// per-trial kernel. `simd = on` streams the packed buffer in
+/// `chunks_exact(4·LANES)` strides (fixed-trip inner loops for the
+/// vectorizer); `simd = off` is the indexed reference. Both compute the
+/// [`linesearch_lanes_fold`] DAG bit for bit.
+#[inline]
+pub fn linesearch_packed_block(
+    loss: Loss,
+    t: f64,
+    packed: &[f64],
+    simd: bool,
+) -> (f64, f64) {
+    debug_assert_eq!(packed.len() % 4, 0);
+    let n = packed.len() / 4;
+    if !simd {
+        return linesearch_lanes_fold(n, |k| {
+            let q = &packed[4 * k..4 * k + 4];
+            loss.linesearch_term(q[0], q[1], q[2], q[3], t)
+        });
+    }
+    let mut pa = [0.0f64; LANES];
+    let mut da = [0.0f64; LANES];
+    let mut it = packed.chunks_exact(4 * LANES);
+    for quads in &mut it {
+        for l in 0..LANES {
+            let q = &quads[4 * l..4 * l + 4];
+            let (p, d) = loss.linesearch_term(q[0], q[1], q[2], q[3], t);
+            pa[l] += p;
+            da[l] += d;
+        }
+    }
+    let mut phi = (pa[0] + pa[1]) + (pa[2] + pa[3]);
+    let mut dphi = (da[0] + da[1]) + (da[2] + da[3]);
+    for q in it.remainder().chunks_exact(4) {
+        let (p, d) = loss.linesearch_term(q[0], q[1], q[2], q[3], t);
+        phi += p;
+        dphi += d;
+    }
+    (phi, dphi)
+}
+
+// ---------------------------------------------------------------------------
 // The reusable line-search evaluation plan
 // ---------------------------------------------------------------------------
 
@@ -481,14 +562,19 @@ pub struct LinesearchPlan {
     /// AoS layout: packed[4i..4i+4] = (z, e, y, c) of example i
     packed: Vec<f64>,
     pool: Arc<ComputePool>,
+    /// kernel implementation toggle (never the bits) — see
+    /// [`linesearch_packed_block`]
+    simd: bool,
 }
 
 impl LinesearchPlan {
     /// Gather (z, e, y, c) into the packed buffer. `blocks` is the
-    /// shard's row blocking.
+    /// shard's row blocking; `simd` picks the per-trial kernel
+    /// implementation (bitwise-identical either way).
     pub fn build(
         blocks: &[Range<usize>],
         pool: Arc<ComputePool>,
+        simd: bool,
         z: &[f64],
         e: &[f64],
         y: &[f64],
@@ -517,6 +603,7 @@ impl LinesearchPlan {
             blocks: blocks.to_vec(),
             packed,
             pool,
+            simd,
         }
     }
 
@@ -532,15 +619,8 @@ impl LinesearchPlan {
         let nb = self.blocks.len();
         let partials = self.pool.map(nb, |b| {
             let rows = &self.blocks[b];
-            let mut phi = 0.0;
-            let mut dphi = 0.0;
-            for i in rows.clone() {
-                let q = &self.packed[4 * i..4 * i + 4];
-                let (p, d) = loss.linesearch_term(q[0], q[1], q[2], q[3], t);
-                phi += p;
-                dphi += d;
-            }
-            (phi, dphi)
+            let packed = &self.packed[4 * rows.start..4 * rows.end];
+            linesearch_packed_block(loss, t, packed, self.simd)
         });
         let phis: Vec<f64> = partials.iter().map(|&(p, _)| p).collect();
         let dphis: Vec<f64> = partials.iter().map(|&(_, d)| d).collect();
@@ -718,6 +798,35 @@ mod tests {
         assert_eq!(fold_block_scalars(&[]), 0.0);
         assert_eq!(fold_block_scalars(&[-0.0]).to_bits(), (-0.0f64).to_bits());
         assert_eq!(fold_block_scalars(&[1.0, 2.0, 3.0]), 6.0);
+    }
+
+    #[test]
+    fn packed_linesearch_simd_matches_reference_bitwise() {
+        let mut rng = crate::util::rng::Pcg64::new(0xF01D);
+        for loss in [Loss::Logistic, Loss::SquaredHinge] {
+            // ragged lengths: empty, below a lane, one chunk, ragged tails
+            for n in [0usize, 1, 3, 4, 5, 15, 16, 17, 97] {
+                let packed: Vec<f64> = (0..4 * n)
+                    .map(|k| match k % 4 {
+                        2 => {
+                            if rng.below(2) == 0 {
+                                1.0
+                            } else {
+                                -1.0
+                            }
+                        }
+                        3 => rng.normal().abs() + 0.1,
+                        _ => rng.normal(),
+                    })
+                    .collect();
+                for t in [0.0, 0.5, 1.0] {
+                    let (p0, d0) = linesearch_packed_block(loss, t, &packed, false);
+                    let (p1, d1) = linesearch_packed_block(loss, t, &packed, true);
+                    assert_eq!(p0.to_bits(), p1.to_bits(), "{loss:?} n={n} t={t}");
+                    assert_eq!(d0.to_bits(), d1.to_bits(), "{loss:?} n={n} t={t}");
+                }
+            }
+        }
     }
 
     #[test]

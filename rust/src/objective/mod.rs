@@ -106,6 +106,48 @@ pub trait ShardCompute: Send + Sync {
     fn take_queue_wait_ns(&self) -> u64 {
         0
     }
+
+    /// How many row-block partials the `*_streaming` kernels below
+    /// deliver to their sink — the frame count the overlap data plane
+    /// announces to its peers before the kernel runs. Backends without
+    /// block streaming report 1 (the whole result as a single partial);
+    /// an empty shard reports 0.
+    fn stream_block_count(&self) -> usize {
+        1
+    }
+
+    /// [`ShardCompute::loss_grad`] that additionally hands each row
+    /// block's *partial* gradient to `sink(block_idx, partial)` the
+    /// moment the block completes (in any order — the caller is
+    /// responsible for in-plan-order flushing). The partials left-fold
+    /// in block order to exactly the returned gradient, bit for bit —
+    /// the invariant the overlap data plane's staged accumulation
+    /// relies on. The default calls the plain kernel and reports the
+    /// finished gradient as one block.
+    fn loss_grad_streaming(
+        &self,
+        loss: Loss,
+        w: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> (f64, Vec<f64>, Vec<f64>) {
+        let out = self.loss_grad(loss, w);
+        sink(0, &out.1);
+        out
+    }
+
+    /// [`ShardCompute::hvp`] with per-block partial delivery — same
+    /// contract as [`ShardCompute::loss_grad_streaming`].
+    fn hvp_streaming(
+        &self,
+        loss: Loss,
+        z: &[f64],
+        s: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> Vec<f64> {
+        let out = self.hvp(loss, z, s);
+        sink(0, &out);
+        out
+    }
 }
 
 /// Native CSR backend, pre-split at construction into cache-sized
@@ -120,6 +162,12 @@ pub struct SparseShard {
     /// the thread count
     blocks: Vec<std::ops::Range<usize>>,
     pool: Arc<ComputePool>,
+    /// kernel implementation toggle (`[worker] simd`): `true` selects
+    /// the vectorizer-shaped row kernels, `false` the indexed
+    /// reference. Both compute the same lane-chunked DAG
+    /// ([`crate::linalg::LANES`]), so the flag can never change a bit
+    /// of any result — it is pure codegen steering.
+    simd: bool,
 }
 
 impl SparseShard {
@@ -132,7 +180,7 @@ impl SparseShard {
     /// shards; sized by the `[worker] threads` config key).
     pub fn with_pool(data: Shard, pool: Arc<ComputePool>) -> SparseShard {
         let blocks = engine::row_blocks(&data.x);
-        SparseShard { data, blocks, pool }
+        SparseShard { data, blocks, pool, simd: true }
     }
 
     /// Explicit block-size override (tests pin the determinism contract
@@ -144,7 +192,7 @@ impl SparseShard {
         pool: Arc<ComputePool>,
     ) -> SparseShard {
         let blocks = engine::row_blocks_with_target(&data.x, target_block_nnz);
-        SparseShard { data, blocks, pool }
+        SparseShard { data, blocks, pool, simd: true }
     }
 
     /// The row blocking in effect.
@@ -156,22 +204,28 @@ impl SparseShard {
     pub fn pool(&self) -> &Arc<ComputePool> {
         &self.pool
     }
-}
 
-impl ShardCompute for SparseShard {
-    fn n(&self) -> usize {
-        self.data.x.rows
+    /// Select the kernel implementation (`[worker] simd`); results are
+    /// bitwise identical either way.
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
     }
 
-    fn m(&self) -> usize {
-        self.data.x.cols
+    /// The kernel implementation in effect.
+    pub fn simd(&self) -> bool {
+        self.simd
     }
 
-    fn nnz(&self) -> usize {
-        self.data.x.nnz()
-    }
-
-    fn loss_grad(&self, loss: Loss, w: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
+    /// Shared body of `loss_grad` / `loss_grad_streaming`: the fused
+    /// block-parallel gradient pass, optionally handing each block's
+    /// partial gradient to `sink` the moment the block finishes (before
+    /// the fixed-order merge touches it).
+    fn loss_grad_impl(
+        &self,
+        loss: Loss,
+        w: &[f64],
+        sink: Option<&(dyn Fn(usize, &[f64]) + Sync)>,
+    ) -> (f64, Vec<f64>, Vec<f64>) {
         // Fused pass, block-parallel: each block traverses its rows
         // once while the entries are cache-hot, computing the margin,
         // the loss term and the gradient scatter together (see
@@ -179,6 +233,7 @@ impl ShardCompute for SparseShard {
         // slices of z; per-block (loss, gradient) partials are merged
         // in fixed block order, so bits never depend on thread count.
         let x = &self.data.x;
+        let simd = self.simd;
         let mut z = vec![0.0; x.rows];
         let nb = self.blocks.len();
         if nb == 0 {
@@ -192,7 +247,7 @@ impl ShardCompute for SparseShard {
         let block_pass = |b: usize, z_part: &mut [f64], g: &mut [f64]| -> f64 {
             let mut value = 0.0;
             for (k, i) in blocks[b].clone().enumerate() {
-                let zi = x.row_dot(i, w);
+                let zi = x.row_dot_s(i, w, simd);
                 z_part[k] = zi;
                 let (v, d) = loss.value_dz(zi, y[i]);
                 let ci = c[i];
@@ -217,9 +272,15 @@ impl ShardCompute for SparseShard {
             for (b, z_part) in z_parts.into_iter().enumerate() {
                 if b == 0 {
                     value = block_pass(b, z_part, &mut g[..]);
+                    if let Some(sink) = sink {
+                        sink(0, &g);
+                    }
                 } else {
                     scratch.fill(0.0);
                     value += block_pass(b, z_part, &mut scratch[..]);
+                    if let Some(sink) = sink {
+                        sink(b, &scratch);
+                    }
                     for (gj, sj) in g.iter_mut().zip(&scratch) {
                         *gj += *sj;
                     }
@@ -234,6 +295,9 @@ impl ShardCompute for SparseShard {
             self.pool.run_over_slices(z_parts, |b, z_part| {
                 let mut gb = vec![0.0; x.cols];
                 let vb = block_pass(b, z_part, &mut gb[..]);
+                if let Some(sink) = sink {
+                    sink(b, &gb);
+                }
                 *slots[b].lock().unwrap() = Some((vb, gb));
             });
         }
@@ -248,19 +312,17 @@ impl ShardCompute for SparseShard {
         (engine::fold_block_scalars(&values), g, z)
     }
 
-    fn margins(&self, d: &[f64]) -> Vec<f64> {
+    /// Shared body of `hvp` / `hvp_streaming` — same sink contract as
+    /// [`SparseShard::loss_grad_impl`].
+    fn hvp_impl(
+        &self,
+        loss: Loss,
+        z: &[f64],
+        s: &[f64],
+        sink: Option<&(dyn Fn(usize, &[f64]) + Sync)>,
+    ) -> Vec<f64> {
         let x = &self.data.x;
-        let mut e = vec![0.0; x.rows];
-        let blocks = &self.blocks;
-        let parts = engine::split_by_ranges(&mut e, blocks);
-        self.pool.run_over_slices(parts, |b, part| {
-            x.margins_block_into(blocks[b].clone(), d, part);
-        });
-        e
-    }
-
-    fn hvp(&self, loss: Loss, z: &[f64], s: &[f64]) -> Vec<f64> {
-        let x = &self.data.x;
+        let simd = self.simd;
         debug_assert_eq!(z.len(), x.rows);
         let mut out = vec![0.0; x.cols];
         let nb = self.blocks.len();
@@ -276,7 +338,7 @@ impl ShardCompute for SparseShard {
             for i in rows.clone() {
                 d_block.push(c[i] * loss.d2z(z[i], y[i]));
             }
-            x.hvp_block_into(rows, &d_block, s, part);
+            x.hvp_block_into(rows, &d_block, s, part, simd);
         };
         if self.pool.threads() == 1 {
             // streaming serial path — O(2m) transient memory, same
@@ -285,9 +347,15 @@ impl ShardCompute for SparseShard {
             for b in 0..nb {
                 if b == 0 {
                     block_pass(b, &mut out[..]);
+                    if let Some(sink) = sink {
+                        sink(0, &out);
+                    }
                 } else {
                     scratch.fill(0.0);
                     block_pass(b, &mut scratch[..]);
+                    if let Some(sink) = sink {
+                        sink(b, &scratch);
+                    }
                     for (oj, sj) in out.iter_mut().zip(&scratch) {
                         *oj += *sj;
                     }
@@ -298,10 +366,47 @@ impl ShardCompute for SparseShard {
         let parts = self.pool.map(nb, |b| {
             let mut part = vec![0.0; x.cols];
             block_pass(b, &mut part[..]);
+            if let Some(sink) = sink {
+                sink(b, &part);
+            }
             part
         });
         engine::merge_block_sums(&self.pool, &parts, &mut out);
         out
+    }
+}
+
+impl ShardCompute for SparseShard {
+    fn n(&self) -> usize {
+        self.data.x.rows
+    }
+
+    fn m(&self) -> usize {
+        self.data.x.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.data.x.nnz()
+    }
+
+    fn loss_grad(&self, loss: Loss, w: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
+        self.loss_grad_impl(loss, w, None)
+    }
+
+    fn margins(&self, d: &[f64]) -> Vec<f64> {
+        let x = &self.data.x;
+        let simd = self.simd;
+        let mut e = vec![0.0; x.rows];
+        let blocks = &self.blocks;
+        let parts = engine::split_by_ranges(&mut e, blocks);
+        self.pool.run_over_slices(parts, |b, part| {
+            x.margins_block_into(blocks[b].clone(), d, part, simd);
+        });
+        e
+    }
+
+    fn hvp(&self, loss: Loss, z: &[f64], s: &[f64]) -> Vec<f64> {
+        self.hvp_impl(loss, z, s, None)
     }
 
     fn linesearch_eval(&self, loss: Loss, z: &[f64], e: &[f64], t: f64) -> (f64, f64) {
@@ -314,15 +419,15 @@ impl ShardCompute for SparseShard {
         let y = &self.data.y;
         let c = &self.data.c;
         let blocks = &self.blocks;
+        // same lane-chunked per-block DAG as the packed plan, so the
+        // two evaluation paths stay bitwise interchangeable
         let partials = self.pool.map(nb, |b| {
-            let mut phi = 0.0;
-            let mut dphi = 0.0;
-            for i in blocks[b].clone() {
-                let (p, d) = loss.linesearch_term(z[i], e[i], y[i], c[i], t);
-                phi += p;
-                dphi += d;
-            }
-            (phi, dphi)
+            let rows = blocks[b].clone();
+            let lo = rows.start;
+            engine::linesearch_lanes_fold(rows.len(), |k| {
+                let i = lo + k;
+                loss.linesearch_term(z[i], e[i], y[i], c[i], t)
+            })
         });
         let phis: Vec<f64> = partials.iter().map(|&(p, _)| p).collect();
         let dphis: Vec<f64> = partials.iter().map(|&(_, d)| d).collect();
@@ -339,11 +444,35 @@ impl ShardCompute for SparseShard {
         Some(LinesearchPlan::build(
             &self.blocks,
             self.pool.clone(),
+            self.simd,
             z,
             e,
             &self.data.y,
             &self.data.c,
         ))
+    }
+
+    fn stream_block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn loss_grad_streaming(
+        &self,
+        loss: Loss,
+        w: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> (f64, Vec<f64>, Vec<f64>) {
+        self.loss_grad_impl(loss, w, Some(sink))
+    }
+
+    fn hvp_streaming(
+        &self,
+        loss: Loss,
+        z: &[f64],
+        s: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> Vec<f64> {
+        self.hvp_impl(loss, z, s, Some(sink))
     }
 
     fn shard(&self) -> Option<&Shard> {
@@ -550,6 +679,95 @@ mod tests {
             let (p, q) = shard.linesearch_eval(Loss::Logistic, &z, &e0, 0.375);
             assert_eq!(p.to_bits(), p0.to_bits(), "threads={threads}");
             assert_eq!(q.to_bits(), q0.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn simd_toggle_never_changes_kernel_bits() {
+        // the tentpole contract: simd = on|off is pure codegen steering
+        let ds = synth::quick(300, 40, 9, 21);
+        let data = Shard::whole(&ds);
+        let mut rng = crate::util::rng::Pcg64::new(22);
+        let w: Vec<f64> = (0..40).map(|_| 0.1 * rng.normal()).collect();
+        let d: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        for threads in [1usize, 4] {
+            let mut on =
+                SparseShard::with_blocking(data.clone(), 128, ComputePool::new(threads));
+            let mut off =
+                SparseShard::with_blocking(data.clone(), 128, ComputePool::new(threads));
+            on.set_simd(true);
+            off.set_simd(false);
+            let (v1, g1, z1) = on.loss_grad(Loss::Logistic, &w);
+            let (v0, g0, z0) = off.loss_grad(Loss::Logistic, &w);
+            assert_eq!(v1.to_bits(), v0.to_bits(), "threads={threads}");
+            assert!(g1.iter().zip(&g0).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert_eq!(z1, z0);
+            assert_eq!(on.margins(&d), off.margins(&d));
+            let h1 = on.hvp(Loss::Logistic, &z1, &d);
+            let h0 = off.hvp(Loss::Logistic, &z0, &d);
+            assert!(h1.iter().zip(&h0).all(|(a, b)| a.to_bits() == b.to_bits()));
+            let e = on.margins(&d);
+            let p1 = on.linesearch_plan(&z1, &e).unwrap();
+            let p0 = off.linesearch_plan(&z0, &e).unwrap();
+            for t in [0.0, 0.5, 2.0] {
+                let (a1, b1) = p1.eval(Loss::Logistic, t);
+                let (a0, b0) = p0.eval(Loss::Logistic, t);
+                assert_eq!(a1.to_bits(), a0.to_bits(), "t={t}");
+                assert_eq!(b1.to_bits(), b0.to_bits(), "t={t}");
+                let (c1, e1) = on.linesearch_eval(Loss::Logistic, &z1, &e, t);
+                assert_eq!(c1.to_bits(), a1.to_bits(), "plan vs plain t={t}");
+                assert_eq!(e1.to_bits(), b1.to_bits(), "plan vs plain t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_partials_left_fold_to_the_merged_result() {
+        // the overlap plane's invariant: per-block partials, copied on
+        // delivery and left-folded in block order, reproduce the merged
+        // gradient / Hvp bit for bit — on both engine paths
+        use std::sync::Mutex;
+        let ds = synth::quick(257, 48, 8, 30);
+        let data = Shard::whole(&ds);
+        let mut rng = crate::util::rng::Pcg64::new(31);
+        let w: Vec<f64> = (0..48).map(|_| 0.1 * rng.normal()).collect();
+        let s_dir: Vec<f64> = (0..48).map(|_| rng.normal()).collect();
+        for threads in [1usize, 4] {
+            let shard =
+                SparseShard::with_blocking(data.clone(), 64, ComputePool::new(threads));
+            let nb = shard.stream_block_count();
+            assert!(nb > 1, "blocking too coarse for the test");
+            let parts: Mutex<Vec<Option<Vec<f64>>>> = Mutex::new(vec![None; nb]);
+            let sink = |b: usize, p: &[f64]| {
+                parts.lock().unwrap()[b] = Some(p.to_vec());
+            };
+            let (_, g, z) = shard.loss_grad_streaming(Loss::SquaredHinge, &w, &sink);
+            let collected = std::mem::replace(
+                &mut *parts.lock().unwrap(),
+                vec![None; nb],
+            );
+            let mut fold = collected[0].clone().unwrap();
+            for p in &collected[1..] {
+                for (a, b) in fold.iter_mut().zip(p.as_ref().unwrap()) {
+                    *a += *b;
+                }
+            }
+            assert!(
+                fold.iter().zip(&g).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}: streamed gradient partials diverged"
+            );
+            let h = shard.hvp_streaming(Loss::SquaredHinge, &z, &s_dir, &sink);
+            let collected = parts.into_inner().unwrap();
+            let mut fold = collected[0].clone().unwrap();
+            for p in &collected[1..] {
+                for (a, b) in fold.iter_mut().zip(p.as_ref().unwrap()) {
+                    *a += *b;
+                }
+            }
+            assert!(
+                fold.iter().zip(&h).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}: streamed hvp partials diverged"
+            );
         }
     }
 

@@ -307,6 +307,128 @@ fn threads_four_trajectories_bitwise_match_threads_one_three_way() {
     }
 }
 
+/// The SIMD leg of the determinism contract: the lane-chunked kernels
+/// (`simd = on`, the default) and the indexed scalar kernels reproduce
+/// each other bit for bit on every transport and data plane — the
+/// canonical lane DAG *is* the scalar summation order, so the toggle
+/// moves codegen, never arithmetic. Shards are sized to split into
+/// several blocks so the packed/fused paths actually run.
+#[test]
+fn simd_off_trajectories_bitwise_match_simd_on_three_way() {
+    let base = Config {
+        quick_n: 6_000,
+        quick_nnz: 30,
+        max_outer: 3,
+        ..base_cfg()
+    };
+    assert!(base.simd, "SIMD kernels default on");
+    let reference = run_with(&Config { transport: "inproc".into(), ..base.clone() });
+    let scalar = run_with(&Config {
+        transport: "inproc".into(),
+        simd: false,
+        ..base.clone()
+    });
+    assert_traces_bitwise(&reference, &scalar, "inproc simd=off");
+    for plane in DataPlane::all() {
+        let tcp = run_with(&Config {
+            simd: false,
+            ..tcp_cfg(&base, plane)
+        });
+        assert_traces_bitwise(
+            &reference,
+            &tcp,
+            &format!("tcp-{} simd=off vs inproc simd=on", plane.name()),
+        );
+    }
+}
+
+/// Compute/communication overlap keeps the trajectory bitwise intact:
+/// streaming completed row-block partials into the mesh while later
+/// blocks compute re-orders the *transport* of the partials, never
+/// their accumulation (the plan pins the merge order on both ends).
+/// The trace's `overlap_secs` column must witness that frames actually
+/// moved before the kernels finished.
+#[test]
+fn overlapped_p2p_trajectories_bitwise_match_inproc() {
+    for topology in [Topology::Tree, Topology::Ring] {
+        let base = Config {
+            topology,
+            quick_n: 6_000,
+            quick_nnz: 30,
+            max_outer: 3,
+            ..base_cfg()
+        };
+        let reference =
+            run_with(&Config { transport: "inproc".into(), ..base.clone() });
+        let overlapped = run_with(&Config {
+            overlap: true,
+            ..tcp_cfg(&base, DataPlane::P2p)
+        });
+        assert_traces_bitwise(
+            &reference,
+            &overlapped,
+            &format!("{topology:?} p2p overlap=on"),
+        );
+        let last = overlapped.records.last().unwrap();
+        assert!(last.net_data_bytes > 0.0, "{topology:?}: mesh moved no bytes?");
+        assert!(
+            last.overlap_secs > 0.0,
+            "{topology:?}: overlap enabled but no partial frame ever flushed"
+        );
+        // overlap must stay invisible to the star plane and the column
+        let star = run_with(&Config {
+            overlap: true,
+            ..tcp_cfg(&base, DataPlane::Star)
+        });
+        assert_traces_bitwise(&reference, &star, &format!("{topology:?} star overlap=on"));
+        assert_eq!(star.records.last().unwrap().overlap_secs, 0.0, "{topology:?}");
+    }
+}
+
+/// f32 reduction frames: the mesh payload halves and the trajectory
+/// stays within the accuracy gate of the f64 run — close, not bitwise
+/// (encode rounds to nearest-even; accumulation is still f64).
+#[test]
+fn f32_frames_halve_mesh_bytes_within_accuracy_gate() {
+    use fadl::net::FrameEncoding;
+    let base = Config {
+        topology: Topology::Tree,
+        test_fraction: 0.0,
+        ..base_cfg()
+    };
+    let f64_leg = run_with(&tcp_cfg(&base, DataPlane::P2p));
+    let f32_leg = run_with(&Config {
+        frame_encoding: FrameEncoding::F32,
+        ..tcp_cfg(&base, DataPlane::P2p)
+    });
+    assert_eq!(f64_leg.records.len(), f32_leg.records.len());
+    for (ra, rb) in f64_leg.records.iter().zip(&f32_leg.records) {
+        assert!(
+            (ra.f - rb.f).abs() <= base.frame_tol,
+            "iter {}: |Δf| = {:e} above frame_tol {:e}",
+            ra.iter,
+            (ra.f - rb.f).abs(),
+            base.frame_tol
+        );
+    }
+    // per pass: f64 moves 8·elems + 4·frames, f32 moves 4·elems +
+    // 4·frames — the element payload exactly halves
+    let plan = base.topology.plan(base.nodes, base.quick_m);
+    let (elems, frames): (u64, u64) = (0..base.nodes)
+        .map(|r| plan.rank_schedule(r))
+        .map(|s| (s.send_elems() as u64, s.send_frames() as u64))
+        .fold((0, 0), |(e, f), (de, df)| (e + de, f + df));
+    let passes = f64_leg.records.last().unwrap().comm_passes;
+    assert_eq!(
+        f64_leg.records.last().unwrap().net_data_bytes,
+        passes * (8 * elems + 4 * frames) as f64
+    );
+    assert_eq!(
+        f32_leg.records.last().unwrap().net_data_bytes,
+        passes * (4 * elems + 4 * frames) as f64
+    );
+}
+
 /// Exact per-iteration mesh byte counts for the combine collectives:
 /// FADL moves 2 AllReduces per outer iteration (gradient + direction
 /// combine) and its warm start 2 more; ADMM moves exactly 1 (the

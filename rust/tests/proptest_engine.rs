@@ -152,6 +152,100 @@ fn packed_linesearch_plan_bitwise_equals_plain_eval() {
     });
 }
 
+/// Rows seeded with adversarial IEEE-754 values: negative zero,
+/// f32 subnormals, magnitudes near overflow/underflow — the inputs
+/// where a reassociated SIMD reduction would betray itself first.
+fn adversarial_shard(n: usize, m: usize, seed: u64) -> Shard {
+    const SPECIALS: [f32; 8] =
+        [-0.0, 1.0e-40, -1.0e-40, f32::MIN_POSITIVE, -f32::MIN_POSITIVE, 1.0e30, -1.0e-30, 2.5];
+    let mut rng = Pcg64::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            // rng.below(6) == 0 leaves the row empty on purpose
+            (0..rng.below(6))
+                .map(|_| {
+                    let v = if rng.below(3) == 0 {
+                        SPECIALS[rng.below(SPECIALS.len())]
+                    } else {
+                        rng.normal() as f32
+                    };
+                    (rng.below(m) as u32, v)
+                })
+                .collect()
+        })
+        .collect();
+    let x = Csr::from_rows(m, &rows);
+    let y: Vec<f64> = (0..n)
+        .map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    Shard { x, y, c }
+}
+
+#[test]
+fn simd_kernels_bitwise_equal_scalar_on_adversarial_shards() {
+    // the SIMD contract: the lane-chunked kernels and the indexed
+    // scalar kernels are the same summation DAG, so every output bit
+    // matches — including over subnormals, −0.0, empty rows, rows
+    // shorter than a lane (n < LANES), and one-row blocks (target 1)
+    Runner::new(48, 0x51D3).run(&EngineCase, |&(n, m, target, seed)| {
+        let data = adversarial_shard(n, m, seed);
+        let loss = if seed % 2 == 0 { Loss::SquaredHinge } else { Loss::Logistic };
+        let mut rng = Pcg64::new(seed ^ 0xAB);
+        // weights get their own adversarial f64s: a subnormal scale and
+        // a negative zero land in every drawn vector
+        let mut draw_vec = |len: usize| -> Vec<f64> {
+            let mut v: Vec<f64> = (0..len).map(|_| 0.3 * rng.normal()).collect();
+            if len > 1 {
+                v[0] = -0.0;
+                v[len / 2] = 1.0e-310;
+            }
+            v
+        };
+        let w = draw_vec(m);
+        let s = draw_vec(m);
+        let t = rng.range_f64(0.0, 2.0);
+        for threads in [1usize, 3] {
+            let mut simd =
+                SparseShard::with_blocking(data.clone(), target, ComputePool::new(threads));
+            simd.set_simd(true);
+            let mut scalar =
+                SparseShard::with_blocking(data.clone(), target, ComputePool::new(threads));
+            scalar.set_simd(false);
+            let (va, ga, za) = simd.loss_grad(loss, &w);
+            let (vb, gb, zb) = scalar.loss_grad(loss, &w);
+            if va.to_bits() != vb.to_bits() {
+                return Err(format!("T={threads}: loss {va} != {vb}"));
+            }
+            if !bits_equal(&ga, &gb) || !bits_equal(&za, &zb) {
+                return Err(format!("T={threads}: loss_grad bits diverged"));
+            }
+            if !bits_equal(&simd.margins(&s), &scalar.margins(&s)) {
+                return Err(format!("T={threads}: margins bits diverged"));
+            }
+            if !bits_equal(&simd.hvp(loss, &za, &s), &scalar.hvp(loss, &zb, &s)) {
+                return Err(format!("T={threads}: hvp bits diverged"));
+            }
+            let e = simd.margins(&s);
+            let (pa, qa) = simd.linesearch_eval(loss, &za, &e, t);
+            let (pb, qb) = scalar.linesearch_eval(loss, &zb, &e, t);
+            if pa.to_bits() != pb.to_bits() || qa.to_bits() != qb.to_bits() {
+                return Err(format!("T={threads}: linesearch bits diverged"));
+            }
+            let (plan_a, plan_b) = (
+                simd.linesearch_plan(&za, &e).ok_or("simd plan refused")?,
+                scalar.linesearch_plan(&zb, &e).ok_or("scalar plan refused")?,
+            );
+            let (ra, da) = plan_a.eval(loss, t);
+            let (rb, db) = plan_b.eval(loss, t);
+            if ra.to_bits() != rb.to_bits() || da.to_bits() != db.to_bits() {
+                return Err(format!("T={threads}: packed linesearch bits diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn default_blocking_single_block_matches_seed_arithmetic() {
     // a shard under TARGET_BLOCK_NNZ has exactly one block, whose

@@ -350,6 +350,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 compute_secs: rng.normal().abs(),
                 queue_ns: rng.next_u64(),
                 stall_ns: rng.next_u64(),
+                overlap_ns: rng.next_u64(),
                 dots: draw_vec(&mut rng, rng.below(5)),
             },
             Msg::Finish {
