@@ -9,7 +9,14 @@ PARITY_TOPOS   ?= tree ring
 TRACE_METHOD ?= fadl
 TRACE_PLANE  ?= p2p
 
-.PHONY: check fmt clippy test build smoke serve parity bytes bench bench-check trace scaling artifacts
+# prefetch depths the paged A/B sweeps (BENCH_9.json)
+PREFETCH_DEPTHS ?= 1,2,4
+
+# `make pack` input/output (libsvm text → .pallas binary shard)
+PACK_INPUT  ?=
+PACK_OUTPUT ?=
+
+.PHONY: check fmt clippy test build smoke serve parity bytes bench bench-check trace scaling pack fetch artifacts
 
 ## fmt --check + clippy -D warnings + tier-1 tests
 check: fmt clippy test
@@ -69,6 +76,13 @@ parity:
 	  $(CARGO) run --release --bin net_smoke -- \
 	    --method $$m --nodes 4 --max-outer 8 \
 	    --data-plane p2p --topology tree --no-simd || exit 1; \
+	  for plane in $(PARITY_PLANES); do \
+	    echo "== parity: $$m / $$plane / tree / paged residency (threads=4) =="; \
+	    $(CARGO) run --release --bin net_smoke -- \
+	      --method $$m --nodes 4 --max-outer 8 \
+	      --data-plane $$plane --topology tree \
+	      --residency paged --threads 4 || exit 1; \
+	  done; \
 	done
 
 ## per-method driver/mesh byte table: every method runs under the p2p
@@ -100,8 +114,8 @@ bench-check:
 	$(CARGO) bench --bench hotpath -- --test --scaling --out-dir bench-out
 	$(CARGO) run --release --bin serve_smoke -- --quick --out-dir bench-out
 	$(CARGO) run --release --bin bench_check -- \
-	  bench-out/BENCH_5.json bench-out/BENCH_8.json bench-out/SERVE_7.json \
-	  rust/benches/baseline.json
+	  bench-out/BENCH_5.json bench-out/BENCH_8.json bench-out/BENCH_9.json \
+	  bench-out/SERVE_7.json rust/benches/baseline.json
 
 ## capture a per-rank span timeline for any method (TRACE_METHOD,
 ## TRACE_PLANE override): writes trace-out/$(TRACE_METHOD).trace.json —
@@ -118,12 +132,31 @@ trace:
 ## T ∈ {1, 2, 4, 8} on a ≥10⁶-nnz synthetic shard — prints the
 ## per-kernel compute-seconds speedup table and refreshes the
 ## BENCH_5.json scaling artifact at the repo root, plus the SIMD-vs-
-## scalar / overlap A/B artifact BENCH_8.json (CI's bench-smoke job
+## scalar / overlap A/B artifact BENCH_8.json and the paged-vs-resident
+## residency A/B artifact BENCH_9.json (per-kernel resident-vs-paged
+## throughput column + the PREFETCH_DEPTHS sweep; CI's bench-smoke job
 ## uploads the quick-mode twins from bench-out/)
 scaling:
-	$(CARGO) bench --bench hotpath -- --scaling --out-dir bench-out
+	$(CARGO) bench --bench hotpath -- --scaling --out-dir bench-out \
+	  --prefetch-depth $(PREFETCH_DEPTHS)
 	cp bench-out/BENCH_5.json BENCH_5.json
 	cp bench-out/BENCH_8.json BENCH_8.json
+	cp bench-out/BENCH_9.json BENCH_9.json
+
+## stream-convert a libsvm text file into the paged `.pallas` binary
+## shard format (constant memory — the converter never holds the
+## dataset): make pack PACK_INPUT=data/rcv1.libsvm [PACK_OUTPUT=...]
+pack:
+	@test -n "$(PACK_INPUT)" || { echo "usage: make pack PACK_INPUT=file.libsvm [PACK_OUTPUT=file.pallas]"; exit 2; }
+	$(CARGO) run --release --bin fadl -- pack --input $(PACK_INPUT) \
+	  $(if $(PACK_OUTPUT),--output $(PACK_OUTPUT),)
+
+## download + cache a benchmark dataset (rcv1_train by default) into
+## the shared cache dir, then pack it into its .pallas twin; prints
+## "fetch skipped" and exits 0 when offline (FETCH_DATASET overrides)
+FETCH_DATASET ?= rcv1_train
+fetch:
+	$(CARGO) run --release --bin fadl -- fetch --dataset $(FETCH_DATASET) --pack
 
 ## AOT artifacts for the (feature-gated) PJRT backend; needs a JAX
 ## python environment, see python/compile/aot.py

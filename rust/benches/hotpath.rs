@@ -304,6 +304,193 @@ fn run_simd_overlap_ab(args: &BenchArgs, all: &mut Vec<Stats>) {
     }
 }
 
+/// Paged-vs-resident A/B: the `BENCH_9.json` artifact. One shard runs
+/// the blocked kernels twice — resident in RAM and paged from its
+/// `.pallas` twin through the prefetching buffer ring — and the
+/// artifact records the per-kernel throughput ratio
+/// (`resident_ns / paged_ns`; 1.0 = paging is free). The stored
+/// blocking is the engine's, so both residencies execute identical
+/// block decompositions and the results are bitwise equal (asserted
+/// before timing). A `--prefetch-depth d1,d2,..` sweep and a
+/// budget-constrained leg (ring strictly smaller than the file, page
+/// stalls drained into the artifact) ride along. `bench_check` gates
+/// the ratios through the `paged_*` bands in `baseline.json`.
+fn run_paged_ab(args: &BenchArgs, all: &mut Vec<Stats>) {
+    use fadl::data::paged::{PagedShard, DEFAULT_PREFETCH_DEPTH};
+    use fadl::data::store::{self, ShardStore};
+    use std::sync::Arc;
+
+    let bench = args.bench;
+    let threads = 4usize;
+    let (n, m, row_nnz) = if args.quick {
+        (8_000, 10_000, 32)
+    } else {
+        (25_000, 40_000, 40) // ≥ 10⁶ nnz in full mode
+    };
+    let ds = synth::quick(n, m, row_nnz, 91);
+    let data = Shard::whole(&ds);
+    let path =
+        std::env::temp_dir().join(format!("fadl-bench9-{}.pallas", std::process::id()));
+    store::write_shard(&path, &data).expect("pack bench shard");
+    let sstore = Arc::new(ShardStore::open(&path).expect("open bench shard"));
+    let payload_kib = sstore.payload_bytes() as f64 / 1024.0;
+    let resident = SparseShard::with_pool(data.clone(), ComputePool::new(threads));
+    println!(
+        "-- paged A/B: n={n} m={m} nnz={} ({} blocks, {:.0} KiB payload, T={threads}) --",
+        ds.nnz(),
+        resident.blocks().len(),
+        payload_kib
+    );
+    let mut rng = Pcg64::new(92);
+    let w: Vec<f64> = (0..m).map(|_| 0.1 * rng.normal()).collect();
+    let dir: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let paged = PagedShard::from_store(
+        sstore.clone(),
+        ComputePool::new(threads),
+        true,
+        0,
+        DEFAULT_PREFETCH_DEPTH,
+    );
+    // residency steers memory, never arithmetic: both sides must agree
+    // bitwise before either is timed
+    {
+        let (fr, gr, zr) = resident.loss_grad(Loss::SquaredHinge, &w);
+        let (fp, gp, zp) = paged.loss_grad(Loss::SquaredHinge, &w);
+        assert_eq!(fr.to_bits(), fp.to_bits(), "paged loss diverged");
+        assert!(
+            gr.iter().zip(&gp).all(|(a, b)| a.to_bits() == b.to_bits())
+                && zr.iter().zip(&zp).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "paged grad/margins diverged"
+        );
+    }
+    let kernels = ["paged_loss_grad", "paged_hvp", "paged_linesearch"];
+    let mut resident_ns = vec![0.0; kernels.len()];
+    let mut paged_ns = vec![0.0; kernels.len()];
+    for (shard, tag, medians) in [
+        (&resident as &dyn ShardCompute, "ram", &mut resident_ns),
+        (&paged as &dyn ShardCompute, "paged", &mut paged_ns),
+    ] {
+        let (_, _, z) = shard.loss_grad(Loss::SquaredHinge, &w);
+        let e = shard.margins(&dir);
+        let s = bench.run(&format!("engine/loss_grad [{tag}]"), || {
+            black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
+        });
+        println!("{}", s.report());
+        medians[0] = s.median_ns();
+        all.push(s);
+        let s = bench.run(&format!("engine/hvp [{tag}]"), || {
+            black_box(shard.hvp(Loss::SquaredHinge, black_box(&z), black_box(&dir)));
+        });
+        println!("{}", s.report());
+        medians[1] = s.median_ns();
+        all.push(s);
+        let s = bench.run(&format!("engine/linesearch [{tag}]"), || {
+            black_box(shard.linesearch_eval(
+                Loss::SquaredHinge,
+                black_box(&z),
+                black_box(&e),
+                0.7,
+            ));
+        });
+        println!("{}", s.report());
+        medians[2] = s.median_ns();
+        all.push(s);
+    }
+    let _ = paged.take_page_stall_ns();
+    println!("-- per-kernel paged throughput ratio (resident_ns / paged_ns) --");
+    let mut entries: Vec<Json> = Vec::new();
+    for (k, name) in kernels.iter().enumerate() {
+        let ratio = resident_ns[k] / paged_ns[k].max(1e-9);
+        println!("{name:<18} {ratio:>6.2}x");
+        entries.push(obj(vec![
+            ("kernel", Json::Str((*name).to_string())),
+            ("threads", Json::Arr(vec![Json::Num(threads as f64)])),
+            ("resident_ns", arr_f64(&[resident_ns[k]])),
+            ("paged_ns", arr_f64(&[paged_ns[k]])),
+            ("throughput_ratio", arr_f64(&[ratio])),
+        ]));
+    }
+    // prefetch-depth sweep (`--prefetch-depth d1,d2,..` overrides the
+    // default {1,2,4}): loss_grad median and the drained stall time per
+    // ring depth, recorded so depth choices are data, not folklore
+    let depths: Vec<usize> = {
+        let argv: Vec<String> = std::env::args().collect();
+        argv.iter()
+            .position(|a| a == "--prefetch-depth")
+            .and_then(|i| argv.get(i + 1))
+            .map(|s| {
+                s.split(',').filter_map(|t| t.trim().parse().ok()).collect::<Vec<usize>>()
+            })
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| vec![1, 2, 4])
+    };
+    let mut depth_ns = Vec::with_capacity(depths.len());
+    let mut depth_stall = Vec::with_capacity(depths.len());
+    for &d in &depths {
+        let shard =
+            PagedShard::from_store(sstore.clone(), ComputePool::new(threads), true, 0, d);
+        let s = bench.run(&format!("engine/loss_grad [paged depth={d}]"), || {
+            black_box(shard.loss_grad(Loss::SquaredHinge, black_box(&w)));
+        });
+        println!("{}", s.report());
+        depth_ns.push(s.median_ns());
+        depth_stall.push(shard.take_page_stall_ns() as f64 * 1e-9);
+        all.push(s);
+    }
+    entries.push(obj(vec![
+        ("kernel", Json::Str("paged_prefetch_sweep".to_string())),
+        (
+            "prefetch_depth",
+            Json::Arr(depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        ("median_ns", arr_f64(&depth_ns)),
+        ("stall_secs", arr_f64(&depth_stall)),
+    ]));
+    // budget-constrained leg: a ring strictly smaller than the on-disk
+    // payload (1 MiB budget) must still complete every pass — pressure
+    // shows up in the drained stall counter, never in wrong answers
+    let demo =
+        PagedShard::from_store(sstore.clone(), ComputePool::new(threads), true, 1, 2);
+    let (f_demo, _, _) = demo.loss_grad(Loss::SquaredHinge, &w);
+    let s = bench.run("engine/loss_grad [paged 1MiB budget]", || {
+        black_box(demo.loss_grad(Loss::SquaredHinge, black_box(&w)));
+    });
+    println!("{}", s.report());
+    all.push(s);
+    let stall = demo.take_page_stall_ns() as f64 * 1e-9;
+    println!(
+        "paged demo: {} buffers under a 1 MiB budget ({:.0} KiB file), f={f_demo:.6}, \
+         cumulative page_stall={stall:.4}s",
+        demo.page_buffers(),
+        payload_kib
+    );
+    entries.push(obj(vec![
+        ("kernel", Json::Str("paged_budget_demo".to_string())),
+        ("threads", Json::Arr(vec![Json::Num(threads as f64)])),
+        ("budget_mb", arr_f64(&[1.0])),
+        ("payload_kib", arr_f64(&[payload_kib])),
+        ("page_stall_secs", arr_f64(&[stall])),
+    ]));
+    let doc = obj(vec![
+        ("bench", Json::Str("paged-resident-ab".to_string())),
+        ("quick", Json::Bool(args.quick)),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("nnz", Json::Num(ds.nnz() as f64)),
+        ("payload_kib", Json::Num(payload_kib)),
+        ("kernels", Json::Arr(entries)),
+    ]);
+    if let Some(out_dir) = &args.out_dir {
+        let _ = std::fs::create_dir_all(out_dir);
+        let out = out_dir.join("BENCH_9.json");
+        match std::fs::write(&out, doc.pretty()) {
+            Ok(()) => println!("paged artifact written to {}", out.display()),
+            Err(e) => eprintln!("paged artifact: write {}: {e}", out.display()),
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 fn main() {
     let args = BenchArgs::parse(Bench::default());
     let bench = args.bench;
@@ -313,6 +500,7 @@ fn main() {
     if std::env::args().any(|a| a == "--scaling") {
         run_scaling(&args, &mut all);
         run_simd_overlap_ab(&args, &mut all);
+        run_paged_ab(&args, &mut all);
         if let Some(path) = args.write_stats_csv("hotpath-scaling", &all) {
             println!("stats written to {}", path.display());
         }
@@ -491,11 +679,13 @@ fn main() {
     println!("{}", s.report());
     all.push(s);
 
-    // engine scaling and the simd/overlap A/B ride the default run too,
-    // so the CI bench-smoke job always produces (and uploads) the
-    // BENCH_5.json and BENCH_8.json artifacts
+    // engine scaling, the simd/overlap A/B and the paged-residency A/B
+    // ride the default run too, so the CI bench-smoke job always
+    // produces (and uploads) the BENCH_5.json, BENCH_8.json and
+    // BENCH_9.json artifacts
     run_scaling(&args, &mut all);
     run_simd_overlap_ab(&args, &mut all);
+    run_paged_ab(&args, &mut all);
 
     if let Some(path) = args.write_stats_csv("hotpath", &all) {
         println!("stats written to {}", path.display());

@@ -355,6 +355,7 @@ fn print_trace(trace: &Trace) {
                 format!("{:.4}", r.queue_wait_secs),
                 format!("{:.4}", r.mesh_stall_secs),
                 format!("{:.4}", r.overlap_secs),
+                format!("{:.4}", r.page_stall_secs),
                 format!("{:.0}", r.net_bytes),
                 format!("{:.0}", r.net_data_bytes),
                 format!("{:.0}", r.driver_data_bytes),
@@ -377,6 +378,7 @@ fn print_trace(trace: &Trace) {
                 "queue_wait",
                 "mesh_stall",
                 "overlap",
+                "page_stall",
                 "net_bytes",
                 "net_data",
                 "drv_data",

@@ -4,7 +4,7 @@
 use crate::cluster::CostModel;
 use crate::data::partition::Strategy;
 use crate::loss::Loss;
-use crate::net::{DataPlane, FrameEncoding, Topology};
+use crate::net::{DataPlane, FrameEncoding, Residency, Topology};
 use crate::util::cli::{Args, Cli};
 use crate::util::toml;
 
@@ -54,6 +54,22 @@ pub struct Config {
     /// Both produce bitwise-identical trajectories — the flag exists
     /// for A/B benchmarking, not for accuracy trades.
     pub simd: bool,
+    /// shard residency (`[worker] residency` / `--residency`): "ram"
+    /// (default) keeps the resident CSR; "paged" writes the shard once
+    /// to a binary `.pallas` cache and pages row blocks through a small
+    /// buffer ring with background prefetch. Bitwise identical
+    /// trajectories either way — the block decomposition is a pure
+    /// function of the shard, so residency steers memory, not
+    /// arithmetic.
+    pub residency: Residency,
+    /// paged-residency buffer budget in MiB (`[worker] page_budget_mb`
+    /// / `--page-budget-mb`): caps resident block buffers; 0 (default)
+    /// = uncapped (threads + prefetch depth buffers).
+    pub page_budget_mb: usize,
+    /// paged-residency prefetch depth (`[worker] prefetch_depth` /
+    /// `--prefetch-depth`): blocks kept in flight past the one being
+    /// computed (2 = double buffering).
+    pub prefetch_depth: usize,
     pub partition: Strategy,
     /// transport backend: "inproc" (simulated, default) or "tcp"
     /// (P real worker processes over loopback)
@@ -133,6 +149,9 @@ impl Default for Config {
             threaded: true,
             threads: 1,
             simd: true,
+            residency: Residency::Ram,
+            page_budget_mb: 0,
+            prefetch_depth: crate::data::paged::DEFAULT_PREFETCH_DEPTH,
             partition: Strategy::Contiguous,
             transport: "inproc".into(),
             topology: Topology::Tree,
@@ -224,6 +243,11 @@ impl Config {
         cfg.threaded = doc.bool_or("cluster.threaded", cfg.threaded);
         cfg.threads = doc.usize_or("worker.threads", cfg.threads);
         cfg.simd = doc.bool_or("worker.simd", cfg.simd);
+        let res_name = doc.str_or("worker.residency", cfg.residency.name());
+        cfg.residency = Residency::from_name(res_name)
+            .ok_or_else(|| format!("unknown residency {res_name:?}"))?;
+        cfg.page_budget_mb = doc.usize_or("worker.page_budget_mb", cfg.page_budget_mb);
+        cfg.prefetch_depth = doc.usize_or("worker.prefetch_depth", cfg.prefetch_depth);
         cfg.overlap = doc.bool_or("cluster.overlap", cfg.overlap);
         let frame_name = doc.str_or("cluster.frame_encoding", cfg.frame_encoding.name());
         cfg.frame_encoding = FrameEncoding::from_name(frame_name)
@@ -353,6 +377,16 @@ impl Config {
         if let Some(v) = num(a, "threads")? {
             self.threads = v;
         }
+        if !a.get("residency").is_empty() {
+            self.residency = Residency::from_name(a.get("residency"))
+                .ok_or_else(|| format!("unknown residency {:?}", a.get("residency")))?;
+        }
+        if let Some(v) = num(a, "page-budget-mb")? {
+            self.page_budget_mb = v;
+        }
+        if let Some(v) = num(a, "prefetch-depth")? {
+            self.prefetch_depth = v;
+        }
         if !a.get("transport").is_empty() {
             self.transport = match a.get("transport") {
                 t @ ("inproc" | "tcp") => t.to_string(),
@@ -428,6 +462,17 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
             "",
             "override intra-worker compute threads T (1 = serial, 0 = all cores)",
         )
+        .flag("residency", "", "override shard residency: ram | paged")
+        .flag(
+            "page-budget-mb",
+            "",
+            "paged residency: cap resident block buffers to this many MiB (0 = uncapped)",
+        )
+        .flag(
+            "prefetch-depth",
+            "",
+            "paged residency: blocks kept in flight past the one computing (2 = double buffer)",
+        )
         .flag("transport", "", "override transport: inproc | tcp")
         .flag("topology", "", "override AllReduce topology: flat | tree | ring")
         .flag("data-plane", "", "override tcp data plane: star | p2p")
@@ -484,6 +529,37 @@ mod tests {
         assert!(!cfg.overlap, "overlap opt-in");
         assert_eq!(cfg.frame_encoding, FrameEncoding::F64);
         assert_eq!(cfg.frame_tol, 1e-3);
+        assert_eq!(cfg.residency, Residency::Ram, "resident CSR by default");
+        assert_eq!(cfg.page_budget_mb, 0, "page budget uncapped by default");
+        assert_eq!(cfg.prefetch_depth, 2, "double buffering by default");
+    }
+
+    #[test]
+    fn residency_keys_and_flags_parse() {
+        let cfg = Config::from_toml(
+            "[worker]\nresidency = \"paged\"\npage_budget_mb = 48\nprefetch_depth = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.residency, Residency::Paged);
+        assert_eq!(cfg.page_budget_mb, 48);
+        assert_eq!(cfg.prefetch_depth, 3);
+        assert!(Config::from_toml("[worker]\nresidency = \"disk\"").is_err());
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(
+                ["--residency", "paged", "--page-budget-mb", "16", "--prefetch-depth", "4"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert_eq!(cfg.residency, Residency::Paged);
+        assert_eq!(cfg.page_budget_mb, 16);
+        assert_eq!(cfg.prefetch_depth, 4);
+        let a = cli
+            .parse_from(vec!["--residency".to_string(), "disk".to_string()])
+            .unwrap();
+        assert!(Config::from_cli(Config::default(), &a).is_err());
     }
 
     #[test]

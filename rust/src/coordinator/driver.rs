@@ -8,11 +8,12 @@ use std::sync::Arc;
 
 use super::config::{Backend, Config};
 use crate::cluster::{Cluster, CostModel};
+use crate::data::paged::PagedShard;
 use crate::data::partition::ExamplePartition;
-use crate::data::{libsvm, synth, Dataset};
+use crate::data::{fetch, libsvm, store, synth, Dataset};
 use crate::metrics::Trace;
 use crate::methods::{self, TrainContext};
-use crate::net::{InProc, TcpDriver, Transport, WorkerSetup};
+use crate::net::{InProc, Residency, TcpDriver, Transport, WorkerSetup};
 use crate::objective::engine::{self, ComputePool};
 use crate::objective::{Objective, Shard, ShardCompute, SparseShard};
 use crate::runtime::{AotRuntime, DenseBlockShard};
@@ -72,6 +73,85 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         simd: cfg.simd,
         overlap: cfg.overlap,
         frame_encoding: cfg.frame_encoding,
+        residency: cfg.residency,
+        page_budget_mb: cfg.page_budget_mb,
+        prefetch_depth: cfg.prefetch_depth,
+    }
+}
+
+/// Stable shard-cache filename for one rank of a dataset recipe: an
+/// FNV-64 over every input that determines the shard's bits (dataset
+/// recipe + split + partition + P + rank, and the source file's
+/// size/mtime for `dataset = "file"` so edits invalidate the entry).
+/// Entries live in `<cache>/shards/` next to the `fadl fetch` datasets
+/// and are reused across runs — packing is paid once per recipe.
+fn shard_cache_path(cfg: &Config, p: usize, rank: usize) -> Result<std::path::PathBuf, String> {
+    let mut file_stamp = String::new();
+    if cfg.dataset == "file" {
+        if let Ok(md) = std::fs::metadata(&cfg.file_path) {
+            let mtime = md
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            file_stamp = format!("{}:{mtime}", md.len());
+        }
+    }
+    let recipe = format!(
+        "v{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}",
+        store::VERSION,
+        cfg.dataset,
+        cfg.quick_n,
+        cfg.quick_m,
+        cfg.quick_nnz,
+        cfg.scale,
+        cfg.seed,
+        cfg.test_fraction,
+        cfg.file_path,
+        file_stamp,
+        cfg.partition,
+        p,
+        rank,
+    );
+    let dir = fetch::cache_dir().join("shards");
+    std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    Ok(dir.join(format!("{:016x}.pallas", store::fnv1a_once(recipe.as_bytes()))))
+}
+
+/// Build one rank's compute backend at the configured residency:
+/// resident [`SparseShard`] (the seed path), or drop the resident copy
+/// and run the same kernels out-of-core through a [`PagedShard`] over
+/// the rank's binary shard-cache entry (written here on first use,
+/// reused after). Both paths produce bitwise identical trajectories —
+/// the block decomposition is a pure function of the shard.
+fn build_shard_compute(
+    shard: Shard,
+    pool: Arc<ComputePool>,
+    cfg: &Config,
+    p: usize,
+    rank: usize,
+) -> Result<Box<dyn ShardCompute>, String> {
+    match cfg.residency {
+        Residency::Ram => {
+            let mut s = SparseShard::with_pool(shard, pool);
+            s.set_simd(cfg.simd);
+            Ok(Box::new(s))
+        }
+        Residency::Paged => {
+            let path = shard_cache_path(cfg, p, rank)?;
+            // reuse only entries that open cleanly: a corrupt or
+            // stale-format file is repacked, never trained on
+            if store::ShardStore::open(&path).is_err() {
+                store::write_shard(&path, &shard)
+                    .map_err(|e| format!("pack {}: {e}", path.display()))?;
+            }
+            drop(shard);
+            let paged =
+                PagedShard::open(&path, pool, cfg.simd, cfg.page_budget_mb, cfg.prefetch_depth)
+                    .map_err(|e| format!("open {}: {e}", path.display()))?;
+            Ok(Box::new(paged))
+        }
     }
 }
 
@@ -97,6 +177,10 @@ pub fn build_worker_context(
         partition: setup.partition,
         nodes: setup.p,
         threads: setup.threads,
+        simd: setup.simd,
+        residency: setup.residency,
+        page_budget_mb: setup.page_budget_mb,
+        prefetch_depth: setup.prefetch_depth,
         ..Config::default()
     };
     if setup.rank >= setup.p {
@@ -106,16 +190,13 @@ pub fn build_worker_context(
     let part = ExamplePartition::build(train.n(), setup.p, cfg.partition, cfg.seed);
     part.validate(train.n(), 1)?;
     let pool = ComputePool::new(engine::resolve_threads(setup.threads));
-    let mut shard = SparseShard::with_pool(
-        Shard::from_dataset(
-            &train,
-            &part.assignments[setup.rank],
-            &part.weights[setup.rank],
-        ),
-        pool,
+    let shard = Shard::from_dataset(
+        &train,
+        &part.assignments[setup.rank],
+        &part.weights[setup.rank],
     );
-    shard.set_simd(setup.simd);
-    Ok((Box::new(shard) as Box<dyn ShardCompute>, (test.n() > 0).then_some(test)))
+    let compute = build_shard_compute(shard, pool, &cfg, setup.p, setup.rank)?;
+    Ok((compute, (test.n() > 0).then_some(test)))
 }
 
 /// Rebuild one rank's shard only (kept for tests and tools that don't
@@ -171,20 +252,21 @@ pub fn build_cluster(
             let pool = ComputePool::new(engine::resolve_threads(cfg.threads));
             (0..p)
                 .map(|i| {
-                    let mut shard = SparseShard::with_pool(
-                        Shard::from_dataset(
-                            train,
-                            &part.assignments[i],
-                            &part.weights[i],
-                        ),
-                        pool.clone(),
+                    let shard = Shard::from_dataset(
+                        train,
+                        &part.assignments[i],
+                        &part.weights[i],
                     );
-                    shard.set_simd(cfg.simd);
-                    Box::new(shard) as Box<dyn ShardCompute>
+                    build_shard_compute(shard, pool.clone(), cfg, p, i)
                 })
-                .collect()
+                .collect::<Result<_, _>>()?
         }
         Backend::Aot => {
+            if cfg.residency != Residency::Ram {
+                return Err(
+                    "residency = \"paged\" supports the sparse backend only".into()
+                );
+            }
             let runtime = Arc::new(
                 AotRuntime::load(std::path::Path::new(&cfg.artifacts_dir))
                     .map_err(|e| format!("load artifacts: {e:#}"))?,

@@ -12,6 +12,76 @@ use std::path::Path;
 use super::Dataset;
 use crate::linalg::Csr;
 
+/// Parse one non-blank libsvm line into `(label, 0-based row pairs)`.
+/// `None` for blank/comment lines. Errors carry `lineno` (1-based).
+/// Rejects 0 indices and duplicate/decreasing indices — the strictly-
+/// increasing 1-based convention every downstream kernel assumes.
+pub fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(u32, f32)>)>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().ok_or(format!("line {lineno}: empty"))?;
+    let label: f64 = label_tok
+        .parse()
+        .map_err(|_| format!("line {lineno}: bad label {label_tok:?}"))?;
+    if !label.is_finite() {
+        return Err(format!("line {lineno}: non-finite label {label_tok:?}"));
+    }
+    let mut row = Vec::new();
+    let mut prev_idx: i64 = -1;
+    for tok in parts {
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| format!("line {lineno}: bad pair {tok:?}"))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad index {idx:?}"))?;
+        if idx == 0 {
+            return Err(format!("line {lineno}: libsvm indices are 1-based"));
+        }
+        if (idx as i64) == prev_idx {
+            return Err(format!("line {lineno}: duplicate index {idx}"));
+        }
+        if (idx as i64) < prev_idx {
+            return Err(format!(
+                "line {lineno}: indices must be increasing ({idx} after {prev_idx})"
+            ));
+        }
+        prev_idx = idx as i64;
+        let val: f32 = val
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad value {val:?}"))?;
+        row.push(((idx - 1) as u32, val));
+    }
+    Ok(Some((label, row)))
+}
+
+/// Stream a libsvm source row-by-row without materializing the matrix
+/// (the spine of `fadl pack`'s constant-memory passes). Returns
+/// `(rows, max_1based_index, nnz)`.
+pub fn for_each_row<R: BufRead>(
+    reader: R,
+    mut f: impl FnMut(f64, &[(u32, f32)]) -> Result<(), String>,
+) -> Result<(usize, usize, usize), String> {
+    let mut rows = 0usize;
+    let mut max_col = 0usize;
+    let mut nnz = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        if let Some((label, row)) = parse_line(&line, lineno + 1)? {
+            if let Some(&(c, _)) = row.last() {
+                max_col = max_col.max(c as usize + 1);
+            }
+            nnz += row.len();
+            rows += 1;
+            f(label, &row)?;
+        }
+    }
+    Ok((rows, max_col, nnz))
+}
+
 /// Parse a libsvm text stream. `num_features` of `None` infers the
 /// dimension from the max index seen.
 pub fn parse<R: BufRead>(
@@ -21,43 +91,11 @@ pub fn parse<R: BufRead>(
 ) -> Result<Dataset, String> {
     let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
     let mut labels: Vec<f64> = Vec::new();
-    let mut max_col = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts.next().ok_or(format!("line {}: empty", lineno + 1))?;
-        let label: f64 = label_tok
-            .parse()
-            .map_err(|_| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
-        let mut row = Vec::new();
-        let mut prev_idx: i64 = -1;
-        for tok in parts {
-            let (idx, val) = tok
-                .split_once(':')
-                .ok_or_else(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
-            let idx: usize = idx
-                .parse()
-                .map_err(|_| format!("line {}: bad index {idx:?}", lineno + 1))?;
-            if idx == 0 {
-                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
-            }
-            if (idx as i64) <= prev_idx {
-                return Err(format!("line {}: indices must be increasing", lineno + 1));
-            }
-            prev_idx = idx as i64;
-            let val: f32 = val
-                .parse()
-                .map_err(|_| format!("line {}: bad value {val:?}", lineno + 1))?;
-            max_col = max_col.max(idx);
-            row.push(((idx - 1) as u32, val));
-        }
+    let (_, max_col, _) = for_each_row(reader, |label, row| {
         labels.push(label);
-        rows.push(row);
-    }
+        rows.push(row.to_vec());
+        Ok(())
+    })?;
     let cols = match num_features {
         Some(m) => {
             if max_col > m {
@@ -77,28 +115,32 @@ pub fn parse<R: BufRead>(
     Ok(ds)
 }
 
-/// Map raw numeric labels onto {+1, −1}. Accepts ±1 as-is, {0,1} with
-/// 0 → −1, and otherwise treats the smallest label value as −1 and
-/// requires exactly two distinct values.
-fn binarize(labels: &[f64]) -> Result<Vec<f64>, String> {
-    let mut distinct: Vec<f64> = labels.to_vec();
-    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    distinct.dedup();
-    match distinct.as_slice() {
-        [] => Ok(Vec::new()),
-        [_single] => Ok(labels.iter().map(|_| 1.0).collect()),
+/// The binarization rule as a streaming raw-label → ±1 mapper, keyed
+/// by the sorted distinct label values: a single class maps to +1,
+/// two classes map smallest → −1 (covers {+1,−1}, {0,1}, {1,2}), more
+/// is an error. `fadl pack` learns `distinct` in its counting pass and
+/// applies the mapper in the writing pass; [`parse`] is the batch twin.
+pub fn label_mapper(distinct: &[f64]) -> Result<Box<dyn Fn(f64) -> f64>, String> {
+    match distinct {
+        [] | [_] => Ok(Box::new(|_| 1.0)),
         [lo, _hi] => {
             let lo = *lo;
-            Ok(labels
-                .iter()
-                .map(|&l| if l == lo { -1.0 } else { 1.0 })
-                .collect())
+            Ok(Box::new(move |l| if l == lo { -1.0 } else { 1.0 }))
         }
         more => Err(format!(
             "need a binary problem, found {} distinct labels (binarize upstream)",
             more.len()
         )),
     }
+}
+
+/// Map raw numeric labels onto {+1, −1} (see [`label_mapper`]).
+fn binarize(labels: &[f64]) -> Result<Vec<f64>, String> {
+    let mut distinct: Vec<f64> = labels.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    let map = label_mapper(&distinct)?;
+    Ok(labels.iter().map(|&l| map(l)).collect())
 }
 
 /// Read a libsvm file from disk.
@@ -175,5 +217,89 @@ mod tests {
         let ds2 = parse(buf.as_slice(), Some(ds.m()), "t").unwrap();
         assert_eq!(ds.y, ds2.y);
         assert_eq!(ds.x, ds2.x);
+    }
+
+    #[test]
+    fn plus_one_point_zero_style_labels_parse() {
+        // rcv1 ships "+1.0"/"-1.0"; scientific notation shows up too
+        let ds = parse("+1.0 1:1\n-1.0 2:1\n1e0 3:1\n".as_bytes(), None, "t").unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert!(parse("nan 1:1\n".as_bytes(), None, "t").is_err());
+        assert!(parse("inf 1:1\n".as_bytes(), None, "t").is_err());
+    }
+
+    #[test]
+    fn duplicate_and_decreasing_indices_report_line_numbers() {
+        let err = parse("+1 1:1\n-1 2:1 2:3\n".as_bytes(), None, "t").unwrap_err();
+        assert!(err.contains("line 2") && err.contains("duplicate"), "{err}");
+        let err = parse("+1 1:1\n\n-1 3:1 2:3\n".as_bytes(), None, "t").unwrap_err();
+        assert!(err.contains("line 3") && err.contains("increasing"), "{err}");
+        let err = parse("+1 0:1\n".as_bytes(), None, "t").unwrap_err();
+        assert!(err.contains("line 1") && err.contains("1-based"), "{err}");
+    }
+
+    #[test]
+    fn for_each_row_streams_and_counts() {
+        let text = "# header\n+1 1:0.5 4:1.5\n\n-1 2:2\n+1\n";
+        let mut seen = Vec::new();
+        let (rows, max_col, nnz) = for_each_row(text.as_bytes(), |y, row| {
+            seen.push((y, row.to_vec()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, 3);
+        assert_eq!(max_col, 4);
+        assert_eq!(nnz, 3);
+        assert_eq!(seen[0].1, vec![(0, 0.5), (3, 1.5)]);
+        assert_eq!(seen[2].1, vec![], "bare-label line is an empty row");
+    }
+
+    #[test]
+    fn parse_write_parse_is_bitwise_fixed_point() {
+        // writer/parser asymmetry check as a property: any parsed
+        // dataset survives write → parse with every f32 value, label,
+        // and row boundary bit-for-bit (f32 Display prints the
+        // shortest round-tripping decimal). Randomized shapes include
+        // empty rows, single-feature rows, and extreme-exponent values.
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        for case in 0..40 {
+            let n = rng.below(30);
+            let m = 1 + rng.below(20);
+            let mut text = String::new();
+            for i in 0..n {
+                text.push_str(if rng.below(2) == 0 { "+1" } else { "-1" });
+                let nnz = rng.below(5);
+                let mut cols: Vec<usize> = (0..nnz).map(|_| 1 + rng.below(m)).collect();
+                cols.sort_unstable();
+                cols.dedup();
+                for c in cols {
+                    let v = match rng.below(5) {
+                        0 => f32::MIN_POSITIVE,
+                        1 => -3.4e38,
+                        2 => 1.0e-40, // subnormal
+                        3 => (rng.below(1000) as f32 - 500.0) / 7.0,
+                        _ => (i + c) as f32,
+                    };
+                    text.push_str(&format!(" {c}:{v}"));
+                }
+                text.push('\n');
+            }
+            let Ok(ds) = parse(text.as_bytes(), Some(m), &format!("p{case}")) else {
+                continue; // single-class datasets may fail validate()
+            };
+            let mut buf = Vec::new();
+            write(&ds, &mut buf).unwrap();
+            let ds2 = parse(buf.as_slice(), Some(ds.m()), &format!("p{case}")).unwrap();
+            assert_eq!(ds.y, ds2.y, "case {case}: labels changed");
+            assert_eq!(ds.x.row_ptr, ds2.x.row_ptr, "case {case}: structure changed");
+            assert_eq!(ds.x.col_idx, ds2.x.col_idx, "case {case}");
+            let bits: Vec<u32> = ds.x.values.iter().map(|v| v.to_bits()).collect();
+            let bits2: Vec<u32> = ds2.x.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, bits2, "case {case}: value bits changed");
+            // and the write itself is a fixed point
+            let mut buf2 = Vec::new();
+            write(&ds2, &mut buf2).unwrap();
+            assert_eq!(buf, buf2, "case {case}: writer not idempotent");
+        }
     }
 }

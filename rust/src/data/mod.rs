@@ -1,7 +1,10 @@
 //! Datasets: storage, libsvm I/O, synthetic generators matching the
 //! paper's Table 1, and the example/feature partitioners of §3 and §5.
 
+pub mod fetch;
 pub mod libsvm;
+pub mod paged;
+pub mod store;
 pub mod partition;
 pub mod synth;
 

@@ -1,0 +1,695 @@
+//! Out-of-core shard backend: [`PagedShard`] runs every
+//! [`ShardCompute`] kernel over a `.pallas` file, paging row blocks
+//! from disk through a small ring of reusable buffers while a
+//! background prefetch thread keeps the next blocks in flight.
+//!
+//! **Determinism contract.** The block decomposition is read from the
+//! file, where `fadl pack` / the shard cache stored exactly what
+//! [`crate::objective::engine::row_blocks`] computes for the resident
+//! matrix — a pure function of the data, never of the thread count,
+//! the buffer budget, or the prefetch depth. Each kernel then executes
+//! the *same* per-block arithmetic as [`SparseShard`] (same row
+//! kernels, same fixed-order block merge, same lane-chunked DAG), so
+//! paged results are bitwise identical to resident results at every
+//! `threads`, `page_budget_mb`, and `prefetch_depth` — residency is
+//! pure plumbing, like `simd` is pure codegen steering.
+//!
+//! **Deadlock freedom.** The prefetcher loads blocks in strictly
+//! increasing order; block `b` lives in slot `b mod B` and the slot is
+//! recycled only after block `b − B` is released. The compute pool's
+//! dynamic claiming hands out block indices in strictly increasing
+//! order too, so whenever any consumer waits, the consumer holding the
+//! lowest unreleased block has its block already resident (every
+//! earlier block was released) and can always progress — for any
+//! `B ≥ 1` and any thread count.
+
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::data::store::{BlockBuf, ShardStore};
+use crate::linalg::csr::Csr;
+use crate::loss::Loss;
+use crate::metrics::telemetry::SpanGuard;
+use crate::objective::engine::{self, ComputePool, LinesearchPlan};
+use crate::objective::{ExampleRows, ShardCompute};
+
+// ---------------------------------------------------------------------------
+// Pager: ring buffers + prefetch thread
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Empty,
+    /// holds this block, ready for its consumer
+    Loaded(usize),
+}
+
+struct PagerState {
+    slots: Vec<SlotState>,
+    /// next block index the prefetch thread will load (current pass)
+    next_load: usize,
+    /// per-block released flags for the current pass
+    released: Vec<bool>,
+    /// bumped by `begin_pass`; the prefetcher re-reads it to restart
+    pass_gen: u64,
+    shutdown: bool,
+    /// first I/O error the prefetcher hit (fatal for the run)
+    error: Option<String>,
+}
+
+struct PagerShared {
+    state: Mutex<PagerState>,
+    /// consumers wait here for their block to be loaded
+    loaded_cv: Condvar,
+    /// the prefetcher waits here for work / free slots
+    work_cv: Condvar,
+    /// one buffer per ring slot, locked only across a load or a consume
+    bufs: Vec<Mutex<BlockBuf>>,
+    store: Arc<ShardStore>,
+    /// nanoseconds consumers spent waiting for a block (drained into
+    /// the `page_stall_secs` trace column)
+    stall_ns: AtomicU64,
+}
+
+/// The block pager: owns the buffer ring and the prefetch thread.
+struct Pager {
+    shared: Arc<PagerShared>,
+    nb: usize,
+    /// serializes kernels: one block pass at a time per shard
+    pass_lock: Mutex<()>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Pager {
+    fn new(store: Arc<ShardStore>, buffers: usize) -> Pager {
+        let nb = store.n_blocks();
+        let b = buffers.clamp(1, nb.max(1));
+        let shared = Arc::new(PagerShared {
+            state: Mutex::new(PagerState {
+                slots: vec![SlotState::Empty; b],
+                next_load: usize::MAX, // no pass active yet
+                released: Vec::new(),
+                pass_gen: 0,
+                shutdown: false,
+                error: None,
+            }),
+            loaded_cv: Condvar::new(),
+            work_cv: Condvar::new(),
+            bufs: (0..b).map(|_| Mutex::new(BlockBuf::default())).collect(),
+            store,
+            stall_ns: AtomicU64::new(0),
+        });
+        let thread = (nb > 0).then(|| {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("fadl-pager".into())
+                .spawn(move || prefetch_loop(&shared, nb))
+                .expect("spawn pager thread")
+        });
+        Pager { shared, nb, pass_lock: Mutex::new(()), thread }
+    }
+
+    fn buffers(&self) -> usize {
+        self.shared.bufs.len()
+    }
+
+    /// Start a block pass: every block 0..nb will be acquired exactly
+    /// once (by any thread, in the pool's increasing claim order) and
+    /// released. Holding the returned guard serializes passes.
+    fn begin_pass(&self) -> PassGuard<'_> {
+        let guard = self.pass_lock.lock().unwrap();
+        if self.nb > 0 {
+            let mut st = self.shared.state.lock().unwrap();
+            st.slots.iter_mut().for_each(|s| *s = SlotState::Empty);
+            st.next_load = 0;
+            st.released = vec![false; self.nb];
+            st.pass_gen += 1;
+            self.shared.work_cv.notify_one();
+        }
+        PassGuard { _guard: guard }
+    }
+
+    /// Block until block `b` is resident and hand out its buffer. The
+    /// wait (if any) is the page stall this pager exists to hide.
+    fn acquire(&self, b: usize) -> PageRef<'_> {
+        let slot = b % self.buffers();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.slots[slot] != SlotState::Loaded(b) {
+                let span = SpanGuard::open("page:wait");
+                let t0 = Instant::now();
+                while st.slots[slot] != SlotState::Loaded(b) {
+                    if let Some(err) = &st.error {
+                        panic!("paged shard I/O failed: {err}");
+                    }
+                    st = self.shared.loaded_cv.wait(st).unwrap();
+                }
+                self.shared
+                    .stall_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                drop(span);
+            }
+        }
+        PageRef {
+            buf: self.shared.bufs[slot].lock().unwrap(),
+            pager: self,
+            block: b,
+            slot,
+        }
+    }
+
+    fn release(&self, block: usize, slot: usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.slots[slot] = SlotState::Empty;
+        if block < st.released.len() {
+            st.released[block] = true;
+        }
+        self.shared.work_cv.notify_one();
+    }
+
+    fn take_stall_ns(&self) -> u64 {
+        self.shared.stall_ns.swap(0, Ordering::Relaxed)
+    }
+}
+
+impl Drop for Pager {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_one();
+        }
+        if let Some(t) = self.thread.take() {
+            t.join().ok();
+        }
+    }
+}
+
+/// Serializes kernels on one shard (see [`Pager::begin_pass`]).
+struct PassGuard<'a> {
+    _guard: MutexGuard<'a, ()>,
+}
+
+/// A resident block, exclusively held by its consumer until drop.
+struct PageRef<'a> {
+    buf: MutexGuard<'a, BlockBuf>,
+    pager: &'a Pager,
+    block: usize,
+    slot: usize,
+}
+
+impl PageRef<'_> {
+    fn x(&self) -> &Csr {
+        &self.buf.x
+    }
+}
+
+impl Drop for PageRef<'_> {
+    fn drop(&mut self) {
+        self.pager.release(self.block, self.slot);
+    }
+}
+
+fn prefetch_loop(shared: &PagerShared, nb: usize) {
+    let b_ring = shared.bufs.len();
+    let mut gen_seen = 0u64;
+    loop {
+        // pick the next loadable block under the state lock
+        let next = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.pass_gen != gen_seen {
+                    gen_seen = st.pass_gen;
+                }
+                let b = st.next_load;
+                if b < nb && st.error.is_none() {
+                    // slot b % B recycles once block b - B is released
+                    let free = b < b_ring || st.released[b - b_ring];
+                    if free {
+                        st.next_load += 1;
+                        break b;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let slot = next % b_ring;
+        let mut buf = shared.bufs[slot].lock().unwrap();
+        let mut span = SpanGuard::open("page:read");
+        span.bytes(shared.store.table[next].len);
+        let result = shared.store.read_block(next, &mut buf);
+        drop(span);
+        drop(buf);
+        let mut st = shared.state.lock().unwrap();
+        match result {
+            // a pass restart while we were reading just means the
+            // loaded block is stale; the new pass reloads it
+            Ok(()) if st.pass_gen == gen_seen => {
+                st.slots[slot] = SlotState::Loaded(next);
+                shared.loaded_cv.notify_all();
+            }
+            Ok(()) => {}
+            Err(e) => {
+                st.error = Some(e.to_string());
+                shared.loaded_cv.notify_all();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagedShard
+// ---------------------------------------------------------------------------
+
+/// Default number of blocks the prefetcher keeps in flight beyond the
+/// ones being consumed (`[worker] prefetch_depth` overrides; chosen by
+/// the `benches/hotpath --prefetch-depth` sweep).
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
+
+/// The out-of-core twin of [`crate::objective::SparseShard`]: same
+/// blocks, same kernels, same merge order — matrix rows live in a
+/// `.pallas` file and stream through the [`Pager`].
+pub struct PagedShard {
+    store: Arc<ShardStore>,
+    blocks: Vec<Range<usize>>,
+    pool: Arc<ComputePool>,
+    simd: bool,
+    pager: Pager,
+    nnz: usize,
+    examples: PagedExamples,
+}
+
+impl PagedShard {
+    /// Open a packed shard. `page_budget_mb` caps the buffer ring
+    /// (0 = size purely from `threads + prefetch_depth`); the ring
+    /// never exceeds what the budget allows, even if that forces
+    /// single-buffer operation.
+    pub fn open(
+        path: &Path,
+        pool: Arc<ComputePool>,
+        simd: bool,
+        page_budget_mb: usize,
+        prefetch_depth: usize,
+    ) -> std::io::Result<PagedShard> {
+        let store = Arc::new(ShardStore::open(path)?);
+        Ok(PagedShard::from_store(store, pool, simd, page_budget_mb, prefetch_depth))
+    }
+
+    /// Build from an already-open store (tests share one store across
+    /// several pager configurations).
+    pub fn from_store(
+        store: Arc<ShardStore>,
+        pool: Arc<ComputePool>,
+        simd: bool,
+        page_budget_mb: usize,
+        prefetch_depth: usize,
+    ) -> PagedShard {
+        let want = pool.threads() + prefetch_depth.max(1);
+        let buffers = if page_budget_mb == 0 {
+            want
+        } else {
+            let max_block = store.max_block_bytes().max(1);
+            let by_budget = (page_budget_mb * (1 << 20)) / max_block;
+            want.min(by_budget.max(1))
+        };
+        let blocks = store.blocks();
+        let nnz = store.nnz;
+        let pager = Pager::new(store.clone(), buffers);
+        let examples = PagedExamples::new(store.clone());
+        PagedShard { store, blocks, pool, simd, pager, nnz, examples }
+    }
+
+    /// The row blocking in effect (identical to what
+    /// [`engine::row_blocks`] yields on the resident matrix).
+    pub fn blocks(&self) -> &[Range<usize>] {
+        &self.blocks
+    }
+
+    /// Ring size the budget resolved to (1 = single-buffer operation).
+    pub fn page_buffers(&self) -> usize {
+        self.pager.buffers()
+    }
+
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
+    }
+
+    pub fn store(&self) -> &ShardStore {
+        &self.store
+    }
+
+    /// Shared body of `loss_grad` / `loss_grad_streaming` — the paged
+    /// mirror of `SparseShard::loss_grad_impl`, arithmetic untouched.
+    fn loss_grad_impl(
+        &self,
+        loss: Loss,
+        w: &[f64],
+        sink: Option<&(dyn Fn(usize, &[f64]) + Sync)>,
+    ) -> (f64, Vec<f64>, Vec<f64>) {
+        let simd = self.simd;
+        let rows = self.store.rows;
+        let cols = self.store.cols;
+        let mut z = vec![0.0; rows];
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, vec![0.0; cols], z);
+        }
+        let y = &self.store.y;
+        let c = &self.store.c;
+        let blocks = &self.blocks;
+        let _pass = self.pager.begin_pass();
+        let block_pass = |b: usize, z_part: &mut [f64], g: &mut [f64]| -> f64 {
+            let page = self.pager.acquire(b);
+            let lx = page.x();
+            let mut value = 0.0;
+            for (k, i) in blocks[b].clone().enumerate() {
+                let zi = lx.row_dot_s(k, w, simd);
+                z_part[k] = zi;
+                let (v, d) = loss.value_dz(zi, y[i]);
+                let ci = c[i];
+                value += ci * v;
+                let r = ci * d;
+                if r != 0.0 {
+                    lx.row_axpy(k, r, g);
+                }
+            }
+            value
+        };
+        let mut g = vec![0.0; cols];
+        if self.pool.threads() == 1 {
+            let mut value = 0.0;
+            let mut scratch = if nb > 1 { vec![0.0; cols] } else { Vec::new() };
+            let z_parts = engine::split_by_ranges(&mut z, blocks);
+            for (b, z_part) in z_parts.into_iter().enumerate() {
+                if b == 0 {
+                    value = block_pass(b, z_part, &mut g[..]);
+                    if let Some(sink) = sink {
+                        sink(0, &g);
+                    }
+                } else {
+                    scratch.fill(0.0);
+                    value += block_pass(b, z_part, &mut scratch[..]);
+                    if let Some(sink) = sink {
+                        sink(b, &scratch);
+                    }
+                    for (gj, sj) in g.iter_mut().zip(&scratch) {
+                        *gj += *sj;
+                    }
+                }
+            }
+            return (value, g, z);
+        }
+        let slots: Vec<Mutex<Option<(f64, Vec<f64>)>>> =
+            (0..nb).map(|_| Mutex::new(None)).collect();
+        {
+            let z_parts = engine::split_by_ranges(&mut z, blocks);
+            self.pool.run_over_slices(z_parts, |b, z_part| {
+                let mut gb = vec![0.0; cols];
+                let vb = block_pass(b, z_part, &mut gb[..]);
+                if let Some(sink) = sink {
+                    sink(b, &gb);
+                }
+                *slots[b].lock().unwrap() = Some((vb, gb));
+            });
+        }
+        let mut values = Vec::with_capacity(nb);
+        let mut grads = Vec::with_capacity(nb);
+        for slot in slots {
+            let (vb, gb) = slot.into_inner().unwrap().unwrap();
+            values.push(vb);
+            grads.push(gb);
+        }
+        engine::merge_block_sums(&self.pool, &grads, &mut g);
+        (engine::fold_block_scalars(&values), g, z)
+    }
+
+    /// Paged mirror of `SparseShard::hvp_impl`.
+    fn hvp_impl(
+        &self,
+        loss: Loss,
+        z: &[f64],
+        s: &[f64],
+        sink: Option<&(dyn Fn(usize, &[f64]) + Sync)>,
+    ) -> Vec<f64> {
+        let simd = self.simd;
+        let cols = self.store.cols;
+        debug_assert_eq!(z.len(), self.store.rows);
+        let mut out = vec![0.0; cols];
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return out;
+        }
+        let y = &self.store.y;
+        let c = &self.store.c;
+        let blocks = &self.blocks;
+        let _pass = self.pager.begin_pass();
+        let block_pass = |b: usize, part: &mut [f64]| {
+            let page = self.pager.acquire(b);
+            let lx = page.x();
+            let rows = blocks[b].clone();
+            let mut d_block = Vec::with_capacity(rows.len());
+            for i in rows.clone() {
+                d_block.push(c[i] * loss.d2z(z[i], y[i]));
+            }
+            lx.hvp_block_into(0..rows.len(), &d_block, s, part, simd);
+        };
+        if self.pool.threads() == 1 {
+            let mut scratch = if nb > 1 { vec![0.0; cols] } else { Vec::new() };
+            for b in 0..nb {
+                if b == 0 {
+                    block_pass(b, &mut out[..]);
+                    if let Some(sink) = sink {
+                        sink(0, &out);
+                    }
+                } else {
+                    scratch.fill(0.0);
+                    block_pass(b, &mut scratch[..]);
+                    if let Some(sink) = sink {
+                        sink(b, &scratch);
+                    }
+                    for (oj, sj) in out.iter_mut().zip(&scratch) {
+                        *oj += *sj;
+                    }
+                }
+            }
+            return out;
+        }
+        let parts = self.pool.map(nb, |b| {
+            let mut part = vec![0.0; cols];
+            block_pass(b, &mut part[..]);
+            if let Some(sink) = sink {
+                sink(b, &part);
+            }
+            part
+        });
+        engine::merge_block_sums(&self.pool, &parts, &mut out);
+        out
+    }
+}
+
+impl ShardCompute for PagedShard {
+    fn n(&self) -> usize {
+        self.store.rows
+    }
+
+    fn m(&self) -> usize {
+        self.store.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn loss_grad(&self, loss: Loss, w: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
+        self.loss_grad_impl(loss, w, None)
+    }
+
+    fn margins(&self, d: &[f64]) -> Vec<f64> {
+        let simd = self.simd;
+        let mut e = vec![0.0; self.store.rows];
+        let blocks = &self.blocks;
+        if blocks.is_empty() {
+            return e;
+        }
+        let _pass = self.pager.begin_pass();
+        let parts = engine::split_by_ranges(&mut e, blocks);
+        self.pool.run_over_slices(parts, |b, part| {
+            let page = self.pager.acquire(b);
+            page.x().margins_block_into(0..blocks[b].len(), d, part, simd);
+        });
+        e
+    }
+
+    fn hvp(&self, loss: Loss, z: &[f64], s: &[f64]) -> Vec<f64> {
+        self.hvp_impl(loss, z, s, None)
+    }
+
+    // the line search never touches the matrix: cached (z, e) plus the
+    // resident labels/weights drive the exact SparseShard code paths
+    fn linesearch_eval(&self, loss: Loss, z: &[f64], e: &[f64], t: f64) -> (f64, f64) {
+        debug_assert_eq!(z.len(), self.n());
+        debug_assert_eq!(e.len(), self.n());
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, 0.0);
+        }
+        let y = &self.store.y;
+        let c = &self.store.c;
+        let blocks = &self.blocks;
+        let partials = self.pool.map(nb, |b| {
+            let rows = blocks[b].clone();
+            let lo = rows.start;
+            engine::linesearch_lanes_fold(rows.len(), |k| {
+                let i = lo + k;
+                loss.linesearch_term(z[i], e[i], y[i], c[i], t)
+            })
+        });
+        let phis: Vec<f64> = partials.iter().map(|&(p, _)| p).collect();
+        let dphis: Vec<f64> = partials.iter().map(|&(_, d)| d).collect();
+        (
+            engine::fold_block_scalars(&phis),
+            engine::fold_block_scalars(&dphis),
+        )
+    }
+
+    fn linesearch_plan(&self, z: &[f64], e: &[f64]) -> Option<LinesearchPlan> {
+        if z.len() != self.n() || e.len() != self.n() {
+            return None;
+        }
+        Some(LinesearchPlan::build(
+            &self.blocks,
+            self.pool.clone(),
+            self.simd,
+            z,
+            e,
+            &self.store.y,
+            &self.store.c,
+        ))
+    }
+
+    fn stream_block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn loss_grad_streaming(
+        &self,
+        loss: Loss,
+        w: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> (f64, Vec<f64>, Vec<f64>) {
+        self.loss_grad_impl(loss, w, Some(sink))
+    }
+
+    fn hvp_streaming(
+        &self,
+        loss: Loss,
+        z: &[f64],
+        s: &[f64],
+        sink: &(dyn Fn(usize, &[f64]) + Sync),
+    ) -> Vec<f64> {
+        self.hvp_impl(loss, z, s, Some(sink))
+    }
+
+    fn examples(&self) -> Option<&dyn ExampleRows> {
+        Some(&self.examples)
+    }
+
+    fn feature_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.store.cols];
+        if self.blocks.is_empty() {
+            return counts;
+        }
+        let _pass = self.pager.begin_pass();
+        for b in 0..self.blocks.len() {
+            let page = self.pager.acquire(b);
+            for &col in &page.x().col_idx {
+                counts[col as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    fn take_queue_wait_ns(&self) -> u64 {
+        self.pool.take_queue_wait_ns()
+    }
+
+    fn take_page_stall_ns(&self) -> u64 {
+        self.pager.take_stall_ns()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-example random access
+// ---------------------------------------------------------------------------
+
+/// [`ExampleRows`] over a `.pallas` store: a one-block cache keyed by
+/// the owning block (binary search over the table). Random access
+/// thrashes the cache — example-wise methods on paged shards trade
+/// throughput for memory, bitwise identical either way.
+pub struct PagedExamples {
+    store: Arc<ShardStore>,
+    cache: Mutex<ExampleCache>,
+}
+
+struct ExampleCache {
+    buf: BlockBuf,
+    block: Option<usize>,
+}
+
+impl PagedExamples {
+    fn new(store: Arc<ShardStore>) -> PagedExamples {
+        PagedExamples {
+            store,
+            cache: Mutex::new(ExampleCache { buf: BlockBuf::default(), block: None }),
+        }
+    }
+
+    /// Run `f` on the (block-local CSR, local row) pair owning global
+    /// row `i`.
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(&Csr, usize) -> R) -> R {
+        let b = self
+            .store
+            .table
+            .partition_point(|e| e.row_end as usize <= i);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.block != Some(b) {
+            self.store
+                .read_block(b, &mut cache.buf)
+                .unwrap_or_else(|e| panic!("paged example read failed: {e}"));
+            cache.block = Some(b);
+        }
+        f(&cache.buf.x, i - cache.buf.row_start)
+    }
+}
+
+impl ExampleRows for PagedExamples {
+    fn n(&self) -> usize {
+        self.store.rows
+    }
+
+    fn y(&self, i: usize) -> f64 {
+        self.store.y[i]
+    }
+
+    fn c(&self, i: usize) -> f64 {
+        self.store.c[i]
+    }
+
+    fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        self.with_row(i, |x, k| x.row_dot(k, w))
+    }
+
+    fn row_axpy(&self, i: usize, a: f64, w: &mut [f64]) {
+        self.with_row(i, |x, k| x.row_axpy(k, a, w))
+    }
+
+    fn row_norm_sq(&self, i: usize) -> f64 {
+        self.with_row(i, |x, k| x.row_norm_sq(k))
+    }
+}

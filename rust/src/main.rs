@@ -4,6 +4,8 @@
 //!   train       run one experiment from a config file (+ overrides)
 //!   serve       score batches over tcp from a published ModelArtifact
 //!   score       client for a serving front: batch, send, time, print
+//!   pack        convert a libsvm text file to a binary .pallas shard
+//!   fetch       download a catalog dataset into the local cache
 //!   datasets    print the Table-1 synthetic dataset inventory
 //!   costmodel   evaluate the eq.-(21) computation/communication regime
 //!   verify      smoke-check the AOT artifacts through the PJRT runtime
@@ -20,6 +22,8 @@
 //!   fadl train --dataset quick --model-out model.fadl
 //!   fadl serve --model model.fadl --bind 127.0.0.1:7070
 //!   fadl score --connect 127.0.0.1:7070 --dataset quick --batch 64
+//!   fadl pack --input rcv1.libsvm --output rcv1.pallas
+//!   fadl fetch --dataset rcv1_train --pack
 //!   fadl datasets --scale 0.001
 //!   fadl costmodel --gamma 500 --k-hat 10
 //!   fadl verify --artifacts artifacts
@@ -53,13 +57,15 @@ fn main() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
         "score" => cmd_score(rest),
+        "pack" => cmd_pack(rest),
+        "fetch" => cmd_fetch(rest),
         "datasets" => cmd_datasets(rest),
         "costmodel" => cmd_costmodel(rest),
         "verify" => cmd_verify(rest),
         _ => {
             eprintln!(
                 "fadl — Function-Approximation-based Distributed Learning\n\n\
-                 USAGE: fadl <train|serve|score|datasets|costmodel|verify> [flags]\n\
+                 USAGE: fadl <train|serve|score|pack|fetch|datasets|costmodel|verify> [flags]\n\
                  Run `fadl <subcommand> --help` for details."
             );
             std::process::exit(if sub == "help" { 0 } else { 2 });
@@ -110,6 +116,13 @@ fn cmd_train(argv: Vec<String>) {
             r.sim_secs,
             r.wall_secs,
             report::fmt_auprc(r.auprc)
+        );
+        // out-of-core health: cumulative seconds the slowest rank's
+        // kernels spent blocked on the pager (always 0 under ram)
+        println!(
+            "residency={} page_stall={:.3}s",
+            cfg.residency.name(),
+            r.page_stall_secs
         );
     }
     println!("‖w‖ = {:.6}", fadl::linalg::norm(&w));
@@ -197,6 +210,117 @@ fn cmd_score(argv: Vec<String>) {
         percentile_ns(&lat_ns, 50.0) as f64 / 1e3,
         percentile_ns(&lat_ns, 99.0) as f64 / 1e3,
     );
+}
+
+/// Pack a libsvm text file into a `.pallas` binary shard, in constant
+/// memory: a counting pass learns rows/nnz/labels, a writing pass
+/// streams rows through [`fadl::data::store::StreamWriter`]. The block
+/// boundaries match what `engine::row_blocks` computes on the resident
+/// matrix, so training on the packed file is bitwise identical to
+/// training on the text file.
+fn cmd_pack(argv: Vec<String>) {
+    use fadl::data::{libsvm, store};
+    use fadl::objective::engine;
+    use std::io::BufReader;
+
+    let cli = Cli::new("fadl pack", "convert a libsvm text file to a binary .pallas shard")
+        .required("input", "libsvm text file to convert")
+        .flag("output", "", "output path (default: <input>.pallas)")
+        .flag(
+            "target-nnz",
+            "0",
+            "nonzeros per block (0 = the engine's default blocking)",
+        );
+    let a = parse_or_exit(&cli, argv);
+    let input = std::path::PathBuf::from(a.get("input"));
+    let output = match a.get("output") {
+        "" => input.with_extension("pallas"),
+        p => std::path::PathBuf::from(p),
+    };
+
+    let open = |path: &std::path::Path| -> BufReader<std::fs::File> {
+        BufReader::new(
+            std::fs::File::open(path)
+                .unwrap_or_else(|e| die(&format!("open {}: {e}", path.display()))),
+        )
+    };
+
+    // pass 1: count rows/nnz and learn the distinct raw labels (the
+    // binarization rule needs them sorted)
+    let mut distinct: Vec<f64> = Vec::new();
+    let (rows, m, nnz) = libsvm::for_each_row(open(&input), |label, _row| {
+        if let Err(at) = distinct.binary_search_by(|d| d.partial_cmp(&label).unwrap()) {
+            distinct.insert(at, label);
+        }
+        Ok(())
+    })
+    .unwrap_or_else(|e| die(&e));
+    if rows == 0 {
+        die("input has no examples");
+    }
+    let map = libsvm::label_mapper(&distinct).unwrap_or_else(|e| die(&e));
+    let target = match a.get_usize("target-nnz") {
+        0 => engine::TARGET_BLOCK_NNZ.max(nnz.div_ceil(engine::MAX_BLOCKS)),
+        t => t,
+    };
+
+    // pass 2: stream rows into the binary writer
+    let mut writer = store::StreamWriter::new(&output, target)
+        .unwrap_or_else(|e| die(&format!("create {}: {e}", output.display())));
+    libsvm::for_each_row(open(&input), |label, row| {
+        writer.push_row(map(label), 1.0, row).map_err(|e| format!("write: {e}"))
+    })
+    .unwrap_or_else(|e| die(&e));
+    writer
+        .finish(&output)
+        .unwrap_or_else(|e| die(&format!("finish {}: {e}", output.display())));
+
+    let shard = store::ShardStore::open(&output)
+        .unwrap_or_else(|e| die(&format!("reopen {}: {e}", output.display())));
+    println!(
+        "packed {} → {}: n={rows} m={m} nnz={nnz}, {} blocks (max {} KiB), {} KiB payload",
+        input.display(),
+        output.display(),
+        shard.n_blocks(),
+        shard.max_block_bytes() / 1024,
+        shard.payload_bytes() / 1024,
+    );
+}
+
+/// Download a catalog dataset into the local cache (SHA-256 verified),
+/// optionally packing it to `.pallas` on the way. Offline or missing
+/// tools is a skip, not a failure — CI stays green without a network.
+fn cmd_fetch(argv: Vec<String>) {
+    use fadl::data::fetch::{self, FetchOutcome};
+
+    let cli = Cli::new("fadl fetch", "download a catalog dataset into the cache")
+        .flag("dataset", "rcv1_train", "catalog name (see `fadl fetch --list`)")
+        .switch("list", "print the catalog and exit")
+        .switch("pack", "also pack the fetched text to <name>.pallas");
+    let a = parse_or_exit(&cli, argv);
+    if a.on("list") {
+        for d in fetch::catalog() {
+            println!("{}  {}{}", d.name, d.url, if d.bz2 { "  (bz2)" } else { "" });
+        }
+        return;
+    }
+    let name = a.get("dataset").to_string();
+    match fetch::fetch(&name).unwrap_or_else(|e| die(&e)) {
+        FetchOutcome::Skipped(why) => {
+            // deliberate exit 0: offline environments skip, not fail
+            println!("fetch skipped — {why}");
+        }
+        FetchOutcome::Ready(path) => {
+            println!("ready: {}", path.display());
+            if a.on("pack") {
+                let out = path.with_extension("pallas");
+                cmd_pack(vec![
+                    format!("--input={}", path.display()),
+                    format!("--output={}", out.display()),
+                ]);
+            }
+        }
+    }
 }
 
 fn cmd_datasets(argv: Vec<String>) {

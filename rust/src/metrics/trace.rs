@@ -54,6 +54,12 @@ pub struct IterRecord {
     /// of the kernel it overlapped (slowest rank per phase; 0 with
     /// `[cluster] overlap` off or off the p2p plane)
     pub overlap_secs: f64,
+    /// cumulative seconds the slowest rank's kernels spent blocked
+    /// waiting on a shard page the prefetcher hadn't loaded yet (0
+    /// under `[worker] residency = "ram"`; sustained nonzero values
+    /// mean the disk paces the pass — raise `page_budget_mb` or
+    /// `prefetch_depth`)
+    pub page_stall_secs: f64,
     /// objective value f(w^r)
     pub f: f64,
     /// ‖g(w^r)‖
@@ -111,6 +117,7 @@ impl Trace {
             queue_wait_secs: net.queue_wait_secs,
             mesh_stall_secs: net.mesh_stall_secs,
             overlap_secs: net.overlap_secs,
+            page_stall_secs: net.page_stall_secs,
             f,
             grad_norm,
             auprc,
@@ -219,6 +226,7 @@ pub const COLUMNS: &[(&str, fn(&IterRecord) -> f64)] = &[
     ("queue_wait_secs", |r| r.queue_wait_secs),
     ("mesh_stall_secs", |r| r.mesh_stall_secs),
     ("overlap_secs", |r| r.overlap_secs),
+    ("page_stall_secs", |r| r.page_stall_secs),
     ("f", |r| r.f),
     ("grad_norm", |r| r.grad_norm),
     ("auprc", |r| r.auprc),
@@ -245,6 +253,7 @@ mod tests {
             net.queue_wait_secs += 0.002;
             net.mesh_stall_secs += 0.001;
             net.overlap_secs += 0.003;
+            net.page_stall_secs += 0.0005;
             t.push(
                 i,
                 &clock,
@@ -284,6 +293,7 @@ mod tests {
         assert!((t.records[4].queue_wait_secs - 0.01).abs() < 1e-12);
         assert!((t.records[4].mesh_stall_secs - 0.005).abs() < 1e-12);
         assert!((t.records[4].overlap_secs - 0.015).abs() < 1e-12);
+        assert!((t.records[4].page_stall_secs - 0.0025).abs() < 1e-12);
     }
 
     #[test]
@@ -341,15 +351,16 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 18);
+        assert_eq!(lines[0].split(',').count(), 19);
         assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
-        assert!(lines[0].contains(",queue_wait_secs,mesh_stall_secs,overlap_secs,f,"));
+        assert!(lines[0]
+            .contains(",queue_wait_secs,mesh_stall_secs,overlap_secs,page_stall_secs,f,"));
         assert!(lines[0].contains(",meas_compute_secs,"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 18, "{line}");
+            assert_eq!(line.split(',').count(), 19, "{line}");
         }
         // Display round-trips f64 exactly
-        let f0: f64 = lines[1].split(',').nth(15).unwrap().parse().unwrap();
+        let f0: f64 = lines[1].split(',').nth(16).unwrap().parse().unwrap();
         assert_eq!(f0.to_bits(), t.records[0].f.to_bits());
     }
 

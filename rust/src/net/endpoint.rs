@@ -536,11 +536,11 @@ fn local_solve(
         }
         LocalSolveSpec::CocoaSdca { lambda, epochs, seed, round, w } => {
             let m = shard.m();
-            let Some(data) = shard.shard() else {
+            let Some(ex) = shard.examples() else {
                 // block-only backend: no per-example access, no progress
                 return Ok(Reply::Solve { w: vec![0.0; m], n: shard.n(), units: 0.0 });
             };
-            let n = data.n();
+            let n = ex.n();
             if st.cocoa_alpha.len() != n {
                 st.cocoa_alpha = vec![0.0; n];
             }
@@ -552,17 +552,17 @@ fn local_solve(
                 let mut rng = Pcg64::with_stream(seed ^ round, st.rank as u64);
                 for _ in 0..steps {
                     let i = rng.below(n);
-                    let xsq = data.x.row_norm_sq(i);
+                    let xsq = ex.row_norm_sq(i);
                     if xsq == 0.0 {
                         continue;
                     }
-                    let margin_y = data.y[i] * data.x.row_dot(i, &w_loc);
+                    let margin_y = ex.y(i) * ex.row_dot(i, &w_loc);
                     let d = loss::sdca_delta(margin_y, alpha[i], xsq / lambda);
                     if d != 0.0 {
                         alpha[i] += d;
-                        let coef = d * data.y[i] / lambda;
-                        data.x.row_axpy(i, coef, &mut w_loc);
-                        data.x.row_axpy(i, coef, &mut delta_w);
+                        let coef = d * ex.y(i) / lambda;
+                        ex.row_axpy(i, coef, &mut w_loc);
+                        ex.row_axpy(i, coef, &mut delta_w);
                     }
                 }
             }
@@ -861,18 +861,18 @@ pub fn local_warmstart(
     seed: u64,
 ) -> (Vec<f64>, Vec<u32>, f64) {
     let m = shard.m();
-    let Some(data) = shard.shard() else {
+    let Some(ex) = shard.examples() else {
         // block-only backend: contribute nothing (zero weight, zero counts)
         return (vec![0.0; m], vec![0u32; m], 0.0);
     };
-    let n = data.n();
+    let n = ex.n();
     if n == 0 {
         return (vec![0.0; m], vec![0u32; m], 0.0);
     }
     // safe step size from the local Lipschitz bound
     let mut max_row_sq: f64 = 0.0;
     for i in 0..n {
-        max_row_sq = max_row_sq.max(data.x.row_norm_sq(i));
+        max_row_sq = max_row_sq.max(ex.row_norm_sq(i));
     }
     let eta = 0.5 / (max_row_sq * loss.curvature_bound() + lambda).max(1e-12);
     let mut w = vec![0.0; m];
@@ -881,11 +881,11 @@ pub fn local_warmstart(
     for _ in 0..epochs {
         rng.shuffle(&mut order);
         for &i in &order {
-            let z = data.x.row_dot(i, &w);
-            let dz = data.c[i] * loss.dz(z, data.y[i]);
+            let z = ex.row_dot(i, &w);
+            let dz = ex.c(i) * loss.dz(z, ex.y(i));
             // w ← (1 − ηλ)w − η·dz·x_i
             linalg::scale(1.0 - eta * lambda, &mut w);
-            data.x.row_axpy(i, -eta * dz, &mut w);
+            ex.row_axpy(i, -eta * dz, &mut w);
         }
     }
     let counts = shard.feature_counts();

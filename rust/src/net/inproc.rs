@@ -109,12 +109,19 @@ impl Transport for InProc {
             .iter()
             .map(|w| w.take_queue_wait_ns() as f64 * 1e-9)
             .fold(0.0f64, f64::max);
+        // ... and on its slowest rank's page stalls (0 under ram)
+        let page_stall_secs = self
+            .workers
+            .iter()
+            .map(|w| w.take_page_stall_ns() as f64 * 1e-9)
+            .fold(0.0f64, f64::max);
         Ok(PhaseOutput {
             replies,
             stats: Measured {
                 phase_secs: t0.elapsed().as_secs_f64(),
                 compute_secs,
                 queue_wait_secs,
+                page_stall_secs,
                 ..Measured::default()
             },
         })

@@ -154,6 +154,41 @@ impl FrameEncoding {
     }
 }
 
+/// Where a worker's shard lives during compute (`[worker] residency`).
+/// `Ram` (default) keeps the resident CSR of the seed; `Paged` writes
+/// the shard once to a binary `.pallas` cache file and pages CSR row
+/// blocks through a small buffer ring with background prefetch
+/// ([`crate::data::paged::PagedShard`]). The block decomposition is a
+/// pure function of the shard, so both settings produce bitwise
+/// identical trajectories — residency steers memory, not arithmetic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Residency {
+    #[default]
+    Ram,
+    Paged,
+}
+
+impl Residency {
+    pub fn from_name(name: &str) -> Option<Residency> {
+        match name {
+            "ram" => Some(Residency::Ram),
+            "paged" => Some(Residency::Paged),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Residency::Ram => "ram",
+            Residency::Paged => "paged",
+        }
+    }
+
+    pub fn all() -> [Residency; 2] {
+        [Residency::Ram, Residency::Paged]
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Replicated vector registers
 // ---------------------------------------------------------------------------
@@ -576,6 +611,20 @@ pub struct WorkerSetup {
     /// p2p reduction-frame element encoding (`[cluster]
     /// frame_encoding`, default f64 — see [`FrameEncoding`])
     pub frame_encoding: FrameEncoding,
+    /// shard residency (`[worker] residency`, default ram — see
+    /// [`Residency`]). Bitwise irrelevant to every result; `Paged`
+    /// trades resident memory for `page:read`/`page:wait` I/O time.
+    pub residency: Residency,
+    /// paged-residency buffer-ring budget in MiB (`[worker]
+    /// page_budget_mb`): caps the block buffers a paged shard may hold
+    /// resident at once. 0 = uncapped (threads + prefetch depth
+    /// buffers).
+    pub page_budget_mb: usize,
+    /// paged-residency prefetch depth (`[worker] prefetch_depth` /
+    /// `--prefetch-depth`): how many blocks past the one being computed
+    /// the background reader keeps in flight (≥ 1; 2 = double
+    /// buffering).
+    pub prefetch_depth: usize,
 }
 
 impl WorkerSetup {
@@ -659,6 +708,13 @@ pub struct Measured {
     /// across ranks per phase, summed over phases; 0 with `[cluster]
     /// overlap` off, under star, and in-process)
     pub overlap_secs: f64,
+    /// seconds a rank's kernels spent blocked waiting for a page the
+    /// prefetcher hadn't loaded yet (max across ranks per phase, summed
+    /// over phases; 0 under `residency = "ram"`). The out-of-core
+    /// counterpart of `queue_wait_secs`: sustained nonzero values mean
+    /// the disk, not the CPU, paces the pass — raise `page_budget_mb`
+    /// or `prefetch_depth`.
+    pub page_stall_secs: f64,
 }
 
 impl Measured {
@@ -674,6 +730,7 @@ impl Measured {
         self.queue_wait_secs += other.queue_wait_secs;
         self.mesh_stall_secs += other.mesh_stall_secs;
         self.overlap_secs += other.overlap_secs;
+        self.page_stall_secs += other.page_stall_secs;
     }
 
     /// Total control-plane (driver-link) traffic.
@@ -890,6 +947,7 @@ mod tests {
             queue_wait_secs: 0.125,
             mesh_stall_secs: 0.0625,
             overlap_secs: 0.03125,
+            page_stall_secs: 0.015625,
         };
         a.merge(&Measured {
             phase_secs: 2.0,
@@ -903,6 +961,7 @@ mod tests {
             queue_wait_secs: 0.375,
             mesh_stall_secs: 0.1875,
             overlap_secs: 0.09375,
+            page_stall_secs: 0.046875,
         });
         assert_eq!(a.phase_secs, 3.0);
         assert_eq!(a.compute_secs, 1.0);
@@ -913,6 +972,7 @@ mod tests {
         assert_eq!(a.queue_wait_secs, 0.5);
         assert_eq!(a.mesh_stall_secs, 0.25);
         assert_eq!(a.overlap_secs, 0.125);
+        assert_eq!(a.page_stall_secs, 0.0625);
     }
 
     #[test]
@@ -929,6 +989,11 @@ mod tests {
         assert_eq!(FrameEncoding::default(), FrameEncoding::F64);
         assert_eq!(FrameEncoding::F64.elem_bytes(), 8);
         assert_eq!(FrameEncoding::F32.elem_bytes(), 4);
+        for res in Residency::all() {
+            assert_eq!(Residency::from_name(res.name()), Some(res));
+        }
+        assert_eq!(Residency::from_name("disk"), None);
+        assert_eq!(Residency::default(), Residency::Ram);
     }
 
     #[test]
@@ -953,6 +1018,9 @@ mod tests {
             simd: true,
             overlap: false,
             frame_encoding: FrameEncoding::F64,
+            residency: Residency::Ram,
+            page_budget_mb: 0,
+            prefetch_depth: 2,
         };
         assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
         setup.p2p_bind = "10.0.0.1".into();

@@ -359,11 +359,13 @@ impl Transport for TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reply { reply, secs, queue_ns } => {
+                Msg::Reply { reply, secs, queue_ns, page_ns } => {
                     // BSP: the phase costs its slowest rank's kernel
                     stats.compute_secs = stats.compute_secs.max(secs);
                     stats.queue_wait_secs =
                         stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
+                    stats.page_stall_secs =
+                        stats.page_stall_secs.max(page_ns as f64 * 1e-9);
                     replies.push(reply);
                 }
                 Msg::Abort { msg } => {
@@ -448,10 +450,12 @@ impl TcpDriver {
             stats.bytes_rx += bytes;
             stats.driver_data_bytes += wire::msg_data_bytes(&msg);
             match msg {
-                Msg::Reduced { mut reply, compute_secs, queue_ns, .. } => {
+                Msg::Reduced { mut reply, compute_secs, queue_ns, page_ns, .. } => {
                     stats.compute_secs = stats.compute_secs.max(compute_secs);
                     stats.queue_wait_secs =
                         stats.queue_wait_secs.max(queue_ns as f64 * 1e-9);
+                    stats.page_stall_secs =
+                        stats.page_stall_secs.max(page_ns as f64 * 1e-9);
                     let vecs = take_combine_vectors(&mut reply)?;
                     // the gathered part payloads ARE the star data plane
                     stats.reduce_bytes +=
@@ -535,6 +539,7 @@ impl TcpDriver {
                     queue_ns,
                     stall_ns,
                     overlap_ns,
+                    page_ns,
                     dots: d,
                 } => {
                     // mesh traffic is counted once, at each sender
@@ -546,6 +551,8 @@ impl TcpDriver {
                         stats.mesh_stall_secs.max(stall_ns as f64 * 1e-9);
                     stats.overlap_secs =
                         stats.overlap_secs.max(overlap_ns as f64 * 1e-9);
+                    stats.page_stall_secs =
+                        stats.page_stall_secs.max(page_ns as f64 * 1e-9);
                     mesh_secs = mesh_secs.max(secs);
                     if rank == 0 {
                         dots = d;

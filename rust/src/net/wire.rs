@@ -34,7 +34,8 @@ use crate::metrics::telemetry::Span as TelemetrySpan;
 
 use super::{
     Combine, CombineSpec, Command, DataPlane, DualUpdateSpec, FrameEncoding,
-    InnerSolveSpec, LocalSolveSpec, Reply, Topology, VecOp, VecRef, WorkerSetup,
+    InnerSolveSpec, LocalSolveSpec, Reply, Residency, Topology, VecOp, VecRef,
+    WorkerSetup,
 };
 
 /// Hard cap on a single frame (guards against corrupt length prefixes).
@@ -95,7 +96,14 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// `overlap_secs` trace column). Mesh data-plane frames gained the
 /// streamed-range layout (`[len = 4][B: u32]` header + `B` per-block
 /// partial frames) used when overlap is on.
-pub const PROTO_VERSION: u32 = 8;
+///
+/// v9: the out-of-core data path — `Setup` carries the shard residency
+/// (`ram` | `paged`), the paged buffer budget in MiB, and the prefetch
+/// depth; `Reply` and `Reduced` report the rank's page-stall
+/// nanoseconds (wall time kernels blocked waiting on a block the
+/// prefetcher hadn't loaded yet — the `page_stall_secs` trace column;
+/// 0 under ram residency).
+pub const PROTO_VERSION: u32 = 9;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -430,8 +438,10 @@ pub enum Msg {
     /// the shard-compute kernel (the `meas_compute_secs` accounting —
     /// the driver takes the max across ranks per phase); `queue_ns` is
     /// the pool queue wait accumulated by the rank's kernel blocks
-    /// (the `queue_wait_secs` trace column).
-    Reply { reply: Reply, secs: f64, queue_ns: u64 },
+    /// (the `queue_wait_secs` trace column); `page_ns` is the wall
+    /// time kernels blocked on pages still being read (the
+    /// `page_stall_secs` column, 0 under ram residency).
+    Reply { reply: Reply, secs: f64, queue_ns: u64, page_ns: u64 },
     /// Every rank's advertised data-plane address, rank-indexed; the
     /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
     Mesh { addrs: Vec<String> },
@@ -466,6 +476,9 @@ pub enum Msg {
         /// while later row blocks still computed (0 when the
         /// compute/communication overlap is off or ineligible)
         overlap_ns: u64,
+        /// wall time kernels blocked waiting on pages still being read
+        /// (0 under ram residency)
+        page_ns: u64,
         dots: Vec<f64>,
     },
     /// Star-plane combine completion: the driver's plan sums, shipped
@@ -740,6 +753,9 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.bool(s.simd);
             e.bool(s.overlap);
             e.str(s.frame_encoding.name());
+            e.str(s.residency.name());
+            e.usize(s.page_budget_mb);
+            e.usize(s.prefetch_depth);
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
         Msg::Ready { m, n, nnz, data_port, now_ns } => {
@@ -778,6 +794,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             queue_ns,
             stall_ns,
             overlap_ns,
+            page_ns,
             dots,
         } => {
             e.u8(tag::REDUCED);
@@ -788,6 +805,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.u64(*queue_ns);
             e.u64(*stall_ns);
             e.u64(*overlap_ns);
+            e.u64(*page_ns);
             e.vec_f64(dots);
             enc_reply(&mut e, reply);
         }
@@ -803,10 +821,11 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.vec_f64(dots);
         }
         Msg::Cmd(cmd) => enc_cmd(&mut e, cmd),
-        Msg::Reply { reply, secs, queue_ns } => {
+        Msg::Reply { reply, secs, queue_ns, page_ns } => {
             enc_reply(&mut e, reply);
             e.f64(*secs);
             e.u64(*queue_ns);
+            e.u64(*page_ns);
         }
         Msg::Score { id, cols, row_nnz, col_idx, values } => {
             e.u8(tag::SCORE);
@@ -1079,6 +1098,13 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 FrameEncoding::from_name(&name)
                     .ok_or_else(|| format!("unknown frame encoding {name:?}"))?
             },
+            residency: {
+                let name = d.str()?;
+                Residency::from_name(&name)
+                    .ok_or_else(|| format!("unknown residency {name:?}"))?
+            },
+            page_budget_mb: d.usize()?,
+            prefetch_depth: d.usize()?,
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -1121,6 +1147,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let queue_ns = d.u64()?;
             let stall_ns = d.u64()?;
             let overlap_ns = d.u64()?;
+            let page_ns = d.u64()?;
             let dots = d.vec_f64()?;
             let rt = d.u8()?;
             Msg::Reduced {
@@ -1132,6 +1159,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
                 queue_ns,
                 stall_ns,
                 overlap_ns,
+                page_ns,
                 dots,
             }
         }
@@ -1155,7 +1183,8 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             let reply = dec_reply(&mut d, t)?;
             let secs = d.f64()?;
             let queue_ns = d.u64()?;
-            Msg::Reply { reply, secs, queue_ns }
+            let page_ns = d.u64()?;
+            Msg::Reply { reply, secs, queue_ns, page_ns }
         }
         tag::SCORE => Msg::Score {
             id: {
@@ -1508,6 +1537,9 @@ mod tests {
             simd: false,
             overlap: true,
             frame_encoding: FrameEncoding::F32,
+            residency: Residency::Paged,
+            page_budget_mb: 48,
+            prefetch_depth: 3,
         }));
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
@@ -1538,7 +1570,8 @@ mod tests {
             epochs: 5,
             seed: 7,
         }));
-        let reply = |reply: Reply, secs: f64| Msg::Reply { reply, secs, queue_ns: 512 };
+        let reply =
+            |reply: Reply, secs: f64| Msg::Reply { reply, secs, queue_ns: 512, page_ns: 64 };
         roundtrip(reply(Reply::Ack { units: 12.0 }, 0.5));
         roundtrip(reply(
             Reply::Grad { loss: 3.5, grad: vec![1.0; 7], units: 2.0 },
@@ -1697,6 +1730,7 @@ mod tests {
             queue_ns: 2048,
             stall_ns: 1024,
             overlap_ns: 4096,
+            page_ns: 8192,
             dots: vec![0.5, -0.25],
         });
         roundtrip(Msg::Reduced {
@@ -1708,6 +1742,7 @@ mod tests {
             queue_ns: 0,
             stall_ns: 0,
             overlap_ns: 0,
+            page_ns: 0,
             dots: vec![],
         });
         roundtrip(Msg::Finish { sums: vec![] });
@@ -1867,6 +1902,7 @@ mod tests {
                 reply: Reply::Dots { vals: vec![1.0; 8], units: 0.0 },
                 secs: 0.25,
                 queue_ns: 99,
+                page_ns: 0,
             }),
             0,
             "replicated dots (and compute seconds) are scalar aggregates"
@@ -1880,6 +1916,7 @@ mod tests {
                 },
                 secs: 0.0,
                 queue_ns: 0,
+                page_ns: 0,
             }),
             64
         );
@@ -1904,6 +1941,7 @@ mod tests {
                 },
                 secs: 0.0,
                 queue_ns: 0,
+                page_ns: 0,
             }),
             0,
             "span flushes are control traffic — scalar-only driver holds"
@@ -1923,6 +1961,7 @@ mod tests {
                 queue_ns: 11,
                 stall_ns: 22,
                 overlap_ns: 33,
+                page_ns: 44,
                 dots: vec![1.0, 2.0],
             }),
             0,

@@ -218,7 +218,8 @@ pub fn serve(connect: &str) -> Result<(), String> {
                 match result {
                     Ok(reply) => {
                         let queue_ns = shard.take_queue_wait_ns();
-                        send(&Msg::Reply { reply, secs, queue_ns }, &mut w)?
+                        let page_ns = shard.take_page_stall_ns();
+                        send(&Msg::Reply { reply, secs, queue_ns, page_ns }, &mut w)?
                     }
                     Err(e) => return Err(abort(e, &mut w)),
                 }
@@ -343,6 +344,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 queue_ns: shard.take_queue_wait_ns(),
                                 stall_ns: (stats.stall_secs * 1e9) as u64,
                                 overlap_ns,
+                                page_ns: shard.take_page_stall_ns(),
                                 dots,
                             },
                             &mut w,
@@ -366,6 +368,7 @@ pub fn serve(connect: &str) -> Result<(), String> {
                                 queue_ns: shard.take_queue_wait_ns(),
                                 stall_ns: 0,
                                 overlap_ns: 0,
+                                page_ns: shard.take_page_stall_ns(),
                                 dots: Vec::new(),
                             },
                             &mut w,

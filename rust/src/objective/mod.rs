@@ -51,6 +51,45 @@ impl Shard {
     }
 }
 
+/// Per-example sparse row access for example-wise methods (dual
+/// coordinate ascent, the SGD warm start). Resident backends hand out
+/// direct CSR row views; the paged backend routes each call through a
+/// one-block cache — same rows, same bits, different residency.
+pub trait ExampleRows: Sync {
+    fn n(&self) -> usize;
+    fn y(&self, i: usize) -> f64;
+    fn c(&self, i: usize) -> f64;
+    fn row_dot(&self, i: usize, w: &[f64]) -> f64;
+    fn row_axpy(&self, i: usize, a: f64, w: &mut [f64]);
+    fn row_norm_sq(&self, i: usize) -> f64;
+}
+
+impl ExampleRows for Shard {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    fn y(&self, i: usize) -> f64 {
+        self.y[i]
+    }
+
+    fn c(&self, i: usize) -> f64 {
+        self.c[i]
+    }
+
+    fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        self.x.row_dot(i, w)
+    }
+
+    fn row_axpy(&self, i: usize, a: f64, w: &mut [f64]) {
+        self.x.row_axpy(i, a, w)
+    }
+
+    fn row_norm_sq(&self, i: usize) -> f64 {
+        self.x.row_norm_sq(i)
+    }
+}
+
 /// Backend-agnostic per-shard computations. All vector arguments are
 /// feature-dimension unless stated otherwise.
 pub trait ShardCompute: Send + Sync {
@@ -95,6 +134,23 @@ pub trait ShardCompute: Send + Sync {
     /// block operations (the PJRT dense backend).
     fn shard(&self) -> Option<&Shard> {
         None
+    }
+
+    /// Per-example row access abstracted over residency: resident
+    /// backends derive it from [`ShardCompute::shard`], the paged
+    /// backend serves rows through its block cache. Prefer this over
+    /// `shard()` in method code — it is what keeps example-wise
+    /// methods (CoCoA's dual ascent, the SGD warm start) working
+    /// out-of-core.
+    fn examples(&self) -> Option<&dyn ExampleRows> {
+        self.shard().map(|s| s as &dyn ExampleRows)
+    }
+
+    /// Drain the nanoseconds kernel threads spent waiting for a disk
+    /// block since the last call (the `page_stall_secs` trace column).
+    /// 0 for resident backends — only the paged backend stalls on I/O.
+    fn take_page_stall_ns(&self) -> u64 {
+        0
     }
 
     /// Per-feature presence counts (TERA's per-feature averaging).

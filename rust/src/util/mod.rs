@@ -8,6 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sha256;
 pub mod toml;
 
 /// Mean of a slice (0.0 for empty input).

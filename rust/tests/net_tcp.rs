@@ -385,6 +385,64 @@ fn overlapped_p2p_trajectories_bitwise_match_inproc() {
     }
 }
 
+/// The out-of-core leg of the determinism contract: with
+/// `residency = "paged"` every worker pages its shard from a `.pallas`
+/// cache file block-by-block through the prefetching buffer ring, and
+/// the trajectory must match the all-in-RAM run bit for bit — on the
+/// in-process transport AND over real worker processes on both data
+/// planes, at `threads = 4` (pool claiming and prefetch racing). CoCoA
+/// rides along because its dual ascent exercises the per-example row
+/// cache (`examples()`), not the block kernels.
+#[test]
+fn paged_residency_trajectories_bitwise_match_resident_three_way() {
+    use fadl::net::Residency;
+    let base = Config {
+        quick_n: 6_000,
+        quick_nnz: 30,
+        max_outer: 3,
+        threads: 4,
+        ..base_cfg()
+    };
+    // all seven methods over the acceptance leg: tcp-p2p, threads = 4
+    for method in [
+        "fadl",
+        "fadl_feature",
+        "tera",
+        "tera-lbfgs",
+        "admm",
+        "cocoa",
+        "ssz",
+    ] {
+        let base = Config { method: method.into(), ..base.clone() };
+        let resident =
+            run_with(&Config { transport: "inproc".into(), ..base.clone() });
+        assert_eq!(
+            resident.records.last().unwrap().page_stall_secs,
+            0.0,
+            "{method}: ram residency reported page stalls"
+        );
+        let paged = Config {
+            residency: Residency::Paged,
+            page_budget_mb: 1,
+            ..base.clone()
+        };
+        let p2p = run_with(&tcp_cfg(&paged, DataPlane::P2p));
+        assert_traces_bitwise(
+            &resident,
+            &p2p,
+            &format!("{method} tcp-p2p paged vs inproc ram"),
+        );
+        // fadl additionally pins the star and in-process paged legs
+        if method == "fadl" {
+            let paged_in =
+                run_with(&Config { transport: "inproc".into(), ..paged.clone() });
+            assert_traces_bitwise(&resident, &paged_in, "fadl inproc paged");
+            let star = run_with(&tcp_cfg(&paged, DataPlane::Star));
+            assert_traces_bitwise(&resident, &star, "fadl tcp-star paged");
+        }
+    }
+}
+
 /// f32 reduction frames: the mesh payload halves and the trajectory
 /// stays within the accuracy gate of the f64 run — close, not bitwise
 /// (encode rounds to nearest-even; accumulation is still f64).

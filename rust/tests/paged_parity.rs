@@ -1,0 +1,344 @@
+//! The out-of-core determinism contract: every [`ShardCompute`] kernel
+//! of [`PagedShard`] must be **bitwise identical** to [`SparseShard`]
+//! over the same data — for every thread count, buffer-ring size,
+//! prefetch depth, and adversarial blocking (many more blocks than
+//! buffers, single-row blocks, empty rows, empty shards). The blocking
+//! is stored in the `.pallas` file and is a pure function of the data,
+//! so any bit divergence is a real residency leak, not a re-blocking.
+
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fadl::data::paged::PagedShard;
+use fadl::data::store::{self, ShardStore};
+use fadl::linalg::Csr;
+use fadl::loss::Loss;
+use fadl::objective::engine::{self, ComputePool};
+use fadl::objective::{Shard, ShardCompute, SparseShard};
+use fadl::util::proptest::{Gen, Runner};
+use fadl::util::rng::Pcg64;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "fadl-paged-parity-{}-{tag}.pallas",
+        std::process::id()
+    ))
+}
+
+fn random_shard(n: usize, m: usize, seed: u64) -> Shard {
+    let mut rng = Pcg64::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            // rng.below(6) == 0 leaves the row empty on purpose
+            let mut cols: Vec<u32> =
+                (0..rng.below(6)).map(|_| rng.below(m) as u32).collect();
+            cols.sort_unstable();
+            cols.dedup();
+            cols.into_iter().map(|c| (c, rng.normal() as f32)).collect()
+        })
+        .collect();
+    let x = Csr::from_rows(m, &rows);
+    let y: Vec<f64> = (0..n)
+        .map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    Shard { x, y, c }
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Every kernel of `paged` against `resident`, bitwise.
+fn assert_kernels_bitwise(
+    resident: &SparseShard,
+    paged: &PagedShard,
+    m: usize,
+    seed: u64,
+    label: &str,
+) {
+    assert_eq!(resident.blocks(), paged.blocks(), "{label}: blocking diverged");
+    assert_eq!(resident.n(), paged.n(), "{label}");
+    assert_eq!(resident.nnz(), paged.nnz(), "{label}");
+    let loss = if seed % 2 == 0 { Loss::SquaredHinge } else { Loss::Logistic };
+    let mut rng = Pcg64::new(seed ^ 0xA11CE);
+    let w: Vec<f64> = (0..m).map(|_| 0.3 * rng.normal()).collect();
+    let s: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let t = rng.range_f64(0.0, 2.0);
+
+    let (v0, g0, z0) = resident.loss_grad(loss, &w);
+    let (v1, g1, z1) = paged.loss_grad(loss, &w);
+    assert_eq!(v0.to_bits(), v1.to_bits(), "{label}: loss diverged");
+    assert!(bits_equal(&g0, &g1), "{label}: gradient bits diverged");
+    assert!(bits_equal(&z0, &z1), "{label}: margin bits diverged");
+
+    assert!(
+        bits_equal(&resident.margins(&s), &paged.margins(&s)),
+        "{label}: margins() bits diverged"
+    );
+    assert!(
+        bits_equal(&resident.hvp(loss, &z0, &s), &paged.hvp(loss, &z1, &s)),
+        "{label}: hvp bits diverged"
+    );
+    let (p0, q0) = resident.linesearch_eval(loss, &z0, &e_of(resident, &s), t);
+    let (p1, q1) = paged.linesearch_eval(loss, &z1, &e_of(paged, &s), t);
+    assert_eq!(p0.to_bits(), p1.to_bits(), "{label}: linesearch φ diverged");
+    assert_eq!(q0.to_bits(), q1.to_bits(), "{label}: linesearch φ' diverged");
+    assert_eq!(
+        resident.feature_counts(),
+        paged.feature_counts(),
+        "{label}: feature counts diverged"
+    );
+    // the packed line-search plan (if the shard is non-empty)
+    let e = e_of(resident, &s);
+    match (resident.linesearch_plan(&z0, &e), paged.linesearch_plan(&z1, &e)) {
+        (Some(a), Some(b)) => {
+            for t in [0.0, 0.5, 1.75] {
+                let (pa, qa) = a.eval(loss, t);
+                let (pb, qb) = b.eval(loss, t);
+                assert_eq!(pa.to_bits(), pb.to_bits(), "{label}: plan φ t={t}");
+                assert_eq!(qa.to_bits(), qb.to_bits(), "{label}: plan φ' t={t}");
+            }
+        }
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "{label}: plan presence"),
+    }
+}
+
+fn e_of<S: ShardCompute + ?Sized>(s: &S, d: &[f64]) -> Vec<f64> {
+    s.margins(d)
+}
+
+/// (rows, cols, target_block_nnz, seed): rows may be 0 (empty shard),
+/// target 1 forces one-row blocks — far more blocks than ring buffers.
+struct PagedCase;
+
+impl Gen for PagedCase {
+    type Value = (usize, usize, usize, u64);
+
+    fn draw(&self, rng: &mut Pcg64) -> Self::Value {
+        (
+            rng.below(50),
+            1 + rng.below(24),
+            1 + rng.below(30),
+            rng.next_u64(),
+        )
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 0 {
+            out.push((v.0 / 2, v.1, v.2, v.3));
+        }
+        if v.2 > 1 {
+            out.push((v.0, v.1, 1, v.3));
+        }
+        out
+    }
+}
+
+#[test]
+fn paged_kernels_bitwise_equal_resident_across_blockings_and_rings() {
+    Runner::new(32, 0x9A6ED).run(&PagedCase, |&(n, m, target, seed)| {
+        let data = random_shard(n, m, seed);
+        let blocks = engine::row_blocks_with_target(&data.x, target);
+        let path = temp_path(&format!("prop-{n}-{m}-{target}-{seed:016x}"));
+        store::write_shard_with_blocks(&path, &data, &blocks)
+            .map_err(|e| format!("write: {e}"))?;
+        let result = (|| {
+            let store =
+                Arc::new(ShardStore::open(&path).map_err(|e| format!("open: {e}"))?);
+            if store.blocks() != blocks {
+                return Err("stored blocking differs from the engine's".into());
+            }
+            for (threads, depth) in [(1usize, 1usize), (4, 2), (4, 5)] {
+                let pool = ComputePool::new(threads);
+                let resident =
+                    SparseShard::with_blocking(data.clone(), target, pool.clone());
+                // budget 0: ring sized from threads + depth — with
+                // one-row blocks that is far fewer buffers than blocks,
+                // so slots recycle many times per pass
+                let paged = PagedShard::from_store(store.clone(), pool, true, 0, depth);
+                let label = format!("n={n} m={m} target={target} T={threads} d={depth}");
+                let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    assert_kernels_bitwise(&resident, &paged, m, seed, &label)
+                }));
+                // second pass over the same pager: the ring must reset
+                // cleanly between kernels (begin_pass), and the stall
+                // counter must drain
+                if caught.is_ok() {
+                    let _ = paged.take_page_stall_ns();
+                    let w = vec![0.1; m];
+                    let a = resident.loss_grad(Loss::Logistic, &w);
+                    let b = paged.loss_grad(Loss::Logistic, &w);
+                    if a.0.to_bits() != b.0.to_bits() || !bits_equal(&a.1, &b.1) {
+                        return Err(format!("{label}: second pass diverged"));
+                    }
+                }
+                caught.map_err(|_| format!("{label}: kernel bits diverged"))?;
+            }
+            Ok(())
+        })();
+        std::fs::remove_file(&path).ok();
+        result
+    });
+}
+
+#[test]
+fn streaming_sinks_deliver_identical_partials_paged_and_resident() {
+    use std::sync::Mutex;
+    let data = random_shard(400, 24, 0xBEEF);
+    let target = 40; // many blocks
+    let blocks = engine::row_blocks_with_target(&data.x, target);
+    assert!(blocks.len() > 4, "blocking too coarse for the test");
+    let path = temp_path("streaming");
+    store::write_shard_with_blocks(&path, &data, &blocks).unwrap();
+    let store = Arc::new(ShardStore::open(&path).unwrap());
+    let mut rng = Pcg64::new(5);
+    let w: Vec<f64> = (0..24).map(|_| 0.2 * rng.normal()).collect();
+    let s: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+    for threads in [1usize, 4] {
+        let pool = ComputePool::new(threads);
+        let resident = SparseShard::with_blocking(data.clone(), target, pool.clone());
+        let paged = PagedShard::from_store(store.clone(), pool, true, 0, 2);
+        assert_eq!(resident.stream_block_count(), paged.stream_block_count());
+        let nb = paged.stream_block_count();
+        let collect = |run: &dyn Fn(&(dyn Fn(usize, &[f64]) + Sync))| {
+            let parts: Mutex<Vec<Option<Vec<f64>>>> = Mutex::new(vec![None; nb]);
+            run(&|b, p: &[f64]| {
+                parts.lock().unwrap()[b] = Some(p.to_vec());
+            });
+            parts
+                .into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|p| p.expect("missing block partial"))
+                .collect::<Vec<_>>()
+        };
+        let (_, gr, zr) = resident.loss_grad(Loss::SquaredHinge, &w);
+        let pr = collect(&|sink| {
+            resident.loss_grad_streaming(Loss::SquaredHinge, &w, sink);
+        });
+        let pp = collect(&|sink| {
+            let (_, g, z) = paged.loss_grad_streaming(Loss::SquaredHinge, &w, sink);
+            assert!(bits_equal(&g, &gr), "T={threads}: streamed gradient diverged");
+            assert!(bits_equal(&z, &zr), "T={threads}: streamed margins diverged");
+        });
+        for (b, (a, c)) in pr.iter().zip(&pp).enumerate() {
+            assert!(bits_equal(a, c), "T={threads}: grad partial {b} diverged");
+        }
+        let hr = collect(&|sink| {
+            resident.hvp_streaming(Loss::SquaredHinge, &zr, &s, sink);
+        });
+        let hp = collect(&|sink| {
+            paged.hvp_streaming(Loss::SquaredHinge, &zr, &s, sink);
+        });
+        for (b, (a, c)) in hr.iter().zip(&hp).enumerate() {
+            assert!(bits_equal(a, c), "T={threads}: hvp partial {b} diverged");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn paged_examples_serve_identical_rows_in_any_access_order() {
+    // the example-wise methods' view (CoCoA's dual ascent, the SGD warm
+    // start): random access across block boundaries thrashes the
+    // one-block cache but never changes a bit
+    let data = random_shard(300, 20, 0x5EED);
+    let blocks = engine::row_blocks_with_target(&data.x, 25);
+    assert!(blocks.len() > 3);
+    let path = temp_path("examples");
+    store::write_shard_with_blocks(&path, &data, &blocks).unwrap();
+    let paged = PagedShard::open(&path, ComputePool::serial(), true, 0, 1).unwrap();
+    let resident = SparseShard::new(data.clone());
+    let rex = resident.examples().expect("resident rows");
+    let pex = paged.examples().expect("paged rows");
+    assert_eq!(rex.n(), pex.n());
+    let mut rng = Pcg64::new(42);
+    let w: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+    let mut acc_r = vec![0.0f64; 20];
+    let mut acc_p = vec![0.0f64; 20];
+    for _ in 0..600 {
+        let i = rng.below(300);
+        assert_eq!(rex.y(i), pex.y(i), "row {i}");
+        assert_eq!(rex.c(i).to_bits(), pex.c(i).to_bits(), "row {i}");
+        assert_eq!(
+            rex.row_dot(i, &w).to_bits(),
+            pex.row_dot(i, &w).to_bits(),
+            "row {i}: dot diverged"
+        );
+        assert_eq!(
+            rex.row_norm_sq(i).to_bits(),
+            pex.row_norm_sq(i).to_bits(),
+            "row {i}: ‖x‖² diverged"
+        );
+        rex.row_axpy(i, 0.125, &mut acc_r);
+        pex.row_axpy(i, 0.125, &mut acc_p);
+    }
+    assert!(bits_equal(&acc_r, &acc_p), "axpy accumulation diverged");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn single_buffer_ring_still_completes_and_matches() {
+    // nb = 1 clamps the ring to one buffer; a multi-block shard with a
+    // tiny want (serial pool + depth 1 → 2 buffers against 10+ blocks)
+    // exercises maximal recycling under the deadlock-freedom argument
+    let data = random_shard(200, 16, 0xD00D);
+    let blocks = engine::row_blocks_with_target(&data.x, 30);
+    let path = temp_path("ring");
+    store::write_shard_with_blocks(&path, &data, &blocks).unwrap();
+    let resident = SparseShard::with_blocking(data.clone(), 30, ComputePool::serial());
+    let paged = PagedShard::open(&path, ComputePool::serial(), true, 0, 1).unwrap();
+    assert_eq!(paged.page_buffers(), 2usize.min(blocks.len().max(1)));
+    assert_kernels_bitwise(&resident, &paged, 16, 0xD00D, "single-buffer");
+    // the stall counter drains to zero once taken
+    let _ = paged.take_page_stall_ns();
+    assert_eq!(paged.take_page_stall_ns(), 0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mid_file_corruption_fails_the_kernel_loudly() {
+    // a flipped payload bit passes open() (the block table is clean)
+    // but must abort the first kernel that pages the damaged block —
+    // never train on silently corrupted rows
+    let data = random_shard(250, 16, 0xC0DE);
+    let blocks = engine::row_blocks_with_target(&data.x, 50);
+    assert!(blocks.len() > 1);
+    let path = temp_path("corrupt");
+    store::write_shard_with_blocks(&path, &data, &blocks).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    {
+        let store = ShardStore::open(&path).unwrap();
+        let victim = store.table.len() / 2;
+        let off =
+            store.table[victim].offset as usize + store.table[victim].len as usize / 2;
+        bytes[off] ^= 0x08;
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    let paged = PagedShard::open(&path, ComputePool::serial(), true, 0, 1).unwrap();
+    let w = vec![0.1; 16];
+    let out = std::panic::catch_unwind(AssertUnwindSafe(|| paged.loss_grad(Loss::Logistic, &w)));
+    assert!(out.is_err(), "corrupted block fed a kernel");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn empty_shard_pages_to_empty_results() {
+    let data = Shard { x: Csr::from_rows(8, &[]), y: vec![], c: vec![] };
+    let path = temp_path("empty");
+    store::write_shard(&path, &data).unwrap();
+    let paged = PagedShard::open(&path, ComputePool::new(2), true, 0, 2).unwrap();
+    assert_eq!(paged.n(), 0);
+    assert_eq!(paged.stream_block_count(), 0);
+    let w = vec![0.5; 8];
+    let (v, g, z) = paged.loss_grad(Loss::Logistic, &w);
+    assert_eq!(v, 0.0);
+    assert_eq!(g, vec![0.0; 8]);
+    assert!(z.is_empty());
+    assert!(paged.margins(&w).is_empty());
+    assert_eq!(paged.feature_counts(), vec![0u32; 8]);
+    std::fs::remove_file(&path).ok();
+}

@@ -301,11 +301,13 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 },
                 secs: rng.normal().abs(),
                 queue_ns: rng.next_u64(),
+                page_ns: rng.next_u64(),
             },
             Msg::Reply {
                 reply: fadl::net::Reply::Scalar { v: rng.normal(), units: 0.0 },
                 secs: 0.0,
                 queue_ns: 0,
+                page_ns: 0,
             },
             Msg::Reply {
                 reply: fadl::net::Reply::Dots {
@@ -314,6 +316,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 },
                 secs: rng.normal().abs(),
                 queue_ns: rng.next_u64(),
+                page_ns: rng.next_u64(),
             },
             Msg::Cmd(Command::FetchTelemetry),
             Msg::Reply {
@@ -324,6 +327,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 },
                 secs: 0.0,
                 queue_ns: 0,
+                page_ns: 0,
             },
             Msg::Mesh {
                 addrs: (0..rng.below(9))
@@ -351,6 +355,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                 queue_ns: rng.next_u64(),
                 stall_ns: rng.next_u64(),
                 overlap_ns: rng.next_u64(),
+                page_ns: rng.next_u64(),
                 dots: draw_vec(&mut rng, rng.below(5)),
             },
             Msg::Finish {
@@ -512,6 +517,7 @@ fn full_ring_telemetry_flush_roundtrips() {
         },
         secs: 0.25,
         queue_ns: 12,
+        page_ns: 3,
     };
     let Msg::Reply {
         reply: fadl::net::Reply::Telemetry { spans: back, dropped, .. },
@@ -532,6 +538,7 @@ fn full_ring_telemetry_flush_roundtrips() {
         },
         secs: 0.0,
         queue_ns: 0,
+        page_ns: 0,
     };
     assert_eq!(wire_roundtrip(&msg), msg);
 }
