@@ -4,7 +4,7 @@ CARGO ?= cargo
 
 PARITY_METHODS ?= fadl fadl_feature tera tera_lbfgs admm cocoa ssz
 PARITY_PLANES  ?= star p2p
-PARITY_TOPOS   ?= tree ring
+PARITY_TOPOS   ?= tree ring hd auto
 
 TRACE_METHOD ?= fadl
 TRACE_PLANE  ?= p2p
@@ -47,8 +47,9 @@ serve:
 	$(CARGO) run --release --bin serve_smoke -- --out-dir bench-out
 
 ## the full local parity matrix: every method must produce a bitwise
-## identical trajectory on inproc ≡ tcp-star ≡ tcp-p2p, on the tree and
-## the ring topology (what the CI parity jobs run, in one command)
+## identical trajectory on inproc ≡ tcp-star ≡ tcp-p2p, on the tree,
+## ring, and halving-doubling topologies plus the measured-link
+## autotuner (what the CI parity jobs run, in one command)
 parity:
 	$(CARGO) build --release --bin worker --bin net_smoke
 	@for m in $(PARITY_METHODS); do \
@@ -115,7 +116,7 @@ bench-check:
 	$(CARGO) run --release --bin serve_smoke -- --quick --out-dir bench-out
 	$(CARGO) run --release --bin bench_check -- \
 	  bench-out/BENCH_5.json bench-out/BENCH_8.json bench-out/BENCH_9.json \
-	  bench-out/SERVE_7.json rust/benches/baseline.json
+	  bench-out/BENCH_10.json bench-out/SERVE_7.json rust/benches/baseline.json
 
 ## capture a per-rank span timeline for any method (TRACE_METHOD,
 ## TRACE_PLANE override): writes trace-out/$(TRACE_METHOD).trace.json —
@@ -132,16 +133,18 @@ trace:
 ## T ∈ {1, 2, 4, 8} on a ≥10⁶-nnz synthetic shard — prints the
 ## per-kernel compute-seconds speedup table and refreshes the
 ## BENCH_5.json scaling artifact at the repo root, plus the SIMD-vs-
-## scalar / overlap A/B artifact BENCH_8.json and the paged-vs-resident
+## scalar / overlap A/B artifact BENCH_8.json, the paged-vs-resident
 ## residency A/B artifact BENCH_9.json (per-kernel resident-vs-paged
-## throughput column + the PREFETCH_DEPTHS sweep; CI's bench-smoke job
-## uploads the quick-mode twins from bench-out/)
+## throughput column + the PREFETCH_DEPTHS sweep), and the allreduce
+## plan-family A/B artifact BENCH_10.json; CI's bench-smoke job
+## uploads the quick-mode twins from bench-out/
 scaling:
 	$(CARGO) bench --bench hotpath -- --scaling --out-dir bench-out \
 	  --prefetch-depth $(PREFETCH_DEPTHS)
 	cp bench-out/BENCH_5.json BENCH_5.json
 	cp bench-out/BENCH_8.json BENCH_8.json
 	cp bench-out/BENCH_9.json BENCH_9.json
+	cp bench-out/BENCH_10.json BENCH_10.json
 
 ## stream-convert a libsvm text file into the paged `.pallas` binary
 ## shard format (constant memory — the converter never holds the

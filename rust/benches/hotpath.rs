@@ -491,6 +491,126 @@ fn run_paged_ab(args: &BenchArgs, all: &mut Vec<Stats>) {
     let _ = std::fs::remove_file(&path);
 }
 
+/// AllReduce plan-family A/B: the `BENCH_10.json` artifact. Every
+/// topology × combine size class m ∈ {60, 6k, 600k} at P = 4 over the
+/// FIFO schedule executor, recording the exact busiest-rank wire bytes
+/// and α-round counts from the compiled plans next to the measured
+/// execution time, plus the plan the α–β autotuner picks per cell
+/// (synthesized link parameters — the in-process run's decision).
+/// `bench_check` gates the `allreduce_*` ratio bands in
+/// `baseline.json`. Honest-accounting note: hd cannot undercut ring on
+/// per-rank bytes — both sit exactly at the 2·m·(P−1)/P bandwidth
+/// lower bound — so the byte band pins the tie at 1.0 and the win is
+/// gated on rounds (2·log₂P vs 2(P−1)).
+fn run_allreduce_ab(args: &BenchArgs, all: &mut Vec<Stats>) {
+    use fadl::net::{choose_topology, estimate_allreduce_ns, topology, Topology};
+    let bench = args.bench;
+    let p = 4usize;
+    let cost = CostModel::default();
+    let alpha_ns = cost.latency / cost.flops_per_sec * 1e9;
+    let beta_ns_per_byte = cost.gamma / (8.0 * cost.flops_per_sec) * 1e9;
+    println!(
+        "-- allreduce A/B: P={p}, synthesized link α={:.2}µs β={:.4}ns/B --",
+        alpha_ns / 1e3,
+        beta_ns_per_byte
+    );
+    let fam = Topology::all();
+    let idx = |t: Topology| fam.iter().position(|x| *x == t).expect("family");
+    let mut gate_entries: Vec<Json> = Vec::new();
+    let mut cells: Vec<Json> = Vec::new();
+    for &m in &[60usize, 6_000, 600_000] {
+        let mut trng = Pcg64::new(10 + m as u64);
+        let parts: Vec<Vec<f64>> =
+            (0..p).map(|_| (0..m).map(|_| trng.normal()).collect()).collect();
+        // the 600k cell moves ~19 MiB per execution: trim iterations
+        let harness = if m >= 600_000 { Bench::quick() } else { bench };
+        let chosen = choose_topology(alpha_ns, beta_ns_per_byte, p, m);
+        let (mut ns, mut busiest, mut rounds, mut mesh) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for topo in fam {
+            let plan = topo.plan(p, m);
+            let busy = (0..p)
+                .map(|r| plan.rank_schedule(r).send_bytes())
+                .max()
+                .unwrap_or(0);
+            let s = harness
+                .run(&format!("net/allreduce {} P={p} m={m}", topo.name()), || {
+                    black_box(topology::simulate_schedules(black_box(&parts), &plan));
+                });
+            println!(
+                "{}   [busiest-rank {busy} B, {} α-rounds, est {:.1} µs]",
+                s.report(),
+                topo.alpha_rounds(p),
+                estimate_allreduce_ns(alpha_ns, beta_ns_per_byte, p, m, topo) / 1e3
+            );
+            ns.push(s.median_ns());
+            busiest.push(busy as f64);
+            rounds.push(topo.alpha_rounds(p) as f64);
+            mesh.push(plan.mesh_bytes() as f64);
+            all.push(s);
+        }
+        let hd_vs_ring_bytes =
+            busiest[idx(Topology::HalvingDoubling)] / busiest[idx(Topology::Ring)];
+        let hd_vs_ring_rounds =
+            rounds[idx(Topology::HalvingDoubling)] / rounds[idx(Topology::Ring)];
+        let worst = ns.iter().cloned().fold(0.0f64, f64::max);
+        let auto_vs_worst_ns = ns[idx(chosen)] / worst;
+        println!(
+            "m={m}: auto → {} | hd/ring busiest-rank bytes {hd_vs_ring_bytes:.3}, \
+             rounds {hd_vs_ring_rounds:.3}, auto/worst ns {auto_vs_worst_ns:.3}",
+            chosen.name()
+        );
+        gate_entries.push(obj(vec![
+            ("kernel", Json::Str(format!("allreduce_m{m}"))),
+            ("threads", Json::Arr(vec![Json::Num(p as f64)])),
+            ("hd_vs_ring_bytes", arr_f64(&[hd_vs_ring_bytes])),
+            ("hd_vs_ring_rounds", arr_f64(&[hd_vs_ring_rounds])),
+            ("auto_vs_worst_ns", arr_f64(&[auto_vs_worst_ns])),
+        ]));
+        cells.push(obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("chosen", Json::Str(chosen.name().to_string())),
+            (
+                "families",
+                Json::Arr(
+                    fam.iter().map(|t| Json::Str(t.name().to_string())).collect(),
+                ),
+            ),
+            ("median_ns", arr_f64(&ns)),
+            ("busiest_rank_bytes", arr_f64(&busiest)),
+            ("mesh_bytes", arr_f64(&mesh)),
+            ("alpha_rounds", arr_f64(&rounds)),
+        ]));
+    }
+    let doc = obj(vec![
+        ("bench", Json::Str("allreduce-ab".to_string())),
+        ("quick", Json::Bool(args.quick)),
+        ("p", Json::Num(p as f64)),
+        ("link_alpha_ns", Json::Num(alpha_ns)),
+        ("link_beta_ns_per_byte", Json::Num(beta_ns_per_byte)),
+        (
+            "note",
+            Json::Str(
+                "hd matches ring's bandwidth-optimal 2*m*(P-1)/P per-rank bytes \
+                 exactly (both sit at the lower bound; a 0.60x byte win over ring \
+                 is mathematically unattainable) and wins on latency rounds: \
+                 2*ceil(log2 P) vs ring's 2*(P-1)."
+                    .to_string(),
+            ),
+        ),
+        ("cells", Json::Arr(cells)),
+        ("kernels", Json::Arr(gate_entries)),
+    ]);
+    if let Some(dir) = &args.out_dir {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join("BENCH_10.json");
+        match std::fs::write(&path, doc.pretty()) {
+            Ok(()) => println!("allreduce artifact written to {}", path.display()),
+            Err(e) => eprintln!("allreduce artifact: write {}: {e}", path.display()),
+        }
+    }
+}
+
 fn main() {
     let args = BenchArgs::parse(Bench::default());
     let bench = args.bench;
@@ -501,6 +621,7 @@ fn main() {
         run_scaling(&args, &mut all);
         run_simd_overlap_ab(&args, &mut all);
         run_paged_ab(&args, &mut all);
+        run_allreduce_ab(&args, &mut all);
         if let Some(path) = args.write_stats_csv("hotpath-scaling", &all) {
             println!("stats written to {}", path.display());
         }
@@ -679,13 +800,14 @@ fn main() {
     println!("{}", s.report());
     all.push(s);
 
-    // engine scaling, the simd/overlap A/B and the paged-residency A/B
-    // ride the default run too, so the CI bench-smoke job always
-    // produces (and uploads) the BENCH_5.json, BENCH_8.json and
-    // BENCH_9.json artifacts
+    // engine scaling, the simd/overlap, paged-residency, and allreduce
+    // A/Bs ride the default run too, so the CI bench-smoke job always
+    // produces (and uploads) the BENCH_5.json, BENCH_8.json,
+    // BENCH_9.json and BENCH_10.json artifacts
     run_scaling(&args, &mut all);
     run_simd_overlap_ab(&args, &mut all);
     run_paged_ab(&args, &mut all);
+    run_allreduce_ab(&args, &mut all);
 
     if let Some(path) = args.write_stats_csv("hotpath", &all) {
         println!("stats written to {}", path.display());

@@ -98,6 +98,10 @@ fn main() {
     println!("\n== trace (inproc transport) ==");
     print_trace(&trace_in);
 
+    if base.topology_auto {
+        print_auto_report(&base, &trace_tcp);
+    }
+
     println!(
         "\nfinal objective  inproc = {f_in:.15e}\n                 tcp    = {f_tcp:.15e}"
     );
@@ -251,6 +255,69 @@ fn main() {
     }
 }
 
+/// The topology column label: the fixed family's name, or — under
+/// `--topology auto` — the family the run actually resolved to, read
+/// back from the trace's `topology_chosen` column.
+fn effective_topology(cfg: &Config, trace: &Trace) -> String {
+    if !cfg.topology_auto {
+        return cfg.topology.name().to_string();
+    }
+    let code = trace
+        .records
+        .last()
+        .map(|r| r.topology_chosen)
+        .unwrap_or(-1.0);
+    let name = if code >= 0.0 {
+        fadl::net::Topology::all()
+            .get(code as usize)
+            .map(|t| t.name())
+            .unwrap_or("?")
+    } else {
+        "?"
+    };
+    format!("auto:{name}")
+}
+
+/// `--topology auto`: the measured-link report — the α–β parameters the
+/// tcp leg fitted at mesh-handshake time (or synthesized, under star),
+/// the per-family cost estimates, and the plan the model picks at each
+/// combine size class.
+fn print_auto_report(cfg: &Config, trace_tcp: &Trace) {
+    use fadl::net::{choose_topology, estimate_allreduce_ns, Topology};
+    let Some(last) = trace_tcp.records.last() else { return };
+    let alpha_ns = last.link_alpha_us * 1_000.0;
+    let beta = last.link_beta_ns_per_byte;
+    println!(
+        "\n== topology autotuner (P = {}, link α = {:.2} µs, β = {:.4} ns/B) ==",
+        cfg.nodes, last.link_alpha_us, beta
+    );
+    let rows: Vec<Vec<String>> = [60usize, 6_000, 600_000]
+        .iter()
+        .map(|&m| {
+            let pick = choose_topology(alpha_ns, beta, cfg.nodes, m);
+            let mut row = vec![m.to_string()];
+            for topo in Topology::all() {
+                let est = estimate_allreduce_ns(alpha_ns, beta, cfg.nodes, m, topo);
+                row.push(format!("{:.1}", est / 1_000.0));
+            }
+            row.push(pick.name().to_string());
+            row
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["m", "flat_us", "tree_us", "ring_us", "hd_us", "ptree_us", "chosen"],
+            &rows,
+        )
+    );
+    println!(
+        "plan in effect for this run (m = {}): {}",
+        cfg.quick_m,
+        effective_topology(cfg, trace_tcp)
+    );
+}
+
 fn bytes_csv(a: &fadl::util::cli::Args) -> Option<String> {
     let path = a.get("bytes-csv");
     (!path.is_empty()).then(|| path.to_string())
@@ -268,6 +335,7 @@ fn transport_path(p: &str, transport: &str) -> String {
 /// Per-iteration byte columns of the tcp run (`make bytes` and the CI
 /// parity artifacts): control vs mesh vs m-sized driver payloads.
 fn write_bytes_csv(path: &str, cfg: &Config, trace: &Trace) {
+    let topology = effective_topology(cfg, trace);
     let mut out = String::from(
         "method,plane,topology,iter,comm_passes,net_bytes,net_data_bytes,\
          driver_data_bytes\n",
@@ -277,7 +345,7 @@ fn write_bytes_csv(path: &str, cfg: &Config, trace: &Trace) {
             "{},{},{},{},{},{},{},{}\n",
             cfg.method,
             cfg.data_plane.name(),
-            cfg.topology.name(),
+            topology,
             r.iter,
             r.comm_passes,
             r.net_bytes,
@@ -332,7 +400,7 @@ fn run_transport(base: &Config, transport: &str) -> (f64, Trace) {
          final f = {:.12e}",
         cfg.method,
         trace.records.len(),
-        cfg.topology.name(),
+        effective_topology(&cfg, &trace),
         cfg.data_plane.name(),
         trace.final_f()
     );

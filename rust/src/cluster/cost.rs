@@ -74,6 +74,23 @@ impl CostModel {
                 let rounds = 2.0 * (pf - 1.0);
                 2.0 * self.gamma * m as f64 * (pf - 1.0) / pf + self.latency * rounds
             }
+            Topology::HalvingDoubling => {
+                // Rabenseifner: ring-optimal bandwidth in 2·log₂P
+                // exchange levels (+ the fold-in/fold-out round pair
+                // when P is not a power of two)
+                let pf = p.max(2) as f64;
+                let rounds = Topology::HalvingDoubling.alpha_rounds(p.max(2)) as f64;
+                2.0 * self.gamma * m as f64 * (pf - 1.0) / pf + self.latency * rounds
+            }
+            Topology::PipelinedTree => {
+                // C-chunk pipelined tree: each of the 2·(L + C − 1)
+                // slots carries an m/C-element frame, so the log
+                // factor amortizes toward footnote 8's pipelined bound
+                let c = crate::net::topology::PIPELINE_CHUNKS as f64;
+                let levels = (p.max(2) as f64).log2().ceil();
+                let slots = 2.0 * (levels + c - 1.0);
+                self.gamma * m as f64 * (levels + c - 1.0) / c + self.latency * slots
+            }
         }
     }
 
@@ -101,6 +118,19 @@ impl CostModel {
             Topology::Ring => {
                 let hops = p.saturating_sub(1).max(1) as f64;
                 self.gamma * m as f64 + self.latency * hops
+            }
+            Topology::HalvingDoubling => {
+                // doubling allgather: (P−1)/P of the vector per rank in
+                // ceil(log₂P) levels (+ the fold-out when P is odd-shaped)
+                let pf = p.max(2) as f64;
+                let levels = Topology::HalvingDoubling.alpha_rounds(p.max(2)) as f64 / 2.0;
+                self.gamma * m as f64 * (pf - 1.0) / pf + self.latency * levels
+            }
+            Topology::PipelinedTree => {
+                let c = crate::net::topology::PIPELINE_CHUNKS as f64;
+                let levels = (p.max(2) as f64).log2().ceil();
+                let slots = levels + c - 1.0;
+                self.gamma * m as f64 * slots / c + self.latency * slots
             }
         }
     }

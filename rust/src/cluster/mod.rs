@@ -43,6 +43,14 @@ pub struct Cluster {
     /// run worker phases on real threads (false = deterministic serial
     /// execution; the simulated clock is identical either way)
     pub threaded: bool,
+    /// per-exchange link latency α in ns — the `topology = "auto"`
+    /// estimate, either measured by the mesh probe (p2p plane) or
+    /// synthesized from the simulated [`CostModel`] (the constructor
+    /// default: `latency / flops_per_sec` seconds per round)
+    pub link_alpha_ns: f64,
+    /// inverse link bandwidth β in ns per wire byte (synthesized
+    /// default: `gamma / (8 · flops_per_sec)` seconds per byte)
+    pub link_beta_ns_per_byte: f64,
 }
 
 impl Cluster {
@@ -66,6 +74,8 @@ impl Cluster {
             measured: Mutex::new(Measured::default()),
             topology,
             threaded: true,
+            link_alpha_ns: cost.latency / cost.flops_per_sec * 1e9,
+            link_beta_ns_per_byte: cost.gamma / (8.0 * cost.flops_per_sec) * 1e9,
         }
     }
 

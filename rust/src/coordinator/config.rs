@@ -74,8 +74,16 @@ pub struct Config {
     /// transport backend: "inproc" (simulated, default) or "tcp"
     /// (P real worker processes over loopback)
     pub transport: String,
-    /// AllReduce reduction topology (flat | tree | ring)
+    /// AllReduce reduction topology (flat | tree | ring | hd | ptree);
+    /// `topology = "auto"` keeps this at the tree default and sets
+    /// [`Config::topology_auto`] instead — the driver resolves the
+    /// actual plan family from the α–β link estimates at cluster-build
+    /// time
     pub topology: Topology,
+    /// `topology = "auto"`: measure (or synthesize) per-link α/β at
+    /// cluster-build time and pick the cheapest plan family for the
+    /// run's (P, m) instead of using `topology` as-is
+    pub topology_auto: bool,
     /// where the tcp transport's reduction bytes move: "star" routes
     /// every vector through the driver, "p2p" executes the plan on a
     /// worker ⇄ worker mesh (ignored by the in-process transport)
@@ -155,6 +163,7 @@ impl Default for Config {
             partition: Strategy::Contiguous,
             transport: "inproc".into(),
             topology: Topology::Tree,
+            topology_auto: false,
             data_plane: DataPlane::Star,
             p2p_bind: "127.0.0.1".into(),
             p2p_port_base: 0,
@@ -264,8 +273,12 @@ impl Config {
             other => return Err(format!("unknown transport {other:?}")),
         };
         let topo_name = doc.str_or("cluster.topology", cfg.topology.name());
-        cfg.topology = Topology::from_name(topo_name)
-            .ok_or_else(|| format!("unknown topology {topo_name:?}"))?;
+        if topo_name.trim().eq_ignore_ascii_case("auto") {
+            cfg.topology_auto = true;
+        } else {
+            cfg.topology = Topology::parse(topo_name)?;
+            cfg.topology_auto = false;
+        }
         let plane_name = doc.str_or("cluster.data_plane", cfg.data_plane.name());
         cfg.data_plane = DataPlane::from_name(plane_name)
             .ok_or_else(|| format!("unknown data plane {plane_name:?}"))?;
@@ -394,8 +407,13 @@ impl Config {
             };
         }
         if !a.get("topology").is_empty() {
-            self.topology = Topology::from_name(a.get("topology"))
-                .ok_or_else(|| format!("unknown topology {:?}", a.get("topology")))?;
+            let name = a.get("topology");
+            if name.trim().eq_ignore_ascii_case("auto") {
+                self.topology_auto = true;
+            } else {
+                self.topology = Topology::parse(name)?;
+                self.topology_auto = false;
+            }
         }
         if !a.get("data-plane").is_empty() {
             self.data_plane = DataPlane::from_name(a.get("data-plane")).ok_or_else(
@@ -474,7 +492,11 @@ pub fn experiment_cli(program: &str, about: &str) -> Cli {
             "paged residency: blocks kept in flight past the one computing (2 = double buffer)",
         )
         .flag("transport", "", "override transport: inproc | tcp")
-        .flag("topology", "", "override AllReduce topology: flat | tree | ring")
+        .flag(
+            "topology",
+            "",
+            "override AllReduce topology: flat | tree | ring | hd | ptree | auto",
+        )
         .flag("data-plane", "", "override tcp data plane: star | p2p")
         .flag(
             "frame-encoding",
@@ -599,7 +621,47 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.transport, "tcp");
         assert_eq!(cfg.topology, Topology::Ring);
+        assert!(!cfg.topology_auto);
         assert_eq!(cfg.worker_bin, "/x/worker");
+    }
+
+    #[test]
+    fn topology_aliases_and_auto_parse() {
+        // the long/short/dashed spellings all resolve
+        for (name, want) in [
+            ("hd", Topology::HalvingDoubling),
+            ("halving_doubling", Topology::HalvingDoubling),
+            ("halving-doubling", Topology::HalvingDoubling),
+            ("ptree", Topology::PipelinedTree),
+            ("pipelined_tree", Topology::PipelinedTree),
+        ] {
+            let cfg =
+                Config::from_toml(&format!("[cluster]\ntopology = \"{name}\"")).unwrap();
+            assert_eq!(cfg.topology, want, "{name}");
+            assert!(!cfg.topology_auto, "{name}");
+        }
+        // "auto" sets the flag and keeps the tree fallback until the
+        // driver resolves the measured choice
+        let cfg = Config::from_toml("[cluster]\ntopology = \"auto\"").unwrap();
+        assert!(cfg.topology_auto);
+        assert_eq!(cfg.topology, Topology::Tree);
+        // CLI twin, plus an explicit name clearing a base auto flag
+        let cli = experiment_cli("test", "shared CLI");
+        let a = cli
+            .parse_from(vec!["--topology".to_string(), "auto".to_string()])
+            .unwrap();
+        let cfg = Config::from_cli(Config::default(), &a).unwrap();
+        assert!(cfg.topology_auto);
+        let a = cli
+            .parse_from(vec!["--topology".to_string(), "hd".to_string()])
+            .unwrap();
+        let base = Config { topology_auto: true, ..Config::default() };
+        let cfg = Config::from_cli(base, &a).unwrap();
+        assert_eq!(cfg.topology, Topology::HalvingDoubling);
+        assert!(!cfg.topology_auto, "explicit name overrides auto");
+        // unknown names list the valid set
+        let err = Config::from_toml("[cluster]\ntopology = \"mesh\"").unwrap_err();
+        assert!(err.contains("ptree"), "{err}");
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::data::partition::ExamplePartition;
 use crate::data::{fetch, libsvm, store, synth, Dataset};
 use crate::metrics::Trace;
 use crate::methods::{self, TrainContext};
-use crate::net::{InProc, Residency, TcpDriver, Transport, WorkerSetup};
+use crate::net::{
+    choose_topology, DataPlane, InProc, Residency, TcpDriver, Transport, WorkerSetup,
+};
 use crate::objective::engine::{self, ComputePool};
 use crate::objective::{Objective, Shard, ShardCompute, SparseShard};
 use crate::runtime::{AotRuntime, DenseBlockShard};
@@ -76,6 +78,8 @@ pub fn worker_setup(cfg: &Config, p: usize) -> WorkerSetup {
         residency: cfg.residency,
         page_budget_mb: cfg.page_budget_mb,
         prefetch_depth: cfg.prefetch_depth,
+        topology: cfg.topology,
+        topology_auto: cfg.topology_auto,
     }
 }
 
@@ -239,7 +243,19 @@ pub fn build_cluster(
                 train.m()
             ));
         }
+        // measured-link autotuning needs a real rank ⇄ rank mesh; star
+        // and single-rank runs fall back to the cost-model synthesis
+        let probed = if cfg.topology_auto && cfg.data_plane == DataPlane::P2p && p > 1 {
+            Some(transport.probe_links(PROBE_ROUNDS, PROBE_SMALL_M, PROBE_LARGE_M)?)
+        } else {
+            None
+        };
         let mut cluster = Cluster::with_transport(Box::new(transport), cost, cfg.topology);
+        if let Some((alpha_ns, beta_ns_per_byte)) = probed {
+            cluster.link_alpha_ns = alpha_ns;
+            cluster.link_beta_ns_per_byte = beta_ns_per_byte;
+        }
+        resolve_auto_topology(&mut cluster, cfg, p, train.m());
         cluster.threaded = cfg.threaded;
         return Ok(cluster);
     }
@@ -292,8 +308,30 @@ pub fn build_cluster(
     };
     let transport = InProc::with_test(workers, test.filter(|t| t.n() > 0).cloned());
     let mut cluster = Cluster::with_transport(Box::new(transport), cost, cfg.topology);
+    resolve_auto_topology(&mut cluster, cfg, p, train.m());
     cluster.threaded = cfg.threaded;
     Ok(cluster)
+}
+
+/// Probe shape for `topology = "auto"` over the p2p mesh: best-of
+/// rounds at a latency-bound and a bandwidth-bound combine size.
+const PROBE_ROUNDS: u32 = 4;
+const PROBE_SMALL_M: usize = 16;
+const PROBE_LARGE_M: usize = 65_536;
+
+/// `topology = "auto"`: pick the cheapest plan family for the run's
+/// full-m combines under the cluster's α–β link parameters (measured
+/// over the mesh when available, synthesized from the cost model
+/// otherwise). Fixed topologies pass through untouched.
+fn resolve_auto_topology(cluster: &mut Cluster, cfg: &Config, p: usize, m: usize) {
+    if cfg.topology_auto {
+        cluster.set_topology(choose_topology(
+            cluster.link_alpha_ns,
+            cluster.link_beta_ns_per_byte,
+            p,
+            m,
+        ));
+    }
 }
 
 /// Materialize the experiment described by the config. Every built-in
@@ -333,6 +371,13 @@ pub fn run(exp: &Experiment) -> Result<(Vec<f64>, Trace), String> {
     };
     let (w, mut trace) = trainer.train(&ctx);
     trace.dataset = exp.train.name.clone();
+    // run-constant link columns: which plan family actually ran, and
+    // the α–β parameters the auto decision (if any) was made under
+    trace.set_link_info(
+        exp.cluster.topology(),
+        exp.cluster.link_alpha_ns / 1_000.0,
+        exp.cluster.link_beta_ns_per_byte,
+    );
     if let Some(path) = &cfg.model_out {
         // training ends by publishing the versioned artifact — the
         // file `fadl serve` starts from
@@ -464,6 +509,52 @@ mod tests {
         assert_eq!(w.len(), 40);
         assert!(!trace.records.is_empty());
         assert!(trace.records.last().unwrap().f <= trace.records[0].f);
+    }
+
+    #[test]
+    fn auto_topology_resolves_and_stamps_trace() {
+        let cfg = Config {
+            topology_auto: true,
+            max_outer: 2,
+            ..quick_cfg()
+        };
+        let exp = prepare(&cfg).unwrap();
+        // in-process runs have no mesh to probe: auto must resolve from
+        // the cost model's synthesized link parameters, before training
+        let expect = choose_topology(
+            exp.cluster.link_alpha_ns,
+            exp.cluster.link_beta_ns_per_byte,
+            cfg.nodes,
+            exp.train.m(),
+        );
+        assert_eq!(exp.cluster.topology(), expect);
+        let (_, trace) = run(&exp).unwrap();
+        let code = crate::net::Topology::all()
+            .iter()
+            .position(|t| *t == expect)
+            .unwrap() as f64;
+        for r in &trace.records {
+            assert_eq!(r.topology_chosen, code, "iter {}", r.iter);
+            assert!(r.link_alpha_us > 0.0, "iter {}", r.iter);
+            assert!(r.link_beta_ns_per_byte > 0.0, "iter {}", r.iter);
+        }
+    }
+
+    #[test]
+    fn fixed_topology_stamps_its_own_code() {
+        let cfg = Config {
+            topology: crate::net::Topology::Ring,
+            max_outer: 2,
+            ..quick_cfg()
+        };
+        let exp = prepare(&cfg).unwrap();
+        assert_eq!(exp.cluster.topology(), crate::net::Topology::Ring);
+        let (_, trace) = run(&exp).unwrap();
+        let ring = crate::net::Topology::all()
+            .iter()
+            .position(|t| *t == crate::net::Topology::Ring)
+            .unwrap() as f64;
+        assert!(trace.records.iter().all(|r| r.topology_chosen == ring));
     }
 
     #[test]

@@ -66,6 +66,16 @@ pub struct IterRecord {
     pub grad_norm: f64,
     /// AUPRC on the held-out set (NaN when not evaluated)
     pub auprc: f64,
+    /// run-constant: the reduction plan family in effect, as its index
+    /// in `net::Topology::all()` (0 flat, 1 tree, 2 ring, 3 hd,
+    /// 4 ptree; −1 until [`Trace::set_link_info`] stamps the run)
+    pub topology_chosen: f64,
+    /// run-constant: per-exchange link latency α in µs (measured by the
+    /// mesh probe under `topology = "auto"` on the p2p plane,
+    /// synthesized from the simulated CostModel otherwise)
+    pub link_alpha_us: f64,
+    /// run-constant: inverse link bandwidth β in ns per wire byte
+    pub link_beta_ns_per_byte: f64,
 }
 
 /// A full run trace.
@@ -75,6 +85,7 @@ pub struct Trace {
     pub dataset: String,
     pub nodes: usize,
     pub records: Vec<IterRecord>,
+    link_info: Option<(f64, f64, f64)>,
 }
 
 impl Trace {
@@ -84,6 +95,31 @@ impl Trace {
             dataset: dataset.to_string(),
             nodes,
             records: Vec::new(),
+            link_info: None,
+        }
+    }
+
+    /// Stamp the run-constant topology/link columns onto every record
+    /// (and every record pushed later): which plan family the run used
+    /// (the `topology = "auto"` decision, or the configured family) and
+    /// the α–β link estimates it was derived from. Methods don't know
+    /// about links, so the driver stamps the trace after training.
+    pub fn set_link_info(
+        &mut self,
+        topology: crate::net::Topology,
+        alpha_us: f64,
+        beta_ns_per_byte: f64,
+    ) {
+        let code = crate::net::Topology::all()
+            .iter()
+            .position(|t| *t == topology)
+            .map(|i| i as f64)
+            .unwrap_or(-1.0);
+        self.link_info = Some((code, alpha_us, beta_ns_per_byte));
+        for r in &mut self.records {
+            r.topology_chosen = code;
+            r.link_alpha_us = alpha_us;
+            r.link_beta_ns_per_byte = beta_ns_per_byte;
         }
     }
 
@@ -121,6 +157,9 @@ impl Trace {
             f,
             grad_norm,
             auprc,
+            topology_chosen: self.link_info.map(|(c, _, _)| c).unwrap_or(-1.0),
+            link_alpha_us: self.link_info.map(|(_, a, _)| a).unwrap_or(0.0),
+            link_beta_ns_per_byte: self.link_info.map(|(_, _, b)| b).unwrap_or(0.0),
         });
     }
 
@@ -230,6 +269,9 @@ pub const COLUMNS: &[(&str, fn(&IterRecord) -> f64)] = &[
     ("f", |r| r.f),
     ("grad_norm", |r| r.grad_norm),
     ("auprc", |r| r.auprc),
+    ("topology_chosen", |r| r.topology_chosen),
+    ("link_alpha_us", |r| r.link_alpha_us),
+    ("link_beta_ns_per_byte", |r| r.link_beta_ns_per_byte),
 ];
 
 #[cfg(test)]
@@ -351,13 +393,15 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("iter,comm_passes,"));
-        assert_eq!(lines[0].split(',').count(), 19);
+        assert_eq!(lines[0].split(',').count(), 22);
         assert!(lines[0].contains(",net_bytes,net_data_bytes,driver_data_bytes,"));
         assert!(lines[0]
             .contains(",queue_wait_secs,mesh_stall_secs,overlap_secs,page_stall_secs,f,"));
         assert!(lines[0].contains(",meas_compute_secs,"));
+        assert!(lines[0]
+            .ends_with(",topology_chosen,link_alpha_us,link_beta_ns_per_byte"));
         for line in &lines[1..] {
-            assert_eq!(line.split(',').count(), 19, "{line}");
+            assert_eq!(line.split(',').count(), 22, "{line}");
         }
         // Display round-trips f64 exactly
         let f0: f64 = lines[1].split(',').nth(16).unwrap().parse().unwrap();
@@ -384,6 +428,41 @@ mod tests {
         // integral columns survive the f64 accessors losslessly
         let row1: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
         assert_eq!(row1[0], "0", "iter prints as an integer");
+    }
+
+    #[test]
+    fn link_info_stamps_existing_and_future_records() {
+        use crate::net::Topology;
+        let mut t = sample_trace();
+        // unstamped runs mark the columns as unrecorded
+        assert!(t.records.iter().all(|r| r.topology_chosen == -1.0));
+        assert!(t.records.iter().all(|r| r.link_alpha_us == 0.0));
+        t.set_link_info(Topology::HalvingDoubling, 5.0, 62.5);
+        assert!(t.records.iter().all(|r| r.topology_chosen == 3.0));
+        assert!(t.records.iter().all(|r| r.link_alpha_us == 5.0));
+        assert!(t.records.iter().all(|r| r.link_beta_ns_per_byte == 62.5));
+        // records pushed after the stamp inherit the run constants
+        let n = t.records.len();
+        t.push(
+            n,
+            &SimClock::default(),
+            &CostModel::default(),
+            &Measured::default(),
+            0.0,
+            1.0,
+            1.0,
+            f64::NAN,
+        );
+        let last = t.records.last().unwrap();
+        assert_eq!(last.topology_chosen, 3.0);
+        assert_eq!(last.link_beta_ns_per_byte, 62.5);
+        // the columns serialize like every other
+        let json = t.to_json().pretty();
+        let parsed = crate::util::json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("topology_chosen").unwrap().as_arr().unwrap().len(),
+            6
+        );
     }
 
     #[test]

@@ -65,7 +65,10 @@ pub mod worker;
 pub use endpoint::WorkerState;
 pub use inproc::InProc;
 pub use tcp::TcpDriver;
-pub use topology::{reduce, ReducePlan, Topology};
+pub use topology::{
+    choose_topology, estimate_allreduce_ns, fit_link_params, reduce, ReducePlan,
+    Topology,
+};
 
 use crate::approx::ApproxKind;
 use crate::data::partition::Strategy;
@@ -625,6 +628,15 @@ pub struct WorkerSetup {
     /// the background reader keeps in flight (≥ 1; 2 = double
     /// buffering).
     pub prefetch_depth: usize,
+    /// the resolved reduction-plan choice (`[cluster] topology`): the
+    /// concrete topology the run's combines start on. Informational on
+    /// the worker side — every `Reduce` frame still names its own
+    /// topology — but lets a worker report/log the configured plan.
+    pub topology: Topology,
+    /// true when `topology = "auto"`: the driver runs the one-shot
+    /// link probe after the mesh handshake and may switch the combine
+    /// plan from `topology` to the α–β winner before round 0.
+    pub topology_auto: bool,
 }
 
 impl WorkerSetup {
@@ -1021,6 +1033,8 @@ mod tests {
             residency: Residency::Ram,
             page_budget_mb: 0,
             prefetch_depth: 2,
+            topology: Topology::Tree,
+            topology_auto: false,
         };
         assert_eq!(setup.p2p_host(2), "127.0.0.1", "empty list → loopback");
         setup.p2p_bind = "10.0.0.1".into();

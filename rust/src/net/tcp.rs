@@ -276,6 +276,55 @@ impl TcpDriver {
             plane: setup.data_plane,
         })
     }
+
+    /// One-shot link probe over the established p2p mesh (`topology =
+    /// "auto"`): every worker times `rounds` tree-plan mesh allreduces
+    /// at a small (latency-bound) and a large (bandwidth-bound) vector
+    /// size and reports its best time per size; the driver takes the
+    /// slowest rank per size — the time the BSP barrier actually pays —
+    /// and fits the (α ns/round, β ns/byte) pair through
+    /// [`super::fit_link_params`]. Runs exactly once, between the mesh
+    /// handshake and round 0, so the cost is visible as one `mesh:probe`
+    /// span and never pollutes per-iteration counters.
+    pub fn probe_links(
+        &self,
+        rounds: u32,
+        small_m: usize,
+        large_m: usize,
+    ) -> Result<(f64, f64), String> {
+        assert_eq!(self.plane, DataPlane::P2p, "link probe needs the p2p mesh");
+        assert!(small_m < large_m, "probe sizes must be ordered");
+        let _span = telemetry::SpanGuard::open("mesh:probe");
+        let mut conns = self.conns.lock().unwrap();
+        let payload = wire::encode(&Msg::Probe { rounds, small_m, large_m });
+        for (rank, conn) in conns.iter_mut().enumerate() {
+            conn.send_raw(&payload)
+                .map_err(|e| format!("rank {rank} probe: {e}"))?;
+        }
+        let (mut small_ns, mut large_ns) = (0u64, 0u64);
+        for rank in 0..self.p {
+            match conns[rank].recv() {
+                Ok((Msg::Probed { small_ns: s, large_ns: l }, _)) => {
+                    small_ns = small_ns.max(s);
+                    large_ns = large_ns.max(l);
+                }
+                Ok((Msg::Abort { msg }, _)) => {
+                    return Err(format!("rank {rank} aborted probe: {msg}"))
+                }
+                Ok((other, _)) => {
+                    return Err(format!("rank {rank}: unexpected probe reply {other:?}"))
+                }
+                Err(e) => return Err(format!("rank {rank} probe: {e}")),
+            }
+        }
+        Ok(super::fit_link_params(
+            self.p,
+            small_m,
+            large_m,
+            small_ns as f64,
+            large_ns as f64,
+        ))
+    }
 }
 
 /// Locate the worker executable: explicit path → sibling `worker` bin →

@@ -29,7 +29,29 @@ pub enum Topology {
     /// chunk c is accumulated travelling around the ring starting at
     /// rank c (the reduce-scatter half of ring-allreduce).
     Ring,
+    /// Rabenseifner-style recursive halving-doubling: reduce-scatter by
+    /// recursive halving (each of log₂P exchange levels ships half the
+    /// surviving range) followed by the mirrored recursive-doubling
+    /// allgather. Moves the bandwidth-optimal 2·(P−1)/P·m elements per
+    /// rank — like the ring — but in only 2·log₂P serialized exchange
+    /// levels instead of 2·(P−1) ring steps. Non-power-of-two P is
+    /// handled by the standard fold-in pre-step: the trailing P−q ranks
+    /// (q the largest power of two ≤ P) first fold their whole vector
+    /// into a low-rank survivor, and the mirrored broadcast folds the
+    /// result back out.
+    HalvingDoubling,
+    /// The stride-doubling tree split into [`PIPELINE_CHUNKS`] pipeline
+    /// chunks: every chunk runs the same tree step list, so successive
+    /// chunks overlap on the wire (chunk c's level-k frame rides behind
+    /// chunk c−1's level-k+1 frame on the same connection) — the
+    /// footnote-8 "pipelined tree" the paper's cost model assumes.
+    PipelinedTree,
 }
+
+/// Pipeline depth of [`Topology::PipelinedTree`]: the vector is split
+/// into this many equal chunks (short vectors leave trailing chunks
+/// empty, which compile to no ops at all).
+pub const PIPELINE_CHUNKS: usize = 4;
 
 impl Topology {
     pub fn from_name(name: &str) -> Option<Topology> {
@@ -37,8 +59,25 @@ impl Topology {
             "flat" => Some(Topology::Flat),
             "tree" => Some(Topology::Tree),
             "ring" => Some(Topology::Ring),
+            "hd" | "halving_doubling" => Some(Topology::HalvingDoubling),
+            "ptree" | "pipelined_tree" => Some(Topology::PipelinedTree),
             _ => None,
         }
+    }
+
+    /// The strict config/CLI entry point: normalizes the `-`/`_` alias
+    /// convention used for method names, accepts the long and short
+    /// spellings of every topology, and rejects anything else with an
+    /// error that lists the valid set.
+    pub fn parse(name: &str) -> Result<Topology, String> {
+        let canon = name.trim().to_ascii_lowercase().replace('-', "_");
+        Topology::from_name(&canon).ok_or_else(|| {
+            format!(
+                "unknown topology {name:?}: expected one of \
+                 flat | tree | ring | hd (halving_doubling) | \
+                 ptree (pipelined_tree) | auto"
+            )
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -46,11 +85,19 @@ impl Topology {
             Topology::Flat => "flat",
             Topology::Tree => "tree",
             Topology::Ring => "ring",
+            Topology::HalvingDoubling => "hd",
+            Topology::PipelinedTree => "ptree",
         }
     }
 
-    pub fn all() -> [Topology; 3] {
-        [Topology::Flat, Topology::Tree, Topology::Ring]
+    pub fn all() -> [Topology; 5] {
+        [
+            Topology::Flat,
+            Topology::Tree,
+            Topology::Ring,
+            Topology::HalvingDoubling,
+            Topology::PipelinedTree,
+        ]
     }
 
     /// The deterministic reduction schedule for P ranks and m-vectors.
@@ -62,19 +109,7 @@ impl Topology {
                 vec![Chunk { lo: 0, hi: m, steps, root: 0 }]
             }
             Topology::Tree => {
-                // stride doubling: rank i ← rank i+s — exactly the
-                // seed's in-process tree, so Tree stays bit-compatible.
-                let mut steps = Vec::new();
-                let mut stride = 1;
-                while stride < p {
-                    let mut i = 0;
-                    while i + stride < p {
-                        steps.push((i, i + stride));
-                        i += stride * 2;
-                    }
-                    stride *= 2;
-                }
-                vec![Chunk { lo: 0, hi: m, steps, root: 0 }]
+                vec![Chunk { lo: 0, hi: m, steps: tree_steps(p), root: 0 }]
             }
             Topology::Ring => (0..p)
                 .map(|c| {
@@ -89,9 +124,180 @@ impl Topology {
                     }
                 })
                 .collect(),
+            Topology::HalvingDoubling => {
+                // q = largest power of two ≤ p; ranks q..p fold their
+                // whole vector into survivors 0..p−q before the
+                // power-of-two halving exchange, and the mirrored
+                // broadcast folds the result back out to them.
+                let q = if p.is_power_of_two() {
+                    p
+                } else {
+                    p.next_power_of_two() / 2
+                };
+                let r = p - q;
+                (0..q)
+                    .map(|c| {
+                        let mut steps = Vec::new();
+                        // fold-in pre-steps, rotated per chunk so the
+                        // r independent folds spread across rounds
+                        for i in 0..r {
+                            let j = (c + i) % r;
+                            steps.push((j, q + j));
+                        }
+                        // recursive halving among the q survivors:
+                        // at level d (q/2, q/4, …, 1) every rank whose
+                        // bit d disagrees with chunk index c ships its
+                        // chunk-c partial to the partner rank ^ d —
+                        // after the last level rank c holds chunk c.
+                        let mut d = q / 2;
+                        while d >= 1 {
+                            // processed (higher) halving bits must
+                            // already match the chunk index
+                            let hi_mask = !(2 * d - 1);
+                            for rk in 0..q {
+                                if (rk & hi_mask) == (c & hi_mask) && (rk & d) != (c & d)
+                                {
+                                    steps.push((rk ^ d, rk));
+                                }
+                            }
+                            d /= 2;
+                        }
+                        Chunk { lo: c * m / q, hi: (c + 1) * m / q, steps, root: c }
+                    })
+                    .collect()
+            }
+            Topology::PipelinedTree => {
+                let steps = tree_steps(p);
+                (0..PIPELINE_CHUNKS)
+                    .map(|c| Chunk {
+                        lo: c * m / PIPELINE_CHUNKS,
+                        hi: (c + 1) * m / PIPELINE_CHUNKS,
+                        steps: steps.clone(),
+                        root: 0,
+                    })
+                    .collect()
+            }
         };
         ReducePlan { p, m, chunks }
     }
+
+    /// Serialized exchange rounds one AllReduce of this topology needs
+    /// (reduce + broadcast halves) — the α multiplier of the standard
+    /// α–β cost model, and the column the bench's round table reports.
+    pub fn alpha_rounds(&self, p: usize) -> usize {
+        if p <= 1 {
+            return 0;
+        }
+        let levels = (p.max(2) as f64).log2().ceil() as usize;
+        match self {
+            Topology::Flat | Topology::Ring => 2 * (p - 1),
+            Topology::Tree => 2 * levels,
+            Topology::HalvingDoubling => {
+                // +2 fold rounds (in + out) when P isn't a power of two
+                let q = if p.is_power_of_two() {
+                    p
+                } else {
+                    p.next_power_of_two() / 2
+                };
+                let fold = if p == q { 0 } else { 2 };
+                2 * (q.max(2) as f64).log2().ceil() as usize + fold
+            }
+            Topology::PipelinedTree => 2 * (levels + PIPELINE_CHUNKS - 1),
+        }
+    }
+}
+
+/// The seed's stride-doubling accumulation order (rank i ← rank i+s) —
+/// shared by [`Topology::Tree`] and [`Topology::PipelinedTree`] so the
+/// tree stays bit-compatible with the seed implementation.
+fn tree_steps(p: usize) -> Vec<(usize, usize)> {
+    let mut steps = Vec::new();
+    let mut stride = 1;
+    while stride < p {
+        let mut i = 0;
+        while i + stride < p {
+            steps.push((i, i + stride));
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    steps
+}
+
+/// Estimated wall time of one AllReduce under the standard α–β model:
+/// `α · rounds + β · bytes_on_the_busiest_rank`. `alpha_ns` is the
+/// per-exchange latency, `beta_ns_per_byte` the inverse bandwidth —
+/// either measured by the mesh link probe (`topology = "auto"` under
+/// the p2p plane) or synthesized from the simulated `CostModel`
+/// parameters when no mesh exists. Per-rank bytes come from the exact
+/// compiled schedule, so the β term reflects what the wire really
+/// carries (frame headers included).
+pub fn estimate_allreduce_ns(
+    alpha_ns: f64,
+    beta_ns_per_byte: f64,
+    p: usize,
+    m: usize,
+    topo: Topology,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let plan = topo.plan(p, m);
+    let busiest = (0..p)
+        .map(|r| plan.rank_schedule(r).send_bytes())
+        .max()
+        .unwrap_or(0) as f64;
+    alpha_ns * topo.alpha_rounds(p) as f64 + beta_ns_per_byte * busiest
+}
+
+/// Fit the (α, β) link parameters from two timed tree-plan allreduces
+/// (the `topology = "auto"` mesh probe): solving
+/// `t(m) = α·rounds + β·busiest_bytes(m)` at the probe's small and
+/// large sizes gives β from the slope and α from the small-size
+/// intercept. Estimates are clamped non-negative (α to ≥ 1 ns) so a
+/// noisy probe can never produce a nonsensical cost model — at worst
+/// the fit degenerates toward pure-latency or pure-bandwidth and the
+/// chooser falls back to a reasonable family.
+pub fn fit_link_params(
+    p: usize,
+    small_m: usize,
+    large_m: usize,
+    small_ns: f64,
+    large_ns: f64,
+) -> (f64, f64) {
+    let rounds = Topology::Tree.alpha_rounds(p).max(1) as f64;
+    let busiest = |m: usize| -> f64 {
+        let plan = Topology::Tree.plan(p, m);
+        (0..p)
+            .map(|r| plan.rank_schedule(r).send_bytes())
+            .max()
+            .unwrap_or(0) as f64
+    };
+    let (b_s, b_l) = (busiest(small_m), busiest(large_m));
+    let beta = if b_l > b_s {
+        ((large_ns - small_ns) / (b_l - b_s)).max(0.0)
+    } else {
+        0.0
+    };
+    let alpha = ((small_ns - beta * b_s) / rounds).max(1.0);
+    (alpha, beta)
+}
+
+/// The `topology = "auto"` decision rule: pick the plan family with the
+/// lowest α–β estimate for this (P, m). Ties break toward the earlier
+/// entry of [`Topology::all`] (flat < tree < ring < hd < ptree), which
+/// keeps the choice deterministic.
+pub fn choose_topology(alpha_ns: f64, beta_ns_per_byte: f64, p: usize, m: usize) -> Topology {
+    let mut best = Topology::Tree;
+    let mut best_ns = f64::INFINITY;
+    for topo in Topology::all() {
+        let est = estimate_allreduce_ns(alpha_ns, beta_ns_per_byte, p, m, topo);
+        if est < best_ns {
+            best = topo;
+            best_ns = est;
+        }
+    }
+    best
 }
 
 /// One contiguous index range reduced by an ordered step list; the
@@ -336,10 +542,22 @@ fn streamable_sends(ops: &[MeshOp]) -> Vec<bool> {
 /// against the flat [`reduce`] execution, and doubling as a deadlock
 /// detector: a stalled schedule panics instead of hanging.
 pub fn simulate_schedules(parts: &[Vec<f64>], plan: &ReducePlan) -> Vec<Vec<f64>> {
+    simulate_schedules_counting(parts, plan).0
+}
+
+/// [`simulate_schedules`] plus the exact per-rank wire bytes the run
+/// enqueued (4-byte length prefix + 8-byte f64 payload per frame, the
+/// p2p data plane's framing) — what the property tests pin against
+/// [`RankSchedule::send_bytes`] and [`ReducePlan::mesh_bytes`].
+pub fn simulate_schedules_counting(
+    parts: &[Vec<f64>],
+    plan: &ReducePlan,
+) -> (Vec<Vec<f64>>, Vec<u64>) {
     use std::collections::{BTreeMap, VecDeque};
     assert_eq!(parts.len(), plan.p, "parts/plan rank mismatch");
     let scheds = plan.rank_schedules();
     let mut bufs: Vec<Vec<f64>> = parts.to_vec();
+    let mut sent_bytes: Vec<u64> = vec![0; plan.p];
     let mut queues: BTreeMap<(usize, usize), VecDeque<Vec<f64>>> = BTreeMap::new();
     let mut next: Vec<usize> = vec![0; plan.p];
     loop {
@@ -351,6 +569,7 @@ pub fn simulate_schedules(parts: &[Vec<f64>], plan: &ReducePlan) -> Vec<Vec<f64>
                 match *op {
                     MeshOp::Send { to, lo, hi } => {
                         let frame = bufs[r][lo..hi].to_vec();
+                        sent_bytes[r] += 8 * frame.len() as u64 + 4;
                         queues.entry((r, to)).or_default().push_back(frame);
                     }
                     MeshOp::RecvAccum { from, lo, hi } => {
@@ -388,7 +607,7 @@ pub fn simulate_schedules(parts: &[Vec<f64>], plan: &ReducePlan) -> Vec<Vec<f64>
         queues.values().all(VecDeque::is_empty),
         "schedule left undelivered frames"
     );
-    bufs
+    (bufs, sent_bytes)
 }
 
 fn two_mut<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &T) {
@@ -641,13 +860,232 @@ mod tests {
             }
         }
         // the README's P = 4, m = 60 table: flat/tree 6 × (4 + 480),
-        // ring 24 × (4 + 120)
+        // ring/hd/ptree 24 × (4 + 120)
         assert_eq!(Topology::Flat.plan(4, 60).mesh_bytes(), 6 * 484);
         assert_eq!(Topology::Tree.plan(4, 60).mesh_bytes(), 6 * 484);
         assert_eq!(Topology::Ring.plan(4, 60).mesh_bytes(), 24 * 124);
+        assert_eq!(Topology::HalvingDoubling.plan(4, 60).mesh_bytes(), 24 * 124);
+        assert_eq!(Topology::PipelinedTree.plan(4, 60).mesh_bytes(), 24 * 124);
+        // …and the P = 6 column (q = 4 survivors + 2 folded ranks for
+        // hd: 20 chunk steps of 15 elements; ring: 60 frames of 10)
+        assert_eq!(Topology::Flat.plan(6, 60).mesh_bytes(), 10 * 484);
+        assert_eq!(Topology::Tree.plan(6, 60).mesh_bytes(), 10 * 484);
+        assert_eq!(Topology::Ring.plan(6, 60).mesh_bytes(), 60 * 84);
+        assert_eq!(Topology::HalvingDoubling.plan(6, 60).mesh_bytes(), 40 * 124);
+        assert_eq!(Topology::PipelinedTree.plan(6, 60).mesh_bytes(), 40 * 124);
         // P = 1 is a no-op on every topology
         for topo in Topology::all() {
             assert_eq!(topo.plan(1, 9).mesh_bytes(), 0, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn hd_per_rank_bytes_are_uniform_and_bandwidth_optimal() {
+        // every hd rank moves exactly 2·(P−1)/P·m elements — the
+        // allreduce bandwidth lower bound the ring also achieves; the
+        // win over the ring is rounds (2·log₂P vs 2·(P−1)), not bytes
+        let plan = Topology::HalvingDoubling.plan(4, 60);
+        for r in 0..4 {
+            let s = plan.rank_schedule(r);
+            assert_eq!(s.send_elems(), 90, "rank {r}"); // 2·(3/4)·60
+            assert_eq!(s.send_frames(), 6, "rank {r}");
+            assert_eq!(s.send_bytes(), 744, "rank {r}");
+        }
+        // the flat/tree busiest rank moves a full vector per hop: the
+        // hd busiest rank carries 0.51×/0.77× of that at P = 4
+        let flat_max = (0..4)
+            .map(|r| Topology::Flat.plan(4, 60).rank_schedule(r).send_bytes())
+            .max()
+            .unwrap();
+        let tree_max = (0..4)
+            .map(|r| Topology::Tree.plan(4, 60).rank_schedule(r).send_bytes())
+            .max()
+            .unwrap();
+        assert_eq!(flat_max, 3 * 484);
+        assert_eq!(tree_max, 2 * 484);
+    }
+
+    #[test]
+    fn hd_folds_non_power_of_two_ranks() {
+        // P = 6: ranks 4 and 5 fold into survivors 0 and 1, appear in
+        // no halving step, and still end up with the full reduced
+        // vector via the mirrored broadcast
+        let plan = Topology::HalvingDoubling.plan(6, 60);
+        for folded in [4usize, 5] {
+            let sched = plan.rank_schedule(folded);
+            let reduce_sends = sched
+                .ops
+                .iter()
+                .take_while(|op| matches!(op, MeshOp::Send { .. }))
+                .count();
+            // the fold: its whole vector leaves as q = 4 chunk frames
+            assert_eq!(reduce_sends, 4, "rank {folded}");
+            let copies = sched
+                .ops
+                .iter()
+                .filter(|op| matches!(op, MeshOp::RecvCopy { .. }))
+                .count();
+            assert_eq!(copies, 4, "rank {folded} fold-out");
+        }
+        // integer exactness at every non-power-of-two P
+        for p in [3usize, 5, 6, 7, 9] {
+            for m in [1usize, 3, 60] {
+                let parts = int_parts(p, m, 5 * p as u64 + m as u64);
+                let want = naive_sum(&parts);
+                assert_eq!(
+                    reduce(parts, &Topology::HalvingDoubling.plan(p, m)),
+                    want,
+                    "p={p} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ptree_splits_tree_into_pipeline_chunks() {
+        let plan = Topology::PipelinedTree.plan(4, 60);
+        assert_eq!(plan.chunks.len(), PIPELINE_CHUNKS);
+        let tree = Topology::Tree.plan(4, 60);
+        for ch in &plan.chunks {
+            assert_eq!(ch.steps, tree.chunks[0].steps);
+            assert_eq!(ch.root, 0);
+            assert_eq!(ch.hi - ch.lo, 60 / PIPELINE_CHUNKS);
+        }
+        // m < C leaves trailing chunks empty — still exact, no ops
+        let short = Topology::PipelinedTree.plan(5, 2);
+        for s in short.rank_schedules() {
+            for op in &s.ops {
+                let (lo, hi) = match *op {
+                    MeshOp::Send { lo, hi, .. }
+                    | MeshOp::RecvAccum { lo, hi, .. }
+                    | MeshOp::RecvCopy { lo, hi, .. } => (lo, hi),
+                };
+                assert!(hi > lo, "zero-length op {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simulate_counts_exact_wire_bytes() {
+        for topo in Topology::all() {
+            for (p, m) in [(1usize, 5usize), (2, 4), (4, 60), (5, 17), (6, 3), (8, 8)] {
+                let parts = int_parts(p, m, 13 * p as u64 + m as u64);
+                let plan = topo.plan(p, m);
+                let (_, sent) = simulate_schedules_counting(&parts, &plan);
+                for (r, &bytes) in sent.iter().enumerate() {
+                    assert_eq!(
+                        bytes,
+                        plan.rank_schedule(r).send_bytes(),
+                        "{topo:?} p={p} m={m} rank={r}"
+                    );
+                }
+                assert_eq!(
+                    sent.iter().sum::<u64>(),
+                    plan.mesh_bytes(),
+                    "{topo:?} p={p} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_rejects_unknown() {
+        for (alias, want) in [
+            ("flat", Topology::Flat),
+            ("tree", Topology::Tree),
+            ("ring", Topology::Ring),
+            ("hd", Topology::HalvingDoubling),
+            ("halving_doubling", Topology::HalvingDoubling),
+            ("halving-doubling", Topology::HalvingDoubling),
+            ("ptree", Topology::PipelinedTree),
+            ("pipelined_tree", Topology::PipelinedTree),
+            ("pipelined-tree", Topology::PipelinedTree),
+            ("HD", Topology::HalvingDoubling),
+        ] {
+            assert_eq!(Topology::parse(alias), Ok(want), "{alias}");
+        }
+        let err = Topology::parse("mesh").unwrap_err();
+        for name in ["flat", "tree", "ring", "hd", "ptree"] {
+            assert!(err.contains(name), "error {err:?} misses {name}");
+        }
+    }
+
+    #[test]
+    fn alpha_rounds_pin_the_round_table() {
+        // P = 4: hd needs 4 serialized exchange levels, the ring 6 —
+        // the round win that motivates hd (bytes are tied, see
+        // hd_per_rank_bytes_are_uniform_and_bandwidth_optimal)
+        assert_eq!(Topology::Flat.alpha_rounds(4), 6);
+        assert_eq!(Topology::Tree.alpha_rounds(4), 4);
+        assert_eq!(Topology::Ring.alpha_rounds(4), 6);
+        assert_eq!(Topology::HalvingDoubling.alpha_rounds(4), 4);
+        assert_eq!(
+            Topology::PipelinedTree.alpha_rounds(4),
+            2 * (2 + PIPELINE_CHUNKS - 1)
+        );
+        // non-power-of-two P pays the fold-in/fold-out round pair
+        assert_eq!(Topology::HalvingDoubling.alpha_rounds(6), 6);
+        assert_eq!(Topology::Ring.alpha_rounds(6), 10);
+        // P = 1 is free everywhere
+        for topo in Topology::all() {
+            assert_eq!(topo.alpha_rounds(1), 0, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_link_params() {
+        // generate the two probe timings from a known (α, β) and check
+        // the fit inverts them exactly
+        let (p, small_m, large_m) = (4usize, 16usize, 65_536usize);
+        let (alpha, beta) = (5_000.0, 2.0);
+        let rounds = Topology::Tree.alpha_rounds(p) as f64;
+        let busiest = |m: usize| {
+            let plan = Topology::Tree.plan(p, m);
+            (0..p)
+                .map(|r| plan.rank_schedule(r).send_bytes())
+                .max()
+                .unwrap() as f64
+        };
+        let t_s = alpha * rounds + beta * busiest(small_m);
+        let t_l = alpha * rounds + beta * busiest(large_m);
+        let (a, b) = fit_link_params(p, small_m, large_m, t_s, t_l);
+        assert!((a - alpha).abs() < 1e-6, "alpha {a}");
+        assert!((b - beta).abs() < 1e-9, "beta {b}");
+        // clamps: a probe where the large size came back faster (noise)
+        // still yields non-negative β and a positive α
+        let (a, b) = fit_link_params(p, small_m, large_m, 10_000.0, 5_000.0);
+        assert_eq!(b, 0.0);
+        assert!(a > 0.0);
+        // degenerate single-rank probe
+        let (a, b) = fit_link_params(1, small_m, large_m, 0.0, 0.0);
+        assert!(a >= 1.0);
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn auto_choice_follows_the_alpha_beta_model() {
+        // bandwidth-dominated (large m, cheap latency): hd ties ring on
+        // bytes but needs fewer rounds, so hd wins
+        let big = choose_topology(10_000.0, 1.0, 8, 600_000);
+        assert_eq!(big, Topology::HalvingDoubling);
+        // latency-dominated (tiny m, expensive latency): the round
+        // count decides, so the 2·log₂P families win over the ring
+        let small = choose_topology(1_000_000.0, 1.0, 8, 4);
+        assert!(
+            matches!(small, Topology::Tree | Topology::HalvingDoubling),
+            "{small:?}"
+        );
+        assert_ne!(small, Topology::Ring);
+        // the choice is never worse than any fixed family
+        for (p, m) in [(4usize, 60usize), (4, 6_000), (6, 600_000), (8, 60)] {
+            let chosen = choose_topology(5_000.0, 0.5, p, m);
+            let est = estimate_allreduce_ns(5_000.0, 0.5, p, m, chosen);
+            for topo in Topology::all() {
+                assert!(
+                    est <= estimate_allreduce_ns(5_000.0, 0.5, p, m, topo),
+                    "auto {chosen:?} worse than {topo:?} at p={p} m={m}"
+                );
+            }
         }
     }
 

@@ -103,7 +103,18 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// nanoseconds (wall time kernels blocked waiting on a block the
 /// prefetcher hadn't loaded yet — the `page_stall_secs` trace column;
 /// 0 under ram residency).
-pub const PROTO_VERSION: u32 = 9;
+///
+/// v10: communication-optimal collectives — `Setup` carries the
+/// resolved reduction-plan choice (the configured topology name plus
+/// the `topology = "auto"` marker), the topology name set grew `hd`
+/// (recursive halving-doubling) and `ptree` (chunk-pipelined tree),
+/// and the `Probe`/`Probed` pair landed: after the mesh handshake the
+/// driver may ask every worker to run a one-shot timed link probe
+/// (small + large AllReduce rounds over the already-open mesh), and
+/// the reply carries the best measured wall nanoseconds per size —
+/// the α/β fit behind the autotuner's per-size-class plan choice.
+/// Probe frames are control traffic (zero data bytes).
+pub const PROTO_VERSION: u32 = 10;
 
 // ---------------------------------------------------------------------------
 // Framing
@@ -446,6 +457,17 @@ pub enum Msg {
     /// worker dials lower ranks, accepts higher ranks, answers `MeshOk`.
     Mesh { addrs: Vec<String> },
     MeshOk,
+    /// One-shot link probe (driver → worker, after `MeshOk`, before
+    /// the first combine): run `rounds` timed tree-plan AllReduces over
+    /// the mesh at `small_m` and at `large_m` elements and report the
+    /// best wall time of each. The driver fits per-link (α latency,
+    /// β inverse-bandwidth) from the two points and picks the
+    /// `topology = "auto"` plan per combine size class. Control
+    /// traffic: zero data bytes, charged to the `probe` phase.
+    Probe { rounds: u32, small_m: usize, large_m: usize },
+    /// Reply to `Probe`: best measured wall nanoseconds for the small
+    /// and the large timed AllReduce.
+    Probed { small_ns: u64, large_ns: u64 },
     /// Fused phase + combine: execute `cmd`, pre-transform this rank's
     /// reply vectors per `spec`, then — p2p — run the topology plan
     /// over the mesh and complete the combine locally, or — star —
@@ -538,6 +560,9 @@ mod tag {
     pub const FINISHED: u8 = 23;
     pub const CMD_TEST_AUPRC: u8 = 24;
     pub const CMD_FETCH_TELEMETRY: u8 = 25;
+    // link-probe pair (v10)
+    pub const PROBE: u8 = 26;
+    pub const PROBED: u8 = 27;
     pub const REPLY_ACK: u8 = 30;
     pub const REPLY_GRAD: u8 = 31;
     pub const REPLY_PAIR: u8 = 32;
@@ -756,6 +781,8 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.str(s.residency.name());
             e.usize(s.page_budget_mb);
             e.usize(s.prefetch_depth);
+            e.str(s.topology.name());
+            e.bool(s.topology_auto);
         }
         Msg::Shutdown => e.u8(tag::SHUTDOWN),
         Msg::Ready { m, n, nnz, data_port, now_ns } => {
@@ -779,6 +806,17 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             }
         }
         Msg::MeshOk => e.u8(tag::MESH_OK),
+        Msg::Probe { rounds, small_m, large_m } => {
+            e.u8(tag::PROBE);
+            e.u32(*rounds);
+            e.usize(*small_m);
+            e.usize(*large_m);
+        }
+        Msg::Probed { small_ns, large_ns } => {
+            e.u8(tag::PROBED);
+            e.u64(*small_ns);
+            e.u64(*large_ns);
+        }
         Msg::Reduce { cmd, topology, spec } => {
             e.u8(tag::REDUCE);
             e.str(topology.name());
@@ -1105,6 +1143,12 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             },
             page_budget_mb: d.usize()?,
             prefetch_depth: d.usize()?,
+            topology: {
+                let name = d.str()?;
+                Topology::from_name(&name)
+                    .ok_or_else(|| format!("unknown topology {name:?}"))?
+            },
+            topology_auto: d.bool()?,
         }),
         tag::SHUTDOWN => Msg::Shutdown,
         tag::READY => Msg::Ready {
@@ -1131,6 +1175,15 @@ pub fn decode(payload: &[u8]) -> Result<Msg, String> {
             Msg::Mesh { addrs }
         }
         tag::MESH_OK => Msg::MeshOk,
+        tag::PROBE => Msg::Probe {
+            rounds: d.u32()?,
+            small_m: d.usize()?,
+            large_m: d.usize()?,
+        },
+        tag::PROBED => Msg::Probed {
+            small_ns: d.u64()?,
+            large_ns: d.u64()?,
+        },
         tag::REDUCE => {
             let topo_name = d.str()?;
             let topology = Topology::from_name(&topo_name)
@@ -1465,6 +1518,8 @@ pub fn msg_data_bytes(msg: &Msg) -> u64 {
         | Msg::Abort { .. }
         | Msg::Mesh { .. }
         | Msg::MeshOk
+        | Msg::Probe { .. }
+        | Msg::Probed { .. }
         | Msg::Finished { .. }
         | Msg::Published { .. } => 0,
         Msg::Cmd(cmd) | Msg::Reduce { cmd, .. } => cmd_data_bytes(cmd),
@@ -1540,7 +1595,11 @@ mod tests {
             residency: Residency::Paged,
             page_budget_mb: 48,
             prefetch_depth: 3,
+            topology: Topology::HalvingDoubling,
+            topology_auto: true,
         }));
+        roundtrip(Msg::Probe { rounds: 5, small_m: 16, large_m: 65_536 });
+        roundtrip(Msg::Probed { small_ns: 12_345, large_ns: 9_876_543 });
         roundtrip(Msg::Cmd(Command::Reset));
         roundtrip(Msg::Cmd(Command::Grad {
             loss: Loss::Logistic,

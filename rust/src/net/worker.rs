@@ -188,6 +188,37 @@ pub fn serve(connect: &str) -> Result<(), String> {
                 }
                 send(&Msg::MeshOk, &mut w)?;
             }
+            Msg::Probe { rounds, small_m, large_m } => {
+                // one-shot link probe for `topology = "auto"`: time a
+                // handful of tree-plan allreduces at two sizes over the
+                // open mesh. Best-of (min) per size filters scheduler
+                // noise; the driver takes the max across ranks because
+                // the BSP barrier pays the slowest rank either way.
+                let Some(mesh) = &mesh else {
+                    return Err(abort("Probe before the mesh handshake".into(), &mut w));
+                };
+                let _span = telemetry::SpanGuard::open("mesh:probe");
+                let mut time_size = |m: usize| -> Result<u64, String> {
+                    let idx =
+                        cached_sched(&mut scheds, Topology::Tree, m, setup.p, setup.rank);
+                    let mut best = u64::MAX;
+                    for _ in 0..rounds.max(1) {
+                        let mut buf: Vec<f64> =
+                            (0..m).map(|i| 1.0 + (i % 7) as f64).collect();
+                        let t0 = Instant::now();
+                        mesh.allreduce(&mut buf, &scheds[idx].2)?;
+                        best = best.min(t0.elapsed().as_nanos() as u64);
+                    }
+                    Ok(best)
+                };
+                let timed = time_size(small_m).and_then(|s| time_size(large_m).map(|l| (s, l)));
+                match timed {
+                    Ok((small_ns, large_ns)) => {
+                        send(&Msg::Probed { small_ns, large_ns }, &mut w)?
+                    }
+                    Err(e) => return Err(abort(e, &mut w)),
+                }
+            }
             Msg::Cmd(cmd) => {
                 // only shard-compute kernels report time, so the
                 // `meas_compute_secs` column stays a pure measure of
@@ -410,6 +441,7 @@ fn cached_sched(
     {
         return i;
     }
+    let _span = telemetry::SpanGuard::open("plan:compile");
     let plan = topology.plan(p, m);
     let sched = plan.rank_schedule(rank);
     let flags = plan.overlap_flags(rank);

@@ -64,7 +64,13 @@ fn assert_traces_bitwise(
 
 #[test]
 fn tcp_training_matches_inproc_bitwise_on_both_planes() {
-    for topology in [Topology::Tree, Topology::Ring] {
+    for topology in [
+        Topology::Flat,
+        Topology::Tree,
+        Topology::Ring,
+        Topology::HalvingDoubling,
+        Topology::PipelinedTree,
+    ] {
         let base = Config { topology, ..base_cfg() };
         let inproc = run_with(&Config { transport: "inproc".into(), ..base.clone() });
         let star = run_with(&tcp_cfg(&base, DataPlane::Star));
@@ -82,6 +88,69 @@ fn tcp_training_matches_inproc_bitwise_on_both_planes() {
         assert!(last_p2p.net_data_bytes > 0.0, "p2p mesh moved no bytes?");
         assert!(last_star.meas_phase_secs > 0.0);
     }
+}
+
+/// `topology = "auto"` over real worker processes: under p2p the
+/// driver probes the live mesh at handshake time, fits per-link α–β,
+/// and picks a plan family — and the trajectory still lands bit for
+/// bit on an in-process run of the family it picked (whichever the
+/// measurement selects). Under star there is no mesh to probe, so auto
+/// resolves from the cost model's synthesized link parameters.
+#[test]
+fn auto_topology_over_tcp_matches_inproc_bitwise() {
+    let base = base_cfg();
+    let auto_cfg = Config {
+        topology_auto: true,
+        ..tcp_cfg(&base, DataPlane::P2p)
+    };
+    let exp = driver::prepare(&auto_cfg).expect("prepare");
+    let chosen = exp.cluster.topology();
+    let refit = fadl::net::choose_topology(
+        exp.cluster.link_alpha_ns,
+        exp.cluster.link_beta_ns_per_byte,
+        auto_cfg.nodes,
+        exp.train.m(),
+    );
+    assert_eq!(chosen, refit, "auto must follow the fitted α–β model");
+    let (_, trace) = driver::run(&exp).expect("run");
+    let reference = run_with(&Config {
+        transport: "inproc".into(),
+        topology: chosen,
+        ..base.clone()
+    });
+    assert_traces_bitwise(&reference, &trace, &format!("auto→{chosen:?} p2p"));
+    // the run-constant link columns record the decision
+    let code = Topology::all().iter().position(|t| *t == chosen).unwrap() as f64;
+    let last = trace.records.last().unwrap();
+    assert_eq!(last.topology_chosen, code);
+    assert!(last.link_alpha_us > 0.0, "α = {}", last.link_alpha_us);
+    assert!(last.link_beta_ns_per_byte >= 0.0);
+    // probe traffic is control-plane only: the scalar-driver invariant
+    // and the exact mesh byte accounting hold under auto too
+    for r in &trace.records {
+        assert_eq!(r.driver_data_bytes, 0.0, "iter {}", r.iter);
+    }
+    let sched = chosen.plan(auto_cfg.nodes, auto_cfg.quick_m).mesh_bytes() as f64;
+    assert!(
+        (last.net_data_bytes - last.comm_passes * sched).abs() < 1e-9,
+        "auto→{chosen:?}: {} mesh bytes over {} passes (1 pass = {sched})",
+        last.net_data_bytes,
+        last.comm_passes,
+    );
+    // star: no mesh, synthesized parameters, same fixed-point check
+    let star_cfg = Config {
+        topology_auto: true,
+        ..tcp_cfg(&base, DataPlane::Star)
+    };
+    let star_exp = driver::prepare(&star_cfg).expect("prepare star");
+    let star_chosen = star_exp.cluster.topology();
+    let (_, star_trace) = driver::run(&star_exp).expect("run star");
+    let star_ref = run_with(&Config {
+        transport: "inproc".into(),
+        topology: star_chosen,
+        ..base.clone()
+    });
+    assert_traces_bitwise(&star_ref, &star_trace, &format!("auto→{star_chosen:?} star"));
 }
 
 #[test]
@@ -107,8 +176,8 @@ fn tcp_without_warmstart_also_matches() {
 fn every_method_matches_inproc_bitwise_on_both_planes() {
     // the full guarantee: every baseline — not just fadl* — trains over
     // real worker processes and reproduces the in-process trajectory
-    // bit for bit on tree AND ring, wherever the reduction bytes move
-    // (the CI parity matrix enforces the same property through
+    // bit for bit on every plan family, wherever the reduction bytes
+    // move (the CI parity matrix enforces the same property through
     // net_smoke at P = 4)
     for method in [
         "fadl",
@@ -119,7 +188,12 @@ fn every_method_matches_inproc_bitwise_on_both_planes() {
         "cocoa",
         "ssz",
     ] {
-        for topology in [Topology::Tree, Topology::Ring] {
+        for topology in [
+            Topology::Tree,
+            Topology::Ring,
+            Topology::HalvingDoubling,
+            Topology::PipelinedTree,
+        ] {
             let base = Config {
                 method: method.into(),
                 topology,
@@ -151,7 +225,13 @@ fn every_method_matches_inproc_bitwise_on_both_planes() {
 #[test]
 fn p2p_driver_combine_traffic_is_scalar_only() {
     let nodes = 4;
-    for topology in [Topology::Tree, Topology::Ring] {
+    for topology in [
+        Topology::Flat,
+        Topology::Tree,
+        Topology::Ring,
+        Topology::HalvingDoubling,
+        Topology::PipelinedTree,
+    ] {
         let base = Config { nodes, topology, ..base_cfg() };
         let mut grads = Vec::new();
         for plane in DataPlane::all() {
@@ -236,7 +316,12 @@ fn scalar_only_driver_for_every_method_after_round_zero() {
         "cocoa",
         "ssz",
     ] {
-        for topology in [Topology::Tree, Topology::Ring] {
+        for topology in [
+            Topology::Tree,
+            Topology::Ring,
+            Topology::HalvingDoubling,
+            Topology::PipelinedTree,
+        ] {
             let cfg = Config {
                 method: method.into(),
                 topology,
@@ -305,6 +390,29 @@ fn threads_four_trajectories_bitwise_match_threads_one_three_way() {
             &format!("tcp-{} T=4 vs inproc T=1", plane.name()),
         );
     }
+    // the new plan families compose with intra-worker parallelism: at
+    // T = 4 over the mesh they land on their own T = 1 trajectory —
+    // which is itself bitwise the tree trajectory (plan invariance)
+    for topology in [Topology::HalvingDoubling, Topology::PipelinedTree] {
+        let base_t = Config { topology, ..base.clone() };
+        let ref_t = run_with(&Config {
+            transport: "inproc".into(),
+            threads: 1,
+            ..base_t.clone()
+        });
+        for (ra, rb) in reference.records.iter().zip(&ref_t.records) {
+            assert_eq!(ra.f.to_bits(), rb.f.to_bits(), "{topology:?} vs tree");
+        }
+        let tcp4 = run_with(&Config {
+            threads: 4,
+            ..tcp_cfg(&base_t, DataPlane::P2p)
+        });
+        assert_traces_bitwise(
+            &ref_t,
+            &tcp4,
+            &format!("tcp-p2p {topology:?} T=4 vs inproc T=1"),
+        );
+    }
 }
 
 /// The SIMD leg of the determinism contract: the lane-chunked kernels
@@ -350,7 +458,12 @@ fn simd_off_trajectories_bitwise_match_simd_on_three_way() {
 /// moved before the kernels finished.
 #[test]
 fn overlapped_p2p_trajectories_bitwise_match_inproc() {
-    for topology in [Topology::Tree, Topology::Ring] {
+    for topology in [
+        Topology::Tree,
+        Topology::Ring,
+        Topology::HalvingDoubling,
+        Topology::PipelinedTree,
+    ] {
         let base = Config {
             topology,
             quick_n: 6_000,
@@ -493,7 +606,12 @@ fn f32_frames_halve_mesh_bytes_within_accuracy_gate() {
 /// consensus combine).
 #[test]
 fn combine_collectives_have_exact_mesh_byte_counts() {
-    for topology in [Topology::Tree, Topology::Ring] {
+    for topology in [
+        Topology::Tree,
+        Topology::Ring,
+        Topology::HalvingDoubling,
+        Topology::PipelinedTree,
+    ] {
         // fadl with warm start: record 0 sits after warm (2 passes) +
         // grad (1); every following record adds direction + grad = 2
         let cfg = Config {

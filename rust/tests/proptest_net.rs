@@ -339,7 +339,7 @@ fn full_vocabulary_frames_roundtrip_bitwise() {
                     loss: Loss::SquaredHinge,
                     w: draw_vecref(&mut rng, len),
                 },
-                topology: Topology::all()[rng.below(3)],
+                topology: Topology::all()[rng.below(Topology::all().len())],
                 spec: draw_combine(&mut rng),
             },
             Msg::Reduced {
@@ -707,6 +707,41 @@ fn p2p_schedules_match_plan_reduce_bitwise() {
 }
 
 #[test]
+fn plan_byte_accounting_matches_simulated_wire_exactly() {
+    // the static accounting the cost model, benches, and parity gates
+    // rely on — RankSchedule::send_bytes per rank and their sum
+    // ReducePlan::mesh_bytes — must equal the bytes the FIFO executor
+    // actually enqueues, for every plan family over adversarial shapes
+    // (P non-power-of-two, P = 1, m < P, m ∤ P, single-element chunks)
+    let gen = Pair(UsizeRange(1, 9), UsizeRange(1, 45));
+    Runner::new(40, 0xB77E).run(&gen, |&(p, m)| {
+        let parts = draw_parts(p, m, (83 * p + m) as u64);
+        for topo in Topology::all() {
+            let plan = topo.plan(p, m);
+            let (_, sent) = topology::simulate_schedules_counting(&parts, &plan);
+            let mut total = 0u64;
+            for (rank, &wire) in sent.iter().enumerate() {
+                let claimed = plan.rank_schedule(rank).send_bytes();
+                if claimed != wire {
+                    return Err(format!(
+                        "{topo:?} p={p} m={m} rank {rank}: \
+                         send_bytes claims {claimed}, wire moved {wire}"
+                    ));
+                }
+                total += wire;
+            }
+            if plan.mesh_bytes() != total {
+                return Err(format!(
+                    "{topo:?} p={p} m={m}: mesh_bytes {} != simulated {total}",
+                    plan.mesh_bytes()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn p2p_schedule_edge_cases() {
     // m < P: ring chunks with lo == hi must vanish from the schedules
     for (p, m) in [(6usize, 3usize), (4, 1), (5, 7), (7, 20)] {
@@ -740,7 +775,12 @@ fn topologies_agree_within_rounding() {
     let m = 20;
     let parts = draw_parts(p, m, 99);
     let tree = topology::reduce(parts.clone(), &Topology::Tree.plan(p, m));
-    for topo in [Topology::Flat, Topology::Ring] {
+    for topo in [
+        Topology::Flat,
+        Topology::Ring,
+        Topology::HalvingDoubling,
+        Topology::PipelinedTree,
+    ] {
         let other = topology::reduce(parts.clone(), &topo.plan(p, m));
         for j in 0..m {
             let scale = tree[j].abs().max(1.0);
